@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make `compile.*` importable when pytest runs from the
+repository root (the Makefile cds into python/; this keeps bare
+`pytest python/tests/ -q` working too)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

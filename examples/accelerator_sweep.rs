@@ -1,0 +1,68 @@
+//! Accelerator design-space sweep (the paper's "ongoing work" Sec. 6):
+//! sweep PE flavor x group size x shift budget x array size on the
+//! systolic simulator for a chosen network, reporting frames/s, frames/J
+//! and DRAM traffic — the data a hardware architect would use to pick an
+//! operating point.
+//!
+//! Run: cargo run --release --example accelerator_sweep -- --net resnet18
+
+use anyhow::{Context, Result};
+
+use swis::arch::pe::PeKind;
+use swis::nets::by_name;
+use swis::sim::{simulate_network, ArrayConfig, ExecScheme, SchemeKind};
+use swis::util::cli;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(2).collect();
+    let args = cli::parse(&argv, &["net"])?;
+    let net_name = args.get_or("net", "resnet18");
+    let net = by_name(net_name).with_context(|| format!("unknown network '{net_name}'"))?;
+
+    println!("# accelerator sweep — {}", net.name);
+    println!(
+        "{:<12} {:>5} {:>6} {:>7} | {:>9} {:>9} {:>10} {:>8}",
+        "pe", "G", "array", "shifts", "F/s", "F/J", "DRAM MB", "mm2"
+    );
+
+    let fixed = simulate_network(
+        &net,
+        &ArrayConfig::paper_baseline(PeKind::Fixed),
+        &ExecScheme::new(SchemeKind::Fixed8, 8.0),
+    );
+
+    for kind in [PeKind::SingleShift, PeKind::DoubleShift] {
+        for g in [2usize, 4, 8, 16] {
+            for sa in [8usize, 16] {
+                for n in [2.0, 3.0, 4.0] {
+                    let mut cfg = ArrayConfig::paper_baseline(kind).with_size(sa, sa);
+                    cfg.group_size = g;
+                    let sim = simulate_network(&net, &cfg, &ExecScheme::swis(n));
+                    println!(
+                        "{:<12} {:>5} {:>4}x{:<2} {:>7} | {:>9.1} {:>9.1} {:>10.2} {:>8.2}",
+                        format!("{kind:?}"),
+                        g,
+                        sa,
+                        sa,
+                        n,
+                        sim.frames_per_s(),
+                        sim.frames_per_j(),
+                        sim.dram_bytes() / 1e6,
+                        cfg.area_mm2()
+                    );
+                }
+            }
+        }
+    }
+
+    println!("\n# reference: 8-bit fixed-point, 8x8, G=4");
+    println!(
+        "F/s {:.1}   F/J {:.1}   DRAM {:.2} MB   {:.2} mm2",
+        fixed.frames_per_s(),
+        fixed.frames_per_j(),
+        fixed.dram_bytes() / 1e6,
+        ArrayConfig::paper_baseline(PeKind::Fixed).area_mm2()
+    );
+    println!("\naccelerator_sweep OK");
+    Ok(())
+}

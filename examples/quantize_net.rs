@@ -1,0 +1,82 @@
+//! Per-layer quantization study on a zoo network: SWIS vs SWIS-C vs
+//! weight truncation RMSE across shift budgets, plus the effect of the
+//! Sec. 4.3 filter scheduler at fractional budgets — the offline workflow
+//! a deployment would run before flashing weights to a SWIS accelerator.
+//!
+//! Run: cargo run --release --example quantize_net -- --net mobilenet_v2
+
+use anyhow::{Context, Result};
+
+use swis::nets::{by_name, surrogate_weights};
+use swis::quant::truncation::truncate_weights;
+use swis::quant::{Alpha, quantize, QuantConfig};
+use swis::schedule::{schedule_layer, ScheduleConfig};
+use swis::util::cli;
+use swis::util::stats::rmse;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(2).collect();
+    let args = cli::parse(&argv, &["net", "group", "seed"])?;
+    let net_name = args.get_or("net", "resnet18");
+    let group = args.get_usize("group", 4)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let net = by_name(net_name).with_context(|| format!("unknown network '{net_name}'"))?;
+
+    println!("# {} — per-layer quantization RMSE (group={group})", net.name);
+    println!(
+        "{:<22} {:>7} | {:>9} {:>9} {:>9} | {:>9} {:>9}",
+        "layer", "shifts", "SWIS", "SWIS-C", "trunc", "compr(S)", "compr(C)"
+    );
+
+    // a representative subset: first, a middle, and the largest layer
+    let mut picks = vec![0usize, net.layers.len() / 2, net.layers.len() - 1];
+    picks.dedup();
+    for &li in &picks {
+        let layer = &net.layers[li];
+        let w = surrogate_weights(layer, seed);
+        let shape = layer.weight_shape();
+        for n in [2usize, 3, 4, 5] {
+            let ps = quantize(&w, &shape, &QuantConfig::swis(n, group))?;
+            let pc = quantize(&w, &shape, &QuantConfig::swis_c(n, group))?;
+            let wt = truncate_weights(&w, n);
+            println!(
+                "{:<22} {:>7} | {:>9.5} {:>9.5} {:>9.5} | {:>8.2}x {:>8.2}x",
+                if n == 2 { layer.name.as_str() } else { "" },
+                n,
+                rmse(&w, &ps.to_f64()),
+                rmse(&w, &pc.to_f64()),
+                rmse(&w, &wt),
+                ps.compression_ratio(),
+                pc.compression_ratio(),
+            );
+        }
+    }
+
+    // scheduling study on the middle layer: fractional budgets
+    let layer = &net.layers[net.layers.len() / 2];
+    let w = surrogate_weights(layer, seed);
+    let shape = layer.weight_shape();
+    println!("\n# filter scheduling on {} (Sec. 4.3)", layer.name);
+    println!(
+        "{:>7} {:>16} {:>16} {:>16}",
+        "target", "err uniform@floor", "err sched@target", "err uniform@ceil"
+    );
+    for target in [2.5, 3.5, 4.5] {
+        let mut cfg = ScheduleConfig::new(target, group);
+        cfg.alpha = Alpha::ONE;
+        let s = schedule_layer(&w, &shape, &cfg)?;
+        let at = |n: f64| -> anyhow::Result<i64> {
+            let mut c = ScheduleConfig::new(n, group);
+            c.alpha = Alpha::ONE;
+            Ok(schedule_layer(&w, &shape, &c)?.err_scheduled)
+        };
+        let lo = at(target.floor())?;
+        let hi = at(target.ceil())?;
+        println!("{:>7} {:>16} {:>16} {:>16}", target, lo, s.err_scheduled, hi);
+        // the scheduled fractional point interpolates the uniform ends —
+        // the accuracy/latency trade the paper's Table 2 demonstrates
+        assert!(s.err_scheduled <= lo && s.err_scheduled >= hi.min(lo));
+    }
+    println!("\nquantize_net OK");
+    Ok(())
+}

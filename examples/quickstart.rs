@@ -1,0 +1,74 @@
+//! Quickstart: the SWIS pipeline in ~60 lines.
+//!
+//!   1. quantize a weight tensor with SWIS (3 shifts, group 4),
+//!   2. inspect the packed format + compression,
+//!   3. load the AOT-compiled TinyCNN and compare FP32 vs SWIS logits
+//!      through the real PJRT runtime.
+//!
+//! Run: cargo run --release --example quickstart
+
+use anyhow::Result;
+use std::path::Path;
+
+use swis::coordinator::{quantize_jax_weight, VariantSpec};
+use swis::quant::{quantize, QuantConfig};
+use swis::runtime::{ModelBundle, Runtime};
+use swis::util::npy;
+use swis::util::rng::Rng;
+use swis::util::stats::rmse;
+use swis::util::tensor::Tensor;
+
+fn main() -> Result<()> {
+    // --- 1. quantize a random conv-like layer ---------------------------
+    let mut rng = Rng::new(42);
+    let w = rng.normal_vec(64 * 144, 0.0, 0.05); // 64 filters, fan-in 144
+    let packed = quantize(&w, &[64, 144], &QuantConfig::swis(3, 4))?;
+    println!("SWIS @ 3 shifts, group 4:");
+    println!("  bits/weight      : {:.2} (8.0 baseline)", packed.bits_per_weight());
+    println!("  compression      : {:.2}x", packed.compression_ratio());
+    println!("  rmse             : {:.5}", rmse(&w, &packed.to_f64()));
+
+    // SWIS-C trades a little accuracy for a smaller format
+    let packed_c = quantize(&w, &[64, 144], &QuantConfig::swis_c(3, 4))?;
+    println!(
+        "SWIS-C @ 3 shifts : {:.2} bits/weight, rmse {:.5}",
+        packed_c.bits_per_weight(),
+        rmse(&w, &packed_c.to_f64())
+    );
+
+    // --- 2. run the AOT model through PJRT ------------------------------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::cpu()?;
+    println!("\nPJRT platform: {}", rt.platform());
+    let bundle = ModelBundle::load(&rt, &dir, "model")?;
+
+    let npz = npy::load_npz(&dir.join("dataset.npz"))?;
+    let x = npz["x_test"].as_f32();
+    let imgs = Tensor::new(&[8, 32, 32, 3], x.data()[..8 * 3072].to_vec())?;
+
+    let fp32 = bundle.infer(&imgs, None)?;
+
+    // quantize every weight to SWIS@3 and run the same graph
+    let spec = VariantSpec::swis(3.0, 4);
+    let mut wq = bundle.weights.clone();
+    for (name, t) in &bundle.weights {
+        if !name.ends_with("_b") {
+            wq.insert(name.clone(), quantize_jax_weight(t, &spec)?);
+        }
+    }
+    let swis3 = bundle.infer(&imgs, Some(&wq))?;
+
+    println!("\nlogits (image 0):");
+    println!("  fp32   : {:?}", &fp32.data()[..5]);
+    println!("  swis@3 : {:?}", &swis3.data()[..5]);
+    let drift = fp32
+        .data()
+        .iter()
+        .zip(swis3.data())
+        .map(|(a, b)| (a - b).abs() as f64)
+        .sum::<f64>()
+        / fp32.len() as f64;
+    println!("mean |logit drift| = {drift:.4}");
+    println!("\nquickstart OK");
+    Ok(())
+}

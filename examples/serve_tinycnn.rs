@@ -1,0 +1,107 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the AOT-compiled
+//! TinyCNN, start the coordinator with FP32 + SWIS weight variants, replay
+//! a bursty open-loop request trace against it, and report accuracy,
+//! latency percentiles and throughput per variant.
+//!
+//! This is the proof that all three layers compose: the Pallas-bearing
+//! graph was lowered at build time (L1 in L2), and the Rust coordinator
+//! (L3) batches, routes and executes it via PJRT with Python nowhere on
+//! the request path.
+//!
+//! Run: cargo run --release --example serve_tinycnn [-- --requests 512]
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::util::cli;
+use swis::util::npy;
+use swis::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(2).collect(); // skip "--"
+    let args = cli::parse(&argv, &["requests", "max-batch", "max-wait-ms", "rate"])?;
+    let n_req = args.get_usize("requests", 512)?;
+    let rate = args.get_f64("rate", 300.0)?; // offered load, req/s
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let variants = vec![
+        VariantSpec::fp32(),
+        VariantSpec::swis(3.0, 4),
+        VariantSpec::swis(2.5, 4),
+        VariantSpec::swis_c(3.0, 4),
+    ];
+    let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 64)?,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
+    };
+
+    println!("starting coordinator with variants {names:?} ...");
+    let t_start = Instant::now();
+    let coord = Coordinator::start(&dir, policy, variants)?;
+    println!("warm-up (compile + quantize) took {:.2} s", t_start.elapsed().as_secs_f64());
+
+    // real test images so we can report accuracy per variant
+    let npz = npy::load_npz(&dir.join("dataset.npz"))?;
+    let x = npz["x_test"].as_f32();
+    let y = npz["y_test"].as_i64();
+    let per = 32 * 32 * 3;
+    let n_avail = x.shape()[0];
+
+    // open-loop Poisson-ish arrivals at `rate` req/s
+    let mut rng = Rng::new(2026);
+    let mut handles = Vec::with_capacity(n_req);
+    let t0 = Instant::now();
+    for i in 0..n_req {
+        let img_idx = i % n_avail;
+        let image = x.data()[img_idx * per..(img_idx + 1) * per].to_vec();
+        let variant = names[i % names.len()].clone();
+        let rx = coord.submit(InferRequest { image, variant: variant.clone() })?;
+        handles.push((variant, img_idx, rx));
+        let gap = -rng.f64().max(1e-9).ln() / rate;
+        std::thread::sleep(Duration::from_secs_f64(gap));
+    }
+
+    // collect + score
+    let mut correct: HashMap<String, (usize, usize)> = HashMap::new();
+    for (variant, img_idx, rx) in handles {
+        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        let label = y.data()[img_idx] as usize;
+        let arg = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let e = correct.entry(variant).or_insert((0, 0));
+        e.1 += 1;
+        if arg == label {
+            e.0 += 1;
+        }
+    }
+    let wall = t0.elapsed();
+
+    println!("\n== per-variant accuracy (synth-CIFAR test images) ==");
+    let mut keys: Vec<&String> = correct.keys().collect();
+    keys.sort();
+    for k in keys {
+        let (ok, n) = correct[k];
+        println!("  {:<10} {:>5.1}%  ({ok}/{n})", k, 100.0 * ok as f64 / n as f64);
+    }
+
+    let snap = coord.metrics.snapshot();
+    println!("\n== serving metrics ==");
+    println!("  requests        : {n_req} in {:.2} s", wall.as_secs_f64());
+    println!("  throughput      : {:.0} req/s (offered {rate:.0})", n_req as f64 / wall.as_secs_f64());
+    println!("  batches         : {} (mean size {:.1})", snap.batches, snap.mean_batch);
+    println!("  exec  p50       : {:.0} us/batch", snap.exec_us.p50);
+    println!("  queue p50       : {:.0} us", snap.queue_us.p50);
+    println!("  total p50 / p99 : {:.0} / {:.0} us", snap.p50_total_us, snap.p99_total_us);
+    coord.shutdown()?;
+    println!("\nserve_tinycnn OK");
+    Ok(())
+}

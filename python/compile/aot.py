@@ -1,0 +1,307 @@
+"""AOT build: train the proxy model, lower Layer-2 graphs (and the Layer-1
+Pallas kernel inside them) to HLO *text*, and emit cross-language goldens.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Everything here runs ONCE at build time (`make artifacts`); the Rust binary
+is self-contained afterwards.
+
+Artifacts written to --out (default ../artifacts):
+  tinycnn_weights.npz   trained FP32 weights (+ biases)
+  dataset.npz           synth-CIFAR test set + a train subset
+  train_log.json        training curve of the build-time run
+  model_b{1,8,64}.hlo.txt        forward(images, *weights) -> logits
+  swis_conv1_b8.hlo.txt          forward with conv1 on the Pallas kernel
+  swis_matmul.hlo.txt            standalone Layer-1 kernel artifact
+  golden_quant.npz      SWIS/SWIS-C packing goldens for rust/tests/golden.rs
+  retrain_results.json  Table-5 QAT accuracies (skipped with --skip-retrain)
+  manifest.json         artifact index: inputs, shapes, dtypes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import retrain as retrain_mod
+from . import swis_quant as sq
+from . import train as train_mod
+from .kernels.swis_matmul import swis_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(a) -> dict:
+    return {"shape": list(np.shape(a)), "dtype": str(np.asarray(a).dtype)}
+
+
+def lower_model(params, batch: int, path: str) -> dict:
+    flat = model_mod.flat_param_list(params)
+    x = jax.ShapeDtypeStruct((batch, data_mod.IMG, data_mod.IMG, 3), jnp.float32)
+    specs = [x] + [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat]
+    lowered = jax.jit(model_mod.forward_flat).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    inputs = [{"name": "images", **_spec(np.zeros((batch, 32, 32, 3), np.float32))}]
+    for name, arr in zip(
+        [n for nm in model_mod.PARAM_ORDER for n in (nm, nm + "_b")], flat
+    ):
+        inputs.append({"name": name, **_spec(arr)})
+    return {
+        "file": os.path.basename(path),
+        "kind": "model",
+        "batch": batch,
+        "inputs": inputs,
+        "output": {"shape": [batch, data_mod.NCLASS], "dtype": "float32"},
+    }
+
+
+def lower_act_trunc(params, batch: int, bits: int, path: str) -> dict:
+    """Activation-truncation baseline artifact (Table 3 'Act.' column)."""
+    flat = model_mod.flat_param_list(params)
+    x = jax.ShapeDtypeStruct((batch, data_mod.IMG, data_mod.IMG, 3), jnp.float32)
+    specs = [x] + [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat]
+    lowered = jax.jit(model_mod.forward_act_trunc(bits)).lower(*specs)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    inputs = [{"name": "images", **_spec(np.zeros((batch, 32, 32, 3), np.float32))}]
+    for name, arr in zip(
+        [n for nm in model_mod.PARAM_ORDER for n in (nm, nm + "_b")], flat
+    ):
+        inputs.append({"name": name, **_spec(arr)})
+    return {
+        "file": os.path.basename(path),
+        "kind": f"model_act_trunc{bits}",
+        "batch": batch,
+        "act_bits": bits,
+        "inputs": inputs,
+        "output": {"shape": [batch, data_mod.NCLASS], "dtype": "float32"},
+    }
+
+
+def lower_swis_conv1(params, batch: int, n_shifts: int, path: str) -> dict:
+    """Forward pass with conv1 through the Pallas kernel (L1∘L2 proof)."""
+    rest = []
+    for name in model_mod.PARAM_ORDER[1:]:
+        rest.append(params[name])
+        rest.append(params[name + "_b"])
+    k_in = 27  # 3*3*3
+    cout = 32
+    specs = [
+        jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32),  # x
+        jax.ShapeDtypeStruct((n_shifts, k_in, cout), jnp.float32),  # masks
+        jax.ShapeDtypeStruct((k_in, cout), jnp.float32),  # signs
+        jax.ShapeDtypeStruct((n_shifts,), jnp.float32),  # powers
+        jax.ShapeDtypeStruct((), jnp.float32),  # scale
+        jax.ShapeDtypeStruct((cout,), jnp.float32),  # conv1 bias
+    ] + [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in rest]
+    lowered = jax.jit(model_mod.forward_swis_conv1).lower(*specs)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    inputs = [
+        {"name": "images", "shape": [batch, 32, 32, 3], "dtype": "float32"},
+        {"name": "conv1_masks", "shape": [n_shifts, k_in, cout], "dtype": "float32"},
+        {"name": "conv1_signs", "shape": [k_in, cout], "dtype": "float32"},
+        {"name": "conv1_powers", "shape": [n_shifts], "dtype": "float32"},
+        {"name": "conv1_scale", "shape": [], "dtype": "float32"},
+        {"name": "conv1_b", "shape": [cout], "dtype": "float32"},
+    ]
+    for name, arr in zip(
+        [n for nm in model_mod.PARAM_ORDER[1:] for n in (nm, nm + "_b")], rest
+    ):
+        inputs.append({"name": name, **_spec(arr)})
+    return {
+        "file": os.path.basename(path),
+        "kind": "model_swis_conv1",
+        "batch": batch,
+        "n_shifts": n_shifts,
+        "inputs": inputs,
+        "output": {"shape": [batch, data_mod.NCLASS], "dtype": "float32"},
+    }
+
+
+def lower_kernel(path: str, m=64, k=128, n=64, s=4) -> dict:
+    specs = [
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((s, k, n), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((s,), jnp.float32),
+    ]
+    lowered = jax.jit(swis_matmul).lower(*specs)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "file": os.path.basename(path),
+        "kind": "swis_matmul",
+        "inputs": [
+            {"name": "a", "shape": [m, k], "dtype": "float32"},
+            {"name": "masks", "shape": [s, k, n], "dtype": "float32"},
+            {"name": "signs", "shape": [k, n], "dtype": "float32"},
+            {"name": "powers", "shape": [s], "dtype": "float32"},
+        ],
+        "output": {"shape": [m, n], "dtype": "float32"},
+    }
+
+
+def write_goldens(path: str, seed: int = 42) -> None:
+    """Cross-language packing goldens consumed by rust/tests/golden.rs.
+
+    For each case: input float weights + every packed field + dequantized
+    floats. The Rust quantizer must match the integer fields EXACTLY
+    (shared tie-breaking conventions, see swis_quant.py docstring).
+    """
+    rng = np.random.default_rng(seed)
+    out: dict[str, np.ndarray] = {}
+    cases = []
+    cid = 0
+    for shape in [(8, 64), (16, 36)]:
+        for gs in (1, 4):
+            for ns in (2, 3):
+                for consecutive in (False, True):
+                    w = rng.normal(0, 0.05, size=shape)
+                    # heavier tail like real conv weights
+                    w += rng.normal(0, 0.15, size=shape) * (rng.random(shape) < 0.1)
+                    pk = sq.quantize_swis(w, ns, gs, 1.0, consecutive)
+                    key = f"case{cid}"
+                    out[f"{key}_w"] = w.astype(np.float64)
+                    out[f"{key}_shifts"] = pk.shifts
+                    out[f"{key}_masks"] = pk.masks
+                    out[f"{key}_signs"] = pk.signs
+                    out[f"{key}_dequant"] = pk.to_float()
+                    out[f"{key}_scale"] = np.array([pk.scale])
+                    cases.append(
+                        {
+                            "key": key,
+                            "shape": list(shape),
+                            "group_size": gs,
+                            "n_shifts": ns,
+                            "consecutive": bool(consecutive),
+                        }
+                    )
+                    cid += 1
+    out["n_cases"] = np.array([cid])
+    np.savez(path, **out)
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(cases, f, indent=1)
+
+
+RETRAIN_CONFIGS = [
+    # (label, mode, consecutive, n_shifts)
+    ("swis_ss_2", "swis", False, 2.0),
+    ("swis_ss_2.5", "swis", False, 2.5),
+    ("swis_ss_3", "swis", False, 3.0),
+    ("swis_c_ss_2", "swis", True, 2.0),
+    ("swis_c_ss_3", "swis", True, 3.0),
+    ("trunc_2", "trunc", False, 2.0),
+    ("trunc_3", "trunc", False, 3.0),
+]
+
+
+def run_retrain(params, ds, steps: int) -> dict:
+    results = {}
+    for label, mode, consecutive, ns in RETRAIN_CONFIGS:
+        t0 = time.time()
+        acc, _ = retrain_mod.retrain(
+            params, ds, ns, mode=mode, consecutive=consecutive, steps=steps
+        )
+        results[label] = {"n_shifts": ns, "accuracy": acc}
+        print(f"  retrain {label}: acc={acc:.4f} ({time.time()-t0:.1f}s)")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=500)
+    ap.add_argument("--retrain-steps", type=int, default=120)
+    ap.add_argument("--skip-retrain", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wpath = os.path.join(args.out, "tinycnn_weights.npz")
+    dpath = os.path.join(args.out, "dataset.npz")
+    if os.path.exists(wpath) and os.path.exists(dpath):
+        print("== reusing trained weights")
+        params = dict(np.load(wpath))
+        ds = dict(np.load(dpath))
+        log = []
+    else:
+        print("== training TinyCNN on synth-CIFAR")
+        params, ds, log = train_mod.train(seed=args.seed, steps=args.train_steps)
+        np.savez(wpath, **params)
+        np.savez(
+            dpath,
+            x_test=ds["x_test"],
+            y_test=ds["y_test"],
+            x_train=ds["x_train"][:1024],
+            y_train=ds["y_train"][:1024],
+        )
+        with open(os.path.join(args.out, "train_log.json"), "w") as f:
+            json.dump([{"step": s, "loss": l, "acc": a} for s, l, a in log], f, indent=1)
+
+    baseline = model_mod.accuracy(
+        {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(ds["x_test"]),
+        jnp.asarray(ds["y_test"]),
+    )
+    print(f"== baseline FP32 test accuracy: {baseline:.4f}")
+
+    print("== lowering HLO artifacts")
+    manifest: dict = {"baseline_accuracy": float(baseline), "artifacts": []}
+    for b in (1, 8, 64):
+        p = os.path.join(args.out, f"model_b{b}.hlo.txt")
+        manifest["artifacts"].append(lower_model(params, b, p))
+        print(f"  wrote {p}")
+    p = os.path.join(args.out, "swis_conv1_b8.hlo.txt")
+    manifest["artifacts"].append(lower_swis_conv1(params, 8, 3, p))
+    print(f"  wrote {p}")
+    for bits in (2, 3, 4, 6, 7):
+        p = os.path.join(args.out, f"model_act{bits}_b64.hlo.txt")
+        manifest["artifacts"].append(lower_act_trunc(params, 64, bits, p))
+        print(f"  wrote {p}")
+    p = os.path.join(args.out, "swis_matmul.hlo.txt")
+    manifest["artifacts"].append(lower_kernel(p))
+    print(f"  wrote {p}")
+
+    print("== writing quantization goldens")
+    write_goldens(os.path.join(args.out, "golden_quant.npz"))
+
+    rpath = os.path.join(args.out, "retrain_results.json")
+    if args.skip_retrain:
+        print("== skipping retraining (--skip-retrain)")
+    elif os.path.exists(rpath):
+        print("== reusing retrain results")
+    else:
+        print("== quantization-aware retraining (Table 5 proxy)")
+        results = run_retrain(params, ds, args.retrain_steps)
+        results["baseline"] = {"n_shifts": 8, "accuracy": float(baseline)}
+        with open(rpath, "w") as f:
+            json.dump(results, f, indent=1)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("== done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SWIS bit-serial grouped MAC (Eq. 7).
+
+The decomposed weight operand is dense here (mask planes as 0/1 floats,
+signs as ±1 floats, shift powers as floats); the Pallas kernel in
+swis_matmul.py must match this to float32 accuracy.
+"""
+
+import jax.numpy as jnp
+
+
+def swis_matmul_ref(a, masks, signs, powers):
+    """Eq. 7:  out = sum_j 2^{s_j} * (a @ (signs * masks[j])).
+
+    a:      (M, K)      activations
+    masks:  (S, K, N)   per-shift-plane mask bits (0/1)
+    signs:  (K, N)      weight signs (±1)
+    powers: (S,)        2^{s_j} shift powers
+    returns (M, N)
+    """
+    s = masks.shape[0]
+    out = jnp.zeros((a.shape[0], masks.shape[2]), dtype=jnp.float32)
+    for j in range(s):
+        plane = signs * masks[j]
+        out = out + powers[j] * (a.astype(jnp.float32) @ plane.astype(jnp.float32))
+    return out
+
+
+def swis_dequant_ref(masks, signs, powers):
+    """Effective dense weight matrix implied by the decomposition."""
+    w = (masks * powers[:, None, None]).sum(axis=0)
+    return signs * w

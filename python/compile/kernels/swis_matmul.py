@@ -1,0 +1,152 @@
+"""Layer-1 Pallas kernel: SWIS bit-serial grouped MAC (paper Eq. 7).
+
+The kernel mirrors the SWIS PE pipeline of Sec. 3.1/3.2:
+
+  * the grid's innermost dimension iterates SHIFT CYCLES (the staggered
+    schedule: the activation tile stays resident — the "activation fed in
+    repeatedly" of Sec. 3.2 — while mask planes stream through);
+  * each step ANDs activations with the shift's mask plane (here a masked
+    matmul on the MXU), applies conditional sign inversion, reduces across
+    the group dimension (the K contraction), and accumulates the reduced
+    sum shifted by 2^{s_j} (a scalar multiply).
+
+TPU mapping (DESIGN.md §3): activation tile ↔ VMEM act buffer, mask-plane
+stream ↔ weight stream, shift loop ↔ bit-serial cycles. interpret=True is
+mandatory here — CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 128  # activation-tile rows  (paper: SA rows * unroll)
+DEFAULT_BN = 128  # output columns        (paper: SA columns)
+
+
+def _kernel(a_ref, m_ref, s_ref, powers_ref, o_ref):
+    """One (i, n, j) grid step: o[i,n] += 2^{s_j} * (a[i] @ (sign*mask_j)[n])."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # conditional sign inversion + masking = the PE's AND + negate stage
+    plane = s_ref[...] * m_ref[...]
+    # group reduction on the MXU (the PE adder tree), then barrel shift
+    o_ref[...] += powers_ref[j] * jnp.dot(
+        a_ref[...], plane, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def swis_matmul(a, masks, signs, powers, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """SWIS grouped bit-serial matmul.
+
+    a:      (M, K) float32 activations
+    masks:  (S, K, N) {0,1} mask planes (shift-major, as stored by the
+            PackedLayer format — one plane per shift cycle)
+    signs:  (K, N) ±1 weight signs
+    powers: (S,) float32 shift powers 2^{s_j}
+    returns (M, N) float32
+
+    Block decomposition: (M, N) output tiles of (bm, bn); the K dimension
+    (weight-group fan-in) is kept whole per tile, matching the paper's PE
+    which reduces a full group per cycle.
+    """
+    m, k = a.shape
+    s, k2, n = masks.shape
+    assert k == k2 and signs.shape == (k, n) and powers.shape == (s,)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), s)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, nn, j: (i, 0)),  # act tile resident
+            pl.BlockSpec((None, k, bn), lambda i, nn, j: (j, 0, nn)),  # mask plane
+            pl.BlockSpec((k, bn), lambda i, nn, j: (0, nn)),  # signs
+            pl.BlockSpec((s,), lambda i, nn, j: (0,)),  # shift powers (SMEM-like)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, nn, j: (i, nn)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(
+        a.astype(jnp.float32),
+        masks.astype(jnp.float32),
+        signs.astype(jnp.float32),
+        powers.astype(jnp.float32),
+    )
+
+
+def swis_matmul_nokernel(a, masks, signs, powers):
+    """jnp fallback with identical semantics (used when shapes are too
+    small/ragged to justify the kernel; kept in the same module so L2 can
+    switch transparently)."""
+    planes = signs[None] * masks  # (S, K, N)
+    eff = (planes * powers[:, None, None]).sum(axis=0)
+    return (a.astype(jnp.float32) @ eff.astype(jnp.float32)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Double-shift variant (paper Sec. 3.1): two shift planes per grid step,
+# amortizing the resident activation tile the way the DS PE amortizes its
+# activation buffer and sign stage. Shift planes are padded to an even
+# count with a zero plane (the "wasted slot" of an odd shift budget).
+# --------------------------------------------------------------------------
+
+
+def _kernel_ds(a_ref, m_ref, s_ref, powers_ref, o_ref):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    plane0 = s_ref[...] * m_ref[0]
+    plane1 = s_ref[...] * m_ref[1]
+    acc = powers_ref[2 * j] * jnp.dot(
+        a_ref[...], plane0, preferred_element_type=jnp.float32
+    )
+    acc += powers_ref[2 * j + 1] * jnp.dot(
+        a_ref[...], plane1, preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def swis_matmul_ds(a, masks, signs, powers, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Double-shift SWIS matmul: identical semantics to swis_matmul, half
+    the grid steps along the shift dimension (odd S pays a padded slot)."""
+    m, k = a.shape
+    s, k2, n = masks.shape
+    assert k == k2 and signs.shape == (k, n) and powers.shape == (s,)
+    if s % 2 == 1:  # pad the wasted DS slot
+        masks = jnp.concatenate([masks, jnp.zeros((1, k, n), masks.dtype)], axis=0)
+        powers = jnp.concatenate([powers, jnp.zeros((1,), powers.dtype)], axis=0)
+        s += 1
+    bm = min(bm, m)
+    bn = min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), s // 2)
+    return pl.pallas_call(
+        _kernel_ds,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, nn, j: (i, 0)),
+            pl.BlockSpec((2, k, bn), lambda i, nn, j: (j, 0, nn)),  # plane pair
+            pl.BlockSpec((k, bn), lambda i, nn, j: (0, nn)),
+            pl.BlockSpec((s,), lambda i, nn, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, nn, j: (i, nn)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(
+        a.astype(jnp.float32),
+        masks.astype(jnp.float32),
+        signs.astype(jnp.float32),
+        powers.astype(jnp.float32),
+    )

@@ -1,0 +1,173 @@
+"""Layer-2 JAX model: TinyCNN — the accuracy-proxy network (DESIGN.md §4).
+
+A VGG-style CNN (6 conv + 2 FC, ~150k params) on 32x32x3 inputs. The
+forward pass takes WEIGHTS AS ARGUMENTS so a single AOT-lowered HLO
+artifact executes both the FP32 baseline and any quantized weight set the
+Rust coordinator feeds it — quantization is a pure weight transform
+(paper Sec. 2), so the graph is shared.
+
+`forward_swis_conv1` additionally routes the first convolution through the
+Layer-1 Pallas kernel (im2col + swis_matmul) to prove kernel-in-model
+composition end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.swis_matmul import swis_matmul
+
+# (name, (kh, kw, cin, cout), stride)
+CONV_SPECS = [
+    ("conv1", (3, 3, 3, 32), 1),
+    ("conv2", (3, 3, 32, 32), 2),
+    ("conv3", (3, 3, 32, 64), 1),
+    ("conv4", (3, 3, 64, 64), 2),
+    ("conv5", (3, 3, 64, 128), 1),
+    ("conv6", (3, 3, 128, 128), 2),
+]
+FC_SPECS = [("fc1", (128, 64)), ("fc2", (64, 10))]
+PARAM_ORDER = [n for n, *_ in CONV_SPECS] + [n for n, _ in FC_SPECS]
+
+
+def init_params(seed: int = 0) -> dict[str, np.ndarray]:
+    """He-normal initialization; numpy so the trainer owns the buffers."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for name, (kh, kw, cin, cout), _ in CONV_SPECS:
+        fan_in = kh * kw * cin
+        params[name] = (rng.standard_normal((kh, kw, cin, cout)) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+        params[name + "_b"] = np.zeros(cout, dtype=np.float32)
+    for name, (din, dout) in FC_SPECS:
+        params[name] = (rng.standard_normal((din, dout)) * np.sqrt(2.0 / din)).astype(np.float32)
+        params[name + "_b"] = np.zeros(dout, dtype=np.float32)
+    return params
+
+
+def conv_names() -> list[str]:
+    return [n for n, *_ in CONV_SPECS]
+
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def forward(params, x):
+    """Logits for NHWC input batch. params: dict name -> array."""
+    h = x
+    for name, _, stride in CONV_SPECS:
+        h = jax.nn.relu(_conv(h, params[name], params[name + "_b"], stride))
+    h = h.mean(axis=(1, 2))  # global average pool -> (B, 128)
+    h = jax.nn.relu(h @ params["fc1"] + params["fc1_b"])
+    return h @ params["fc2"] + params["fc2_b"]
+
+
+def forward_flat(x, *flat_params):
+    """forward() with a flat positional param list (AOT artifact signature:
+    images first, then conv1, conv1_b, ..., fc2, fc2_b in PARAM_ORDER)."""
+    params = {}
+    it = iter(flat_params)
+    for name in PARAM_ORDER:
+        params[name] = next(it)
+        params[name + "_b"] = next(it)
+    return forward(params, x)
+
+
+def flat_param_list(params) -> list[np.ndarray]:
+    out = []
+    for name in PARAM_ORDER:
+        out.append(params[name])
+        out.append(params[name + "_b"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Pallas-kernel-backed first convolution (L1 composition proof)
+# --------------------------------------------------------------------------
+
+
+def _im2col(x, kh, kw, stride):
+    """NHWC -> (B*Ho*Wo, kh*kw*C) patches with SAME padding."""
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    ho = (h + stride - 1) // stride
+    wo = (w + stride - 1) // stride
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, i, j, 0), (b, i + h, j + w, c), (1, stride, stride, 1)
+            )
+            cols.append(patch)
+    stacked = jnp.stack(cols, axis=3)  # (B, Ho, Wo, kh*kw, C)
+    return stacked.reshape(b * ho * wo, kh * kw * c), (b, ho, wo)
+
+
+def forward_swis_conv1(x, masks1, signs1, powers1, scale1, b1, *rest_flat):
+    """Forward pass with conv1 executed by the Layer-1 SWIS Pallas kernel.
+
+    masks1: (S, 27, 32) mask planes for conv1's (3*3*3, 32) weight matrix;
+    signs1: (27, 32); powers1: (S,); scale1: scalar dequant scale.
+    rest_flat: conv2, conv2_b, ... in PARAM_ORDER order (conv1 omitted).
+    """
+    cols, (b, ho, wo) = _im2col(x, 3, 3, 1)
+    y = swis_matmul(cols, masks1, signs1, powers1) * scale1
+    h = jax.nn.relu(y.reshape(b, ho, wo, -1) + b1)
+    params = {}
+    it = iter(rest_flat)
+    for name in PARAM_ORDER[1:]:
+        params[name] = next(it)
+        params[name + "_b"] = next(it)
+    for name, _, stride in CONV_SPECS[1:]:
+        h = jax.nn.relu(_conv(h, params[name], params[name + "_b"], stride))
+    h = h.mean(axis=(1, 2))
+    h = jax.nn.relu(h @ params["fc1"] + params["fc1_b"])
+    return h @ params["fc2"] + params["fc2_b"]
+
+
+def accuracy(params, x, y) -> float:
+    logits = forward(params, x)
+    return float((jnp.argmax(logits, -1) == y).mean())
+
+
+# --------------------------------------------------------------------------
+# Activation truncation baseline (paper Sec. 5: layer-wise LSB truncation on
+# all activations, simulating Stripes-style bit-serial act quantization [8])
+# --------------------------------------------------------------------------
+
+
+def act_trunc(a, bits: int):
+    """Quantize activations to 8-bit codes (dynamic layer-wise max scaling)
+    and truncate the last 8-bits LSBs — Eq. analog of the paper's
+    activation-truncation comparison. Static `bits`; post-ReLU inputs."""
+    amax = jnp.maximum(jnp.max(a), 1e-6)
+    code = jnp.clip(jnp.round(a / amax * 255.0), 0.0, 255.0)
+    step = float(1 << (8 - bits))
+    code = jnp.floor(code / step) * step
+    return code / 255.0 * amax
+
+
+def forward_act_trunc(bits: int):
+    """Factory: forward pass with every activation truncated to `bits`."""
+
+    def fwd(x, *flat_params):
+        params = {}
+        it = iter(flat_params)
+        for name in PARAM_ORDER:
+            params[name] = next(it)
+            params[name + "_b"] = next(it)
+        h = x  # input images are zero-centered; truncation applies to
+        # the unsigned post-ReLU activations only
+        for name, _, stride in CONV_SPECS:
+            h = act_trunc(jax.nn.relu(_conv(h, params[name], params[name + "_b"], stride)), bits)
+        h = h.mean(axis=(1, 2))
+        h = act_trunc(jax.nn.relu(h @ params["fc1"] + params["fc1_b"]), bits)
+        return h @ params["fc2"] + params["fc2_b"]
+
+    return fwd

@@ -1,0 +1,153 @@
+"""Quantization-aware retraining (paper Sec. 5.1.2, Table 5).
+
+Shift-value selection is treated as a special quantization: every
+`reselect_every` steps the SWIS decomposition is recomputed from the
+current master weights (the paper reselects per batch; we amortize
+slightly for build-time cost), the forward pass runs on the quantized
+weights, and the straight-through estimator routes gradients to the FP32
+master copy.
+
+Scheduled fractional shift targets (e.g. 2.5) use the Sec. 4.3 scheduler
+to assign per-filter shift counts before packing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_mod
+from . import swis_quant as sq
+from .train import loss_fn as _plain_loss
+
+
+def _quantize_convs(
+    params: dict[str, np.ndarray],
+    n_shifts: float,
+    group_size: int,
+    consecutive: bool,
+    alpha: float = 1.0,
+) -> dict[str, np.ndarray]:
+    """Dequantized conv weights at the target (possibly fractional) shifts."""
+    out = {}
+    for name in model_mod.conv_names():
+        w = np.asarray(params[name])
+        wm = np.moveaxis(w, -1, 0)  # filters-first for grouping
+        if float(n_shifts).is_integer():
+            pk = sq.quantize_swis(wm, int(n_shifts), group_size, alpha, consecutive)
+        else:
+            pk = sq.schedule_filters(
+                wm, n_shifts, group_size, alpha, consecutive
+            ).packed
+        out[name] = np.moveaxis(pk.to_float(), 0, -1).astype(np.float32)
+    return out
+
+
+def qat_loss(params, qweights, x, y):
+    """Loss at straight-through quantized weights."""
+    p = dict(params)
+    for k, wq in qweights.items():
+        p[k] = params[k] + jax.lax.stop_gradient(wq - params[k])
+    logits = model_mod.forward(p, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def qat_step(params, m, v, step, qweights, x, y, lr=2e-4, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(qat_loss)(params, qweights, x, y)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mhat = new_m[k] / (1 - b1**step)
+        vhat = new_v[k] / (1 - b2**step)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v, loss
+
+
+def retrain(
+    params: dict[str, np.ndarray],
+    dataset: dict[str, np.ndarray],
+    n_shifts: float,
+    group_size: int = 4,
+    consecutive: bool = False,
+    mode: str = "swis",  # "swis" | "trunc"
+    steps: int = 150,
+    batch: int = 128,
+    reselect_every: int = 5,
+    seed: int = 7,
+    lr: float = 2e-4,
+) -> tuple[float, dict[str, np.ndarray]]:
+    """Returns (quantized test accuracy after retraining, final params)."""
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    rng = np.random.default_rng(seed)
+    ntr = dataset["x_train"].shape[0]
+    qw = None
+    for step in range(1, steps + 1):
+        if qw is None or step % reselect_every == 0:
+            pn = {k: np.asarray(x) for k, x in p.items()}
+            if mode == "trunc":
+                qw = {
+                    name: sq.truncate_weights(pn[name], int(n_shifts)).astype(np.float32)
+                    for name in model_mod.conv_names()
+                }
+            else:
+                qw = _quantize_convs(pn, n_shifts, group_size, consecutive)
+        idx = rng.integers(0, ntr, size=batch)
+        x = jnp.asarray(dataset["x_train"][idx])
+        y = jnp.asarray(dataset["y_train"][idx])
+        qwj = {k: jnp.asarray(w) for k, w in qw.items()}
+        p, m, v, _ = qat_step(p, m, v, step, qwj, x, y, lr=lr)
+    # final evaluation at quantized weights
+    pn = {k: np.asarray(x) for k, x in p.items()}
+    if mode == "trunc":
+        qw = {
+            name: sq.truncate_weights(pn[name], int(n_shifts)).astype(np.float32)
+            for name in model_mod.conv_names()
+        }
+    else:
+        qw = _quantize_convs(pn, n_shifts, group_size, consecutive)
+    peval = dict(pn)
+    peval.update(qw)
+    acc = model_mod.accuracy(
+        {k: jnp.asarray(v) for k, v in peval.items()},
+        jnp.asarray(dataset["x_test"]),
+        jnp.asarray(dataset["y_test"]),
+    )
+    return float(acc), pn
+
+
+def quantized_accuracy(
+    params: dict[str, np.ndarray],
+    dataset: dict[str, np.ndarray],
+    n_shifts: float,
+    mode: str = "swis",
+    consecutive: bool = False,
+    group_size: int = 4,
+) -> float:
+    """Test accuracy with conv weights quantized (no retraining) — the
+    post-training starting point Table 5's retrained numbers improve on."""
+    pn = {k: np.asarray(v) for k, v in params.items()}
+    if mode == "trunc":
+        qw = {
+            name: sq.truncate_weights(pn[name], int(n_shifts)).astype(np.float32)
+            for name in model_mod.conv_names()
+        }
+    else:
+        qw = _quantize_convs(pn, n_shifts, group_size, consecutive)
+    peval = dict(pn)
+    peval.update(qw)
+    return float(
+        model_mod.accuracy(
+            {k: jnp.asarray(v) for k, v in peval.items()},
+            jnp.asarray(dataset["x_test"]),
+            jnp.asarray(dataset["y_test"]),
+        )
+    )

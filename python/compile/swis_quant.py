@@ -1,0 +1,512 @@
+"""SWIS quantization — reference implementation (numpy).
+
+Implements the paper's offline weight decomposition (Sec. 2.2, 4.1):
+
+  * symmetric int8 pre-quantization (sign-magnitude, B = 8 magnitude bits
+    clipped to 127),
+  * SWIS sparse shift selection: enumerate all C(8, N) shift subsets per
+    group, quantize each weight magnitude to the nearest value in the
+    2^N-entry subset-sum codebook, score with MSE++ (Eq. 12),
+  * SWIS-C consecutive selection: enumerate the 9-N offsets,
+  * layer-wise truncation baselines (weight LSB-truncation + clipping,
+    activation truncation),
+  * the filter scheduling heuristic of Sec. 4.3.
+
+Conventions shared with the Rust implementation (cross-checked by golden
+tests in rust/tests/golden.rs):
+
+  * shift subsets are enumerated in lexicographically ascending order of
+    positions, e.g. (0,1) < (0,2) < ... < (6,7);
+  * nearest-codebook ties round DOWN (pick the smaller magnitude);
+  * MSE++ comparisons use exact integer arithmetic on int magnitudes
+    (errors are ints, alpha is rational), so combo selection is
+    bit-identical across languages; strict `<` keeps the earliest combo
+    on ties.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+BITS = 8  # underlying magnitude bitwidth
+MAG_MAX = 127  # symmetric int8
+
+
+# --------------------------------------------------------------------------
+# shift subset enumeration + codebooks
+# --------------------------------------------------------------------------
+
+
+def shift_combos(n_shifts: int, bits: int = BITS) -> list[tuple[int, ...]]:
+    """All C(bits, n_shifts) shift-position subsets, lexicographic order."""
+    if not 1 <= n_shifts <= bits:
+        raise ValueError(f"n_shifts must be in [1, {bits}], got {n_shifts}")
+    return list(itertools.combinations(range(bits), n_shifts))
+
+
+def consecutive_combos(n_shifts: int, bits: int = BITS) -> list[tuple[int, ...]]:
+    """The 9-N consecutive shift windows used by SWIS-C."""
+    return [tuple(range(o, o + n_shifts)) for o in range(bits - n_shifts + 1)]
+
+
+def codebook(combo: tuple[int, ...]) -> np.ndarray:
+    """Sorted, deduplicated subset sums of {2^s : s in combo} (incl. 0)."""
+    vals = {0}
+    for r in range(1, len(combo) + 1):
+        for sub in itertools.combinations(combo, r):
+            vals.add(sum(1 << s for s in sub))
+    return np.array(sorted(vals), dtype=np.int64)
+
+
+def nearest(cb: np.ndarray, mags: np.ndarray) -> np.ndarray:
+    """Nearest codebook entry for each magnitude; ties round DOWN."""
+    idx = np.searchsorted(cb, mags)  # first cb[i] >= mag
+    idx_hi = np.clip(idx, 0, len(cb) - 1)
+    idx_lo = np.clip(idx - 1, 0, len(cb) - 1)
+    lo, hi = cb[idx_lo], cb[idx_hi]
+    # tie (mag - lo == hi - mag) -> lo
+    pick_hi = (hi - mags) < (mags - lo)
+    return np.where(pick_hi, hi, lo)
+
+
+# --------------------------------------------------------------------------
+# error metric (Eq. 11/12) — exact integer core
+# --------------------------------------------------------------------------
+
+
+def msepp_int(err: np.ndarray, alpha_num: int = 1, alpha_den: int = 1) -> np.ndarray:
+    """MSE++ numerator over the last axis, as exact integers scaled by
+    alpha_den (the 1/N normalization is a shared constant and dropped for
+    comparisons): alpha_den * sum(e^2) + alpha_num * (sum e)^2.
+
+    err: (..., G) int64 quantization errors. Returns (...,) int64.
+    """
+    e = err.astype(np.int64)
+    se = e.sum(axis=-1)
+    return alpha_den * (e * e).sum(axis=-1) + alpha_num * se * se
+
+
+def msepp(x: np.ndarray, xq: np.ndarray, alpha: float = 1.0) -> float:
+    """Float MSE++ (Eq. 12) for reporting."""
+    e = (x - xq).astype(np.float64)
+    n = e.shape[-1] if e.ndim else e.size
+    return float((alpha * e.sum(axis=-1) ** 2 + (e * e).sum(axis=-1)).mean() / n)
+
+
+def rmse(x: np.ndarray, xq: np.ndarray) -> float:
+    return float(np.sqrt(np.mean((x.astype(np.float64) - xq) ** 2)))
+
+
+# --------------------------------------------------------------------------
+# int8 pre-quantization
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Int8Layer:
+    """Symmetric int8 view of a float weight tensor."""
+
+    mags: np.ndarray  # uint8 magnitudes in [0, 127], shape = w.shape
+    signs: np.ndarray  # int8 in {-1, +1}
+    scale: float
+
+    def to_float(self) -> np.ndarray:
+        return self.mags.astype(np.float64) * self.signs * self.scale
+
+
+def to_int8(w: np.ndarray) -> Int8Layer:
+    amax = float(np.max(np.abs(w))) or 1.0
+    scale = amax / MAG_MAX
+    q = np.clip(np.round(w / scale), -MAG_MAX, MAG_MAX).astype(np.int64)
+    signs = np.where(q < 0, -1, 1).astype(np.int8)
+    return Int8Layer(np.abs(q).astype(np.uint8), signs, scale)
+
+
+# --------------------------------------------------------------------------
+# SWIS / SWIS-C group quantization
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PackedLayer:
+    """SWIS-packed weight layer (the storage format of Sec. 3.3).
+
+    Grouping is row-major over the (filters, fan_in) matrix: each filter's
+    fan-in dimension is split into groups of `group_size` (padded with
+    zeros when fan_in % group_size != 0; padded lanes carry sign +1).
+    """
+
+    shape: tuple[int, ...]  # original weight shape (K first = filters)
+    group_size: int
+    n_shifts: int
+    scale: float
+    shifts: np.ndarray  # (n_groups, n_shifts) uint8, ascending
+    masks: np.ndarray  # (n_groups, group_size, n_shifts) uint8 in {0,1}
+    signs: np.ndarray  # (n_groups, group_size) int8 in {-1,+1}
+    consecutive: bool = False
+    # scheduling metadata: per-filter shifts (for reporting)
+    filter_shifts: np.ndarray | None = None
+
+    @property
+    def n_groups(self) -> int:
+        return self.shifts.shape[0]
+
+    def mags(self) -> np.ndarray:
+        """Reconstructed magnitudes per group lane, (n_groups, group_size)."""
+        pw = (1 << self.shifts.astype(np.int64))[:, None, :]  # (g,1,n)
+        return (self.masks.astype(np.int64) * pw).sum(axis=-1)
+
+    def to_float(self) -> np.ndarray:
+        """Dequantize back to the original float shape."""
+        k = self.shape[0]
+        fan_in = int(np.prod(self.shape[1:]))
+        vals = (self.mags() * self.signs).astype(np.float64) * self.scale
+        flat = vals.reshape(k, -1)[:, :fan_in]
+        return flat.reshape(self.shape)
+
+    def storage_bits(self) -> int:
+        """Bits needed by the packed format (Sec. 3.3 accounting)."""
+        g, gs, n = self.masks.shape
+        sign_bits = g * gs
+        mask_bits = g * gs * n
+        shift_bits = 3 if self.consecutive else 3 * n  # per group
+        return sign_bits + mask_bits + g * shift_bits
+
+
+def _group_mags(
+    w: np.ndarray, group_size: int
+) -> tuple[np.ndarray, np.ndarray, float, int]:
+    """int8-quantize + reshape into (n_groups, group_size) mags/signs."""
+    q = to_int8(w)
+    k = w.shape[0]
+    fan_in = int(np.prod(w.shape[1:]))
+    pad = (-fan_in) % group_size
+    mags = q.mags.reshape(k, fan_in).astype(np.int64)
+    signs = q.signs.reshape(k, fan_in).astype(np.int64)
+    if pad:
+        mags = np.pad(mags, ((0, 0), (0, pad)))
+        signs = np.pad(signs, ((0, 0), (0, pad)), constant_values=1)
+    gpf = (fan_in + pad) // group_size  # groups per filter
+    return (
+        mags.reshape(k * gpf, group_size),
+        signs.reshape(k * gpf, group_size).astype(np.int8),
+        q.scale,
+        gpf,
+    )
+
+
+def _select_per_group(
+    mags: np.ndarray,
+    combos: list[tuple[int, ...]],
+    alpha_num: int = 1,
+    alpha_den: int = 1,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Core enumeration: pick the best combo per group.
+
+    mags: (n_groups, G) int64. Returns (best_combo_idx (n_groups,),
+    best_qmags (n_groups, G)).
+    """
+    n_groups, _ = mags.shape
+    best_err = np.full(n_groups, np.iinfo(np.int64).max, dtype=np.int64)
+    best_idx = np.zeros(n_groups, dtype=np.int64)
+    best_q = np.zeros_like(mags)
+    for ci, combo in enumerate(combos):
+        cb = codebook(combo)
+        qm = nearest(cb, mags)
+        err = msepp_int(mags - qm, alpha_num, alpha_den)
+        upd = err < best_err  # strict: earliest combo wins ties
+        best_err = np.where(upd, err, best_err)
+        best_idx = np.where(upd, ci, best_idx)
+        best_q = np.where(upd[:, None], qm, best_q)
+    return best_idx, best_q
+
+
+def _masks_for(
+    combo: tuple[int, ...], qmags: np.ndarray
+) -> np.ndarray:
+    """Decompose quantized magnitudes into per-shift mask bits.
+
+    qmags values are subset sums of the combo's powers, so the binary
+    representation restricted to the combo's positions IS the mask.
+    """
+    shifts = np.array(combo, dtype=np.int64)
+    return ((qmags[..., None] >> shifts) & 1).astype(np.uint8)
+
+
+def quantize_swis(
+    w: np.ndarray,
+    n_shifts: int,
+    group_size: int = 4,
+    alpha: float = 1.0,
+    consecutive: bool = False,
+) -> PackedLayer:
+    """SWIS (or SWIS-C) quantization of a weight tensor.
+
+    w: float weights, filters on axis 0. alpha: MSE++ coefficient; must be
+    rational-friendly (we use alpha = num/den with den=100 internally).
+    """
+    alpha_num, alpha_den = _alpha_ratio(alpha)
+    mags, signs, scale, _ = _group_mags(w, group_size)
+    combos = (
+        consecutive_combos(n_shifts) if consecutive else shift_combos(n_shifts)
+    )
+    best_idx, best_q = _select_per_group(mags, combos, alpha_num, alpha_den)
+    n_groups = mags.shape[0]
+    shifts = np.zeros((n_groups, n_shifts), dtype=np.uint8)
+    masks = np.zeros((n_groups, group_size, n_shifts), dtype=np.uint8)
+    for ci, combo in enumerate(combos):
+        sel = best_idx == ci
+        if not np.any(sel):
+            continue
+        shifts[sel] = np.array(combo, dtype=np.uint8)
+        masks[sel] = _masks_for(combo, best_q[sel])
+    return PackedLayer(
+        shape=w.shape,
+        group_size=group_size,
+        n_shifts=n_shifts,
+        scale=scale,
+        shifts=shifts,
+        masks=masks,
+        signs=signs,
+        consecutive=consecutive,
+    )
+
+
+def _alpha_ratio(alpha: float) -> tuple[int, int]:
+    """Rational (num, den) for exact-integer MSE++ comparisons."""
+    den = 100
+    num = int(round(alpha * den))
+    return num, den
+
+
+# --------------------------------------------------------------------------
+# truncation baselines
+# --------------------------------------------------------------------------
+
+
+def truncate_weights(w: np.ndarray, n_bits: int) -> np.ndarray:
+    """Layer-wise weight truncation + clipping (the paper's conventional
+    baseline): keep the top `n_bits` of the 8-bit magnitude by zeroing the
+    low 8-n bits (with round-to-nearest), i.e. consecutive MSB shifts with
+    a shared layer-wide offset of 8-n.
+    """
+    q = to_int8(w)
+    drop = BITS - n_bits
+    step = 1 << drop
+    mags = q.mags.astype(np.int64)
+    t = np.clip((mags + step // 2) // step * step, 0, MAG_MAX)
+    return (t * q.signs).astype(np.float64) * q.scale
+
+
+def truncate_activations(a: np.ndarray, n_bits: int, amax: float) -> np.ndarray:
+    """Layer-wise activation LSB truncation (as in Stripes [8]): quantize
+    to 8 bits with range [0, amax] (post-ReLU), then drop the low 8-n bits.
+    """
+    scale = amax / 255.0 if amax > 0 else 1.0
+    q = np.clip(np.round(a / scale), 0, 255).astype(np.int64)
+    drop = BITS - n_bits
+    t = (q >> drop) << drop
+    return t.astype(np.float64) * scale
+
+
+# --------------------------------------------------------------------------
+# filter scheduling (Sec. 4.3)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ScheduleResult:
+    filter_shifts: np.ndarray  # (K,) shifts per filter after phase 2
+    packed: PackedLayer  # layer packed with per-filter shift counts
+    err_scheduled: float
+    err_uniform: float
+
+
+def _layer_err_at(
+    mags: np.ndarray, n_shifts: int, consecutive: bool, alpha_num: int, alpha_den: int
+) -> tuple[np.ndarray, np.ndarray]:
+    combos = (
+        consecutive_combos(n_shifts) if consecutive else shift_combos(n_shifts)
+    )
+    idx, q = _select_per_group(mags, combos, alpha_num, alpha_den)
+    err = msepp_int(mags - q, alpha_num, alpha_den)
+    return err, q
+
+
+def schedule_filters(
+    w: np.ndarray,
+    target_shifts: float,
+    group_size: int = 4,
+    alpha: float = 1.0,
+    consecutive: bool = False,
+    sa_cols: int = 8,
+    max_shifts: int = BITS,
+) -> ScheduleResult:
+    """Sec. 4.3 two-phase scheduling.
+
+    Phase 1: start every filter at ceil(target)+1 shifts; repeatedly demote
+    the filters whose MSE++ cost of losing one shift is smallest, until the
+    layer-average number of shifts hits `target_shifts`.
+
+    Phase 2: filters sorted by allotted shifts are mapped to systolic-array
+    column groups of size `sa_cols`; enumerate non-decreasing per-group
+    assignments that preserve the target average and keep the one with the
+    lowest total MSE++.
+    """
+    alpha_num, alpha_den = _alpha_ratio(alpha)
+    mags, signs, scale, gpf = _group_mags(w, group_size)
+    k = w.shape[0]
+    mags_f = mags.reshape(k, gpf, group_size)
+
+    hi = min(max_shifts, int(np.ceil(target_shifts)) + 1)
+    # per-filter error at each shift count 1..hi (computed lazily)
+    err_cache: dict[int, np.ndarray] = {}
+
+    def filt_err(n: int) -> np.ndarray:
+        if n not in err_cache:
+            if n == 0:
+                err_cache[n] = np.array(
+                    [
+                        msepp_int(mags_f[f].reshape(-1, group_size), alpha_num, alpha_den).sum()
+                        for f in range(k)
+                    ]
+                )
+            else:
+                e, _ = _layer_err_at(
+                    mags.reshape(-1, group_size), n, consecutive, alpha_num, alpha_den
+                )
+                err_cache[n] = e.reshape(k, gpf).sum(axis=1)
+        return err_cache[n]
+
+    shifts = np.full(k, hi, dtype=np.int64)
+    target_total = int(round(target_shifts * k))
+    while shifts.sum() > target_total:
+        # cost of demoting each filter by one shift
+        cost = np.full(k, np.iinfo(np.int64).max, dtype=np.int64)
+        for n in np.unique(shifts):
+            if n <= 1:
+                continue
+            sel = shifts == n
+            cost[sel] = (filt_err(int(n) - 1) - filt_err(int(n)))[sel]
+        order = np.argsort(cost, kind="stable")
+        n_demote = min(int(shifts.sum() - target_total), max(1, k // 8))
+        demoted = [f for f in order if shifts[f] > 1][:n_demote]
+        if not demoted:
+            break
+        shifts[demoted] -= 1
+
+    err_uniform = None
+    # uniform reference at ceil(target)
+    e_u, _ = _layer_err_at(
+        mags.reshape(-1, group_size),
+        max(1, int(np.ceil(target_shifts))),
+        consecutive,
+        alpha_num,
+        alpha_den,
+    )
+    err_uniform = float(e_u.sum())
+
+    # ---- phase 2: group filters into SA column blocks with equal shifts
+    order = np.argsort(shifts, kind="stable")
+    n_blocks = (k + sa_cols - 1) // sa_cols
+    best = None
+    for seq in _nondecreasing_seqs(n_blocks, 1, hi, target_total, k, sa_cols):
+        tot = 0
+        for b, n in enumerate(seq):
+            filt = order[b * sa_cols : (b + 1) * sa_cols]
+            tot += int(filt_err(n)[filt].sum())
+        if best is None or tot < best[0]:
+            best = (tot, seq)
+    assert best is not None
+    _, seq = best
+    final = np.zeros(k, dtype=np.int64)
+    for b, n in enumerate(seq):
+        final[order[b * sa_cols : (b + 1) * sa_cols]] = n
+
+    packed = _pack_with_filter_shifts(
+        w, final, group_size, alpha_num, alpha_den, consecutive
+    )
+    return ScheduleResult(
+        filter_shifts=final,
+        packed=packed,
+        err_scheduled=float(best[0]),
+        err_uniform=err_uniform,
+    )
+
+
+def _nondecreasing_seqs(
+    n_blocks: int, lo: int, hi: int, target_total: int, k: int, sa_cols: int
+):
+    """Non-decreasing shift sequences over filter blocks whose weighted sum
+    approximates the layer target (exact when k % sa_cols == 0)."""
+    block_sizes = [min(sa_cols, k - b * sa_cols) for b in range(n_blocks)]
+
+    def rec(b: int, prev: int, acc: list[int], tot: int):
+        if b == n_blocks:
+            if tot == target_total:
+                yield tuple(acc)
+            return
+        rem = sum(block_sizes[b:])
+        for n in range(prev, hi + 1):
+            nt = tot + n * block_sizes[b]
+            # prune: even max/min fill can't reach target
+            if nt + (rem - block_sizes[b]) * hi < target_total:
+                continue
+            if nt + (rem - block_sizes[b]) * lo > target_total:
+                break
+            yield from rec(b + 1, n, acc + [n], nt)
+
+    seqs = list(rec(0, lo, [], 0))
+    if not seqs:  # fall back: closest achievable total
+        base = int(round(target_total / k))
+        seqs = [tuple([max(lo, min(hi, base))] * n_blocks)]
+    return seqs
+
+
+def _pack_with_filter_shifts(
+    w: np.ndarray,
+    filter_shifts: np.ndarray,
+    group_size: int,
+    alpha_num: int,
+    alpha_den: int,
+    consecutive: bool,
+) -> PackedLayer:
+    """Pack a layer where each filter may use a different shift count.
+    Storage uses the per-layer max N; filters with fewer shifts leave the
+    tail mask planes zero (hardware skips them via the schedule)."""
+    mags, signs, scale, gpf = _group_mags(w, group_size)
+    k = w.shape[0]
+    n_max = int(filter_shifts.max())
+    n_groups = mags.shape[0]
+    shifts = np.zeros((n_groups, n_max), dtype=np.uint8)
+    masks = np.zeros((n_groups, group_size, n_max), dtype=np.uint8)
+    for n in np.unique(filter_shifts):
+        n = int(n)
+        fsel = filter_shifts == n
+        gsel = np.repeat(fsel, gpf)
+        combos = consecutive_combos(n) if consecutive else shift_combos(n)
+        idx, q = _select_per_group(mags[gsel], combos, alpha_num, alpha_den)
+        sh = np.zeros((int(gsel.sum()), n_max), dtype=np.uint8)
+        mk = np.zeros((int(gsel.sum()), group_size, n_max), dtype=np.uint8)
+        for ci, combo in enumerate(combos):
+            s = idx == ci
+            if not np.any(s):
+                continue
+            sh[s, :n] = np.array(combo, dtype=np.uint8)
+            mk[s, :, :n] = _masks_for(combo, q[s])
+        shifts[gsel] = sh
+        masks[gsel] = mk
+    return PackedLayer(
+        shape=w.shape,
+        group_size=group_size,
+        n_shifts=n_max,
+        scale=scale,
+        shifts=shifts,
+        masks=masks,
+        signs=signs,
+        consecutive=consecutive,
+        filter_shifts=filter_shifts.astype(np.int64),
+    )

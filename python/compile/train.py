@@ -1,0 +1,68 @@
+"""Build-time training of the TinyCNN proxy on synth-CIFAR.
+
+Runs once under `make artifacts` (skipped when artifacts/tinycnn_weights.npz
+exists). Plain Adam in JAX; a few hundred steps reach >90% test accuracy,
+which gives the PTQ experiments (Tables 2/3, Fig. 6) headroom to resolve
+the SWIS vs SWIS-C vs truncation ordering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+def loss_fn(params, x, y):
+    logits = model_mod.forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def adam_step(params, m, v, step, x, y, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mhat = new_m[k] / (1 - b1**step)
+        vhat = new_v[k] / (1 - b2**step)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v, loss
+
+
+def train(
+    seed: int = 0,
+    steps: int = 600,
+    batch: int = 128,
+    log_every: int = 50,
+    dataset: dict | None = None,
+    params: dict | None = None,
+    lr: float = 1e-3,
+) -> tuple[dict, dict, list[tuple[int, float, float]]]:
+    """Returns (params, dataset, log[(step, loss, test_acc)])."""
+    ds = dataset or data_mod.make_dataset(seed)
+    p = params or model_mod.init_params(seed)
+    p = {k: jnp.asarray(v) for k, v in p.items()}
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    rng = np.random.default_rng(seed + 1)
+    ntr = ds["x_train"].shape[0]
+    log = []
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, ntr, size=batch)
+        x = jnp.asarray(ds["x_train"][idx])
+        y = jnp.asarray(ds["y_train"][idx])
+        p, m, v, loss = adam_step(p, m, v, step, x, y, lr=lr)
+        if step % log_every == 0 or step == steps:
+            acc = model_mod.accuracy(p, jnp.asarray(ds["x_test"]), jnp.asarray(ds["y_test"]))
+            log.append((step, float(loss), acc))
+            print(f"  step {step:4d}  loss {float(loss):.4f}  test_acc {acc:.4f}")
+    return {k: np.asarray(x) for k, x in p.items()}, ds, log

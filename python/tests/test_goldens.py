@@ -1,0 +1,64 @@
+"""Golden-artifact self-consistency: the packed fields written for the
+Rust cross-check must reconstruct their own dequantized floats, and the
+manifest must index every HLO artifact on disk."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    path = os.path.join(ART, "golden_quant.npz")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    return dict(np.load(path)), json.load(open(os.path.join(ART, "golden_quant.json")))
+
+
+def test_goldens_reconstruct(goldens):
+    data, cases = goldens
+    assert int(data["n_cases"][0]) == len(cases) > 0
+    for c in cases:
+        key = c["key"]
+        shifts = data[f"{key}_shifts"].astype(np.int64)  # (g, n)
+        masks = data[f"{key}_masks"].astype(np.int64)  # (g, gs, n)
+        signs = data[f"{key}_signs"].astype(np.float64)  # (g, gs)
+        scale = float(data[f"{key}_scale"][0])
+        deq = data[f"{key}_dequant"]
+        mags = (masks * (1 << shifts)[:, None, :]).sum(axis=-1)
+        rebuilt = (mags * signs * scale).reshape(-1)[: deq.size]
+        np.testing.assert_allclose(rebuilt[: deq.size], deq.reshape(-1), rtol=1e-12)
+
+
+def test_goldens_shift_sets_sorted_and_bounded(goldens):
+    data, cases = goldens
+    for c in cases:
+        shifts = data[f"{c['key']}_shifts"]
+        assert shifts.min() >= 0 and shifts.max() <= 7
+        assert np.all(np.diff(shifts, axis=1) >= 0), "shifts ascend in-group"
+        if c["consecutive"]:
+            d = np.diff(shifts, axis=1)
+            assert np.all(d == 1), "SWIS-C shifts must be consecutive"
+
+
+def test_manifest_indexes_all_artifacts():
+    mpath = os.path.join(ART, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("run `make artifacts` first")
+    manifest = json.load(open(mpath))
+    assert 0.5 < manifest["baseline_accuracy"] <= 1.0
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), f"missing {a['file']}"
+        assert a["inputs"], a["file"]
+        # HLO text must at least parse as an HloModule header
+        head = open(path).read(200)
+        assert "HloModule" in head, a["file"]
+    kinds = {a["kind"] for a in manifest["artifacts"]}
+    assert "model" in kinds and "swis_matmul" in kinds
+    for bits in (2, 3, 4, 6, 7):
+        assert f"model_act_trunc{bits}" in kinds

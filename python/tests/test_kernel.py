@@ -1,0 +1,137 @@
+"""Layer-1 correctness: the SWIS Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / shift counts / mask densities; every case must
+match ref.py to float32 tolerance. The kernel runs interpret=True (CPU
+PJRT cannot execute Mosaic custom-calls)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import swis_matmul_ref, swis_dequant_ref
+from compile.kernels.swis_matmul import swis_matmul, swis_matmul_nokernel
+
+
+def _case(rng, m, k, n, s):
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    masks = (rng.random((s, k, n)) < 0.4).astype(np.float32)
+    signs = np.where(rng.random((k, n)) < 0.5, -1.0, 1.0).astype(np.float32)
+    powers = (2.0 ** rng.integers(0, 8, size=s)).astype(np.float32)
+    return a, masks, signs, powers
+
+
+def test_kernel_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    a, masks, signs, powers = _case(rng, 64, 128, 64, 4)
+    out = swis_matmul(a, masks, signs, powers)
+    ref = swis_matmul_ref(a, masks, signs, powers)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+def test_nokernel_fallback_matches_ref():
+    rng = np.random.default_rng(1)
+    a, masks, signs, powers = _case(rng, 16, 32, 8, 3)
+    out = swis_matmul_nokernel(a, masks, signs, powers)
+    ref = swis_matmul_ref(a, masks, signs, powers)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 7, 32, 130]),
+    k=st.sampled_from([8, 27, 64]),
+    n=st.sampled_from([4, 16, 33]),
+    s=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_swept(m, k, n, s, seed):
+    rng = np.random.default_rng(seed)
+    a, masks, signs, powers = _case(rng, m, k, n, s)
+    out = swis_matmul(a, masks, signs, powers)
+    ref = swis_matmul_ref(a, masks, signs, powers)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 64, 128]),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_block_shape_invariance(bm, bn, seed):
+    """Output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(seed)
+    a, masks, signs, powers = _case(rng, 48, 36, 24, 3)
+    base = swis_matmul(a, masks, signs, powers)
+    tiled = swis_matmul(a, masks, signs, powers, bm=bm, bn=bn)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_equals_dense_matmul_of_dequant():
+    """Eq. 7 == a @ dequant(w): the bit-serial sum is exactly a matmul
+    against the implied dense weights."""
+    rng = np.random.default_rng(7)
+    a, masks, signs, powers = _case(rng, 32, 64, 16, 4)
+    w = swis_dequant_ref(jnp.asarray(masks), jnp.asarray(signs), jnp.asarray(powers))
+    dense = np.asarray(a @ np.asarray(w, dtype=np.float32))
+    out = np.asarray(swis_matmul(a, masks, signs, powers))
+    np.testing.assert_allclose(out, dense, rtol=1e-4, atol=1e-3)
+
+
+def test_zero_masks_give_zero():
+    a = np.ones((8, 16), np.float32)
+    masks = np.zeros((3, 16, 4), np.float32)
+    signs = np.ones((16, 4), np.float32)
+    powers = np.array([1.0, 2.0, 4.0], np.float32)
+    out = np.asarray(swis_matmul(a, masks, signs, powers))
+    assert np.all(out == 0.0)
+
+
+def test_single_shift_plane_is_scaled_matmul():
+    rng = np.random.default_rng(9)
+    a = rng.standard_normal((16, 32)).astype(np.float32)
+    mask = (rng.random((1, 32, 8)) < 0.5).astype(np.float32)
+    signs = np.ones((32, 8), np.float32)
+    powers = np.array([8.0], np.float32)  # shift 3
+    out = np.asarray(swis_matmul(a, mask, signs, powers))
+    np.testing.assert_allclose(out, 8.0 * (a @ mask[0]), rtol=1e-5, atol=1e-4)
+
+
+def test_shape_mismatch_asserts():
+    a = np.zeros((4, 8), np.float32)
+    masks = np.zeros((2, 9, 4), np.float32)  # K mismatch
+    signs = np.ones((8, 4), np.float32)
+    powers = np.ones(2, np.float32)
+    with pytest.raises(AssertionError):
+        swis_matmul(a, masks, signs, powers)
+
+
+# ------------------------------------------------------------------ DS kernel
+
+
+def test_double_shift_kernel_matches_ref():
+    from compile.kernels.swis_matmul import swis_matmul_ds
+
+    rng = np.random.default_rng(21)
+    for s in (2, 3, 4, 5):
+        a, masks, signs, powers = _case(rng, 32, 48, 16, s)
+        out = swis_matmul_ds(a, masks, signs, powers)
+        ref = swis_matmul_ref(a, masks, signs, powers)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=10000),
+)
+def test_double_shift_equals_single_shift(s, seed):
+    from compile.kernels.swis_matmul import swis_matmul_ds
+
+    rng = np.random.default_rng(seed)
+    a, masks, signs, powers = _case(rng, 16, 24, 8, s)
+    ss = swis_matmul(a, masks, signs, powers)
+    ds = swis_matmul_ds(a, masks, signs, powers)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ds), rtol=1e-5, atol=1e-4)

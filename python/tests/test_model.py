@@ -1,0 +1,101 @@
+"""Layer-2 model graph tests: shapes, the Pallas-backed conv1 path, and
+the activation-truncation baseline."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as m
+from compile import swis_quant as sq
+
+
+@pytest.fixture(scope="module")
+def params():
+    return m.init_params(seed=0)
+
+
+def test_forward_shapes(params):
+    x = jnp.zeros((4, 32, 32, 3), jnp.float32)
+    logits = m.forward(params, x)
+    assert logits.shape == (4, 10)
+
+
+def test_forward_flat_matches_dict(params):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)).astype(np.float32))
+    a = m.forward(params, x)
+    b = m.forward_flat(x, *m.flat_param_list(params))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_im2col_reconstructs_conv(params):
+    """conv1 via im2col + dense matmul == lax.conv (stride 1, SAME)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)).astype(np.float32))
+    w = params["conv1"]  # (3,3,3,32) HWIO
+    cols, (b, ho, wo) = m._im2col(x, 3, 3, 1)
+    y2 = (cols @ w.reshape(-1, 32)).reshape(b, ho, wo, 32)
+    import jax
+
+    y1 = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+
+def test_swis_conv1_path_close_to_dequant(params):
+    """forward_swis_conv1 (Pallas kernel on packed operands) must equal
+    forward() run on the dequantized conv1 weights."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)).astype(np.float32))
+
+    w1 = np.asarray(params["conv1"])  # HWIO (3,3,3,32)
+    wm = np.moveaxis(w1, -1, 0).reshape(32, -1)  # filters-first (32, 27)
+
+    # The kernel shares one `powers` vector across every output column, so
+    # quantize the whole matrix as a single group (one shared shift set) —
+    # exactly the operand layout aot.py's swis_conv1 artifact expects.
+    pk = sq.quantize_swis(wm.reshape(1, -1), 3, 32 * 27)
+    s = pk.masks.shape[-1]
+    # mask bits laid out filters-first (32, 27, S) -> kernel (S, 27, 32)
+    masks_flat = pk.masks.reshape(32, 27, s)
+    masks_k = np.transpose(masks_flat, (2, 1, 0)).astype(np.float32)
+    signs = pk.signs.reshape(32, 27).T.astype(np.float32)
+    powers = (2.0 ** pk.shifts[0]).astype(np.float32)
+    scale = np.float32(pk.scale)
+
+    rest = []
+    for name in m.PARAM_ORDER[1:]:
+        rest.append(params[name])
+        rest.append(params[name + "_b"])
+    out_kernel = m.forward_swis_conv1(
+        x, masks_k, signs, powers, scale, params["conv1_b"], *rest
+    )
+
+    # reference: dequantized conv1 through the plain forward
+    deq = pk.to_float().reshape(32, 27)
+    p2 = dict(params)
+    p2["conv1"] = np.moveaxis(deq.reshape(32, 3, 3, 3), 0, -1).astype(np.float32)
+    out_ref = m.forward(p2, x)
+    np.testing.assert_allclose(
+        np.asarray(out_kernel), np.asarray(out_ref), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_act_trunc_monotone(params):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((8, 32, 32, 3)).astype(np.float32))
+    base = np.asarray(m.forward(params, x))
+    drift = []
+    for bits in (7, 4, 2):
+        out = np.asarray(m.forward_act_trunc(bits)(x, *m.flat_param_list(params)))
+        drift.append(np.abs(out - base).mean())
+    assert drift[0] < drift[1] < drift[2]
+    assert drift[0] < 0.1  # 7 bits is nearly lossless
+
+
+def test_act_trunc_preserves_zero_and_max():
+    a = jnp.asarray(np.array([0.0, 0.5, 1.0], np.float32))
+    q = np.asarray(m.act_trunc(a, 8))
+    np.testing.assert_allclose(q, [0.0, 0.5, 1.0], atol=1e-2)

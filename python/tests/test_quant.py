@@ -1,0 +1,123 @@
+"""SWIS quantizer properties (the Python reference implementation that the
+Rust quantizer must match exactly — see golden tests on both sides)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import swis_quant as sq
+
+
+def test_lossless_when_bits_fit():
+    # scale chosen so int8 mags equal the values
+    w = np.array([[3.0, 65.0, 17.0, 127.0]])
+    pk = sq.quantize_swis(w, 2, 1)
+    mags = pk.mags().reshape(-1)
+    assert list(mags[:3]) == [3, 65, 17]
+    # 127 = 7 set bits -> nearest 2-shift value is 128
+    assert mags[3] == 128
+
+
+def test_swis_error_le_swis_c():
+    rng = np.random.default_rng(3)
+    w = rng.normal(0, 0.05, size=(8, 32))
+    for n in (2, 3, 4):
+        es = sq.rmse(w, sq.quantize_swis(w, n, 4, consecutive=False).to_float())
+        ec = sq.rmse(w, sq.quantize_swis(w, n, 4, consecutive=True).to_float())
+        assert es <= ec + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([2, 5, 8]),
+    fan_in=st.sampled_from([4, 30, 64]),
+    gs=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_more_shifts_never_hurt(k, fan_in, gs, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, size=(k, fan_in))
+    last = np.inf
+    for n in (1, 2, 3, 4):
+        e = sq.rmse(w, sq.quantize_swis(w, n, gs).to_float())
+        assert e <= last + 1e-12
+        last = e
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    gs=st.sampled_from([1, 4, 8]),
+    n=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dequant_values_representable(gs, n, seed):
+    """Every dequantized magnitude must be a sum of <= n powers of two
+    from the group's selected shift set."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.08, size=(4, 16))
+    pk = sq.quantize_swis(w, n, gs)
+    mags = pk.mags()
+    for g in range(pk.n_groups):
+        cb = sq.codebook(tuple(pk.shifts[g]))
+        for v in mags[g]:
+            assert v in cb, f"group {g}: {v} not representable"
+
+
+def test_group_error_beats_finer_never():
+    """Bigger groups can only match or worsen quantization error."""
+    rng = np.random.default_rng(11)
+    w = rng.normal(0, 0.06, size=(8, 64))
+    errs = [
+        sq.rmse(w, sq.quantize_swis(w, 3, gs).to_float()) for gs in (1, 4, 16)
+    ]
+    assert errs[0] <= errs[1] + 1e-12
+    assert errs[1] <= errs[2] + 1e-12
+
+
+def test_truncation_is_worse_than_swis():
+    rng = np.random.default_rng(13)
+    w = rng.normal(0, 0.05, size=(16, 36))
+    for n in (2, 3, 4):
+        es = sq.rmse(w, sq.quantize_swis(w, n, 4).to_float())
+        et = sq.rmse(w, sq.truncate_weights(w, n))
+        assert es < et
+
+
+def test_storage_bits_formula():
+    rng = np.random.default_rng(17)
+    w = rng.normal(0, 0.05, size=(8, 16))
+    pk = sq.quantize_swis(w, 3, 4)
+    g, gs, n = pk.masks.shape
+    expected = g * (gs + 3 * n + gs * n)  # signs + shifts + masks
+    assert pk.storage_bits() == expected
+    pkc = sq.quantize_swis(w, 3, 4, consecutive=True)
+    expected_c = g * (gs + 3 + gs * n)
+    assert pkc.storage_bits() == expected_c
+
+
+def test_schedule_hits_fractional_target():
+    rng = np.random.default_rng(19)
+    w = rng.normal(0, 0.05, size=(16, 36))
+    res = sq.schedule_filters(w, 2.5, 4, 1.0, False)
+    assert abs(np.mean(res.filter_shifts) - 2.5) < 1e-9
+    # scheduled error must interpolate the uniform ends
+    e2 = sq.msepp(w, sq.quantize_swis(w, 2, 4).to_float())
+    e3 = sq.msepp(w, sq.quantize_swis(w, 3, 4).to_float())
+    es = sq.msepp(w, res.packed.to_float())
+    assert e3 - 1e-12 <= es <= e2 + 1e-12
+
+
+def test_msepp_penalizes_signed_drift():
+    x = np.zeros(8)
+    biased = np.full(8, 0.1)  # all errors same sign
+    balanced = np.array([0.1, -0.1] * 4)  # same MSE, zero drift
+    assert sq.msepp(x, biased) > sq.msepp(x, balanced)
+    assert abs(sq.msepp(x, biased, alpha=0.0) - sq.msepp(x, balanced, alpha=0.0)) < 1e-12
+
+
+def test_rejects_bad_args():
+    w = np.zeros((2, 4))
+    with pytest.raises(Exception):
+        sq.quantize_swis(w, 0, 4)
+    with pytest.raises(Exception):
+        sq.quantize_swis(w, 9, 4)

@@ -1,0 +1,209 @@
+//! Shared bench harness: TinyCNN accuracy evaluation through the PJRT
+//! runtime (the accuracy half of every paper table/figure) plus timing
+//! helpers (no criterion in the offline vendor set — a simple
+//! median-of-repeats timer stands in).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use swis::quant::{quantize, Alpha, QuantConfig};
+use swis::quant::truncation::truncate_weights;
+use swis::runtime::{ModelBundle, Runtime};
+use swis::schedule::{schedule_layer, ScheduleConfig};
+use swis::util::npy;
+use swis::util::tensor::Tensor;
+
+pub fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Accuracy evaluator: compiled model + test set, loaded once.
+/// (Cross-target note: each bench binary compiles this module separately
+/// and uses a different subset — dead-code lints are silenced per item.)
+#[allow(dead_code)]
+pub struct Eval {
+    #[allow(dead_code)]
+    rt: Runtime,
+    pub bundle: ModelBundle,
+    /// Extra bundles, e.g. the activation-truncation graphs, by kind.
+    #[allow(dead_code)]
+    extra: HashMap<String, ModelBundle>,
+    x: Tensor<f32>,
+    y: Vec<usize>,
+    pub n: usize,
+}
+
+#[allow(dead_code)]
+impl Eval {
+    /// `extra_kinds`: additional artifact kinds to compile (e.g.
+    /// "model_act_trunc3"). `n_images` caps evaluation cost.
+    pub fn new(n_images: usize, extra_kinds: &[String]) -> Result<Eval> {
+        let dir = art_dir();
+        let rt = Runtime::cpu()?;
+        let bundle = ModelBundle::load(&rt, &dir, "model")?;
+        let mut extra = HashMap::new();
+        for kind in extra_kinds {
+            extra.insert(kind.clone(), ModelBundle::load(&rt, &dir, kind)?);
+        }
+        let npz = npy::load_npz(&dir.join("dataset.npz"))?;
+        let xt = npz["x_test"].as_f32();
+        let yt = npz["y_test"].as_i64();
+        let n = n_images.min(xt.shape()[0]);
+        let per: usize = xt.shape()[1..].iter().product();
+        let x = Tensor::new(&[n, 32, 32, 3], xt.data()[..n * per].to_vec())?;
+        let y = yt.data()[..n].iter().map(|&v| v as usize).collect();
+        Ok(Eval { rt, bundle, extra, x, y, n })
+    }
+
+    fn score(&self, bundle: &ModelBundle, weights: Option<&HashMap<String, Tensor<f32>>>) -> Result<f64> {
+        let chunk = 64usize;
+        let per = 32 * 32 * 3;
+        let mut ok = 0usize;
+        let mut i = 0;
+        while i < self.n {
+            let m = chunk.min(self.n - i);
+            let imgs = Tensor::new(&[m, 32, 32, 3], self.x.data()[i * per..(i + m) * per].to_vec())?;
+            let logits = bundle.infer(&imgs, weights)?;
+            let c = logits.shape()[1];
+            for r in 0..m {
+                let row = &logits.data()[r * c..(r + 1) * c];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if arg == self.y[i + r] {
+                    ok += 1;
+                }
+            }
+            i += m;
+        }
+        Ok(ok as f64 / self.n as f64)
+    }
+
+    /// Top-1 accuracy with a substituted weight set (None = FP32).
+    pub fn accuracy(&self, weights: Option<&HashMap<String, Tensor<f32>>>) -> Result<f64> {
+        self.score(&self.bundle, weights)
+    }
+
+    /// Accuracy through an alternative graph kind (act-trunc variants).
+    #[allow(dead_code)]
+    pub fn accuracy_kind(&self, kind: &str) -> Result<f64> {
+        let b = self.extra.get(kind).with_context(|| format!("kind {kind} not loaded"))?;
+        self.score(b, None)
+    }
+}
+
+/// How a weight set is produced for an accuracy experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct WeightConfig {
+    /// "swis" | "swis_c" | "wgt_trunc" | "fp32"
+    pub scheme: &'static str,
+    pub n_shifts: f64,
+    pub group_size: usize,
+    /// Sec. 4.3 scheduling on (true) or naive uniform quantization (the
+    /// Table 2 "None" column).
+    pub scheduled: bool,
+    /// Double-shift PE: per-filter shift counts restricted to evens.
+    pub double_shift: bool,
+    /// Filters co-scheduled per SA column block.
+    pub sa_cols: usize,
+}
+
+impl WeightConfig {
+    pub fn swis(n: f64) -> WeightConfig {
+        WeightConfig {
+            scheme: "swis",
+            n_shifts: n,
+            group_size: 4,
+            scheduled: true,
+            double_shift: false,
+            sa_cols: 8,
+        }
+    }
+
+    #[allow(dead_code)]
+    pub fn swis_c(n: f64) -> WeightConfig {
+        WeightConfig { scheme: "swis_c", ..WeightConfig::swis(n) }
+    }
+}
+
+/// Quantize one jax-layout tensor (filter axis last) under `cfg`.
+#[allow(dead_code)] // used by a subset of the bench targets
+pub fn quantize_tensor(t: &Tensor<f32>, cfg: &WeightConfig) -> Result<Tensor<f32>> {
+    let shape = t.shape().to_vec();
+    let k = *shape.last().unwrap();
+    let fan_in: usize = shape[..shape.len() - 1].iter().product();
+    let data = t.to_f64();
+    let mut wf = vec![0.0f64; k * fan_in];
+    for i in 0..fan_in {
+        for o in 0..k {
+            wf[o * fan_in + i] = data.data()[i * k + o];
+        }
+    }
+    let consecutive = cfg.scheme == "swis_c";
+    let dq: Vec<f64> = match cfg.scheme {
+        "fp32" => wf.clone(),
+        "wgt_trunc" => truncate_weights(&wf, cfg.n_shifts.round() as usize),
+        _ if cfg.scheduled || cfg.n_shifts.fract() != 0.0 || (cfg.double_shift && cfg.n_shifts as usize % 2 == 1) => {
+            let mut sc = ScheduleConfig::new(cfg.n_shifts, cfg.group_size);
+            sc.consecutive = consecutive;
+            sc.alpha = Alpha::ONE;
+            sc.sa_cols = cfg.sa_cols;
+            if cfg.double_shift {
+                sc = sc.double_shift();
+            }
+            schedule_layer(&wf, &[k, fan_in], &sc)?.packed.to_f64()
+        }
+        _ => {
+            let qc = QuantConfig {
+                n_shifts: cfg.n_shifts as usize,
+                group_size: cfg.group_size,
+                alpha: Alpha::ONE,
+                consecutive,
+            };
+            quantize(&wf, &[k, fan_in], &qc)?.to_f64()
+        }
+    };
+    let mut back = vec![0.0f32; k * fan_in];
+    for i in 0..fan_in {
+        for o in 0..k {
+            back[i * k + o] = dq[o * fan_in + i] as f32;
+        }
+    }
+    Tensor::new(&shape, back)
+}
+
+/// Produce a full weight map for the model under `cfg`.
+#[allow(dead_code)]
+pub fn build_weights(
+    fp32: &HashMap<String, Tensor<f32>>,
+    cfg: &WeightConfig,
+) -> Result<HashMap<String, Tensor<f32>>> {
+    let mut out = fp32.clone();
+    for (name, t) in fp32 {
+        if name.ends_with("_b") || cfg.scheme == "fp32" {
+            continue;
+        }
+        out.insert(name.clone(), quantize_tensor(t, cfg)?);
+    }
+    Ok(out)
+}
+
+/// Median wall time of `reps` runs of `f` (after one warm-up), seconds.
+#[allow(dead_code)] // used by a subset of the bench targets
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}

@@ -1,0 +1,172 @@
+//! Hot-path performance harness (EXPERIMENTS.md §Perf): measures the
+//! quantizer, scheduler, simulator, PJRT execute, and coordinator
+//! round-trip. Run before/after every optimization step.
+//!
+//! Run: cargo bench --bench hotpath
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use anyhow::Result;
+use std::time::Duration;
+
+use bench_common::{art_dir, time_median};
+use swis::arch::pe::PeKind;
+use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::nets::{by_name, surrogate_weights};
+use swis::quant::{quantize, QuantConfig};
+use swis::runtime::{ModelBundle, Runtime};
+use swis::schedule::{schedule_layer, ScheduleConfig};
+use swis::sim::{simulate_network, ArrayConfig, ExecScheme};
+use swis::util::npy;
+use swis::util::rng::Rng;
+use swis::util::tensor::Tensor;
+
+fn main() -> Result<()> {
+    println!("== hotpath timings (median of repeats) ==\n");
+    quantizer()?;
+    scheduler()?;
+    simulator()?;
+    runtime()?;
+    coordinator()?;
+    Ok(())
+}
+
+fn quantizer() -> Result<()> {
+    // ResNet-18's biggest layer: 512 filters x 4608 fan-in = 2.36M weights
+    let net = by_name("resnet18").unwrap();
+    let layer = net.layer("layer4.1.conv2").unwrap();
+    let w = surrogate_weights(layer, 3);
+    let shape = layer.weight_shape();
+    for (n, g) in [(3usize, 4usize), (2, 4), (4, 4), (3, 16)] {
+        let cfg = QuantConfig::swis(n, g);
+        let t = time_median(5, || {
+            let _ = quantize(&w, &shape, &cfg).unwrap();
+        });
+        println!(
+            "quantize SWIS N={n} G={g:<2}: {:>8.1} ms  ({:>6.1} Mw/s)",
+            t * 1e3,
+            w.len() as f64 / t / 1e6
+        );
+    }
+    let cfg = QuantConfig::swis_c(3, 4);
+    let t = time_median(5, || {
+        let _ = quantize(&w, &shape, &cfg).unwrap();
+    });
+    println!(
+        "quantize SWIS-C N=3 G=4: {:>7.1} ms  ({:>6.1} Mw/s)",
+        t * 1e3,
+        w.len() as f64 / t / 1e6
+    );
+    Ok(())
+}
+
+fn scheduler() -> Result<()> {
+    let net = by_name("resnet18").unwrap();
+    let layer = net.layer("layer3.0.conv2").unwrap(); // 256 x 2304
+    let w = surrogate_weights(layer, 4);
+    let shape = layer.weight_shape();
+    let cfg = ScheduleConfig::new(2.5, 4);
+    let t = time_median(3, || {
+        let _ = schedule_layer(&w, &shape, &cfg).unwrap();
+    });
+    println!("\nschedule 2.5 shifts (256x2304): {:>6.1} ms", t * 1e3);
+    Ok(())
+}
+
+fn simulator() -> Result<()> {
+    let net = by_name("resnet18").unwrap();
+    let cfg = ArrayConfig::paper_baseline(PeKind::SingleShift);
+    let scheme = ExecScheme::swis(3.0);
+    let t = time_median(20, || {
+        let _ = simulate_network(&net, &cfg, &scheme);
+    });
+    println!(
+        "\nsimulate resnet18 (20 layers): {:>8.1} us  ({:.2} M layer-sims/min)",
+        t * 1e6,
+        20.0 / t * 60.0 / 1e6
+    );
+    Ok(())
+}
+
+fn runtime() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let bundle = ModelBundle::load(&rt, &art_dir(), "model")?;
+    let npz = npy::load_npz(&art_dir().join("dataset.npz"))?;
+    let x = npz["x_test"].as_f32();
+    for b in [1usize, 8, 64] {
+        let per = 32 * 32 * 3;
+        let imgs = Tensor::new(&[b, 32, 32, 3], x.data()[..b * per].to_vec())?;
+        let t = time_median(10, || {
+            let _ = bundle.infer(&imgs, None).unwrap();
+        });
+        println!(
+            "PJRT infer b={b:<3}: {:>8.2} ms  ({:>7.0} img/s)",
+            t * 1e3,
+            b as f64 / t
+        );
+    }
+    Ok(())
+}
+
+fn coordinator() -> Result<()> {
+    let coord = Coordinator::start(
+        &art_dir(),
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
+        vec![VariantSpec::fp32()],
+    )?;
+    let mut rng = Rng::new(1);
+    let image: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f64() as f32).collect();
+
+    // single-request round-trip (queue + dispatch + execute + deliver)
+    let t = time_median(20, || {
+        let _ = coord
+            .infer(InferRequest { image: image.clone(), variant: "fp32".into() })
+            .unwrap();
+    });
+    println!("\ncoordinator round-trip (b=1): {:>7.2} ms", t * 1e3);
+
+    // moderate-load burst: 12 concurrent requests (the dispatch-chunking
+    // case — before chunking this padded to the b=64 graph)
+    let t = time_median(5, || {
+        let rxs: Vec<_> = (0..12)
+            .map(|_| {
+                coord
+                    .submit(InferRequest { image: image.clone(), variant: "fp32".into() })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap().unwrap();
+        }
+    });
+    println!("coordinator 12-req burst    : {:>7.1} ms  ({:>6.0} req/s)", t * 1e3, 12.0 / t);
+
+    // batched throughput: 256 concurrent requests
+    let t = time_median(3, || {
+        let rxs: Vec<_> = (0..256)
+            .map(|_| {
+                coord
+                    .submit(InferRequest { image: image.clone(), variant: "fp32".into() })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap().unwrap();
+        }
+    });
+    println!(
+        "coordinator 256-req burst   : {:>7.1} ms  ({:>6.0} req/s)",
+        t * 1e3,
+        256.0 / t
+    );
+    let snap = coord.metrics.snapshot();
+    println!("mean batch size             : {:>7.1}", snap.mean_batch);
+    // batching overhead: total latency minus pure execute share
+    println!(
+        "queue p50 under burst       : {:>7.0} us",
+        snap.queue_us.p50
+    );
+    coord.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! Regenerates every FIGURE of the paper (DESIGN.md §2):
+//!
+//!   --fig1  DRAM weight:activation access ratio per ResNet-18 conv layer
+//!   --fig2  P(lossless quantization) for the three granularities
+//!   --fig3  normalized PE area / energy-per-MAC / throughput-per-area
+//!   --fig5  weight storage compression: SWIS, SWIS-C, DPRed
+//!   --fig6  accuracy vs group size and shifts (TinyCNN proxy)
+//!
+//! Default (no flag): all figures, printed as the series the paper plots.
+//!
+//! Run: cargo bench --bench paper_figures [-- --fig3]
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use anyhow::Result;
+use bench_common::{build_weights, Eval, WeightConfig};
+use swis::analysis::fig2_rows;
+use swis::arch::compression::fig5_rows;
+use swis::arch::pe::{normalized, PeKind};
+use swis::nets::{by_name, surrogate_weights};
+use swis::sim::{dram_traffic, ArrayConfig, ExecScheme, SchemeKind};
+
+fn main() -> Result<()> {
+    // cargo bench invokes bench binaries with a trailing `--bench` flag;
+    // strip harness-added args so the default (no selection) still means "all"
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && !a.is_empty())
+        .collect();
+    let pick = |name: &str| argv.is_empty() || argv.iter().any(|a| a == name);
+    if pick("--fig1") {
+        fig1()?;
+    }
+    if pick("--fig2") {
+        fig2()?;
+    }
+    if pick("--fig3") {
+        fig3()?;
+    }
+    if pick("--fig5") {
+        fig5()?;
+    }
+    if pick("--fig6") {
+        fig6()?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ Fig 1
+// Ratio of DRAM weight to activation accesses (RD+WR) per conv layer of
+// ResNet-18 on the systolic-array accelerator.
+fn fig1() -> Result<()> {
+    println!("\n== Fig. 1: DRAM weight:activation access ratio (ResNet-18) ==");
+    let net = by_name("resnet18").unwrap();
+    let cfg = ArrayConfig::paper_baseline(PeKind::Fixed);
+    let scheme = ExecScheme::new(SchemeKind::Fixed8, 8.0);
+    println!("{:<22} {:>12} {:>12} {:>9}", "layer", "wgt B", "act B(R+W)", "ratio");
+    for l in &net.layers {
+        let t = dram_traffic(l, &cfg, &scheme);
+        println!(
+            "{:<22} {:>12.0} {:>12.0} {:>9.2}",
+            l.name,
+            t.dram_wgt_rd,
+            t.dram_act_rd + t.dram_act_wr,
+            t.wgt_to_act_ratio()
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ Fig 2
+fn fig2() -> Result<()> {
+    println!("\n== Fig. 2: P(lossless) of a random 8-bit value ==");
+    println!("{:>7} {:>12} {:>12} {:>12}", "shifts", "layer-wise", "SWIS-C", "SWIS");
+    for r in fig2_rows() {
+        println!(
+            "{:>7} {:>12.4} {:>12.4} {:>12.4}",
+            r.n_shifts, r.layerwise, r.swis_c, r.swis
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ Fig 3
+// Single- and double-shift PE area / energy-per-MAC / throughput-per-area,
+// normalized to the fixed-point PE with the same group size.
+fn fig3() -> Result<()> {
+    println!("\n== Fig. 3: normalized PE metrics (vs fixed-point, same G) ==");
+    for kind in [PeKind::SingleShift, PeKind::DoubleShift] {
+        println!("\n{kind:?}");
+        println!(
+            "{:>4} | {:>7} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}",
+            "G", "area", "E/MAC@2", "E/MAC@4", "E/MAC@6", "T/A@2", "T/A@4", "T/A@6"
+        );
+        for g in [2usize, 4, 8, 16] {
+            let n2 = normalized(kind, g, 2);
+            let n4 = normalized(kind, g, 4);
+            let n6 = normalized(kind, g, 6);
+            println!(
+                "{:>4} | {:>7.3} | {:>8.3} {:>8.3} {:>8.3} | {:>8.3} {:>8.3} {:>8.3}",
+                g,
+                n2.area,
+                n2.energy_per_mac,
+                n4.energy_per_mac,
+                n6.energy_per_mac,
+                n2.throughput_per_area,
+                n4.throughput_per_area,
+                n6.throughput_per_area
+            );
+        }
+    }
+    println!("(paper crossover: bit-serial wins E/MAC and T/A only below ~4 shifts)");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ Fig 5
+// Weight storage compression ratio vs number of shifts and group size,
+// DPRed profiled on an example conv layer (ResNet-18 layer2.0.conv2).
+fn fig5() -> Result<()> {
+    println!("\n== Fig. 5: weight compression ratio (8-bit baseline) ==");
+    let net = by_name("resnet18").unwrap();
+    let layer = net.layer("layer2.0.conv2").unwrap();
+    let w = surrogate_weights(layer, 1);
+    println!("{:>5} {:>7} | {:>8} {:>8} {:>8}", "G", "shifts", "SWIS", "SWIS-C", "DPRed");
+    for row in fig5_rows(&w, &[2, 4, 8, 16], &[1, 2, 3, 4, 5]) {
+        println!(
+            "{:>5} {:>7} | {:>7.2}x {:>7.2}x {:>7.2}x",
+            row.group_size, row.n_shifts, row.swis, row.swis_c, row.dpred
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ Fig 6
+// Top-1 accuracy vs PE group size and number of shifts (TinyCNN proxy for
+// the paper's ResNet-18/ImageNet sweep).
+fn fig6() -> Result<()> {
+    println!("\n== Fig. 6: accuracy vs group size and shifts (TinyCNN proxy) ==");
+    let eval = Eval::new(512, &[])?;
+    println!("baseline fp32: {:.1}%", 100.0 * eval.accuracy(None)?);
+    for scheme in ["swis", "swis_c"] {
+        println!("\n{}", if scheme == "swis" { "SWIS" } else { "SWIS-C" });
+        print!("{:>4} |", "G");
+        for n in 2..=5 {
+            print!(" {:>8}", format!("{n} shifts"));
+        }
+        println!();
+        for g in [1usize, 2, 4, 8, 16] {
+            print!("{g:>4} |");
+            for n in 2..=5 {
+                let mut cfg = WeightConfig::swis(n as f64);
+                cfg.scheme = if scheme == "swis" { "swis" } else { "swis_c" };
+                cfg.group_size = g;
+                cfg.scheduled = false; // the figure sweeps raw quantization
+                let w = build_weights(&eval.bundle.weights, &cfg)?;
+                print!(" {:>7.1}%", 100.0 * eval.accuracy(Some(&w))?);
+            }
+            println!();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,293 @@
+//! Regenerates every TABLE of the paper's evaluation (DESIGN.md §2):
+//!
+//!   --table1     RMSE of SWIS / SWIS-C / layer-wise truncation
+//!   --table2     scheduling benefit (TinyCNN accuracy proxy)
+//!   --table3     post-training quantization accuracy
+//!   --table4     Frames/J and Frames/s at iso-accuracy points
+//!   --table5     quantization-aware retraining accuracy
+//!   --bandwidth  Sec. 3.3 DRAM bandwidth-reduction claim
+//!
+//! Default (no flag): all tables. Accuracy numbers come from the
+//! build-time-trained TinyCNN proxy on synth-CIFAR (DESIGN.md §4
+//! substitutions): we reproduce orderings and gaps, not ImageNet top-1.
+//!
+//! Run: cargo bench --bench paper_tables [-- --table3]
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use anyhow::Result;
+use bench_common::{art_dir, build_weights, Eval, WeightConfig};
+use swis::arch::pe::PeKind;
+use swis::nets::{by_name, surrogate_weights};
+use swis::quant::truncation::truncate_weights;
+use swis::quant::{quantize, QuantConfig};
+use swis::sim::{simulate_network, ArrayConfig, ExecScheme, SchemeKind};
+use swis::util::json;
+use swis::util::stats::rmse;
+
+fn main() -> Result<()> {
+    // cargo bench invokes bench binaries with a trailing `--bench` flag;
+    // strip harness-added args so the default (no selection) still means "all"
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench" && !a.is_empty())
+        .collect();
+    let pick = |name: &str| argv.is_empty() || argv.iter().any(|a| a == name);
+    if pick("--table1") {
+        table1()?;
+    }
+    if pick("--table2") {
+        table2()?;
+    }
+    if pick("--table3") {
+        table3()?;
+    }
+    if pick("--table4") {
+        table4()?;
+    }
+    if pick("--table5") {
+        table5()?;
+    }
+    if pick("--bandwidth") {
+        bandwidth()?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 1
+// RMSE of the three quantization methods on a typical layer of 8-bit
+// ResNet-18 (conv1) and MobileNet-v2 (first point-wise conv), group 1 & 4.
+fn table1() -> Result<()> {
+    println!("\n== Table 1: quantization RMSE (surrogate weights, DESIGN.md §4) ==");
+    for (net_name, layer_name) in [("resnet18", "conv1"), ("mobilenet_v2", "block0.project")] {
+        let net = by_name(net_name).unwrap();
+        let layer = net.layer(layer_name).unwrap();
+        let w = surrogate_weights(layer, 1);
+        let shape = layer.weight_shape();
+        println!("\n{net_name} {layer_name}  (shape {shape:?})");
+        println!(
+            "{:>8} | {:>9} {:>9} | {:>9} {:>9} {:>12}",
+            "shifts", "SWIS g1", "SWIS-C g1", "SWIS g4", "SWIS-C g4", "layer trunc"
+        );
+        for n in (2..=5).rev() {
+            let r = |g: usize, c: bool| -> Result<f64> {
+                let cfg = QuantConfig { n_shifts: n, group_size: g, alpha: swis::quant::Alpha::ONE, consecutive: c };
+                Ok(rmse(&w, &quantize(&w, &shape, &cfg)?.to_f64()))
+            };
+            let tr = rmse(&w, &truncate_weights(&w, n));
+            println!(
+                "{:>8} | {:>9.4} {:>9.4} | {:>9.4} {:>9.4} {:>12.4}",
+                n,
+                r(1, false)?,
+                r(1, true)?,
+                r(4, false)?,
+                r(4, true)?,
+                tr
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 2
+// Scheduling benefit: single-/double-shift scheduled vs unscheduled, for
+// SA column blocks of 8 and 16, PE group 4 (TinyCNN accuracy proxy).
+fn table2() -> Result<()> {
+    println!("\n== Table 2: accuracy with SWIS filter scheduling (TinyCNN proxy) ==");
+    let eval = Eval::new(512, &[])?;
+    println!("baseline fp32: {:.1}%", 100.0 * eval.accuracy(None)?);
+    println!(
+        "{:>7} {:>4} | {:>9} {:>9} {:>9}",
+        "shifts", "SA", "Single", "Double", "None"
+    );
+    for &n in &[2.0, 2.5, 3.0, 4.0] {
+        for sa in [8usize, 16] {
+            let acc = |ds: bool, scheduled: bool| -> Result<f64> {
+                let mut cfg = WeightConfig::swis(n);
+                cfg.double_shift = ds;
+                cfg.scheduled = scheduled;
+                cfg.sa_cols = sa;
+                let w = build_weights(&eval.bundle.weights, &cfg)?;
+                eval.accuracy(Some(&w))
+            };
+            let single = acc(false, true)?;
+            let double = acc(true, true)?;
+            let none = if n.fract() == 0.0 {
+                format!("{:>8.1}%", 100.0 * acc(false, false)?)
+            } else {
+                "     N/A".to_string()
+            };
+            println!(
+                "{:>7} {:>4} | {:>8.1}% {:>8.1}% {:>9}",
+                n, sa, 100.0 * single, 100.0 * double, none
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 3
+// Post-training quantization accuracy across all SWIS configurations and
+// the truncation baselines.
+fn table3() -> Result<()> {
+    println!("\n== Table 3: post-training quantization accuracy (TinyCNN proxy) ==");
+    let act_kinds: Vec<String> = [2usize, 3, 4, 6, 7]
+        .iter()
+        .map(|b| format!("model_act_trunc{b}"))
+        .collect();
+    let eval = Eval::new(512, &act_kinds)?;
+    println!("baseline fp32: {:.1}%", 100.0 * eval.accuracy(None)?);
+    println!(
+        "{:>7} | {:>8} {:>8} {:>8} {:>8} | {:>8} {:>8}",
+        "shifts", "SWIS-SS", "SWIS-DS", "C-SS", "C-DS", "Wgt.", "Act."
+    );
+    for &n in &[2.0, 2.5, 3.0, 4.0, 6.0, 7.0] {
+        let mut cells: Vec<String> = Vec::new();
+        if n <= 4.0 {
+            for (scheme, ds) in [("swis", false), ("swis", true), ("swis_c", false), ("swis_c", true)] {
+                let mut cfg = WeightConfig::swis(n);
+                cfg.scheme = if scheme == "swis" { "swis" } else { "swis_c" };
+                cfg.double_shift = ds;
+                let w = build_weights(&eval.bundle.weights, &cfg)?;
+                cells.push(format!("{:>7.1}%", 100.0 * eval.accuracy(Some(&w))?));
+            }
+        } else {
+            cells.extend(std::iter::repeat("      /".to_string()).take(4));
+        }
+        // truncation baselines only at integral bit widths
+        if n.fract() == 0.0 {
+            let mut cfg = WeightConfig::swis(n);
+            cfg.scheme = "wgt_trunc";
+            cfg.scheduled = false;
+            let w = build_weights(&eval.bundle.weights, &cfg)?;
+            cells.push(format!("{:>7.1}%", 100.0 * eval.accuracy(Some(&w))?));
+            cells.push(format!(
+                "{:>7.1}%",
+                100.0 * eval.accuracy_kind(&format!("model_act_trunc{}", n as usize))?
+            ));
+        } else {
+            cells.push("    N/A".into());
+            cells.push("    N/A".into());
+        }
+        println!(
+            "{:>7} | {} {} {} {} | {} {}",
+            n, cells[0], cells[1], cells[2], cells[3], cells[4], cells[5]
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 4
+// Frames/J and Frames/s at the paper's iso-accuracy shift choices, on the
+// 8x8 group-4 array. Shift budgets per cell are the paper's own (its
+// accuracy study picked them; our Table 3 proxy reproduces the ordering).
+fn table4() -> Result<()> {
+    println!("\n== Table 4: energy (F/J) and latency (F/s) at iso-accuracy ==");
+    // (network, accuracy tier label, [SS, DS, C-SS, C-DS, act, wgt] shifts,
+    //  include BitFusion?)
+    let rows: &[(&str, &str, [f64; 6], bool)] = &[
+        ("resnet18", ">69.1%", [3.0, 4.0, 4.0, 4.0, 7.0, 6.0], false),
+        ("resnet18", ">60.2%", [2.0, 2.0, 2.0, 2.0, 6.0, 4.0], true),
+        ("mobilenet_v2", ">68.0%", [5.0, 5.0, 5.0, 6.0, 7.0, 6.0], false),
+        ("mobilenet_v2", ">60.3%", [3.5, 4.0, 4.0, 4.0, 6.0, 5.0], false),
+        ("vgg16", ">64.1%", [3.0, 4.0, 4.0, 4.0, 7.0, 6.0], false),
+        ("vgg16", ">62.5%", [2.5, 2.5, 3.0, 3.0, 6.0, 4.0], true),
+    ];
+    println!(
+        "{:<14} {:<8} | {:>6} {:>13} {:>13} {:>13} {:>13} {:>13} {:>13} {:>13} {:>13}",
+        "network", "acc", "", "SWIS-SS", "SWIS-DS", "SWIS-C-SS", "SWIS-C-DS", "ActTrunc", "WgtTrunc", "BitFusion", "8b-FX"
+    );
+    for (net_name, tier, s, bf) in rows {
+        let net = by_name(net_name).unwrap();
+        let cell = |kind: SchemeKind, pe: PeKind, n: f64| -> (f64, f64) {
+            let cfg = ArrayConfig::paper_baseline(pe);
+            let sim = simulate_network(&net, &cfg, &ExecScheme::new(kind, n));
+            (sim.frames_per_j(), sim.frames_per_s())
+        };
+        let cols = [
+            cell(SchemeKind::Swis, PeKind::SingleShift, s[0]),
+            cell(SchemeKind::Swis, PeKind::DoubleShift, s[1]),
+            cell(SchemeKind::SwisC, PeKind::SingleShift, s[2]),
+            cell(SchemeKind::SwisC, PeKind::DoubleShift, s[3]),
+            cell(SchemeKind::ActTrunc, PeKind::SingleShift, s[4]),
+            cell(SchemeKind::WgtTrunc, PeKind::SingleShift, s[5]),
+        ];
+        let bf_cell = if *bf {
+            let (j, f) = cell(SchemeKind::BitFusion4x8, PeKind::Fixed, 4.0);
+            format!("{j:>6.0}/{f:>5.1}")
+        } else {
+            "      -     ".into()
+        };
+        let (fxj, fxs) = cell(SchemeKind::Fixed8, PeKind::Fixed, 8.0);
+        print!("{net_name:<14} {tier:<8} | {:>6} ", "F/J,F/s");
+        for (i, (j, f)) in cols.iter().enumerate() {
+            print!("{:>6.0}/{:>5.1}{}", j, f, if i < 5 { " " } else { " " });
+        }
+        println!("{bf_cell} {fxj:>6.0}/{fxs:>5.1}");
+    }
+    println!("(shift budgets per cell follow the paper's Table 4 'S' columns)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------- Table 5
+// Quantization-aware retraining (computed at build time by
+// python/compile/retrain.py; recorded in artifacts/retrain_results.json).
+fn table5() -> Result<()> {
+    println!("\n== Table 5: retraining accuracy (TinyCNN proxy, build-time QAT) ==");
+    let raw = std::fs::read_to_string(art_dir().join("retrain_results.json"))?;
+    let j = json::parse(&raw)?;
+    let acc = |key: &str| -> String {
+        j.path(&[key, "accuracy"])
+            .and_then(|v| v.as_f64())
+            .map(|a| format!("{:>7.1}%", 100.0 * a))
+            .unwrap_or_else(|| "    N/A".into())
+    };
+    println!("{:>7} | {:>8} {:>8} | {:>8}", "shifts", "SWIS-SS", "C-SS", "Wgt.");
+    for n in ["2", "2.5", "3"] {
+        println!(
+            "{:>7} | {} {} | {}",
+            n,
+            acc(&format!("swis_ss_{n}")),
+            acc(&format!("swis_c_ss_{n}")),
+            acc(&format!("trunc_{n}")),
+        );
+    }
+    println!("baseline (no quantization): {}", acc("baseline"));
+    Ok(())
+}
+
+// ------------------------------------------------------- Sec. 3.3 claim
+// DRAM bandwidth reduction vs an iso-area 8-bit fixed-point accelerator.
+fn bandwidth() -> Result<()> {
+    println!("\n== Sec. 3.3: DRAM traffic reduction vs 8-bit fixed (ResNet-18) ==");
+    let net = by_name("resnet18").unwrap();
+    let fx = simulate_network(
+        &net,
+        &ArrayConfig::paper_baseline(PeKind::Fixed),
+        &ExecScheme::new(SchemeKind::Fixed8, 8.0),
+    );
+    println!(
+        "{:>6} {:>7} | {:>12} {:>12}",
+        "group", "shifts", "SWIS", "SWIS-C"
+    );
+    let mut best = (0.0f64, 0.0f64);
+    for g in [4usize, 8, 16] {
+        for n in [2.0f64, 3.0] {
+            let mut cfg = ArrayConfig::paper_baseline(PeKind::SingleShift);
+            cfg.group_size = g;
+            let s = simulate_network(&net, &cfg, &ExecScheme::swis(n));
+            let c = simulate_network(&net, &cfg, &ExecScheme::swis_c(n));
+            let rs = fx.dram_bytes() / s.dram_bytes();
+            let rc = fx.dram_bytes() / c.dram_bytes();
+            best.0 = best.0.max(rs);
+            best.1 = best.1.max(rc);
+            println!("{:>6} {:>7} | {:>11.2}x {:>11.2}x", g, n, rs, rc);
+        }
+    }
+    println!(
+        "max reduction: SWIS {:.1}x (paper: up to 2.3x), SWIS-C {:.1}x (paper: up to 3.3x)",
+        best.0, best.1
+    );
+    Ok(())
+}

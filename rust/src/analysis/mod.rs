@@ -1,0 +1,8 @@
+//! Analytical results from the paper (Sec. 2.3): the probability of
+//! losslessly quantizing a random 8-bit integer under the three
+//! quantization granularities (Eqs. 8-10, Fig. 2), plus an exhaustive
+//! 256-value enumeration that cross-checks the closed forms.
+
+pub mod prob;
+
+pub use prob::{fig2_rows, p_layerwise, p_swis, p_swis_c, ProbRow};

@@ -1,0 +1,158 @@
+//! Probability of lossless quantization (paper Eqs. 8-10, Fig. 2).
+//!
+//! An 8-bit magnitude with uniformly random bits is losslessly
+//! representable by:
+//!   * SWIS        — iff popcount <= N (any N sparse positions);
+//!   * SWIS-C      — iff the set bits fit in one of the 9-N consecutive
+//!     N-bit windows;
+//!   * layer-wise  — iff the set bits fall inside the one fixed N-subset
+//!     the whole layer shares (probability averaged over subsets).
+//!
+//! Closed forms below; [`enumerate_all`] exhaustively checks all 256
+//! values (and all windows / subsets) and must agree to 1e-12 — that is
+//! the Fig. 2 self-check test.
+
+const B: usize = 8;
+
+fn binom(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let mut v = 1.0f64;
+    for i in 0..k {
+        v = v * (n - i) as f64 / (i + 1) as f64;
+    }
+    v
+}
+
+/// Eq. 8 — SWIS: P(popcount <= N) under iid Bernoulli(1/2) bits.
+pub fn p_swis(n_shifts: usize) -> f64 {
+    (0..=n_shifts.min(B)).map(|n| binom(B, n)).sum::<f64>() * 0.5f64.powi(B as i32)
+}
+
+/// Eq. 9 — SWIS-C: set bits fit some consecutive window of N positions.
+/// Inclusion-exclusion over the (9-N) windows: patterns in two adjacent
+/// windows lie in their (N-1)-bit overlap, counted (8-N) times.
+pub fn p_swis_c(n_shifts: usize) -> f64 {
+    let nn = n_shifts.min(B);
+    if nn == B {
+        return 1.0;
+    }
+    let mut p = 0.0;
+    for n in 0..=nn {
+        let fitting = binom(nn, n) * (B + 1 - nn) as f64
+            - (B - nn) as f64 * binom(nn.saturating_sub(1), n);
+        p += fitting * 0.5f64.powi(B as i32);
+    }
+    p
+}
+
+/// Eq. 10 — layer-wise static: set bits fall inside one fixed N-subset.
+pub fn p_layerwise(n_shifts: usize) -> f64 {
+    let nn = n_shifts.min(B);
+    (0..=nn).map(|n| binom(nn, n)).sum::<f64>() * 0.5f64.powi(B as i32)
+}
+
+/// One Fig. 2 series point.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbRow {
+    pub n_shifts: usize,
+    pub layerwise: f64,
+    pub swis_c: f64,
+    pub swis: f64,
+}
+
+/// Fig. 2: all three curves for N = 1..=8.
+pub fn fig2_rows() -> Vec<ProbRow> {
+    (1..=B)
+        .map(|n| ProbRow {
+            n_shifts: n,
+            layerwise: p_layerwise(n),
+            swis_c: p_swis_c(n),
+            swis: p_swis(n),
+        })
+        .collect()
+}
+
+/// Exhaustive enumeration over all 256 byte values: returns
+/// (layerwise, swis_c, swis) probabilities for a given N.
+pub fn enumerate_all(n_shifts: usize) -> (f64, f64, f64) {
+    let nn = n_shifts.min(B);
+    let mut swis_ok = 0usize;
+    let mut swis_c_ok = 0usize;
+    for v in 0u32..256 {
+        if (v.count_ones() as usize) <= nn {
+            swis_ok += 1;
+        }
+        let fits_window = (0..=(B - nn)).any(|off| {
+            let window = (((1u32 << nn) - 1) << off) & 0xff;
+            v & !window == 0
+        });
+        if fits_window {
+            swis_c_ok += 1;
+        }
+    }
+    // layer-wise: average containment over all C(8,N) subsets
+    let mut contained = 0usize;
+    let mut subsets = 0usize;
+    for s in 0u32..256 {
+        if s.count_ones() as usize != nn {
+            continue;
+        }
+        subsets += 1;
+        for v in 0u32..256 {
+            if v & !s == 0 {
+                contained += 1;
+            }
+        }
+    }
+    (
+        contained as f64 / (subsets as f64 * 256.0),
+        swis_c_ok as f64 / 256.0,
+        swis_ok as f64 / 256.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_forms_match_enumeration() {
+        for n in 1..=8 {
+            let (lw, sc, sw) = enumerate_all(n);
+            assert!((p_layerwise(n) - lw).abs() < 1e-12, "layerwise N={n}");
+            assert!((p_swis_c(n) - sc).abs() < 1e-12, "swis_c N={n}: {} vs {sc}", p_swis_c(n));
+            assert!((p_swis(n) - sw).abs() < 1e-12, "swis N={n}");
+        }
+    }
+
+    #[test]
+    fn ordering_swis_ge_swis_c_ge_layerwise() {
+        for n in 1..=8 {
+            assert!(p_swis(n) >= p_swis_c(n) - 1e-15);
+            assert!(p_swis_c(n) >= p_layerwise(n) - 1e-15);
+        }
+    }
+
+    #[test]
+    fn boundary_values() {
+        assert!((p_swis(8) - 1.0).abs() < 1e-15);
+        assert!((p_swis_c(8) - 1.0).abs() < 1e-15);
+        assert!((p_layerwise(8) - 1.0).abs() < 1e-15);
+        // N=1: swis = P(popcount<=1) = 9/256
+        assert!((p_swis(1) - 9.0 / 256.0).abs() < 1e-15);
+        // layer-wise N=1: 2/256
+        assert!((p_layerwise(1) - 2.0 / 256.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fig2_monotone_in_shifts() {
+        let rows = fig2_rows();
+        for w in rows.windows(2) {
+            assert!(w[1].swis >= w[0].swis);
+            assert!(w[1].swis_c >= w[0].swis_c);
+            assert!(w[1].layerwise >= w[0].layerwise);
+        }
+    }
+}

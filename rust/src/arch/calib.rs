@@ -1,0 +1,60 @@
+//! Calibration constants for the 28 nm component cost model.
+//!
+//! The paper synthesized its PEs with a commercial 28 nm TSMC library and
+//! reports *normalized* area / energy-per-MAC / throughput-per-area
+//! (Fig. 3). We reproduce those curves from first-principles component
+//! costs expressed in gate equivalents (GE, area) and femtojoules per
+//! activation (energy), with values taken from standard-cell intuition
+//! (NAND2 = 1 GE) and tuned so the paper's crossovers hold:
+//!
+//!   * single-shift bit-serial beats fixed-point energy/MAC and
+//!     throughput/area only below ~4 shifts and at group size >= 8;
+//!   * a double-shift PE at group G dominates a single-shift PE at 2G.
+//!
+//! All downstream results (Table 4) consume only RELATIVE numbers, so the
+//! absolute unit is arbitrary; `PJ_PER_GE_ACT` anchors it to picojoules
+//! for the energy roll-up.
+
+/// Area of an 8x8 Baugh-Wooley multiplier (GE).
+pub const A_MULT8: f64 = 345.0;
+/// Area per full-adder bit in an adder tree / accumulator (GE).
+pub const A_FA: f64 = 6.0;
+/// Area per flip-flop bit (GE).
+pub const A_FF: f64 = 6.5;
+/// Area per 2-input AND gate (mask stage) (GE).
+pub const A_AND: f64 = 1.4;
+/// Area per 2:1 mux bit (sign-invert / shifter stages) (GE).
+pub const A_MUX: f64 = 2.2;
+/// Fixed per-PE control overhead (decoders, shift-count counter) (GE).
+pub const A_CTRL: f64 = 60.0;
+/// Extra control for the double-shift PE (second plane sequencing) (GE).
+pub const A_CTRL_DS: f64 = 25.0;
+
+/// Switching energy per GE per active cycle, in femtojoules. Datapath
+/// activity factors are folded into per-component multipliers below.
+pub const FJ_PER_GE: f64 = 0.45;
+
+/// Relative switching activity of each component class (dimensionless).
+pub const ACT_MULT: f64 = 1.0;
+pub const ACT_TREE: f64 = 0.75;
+pub const ACT_AND: f64 = 0.5;
+pub const ACT_MUX: f64 = 0.35;
+pub const ACT_FF: f64 = 0.6;
+pub const ACT_CTRL: f64 = 0.25;
+
+/// Accumulator width (output-stationary partial sums).
+pub const ACC_BITS: f64 = 24.0;
+
+/// Memory energies, picojoules per byte (28 nm-class, Horowitz-scaled).
+pub const PJ_SRAM_BYTE: f64 = 1.2;
+/// DRAM access energy, pJ/byte (LPDDR-class interface).
+pub const PJ_DRAM_BYTE: f64 = 84.0;
+
+/// Accelerator clock (Hz) used to convert cycles to seconds.
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// Convert GE-cycles to picojoules.
+#[inline]
+pub fn ge_to_pj(ge_active: f64) -> f64 {
+    ge_active * FJ_PER_GE / 1000.0
+}

@@ -1,0 +1,145 @@
+//! Weight-storage compression models (paper Sec. 3.3, Fig. 5).
+//!
+//! * SWIS: per group — 1 sign bit/weight, N mask bits/weight, 3 bits per
+//!   shift value per group.
+//! * SWIS-C: same masks/signs, but a single 3-bit offset per group.
+//! * DPRed [3]: lossless per-group bitwidth — each group stores its
+//!   weights at the width of its largest magnitude (+ sign), plus a 3-bit
+//!   per-group width tag. Profiled over actual weight data.
+//! * Weight truncation: N magnitude bits + sign per weight (layer-wide).
+
+use crate::quant::int8::Int8Layer;
+
+/// Bits per weight for SWIS with group size `g` and `n` shifts.
+pub fn swis_bits_per_weight(g: usize, n: usize) -> f64 {
+    1.0 + n as f64 + 3.0 * n as f64 / g as f64
+}
+
+/// Bits per weight for SWIS-C (single 3-bit offset per group).
+pub fn swis_c_bits_per_weight(g: usize, n: usize) -> f64 {
+    1.0 + n as f64 + 3.0 / g as f64
+}
+
+/// Bits per weight for layer-wise weight truncation to `n` bits.
+pub fn trunc_bits_per_weight(n: usize) -> f64 {
+    1.0 + n as f64
+}
+
+/// Compression ratio vs the 8-bit baseline.
+pub fn ratio(bits_per_weight: f64) -> f64 {
+    8.0 / bits_per_weight
+}
+
+/// DPRed bits/weight profiled over a weight tensor: per group of `g`,
+/// width = bits of the largest magnitude in the group; storage = sign +
+/// width per weight + 3-bit width tag per group.
+pub fn dpred_bits_per_weight(w: &[f64], g: usize) -> f64 {
+    let q = Int8Layer::from_f64(w);
+    let mut total_bits = 0u64;
+    let mut n_weights = 0u64;
+    for chunk in q.mags.chunks(g) {
+        let max_mag = chunk.iter().copied().max().unwrap_or(0) as u32;
+        let width = if max_mag == 0 {
+            1
+        } else {
+            32 - max_mag.leading_zeros()
+        } as u64;
+        total_bits += chunk.len() as u64 * (width + 1) + 3;
+        n_weights += chunk.len() as u64;
+    }
+    total_bits as f64 / n_weights as f64
+}
+
+/// Fig. 5 series: compression ratios for a sweep of shifts and group
+/// sizes, DPRed profiled on the supplied example layer.
+pub struct CompressionRow {
+    pub group_size: usize,
+    pub n_shifts: usize,
+    pub swis: f64,
+    pub swis_c: f64,
+    pub dpred: f64,
+}
+
+pub fn fig5_rows(example_layer: &[f64], groups: &[usize], shifts: &[usize]) -> Vec<CompressionRow> {
+    let mut out = Vec::new();
+    for &g in groups {
+        let dp = ratio(dpred_bits_per_weight(example_layer, g));
+        for &n in shifts {
+            out.push(CompressionRow {
+                group_size: g,
+                n_shifts: n,
+                swis: ratio(swis_bits_per_weight(g, n)),
+                swis_c: ratio(swis_c_bits_per_weight(g, n)),
+                dpred: dp,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_quoted_group4_range() {
+        // paper Sec. 3.3: for group 4, SWIS 1.1-2.9x, SWIS-C 1.5-2.9x
+        let lo_s = ratio(swis_bits_per_weight(4, 4));
+        let hi_s = ratio(swis_bits_per_weight(4, 1));
+        assert!((0.95..=1.25).contains(&lo_s), "swis low {lo_s}");
+        assert!((2.7..=3.1).contains(&hi_s), "swis high {hi_s}");
+        let lo_c = ratio(swis_c_bits_per_weight(4, 4));
+        let hi_c = ratio(swis_c_bits_per_weight(4, 1));
+        assert!((1.3..=1.6).contains(&lo_c), "swis-c low {lo_c}");
+        assert!((2.7..=3.1).contains(&hi_c), "swis-c high {hi_c}");
+    }
+
+    #[test]
+    fn max_compression_near_3_7x() {
+        // large groups + 1 shift: the paper's 3.7x headline
+        let r = ratio(swis_bits_per_weight(16, 1));
+        assert!((3.4..=3.8).contains(&r), "r={r}");
+    }
+
+    #[test]
+    fn swis_c_never_below_swis() {
+        for g in [2, 4, 8, 16] {
+            for n in 1..=6 {
+                assert!(
+                    swis_c_bits_per_weight(g, n) <= swis_bits_per_weight(g, n),
+                    "g={g} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dpred_lossless_but_weak_at_8bit() {
+        // near-Gaussian weights: most groups have a large max -> little
+        // width reduction, exactly the paper's observation
+        let mut rng = Rng::new(17);
+        let w: Vec<f64> = (0..4096).map(|_| rng.normal_ms(0.0, 0.08)).collect();
+        let bits = dpred_bits_per_weight(&w, 4);
+        let r = ratio(bits);
+        assert!(r < 2.0, "DPRed ratio should be modest, got {r}");
+        assert!(r > 1.0, "DPRed should still compress, got {r}");
+    }
+
+    #[test]
+    fn dpred_degrades_with_group_size() {
+        let mut rng = Rng::new(18);
+        let w: Vec<f64> = (0..4096).map(|_| rng.normal_ms(0.0, 0.08)).collect();
+        let r4 = ratio(dpred_bits_per_weight(&w, 4));
+        let r16 = ratio(dpred_bits_per_weight(&w, 16));
+        assert!(r16 <= r4, "larger groups hit worst-case width: {r16} vs {r4}");
+    }
+
+    #[test]
+    fn zero_group_width_one() {
+        let w = vec![0.0; 8];
+        let bits = dpred_bits_per_weight(&w, 4);
+        // width 1 + sign + tag 3/4
+        assert!((bits - (2.0 + 0.75)).abs() < 1e-12);
+    }
+}

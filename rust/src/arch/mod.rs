@@ -1,0 +1,8 @@
+//! Hardware cost models: PE area/energy (Fig. 3), storage compression
+//! (Fig. 5), memory energies and the BitFusion comparator (Table 4).
+
+pub mod bitfusion;
+pub mod calib;
+pub mod compression;
+pub mod pe;
+pub mod pe_functional;

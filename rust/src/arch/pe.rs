@@ -1,0 +1,239 @@
+//! Processing-element cost model (paper Sec. 3.1, Fig. 3): fixed-point,
+//! single-shift bit-serial, and double-shift bit-serial PEs with group
+//! sizes 2..16, including their activation/weight buffers (the paper's
+//! synthesis included buffers, which is what limits bit-serial gains at
+//! small group sizes).
+
+use super::calib::*;
+
+/// PE flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PeKind {
+    /// Conventional 8-bit fixed-point MAC group (1 group-op/cycle).
+    Fixed,
+    /// Bit-serial, one shift plane per cycle (paper "single-shift").
+    SingleShift,
+    /// Bit-serial, two shift planes per cycle (paper "double-shift").
+    DoubleShift,
+}
+
+/// Synthesized-PE surrogate: area (GE), energy per cycle (pJ), and
+/// throughput accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct PeModel {
+    pub kind: PeKind,
+    /// Weights multiplied-accumulated in parallel per group-op.
+    pub group_size: usize,
+    /// Total area in gate equivalents (incl. act/wgt buffers).
+    pub area_ge: f64,
+    /// Energy per active cycle, picojoules.
+    pub pj_per_cycle: f64,
+}
+
+fn log2ceil(x: usize) -> f64 {
+    (x.max(1) as f64).log2().ceil()
+}
+
+impl PeModel {
+    pub fn new(kind: PeKind, group_size: usize) -> PeModel {
+        let g = group_size as f64;
+        // shared buffers: activation regs G x 8b, double-buffered
+        let a_act_buf = g * 8.0 * A_FF * 2.0;
+        match kind {
+            PeKind::Fixed => {
+                // G multipliers + 16b adder tree + accumulator + wgt regs
+                let a_mult = g * A_MULT8;
+                let a_tree = (g - 1.0).max(0.0) * 16.0 * A_FA;
+                let a_acc = ACC_BITS * (A_FA + A_FF);
+                let a_wbuf = g * 8.0 * A_FF * 2.0;
+                let area = a_mult + a_tree + a_acc + a_act_buf + a_wbuf + A_CTRL;
+                let e = ge_to_pj(
+                    a_mult * ACT_MULT
+                        + a_tree * ACT_TREE
+                        + a_acc * ACT_TREE
+                        + (a_act_buf + a_wbuf) * ACT_FF * 0.5
+                        + A_CTRL * ACT_CTRL,
+                );
+                PeModel { kind, group_size, area_ge: area, pj_per_cycle: e }
+            }
+            PeKind::SingleShift => {
+                // G 8b AND masks + G 9b sign inverters + 9..12b adder tree
+                // + barrel shifter + accumulator + mask/shift regs
+                let tree_bits = 9.0 + log2ceil(group_size);
+                let a_and = g * 8.0 * A_AND;
+                let a_sign = g * 9.0 * A_MUX;
+                let a_tree = (g - 1.0).max(0.0) * tree_bits * A_FA;
+                let a_shift = (tree_bits + 7.0) * 3.0 * A_MUX; // 8-way barrel
+                let a_acc = ACC_BITS * (A_FA + A_FF);
+                // weight-side regs: G mask bits x2 planes + 3b shift value
+                let a_wbuf = (g * 2.0 + 3.0) * A_FF * 2.0;
+                let area = a_and + a_sign + a_tree + a_shift + a_acc + a_act_buf + a_wbuf + A_CTRL;
+                let e = ge_to_pj(
+                    a_and * ACT_AND
+                        + a_sign * ACT_MUX
+                        + a_tree * ACT_TREE
+                        + a_shift * ACT_MUX
+                        + a_acc * ACT_TREE
+                        + (a_act_buf * 0.25 + a_wbuf) * ACT_FF // act regs mostly held
+                        + A_CTRL * ACT_CTRL,
+                );
+                PeModel { kind, group_size, area_ge: area, pj_per_cycle: e }
+            }
+            PeKind::DoubleShift => {
+                // two mask+tree+shifter lanes sharing act buffer, sign
+                // stage and accumulator (+ a combining adder)
+                let tree_bits = 9.0 + log2ceil(group_size);
+                let a_and = 2.0 * g * 8.0 * A_AND;
+                let a_sign = g * 9.0 * A_MUX;
+                let a_tree = 2.0 * (g - 1.0).max(0.0) * tree_bits * A_FA;
+                let a_shift = 2.0 * (tree_bits + 7.0) * 3.0 * A_MUX;
+                let a_comb = (tree_bits + 8.0) * A_FA;
+                let a_acc = ACC_BITS * (A_FA + A_FF);
+                let a_wbuf = (2.0 * g * 2.0 + 6.0) * A_FF * 2.0;
+                let area = a_and + a_sign + a_tree + a_shift + a_comb + a_acc + a_act_buf
+                    + a_wbuf
+                    + A_CTRL
+                    + A_CTRL_DS;
+                let e = ge_to_pj(
+                    a_and * ACT_AND
+                        + a_sign * ACT_MUX
+                        + a_tree * ACT_TREE
+                        + a_shift * ACT_MUX
+                        + (a_comb + a_acc) * ACT_TREE
+                        + (a_act_buf * 0.25 + a_wbuf) * ACT_FF
+                        + (A_CTRL + A_CTRL_DS) * ACT_CTRL,
+                );
+                PeModel { kind, group_size, area_ge: area, pj_per_cycle: e }
+            }
+        }
+    }
+
+    /// Cycles for one group-op at `n_shifts` shift planes.
+    pub fn cycles_per_group_op(&self, n_shifts: f64) -> f64 {
+        match self.kind {
+            PeKind::Fixed => 1.0,
+            PeKind::SingleShift => n_shifts.max(1.0),
+            PeKind::DoubleShift => (n_shifts / 2.0).ceil().max(1.0),
+        }
+    }
+
+    /// MACs per cycle.
+    pub fn throughput(&self, n_shifts: f64) -> f64 {
+        self.group_size as f64 / self.cycles_per_group_op(n_shifts)
+    }
+
+    /// Energy per MAC (pJ) at a given shift count.
+    pub fn pj_per_mac(&self, n_shifts: f64) -> f64 {
+        self.pj_per_cycle * self.cycles_per_group_op(n_shifts) / self.group_size as f64
+    }
+
+    /// Throughput per area (MACs/cycle/GE) — Fig. 3(c)'s metric.
+    pub fn throughput_per_area(&self, n_shifts: f64) -> f64 {
+        self.throughput(n_shifts) / self.area_ge
+    }
+}
+
+/// Fig. 3 row: metrics normalized to the fixed-point PE of the same
+/// group size.
+#[derive(Clone, Copy, Debug)]
+pub struct NormalizedPe {
+    pub group_size: usize,
+    pub n_shifts: usize,
+    pub area: f64,
+    pub energy_per_mac: f64,
+    pub throughput_per_area: f64,
+}
+
+pub fn normalized(kind: PeKind, group_size: usize, n_shifts: usize) -> NormalizedPe {
+    let fx = PeModel::new(PeKind::Fixed, group_size);
+    let pe = PeModel::new(kind, group_size);
+    let n = n_shifts as f64;
+    NormalizedPe {
+        group_size,
+        n_shifts,
+        area: pe.area_ge / fx.area_ge,
+        energy_per_mac: pe.pj_per_mac(n) / fx.pj_per_mac(1.0),
+        throughput_per_area: pe.throughput_per_area(n) / fx.throughput_per_area(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pe_smaller_than_fixed() {
+        for g in [2, 4, 8, 16] {
+            let n = normalized(PeKind::SingleShift, g, 2);
+            assert!(n.area < 1.0, "SS area ratio {} at G={g}", n.area);
+        }
+    }
+
+    #[test]
+    fn area_ratio_shrinks_with_group_size() {
+        // buffers amortize: serial PE relative area falls as G grows
+        let a2 = normalized(PeKind::SingleShift, 2, 2).area;
+        let a16 = normalized(PeKind::SingleShift, 16, 2).area;
+        assert!(a16 < a2, "a16={a16} a2={a2}");
+    }
+
+    #[test]
+    fn single_shift_crossover_at_4_shifts() {
+        // the paper's headline Fig. 3 observation: SS wins on energy and
+        // T/A only below 4 shifts (at reasonable group sizes)
+        for g in [8, 16] {
+            let e2 = normalized(PeKind::SingleShift, g, 2);
+            let e4 = normalized(PeKind::SingleShift, g, 4);
+            let e6 = normalized(PeKind::SingleShift, g, 6);
+            assert!(e2.energy_per_mac < 1.0, "G={g} e2={}", e2.energy_per_mac);
+            assert!(e2.throughput_per_area > 1.0, "G={g} t2={}", e2.throughput_per_area);
+            assert!(e6.energy_per_mac > 1.0, "G={g} e6={}", e6.energy_per_mac);
+            assert!(e6.throughput_per_area < 1.0, "G={g} t6={}", e6.throughput_per_area);
+            // 4 shifts sits near break-even
+            assert!(e4.energy_per_mac > 0.7 && e4.energy_per_mac < 1.4,
+                "G={g} e4={}", e4.energy_per_mac);
+        }
+    }
+
+    #[test]
+    fn small_groups_are_not_worth_it() {
+        // below group size 8, gains are modest at best (Sec. 3.1)
+        let n = normalized(PeKind::SingleShift, 2, 2);
+        assert!(n.throughput_per_area < 1.25, "t/a {} at G=2", n.throughput_per_area);
+    }
+
+    #[test]
+    fn double_shift_dominates_single_at_double_group() {
+        // DS at G has lower normalized E/MAC and higher T/A than SS at 2G
+        for (g_ds, g_ss) in [(4, 8), (8, 16)] {
+            for s in [2usize, 4, 6] {
+                let ds = normalized(PeKind::DoubleShift, g_ds, s);
+                let ss = normalized(PeKind::SingleShift, g_ss, s);
+                assert!(
+                    ds.energy_per_mac < ss.energy_per_mac * 1.05,
+                    "DS(G={g_ds}) {} vs SS(G={g_ss}) {} at {s} shifts",
+                    ds.energy_per_mac,
+                    ss.energy_per_mac
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn double_shift_halves_cycles() {
+        let ds = PeModel::new(PeKind::DoubleShift, 4);
+        assert_eq!(ds.cycles_per_group_op(4.0), 2.0);
+        assert_eq!(ds.cycles_per_group_op(3.0), 2.0); // odd N underutilizes
+        assert_eq!(ds.cycles_per_group_op(2.0), 1.0);
+        let ss = PeModel::new(PeKind::SingleShift, 4);
+        assert_eq!(ss.cycles_per_group_op(3.0), 3.0);
+    }
+
+    #[test]
+    fn fixed_point_energy_scale_sane() {
+        // an 8-bit MAC should land in the right pJ ballpark (0.1-1 pJ)
+        let fx = PeModel::new(PeKind::Fixed, 4);
+        let pj = fx.pj_per_mac(1.0);
+        assert!(pj > 0.05 && pj < 1.5, "fx pj/mac = {pj}");
+    }
+}

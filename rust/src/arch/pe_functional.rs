@@ -1,0 +1,222 @@
+//! Functional (bit-accurate) model of the SWIS processing element
+//! (paper Fig. 4a): the datapath that the cost model in [`super::pe`]
+//! prices. Executes Eq. 7 the way the hardware does — one (or two) shift
+//! planes per cycle through mask-AND, conditional sign inversion, an
+//! adder tree, a barrel shifter and a serial accumulator — and must
+//! agree exactly with the packed format's dequantized dot product.
+//!
+//! This is the cross-check between the *storage* contract
+//! ([`crate::quant::PackedLayer`]) and the *compute* contract (the
+//! systolic array in [`crate::sim::functional`]): if either side
+//! mis-lays-out masks or shifts, these tests catch it.
+
+use crate::quant::PackedLayer;
+
+/// One group-MAC datapath. `group_size` parallel lanes; `double_shift`
+/// processes two shift planes per cycle (paper Sec. 3.1).
+#[derive(Clone, Debug)]
+pub struct FunctionalPe {
+    pub group_size: usize,
+    pub double_shift: bool,
+    /// Output-stationary accumulator (24-bit in hardware; i64 here with a
+    /// width check).
+    acc: i64,
+    pub cycles: u64,
+}
+
+/// Accumulator width the cost model provisions (paper-matched).
+pub const ACC_WIDTH_BITS: u32 = 24;
+
+impl FunctionalPe {
+    pub fn new(group_size: usize, double_shift: bool) -> FunctionalPe {
+        FunctionalPe { group_size, double_shift, acc: 0, cycles: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+        self.cycles = 0;
+    }
+
+    pub fn accumulator(&self) -> i64 {
+        self.acc
+    }
+
+    /// Process ONE shift cycle: lanes of activations (int8 codes), the
+    /// cycle's mask bits and signs, shifted by `shift`.
+    ///
+    /// Hardware stages modeled: AND-mask -> sign invert -> adder tree ->
+    /// barrel shift -> accumulate.
+    fn shift_cycle(&mut self, acts: &[i32], masks: &[u8], signs: &[i8], shift: u8) {
+        debug_assert_eq!(acts.len(), self.group_size);
+        let mut tree = 0i64; // adder-tree partial (width 9 + log2 G)
+        for i in 0..self.group_size {
+            let masked = if masks[i] != 0 { acts[i] as i64 } else { 0 };
+            let signed = if signs[i] < 0 { -masked } else { masked };
+            tree += signed;
+        }
+        self.acc += tree << shift;
+        debug_assert!(
+            self.acc.unsigned_abs() < 1 << (ACC_WIDTH_BITS + 8),
+            "accumulator overflow: {}",
+            self.acc
+        );
+    }
+
+    /// Execute a full group-op against packed group `g` of `layer`,
+    /// returning the integer MAC result. Cycle count follows the PE
+    /// flavor: N for single-shift, ceil(N/2) for double-shift.
+    pub fn group_op(&mut self, layer: &PackedLayer, g: usize, acts: &[i32]) -> i64 {
+        let n = layer.active_shifts(g);
+        let gs = layer.group_size;
+        debug_assert_eq!(gs, self.group_size);
+        let shifts = &layer.shifts[g * layer.n_shifts..g * layer.n_shifts + n];
+        let signs = &layer.signs[g * gs..(g + 1) * gs];
+        let start = self.acc;
+        let mut j = 0;
+        while j < n {
+            // gather plane j's mask bits for every lane
+            let plane = |jj: usize| -> Vec<u8> {
+                (0..gs)
+                    .map(|i| layer.masks[(g * gs + i) * layer.n_shifts + jj])
+                    .collect()
+            };
+            if self.double_shift && j + 1 < n {
+                let m0 = plane(j);
+                let m1 = plane(j + 1);
+                self.shift_cycle(acts, &m0, signs, shifts[j]);
+                self.shift_cycle(acts, &m1, signs, shifts[j + 1]);
+                self.cycles += 1; // two planes, one cycle
+                j += 2;
+            } else {
+                let m = plane(j);
+                self.shift_cycle(acts, &m, signs, shifts[j]);
+                self.cycles += 1;
+                j += 1;
+            }
+        }
+        self.acc - start
+    }
+}
+
+/// Reference: the integer dot product the packed group implies,
+/// sum_i act_i * sign_i * mag_i.
+pub fn group_dot_reference(layer: &PackedLayer, g: usize, acts: &[i32]) -> i64 {
+    let gs = layer.group_size;
+    (0..gs)
+        .map(|i| {
+            let m = layer.mag(g, i);
+            let s = layer.signs[g * gs + i] as i64;
+            acts[i] as i64 * s * m
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn packed(seed: u64, n: usize, g: usize, consecutive: bool) -> PackedLayer {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(16 * 32, 0.0, 0.07);
+        let cfg = QuantConfig { n_shifts: n, group_size: g, alpha: crate::quant::Alpha::ONE, consecutive };
+        quantize(&w, &[16, 32], &cfg).unwrap()
+    }
+
+    #[test]
+    fn single_shift_matches_reference() {
+        let p = packed(1, 3, 4, false);
+        let mut pe = FunctionalPe::new(4, false);
+        let mut rng = Rng::new(2);
+        for g in 0..p.n_groups() {
+            let acts: Vec<i32> = (0..4).map(|_| rng.range_u64(0, 255) as i32).collect();
+            pe.reset();
+            let got = pe.group_op(&p, g, &acts);
+            assert_eq!(got, group_dot_reference(&p, g, &acts), "group {g}");
+            assert_eq!(pe.cycles, 3);
+        }
+    }
+
+    #[test]
+    fn double_shift_matches_reference_at_half_cycles() {
+        for n in [2usize, 3, 4, 5] {
+            let p = packed(3 + n as u64, n, 4, false);
+            let mut pe = FunctionalPe::new(4, true);
+            let mut rng = Rng::new(5);
+            let acts: Vec<i32> = (0..4).map(|_| rng.range_u64(0, 255) as i32).collect();
+            for g in [0usize, 7, p.n_groups() - 1] {
+                pe.reset();
+                let got = pe.group_op(&p, g, &acts);
+                assert_eq!(got, group_dot_reference(&p, g, &acts));
+                assert_eq!(pe.cycles as usize, n.div_ceil(2), "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn swis_c_packed_runs_identically() {
+        let p = packed(11, 3, 4, true);
+        let mut pe = FunctionalPe::new(4, false);
+        let acts = vec![100, -5, 17, 63];
+        for g in 0..p.n_groups() {
+            pe.reset();
+            assert_eq!(pe.group_op(&p, g, &acts), group_dot_reference(&p, g, &acts));
+        }
+    }
+
+    #[test]
+    fn accumulates_across_group_ops() {
+        // output-stationary: multiple group-ops accumulate one output
+        let p = packed(13, 2, 4, false);
+        let mut pe = FunctionalPe::new(4, false);
+        let acts = vec![10, 20, 30, 40];
+        let mut expect = 0i64;
+        for g in 0..4 {
+            pe.group_op(&p, g, &acts);
+            expect += group_dot_reference(&p, g, &acts);
+        }
+        assert_eq!(pe.accumulator(), expect);
+        assert_eq!(pe.cycles, 8);
+    }
+
+    #[test]
+    fn scheduled_layer_heterogeneous_shift_counts() {
+        // filters packed by the scheduler carry different active shift
+        // counts; the PE must honor per-group counts, not n_shifts.
+        let mut rng = Rng::new(17);
+        let w = rng.normal_vec(16 * 16, 0.0, 0.05);
+        let p = crate::schedule::quantize_or_schedule(&w, &[16, 16], 2.5, 4, false, crate::quant::Alpha::ONE)
+            .unwrap();
+        let mut pe = FunctionalPe::new(4, false);
+        let acts = vec![1, 2, 3, 4];
+        let mut seen_cycles = std::collections::BTreeSet::new();
+        for g in 0..p.n_groups() {
+            pe.reset();
+            assert_eq!(pe.group_op(&p, g, &acts), group_dot_reference(&p, g, &acts));
+            seen_cycles.insert(pe.cycles);
+        }
+        assert!(seen_cycles.len() >= 2, "expected mixed shift counts, got {seen_cycles:?}");
+    }
+
+    #[test]
+    fn property_random_activations_and_configs() {
+        crate::util::check::props(200, |rng| {
+            let n = 1 + (rng.below(5) as usize);
+            let g = [1usize, 2, 4, 8][rng.below(4) as usize];
+            let consecutive = rng.bool(0.5);
+            let w = rng.normal_vec(8 * 16, 0.0, 0.06);
+            let cfg = QuantConfig { n_shifts: n, group_size: g, alpha: crate::quant::Alpha::ONE, consecutive };
+            let p = quantize(&w, &[8, 16], &cfg).map_err(|e| e.to_string())?;
+            let gi = rng.below(p.n_groups() as u64) as usize;
+            let acts: Vec<i32> = (0..g).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+            let mut pe = FunctionalPe::new(g, rng.bool(0.5));
+            let got = pe.group_op(&p, gi, &acts);
+            let want = group_dot_reference(&p, gi, &acts);
+            if got != want {
+                return Err(format!("PE {got} != ref {want} (N={n} G={g})"));
+            }
+            Ok(())
+        });
+    }
+}

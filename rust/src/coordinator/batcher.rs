@@ -1,0 +1,105 @@
+//! Dynamic batching policy: drain the queue up to `max_batch`, waiting at
+//! most `max_wait` for stragglers once the first request of a batch has
+//! arrived (the standard serving trade-off between p50 latency and
+//! throughput).
+
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Never assemble more than this many requests (should match the
+    /// largest compiled batch variant).
+    pub max_batch: usize,
+    /// How long to hold an under-full batch open for stragglers.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates requests into a batch under a [`BatchPolicy`].
+pub struct PendingBatch<T> {
+    pub items: Vec<T>,
+    opened: Option<Instant>,
+    policy: BatchPolicy,
+}
+
+impl<T> PendingBatch<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        PendingBatch { items: Vec::with_capacity(policy.max_batch), opened: None, policy }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.items.is_empty() {
+            self.opened = Some(Instant::now());
+        }
+        self.items.push(item);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Should the batch be dispatched now?
+    pub fn ready(&self) -> bool {
+        if self.items.is_empty() {
+            return false;
+        }
+        self.items.len() >= self.policy.max_batch
+            || self.opened.map_or(false, |t| t.elapsed() >= self.policy.max_wait)
+    }
+
+    /// Time left before the wait deadline forces dispatch (None if empty).
+    pub fn time_left(&self) -> Option<Duration> {
+        self.opened
+            .map(|t| self.policy.max_wait.saturating_sub(t.elapsed()))
+    }
+
+    /// Take the assembled batch.
+    pub fn take(&mut self) -> Vec<T> {
+        self.opened = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = PendingBatch::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        for i in 0..3 {
+            b.push(i);
+            assert!(!b.ready(), "not ready at {}", i + 1);
+        }
+        b.push(3);
+        assert!(b.ready());
+        assert_eq!(b.take(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let mut b = PendingBatch::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) });
+        b.push(42);
+        assert!(!b.ready());
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready());
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: PendingBatch<u32> = PendingBatch::new(BatchPolicy::default());
+        assert!(!b.ready());
+        assert!(b.time_left().is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Serving metrics: request counts, batch-size histogram, queue/execute
+//! latency percentiles.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::{percentile, Summary};
+
+/// Shared metrics sink (worker thread records, callers snapshot).
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batch_sizes: Vec<f64>,
+    queue_us: Vec<f64>,
+    exec_us: Vec<f64>,
+    total_us: Vec<f64>,
+}
+
+/// Point-in-time view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub queue_us: Summary,
+    pub exec_us: Summary,
+    pub total_us: Summary,
+    pub p50_total_us: f64,
+    pub p99_total_us: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, queue: &[Duration], exec: Duration, total: &[Duration]) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += size as u64;
+        m.batches += 1;
+        m.batch_sizes.push(size as f64);
+        m.exec_us.push(exec.as_secs_f64() * 1e6);
+        m.queue_us.extend(queue.iter().map(|d| d.as_secs_f64() * 1e6));
+        m.total_us.extend(total.iter().map(|d| d.as_secs_f64() * 1e6));
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let mut sorted = m.total_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        MetricsSnapshot {
+            requests: m.requests,
+            batches: m.batches,
+            mean_batch: if m.batches == 0 {
+                0.0
+            } else {
+                m.requests as f64 / m.batches as f64
+            },
+            queue_us: crate::util::stats::summarize(&m.queue_us),
+            exec_us: crate::util::stats::summarize(&m.exec_us),
+            total_us: crate::util::stats::summarize(&m.total_us),
+            p50_total_us: percentile(&sorted, 50.0),
+            p99_total_us: percentile(&sorted, 99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.record_batch(
+            4,
+            &[Duration::from_micros(10); 4],
+            Duration::from_micros(500),
+            &[Duration::from_micros(510); 4],
+        );
+        m.record_batch(
+            2,
+            &[Duration::from_micros(20); 2],
+            Duration::from_micros(400),
+            &[Duration::from_micros(420); 2],
+        );
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 3.0).abs() < 1e-12);
+        assert!(s.p50_total_us >= 419.0 && s.p50_total_us <= 511.0, "p50 {}", s.p50_total_us);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_batch, 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! The serving coordinator (L3): dynamic batcher + variant router +
+//! metrics over the PJRT runtime. Python never runs on the request path —
+//! the worker thread owns compiled executables for every batch-size
+//! variant and serves whichever SWIS weight configuration a request
+//! names.
+//!
+//! Architecture (vLLM-router-style, scaled to this paper's scope):
+//!
+//! ```text
+//!   clients --> Coordinator::submit --> [queue] --> worker thread
+//!                                                    |  drain <= max_batch
+//!                                                    |  pick compiled variant
+//!                                                    |  PJRT execute
+//!                                     response <-----+  per-request channel
+//! ```
+//!
+//! The environment vendors no tokio; the event loop is a plain
+//! thread + mpsc design, which for a single-device CPU backend is also
+//! the lower-overhead choice (see EXPERIMENTS.md §Perf).
+
+mod batcher;
+mod metrics;
+mod server;
+mod variants;
+
+pub use batcher::{BatchPolicy, PendingBatch};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, InferRequest, InferResponse};
+pub use variants::{quantize_jax_weight, VariantSpec, WeightVariants};

@@ -1,0 +1,252 @@
+//! The coordinator proper: a leader thread owning the PJRT executables,
+//! fed by an mpsc request queue, dispatching dynamically-assembled
+//! batches and routing each request to its named weight variant.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, PendingBatch};
+use super::metrics::Metrics;
+use super::variants::{VariantSpec, WeightVariants};
+use crate::runtime::{ModelBundle, Runtime};
+use crate::util::tensor::Tensor;
+
+/// One inference request: a 32x32x3 image routed to a weight variant.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub image: Vec<f32>,
+    /// Variant name ("fp32", "swis@3", ...). Unknown names fail fast.
+    pub variant: String,
+}
+
+/// The response delivered on the per-request channel.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    pub queue: Duration,
+    pub total: Duration,
+    pub batch_size: usize,
+}
+
+struct Job {
+    req: InferRequest,
+    respond: Sender<Result<InferResponse, String>>,
+    enqueued: Instant,
+}
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<Result<()>>>,
+    image_len: usize,
+}
+
+impl Coordinator {
+    /// Start the worker thread: it builds the PJRT runtime, compiles all
+    /// model variants and quantizes the weight sets before accepting
+    /// requests (returns once warm-up is complete).
+    pub fn start(
+        artifacts: &Path,
+        policy: BatchPolicy,
+        variants: Vec<VariantSpec>,
+    ) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = Arc::clone(&metrics);
+        let dir = artifacts.to_path_buf();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("swis-coordinator".into())
+            .spawn(move || worker_loop(rx, dir, policy, variants, m2, ready_tx))
+            .context("spawning coordinator thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => bail!("coordinator failed to start: {e}"),
+            Err(_) => bail!("coordinator thread died during warm-up"),
+        }
+        Ok(Coordinator { tx, metrics, worker: Some(worker), image_len: 32 * 32 * 3 })
+    }
+
+    /// Submit a request; returns the response channel immediately.
+    pub fn submit(&self, req: InferRequest) -> Result<Receiver<Result<InferResponse, String>>> {
+        if req.image.len() != self.image_len {
+            bail!("image must have {} elements, got {}", self.image_len, req.image.len());
+        }
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Job(Job { req, respond, enqueued: Instant::now() }))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .context("coordinator dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Graceful shutdown: drains the queue, then joins the worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    dir: std::path::PathBuf,
+    policy: BatchPolicy,
+    variants: Vec<VariantSpec>,
+    metrics: Arc<Metrics>,
+    ready: Sender<Result<(), String>>,
+) -> Result<()> {
+    // Warm-up: PJRT client + executables + quantized variants, all owned
+    // by this thread (PJRT handles are not shared across threads).
+    let setup = (|| -> Result<(ModelBundle, WeightVariants)> {
+        let rt = Runtime::cpu()?;
+        let bundle = ModelBundle::load(&rt, &dir, "model")?;
+        let sets = WeightVariants::build(&bundle.weights, &variants)?;
+        Ok((bundle, sets))
+    })();
+    let (bundle, sets) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return Err(e);
+        }
+    };
+
+    let mut pending: PendingBatch<Job> = PendingBatch::new(policy);
+    let mut shutting_down = false;
+    loop {
+        // Block for work, or poll the straggler deadline of an open batch.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Job(j)) => pending.push(j),
+                Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+            }
+        } else {
+            let wait = pending.time_left().unwrap_or(Duration::ZERO);
+            match rx.recv_timeout(wait) {
+                Ok(Msg::Job(j)) => pending.push(j),
+                Ok(Msg::Shutdown) => shutting_down = true,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => shutting_down = true,
+            }
+        }
+        if pending.ready() || (shutting_down && !pending.is_empty()) {
+            dispatch(pending.take(), &bundle, &sets, &metrics);
+        }
+        if shutting_down && pending.is_empty() {
+            return Ok(());
+        }
+    }
+}
+
+/// Execute one assembled batch: group by variant, run the compiled graph
+/// per group, deliver responses.
+fn dispatch(jobs: Vec<Job>, bundle: &ModelBundle, sets: &WeightVariants, metrics: &Metrics) {
+    let mut by_variant: HashMap<&str, Vec<&Job>> = HashMap::new();
+    for j in &jobs {
+        by_variant.entry(j.req.variant.as_str()).or_default().push(j);
+    }
+    for (variant, group) in by_variant {
+        let weights = sets.get(variant);
+        if weights.is_none() {
+            for j in &group {
+                let _ = j
+                    .respond
+                    .send(Err(format!("unknown variant '{variant}'")));
+            }
+            continue;
+        }
+        // execute in compiled-size chunks rather than padding the whole
+        // group up to the largest variant (PJRT cost ~affine in batch)
+        let mut start = 0usize;
+        for chunk in bundle.plan_chunks(group.len()) {
+            let end = (start + chunk).min(group.len());
+            run_chunk(&group[start..end], weights, bundle, metrics);
+            start = end;
+        }
+    }
+}
+
+/// Execute one compiled-size chunk of same-variant jobs.
+fn run_chunk(
+    group: &[&Job],
+    weights: Option<&HashMap<String, Tensor<f32>>>,
+    bundle: &ModelBundle,
+    metrics: &Metrics,
+) {
+    let t0 = Instant::now();
+        let n = group.len();
+        let per = 32 * 32 * 3;
+        let mut data = Vec::with_capacity(n * per);
+        for j in group {
+            data.extend_from_slice(&j.req.image);
+        }
+        let images = match Tensor::new(&[n, 32, 32, 3], data) {
+            Ok(t) => t,
+            Err(e) => {
+                for j in group {
+                    let _ = j.respond.send(Err(format!("{e:#}")));
+                }
+                return;
+            }
+        };
+        match bundle.infer(&images, weights) {
+            Ok(logits) => {
+                let exec = t0.elapsed();
+                let classes = logits.shape()[1];
+                let now = Instant::now();
+                let queue_ts: Vec<Duration> =
+                    group.iter().map(|j| t0.duration_since(j.enqueued)).collect();
+                let total_ts: Vec<Duration> =
+                    group.iter().map(|j| now.duration_since(j.enqueued)).collect();
+                // record before delivery so a caller that has all its
+                // responses also sees them reflected in the metrics
+                metrics.record_batch(n, &queue_ts, exec, &total_ts);
+                for (i, j) in group.iter().enumerate() {
+                    let _ = j.respond.send(Ok(InferResponse {
+                        logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                        queue: queue_ts[i],
+                        total: total_ts[i],
+                        batch_size: n,
+                    }));
+                }
+            }
+            Err(e) => {
+                for j in group {
+                    let _ = j.respond.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+}

@@ -1,0 +1,200 @@
+//! Weight-variant router support: a served model exposes named weight
+//! configurations (fp32 baseline, SWIS/SWIS-C at various shift budgets,
+//! truncation baselines) over the SAME compiled graph — quantization is a
+//! pure weight transform (paper Sec. 2), so variants cost no extra
+//! compilation.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::quant::{Alpha, quantize, QuantConfig};
+use crate::quant::truncation::truncate_weights;
+use crate::schedule::quantize_or_schedule;
+use crate::util::tensor::Tensor;
+
+/// A named weight configuration.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    /// "fp32" | "swis" | "swis_c" | "wgt_trunc"
+    pub scheme: String,
+    /// Effective shifts (fractional triggers the Sec. 4.3 scheduler).
+    pub n_shifts: f64,
+    pub group_size: usize,
+}
+
+impl VariantSpec {
+    pub fn fp32() -> VariantSpec {
+        VariantSpec { name: "fp32".into(), scheme: "fp32".into(), n_shifts: 8.0, group_size: 4 }
+    }
+
+    pub fn swis(n: f64, g: usize) -> VariantSpec {
+        VariantSpec { name: format!("swis@{n}"), scheme: "swis".into(), n_shifts: n, group_size: g }
+    }
+
+    pub fn swis_c(n: f64, g: usize) -> VariantSpec {
+        VariantSpec { name: format!("swis_c@{n}"), scheme: "swis_c".into(), n_shifts: n, group_size: g }
+    }
+
+    pub fn parse(s: &str) -> Result<VariantSpec> {
+        if s == "fp32" {
+            return Ok(VariantSpec::fp32());
+        }
+        let (scheme, rest) = s.split_once('@').unwrap_or((s, "3"));
+        let n: f64 = rest.parse()?;
+        match scheme {
+            "swis" => Ok(VariantSpec::swis(n, 4)),
+            "swis_c" => Ok(VariantSpec::swis_c(n, 4)),
+            "wgt_trunc" => Ok(VariantSpec {
+                name: format!("wgt_trunc@{n}"),
+                scheme: "wgt_trunc".into(),
+                n_shifts: n,
+                group_size: 4,
+            }),
+            _ => bail!("unknown variant scheme '{scheme}'"),
+        }
+    }
+}
+
+/// All weight sets a coordinator serves, keyed by variant name.
+pub struct WeightVariants {
+    pub sets: HashMap<String, HashMap<String, Tensor<f32>>>,
+}
+
+/// Quantize one flat weight tensor (jax layout) through a SWIS transform
+/// that operates filters-first, and return it in the original layout.
+///
+/// jax layouts: conv HWIO (fan-in major, O last), fc (din, dout). Both
+/// put the filter axis LAST, so the transpose is the same.
+pub fn quantize_jax_weight(
+    t: &Tensor<f32>,
+    spec: &VariantSpec,
+) -> Result<Tensor<f32>> {
+    let shape = t.shape().to_vec();
+    let k = *shape.last().unwrap();
+    let fan_in: usize = shape[..shape.len() - 1].iter().product();
+    let data = t.to_f64();
+    // transpose (fan_in, K) -> (K, fan_in)
+    let mut wf = vec![0.0f64; k * fan_in];
+    for i in 0..fan_in {
+        for o in 0..k {
+            wf[o * fan_in + i] = data.data()[i * k + o];
+        }
+    }
+    let dq: Vec<f64> = match spec.scheme.as_str() {
+        "swis" | "swis_c" => {
+            let consecutive = spec.scheme == "swis_c";
+            if spec.n_shifts.fract() == 0.0 {
+                let cfg = QuantConfig {
+                    n_shifts: spec.n_shifts as usize,
+                    group_size: spec.group_size,
+                    alpha: Alpha::ONE,
+                    consecutive,
+                };
+                quantize(&wf, &[k, fan_in], &cfg)?.to_f64()
+            } else {
+                quantize_or_schedule(&wf, &[k, fan_in], spec.n_shifts, spec.group_size, consecutive, Alpha::ONE)?
+                    .to_f64()
+            }
+        }
+        "wgt_trunc" => truncate_weights(&wf, spec.n_shifts as usize),
+        "fp32" => wf.clone(),
+        other => bail!("unknown scheme {other}"),
+    };
+    let mut back = vec![0.0f32; k * fan_in];
+    for i in 0..fan_in {
+        for o in 0..k {
+            back[i * k + o] = dq[o * fan_in + i] as f32;
+        }
+    }
+    Tensor::new(&shape, back)
+}
+
+impl WeightVariants {
+    /// Build every variant's weight set from the FP32 bundle weights.
+    /// Biases pass through untouched (the paper quantizes weights only).
+    pub fn build(
+        fp32: &HashMap<String, Tensor<f32>>,
+        specs: &[VariantSpec],
+    ) -> Result<WeightVariants> {
+        let mut sets = HashMap::new();
+        for spec in specs {
+            let mut set = HashMap::new();
+            for (name, t) in fp32 {
+                let q = if name.ends_with("_b") || spec.scheme == "fp32" {
+                    t.clone()
+                } else {
+                    quantize_jax_weight(t, spec)?
+                };
+                set.insert(name.clone(), q);
+            }
+            sets.insert(spec.name.clone(), set);
+        }
+        Ok(WeightVariants { sets })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HashMap<String, Tensor<f32>>> {
+        self.sets.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut n: Vec<&str> = self.sets.keys().map(|s| s.as_str()).collect();
+        n.sort();
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy_weights() -> HashMap<String, Tensor<f32>> {
+        let mut rng = Rng::new(5);
+        let mut m = HashMap::new();
+        let w: Vec<f32> = (0..3 * 3 * 4 * 8).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect();
+        m.insert("conv1".into(), Tensor::new(&[3, 3, 4, 8], w).unwrap());
+        m.insert("conv1_b".into(), Tensor::new(&[8], vec![0.5; 8]).unwrap());
+        m
+    }
+
+    #[test]
+    fn variants_build_and_biases_pass_through() {
+        let fp32 = toy_weights();
+        let specs = vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4), VariantSpec::swis_c(2.0, 4)];
+        let v = WeightVariants::build(&fp32, &specs).unwrap();
+        assert_eq!(v.names(), vec!["fp32", "swis@3", "swis_c@2"]);
+        let s3 = v.get("swis@3").unwrap();
+        assert_eq!(s3["conv1_b"].data(), fp32["conv1_b"].data());
+        assert_ne!(s3["conv1"].data(), fp32["conv1"].data());
+        // fp32 variant is the identity
+        assert_eq!(v.get("fp32").unwrap()["conv1"].data(), fp32["conv1"].data());
+    }
+
+    #[test]
+    fn quantized_weights_are_close() {
+        let fp32 = toy_weights();
+        let q = quantize_jax_weight(&fp32["conv1"], &VariantSpec::swis(4.0, 4)).unwrap();
+        let a = fp32["conv1"].data();
+        let b = q.data();
+        let rmse = (a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>()
+            / a.len() as f64)
+            .sqrt();
+        assert!(rmse < 0.01, "rmse {rmse}");
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(VariantSpec::parse("fp32").unwrap().scheme, "fp32");
+        let s = VariantSpec::parse("swis@2.5").unwrap();
+        assert_eq!(s.n_shifts, 2.5);
+        assert!(VariantSpec::parse("bogus@3").is_err());
+    }
+
+    #[test]
+    fn fractional_shifts_schedule() {
+        let fp32 = toy_weights();
+        let q = quantize_jax_weight(&fp32["conv1"], &VariantSpec::swis(2.5, 4)).unwrap();
+        assert_eq!(q.shape(), &[3, 3, 4, 8]);
+    }
+}

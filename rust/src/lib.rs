@@ -1,0 +1,33 @@
+//! # SWIS — Shared Weight bIt Sparsity
+//!
+//! Reproduction of *SWIS — Shared Weight bIt Sparsity for Efficient Neural
+//! Network Acceleration* (Li, Romaszkan, Graening, Gupta — TinyML Research
+//! Symposium 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * [`quant`] — the SWIS / SWIS-C quantizers, MSE++ metric, packed
+//!   storage format, truncation baselines (paper Sec. 2, 4.1).
+//! * [`schedule`] — filter scheduling across systolic-array column groups
+//!   (paper Sec. 4.3).
+//! * [`arch`] — 28 nm PE area/energy models (single/double-shift,
+//!   fixed-point, BitFusion) and storage-compression models incl. DPRed
+//!   (paper Sec. 3.1, 3.3).
+//! * [`sim`] — output-stationary systolic-array cycle & memory-traffic
+//!   simulator, SCALE-Sim-class (paper Sec. 3.2, 5.2).
+//! * [`nets`] — layer shape tables: ResNet-18, MobileNet-v2, VGG-16 and
+//!   the TinyCNN accuracy proxy.
+//! * [`analysis`] — lossless-quantization probability (paper Eq. 8-10).
+//! * [`runtime`] — PJRT client wrapper executing AOT-lowered HLO-text
+//!   artifacts produced by `python/compile/aot.py`.
+//! * [`coordinator`] — the serving layer: dynamic batcher, router,
+//!   metrics; Python never runs on the request path.
+//! * [`util`] — tensors, NPY/NPZ + JSON IO, RNG, CLI, property-testing.
+
+pub mod analysis;
+pub mod arch;
+pub mod coordinator;
+pub mod nets;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod schedule;
+pub mod util;

@@ -1,0 +1,317 @@
+//! `swis` — leader entrypoint for the SWIS reproduction.
+//!
+//! Subcommands:
+//!   quantize  — SWIS/SWIS-C/truncation quantization report for a network
+//!   simulate  — systolic-array simulation: cycles, F/s, F/J, DRAM traffic
+//!   serve     — start the coordinator and drive a synthetic request load
+//!   prob      — Fig. 2 lossless-quantization probability curves
+//!   info      — model zoo + accelerator configuration summary
+//!
+//! Examples:
+//!   swis quantize --net resnet18 --shifts 3 --group 4
+//!   swis simulate --net mobilenet_v2 --scheme swis --shifts 3.5 --pe ds
+//!   swis serve --artifacts artifacts --requests 256 --variants fp32,swis@3
+//!   swis prob
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+use swis::analysis::fig2_rows;
+use swis::arch::pe::PeKind;
+use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::nets::{all_networks, by_name, surrogate_weights};
+use swis::quant::truncation::truncate_weights;
+use swis::schedule::quantize_or_schedule;
+use swis::sim::{simulate_network, ArrayConfig, ExecScheme, SchemeKind};
+use swis::util::cli;
+use swis::util::rng::Rng;
+use swis::util::stats::rmse;
+
+const VALUE_KEYS: &[&str] = &[
+    "net", "shifts", "group", "scheme", "pe", "rows", "cols", "artifacts", "requests",
+    "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(argv, VALUE_KEYS)?;
+    match args.subcommand() {
+        Some("quantize") => cmd_quantize(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("prob") => cmd_prob(),
+        Some("tune") => cmd_tune(&args),
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown subcommand '{other}' (try: quantize simulate serve tune prob info)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
+         usage: swis <quantize|simulate|serve|prob|info> [options]\n\
+         see README.md for the full option list"
+    );
+}
+
+fn pe_kind(s: &str) -> Result<PeKind> {
+    Ok(match s {
+        "ss" | "single" => PeKind::SingleShift,
+        "ds" | "double" => PeKind::DoubleShift,
+        "fixed" | "fx" => PeKind::Fixed,
+        _ => bail!("--pe expects ss|ds|fixed, got '{s}'"),
+    })
+}
+
+fn scheme_of(s: &str, shifts: f64) -> Result<ExecScheme> {
+    Ok(match s {
+        "swis" => ExecScheme::swis(shifts),
+        "swis_c" | "swisc" => ExecScheme::swis_c(shifts),
+        "wgt_trunc" | "wgt" => ExecScheme::new(SchemeKind::WgtTrunc, shifts),
+        "act_trunc" | "act" => ExecScheme::new(SchemeKind::ActTrunc, shifts),
+        "fixed8" | "fx8" => ExecScheme::new(SchemeKind::Fixed8, 8.0),
+        "bitfusion" | "bf" => ExecScheme::new(SchemeKind::BitFusion4x8, 4.0),
+        _ => bail!("--scheme expects swis|swis_c|wgt_trunc|act_trunc|fixed8|bitfusion"),
+    })
+}
+
+fn cmd_quantize(args: &cli::Args) -> Result<()> {
+    let net_name = args.get_or("net", "resnet18");
+    let net = by_name(net_name).with_context(|| format!("unknown network '{net_name}'"))?;
+    let shifts = args.get_f64("shifts", 3.0)?;
+    let group = args.get_usize("group", 4)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    // --save DIR writes one bit-packed .swis container per layer
+    let save_dir = args.get("save").map(std::path::PathBuf::from);
+    if let Some(d) = &save_dir {
+        std::fs::create_dir_all(d)?;
+    }
+
+    println!(
+        "# SWIS quantization report — {} (shifts={shifts}, group={group})",
+        net.name
+    );
+    println!(
+        "{:<22} {:>10} {:>12} {:>12} {:>12} {:>9}",
+        "layer", "weights", "rmse(SWIS)", "rmse(SWIS-C)", "rmse(trunc)", "compr."
+    );
+    for layer in &net.layers {
+        let w = surrogate_weights(layer, seed);
+        let shape = layer.weight_shape();
+        let ps = quantize_or_schedule(&w, &shape, shifts, group, false, swis::quant::Alpha::ONE)?;
+        let pc = quantize_or_schedule(&w, &shape, shifts, group, true, swis::quant::Alpha::ONE)?;
+        let es = rmse(&w, &ps.to_f64());
+        let ec = rmse(&w, &pc.to_f64());
+        let et = rmse(&w, &truncate_weights(&w, shifts.round() as usize));
+        println!(
+            "{:<22} {:>10} {:>12.5} {:>12.5} {:>12.5} {:>8.2}x",
+            layer.name,
+            layer.n_weights(),
+            es,
+            ec,
+            et,
+            ps.compression_ratio()
+        );
+        if let Some(d) = &save_dir {
+            let bytes = swis::quant::serialize::to_bytes(&ps)?;
+            let path = d.join(format!("{}.swis", layer.name.replace('/', "_")));
+            std::fs::write(&path, &bytes)?;
+        }
+    }
+    if let Some(d) = &save_dir {
+        println!("wrote packed .swis containers to {}", d.display());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    let net_name = args.get_or("net", "resnet18");
+    let mut net = by_name(net_name).with_context(|| format!("unknown network '{net_name}'"))?;
+    if args.flag("fc") {
+        net = net.with_fc(); // include FC heads (paper future-work ext.)
+    }
+    let shifts = args.get_f64("shifts", 3.0)?;
+    let scheme = scheme_of(args.get_or("scheme", "swis"), shifts)?;
+    let kind = pe_kind(args.get_or("pe", "ss"))?;
+    let mut cfg = ArrayConfig::paper_baseline(kind);
+    cfg.rows = args.get_usize("rows", 8)?;
+    cfg.cols = args.get_usize("cols", 8)?;
+    cfg.group_size = args.get_usize("group", 4)?;
+    if args.flag("naive") {
+        cfg.staggered = false;
+    }
+
+    let sim = simulate_network(&net, &cfg, &scheme);
+    println!(
+        "# simulate — {} on {}x{} {:?} (G={}, {})",
+        net.name, cfg.rows, cfg.cols, kind, cfg.group_size, sim.scheme
+    );
+    if args.flag("layers") {
+        println!(
+            "{:<22} {:>12} {:>8} {:>12} {:>12}",
+            "layer", "cycles", "util", "dram B", "energy uJ"
+        );
+        for l in &sim.layers {
+            println!(
+                "{:<22} {:>12.0} {:>7.1}% {:>12.0} {:>12.2}",
+                l.name,
+                l.cycles,
+                l.utilization * 100.0,
+                l.traffic.dram_total(),
+                l.total_pj() / 1e6
+            );
+        }
+    }
+    println!("total cycles     : {:.3e}", sim.total_cycles);
+    println!("latency          : {:.3} ms", sim.latency_s() * 1e3);
+    println!("frames/s         : {:.1}", sim.frames_per_s());
+    println!("frames/J         : {:.1}", sim.frames_per_j());
+    println!("DRAM bytes/frame : {:.3e}", sim.dram_bytes());
+    println!("area estimate    : {:.2} mm2", cfg.area_mm2());
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let n_req = args.get_usize("requests", 128)?;
+    let variants: Vec<VariantSpec> = args
+        .get_or("variants", "fp32,swis@3")
+        .split(',')
+        .map(VariantSpec::parse)
+        .collect::<Result<_>>()?;
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 64)?,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
+    };
+    let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
+
+    println!("# serve — starting coordinator ({} variants)", names.len());
+    let coord = Coordinator::start(Path::new(dir), policy, variants)?;
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::with_capacity(n_req);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        let image: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f64() as f32).collect();
+        let variant = names[i % names.len()].clone();
+        rxs.push(coord.submit(InferRequest { image, variant })?);
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics.snapshot();
+    println!("requests         : {ok}/{n_req} ok in {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("throughput       : {:.0} req/s", n_req as f64 / wall.as_secs_f64());
+    println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch);
+    println!("queue p50        : {:.0} us", snap.queue_us.p50);
+    println!("total p50 / p99  : {:.0} / {:.0} us", snap.p50_total_us, snap.p99_total_us);
+    coord.shutdown()?;
+    Ok(())
+}
+
+/// Sweep the MSE++ alpha coefficient for a network (paper Sec. 4.1.2).
+fn cmd_tune(args: &cli::Args) -> Result<()> {
+    use swis::quant::alpha_tune::{tune_alpha, DEFAULT_GRID};
+    use swis::quant::QuantConfig;
+    let net_name = args.get_or("net", "resnet18");
+    let net = by_name(net_name).with_context(|| format!("unknown network '{net_name}'"))?;
+    let shifts = args.get_usize("shifts", 3)?;
+    let group = args.get_usize("group", 4)?;
+    let layer = &net.layers[net.layers.len() / 2];
+    let w = surrogate_weights(layer, args.get_usize("seed", 1)? as u64);
+    let cfg = QuantConfig::swis(shifts, group);
+    let (best, scores) = tune_alpha(&w, &layer.weight_shape(), &cfg, DEFAULT_GRID)?;
+    println!("# MSE++ alpha sweep — {} {} ({} shifts, G={})", net.name, layer.name, shifts, group);
+    println!("{:>7} {:>10} {:>12} {:>12}", "alpha", "rmse", "|drift|", "objective");
+    for s in &scores {
+        let mark = if s.alpha == best { " <= best" } else { "" };
+        println!("{:>7} {:>10.5} {:>12.3e} {:>12.5}{mark}", s.alpha, s.rmse, s.drift, s.objective());
+    }
+    Ok(())
+}
+
+fn cmd_prob() -> Result<()> {
+    println!("# Fig. 2 — P(lossless) of an 8-bit value vs number of shifts");
+    println!("{:>7} {:>12} {:>12} {:>12}", "shifts", "layer-wise", "SWIS-C", "SWIS");
+    for r in fig2_rows() {
+        println!(
+            "{:>7} {:>12.4} {:>12.4} {:>12.4}",
+            r.n_shifts, r.layerwise, r.swis_c, r.swis
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("# model zoo");
+    for net in all_networks() {
+        println!(
+            "{:<16} {:>3} conv layers {:>12} weights {:>8.2} GMAC",
+            net.name,
+            net.layers.len(),
+            net.total_weights(),
+            net.total_macs() as f64 / 1e9
+        );
+    }
+    println!("\n# paper-baseline accelerator");
+    for kind in [PeKind::Fixed, PeKind::SingleShift, PeKind::DoubleShift] {
+        let cfg = ArrayConfig::paper_baseline(kind);
+        println!(
+            "{:?}: 8x8, G=4, 64+64+16 KB SRAM, area ~{:.2} mm2",
+            kind,
+            cfg.area_mm2()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn quantize_and_simulate_run() {
+        run(&sv(&["quantize", "--net", "tinycnn", "--shifts", "3"])).unwrap();
+        run(&sv(&["simulate", "--net", "tinycnn", "--scheme", "swis_c", "--pe", "ds"])).unwrap();
+        run(&sv(&["prob"])).unwrap();
+        run(&sv(&["info"])).unwrap();
+        run(&sv(&["tune", "--net", "tinycnn", "--shifts", "2"])).unwrap();
+    }
+
+    #[test]
+    fn serve_smoke() {
+        // end-to-end through the CLI path (artifacts built by `make
+        // artifacts`; cargo test runs at the package root)
+        run(&sv(&[
+            "serve", "--requests", "8", "--variants", "fp32,swis@2", "--max-wait-ms", "1",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_inputs_error() {
+        assert!(run(&sv(&["bogus"])).is_err());
+        assert!(run(&sv(&["simulate", "--net", "nope"])).is_err());
+        assert!(run(&sv(&["simulate", "--pe", "warp"])).is_err());
+        assert!(run(&sv(&["simulate", "--scheme", "int4"])).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! MobileNet-v2 (ImageNet) conv-layer table [Sandler et al., CVPR 2018].
+//!
+//! 52 convolutions: the 3x3 stem, 17 inverted-residual bottlenecks
+//! (expand 1x1 -> depthwise 3x3 -> project 1x1; the first bottleneck has
+//! expansion t=1 and drops the expand conv), and the final 1x1 conv to
+//! 1280 channels. Depthwise layers are tagged [`ConvKind::Depthwise`] so
+//! the simulator models the paper's PE underutilization (Sec. 3.2).
+
+use super::{ConvLayer, Network};
+
+pub fn mobilenet_v2() -> Network {
+    let mut layers = vec![ConvLayer::new("stem", 224, 3, 3, 2, 1, 32)];
+    // (expansion t, out channels c, repeats n, first stride s)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut hw = 112usize;
+    let mut cin = 32usize;
+    let mut b = 0usize;
+    for &(t, c, n, s) in &cfg {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let hidden = cin * t;
+            if t != 1 {
+                layers.push(ConvLayer::new(
+                    &format!("block{b}.expand"),
+                    hw,
+                    cin,
+                    1,
+                    1,
+                    0,
+                    hidden,
+                ));
+            }
+            layers.push(ConvLayer::depthwise(
+                &format!("block{b}.dw"),
+                hw,
+                hidden,
+                3,
+                stride,
+                1,
+            ));
+            hw /= stride;
+            layers.push(ConvLayer::new(
+                &format!("block{b}.project"),
+                hw,
+                hidden,
+                1,
+                1,
+                0,
+                c,
+            ));
+            cin = c;
+            b += 1;
+        }
+    }
+    layers.push(ConvLayer::new("head", hw, cin, 1, 1, 0, 1280));
+    Network { name: "mobilenet_v2".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::ConvKind;
+
+    #[test]
+    fn layer_count() {
+        let net = mobilenet_v2();
+        // stem + 17 blocks (16 with expand = 3 convs, 1 without = 2) + head
+        assert_eq!(net.layers.len(), 1 + 16 * 3 + 2 + 1);
+        let dw = net.layers.iter().filter(|l| l.kind == ConvKind::Depthwise).count();
+        assert_eq!(dw, 17);
+    }
+
+    #[test]
+    fn conv_weights_match_published() {
+        // torchvision mobilenet_v2 conv params (features, no bn/fc): ~2.22M
+        let w = mobilenet_v2().total_weights();
+        assert!((2_100_000..2_300_000).contains(&w), "weights = {w}");
+    }
+
+    #[test]
+    fn macs_match_published() {
+        // ~0.30 GMAC conv for MobileNet-v2 @224
+        let g = mobilenet_v2().total_macs() as f64 / 1e9;
+        assert!((0.27..0.33).contains(&g), "GMACs = {g}");
+    }
+
+    #[test]
+    fn geometry_spot_checks() {
+        let net = mobilenet_v2();
+        let l = net.layer("block0.dw").unwrap(); // t=1 block: hidden = 32
+        assert_eq!(l.in_c, 32);
+        assert_eq!(l.in_hw, 112);
+        let head = net.layer("head").unwrap();
+        assert_eq!(head.in_hw, 7);
+        assert_eq!(head.in_c, 320);
+        // first point-wise conv the paper's Table 1 profiles: block0.project
+        let pw = net.layer("block0.project").unwrap();
+        assert_eq!(pw.weight_shape(), [16, 32]);
+    }
+}

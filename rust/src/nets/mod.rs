@@ -1,0 +1,250 @@
+//! Network model zoo (paper Sec. 5): exact conv-layer shape tables for
+//! the three benchmark networks — ResNet-18 and MobileNet-v2 on ImageNet,
+//! VGG-16 on CIFAR-100 — plus the TinyCNN accuracy proxy trained at build
+//! time (DESIGN.md §4 substitutions).
+//!
+//! The paper evaluates performance only on convolutional layers ("they
+//! dominate overall performance and latency", Sec. 5); the tables here
+//! carry everything the simulator and compression model need: ifmap
+//! geometry, kernel geometry, stride, and whether the layer is depthwise
+//! (MobileNet-v2), which the SWIS systolic array underutilizes (Sec. 3.2).
+
+mod resnet18;
+mod mobilenet_v2;
+mod surrogate;
+mod tinycnn;
+mod vgg16;
+
+pub use mobilenet_v2::mobilenet_v2;
+pub use resnet18::resnet18;
+pub use surrogate::{surrogate_weights, SIGMA_SCALE};
+pub use tinycnn::tinycnn;
+pub use vgg16::vgg16_cifar100;
+
+/// Convolution flavor — affects systolic-array mapping and PE utilization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvKind {
+    /// Standard dense convolution (incl. 1x1 point-wise).
+    Standard,
+    /// Depthwise: one input channel per filter; the group-wise SWIS PE
+    /// runs underutilized (paper Sec. 3.2).
+    Depthwise,
+}
+
+/// One convolutional layer's geometry.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub name: String,
+    pub kind: ConvKind,
+    /// Input feature-map height/width (square maps; all three networks
+    /// use square inputs) and channels.
+    pub in_hw: usize,
+    pub in_c: usize,
+    /// Kernel height/width (square kernels throughout).
+    pub k: usize,
+    pub stride: usize,
+    /// SAME-style padding per side.
+    pub pad: usize,
+    pub out_c: usize,
+}
+
+impl ConvLayer {
+    pub fn new(
+        name: &str,
+        in_hw: usize,
+        in_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        out_c: usize,
+    ) -> ConvLayer {
+        ConvLayer {
+            name: name.to_string(),
+            kind: ConvKind::Standard,
+            in_hw,
+            in_c,
+            k,
+            stride,
+            pad,
+            out_c,
+        }
+    }
+
+    /// Fully-connected layer mapped onto the array as a 1x1 convolution
+    /// over a 1x1 feature map (the paper leaves FC optimization to future
+    /// work, Sec. 6; this is the natural OS mapping — one output pixel,
+    /// filters = output neurons, fan-in = input neurons).
+    pub fn fc(name: &str, din: usize, dout: usize) -> ConvLayer {
+        ConvLayer {
+            name: name.to_string(),
+            kind: ConvKind::Standard,
+            in_hw: 1,
+            in_c: din,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            out_c: dout,
+        }
+    }
+
+    pub fn depthwise(name: &str, in_hw: usize, c: usize, k: usize, stride: usize, pad: usize) -> ConvLayer {
+        ConvLayer {
+            name: name.to_string(),
+            kind: ConvKind::Depthwise,
+            in_hw,
+            in_c: c,
+            k,
+            stride,
+            pad,
+            out_c: c,
+        }
+    }
+
+    /// Output feature-map height/width.
+    pub fn out_hw(&self) -> usize {
+        (self.in_hw + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Weights in the layer.
+    pub fn n_weights(&self) -> usize {
+        match self.kind {
+            ConvKind::Standard => self.k * self.k * self.in_c * self.out_c,
+            ConvKind::Depthwise => self.k * self.k * self.out_c,
+        }
+    }
+
+    /// Per-filter fan-in (the contraction length a PE group reduces over).
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            ConvKind::Standard => self.k * self.k * self.in_c,
+            ConvKind::Depthwise => self.k * self.k,
+        }
+    }
+
+    /// Filters-first weight shape `[K, fan_in]` as consumed by the
+    /// quantizer ([`crate::quant::quantize`]).
+    pub fn weight_shape(&self) -> [usize; 2] {
+        [self.out_c, self.fan_in()]
+    }
+
+    /// Input activations (elements).
+    pub fn n_input_acts(&self) -> usize {
+        self.in_hw * self.in_hw * self.in_c
+    }
+
+    /// Output activations (elements).
+    pub fn n_output_acts(&self) -> usize {
+        let o = self.out_hw();
+        o * o * self.out_c
+    }
+
+    /// Multiply-accumulates to compute the layer.
+    pub fn macs(&self) -> u64 {
+        let o = self.out_hw() as u64;
+        o * o * self.out_c as u64 * self.fan_in() as u64
+    }
+}
+
+/// A network is a named list of conv layers (FC layers excluded from the
+/// default tables, matching the paper's evaluation scope; use
+/// [`Network::with_fc`] to append them for the future-work extension).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    /// Append the network's FC head(s) for the FC-extension experiments.
+    pub fn with_fc(mut self) -> Network {
+        let fcs: &[(&str, usize, usize)] = match self.name.as_str() {
+            "resnet18" => &[("fc", 512, 1000)],
+            "mobilenet_v2" => &[("classifier", 1280, 1000)],
+            "vgg16_cifar100" => &[("fc1", 512, 512), ("fc2", 512, 100)],
+            "tinycnn" => &[("fc1", 128, 64), ("fc2", 64, 10)],
+            _ => &[],
+        };
+        for &(name, din, dout) in fcs {
+            self.layers.push(ConvLayer::fc(name, din, dout));
+        }
+        self
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.n_weights()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// All zoo networks, for sweep drivers.
+pub fn all_networks() -> Vec<Network> {
+    vec![resnet18(), mobilenet_v2(), vgg16_cifar100(), tinycnn()]
+}
+
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "mobilenet_v2" | "mobilenetv2" => Some(mobilenet_v2()),
+        "vgg16" | "vgg16_cifar100" => Some(vgg16_cifar100()),
+        "tinycnn" => Some(tinycnn()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        // ResNet-18 conv1: 224x224x3, 7x7/2, pad 3 -> 112x112x64
+        let l = ConvLayer::new("conv1", 224, 3, 7, 2, 3, 64);
+        assert_eq!(l.out_hw(), 112);
+        assert_eq!(l.n_weights(), 7 * 7 * 3 * 64);
+        assert_eq!(l.macs(), 112 * 112 * 64 * 7 * 7 * 3);
+    }
+
+    #[test]
+    fn depthwise_geometry() {
+        let l = ConvLayer::depthwise("dw", 56, 144, 3, 2, 1);
+        assert_eq!(l.out_hw(), 28);
+        assert_eq!(l.n_weights(), 3 * 3 * 144);
+        assert_eq!(l.fan_in(), 9);
+        assert_eq!(l.weight_shape(), [144, 9]);
+    }
+
+    #[test]
+    fn fc_maps_as_one_pixel_conv() {
+        let l = ConvLayer::fc("fc", 512, 1000);
+        assert_eq!(l.out_hw(), 1);
+        assert_eq!(l.n_weights(), 512_000);
+        assert_eq!(l.fan_in(), 512);
+        assert_eq!(l.macs(), 512_000);
+        assert_eq!(l.weight_shape(), [1000, 512]);
+    }
+
+    #[test]
+    fn with_fc_appends_heads() {
+        let net = resnet18().with_fc();
+        assert_eq!(net.layers.len(), 21);
+        assert_eq!(net.total_weights(), 11_166_912 + 512_000);
+        let v = vgg16_cifar100().with_fc();
+        assert_eq!(v.layers.len(), 15);
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        assert!(by_name("resnet18").is_some());
+        assert!(by_name("mobilenet_v2").is_some());
+        assert!(by_name("vgg16").is_some());
+        assert!(by_name("tinycnn").is_some());
+        assert!(by_name("alexnet").is_none());
+    }
+}

@@ -1,0 +1,109 @@
+//! ResNet-18 (ImageNet) conv-layer table [He et al., CVPR 2016].
+//!
+//! 20 convolutions: the 7x7 stem, four stages of two basic blocks each
+//! (3x3 convs), and the three 1x1 downsample projections. Feature-map
+//! sizes follow the standard 224x224 input with a 3x3/2 max-pool after
+//! the stem (112 -> 56).
+
+use super::{ConvLayer, Network};
+
+pub fn resnet18() -> Network {
+    let mut layers = vec![ConvLayer::new("conv1", 224, 3, 7, 2, 3, 64)];
+
+    // (stage, in_hw at stage input, cin, cout)
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (1, 56, 64, 64),
+        (2, 56, 64, 128),
+        (3, 28, 128, 256),
+        (4, 14, 256, 512),
+    ];
+    for &(s, hw, cin, cout) in &stages {
+        let downsample = cin != cout;
+        let stride = if downsample { 2 } else { 1 };
+        let hw_out = hw / stride;
+        // block 1
+        layers.push(ConvLayer::new(
+            &format!("layer{s}.0.conv1"),
+            hw,
+            cin,
+            3,
+            stride,
+            1,
+            cout,
+        ));
+        layers.push(ConvLayer::new(
+            &format!("layer{s}.0.conv2"),
+            hw_out,
+            cout,
+            3,
+            1,
+            1,
+            cout,
+        ));
+        if downsample {
+            layers.push(ConvLayer::new(
+                &format!("layer{s}.0.downsample"),
+                hw,
+                cin,
+                1,
+                2,
+                0,
+                cout,
+            ));
+        }
+        // block 2
+        layers.push(ConvLayer::new(
+            &format!("layer{s}.1.conv1"),
+            hw_out,
+            cout,
+            3,
+            1,
+            1,
+            cout,
+        ));
+        layers.push(ConvLayer::new(
+            &format!("layer{s}.1.conv2"),
+            hw_out,
+            cout,
+            3,
+            1,
+            1,
+            cout,
+        ));
+    }
+    Network { name: "resnet18".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_weights() {
+        let net = resnet18();
+        assert_eq!(net.layers.len(), 20);
+        // conv weights of torchvision resnet18 (conv layers only):
+        // 11.18M params total, 11.17M conv (fc = 512*1000 excluded, bn excluded)
+        let w = net.total_weights();
+        assert_eq!(w, 11_166_912);
+    }
+
+    #[test]
+    fn macs_match_published() {
+        // published conv-GMACs for ResNet-18 @224: ~1.81 GMAC
+        let g = resnet18().total_macs() as f64 / 1e9;
+        assert!((1.7..1.9).contains(&g), "GMACs = {g}");
+    }
+
+    #[test]
+    fn stage_geometry() {
+        let net = resnet18();
+        let l = net.layer("layer4.1.conv2").unwrap();
+        assert_eq!(l.in_hw, 7);
+        assert_eq!(l.out_hw(), 7);
+        assert_eq!(l.in_c, 512);
+        let d = net.layer("layer2.0.downsample").unwrap();
+        assert_eq!(d.out_hw(), 28);
+        assert_eq!(d.n_weights(), 64 * 128);
+    }
+}

@@ -1,0 +1,63 @@
+//! Gaussian weight surrogates (DESIGN.md §4): performance, RMSE and
+//! compression experiments depend on weight *statistics*, not identity,
+//! so trained-network layers are stood in for by He-style Gaussians with
+//! the layer's exact shape and fan-in-matched sigma. Accuracy experiments
+//! use the actually-trained TinyCNN instead.
+
+use super::ConvLayer;
+use crate::util::rng::Rng;
+
+/// Scale on the He sigma sqrt(2/fan_in); trained nets concentrate a bit
+/// below the init sigma, matching published weight histograms.
+pub const SIGMA_SCALE: f64 = 0.85;
+
+/// Draw a filters-first `[out_c, fan_in]` weight tensor for `layer`.
+/// Deterministic in (layer name, seed).
+pub fn surrogate_weights(layer: &ConvLayer, seed: u64) -> Vec<f64> {
+    let fan_in = layer.fan_in();
+    let sigma = SIGMA_SCALE * (2.0 / fan_in as f64).sqrt();
+    let tag = layer
+        .name
+        .bytes()
+        .fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed ^ tag);
+    rng.normal_vec(layer.out_c * fan_in, 0.0, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::resnet18;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let net = resnet18();
+        let l = net.layer("conv1").unwrap();
+        let a = surrogate_weights(l, 1);
+        let b = surrogate_weights(l, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), l.n_weights());
+    }
+
+    #[test]
+    fn sigma_tracks_fan_in() {
+        let net = resnet18();
+        let small = net.layer("conv1").unwrap(); // fan_in 147
+        let big = net.layer("layer4.1.conv2").unwrap(); // fan_in 4608
+        let sd = |w: &[f64]| {
+            let m = w.iter().sum::<f64>() / w.len() as f64;
+            (w.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / w.len() as f64).sqrt()
+        };
+        let ss = sd(&surrogate_weights(small, 2));
+        let sb = sd(&surrogate_weights(big, 2));
+        assert!(ss > sb * 3.0, "fan-in scaling broken: {ss} vs {sb}");
+    }
+
+    #[test]
+    fn different_layers_differ() {
+        let net = resnet18();
+        let a = surrogate_weights(net.layer("layer1.0.conv1").unwrap(), 1);
+        let b = surrogate_weights(net.layer("layer1.0.conv2").unwrap(), 1);
+        assert_ne!(a[..8], b[..8]);
+    }
+}

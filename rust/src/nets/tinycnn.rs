@@ -1,0 +1,47 @@
+//! TinyCNN — the accuracy-proxy network (DESIGN.md §4): the same
+//! 6-conv VGG-style graph `python/compile/model.py` trains on synth-CIFAR
+//! at build time. Shapes must stay in lock-step with `CONV_SPECS` there;
+//! the golden test cross-checks via artifacts/manifest.json.
+
+use super::{ConvLayer, Network};
+
+/// (name, cin, cout, stride) mirroring python/compile/model.py CONV_SPECS.
+pub const TINYCNN_SPECS: [(&str, usize, usize, usize); 6] = [
+    ("conv1", 3, 32, 1),
+    ("conv2", 32, 32, 2),
+    ("conv3", 32, 64, 1),
+    ("conv4", 64, 64, 2),
+    ("conv5", 64, 128, 1),
+    ("conv6", 128, 128, 2),
+];
+
+pub fn tinycnn() -> Network {
+    let mut layers = Vec::new();
+    let mut hw = 32usize;
+    for &(name, cin, cout, stride) in &TINYCNN_SPECS {
+        layers.push(ConvLayer::new(name, hw, cin, 3, stride, 1, cout));
+        hw = hw.div_ceil(stride);
+    }
+    Network { name: "tinycnn".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_convs_small() {
+        let net = tinycnn();
+        assert_eq!(net.layers.len(), 6);
+        let w = net.total_weights();
+        // 3x3 convs: 864 + 9216 + 18432 + 36864 + 73728 + 147456
+        assert_eq!(w, 286_560);
+    }
+
+    #[test]
+    fn map_sizes() {
+        let net = tinycnn();
+        assert_eq!(net.layer("conv2").unwrap().out_hw(), 16);
+        assert_eq!(net.layer("conv6").unwrap().out_hw(), 4);
+    }
+}

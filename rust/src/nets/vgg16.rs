@@ -1,0 +1,57 @@
+//! VGG-16 adjusted for CIFAR-100 (paper Sec. 5: "the network structure is
+//! adjusted slightly to fit CIFAR-100"): the standard 13-conv 3x3 stack
+//! on a 32x32 input, max-pools after each stage halving the map.
+
+use super::{ConvLayer, Network};
+
+pub fn vgg16_cifar100() -> Network {
+    // (filters per stage, convs per stage)
+    let cfg: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut layers = Vec::new();
+    let mut hw = 32usize;
+    let mut cin = 3usize;
+    for (stage, &(cout, reps)) in cfg.iter().enumerate() {
+        for r in 0..reps {
+            layers.push(ConvLayer::new(
+                &format!("conv{}_{}", stage + 1, r + 1),
+                hw,
+                cin,
+                3,
+                1,
+                1,
+                cout,
+            ));
+            cin = cout;
+        }
+        hw /= 2; // max-pool 2x2/2
+    }
+    Network { name: "vgg16_cifar100".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_convs() {
+        let net = vgg16_cifar100();
+        assert_eq!(net.layers.len(), 13);
+        // standard VGG-16 conv weights: 14.71M
+        assert_eq!(net.total_weights(), 14_710_464);
+    }
+
+    #[test]
+    fn map_sizes_halve() {
+        let net = vgg16_cifar100();
+        assert_eq!(net.layer("conv1_1").unwrap().in_hw, 32);
+        assert_eq!(net.layer("conv3_1").unwrap().in_hw, 8);
+        assert_eq!(net.layer("conv5_3").unwrap().in_hw, 2);
+    }
+
+    #[test]
+    fn cifar_macs() {
+        // VGG-16 @32x32 is ~0.33 GMAC on conv layers
+        let g = vgg16_cifar100().total_macs() as f64 / 1e9;
+        assert!((0.25..0.40).contains(&g), "GMACs = {g}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Per-network MSE++ coefficient tuning (paper Sec. 4.1.2: "we also
+//! added a coefficient to the signed error term to allow us to fine-tune
+//! its contribution for each network").
+//!
+//! The offline tuner sweeps alpha over a small grid and picks the value
+//! minimizing a proxy objective on the layer's weights. RMSE alone is
+//! blind to alpha by construction (alpha trades absolute error for drift
+//! control), so the objective combines reconstruction RMSE with the
+//! group-level signed drift that MSE++ exists to suppress.
+
+use anyhow::Result;
+
+use super::metrics::Alpha;
+use super::swis::{quantize, QuantConfig};
+
+/// The default sweep grid (paper: alpha = 1 when tuning is impractical).
+pub const DEFAULT_GRID: &[f64] = &[0.0, 0.5, 1.0, 2.0, 4.0];
+
+/// Tuning objective for one candidate alpha.
+#[derive(Clone, Copy, Debug)]
+pub struct AlphaScore {
+    pub alpha: f64,
+    /// Reconstruction RMSE over the layer.
+    pub rmse: f64,
+    /// Mean |group drift|: |sum of signed errors| per group, averaged.
+    pub drift: f64,
+}
+
+impl AlphaScore {
+    /// Combined objective: RMSE plus drift weighted to the same scale.
+    /// Drift matters because MAC outputs sum per-group errors (Sec.
+    /// 4.1.2's motivation); lambda = 1 keeps both in weight units.
+    pub fn objective(&self) -> f64 {
+        self.rmse + self.drift
+    }
+}
+
+/// Score one alpha on a filters-first weight tensor.
+pub fn score_alpha(w: &[f64], shape: &[usize], cfg: &QuantConfig, alpha: f64) -> Result<AlphaScore> {
+    let mut c = *cfg;
+    c.alpha = Alpha::from_f64(alpha);
+    let p = quantize(w, shape, &c)?;
+    let deq = p.to_f64();
+    let n = w.len() as f64;
+    let rmse = (w
+        .iter()
+        .zip(&deq)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / n)
+        .sqrt();
+    // Group-level signed drift, in the magnitude domain the selector
+    // scores (sign-factored: sign*(w - deq) = scale * (mag - qmag), so
+    // this is exactly the SignedError of Eq. 11 as implemented by the
+    // quantizer and its Python golden twin).
+    let gs = p.group_size;
+    let fan_in = p.fan_in();
+    let gpf = p.groups_per_filter();
+    let mut drift = 0.0;
+    let mut groups = 0usize;
+    for f in 0..p.n_filters() {
+        for gl in 0..gpf {
+            let mut d = 0.0;
+            for i in 0..gs {
+                let c = gl * gs + i;
+                if c >= fan_in {
+                    break;
+                }
+                let idx = f * fan_in + c;
+                let sign = p.signs[(f * gpf + gl) * gs + i] as f64;
+                d += sign * (w[idx] - deq[idx]);
+            }
+            drift += d.abs();
+            groups += 1;
+        }
+    }
+    Ok(AlphaScore { alpha, rmse, drift: drift / groups as f64 })
+}
+
+/// Sweep `grid` and return every score plus the argmin of the combined
+/// objective — the per-network alpha the paper fine-tunes.
+pub fn tune_alpha(
+    w: &[f64],
+    shape: &[usize],
+    cfg: &QuantConfig,
+    grid: &[f64],
+) -> Result<(f64, Vec<AlphaScore>)> {
+    let scores: Vec<AlphaScore> = grid
+        .iter()
+        .map(|&a| score_alpha(w, shape, cfg, a))
+        .collect::<Result<_>>()?;
+    let best = scores
+        .iter()
+        .min_by(|a, b| a.objective().partial_cmp(&b.objective()).unwrap())
+        .map(|s| s.alpha)
+        .unwrap_or(1.0);
+    Ok((best, scores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn weights(seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        // mildly skewed weights so signed drift is non-trivial
+        (0..16 * 64)
+            .map(|_| rng.normal_ms(0.003, 0.05))
+            .collect()
+    }
+
+    #[test]
+    fn sweep_returns_grid_scores() {
+        let w = weights(1);
+        let cfg = QuantConfig::swis(2, 4);
+        let (best, scores) = tune_alpha(&w, &[16, 64], &cfg, DEFAULT_GRID).unwrap();
+        assert_eq!(scores.len(), DEFAULT_GRID.len());
+        assert!(DEFAULT_GRID.contains(&best));
+    }
+
+    #[test]
+    fn alpha_trades_rmse_for_drift() {
+        // raising alpha must not increase drift; pure MSE (alpha 0) must
+        // have the lowest RMSE (it optimizes exactly that)
+        let w = weights(2);
+        let cfg = QuantConfig::swis(2, 4);
+        let s0 = score_alpha(&w, &[16, 64], &cfg, 0.0).unwrap();
+        let s4 = score_alpha(&w, &[16, 64], &cfg, 4.0).unwrap();
+        assert!(s0.rmse <= s4.rmse + 1e-12, "alpha=0 should minimize RMSE");
+        assert!(s4.drift <= s0.drift + 1e-12, "alpha=4 should minimize drift");
+    }
+
+    #[test]
+    fn objective_finite_and_positive() {
+        let w = weights(3);
+        let cfg = QuantConfig::swis(3, 4);
+        for &a in DEFAULT_GRID {
+            let s = score_alpha(&w, &[16, 64], &cfg, a).unwrap();
+            assert!(s.objective().is_finite() && s.objective() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Symmetric int8 pre-quantization (sign-magnitude, B = 8, |q| <= 127).
+//!
+//! This is the underlying 8-bit representation SWIS decomposes (paper
+//! Eq. 2). Conventions are shared bit-for-bit with
+//! `python/compile/swis_quant.py::to_int8` (cross-checked by goldens):
+//! scale = max|w| / 127, round HALF-TO-EVEN (numpy's `np.round`), zero
+//! weights carry sign +1.
+
+pub const BITS: u32 = 8;
+pub const MAG_MAX: i64 = 127;
+
+/// Round half to even (banker's rounding), matching `np.round`.
+#[inline]
+pub fn round_half_even(x: f64) -> f64 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // exactly .5 -> round to even neighbor
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// int8 view of a float layer: magnitudes in [0,127], signs in {-1,+1}.
+#[derive(Clone, Debug)]
+pub struct Int8Layer {
+    pub mags: Vec<u8>,
+    pub signs: Vec<i8>,
+    pub scale: f64,
+}
+
+impl Int8Layer {
+    pub fn from_f64(w: &[f64]) -> Int8Layer {
+        let amax = w.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let scale = if amax > 0.0 { amax / MAG_MAX as f64 } else { 1.0 };
+        let mut mags = Vec::with_capacity(w.len());
+        let mut signs = Vec::with_capacity(w.len());
+        for &x in w {
+            let q = round_half_even(x / scale).clamp(-(MAG_MAX as f64), MAG_MAX as f64)
+                as i64;
+            signs.push(if q < 0 { -1 } else { 1 });
+            mags.push(q.unsigned_abs() as u8);
+        }
+        Int8Layer { mags, signs, scale }
+    }
+
+    /// Dequantize back to floats.
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.mags
+            .iter()
+            .zip(&self.signs)
+            .map(|(&m, &s)| m as f64 * s as f64 * self.scale)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        // np.round semantics
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4999), 1.0);
+        assert_eq!(round_half_even(1.5001), 2.0);
+    }
+
+    #[test]
+    fn scale_maps_max_to_127() {
+        let l = Int8Layer::from_f64(&[0.5, -1.0, 0.25]);
+        assert_eq!(l.mags, vec![64, 127, 32]);
+        assert_eq!(l.signs, vec![1, -1, 1]);
+        assert!((l.scale - 1.0 / 127.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_layer_uses_unit_scale() {
+        let l = Int8Layer::from_f64(&[0.0, 0.0]);
+        assert_eq!(l.scale, 1.0);
+        assert_eq!(l.mags, vec![0, 0]);
+        assert_eq!(l.signs, vec![1, 1]);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let w: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) / 37.0).collect();
+        let l = Int8Layer::from_f64(&w);
+        let r = l.to_f64();
+        for (a, b) in w.iter().zip(&r) {
+            assert!((a - b).abs() <= l.scale * 0.5 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Error metrics: MSE, RMSE, and the paper's MSE++ (Eq. 11/12).
+//!
+//! Combo selection compares MSE++ in EXACT integer arithmetic: the errors
+//! are int magnitudes (<= 255), alpha is a rational num/den, so the score
+//! `den*sum(e^2) + num*(sum e)^2` fits comfortably in i64 for any group
+//! size we use and is bit-identical across Rust and numpy.
+
+/// Rational MSE++ coefficient alpha = num/den (default 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Alpha {
+    pub num: i64,
+    pub den: i64,
+}
+
+impl Alpha {
+    pub const ONE: Alpha = Alpha { num: 1, den: 1 };
+
+    /// Mirror of python `_alpha_ratio`: den=100, num=round(alpha*100).
+    pub fn from_f64(alpha: f64) -> Alpha {
+        Alpha { num: (alpha * 100.0).round() as i64, den: 100 }
+    }
+
+    pub fn as_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+}
+
+/// Integer MSE++ score (numerator; the 1/N normalization is a shared
+/// constant and irrelevant for argmin): den*Σe² + num*(Σe)².
+#[inline]
+pub fn msepp_int(errs: &[i64], alpha: Alpha) -> i64 {
+    let mut se = 0i64;
+    let mut sq = 0i64;
+    for &e in errs {
+        se += e;
+        sq += e * e;
+    }
+    alpha.den * sq + alpha.num * se * se
+}
+
+/// Incremental form for hot loops: given (sum_e, sum_e2).
+#[inline]
+pub fn msepp_from_sums(sum_e: i64, sum_e2: i64, alpha: Alpha) -> i64 {
+    alpha.den * sum_e2 + alpha.num * sum_e * sum_e
+}
+
+/// Float MSE++ (Eq. 12) for reporting, normalized by group size.
+pub fn msepp(x: &[f64], xq: &[f64], alpha: f64) -> f64 {
+    assert_eq!(x.len(), xq.len());
+    let n = x.len() as f64;
+    let mut se = 0.0;
+    let mut sq = 0.0;
+    for (a, b) in x.iter().zip(xq) {
+        let e = a - b;
+        se += e;
+        sq += e * e;
+    }
+    (alpha * se * se + sq) / n
+}
+
+pub fn mse(x: &[f64], xq: &[f64]) -> f64 {
+    assert_eq!(x.len(), xq.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter()
+        .zip(xq)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+pub fn rmse(x: &[f64], xq: &[f64]) -> f64 {
+    mse(x, xq).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_one_reduces_to_mse_plus_signed() {
+        // errs [1, -1]: sum=0 -> msepp == sum of squares
+        assert_eq!(msepp_int(&[1, -1], Alpha::ONE), 2);
+        // errs [1, 1]: sum=2 -> 2 + 4 = 6
+        assert_eq!(msepp_int(&[1, 1], Alpha::ONE), 6);
+    }
+
+    #[test]
+    fn alpha_zero_is_pure_mse() {
+        let a = Alpha { num: 0, den: 1 };
+        assert_eq!(msepp_int(&[3, -2], a), 13);
+    }
+
+    #[test]
+    fn rational_alpha_matches_python() {
+        let a = Alpha::from_f64(0.5);
+        assert_eq!(a.num, 50);
+        assert_eq!(a.den, 100);
+        // den*Σe² + num*(Σe)² = 100*5 + 50*1 = 550 for errs [2,-1]... Σe=1, Σe²=5
+        assert_eq!(msepp_int(&[2, -1], a), 550);
+    }
+
+    #[test]
+    fn float_msepp_penalizes_drift() {
+        // same MSE, different drift
+        let x = [1.0, 1.0];
+        let drift = msepp(&x, &[0.9, 0.9], 1.0);
+        let balanced = msepp(&x, &[0.9, 1.1], 1.0);
+        assert!(drift > balanced);
+    }
+
+    #[test]
+    fn sums_form_matches() {
+        let errs = [3i64, -1, 2];
+        let se: i64 = errs.iter().sum();
+        let sq: i64 = errs.iter().map(|e| e * e).sum();
+        assert_eq!(
+            msepp_int(&errs, Alpha::ONE),
+            msepp_from_sums(se, sq, Alpha::ONE)
+        );
+    }
+
+    #[test]
+    fn rmse_basic() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 0.0]) - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+}

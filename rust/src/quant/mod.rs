@@ -1,0 +1,16 @@
+//! SWIS quantization core (paper Sec. 2 & 4): int8 pre-quantization,
+//! shift-subset enumeration, MSE++ scoring, packed storage format, and
+//! the truncation baselines.
+
+pub mod alpha_tune;
+pub mod combos;
+pub mod int8;
+pub mod metrics;
+pub mod packed;
+pub mod serialize;
+pub mod swis;
+pub mod truncation;
+
+pub use metrics::Alpha;
+pub use packed::PackedLayer;
+pub use swis::{quantize, QuantConfig};

@@ -1,0 +1,280 @@
+//! The packed SWIS weight format (paper Sec. 3.3): per group of
+//! `group_size` weights we store signs (1 b/weight), shift values
+//! (3 b/shift/group — or one 3 b offset for SWIS-C) and shift masks
+//! (1 b/weight/shift). This is both the storage-compression model and the
+//! operand format the simulator and the PJRT runtime consume.
+
+use anyhow::{bail, Result};
+
+/// A SWIS-quantized weight layer.
+///
+/// Grouping is row-major over the filters-first matrix `(K, fan_in)`:
+/// each filter's fan-in is split into groups of `group_size`, zero-padded
+/// at the tail (padded lanes carry sign +1). Group `g` covers filter
+/// `g / groups_per_filter`.
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    /// Original tensor shape, filters on axis 0.
+    pub shape: Vec<usize>,
+    pub group_size: usize,
+    /// Shift planes stored per group (the per-layer max when filter
+    /// scheduling assigns heterogeneous counts).
+    pub n_shifts: usize,
+    /// Dequantization scale (max|w| / 127).
+    pub scale: f64,
+    /// (n_groups, n_shifts) shift positions, ascending within a group.
+    pub shifts: Vec<u8>,
+    /// (n_groups, group_size, n_shifts) mask bits in {0,1}.
+    pub masks: Vec<u8>,
+    /// (n_groups, group_size) signs in {-1,+1}.
+    pub signs: Vec<i8>,
+    /// SWIS-C: shifts are consecutive; storage drops to one offset/group.
+    pub consecutive: bool,
+    /// Per-filter shift counts when produced by the Sec. 4.3 scheduler.
+    pub filter_shifts: Option<Vec<usize>>,
+}
+
+impl PackedLayer {
+    pub fn n_groups(&self) -> usize {
+        if self.n_shifts == 0 {
+            0
+        } else {
+            self.shifts.len() / self.n_shifts
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    pub fn n_filters(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn groups_per_filter(&self) -> usize {
+        let fi = self.fan_in();
+        fi.div_ceil(self.group_size)
+    }
+
+    /// Reconstructed integer magnitude of lane `(g, i)`.
+    #[inline]
+    pub fn mag(&self, g: usize, i: usize) -> i64 {
+        let base = (g * self.group_size + i) * self.n_shifts;
+        let srow = &self.shifts[g * self.n_shifts..(g + 1) * self.n_shifts];
+        let mrow = &self.masks[base..base + self.n_shifts];
+        let mut v = 0i64;
+        for (j, &s) in srow.iter().enumerate() {
+            v += (mrow[j] as i64) << s;
+        }
+        v
+    }
+
+    /// Dequantize to the original float shape (row-major).
+    pub fn to_f64(&self) -> Vec<f64> {
+        let k = self.n_filters();
+        let fan_in = self.fan_in();
+        let gpf = self.groups_per_filter();
+        let mut out = Vec::with_capacity(k * fan_in);
+        for f in 0..k {
+            for c in 0..fan_in {
+                let g = f * gpf + c / self.group_size;
+                let i = c % self.group_size;
+                let sign = self.signs[g * self.group_size + i] as f64;
+                out.push(self.mag(g, i) as f64 * sign * self.scale);
+            }
+        }
+        out
+    }
+
+    /// Storage bits of the packed representation (Sec. 3.3 accounting):
+    /// signs + masks + per-group shift storage (3 b/shift for SWIS, a
+    /// single 3 b offset for SWIS-C).
+    pub fn storage_bits(&self) -> u64 {
+        let g = self.n_groups() as u64;
+        let gs = self.group_size as u64;
+        let n = self.n_shifts as u64;
+        let sign_bits = g * gs;
+        let mask_bits = g * gs * n;
+        let shift_bits = if self.consecutive { 3 } else { 3 * n };
+        sign_bits + mask_bits + g * shift_bits
+    }
+
+    /// Effective bits per (unpadded) weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.storage_bits() as f64 / (self.n_filters() * self.fan_in()) as f64
+    }
+
+    /// Compression ratio vs the 8-bit baseline.
+    pub fn compression_ratio(&self) -> f64 {
+        8.0 / self.bits_per_weight()
+    }
+
+    /// Mask plane `j` as a dense (fan_in, n_filters) 0/1 matrix restricted
+    /// to groups that actually use >= j+1 shifts — the operand layout the
+    /// Pallas kernel / PJRT artifact expects (column-major filters).
+    pub fn mask_plane(&self, j: usize) -> Result<Vec<f32>> {
+        if j >= self.n_shifts {
+            bail!("plane {j} out of range (n_shifts={})", self.n_shifts);
+        }
+        let k = self.n_filters();
+        let fan_in = self.fan_in();
+        let gpf = self.groups_per_filter();
+        let mut out = vec![0f32; fan_in * k];
+        for f in 0..k {
+            for c in 0..fan_in {
+                let g = f * gpf + c / self.group_size;
+                let i = c % self.group_size;
+                out[c * k + f] = self.masks[(g * self.group_size + i) * self.n_shifts + j] as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-group shift values are non-uniform in general; uniform layers
+    /// (no scheduling) expose them as plane powers for the kernel path.
+    pub fn uniform_shifts(&self) -> Option<Vec<u8>> {
+        if self.n_groups() == 0 {
+            return None;
+        }
+        let first = &self.shifts[..self.n_shifts];
+        for g in 1..self.n_groups() {
+            if &self.shifts[g * self.n_shifts..(g + 1) * self.n_shifts] != first {
+                return None;
+            }
+        }
+        Some(first.to_vec())
+    }
+
+    /// Validate internal consistency (used by property tests and loaders).
+    pub fn validate(&self) -> Result<()> {
+        let g = self.n_groups();
+        if self.shifts.len() != g * self.n_shifts
+            || self.masks.len() != g * self.group_size * self.n_shifts
+            || self.signs.len() != g * self.group_size
+        {
+            bail!("inconsistent packed buffer lengths");
+        }
+        if g != self.n_filters() * self.groups_per_filter() {
+            bail!(
+                "group count {} does not cover shape {:?} with group_size {}",
+                g,
+                self.shape,
+                self.group_size
+            );
+        }
+        for &s in &self.shifts {
+            if s >= 8 {
+                bail!("shift value {s} out of range");
+            }
+        }
+        for &m in &self.masks {
+            if m > 1 {
+                bail!("mask bit {m} not boolean");
+            }
+        }
+        for &s in &self.signs {
+            if s != 1 && s != -1 {
+                bail!("sign {s} not in {{-1,1}}");
+            }
+        }
+        // shifts ascending within each group over the active prefix
+        for gi in 0..g {
+            let row = &self.shifts[gi * self.n_shifts..(gi + 1) * self.n_shifts];
+            let active = self.active_shifts(gi);
+            for w in row[..active].windows(2) {
+                if w[0] >= w[1] {
+                    bail!("group {gi} shifts not strictly ascending: {row:?}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of active shift planes for group `g` (scheduled layers store
+    /// trailing zero planes for filters quantized with fewer shifts).
+    pub fn active_shifts(&self, g: usize) -> usize {
+        match &self.filter_shifts {
+            None => self.n_shifts,
+            Some(fs) => fs[g / self.groups_per_filter()],
+        }
+    }
+
+    /// Effective (average) number of shifts across weights — the paper's
+    /// reporting convention for scheduled layers.
+    pub fn effective_shifts(&self) -> f64 {
+        match &self.filter_shifts {
+            None => self.n_shifts as f64,
+            Some(fs) => fs.iter().sum::<usize>() as f64 / fs.len() as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> PackedLayer {
+        // 1 filter, fan_in 2, group 2, shifts {0, 2}
+        PackedLayer {
+            shape: vec![1, 2],
+            group_size: 2,
+            n_shifts: 2,
+            scale: 1.0,
+            shifts: vec![0, 2],
+            masks: vec![1, 1, 0, 1], // lane0: 1+4=5, lane1: 0+4=4
+            signs: vec![1, -1],
+            consecutive: false,
+            filter_shifts: None,
+        }
+    }
+
+    #[test]
+    fn mag_and_dequant() {
+        let p = tiny();
+        assert_eq!(p.mag(0, 0), 5);
+        assert_eq!(p.mag(0, 1), 4);
+        assert_eq!(p.to_f64(), vec![5.0, -4.0]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let p = tiny();
+        // signs 2 + masks 4 + shifts 6 = 12 bits over 2 weights
+        assert_eq!(p.storage_bits(), 12);
+        assert!((p.bits_per_weight() - 6.0).abs() < 1e-12);
+        assert!((p.compression_ratio() - 8.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swis_c_storage_smaller() {
+        let mut p = tiny();
+        p.consecutive = true;
+        p.shifts = vec![0, 1];
+        // signs 2 + masks 4 + offset 3 = 9 bits
+        assert_eq!(p.storage_bits(), 9);
+    }
+
+    #[test]
+    fn mask_plane_layout() {
+        let p = tiny();
+        let plane0 = p.mask_plane(0).unwrap(); // (fan_in=2, k=1)
+        assert_eq!(plane0, vec![1.0, 0.0]);
+        let plane1 = p.mask_plane(1).unwrap();
+        assert_eq!(plane1, vec![1.0, 1.0]);
+        assert!(p.mask_plane(2).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_sign() {
+        let mut p = tiny();
+        p.signs[0] = 0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn uniform_shift_detection() {
+        let p = tiny();
+        assert_eq!(p.uniform_shifts(), Some(vec![0, 2]));
+    }
+}

@@ -1,0 +1,287 @@
+//! Binary `.swis` container: the packed weight format as actual
+//! bit-packed bytes — the file a deployment flashes next to the
+//! accelerator. The payload layout is exactly the Sec. 3.3 accounting
+//! ([`PackedLayer::storage_bits`]), so the measured file size *is* the
+//! compression the paper reports (plus a fixed 28-byte header and, for
+//! scheduled layers, 4 bits/filter of shift counts).
+//!
+//! Layout (bit-packed, LSB-first within bytes):
+//!   magic "SWIS"  version:u8  flags:u8  group_size:u16  n_shifts:u16
+//!   n_filters:u32 fan_in:u32  scale:f64                      (header)
+//!   signs    1 bit / lane            (n_groups * group_size)
+//!   shifts   SWIS:  3 bits / shift / group
+//!            SWIS-C: 3 bits / group (window offset)
+//!   masks    1 bit / lane / shift
+//!   [filter_shifts 4 bits / filter when flags & SCHEDULED]
+
+use anyhow::{bail, Result};
+
+use super::packed::PackedLayer;
+
+const MAGIC: &[u8; 4] = b"SWIS";
+const VERSION: u8 = 1;
+const FLAG_CONSECUTIVE: u8 = 1;
+const FLAG_SCHEDULED: u8 = 2;
+
+/// LSB-first bit writer.
+struct BitWriter {
+    bytes: Vec<u8>,
+    nbits: usize,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter { bytes: Vec::new(), nbits: 0 }
+    }
+
+    fn push(&mut self, value: u32, width: usize) {
+        for b in 0..width {
+            let bit = (value >> b) & 1;
+            if self.nbits % 8 == 0 {
+                self.bytes.push(0);
+            }
+            let byte = self.nbits / 8;
+            self.bytes[byte] |= (bit as u8) << (self.nbits % 8);
+            self.nbits += 1;
+        }
+    }
+}
+
+/// LSB-first bit reader.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> BitReader<'a> {
+        BitReader { bytes, pos: 0 }
+    }
+
+    fn pull(&mut self, width: usize) -> Result<u32> {
+        let mut v = 0u32;
+        for b in 0..width {
+            let byte = self.pos / 8;
+            if byte >= self.bytes.len() {
+                bail!("truncated .swis payload at bit {}", self.pos);
+            }
+            let bit = (self.bytes[byte] >> (self.pos % 8)) & 1;
+            v |= (bit as u32) << b;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+}
+
+/// Serialize to the binary container.
+pub fn to_bytes(p: &PackedLayer) -> Result<Vec<u8>> {
+    p.validate()?;
+    if p.shape.len() != 2 {
+        // layers are always stored filters-first 2-D (K, fan_in)
+        bail!("serialize expects a 2-D filters-first shape, got {:?}", p.shape);
+    }
+    let mut out = Vec::with_capacity(28 + p.storage_bits() as usize / 8 + 8);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    let mut flags = 0u8;
+    if p.consecutive {
+        flags |= FLAG_CONSECUTIVE;
+    }
+    if p.filter_shifts.is_some() {
+        flags |= FLAG_SCHEDULED;
+    }
+    out.push(flags);
+    out.extend_from_slice(&(p.group_size as u16).to_le_bytes());
+    out.extend_from_slice(&(p.n_shifts as u16).to_le_bytes());
+    out.extend_from_slice(&(p.n_filters() as u32).to_le_bytes());
+    out.extend_from_slice(&(p.fan_in() as u32).to_le_bytes());
+    out.extend_from_slice(&p.scale.to_le_bytes());
+
+    let g = p.n_groups();
+    let gs = p.group_size;
+    let n = p.n_shifts;
+    let mut w = BitWriter::new();
+    for &s in &p.signs {
+        w.push(if s < 0 { 1 } else { 0 }, 1);
+    }
+    if p.consecutive {
+        for gi in 0..g {
+            w.push(p.shifts[gi * n] as u32, 3); // window offset
+        }
+    } else {
+        for &s in &p.shifts {
+            w.push(s as u32, 3);
+        }
+    }
+    for &m in &p.masks {
+        w.push(m as u32, 1);
+    }
+    if let Some(fs) = &p.filter_shifts {
+        for &f in fs {
+            w.push(f as u32, 4);
+        }
+    }
+    let _ = gs;
+    out.extend_from_slice(&w.bytes);
+    Ok(out)
+}
+
+/// Deserialize from the binary container.
+pub fn from_bytes(bytes: &[u8]) -> Result<PackedLayer> {
+    if bytes.len() < 28 || &bytes[..4] != MAGIC {
+        bail!("not a .swis container");
+    }
+    if bytes[4] != VERSION {
+        bail!("unsupported .swis version {}", bytes[4]);
+    }
+    let flags = bytes[5];
+    let consecutive = flags & FLAG_CONSECUTIVE != 0;
+    let scheduled = flags & FLAG_SCHEDULED != 0;
+    let group_size = u16::from_le_bytes([bytes[6], bytes[7]]) as usize;
+    let n_shifts = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    let n_filters = u32::from_le_bytes(bytes[10..14].try_into().unwrap()) as usize;
+    let fan_in = u32::from_le_bytes(bytes[14..18].try_into().unwrap()) as usize;
+    let scale = f64::from_le_bytes(bytes[18..26].try_into().unwrap());
+    if group_size == 0 || n_shifts == 0 || n_shifts > 8 {
+        bail!("corrupt .swis header: G={group_size} N={n_shifts}");
+    }
+    let gpf = fan_in.div_ceil(group_size);
+    let g = n_filters * gpf;
+    let gs = group_size;
+    let n = n_shifts;
+
+    let mut r = BitReader::new(&bytes[26..]);
+    let mut signs = vec![1i8; g * gs];
+    for s in signs.iter_mut() {
+        if r.pull(1)? != 0 {
+            *s = -1;
+        }
+    }
+    let mut shifts = vec![0u8; g * n];
+    if consecutive {
+        for gi in 0..g {
+            let off = r.pull(3)? as u8;
+            for j in 0..n {
+                shifts[gi * n + j] = (off + j as u8).min(7);
+            }
+        }
+    } else {
+        for s in shifts.iter_mut() {
+            *s = r.pull(3)? as u8;
+        }
+    }
+    let mut masks = vec![0u8; g * gs * n];
+    for m in masks.iter_mut() {
+        *m = r.pull(1)? as u8;
+    }
+    let filter_shifts = if scheduled {
+        let mut fs = vec![0usize; n_filters];
+        for f in fs.iter_mut() {
+            *f = r.pull(4)? as usize;
+        }
+        Some(fs)
+    } else {
+        None
+    };
+    let p = PackedLayer {
+        shape: vec![n_filters, fan_in],
+        group_size,
+        n_shifts,
+        scale,
+        shifts,
+        masks,
+        signs,
+        consecutive,
+        filter_shifts,
+    };
+    p.validate()?;
+    Ok(p)
+}
+
+/// Measured payload size in bits (excluding the fixed header) — must
+/// equal [`PackedLayer::storage_bits`] for unscheduled layers.
+pub fn payload_bits(p: &PackedLayer) -> u64 {
+    let extra = p.filter_shifts.as_ref().map_or(0, |fs| 4 * fs.len() as u64);
+    p.storage_bits() + extra
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Alpha, QuantConfig};
+    use crate::schedule::quantize_or_schedule;
+    use crate::util::rng::Rng;
+
+    fn layer(seed: u64, n: usize, g: usize, consecutive: bool) -> PackedLayer {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(16 * 30, 0.0, 0.07);
+        let cfg = QuantConfig { n_shifts: n, group_size: g, alpha: Alpha::ONE, consecutive };
+        quantize(&w, &[16, 30], &cfg).unwrap()
+    }
+
+    fn assert_equal(a: &PackedLayer, b: &PackedLayer) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.shifts, b.shifts);
+        assert_eq!(a.masks, b.masks);
+        assert_eq!(a.signs, b.signs);
+        assert_eq!(a.scale, b.scale);
+        assert_eq!(a.consecutive, b.consecutive);
+        assert_eq!(a.filter_shifts, b.filter_shifts);
+    }
+
+    #[test]
+    fn roundtrip_swis_and_swis_c() {
+        for consecutive in [false, true] {
+            for (n, g) in [(2usize, 4usize), (3, 4), (4, 1), (3, 8)] {
+                let p = layer(7, n, g, consecutive);
+                let bytes = to_bytes(&p).unwrap();
+                let q = from_bytes(&bytes).unwrap();
+                assert_equal(&p, &q);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_scheduled_layer() {
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(16 * 16, 0.0, 0.05);
+        let p = quantize_or_schedule(&w, &[16, 16], 2.5, 4, false, Alpha::ONE).unwrap();
+        let q = from_bytes(&to_bytes(&p).unwrap()).unwrap();
+        assert_equal(&p, &q);
+        assert_eq!(q.effective_shifts(), 2.5);
+    }
+
+    #[test]
+    fn file_size_is_the_papers_accounting() {
+        let p = layer(9, 3, 4, false);
+        let bytes = to_bytes(&p).unwrap();
+        let payload = bytes.len() as u64 - 26;
+        assert_eq!(payload, payload_bits(&p).div_ceil(8));
+        // SWIS-C container is strictly smaller at the same (N, G)
+        let pc = layer(9, 3, 4, true);
+        assert!(to_bytes(&pc).unwrap().len() < bytes.len());
+    }
+
+    #[test]
+    fn dequant_survives_roundtrip() {
+        let p = layer(11, 3, 4, false);
+        let q = from_bytes(&to_bytes(&p).unwrap()).unwrap();
+        assert_eq!(p.to_f64(), q.to_f64());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let p = layer(13, 2, 4, false);
+        let mut bytes = to_bytes(&p).unwrap();
+        assert!(from_bytes(&bytes[..10]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err()); // bad magic
+        let mut b2 = to_bytes(&p).unwrap();
+        b2[4] = 99;
+        assert!(from_bytes(&b2).is_err()); // bad version
+        let mut b3 = to_bytes(&p).unwrap();
+        b3[8] = 9; // n_shifts = 9
+        b3[9] = 0;
+        assert!(from_bytes(&b3).is_err());
+    }
+}

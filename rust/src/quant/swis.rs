@@ -1,0 +1,382 @@
+//! The SWIS quantizer (paper Sec. 4.1): per-group enumeration over shift
+//! subsets with nearest-codebook weight quantization, scored by MSE++.
+//!
+//! Hot-path notes: for each combo we precompute a 128-entry lookup table
+//! mag -> (qmag, err, err^2), so the inner loop per (group, combo) is
+//! `group_size` table reads plus integer adds; selection over combos is a
+//! strict-less argmin, ties resolving to the earliest (lexicographic)
+//! combo — the cross-language contract with the Python reference.
+
+use anyhow::{bail, Result};
+
+use super::combos::{consecutive_combos, mask_bits, nearest, shift_combos, codebook};
+use super::int8::{Int8Layer, BITS, MAG_MAX};
+use super::metrics::{msepp_from_sums, Alpha};
+use super::packed::PackedLayer;
+
+/// Quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    pub n_shifts: usize,
+    pub group_size: usize,
+    pub alpha: Alpha,
+    /// true = SWIS-C (consecutive shift windows, offset-only storage)
+    pub consecutive: bool,
+}
+
+impl QuantConfig {
+    pub fn swis(n_shifts: usize, group_size: usize) -> Self {
+        QuantConfig { n_shifts, group_size, alpha: Alpha::ONE, consecutive: false }
+    }
+
+    pub fn swis_c(n_shifts: usize, group_size: usize) -> Self {
+        QuantConfig { n_shifts, group_size, alpha: Alpha::ONE, consecutive: true }
+    }
+
+    pub fn combos(&self) -> Vec<Vec<u8>> {
+        if self.consecutive {
+            consecutive_combos(self.n_shifts, BITS)
+        } else {
+            shift_combos(self.n_shifts, BITS)
+        }
+    }
+}
+
+/// Weight magnitudes reorganized into (n_groups, group_size) with zero
+/// padding (padded lanes sign +1), filters-first grouping.
+#[derive(Clone, Debug)]
+pub struct GroupedMags {
+    pub mags: Vec<u8>,
+    pub signs: Vec<i8>,
+    pub scale: f64,
+    pub n_filters: usize,
+    pub groups_per_filter: usize,
+    pub group_size: usize,
+}
+
+impl GroupedMags {
+    pub fn n_groups(&self) -> usize {
+        self.n_filters * self.groups_per_filter
+    }
+
+    pub fn group(&self, g: usize) -> &[u8] {
+        &self.mags[g * self.group_size..(g + 1) * self.group_size]
+    }
+}
+
+/// int8-quantize + regroup a filters-first weight tensor.
+pub fn group_mags(w: &[f64], shape: &[usize], group_size: usize) -> Result<GroupedMags> {
+    if shape.is_empty() || group_size == 0 {
+        bail!("bad shape/group_size");
+    }
+    let k = shape[0];
+    let fan_in: usize = shape[1..].iter().product();
+    if k * fan_in != w.len() {
+        bail!("shape {:?} does not match {} weights", shape, w.len());
+    }
+    let q = Int8Layer::from_f64(w);
+    let gpf = fan_in.div_ceil(group_size);
+    let padded = gpf * group_size;
+    let mut mags = vec![0u8; k * padded];
+    let mut signs = vec![1i8; k * padded];
+    for f in 0..k {
+        let src = f * fan_in;
+        let dst = f * padded;
+        mags[dst..dst + fan_in].copy_from_slice(&q.mags[src..src + fan_in]);
+        signs[dst..dst + fan_in].copy_from_slice(&q.signs[src..src + fan_in]);
+    }
+    Ok(GroupedMags {
+        mags,
+        signs,
+        scale: q.scale,
+        n_filters: k,
+        groups_per_filter: gpf,
+        group_size,
+    })
+}
+
+/// Per-combo lookup table: for every magnitude 0..=127 the nearest
+/// codebook value and its error.
+pub struct ComboLut {
+    pub combo: Vec<u8>,
+    /// qmag per magnitude
+    pub q: [u8; 129],
+    /// err = mag - qmag per magnitude (i16 fits; |err| <= 127)
+    pub e: [i16; 129],
+    /// Packed (err^2 << 12) | (err + 128): the scoring loop accumulates
+    /// one u32 add per lane, then unpacks sum_e and sum_e2. Valid for
+    /// group sizes <= 16 (low field <= 255*16 < 2^12, high <= 16129*16 <
+    /// 2^18; 12+18 <= 32).
+    pub packed: [u32; 129],
+}
+
+/// Bit position of the squared-error field in [`ComboLut::packed`].
+const PACK_SHIFT: u32 = 12;
+/// Largest group size the packed accumulator supports without overflow.
+const PACK_MAX_GS: usize = 16;
+
+pub fn build_luts(combos: &[Vec<u8>]) -> Vec<ComboLut> {
+    combos
+        .iter()
+        .map(|c| {
+            let cb = codebook(c);
+            let mut q = [0u8; 129];
+            let mut e = [0i16; 129];
+            let mut packed = [0u32; 129];
+            for m in 0..=(MAG_MAX as usize + 1) {
+                let mm = m.min(MAG_MAX as usize) as i64;
+                let nv = nearest(&cb, mm).min(255);
+                q[m] = nv as u8;
+                e[m] = (mm - nv) as i16;
+                let err = (mm - nv) as i32;
+                packed[m] = ((err * err) as u32) << PACK_SHIFT | (err + 128) as u32;
+            }
+            ComboLut { combo: c.clone(), q, e, packed }
+        })
+        .collect()
+}
+
+/// Accumulate the packed score fields over a group's lanes.
+#[inline(always)]
+fn packed_sums(lut: &ComboLut, mags: &[u8]) -> (i64, i64) {
+    let mut acc = 0u32;
+    for &m in mags {
+        acc = acc.wrapping_add(lut.packed[m as usize]);
+    }
+    let se = (acc & ((1 << PACK_SHIFT) - 1)) as i64 - 128 * mags.len() as i64;
+    let sq = (acc >> PACK_SHIFT) as i64;
+    (se, sq)
+}
+
+/// Argmin over combos for one magnitude pattern (strict-less, earliest
+/// combo wins ties — the cross-language contract).
+/// Argmin over combos for one magnitude pattern (strict-less, earliest
+/// combo wins ties — the cross-language contract).
+#[inline]
+fn best_combo(mags: &[u8], luts: &[ComboLut], alpha: Alpha) -> u32 {
+    let mut best_err = i64::MAX;
+    let mut best = 0u32;
+    if mags.len() <= PACK_MAX_GS {
+        for (ci, lut) in luts.iter().enumerate() {
+            let (se, sq) = packed_sums(lut, mags);
+            let score = msepp_from_sums(se, sq, alpha);
+            if score < best_err {
+                best_err = score;
+                best = ci as u32;
+            }
+        }
+    } else {
+        for (ci, lut) in luts.iter().enumerate() {
+            let mut se = 0i64;
+            let mut sq = 0i64;
+            for &m in mags {
+                let e = lut.e[m as usize] as i64;
+                se += e;
+                sq += e * e;
+            }
+            let score = msepp_from_sums(se, sq, alpha);
+            if score < best_err {
+                best_err = score;
+                best = ci as u32;
+            }
+        }
+    }
+    best
+}
+
+/// Select the best combo per group. Returns (combo index, per-lane qmags).
+pub fn select_groups(
+    gm: &GroupedMags,
+    luts: &[ComboLut],
+    alpha: Alpha,
+) -> (Vec<u32>, Vec<u8>) {
+    let n_groups = gm.n_groups();
+    let gs = gm.group_size;
+    let mut best_idx = vec![0u32; n_groups];
+    let mut best_q = vec![0u8; n_groups * gs];
+    for g in 0..n_groups {
+        let mags = gm.group(g);
+        let best = best_combo(mags, luts, alpha);
+        best_idx[g] = best;
+        let lut = &luts[best as usize];
+        for (i, &m) in mags.iter().enumerate() {
+            best_q[g * gs + i] = lut.q[m as usize];
+        }
+    }
+    (best_idx, best_q)
+}
+
+/// Quantize a filters-first weight tensor with SWIS or SWIS-C.
+pub fn quantize(w: &[f64], shape: &[usize], cfg: &QuantConfig) -> Result<PackedLayer> {
+    if cfg.n_shifts == 0 || cfg.n_shifts > BITS as usize {
+        bail!("n_shifts must be in [1,8], got {}", cfg.n_shifts);
+    }
+    let gm = group_mags(w, shape, cfg.group_size)?;
+    let combos = cfg.combos();
+    let luts = build_luts(&combos);
+    let (best_idx, best_q) = select_groups(&gm, &luts, cfg.alpha);
+    Ok(pack(&gm, &combos, &best_idx, &best_q, shape, cfg, None))
+}
+
+/// Pack selection results into the storage format.
+pub(crate) fn pack(
+    gm: &GroupedMags,
+    combos: &[Vec<u8>],
+    best_idx: &[u32],
+    best_q: &[u8],
+    shape: &[usize],
+    cfg: &QuantConfig,
+    filter_shifts: Option<Vec<usize>>,
+) -> PackedLayer {
+    let n_groups = gm.n_groups();
+    let gs = gm.group_size;
+    let n = cfg.n_shifts;
+    let mut shifts = vec![0u8; n_groups * n];
+    let mut masks = vec![0u8; n_groups * gs * n];
+    for g in 0..n_groups {
+        let combo = &combos[best_idx[g] as usize];
+        shifts[g * n..g * n + combo.len()].copy_from_slice(combo);
+        for i in 0..gs {
+            let q = best_q[g * gs + i] as i64;
+            let mb = mask_bits(combo, q);
+            let base = (g * gs + i) * n;
+            masks[base..base + combo.len()].copy_from_slice(&mb);
+        }
+    }
+    PackedLayer {
+        shape: shape.to_vec(),
+        group_size: gs,
+        n_shifts: n,
+        scale: gm.scale,
+        shifts,
+        masks,
+        signs: gm.signs.clone(),
+        consecutive: cfg.consecutive,
+        filter_shifts,
+    }
+}
+
+/// Layer MSE++ (integer score summed over groups) at a given shift count —
+/// the scheduler's cost oracle. Returns per-filter sums.
+pub fn per_filter_cost(gm: &GroupedMags, n_shifts: usize, consecutive: bool, alpha: Alpha) -> Vec<i64> {
+    let combos = if consecutive {
+        consecutive_combos(n_shifts, BITS)
+    } else {
+        shift_combos(n_shifts, BITS)
+    };
+    let luts = build_luts(&combos);
+    let mut out = vec![0i64; gm.n_filters];
+    for g in 0..gm.n_groups() {
+        let mags = gm.group(g);
+        let best = luts
+            .iter()
+            .map(|lut| {
+                let (se, sq) = if mags.len() <= PACK_MAX_GS {
+                    packed_sums(lut, mags)
+                } else {
+                    let mut se = 0i64;
+                    let mut sq = 0i64;
+                    for &m in mags {
+                        let e = lut.e[m as usize] as i64;
+                        se += e;
+                        sq += e * e;
+                    }
+                    (se, sq)
+                };
+                msepp_from_sums(se, sq, alpha)
+            })
+            .min()
+            .unwrap_or(0);
+        out[g / gm.groups_per_filter] += best;
+    }
+    out
+}
+
+/// Convenience: quantize and return (packed, dequantized floats, rmse).
+pub fn quantize_with_stats(
+    w: &[f64],
+    shape: &[usize],
+    cfg: &QuantConfig,
+) -> Result<(PackedLayer, Vec<f64>, f64)> {
+    let packed = quantize(w, shape, cfg)?;
+    let deq = packed.to_f64();
+    let r = super::metrics::rmse(w, &deq);
+    Ok((packed, deq, r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_when_bits_fit() {
+        // weights scaled so int8 mags are the values themselves (max 127)
+        let w2 = vec![3.0, 65.0, 17.0, 127.0];
+        let p2 = quantize(&w2, &[4, 1], &QuantConfig::swis(2, 1)).unwrap();
+        // mags 3 (0b11), 65 (0b1000001), 17 (0b10001) have 2 set bits ->
+        // lossless at N=2; 127 (7 set bits) is lossy: nearest 2-shift value
+        // is 128 = {6,7} (|128-127| = 1).
+        assert_eq!(p2.mag(0, 0), 3);
+        assert_eq!(p2.mag(1, 0), 65);
+        assert_eq!(p2.mag(2, 0), 17);
+        assert_eq!(p2.mag(3, 0), 128);
+    }
+
+    #[test]
+    fn swis_beats_swis_c_beats_nothing() {
+        // SWIS error <= SWIS-C error on the same data (superset search)
+        let mut rng = crate::util::rng::Rng::new(11);
+        let w: Vec<f64> = (0..256).map(|_| rng.normal_ms(0.0, 0.05)).collect();
+        let shape = [8usize, 32];
+        for n in 2..=4 {
+            let ps = quantize(&w, &shape, &QuantConfig::swis(n, 4)).unwrap();
+            let pc = quantize(&w, &shape, &QuantConfig::swis_c(n, 4)).unwrap();
+            let es = super::super::metrics::rmse(&w, &ps.to_f64());
+            let ec = super::super::metrics::rmse(&w, &pc.to_f64());
+            assert!(
+                es <= ec + 1e-12,
+                "SWIS rmse {es} should be <= SWIS-C rmse {ec} at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_shifts_never_hurt() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let w: Vec<f64> = (0..128).map(|_| rng.normal_ms(0.0, 0.1)).collect();
+        let shape = [4usize, 32];
+        let mut last = f64::INFINITY;
+        for n in 1..=6 {
+            let p = quantize(&w, &shape, &QuantConfig::swis(n, 4)).unwrap();
+            let e = super::super::metrics::rmse(&w, &p.to_f64());
+            assert!(e <= last + 1e-12, "rmse increased at n={n}: {e} > {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn group_padding() {
+        let w = vec![0.5, -0.25, 0.125]; // fan_in 3, group 2 -> pad 1
+        let gm = group_mags(&w, &[1, 3], 2).unwrap();
+        assert_eq!(gm.n_groups(), 2);
+        assert_eq!(gm.group(1)[1], 0); // padded lane
+        assert_eq!(gm.signs[3], 1);
+    }
+
+    #[test]
+    fn packed_validates() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let w: Vec<f64> = (0..96).map(|_| rng.normal_ms(0.0, 0.2)).collect();
+        let p = quantize(&w, &[8, 12], &QuantConfig::swis(3, 4)).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.n_groups(), 8 * 3);
+        assert_eq!(p.effective_shifts(), 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        assert!(quantize(&[0.0], &[1, 1], &QuantConfig::swis(0, 4)).is_err());
+        assert!(quantize(&[0.0], &[1, 1], &QuantConfig::swis(9, 4)).is_err());
+        assert!(quantize(&[0.0, 0.0], &[1, 1], &QuantConfig::swis(2, 1)).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Layer-wise truncation baselines (paper Sec. 2.3 / 5): the conventional
+//! quantization SWIS is compared against.
+//!
+//! * Weight truncation + clipping: keep the top `n` of the 8 magnitude
+//!   bits (round-to-nearest at the dropped boundary, clip to 127) — i.e. a
+//!   single layer-wide consecutive window anchored at the MSB.
+//! * Activation truncation: zero the low `8-n` bits of the unsigned 8-bit
+//!   activation code (as Stripes-style accelerators do at runtime).
+
+use super::int8::{Int8Layer, BITS, MAG_MAX};
+
+/// Layer-wise weight truncation + clipping to `n_bits` (1..=8).
+/// Returns dequantized floats (same shape/order as input).
+pub fn truncate_weights(w: &[f64], n_bits: usize) -> Vec<f64> {
+    assert!((1..=BITS as usize).contains(&n_bits));
+    let q = Int8Layer::from_f64(w);
+    truncate_int8(&q, n_bits)
+}
+
+pub(crate) fn truncate_int8(q: &Int8Layer, n_bits: usize) -> Vec<f64> {
+    let drop = BITS as usize - n_bits;
+    let step = 1i64 << drop;
+    q.mags
+        .iter()
+        .zip(&q.signs)
+        .map(|(&m, &s)| {
+            let t = ((m as i64 + step / 2) / step * step).min(MAG_MAX);
+            (t * s as i64) as f64 * q.scale
+        })
+        .collect()
+}
+
+/// Integer magnitudes after truncation (for storage/error accounting).
+pub fn truncate_mags(mags: &[u8], n_bits: usize) -> Vec<u8> {
+    let drop = BITS as usize - n_bits;
+    let step = 1i64 << drop;
+    mags.iter()
+        .map(|&m| (((m as i64 + step / 2) / step * step).min(MAG_MAX)) as u8)
+        .collect()
+}
+
+/// Layer-wise activation truncation: quantize to unsigned 8-bit over
+/// [0, amax] (post-ReLU activations), zero the low 8-n bits.
+pub fn truncate_activations(a: &[f32], n_bits: usize, amax: f32) -> Vec<f32> {
+    assert!((1..=BITS as usize).contains(&n_bits));
+    let scale = if amax > 0.0 { amax / 255.0 } else { 1.0 };
+    let drop = BITS as usize - n_bits;
+    a.iter()
+        .map(|&x| {
+            let q = (x / scale).round().clamp(0.0, 255.0) as i64;
+            (((q >> drop) << drop) as f32) * scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::metrics::rmse;
+
+    #[test]
+    fn full_precision_is_identity_on_int8_grid() {
+        let w = vec![1.0, -0.5, 0.25, 127.0 / 127.0];
+        let t = truncate_weights(&w, 8);
+        let q = Int8Layer::from_f64(&w);
+        let base = q.to_f64();
+        for (a, b) in t.iter().zip(&base) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn truncation_error_grows_as_bits_drop() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let w: Vec<f64> = (0..512).map(|_| rng.normal_ms(0.0, 0.1)).collect();
+        let mut last = -1.0;
+        for n in (1..=8).rev() {
+            let e = rmse(&w, &truncate_weights(&w, n));
+            assert!(e >= last - 1e-15, "error shrank when dropping bits");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn truncate_mags_rounds_and_clips() {
+        // n=4 -> step 16: 129 impossible (mag<=127); 127 -> clip to 127? (127+8)/16*16 = 128 -> clip 127
+        assert_eq!(truncate_mags(&[127], 4), vec![127]);
+        assert_eq!(truncate_mags(&[7], 4), vec![0]); // (7+8)/16=0 -> 0? (15)/16=0 -> 0
+        assert_eq!(truncate_mags(&[8], 4), vec![16]); // (8+8)/16=1 -> 16
+        assert_eq!(truncate_mags(&[100], 8), vec![100]);
+    }
+
+    #[test]
+    fn activation_truncation_zeroes_lsbs() {
+        let a = vec![0.0f32, 130.0, 255.0];
+        let t = truncate_activations(&a, 2, 255.0);
+        // 8-bit codes 0,130,255 -> top-2-bit codes 0,128,192
+        assert!((t[0] - 0.0).abs() < 1e-6);
+        assert!((t[1] - 128.0).abs() < 1e-4);
+        assert!((t[2] - 192.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn swis_dominates_truncation() {
+        // the paper's core claim at the RMSE level (Table 1)
+        let mut rng = crate::util::rng::Rng::new(9);
+        let w: Vec<f64> = (0..1024).map(|_| rng.normal_ms(0.0, 0.05)).collect();
+        for n in 2..=4 {
+            let cfg = crate::quant::swis::QuantConfig::swis(n, 4);
+            let p = crate::quant::swis::quantize(&w, &[16, 64], &cfg).unwrap();
+            let es = rmse(&w, &p.to_f64());
+            let et = rmse(&w, &truncate_weights(&w, n));
+            assert!(es < et, "SWIS {es} not better than truncation {et} at n={n}");
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Artifact manifest + model bundle loading.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` indexing every
+//! HLO-text module with its input names/shapes/dtypes. The coordinator
+//! loads the bundle once at startup: weights from `tinycnn_weights.npz`,
+//! one compiled executable per batch-size variant.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::client::{Executable, Runtime};
+use crate::util::json::{self, Json};
+use crate::util::npy;
+use crate::util::tensor::Tensor;
+
+/// Shape/dtype of one executable input.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One entry of manifest.json.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub baseline_accuracy: f64,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn tensor_spec(j: &Json, name: &str) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .context("spec missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("float32")
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let j = json::parse(&raw)?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(|a| a.as_arr()).context("manifest: no artifacts")? {
+            let inputs = a
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .context("artifact: no inputs")?
+                .iter()
+                .map(|i| {
+                    let name = i.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                    tensor_spec(i, name)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                file: a.get("file").and_then(|f| f.as_str()).context("artifact: no file")?.to_string(),
+                kind: a.get("kind").and_then(|k| k.as_str()).unwrap_or("model").to_string(),
+                batch: a.get("batch").and_then(|b| b.as_usize()),
+                inputs,
+                output: tensor_spec(a.get("output").context("artifact: no output")?, "output")?,
+            });
+        }
+        Ok(Manifest {
+            baseline_accuracy: j
+                .get("baseline_accuracy")
+                .and_then(|b| b.as_f64())
+                .unwrap_or(f64::NAN),
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn find(&self, kind: &str, batch: Option<usize>) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && (batch.is_none() || a.batch == batch))
+    }
+
+    /// All batch sizes available for a given artifact kind, ascending.
+    pub fn batches(&self, kind: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .filter_map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+/// A ready-to-serve model: compiled executables per batch size plus the
+/// FP32 weight set (which callers may substitute with SWIS-dequantized
+/// weights — the graph takes weights as arguments by design).
+pub struct ModelBundle {
+    pub manifest: Manifest,
+    pub weights: HashMap<String, Tensor<f32>>,
+    /// Input names after the leading `images` input, in lowering order.
+    pub weight_order: Vec<String>,
+    executables: HashMap<usize, Executable>,
+    pub kind: String,
+}
+
+impl ModelBundle {
+    /// Load manifest + weights and compile all `kind` variants.
+    pub fn load(rt: &Runtime, dir: &Path, kind: &str) -> Result<ModelBundle> {
+        let manifest = Manifest::load(dir)?;
+        let npz = npy::load_npz(&dir.join("tinycnn_weights.npz"))?;
+        let weights: HashMap<String, Tensor<f32>> =
+            npz.into_iter().map(|(k, v)| (k, v.as_f32())).collect();
+        let batches = manifest.batches(kind);
+        if batches.is_empty() {
+            bail!("no '{kind}' artifacts in manifest");
+        }
+        let mut executables = HashMap::new();
+        let mut weight_order = Vec::new();
+        for &b in &batches {
+            let spec = manifest.find(kind, Some(b)).unwrap();
+            if weight_order.is_empty() {
+                weight_order = spec.inputs[1..].iter().map(|i| i.name.clone()).collect();
+            }
+            let exe = rt.compile_hlo_text(&dir.join(&spec.file))?;
+            executables.insert(b, exe);
+        }
+        Ok(ModelBundle {
+            manifest,
+            weights,
+            weight_order,
+            executables,
+            kind: kind.to_string(),
+        })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.executables.keys().copied().collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Smallest compiled batch >= n, or the largest available.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let sizes = self.batch_sizes();
+        *sizes.iter().find(|&&b| b >= n).unwrap_or(sizes.last().unwrap())
+    }
+
+    /// Split `n` requests into compiled-size chunks, greedily taking the
+    /// largest variant that fits and covering the remainder exactly with
+    /// smaller ones — avoids padding a half-full batch up to the largest
+    /// compiled size (PJRT cost is ~affine in batch, so padding 20
+    /// requests to 64 wastes ~2x compute; see EXPERIMENTS.md §Perf).
+    pub fn plan_chunks(&self, n: usize) -> Vec<usize> {
+        let sizes = self.batch_sizes(); // ascending
+        let mut out = Vec::new();
+        let mut left = n;
+        while left > 0 {
+            // largest compiled size that fits; if none fits, the smallest
+            // compiled size serves the tail as a padded chunk
+            let b = *sizes.iter().rev().find(|&&b| b <= left).unwrap_or(&sizes[0]);
+            out.push(b);
+            left = left.saturating_sub(b);
+        }
+        out
+    }
+
+    /// Run a batch of images through the compiled graph with the given
+    /// weight set (falls back to the bundled FP32 weights).
+    pub fn infer(
+        &self,
+        images: &Tensor<f32>,
+        weights: Option<&HashMap<String, Tensor<f32>>>,
+    ) -> Result<Tensor<f32>> {
+        let n = images.shape()[0];
+        let b = self.pick_batch(n);
+        let exe = self.executables.get(&b).context("no executable")?;
+        let spec = self.manifest.find(&self.kind, Some(b)).context("no spec")?;
+        // pad the image batch up to the compiled size
+        let img_spec = &spec.inputs[0];
+        let per = img_spec.shape[1..].iter().product::<usize>();
+        let mut data = images.data().to_vec();
+        if n != b {
+            if n > b {
+                bail!("batch {n} exceeds largest compiled variant {b}");
+            }
+            data.resize(b * per, 0.0);
+        }
+        let mut inputs = vec![Tensor::new(&img_spec.shape, data)?];
+        let w = weights.unwrap_or(&self.weights);
+        for name in &self.weight_order {
+            inputs.push(w.get(name).with_context(|| format!("missing weight {name}"))?.clone());
+        }
+        let mut out = exe.run_f32(&inputs)?;
+        let logits = out.remove(0);
+        if n == b {
+            return Ok(logits);
+        }
+        // strip padding rows
+        let classes = logits.shape()[1];
+        Ok(Tensor::new(
+            &[n, classes],
+            logits.data()[..n * classes].to_vec(),
+        )?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert!(m.baseline_accuracy > 0.5, "baseline {}", m.baseline_accuracy);
+        assert_eq!(m.batches("model"), vec![1, 8, 64]);
+        let b8 = m.find("model", Some(8)).unwrap();
+        assert_eq!(b8.inputs[0].shape, vec![8, 32, 32, 3]);
+        assert_eq!(b8.output.shape, vec![8, 10]);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::tensor::Tensor;
+
+/// A PJRT client owning compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of leaves in the (tupled) result.
+    pub n_outputs: usize,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, n_outputs: 1 })
+    }
+}
+
+impl Executable {
+    /// Execute on f32 tensors; returns the flattened data of each output
+    /// leaf. Inputs must match the lowered arity/shapes (the manifest is
+    /// the source of truth; [`super::ModelBundle`] enforces it).
+    pub fn run_f32(&self, inputs: &[Tensor<f32>]) -> Result<Vec<Tensor<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims).map_err(anyhow::Error::from)
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("PJRT execute")?;
+        if result.is_empty() || result[0].is_empty() {
+            bail!("PJRT returned no buffers");
+        }
+        let lit = result[0][0].to_literal_sync().context("device->host")?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple leaves.
+        let leaves = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(leaves.len());
+        for leaf in leaves {
+            let shape = leaf.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = leaf.to_vec::<f32>()?;
+            out.push(Tensor::new(&dims, data)?);
+        }
+        Ok(out)
+    }
+}

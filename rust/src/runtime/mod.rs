@@ -1,0 +1,15 @@
+//! PJRT runtime (build-time Python, run-time Rust): loads the HLO-text
+//! artifacts `python/compile/aot.py` emits, compiles them on the PJRT CPU
+//! client, and executes them from the coordinator's hot path. Python is
+//! never on the request path — the Rust binary is self-contained once
+//! `make artifacts` has run.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactSpec, Manifest, ModelBundle, TensorSpec};
+pub use client::{Executable, Runtime};

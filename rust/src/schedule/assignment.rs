@@ -1,0 +1,137 @@
+//! Phase-2 enumeration: non-decreasing shift assignments over systolic
+//! array column blocks that hit the layer's total shift budget exactly
+//! (paper Sec. 4.3 — co-scheduled filters must share a shift count).
+
+/// Enumerate non-decreasing sequences `n_b` (one per block, weighted by
+/// `block_sizes[b]`) with values in [lo, hi] and
+/// `sum_b n_b * block_sizes[b] == target_total`. Pruned recursion — block
+/// counts are small (K / sa_cols, typically <= 64).
+pub fn nondecreasing_sequences(
+    block_sizes: &[usize],
+    lo: usize,
+    hi: usize,
+    target_total: i64,
+) -> Vec<Vec<usize>> {
+    let vals: Vec<usize> = (lo..=hi).collect();
+    nondecreasing_sequences_vals(block_sizes, &vals, target_total)
+}
+
+/// The general form: per-block values drawn from an ascending `vals` set.
+/// The double-shift PE restricts filters to even shift counts (odd counts
+/// waste a cycle, Sec. 3.1), which callers express as `vals = [2,4,6,8]`.
+pub fn nondecreasing_sequences_vals(
+    block_sizes: &[usize],
+    vals: &[usize],
+    target_total: i64,
+) -> Vec<Vec<usize>> {
+    let n_blocks = block_sizes.len();
+    let mut out = Vec::new();
+    if vals.is_empty() || n_blocks == 0 {
+        return out;
+    }
+    debug_assert!(vals.windows(2).all(|w| w[0] < w[1]), "vals must ascend");
+    let hi = *vals.last().unwrap();
+    let mut cur = Vec::with_capacity(n_blocks);
+    // suffix weight sums for pruning
+    let mut suffix: Vec<i64> = vec![0; n_blocks + 1];
+    for b in (0..n_blocks).rev() {
+        suffix[b] = suffix[b + 1] + block_sizes[b] as i64;
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn rec(
+        out: &mut Vec<Vec<usize>>,
+        cur: &mut Vec<usize>,
+        b: usize,
+        min_vi: usize,
+        tot: i64,
+        block_sizes: &[usize],
+        suffix: &[i64],
+        vals: &[usize],
+        hi: usize,
+        target: i64,
+    ) {
+        let n_blocks = block_sizes.len();
+        if b == n_blocks {
+            if tot == target {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        for vi in min_vi..vals.len() {
+            let n = vals[vi];
+            let nt = tot + (n * block_sizes[b]) as i64;
+            let rest = suffix[b + 1];
+            // prune: remaining blocks are >= n (non-decreasing) and <= hi
+            if nt + rest * (n as i64) > target {
+                break; // n only grows from here
+            }
+            if nt + rest * (hi as i64) < target {
+                continue;
+            }
+            cur.push(n);
+            rec(out, cur, b + 1, vi, nt, block_sizes, suffix, vals, hi, target);
+            cur.pop();
+        }
+    }
+    rec(
+        &mut out, &mut cur, 0, 0, 0, block_sizes, &suffix, vals, hi, target_total,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_budget_uniform() {
+        // 2 blocks of 8 filters, target 2.5 avg -> total 40
+        let seqs = nondecreasing_sequences(&[8, 8], 1, 4, 40);
+        assert!(!seqs.is_empty());
+        for s in &seqs {
+            assert!(s.windows(2).all(|w| w[0] <= w[1]));
+            let tot: usize = s.iter().zip([8, 8]).map(|(n, w)| n * w).sum();
+            assert_eq!(tot, 40);
+        }
+        // (2,3) must be among them
+        assert!(seqs.contains(&vec![2, 3]));
+    }
+
+    #[test]
+    fn integral_target_includes_uniform() {
+        let seqs = nondecreasing_sequences(&[8, 8, 8, 8], 1, 5, 3 * 32);
+        assert!(seqs.contains(&vec![3, 3, 3, 3]));
+        // and mixed assignments like (2,3,3,4) — total 2*8+3*8+3*8+4*8 = 96
+        assert!(seqs.contains(&vec![2, 3, 3, 4]));
+    }
+
+    #[test]
+    fn ragged_tail_block() {
+        // 12 filters in blocks of 8 + 4, avg 2 -> total 24
+        let seqs = nondecreasing_sequences(&[8, 4], 1, 4, 24);
+        for s in &seqs {
+            assert_eq!(s[0] * 8 + s[1] * 4, 24);
+            assert!(s[0] <= s[1]);
+        }
+        assert!(seqs.contains(&vec![2, 2]));
+        assert!(seqs.contains(&vec![1, 4]));
+    }
+
+    #[test]
+    fn impossible_budget_is_empty() {
+        assert!(nondecreasing_sequences(&[8], 1, 2, 100).is_empty());
+    }
+
+    #[test]
+    fn even_only_values_for_double_shift() {
+        // 2 blocks of 8 filters, avg 3 -> total 48, DS values {2,4,6,8}:
+        // only (2,4) hits it
+        let seqs = nondecreasing_sequences_vals(&[8, 8], &[2, 4, 6, 8], 48);
+        assert_eq!(seqs, vec![vec![2, 4]]);
+        // avg 2.5 -> total 40: no even-only combo over equal halves
+        assert!(nondecreasing_sequences_vals(&[8, 8], &[2, 4, 6, 8], 40).is_empty());
+        // but 4 blocks of 4 can do 2,2,2,4 (total 40)
+        let seqs = nondecreasing_sequences_vals(&[4, 4, 4, 4], &[2, 4, 6, 8], 40);
+        assert!(seqs.contains(&vec![2, 2, 2, 4]));
+    }
+}

@@ -1,0 +1,363 @@
+//! Filter scheduling (paper Sec. 4.3): distribute a fractional layer-level
+//! shift budget across filters so accuracy-insensitive filters give up
+//! shifts to sensitive ones, then snap the assignment to systolic-array
+//! column groups so co-scheduled filters share a shift count.
+
+mod assignment;
+pub mod network;
+pub use assignment::{nondecreasing_sequences, nondecreasing_sequences_vals};
+pub use network::{allocate_network, schedule_network, LayerWeights, NetworkAllocation};
+
+use anyhow::{bail, Result};
+
+use crate::quant::metrics::Alpha;
+use crate::quant::swis::{group_mags, per_filter_cost, build_luts, select_groups, GroupedMags, QuantConfig};
+use crate::quant::combos::{consecutive_combos, shift_combos};
+use crate::quant::int8::BITS;
+use crate::quant::PackedLayer;
+
+/// Scheduling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleConfig {
+    /// Target average number of shifts across the layer (may be
+    /// fractional, e.g. 2.5 — the point of scheduling).
+    pub target_shifts: f64,
+    pub group_size: usize,
+    pub alpha: Alpha,
+    pub consecutive: bool,
+    /// Filters co-scheduled per systolic-array column block.
+    pub sa_cols: usize,
+    /// Upper bound on per-filter shifts (defaults to 8).
+    pub max_shifts: usize,
+    /// Per-filter shift counts must be multiples of this (1 for
+    /// single-shift PEs; 2 for double-shift, whose odd counts waste a
+    /// cycle — Sec. 3.1).
+    pub shift_step: usize,
+}
+
+impl ScheduleConfig {
+    pub fn new(target_shifts: f64, group_size: usize) -> Self {
+        ScheduleConfig {
+            target_shifts,
+            group_size,
+            alpha: Alpha::ONE,
+            consecutive: false,
+            sa_cols: 8,
+            max_shifts: BITS as usize,
+            shift_step: 1,
+        }
+    }
+
+    /// Double-shift variant: filters restricted to even shift counts.
+    pub fn double_shift(mut self) -> Self {
+        self.shift_step = 2;
+        self
+    }
+}
+
+/// Result of scheduling a layer.
+#[derive(Clone, Debug)]
+pub struct ScheduledLayer {
+    /// Shifts assigned to each filter (post phase 2).
+    pub filter_shifts: Vec<usize>,
+    /// The layer packed with heterogeneous per-filter shift counts.
+    pub packed: PackedLayer,
+    /// Total integer MSE++ of the scheduled assignment.
+    pub err_scheduled: i64,
+    /// Total integer MSE++ of uniform quantization at ceil(target).
+    pub err_uniform: i64,
+}
+
+/// Per-filter cost table: cost[n-1][f] = integer MSE++ of filter f at n
+/// shifts, for n in 1..=max_n. Shared by both phases.
+fn cost_table(
+    gm: &GroupedMags,
+    max_n: usize,
+    consecutive: bool,
+    alpha: Alpha,
+) -> Vec<Vec<i64>> {
+    (1..=max_n)
+        .map(|n| per_filter_cost(gm, n, consecutive, alpha))
+        .collect()
+}
+
+/// Schedule a filters-first weight tensor (paper Sec. 4.3, both phases).
+pub fn schedule_layer(w: &[f64], shape: &[usize], cfg: &ScheduleConfig) -> Result<ScheduledLayer> {
+    if cfg.target_shifts < 1.0 || cfg.target_shifts > cfg.max_shifts as f64 {
+        bail!("target_shifts {} out of range", cfg.target_shifts);
+    }
+    let gm = group_mags(w, shape, cfg.group_size)?;
+    let k = gm.n_filters;
+    let step = cfg.shift_step.max(1);
+    // align the starting ceiling up to a step multiple
+    let hi = ((cfg.target_shifts.ceil() as usize + 1).div_ceil(step) * step).min(cfg.max_shifts / step * step);
+    let costs = cost_table(&gm, hi, cfg.consecutive, cfg.alpha);
+    let cost_at = |f: usize, n: usize| -> i64 { costs[n - 1][f] };
+
+    // ---- phase 1: greedy demotion from `hi` down to the target budget,
+    // moving one step (1 for SS, 2 for DS) at a time
+    let target_total = (cfg.target_shifts * k as f64).round() as i64;
+    let mut shifts = vec![hi as i64; k];
+    let mut total: i64 = shifts.iter().sum();
+    while total > target_total {
+        // cost of demoting each filter by one step (floor = step)
+        let mut order: Vec<usize> = (0..k).filter(|&f| shifts[f] > step as i64).collect();
+        if order.is_empty() {
+            break;
+        }
+        order.sort_by_key(|&f| {
+            let n = shifts[f] as usize;
+            cost_at(f, n - step) - cost_at(f, n)
+        });
+        let n_demote = ((total - target_total) as usize / step).max(1).min((k / 8).max(1));
+        for &f in order.iter().take(n_demote) {
+            shifts[f] -= step as i64;
+            total -= step as i64;
+            if total <= target_total {
+                break;
+            }
+        }
+    }
+
+    // uniform reference at ceil(target)
+    let ceil_n = (cfg.target_shifts.ceil() as usize).clamp(1, cfg.max_shifts);
+    let err_uniform: i64 = (0..k).map(|f| cost_at(f, ceil_n)).sum();
+
+    // ---- phase 2: snap to SA column blocks, non-decreasing over sorted filters
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&f| shifts[f]);
+    let n_blocks = k.div_ceil(cfg.sa_cols);
+    let block_sizes: Vec<usize> = (0..n_blocks)
+        .map(|b| cfg.sa_cols.min(k - b * cfg.sa_cols))
+        .collect();
+    let vals: Vec<usize> = (1..=hi).filter(|n| n % step == 0 || step == 1).collect();
+    let seqs = assignment::nondecreasing_sequences_vals(&block_sizes, &vals, target_total);
+    let mut best: Option<(i64, Vec<usize>)> = None;
+    for seq in &seqs {
+        let mut tot = 0i64;
+        for (b, &n) in seq.iter().enumerate() {
+            for &f in &order[b * cfg.sa_cols..(b * cfg.sa_cols + block_sizes[b])] {
+                tot += cost_at(f, n);
+            }
+        }
+        if best.as_ref().map_or(true, |(e, _)| tot < *e) {
+            best = Some((tot, seq.clone()));
+        }
+    }
+    let (err_scheduled, seq) = best.unwrap_or_else(|| {
+        // fall back: uniform at the rounded (step-aligned) target
+        let n = (((cfg.target_shifts / step as f64).round() as usize).max(1) * step).clamp(step, hi);
+        let tot = (0..k).map(|f| cost_at(f, n)).sum();
+        (tot, vec![n; n_blocks])
+    });
+
+    let mut final_shifts = vec![0usize; k];
+    for (b, &n) in seq.iter().enumerate() {
+        for &f in &order[b * cfg.sa_cols..(b * cfg.sa_cols + block_sizes[b])] {
+            final_shifts[f] = n;
+        }
+    }
+
+    let packed = pack_with_filter_shifts(&gm, shape, &final_shifts, cfg)?;
+    Ok(ScheduledLayer {
+        filter_shifts: final_shifts,
+        packed,
+        err_scheduled,
+        err_uniform,
+    })
+}
+
+/// Pack a layer whose filters use heterogeneous shift counts: storage is
+/// sized for the max count; filters with fewer shifts leave trailing mask
+/// planes zero (hardware skips them — the SA schedule knows the counts).
+pub fn pack_with_filter_shifts(
+    gm: &GroupedMags,
+    shape: &[usize],
+    filter_shifts: &[usize],
+    cfg: &ScheduleConfig,
+) -> Result<PackedLayer> {
+    if filter_shifts.len() != gm.n_filters {
+        bail!("filter_shifts length mismatch");
+    }
+    let n_max = *filter_shifts.iter().max().unwrap_or(&1);
+    let gs = gm.group_size;
+    let gpf = gm.groups_per_filter;
+    let n_groups = gm.n_groups();
+    let mut shifts = vec![0u8; n_groups * n_max];
+    let mut masks = vec![0u8; n_groups * gs * n_max];
+
+    // quantize filters sharing a shift count together (shared LUTs)
+    let mut by_n: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for (f, &n) in filter_shifts.iter().enumerate() {
+        by_n.entry(n).or_default().push(f);
+    }
+    for (&n, filters) in &by_n {
+        let combos = if cfg.consecutive {
+            consecutive_combos(n, BITS)
+        } else {
+            shift_combos(n, BITS)
+        };
+        let luts = build_luts(&combos);
+        // build a sub-view of the groups belonging to these filters
+        let mut sub_mags = Vec::with_capacity(filters.len() * gpf * gs);
+        for &f in filters {
+            sub_mags.extend_from_slice(
+                &gm.mags[f * gpf * gs..(f + 1) * gpf * gs],
+            );
+        }
+        let sub = GroupedMags {
+            mags: sub_mags,
+            signs: vec![1; filters.len() * gpf * gs],
+            scale: gm.scale,
+            n_filters: filters.len(),
+            groups_per_filter: gpf,
+            group_size: gs,
+        };
+        let (best_idx, best_q) = select_groups(&sub, &luts, cfg.alpha);
+        for (si, &f) in filters.iter().enumerate() {
+            for gl in 0..gpf {
+                let g_sub = si * gpf + gl;
+                let g = f * gpf + gl;
+                let combo = &combos[best_idx[g_sub] as usize];
+                shifts[g * n_max..g * n_max + n].copy_from_slice(combo);
+                for i in 0..gs {
+                    let q = best_q[g_sub * gs + i] as i64;
+                    let mb = crate::quant::combos::mask_bits(combo, q);
+                    let base = (g * gs + i) * n_max;
+                    masks[base..base + n].copy_from_slice(&mb);
+                }
+            }
+        }
+    }
+    Ok(PackedLayer {
+        shape: shape.to_vec(),
+        group_size: gs,
+        n_shifts: n_max,
+        scale: gm.scale,
+        shifts,
+        masks,
+        signs: gm.signs.clone(),
+        consecutive: cfg.consecutive,
+        filter_shifts: Some(filter_shifts.to_vec()),
+    })
+}
+
+/// Convenience wrapper: quantize uniformly when the target is integral,
+/// schedule otherwise.
+pub fn quantize_or_schedule(
+    w: &[f64],
+    shape: &[usize],
+    target_shifts: f64,
+    group_size: usize,
+    consecutive: bool,
+    alpha: Alpha,
+) -> Result<PackedLayer> {
+    if target_shifts.fract() == 0.0 {
+        let cfg = QuantConfig {
+            n_shifts: target_shifts as usize,
+            group_size,
+            alpha,
+            consecutive,
+        };
+        crate::quant::swis::quantize(w, shape, &cfg)
+    } else {
+        let mut cfg = ScheduleConfig::new(target_shifts, group_size);
+        cfg.consecutive = consecutive;
+        cfg.alpha = alpha;
+        Ok(schedule_layer(w, shape, &cfg)?.packed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_layer(k: usize, fan_in: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        // filters with varying magnitude spread -> varying sensitivity
+        (0..k)
+            .flat_map(|f| {
+                let sigma = 0.02 + 0.01 * (f % 7) as f64;
+                (0..fan_in).map(move |_| sigma).collect::<Vec<_>>()
+            })
+            .zip(0..)
+            .map(|(s, _)| s)
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|&s| rng.normal_ms(0.0, s))
+            .collect()
+    }
+
+    #[test]
+    fn average_hits_target() {
+        let w = random_layer(16, 36, 5);
+        let cfg = ScheduleConfig::new(2.5, 4);
+        let s = schedule_layer(&w, &[16, 36], &cfg).unwrap();
+        let avg =
+            s.filter_shifts.iter().sum::<usize>() as f64 / s.filter_shifts.len() as f64;
+        assert!((avg - 2.5).abs() < 1e-9, "avg={avg}");
+        assert_eq!(s.packed.effective_shifts(), 2.5);
+    }
+
+    #[test]
+    fn blocks_share_shift_counts() {
+        let w = random_layer(16, 36, 6);
+        let cfg = ScheduleConfig::new(2.5, 4);
+        let s = schedule_layer(&w, &[16, 36], &cfg).unwrap();
+        // filters sorted by shifts: within each SA block of 8 all equal
+        let mut sorted = s.filter_shifts.clone();
+        sorted.sort();
+        for block in sorted.chunks(8) {
+            assert!(block.iter().all(|&n| n == block[0]));
+        }
+    }
+
+    #[test]
+    fn scheduled_error_not_worse_than_uniform_ceiling_average() {
+        // scheduling at an integral target should match or beat uniform
+        let w = random_layer(32, 64, 7);
+        let cfg = ScheduleConfig::new(3.0, 4);
+        let s = schedule_layer(&w, &[32, 64], &cfg).unwrap();
+        assert!(
+            s.err_scheduled <= s.err_uniform,
+            "scheduled {} > uniform {}",
+            s.err_scheduled,
+            s.err_uniform
+        );
+    }
+
+    #[test]
+    fn fractional_target_packs_heterogeneous() {
+        let w = random_layer(16, 16, 8);
+        let p = quantize_or_schedule(&w, &[16, 16], 2.5, 4, false, Alpha::ONE).unwrap();
+        let fs = p.filter_shifts.clone().unwrap();
+        assert!(fs.iter().any(|&n| n == 2) && fs.iter().any(|&n| n == 3));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn double_shift_filters_even_only() {
+        // DS at target 3.0: filters mix even counts (2 and 4), average 3
+        let w = random_layer(16, 36, 10);
+        let cfg = ScheduleConfig::new(3.0, 4).double_shift();
+        let s = schedule_layer(&w, &[16, 36], &cfg).unwrap();
+        assert!(s.filter_shifts.iter().all(|&n| n % 2 == 0), "{:?}", s.filter_shifts);
+        let avg = s.filter_shifts.iter().sum::<usize>() as f64 / 16.0;
+        assert!((avg - 3.0).abs() < 1e-9, "avg={avg}");
+        // DS at the same budget cannot beat SS (strict subset of choices)
+        let ss = schedule_layer(&w, &[16, 36], &ScheduleConfig::new(3.0, 4)).unwrap();
+        assert!(ss.err_scheduled <= s.err_scheduled);
+    }
+
+    #[test]
+    fn scheduled_dequant_matches_budget() {
+        let w = random_layer(8, 16, 9);
+        let p = quantize_or_schedule(&w, &[8, 16], 2.0, 4, false, Alpha::ONE).unwrap();
+        assert!(p.filter_shifts.is_none()); // integral -> uniform path
+        let p2 = quantize_or_schedule(&w, &[8, 16], 2.5, 4, false, Alpha::ONE).unwrap();
+        // scheduled layer reconstructs with bounded error
+        let deq = p2.to_f64();
+        assert_eq!(deq.len(), w.len());
+    }
+}

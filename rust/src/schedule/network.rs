@@ -1,0 +1,213 @@
+//! Across-layer shift allocation — one granularity up from the paper's
+//! within-layer filter scheduling (Sec. 4.3): not all LAYERS are equally
+//! sensitive either, so a network-wide shift budget is distributed over
+//! layers by the same greedy-demotion principle, weighted by layer size
+//! (the effective-shifts reporting convention averages over weights).
+//! Each layer then runs the within-layer scheduler at its assigned
+//! budget, so the two granularities compose.
+
+use anyhow::{bail, Result};
+
+use super::{schedule_layer, ScheduleConfig, ScheduledLayer};
+use crate::quant::metrics::Alpha;
+use crate::quant::swis::{group_mags, per_filter_cost};
+
+/// One layer's weights, filters-first.
+pub struct LayerWeights<'a> {
+    pub name: String,
+    pub w: &'a [f64],
+    pub shape: [usize; 2],
+}
+
+/// Result of a network-level allocation.
+#[derive(Clone, Debug)]
+pub struct NetworkAllocation {
+    /// Integer shift budget per layer.
+    pub layer_shifts: Vec<usize>,
+    /// Weight-weighted average (== the requested target up to rounding).
+    pub effective_shifts: f64,
+    /// Total float-domain MSE++ of the allocation vs uniform-at-ceil.
+    pub err_allocated: f64,
+    pub err_uniform: f64,
+}
+
+/// Distribute a weight-weighted average shift budget across layers.
+///
+/// Greedy: start every layer at ceil(target)+1, repeatedly demote the
+/// layer whose next demotion costs the least MSE++ *per weight removed*,
+/// until the weighted average reaches the target.
+pub fn allocate_network(
+    layers: &[LayerWeights],
+    target: f64,
+    group_size: usize,
+    consecutive: bool,
+    alpha: Alpha,
+) -> Result<NetworkAllocation> {
+    if layers.is_empty() {
+        bail!("no layers");
+    }
+    if !(1.0..=8.0).contains(&target) {
+        bail!("target {target} out of [1, 8]");
+    }
+    let hi = ((target.ceil() as usize) + 1).min(8);
+
+    // Per-layer cost at each shift count (sum over filters, uniform).
+    // Integer MSE++ lives in each layer's own magnitude domain; scale^2
+    // converts it to the shared float-weight domain so costs are
+    // comparable ACROSS layers (a layer of tiny weights contributes
+    // proportionally tiny reconstruction error).
+    let mut costs = Vec::with_capacity(layers.len()); // [layer][n-1], f64
+    let mut sizes = Vec::with_capacity(layers.len());
+    for l in layers {
+        let gm = group_mags(l.w, &l.shape, group_size)?;
+        let s2 = gm.scale * gm.scale;
+        let per_n: Vec<f64> = (1..=hi)
+            .map(|n| per_filter_cost(&gm, n, consecutive, alpha).iter().sum::<i64>() as f64 * s2)
+            .collect();
+        costs.push(per_n);
+        sizes.push(l.w.len() as i64);
+    }
+    let total_weights: i64 = sizes.iter().sum();
+    let target_budget = (target * total_weights as f64).round() as i64;
+
+    let mut shifts = vec![hi; layers.len()];
+    let mut budget: i64 = sizes.iter().map(|&s| s * hi as i64).sum();
+    while budget > target_budget {
+        // cheapest demotion per weight removed
+        let mut best: Option<(f64, usize)> = None;
+        for (li, &n) in shifts.iter().enumerate() {
+            if n <= 1 {
+                continue;
+            }
+            let d_cost = costs[li][n - 2] - costs[li][n - 1];
+            let rate = d_cost / sizes[li] as f64;
+            if best.map_or(true, |(r, _)| rate < r) {
+                best = Some((rate, li));
+            }
+        }
+        let Some((_, li)) = best else { break };
+        // don't overshoot the budget: a big layer's demotion may cross it;
+        // allow it only if it brings us closer to the target
+        let after = budget - sizes[li];
+        if (after - target_budget).abs() > (budget - target_budget).abs() {
+            break;
+        }
+        shifts[li] -= 1;
+        budget = after;
+    }
+
+    let err_allocated: f64 = shifts.iter().zip(&costs).map(|(&n, c)| c[n - 1]).sum();
+    let ceil_n = (target.ceil() as usize).clamp(1, hi);
+    let err_uniform: f64 = costs.iter().map(|c| c[ceil_n - 1]).sum();
+    Ok(NetworkAllocation {
+        effective_shifts: budget as f64 / total_weights as f64,
+        layer_shifts: shifts,
+        err_allocated,
+        err_uniform,
+    })
+}
+
+/// Allocate, then run the within-layer scheduler per layer at its budget.
+pub fn schedule_network(
+    layers: &[LayerWeights],
+    target: f64,
+    group_size: usize,
+    consecutive: bool,
+    alpha: Alpha,
+    sa_cols: usize,
+) -> Result<(NetworkAllocation, Vec<ScheduledLayer>)> {
+    let alloc = allocate_network(layers, target, group_size, consecutive, alpha)?;
+    let scheduled = layers
+        .iter()
+        .zip(&alloc.layer_shifts)
+        .map(|(l, &n)| {
+            let mut cfg = ScheduleConfig::new(n as f64, group_size);
+            cfg.consecutive = consecutive;
+            cfg.alpha = alpha;
+            cfg.sa_cols = sa_cols;
+            schedule_layer(l.w, &l.shape, &cfg)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((alloc, scheduled))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn layers(seeds: &[(u64, f64)]) -> Vec<(Vec<f64>, [usize; 2])> {
+        // layers with different sigmas -> different sensitivity
+        seeds
+            .iter()
+            .map(|&(seed, sigma)| {
+                let mut rng = Rng::new(seed);
+                (rng.normal_vec(16 * 32, 0.0, sigma), [16usize, 32usize])
+            })
+            .collect()
+    }
+
+    fn views(ls: &[(Vec<f64>, [usize; 2])]) -> Vec<LayerWeights<'_>> {
+        ls.iter()
+            .enumerate()
+            .map(|(i, (w, shape))| LayerWeights { name: format!("l{i}"), w, shape: *shape })
+            .collect()
+    }
+
+    #[test]
+    fn hits_weighted_target() {
+        let ls = layers(&[(1, 0.02), (2, 0.05), (3, 0.10), (4, 0.03)]);
+        let v = views(&ls);
+        let a = allocate_network(&v, 3.0, 4, false, Alpha::ONE).unwrap();
+        assert!((a.effective_shifts - 3.0).abs() < 0.3, "{}", a.effective_shifts);
+        assert_eq!(a.layer_shifts.len(), 4);
+    }
+
+    #[test]
+    fn allocation_no_worse_than_uniform() {
+        let ls = layers(&[(5, 0.02), (6, 0.08), (7, 0.04)]);
+        let v = views(&ls);
+        let a = allocate_network(&v, 3.0, 4, false, Alpha::ONE).unwrap();
+        assert!(
+            a.err_allocated <= a.err_uniform,
+            "allocated {} > uniform {}",
+            a.err_allocated,
+            a.err_uniform
+        );
+    }
+
+    #[test]
+    fn heterogeneous_layers_get_heterogeneous_budgets() {
+        // a much-harder layer (wide sigma) should keep more shifts than an
+        // easy one at a tight budget
+        let ls = layers(&[(8, 0.005), (9, 0.15)]);
+        let v = views(&ls);
+        let a = allocate_network(&v, 2.5, 4, false, Alpha::ONE).unwrap();
+        assert!(
+            a.layer_shifts[1] >= a.layer_shifts[0],
+            "hard layer got fewer shifts: {:?}",
+            a.layer_shifts
+        );
+    }
+
+    #[test]
+    fn composes_with_filter_scheduler() {
+        let ls = layers(&[(10, 0.02), (11, 0.06)]);
+        let v = views(&ls);
+        let (alloc, scheduled) = schedule_network(&v, 3.0, 4, false, Alpha::ONE, 8).unwrap();
+        assert_eq!(scheduled.len(), 2);
+        for (s, &n) in scheduled.iter().zip(&alloc.layer_shifts) {
+            let avg = s.filter_shifts.iter().sum::<usize>() as f64 / s.filter_shifts.len() as f64;
+            assert!((avg - n as f64).abs() < 1e-9);
+            s.packed.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(allocate_network(&[], 3.0, 4, false, Alpha::ONE).is_err());
+        let ls = layers(&[(1, 0.02)]);
+        let v = views(&ls);
+        assert!(allocate_network(&v, 0.5, 4, false, Alpha::ONE).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Accelerator configuration (paper Sec. 5 baseline: 8x8 array, 64 KB
+//! act/wgt buffers, 16 KB output buffer, PE group size 4).
+
+use crate::arch::pe::{PeKind, PeModel};
+
+/// Systolic-array configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayConfig {
+    /// PE rows (mapped to output pixels in the OS dataflow).
+    pub rows: usize,
+    /// PE columns (mapped to filters).
+    pub cols: usize,
+    /// Weights MAC'd in parallel per PE group-op (the paper uses 4).
+    pub group_size: usize,
+    pub kind: PeKind,
+    /// On-chip activation buffer, bytes.
+    pub act_buf: usize,
+    /// On-chip weight buffer, bytes.
+    pub wgt_buf: usize,
+    /// On-chip output buffer, bytes.
+    pub out_buf: usize,
+    /// Staggered activation feed (Sec. 3.2). When false, the naive
+    /// full-pass-per-shift schedule is modeled (the ablation).
+    pub staggered: bool,
+}
+
+impl ArrayConfig {
+    /// The paper's evaluation baseline (Sec. 5).
+    pub fn paper_baseline(kind: PeKind) -> ArrayConfig {
+        ArrayConfig {
+            rows: 8,
+            cols: 8,
+            group_size: 4,
+            kind,
+            act_buf: 64 << 10,
+            wgt_buf: 64 << 10,
+            out_buf: 16 << 10,
+            staggered: true,
+        }
+    }
+
+    pub fn with_size(mut self, rows: usize, cols: usize) -> ArrayConfig {
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    pub fn n_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn pe(&self) -> PeModel {
+        PeModel::new(self.kind, self.group_size)
+    }
+
+    /// Die-area estimate, mm^2 (28 nm): PEs from the GE model at
+    /// ~0.6 um^2/GE plus SRAM macros at ~0.22 mm^2/Mb — only used for the
+    /// Table 4 iso-area sanity row, all comparisons are same-config.
+    pub fn area_mm2(&self) -> f64 {
+        let pe_um2 = self.pe().area_ge * self.n_pes() as f64 * 0.6;
+        let sram_bits = (self.act_buf + self.wgt_buf + self.out_buf) as f64 * 8.0;
+        let sram_mm2 = sram_bits / 1.0e6 * 0.22;
+        pe_um2 / 1.0e6 + sram_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_paper() {
+        let c = ArrayConfig::paper_baseline(PeKind::SingleShift);
+        assert_eq!(c.rows * c.cols, 64);
+        assert_eq!(c.group_size, 4);
+        assert_eq!(c.act_buf, 65536);
+        assert_eq!(c.out_buf, 16384);
+    }
+
+    #[test]
+    fn area_in_paper_ballpark() {
+        // Table 4 reports ~0.54-0.57 mm^2 for all 8x8 configurations
+        for kind in [PeKind::Fixed, PeKind::SingleShift, PeKind::DoubleShift] {
+            let a = ArrayConfig::paper_baseline(kind).area_mm2();
+            assert!((0.3..0.9).contains(&a), "{kind:?} area {a} mm2");
+        }
+    }
+}

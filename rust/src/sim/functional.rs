@@ -1,0 +1,214 @@
+//! Functional output-stationary systolic execution (paper Fig. 4b):
+//! actually computes convolutions with SWIS-packed weights on a grid of
+//! [`FunctionalPe`]s, fold by fold, and must agree exactly with the
+//! integer matmul the packed format implies. The analytic cycle model in
+//! [`super::layer`] is validated against this machine's cycle counter on
+//! small layers.
+
+use anyhow::{bail, Result};
+
+use super::config::ArrayConfig;
+use crate::arch::pe::PeKind;
+use crate::arch::pe_functional::FunctionalPe;
+use crate::quant::PackedLayer;
+
+/// Result of a functional run.
+#[derive(Clone, Debug)]
+pub struct FunctionalRun {
+    /// (n_rows_out, n_filters) integer MACs.
+    pub out: Vec<i64>,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Compute cycles (group-op cycles summed over folds, max over the
+    /// array per fold — PEs in a fold run in lock-step).
+    pub compute_cycles: u64,
+    pub folds: usize,
+}
+
+/// Execute `acts (P, fan_in) x packed (K, fan_in)^T` on the array:
+/// rows <-> activation rows (output pixels), cols <-> filters, each PE
+/// reducing `group_size` lanes per group-op (the paper's third dataflow
+/// dimension). Activations are int8 codes (the paper's 8-bit
+/// activations); output is the exact integer MAC.
+pub fn run_matmul(
+    acts: &[i32],
+    p_rows: usize,
+    packed: &PackedLayer,
+    cfg: &ArrayConfig,
+) -> Result<FunctionalRun> {
+    let fan_in = packed.fan_in();
+    if acts.len() != p_rows * fan_in {
+        bail!("acts {} != {} x {}", acts.len(), p_rows, fan_in);
+    }
+    if cfg.group_size != packed.group_size {
+        bail!("array group size {} != packed {}", cfg.group_size, packed.group_size);
+    }
+    let k = packed.n_filters();
+    let gpf = packed.groups_per_filter();
+    let gs = packed.group_size;
+    let double = matches!(cfg.kind, PeKind::DoubleShift);
+
+    let mut out = vec![0i64; p_rows * k];
+    let mut compute_cycles = 0u64;
+    let row_folds = p_rows.div_ceil(cfg.rows);
+    let col_folds = k.div_ceil(cfg.cols);
+
+    // lane buffer reused across group-ops (the PE's activation register)
+    let mut lanes = vec![0i32; gs];
+    for rf in 0..row_folds {
+        for cf in 0..col_folds {
+            let mut fold_cycles = 0u64;
+            for r in 0..cfg.rows {
+                let row = rf * cfg.rows + r;
+                if row >= p_rows {
+                    continue;
+                }
+                for c in 0..cfg.cols {
+                    let col = cf * cfg.cols + c;
+                    if col >= k {
+                        continue;
+                    }
+                    let mut pe = FunctionalPe::new(gs, double);
+                    for gl in 0..gpf {
+                        let g = col * gpf + gl;
+                        // staggered feed: the activation vector for this
+                        // group-op, zero-padded at the fan-in tail
+                        for i in 0..gs {
+                            let idx = gl * gs + i;
+                            lanes[i] = if idx < fan_in { acts[row * fan_in + idx] } else { 0 };
+                        }
+                        pe.group_op(packed, g, &lanes);
+                    }
+                    out[row * k + col] = pe.accumulator();
+                    fold_cycles = fold_cycles.max(pe.cycles);
+                }
+            }
+            compute_cycles += fold_cycles;
+        }
+    }
+    Ok(FunctionalRun {
+        out,
+        n_rows: p_rows,
+        n_cols: k,
+        compute_cycles,
+        folds: row_folds * col_folds,
+    })
+}
+
+/// Reference integer matmul against the packed format's implied weights.
+pub fn reference_matmul(acts: &[i32], p_rows: usize, packed: &PackedLayer) -> Vec<i64> {
+    let fan_in = packed.fan_in();
+    let k = packed.n_filters();
+    let gpf = packed.groups_per_filter();
+    let gs = packed.group_size;
+    let mut out = vec![0i64; p_rows * k];
+    for row in 0..p_rows {
+        for col in 0..k {
+            let mut acc = 0i64;
+            for i in 0..fan_in {
+                let g = col * gpf + i / gs;
+                let lane = i % gs;
+                let mag = packed.mag(g, lane);
+                let sign = packed.signs[g * gs + lane] as i64;
+                acc += acts[row * fan_in + i] as i64 * sign * mag;
+            }
+            out[row * k + col] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Alpha, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, k: usize, fan_in: usize, n: usize, gs: usize) -> (PackedLayer, Vec<i32>, usize) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
+        let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive: false };
+        let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
+        let rows = 20usize;
+        let acts: Vec<i32> = (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+        (p, acts, rows)
+    }
+
+    fn arr(kind: PeKind, gs: usize) -> ArrayConfig {
+        let mut c = ArrayConfig::paper_baseline(kind);
+        c.group_size = gs;
+        c
+    }
+
+    #[test]
+    fn array_matches_reference_exactly() {
+        let (p, acts, rows) = setup(1, 12, 36, 3, 4);
+        let run = run_matmul(&acts, rows, &p, &arr(PeKind::SingleShift, 4)).unwrap();
+        assert_eq!(run.out, reference_matmul(&acts, rows, &p));
+        // 20 rows / 8 = 3 folds, 12 cols / 8 = 2 folds
+        assert_eq!(run.folds, 6);
+    }
+
+    #[test]
+    fn double_shift_same_result_fewer_cycles() {
+        let (p, acts, rows) = setup(2, 8, 32, 4, 4);
+        let ss = run_matmul(&acts, rows, &p, &arr(PeKind::SingleShift, 4)).unwrap();
+        let ds = run_matmul(&acts, rows, &p, &arr(PeKind::DoubleShift, 4)).unwrap();
+        assert_eq!(ss.out, ds.out);
+        assert_eq!(ds.compute_cycles * 2, ss.compute_cycles);
+    }
+
+    #[test]
+    fn cycle_count_matches_analytic_model() {
+        // compute cycles = folds * gops_per_output * N for single shift
+        let (p, acts, rows) = setup(3, 8, 32, 3, 4);
+        let run = run_matmul(&acts, rows, &p, &arr(PeKind::SingleShift, 4)).unwrap();
+        let gops = 32usize.div_ceil(4);
+        assert_eq!(run.compute_cycles, (run.folds * gops * 3) as u64);
+    }
+
+    #[test]
+    fn ragged_fan_in_zero_padded() {
+        // fan_in 30 with group 4 -> last group half-padded
+        let (p, acts, rows) = setup(4, 8, 30, 2, 4);
+        let run = run_matmul(&acts, rows, &p, &arr(PeKind::SingleShift, 4)).unwrap();
+        assert_eq!(run.out, reference_matmul(&acts, rows, &p));
+    }
+
+    #[test]
+    fn quantized_conv_end_to_end_error_bounded() {
+        // full float path: quantize -> systolic integer MAC -> rescale,
+        // vs the float matmul on dequantized weights (must match to fp
+        // rounding) and vs the original weights (bounded by quant error)
+        let mut rng = Rng::new(9);
+        let k = 8;
+        let fan_in = 27;
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.1);
+        let cfg = QuantConfig { n_shifts: 4, group_size: 4, alpha: Alpha::ONE, consecutive: false };
+        let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
+        let rows = 10;
+        // activations as int8 codes of floats in [0,1): a = code/127
+        let codes: Vec<i32> = (0..rows * fan_in).map(|_| rng.range_u64(0, 127) as i32).collect();
+        let run = run_matmul(&codes, rows, &p, &arr(PeKind::SingleShift, 4)).unwrap();
+        let deq = p.to_f64();
+        for r in 0..rows {
+            for c in 0..k {
+                let got = run.out[r * k + c] as f64 * p.scale / 127.0;
+                let want: f64 = (0..fan_in)
+                    .map(|i| codes[r * fan_in + i] as f64 / 127.0 * deq[c * fan_in + i])
+                    .sum();
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "integer path diverged: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let (p, acts, rows) = setup(5, 8, 32, 2, 4);
+        assert!(run_matmul(&acts[..10], rows, &p, &arr(PeKind::SingleShift, 4)).is_err());
+        assert!(run_matmul(&acts, rows, &p, &arr(PeKind::SingleShift, 8)).is_err());
+    }
+}

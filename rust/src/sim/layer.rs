@@ -1,0 +1,186 @@
+//! Per-layer cycle + energy model (output-stationary dataflow, Sec. 3.2).
+
+use super::config::ArrayConfig;
+use super::memory::{dram_traffic, folds, MemoryTraffic};
+use super::scheme::{ExecScheme, SchemeKind};
+use crate::arch::bitfusion::BitFusionModel;
+use crate::arch::calib::{CLOCK_HZ, PJ_DRAM_BYTE, PJ_SRAM_BYTE};
+use crate::nets::{ConvKind, ConvLayer};
+
+/// Simulation result for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub name: String,
+    pub cycles: f64,
+    /// Fraction of PE-lane-cycles doing useful MACs.
+    pub utilization: f64,
+    pub traffic: MemoryTraffic,
+    /// Energy split, picojoules.
+    pub pe_pj: f64,
+    pub sram_pj: f64,
+    pub dram_pj: f64,
+}
+
+impl LayerSim {
+    pub fn total_pj(&self) -> f64 {
+        self.pe_pj + self.sram_pj + self.dram_pj
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.cycles / CLOCK_HZ
+    }
+}
+
+/// Simulate one conv layer on the array under `scheme`.
+///
+/// OS mapping: rows <-> output pixels, cols <-> filters; each PE reduces
+/// `group_size` weights per group-op, taking `cycles_per_group_op` shift
+/// cycles (1 for fixed-point). Pipeline fill/drain of rows+cols-2 cycles
+/// is paid once per fold. Depthwise layers (MobileNet-v2) keep only one
+/// useful lane pattern per filter: fan-in is k^2, so group-ops shrink but
+/// the array's columns are underutilized when out_c < cols at the tail
+/// fold — both effects fall out of the same arithmetic.
+pub fn simulate_layer(layer: &ConvLayer, cfg: &ArrayConfig, scheme: &ExecScheme) -> LayerSim {
+    let (row_folds, col_folds) = folds(layer, cfg);
+    let gops_per_output = (layer.fan_in() as f64 / cfg.group_size as f64).ceil();
+    let cpg = scheme.cycles_per_group_op(cfg.kind, cfg.group_size);
+
+    let fill = (cfg.rows + cfg.cols - 2) as f64;
+    let compute_per_fold = gops_per_output * cpg;
+    // Naive (non-staggered) schedule: a full array pass per shift plane,
+    // re-paying the fill/drain each pass (Sec. 3.2's rejected option 1).
+    let passes = if cfg.staggered { 1.0 } else { cpg.max(1.0) };
+    let fold_cycles = if cfg.staggered {
+        fill + compute_per_fold
+    } else {
+        (fill + gops_per_output) * passes
+    };
+    let cycles = (row_folds * col_folds) as f64 * fold_cycles;
+
+    // Utilization: useful MACs over provisioned MAC-lane slots. Each
+    // compute cycle provisions n_pes * group_size lanes and retires
+    // group_size MACs per group-op every `cpg` cycles.
+    let provisioned_macs = (row_folds * col_folds) as f64
+        * compute_per_fold
+        * cfg.n_pes() as f64
+        * (cfg.group_size as f64 / cpg);
+    let utilization = (layer.macs() as f64 / provisioned_macs).min(1.0);
+
+    let traffic = dram_traffic(layer, cfg, scheme);
+
+    // Energy: active PEs pay pj_per_cycle over compute cycles; BitFusion
+    // has its own per-MAC cost.
+    let active_pes = occupancy(layer, cfg) * cfg.n_pes() as f64;
+    let pe_pj = match scheme.kind {
+        SchemeKind::BitFusion4x8 => {
+            BitFusionModel::new_4x8(cfg.group_size).pj_per_mac() * layer.macs() as f64
+        }
+        _ => {
+            let pe = cfg.pe();
+            let compute_cycles = (row_folds * col_folds) as f64 * compute_per_fold;
+            pe.pj_per_cycle * active_pes * compute_cycles
+        }
+    };
+    let sram_pj = traffic.sram_total() * PJ_SRAM_BYTE;
+    let dram_pj = traffic.dram_total() * PJ_DRAM_BYTE;
+
+    LayerSim {
+        name: layer.name.clone(),
+        cycles,
+        utilization,
+        traffic,
+        pe_pj,
+        sram_pj,
+        dram_pj,
+    }
+}
+
+/// Average spatial occupancy across folds (tail folds leave rows/cols
+/// idle; depthwise tails are the dominant case on MobileNet-v2).
+fn occupancy(layer: &ConvLayer, cfg: &ArrayConfig) -> f64 {
+    let pixels = layer.out_hw() * layer.out_hw();
+    let (row_folds, col_folds) = folds(layer, cfg);
+    let row_occ = pixels as f64 / (row_folds * cfg.rows) as f64;
+    let col_occ = layer.out_c as f64 / (col_folds * cfg.cols) as f64;
+    let lane_occ = match layer.kind {
+        ConvKind::Standard => {
+            let gops = (layer.fan_in() as f64 / cfg.group_size as f64).ceil();
+            layer.fan_in() as f64 / (gops * cfg.group_size as f64)
+        }
+        // depthwise: the 9-deep fan-in fills groups poorly (Sec. 3.2:
+        // "we underutilize the PEs ... for the simplicity of scheduling")
+        ConvKind::Depthwise => {
+            let gops = (layer.fan_in() as f64 / cfg.group_size as f64).ceil();
+            layer.fan_in() as f64 / (gops * cfg.group_size as f64)
+        }
+    };
+    row_occ * col_occ * lane_occ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pe::PeKind;
+    use crate::nets::{resnet18, ConvLayer};
+    use crate::sim::SchemeKind;
+
+    fn cfg(kind: PeKind) -> ArrayConfig {
+        ArrayConfig::paper_baseline(kind)
+    }
+
+    #[test]
+    fn hand_computed_tiny_layer() {
+        // 1 output pixel fold: 4x4 ofmap = 16 px = 2 row folds on 8 rows;
+        // 8 filters = 1 col fold; fan-in 16 -> 4 group-ops at G=4.
+        let l = ConvLayer::new("t", 4, 16, 1, 1, 0, 8);
+        assert_eq!(l.out_hw(), 4);
+        let c = cfg(PeKind::Fixed);
+        let s = ExecScheme::new(SchemeKind::Fixed8, 8.0);
+        let r = simulate_layer(&l, &c, &s);
+        // per fold: fill 14 + 4 gops * 1 cycle = 18; 2 folds = 36
+        assert_eq!(r.cycles, 36.0);
+    }
+
+    #[test]
+    fn shift_cycles_scale_latency() {
+        let net = resnet18();
+        let l = net.layer("layer2.0.conv2").unwrap();
+        let c = cfg(PeKind::SingleShift);
+        let t2 = simulate_layer(l, &c, &ExecScheme::swis(2.0)).cycles;
+        let t4 = simulate_layer(l, &c, &ExecScheme::swis(4.0)).cycles;
+        let t8 = simulate_layer(l, &c, &ExecScheme::new(SchemeKind::ActTrunc, 8.0)).cycles;
+        assert!(t4 > 1.9 * t2 * 0.9 && t4 < 2.1 * t2, "t2={t2} t4={t4}");
+        assert!(t8 > 3.5 * t2, "t8={t8} t2={t2}");
+    }
+
+    #[test]
+    fn double_shift_halves_compute() {
+        let net = resnet18();
+        let l = net.layer("layer3.0.conv2").unwrap();
+        let ss = simulate_layer(l, &cfg(PeKind::SingleShift), &ExecScheme::swis(4.0)).cycles;
+        let ds = simulate_layer(l, &cfg(PeKind::DoubleShift), &ExecScheme::swis(4.0)).cycles;
+        assert!(ds < 0.6 * ss, "ds={ds} ss={ss}");
+    }
+
+    #[test]
+    fn staggered_beats_naive() {
+        let net = resnet18();
+        let l = net.layer("layer2.0.conv1").unwrap();
+        let mut naive = cfg(PeKind::SingleShift);
+        naive.staggered = false;
+        let s = ExecScheme::swis(4.0);
+        let tn = simulate_layer(l, &naive, &s);
+        let ts = simulate_layer(l, &cfg(PeKind::SingleShift), &s);
+        assert!(tn.cycles > ts.cycles);
+        assert!(tn.sram_pj > ts.sram_pj);
+    }
+
+    #[test]
+    fn energy_components_positive() {
+        let net = resnet18();
+        let l = net.layer("conv1").unwrap();
+        let r = simulate_layer(l, &cfg(PeKind::SingleShift), &ExecScheme::swis(3.0));
+        assert!(r.pe_pj > 0.0 && r.sram_pj > 0.0 && r.dram_pj > 0.0);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! SCALE-Sim-class systolic-array simulator (paper Sec. 3.2, 5.2).
+//!
+//! The paper obtained cycle-accurate traces from SCALE-Sim [12] on an 8x8
+//! bit-serial systolic array with 64 KB activation/weight buffers and a
+//! 16 KB output buffer, group size 4, output-stationary dataflow. This
+//! module is a native Rust reimplementation of that substrate at the same
+//! accounting granularity: tile-level loop nest with pipeline fill/drain,
+//! group-wise PEs (the third dataflow dimension), the paper's *staggered*
+//! activation feed, SRAM/DRAM traffic, and an energy roll-up built on the
+//! 28 nm PE cost model in [`crate::arch`].
+
+mod config;
+pub mod functional;
+mod layer;
+mod memory;
+mod network;
+mod scheme;
+
+pub use config::ArrayConfig;
+pub use layer::{simulate_layer, LayerSim};
+pub use memory::{dram_traffic, MemoryTraffic};
+pub use network::{simulate_network, NetworkSim};
+pub use scheme::{ExecScheme, SchemeKind};

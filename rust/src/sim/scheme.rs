@@ -1,0 +1,154 @@
+//! Execution schemes — how weights are represented and how many shift
+//! cycles each group-op costs (paper Sec. 5 comparison points).
+
+use crate::arch::bitfusion::BitFusionModel;
+use crate::arch::compression::{swis_bits_per_weight, swis_c_bits_per_weight};
+use crate::arch::pe::PeKind;
+
+/// Which quantization/execution scheme runs on the array.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SchemeKind {
+    /// Conventional 8-bit fixed-point (1 group-op/cycle, 8-bit weights).
+    Fixed8,
+    /// SWIS sparse shifts (paper).
+    Swis,
+    /// SWIS-C consecutive shifts (paper).
+    SwisC,
+    /// Layer-wise weight truncation + clipping on bit-serial hardware.
+    WgtTrunc,
+    /// Layer-wise activation truncation (Stripes-style [8]); weights stay
+    /// 8-bit and uncompressed ("no storage compression", Sec. 1).
+    ActTrunc,
+    /// BitFusion 4x8 decomposable arithmetic [13].
+    BitFusion4x8,
+}
+
+/// Scheme + effective shift count (possibly fractional after Sec. 4.3
+/// filter scheduling: e.g. 2.5 = half the filters at 2, half at 3).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecScheme {
+    pub kind: SchemeKind,
+    /// Effective shifts/bits N. Ignored by Fixed8 and BitFusion4x8.
+    pub n_shifts: f64,
+}
+
+impl ExecScheme {
+    pub fn new(kind: SchemeKind, n_shifts: f64) -> ExecScheme {
+        ExecScheme { kind, n_shifts }
+    }
+
+    pub fn swis(n: f64) -> ExecScheme {
+        ExecScheme::new(SchemeKind::Swis, n)
+    }
+
+    pub fn swis_c(n: f64) -> ExecScheme {
+        ExecScheme::new(SchemeKind::SwisC, n)
+    }
+
+    /// Average cycles per group-op on a PE of `kind` (paper Sec. 3.1).
+    ///
+    /// Fractional N models the scheduled filter mix: a fraction `f` of
+    /// filters runs at ceil(N), the rest at floor(N); single-shift PEs
+    /// average linearly, double-shift PEs average the per-filter
+    /// ceil(n/2) (so 2.5 shifts on DS = 0.5*1 + 0.5*2 = 1.5 cycles).
+    pub fn cycles_per_group_op(&self, pe: PeKind, group_size: usize) -> f64 {
+        let mix = |per: fn(f64) -> f64, n: f64| -> f64 {
+            let lo = n.floor();
+            let f = n - lo;
+            if f == 0.0 {
+                per(n)
+            } else {
+                (1.0 - f) * per(lo) + f * per(lo + 1.0)
+            }
+        };
+        match self.kind {
+            SchemeKind::Fixed8 => 1.0,
+            SchemeKind::BitFusion4x8 => BitFusionModel::new_4x8(group_size).cycles_per_group_op(),
+            SchemeKind::Swis | SchemeKind::SwisC | SchemeKind::WgtTrunc | SchemeKind::ActTrunc => {
+                match pe {
+                    PeKind::Fixed => 1.0,
+                    PeKind::SingleShift => mix(|n| n.max(1.0), self.n_shifts),
+                    PeKind::DoubleShift => mix(|n| (n / 2.0).ceil().max(1.0), self.n_shifts),
+                }
+            }
+        }
+    }
+
+    /// Stored weight size, bits per weight, for DRAM/SRAM traffic
+    /// (paper Sec. 3.3). Fractional N interpolates the filter mix.
+    pub fn bits_per_weight(&self, group_size: usize) -> f64 {
+        let mix = |per: &dyn Fn(usize) -> f64, n: f64| -> f64 {
+            let lo = n.floor();
+            let f = n - lo;
+            if f == 0.0 {
+                per(n as usize)
+            } else {
+                (1.0 - f) * per(lo as usize) + f * per(lo as usize + 1)
+            }
+        };
+        match self.kind {
+            SchemeKind::Fixed8 | SchemeKind::ActTrunc => 8.0,
+            SchemeKind::BitFusion4x8 => 4.0,
+            SchemeKind::WgtTrunc => self.n_shifts,
+            SchemeKind::Swis => mix(&|n| swis_bits_per_weight(group_size, n), self.n_shifts),
+            SchemeKind::SwisC => mix(&|n| swis_c_bits_per_weight(group_size, n), self.n_shifts),
+        }
+    }
+
+    /// The PE flavor this scheme is conventionally evaluated on when the
+    /// caller doesn't pin one (Table 4 column layout).
+    pub fn natural_pe(&self) -> PeKind {
+        match self.kind {
+            SchemeKind::Fixed8 | SchemeKind::BitFusion4x8 => PeKind::Fixed,
+            _ => PeKind::SingleShift,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self.kind {
+            SchemeKind::Fixed8 => "8b-fixed".into(),
+            SchemeKind::Swis => format!("SWIS@{}", self.n_shifts),
+            SchemeKind::SwisC => format!("SWIS-C@{}", self.n_shifts),
+            SchemeKind::WgtTrunc => format!("wgt-trunc@{}", self.n_shifts),
+            SchemeKind::ActTrunc => format!("act-trunc@{}", self.n_shifts),
+            SchemeKind::BitFusion4x8 => "BitFusion-4x8".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractional_shift_cycles() {
+        let s = ExecScheme::swis(2.5);
+        assert_eq!(s.cycles_per_group_op(PeKind::SingleShift, 4), 2.5);
+        // DS: half at 2 (1 cycle), half at 3 (2 cycles)
+        assert_eq!(s.cycles_per_group_op(PeKind::DoubleShift, 4), 1.5);
+        // integral odd N on DS underutilizes: 3 -> 2 cycles
+        assert_eq!(ExecScheme::swis(3.0).cycles_per_group_op(PeKind::DoubleShift, 4), 2.0);
+    }
+
+    #[test]
+    fn weight_bits_ordering() {
+        // SWIS-C stores fewer bits than SWIS at the same (G, N)
+        for n in 2..=5 {
+            let s = ExecScheme::swis(n as f64).bits_per_weight(4);
+            let c = ExecScheme::swis_c(n as f64).bits_per_weight(4);
+            assert!(c < s, "C {c} !< S {s} at N={n}");
+        }
+        // compression only below the break-even shift count (Sec. 3.3:
+        // G=4 SWIS spans 1.1-2.9x over its useful range)
+        assert!(ExecScheme::swis(3.0).bits_per_weight(4) < 8.0);
+        assert!(ExecScheme::swis(5.0).bits_per_weight(4) > 8.0);
+        // activation truncation compresses nothing (Sec. 1)
+        assert_eq!(ExecScheme::new(SchemeKind::ActTrunc, 4.0).bits_per_weight(4), 8.0);
+    }
+
+    #[test]
+    fn act_trunc_cycles_track_bits() {
+        let s = ExecScheme::new(SchemeKind::ActTrunc, 6.0);
+        assert_eq!(s.cycles_per_group_op(PeKind::SingleShift, 4), 6.0);
+    }
+}

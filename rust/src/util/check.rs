@@ -1,0 +1,69 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set). `props!` runs a closure over many seeded random cases and reports
+//! the first failing seed so failures are reproducible:
+//!
+//! ```ignore
+//! check::props(100, |rng| {
+//!     let n = rng.range_u64(1, 8) as usize;
+//!     let w = rng.normal_vec(32, 0.0, 0.1);
+//!     /* ... assert invariant ... */
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `f` over `cases` seeded RNG streams; panics with the failing seed.
+pub fn props(cases: u64, f: impl Fn(&mut Rng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert-like helper returning Result for use inside `props`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float equality for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_pass() {
+        props(20, |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn props_fail_reports_seed() {
+        props(5, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.0, "always fails: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!close(1.0, 2.0, 1e-9));
+    }
+}

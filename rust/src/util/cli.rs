@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Subcommand dispatch is done by the binary (`main.rs`) on the first
+//! positional token.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: options + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+/// Option keys that take a value; everything else starting with `--` is a
+/// boolean flag.
+pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args> {
+    let mut a = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                a.opts.insert(k.to_string(), v.to_string());
+            } else if value_keys.contains(&stripped) {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .with_context(|| format!("--{stripped} expects a value"))?;
+                a.opts.insert(stripped.to_string(), v.clone());
+            } else {
+                a.flags.push(stripped.to_string());
+            }
+        } else {
+            a.pos.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(a)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--groups 1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("--{name}: bad element '{t}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.pos.first().map(|s| s.as_str())
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            &sv(&["simulate", "--net", "resnet18", "--verbose", "--shifts=3"]),
+            &["net"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get("net"), Some("resnet18"));
+        assert_eq!(a.get("shifts"), Some("3"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&sv(&["--n", "5", "--x", "1.5", "--l", "1,2,4"]), &["n", "x", "l"]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_usize_list("l", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&sv(&["--net"]), &["net"]).is_err());
+        let a = parse(&sv(&["--n", "x"]), &["n"]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Foundation utilities: tensors, NPY/NPZ + JSON IO, deterministic RNG,
+//! CLI parsing, statistics, and a mini property-test harness. These exist
+//! because the offline build vendors no serde/clap/rand/proptest — see
+//! DESIGN.md §7.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

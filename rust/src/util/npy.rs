@@ -1,0 +1,251 @@
+//! Minimal NPY/NPZ reader + NPY writer — the interchange format between
+//! the Python build path (`np.savez`) and the Rust runtime/tests. Supports
+//! C-order arrays of f32/f64/i8/u8/i32/i64 which is all the build emits.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// A loaded array, type-erased.
+#[derive(Clone, Debug)]
+pub enum NpyArray {
+    F32(Tensor<f32>),
+    F64(Tensor<f64>),
+    I8(Tensor<i8>),
+    U8(Tensor<u8>),
+    I32(Tensor<i32>),
+    I64(Tensor<i64>),
+}
+
+impl NpyArray {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            NpyArray::F32(t) => t.shape(),
+            NpyArray::F64(t) => t.shape(),
+            NpyArray::I8(t) => t.shape(),
+            NpyArray::U8(t) => t.shape(),
+            NpyArray::I32(t) => t.shape(),
+            NpyArray::I64(t) => t.shape(),
+        }
+    }
+
+    /// Convert to f32 tensor (lossy for i64 > 2^24 — fine for our data).
+    pub fn as_f32(&self) -> Tensor<f32> {
+        match self {
+            NpyArray::F32(t) => t.clone(),
+            NpyArray::F64(t) => t.map(|x| x as f32),
+            NpyArray::I8(t) => t.map(|x| x as f32),
+            NpyArray::U8(t) => t.map(|x| x as f32),
+            NpyArray::I32(t) => t.map(|x| x as f32),
+            NpyArray::I64(t) => t.map(|x| x as f32),
+        }
+    }
+
+    pub fn as_f64(&self) -> Tensor<f64> {
+        match self {
+            NpyArray::F32(t) => t.map(|x| x as f64),
+            NpyArray::F64(t) => t.clone(),
+            NpyArray::I8(t) => t.map(|x| x as f64),
+            NpyArray::U8(t) => t.map(|x| x as f64),
+            NpyArray::I32(t) => t.map(|x| x as f64),
+            NpyArray::I64(t) => t.map(|x| x as f64),
+        }
+    }
+
+    pub fn as_i64(&self) -> Tensor<i64> {
+        match self {
+            NpyArray::F32(t) => t.map(|x| x as i64),
+            NpyArray::F64(t) => t.map(|x| x as i64),
+            NpyArray::I8(t) => t.map(|x| x as i64),
+            NpyArray::U8(t) => t.map(|x| x as i64),
+            NpyArray::I32(t) => t.map(|x| x as i64),
+            NpyArray::I64(t) => t.clone(),
+        }
+    }
+}
+
+fn parse_header(hdr: &str) -> Result<(String, bool, Vec<usize>)> {
+    // header is a python dict literal:
+    // {'descr': '<f8', 'fortran_order': False, 'shape': (8, 64), }
+    let descr = hdr
+        .split("'descr':")
+        .nth(1)
+        .and_then(|s| s.split('\'').nth(1))
+        .context("npy header missing descr")?
+        .to_string();
+    let fortran = hdr
+        .split("'fortran_order':")
+        .nth(1)
+        .context("npy header missing fortran_order")?
+        .trim_start()
+        .starts_with("True");
+    let shape_str = hdr
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .context("npy header missing shape")?;
+    let shape: Vec<usize> = shape_str
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().context("bad shape dim"))
+        .collect::<Result<_>>()?;
+    Ok((descr, fortran, shape))
+}
+
+/// Parse a full .npy byte buffer.
+pub fn parse_npy(buf: &[u8]) -> Result<NpyArray> {
+    if buf.len() < 10 || &buf[..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let major = buf[6];
+    let (hlen, hstart) = if major == 1 {
+        (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10)
+    } else {
+        (
+            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+            12,
+        )
+    };
+    let hdr = std::str::from_utf8(&buf[hstart..hstart + hlen])?;
+    let (descr, fortran, shape) = parse_header(hdr)?;
+    if fortran {
+        bail!("fortran-order npy not supported");
+    }
+    let n: usize = shape.iter().product();
+    let data = &buf[hstart + hlen..];
+    macro_rules! load {
+        ($t:ty, $w:expr, $variant:ident) => {{
+            if data.len() < n * $w {
+                bail!("npy data truncated: want {} bytes, have {}", n * $w, data.len());
+            }
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut b = [0u8; $w];
+                b.copy_from_slice(&data[i * $w..(i + 1) * $w]);
+                v.push(<$t>::from_le_bytes(b));
+            }
+            Ok(NpyArray::$variant(Tensor::new(&shape, v)?))
+        }};
+    }
+    match descr.as_str() {
+        "<f4" => load!(f32, 4, F32),
+        "<f8" => load!(f64, 8, F64),
+        "|i1" | "<i1" => load!(i8, 1, I8),
+        "|u1" | "<u1" => load!(u8, 1, U8),
+        "<i4" => load!(i32, 4, I32),
+        "<i8" => load!(i64, 8, I64),
+        other => bail!("unsupported npy dtype {other}"),
+    }
+}
+
+/// Load a standalone .npy file.
+pub fn load_npy(path: &Path) -> Result<NpyArray> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    parse_npy(&buf)
+}
+
+/// Load every array in an .npz (zip of .npy entries).
+pub fn load_npz(path: &Path) -> Result<HashMap<String, NpyArray>> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut zip = zip::ZipArchive::new(f)?;
+    let mut out = HashMap::new();
+    for i in 0..zip.len() {
+        let mut entry = zip.by_index(i)?;
+        let name = entry
+            .name()
+            .strip_suffix(".npy")
+            .unwrap_or(entry.name())
+            .to_string();
+        let mut buf = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut buf)?;
+        out.insert(name, parse_npy(&buf)?);
+    }
+    Ok(out)
+}
+
+/// Serialize an f32 tensor as .npy bytes (version 1.0).
+pub fn to_npy_f32(t: &Tensor<f32>) -> Vec<u8> {
+    let shape = t
+        .shape()
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let trail = if t.shape().len() == 1 { "," } else { "" };
+    let mut hdr = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({shape}{trail}), }}"
+    );
+    // pad to 64-byte alignment incl. 10-byte preamble, newline-terminated
+    let total = 10 + hdr.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    hdr.push_str(&" ".repeat(pad));
+    hdr.push('\n');
+    let mut out = Vec::with_capacity(10 + hdr.len() + t.len() * 4);
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(hdr.len() as u16).to_le_bytes());
+    out.extend_from_slice(hdr.as_bytes());
+    for &x in t.data() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Write a single .npy file.
+pub fn save_npy_f32(path: &Path, t: &Tensor<f32>) -> Result<()> {
+    std::fs::write(path, to_npy_f32(t))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_roundtrip_f32() {
+        let t = Tensor::new(&[2, 3], vec![1.0f32, -2.0, 3.5, 0.0, 7.25, -0.5]).unwrap();
+        let bytes = to_npy_f32(&t);
+        match parse_npy(&bytes).unwrap() {
+            NpyArray::F32(u) => assert_eq!(u, t),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn npy_1d_roundtrip() {
+        let t = Tensor::new(&[4], vec![1.0f32, 2.0, 3.0, 4.0]).unwrap();
+        let arr = parse_npy(&to_npy_f32(&t)).unwrap();
+        assert_eq!(arr.shape(), &[4]);
+    }
+
+    #[test]
+    fn npy_scalar_roundtrip() {
+        let t = Tensor::new(&[], vec![42.0f32]).unwrap();
+        let arr = parse_npy(&to_npy_f32(&t)).unwrap();
+        assert_eq!(arr.shape(), &[] as &[usize]);
+        assert_eq!(arr.as_f32().data(), &[42.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_npy(b"not an npy").is_err());
+    }
+
+    #[test]
+    fn header_parser() {
+        let (d, f, s) =
+            parse_header("{'descr': '<f8', 'fortran_order': False, 'shape': (8, 64), }")
+                .unwrap();
+        assert_eq!(d, "<f8");
+        assert!(!f);
+        assert_eq!(s, vec![8, 64]);
+        let (_, _, s) =
+            parse_header("{'descr': '<i8', 'fortran_order': False, 'shape': (), }").unwrap();
+        assert!(s.is_empty());
+    }
+}

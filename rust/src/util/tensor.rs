@@ -1,0 +1,196 @@
+//! Minimal dense tensor (row-major f32/f64/i64) — the library's common
+//! currency for weights, activations and golden data. Deliberately small:
+//! shape + flat buffer + a few views; heavy math lives in the consumers.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense tensor over `T`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF32 = Tensor<f32>;
+pub type TensorF64 = Tensor<f64>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn new(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} (= {} elems) does not match data length {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::default(); shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape (must preserve element count).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        let strides = self.strides();
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i]);
+            off += ix * strides[i];
+        }
+        self.data[off]
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> T {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Rows view for 2-D tensors.
+    pub fn row(&self, r: usize) -> &[T] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl Tensor<f32> {
+    pub fn to_f64(&self) -> Tensor<f64> {
+        self.map(|x| x as f64)
+    }
+}
+
+impl Tensor<f64> {
+    pub fn to_f32(&self) -> Tensor<f32> {
+        self.map(|x| x as f32)
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Max |a-b| over two equal-shaped tensors.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+/// allclose with absolute + relative tolerance (numpy semantics).
+pub fn allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(&x, &y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0f32; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0f32; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::<f32>::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn index_access() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at2(0, 1), 1.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::new(&[4, 2], vec![1f32; 8]).unwrap();
+        let r = t.reshape(&[2, 2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2, 2]);
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(allclose(&[1.0, 2.0], &[1.0 + 1e-6, 2.0], 1e-5, 0.0));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-5));
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration: end-to-end serving through the coordinator — dynamic
+//! batching, variant routing, metrics — over the real PJRT runtime.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::util::npy;
+
+fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn images(n: usize) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let npz = npy::load_npz(&art_dir().join("dataset.npz")).unwrap();
+    let x = npz["x_test"].as_f32();
+    let y = npz["y_test"].as_i64();
+    let per = 32 * 32 * 3;
+    let imgs = (0..n).map(|i| x.data()[i * per..(i + 1) * per].to_vec()).collect();
+    let labels = y.data()[..n].iter().map(|&v| v as usize).collect();
+    (imgs, labels)
+}
+
+fn start(policy: BatchPolicy) -> Coordinator {
+    Coordinator::start(
+        &art_dir(),
+        policy,
+        vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4), VariantSpec::swis(2.5, 4)],
+    )
+    .unwrap()
+}
+
+#[test]
+fn serves_batched_requests_with_correct_results() {
+    let coord = start(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) });
+    let (imgs, labels) = images(32);
+
+    // submit all asynchronously so the batcher can assemble real batches
+    let rxs: Vec<_> = imgs
+        .iter()
+        .map(|im| {
+            coord
+                .submit(InferRequest { image: im.clone(), variant: "fp32".into() })
+                .unwrap()
+        })
+        .collect();
+    let mut correct = 0;
+    for (rx, &label) in rxs.iter().zip(&labels) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        let arg = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if arg == label {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 22, "fp32 accuracy {correct}/32");
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.requests, 32);
+    assert!(snap.mean_batch > 1.5, "batching never kicked in: {}", snap.mean_batch);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn routes_variants_and_rejects_unknown() {
+    let coord = start(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+    let (imgs, _) = images(1);
+
+    let fp = coord
+        .infer(InferRequest { image: imgs[0].clone(), variant: "fp32".into() })
+        .unwrap();
+    let sw = coord
+        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@3".into() })
+        .unwrap();
+    // quantized logits differ from fp32 but not wildly
+    assert_ne!(fp.logits, sw.logits);
+    let dot: f32 = fp
+        .logits
+        .iter()
+        .zip(&sw.logits)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>()
+        / 10.0;
+    assert!(dot < 2.0, "variant drift {dot}");
+
+    let err = coord.infer(InferRequest { image: imgs[0].clone(), variant: "nope".into() });
+    assert!(err.is_err());
+    // bad image size fails fast at submit
+    assert!(coord
+        .submit(InferRequest { image: vec![0.0; 7], variant: "fp32".into() })
+        .is_err());
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn fractional_variant_served() {
+    let coord = start(BatchPolicy::default());
+    let (imgs, _) = images(1);
+    let r = coord
+        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@2.5".into() })
+        .unwrap();
+    assert_eq!(r.logits.len(), 10);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn missing_artifacts_fail_cleanly() {
+    let r = Coordinator::start(
+        Path::new("/nonexistent"),
+        BatchPolicy::default(),
+        vec![VariantSpec::fp32()],
+    );
+    assert!(r.is_err());
+}

@@ -1,0 +1,118 @@
+//! Failure injection: the system must fail loudly and cleanly — never
+//! serve garbage — when artifacts are missing, truncated, or corrupt.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use swis::coordinator::{BatchPolicy, Coordinator, VariantSpec};
+use swis::runtime::{Manifest, ModelBundle, Runtime};
+use swis::util::npy;
+
+fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("swis_fail_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn copy_artifacts(dst: &Path) {
+    for entry in fs::read_dir(art_dir()).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_file() {
+            fs::copy(&p, dst.join(p.file_name().unwrap())).unwrap();
+        }
+    }
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_execute() {
+    let d = scratch("hlo");
+    copy_artifacts(&d);
+    fs::write(d.join("model_b1.hlo.txt"), "HloModule garbage\nnot hlo at all").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let err = ModelBundle::load(&rt, &d, "model");
+    assert!(err.is_err(), "corrupt HLO must not load");
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn truncated_manifest_rejected() {
+    let d = scratch("manifest");
+    copy_artifacts(&d);
+    let full = fs::read_to_string(d.join("manifest.json")).unwrap();
+    fs::write(d.join("manifest.json"), &full[..full.len() / 2]).unwrap();
+    assert!(Manifest::load(&d).is_err());
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn manifest_without_artifacts_key_rejected() {
+    let d = scratch("nokey");
+    fs::write(d.join("manifest.json"), r#"{"baseline_accuracy": 0.9}"#).unwrap();
+    assert!(Manifest::load(&d).is_err());
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn missing_weights_file_fails_load() {
+    let d = scratch("weights");
+    copy_artifacts(&d);
+    fs::remove_file(d.join("tinycnn_weights.npz")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(ModelBundle::load(&rt, &d, "model").is_err());
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn truncated_npz_rejected() {
+    let d = scratch("npz");
+    copy_artifacts(&d);
+    let bytes = fs::read(d.join("dataset.npz")).unwrap();
+    fs::write(d.join("dataset.npz"), &bytes[..bytes.len() / 3]).unwrap();
+    assert!(npy::load_npz(&d.join("dataset.npz")).is_err());
+    let _ = fs::remove_dir_all(&d);
+}
+
+#[test]
+fn coordinator_start_fails_cleanly_on_bad_dir() {
+    // must return Err, not hang or panic, and the thread must be reaped
+    for _ in 0..3 {
+        let r = Coordinator::start(
+            Path::new("/definitely/not/here"),
+            BatchPolicy::default(),
+            vec![VariantSpec::fp32()],
+        );
+        assert!(r.is_err());
+    }
+}
+
+#[test]
+fn coordinator_survives_weird_variant_names() {
+    // parse-time rejection for malformed specs
+    assert!(VariantSpec::parse("swis@").is_err());
+    assert!(VariantSpec::parse("swis@NaNx").is_err());
+    assert!(VariantSpec::parse("@3").is_err());
+    // n_shifts wildly out of range is caught when quantizing
+    let spec = VariantSpec::parse("swis@77").unwrap();
+    let mut w = std::collections::HashMap::new();
+    w.insert(
+        "conv1".to_string(),
+        swis::util::tensor::Tensor::new(&[3, 3, 4, 8], vec![0.1f32; 288]).unwrap(),
+    );
+    assert!(swis::coordinator::WeightVariants::build(&w, &[spec]).is_err());
+}
+
+#[test]
+fn serialize_rejects_bad_containers_from_disk() {
+    use swis::quant::serialize;
+    let d = scratch("swisfile");
+    // random bytes
+    fs::write(d.join("junk.swis"), [0u8; 64]).unwrap();
+    let bytes = fs::read(d.join("junk.swis")).unwrap();
+    assert!(serialize::from_bytes(&bytes).is_err());
+    let _ = fs::remove_dir_all(&d);
+}

@@ -1,0 +1,115 @@
+//! Cross-language golden test: the Rust quantizer must reproduce the
+//! Python reference's packed fields EXACTLY (same int8 pre-quantization,
+//! same enumeration order, same tie-breaking) — this is the contract that
+//! lets the Rust coordinator serve weights packed by either side.
+
+use std::path::{Path, PathBuf};
+
+use swis::quant::{quantize, Alpha, QuantConfig};
+use swis::util::json;
+use swis::util::npy;
+
+fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct Case {
+    key: String,
+    shape: Vec<usize>,
+    group_size: usize,
+    n_shifts: usize,
+    consecutive: bool,
+}
+
+fn load_cases() -> (std::collections::HashMap<String, npy::NpyArray>, Vec<Case>) {
+    let data = npy::load_npz(&art_dir().join("golden_quant.npz")).unwrap();
+    let raw = std::fs::read_to_string(art_dir().join("golden_quant.json")).unwrap();
+    let j = json::parse(&raw).unwrap();
+    let cases = j
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| Case {
+            key: c.get("key").unwrap().as_str().unwrap().to_string(),
+            shape: c
+                .get("shape")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect(),
+            group_size: c.get("group_size").unwrap().as_usize().unwrap(),
+            n_shifts: c.get("n_shifts").unwrap().as_usize().unwrap(),
+            consecutive: c.get("consecutive").unwrap().as_bool().unwrap(),
+        })
+        .collect();
+    (data, cases)
+}
+
+#[test]
+fn rust_quantizer_matches_python_exactly() {
+    let (data, cases) = load_cases();
+    assert!(!cases.is_empty());
+    for c in &cases {
+        let w = data[&format!("{}_w", c.key)].as_f64();
+        let cfg = QuantConfig {
+            n_shifts: c.n_shifts,
+            group_size: c.group_size,
+            alpha: Alpha::ONE,
+            consecutive: c.consecutive,
+        };
+        let p = quantize(w.data(), &c.shape, &cfg).unwrap();
+
+        // shifts: (n_groups, n_shifts) i64 in the npz
+        let g_shifts = data[&format!("{}_shifts", c.key)].as_i64();
+        assert_eq!(
+            p.shifts.iter().map(|&s| s as i64).collect::<Vec<_>>(),
+            g_shifts.data(),
+            "{}: shift values diverge (cfg {:?})",
+            c.key,
+            (c.n_shifts, c.group_size, c.consecutive)
+        );
+
+        // masks: (n_groups, group_size, n_shifts)
+        let g_masks = data[&format!("{}_masks", c.key)].as_i64();
+        assert_eq!(
+            p.masks.iter().map(|&m| m as i64).collect::<Vec<_>>(),
+            g_masks.data(),
+            "{}: masks diverge",
+            c.key
+        );
+
+        // signs
+        let g_signs = data[&format!("{}_signs", c.key)].as_i64();
+        assert_eq!(
+            p.signs.iter().map(|&s| s as i64).collect::<Vec<_>>(),
+            g_signs.data(),
+            "{}: signs diverge",
+            c.key
+        );
+
+        // dequantized floats (scale is f64-exact on both sides)
+        let g_deq = data[&format!("{}_dequant", c.key)].as_f64();
+        let deq = p.to_f64();
+        for (i, (a, b)) in deq.iter().zip(g_deq.data()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "{}: dequant[{}] {} != {}",
+                c.key,
+                i,
+                a,
+                b
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_covers_both_schemes_and_groups() {
+    let (_, cases) = load_cases();
+    assert!(cases.iter().any(|c| c.consecutive));
+    assert!(cases.iter().any(|c| !c.consecutive));
+    assert!(cases.iter().any(|c| c.group_size == 1));
+    assert!(cases.iter().any(|c| c.group_size == 4));
+}

@@ -1,0 +1,170 @@
+//! L1∘L3 composition: execute the AOT-lowered Pallas kernel artifacts
+//! from Rust, feeding operands packed by the RUST quantizer — proving the
+//! packed format, the kernel's operand layout, and the PJRT runtime all
+//! agree across the language boundary.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use swis::quant::{quantize, Alpha, QuantConfig};
+use swis::runtime::{Manifest, ModelBundle, Runtime};
+use swis::util::npy;
+use swis::util::rng::Rng;
+use swis::util::tensor::{allclose, Tensor};
+
+fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Pack a filters-first (K, fan_in) float matrix into the kernel's
+/// operand layout — one shared shift set (the whole matrix as a single
+/// group, so `powers` is global): masks (S, fan_in, K), signs (fan_in,
+/// K), powers (S,), scale.
+fn kernel_operands(
+    w: &[f64],
+    k: usize,
+    fan_in: usize,
+    n_shifts: usize,
+) -> (Tensor<f32>, Tensor<f32>, Tensor<f32>, f32) {
+    let cfg = QuantConfig {
+        n_shifts,
+        group_size: k * fan_in,
+        alpha: Alpha::ONE,
+        consecutive: false,
+    };
+    let p = quantize(w, &[1, k * fan_in], &cfg).unwrap();
+    assert_eq!(p.n_groups(), 1);
+    let mut masks = vec![0f32; n_shifts * fan_in * k];
+    let mut signs = vec![0f32; fan_in * k];
+    for f in 0..k {
+        for i in 0..fan_in {
+            let lane = f * fan_in + i;
+            signs[i * k + f] = p.signs[lane] as f32;
+            for s in 0..n_shifts {
+                masks[s * fan_in * k + i * k + f] = p.masks[lane * n_shifts + s] as f32;
+            }
+        }
+    }
+    let powers: Vec<f32> = (0..n_shifts)
+        .map(|s| (1u32 << p.shifts[s]) as f32)
+        .collect();
+    (
+        Tensor::new(&[n_shifts, fan_in, k], masks).unwrap(),
+        Tensor::new(&[fan_in, k], signs).unwrap(),
+        Tensor::new(&[n_shifts], powers).unwrap(),
+        p.scale as f32,
+    )
+}
+
+#[test]
+fn standalone_kernel_artifact_runs_from_rust() {
+    // swis_matmul.hlo.txt: a (64,128) @ packed(128->64 filters), S=4
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.compile_hlo_text(&art_dir().join("swis_matmul.hlo.txt")).unwrap();
+
+    let (m, kk, n, s) = (64usize, 128usize, 64usize, 4usize);
+    let mut rng = Rng::new(5);
+    let w = rng.normal_vec(n * kk, 0.0, 0.05); // filters-first (N, K)
+    let (masks, signs, powers, scale) = kernel_operands(&w, n, kk, s);
+    let a: Vec<f32> = (0..m * kk).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+    let a_t = Tensor::new(&[m, kk], a.clone()).unwrap();
+
+    let out = exe
+        .run_f32(&[a_t, masks.clone(), signs.clone(), powers.clone()])
+        .unwrap()
+        .remove(0);
+    assert_eq!(out.shape(), &[m, n]);
+
+    // reference: a @ (signs * sum_s powers[s]*masks[s]) — f64 accumulate
+    let mut expect = vec![0f32; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0f64;
+            for i in 0..kk {
+                let mut wv = 0f64;
+                for si in 0..s {
+                    wv += powers.data()[si] as f64
+                        * masks.data()[si * kk * n + i * n + c] as f64;
+                }
+                wv *= signs.data()[i * n + c] as f64;
+                acc += a[r * kk + i] as f64 * wv;
+            }
+            expect[r * n + c] = acc as f32;
+        }
+    }
+    assert!(
+        allclose(out.data(), &expect, 1e-2, 1e-4),
+        "kernel artifact output diverges from rust reference"
+    );
+    let _ = scale; // standalone kernel is unscaled
+}
+
+#[test]
+fn swis_conv1_artifact_matches_dequantized_model() {
+    // forward_swis_conv1 (Pallas conv1 on packed operands) vs the plain
+    // model artifact with conv1 swapped for its dequantized weights.
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&art_dir()).unwrap();
+    let spec = manifest.find("model_swis_conv1", Some(8)).unwrap();
+    let exe = rt.compile_hlo_text(&art_dir().join(&spec.file)).unwrap();
+
+    let bundle = ModelBundle::load(&rt, &art_dir(), "model").unwrap();
+    let npz = npy::load_npz(&art_dir().join("dataset.npz")).unwrap();
+    let x = npz["x_test"].as_f32();
+    let imgs = Tensor::new(&[8, 32, 32, 3], x.data()[..8 * 3072].to_vec()).unwrap();
+
+    // conv1 HWIO (3,3,3,32) -> filters-first (32, 27)
+    let conv1 = &bundle.weights["conv1"];
+    let (k, fan_in) = (32usize, 27usize);
+    let mut wf = vec![0f64; k * fan_in];
+    for i in 0..fan_in {
+        for o in 0..k {
+            wf[o * fan_in + i] = conv1.data()[i * k + o] as f64;
+        }
+    }
+    let n_shifts = 3usize;
+    let (masks, signs, powers, scale) = kernel_operands(&wf, k, fan_in, n_shifts);
+
+    // inputs: images, masks, signs, powers, scale, conv1_b, then the rest
+    let mut inputs = vec![
+        imgs.clone(),
+        masks,
+        signs,
+        powers,
+        Tensor::scalar(scale),
+        bundle.weights["conv1_b"].clone(),
+    ];
+    for name in &bundle.weight_order {
+        if name == "conv1" || name == "conv1_b" {
+            continue;
+        }
+        inputs.push(bundle.weights[name].clone());
+    }
+    assert_eq!(inputs.len(), spec.inputs.len(), "input arity vs manifest");
+    let kernel_logits = exe.run_f32(&inputs).unwrap().remove(0);
+    assert_eq!(kernel_logits.shape(), &[8, 10]);
+
+    // reference: plain model with conv1 dequantized the same way
+    let cfg = QuantConfig {
+        n_shifts,
+        group_size: k * fan_in,
+        alpha: Alpha::ONE,
+        consecutive: false,
+    };
+    let p = quantize(&wf, &[1, k * fan_in], &cfg).unwrap();
+    let dq = p.to_f64();
+    let mut conv1_q = vec![0f32; fan_in * k];
+    for i in 0..fan_in {
+        for o in 0..k {
+            conv1_q[i * k + o] = dq[o * fan_in + i] as f32;
+        }
+    }
+    let mut wq: HashMap<String, Tensor<f32>> = bundle.weights.clone();
+    wq.insert("conv1".into(), Tensor::new(&[3, 3, 3, 32], conv1_q).unwrap());
+    let ref_logits = bundle.infer(&imgs, Some(&wq)).unwrap();
+
+    assert!(
+        allclose(kernel_logits.data(), ref_logits.data(), 1e-2, 1e-3),
+        "Pallas-conv1 logits diverge from dequantized-model logits"
+    );
+}

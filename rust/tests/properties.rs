@@ -1,0 +1,156 @@
+//! Cross-module property tests (util::check harness): invariants that
+//! should hold for ANY configuration, exercised under randomized inputs.
+
+use swis::arch::pe::PeKind;
+use swis::nets::{by_name, ConvLayer};
+use swis::quant::serialize;
+use swis::quant::{quantize, Alpha, QuantConfig};
+use swis::schedule::quantize_or_schedule;
+use swis::sim::{dram_traffic, simulate_layer, ArrayConfig, ExecScheme, SchemeKind};
+use swis::util::check::props;
+use swis::util::rng::Rng;
+use swis::util::stats::rmse;
+
+fn random_cfg(rng: &mut Rng) -> QuantConfig {
+    QuantConfig {
+        n_shifts: 1 + rng.below(5) as usize,
+        group_size: [1usize, 2, 4, 8, 16][rng.below(5) as usize],
+        alpha: Alpha::from_f64([0.0, 0.5, 1.0, 4.0][rng.below(4) as usize]),
+        consecutive: rng.bool(0.5),
+    }
+}
+
+#[test]
+fn quantize_error_bounded_by_half_gap() {
+    // dequantized int8 magnitude error is bounded by half the largest
+    // codebook gap (<= 64 at N=1), in float units: scale * bound
+    props(60, |rng| {
+        let cfg = random_cfg(rng);
+        let sigma = rng.range_f64(0.01, 0.3);
+        let w = rng.normal_vec(8 * 24, 0.0, sigma);
+        let p = quantize(&w, &[8, 24], &cfg).map_err(|e| e.to_string())?;
+        let deq = p.to_f64();
+        let bound = p.scale * 128.0;
+        for (a, b) in w.iter().zip(&deq) {
+            if (a - b).abs() > bound {
+                return Err(format!("error {} > bound {}", (a - b).abs(), bound));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serialize_roundtrip_any_config() {
+    props(40, |rng| {
+        let cfg = random_cfg(rng);
+        let k = 2 + rng.below(12) as usize;
+        let fan_in = 3 + rng.below(40) as usize;
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.08);
+        let p = quantize(&w, &[k, fan_in], &cfg).map_err(|e| e.to_string())?;
+        let q = serialize::from_bytes(&serialize::to_bytes(&p).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        if p.to_f64() != q.to_f64() {
+            return Err("dequant changed across serialize roundtrip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduled_rmse_interpolates_uniform_ends() {
+    props(20, |rng| {
+        let w = rng.normal_vec(16 * 32, 0.0, 0.05);
+        let lo = 1 + rng.below(3) as usize;
+        let target = lo as f64 + 0.5;
+        let a = Alpha::ONE;
+        let p_lo = quantize_or_schedule(&w, &[16, 32], lo as f64, 4, false, a)
+            .map_err(|e| e.to_string())?;
+        let p_mid = quantize_or_schedule(&w, &[16, 32], target, 4, false, a)
+            .map_err(|e| e.to_string())?;
+        let p_hi = quantize_or_schedule(&w, &[16, 32], lo as f64 + 1.0, 4, false, a)
+            .map_err(|e| e.to_string())?;
+        let (e_lo, e_mid, e_hi) = (
+            rmse(&w, &p_lo.to_f64()),
+            rmse(&w, &p_mid.to_f64()),
+            rmse(&w, &p_hi.to_f64()),
+        );
+        if !(e_hi - 1e-12 <= e_mid && e_mid <= e_lo + 1e-12) {
+            return Err(format!("not interpolating: {e_lo} / {e_mid} / {e_hi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_cycles_monotone_in_shifts_and_array() {
+    props(30, |rng| {
+        let layer = ConvLayer::new(
+            "p",
+            [8usize, 16, 28][rng.below(3) as usize],
+            [8usize, 32, 64][rng.below(3) as usize],
+            3,
+            1 + rng.below(2) as usize,
+            1,
+            [8usize, 16, 64][rng.below(3) as usize],
+        );
+        let cfg = ArrayConfig::paper_baseline(PeKind::SingleShift);
+        let n = 1.0 + rng.below(6) as f64;
+        let a = simulate_layer(&layer, &cfg, &ExecScheme::swis(n));
+        let b = simulate_layer(&layer, &cfg, &ExecScheme::swis(n + 1.0));
+        if b.cycles < a.cycles {
+            return Err(format!("cycles fell with more shifts: {} -> {}", a.cycles, b.cycles));
+        }
+        // a 16x16 array is never slower than 8x8
+        let big = ArrayConfig::paper_baseline(PeKind::SingleShift).with_size(16, 16);
+        let c = simulate_layer(&layer, &big, &ExecScheme::swis(n));
+        if c.cycles > a.cycles {
+            return Err("bigger array got slower".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn traffic_monotone_in_weight_bits() {
+    props(30, |rng| {
+        let net = by_name("resnet18").unwrap();
+        let layer = &net.layers[rng.below(net.layers.len() as u64) as usize];
+        let cfg = ArrayConfig::paper_baseline(PeKind::SingleShift);
+        let n = 1.0 + rng.below(4) as f64;
+        let t1 = dram_traffic(layer, &cfg, &ExecScheme::swis(n));
+        let t2 = dram_traffic(layer, &cfg, &ExecScheme::swis(n + 1.0));
+        let fx = dram_traffic(layer, &cfg, &ExecScheme::new(SchemeKind::Fixed8, 8.0));
+        if t2.dram_wgt_rd < t1.dram_wgt_rd {
+            return Err("weight traffic fell with more shifts".into());
+        }
+        // compressed weights never cost MORE total DRAM than 8-bit (the
+        // loop-order chooser minimizes over both strategies, and both
+        // strategies' totals shrink with smaller weights)
+        if t1.dram_total() > fx.dram_total() + 1e-9 {
+            return Err(format!(
+                "SWIS total {} > fixed8 total {}",
+                t1.dram_total(),
+                fx.dram_total()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn effective_shifts_equals_weighted_filter_mean() {
+    props(20, |rng| {
+        let w = rng.normal_vec(16 * 24, 0.0, 0.05);
+        let t = 1.5 + rng.below(5) as f64 * 0.5;
+        let p = quantize_or_schedule(&w, &[16, 24], t, 4, false, Alpha::ONE)
+            .map_err(|e| e.to_string())?;
+        if let Some(fs) = &p.filter_shifts {
+            let mean = fs.iter().sum::<usize>() as f64 / fs.len() as f64;
+            if (p.effective_shifts() - mean).abs() > 1e-9 {
+                return Err(format!("effective {} != mean {}", p.effective_shifts(), mean));
+            }
+        }
+        Ok(())
+    });
+}

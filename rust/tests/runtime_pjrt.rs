@@ -1,0 +1,120 @@
+//! Integration: load AOT HLO-text artifacts and execute via PJRT, check
+//! numerics against build-time goldens (artifacts/golden_quant.json holds
+//! the baseline accuracy; dataset.npz the synth-CIFAR test set).
+
+use std::path::{Path, PathBuf};
+
+use swis::runtime::{ModelBundle, Runtime};
+use swis::util::npy;
+use swis::util::tensor::Tensor;
+
+fn art_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_testset(n: usize) -> (Tensor<f32>, Vec<usize>) {
+    let npz = npy::load_npz(&art_dir().join("dataset.npz")).unwrap();
+    let x = npz["x_test"].as_f32();
+    let y = npz["y_test"].as_i64();
+    let per: usize = x.shape()[1..].iter().product();
+    let imgs = Tensor::new(
+        &[n, 32, 32, 3],
+        x.data()[..n * per].to_vec(),
+    )
+    .unwrap();
+    let labels = y.data()[..n].iter().map(|&v| v as usize).collect();
+    (imgs, labels)
+}
+
+fn accuracy(logits: &Tensor<f32>, labels: &[usize]) -> f64 {
+    let n = logits.shape()[0];
+    let c = logits.shape()[1];
+    let mut ok = 0usize;
+    for i in 0..n {
+        let row = &logits.data()[i * c..(i + 1) * c];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if arg == labels[i] {
+            ok += 1;
+        }
+    }
+    ok as f64 / n as f64
+}
+
+#[test]
+fn model_executes_and_matches_baseline_accuracy() {
+    let rt = Runtime::cpu().unwrap();
+    let bundle = ModelBundle::load(&rt, &art_dir(), "model").unwrap();
+    let (imgs, labels) = load_testset(64);
+    let logits = bundle.infer(&imgs, None).unwrap();
+    assert_eq!(logits.shape(), &[64, 10]);
+    let acc = accuracy(&logits, &labels);
+    // the build-time baseline is ~0.92 on the full test set; 64 samples
+    // gives a loose bound
+    assert!(acc > 0.7, "fp32 accuracy {acc}");
+}
+
+#[test]
+fn batch_padding_roundtrip() {
+    let rt = Runtime::cpu().unwrap();
+    let bundle = ModelBundle::load(&rt, &art_dir(), "model").unwrap();
+    let (imgs, _) = load_testset(8);
+    // run 3 images: pads into the b8 variant and strips back
+    let three = Tensor::new(&[3, 32, 32, 3], imgs.data()[..3 * 3072].to_vec()).unwrap();
+    let l3 = bundle.infer(&three, None).unwrap();
+    assert_eq!(l3.shape(), &[3, 10]);
+    let l8 = bundle.infer(&imgs, None).unwrap();
+    for i in 0..30 {
+        assert!((l3.data()[i] - l8.data()[i]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn quantized_weights_swap_in() {
+    use swis::quant::{quantize, QuantConfig};
+    let rt = Runtime::cpu().unwrap();
+    let bundle = ModelBundle::load(&rt, &art_dir(), "model").unwrap();
+    let (imgs, labels) = load_testset(64);
+
+    // SWIS-quantize every conv/fc weight at 4 shifts, group 4 (dequantized
+    // back to f32 — the graph is weight-agnostic by design)
+    let mut w2 = bundle.weights.clone();
+    for (name, t) in bundle.weights.iter() {
+        if name.ends_with("_b") {
+            continue;
+        }
+        let shape = t.shape().to_vec();
+        // filters-first view: conv HWIO -> [O, HWI] transpose
+        let (k, fan_in, transpose) = match shape.len() {
+            4 => (shape[3], shape[0] * shape[1] * shape[2], true),
+            2 => (shape[1], shape[0], true),
+            _ => continue,
+        };
+        let data = t.to_f64();
+        let mut wf = vec![0.0f64; k * fan_in];
+        if transpose {
+            for i in 0..fan_in {
+                for o in 0..k {
+                    wf[o * fan_in + i] = data.data()[i * k + o];
+                }
+            }
+        }
+        let p = quantize(&wf, &[k, fan_in], &QuantConfig::swis(4, 4)).unwrap();
+        let dq = p.to_f64();
+        let mut back = vec![0.0f32; k * fan_in];
+        for i in 0..fan_in {
+            for o in 0..k {
+                back[i * k + o] = dq[o * fan_in + i] as f32;
+            }
+        }
+        w2.insert(name.clone(), Tensor::new(&shape, back).unwrap());
+    }
+    let logits = bundle.infer(&imgs, Some(&w2)).unwrap();
+    let acc = accuracy(&logits, &labels);
+    // SWIS@4 shifts should stay close to the FP32 baseline (paper Table 3)
+    assert!(acc > 0.6, "SWIS-4 accuracy {acc}");
+}
