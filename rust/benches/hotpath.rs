@@ -2,6 +2,15 @@
 //! quantizer, scheduler, simulator, PJRT execute, and coordinator
 //! round-trip. Run before/after every optimization step.
 //!
+//! Since the planner PR this harness also:
+//! * times the PRE-planner scalar path (fresh LUTs per call, sequential
+//!   full scans — `quant::planner::reference`) next to the planner path
+//!   and reports the speedup, asserting both produce bit-identical
+//!   packed output;
+//! * emits a machine-readable `BENCH_hotpath.json` at the repo root
+//!   (op, config, median ms, Mw/s, scalar-reference ms, speedup) so the
+//!   perf trajectory is tracked PR over PR.
+//!
 //! Run: cargo bench --bench hotpath
 
 #[path = "bench_common.rs"]
@@ -14,54 +23,231 @@ use bench_common::{art_dir, time_median};
 use swis::arch::pe::PeKind;
 use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
 use swis::nets::{by_name, surrogate_weights};
+use swis::quant::combos::mask_bits;
+use swis::quant::planner::{self, reference};
+use swis::quant::swis::{group_mags, GroupedMags};
 use swis::quant::{quantize, QuantConfig};
 use swis::runtime::{ModelBundle, Runtime};
-use swis::schedule::{schedule_layer, ScheduleConfig};
+use swis::schedule::{nondecreasing_sequences_vals, schedule_layer, ScheduleConfig};
 use swis::sim::{simulate_network, ArrayConfig, ExecScheme};
+use swis::util::json::Json;
 use swis::util::npy;
 use swis::util::rng::Rng;
 use swis::util::tensor::Tensor;
 
+/// One machine-readable bench record.
+struct Record {
+    op: &'static str,
+    config: String,
+    median_ms: f64,
+    mw_per_s: f64,
+    /// Pre-planner scalar path median, when measured for this op.
+    scalar_ref_ms: Option<f64>,
+}
+
+impl Record {
+    fn speedup(&self) -> Option<f64> {
+        self.scalar_ref_ms.map(|r| r / self.median_ms)
+    }
+}
+
 fn main() -> Result<()> {
     println!("== hotpath timings (median of repeats) ==\n");
-    quantizer()?;
-    scheduler()?;
+    let mut recs: Vec<Record> = Vec::new();
+    quantizer(&mut recs)?;
+    scheduler(&mut recs)?;
+    // write the trajectory file as soon as all records exist, so a
+    // failure in the PJRT sections below can't lose the measurements
+    write_json(&recs)?;
     simulator()?;
     runtime()?;
     coordinator()?;
     Ok(())
 }
 
-fn quantizer() -> Result<()> {
+fn quantizer(recs: &mut Vec<Record>) -> Result<()> {
     // ResNet-18's biggest layer: 512 filters x 4608 fan-in = 2.36M weights
     let net = by_name("resnet18").unwrap();
     let layer = net.layer("layer4.1.conv2").unwrap();
     let w = surrogate_weights(layer, 3);
     let shape = layer.weight_shape();
+    println!("planner threads: {}", planner::default_threads());
     for (n, g) in [(3usize, 4usize), (2, 4), (4, 4), (3, 16)] {
         let cfg = QuantConfig::swis(n, g);
         let t = time_median(5, || {
             let _ = quantize(&w, &shape, &cfg).unwrap();
         });
+        // pre-planner scalar path, and a bit-identical-output check
+        let t_ref = time_median(3, || {
+            let _ = reference::quantize_rebuild(&w, &shape, &cfg).unwrap();
+        });
+        let fast = quantize(&w, &shape, &cfg)?;
+        let slow = reference::quantize_rebuild(&w, &shape, &cfg)?;
+        assert_eq!(fast.shifts, slow.shifts, "planner diverged from scalar path");
+        assert_eq!(fast.masks, slow.masks, "planner diverged from scalar path");
         println!(
-            "quantize SWIS N={n} G={g:<2}: {:>8.1} ms  ({:>6.1} Mw/s)",
+            "quantize SWIS N={n} G={g:<2}: {:>8.1} ms  ({:>6.1} Mw/s)  [scalar {:>8.1} ms, {:.2}x]",
             t * 1e3,
-            w.len() as f64 / t / 1e6
+            w.len() as f64 / t / 1e6,
+            t_ref * 1e3,
+            t_ref / t
         );
+        recs.push(Record {
+            op: "quantize",
+            config: format!("swis_n{n}_g{g}_resnet18.layer4.1.conv2"),
+            median_ms: t * 1e3,
+            mw_per_s: w.len() as f64 / t / 1e6,
+            scalar_ref_ms: Some(t_ref * 1e3),
+        });
     }
     let cfg = QuantConfig::swis_c(3, 4);
     let t = time_median(5, || {
         let _ = quantize(&w, &shape, &cfg).unwrap();
     });
+    let t_ref = time_median(3, || {
+        let _ = reference::quantize_rebuild(&w, &shape, &cfg).unwrap();
+    });
     println!(
-        "quantize SWIS-C N=3 G=4: {:>7.1} ms  ({:>6.1} Mw/s)",
+        "quantize SWIS-C N=3 G=4: {:>7.1} ms  ({:>6.1} Mw/s)  [scalar {:>8.1} ms, {:.2}x]",
         t * 1e3,
-        w.len() as f64 / t / 1e6
+        w.len() as f64 / t / 1e6,
+        t_ref * 1e3,
+        t_ref / t
     );
+    recs.push(Record {
+        op: "quantize",
+        config: "swis_c_n3_g4_resnet18.layer4.1.conv2".to_string(),
+        median_ms: t * 1e3,
+        mw_per_s: w.len() as f64 / t / 1e6,
+        scalar_ref_ms: Some(t_ref * 1e3),
+    });
     Ok(())
 }
 
-fn scheduler() -> Result<()> {
+/// The PRE-planner `schedule_layer`, reconstructed from public APIs with
+/// the reference (rebuild + sequential) oracles: per-`n` cost rescans,
+/// then the same two phases, then sequential per-class packing. Returns
+/// (filter_shifts, shifts, masks) for the equality assertion.
+fn schedule_layer_reference(
+    w: &[f64],
+    shape: &[usize],
+    cfg: &ScheduleConfig,
+) -> Result<(Vec<usize>, Vec<u8>, Vec<u8>)> {
+    let gm = group_mags(w, shape, cfg.group_size)?;
+    let k = gm.n_filters;
+    let step = cfg.shift_step.max(1);
+    let hi = ((cfg.target_shifts.ceil() as usize + 1).div_ceil(step) * step)
+        .min(cfg.max_shifts / step * step);
+    // the pre-planner cost oracle: hi independent full passes
+    let costs = reference::cost_table_rebuild(&gm, hi, cfg.consecutive, cfg.alpha);
+    let cost_at = |f: usize, n: usize| -> i64 { costs[n - 1][f] };
+
+    // phase 1: greedy demotion (identical to schedule_layer)
+    let target_total = (cfg.target_shifts * k as f64).round() as i64;
+    let mut shifts_p1 = vec![hi as i64; k];
+    let mut total: i64 = shifts_p1.iter().sum();
+    while total > target_total {
+        let mut order: Vec<usize> = (0..k).filter(|&f| shifts_p1[f] > step as i64).collect();
+        if order.is_empty() {
+            break;
+        }
+        order.sort_by_key(|&f| {
+            let n = shifts_p1[f] as usize;
+            cost_at(f, n - step) - cost_at(f, n)
+        });
+        let n_demote = ((total - target_total) as usize / step).max(1).min((k / 8).max(1));
+        for &f in order.iter().take(n_demote) {
+            shifts_p1[f] -= step as i64;
+            total -= step as i64;
+            if total <= target_total {
+                break;
+            }
+        }
+    }
+
+    // phase 2: snap to SA column blocks (identical to schedule_layer)
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&f| shifts_p1[f]);
+    let n_blocks = k.div_ceil(cfg.sa_cols);
+    let block_sizes: Vec<usize> = (0..n_blocks)
+        .map(|b| cfg.sa_cols.min(k - b * cfg.sa_cols))
+        .collect();
+    let vals: Vec<usize> = (1..=hi).filter(|n| n % step == 0 || step == 1).collect();
+    let seqs = nondecreasing_sequences_vals(&block_sizes, &vals, target_total);
+    let mut best: Option<(i64, Vec<usize>)> = None;
+    for seq in &seqs {
+        let mut tot = 0i64;
+        for (b, &n) in seq.iter().enumerate() {
+            for &f in &order[b * cfg.sa_cols..(b * cfg.sa_cols + block_sizes[b])] {
+                tot += cost_at(f, n);
+            }
+        }
+        if best.as_ref().map_or(true, |(e, _)| tot < *e) {
+            best = Some((tot, seq.clone()));
+        }
+    }
+    let (_, seq) = best.unwrap_or_else(|| {
+        let n = (((cfg.target_shifts / step as f64).round() as usize).max(1) * step)
+            .clamp(step, hi);
+        ((0..k).map(|f| cost_at(f, n)).sum(), vec![n; n_blocks])
+    });
+    let mut final_shifts = vec![0usize; k];
+    for (b, &n) in seq.iter().enumerate() {
+        for &f in &order[b * cfg.sa_cols..(b * cfg.sa_cols + block_sizes[b])] {
+            final_shifts[f] = n;
+        }
+    }
+
+    // packing: sequential reference selection per shift-count class
+    let n_max = *final_shifts.iter().max().unwrap_or(&1);
+    let gs = gm.group_size;
+    let gpf = gm.groups_per_filter;
+    let n_groups = gm.n_groups();
+    let mut shifts = vec![0u8; n_groups * n_max];
+    let mut masks = vec![0u8; n_groups * gs * n_max];
+    let mut by_n: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for (f, &n) in final_shifts.iter().enumerate() {
+        by_n.entry(n).or_default().push(f);
+    }
+    for (&n, filters) in &by_n {
+        let mut sub_mags = Vec::with_capacity(filters.len() * gpf * gs);
+        for &f in filters {
+            sub_mags.extend_from_slice(&gm.mags[f * gpf * gs..(f + 1) * gpf * gs]);
+        }
+        let sub = GroupedMags {
+            mags: sub_mags,
+            signs: vec![1; filters.len() * gpf * gs],
+            scale: gm.scale,
+            n_filters: filters.len(),
+            groups_per_filter: gpf,
+            group_size: gs,
+        };
+        let (best_idx, best_q) =
+            reference::select_groups_rebuild(&sub, n, cfg.consecutive, cfg.alpha);
+        let combos = if cfg.consecutive {
+            swis::quant::combos::consecutive_combos(n, 8)
+        } else {
+            swis::quant::combos::shift_combos(n, 8)
+        };
+        for (si, &f) in filters.iter().enumerate() {
+            for gl in 0..gpf {
+                let g_sub = si * gpf + gl;
+                let g = f * gpf + gl;
+                let combo = &combos[best_idx[g_sub] as usize];
+                shifts[g * n_max..g * n_max + n].copy_from_slice(combo);
+                for i in 0..gs {
+                    let q = best_q[g_sub * gs + i] as i64;
+                    let mb = mask_bits(combo, q);
+                    let base = (g * gs + i) * n_max;
+                    masks[base..base + n].copy_from_slice(&mb);
+                }
+            }
+        }
+    }
+    Ok((final_shifts, shifts, masks))
+}
+
+fn scheduler(recs: &mut Vec<Record>) -> Result<()> {
     let net = by_name("resnet18").unwrap();
     let layer = net.layer("layer3.0.conv2").unwrap(); // 256 x 2304
     let w = surrogate_weights(layer, 4);
@@ -70,7 +256,64 @@ fn scheduler() -> Result<()> {
     let t = time_median(3, || {
         let _ = schedule_layer(&w, &shape, &cfg).unwrap();
     });
-    println!("\nschedule 2.5 shifts (256x2304): {:>6.1} ms", t * 1e3);
+    let t_ref = time_median(2, || {
+        let _ = schedule_layer_reference(&w, &shape, &cfg).unwrap();
+    });
+    // Cross-check: the planner must not change the schedule. The mirror
+    // below hand-copies today's phase heuristics, so a future heuristic
+    // tweak can desync it — in that case warn and withhold the speedup
+    // record rather than aborting the bench (the bit-identical contract
+    // itself is enforced by tests/planner_equiv.rs).
+    let s = schedule_layer(&w, &shape, &cfg)?;
+    let (ref_fs, ref_shifts, ref_masks) = schedule_layer_reference(&w, &shape, &cfg)?;
+    let ref_in_sync =
+        s.filter_shifts == ref_fs && s.packed.shifts == ref_shifts && s.packed.masks == ref_masks;
+    if !ref_in_sync {
+        println!(
+            "WARNING: schedule_layer_reference diverged from schedule_layer — \
+             the bench's pre-PR mirror needs re-syncing; omitting the speedup record"
+        );
+    }
+    if ref_in_sync {
+        println!(
+            "\nschedule 2.5 shifts (256x2304): {:>6.1} ms  [scalar {:>7.1} ms, {:.2}x]",
+            t * 1e3,
+            t_ref * 1e3,
+            t_ref / t
+        );
+    } else {
+        println!("\nschedule 2.5 shifts (256x2304): {:>6.1} ms", t * 1e3);
+    }
+    recs.push(Record {
+        op: "schedule_layer",
+        config: "target2.5_g4_resnet18.layer3.0.conv2".to_string(),
+        median_ms: t * 1e3,
+        mw_per_s: w.len() as f64 / t / 1e6,
+        scalar_ref_ms: if ref_in_sync { Some(t_ref * 1e3) } else { None },
+    });
+
+    // the scheduler's cost oracle in isolation: all-n sweep vs per-n
+    // rescans (the planner's core win)
+    let gm = group_mags(&w, &shape, 4)?;
+    let t_tab = time_median(3, || {
+        let _ = planner::cost_table(&gm, 4, false, swis::quant::Alpha::ONE);
+    });
+    let t_tab_ref = time_median(2, || {
+        let _ = reference::cost_table_rebuild(&gm, 4, false, swis::quant::Alpha::ONE);
+    });
+    println!(
+        "cost table n=1..4 (256x2304):  {:>6.1} ms  [scalar {:>7.1} ms, {:.2}x]",
+        t_tab * 1e3,
+        t_tab_ref * 1e3,
+        t_tab_ref / t_tab
+    );
+    recs.push(Record {
+        op: "cost_table",
+        config: "n1..4_g4_resnet18.layer3.0.conv2".to_string(),
+        median_ms: t_tab * 1e3,
+        mw_per_s: w.len() as f64 / t_tab / 1e6,
+        scalar_ref_ms: Some(t_tab_ref * 1e3),
+    });
     Ok(())
 }
 
@@ -89,7 +332,18 @@ fn simulator() -> Result<()> {
     Ok(())
 }
 
+/// PJRT sections need built artifacts AND the real xla crate; skip
+/// cleanly in offline builds so the quantizer/scheduler numbers (and the
+/// JSON) still land.
+fn pjrt_ready() -> bool {
+    art_dir().join("manifest.json").exists() && Runtime::cpu().is_ok()
+}
+
 fn runtime() -> Result<()> {
+    if !pjrt_ready() {
+        println!("\nPJRT infer: skipped (artifacts/PJRT unavailable in offline build)");
+        return Ok(());
+    }
     let rt = Runtime::cpu()?;
     let bundle = ModelBundle::load(&rt, &art_dir(), "model")?;
     let npz = npy::load_npz(&art_dir().join("dataset.npz"))?;
@@ -110,6 +364,10 @@ fn runtime() -> Result<()> {
 }
 
 fn coordinator() -> Result<()> {
+    if !pjrt_ready() {
+        println!("coordinator: skipped (artifacts/PJRT unavailable in offline build)");
+        return Ok(());
+    }
     let coord = Coordinator::start(
         &art_dir(),
         BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
@@ -168,5 +426,39 @@ fn coordinator() -> Result<()> {
         snap.queue_us.p50
     );
     coord.shutdown()?;
+    Ok(())
+}
+
+/// Emit `BENCH_hotpath.json` at the repo root: the perf trajectory file
+/// downstream tooling tracks PR over PR.
+fn write_json(recs: &[Record]) -> Result<()> {
+    let mut root = Json::obj();
+    root.set("bench", "hotpath");
+    root.set("unit_time", "ms");
+    root.set("unit_throughput", "Mw/s");
+    root.set("threads", planner::default_threads() as u64);
+    let records: Vec<Json> = recs
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("op", r.op);
+            j.set("config", r.config.as_str());
+            j.set("median_ms", r.median_ms);
+            j.set("mw_per_s", r.mw_per_s);
+            if let Some(refms) = r.scalar_ref_ms {
+                j.set("scalar_ref_ms", refms);
+            }
+            if let Some(sp) = r.speedup() {
+                j.set("speedup_vs_scalar", sp);
+            }
+            j
+        })
+        .collect();
+    root.set("records", Json::Arr(records));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpath.json");
+    std::fs::write(&path, root.pretty())?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

@@ -5,9 +5,19 @@
 //! Symposium 2021) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * [`quant`] — the SWIS / SWIS-C quantizers, MSE++ metric, packed
-//!   storage format, truncation baselines (paper Sec. 2, 4.1).
+//!   storage format, truncation baselines (paper Sec. 2, 4.1). The
+//!   compile-path hot loop is `quant::planner`: a process-global LUT
+//!   bank (combo LUTs are data-independent, built once per family and
+//!   cached in `OnceLock`s), a single sweep that scores ALL shift counts
+//!   `n = 1..=8` per group at once (with lossless early-exit and
+//!   monotonicity pruning), and `std::thread::scope` chunking of the
+//!   group sweep — so `quantize`, `schedule_layer`, and
+//!   `allocate_network` scale across cores while staying bit-identical
+//!   to the sequential scalar path (strict-less argmin, earliest-combo
+//!   tie-break).
 //! * [`schedule`] — filter scheduling across systolic-array column groups
-//!   (paper Sec. 4.3).
+//!   (paper Sec. 4.3); consumes the planner's all-`n` cost table in one
+//!   pass instead of one `per_filter_cost` rescan per candidate count.
 //! * [`arch`] — 28 nm PE area/energy models (single/double-shift,
 //!   fixed-point, BitFusion) and storage-compression models incl. DPRed
 //!   (paper Sec. 3.1, 3.3).

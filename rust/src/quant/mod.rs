@@ -1,12 +1,14 @@
 //! SWIS quantization core (paper Sec. 2 & 4): int8 pre-quantization,
-//! shift-subset enumeration, MSE++ scoring, packed storage format, and
-//! the truncation baselines.
+//! shift-subset enumeration, MSE++ scoring, packed storage format, the
+//! truncation baselines, and the [`planner`] — the cached/parallel
+//! engine behind `quantize` and the scheduler's cost oracle.
 
 pub mod alpha_tune;
 pub mod combos;
 pub mod int8;
 pub mod metrics;
 pub mod packed;
+pub mod planner;
 pub mod serialize;
 pub mod swis;
 pub mod truncation;

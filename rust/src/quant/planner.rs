@@ -1,0 +1,584 @@
+//! The quantization planner: the single engine behind `quantize`,
+//! `schedule_layer`, and `allocate_network` (paper Sec. 4.1/4.3 offline
+//! decomposition, treated as one shared sweep in the style of bit-serial
+//! weight-pool cost tables).
+//!
+//! Three ideas, layered:
+//!
+//! 1. **LUT bank** — combo lookup tables are data-independent, keyed only
+//!    by the combo family `(n_shifts, consecutive)`. [`luts`] caches each
+//!    family in a process-global `OnceLock`, so LUTs are built once per
+//!    process instead of once per `quantize`/`per_filter_cost` call.
+//! 2. **All-`n` sweep** — [`cost_table`] computes the best score for
+//!    every shift count `n = 1..=max_n` in ONE pass over the groups,
+//!    instead of `max_n` independent rescans. Two sound prunes keep it
+//!    bit-identical to the naive per-`n` selection: within a family the
+//!    combo scan stops as soon as the score hits the alpha floor (score
+//!    0 ⇒ lossless ⇒ no later combo can be strictly smaller), and across
+//!    families a lossless group stays lossless for every larger `n`
+//!    (codebooks only grow), so the remaining rows are filled with 0.
+//! 3. **Parallel group sweep** — groups are independent, so the sweep is
+//!    chunked over `std::thread::scope` threads (no runtime deps). Every
+//!    chunk writes a disjoint output slice, making results identical for
+//!    any thread count — see the `*_chunked` variants and the
+//!    thread-invariance property test.
+//!
+//! The argmin contract is unchanged: strict-less comparison, earliest
+//! (lexicographic) combo wins ties — bit-identical with the Python
+//! reference. The [`reference`] module keeps the pre-planner scalar path
+//! (fresh LUTs per call, sequential full scans) alive for equivalence
+//! tests and speedup benchmarking.
+
+use std::sync::OnceLock;
+
+use super::combos::{consecutive_combos, shift_combos};
+use super::int8::BITS;
+use super::metrics::{msepp_from_sums, Alpha};
+use super::swis::{build_luts, packed_sums, ComboLut, GroupedMags, PACK_MAX_GS};
+
+/// Const initializer for the bank cells (usable as an array-repeat
+/// element because it is a `const` item, not a shared value).
+#[allow(clippy::declare_interior_mutable_const)]
+const LUT_CELL: OnceLock<Vec<ComboLut>> = OnceLock::new();
+
+/// One `OnceLock` per combo family: `[consecutive][n_shifts - 1]`.
+static LUT_BANK: [[OnceLock<Vec<ComboLut>>; BITS as usize]; 2] =
+    [[LUT_CELL; BITS as usize]; 2];
+
+/// The cached LUTs for a combo family. Built on first use, shared for
+/// the life of the process; combo enumeration order (and hence tie
+/// resolution) is identical to building them fresh.
+pub fn luts(n_shifts: usize, consecutive: bool) -> &'static [ComboLut] {
+    assert!(
+        n_shifts >= 1 && n_shifts <= BITS as usize,
+        "n_shifts out of range: {n_shifts}"
+    );
+    LUT_BANK[consecutive as usize][n_shifts - 1].get_or_init(|| {
+        let combos = if consecutive {
+            consecutive_combos(n_shifts, BITS)
+        } else {
+            shift_combos(n_shifts, BITS)
+        };
+        build_luts(&combos)
+    })
+}
+
+/// Worker threads for the group sweep: `SWIS_THREADS` env override, else
+/// available parallelism capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SWIS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Below this many magnitude lanes, spawn overhead beats the win and the
+/// auto entry points run inline. Only the NON-`_chunked` wrappers apply
+/// this — an explicit `n_threads` is always honored, so tests can force
+/// the chunked path on small inputs.
+const PARALLEL_MIN_LANES: usize = 1 << 13;
+
+/// [`default_threads`], degraded to 1 for inputs too small to amortize
+/// thread spawns.
+pub(crate) fn auto_threads(lanes: usize) -> usize {
+    if lanes < PARALLEL_MIN_LANES {
+        1
+    } else {
+        default_threads()
+    }
+}
+
+/// Whether `score == 0` is provably the global floor for this alpha, so
+/// an argmin scan may stop there: den·Σe² + num·(Σe)² ≥ 0 whenever both
+/// coefficients are non-negative (den > 0 additionally forces Σe² = 0,
+/// i.e. a lossless group).
+#[inline]
+fn zero_is_floor(alpha: Alpha) -> bool {
+    alpha.num >= 0 && alpha.den > 0
+}
+
+/// Argmin over a family's combos for one magnitude pattern, returning
+/// `(combo index, score)`. Strict-less comparison, earliest combo wins
+/// ties; when zero is the alpha floor the scan stops at the first
+/// lossless combo (no later combo can be strictly smaller).
+#[inline]
+pub fn best_combo_scored(mags: &[u8], luts: &[ComboLut], alpha: Alpha) -> (u32, i64) {
+    let floor_exit = zero_is_floor(alpha);
+    let mut best_err = i64::MAX;
+    let mut best = 0u32;
+    if mags.len() <= PACK_MAX_GS {
+        for (ci, lut) in luts.iter().enumerate() {
+            let (se, sq) = packed_sums(lut, mags);
+            let score = msepp_from_sums(se, sq, alpha);
+            if score < best_err {
+                best_err = score;
+                best = ci as u32;
+                if floor_exit && score == 0 {
+                    break;
+                }
+            }
+        }
+    } else {
+        for (ci, lut) in luts.iter().enumerate() {
+            let mut se = 0i64;
+            let mut sq = 0i64;
+            for &m in mags {
+                let e = lut.e[m as usize] as i64;
+                se += e;
+                sq += e * e;
+            }
+            let score = msepp_from_sums(se, sq, alpha);
+            if score < best_err {
+                best_err = score;
+                best = ci as u32;
+                if floor_exit && score == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    (best, best_err)
+}
+
+// ---------------------------------------------------------------------
+// group selection (the `quantize` hot path)
+// ---------------------------------------------------------------------
+
+/// Select the best combo per group, in parallel over [`default_threads`].
+/// Returns `(combo index per group, per-lane qmags)` — bit-identical to
+/// the sequential scan for any thread count.
+pub fn select_groups(
+    gm: &GroupedMags,
+    n_shifts: usize,
+    consecutive: bool,
+    alpha: Alpha,
+) -> (Vec<u32>, Vec<u8>) {
+    select_groups_chunked(
+        gm,
+        luts(n_shifts, consecutive),
+        alpha,
+        auto_threads(gm.mags.len()),
+    )
+}
+
+/// [`select_groups`] with an explicit LUT family and thread count. The
+/// requested `n_threads` is honored exactly (capped at one group per
+/// thread) so the chunked path is testable on inputs of any size.
+pub fn select_groups_chunked(
+    gm: &GroupedMags,
+    luts: &[ComboLut],
+    alpha: Alpha,
+    n_threads: usize,
+) -> (Vec<u32>, Vec<u8>) {
+    let n_groups = gm.n_groups();
+    let gs = gm.group_size;
+    let mut best_idx = vec![0u32; n_groups];
+    let mut best_q = vec![0u8; n_groups * gs];
+
+    let nt = n_threads.clamp(1, n_groups.max(1));
+    if nt <= 1 {
+        select_span(gm, luts, alpha, 0, n_groups, &mut best_idx, &mut best_q);
+        return (best_idx, best_q);
+    }
+
+    let chunk = n_groups.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut idx_rest: &mut [u32] = &mut best_idx;
+        let mut q_rest: &mut [u8] = &mut best_q;
+        let mut g0 = 0usize;
+        while g0 < n_groups {
+            let take = chunk.min(n_groups - g0);
+            let tmp_idx = std::mem::take(&mut idx_rest);
+            let (idx_chunk, ir) = tmp_idx.split_at_mut(take);
+            idx_rest = ir;
+            let tmp_q = std::mem::take(&mut q_rest);
+            let (q_chunk, qr) = tmp_q.split_at_mut(take * gs);
+            q_rest = qr;
+            let start = g0;
+            s.spawn(move || {
+                select_span(gm, luts, alpha, start, start + take, idx_chunk, q_chunk);
+            });
+            g0 += take;
+        }
+    });
+    (best_idx, best_q)
+}
+
+/// Sequential selection over groups `[g0, g1)`; output slices are indexed
+/// relative to `g0` (each parallel chunk owns a disjoint slice).
+fn select_span(
+    gm: &GroupedMags,
+    luts: &[ComboLut],
+    alpha: Alpha,
+    g0: usize,
+    g1: usize,
+    out_idx: &mut [u32],
+    out_q: &mut [u8],
+) {
+    let gs = gm.group_size;
+    for g in g0..g1 {
+        let mags = gm.group(g);
+        let (best, _) = best_combo_scored(mags, luts, alpha);
+        out_idx[g - g0] = best;
+        let lut = &luts[best as usize];
+        for (i, &m) in mags.iter().enumerate() {
+            out_q[(g - g0) * gs + i] = lut.q[m as usize];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// all-n cost sweep (the scheduler / allocator cost oracle)
+// ---------------------------------------------------------------------
+
+/// Per-filter cost table for ALL shift counts in one pass over the
+/// groups: `table[n-1][f]` = integer MSE++ of filter `f` quantized
+/// uniformly at `n` shifts. Parallel over [`default_threads`].
+pub fn cost_table(
+    gm: &GroupedMags,
+    max_n: usize,
+    consecutive: bool,
+    alpha: Alpha,
+) -> Vec<Vec<i64>> {
+    cost_table_chunked(gm, max_n, consecutive, alpha, auto_threads(gm.mags.len()))
+}
+
+/// [`cost_table`] with an explicit thread count, honored exactly (capped
+/// at one filter per thread) so the chunked path is testable on inputs
+/// of any size.
+pub fn cost_table_chunked(
+    gm: &GroupedMags,
+    max_n: usize,
+    consecutive: bool,
+    alpha: Alpha,
+    n_threads: usize,
+) -> Vec<Vec<i64>> {
+    assert!(max_n >= 1 && max_n <= BITS as usize, "max_n out of range: {max_n}");
+    let k = gm.n_filters;
+    let families: Vec<&'static [ComboLut]> =
+        (1..=max_n).map(|n| luts(n, consecutive)).collect();
+    if k == 0 {
+        return vec![Vec::new(); max_n];
+    }
+
+    let nt = n_threads.clamp(1, k);
+    if nt <= 1 {
+        return sweep_filter_span(gm, &families, alpha, 0, k);
+    }
+
+    let mut table = vec![vec![0i64; k]; max_n];
+    let chunk = k.div_ceil(nt);
+    let mut parts: Vec<(usize, usize, Vec<Vec<i64>>)> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut f0 = 0usize;
+        while f0 < k {
+            let f1 = (f0 + chunk).min(k);
+            let fam = &families;
+            handles.push((f0, f1, s.spawn(move || sweep_filter_span(gm, fam, alpha, f0, f1))));
+            f0 = f1;
+        }
+        for (f0, f1, h) in handles {
+            parts.push((f0, f1, h.join().expect("planner sweep thread panicked")));
+        }
+    });
+    for (f0, f1, part) in parts {
+        for (ni, row) in part.into_iter().enumerate() {
+            table[ni][f0..f1].copy_from_slice(&row);
+        }
+    }
+    table
+}
+
+/// The single-pass core: for filters `[f0, f1)`, accumulate the best
+/// score of every group under every family. Families are visited in
+/// ascending `n`; once a group scores 0 (lossless) at some `n`, every
+/// larger family also scores 0 — codebooks only grow with `n` — so the
+/// remaining families are skipped (their contribution is exactly 0).
+fn sweep_filter_span(
+    gm: &GroupedMags,
+    families: &[&[ComboLut]],
+    alpha: Alpha,
+    f0: usize,
+    f1: usize,
+) -> Vec<Vec<i64>> {
+    let gpf = gm.groups_per_filter;
+    let prune = zero_is_floor(alpha);
+    let mut out = vec![vec![0i64; f1 - f0]; families.len()];
+    for f in f0..f1 {
+        for gl in 0..gpf {
+            let mags = gm.group(f * gpf + gl);
+            for (ni, fam) in families.iter().enumerate() {
+                let (_, score) = best_combo_scored(mags, fam, alpha);
+                out[ni][f - f0] += score;
+                if prune && score == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-filter cost at a single shift count — the drop-in replacement for
+/// the old `per_filter_cost` scan, now routed through the LUT bank and
+/// the shared argmin helper.
+pub fn per_filter_cost_at(
+    gm: &GroupedMags,
+    n_shifts: usize,
+    consecutive: bool,
+    alpha: Alpha,
+) -> Vec<i64> {
+    let family = luts(n_shifts, consecutive);
+    let k = gm.n_filters;
+    let gpf = gm.groups_per_filter;
+    let mut out = vec![0i64; k];
+    for f in 0..k {
+        for gl in 0..gpf {
+            let (_, score) = best_combo_scored(gm.group(f * gpf + gl), family, alpha);
+            out[f] += score;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// pre-planner reference path (equivalence tests + speedup benchmarks)
+// ---------------------------------------------------------------------
+
+/// The pre-planner scalar path, kept bit-for-bit: fresh LUTs on every
+/// call, sequential full combo scans, no floor pruning. Benchmarks
+/// measure the planner's speedup against this; the equivalence property
+/// test pins the planner's outputs to it.
+pub mod reference {
+    use super::*;
+
+    /// Full-scan argmin with no early exit (the pre-planner loop body).
+    pub fn best_combo_full(mags: &[u8], luts: &[ComboLut], alpha: Alpha) -> (u32, i64) {
+        let mut best_err = i64::MAX;
+        let mut best = 0u32;
+        for (ci, lut) in luts.iter().enumerate() {
+            let (se, sq) = if mags.len() <= PACK_MAX_GS {
+                packed_sums(lut, mags)
+            } else {
+                let mut se = 0i64;
+                let mut sq = 0i64;
+                for &m in mags {
+                    let e = lut.e[m as usize] as i64;
+                    se += e;
+                    sq += e * e;
+                }
+                (se, sq)
+            };
+            let score = msepp_from_sums(se, sq, alpha);
+            if score < best_err {
+                best_err = score;
+                best = ci as u32;
+            }
+        }
+        (best, best_err)
+    }
+
+    /// Sequential group selection with freshly built LUTs.
+    pub fn select_groups_rebuild(
+        gm: &GroupedMags,
+        n_shifts: usize,
+        consecutive: bool,
+        alpha: Alpha,
+    ) -> (Vec<u32>, Vec<u8>) {
+        let combos = if consecutive {
+            consecutive_combos(n_shifts, BITS)
+        } else {
+            shift_combos(n_shifts, BITS)
+        };
+        let luts = build_luts(&combos);
+        let n_groups = gm.n_groups();
+        let gs = gm.group_size;
+        let mut best_idx = vec![0u32; n_groups];
+        let mut best_q = vec![0u8; n_groups * gs];
+        for g in 0..n_groups {
+            let mags = gm.group(g);
+            let (best, _) = best_combo_full(mags, &luts, alpha);
+            best_idx[g] = best;
+            let lut = &luts[best as usize];
+            for (i, &m) in mags.iter().enumerate() {
+                best_q[g * gs + i] = lut.q[m as usize];
+            }
+        }
+        (best_idx, best_q)
+    }
+
+    /// The pre-planner cost oracle: one full rescan per call, fresh LUTs.
+    pub fn per_filter_cost_rebuild(
+        gm: &GroupedMags,
+        n_shifts: usize,
+        consecutive: bool,
+        alpha: Alpha,
+    ) -> Vec<i64> {
+        let combos = if consecutive {
+            consecutive_combos(n_shifts, BITS)
+        } else {
+            shift_combos(n_shifts, BITS)
+        };
+        let luts = build_luts(&combos);
+        let mut out = vec![0i64; gm.n_filters];
+        for g in 0..gm.n_groups() {
+            let (_, score) = best_combo_full(gm.group(g), &luts, alpha);
+            out[g / gm.groups_per_filter] += score;
+        }
+        out
+    }
+
+    /// The pre-planner cost table: `max_n` independent full passes.
+    pub fn cost_table_rebuild(
+        gm: &GroupedMags,
+        max_n: usize,
+        consecutive: bool,
+        alpha: Alpha,
+    ) -> Vec<Vec<i64>> {
+        (1..=max_n)
+            .map(|n| per_filter_cost_rebuild(gm, n, consecutive, alpha))
+            .collect()
+    }
+
+    /// The pre-planner `quantize` end-to-end: fresh LUTs, sequential
+    /// selection, same packing. Benchmarks measure the planner's
+    /// speedup against this.
+    pub fn quantize_rebuild(
+        w: &[f64],
+        shape: &[usize],
+        cfg: &crate::quant::QuantConfig,
+    ) -> anyhow::Result<crate::quant::PackedLayer> {
+        if cfg.n_shifts == 0 || cfg.n_shifts > BITS as usize {
+            anyhow::bail!("n_shifts must be in [1,8], got {}", cfg.n_shifts);
+        }
+        let gm = crate::quant::swis::group_mags(w, shape, cfg.group_size)?;
+        let combos = cfg.combos();
+        let luts = build_luts(&combos);
+        let n_groups = gm.n_groups();
+        let gs = gm.group_size;
+        let mut best_idx = vec![0u32; n_groups];
+        let mut best_q = vec![0u8; n_groups * gs];
+        for g in 0..n_groups {
+            let mags = gm.group(g);
+            let (best, _) = best_combo_full(mags, &luts, cfg.alpha);
+            best_idx[g] = best;
+            let lut = &luts[best as usize];
+            for (i, &m) in mags.iter().enumerate() {
+                best_q[g * gs + i] = lut.q[m as usize];
+            }
+        }
+        Ok(crate::quant::swis::pack(
+            &gm, &luts, &best_idx, &best_q, shape, cfg, None,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::swis::group_mags;
+    use crate::util::rng::Rng;
+
+    fn gm(seed: u64, k: usize, fan_in: usize, gs: usize) -> GroupedMags {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.08);
+        group_mags(&w, &[k, fan_in], gs).unwrap()
+    }
+
+    #[test]
+    fn bank_caches_and_matches_fresh_build() {
+        let a = luts(3, false);
+        let b = luts(3, false);
+        // same allocation both times
+        assert!(std::ptr::eq(a.as_ptr(), b.as_ptr()));
+        let fresh = build_luts(&shift_combos(3, BITS));
+        assert_eq!(a.len(), fresh.len());
+        for (x, y) in a.iter().zip(&fresh) {
+            assert_eq!(x.combo, y.combo);
+            assert_eq!(x.q, y.q);
+            assert_eq!(x.e, y.e);
+            assert_eq!(x.packed, y.packed);
+        }
+        assert_eq!(luts(2, true).len(), 7); // SWIS-C windows: 9 - N
+    }
+
+    #[test]
+    fn selection_matches_reference_scan() {
+        let g = gm(3, 8, 24, 4);
+        for n in 1..=4 {
+            for consecutive in [false, true] {
+                let (pi, pq) =
+                    select_groups_chunked(&g, luts(n, consecutive), Alpha::ONE, 4);
+                let (ri, rq) =
+                    reference::select_groups_rebuild(&g, n, consecutive, Alpha::ONE);
+                assert_eq!(pi, ri, "combo indices diverged at n={n} cons={consecutive}");
+                assert_eq!(pq, rq, "qmags diverged at n={n} cons={consecutive}");
+            }
+        }
+    }
+
+    #[test]
+    fn cost_table_matches_per_n_rescans() {
+        let g = gm(7, 6, 32, 4);
+        for consecutive in [false, true] {
+            let fast = cost_table_chunked(&g, 5, consecutive, Alpha::ONE, 3);
+            let slow = reference::cost_table_rebuild(&g, 5, consecutive, Alpha::ONE);
+            assert_eq!(fast, slow, "cost table diverged (cons={consecutive})");
+        }
+    }
+
+    #[test]
+    fn lossless_groups_early_exit_is_exact() {
+        // An all-zero layer is lossless for EVERY combo: every score is
+        // 0, so this exercises both the floor prune (first combo wins)
+        // and the all-ties path of the argmin contract (earliest combo,
+        // index 0, must be selected everywhere).
+        let w = vec![0.0f64; 32];
+        let g = group_mags(&w, &[4, 8], 4).unwrap();
+        let fast = cost_table_chunked(&g, 4, false, Alpha::ONE, 1);
+        let slow = reference::cost_table_rebuild(&g, 4, false, Alpha::ONE);
+        assert_eq!(fast, slow);
+        assert!(fast.iter().all(|row| row.iter().all(|&c| c == 0)));
+        let (idx, q) = select_groups_chunked(&g, luts(3, false), Alpha::ONE, 2);
+        let (ridx, rq) = reference::select_groups_rebuild(&g, 3, false, Alpha::ONE);
+        assert_eq!(idx, ridx);
+        assert_eq!(q, rq);
+        assert!(idx.iter().all(|&i| i == 0), "ties must resolve to combo 0");
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        let g = gm(11, 16, 64, 4);
+        let base_sel = select_groups_chunked(&g, luts(3, false), Alpha::ONE, 1);
+        let base_tab = cost_table_chunked(&g, 4, false, Alpha::ONE, 1);
+        for nt in [2usize, 3, 8] {
+            assert_eq!(
+                select_groups_chunked(&g, luts(3, false), Alpha::ONE, nt),
+                base_sel,
+                "selection depends on thread count {nt}"
+            );
+            assert_eq!(
+                cost_table_chunked(&g, 4, false, Alpha::ONE, nt),
+                base_tab,
+                "cost table depends on thread count {nt}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_filter_cost_at_matches_reference() {
+        let g = gm(13, 5, 40, 16);
+        for n in [1usize, 3, 6] {
+            assert_eq!(
+                per_filter_cost_at(&g, n, false, Alpha::ONE),
+                reference::per_filter_cost_rebuild(&g, n, false, Alpha::ONE)
+            );
+        }
+    }
+}

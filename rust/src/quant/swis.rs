@@ -3,16 +3,26 @@
 //!
 //! Hot-path notes: for each combo we precompute a 128-entry lookup table
 //! mag -> (qmag, err, err^2), so the inner loop per (group, combo) is
-//! `group_size` table reads plus integer adds; selection over combos is a
-//! strict-less argmin, ties resolving to the earliest (lexicographic)
-//! combo — the cross-language contract with the Python reference.
+//! `group_size` table reads plus integer adds (the packed-u32
+//! accumulator below); selection over combos is a strict-less argmin,
+//! ties resolving to the earliest (lexicographic) combo — the
+//! cross-language contract with the Python reference.
+//!
+//! This module owns the DATA of the hot path (LUT construction, the
+//! packed accumulator, the storage packer); the ENGINE lives in
+//! [`super::planner`]: a process-global LUT bank (LUTs are
+//! data-independent, so they are built once per combo family instead of
+//! once per call), a single all-`n` sweep feeding the scheduler's cost
+//! oracle, and a parallel group sweep chunked over `std::thread::scope`.
+//! `quantize` and `per_filter_cost` here are thin planner front-ends.
 
 use anyhow::{bail, Result};
 
 use super::combos::{consecutive_combos, mask_bits, nearest, shift_combos, codebook};
 use super::int8::{Int8Layer, BITS, MAG_MAX};
-use super::metrics::{msepp_from_sums, Alpha};
+use super::metrics::Alpha;
 use super::packed::PackedLayer;
+use super::planner;
 
 /// Quantizer configuration.
 #[derive(Clone, Copy, Debug)]
@@ -113,7 +123,7 @@ pub struct ComboLut {
 /// Bit position of the squared-error field in [`ComboLut::packed`].
 const PACK_SHIFT: u32 = 12;
 /// Largest group size the packed accumulator supports without overflow.
-const PACK_MAX_GS: usize = 16;
+pub(crate) const PACK_MAX_GS: usize = 16;
 
 pub fn build_luts(combos: &[Vec<u8>]) -> Vec<ComboLut> {
     combos
@@ -138,7 +148,7 @@ pub fn build_luts(combos: &[Vec<u8>]) -> Vec<ComboLut> {
 
 /// Accumulate the packed score fields over a group's lanes.
 #[inline(always)]
-fn packed_sums(lut: &ComboLut, mags: &[u8]) -> (i64, i64) {
+pub(crate) fn packed_sums(lut: &ComboLut, mags: &[u8]) -> (i64, i64) {
     let mut acc = 0u32;
     for &m in mags {
         acc = acc.wrapping_add(lut.packed[m as usize]);
@@ -148,62 +158,17 @@ fn packed_sums(lut: &ComboLut, mags: &[u8]) -> (i64, i64) {
     (se, sq)
 }
 
-/// Argmin over combos for one magnitude pattern (strict-less, earliest
-/// combo wins ties — the cross-language contract).
-/// Argmin over combos for one magnitude pattern (strict-less, earliest
-/// combo wins ties — the cross-language contract).
-#[inline]
-fn best_combo(mags: &[u8], luts: &[ComboLut], alpha: Alpha) -> u32 {
-    let mut best_err = i64::MAX;
-    let mut best = 0u32;
-    if mags.len() <= PACK_MAX_GS {
-        for (ci, lut) in luts.iter().enumerate() {
-            let (se, sq) = packed_sums(lut, mags);
-            let score = msepp_from_sums(se, sq, alpha);
-            if score < best_err {
-                best_err = score;
-                best = ci as u32;
-            }
-        }
-    } else {
-        for (ci, lut) in luts.iter().enumerate() {
-            let mut se = 0i64;
-            let mut sq = 0i64;
-            for &m in mags {
-                let e = lut.e[m as usize] as i64;
-                se += e;
-                sq += e * e;
-            }
-            let score = msepp_from_sums(se, sq, alpha);
-            if score < best_err {
-                best_err = score;
-                best = ci as u32;
-            }
-        }
-    }
-    best
-}
-
 /// Select the best combo per group. Returns (combo index, per-lane qmags).
+///
+/// Thin front-end over [`planner::select_groups_chunked`]: strict-less
+/// argmin, earliest combo wins ties, parallel over the planner's default
+/// thread count (results are thread-count invariant).
 pub fn select_groups(
     gm: &GroupedMags,
     luts: &[ComboLut],
     alpha: Alpha,
 ) -> (Vec<u32>, Vec<u8>) {
-    let n_groups = gm.n_groups();
-    let gs = gm.group_size;
-    let mut best_idx = vec![0u32; n_groups];
-    let mut best_q = vec![0u8; n_groups * gs];
-    for g in 0..n_groups {
-        let mags = gm.group(g);
-        let best = best_combo(mags, luts, alpha);
-        best_idx[g] = best;
-        let lut = &luts[best as usize];
-        for (i, &m) in mags.iter().enumerate() {
-            best_q[g * gs + i] = lut.q[m as usize];
-        }
-    }
-    (best_idx, best_q)
+    planner::select_groups_chunked(gm, luts, alpha, planner::auto_threads(gm.mags.len()))
 }
 
 /// Quantize a filters-first weight tensor with SWIS or SWIS-C.
@@ -212,16 +177,15 @@ pub fn quantize(w: &[f64], shape: &[usize], cfg: &QuantConfig) -> Result<PackedL
         bail!("n_shifts must be in [1,8], got {}", cfg.n_shifts);
     }
     let gm = group_mags(w, shape, cfg.group_size)?;
-    let combos = cfg.combos();
-    let luts = build_luts(&combos);
-    let (best_idx, best_q) = select_groups(&gm, &luts, cfg.alpha);
-    Ok(pack(&gm, &combos, &best_idx, &best_q, shape, cfg, None))
+    let luts = planner::luts(cfg.n_shifts, cfg.consecutive);
+    let (best_idx, best_q) = select_groups(&gm, luts, cfg.alpha);
+    Ok(pack(&gm, luts, &best_idx, &best_q, shape, cfg, None))
 }
 
 /// Pack selection results into the storage format.
 pub(crate) fn pack(
     gm: &GroupedMags,
-    combos: &[Vec<u8>],
+    luts: &[ComboLut],
     best_idx: &[u32],
     best_q: &[u8],
     shape: &[usize],
@@ -234,7 +198,7 @@ pub(crate) fn pack(
     let mut shifts = vec![0u8; n_groups * n];
     let mut masks = vec![0u8; n_groups * gs * n];
     for g in 0..n_groups {
-        let combo = &combos[best_idx[g] as usize];
+        let combo = &luts[best_idx[g] as usize].combo;
         shifts[g * n..g * n + combo.len()].copy_from_slice(combo);
         for i in 0..gs {
             let q = best_q[g * gs + i] as i64;
@@ -258,38 +222,12 @@ pub(crate) fn pack(
 
 /// Layer MSE++ (integer score summed over groups) at a given shift count —
 /// the scheduler's cost oracle. Returns per-filter sums.
+///
+/// Routed through the planner's LUT bank and shared argmin helper; when
+/// the scheduler needs MANY shift counts, [`planner::cost_table`]
+/// computes all of them in one pass instead of calling this per `n`.
 pub fn per_filter_cost(gm: &GroupedMags, n_shifts: usize, consecutive: bool, alpha: Alpha) -> Vec<i64> {
-    let combos = if consecutive {
-        consecutive_combos(n_shifts, BITS)
-    } else {
-        shift_combos(n_shifts, BITS)
-    };
-    let luts = build_luts(&combos);
-    let mut out = vec![0i64; gm.n_filters];
-    for g in 0..gm.n_groups() {
-        let mags = gm.group(g);
-        let best = luts
-            .iter()
-            .map(|lut| {
-                let (se, sq) = if mags.len() <= PACK_MAX_GS {
-                    packed_sums(lut, mags)
-                } else {
-                    let mut se = 0i64;
-                    let mut sq = 0i64;
-                    for &m in mags {
-                        let e = lut.e[m as usize] as i64;
-                        se += e;
-                        sq += e * e;
-                    }
-                    (se, sq)
-                };
-                msepp_from_sums(se, sq, alpha)
-            })
-            .min()
-            .unwrap_or(0);
-        out[g / gm.groups_per_filter] += best;
-    }
-    out
+    planner::per_filter_cost_at(gm, n_shifts, consecutive, alpha)
 }
 
 /// Convenience: quantize and return (packed, dequantized floats, rmse).

@@ -11,8 +11,8 @@ pub use network::{allocate_network, schedule_network, LayerWeights, NetworkAlloc
 use anyhow::{bail, Result};
 
 use crate::quant::metrics::Alpha;
-use crate::quant::swis::{group_mags, per_filter_cost, build_luts, select_groups, GroupedMags, QuantConfig};
-use crate::quant::combos::{consecutive_combos, shift_combos};
+use crate::quant::planner;
+use crate::quant::swis::{group_mags, select_groups, GroupedMags, QuantConfig};
 use crate::quant::int8::BITS;
 use crate::quant::PackedLayer;
 
@@ -69,22 +69,32 @@ pub struct ScheduledLayer {
 }
 
 /// Per-filter cost table: cost[n-1][f] = integer MSE++ of filter f at n
-/// shifts, for n in 1..=max_n. Shared by both phases.
+/// shifts, for n in 1..=max_n. Shared by both phases. One planner sweep
+/// computes every shift count at once (previously `max_n` independent
+/// rescans with freshly built LUTs each).
 fn cost_table(
     gm: &GroupedMags,
     max_n: usize,
     consecutive: bool,
     alpha: Alpha,
 ) -> Vec<Vec<i64>> {
-    (1..=max_n)
-        .map(|n| per_filter_cost(gm, n, consecutive, alpha))
-        .collect()
+    planner::cost_table(gm, max_n, consecutive, alpha)
 }
 
 /// Schedule a filters-first weight tensor (paper Sec. 4.3, both phases).
 pub fn schedule_layer(w: &[f64], shape: &[usize], cfg: &ScheduleConfig) -> Result<ScheduledLayer> {
     if cfg.target_shifts < 1.0 || cfg.target_shifts > cfg.max_shifts as f64 {
         bail!("target_shifts {} out of range", cfg.target_shifts);
+    }
+    if cfg.max_shifts > BITS as usize || cfg.max_shifts == 0 {
+        bail!("max_shifts {} out of [1, {}]", cfg.max_shifts, BITS);
+    }
+    if cfg.shift_step.max(1) > cfg.max_shifts {
+        bail!(
+            "shift_step {} exceeds max_shifts {}",
+            cfg.shift_step,
+            cfg.max_shifts
+        );
     }
     let gm = group_mags(w, shape, cfg.group_size)?;
     let k = gm.n_filters;
@@ -192,12 +202,8 @@ pub fn pack_with_filter_shifts(
         by_n.entry(n).or_default().push(f);
     }
     for (&n, filters) in &by_n {
-        let combos = if cfg.consecutive {
-            consecutive_combos(n, BITS)
-        } else {
-            shift_combos(n, BITS)
-        };
-        let luts = build_luts(&combos);
+        // cached LUT family for this shift count (no per-call rebuild)
+        let luts = planner::luts(n, cfg.consecutive);
         // build a sub-view of the groups belonging to these filters
         let mut sub_mags = Vec::with_capacity(filters.len() * gpf * gs);
         for &f in filters {
@@ -213,12 +219,12 @@ pub fn pack_with_filter_shifts(
             groups_per_filter: gpf,
             group_size: gs,
         };
-        let (best_idx, best_q) = select_groups(&sub, &luts, cfg.alpha);
+        let (best_idx, best_q) = select_groups(&sub, luts, cfg.alpha);
         for (si, &f) in filters.iter().enumerate() {
             for gl in 0..gpf {
                 let g_sub = si * gpf + gl;
                 let g = f * gpf + gl;
-                let combo = &combos[best_idx[g_sub] as usize];
+                let combo = &luts[best_idx[g_sub] as usize].combo;
                 shifts[g * n_max..g * n_max + n].copy_from_slice(combo);
                 for i in 0..gs {
                     let q = best_q[g_sub * gs + i] as i64;

@@ -10,7 +10,8 @@ use anyhow::{bail, Result};
 
 use super::{schedule_layer, ScheduleConfig, ScheduledLayer};
 use crate::quant::metrics::Alpha;
-use crate::quant::swis::{group_mags, per_filter_cost};
+use crate::quant::planner;
+use crate::quant::swis::group_mags;
 
 /// One layer's weights, filters-first.
 pub struct LayerWeights<'a> {
@@ -61,8 +62,11 @@ pub fn allocate_network(
     for l in layers {
         let gm = group_mags(l.w, &l.shape, group_size)?;
         let s2 = gm.scale * gm.scale;
-        let per_n: Vec<f64> = (1..=hi)
-            .map(|n| per_filter_cost(&gm, n, consecutive, alpha).iter().sum::<i64>() as f64 * s2)
+        // one planner sweep per layer yields every shift count at once
+        let table = planner::cost_table(&gm, hi, consecutive, alpha);
+        let per_n: Vec<f64> = table
+            .iter()
+            .map(|row| row.iter().sum::<i64>() as f64 * s2)
             .collect();
         costs.push(per_n);
         sizes.push(l.w.len() as i64);

@@ -1,0 +1,254 @@
+//! Planner equivalence properties: the single-pass / cached / parallel
+//! planner must be BIT-IDENTICAL to the naive per-`n` selection it
+//! replaced — same combo indices, same scores, same packed layers — for
+//! SWIS and SWIS-C, across group sizes, including tie cases; and its
+//! results must not depend on the thread count.
+//!
+//! The naive reference here is written from first principles (fresh
+//! codebook + `nearest` per combo, no LUTs, no pruning, no packing
+//! tricks), so it independently pins the whole LUT/packed-accumulator/
+//! early-exit stack, not just the planner's plumbing.
+
+use swis::quant::combos::{codebook, consecutive_combos, mask_bits, nearest, shift_combos};
+use swis::quant::planner;
+use swis::quant::swis::{group_mags, GroupedMags};
+use swis::quant::{quantize, Alpha, QuantConfig};
+use swis::util::check::props;
+use swis::util::rng::Rng;
+
+const BITS: u32 = 8;
+
+fn combos_for(n: usize, consecutive: bool) -> Vec<Vec<u8>> {
+    if consecutive {
+        consecutive_combos(n, BITS)
+    } else {
+        shift_combos(n, BITS)
+    }
+}
+
+/// Naive argmin for one group: fresh codebook per combo, i64 arithmetic,
+/// strict-less comparison with earliest-combo tie-break. Returns
+/// (combo index, score, per-lane qmags).
+fn naive_best(mags: &[u8], combos: &[Vec<u8>], alpha: Alpha) -> (u32, i64, Vec<u8>) {
+    let mut best = 0u32;
+    let mut best_score = i64::MAX;
+    let mut best_q = Vec::new();
+    for (ci, combo) in combos.iter().enumerate() {
+        let cb = codebook(combo);
+        let mut se = 0i64;
+        let mut sq = 0i64;
+        let mut qs = Vec::with_capacity(mags.len());
+        for &m in mags {
+            let q = nearest(&cb, m as i64);
+            let e = m as i64 - q;
+            se += e;
+            sq += e * e;
+            qs.push(q as u8);
+        }
+        let score = alpha.den * sq + alpha.num * se * se;
+        if score < best_score {
+            best_score = score;
+            best = ci as u32;
+            best_q = qs;
+        }
+    }
+    (best, best_score, best_q)
+}
+
+/// Naive per-group selection over a whole layer.
+fn naive_select(
+    gm: &GroupedMags,
+    combos: &[Vec<u8>],
+    alpha: Alpha,
+) -> (Vec<u32>, Vec<i64>, Vec<u8>) {
+    let gs = gm.group_size;
+    let mut idx = Vec::with_capacity(gm.n_groups());
+    let mut scores = Vec::with_capacity(gm.n_groups());
+    let mut qmags = Vec::with_capacity(gm.n_groups() * gs);
+    for g in 0..gm.n_groups() {
+        let (b, s, q) = naive_best(gm.group(g), combos, alpha);
+        idx.push(b);
+        scores.push(s);
+        qmags.extend_from_slice(&q);
+    }
+    (idx, scores, qmags)
+}
+
+fn planner_scores(gm: &GroupedMags, n: usize, consecutive: bool, alpha: Alpha) -> Vec<i64> {
+    let luts = planner::luts(n, consecutive);
+    (0..gm.n_groups())
+        .map(|g| planner::best_combo_scored(gm.group(g), luts, alpha).1)
+        .collect()
+}
+
+#[test]
+fn planner_equals_naive_selection() {
+    // randomized sweep over scheme x group size x n x alpha
+    props(24, |rng| {
+        let gs = [4usize, 16][rng.below(2) as usize];
+        let n = 1 + rng.below(4) as usize;
+        let consecutive = rng.bool(0.5);
+        let alpha = Alpha::from_f64([0.0, 0.5, 1.0, 4.0][rng.below(4) as usize]);
+        let k = 2 + rng.below(4) as usize;
+        let fan_in = gs * (1 + rng.below(4) as usize);
+        let sigma = rng.range_f64(0.01, 0.2);
+        let w = rng.normal_vec(k * fan_in, 0.0, sigma);
+
+        let gm = group_mags(&w, &[k, fan_in], gs).map_err(|e| e.to_string())?;
+        let combos = combos_for(n, consecutive);
+        let (ni, ns, nq) = naive_select(&gm, &combos, alpha);
+
+        let (pi, pq) =
+            planner::select_groups_chunked(&gm, planner::luts(n, consecutive), alpha, 4);
+        if pi != ni {
+            return Err(format!(
+                "combo indices diverge (gs={gs} n={n} cons={consecutive}): {pi:?} vs {ni:?}"
+            ));
+        }
+        if pq != nq {
+            return Err(format!("qmags diverge (gs={gs} n={n} cons={consecutive})"));
+        }
+        let ps = planner_scores(&gm, n, consecutive, alpha);
+        if ps != ns {
+            return Err(format!("scores diverge (gs={gs} n={n} cons={consecutive})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_layers_equal_naive_packing() {
+    // the full quantize() output (shifts + masks + signs) must equal the
+    // pack of the naive selection
+    props(12, |rng| {
+        let gs = [4usize, 16][rng.below(2) as usize];
+        let n = 1 + rng.below(4) as usize;
+        let consecutive = rng.bool(0.5);
+        let k = 2 + rng.below(3) as usize;
+        let fan_in = gs * (1 + rng.below(3) as usize);
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.07);
+
+        let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive };
+        let p = quantize(&w, &[k, fan_in], &cfg).map_err(|e| e.to_string())?;
+
+        let gm = group_mags(&w, &[k, fan_in], gs).map_err(|e| e.to_string())?;
+        let combos = combos_for(n, consecutive);
+        let (ni, _, nq) = naive_select(&gm, &combos, Alpha::ONE);
+
+        // expected storage, packed exactly like the quantizer packs it
+        let mut exp_shifts = vec![0u8; gm.n_groups() * n];
+        let mut exp_masks = vec![0u8; gm.n_groups() * gs * n];
+        for g in 0..gm.n_groups() {
+            let combo = &combos[ni[g] as usize];
+            exp_shifts[g * n..(g + 1) * n].copy_from_slice(combo);
+            for i in 0..gs {
+                let mb = mask_bits(combo, nq[g * gs + i] as i64);
+                let base = (g * gs + i) * n;
+                exp_masks[base..base + n].copy_from_slice(&mb);
+            }
+        }
+        if p.shifts != exp_shifts {
+            return Err(format!("packed shifts diverge (gs={gs} n={n} cons={consecutive})"));
+        }
+        if p.masks != exp_masks {
+            return Err(format!("packed masks diverge (gs={gs} n={n} cons={consecutive})"));
+        }
+        if p.signs != gm.signs {
+            return Err("packed signs diverge".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_table_equals_naive_per_n_sums() {
+    props(12, |rng| {
+        let gs = [4usize, 16][rng.below(2) as usize];
+        let consecutive = rng.bool(0.5);
+        let alpha = Alpha::from_f64([0.0, 1.0, 2.0][rng.below(3) as usize]);
+        let k = 2 + rng.below(4) as usize;
+        let fan_in = gs * (1 + rng.below(3) as usize);
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.05);
+        let gm = group_mags(&w, &[k, fan_in], gs).map_err(|e| e.to_string())?;
+
+        let max_n = 5usize;
+        let table = planner::cost_table_chunked(&gm, max_n, consecutive, alpha, 3);
+        for n in 1..=max_n {
+            let combos = combos_for(n, consecutive);
+            let mut exp = vec![0i64; k];
+            for g in 0..gm.n_groups() {
+                let (_, s, _) = naive_best(gm.group(g), &combos, alpha);
+                exp[g / gm.groups_per_filter] += s;
+            }
+            if table[n - 1] != exp {
+                return Err(format!(
+                    "cost row n={n} diverges (gs={gs} cons={consecutive}): {:?} vs {exp:?}",
+                    table[n - 1]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tie_cases_resolve_to_earliest_combo() {
+    // all-zero weights: every combo scores 0 for every group — the
+    // earliest (index 0) must win everywhere, matching naive
+    for (gs, consecutive) in [(4usize, false), (4, true), (16, false), (16, true)] {
+        let w = vec![0.0f64; 2 * gs * 2];
+        let gm = group_mags(&w, &[2, gs * 2], gs).unwrap();
+        for n in [1usize, 2, 3] {
+            let combos = combos_for(n, consecutive);
+            let (ni, ns, _) = naive_select(&gm, &combos, Alpha::ONE);
+            let (pi, _) =
+                planner::select_groups_chunked(&gm, planner::luts(n, consecutive), Alpha::ONE, 2);
+            assert_eq!(pi, ni);
+            assert!(pi.iter().all(|&i| i == 0), "tie must pick combo 0");
+            assert!(ns.iter().all(|&s| s == 0));
+        }
+    }
+
+    // repeated single-power magnitudes: multiple combos containing that
+    // power are lossless; earliest must win and match naive
+    let w: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 0.5 } else { 1.0 }).collect();
+    let gm = group_mags(&w, &[2, 8], 4).unwrap();
+    for n in [2usize, 3] {
+        let combos = combos_for(n, false);
+        let (ni, _, nq) = naive_select(&gm, &combos, Alpha::ONE);
+        let (pi, pq) =
+            planner::select_groups_chunked(&gm, planner::luts(n, false), Alpha::ONE, 2);
+        assert_eq!(pi, ni, "n={n}");
+        assert_eq!(pq, nq, "n={n}");
+    }
+}
+
+#[test]
+fn results_invariant_under_thread_count() {
+    let mut rng = Rng::new(0xBEEF);
+    let w = rng.normal_vec(32 * 96, 0.0, 0.06);
+    let gm = group_mags(&w, &[32, 96], 4).unwrap();
+    let luts = planner::luts(3, false);
+
+    let sel1 = planner::select_groups_chunked(&gm, luts, Alpha::ONE, 1);
+    let tab1 = planner::cost_table_chunked(&gm, 6, false, Alpha::ONE, 1);
+    for nt in [2usize, 4, 16] {
+        assert_eq!(
+            planner::select_groups_chunked(&gm, luts, Alpha::ONE, nt),
+            sel1,
+            "selection changed at {nt} threads"
+        );
+        assert_eq!(
+            planner::cost_table_chunked(&gm, 6, false, Alpha::ONE, nt),
+            tab1,
+            "cost table changed at {nt} threads"
+        );
+    }
+
+    // and the public entry points are deterministic end-to-end
+    let cfg = QuantConfig::swis(3, 4);
+    let a = quantize(&w, &[32, 96], &cfg).unwrap();
+    let b = quantize(&w, &[32, 96], &cfg).unwrap();
+    assert_eq!(a.shifts, b.shifts);
+    assert_eq!(a.masks, b.masks);
+}

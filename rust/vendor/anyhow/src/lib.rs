@@ -1,0 +1,175 @@
+//! Offline shim of the `anyhow` crate: the API subset the `swis` crate
+//! uses (`Error`, `Result`, `Context`, `anyhow!`, `bail!`), implemented
+//! with no dependencies so the workspace builds with zero registry
+//! access. Swap the path dependency for the real crate when networked
+//! builds are available — the surface is call-compatible.
+//!
+//! Semantics mirror anyhow where observable:
+//! * `Display` prints the outermost message; `{:#}` prints the whole
+//!   context chain joined by `": "`; `Debug` prints a "Caused by" list.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain.
+//! * `.context(..)` / `.with_context(..)` wrap `Result` errors and turn
+//!   `Option::None` into an error.
+
+use std::fmt;
+
+/// A context-chained error: `msgs[0]` is the outermost message, the last
+/// entry is the root cause.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.msgs.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (shim-only accessor).
+    pub fn chain_messages(&self) -> &[String] {
+        &self.msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.msgs.join(": "))
+        } else {
+            f.write_str(&self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msgs[0])?;
+        if self.msgs.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`,
+// exactly like the real anyhow — that is what makes the blanket `From`
+// below coherent alongside core's reflexive `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formatted message, or any
+/// `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing");
+        assert_eq!(format!("{}", r.unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn f(fail: bool) -> Result<i32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            let s = "42".parse::<i32>()?; // ParseIntError -> Error
+            Ok(s)
+        }
+        assert_eq!(f(false).unwrap(), 42);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with code 7");
+    }
+
+    #[test]
+    fn anyhow_macro_display_arm() {
+        let msg = String::from("plain string");
+        let e = anyhow!(msg);
+        assert_eq!(format!("{e}"), "plain string");
+    }
+}
