@@ -14,7 +14,9 @@ use swis::sim::{simulate_network, ArrayConfig, ExecScheme, SchemeKind};
 use swis::util::cli;
 
 fn main() -> Result<()> {
-    let argv: Vec<String> = std::env::args().skip(2).collect();
+    // cargo strips the "--" separator itself; direct invocation may pass
+    // it through -- drop it either way so flags are never swallowed
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--").collect();
     let args = cli::parse(&argv, &["net"])?;
     let net_name = args.get_or("net", "resnet18");
     let net = by_name(net_name).with_context(|| format!("unknown network '{net_name}'"))?;

@@ -15,7 +15,9 @@ use swis::util::cli;
 use swis::util::stats::rmse;
 
 fn main() -> Result<()> {
-    let argv: Vec<String> = std::env::args().skip(2).collect();
+    // cargo strips the "--" separator itself; direct invocation may pass
+    // it through -- drop it either way so flags are never swallowed
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--").collect();
     let args = cli::parse(&argv, &["net", "group", "seed"])?;
     let net_name = args.get_or("net", "resnet18");
     let group = args.get_usize("group", 4)?;

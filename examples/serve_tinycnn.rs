@@ -1,30 +1,36 @@
-//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the AOT-compiled
-//! TinyCNN, start the coordinator with FP32 + SWIS weight variants, replay
-//! a bursty open-loop request trace against it, and report accuracy,
-//! latency percentiles and throughput per variant.
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): start the
+//! coordinator with FP32 + SWIS weight variants, replay a bursty
+//! open-loop request trace against it, and report accuracy (when the
+//! trained weights + test set are present), latency percentiles and
+//! throughput per variant.
 //!
-//! This is the proof that all three layers compose: the Pallas-bearing
-//! graph was lowered at build time (L1 in L2), and the Rust coordinator
-//! (L3) batches, routes and executes it via PJRT with Python nowhere on
-//! the request path.
+//! The backend is selected at start-up: compiled PJRT artifacts when
+//! `make artifacts` has run, the native SWIS engine otherwise — so this
+//! example is the proof that the serving stack composes end to end in
+//! EVERY environment: batching, variant routing and packed-operand
+//! execution with Python nowhere on the request path.
 //!
-//! Run: cargo run --release --example serve_tinycnn [-- --requests 512]
+//! Run: cargo run --release --example serve_tinycnn \
+//!          [-- --requests 512 --backend auto|pjrt|native]
 
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::coordinator::{BackendKind, BatchPolicy, Coordinator, InferRequest, VariantSpec};
 use swis::util::cli;
 use swis::util::npy;
 use swis::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let argv: Vec<String> = std::env::args().skip(2).collect(); // skip "--"
-    let args = cli::parse(&argv, &["requests", "max-batch", "max-wait-ms", "rate"])?;
+    // cargo strips the "--" separator itself; direct invocation may pass
+    // it through — drop it either way so flags are never swallowed
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--").collect();
+    let args = cli::parse(&argv, &["requests", "max-batch", "max-wait-ms", "rate", "backend"])?;
     let n_req = args.get_usize("requests", 512)?;
     let rate = args.get_f64("rate", 300.0)?; // offered load, req/s
+    let backend = BackendKind::parse(args.get_or("backend", "auto"))?;
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let variants = vec![
@@ -41,15 +47,29 @@ fn main() -> Result<()> {
 
     println!("starting coordinator with variants {names:?} ...");
     let t_start = Instant::now();
-    let coord = Coordinator::start(&dir, policy, variants)?;
-    println!("warm-up (compile + quantize) took {:.2} s", t_start.elapsed().as_secs_f64());
+    let coord = Coordinator::start_with(&dir, policy, variants, backend)?;
+    println!(
+        "backend '{}' warm-up (compile/quantize) took {:.2} s",
+        coord.backend(),
+        t_start.elapsed().as_secs_f64()
+    );
 
-    // real test images so we can report accuracy per variant
-    let npz = npy::load_npz(&dir.join("dataset.npz"))?;
-    let x = npz["x_test"].as_f32();
-    let y = npz["y_test"].as_i64();
+    // real test images when the build-time dataset exists (accuracy is
+    // reportable), synthetic images otherwise (plumbing + perf only);
+    // one flat buffer either way, sliced per request — no per-image Vecs
     let per = 32 * 32 * 3;
-    let n_avail = x.shape()[0];
+    let dataset = dir.join("dataset.npz");
+    let (images, labels): (Vec<f32>, Option<Vec<usize>>) = if dataset.exists() {
+        let npz = npy::load_npz(&dataset)?;
+        let y = npz["y_test"].as_i64();
+        let labels = y.data().iter().map(|&v| v as usize).collect();
+        (npz["x_test"].as_f32().into_data(), Some(labels))
+    } else {
+        println!("(no dataset.npz — synthetic images, accuracy not reportable)");
+        let mut rng = Rng::new(11);
+        ((0..64 * per).map(|_| rng.f64() as f32).collect(), None)
+    };
+    let n_avail = images.len() / per;
 
     // open-loop Poisson-ish arrivals at `rate` req/s
     let mut rng = Rng::new(2026);
@@ -57,7 +77,7 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     for i in 0..n_req {
         let img_idx = i % n_avail;
-        let image = x.data()[img_idx * per..(img_idx + 1) * per].to_vec();
+        let image = images[img_idx * per..(img_idx + 1) * per].to_vec();
         let variant = names[i % names.len()].clone();
         let rx = coord.submit(InferRequest { image, variant: variant.clone() })?;
         handles.push((variant, img_idx, rx));
@@ -69,7 +89,6 @@ fn main() -> Result<()> {
     let mut correct: HashMap<String, (usize, usize)> = HashMap::new();
     for (variant, img_idx, rx) in handles {
         let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
-        let label = y.data()[img_idx] as usize;
         let arg = resp
             .logits
             .iter()
@@ -79,22 +98,25 @@ fn main() -> Result<()> {
             .0;
         let e = correct.entry(variant).or_insert((0, 0));
         e.1 += 1;
-        if arg == label {
+        if labels.as_ref().is_some_and(|y| arg == y[img_idx]) {
             e.0 += 1;
         }
     }
     let wall = t0.elapsed();
 
-    println!("\n== per-variant accuracy (synth-CIFAR test images) ==");
-    let mut keys: Vec<&String> = correct.keys().collect();
-    keys.sort();
-    for k in keys {
-        let (ok, n) = correct[k];
-        println!("  {:<10} {:>5.1}%  ({ok}/{n})", k, 100.0 * ok as f64 / n as f64);
+    if labels.is_some() {
+        println!("\n== per-variant accuracy (synth-CIFAR test images) ==");
+        let mut keys: Vec<&String> = correct.keys().collect();
+        keys.sort();
+        for k in keys {
+            let (ok, n) = correct[k];
+            println!("  {:<10} {:>5.1}%  ({ok}/{n})", k, 100.0 * ok as f64 / n as f64);
+        }
     }
 
     let snap = coord.metrics.snapshot();
     println!("\n== serving metrics ==");
+    println!("  backend         : {}", coord.backend());
     println!("  requests        : {n_req} in {:.2} s", wall.as_secs_f64());
     println!("  throughput      : {:.0} req/s (offered {rate:.0})", n_req as f64 / wall.as_secs_f64());
     println!("  batches         : {} (mean size {:.1})", snap.batches, snap.mean_batch);

@@ -11,6 +11,14 @@
 //!   (op, config, median ms, Mw/s, scalar-reference ms, speedup) so the
 //!   perf trajectory is tracked PR over PR.
 //!
+//! Since the backend PR it additionally times the NATIVE packed GEMM
+//! kernel (`exec::kernel::PreparedGemm`) against the naive per-group
+//! scalar loop on a tinycnn-class layer, per scheme and thread count,
+//! asserting bit-identical output, and emits `BENCH_native_gemm.json`
+//! (Mw/s = weight-MACs per second). The coordinator section now runs on
+//! whichever backend `BackendKind::Auto` selects, so the serving
+//! round-trip numbers land even in offline builds.
+//!
 //! Run: cargo bench --bench hotpath
 
 #[path = "bench_common.rs"]
@@ -59,9 +67,102 @@ fn main() -> Result<()> {
     // write the trajectory file as soon as all records exist, so a
     // failure in the PJRT sections below can't lose the measurements
     write_json(&recs)?;
+    native_gemm()?;
     simulator()?;
     runtime()?;
     coordinator()?;
+    Ok(())
+}
+
+/// The native packed GEMM kernel vs the naive per-group scalar loop on a
+/// tinycnn-class layer (conv5 geometry: 128 filters x 576 fan-in), per
+/// scheme and thread count. Mw/s counts weight-MACs (rows * K * fan_in).
+/// Runs everywhere — no PJRT, no artifacts — and emits
+/// `BENCH_native_gemm.json` at the repo root.
+fn native_gemm() -> Result<()> {
+    use swis::exec::{naive_gemm, PreparedGemm};
+    use swis::schedule::quantize_or_schedule;
+
+    println!("\n== native packed GEMM (tinycnn conv5-class: 128 x 576) ==");
+    let k = 128usize;
+    let fan_in = 576usize;
+    let rows = 1024usize; // one 8x8 map x 16-image batch
+    let mut rng = Rng::new(6);
+    let w = rng.normal_vec(k * fan_in, 0.0, (2.0 / fan_in as f64).sqrt());
+    let acts: Vec<i32> = (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+    let nt_full = planner::default_threads();
+
+    let mut recs: Vec<Record> = Vec::new();
+    for (label, n, g, cons) in [
+        ("swis_n3_g4", 3.0f64, 4usize, false),
+        ("swis_n2_g4", 2.0, 4, false),
+        ("swis_n3_g16", 3.0, 16, false),
+        ("swis_c_n3_g4", 3.0, 4, true),
+        ("swis_sched_n2.5_g4", 2.5, 4, false),
+    ] {
+        let packed = quantize_or_schedule(&w, &[k, fan_in], n, g, cons, swis::quant::Alpha::ONE)?;
+        let prep = PreparedGemm::from_packed(&packed)?;
+        let macs = prep.macs(rows) as f64;
+
+        // the naive per-group scalar loop is slow: fewer repeats, and the
+        // expected output captured from the timed runs themselves
+        let mut expect = Vec::new();
+        let t_naive = time_median(3, || {
+            expect = naive_gemm(&packed, &acts, rows).unwrap();
+        });
+        for nt in [1usize, nt_full] {
+            let mut last = Vec::new();
+            let t = time_median(7, || {
+                last = prep.gemm(&acts, rows, nt).unwrap();
+            });
+            // the whole point: identical integers, any thread count
+            assert_eq!(last, expect, "kernel diverged from naive loop ({label}, nt={nt})");
+            println!(
+                "native_gemm {label:<20} nt={nt:<2}: {:>7.1} ms ({:>7.1} Mw/s)  [naive {:>8.1} ms, {:.1}x]",
+                t * 1e3,
+                macs / t / 1e6,
+                t_naive * 1e3,
+                t_naive / t
+            );
+            recs.push(Record {
+                op: "native_gemm",
+                config: format!("{label}_rows{rows}_nt{nt}"),
+                median_ms: t * 1e3,
+                mw_per_s: macs / t / 1e6,
+                scalar_ref_ms: Some(t_naive * 1e3),
+            });
+        }
+    }
+
+    let mut root = Json::obj();
+    root.set("bench", "native_gemm");
+    root.set("unit_time", "ms");
+    root.set("unit_throughput", "Mw/s (weight-MACs)");
+    root.set("rows", rows as u64);
+    root.set("threads_full", nt_full as u64);
+    let records: Vec<Json> = recs
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("op", r.op);
+            j.set("config", r.config.as_str());
+            j.set("median_ms", r.median_ms);
+            j.set("mw_per_s", r.mw_per_s);
+            if let Some(refms) = r.scalar_ref_ms {
+                j.set("naive_ref_ms", refms);
+            }
+            if let Some(sp) = r.speedup() {
+                j.set("speedup_vs_naive", sp);
+            }
+            j
+        })
+        .collect();
+    root.set("records", Json::Arr(records));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_native_gemm.json");
+    std::fs::write(&path, root.pretty())?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 
@@ -364,25 +465,26 @@ fn runtime() -> Result<()> {
 }
 
 fn coordinator() -> Result<()> {
-    if !pjrt_ready() {
-        println!("coordinator: skipped (artifacts/PJRT unavailable in offline build)");
-        return Ok(());
-    }
+    // BackendKind::Auto serves on PJRT when artifacts exist, on the
+    // native SWIS engine otherwise — the round-trip numbers land either
+    // way (fewer repeats offline: the native fp32 path is compute-bound)
     let coord = Coordinator::start(
         &art_dir(),
         BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
         vec![VariantSpec::fp32()],
     )?;
+    println!("\ncoordinator backend: {}", coord.backend());
+    let reps = if coord.backend() == "pjrt" { 20 } else { 5 };
     let mut rng = Rng::new(1);
     let image: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f64() as f32).collect();
 
     // single-request round-trip (queue + dispatch + execute + deliver)
-    let t = time_median(20, || {
+    let t = time_median(reps, || {
         let _ = coord
             .infer(InferRequest { image: image.clone(), variant: "fp32".into() })
             .unwrap();
     });
-    println!("\ncoordinator round-trip (b=1): {:>7.2} ms", t * 1e3);
+    println!("coordinator round-trip (b=1): {:>7.2} ms", t * 1e3);
 
     // moderate-load burst: 12 concurrent requests (the dispatch-chunking
     // case — before chunking this padded to the b=64 graph)
@@ -400,9 +502,11 @@ fn coordinator() -> Result<()> {
     });
     println!("coordinator 12-req burst    : {:>7.1} ms  ({:>6.0} req/s)", t * 1e3, 12.0 / t);
 
-    // batched throughput: 256 concurrent requests
+    // batched throughput burst (sized down on the native backend, whose
+    // fp32 dense path is compute-bound on the bench machine)
+    let big = if coord.backend() == "pjrt" { 256usize } else { 48 };
     let t = time_median(3, || {
-        let rxs: Vec<_> = (0..256)
+        let rxs: Vec<_> = (0..big)
             .map(|_| {
                 coord
                     .submit(InferRequest { image: image.clone(), variant: "fp32".into() })
@@ -414,9 +518,9 @@ fn coordinator() -> Result<()> {
         }
     });
     println!(
-        "coordinator 256-req burst   : {:>7.1} ms  ({:>6.0} req/s)",
+        "coordinator {big}-req burst   : {:>7.1} ms  ({:>6.0} req/s)",
         t * 1e3,
-        256.0 / t
+        big as f64 / t
     );
     let snap = coord.metrics.snapshot();
     println!("mean batch size             : {:>7.1}", snap.mean_batch);

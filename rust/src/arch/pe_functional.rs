@@ -9,7 +9,13 @@
 //! ([`crate::quant::PackedLayer`]) and the *compute* contract (the
 //! systolic array in [`crate::sim::functional`]): if either side
 //! mis-lays-out masks or shifts, these tests catch it.
+//!
+//! The arithmetic of a shift plane lives in [`crate::exec::core`] — the
+//! one definition shared with the functional simulator and the native
+//! serving kernel; this type adds the PE's *timing* (single- vs
+//! double-shift cycles) and accumulator-width modeling on top.
 
+use crate::exec::core;
 use crate::quant::PackedLayer;
 
 /// One group-MAC datapath. `group_size` parallel lanes; `double_shift`
@@ -41,19 +47,12 @@ impl FunctionalPe {
         self.acc
     }
 
-    /// Process ONE shift cycle: lanes of activations (int8 codes), the
-    /// cycle's mask bits and signs, shifted by `shift`.
-    ///
-    /// Hardware stages modeled: AND-mask -> sign invert -> adder tree ->
-    /// barrel shift -> accumulate.
-    fn shift_cycle(&mut self, acts: &[i32], masks: &[u8], signs: &[i8], shift: u8) {
+    /// Process ONE shift plane: mask-AND, sign invert and adder tree
+    /// (the shared [`core::plane_partial`] semantics), then the barrel
+    /// shift and serial accumulate with the width check.
+    fn shift_cycle(&mut self, layer: &PackedLayer, g: usize, j: usize, acts: &[i32], shift: u8) {
         debug_assert_eq!(acts.len(), self.group_size);
-        let mut tree = 0i64; // adder-tree partial (width 9 + log2 G)
-        for i in 0..self.group_size {
-            let masked = if masks[i] != 0 { acts[i] as i64 } else { 0 };
-            let signed = if signs[i] < 0 { -masked } else { masked };
-            tree += signed;
-        }
+        let tree = core::plane_partial(layer, g, j, acts);
         self.acc += tree << shift;
         debug_assert!(
             self.acc.unsigned_abs() < 1 << (ACC_WIDTH_BITS + 8),
@@ -67,39 +66,27 @@ impl FunctionalPe {
     /// flavor: N for single-shift, ceil(N/2) for double-shift.
     pub fn group_op(&mut self, layer: &PackedLayer, g: usize, acts: &[i32]) -> i64 {
         let n = layer.active_shifts(g);
-        let gs = layer.group_size;
-        debug_assert_eq!(gs, self.group_size);
+        debug_assert_eq!(layer.group_size, self.group_size);
         let shifts = &layer.shifts[g * layer.n_shifts..g * layer.n_shifts + n];
-        let signs = &layer.signs[g * gs..(g + 1) * gs];
         let start = self.acc;
         let mut j = 0;
         while j < n {
-            // gather plane j's mask bits for every lane
-            let plane = |jj: usize| -> Vec<u8> {
-                (0..gs)
-                    .map(|i| layer.masks[(g * gs + i) * layer.n_shifts + jj])
-                    .collect()
-            };
-            if self.double_shift && j + 1 < n {
-                let m0 = plane(j);
-                let m1 = plane(j + 1);
-                self.shift_cycle(acts, &m0, signs, shifts[j]);
-                self.shift_cycle(acts, &m1, signs, shifts[j + 1]);
-                self.cycles += 1; // two planes, one cycle
-                j += 2;
-            } else {
-                let m = plane(j);
-                self.shift_cycle(acts, &m, signs, shifts[j]);
-                self.cycles += 1;
-                j += 1;
+            // one or two planes per cycle, depending on the PE flavor
+            let planes = if self.double_shift && j + 1 < n { 2 } else { 1 };
+            for p in 0..planes {
+                self.shift_cycle(layer, g, j + p, acts, shifts[j + p]);
             }
+            self.cycles += 1;
+            j += planes;
         }
         self.acc - start
     }
 }
 
 /// Reference: the integer dot product the packed group implies,
-/// sum_i act_i * sign_i * mag_i.
+/// sum_i act_i * sign_i * mag_i — deliberately lane-major over
+/// [`PackedLayer::mag`], independent of the plane-major execution path
+/// in [`core`].
 pub fn group_dot_reference(layer: &PackedLayer, g: usize, acts: &[i32]) -> i64 {
     let gs = layer.group_size;
     (0..gs)

@@ -1,16 +1,27 @@
 //! The serving coordinator (L3): dynamic batcher + variant router +
-//! metrics over the PJRT runtime. Python never runs on the request path —
-//! the worker thread owns compiled executables for every batch-size
-//! variant and serves whichever SWIS weight configuration a request
-//! names.
+//! metrics over a pluggable execution backend
+//! ([`crate::runtime::Backend`]). Python never runs on the request path —
+//! the worker thread owns one backend (compiled PJRT executables, or the
+//! native SWIS engine executing packed operands directly) and serves
+//! whichever SWIS weight configuration a request names.
 //!
 //! Architecture (vLLM-router-style, scaled to this paper's scope):
 //!
 //! ```text
 //!   clients --> Coordinator::submit --> [queue] --> worker thread
 //!                                                    |  drain <= max_batch
-//!                                                    |  pick compiled variant
-//!                                                    |  PJRT execute
+//!                                                    |  group by variant
+//!                                                    |  backend.plan_chunks
+//!                                                    v
+//!                                     +--------------+--------------+
+//!                                     | Backend (chosen at start)   |
+//!                                     |   pjrt:   compiled HLO,     |
+//!                                     |           batch variants    |
+//!                                     |   native: packed bit-serial |
+//!                                     |           kernel, dynamic   |
+//!                                     |           batch             |
+//!                                     +--------------+--------------+
+//!                                                    |
 //!                                     response <-----+  per-request channel
 //! ```
 //!
@@ -27,3 +38,7 @@ pub use batcher::{BatchPolicy, PendingBatch};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{Coordinator, InferRequest, InferResponse};
 pub use variants::{quantize_jax_weight, VariantSpec, WeightVariants};
+
+// Backend selection lives in the runtime layer; re-exported here because
+// callers choose it where they start the coordinator.
+pub use crate::runtime::BackendKind;

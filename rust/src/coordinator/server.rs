@@ -1,6 +1,9 @@
-//! The coordinator proper: a leader thread owning the PJRT executables,
-//! fed by an mpsc request queue, dispatching dynamically-assembled
-//! batches and routing each request to its named weight variant.
+//! The coordinator proper: a leader thread owning an execution backend
+//! ([`crate::runtime::Backend`]), fed by an mpsc request queue,
+//! dispatching dynamically-assembled batches and routing each request to
+//! its named weight variant. The backend is chosen at start-up
+//! ([`BackendKind`]): compiled PJRT artifacts when available, the native
+//! SWIS engine otherwise — the serving surface is identical.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -12,8 +15,8 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, PendingBatch};
 use super::metrics::Metrics;
-use super::variants::{VariantSpec, WeightVariants};
-use crate::runtime::{ModelBundle, Runtime};
+use super::variants::VariantSpec;
+use crate::runtime::{create_backend, Backend, BackendKind};
 use crate::util::tensor::Tensor;
 
 /// One inference request: a 32x32x3 image routed to a weight variant.
@@ -50,32 +53,55 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     worker: Option<JoinHandle<Result<()>>>,
     image_len: usize,
+    backend_name: &'static str,
 }
 
 impl Coordinator {
-    /// Start the worker thread: it builds the PJRT runtime, compiles all
-    /// model variants and quantizes the weight sets before accepting
-    /// requests (returns once warm-up is complete).
+    /// Start with automatic backend selection (PJRT when artifacts and
+    /// the runtime are present, native SWIS engine otherwise).
     pub fn start(
         artifacts: &Path,
         policy: BatchPolicy,
         variants: Vec<VariantSpec>,
     ) -> Result<Coordinator> {
+        Coordinator::start_with(artifacts, policy, variants, BackendKind::Auto)
+    }
+
+    /// Start the worker thread on an explicit backend: it compiles /
+    /// quantizes every weight variant before accepting requests (returns
+    /// once warm-up is complete).
+    pub fn start_with(
+        artifacts: &Path,
+        policy: BatchPolicy,
+        variants: Vec<VariantSpec>,
+        backend: BackendKind,
+    ) -> Result<Coordinator> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
         let dir = artifacts.to_path_buf();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<&'static str, String>>();
         let worker = std::thread::Builder::new()
             .name("swis-coordinator".into())
-            .spawn(move || worker_loop(rx, dir, policy, variants, m2, ready_tx))
+            .spawn(move || worker_loop(rx, dir, policy, variants, backend, m2, ready_tx))
             .context("spawning coordinator thread")?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
+        let backend_name = match ready_rx.recv() {
+            Ok(Ok(name)) => name,
             Ok(Err(e)) => bail!("coordinator failed to start: {e}"),
             Err(_) => bail!("coordinator thread died during warm-up"),
-        }
-        Ok(Coordinator { tx, metrics, worker: Some(worker), image_len: 32 * 32 * 3 })
+        };
+        Ok(Coordinator {
+            tx,
+            metrics,
+            worker: Some(worker),
+            image_len: 32 * 32 * 3,
+            backend_name,
+        })
+    }
+
+    /// Which backend the worker ended up on ("pjrt" | "native").
+    pub fn backend(&self) -> &'static str {
+        self.backend_name
     }
 
     /// Submit a request; returns the response channel immediately.
@@ -122,21 +148,16 @@ fn worker_loop(
     dir: std::path::PathBuf,
     policy: BatchPolicy,
     variants: Vec<VariantSpec>,
+    kind: BackendKind,
     metrics: Arc<Metrics>,
-    ready: Sender<Result<(), String>>,
+    ready: Sender<Result<&'static str, String>>,
 ) -> Result<()> {
-    // Warm-up: PJRT client + executables + quantized variants, all owned
-    // by this thread (PJRT handles are not shared across threads).
-    let setup = (|| -> Result<(ModelBundle, WeightVariants)> {
-        let rt = Runtime::cpu()?;
-        let bundle = ModelBundle::load(&rt, &dir, "model")?;
-        let sets = WeightVariants::build(&bundle.weights, &variants)?;
-        Ok((bundle, sets))
-    })();
-    let (bundle, sets) = match setup {
-        Ok(v) => {
-            let _ = ready.send(Ok(()));
-            v
+    // Warm-up: backend construction (PJRT compile or native quantize +
+    // prepare), owned by this thread (PJRT handles are thread-affine).
+    let backend = match create_backend(kind, &dir, &variants) {
+        Ok(b) => {
+            let _ = ready.send(Ok(b.name()));
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
@@ -163,7 +184,7 @@ fn worker_loop(
             }
         }
         if pending.ready() || (shutting_down && !pending.is_empty()) {
-            dispatch(pending.take(), &bundle, &sets, &metrics);
+            dispatch(pending.take(), backend.as_ref(), &metrics);
         }
         if shutting_down && pending.is_empty() {
             return Ok(());
@@ -171,82 +192,75 @@ fn worker_loop(
     }
 }
 
-/// Execute one assembled batch: group by variant, run the compiled graph
-/// per group, deliver responses.
-fn dispatch(jobs: Vec<Job>, bundle: &ModelBundle, sets: &WeightVariants, metrics: &Metrics) {
+/// Execute one assembled batch: group by variant, run the backend per
+/// group in backend-planned chunks, deliver responses.
+fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics) {
     let mut by_variant: HashMap<&str, Vec<&Job>> = HashMap::new();
     for j in &jobs {
         by_variant.entry(j.req.variant.as_str()).or_default().push(j);
     }
     for (variant, group) in by_variant {
-        let weights = sets.get(variant);
-        if weights.is_none() {
+        if !backend.has_variant(variant) {
             for j in &group {
-                let _ = j
-                    .respond
-                    .send(Err(format!("unknown variant '{variant}'")));
+                let _ = j.respond.send(Err(format!("unknown variant '{variant}'")));
             }
             continue;
         }
-        // execute in compiled-size chunks rather than padding the whole
-        // group up to the largest variant (PJRT cost ~affine in batch)
+        // execute in backend-planned chunks rather than padding the whole
+        // group up to the largest compiled size (PJRT cost ~affine in
+        // batch; the native backend takes the group in one dynamic chunk)
         let mut start = 0usize;
-        for chunk in bundle.plan_chunks(group.len()) {
+        for chunk in backend.plan_chunks(group.len()) {
             let end = (start + chunk).min(group.len());
-            run_chunk(&group[start..end], weights, bundle, metrics);
+            run_chunk(&group[start..end], variant, backend, metrics);
             start = end;
         }
     }
 }
 
-/// Execute one compiled-size chunk of same-variant jobs.
-fn run_chunk(
-    group: &[&Job],
-    weights: Option<&HashMap<String, Tensor<f32>>>,
-    bundle: &ModelBundle,
-    metrics: &Metrics,
-) {
+/// Execute one chunk of same-variant jobs.
+fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Metrics) {
     let t0 = Instant::now();
-        let n = group.len();
-        let per = 32 * 32 * 3;
-        let mut data = Vec::with_capacity(n * per);
-        for j in group {
-            data.extend_from_slice(&j.req.image);
+    let n = group.len();
+    let per = 32 * 32 * 3;
+    let mut data = Vec::with_capacity(n * per);
+    for j in group {
+        data.extend_from_slice(&j.req.image);
+    }
+    let images = match Tensor::new(&[n, 32, 32, 3], data) {
+        Ok(t) => t,
+        Err(e) => {
+            for j in group {
+                let _ = j.respond.send(Err(format!("{e:#}")));
+            }
+            return;
         }
-        let images = match Tensor::new(&[n, 32, 32, 3], data) {
-            Ok(t) => t,
-            Err(e) => {
-                for j in group {
-                    let _ = j.respond.send(Err(format!("{e:#}")));
-                }
-                return;
-            }
-        };
-        match bundle.infer(&images, weights) {
-            Ok(logits) => {
-                let exec = t0.elapsed();
-                let classes = logits.shape()[1];
-                let now = Instant::now();
-                let queue_ts: Vec<Duration> =
-                    group.iter().map(|j| t0.duration_since(j.enqueued)).collect();
-                let total_ts: Vec<Duration> =
-                    group.iter().map(|j| now.duration_since(j.enqueued)).collect();
-                // record before delivery so a caller that has all its
-                // responses also sees them reflected in the metrics
-                metrics.record_batch(n, &queue_ts, exec, &total_ts);
-                for (i, j) in group.iter().enumerate() {
-                    let _ = j.respond.send(Ok(InferResponse {
-                        logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
-                        queue: queue_ts[i],
-                        total: total_ts[i],
-                        batch_size: n,
-                    }));
-                }
-            }
-            Err(e) => {
-                for j in group {
-                    let _ = j.respond.send(Err(format!("{e:#}")));
-                }
+    };
+    match backend.infer(variant, &images) {
+        Ok(logits) => {
+            let exec = t0.elapsed();
+            let classes = logits.shape()[1];
+            let now = Instant::now();
+            let queue_ts: Vec<Duration> =
+                group.iter().map(|j| t0.duration_since(j.enqueued)).collect();
+            let total_ts: Vec<Duration> =
+                group.iter().map(|j| now.duration_since(j.enqueued)).collect();
+            // record before delivery so a caller that has all its
+            // responses also sees them reflected in the metrics
+            metrics.record_batch(n, &queue_ts, exec, &total_ts);
+            for (i, j) in group.iter().enumerate() {
+                let _ = j.respond.send(Ok(InferResponse {
+                    logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                    queue: queue_ts[i],
+                    total: total_ts[i],
+                    batch_size: n,
+                }));
             }
         }
+        Err(e) => {
+            for j in group {
+                let _ = j.respond.send(Err(format!("{e:#}")));
+            }
+        }
+    }
 }

@@ -7,9 +7,8 @@
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
-use crate::quant::{Alpha, quantize, QuantConfig};
-use crate::quant::truncation::truncate_weights;
-use crate::schedule::quantize_or_schedule;
+use crate::exec::model::filters_first;
+use crate::exec::WeightTransform;
 use crate::util::tensor::Tensor;
 
 /// A named weight configuration.
@@ -36,22 +35,69 @@ impl VariantSpec {
         VariantSpec { name: format!("swis_c@{n}"), scheme: "swis_c".into(), n_shifts: n, group_size: g }
     }
 
+    /// The backend-agnostic weight transform this variant denotes — the
+    /// single scheme-to-math dispatch shared by the PJRT weight swap
+    /// ([`quantize_jax_weight`]) and the native engine.
+    pub fn transform(&self) -> Result<WeightTransform> {
+        Ok(match self.scheme.as_str() {
+            "fp32" => WeightTransform::Fp32,
+            "swis" | "swis_c" => WeightTransform::Swis {
+                n_shifts: self.n_shifts,
+                group_size: self.group_size,
+                consecutive: self.scheme == "swis_c",
+            },
+            "wgt_trunc" => WeightTransform::Truncate { bits: self.n_shifts as usize },
+            other => bail!("unknown scheme '{other}'"),
+        })
+    }
+
+    /// Parse `"fp32"` or `"<scheme>[@<shifts>]"` where scheme is one of
+    /// `swis`, `swis_c`, `wgt_trunc`. A bare scheme name defaults to 3
+    /// shifts (the paper's headline operating point, Sec. 5) — so
+    /// `"swis"` parses as `swis@3`. Unknown schemes and malformed or
+    /// out-of-range shift counts are hard errors; shifts must be in
+    /// `(0, 8]` (8-bit magnitudes) and integral for `wgt_trunc`.
     pub fn parse(s: &str) -> Result<VariantSpec> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty variant spec");
+        }
         if s == "fp32" {
             return Ok(VariantSpec::fp32());
         }
-        let (scheme, rest) = s.split_once('@').unwrap_or((s, "3"));
-        let n: f64 = rest.parse()?;
+        let (scheme, shifts) = match s.split_once('@') {
+            Some((sc, rest)) => (sc, Some(rest)),
+            None => (s, None),
+        };
+        if !matches!(scheme, "swis" | "swis_c" | "wgt_trunc") {
+            bail!(
+                "unknown variant scheme '{scheme}' in '{s}' \
+                 (expected fp32, swis[@N], swis_c[@N] or wgt_trunc[@N])"
+            );
+        }
+        let n: f64 = match shifts {
+            None => 3.0, // documented default: the paper's 3-shift point
+            Some(r) => r.parse().map_err(|_| {
+                anyhow::anyhow!("malformed shift count '{r}' in variant '{s}'")
+            })?,
+        };
+        if !n.is_finite() || n <= 0.0 || n > 8.0 {
+            bail!("shift count {n} out of range (0, 8] in variant '{s}'");
+        }
         match scheme {
             "swis" => Ok(VariantSpec::swis(n, 4)),
             "swis_c" => Ok(VariantSpec::swis_c(n, 4)),
-            "wgt_trunc" => Ok(VariantSpec {
-                name: format!("wgt_trunc@{n}"),
-                scheme: "wgt_trunc".into(),
-                n_shifts: n,
-                group_size: 4,
-            }),
-            _ => bail!("unknown variant scheme '{scheme}'"),
+            _ => {
+                if n.fract() != 0.0 {
+                    bail!("wgt_trunc needs an integer bit count, got {n} in '{s}'");
+                }
+                Ok(VariantSpec {
+                    name: format!("wgt_trunc@{n}"),
+                    scheme: "wgt_trunc".into(),
+                    n_shifts: n,
+                    group_size: 4,
+                })
+            }
         }
     }
 }
@@ -65,42 +111,19 @@ pub struct WeightVariants {
 /// that operates filters-first, and return it in the original layout.
 ///
 /// jax layouts: conv HWIO (fan-in major, O last), fc (din, dout). Both
-/// put the filter axis LAST, so the transpose is the same.
+/// put the filter axis LAST, so the transpose is the same. The
+/// scheme-to-math mapping is the shared
+/// [`crate::exec::WeightTransform`] — the SAME dispatch the native
+/// backend executes, so a variant name cannot mean different numerics on
+/// different backends.
 pub fn quantize_jax_weight(
     t: &Tensor<f32>,
     spec: &VariantSpec,
 ) -> Result<Tensor<f32>> {
     let shape = t.shape().to_vec();
-    let k = *shape.last().unwrap();
-    let fan_in: usize = shape[..shape.len() - 1].iter().product();
-    let data = t.to_f64();
-    // transpose (fan_in, K) -> (K, fan_in)
-    let mut wf = vec![0.0f64; k * fan_in];
-    for i in 0..fan_in {
-        for o in 0..k {
-            wf[o * fan_in + i] = data.data()[i * k + o];
-        }
-    }
-    let dq: Vec<f64> = match spec.scheme.as_str() {
-        "swis" | "swis_c" => {
-            let consecutive = spec.scheme == "swis_c";
-            if spec.n_shifts.fract() == 0.0 {
-                let cfg = QuantConfig {
-                    n_shifts: spec.n_shifts as usize,
-                    group_size: spec.group_size,
-                    alpha: Alpha::ONE,
-                    consecutive,
-                };
-                quantize(&wf, &[k, fan_in], &cfg)?.to_f64()
-            } else {
-                quantize_or_schedule(&wf, &[k, fan_in], spec.n_shifts, spec.group_size, consecutive, Alpha::ONE)?
-                    .to_f64()
-            }
-        }
-        "wgt_trunc" => truncate_weights(&wf, spec.n_shifts as usize),
-        "fp32" => wf.clone(),
-        other => bail!("unknown scheme {other}"),
-    };
+    let (wf, k, fan_in) = filters_first(t);
+    let dq = spec.transform()?.dequantize(&wf, k, fan_in)?;
+    // transpose back to the original fan-in-major layout
     let mut back = vec![0.0f32; k * fan_in];
     for i in 0..fan_in {
         for o in 0..k {
@@ -189,6 +212,50 @@ mod tests {
         let s = VariantSpec::parse("swis@2.5").unwrap();
         assert_eq!(s.n_shifts, 2.5);
         assert!(VariantSpec::parse("bogus@3").is_err());
+    }
+
+    #[test]
+    fn parse_round_trips_constructed_names() {
+        for spec in [
+            VariantSpec::fp32(),
+            VariantSpec::swis(3.0, 4),
+            VariantSpec::swis(2.5, 4),
+            VariantSpec::swis_c(4.0, 4),
+            VariantSpec::parse("wgt_trunc@3").unwrap(),
+        ] {
+            let p = VariantSpec::parse(&spec.name).unwrap();
+            assert_eq!(p.name, spec.name);
+            assert_eq!(p.scheme, spec.scheme);
+            assert_eq!(p.n_shifts, spec.n_shifts);
+            assert_eq!(p.group_size, spec.group_size);
+        }
+    }
+
+    #[test]
+    fn bare_scheme_defaults_to_three_shifts() {
+        for (s, scheme) in [("swis", "swis"), ("swis_c", "swis_c"), ("wgt_trunc", "wgt_trunc")] {
+            let v = VariantSpec::parse(s).unwrap();
+            assert_eq!(v.scheme, scheme);
+            assert_eq!(v.n_shifts, 3.0, "{s} must default to @3");
+            assert_eq!(v.name, format!("{scheme}@3"));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        // unknown scheme WITHOUT an @ used to silently mean <scheme>@3
+        assert!(VariantSpec::parse("bogus").is_err());
+        assert!(VariantSpec::parse("").is_err());
+        assert!(VariantSpec::parse("swis@").is_err());
+        assert!(VariantSpec::parse("swis@abc").is_err());
+        assert!(VariantSpec::parse("swis@0").is_err());
+        assert!(VariantSpec::parse("swis@-2").is_err());
+        assert!(VariantSpec::parse("swis@9").is_err());
+        assert!(VariantSpec::parse("swis@inf").is_err());
+        assert!(VariantSpec::parse("swis@nan").is_err());
+        assert!(VariantSpec::parse("wgt_trunc@2.5").is_err());
+        // fp32 takes no shift count
+        assert!(VariantSpec::parse("fp32@3").is_err());
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! The shared packed-execution semantics — the ONE definition of what a
+//! SWIS group-op computes, extracted from `sim::functional` /
+//! `arch::pe_functional` so the cycle-faithful machines and the fast
+//! native kernel cannot drift apart.
+//!
+//! A packed group (paper Sec. 3.3) stores, for `group_size` weight lanes,
+//! a sign per lane, up to `n_shifts` shift values (ascending; SWIS-C
+//! stores a consecutive window, i.e. an expanded offset — see
+//! [`swis_c_offset`]), and one mask bit per (lane, shift plane). The
+//! group's contribution to an output is Eq. 7 evaluated plane-major:
+//!
+//! ```text
+//!   dot(g, a) = sum_j ( sum_i mask[g,i,j] * sign[g,i] * a[i] ) << shift[g,j]
+//! ```
+//!
+//! Everything here is exact integer arithmetic, so any evaluation order
+//! (plane-major here, lane-major via [`crate::quant::PackedLayer::mag`])
+//! yields bit-identical results — the property the native engine's
+//! equivalence suite pins against the functional simulator.
+
+use crate::quant::PackedLayer;
+
+/// Adder-tree partial of one shift plane `j` of group `g`:
+/// `sum_i mask[g,i,j] * sign[g,i] * acts[i]` (before the barrel shift).
+///
+/// `acts` holds the group's `group_size` activation lanes.
+#[inline]
+pub fn plane_partial(layer: &PackedLayer, g: usize, j: usize, acts: &[i32]) -> i64 {
+    let gs = layer.group_size;
+    debug_assert!(acts.len() >= gs);
+    let mut tree = 0i64;
+    for i in 0..gs {
+        if layer.masks[(g * gs + i) * layer.n_shifts + j] != 0 {
+            let a = acts[i] as i64;
+            tree += if layer.signs[g * gs + i] < 0 { -a } else { a };
+        }
+    }
+    tree
+}
+
+/// Full group dot product, plane-major over the group's ACTIVE planes
+/// (scheduled layers store trailing inactive planes; see
+/// [`PackedLayer::active_shifts`]).
+pub fn group_dot(layer: &PackedLayer, g: usize, acts: &[i32]) -> i64 {
+    let n = layer.active_shifts(g);
+    let row = &layer.shifts[g * layer.n_shifts..g * layer.n_shifts + n];
+    let mut acc = 0i64;
+    for (j, &s) in row.iter().enumerate() {
+        acc += plane_partial(layer, g, j, acts) << s;
+    }
+    acc
+}
+
+/// Gather group `gl`'s activation lanes from a fan-in-major activation
+/// row, zero-padding past the fan-in tail (the staggered-feed contract of
+/// the systolic array and the ragged-group contract of the kernel).
+#[inline]
+pub fn gather_lanes(row: &[i32], gl: usize, group_size: usize, lanes: &mut [i32]) {
+    let fan_in = row.len();
+    for i in 0..group_size {
+        let idx = gl * group_size + i;
+        lanes[i] = if idx < fan_in { row[idx] } else { 0 };
+    }
+}
+
+/// SWIS-C groups store shifts as one 3-bit offset expanded to the
+/// consecutive window `offset..offset+n`; returns that offset when the
+/// group's active shifts form such a window (always true for layers
+/// quantized with `consecutive: true`), `None` otherwise.
+pub fn swis_c_offset(layer: &PackedLayer, g: usize) -> Option<u8> {
+    let n = layer.active_shifts(g);
+    if n == 0 {
+        return None;
+    }
+    let row = &layer.shifts[g * layer.n_shifts..g * layer.n_shifts + n];
+    for (j, &s) in row.iter().enumerate() {
+        if s != row[0] + j as u8 {
+            return None;
+        }
+    }
+    Some(row[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn packed(seed: u64, n: usize, g: usize, consecutive: bool) -> PackedLayer {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(8 * 24, 0.0, 0.07);
+        let cfg = QuantConfig {
+            n_shifts: n,
+            group_size: g,
+            alpha: crate::quant::Alpha::ONE,
+            consecutive,
+        };
+        quantize(&w, &[8, 24], &cfg).unwrap()
+    }
+
+    #[test]
+    fn group_dot_matches_lane_major_mag_form() {
+        let p = packed(1, 3, 4, false);
+        let mut rng = Rng::new(2);
+        for g in 0..p.n_groups() {
+            let acts: Vec<i32> = (0..4).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+            let lane_major: i64 = (0..4)
+                .map(|i| acts[i] as i64 * p.signs[g * 4 + i] as i64 * p.mag(g, i))
+                .sum();
+            assert_eq!(group_dot(&p, g, &acts), lane_major, "group {g}");
+        }
+    }
+
+    #[test]
+    fn swis_c_groups_expose_offsets() {
+        let p = packed(3, 3, 4, true);
+        for g in 0..p.n_groups() {
+            let off = swis_c_offset(&p, g).expect("SWIS-C group must have an offset");
+            assert!(off <= 5, "offset {off} leaves no room for 3 consecutive shifts");
+        }
+    }
+
+    #[test]
+    fn non_consecutive_groups_usually_lack_offsets() {
+        // force shifts {0, 2}: not a consecutive window
+        let p = PackedLayer {
+            shape: vec![1, 2],
+            group_size: 2,
+            n_shifts: 2,
+            scale: 1.0,
+            shifts: vec![0, 2],
+            masks: vec![1, 1, 0, 1],
+            signs: vec![1, -1],
+            consecutive: false,
+            filter_shifts: None,
+        };
+        assert_eq!(swis_c_offset(&p, 0), None);
+    }
+
+    #[test]
+    fn gather_lanes_zero_pads_tail() {
+        let row = vec![5, -3, 7]; // fan_in 3
+        let mut lanes = [9i32; 4];
+        gather_lanes(&row, 0, 4, &mut lanes[..]);
+        assert_eq!(lanes, [5, -3, 7, 0]);
+    }
+}

@@ -1,0 +1,145 @@
+//! im2col lowering for the native conv path: NHWC feature maps to
+//! `(batch * out_hw^2, k*k*in_c)` patch matrices whose fan-in ordering
+//! `(kh, kw, cin)` matches the filters-first weight matrices the
+//! quantizer consumes (HWIO weights transposed to `[O, HWI]`).
+//!
+//! Padding follows XLA's SAME convention — `out = ceil(in / stride)`,
+//! `pad_total = max((out-1)*stride + k - in, 0)`, split low = total/2,
+//! high = rest — so the native engine computes the same geometry the
+//! AOT-lowered PJRT graph does (for stride 2 on even maps the padding is
+//! asymmetric: 0 on top/left, 1 on bottom/right).
+
+use anyhow::{bail, Result};
+
+/// Geometry of one SAME-padded square convolution.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeom {
+    pub in_hw: usize,
+    pub in_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub out_hw: usize,
+    /// Low-side (top/left) padding; the high side is implied by `out_hw`.
+    pub pad_lo: usize,
+}
+
+impl ConvGeom {
+    /// XLA SAME geometry for a square map / kernel / stride.
+    pub fn same(in_hw: usize, in_c: usize, k: usize, stride: usize) -> Result<ConvGeom> {
+        if in_hw == 0 || in_c == 0 || k == 0 || stride == 0 {
+            bail!("degenerate conv geometry");
+        }
+        let out_hw = in_hw.div_ceil(stride);
+        let pad_total = ((out_hw - 1) * stride + k).saturating_sub(in_hw);
+        Ok(ConvGeom { in_hw, in_c, k, stride, out_hw, pad_lo: pad_total / 2 })
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.k * self.k * self.in_c
+    }
+
+    pub fn rows(&self, batch: usize) -> usize {
+        batch * self.out_hw * self.out_hw
+    }
+}
+
+/// Lower an NHWC batch `(batch, in_hw, in_hw, in_c)` into the patch
+/// matrix. Out-of-map taps read as zero. Row order is `(b, oh, ow)`
+/// row-major, so the GEMM result `(rows, out_c)` IS the next layer's
+/// NHWC map.
+pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Result<Vec<f32>> {
+    let hw = g.in_hw;
+    let c = g.in_c;
+    if x.len() != batch * hw * hw * c {
+        bail!("input {} != {batch} x {hw} x {hw} x {c}", x.len());
+    }
+    let fan_in = g.fan_in();
+    let o = g.out_hw;
+    let mut cols = vec![0f32; batch * o * o * fan_in];
+    for b in 0..batch {
+        let img = &x[b * hw * hw * c..(b + 1) * hw * hw * c];
+        for oh in 0..o {
+            for ow in 0..o {
+                let dst0 = ((b * o + oh) * o + ow) * fan_in;
+                for kh in 0..g.k {
+                    let ih = (oh * g.stride + kh) as isize - g.pad_lo as isize;
+                    if ih < 0 || ih >= hw as isize {
+                        continue; // whole kernel row out of map: stays zero
+                    }
+                    for kw in 0..g.k {
+                        let iw = (ow * g.stride + kw) as isize - g.pad_lo as isize;
+                        if iw < 0 || iw >= hw as isize {
+                            continue;
+                        }
+                        let src = (ih as usize * hw + iw as usize) * c;
+                        let dst = dst0 + (kh * g.k + kw) * c;
+                        cols[dst..dst + c].copy_from_slice(&img[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    Ok(cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_geometry_matches_xla() {
+        // stride 1, 3x3: symmetric pad 1, out = in
+        let g1 = ConvGeom::same(32, 3, 3, 1).unwrap();
+        assert_eq!((g1.out_hw, g1.pad_lo), (32, 1));
+        // stride 2 on an even map: pad_total 1 -> low 0, high 1
+        let g2 = ConvGeom::same(32, 32, 3, 2).unwrap();
+        assert_eq!((g2.out_hw, g2.pad_lo), (16, 0));
+        assert_eq!(g2.fan_in(), 9 * 32);
+    }
+
+    #[test]
+    fn identity_kernel_recovers_map() {
+        // 1x1 kernel, stride 1: cols == input
+        let g = ConvGeom::same(4, 2, 1, 1).unwrap();
+        let x: Vec<f32> = (0..4 * 4 * 2).map(|v| v as f32).collect();
+        let cols = im2col(&x, 1, &g).unwrap();
+        assert_eq!(cols, x);
+    }
+
+    #[test]
+    fn stride1_3x3_center_and_corner_taps() {
+        // 3x3 map, single channel, values 0..9
+        let g = ConvGeom::same(3, 1, 3, 1).unwrap();
+        let x: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let cols = im2col(&x, 1, &g).unwrap();
+        assert_eq!(cols.len(), 9 * 9);
+        // center output pixel (1,1) sees the whole map in order
+        let center = &cols[(1 * 3 + 1) * 9..(1 * 3 + 1) * 9 + 9];
+        assert_eq!(center, &x[..]);
+        // corner (0,0): top-left taps are zero padding
+        let corner = &cols[..9];
+        assert_eq!(corner, &[0., 0., 0., 0., 0., 1., 0., 3., 4.]);
+    }
+
+    #[test]
+    fn stride2_uses_low_zero_padding() {
+        // 4x4 map, k=3, s=2 -> out 2, pad_lo 0: output (0,0) taps (0..3)^2
+        let g = ConvGeom::same(4, 1, 3, 2).unwrap();
+        assert_eq!(g.pad_lo, 0);
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let cols = im2col(&x, 1, &g).unwrap();
+        assert_eq!(&cols[..9], &[0., 1., 2., 4., 5., 6., 8., 9., 10.]);
+        // output (1,1) starts at (2,2) and runs off the map: high padding
+        let last = &cols[3 * 9..4 * 9];
+        assert_eq!(last, &[10., 11., 0., 14., 15., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn batch_rows_are_contiguous() {
+        let g = ConvGeom::same(2, 1, 1, 1).unwrap();
+        let x: Vec<f32> = (0..8).map(|v| v as f32).collect(); // batch 2
+        let cols = im2col(&x, 2, &g).unwrap();
+        assert_eq!(cols, x);
+        assert_eq!(g.rows(2), 8);
+    }
+}

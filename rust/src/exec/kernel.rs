@@ -1,0 +1,499 @@
+//! The native SWIS GEMM kernel: executes [`PackedLayer`] operands
+//! directly — no dequantized weight matrix is ever materialized — at
+//! memory-bandwidth-class speed instead of the cycle-faithful pace of
+//! [`crate::sim::functional`].
+//!
+//! Strategy (paper Fig. 4 datapath, software-shaped):
+//!
+//! 1. **Prepare once per layer** ([`PreparedGemm::from_packed`]): for
+//!    every (group, active shift plane) precompute two lane bitmasks —
+//!    positive-sign and negative-sign lanes whose mask bit is set — plus
+//!    the plane's shift. Planes with no set bits are dropped, so *bit
+//!    sparsity directly removes work* (the paper's premise: fewer shift
+//!    planes, fewer operations).
+//! 2. **Plane-major accumulation**: per output, iterate the group's
+//!    prepared planes; each contributes `(Σ pos-lanes − Σ neg-lanes) <<
+//!    shift`. All-integer adds/shifts — bit-exact against the functional
+//!    simulator for any loop order or thread count.
+//! 3. **Cache blocking**: rows (output pixels) are processed in blocks of
+//!    [`ROW_BLOCK`] so one streaming pass over a filter's prepared
+//!    operand amortizes across the whole block, and the block's
+//!    accumulators stay in registers.
+//! 4. **`std::thread::scope` parallelism**: row ranges are disjoint
+//!    output slices handed to scoped threads (no locks, results
+//!    thread-count invariant).
+//!
+//! The int8 entry point ([`PreparedGemm::gemm`]) returns the exact
+//! integer MACs (the serving contract with `sim::functional::run_matmul`);
+//! the fp32 entry ([`PreparedGemm::gemm_f32`]) adds symmetric int8
+//! activation quantization and the dequant rescale (paper's 8-bit
+//! activations).
+
+use anyhow::{bail, Result};
+
+use super::core;
+use crate::quant::int8::round_half_even;
+use crate::quant::PackedLayer;
+
+/// Rows per cache block: small enough for the block's i64 accumulators
+/// and partials to live in registers, large enough to amortize the
+/// prepared-operand stream.
+pub const ROW_BLOCK: usize = 8;
+
+/// Largest group size the u16 lane bitmasks cover.
+pub const MAX_GROUP_SIZE: usize = 16;
+
+/// One prepared shift plane: lanes split by sign, only set mask bits.
+#[derive(Clone, Copy, Debug)]
+struct Plane {
+    shift: u8,
+    pos: u16,
+    neg: u16,
+}
+
+/// A packed layer prepared for native execution. Holds only the
+/// *non-empty* shift planes per group — the executable form of the
+/// operand format in Sec. 3.3.
+#[derive(Clone, Debug)]
+pub struct PreparedGemm {
+    n_filters: usize,
+    fan_in: usize,
+    group_size: usize,
+    groups_per_filter: usize,
+    /// Dequantization scale of the packed weights (max|w| / 127).
+    pub scale: f64,
+    /// Group `g`'s planes live at `planes[plane_ofs[g]..plane_ofs[g+1]]`.
+    plane_ofs: Vec<u32>,
+    planes: Vec<Plane>,
+}
+
+impl PreparedGemm {
+    /// Prepare a packed layer. Fails on group sizes beyond the bitmask
+    /// width; callers fall back to [`naive_gemm`] there.
+    pub fn from_packed(p: &PackedLayer) -> Result<PreparedGemm> {
+        if p.group_size == 0 || p.group_size > MAX_GROUP_SIZE {
+            bail!(
+                "native kernel supports group sizes 1..={MAX_GROUP_SIZE}, got {}",
+                p.group_size
+            );
+        }
+        p.validate()?;
+        let n_groups = p.n_groups();
+        let gs = p.group_size;
+        let gpf = p.groups_per_filter();
+        let fan_in = p.fan_in();
+        let mut plane_ofs = Vec::with_capacity(n_groups + 1);
+        let mut planes = Vec::new();
+        plane_ofs.push(0u32);
+        for g in 0..n_groups {
+            // SWIS-C layers must keep the consecutive-window property the
+            // 3-bit offset storage accounting relies on (Sec. 3.3)
+            debug_assert!(
+                !p.consecutive || p.active_shifts(g) == 0 || core::swis_c_offset(p, g).is_some(),
+                "SWIS-C group {g} has non-consecutive shifts"
+            );
+            // lanes of this group that map to real fan-in positions; the
+            // quantizer zeroes pad-lane masks, but a hand-built or
+            // deserialized layer may not — pad lanes feed activation 0 in
+            // the gather-based paths, so DROPPING their bits here keeps
+            // the kernel bit-identical to those oracles (and in bounds)
+            let lane0 = (g % gpf) * gs;
+            let valid = fan_in.saturating_sub(lane0).min(gs);
+            for j in 0..p.active_shifts(g) {
+                let mut pos = 0u16;
+                let mut neg = 0u16;
+                for i in 0..valid {
+                    if p.masks[(g * gs + i) * p.n_shifts + j] != 0 {
+                        if p.signs[g * gs + i] < 0 {
+                            neg |= 1 << i;
+                        } else {
+                            pos |= 1 << i;
+                        }
+                    }
+                }
+                // empty planes contribute nothing: bit sparsity == less work
+                if pos | neg != 0 {
+                    planes.push(Plane { shift: p.shifts[g * p.n_shifts + j], pos, neg });
+                }
+            }
+            plane_ofs.push(planes.len() as u32);
+        }
+        Ok(PreparedGemm {
+            n_filters: p.n_filters(),
+            fan_in: p.fan_in(),
+            group_size: gs,
+            groups_per_filter: p.groups_per_filter(),
+            scale: p.scale,
+            plane_ofs,
+            planes,
+        })
+    }
+
+    pub fn n_filters(&self) -> usize {
+        self.n_filters
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.fan_in
+    }
+
+    /// Weight-MACs one full pass performs (for Mw/s reporting).
+    pub fn macs(&self, p_rows: usize) -> u64 {
+        p_rows as u64 * self.n_filters as u64 * self.fan_in as u64
+    }
+
+    /// `acts (p_rows, fan_in) x packed^T -> (p_rows, n_filters)` exact
+    /// integer MACs, identical to `sim::functional::run_matmul` output.
+    /// `n_threads <= 1` runs inline; row partitions make any thread count
+    /// bit-identical.
+    pub fn gemm(&self, acts: &[i32], p_rows: usize, n_threads: usize) -> Result<Vec<i64>> {
+        if acts.len() != p_rows * self.fan_in {
+            bail!("acts {} != {} x {}", acts.len(), p_rows, self.fan_in);
+        }
+        let mut out = vec![0i64; p_rows * self.n_filters];
+        par_rows(&mut out, p_rows, self.n_filters, n_threads, |start, rows, slice| {
+            self.gemm_rows(acts, start, rows, slice)
+        });
+        Ok(out)
+    }
+
+    /// fp32 activations: symmetric int8 quantization PER ROW (each row's
+    /// own amax/127 scale), integer kernel, dequant rescale. Per-row
+    /// scales keep a request's logits independent of whatever else shares
+    /// its dispatch batch — every im2col row belongs to exactly one image
+    /// — so serving is deterministic under any batching policy (and the
+    /// finer scales only reduce quantization error vs one batch-wide
+    /// scale). Returns `(p_rows, n_filters)`.
+    pub fn gemm_f32(&self, acts: &[f32], p_rows: usize, n_threads: usize) -> Result<Vec<f32>> {
+        let (codes, scales) = quantize_acts_rows(acts, p_rows)?;
+        let raw = self.gemm(&codes, p_rows, n_threads)?;
+        let k = self.n_filters;
+        let mut out = vec![0f32; p_rows * k];
+        for r in 0..p_rows {
+            let s = self.scale * scales[r];
+            for f in 0..k {
+                out[r * k + f] = (raw[r * k + f] as f64 * s) as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// The blocked single-thread core over rows `[start, start+rows)`;
+    /// `out` is that range's output slice.
+    fn gemm_rows(&self, acts: &[i32], start: usize, rows: usize, out: &mut [i64]) {
+        let k = self.n_filters;
+        let fi = self.fan_in;
+        let gs = self.group_size;
+        let gpf = self.groups_per_filter;
+        debug_assert_eq!(out.len(), rows * k);
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = ROW_BLOCK.min(rows - r0);
+            for f in 0..k {
+                let mut acc = [0i64; ROW_BLOCK];
+                for gl in 0..gpf {
+                    let g = f * gpf + gl;
+                    let a0 = gl * gs; // group's first lane in the act row
+                    let lo = self.plane_ofs[g] as usize;
+                    let hi = self.plane_ofs[g + 1] as usize;
+                    for pl in &self.planes[lo..hi] {
+                        let mut partial = [0i64; ROW_BLOCK];
+                        // prepared masks cover only real lanes (pad-lane
+                        // bits are dropped at prepare time), so a0 + lane
+                        // < fan_in always holds here
+                        let mut m = pl.pos;
+                        while m != 0 {
+                            let lane = m.trailing_zeros() as usize;
+                            m &= m - 1;
+                            let col = a0 + lane;
+                            for r in 0..rb {
+                                partial[r] += acts[(start + r0 + r) * fi + col] as i64;
+                            }
+                        }
+                        let mut m = pl.neg;
+                        while m != 0 {
+                            let lane = m.trailing_zeros() as usize;
+                            m &= m - 1;
+                            let col = a0 + lane;
+                            for r in 0..rb {
+                                partial[r] -= acts[(start + r0 + r) * fi + col] as i64;
+                            }
+                        }
+                        for r in 0..rb {
+                            acc[r] += partial[r] << pl.shift;
+                        }
+                    }
+                }
+                for r in 0..rb {
+                    out[(r0 + r) * k + f] = acc[r];
+                }
+            }
+            r0 += rb;
+        }
+    }
+}
+
+/// Symmetric int8 activation quantization: `code = round(x / (amax/127))`
+/// (half-to-even, matching [`crate::quant::int8`]); all-zero input keeps
+/// unit scale.
+pub fn quantize_acts(x: &[f32]) -> (Vec<i32>, f64) {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    let codes = x
+        .iter()
+        .map(|&v| round_half_even(v as f64 / scale).clamp(-127.0, 127.0) as i32)
+        .collect();
+    (codes, scale)
+}
+
+/// Row-wise [`quantize_acts`] over a `(p_rows, fan_in)` matrix: one scale
+/// per row, so a row's codes depend only on that row's data.
+pub fn quantize_acts_rows(x: &[f32], p_rows: usize) -> Result<(Vec<i32>, Vec<f64>)> {
+    if p_rows == 0 {
+        return if x.is_empty() {
+            Ok((Vec::new(), Vec::new()))
+        } else {
+            Err(anyhow::anyhow!("{} activations with 0 rows", x.len()))
+        };
+    }
+    if x.len() % p_rows != 0 {
+        bail!("{} activations do not split into {p_rows} rows", x.len());
+    }
+    let per = x.len() / p_rows;
+    let mut codes = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(p_rows);
+    for r in 0..p_rows {
+        let row = &x[r * per..(r + 1) * per];
+        let (c, s) = quantize_acts(row);
+        codes.extend_from_slice(&c);
+        scales.push(s);
+    }
+    Ok((codes, scales))
+}
+
+/// The naive per-group scalar loop — the pre-kernel baseline the bench
+/// reports speedup against, and an independent oracle for the tests:
+/// gathers each group's lanes and evaluates [`core::group_dot`].
+pub fn naive_gemm(p: &PackedLayer, acts: &[i32], p_rows: usize) -> Result<Vec<i64>> {
+    let fan_in = p.fan_in();
+    if acts.len() != p_rows * fan_in {
+        bail!("acts {} != {} x {}", acts.len(), p_rows, fan_in);
+    }
+    let k = p.n_filters();
+    let gpf = p.groups_per_filter();
+    let gs = p.group_size;
+    let mut out = vec![0i64; p_rows * k];
+    let mut lanes = vec![0i32; gs];
+    for row in 0..p_rows {
+        let arow = &acts[row * fan_in..(row + 1) * fan_in];
+        for f in 0..k {
+            let mut acc = 0i64;
+            for gl in 0..gpf {
+                core::gather_lanes(arow, gl, gs, &mut lanes);
+                acc += core::group_dot(p, f * gpf + gl, &lanes);
+            }
+            out[row * k + f] = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// Plain fp32 GEMM over a filters-first dense weight matrix `(k, fan_in)`
+/// — the native path for the `fp32` / truncation variants and the
+/// float reference the packed path is toleranced against. Same row
+/// blocking and scoped-thread partitioning as the packed kernel.
+pub fn dense_gemm(
+    w: &[f32],
+    k: usize,
+    fan_in: usize,
+    acts: &[f32],
+    p_rows: usize,
+    n_threads: usize,
+) -> Result<Vec<f32>> {
+    if w.len() != k * fan_in {
+        bail!("weights {} != {k} x {fan_in}", w.len());
+    }
+    if acts.len() != p_rows * fan_in {
+        bail!("acts {} != {p_rows} x {fan_in}", acts.len());
+    }
+    let mut out = vec![0f32; p_rows * k];
+    par_rows(&mut out, p_rows, k, n_threads, |start, rows, o| {
+        for r in 0..rows {
+            let arow = &acts[(start + r) * fan_in..(start + r + 1) * fan_in];
+            for f in 0..k {
+                let wrow = &w[f * fan_in..(f + 1) * fan_in];
+                let mut s = 0f64;
+                for i in 0..fan_in {
+                    s += arow[i] as f64 * wrow[i] as f64;
+                }
+                o[r * k + f] = s as f32;
+            }
+        }
+    });
+    Ok(out)
+}
+
+/// Partition a `(p_rows, k)` output buffer into contiguous row ranges and
+/// run `f(start_row, n_rows, out_slice)` on scoped threads — the ONE
+/// row-parallel harness for both the packed and dense kernels. Disjoint
+/// output slices, no locks; `n_threads <= 1` runs inline. Results are
+/// identical for any thread count because partitioning never changes
+/// per-row work.
+fn par_rows<T: Send>(
+    out: &mut [T],
+    p_rows: usize,
+    k: usize,
+    n_threads: usize,
+    f: impl Fn(usize, usize, &mut [T]) + Sync,
+) {
+    let nt = n_threads.clamp(1, p_rows.max(1));
+    if nt <= 1 {
+        f(0, p_rows, out);
+        return;
+    }
+    let chunk = p_rows.div_ceil(nt);
+    let f = &f; // share across scoped threads
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = out;
+        let mut r0 = 0usize;
+        while r0 < p_rows {
+            let take = chunk.min(p_rows - r0);
+            let tmp = std::mem::take(&mut rest);
+            let (slice, rr) = tmp.split_at_mut(take * k);
+            rest = rr;
+            let start = r0;
+            s.spawn(move || f(start, take, slice));
+            r0 += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Alpha, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, k: usize, fan_in: usize, n: usize, gs: usize, consecutive: bool) -> (PackedLayer, Vec<i32>, usize) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
+        let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive };
+        let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
+        let rows = 13usize;
+        let acts: Vec<i32> = (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+        (p, acts, rows)
+    }
+
+    #[test]
+    fn prepared_matches_naive_exactly() {
+        for (seed, k, fi, n, gs, cons) in
+            [(1, 12, 36, 3, 4, false), (2, 8, 30, 2, 4, false), (3, 8, 32, 4, 16, true)]
+        {
+            let (p, acts, rows) = setup(seed, k, fi, n, gs, cons);
+            let prep = PreparedGemm::from_packed(&p).unwrap();
+            let fast = prep.gemm(&acts, rows, 1).unwrap();
+            let slow = naive_gemm(&p, &acts, rows).unwrap();
+            assert_eq!(fast, slow, "k={k} fi={fi} n={n} gs={gs}");
+        }
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let (p, acts, rows) = setup(7, 16, 48, 3, 4, false);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let t1 = prep.gemm(&acts, rows, 1).unwrap();
+        for nt in [2usize, 3, 8, 32] {
+            assert_eq!(prep.gemm(&acts, rows, nt).unwrap(), t1, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn f32_path_tracks_dequantized_reference() {
+        let (p, _, _) = setup(9, 8, 27, 4, 4, false);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let mut rng = Rng::new(10);
+        let rows = 6usize;
+        let acts: Vec<f32> = (0..rows * 27).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+        let got = prep.gemm_f32(&acts, rows, 1).unwrap();
+        // reference: per-row int8-quantized acts x dequantized weights
+        let (codes, scales) = quantize_acts_rows(&acts, rows).unwrap();
+        let deq = p.to_f64();
+        for r in 0..rows {
+            for f in 0..8 {
+                let want: f64 = (0..27)
+                    .map(|i| codes[r * 27 + i] as f64 * scales[r] * deq[f * 27 + i])
+                    .sum();
+                assert!(
+                    (got[r * 8 + f] as f64 - want).abs() < 1e-4,
+                    "({r},{f}): {} vs {want}",
+                    got[r * 8 + f]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_rows_are_batch_composition_invariant() {
+        // a row's result must not depend on what else is in the batch
+        let (p, _, _) = setup(12, 8, 27, 3, 4, false);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let mut rng = Rng::new(14);
+        let a: Vec<f32> = (0..27).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..27).map(|_| rng.range_f64(0.0, 50.0) as f32).collect();
+        let alone = prep.gemm_f32(&a, 1, 1).unwrap();
+        let mut both = a.clone();
+        both.extend_from_slice(&b);
+        let paired = prep.gemm_f32(&both, 2, 1).unwrap();
+        assert_eq!(alone[..], paired[..8], "row result changed when co-batched");
+    }
+
+    #[test]
+    fn adversarial_pad_lane_mask_bits_are_dropped_not_read() {
+        // the quantizer zeroes pad-lane masks, but PackedLayer's fields
+        // are pub: a hand-built layer with a set bit on a pad lane must
+        // still match the gather-based oracle (pad act = 0), not read
+        // past fan_in or panic
+        let p = PackedLayer {
+            shape: vec![2, 3], // fan_in 3, group 4 -> lane 3 of each group is padding
+            group_size: 4,
+            n_shifts: 2,
+            scale: 1.0,
+            shifts: vec![0, 2, 1, 3],
+            masks: vec![
+                1, 0, 0, 1, 1, 1, 0, 1, // filter 0: pad lane has bit set in plane 1
+                0, 1, 1, 0, 1, 0, 1, 1, // filter 1: pad lane set in both planes
+            ],
+            signs: vec![1, -1, 1, -1, -1, 1, 1, 1],
+            consecutive: false,
+            filter_shifts: None,
+        };
+        p.validate().unwrap();
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let acts: Vec<i32> = vec![10, -20, 30, 40, -50, 60]; // 2 rows x fan_in 3
+        let fast = prep.gemm(&acts, 2, 1).unwrap();
+        assert_eq!(fast, naive_gemm(&p, &acts, 2).unwrap());
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_groups() {
+        let (p, acts, rows) = setup(11, 8, 32, 2, 4, false);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        assert!(prep.gemm(&acts[..10], rows, 1).is_err());
+        let mut big = p.clone();
+        big.group_size = 32; // beyond the bitmask width
+        assert!(PreparedGemm::from_packed(&big).is_err());
+    }
+
+    #[test]
+    fn dense_gemm_matches_scalar() {
+        let mut rng = Rng::new(5);
+        let (k, fi, rows) = (6usize, 17usize, 9usize);
+        let w: Vec<f32> = (0..k * fi).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect();
+        let a: Vec<f32> = (0..rows * fi).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        let one = dense_gemm(&w, k, fi, &a, rows, 1).unwrap();
+        let four = dense_gemm(&w, k, fi, &a, rows, 4).unwrap();
+        assert_eq!(one, four);
+        let want = (0..fi).map(|i| a[i] as f64 * w[i] as f64).sum::<f64>() as f32;
+        assert!((one[0] - want).abs() < 1e-4);
+    }
+}

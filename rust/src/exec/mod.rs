@@ -1,0 +1,28 @@
+//! Native SWIS execution engine — the third execution tier.
+//!
+//! The repo executes packed SWIS operands at three fidelities:
+//!
+//! * [`crate::sim`] — analytic cycle/energy model (fast, no data);
+//! * [`crate::sim::functional`] / [`crate::arch::pe_functional`] —
+//!   bit-accurate, cycle-faithful machines (slow, authoritative for
+//!   hardware semantics);
+//! * **this module** — the same integer semantics at software speed:
+//!   [`kernel::PreparedGemm`] executes [`crate::quant::PackedLayer`]
+//!   directly (cache-blocked, thread-parallel, bit-sparsity-aware) and
+//!   [`model::NativeModel`] composes it into the full TinyCNN forward
+//!   pass the coordinator serves when PJRT artifacts are absent.
+//!
+//! [`core`] holds the single definition of the packed group-op that all
+//! three tiers share; the equivalence suite (`tests/native_equiv.rs`)
+//! pins the kernel bit-exactly to the functional simulator.
+
+pub mod core;
+pub mod im2col;
+pub mod kernel;
+pub mod model;
+
+pub use im2col::{im2col, ConvGeom};
+pub use kernel::{dense_gemm, naive_gemm, quantize_acts, quantize_acts_rows, PreparedGemm};
+pub use model::{
+    filters_first, surrogate_tinycnn_weights, tinycnn_weights, NativeModel, WeightTransform,
+};

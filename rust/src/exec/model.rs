@@ -1,0 +1,396 @@
+//! The native TinyCNN executor: the same 6-conv + GAP + 2-FC graph
+//! `python/compile/model.py` lowers for PJRT, executed by the native
+//! kernels in this module tree — packed bit-serial GEMM for SWIS
+//! variants, dense fp32 GEMM for the baseline — with bias + ReLU fused
+//! into each layer. This is what lets the coordinator serve with no PJRT
+//! and no build-time artifacts present.
+//!
+//! Weight layout contract (shared with the AOT path): conv weights HWIO
+//! `(3,3,cin,cout)`, FC `(din,dout)`, biases `<name>_b`; both put the
+//! filter axis LAST, so one transpose yields the filters-first `(K,
+//! fan_in)` matrices the quantizer and kernels consume.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::im2col::{im2col, ConvGeom};
+use super::kernel::{dense_gemm, PreparedGemm};
+use crate::nets::surrogate_weights;
+use crate::quant::truncation::truncate_weights;
+use crate::quant::Alpha;
+use crate::schedule::quantize_or_schedule;
+use crate::util::npy;
+use crate::util::tensor::Tensor;
+
+/// How a layer's fp32 weights become the served operand — the
+/// backend-agnostic form of a serving variant (the coordinator's
+/// `VariantSpec` maps onto this). This enum is the ONE variant-to-math
+/// dispatch: the native backend executes it directly and the PJRT
+/// backend's weight swap goes through [`WeightTransform::dequantize`].
+#[derive(Clone, Copy, Debug)]
+pub enum WeightTransform {
+    /// Serve the fp32 weights unchanged (dense kernel).
+    Fp32,
+    /// SWIS / SWIS-C quantize and execute the packed format directly;
+    /// fractional `n_shifts` routes through the Sec. 4.3 scheduler.
+    Swis { n_shifts: f64, group_size: usize, consecutive: bool },
+    /// Weight-truncation baseline (dense kernel over truncated floats).
+    Truncate { bits: usize },
+}
+
+impl WeightTransform {
+    /// Apply the transform to a filters-first `(k, fan_in)` weight matrix
+    /// and return the dequantized floats — the weight-swap form the PJRT
+    /// backend feeds its weight-agnostic graph. (For `Swis` the native
+    /// backend executes the packed form instead of these floats.)
+    pub fn dequantize(&self, wf: &[f64], k: usize, fan_in: usize) -> Result<Vec<f64>> {
+        Ok(match *self {
+            WeightTransform::Fp32 => wf.to_vec(),
+            WeightTransform::Truncate { bits } => truncate_weights(wf, bits),
+            WeightTransform::Swis { n_shifts, group_size, consecutive } => {
+                quantize_or_schedule(wf, &[k, fan_in], n_shifts, group_size, consecutive, Alpha::ONE)?
+                    .to_f64()
+            }
+        })
+    }
+}
+
+enum Kernel {
+    Packed(PreparedGemm),
+    Dense { w: Vec<f32>, k: usize, fan_in: usize },
+}
+
+struct Layer {
+    name: String,
+    kernel: Kernel,
+    bias: Vec<f32>,
+    relu: bool,
+    /// `Some` for conv layers (SAME geometry precomputed at prepare
+    /// time); `None` for the FC head.
+    conv: Option<ConvGeom>,
+    out_c: usize,
+}
+
+impl Layer {
+    fn matmul(&self, acts: &[f32], rows: usize, threads: usize) -> Result<Vec<f32>> {
+        match &self.kernel {
+            Kernel::Packed(p) => p.gemm_f32(acts, rows, threads),
+            Kernel::Dense { w, k, fan_in } => dense_gemm(w, *k, *fan_in, acts, rows, threads),
+        }
+    }
+
+    /// Matmul + fused bias + activation.
+    fn run(&self, acts: &[f32], rows: usize, threads: usize) -> Result<Vec<f32>> {
+        let mut y = self
+            .matmul(acts, rows, threads)
+            .with_context(|| format!("layer {}", self.name))?;
+        let k = self.out_c;
+        for r in 0..rows {
+            for f in 0..k {
+                let v = y[r * k + f] + self.bias[f];
+                y[r * k + f] = if self.relu && v < 0.0 { 0.0 } else { v };
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// A ready-to-run TinyCNN for one weight variant.
+pub struct NativeModel {
+    layers: Vec<Layer>,
+    /// Weight storage bits across packed layers (0 for dense variants).
+    pub packed_bits: u64,
+}
+
+/// Transpose a fan-in-major tensor (HWIO conv or `(din,dout)` FC — filter
+/// axis last) into filters-first f64 `(k, fan_in)` — the layout the
+/// quantizer and kernels consume. Shared with the PJRT weight-swap path.
+pub fn filters_first(t: &Tensor<f32>) -> (Vec<f64>, usize, usize) {
+    let shape = t.shape();
+    let k = *shape.last().unwrap();
+    let fan_in: usize = shape[..shape.len() - 1].iter().product();
+    let mut wf = vec![0.0f64; k * fan_in];
+    for i in 0..fan_in {
+        for o in 0..k {
+            wf[o * fan_in + i] = t.data()[i * k + o] as f64;
+        }
+    }
+    (wf, k, fan_in)
+}
+
+impl NativeModel {
+    /// Build the executable graph from an fp32 weight map under one
+    /// transform. Biases pass through untouched (the paper quantizes
+    /// weights only).
+    pub fn prepare(
+        weights: &HashMap<String, Tensor<f32>>,
+        transform: WeightTransform,
+    ) -> Result<NativeModel> {
+        let mut layers = Vec::new();
+        let mut packed_bits = 0u64;
+        // the plan comes from the zoo's own shape table (conv trunk +
+        // with_fc head) — the SAME source the surrogate generator uses,
+        // so the two cannot drift apart
+        let net = crate::nets::tinycnn().with_fc();
+        let n_layers = net.layers.len();
+        let mut hw = 32usize;
+        let mut plan: Vec<(String, Option<ConvGeom>, usize, bool)> = Vec::new();
+        for (idx, layer) in net.layers.iter().enumerate() {
+            if layer.k > 1 {
+                let g = ConvGeom::same(hw, layer.in_c, layer.k, layer.stride)?;
+                hw = g.out_hw;
+                plan.push((layer.name.clone(), Some(g), layer.out_c, true));
+            } else {
+                let relu = idx + 1 < n_layers; // last FC: raw logits
+                plan.push((layer.name.clone(), None, layer.out_c, relu));
+            }
+        }
+
+        for (name, conv, out_c, relu) in plan {
+            let t = weights
+                .get(&name)
+                .with_context(|| format!("missing weight '{name}'"))?;
+            let (wf, k, fan_in) = filters_first(t);
+            if k != out_c {
+                bail!("weight '{name}' has {k} filters, expected {out_c}");
+            }
+            let kernel = match transform {
+                WeightTransform::Swis { n_shifts, group_size, consecutive } => {
+                    let packed = quantize_or_schedule(
+                        &wf,
+                        &[k, fan_in],
+                        n_shifts,
+                        group_size,
+                        consecutive,
+                        Alpha::ONE,
+                    )
+                    .with_context(|| format!("quantizing '{name}'"))?;
+                    packed_bits += packed.storage_bits();
+                    Kernel::Packed(PreparedGemm::from_packed(&packed)?)
+                }
+                // fp32 / truncation serve dense floats via the shared
+                // dequantize path
+                _ => Kernel::Dense {
+                    w: transform
+                        .dequantize(&wf, k, fan_in)
+                        .with_context(|| format!("transforming '{name}'"))?
+                        .iter()
+                        .map(|&v| v as f32)
+                        .collect(),
+                    k,
+                    fan_in,
+                },
+            };
+            let bias = weights
+                .get(&format!("{name}_b"))
+                .with_context(|| format!("missing bias '{name}_b'"))?
+                .data()
+                .to_vec();
+            if bias.len() != out_c {
+                bail!("bias '{name}_b' has {} entries, expected {out_c}", bias.len());
+            }
+            layers.push(Layer { name, kernel, bias, relu, conv, out_c });
+        }
+        Ok(NativeModel { layers, packed_bits })
+    }
+
+    /// Forward a `(batch, 32, 32, 3)` NHWC image batch to `(batch, 10)`
+    /// logits.
+    pub fn forward(&self, images: &Tensor<f32>, threads: usize) -> Result<Tensor<f32>> {
+        let shape = images.shape();
+        if shape.len() != 4 || shape[1] != 32 || shape[2] != 32 || shape[3] != 3 {
+            bail!("expected (b, 32, 32, 3) images, got {shape:?}");
+        }
+        let batch = shape[0];
+        let mut h = images.data().to_vec();
+        let mut hw = 32usize;
+        let mut c = 3usize;
+        // conv trunk: im2col -> GEMM; the (b, oh, ow)-major GEMM output IS
+        // the next NHWC map
+        for layer in self.layers.iter().filter(|l| l.conv.is_some()) {
+            let g = layer.conv.as_ref().unwrap();
+            debug_assert_eq!((g.in_hw, g.in_c), (hw, c));
+            let cols = im2col(&h, batch, g)?;
+            h = layer.run(&cols, g.rows(batch), threads)?;
+            hw = g.out_hw;
+            c = layer.out_c;
+        }
+        // global average pool -> (batch, c)
+        let px = hw * hw;
+        let mut pooled = vec![0f32; batch * c];
+        for b in 0..batch {
+            for p in 0..px {
+                let src = (b * px + p) * c;
+                for ch in 0..c {
+                    pooled[b * c + ch] += h[src + ch];
+                }
+            }
+        }
+        let inv = 1.0 / px as f32;
+        pooled.iter_mut().for_each(|v| *v *= inv);
+        // FC head
+        let mut x = pooled;
+        for layer in self.layers.iter().filter(|l| l.conv.is_none()) {
+            x = layer.run(&x, batch, threads)?;
+        }
+        let classes = self.layers.last().map_or(0, |l| l.out_c);
+        Tensor::new(&[batch, classes], x)
+    }
+}
+
+/// Load the TinyCNN fp32 weight set: `tinycnn_weights.npz` when the
+/// artifact directory has one, else a deterministic He-initialized
+/// surrogate (DESIGN.md §4 — statistics stand in for identity, so the
+/// serving stack exercises the exact shapes and dataflow of the trained
+/// net even on a machine that never ran `make artifacts`).
+pub fn tinycnn_weights(dir: Option<&Path>) -> Result<HashMap<String, Tensor<f32>>> {
+    if let Some(d) = dir {
+        let npz = d.join("tinycnn_weights.npz");
+        if npz.exists() {
+            let loaded = npy::load_npz(&npz)?;
+            return Ok(loaded.into_iter().map(|(k, v)| (k, v.as_f32())).collect());
+        }
+    }
+    // loud on purpose: predictions from surrogate weights are structurally
+    // real but semantically meaningless — never let that pass for a
+    // trained model
+    eprintln!(
+        "tinycnn_weights.npz not found{}; using UNTRAINED He-init surrogate weights \
+         (serving plumbing/latency are real, accuracy is not)",
+        dir.map_or(String::new(), |d| format!(" in {}", d.display()))
+    );
+    Ok(surrogate_tinycnn_weights(2021))
+}
+
+/// Surrogate weights in the jax layouts (conv HWIO, FC `(din,dout)`),
+/// biases zero — deterministic in `seed`. Draws come from
+/// [`crate::nets::surrogate_weights`] on the zoo's own TinyCNN shape
+/// table, so the native backend's stand-in weights follow the same
+/// documented convention (tagged RNG, `SIGMA_SCALE`-adjusted He sigma)
+/// as every simulator/compression experiment — just transposed from the
+/// filters-first draw into the serving layouts.
+pub fn surrogate_tinycnn_weights(seed: u64) -> HashMap<String, Tensor<f32>> {
+    let mut out = HashMap::new();
+    for layer in &crate::nets::tinycnn().with_fc().layers {
+        let fan_in = layer.fan_in();
+        let k = layer.out_c;
+        let wf = surrogate_weights(layer, seed); // filters-first (k, fan_in)
+        let mut data = vec![0f32; fan_in * k];
+        for o in 0..k {
+            for i in 0..fan_in {
+                data[i * k + o] = wf[o * fan_in + i] as f32;
+            }
+        }
+        let shape: Vec<usize> = if layer.k > 1 {
+            vec![layer.k, layer.k, layer.in_c, k] // conv HWIO
+        } else {
+            vec![fan_in, k] // FC (din, dout)
+        };
+        out.insert(layer.name.clone(), Tensor::new(&shape, data).unwrap());
+        out.insert(format!("{}_b", layer.name), Tensor::new(&[k], vec![0.0; k]).unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn images(batch: usize, seed: u64) -> Tensor<f32> {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..batch * 32 * 32 * 3)
+            .map(|_| rng.range_f64(0.0, 1.0) as f32)
+            .collect();
+        Tensor::new(&[batch, 32, 32, 3], data).unwrap()
+    }
+
+    #[test]
+    fn fp32_forward_shapes_and_determinism() {
+        let w = surrogate_tinycnn_weights(7);
+        let m = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap();
+        let x = images(3, 1);
+        let a = m.forward(&x, 1).unwrap();
+        assert_eq!(a.shape(), &[3, 10]);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+        // thread-count invariance end to end
+        let b = m.forward(&x, 4).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn swis_variant_tracks_fp32() {
+        let w = surrogate_tinycnn_weights(7);
+        let fp = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap();
+        let sw = NativeModel::prepare(
+            &w,
+            WeightTransform::Swis { n_shifts: 6.0, group_size: 4, consecutive: false },
+        )
+        .unwrap();
+        assert!(sw.packed_bits > 0);
+        let x = images(2, 2);
+        let a = fp.forward(&x, 2).unwrap();
+        let b = sw.forward(&x, 2).unwrap();
+        // 6 shifts on 8-bit mags is near-lossless; act quantization adds
+        // a little more — logits must stay close, not identical
+        let mut max_abs = 0f32;
+        let mut max_diff = 0f32;
+        for (p, q) in a.data().iter().zip(b.data()) {
+            max_abs = max_abs.max(p.abs());
+            max_diff = max_diff.max((p - q).abs());
+        }
+        assert!(max_diff < 0.25 * max_abs.max(1.0), "drift {max_diff} vs scale {max_abs}");
+        assert_ne!(a.data(), b.data());
+    }
+
+    #[test]
+    fn fractional_and_truncated_variants_run() {
+        let w = surrogate_tinycnn_weights(3);
+        let sched = NativeModel::prepare(
+            &w,
+            WeightTransform::Swis { n_shifts: 2.5, group_size: 4, consecutive: false },
+        )
+        .unwrap();
+        let tr = NativeModel::prepare(&w, WeightTransform::Truncate { bits: 3 }).unwrap();
+        let x = images(1, 5);
+        assert_eq!(sched.forward(&x, 2).unwrap().shape(), &[1, 10]);
+        assert_eq!(tr.forward(&x, 2).unwrap().shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn forward_is_batch_composition_invariant() {
+        // per-row activation quantization: image A's logits are identical
+        // whether A runs alone or co-batched with a wildly different B
+        let w = surrogate_tinycnn_weights(7);
+        let m = NativeModel::prepare(
+            &w,
+            WeightTransform::Swis { n_shifts: 3.0, group_size: 4, consecutive: false },
+        )
+        .unwrap();
+        let a = images(1, 4);
+        let mut both = a.data().to_vec();
+        let mut rng = Rng::new(8);
+        both.extend((0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 90.0) as f32));
+        let pair = Tensor::new(&[2, 32, 32, 3], both).unwrap();
+        let alone = m.forward(&a, 2).unwrap();
+        let paired = m.forward(&pair, 2).unwrap();
+        assert_eq!(alone.data(), &paired.data()[..10]);
+    }
+
+    #[test]
+    fn missing_weight_is_a_clear_error() {
+        let mut w = surrogate_tinycnn_weights(1);
+        w.remove("conv3");
+        let e = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap_err();
+        assert!(format!("{e:#}").contains("conv3"));
+    }
+
+    #[test]
+    fn rejects_bad_image_shape() {
+        let w = surrogate_tinycnn_weights(1);
+        let m = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap();
+        let bad = Tensor::new(&[1, 16, 16, 3], vec![0.0; 16 * 16 * 3]).unwrap();
+        assert!(m.forward(&bad, 1).is_err());
+    }
+}

@@ -23,18 +23,41 @@
 //!   (paper Sec. 3.1, 3.3).
 //! * [`sim`] — output-stationary systolic-array cycle & memory-traffic
 //!   simulator, SCALE-Sim-class (paper Sec. 3.2, 5.2).
+//! * [`exec`] — the NATIVE SWIS engine: cache-blocked, thread-parallel
+//!   packed bit-serial GEMM/conv kernels consuming [`quant::PackedLayer`]
+//!   directly, plus the TinyCNN forward pass they compose into.
 //! * [`nets`] — layer shape tables: ResNet-18, MobileNet-v2, VGG-16 and
 //!   the TinyCNN accuracy proxy.
 //! * [`analysis`] — lossless-quantization probability (paper Eq. 8-10).
-//! * [`runtime`] — PJRT client wrapper executing AOT-lowered HLO-text
-//!   artifacts produced by `python/compile/aot.py`.
+//! * [`runtime`] — the execution backends behind serving: the
+//!   [`runtime::Backend`] trait with the PJRT/AOT implementation
+//!   (HLO-text artifacts from `python/compile/aot.py`) and the native
+//!   implementation over [`exec`].
 //! * [`coordinator`] — the serving layer: dynamic batcher, router,
 //!   metrics; Python never runs on the request path.
 //! * [`util`] — tensors, NPY/NPZ + JSON IO, RNG, CLI, property-testing.
+//!
+//! ## Execution tiers — which one is authoritative for what
+//!
+//! Packed SWIS operands execute at four fidelities; they agree where
+//! their contracts overlap, and tests pin those overlaps:
+//!
+//! | tier | where | computes | authoritative for |
+//! |------|-------|----------|-------------------|
+//! | analytic sim | [`sim`] | cycle/energy/traffic models, no data | paper performance figures (Sec. 5) |
+//! | functional machine | [`sim::functional`], [`arch::pe_functional`] | exact integer MACs, cycle-faithful | hardware semantics: fold schedule, PE timing, accumulator width |
+//! | native engine | [`exec`] | the SAME integer MACs at software speed | serving when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`) |
+//! | PJRT | [`runtime`] | fp32 graph over (de)quantized weights | trained-model accuracy vs build-time goldens |
+//!
+//! The shared group-op arithmetic lives once, in [`exec::core`]; the
+//! functional machine layers cycle accounting on top of it, the native
+//! kernel layers blocking/threading, and the analytic sim prices the
+//! same plane counts it executes.
 
 pub mod analysis;
 pub mod arch;
 pub mod coordinator;
+pub mod exec;
 pub mod nets;
 pub mod quant;
 pub mod runtime;

@@ -10,7 +10,7 @@
 //! Examples:
 //!   swis quantize --net resnet18 --shifts 3 --group 4
 //!   swis simulate --net mobilenet_v2 --scheme swis --shifts 3.5 --pe ds
-//!   swis serve --artifacts artifacts --requests 256 --variants fp32,swis@3
+//!   swis serve --requests 256 --variants fp32,swis@3 --backend native
 //!   swis prob
 
 use anyhow::{bail, Context, Result};
@@ -30,7 +30,7 @@ use swis::util::stats::rmse;
 
 const VALUE_KEYS: &[&str] = &[
     "net", "shifts", "group", "scheme", "pe", "rows", "cols", "artifacts", "requests",
-    "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save",
+    "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend",
 ];
 
 fn main() {
@@ -191,6 +191,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         .split(',')
         .map(VariantSpec::parse)
         .collect::<Result<_>>()?;
+    let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
     let policy = BatchPolicy {
         max_batch: args.get_usize("max-batch", 64)?,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
@@ -198,7 +199,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
 
     println!("# serve — starting coordinator ({} variants)", names.len());
-    let coord = Coordinator::start(Path::new(dir), policy, variants)?;
+    let coord = Coordinator::start_with(Path::new(dir), policy, variants, backend)?;
+    println!("backend          : {}", coord.backend());
     let mut rng = Rng::new(7);
     let mut rxs = Vec::with_capacity(n_req);
     let t0 = std::time::Instant::now();

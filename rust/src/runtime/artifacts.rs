@@ -29,7 +29,18 @@ pub struct ArtifactSpec {
     pub kind: String,
     pub batch: Option<usize>,
     pub inputs: Vec<TensorSpec>,
-    pub output: TensorSpec,
+    /// ALL output leaves, in tuple order (never empty). Singular-`output`
+    /// manifests get one entry; multi-output artifacts list them under
+    /// `outputs`.
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// First (primary) output leaf — what single-output callers consume.
+    /// Derived, so it can never disagree with `outputs`.
+    pub fn output(&self) -> &TensorSpec {
+        &self.outputs[0]
+    }
 }
 
 /// Parsed manifest.
@@ -76,12 +87,33 @@ impl Manifest {
                     tensor_spec(i, name)
                 })
                 .collect::<Result<Vec<_>>>()?;
+            // "outputs" (tuple order) when present, else singular "output"
+            let outputs: Vec<TensorSpec> = match a.get("outputs").and_then(|o| o.as_arr()) {
+                Some(arr) => arr
+                    .iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        let name = o
+                            .get("name")
+                            .and_then(|n| n.as_str())
+                            .map_or_else(|| format!("output{i}"), str::to_string);
+                        tensor_spec(o, &name)
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![tensor_spec(
+                    a.get("output").context("artifact: no output(s)")?,
+                    "output",
+                )?],
+            };
+            if outputs.is_empty() {
+                bail!("artifact: empty outputs list");
+            }
             artifacts.push(ArtifactSpec {
                 file: a.get("file").and_then(|f| f.as_str()).context("artifact: no file")?.to_string(),
                 kind: a.get("kind").and_then(|k| k.as_str()).unwrap_or("model").to_string(),
                 batch: a.get("batch").and_then(|b| b.as_usize()),
                 inputs,
-                output: tensor_spec(a.get("output").context("artifact: no output")?, "output")?,
+                outputs,
             });
         }
         Ok(Manifest {
@@ -144,6 +176,19 @@ impl ModelBundle {
                 weight_order = spec.inputs[1..].iter().map(|i| i.name.clone()).collect();
             }
             let exe = rt.compile_hlo_text(&dir.join(&spec.file))?;
+            // when the module text yields an arity, it must agree with
+            // the manifest — a mismatch means stale artifacts or a wrong
+            // manifest, and trusting either silently truncates tupled
+            // results (undetectable text parses skip the check)
+            if let Some(n) = exe.n_outputs {
+                if n != spec.outputs.len() {
+                    bail!(
+                        "{}: HLO declares {n} output leaves, manifest lists {}",
+                        spec.file,
+                        spec.outputs.len()
+                    );
+                }
+            }
             executables.insert(b, exe);
         }
         Ok(ModelBundle {
@@ -236,16 +281,51 @@ mod tests {
 
     #[test]
     fn manifest_parses() {
+        if !art_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = Manifest::load(&art_dir()).unwrap();
         assert!(m.baseline_accuracy > 0.5, "baseline {}", m.baseline_accuracy);
         assert_eq!(m.batches("model"), vec![1, 8, 64]);
         let b8 = m.find("model", Some(8)).unwrap();
         assert_eq!(b8.inputs[0].shape, vec![8, 32, 32, 3]);
-        assert_eq!(b8.output.shape, vec![8, 10]);
+        assert_eq!(b8.output().shape, vec![8, 10]);
+        assert_eq!(b8.outputs.len(), 1);
     }
 
     #[test]
     fn missing_dir_errors() {
         assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn outputs_list_parses_with_singular_fallback() {
+        let dir = std::env::temp_dir().join("swis_manifest_outputs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"baseline_accuracy": 0.9, "artifacts": [
+                {"file": "multi.hlo.txt", "kind": "multi", "batch": 1,
+                 "inputs": [{"name": "images", "shape": [1, 32, 32, 3]}],
+                 "outputs": [{"name": "logits", "shape": [1, 10]},
+                             {"shape": [1, 128]}]},
+                {"file": "single.hlo.txt", "kind": "model", "batch": 1,
+                 "inputs": [{"name": "images", "shape": [1, 32, 32, 3]}],
+                 "output": {"shape": [1, 10]}}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let multi = m.find("multi", Some(1)).unwrap();
+        assert_eq!(multi.outputs.len(), 2);
+        assert_eq!(multi.output().shape, vec![1, 10]);
+        assert_eq!(multi.outputs[0].name, "logits");
+        assert_eq!(multi.outputs[1].name, "output1");
+        assert_eq!(multi.outputs[1].shape, vec![1, 128]);
+        let single = m.find("model", Some(1)).unwrap();
+        assert_eq!(single.outputs.len(), 1);
+        assert_eq!(single.output().shape, vec![1, 10]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,228 @@
+//! Execution backends behind the serving coordinator.
+//!
+//! [`Backend`] is the compile/load/execute seam: the coordinator's worker
+//! thread owns one backend and routes every dispatched batch through it.
+//! Two implementations ship:
+//!
+//! * [`PjrtBackend`] — the AOT path: compiled HLO-text artifacts executed
+//!   by the PJRT client, weight variants as dequantized fp32 sets fed to
+//!   the weight-agnostic graph ([`super::ModelBundle`]).
+//! * [`NativeBackend`] — the SWIS-native path: per-variant
+//!   [`NativeModel`]s executing [`crate::quant::PackedLayer`] operands
+//!   directly through the packed bit-serial kernel. Needs no PJRT, no
+//!   artifacts (weights fall back to deterministic surrogates), and is
+//!   the default whenever the AOT path is unavailable.
+//!
+//! [`BackendKind::Auto`] picks PJRT when the artifacts + runtime are
+//! present and falls back to native, so `Coordinator::start` serves in
+//! every environment.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{ModelBundle, Runtime};
+use crate::coordinator::{VariantSpec, WeightVariants};
+use crate::exec::{tinycnn_weights, NativeModel};
+use crate::quant::planner;
+use crate::util::tensor::Tensor;
+
+/// A loaded model able to execute image batches for named weight
+/// variants. Implementations are created AND consumed on the coordinator
+/// worker thread (PJRT handles are thread-affine), so the trait requires
+/// neither `Send` nor `Sync` — the real xla-rs types need not provide
+/// them.
+pub trait Backend {
+    /// Short identifier for logs/metrics ("pjrt" | "native").
+    fn name(&self) -> &'static str;
+
+    fn has_variant(&self, name: &str) -> bool;
+
+    /// Split a group of `n` same-variant requests into execution batch
+    /// sizes (PJRT: compiled variants; native: one dynamic batch).
+    fn plan_chunks(&self, n: usize) -> Vec<usize>;
+
+    /// Execute a `(n, 32, 32, 3)` image batch under `variant`, returning
+    /// `(n, n_classes)` logits.
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>>;
+}
+
+/// Which backend the coordinator should build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when artifacts + runtime exist, else native.
+    Auto,
+    Pjrt,
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "pjrt" => BackendKind::Pjrt,
+            "native" => BackendKind::Native,
+            other => bail!("unknown backend '{other}' (expected auto|pjrt|native)"),
+        })
+    }
+}
+
+/// Build the requested backend for an artifact directory + variant list.
+pub fn create_backend(
+    kind: BackendKind,
+    dir: &Path,
+    variants: &[VariantSpec],
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(dir, variants)?)),
+        BackendKind::Native => Ok(Box::new(NativeBackend::load(Some(dir), variants)?)),
+        BackendKind::Auto => {
+            // manifest presence is the cheap gate; PjrtBackend::load
+            // itself is the PJRT-availability probe (constructing a
+            // throwaway client first would double the slow warm-up step)
+            if dir.join("manifest.json").exists() {
+                match PjrtBackend::load(dir, variants) {
+                    Ok(b) => return Ok(Box::new(b)),
+                    Err(e) => eprintln!("PJRT backend unavailable ({e:#}); falling back to native"),
+                }
+            } else {
+                // loud on purpose: a mistyped --artifacts path must not
+                // silently look like a healthy trained-model deployment
+                eprintln!(
+                    "no PJRT artifacts at {}; serving on the native backend",
+                    dir.display()
+                );
+            }
+            Ok(Box::new(NativeBackend::load(Some(dir), variants)?))
+        }
+    }
+}
+
+/// The AOT/PJRT execution path.
+pub struct PjrtBackend {
+    /// Owns the PJRT client the executables were compiled on.
+    _rt: Runtime,
+    bundle: ModelBundle,
+    sets: WeightVariants,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: &Path, variants: &[VariantSpec]) -> Result<PjrtBackend> {
+        let rt = Runtime::cpu()?;
+        let bundle = ModelBundle::load(&rt, dir, "model")?;
+        let sets = WeightVariants::build(&bundle.weights, variants)?;
+        Ok(PjrtBackend { _rt: rt, bundle, sets })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn has_variant(&self, name: &str) -> bool {
+        self.sets.get(name).is_some()
+    }
+
+    fn plan_chunks(&self, n: usize) -> Vec<usize> {
+        self.bundle.plan_chunks(n)
+    }
+
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+        let weights = self
+            .sets
+            .get(variant)
+            .with_context(|| format!("unknown variant '{variant}'"))?;
+        self.bundle.infer(images, Some(weights))
+    }
+}
+
+/// The native SWIS execution path: one prepared [`NativeModel`] per
+/// variant, executing packed operands directly.
+pub struct NativeBackend {
+    models: HashMap<String, NativeModel>,
+    threads: usize,
+}
+
+impl NativeBackend {
+    /// Load fp32 weights (artifact npz when present, deterministic
+    /// surrogates otherwise) and quantize/prepare every variant.
+    pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> Result<NativeBackend> {
+        let weights = tinycnn_weights(dir)?;
+        let mut models = HashMap::new();
+        for spec in variants {
+            let model = NativeModel::prepare(&weights, spec.transform()?)
+                .with_context(|| format!("preparing variant '{}'", spec.name))?;
+            models.insert(spec.name.clone(), model);
+        }
+        Ok(NativeBackend { models, threads: planner::default_threads() })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn has_variant(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    fn plan_chunks(&self, n: usize) -> Vec<usize> {
+        // the kernel parallelizes inside a batch; one dynamic chunk
+        if n == 0 {
+            vec![]
+        } else {
+            vec![n]
+        }
+    }
+
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+        let model = self
+            .models
+            .get(variant)
+            .with_context(|| format!("unknown variant '{variant}'"))?;
+        model.forward(images, self.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<VariantSpec> {
+        vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4), VariantSpec::swis_c(2.0, 4)]
+    }
+
+    #[test]
+    fn native_backend_serves_without_artifacts() {
+        let b = NativeBackend::load(None, &specs()).unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(b.has_variant("fp32") && b.has_variant("swis@3") && b.has_variant("swis_c@2"));
+        assert!(!b.has_variant("nope"));
+        assert_eq!(b.plan_chunks(5), vec![5]);
+        assert_eq!(b.plan_chunks(0), Vec::<usize>::new());
+        let imgs = Tensor::new(&[2, 32, 32, 3], vec![0.5; 2 * 32 * 32 * 3]).unwrap();
+        let logits = b.infer("swis@3", &imgs).unwrap();
+        assert_eq!(logits.shape(), &[2, 10]);
+        assert!(b.infer("nope", &imgs).is_err());
+    }
+
+    #[test]
+    fn auto_falls_back_to_native() {
+        // no manifest at this path and the xla stub has no PJRT: Auto
+        // must yield the native backend rather than an error
+        let b = create_backend(BackendKind::Auto, Path::new("/nonexistent"), &specs()).unwrap();
+        assert_eq!(b.name(), "native");
+        // explicit PJRT stays a hard failure in offline builds
+        assert!(create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), &specs()).is_err());
+    }
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+}

@@ -13,8 +13,71 @@ pub struct Runtime {
 /// One compiled HLO module.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
-    /// Number of leaves in the (tupled) result.
-    pub n_outputs: usize,
+    /// Number of leaves in the (tupled) result, derived from the HLO
+    /// text's entry computation at compile time; `None` when the text
+    /// was not recognizable (arity checks are then skipped rather than
+    /// guessed — a wrong guess would reject working artifacts).
+    pub n_outputs: Option<usize>,
+}
+
+/// Output arity of an HLO-text module: the number of leaves in the entry
+/// computation's result type. Prefers the `entry_computation_layout`
+/// header (always present in jax-serialized text); falls back to the
+/// `ENTRY` computation's `ROOT` instruction type. `None` when neither is
+/// recognizable.
+///
+/// This is how [`Runtime::compile_hlo_text`] sizes `n_outputs` instead of
+/// hardcoding 1 — a tupled multi-output artifact would otherwise be
+/// silently truncated by callers trusting the field.
+pub fn hlo_output_arity(text: &str) -> Option<usize> {
+    // entry_computation_layout={(f32[8,32,32,3]{...}, ...)->(f32[8,10]{...})}
+    if let Some(pos) = text.find("entry_computation_layout=") {
+        let rest = &text[pos..];
+        if let Some(arrow) = rest.find("->") {
+            return type_arity(rest[arrow + 2..].trim_start());
+        }
+    }
+    // ENTRY %main ... { ... ROOT %t = (f32[...], f32[...]) tuple(...) }
+    let entry = text.find("\nENTRY ").map(|p| p + 1).or_else(|| {
+        if text.starts_with("ENTRY ") {
+            Some(0)
+        } else {
+            None
+        }
+    })?;
+    let body = &text[entry..];
+    let root = body.find("ROOT ")?;
+    let after_eq = body[root..].find(" = ").map(|p| root + p + 3)?;
+    type_arity(body[after_eq..].trim_start())
+}
+
+/// Arity of an HLO type string starting at `s`: a parenthesized tuple
+/// counts its top-level elements (commas inside `[]`/`{}` dim lists are
+/// nested); anything else is one leaf.
+fn type_arity(s: &str) -> Option<usize> {
+    let s = s.trim_start();
+    if !s.starts_with('(') {
+        return Some(1);
+    }
+    let mut depth = 0usize;
+    let mut elems = 1usize;
+    let mut saw_any = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => {
+                depth = depth.checked_sub(1)?;
+                if depth == 0 {
+                    // empty tuple "()" has zero leaves
+                    return Some(if saw_any { elems } else { 0 });
+                }
+            }
+            ',' if depth == 1 => elems += 1,
+            c if !c.is_whitespace() && i > 0 => saw_any = true,
+            _ => {}
+        }
+    }
+    None
 }
 
 impl Runtime {
@@ -28,8 +91,12 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact.
+    /// Load + compile an HLO-text artifact. The executable's output
+    /// arity is derived from the module text (see [`hlo_output_arity`]).
     pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {}", path.display()))?;
+        let n_outputs = hlo_output_arity(&text);
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 path")?,
         )
@@ -39,7 +106,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, n_outputs: 1 })
+        Ok(Executable { exe, n_outputs })
     }
 }
 
@@ -65,6 +132,14 @@ impl Executable {
         let lit = result[0][0].to_literal_sync().context("device->host")?;
         // aot.py lowers with return_tuple=True: unwrap the tuple leaves.
         let leaves = lit.to_tuple()?;
+        if let Some(n) = self.n_outputs {
+            if leaves.len() != n {
+                bail!(
+                    "executable returned {} leaves but the module declares {n} outputs",
+                    leaves.len()
+                );
+            }
+        }
         let mut out = Vec::with_capacity(leaves.len());
         for leaf in leaves {
             let shape = leaf.array_shape()?;
@@ -73,5 +148,47 @@ impl Executable {
             out.push(Tensor::new(&dims, data)?);
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_from_entry_computation_layout() {
+        let text = "HloModule jit_forward, \
+                    entry_computation_layout={(f32[8,32,32,3]{3,2,1,0}, \
+                    f32[3,3,3,32]{3,2,1,0})->(f32[8,10]{1,0})}\n\
+                    ENTRY %main {}\n";
+        assert_eq!(hlo_output_arity(text), Some(1));
+    }
+
+    #[test]
+    fn arity_counts_tuple_leaves_not_dim_commas() {
+        let text = "HloModule m, entry_computation_layout=\
+                    {(f32[4,4]{1,0})->(f32[8,10]{1,0}, f32[2,3,4]{2,1,0}, s32[7]{0})}\n";
+        assert_eq!(hlo_output_arity(text), Some(3));
+    }
+
+    #[test]
+    fn arity_non_tuple_result_is_one() {
+        let text = "HloModule m, entry_computation_layout={(f32[2]{0})->f32[2,5]{1,0}}\n";
+        assert_eq!(hlo_output_arity(text), Some(1));
+    }
+
+    #[test]
+    fn arity_from_entry_root_fallback() {
+        let text = "HloModule m\n\
+                    %helper (a: f32[2]) -> f32[2] {\n  ROOT %a = f32[2]{0} parameter(0)\n}\n\
+                    ENTRY %main (p: f32[2]) -> (f32[2], f32[2]) {\n\
+                    ROOT %t = (f32[2]{0}, f32[2]{0}) tuple(%p, %p)\n}\n";
+        assert_eq!(hlo_output_arity(text), Some(2));
+    }
+
+    #[test]
+    fn arity_unparseable_is_none() {
+        assert_eq!(hlo_output_arity("not hlo at all"), None);
+        assert_eq!(hlo_output_arity(""), None);
     }
 }

@@ -1,15 +1,18 @@
-//! PJRT runtime (build-time Python, run-time Rust): loads the HLO-text
-//! artifacts `python/compile/aot.py` emits, compiles them on the PJRT CPU
-//! client, and executes them from the coordinator's hot path. Python is
-//! never on the request path — the Rust binary is self-contained once
-//! `make artifacts` has run.
+//! The execution runtime behind the coordinator: the [`Backend`] trait
+//! plus its two implementations — the PJRT/AOT path (this module's
+//! [`Runtime`] / [`ModelBundle`], loading the HLO-text artifacts
+//! `python/compile/aot.py` emits) and the native SWIS engine
+//! ([`crate::exec`], packed-operand execution with no PJRT and no
+//! artifacts). Python is never on the request path on either backend.
 //!
 //! HLO *text* is the interchange format: jax >= 0.5 serializes
 //! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README).
 
 mod artifacts;
+mod backend;
 mod client;
 
 pub use artifacts::{ArtifactSpec, Manifest, ModelBundle, TensorSpec};
-pub use client::{Executable, Runtime};
+pub use backend::{create_backend, Backend, BackendKind, NativeBackend, PjrtBackend};
+pub use client::{hlo_output_arity, Executable, Runtime};

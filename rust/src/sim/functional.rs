@@ -4,12 +4,18 @@
 //! integer matmul the packed format implies. The analytic cycle model in
 //! [`super::layer`] is validated against this machine's cycle counter on
 //! small layers.
+//!
+//! The group-op arithmetic is the shared [`crate::exec::core`]
+//! semantics; the fast serving path ([`crate::exec::kernel`]) computes
+//! the same integers without the fold/cycle bookkeeping and is pinned
+//! bit-exactly against [`run_matmul`] by `tests/native_equiv.rs`.
 
 use anyhow::{bail, Result};
 
 use super::config::ArrayConfig;
 use crate::arch::pe::PeKind;
 use crate::arch::pe_functional::FunctionalPe;
+use crate::exec::core;
 use crate::quant::PackedLayer;
 
 /// Result of a functional run.
@@ -69,14 +75,12 @@ pub fn run_matmul(
                         continue;
                     }
                     let mut pe = FunctionalPe::new(gs, double);
+                    let arow = &acts[row * fan_in..(row + 1) * fan_in];
                     for gl in 0..gpf {
                         let g = col * gpf + gl;
                         // staggered feed: the activation vector for this
                         // group-op, zero-padded at the fan-in tail
-                        for i in 0..gs {
-                            let idx = gl * gs + i;
-                            lanes[i] = if idx < fan_in { acts[row * fan_in + idx] } else { 0 };
-                        }
+                        core::gather_lanes(arow, gl, gs, &mut lanes);
                         pe.group_op(packed, g, &lanes);
                     }
                     out[row * k + col] = pe.accumulator();

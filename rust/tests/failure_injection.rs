@@ -112,15 +112,27 @@ fn truncated_npz_rejected() {
 
 #[test]
 fn coordinator_start_fails_cleanly_on_bad_dir() {
-    // must return Err, not hang or panic, and the thread must be reaped
+    // the explicit PJRT backend must return Err on a bad artifact dir —
+    // not hang or panic — and the thread must be reaped
     for _ in 0..3 {
-        let r = Coordinator::start(
+        let r = Coordinator::start_with(
             Path::new("/definitely/not/here"),
             BatchPolicy::default(),
             vec![VariantSpec::fp32()],
+            swis::coordinator::BackendKind::Pjrt,
         );
         assert!(r.is_err());
     }
+    // the default (Auto) keeps serving by falling back to the native
+    // engine instead of failing
+    let coord = Coordinator::start(
+        Path::new("/definitely/not/here"),
+        BatchPolicy::default(),
+        vec![VariantSpec::fp32()],
+    )
+    .unwrap();
+    assert_eq!(coord.backend(), "native");
+    coord.shutdown().unwrap();
 }
 
 #[test]
@@ -129,14 +141,9 @@ fn coordinator_survives_weird_variant_names() {
     assert!(VariantSpec::parse("swis@").is_err());
     assert!(VariantSpec::parse("swis@NaNx").is_err());
     assert!(VariantSpec::parse("@3").is_err());
-    // n_shifts wildly out of range is caught when quantizing
-    let spec = VariantSpec::parse("swis@77").unwrap();
-    let mut w = std::collections::HashMap::new();
-    w.insert(
-        "conv1".to_string(),
-        swis::util::tensor::Tensor::new(&[3, 3, 4, 8], vec![0.1f32; 288]).unwrap(),
-    );
-    assert!(swis::coordinator::WeightVariants::build(&w, &[spec]).is_err());
+    // n_shifts out of range is now rejected at parse time, before any
+    // quantizer sees it
+    assert!(VariantSpec::parse("swis@77").is_err());
 }
 
 #[test]

@@ -1,0 +1,150 @@
+//! Native-engine equivalence suite: the serving kernel
+//! (`exec::kernel::PreparedGemm`) must be BIT-IDENTICAL to the
+//! cycle-faithful functional simulator (`sim::functional::run_matmul`)
+//! on the integer MACs, and track the dequantized fp32 reference within
+//! float tolerance — across SWIS/SWIS-C, group sizes, scheduled
+//! (fractional) shift counts, ragged fan-ins and thread counts.
+
+use swis::arch::pe::PeKind;
+use swis::exec::{naive_gemm, quantize_acts_rows, NativeModel, PreparedGemm, WeightTransform};
+use swis::quant::{quantize, Alpha, PackedLayer, QuantConfig};
+use swis::schedule::quantize_or_schedule;
+use swis::sim::functional::{reference_matmul, run_matmul};
+use swis::sim::ArrayConfig;
+use swis::util::rng::Rng;
+
+fn acts_for(rows: usize, fan_in: usize, rng: &mut Rng) -> Vec<i32> {
+    (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect()
+}
+
+fn array_cfg(gs: usize) -> ArrayConfig {
+    let mut c = ArrayConfig::paper_baseline(PeKind::SingleShift);
+    c.group_size = gs;
+    c
+}
+
+/// Run one config through kernel, naive loop, functional array and the
+/// lane-major reference; all four must agree exactly.
+fn check_exact(p: &PackedLayer, label: &str, rng: &mut Rng) {
+    let rows = 17usize;
+    let acts = acts_for(rows, p.fan_in(), rng);
+    let prep = PreparedGemm::from_packed(p).unwrap();
+    let fast = prep.gemm(&acts, rows, 1).unwrap();
+    let sim = run_matmul(&acts, rows, p, &array_cfg(p.group_size)).unwrap();
+    assert_eq!(fast, sim.out, "{label}: kernel != functional array");
+    assert_eq!(fast, reference_matmul(&acts, rows, p), "{label}: kernel != reference");
+    assert_eq!(fast, naive_gemm(p, &acts, rows).unwrap(), "{label}: kernel != naive loop");
+}
+
+#[test]
+fn bit_exact_across_schemes_groups_and_shift_counts() {
+    let mut rng = Rng::new(42);
+    for &consecutive in &[false, true] {
+        for &gs in &[4usize, 16] {
+            for &n in &[1usize, 2, 3, 4] {
+                let k = 12usize;
+                let fan_in = 48usize;
+                let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
+                let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive };
+                let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
+                check_exact(&p, &format!("cons={consecutive} G={gs} N={n}"), &mut rng);
+            }
+        }
+    }
+}
+
+#[test]
+fn bit_exact_on_ragged_fan_in() {
+    // fan_in not a multiple of the group size: padded tail lanes
+    let mut rng = Rng::new(7);
+    for &(fan_in, gs) in &[(30usize, 4usize), (27, 4), (50, 16), (5, 4)] {
+        let k = 8usize;
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.08);
+        let cfg = QuantConfig { n_shifts: 3, group_size: gs, alpha: Alpha::ONE, consecutive: false };
+        let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
+        check_exact(&p, &format!("ragged fan_in={fan_in} G={gs}"), &mut rng);
+    }
+}
+
+#[test]
+fn bit_exact_on_scheduled_fractional_shifts() {
+    // the Sec. 4.3 scheduler assigns heterogeneous per-filter counts;
+    // the kernel must honor active_shifts per group
+    let mut rng = Rng::new(13);
+    for &target in &[2.5f64, 1.5] {
+        let k = 16usize;
+        let fan_in = 32usize;
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.05);
+        let p = quantize_or_schedule(&w, &[k, fan_in], target, 4, false, Alpha::ONE).unwrap();
+        assert!(p.filter_shifts.is_some(), "scheduler must assign per-filter counts");
+        check_exact(&p, &format!("scheduled target={target}"), &mut rng);
+    }
+}
+
+#[test]
+fn thread_count_invariant_and_parallel_exact() {
+    let mut rng = Rng::new(99);
+    let k = 24usize;
+    let fan_in = 96usize;
+    let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
+    let p = quantize(&w, &[k, fan_in], &QuantConfig::swis(3, 4)).unwrap();
+    let rows = 53usize; // deliberately not a multiple of any chunk size
+    let acts = acts_for(rows, fan_in, &mut rng);
+    let prep = PreparedGemm::from_packed(&p).unwrap();
+    let sim = run_matmul(&acts, rows, &p, &array_cfg(4)).unwrap();
+    let one = prep.gemm(&acts, rows, 1).unwrap();
+    assert_eq!(one, sim.out);
+    for nt in [2usize, 4, 7, 16, 64] {
+        assert_eq!(prep.gemm(&acts, rows, nt).unwrap(), one, "threads={nt}");
+    }
+}
+
+#[test]
+fn fp32_path_within_tolerance_of_dequantized_reference() {
+    // integer path * scales vs float matmul over packed.to_f64(): the
+    // only divergence allowed is f32/f64 rounding, not semantics
+    let mut rng = Rng::new(21);
+    let k = 10usize;
+    let fan_in = 36usize;
+    let w = rng.normal_vec(k * fan_in, 0.0, 0.09);
+    for &consecutive in &[false, true] {
+        let cfg = QuantConfig { n_shifts: 3, group_size: 4, alpha: Alpha::ONE, consecutive };
+        let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let rows = 9usize;
+        let acts: Vec<f32> =
+            (0..rows * fan_in).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let got = prep.gemm_f32(&acts, rows, 2).unwrap();
+        let (codes, scales) = quantize_acts_rows(&acts, rows).unwrap();
+        let deq = p.to_f64();
+        for r in 0..rows {
+            for f in 0..k {
+                let want: f64 = (0..fan_in)
+                    .map(|i| codes[r * fan_in + i] as f64 * scales[r] * deq[f * fan_in + i])
+                    .sum();
+                let diff = (got[r * k + f] as f64 - want).abs();
+                assert!(diff < 1e-4, "({r},{f}) cons={consecutive}: {diff}");
+            }
+        }
+    }
+}
+
+#[test]
+fn native_model_serves_quantized_tinycnn_without_artifacts() {
+    // the acceptance-criterion path, at model level: quantize + prepare +
+    // forward with nothing on disk
+    let w = swis::exec::surrogate_tinycnn_weights(2021);
+    let m = NativeModel::prepare(
+        &w,
+        WeightTransform::Swis { n_shifts: 3.0, group_size: 4, consecutive: false },
+    )
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let imgs: Vec<f32> = (0..2 * 32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    let x = swis::util::tensor::Tensor::new(&[2, 32, 32, 3], imgs).unwrap();
+    let a = m.forward(&x, 1).unwrap();
+    let b = m.forward(&x, 8).unwrap();
+    assert_eq!(a.shape(), &[2, 10]);
+    assert_eq!(a.data(), b.data(), "forward must be thread-count invariant");
+    assert!(m.packed_bits > 0);
+}
