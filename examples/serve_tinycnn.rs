@@ -1,24 +1,34 @@
-//! End-to-end serving driver (EXPERIMENTS.md §E2E): start the
-//! coordinator with FP32 + SWIS weight variants, replay a bursty
-//! open-loop request trace against it, and report accuracy (when the
-//! trained weights + test set are present), latency percentiles and
-//! throughput per variant.
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): start the worker
+//! pool with FP32 + SWIS weight variants, replay a bursty open-loop
+//! request trace against it, and report accuracy (when the trained
+//! weights + test set are present), latency percentiles, throughput and
+//! shed/backpressure counts.
+//!
+//! Dispatch path exercised here (the new serving stack end to end):
+//!
+//! ```text
+//!   this driver ─submit─▶ AdmissionQueue ─▶ WorkerPool(N) ─▶ Backend
+//! ```
 //!
 //! The backend is selected at start-up: compiled PJRT artifacts when
 //! `make artifacts` has run, the native SWIS engine otherwise — so this
 //! example is the proof that the serving stack composes end to end in
-//! EVERY environment: batching, variant routing and packed-operand
-//! execution with Python nowhere on the request path.
+//! EVERY environment: admission control, batching, variant routing and
+//! packed-operand execution with Python nowhere on the request path.
 //!
 //! Run: cargo run --release --example serve_tinycnn \
-//!          [-- --requests 512 --backend auto|pjrt|native]
+//!          [-- --requests 512 --workers 4 --queue-depth 256 \
+//!              --priority interactive --rate 300 --backend auto]
 
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use swis::coordinator::{BackendKind, BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::coordinator::{
+    BackendKind, BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
+};
+use swis::loadgen::exp_gap;
 use swis::util::cli;
 use swis::util::npy;
 use swis::util::rng::Rng;
@@ -27,10 +37,19 @@ fn main() -> Result<()> {
     // cargo strips the "--" separator itself; direct invocation may pass
     // it through — drop it either way so flags are never swallowed
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--").collect();
-    let args = cli::parse(&argv, &["requests", "max-batch", "max-wait-ms", "rate", "backend"])?;
+    let args = cli::parse(
+        &argv,
+        &[
+            "requests", "max-batch", "max-wait-ms", "rate", "backend", "workers", "queue-depth",
+            "priority",
+        ],
+    )?;
     let n_req = args.get_usize("requests", 512)?;
-    let rate = args.get_f64("rate", 300.0)?; // offered load, req/s
+    let rate = args.get_f64("rate", 300.0)?; // offered load, req/s; 0 = one burst
     let backend = BackendKind::parse(args.get_or("backend", "auto"))?;
+    let workers = args.get_usize("workers", 1)?;
+    let queue_depth = args.get_usize("queue-depth", 1024)?;
+    let priority = Priority::parse(args.get_or("priority", "interactive"))?;
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let variants = vec![
@@ -45,12 +64,13 @@ fn main() -> Result<()> {
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
     };
 
-    println!("starting coordinator with variants {names:?} ...");
+    println!("starting {workers}-worker pool with variants {names:?} ...");
     let t_start = Instant::now();
-    let coord = Coordinator::start_with(&dir, policy, variants, backend)?;
+    let cfg = PoolConfig { workers, policy, queue_depth };
+    let pool = WorkerPool::start(&dir, cfg, variants, backend)?;
     println!(
         "backend '{}' warm-up (compile/quantize) took {:.2} s",
-        coord.backend(),
+        pool.backend(),
         t_start.elapsed().as_secs_f64()
     );
 
@@ -71,7 +91,7 @@ fn main() -> Result<()> {
     };
     let n_avail = images.len() / per;
 
-    // open-loop Poisson-ish arrivals at `rate` req/s
+    // open-loop Poisson arrivals at `rate` req/s
     let mut rng = Rng::new(2026);
     let mut handles = Vec::with_capacity(n_req);
     let t0 = Instant::now();
@@ -79,10 +99,11 @@ fn main() -> Result<()> {
         let img_idx = i % n_avail;
         let image = images[img_idx * per..(img_idx + 1) * per].to_vec();
         let variant = names[i % names.len()].clone();
-        let rx = coord.submit(InferRequest { image, variant: variant.clone() })?;
+        let rx = pool.submit(InferRequest { image, variant: variant.clone() }, priority, None)?;
         handles.push((variant, img_idx, rx));
-        let gap = -rng.f64().max(1e-9).ln() / rate;
-        std::thread::sleep(Duration::from_secs_f64(gap));
+        if rate > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(exp_gap(&mut rng, rate)));
+        }
     }
 
     // collect + score
@@ -114,16 +135,18 @@ fn main() -> Result<()> {
         }
     }
 
-    let snap = coord.metrics.snapshot();
+    let snap = pool.metrics.snapshot();
     println!("\n== serving metrics ==");
-    println!("  backend         : {}", coord.backend());
+    println!("  backend         : {}", pool.backend());
+    println!("  workers         : {}", pool.workers());
     println!("  requests        : {n_req} in {:.2} s", wall.as_secs_f64());
     println!("  throughput      : {:.0} req/s (offered {rate:.0})", n_req as f64 / wall.as_secs_f64());
     println!("  batches         : {} (mean size {:.1})", snap.batches, snap.mean_batch);
+    println!("  shed / rejected : {} / {}", snap.shed, snap.rejected);
     println!("  exec  p50       : {:.0} us/batch", snap.exec_us.p50);
     println!("  queue p50       : {:.0} us", snap.queue_us.p50);
     println!("  total p50 / p99 : {:.0} / {:.0} us", snap.p50_total_us, snap.p99_total_us);
-    coord.shutdown()?;
+    pool.shutdown()?;
     println!("\nserve_tinycnn OK");
     Ok(())
 }

@@ -19,6 +19,11 @@
 //! whichever backend `BackendKind::Auto` selects, so the serving
 //! round-trip numbers land even in offline builds.
 //!
+//! Since the pool PR it also runs the loadgen SLO sweep (worker count x
+//! arrival rate over the admission queue + worker pool) and emits
+//! `BENCH_serving.json` at the repo root — the serving trajectory file
+//! (throughput, p50/p99 latency, shed/busy counts per point).
+//!
 //! Run: cargo bench --bench hotpath
 
 #[path = "bench_common.rs"]
@@ -68,9 +73,40 @@ fn main() -> Result<()> {
     // failure in the PJRT sections below can't lose the measurements
     write_json(&recs)?;
     native_gemm()?;
+    serving_sweep()?;
     simulator()?;
     runtime()?;
     coordinator()?;
+    Ok(())
+}
+
+/// The serving SLO sweep: worker count x Poisson arrival rate through
+/// the admission queue + worker pool (backend per `BackendKind::Auto`,
+/// so it runs everywhere). Emits `BENCH_serving.json` at the repo root.
+fn serving_sweep() -> Result<()> {
+    use swis::coordinator::BackendKind;
+    use swis::loadgen::{run_sweep, write_bench_json, SweepConfig};
+
+    println!("\n== serving sweep (admission queue + worker pool) ==");
+    let cfg = SweepConfig::default(); // workers {1,2,4} x poisson {150,300}
+    let (points, backend) = run_sweep(&art_dir(), BackendKind::Auto, &cfg)?;
+    println!("backend: {backend}");
+    println!(
+        "{:>7} {:>14} {:>10} {:>10} {:>10} {:>6} {:>6}",
+        "workers", "arrival", "ok req/s", "p50 us", "p99 us", "shed", "busy"
+    );
+    for p in &points {
+        println!(
+            "{:>7} {:>14} {:>10.1} {:>10.0} {:>10.0} {:>6} {:>6}",
+            p.workers, p.arrival, p.stats.throughput_rps, p.stats.p50_us, p.stats.p99_us,
+            p.shed, p.rejected
+        );
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serving.json");
+    write_bench_json(&points, &cfg, backend, &path)?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

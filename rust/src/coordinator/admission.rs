@@ -1,0 +1,468 @@
+//! Admission control: the bounded two-lane priority queue between the
+//! request edge and the worker pool.
+//!
+//! Properties (the serving contract the loadgen subsystem measures):
+//!
+//! * **Bounded**: `try_push` refuses with [`SubmitError::Busy`] when the
+//!   queue is at capacity — backpressure surfaces at the edge instead of
+//!   an unbounded queue absorbing (and then timing out) the overload.
+//! * **Two lanes**: when a worker seeds a new batch, `interactive`
+//!   requests are always popped before `batch` requests, so
+//!   latency-sensitive traffic is not stuck behind bulk work. (Scope:
+//!   same-variant top-up of an already-seeded batch — `pop_match` —
+//!   may still drain batch-lane jobs for up to the policy's `max_wait`;
+//!   an arriving interactive request waits at most one straggler window
+//!   plus the in-flight dispatch, never a second bulk batch.)
+//! * **Deadline shedding**: every pop first sweeps out jobs whose
+//!   deadline already passed — work that can no longer meet its SLO is
+//!   refused cheaply rather than executed pointlessly.
+//! * **Variant affinity**: within a lane, workers ask for their
+//!   last-served variant first, so a worker's hot variant (touched
+//!   weights, warmed caches) stays hot under mixed-variant load. Lane
+//!   priority is strict: affinity never pulls a batch-lane job ahead of
+//!   a waiting interactive one.
+//!
+//! The queue is generic over the job type through [`Admit`] so its
+//! ordering/shedding logic is unit-testable without a backend.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// Scheduling class of a request. Interactive always dequeues first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    fn lane(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        Ok(match s {
+            "interactive" | "i" => Priority::Interactive,
+            "batch" | "b" => Priority::Batch,
+            other => bail!("unknown priority '{other}' (expected interactive|batch)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// What the queue needs to know about a job to order and shed it.
+pub trait Admit {
+    fn variant(&self) -> &str;
+    /// Absolute shed deadline; `None` never sheds.
+    fn deadline(&self) -> Option<Instant>;
+}
+
+/// Why a push was refused; carries the item back to the caller.
+pub enum SubmitError<T> {
+    /// At capacity — backpressure, retry later or downgrade.
+    Busy(T),
+    /// The queue was shut down.
+    Closed(T),
+}
+
+/// Result of a blocking seed pop.
+pub enum Popped<T> {
+    Job(T),
+    /// No live job, but expired jobs were swept into the shed sink —
+    /// flush them and call again.
+    Shed,
+    /// Shut down and fully drained.
+    Closed,
+}
+
+struct Lanes<T> {
+    lanes: [VecDeque<T>; 2],
+    closed: bool,
+    /// Queued jobs carrying a shed deadline. The facade path submits
+    /// with no deadline; tracking the count lets every pop skip the
+    /// O(queue) expiry sweep entirely in that common case.
+    deadlined: usize,
+}
+
+impl<T> Lanes<T> {
+    fn total(&self) -> usize {
+        self.lanes[0].len() + self.lanes[1].len()
+    }
+}
+
+/// The bounded two-lane queue. One instance is shared by all submitters
+/// and all pool workers.
+pub struct AdmissionQueue<T> {
+    state: Mutex<Lanes<T>>,
+    /// Signaled on arrivals and on close (pop side waits here).
+    arrival: Condvar,
+    /// Signaled when slots free up (blocking-push side waits here).
+    space: Condvar,
+    capacity: usize,
+}
+
+impl<T: Admit> AdmissionQueue<T> {
+    pub fn new(capacity: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(Lanes {
+                lanes: [VecDeque::new(), VecDeque::new()],
+                closed: false,
+                deadlined: 0,
+            }),
+            arrival: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().total()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Stop admitting; wake every waiter so workers drain and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrival.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Non-blocking admission: `Busy` at capacity, `Closed` after
+    /// shutdown. Success wakes one-or-more waiting workers.
+    pub fn try_push(&self, item: T, pri: Priority) -> Result<(), SubmitError<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(SubmitError::Closed(item));
+        }
+        if s.total() >= self.capacity {
+            return Err(SubmitError::Busy(item));
+        }
+        if item.deadline().is_some() {
+            s.deadlined += 1;
+        }
+        s.lanes[pri.lane()].push_back(item);
+        drop(s);
+        self.arrival.notify_all();
+        Ok(())
+    }
+
+    /// Blocking admission: waits for a free slot (the facade path that
+    /// preserves the old unbounded-submit semantics under a generous
+    /// depth). Errs only on shutdown.
+    pub fn push_wait(&self, item: T, pri: Priority) -> Result<(), SubmitError<T>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(SubmitError::Closed(item));
+            }
+            if s.total() < self.capacity {
+                if item.deadline().is_some() {
+                    s.deadlined += 1;
+                }
+                s.lanes[pri.lane()].push_back(item);
+                drop(s);
+                self.arrival.notify_all();
+                return Ok(());
+            }
+            s = self.space.wait(s).unwrap();
+        }
+    }
+
+    /// Blocking pop of a batch seed. Prefers `affinity`'s variant
+    /// (interactive lane first), else the overall front. Expired jobs are
+    /// swept into `shed` — when only expired jobs were found the call
+    /// returns [`Popped::Shed`] so the caller can flush their responses
+    /// before blocking again.
+    pub fn pop_seed(&self, affinity: Option<&str>, shed: &mut Vec<T>) -> Popped<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let swept = Self::sweep_expired(&mut s, shed);
+            let job = Self::take_preferred(&mut s, affinity);
+            if swept > 0 || job.is_some() {
+                drop(s);
+                self.space.notify_all();
+                return match job {
+                    Some(j) => Popped::Job(j),
+                    None => Popped::Shed,
+                };
+            }
+            if s.closed {
+                return Popped::Closed;
+            }
+            s = self.arrival.wait(s).unwrap();
+        }
+    }
+
+    /// Timed pop of one job of `variant`, for batch top-up: waits until
+    /// `until` for a matching arrival. Returns `None` on timeout, on
+    /// shutdown, or when expired jobs were swept (check `shed`).
+    pub fn pop_match(&self, variant: &str, until: Instant, shed: &mut Vec<T>) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let swept = Self::sweep_expired(&mut s, shed);
+            let job = Self::take_variant(&mut s, variant);
+            if swept > 0 || job.is_some() {
+                drop(s);
+                self.space.notify_all();
+                return job;
+            }
+            if s.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (guard, _res) = self.arrival.wait_timeout(s, until - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Move every deadline-expired job into `shed`; returns how many.
+    /// O(1) when nothing queued carries a deadline (the facade path).
+    fn sweep_expired(s: &mut Lanes<T>, shed: &mut Vec<T>) -> usize {
+        if s.deadlined == 0 {
+            return 0;
+        }
+        let now = Instant::now();
+        let mut n = 0usize;
+        for lane in s.lanes.iter_mut() {
+            let mut i = 0;
+            while i < lane.len() {
+                if lane[i].deadline().is_some_and(|d| d <= now) {
+                    shed.push(lane.remove(i).unwrap());
+                    n += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        s.deadlined -= n;
+        n
+    }
+
+    /// Lane priority is strict; affinity only reorders WITHIN a lane, so
+    /// a worker's hot variant never pulls a batch-lane job ahead of a
+    /// waiting interactive one.
+    fn take_preferred(s: &mut Lanes<T>, affinity: Option<&str>) -> Option<T> {
+        for li in 0..s.lanes.len() {
+            let pos = affinity.and_then(|v| s.lanes[li].iter().position(|j| j.variant() == v));
+            let job = match pos {
+                Some(p) => s.lanes[li].remove(p),
+                None => s.lanes[li].pop_front(),
+            };
+            if let Some(j) = job {
+                if j.deadline().is_some() {
+                    s.deadlined -= 1;
+                }
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    fn take_variant(s: &mut Lanes<T>, variant: &str) -> Option<T> {
+        for li in 0..s.lanes.len() {
+            if let Some(pos) = s.lanes[li].iter().position(|j| j.variant() == variant) {
+                let j = s.lanes[li].remove(pos);
+                if let Some(j) = &j {
+                    if j.deadline().is_some() {
+                        s.deadlined -= 1;
+                    }
+                }
+                return j;
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    struct J(&'static str, Option<Instant>);
+
+    impl Admit for J {
+        fn variant(&self) -> &str {
+            self.0
+        }
+        fn deadline(&self) -> Option<Instant> {
+            self.1
+        }
+    }
+
+    fn live(v: &'static str) -> J {
+        J(v, None)
+    }
+
+    #[test]
+    fn bounded_busy_then_space_after_pop() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(2);
+        q.try_push(live("a"), Priority::Batch).ok().unwrap();
+        q.try_push(live("b"), Priority::Batch).ok().unwrap();
+        assert!(matches!(q.try_push(live("c"), Priority::Batch), Err(SubmitError::Busy(_))));
+        let mut shed = Vec::new();
+        assert!(matches!(q.pop_seed(None, &mut shed), Popped::Job(_)));
+        q.try_push(live("c"), Priority::Batch).ok().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn interactive_lane_pops_first() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        q.try_push(live("bulk1"), Priority::Batch).ok().unwrap();
+        q.try_push(live("bulk2"), Priority::Batch).ok().unwrap();
+        q.try_push(live("urgent"), Priority::Interactive).ok().unwrap();
+        let mut shed = Vec::new();
+        match q.pop_seed(None, &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "urgent"),
+            _ => panic!("expected a job"),
+        }
+        match q.pop_seed(None, &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "bulk1"),
+            _ => panic!("expected a job"),
+        }
+    }
+
+    #[test]
+    fn affinity_prefers_matching_variant() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        q.try_push(live("x"), Priority::Batch).ok().unwrap();
+        q.try_push(live("y"), Priority::Batch).ok().unwrap();
+        let mut shed = Vec::new();
+        match q.pop_seed(Some("y"), &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "y"),
+            _ => panic!("expected a job"),
+        }
+        // affinity miss falls back to the front
+        match q.pop_seed(Some("zzz"), &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "x"),
+            _ => panic!("expected a job"),
+        }
+    }
+
+    #[test]
+    fn affinity_never_preempts_the_interactive_lane() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        q.try_push(live("hot"), Priority::Batch).ok().unwrap();
+        q.try_push(live("urgent"), Priority::Interactive).ok().unwrap();
+        let mut shed = Vec::new();
+        // the worker's hot variant sits in the batch lane; the waiting
+        // interactive job must still dispatch first (strict lanes)
+        match q.pop_seed(Some("hot"), &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "urgent"),
+            _ => panic!("expected a job"),
+        }
+        match q.pop_seed(Some("hot"), &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "hot"),
+            _ => panic!("expected a job"),
+        }
+    }
+
+    #[test]
+    fn deadline_count_survives_pops_and_sweeps() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        let soon = Instant::now() + Duration::from_millis(15);
+        q.try_push(J("a", Some(soon)), Priority::Batch).ok().unwrap();
+        q.try_push(live("b"), Priority::Batch).ok().unwrap();
+        let mut shed = Vec::new();
+        // pop the deadlined job BEFORE it expires (affinity pull) — the
+        // deadline count must follow it out (underflow would panic here)
+        match q.pop_seed(Some("a"), &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "a"),
+            _ => panic!("expected a job"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        // nothing deadlined remains: the sweep is skipped and must not
+        // touch the live job
+        match q.pop_seed(None, &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "b"),
+            _ => panic!("expected a job"),
+        }
+        assert!(shed.is_empty());
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_not_served() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        let past = Instant::now() - Duration::from_millis(5);
+        q.try_push(J("old", Some(past)), Priority::Interactive).ok().unwrap();
+        q.try_push(live("fresh"), Priority::Batch).ok().unwrap();
+        let mut shed = Vec::new();
+        match q.pop_seed(None, &mut shed) {
+            Popped::Job(j) => assert_eq!(j.variant(), "fresh"),
+            _ => panic!("expected the live job"),
+        }
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].variant(), "old");
+    }
+
+    #[test]
+    fn only_expired_reports_shed_so_caller_can_flush() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        let past = Instant::now() - Duration::from_millis(5);
+        q.try_push(J("old", Some(past)), Priority::Batch).ok().unwrap();
+        let mut shed = Vec::new();
+        assert!(matches!(q.pop_seed(None, &mut shed), Popped::Shed));
+        assert_eq!(shed.len(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        q.try_push(live("a"), Priority::Batch).ok().unwrap();
+        q.close();
+        assert!(matches!(q.try_push(live("b"), Priority::Batch), Err(SubmitError::Closed(_))));
+        let mut shed = Vec::new();
+        assert!(matches!(q.pop_seed(None, &mut shed), Popped::Job(_)));
+        assert!(matches!(q.pop_seed(None, &mut shed), Popped::Closed));
+    }
+
+    #[test]
+    fn pop_match_times_out_without_matching_variant() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        q.try_push(live("other"), Priority::Batch).ok().unwrap();
+        let mut shed = Vec::new();
+        let t0 = Instant::now();
+        let got = q.pop_match("wanted", Instant::now() + Duration::from_millis(10), &mut shed);
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(9), "returned before the timeout");
+        assert_eq!(q.len(), 1, "non-matching job must stay queued");
+    }
+
+    #[test]
+    fn pop_match_takes_matching_from_either_lane() {
+        let q: AdmissionQueue<J> = AdmissionQueue::new(8);
+        q.try_push(live("a"), Priority::Batch).ok().unwrap();
+        q.try_push(live("b"), Priority::Batch).ok().unwrap();
+        let mut shed = Vec::new();
+        let got = q.pop_match("b", Instant::now() + Duration::from_millis(50), &mut shed);
+        assert_eq!(got.unwrap().variant(), "b");
+        assert_eq!(q.len(), 1);
+    }
+}

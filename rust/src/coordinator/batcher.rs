@@ -102,4 +102,47 @@ mod tests {
         assert!(!b.ready());
         assert!(b.time_left().is_none());
     }
+
+    #[test]
+    fn deadline_expiry_reports_zero_time_left() {
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) };
+        let mut b = PendingBatch::new(policy);
+        b.push(1);
+        assert!(b.time_left().is_some());
+        std::thread::sleep(Duration::from_millis(3));
+        // past the wait deadline: ready, and the countdown saturates at 0
+        assert!(b.ready());
+        assert_eq!(b.time_left(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn burst_drains_past_max_batch_stay_ready() {
+        // the pool stops topping up at ready(); a burst that lands before
+        // the check must still dispatch in full, not wedge the batch
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let mut b = PendingBatch::new(policy);
+        for i in 0..6 {
+            b.push(i);
+        }
+        assert!(b.ready());
+        assert_eq!(b.len(), 6);
+        assert_eq!(b.take(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn take_resets_opened_so_next_push_restarts_the_clock() {
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) };
+        let mut b = PendingBatch::new(policy);
+        b.push(1);
+        std::thread::sleep(Duration::from_millis(4));
+        assert!(b.ready(), "first window expired");
+        assert_eq!(b.take(), vec![1]);
+        assert!(b.time_left().is_none(), "empty batch has no deadline");
+        // a fresh push after take() must open a FRESH window, not inherit
+        // the expired one
+        b.push(2);
+        assert!(!b.ready(), "new window must not be born expired");
+        let left = b.time_left().unwrap();
+        assert!(left > Duration::from_micros(500), "window not reset: {left:?}");
+    }
 }

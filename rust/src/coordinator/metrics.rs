@@ -1,25 +1,64 @@
-//! Serving metrics: request counts, batch-size histogram, queue/execute
-//! latency percentiles.
+//! Serving metrics: request/batch/shed/reject counters plus batch-size
+//! and queue/execute/total latency distributions.
+//!
+//! Distributions are held in fixed-capacity seeded reservoirs
+//! ([`Reservoir`]) rather than unbounded vectors: under sustained load
+//! the old `Vec` sinks grew one entry per request forever, so a
+//! long-lived pool leaked without bound. The reservoir keeps a uniform
+//! sample of the whole stream (deterministic in its seed), so the
+//! percentile snapshots stay valid at any uptime while memory stays
+//! `O(RESERVOIR_CAP)`.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::util::stats::{percentile, Summary};
+use crate::util::stats::{Reservoir, Summary};
 
-/// Shared metrics sink (worker thread records, callers snapshot).
-#[derive(Default)]
+/// Retained samples per latency stream. Exact percentiles up to this many
+/// requests; an unbiased uniform-sample estimate beyond it.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Shared metrics sink (worker threads record, callers snapshot).
 pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Default)]
 struct Inner {
     requests: u64,
     batches: u64,
-    batch_sizes: Vec<f64>,
-    queue_us: Vec<f64>,
-    exec_us: Vec<f64>,
-    total_us: Vec<f64>,
+    /// Requests dropped by deadline-based load shedding.
+    shed: u64,
+    /// Requests refused at admission (`try_submit` -> Busy).
+    rejected: u64,
+    /// Requests that completed with a routed error (backend Err,
+    /// unknown variant, bad batch).
+    errors: u64,
+    /// Worker panics caught by the pool (in-flight batch failed).
+    panics: u64,
+    batch_sizes: Reservoir,
+    queue_us: Reservoir,
+    exec_us: Reservoir,
+    total_us: Reservoir,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                batches: 0,
+                shed: 0,
+                rejected: 0,
+                errors: 0,
+                panics: 0,
+                // distinct fixed seeds: deterministic, independent streams
+                batch_sizes: Reservoir::new(RESERVOIR_CAP, 0xB0),
+                queue_us: Reservoir::new(RESERVOIR_CAP, 0xB1),
+                exec_us: Reservoir::new(RESERVOIR_CAP, 0xB2),
+                total_us: Reservoir::new(RESERVOIR_CAP, 0xB3),
+            }),
+        }
+    }
 }
 
 /// Point-in-time view.
@@ -27,6 +66,10 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub panics: u64,
     pub mean_batch: f64,
     pub queue_us: Summary,
     pub exec_us: Summary,
@@ -42,27 +85,52 @@ impl Metrics {
         m.batches += 1;
         m.batch_sizes.push(size as f64);
         m.exec_us.push(exec.as_secs_f64() * 1e6);
-        m.queue_us.extend(queue.iter().map(|d| d.as_secs_f64() * 1e6));
-        m.total_us.extend(total.iter().map(|d| d.as_secs_f64() * 1e6));
+        for d in queue {
+            m.queue_us.push(d.as_secs_f64() * 1e6);
+        }
+        for d in total {
+            m.total_us.push(d.as_secs_f64() * 1e6);
+        }
+    }
+
+    pub fn record_shed(&self, n: usize) {
+        self.inner.lock().unwrap().shed += n as u64;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_errors(&self, n: usize) {
+        self.inner.lock().unwrap().errors += n as u64;
+    }
+
+    pub fn record_panic(&self) {
+        self.inner.lock().unwrap().panics += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        let mut sorted = m.total_us.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_us = m.total_us.summary();
         MetricsSnapshot {
             requests: m.requests,
             batches: m.batches,
+            shed: m.shed,
+            rejected: m.rejected,
+            errors: m.errors,
+            panics: m.panics,
             mean_batch: if m.batches == 0 {
                 0.0
             } else {
                 m.requests as f64 / m.batches as f64
             },
-            queue_us: crate::util::stats::summarize(&m.queue_us),
-            exec_us: crate::util::stats::summarize(&m.exec_us),
-            total_us: crate::util::stats::summarize(&m.total_us),
-            p50_total_us: percentile(&sorted, 50.0),
-            p99_total_us: percentile(&sorted, 99.0),
+            queue_us: m.queue_us.summary(),
+            exec_us: m.exec_us.summary(),
+            // convenience aliases: the headline SLO numbers, same values
+            // as total_us.p50/.p99
+            p50_total_us: total_us.p50,
+            p99_total_us: total_us.p99,
+            total_us,
         }
     }
 }
@@ -98,5 +166,33 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.shed + s.rejected + s.errors + s.panics, 0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.record_shed(3);
+        m.record_rejected();
+        m.record_rejected();
+        m.record_errors(5);
+        m.record_panic();
+        let s = m.snapshot();
+        assert_eq!((s.shed, s.rejected, s.errors, s.panics), (3, 2, 5, 1));
+    }
+
+    #[test]
+    fn sustained_load_stays_bounded() {
+        // one entry per request used to accumulate forever; the reservoir
+        // must cap retention while keeping percentiles sane
+        let m = Metrics::default();
+        for i in 0..3 * RESERVOIR_CAP {
+            let t = Duration::from_micros(100 + (i % 7) as u64);
+            m.record_batch(1, &[t], t, &[t]);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3 * RESERVOIR_CAP as u64);
+        assert_eq!(s.total_us.n, RESERVOIR_CAP);
+        assert!(s.p50_total_us >= 100.0 && s.p50_total_us <= 107.0, "p50 {}", s.p50_total_us);
     }
 }

@@ -1,44 +1,51 @@
-//! The serving coordinator (L3): dynamic batcher + variant router +
-//! metrics over a pluggable execution backend
-//! ([`crate::runtime::Backend`]). Python never runs on the request path —
-//! the worker thread owns one backend (compiled PJRT executables, or the
-//! native SWIS engine executing packed operands directly) and serves
-//! whichever SWIS weight configuration a request names.
+//! The serving coordinator (L3): admission control + worker pool +
+//! dynamic batching + variant routing + metrics over pluggable execution
+//! backends ([`crate::runtime::Backend`]). Python never runs on the
+//! request path — each pool worker owns one backend (compiled PJRT
+//! executables, or the native SWIS engine executing packed operands
+//! directly) and serves whichever SWIS weight configuration a request
+//! names.
 //!
-//! Architecture (vLLM-router-style, scaled to this paper's scope):
+//! Dispatch path (edge -> admission queue -> pool -> backend):
 //!
 //! ```text
-//!   clients --> Coordinator::submit --> [queue] --> worker thread
-//!                                                    |  drain <= max_batch
-//!                                                    |  group by variant
-//!                                                    |  backend.plan_chunks
-//!                                                    v
-//!                                     +--------------+--------------+
-//!                                     | Backend (chosen at start)   |
-//!                                     |   pjrt:   compiled HLO,     |
-//!                                     |           batch variants    |
-//!                                     |   native: packed bit-serial |
-//!                                     |           kernel, dynamic   |
-//!                                     |           batch             |
-//!                                     +--------------+--------------+
-//!                                                    |
-//!                                     response <-----+  per-request channel
+//!  clients ──try_submit──▶ AdmissionQueue (bounded two-lane queue)
+//!     ▲          │           lane 0: interactive  ▸ always popped first
+//!     │  Busy ◀──┘ full      lane 1: batch
+//!     │                      │ deadline sweep ──▶ Err("shed: ...")
+//!     │                      ▼ per-worker pop, variant affinity
+//!     │            ┌─ worker 0 ─ PendingBatch ─ Box<dyn Backend> ─┐
+//!     │            ├─ worker 1 ─ PendingBatch ─ Box<dyn Backend> ─┤
+//!     │            └─ worker N ─ PendingBatch ─ Box<dyn Backend> ─┘
+//!     │                      │   native: Arc-shared prepared models
+//!     │                      │   pjrt:   per-thread compiled artifacts
+//!     └────── per-request response channel ◀────┘
 //! ```
 //!
-//! The environment vendors no tokio; the event loop is a plain
-//! thread + mpsc design, which for a single-device CPU backend is also
-//! the lower-overhead choice (see EXPERIMENTS.md §Perf).
+//! * [`WorkerPool`] — N workers, bounded admission, `try_submit -> Busy`
+//!   backpressure, deadline-based load shedding, priority lanes.
+//! * [`Coordinator`] — the single-worker facade (the pre-pool API).
+//! * [`crate::loadgen`] — arrival generators + SLO sweep driver that
+//!   measure this stack and emit `BENCH_serving.json`.
+//!
+//! The environment vendors no tokio; the event loop is plain threads +
+//! mutex/condvar queues, which for CPU backends is also the
+//! lower-overhead choice (see EXPERIMENTS.md §Perf).
 
+mod admission;
 mod batcher;
 mod metrics;
+mod pool;
 mod server;
 mod variants;
 
+pub use admission::{Admit, AdmissionQueue, Popped, Priority, SubmitError};
 pub use batcher::{BatchPolicy, PendingBatch};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, RESERVOIR_CAP};
+pub use pool::{Admission, PoolConfig, Ticket, WorkerPool, DEFAULT_QUEUE_DEPTH};
 pub use server::{Coordinator, InferRequest, InferResponse};
 pub use variants::{quantize_jax_weight, VariantSpec, WeightVariants};
 
 // Backend selection lives in the runtime layer; re-exported here because
-// callers choose it where they start the coordinator.
+// callers choose it where they start the coordinator or pool.
 pub use crate::runtime::BackendKind;

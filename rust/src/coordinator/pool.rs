@@ -1,0 +1,451 @@
+//! The scale-out serving layer: a [`WorkerPool`] of N worker threads,
+//! each owning one `Box<dyn Backend>`, fed through the bounded
+//! [`AdmissionQueue`].
+//!
+//! ```text
+//!  clients ──try_submit──▶ AdmissionQueue (bounded, capacity = queue_depth)
+//!     ▲         │            lane 0: interactive   lane 1: batch
+//!     │ Busy ◀──┘ full        │ deadline sweep ──▶ Err("shed: ...")
+//!     │                       ▼ pop (interactive first, variant affinity)
+//!     │              ┌─ worker 0 ─ PendingBatch ─ Box<dyn Backend> ─┐
+//!     │              ├─ worker 1 ─ PendingBatch ─ Box<dyn Backend> ─┤
+//!     │              └─ worker N ─ PendingBatch ─ Box<dyn Backend> ─┘
+//!     │                       │  (native: Arc-shared prepared models;
+//!     │                       │   pjrt: per-thread compiled artifacts)
+//!     └── per-request response channel ◀─────────┘
+//! ```
+//!
+//! Each worker seeds a batch from the queue (preferring its last-served
+//! variant so its hot variant stays hot), tops it up with same-variant
+//! jobs until `max_batch`/`max_wait`, then dispatches through its own
+//! backend. A worker panic is caught: the in-flight batch's callers see a
+//! routed error (their response channels close), the worker and the rest
+//! of the pool keep serving. The single-worker [`super::Coordinator`] is
+//! a thin facade over this type.
+
+use anyhow::{bail, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::admission::{Admit, AdmissionQueue, Popped, Priority, SubmitError};
+use super::batcher::{BatchPolicy, PendingBatch};
+use super::metrics::Metrics;
+use super::server::{InferRequest, InferResponse};
+use super::variants::VariantSpec;
+use crate::runtime::{create_factory, Backend, BackendFactory, BackendKind};
+use crate::util::tensor::Tensor;
+
+/// Default admission depth for the single-worker facade — generous so the
+/// pre-pool unbounded-submit semantics hold for every existing caller.
+pub const DEFAULT_QUEUE_DEPTH: usize = 4096;
+
+/// Pool sizing + batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Worker threads (each owns one backend instance).
+    pub workers: usize,
+    pub policy: BatchPolicy,
+    /// Admission queue capacity across both lanes.
+    pub queue_depth: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { workers: 1, policy: BatchPolicy::default(), queue_depth: DEFAULT_QUEUE_DEPTH }
+    }
+}
+
+/// The response side of one accepted request.
+pub type Ticket = Receiver<Result<InferResponse, String>>;
+
+/// Outcome of a non-blocking submission.
+pub enum Admission {
+    Accepted(Ticket),
+    /// Refused by backpressure — the admission queue is at capacity.
+    Busy,
+}
+
+/// One queued request: payload + response channel + timing/SLO state.
+struct Job {
+    req: InferRequest,
+    respond: Sender<Result<InferResponse, String>>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+impl Admit for Job {
+    fn variant(&self) -> &str {
+        &self.req.variant
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+}
+
+/// Handle to a running worker pool.
+pub struct WorkerPool {
+    queue: Arc<AdmissionQueue<Job>>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    alive: Arc<AtomicUsize>,
+    backend_name: &'static str,
+    image_len: usize,
+}
+
+impl WorkerPool {
+    /// Resolve a backend factory for `artifacts` and start the pool.
+    pub fn start(
+        artifacts: &Path,
+        cfg: PoolConfig,
+        variants: Vec<VariantSpec>,
+        kind: BackendKind,
+    ) -> Result<WorkerPool> {
+        let factory: Arc<dyn BackendFactory> =
+            Arc::from(create_factory(kind, artifacts, &variants)?);
+        WorkerPool::start_with_factory(factory, cfg)
+    }
+
+    /// Start N workers over an explicit factory (shared across pools by
+    /// the loadgen sweep so warm-up happens once). Returns after every
+    /// worker finished warm-up; any warm-up failure fails the start.
+    pub fn start_with_factory(
+        factory: Arc<dyn BackendFactory>,
+        cfg: PoolConfig,
+    ) -> Result<WorkerPool> {
+        if cfg.workers == 0 {
+            bail!("worker pool needs at least one worker");
+        }
+        if cfg.queue_depth == 0 {
+            bail!("queue depth must be at least 1");
+        }
+        let queue = Arc::new(AdmissionQueue::new(cfg.queue_depth));
+        let metrics = Arc::new(Metrics::default());
+        let alive = Arc::new(AtomicUsize::new(0));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<&'static str, String>>();
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let (f, q, m, a, rt) = (
+                Arc::clone(&factory),
+                Arc::clone(&queue),
+                Arc::clone(&metrics),
+                Arc::clone(&alive),
+                ready_tx.clone(),
+            );
+            let (n_workers, policy) = (cfg.workers, cfg.policy);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("swis-worker-{w}"))
+                    .spawn(move || worker_main(n_workers, f, q, policy, m, a, rt))
+                    .context("spawning pool worker")?,
+            );
+        }
+        drop(ready_tx);
+        let mut backend_name: &'static str = "";
+        for _ in 0..cfg.workers {
+            match ready_rx.recv() {
+                Ok(Ok(name)) => backend_name = name,
+                Ok(Err(e)) => {
+                    queue.close();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    bail!("pool worker failed to start: {e}");
+                }
+                Err(_) => {
+                    queue.close();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    bail!("pool worker died during warm-up");
+                }
+            }
+        }
+        Ok(WorkerPool { queue, metrics, workers, alive, backend_name, image_len: 32 * 32 * 3 })
+    }
+
+    /// Which backend the workers run on ("pjrt" | "native" | test name).
+    pub fn backend(&self) -> &'static str {
+        self.backend_name
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Requests currently queued (admitted, not yet dispatched).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Non-blocking admission: `Ok(Busy)` is backpressure (counted in
+    /// metrics as rejected); `Err` is a hard fault (bad request, pool
+    /// down). `deadline` is the shed budget measured from now.
+    pub fn try_submit(
+        &self,
+        req: InferRequest,
+        pri: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Admission> {
+        let (job, rx) = self.make_job(req, deadline)?;
+        match self.queue.try_push(job, pri) {
+            Ok(()) => Ok(Admission::Accepted(rx)),
+            Err(SubmitError::Busy(_)) => {
+                self.metrics.record_rejected();
+                Ok(Admission::Busy)
+            }
+            Err(SubmitError::Closed(_)) => bail!("worker pool is shut down"),
+        }
+    }
+
+    /// Blocking admission: waits for queue space instead of refusing.
+    pub fn submit(
+        &self,
+        req: InferRequest,
+        pri: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket> {
+        let (job, rx) = self.make_job(req, deadline)?;
+        self.queue
+            .push_wait(job, pri)
+            .map_err(|_| anyhow::anyhow!("worker pool is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: interactive submit + block for the result.
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+        let rx = self.submit(req, Priority::Interactive, None)?;
+        rx.recv()
+            .context("pool dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn make_job(&self, req: InferRequest, deadline: Option<Duration>) -> Result<(Job, Ticket)> {
+        if req.image.len() != self.image_len {
+            bail!("image must have {} elements, got {}", self.image_len, req.image.len());
+        }
+        if self.alive.load(Ordering::SeqCst) == 0 {
+            bail!("no live workers in the pool");
+        }
+        let now = Instant::now();
+        let (respond, rx) = mpsc::channel();
+        Ok((Job { req, respond, enqueued: now, deadline: deadline.map(|d| now + d) }, rx))
+    }
+
+    /// Graceful shutdown: close admission, drain, join every worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.queue.close();
+        let mut result = Ok(());
+        for h in self.workers.drain(..) {
+            if h.join().is_err() {
+                result = Err(anyhow::anyhow!("pool worker panicked"));
+            }
+        }
+        result
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Decrements the live-worker count however the thread exits.
+struct AliveGuard(Arc<AtomicUsize>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn worker_main(
+    n_workers: usize,
+    factory: Arc<dyn BackendFactory>,
+    queue: Arc<AdmissionQueue<Job>>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    alive: Arc<AtomicUsize>,
+    ready: Sender<Result<&'static str, String>>,
+) {
+    // Warm-up on this thread: thread-affine backends (PJRT) must be
+    // constructed where they execute. A panicking factory is reported as
+    // a start-up error, never a hang.
+    let backend = match catch_unwind(AssertUnwindSafe(|| factory.make(n_workers))) {
+        Ok(Ok(b)) => b,
+        Ok(Err(e)) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+        Err(_) => {
+            let _ = ready.send(Err("backend construction panicked".into()));
+            return;
+        }
+    };
+    alive.fetch_add(1, Ordering::SeqCst);
+    let _alive = AliveGuard(alive);
+    let _ = ready.send(Ok(backend.name()));
+
+    let mut affinity: Option<String> = None;
+    let mut shed: Vec<Job> = Vec::new();
+    loop {
+        let popped = queue.pop_seed(affinity.as_deref(), &mut shed);
+        flush_shed(&mut shed, &metrics);
+        let seed = match popped {
+            Popped::Job(j) => j,
+            Popped::Shed => continue,
+            Popped::Closed => return,
+        };
+
+        // Assemble one same-variant batch under the policy: the seed
+        // opens the wait window; top-up pops only this variant.
+        let variant = seed.req.variant.clone();
+        let mut batch: PendingBatch<Job> = PendingBatch::new(policy);
+        batch.push(seed);
+        while !batch.ready() && !queue.is_closed() {
+            let wait = batch.time_left().unwrap_or(Duration::ZERO);
+            if wait.is_zero() {
+                break;
+            }
+            let until = Instant::now() + wait;
+            let got = queue.pop_match(&variant, until, &mut shed);
+            flush_shed(&mut shed, &metrics);
+            match got {
+                Some(j) => batch.push(j),
+                None => {
+                    if Instant::now() >= until || queue.is_closed() {
+                        break;
+                    }
+                }
+            }
+        }
+        affinity = Some(variant);
+
+        // A panicking backend fails only this batch: the jobs moved into
+        // dispatch are dropped during unwind, closing their response
+        // channels (callers observe a routed error, not a hang); the
+        // worker and the rest of the pool keep serving. `resolved`
+        // counts the jobs dispatch already answered (ok/err/shed) so the
+        // panic path charges errors only for the ones left dangling.
+        let jobs = batch.take();
+        let n = jobs.len();
+        let resolved = AtomicUsize::new(0);
+        let run = || dispatch(jobs, backend.as_ref(), &metrics, &resolved);
+        if catch_unwind(AssertUnwindSafe(run)).is_err() {
+            metrics.record_panic();
+            metrics.record_errors(n - resolved.load(Ordering::SeqCst).min(n));
+        }
+    }
+}
+
+fn flush_shed(shed: &mut Vec<Job>, metrics: &Metrics) {
+    if shed.is_empty() {
+        return;
+    }
+    metrics.record_shed(shed.len());
+    for j in shed.drain(..) {
+        let waited = j.enqueued.elapsed();
+        let _ = j.respond.send(Err(format!(
+            "shed: deadline exceeded after {:.1} ms in queue",
+            waited.as_secs_f64() * 1e3
+        )));
+    }
+}
+
+/// Execute one assembled same-variant batch: final deadline sweep, then
+/// backend-planned chunks, then per-request delivery. Every job answered
+/// (ok, routed error, or shed) bumps `resolved`, so a mid-batch panic
+/// can tell the dangling jobs from the already-delivered ones.
+fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics, resolved: &AtomicUsize) {
+    let Some(first) = jobs.first() else { return };
+    let variant = first.req.variant.clone();
+    debug_assert!(jobs.iter().all(|j| j.req.variant == variant), "mixed-variant batch");
+    if !backend.has_variant(&variant) {
+        metrics.record_errors(jobs.len());
+        resolved.fetch_add(jobs.len(), Ordering::SeqCst);
+        for j in &jobs {
+            let _ = j.respond.send(Err(format!("unknown variant '{variant}'")));
+        }
+        return;
+    }
+    // shed anything that expired while the batch was assembling
+    let now = Instant::now();
+    let (live, expired): (Vec<Job>, Vec<Job>) =
+        jobs.into_iter().partition(|j| j.deadline.map_or(true, |d| d > now));
+    if !expired.is_empty() {
+        metrics.record_shed(expired.len());
+        resolved.fetch_add(expired.len(), Ordering::SeqCst);
+        for j in &expired {
+            let _ = j.respond.send(Err("shed: deadline exceeded before execution".to_string()));
+        }
+    }
+    // execute in backend-planned chunks rather than padding the whole
+    // group up to the largest compiled size (PJRT cost ~affine in batch;
+    // the native backend takes the group in one dynamic chunk)
+    let group: Vec<&Job> = live.iter().collect();
+    let mut start = 0usize;
+    for chunk in backend.plan_chunks(group.len()) {
+        let end = (start + chunk).min(group.len());
+        run_chunk(&group[start..end], &variant, backend, metrics);
+        resolved.fetch_add(end - start, Ordering::SeqCst);
+        start = end;
+    }
+}
+
+/// Execute one chunk of same-variant jobs.
+fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Metrics) {
+    let t0 = Instant::now();
+    let n = group.len();
+    let per = 32 * 32 * 3;
+    let mut data = Vec::with_capacity(n * per);
+    for j in group {
+        data.extend_from_slice(&j.req.image);
+    }
+    let images = match Tensor::new(&[n, 32, 32, 3], data) {
+        Ok(t) => t,
+        Err(e) => {
+            metrics.record_errors(n);
+            for j in group {
+                let _ = j.respond.send(Err(format!("{e:#}")));
+            }
+            return;
+        }
+    };
+    match backend.infer(variant, &images) {
+        Ok(logits) => {
+            let exec = t0.elapsed();
+            let classes = logits.shape()[1];
+            let now = Instant::now();
+            let queue_ts: Vec<Duration> =
+                group.iter().map(|j| t0.duration_since(j.enqueued)).collect();
+            let total_ts: Vec<Duration> =
+                group.iter().map(|j| now.duration_since(j.enqueued)).collect();
+            // record before delivery so a caller that has all its
+            // responses also sees them reflected in the metrics
+            metrics.record_batch(n, &queue_ts, exec, &total_ts);
+            for (i, j) in group.iter().enumerate() {
+                let _ = j.respond.send(Ok(InferResponse {
+                    logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                    queue: queue_ts[i],
+                    total: total_ts[i],
+                    batch_size: n,
+                }));
+            }
+        }
+        Err(e) => {
+            metrics.record_errors(n);
+            for j in group {
+                let _ = j.respond.send(Err(format!("{e:#}")));
+            }
+        }
+    }
+}

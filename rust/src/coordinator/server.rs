@@ -1,23 +1,24 @@
-//! The coordinator proper: a leader thread owning an execution backend
-//! ([`crate::runtime::Backend`]), fed by an mpsc request queue,
-//! dispatching dynamically-assembled batches and routing each request to
-//! its named weight variant. The backend is chosen at start-up
-//! ([`BackendKind`]): compiled PJRT artifacts when available, the native
-//! SWIS engine otherwise — the serving surface is identical.
+//! The single-worker serving facade: [`Coordinator`] is a thin wrapper
+//! over a 1-worker [`WorkerPool`](super::WorkerPool) with a generous
+//! admission depth, preserving the pre-pool API (`start`, `submit`,
+//! `infer`, `metrics`, `shutdown`) for every existing caller — the
+//! example, the CLI, the benches and the tests. Scale-out callers use
+//! [`super::WorkerPool`] directly for multiple workers, bounded
+//! admission with `try_submit -> Busy` backpressure, priority lanes and
+//! deadline shedding.
 
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::{Context, Result};
 use std::path::Path;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::batcher::{BatchPolicy, PendingBatch};
+use super::admission::Priority;
+use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
+use super::pool::{PoolConfig, WorkerPool, DEFAULT_QUEUE_DEPTH};
 use super::variants::VariantSpec;
-use crate::runtime::{create_backend, Backend, BackendKind};
-use crate::util::tensor::Tensor;
+use crate::runtime::BackendKind;
 
 /// One inference request: a 32x32x3 image routed to a weight variant.
 #[derive(Clone, Debug)]
@@ -36,24 +37,10 @@ pub struct InferResponse {
     pub batch_size: usize,
 }
 
-struct Job {
-    req: InferRequest,
-    respond: Sender<Result<InferResponse, String>>,
-    enqueued: Instant,
-}
-
-enum Msg {
-    Job(Job),
-    Shutdown,
-}
-
-/// Handle to a running coordinator.
+/// Handle to a running single-worker coordinator.
 pub struct Coordinator {
-    tx: Sender<Msg>,
+    pool: WorkerPool,
     pub metrics: Arc<Metrics>,
-    worker: Option<JoinHandle<Result<()>>>,
-    image_len: usize,
-    backend_name: &'static str,
 }
 
 impl Coordinator {
@@ -67,200 +54,41 @@ impl Coordinator {
         Coordinator::start_with(artifacts, policy, variants, BackendKind::Auto)
     }
 
-    /// Start the worker thread on an explicit backend: it compiles /
-    /// quantizes every weight variant before accepting requests (returns
-    /// once warm-up is complete).
+    /// Start the worker on an explicit backend: it compiles / quantizes
+    /// every weight variant before accepting requests (returns once
+    /// warm-up is complete).
     pub fn start_with(
         artifacts: &Path,
         policy: BatchPolicy,
         variants: Vec<VariantSpec>,
         backend: BackendKind,
     ) -> Result<Coordinator> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let metrics = Arc::new(Metrics::default());
-        let m2 = Arc::clone(&metrics);
-        let dir = artifacts.to_path_buf();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<&'static str, String>>();
-        let worker = std::thread::Builder::new()
-            .name("swis-coordinator".into())
-            .spawn(move || worker_loop(rx, dir, policy, variants, backend, m2, ready_tx))
-            .context("spawning coordinator thread")?;
-        let backend_name = match ready_rx.recv() {
-            Ok(Ok(name)) => name,
-            Ok(Err(e)) => bail!("coordinator failed to start: {e}"),
-            Err(_) => bail!("coordinator thread died during warm-up"),
-        };
-        Ok(Coordinator {
-            tx,
-            metrics,
-            worker: Some(worker),
-            image_len: 32 * 32 * 3,
-            backend_name,
-        })
+        let cfg = PoolConfig { workers: 1, policy, queue_depth: DEFAULT_QUEUE_DEPTH };
+        let pool = WorkerPool::start(artifacts, cfg, variants, backend)
+            .context("coordinator failed to start")?;
+        let metrics = Arc::clone(&pool.metrics);
+        Ok(Coordinator { pool, metrics })
     }
 
     /// Which backend the worker ended up on ("pjrt" | "native").
     pub fn backend(&self) -> &'static str {
-        self.backend_name
+        self.pool.backend()
     }
 
     /// Submit a request; returns the response channel immediately.
+    /// Facade semantics: interactive priority, no shed deadline, blocks
+    /// only in the (deep) admission queue — never refuses with Busy.
     pub fn submit(&self, req: InferRequest) -> Result<Receiver<Result<InferResponse, String>>> {
-        if req.image.len() != self.image_len {
-            bail!("image must have {} elements, got {}", self.image_len, req.image.len());
-        }
-        let (respond, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Job(Job { req, respond, enqueued: Instant::now() }))
-            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-        Ok(rx)
+        self.pool.submit(req, Priority::Interactive, None)
     }
 
     /// Convenience: submit and block for the result.
     pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
-        let rx = self.submit(req)?;
-        rx.recv()
-            .context("coordinator dropped the request")?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.pool.infer(req)
     }
 
     /// Graceful shutdown: drains the queue, then joins the worker.
-    pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
-            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_loop(
-    rx: Receiver<Msg>,
-    dir: std::path::PathBuf,
-    policy: BatchPolicy,
-    variants: Vec<VariantSpec>,
-    kind: BackendKind,
-    metrics: Arc<Metrics>,
-    ready: Sender<Result<&'static str, String>>,
-) -> Result<()> {
-    // Warm-up: backend construction (PJRT compile or native quantize +
-    // prepare), owned by this thread (PJRT handles are thread-affine).
-    let backend = match create_backend(kind, &dir, &variants) {
-        Ok(b) => {
-            let _ = ready.send(Ok(b.name()));
-            b
-        }
-        Err(e) => {
-            let _ = ready.send(Err(format!("{e:#}")));
-            return Err(e);
-        }
-    };
-
-    let mut pending: PendingBatch<Job> = PendingBatch::new(policy);
-    let mut shutting_down = false;
-    loop {
-        // Block for work, or poll the straggler deadline of an open batch.
-        if pending.is_empty() {
-            match rx.recv() {
-                Ok(Msg::Job(j)) => pending.push(j),
-                Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
-            }
-        } else {
-            let wait = pending.time_left().unwrap_or(Duration::ZERO);
-            match rx.recv_timeout(wait) {
-                Ok(Msg::Job(j)) => pending.push(j),
-                Ok(Msg::Shutdown) => shutting_down = true,
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => shutting_down = true,
-            }
-        }
-        if pending.ready() || (shutting_down && !pending.is_empty()) {
-            dispatch(pending.take(), backend.as_ref(), &metrics);
-        }
-        if shutting_down && pending.is_empty() {
-            return Ok(());
-        }
-    }
-}
-
-/// Execute one assembled batch: group by variant, run the backend per
-/// group in backend-planned chunks, deliver responses.
-fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics) {
-    let mut by_variant: HashMap<&str, Vec<&Job>> = HashMap::new();
-    for j in &jobs {
-        by_variant.entry(j.req.variant.as_str()).or_default().push(j);
-    }
-    for (variant, group) in by_variant {
-        if !backend.has_variant(variant) {
-            for j in &group {
-                let _ = j.respond.send(Err(format!("unknown variant '{variant}'")));
-            }
-            continue;
-        }
-        // execute in backend-planned chunks rather than padding the whole
-        // group up to the largest compiled size (PJRT cost ~affine in
-        // batch; the native backend takes the group in one dynamic chunk)
-        let mut start = 0usize;
-        for chunk in backend.plan_chunks(group.len()) {
-            let end = (start + chunk).min(group.len());
-            run_chunk(&group[start..end], variant, backend, metrics);
-            start = end;
-        }
-    }
-}
-
-/// Execute one chunk of same-variant jobs.
-fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Metrics) {
-    let t0 = Instant::now();
-    let n = group.len();
-    let per = 32 * 32 * 3;
-    let mut data = Vec::with_capacity(n * per);
-    for j in group {
-        data.extend_from_slice(&j.req.image);
-    }
-    let images = match Tensor::new(&[n, 32, 32, 3], data) {
-        Ok(t) => t,
-        Err(e) => {
-            for j in group {
-                let _ = j.respond.send(Err(format!("{e:#}")));
-            }
-            return;
-        }
-    };
-    match backend.infer(variant, &images) {
-        Ok(logits) => {
-            let exec = t0.elapsed();
-            let classes = logits.shape()[1];
-            let now = Instant::now();
-            let queue_ts: Vec<Duration> =
-                group.iter().map(|j| t0.duration_since(j.enqueued)).collect();
-            let total_ts: Vec<Duration> =
-                group.iter().map(|j| now.duration_since(j.enqueued)).collect();
-            // record before delivery so a caller that has all its
-            // responses also sees them reflected in the metrics
-            metrics.record_batch(n, &queue_ts, exec, &total_ts);
-            for (i, j) in group.iter().enumerate() {
-                let _ = j.respond.send(Ok(InferResponse {
-                    logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
-                    queue: queue_ts[i],
-                    total: total_ts[i],
-                    batch_size: n,
-                }));
-            }
-        }
-        Err(e) => {
-            for j in group {
-                let _ = j.respond.send(Err(format!("{e:#}")));
-            }
-        }
+    pub fn shutdown(self) -> Result<()> {
+        self.pool.shutdown()
     }
 }

@@ -30,11 +30,22 @@
 //!   the TinyCNN accuracy proxy.
 //! * [`analysis`] — lossless-quantization probability (paper Eq. 8-10).
 //! * [`runtime`] — the execution backends behind serving: the
-//!   [`runtime::Backend`] trait with the PJRT/AOT implementation
-//!   (HLO-text artifacts from `python/compile/aot.py`) and the native
-//!   implementation over [`exec`].
-//! * [`coordinator`] — the serving layer: dynamic batcher, router,
-//!   metrics; Python never runs on the request path.
+//!   [`runtime::Backend`] trait (PJRT/AOT over HLO-text artifacts from
+//!   `python/compile/aot.py`, native over [`exec`]) and the
+//!   [`runtime::BackendFactory`] recipe the pool uses to build one
+//!   backend per worker (native: `Arc`-shared prepared variants, warm-up
+//!   once; PJRT: per-thread compiles).
+//! * [`coordinator`] — the serving layer: bounded two-lane
+//!   [`coordinator::AdmissionQueue`] (`try_submit -> Busy` backpressure,
+//!   deadline shedding, priority lanes), the
+//!   [`coordinator::WorkerPool`] of N backend-owning workers with
+//!   variant affinity, per-worker dynamic batching, metrics; the
+//!   single-worker [`coordinator::Coordinator`] facade keeps the
+//!   pre-pool API. Python never runs on the request path.
+//! * [`loadgen`] — open/closed-loop arrival generators, SLO recording
+//!   (p50/p95/p99, shed/busy/timeout counts) and the sweep driver that
+//!   walks worker count x batch policy x arrival rate and emits
+//!   `BENCH_serving.json`.
 //! * [`util`] — tensors, NPY/NPZ + JSON IO, RNG, CLI, property-testing.
 //!
 //! ## Execution tiers — which one is authoritative for what
@@ -58,6 +69,7 @@ pub mod analysis;
 pub mod arch;
 pub mod coordinator;
 pub mod exec;
+pub mod loadgen;
 pub mod nets;
 pub mod quant;
 pub mod runtime;

@@ -1,0 +1,78 @@
+//! Arrival processes for the load generator: open-loop Poisson (offered
+//! load is independent of the system — the honest way to measure tail
+//! latency, since a closed loop self-throttles under congestion and
+//! hides queueing collapse) and closed-loop concurrency (the classic
+//! "N clients, think time zero" saturation probe).
+
+use crate::util::rng::Rng;
+
+/// How requests arrive at the pool during one trial.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Open loop: Poisson arrivals at `rate` requests/second
+    /// (exponentially distributed inter-arrival gaps).
+    Poisson { rate: f64 },
+    /// Closed loop: `concurrency` clients, each submitting its next
+    /// request the moment the previous response lands.
+    Closed { concurrency: usize },
+}
+
+impl Arrival {
+    /// Stable label for reports ("poisson@200" / "closed@4").
+    pub fn label(&self) -> String {
+        match self {
+            Arrival::Poisson { rate } => format!("poisson@{rate}"),
+            Arrival::Closed { concurrency } => format!("closed@{concurrency}"),
+        }
+    }
+
+    /// Offered rate in req/s (0 for closed loop, where the offered load
+    /// is whatever the system sustains).
+    pub fn rate(&self) -> f64 {
+        match self {
+            Arrival::Poisson { rate } => *rate,
+            Arrival::Closed { .. } => 0.0,
+        }
+    }
+}
+
+/// One exponential inter-arrival gap in seconds — deterministic in the
+/// RNG stream, mean `1/rate`.
+pub fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    -rng.f64().max(1e-12).ln() / rate.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_gap_mean_matches_rate() {
+        let mut rng = Rng::new(42);
+        let rate = 250.0;
+        let n = 50_000;
+        let mean = (0..n).map(|_| exp_gap(&mut rng, rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.05 / rate, "mean gap {mean} vs {}", 1.0 / rate);
+    }
+
+    #[test]
+    fn exp_gap_is_deterministic() {
+        let a: Vec<f64> = {
+            let mut r = Rng::new(7);
+            (0..32).map(|_| exp_gap(&mut r, 100.0)).collect()
+        };
+        let b: Vec<f64> = {
+            let mut r = Rng::new(7);
+            (0..32).map(|_| exp_gap(&mut r, 100.0)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn labels_and_rates() {
+        assert_eq!(Arrival::Poisson { rate: 200.0 }.label(), "poisson@200");
+        assert_eq!(Arrival::Closed { concurrency: 4 }.label(), "closed@4");
+        assert_eq!(Arrival::Poisson { rate: 200.0 }.rate(), 200.0);
+        assert_eq!(Arrival::Closed { concurrency: 4 }.rate(), 0.0);
+    }
+}

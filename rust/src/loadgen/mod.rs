@@ -1,0 +1,22 @@
+//! Load generation + SLO benchmarking for the serving stack (the
+//! measurement side of the worker-pool subsystem):
+//!
+//! * [`arrival`] — open-loop Poisson and closed-loop concurrency arrival
+//!   processes (deterministic, seeded);
+//! * [`recorder`] — per-trial latency percentiles (bounded reservoir)
+//!   and shed/busy/timeout/error counts;
+//! * [`sweep`] — the driver that walks worker count x batch policy x
+//!   arrival rate, one fresh [`crate::coordinator::WorkerPool`] per
+//!   point over ONE shared backend factory (warm-up paid once), and
+//!   emits the repo-root `BENCH_serving.json` trajectory record.
+//!
+//! Entry points: `swis loadgen` (CLI), the serving section of
+//! `benches/hotpath.rs`, and [`sweep::run_sweep`] for tests.
+
+mod arrival;
+mod recorder;
+mod sweep;
+
+pub use arrival::{exp_gap, Arrival};
+pub use recorder::{PointStats, Recorder};
+pub use sweep::{gen_images, run_sweep, sweep_json, write_bench_json, SweepConfig, SweepPoint};

@@ -1,0 +1,140 @@
+//! Client-side outcome recording for one load-generation trial: latency
+//! percentiles over a bounded reservoir plus shed/busy/timeout/error
+//! counts — the SLO view of the serving stack.
+
+use std::time::Duration;
+
+use crate::util::stats::{percentile, Reservoir};
+
+/// Collects per-request outcomes during a trial.
+pub struct Recorder {
+    lat_us: Reservoir,
+    pub ok: u64,
+    /// Responses refused by deadline shedding ("shed: ..." errors).
+    pub shed: u64,
+    /// Admissions refused with Busy (backpressure at the edge).
+    pub busy: u64,
+    /// Responses that never arrived within the client patience window.
+    pub timeout: u64,
+    /// Any other routed error.
+    pub error: u64,
+}
+
+impl Recorder {
+    pub fn new(seed: u64) -> Recorder {
+        let lat_us = Reservoir::new(4096, seed);
+        Recorder { lat_us, ok: 0, shed: 0, busy: 0, timeout: 0, error: 0 }
+    }
+
+    pub fn record_ok(&mut self, latency: Duration) {
+        self.ok += 1;
+        self.lat_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    /// Classify a routed error string (the pool prefixes shed responses
+    /// with "shed:").
+    pub fn record_err(&mut self, msg: &str) {
+        if msg.starts_with("shed:") {
+            self.shed += 1;
+        } else {
+            self.error += 1;
+        }
+    }
+
+    pub fn record_busy(&mut self) {
+        self.busy += 1;
+    }
+
+    pub fn record_timeout(&mut self) {
+        self.timeout += 1;
+    }
+
+    /// Fold another recorder (closed-loop per-client recorders merge
+    /// into one trial view; the latency sample is re-offered to this
+    /// reservoir, keeping memory bounded).
+    pub fn merge(&mut self, other: &Recorder) {
+        for &x in other.lat_us.as_slice() {
+            self.lat_us.push(x);
+        }
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.busy += other.busy;
+        self.timeout += other.timeout;
+        self.error += other.error;
+    }
+
+    /// Summarize against the trial wall-clock.
+    pub fn stats(&self, wall: Duration) -> PointStats {
+        let mut sorted = self.lat_us.as_slice().to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let wall_s = wall.as_secs_f64().max(1e-9);
+        PointStats {
+            offered: self.ok + self.shed + self.busy + self.timeout + self.error,
+            ok: self.ok,
+            shed: self.shed,
+            busy: self.busy,
+            timeout: self.timeout,
+            error: self.error,
+            wall_s,
+            throughput_rps: self.ok as f64 / wall_s,
+            p50_us: percentile(&sorted, 50.0),
+            p95_us: percentile(&sorted, 95.0),
+            p99_us: percentile(&sorted, 99.0),
+        }
+    }
+}
+
+/// One trial's SLO summary (one sweep point).
+#[derive(Clone, Debug)]
+pub struct PointStats {
+    /// Requests the generator attempted (accepted + refused).
+    pub offered: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub busy: u64,
+    pub timeout: u64,
+    pub error: u64,
+    pub wall_s: f64,
+    /// Completed-OK requests per second of trial wall clock.
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_and_summarizes() {
+        let mut r = Recorder::new(1);
+        for i in 0..100 {
+            r.record_ok(Duration::from_micros(100 + i));
+        }
+        r.record_err("shed: deadline exceeded after 12.0 ms in queue");
+        r.record_err("unknown variant 'nope'");
+        r.record_busy();
+        r.record_timeout();
+        let s = r.stats(Duration::from_secs(2));
+        assert_eq!((s.ok, s.shed, s.busy, s.timeout, s.error), (100, 1, 1, 1, 1));
+        assert_eq!(s.offered, 104);
+        assert!((s.throughput_rps - 50.0).abs() < 1e-9);
+        assert!(s.p50_us >= 100.0 && s.p50_us <= 200.0);
+        assert!(s.p99_us >= s.p50_us);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Recorder::new(1);
+        a.record_ok(Duration::from_micros(10));
+        let mut b = Recorder::new(2);
+        b.record_ok(Duration::from_micros(30));
+        b.record_busy();
+        a.merge(&b);
+        let s = a.stats(Duration::from_secs(1));
+        assert_eq!(s.ok, 2);
+        assert_eq!(s.busy, 1);
+        assert!(s.p50_us >= 10.0 && s.p50_us <= 30.0);
+    }
+}

@@ -1,0 +1,369 @@
+//! The serving sweep driver: walk worker count x batch policy x arrival
+//! process, run one bounded trial per point against a fresh
+//! [`WorkerPool`], and emit the `BENCH_serving.json` trajectory record
+//! (throughput, tail latency, shed/busy counts per point).
+//!
+//! The backend factory is created ONCE for the whole sweep and shared by
+//! every pool, so quantization/warm-up is paid once no matter how many
+//! grid points run (the `Arc`-shared prepared variants the pool design
+//! exists for).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::arrival::{exp_gap, Arrival};
+use super::recorder::{PointStats, Recorder};
+use crate::coordinator::{
+    Admission, BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
+};
+use crate::runtime::{create_factory, BackendFactory, BackendKind};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How long the collector waits for any single response before counting
+/// it as a timeout (far beyond any sane service time; a hit means the
+/// pool lost the request).
+const CLIENT_PATIENCE: Duration = Duration::from_secs(10);
+
+/// The sweep grid + per-trial knobs.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Worker counts to sweep.
+    pub workers: Vec<usize>,
+    /// Arrival processes to sweep (open-loop rates and/or closed-loop
+    /// concurrencies).
+    pub arrivals: Vec<Arrival>,
+    /// Batch-policy straggler windows to sweep.
+    pub max_waits: Vec<Duration>,
+    pub max_batch: usize,
+    /// Wall-clock submission window per point.
+    pub duration: Duration,
+    pub queue_depth: usize,
+    /// Shed budget stamped on every request (None = never shed).
+    pub deadline: Option<Duration>,
+    pub variants: Vec<VariantSpec>,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> SweepConfig {
+        SweepConfig {
+            workers: vec![1, 2, 4],
+            arrivals: vec![Arrival::Poisson { rate: 150.0 }, Arrival::Poisson { rate: 300.0 }],
+            max_waits: vec![Duration::from_millis(2)],
+            max_batch: 64,
+            duration: Duration::from_millis(400),
+            queue_depth: 256,
+            deadline: Some(Duration::from_millis(100)),
+            variants: vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4)],
+            seed: 2026,
+        }
+    }
+}
+
+/// One grid point's result.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub workers: usize,
+    pub arrival: String,
+    /// Offered rate (req/s) for open-loop points, 0 for closed loop.
+    pub rate: f64,
+    pub max_wait_ms: f64,
+    /// Client-side outcome summary.
+    pub stats: PointStats,
+    /// Pool-side counters for the same trial.
+    pub shed: u64,
+    pub rejected: u64,
+    pub mean_batch: f64,
+}
+
+/// Resolve one factory, then run every grid point on its own fresh
+/// pool. Returns the points plus the RESOLVED backend name (what
+/// actually served — "pjrt" | "native" — not the requested kind, so
+/// trajectory records from different environments stay comparable).
+pub fn run_sweep(
+    dir: &Path,
+    kind: BackendKind,
+    cfg: &SweepConfig,
+) -> Result<(Vec<SweepPoint>, &'static str)> {
+    let factory: Arc<dyn BackendFactory> = Arc::from(create_factory(kind, dir, &cfg.variants)?);
+    let backend = factory.name();
+    let names: Vec<String> = cfg.variants.iter().map(|v| v.name.clone()).collect();
+    let images = gen_images(16, cfg.seed);
+    let mut out = Vec::new();
+    for &workers in &cfg.workers {
+        for &max_wait in &cfg.max_waits {
+            for (ai, arrival) in cfg.arrivals.iter().enumerate() {
+                let pool = WorkerPool::start_with_factory(
+                    Arc::clone(&factory),
+                    PoolConfig {
+                        workers,
+                        policy: BatchPolicy { max_batch: cfg.max_batch, max_wait },
+                        queue_depth: cfg.queue_depth,
+                    },
+                )?;
+                let seed = cfg.seed ^ ((workers as u64) << 32) ^ (ai as u64 + 1);
+                let stats = match *arrival {
+                    Arrival::Poisson { rate } => {
+                        run_open_loop(&pool, rate, cfg, &names, &images, seed)?
+                    }
+                    Arrival::Closed { concurrency } => {
+                        run_closed_loop(&pool, concurrency, cfg, &names, &images, seed)
+                    }
+                };
+                let snap = pool.metrics.snapshot();
+                out.push(SweepPoint {
+                    workers,
+                    arrival: arrival.label(),
+                    rate: arrival.rate(),
+                    max_wait_ms: max_wait.as_secs_f64() * 1e3,
+                    stats,
+                    shed: snap.shed,
+                    rejected: snap.rejected,
+                    mean_batch: snap.mean_batch,
+                });
+                pool.shutdown()?;
+            }
+        }
+    }
+    Ok((out, backend))
+}
+
+/// Open loop: paced Poisson submission on this thread, collection on a
+/// companion thread so slow responses never distort the arrival process.
+fn run_open_loop(
+    pool: &WorkerPool,
+    rate: f64,
+    cfg: &SweepConfig,
+    names: &[String],
+    images: &[Vec<f32>],
+    seed: u64,
+) -> Result<PointStats> {
+    let (tx, rx) = mpsc::channel::<crate::coordinator::Ticket>();
+    let collector = std::thread::spawn(move || {
+        let mut rec = Recorder::new(1);
+        for ticket in rx {
+            match ticket.recv_timeout(CLIENT_PATIENCE) {
+                Ok(Ok(resp)) => rec.record_ok(resp.total),
+                Ok(Err(e)) => rec.record_err(&e),
+                Err(_) => rec.record_timeout(),
+            }
+        }
+        rec
+    });
+
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let end = t0 + cfg.duration;
+    let mut next = t0;
+    let mut busy = 0u64;
+    let mut i = 0usize;
+    while next < end {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        let req = InferRequest {
+            image: images[i % images.len()].clone(),
+            variant: names[i % names.len()].clone(),
+        };
+        let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+        match pool.try_submit(req, pri, cfg.deadline)? {
+            Admission::Accepted(t) => {
+                let _ = tx.send(t);
+            }
+            Admission::Busy => busy += 1,
+        }
+        i += 1;
+        next += Duration::from_secs_f64(exp_gap(&mut rng, rate));
+    }
+    drop(tx);
+    let mut rec = collector
+        .join()
+        .map_err(|_| anyhow::anyhow!("loadgen collector panicked"))?;
+    rec.busy = busy;
+    Ok(rec.stats(t0.elapsed()))
+}
+
+/// Closed loop: `concurrency` clients, zero think time, client-measured
+/// latency (submit -> response receipt).
+fn run_closed_loop(
+    pool: &WorkerPool,
+    concurrency: usize,
+    cfg: &SweepConfig,
+    names: &[String],
+    images: &[Vec<f32>],
+    seed: u64,
+) -> PointStats {
+    let t0 = Instant::now();
+    let end = t0 + cfg.duration;
+    let recs: Vec<Recorder> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency.max(1))
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rec = Recorder::new(seed ^ c as u64);
+                    let pri =
+                        if c % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+                    let mut i = c;
+                    while Instant::now() < end {
+                        let req = InferRequest {
+                            image: images[i % images.len()].clone(),
+                            variant: names[i % names.len()].clone(),
+                        };
+                        let t = Instant::now();
+                        match pool.submit(req, pri, cfg.deadline) {
+                            Ok(ticket) => match ticket.recv_timeout(CLIENT_PATIENCE) {
+                                Ok(Ok(_resp)) => rec.record_ok(t.elapsed()),
+                                Ok(Err(e)) => rec.record_err(&e),
+                                Err(_) => rec.record_timeout(),
+                            },
+                            Err(_) => rec.record_busy(),
+                        }
+                        i += concurrency;
+                    }
+                    rec
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut merged = Recorder::new(seed);
+    for r in &recs {
+        merged.merge(r);
+    }
+    merged.stats(t0.elapsed())
+}
+
+/// Deterministic synthetic 32x32x3 images for the generators.
+pub fn gen_images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n.max(1))
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect())
+        .collect()
+}
+
+/// Machine-readable sweep record (the serving perf trajectory).
+pub fn sweep_json(points: &[SweepPoint], cfg: &SweepConfig, backend: &str) -> Json {
+    let mut root = Json::obj();
+    root.set("bench", "serving");
+    root.set("backend", backend);
+    root.set("unit_latency", "us");
+    root.set("unit_throughput", "req/s (completed ok)");
+    root.set("duration_ms", cfg.duration.as_secs_f64() * 1e3);
+    root.set("queue_depth", cfg.queue_depth as u64);
+    root.set("max_batch", cfg.max_batch as u64);
+    root.set(
+        "deadline_ms",
+        match cfg.deadline {
+            Some(d) => Json::Num(d.as_secs_f64() * 1e3),
+            None => Json::Null,
+        },
+    );
+    let variants: Vec<Json> =
+        cfg.variants.iter().map(|v| Json::Str(v.name.clone())).collect();
+    root.set("variants", Json::Arr(variants));
+    let records: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut j = Json::obj();
+            j.set("workers", p.workers as u64);
+            j.set("arrival", p.arrival.as_str());
+            j.set("rate", p.rate);
+            j.set("max_wait_ms", p.max_wait_ms);
+            j.set("throughput_rps", p.stats.throughput_rps);
+            j.set("p50_us", p.stats.p50_us);
+            j.set("p95_us", p.stats.p95_us);
+            j.set("p99_us", p.stats.p99_us);
+            j.set("offered", p.stats.offered);
+            j.set("ok", p.stats.ok);
+            j.set("shed", p.shed);
+            j.set("busy", p.rejected);
+            j.set("timeout", p.stats.timeout);
+            j.set("error", p.stats.error);
+            j.set("mean_batch", p.mean_batch);
+            j.set("wall_s", p.stats.wall_s);
+            j
+        })
+        .collect();
+    root.set("records", Json::Arr(records));
+    root
+}
+
+/// Write the sweep record to `path` (the repo-root `BENCH_serving.json`
+/// for the CLI and the hotpath bench).
+pub fn write_bench_json(
+    points: &[SweepPoint],
+    cfg: &SweepConfig,
+    backend: &str,
+    path: &Path,
+) -> Result<()> {
+    std::fs::write(path, sweep_json(points, cfg, backend).pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            workers: vec![1],
+            arrivals: vec![Arrival::Poisson { rate: 120.0 }],
+            max_waits: vec![Duration::from_millis(1)],
+            max_batch: 8,
+            duration: Duration::from_millis(120),
+            queue_depth: 64,
+            deadline: Some(Duration::from_secs(5)),
+            variants: vec![VariantSpec::swis(3.0, 4)],
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn open_loop_sweep_runs_and_serializes() {
+        let cfg = tiny_cfg();
+        let (pts, backend) =
+            run_sweep(Path::new("/nonexistent"), BackendKind::Native, &cfg).unwrap();
+        assert_eq!(backend, "native");
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert!(p.stats.offered > 0, "no requests offered");
+        assert!(p.stats.ok > 0, "no requests completed");
+        assert_eq!(p.stats.timeout, 0, "requests timed out");
+        assert!(p.stats.p99_us >= p.stats.p50_us);
+        let j = sweep_json(&pts, &cfg, "native");
+        for key in
+            ["workers", "arrival", "throughput_rps", "p50_us", "p99_us", "shed", "busy"]
+        {
+            assert!(
+                j.path(&["records", "0", key]).is_some(),
+                "missing '{key}' in sweep record"
+            );
+        }
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("serving"));
+    }
+
+    #[test]
+    fn closed_loop_trial_completes() {
+        let mut cfg = tiny_cfg();
+        cfg.arrivals = vec![Arrival::Closed { concurrency: 2 }];
+        cfg.duration = Duration::from_millis(80);
+        let (pts, _) = run_sweep(Path::new("/nonexistent"), BackendKind::Native, &cfg).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].stats.ok > 0, "closed loop completed nothing");
+        assert_eq!(pts[0].rate, 0.0);
+    }
+
+    #[test]
+    fn gen_images_shape_and_determinism() {
+        let a = gen_images(3, 5);
+        let b = gen_images(3, 5);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|im| im.len() == 32 * 32 * 3));
+        assert_eq!(a, b);
+    }
+}

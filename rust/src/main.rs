@@ -3,14 +3,18 @@
 //! Subcommands:
 //!   quantize  — SWIS/SWIS-C/truncation quantization report for a network
 //!   simulate  — systolic-array simulation: cycles, F/s, F/J, DRAM traffic
-//!   serve     — start the coordinator and drive a synthetic request load
+//!   serve     — start a worker pool and drive a synthetic request load
+//!   loadgen   — SLO sweep (workers x policy x arrival rate), emits
+//!               BENCH_serving.json at the repo root
 //!   prob      — Fig. 2 lossless-quantization probability curves
 //!   info      — model zoo + accelerator configuration summary
 //!
 //! Examples:
 //!   swis quantize --net resnet18 --shifts 3 --group 4
 //!   swis simulate --net mobilenet_v2 --scheme swis --shifts 3.5 --pe ds
-//!   swis serve --requests 256 --variants fp32,swis@3 --backend native
+//!   swis serve --requests 256 --variants fp32,swis@3 --backend native \
+//!              --workers 4 --queue-depth 256 --priority batch --rate 300
+//!   swis loadgen --workers 1,2,4 --rates 150,300 --duration-ms 400
 //!   swis prob
 
 use anyhow::{bail, Context, Result};
@@ -19,7 +23,10 @@ use std::time::Duration;
 
 use swis::analysis::fig2_rows;
 use swis::arch::pe::PeKind;
-use swis::coordinator::{BatchPolicy, Coordinator, InferRequest, VariantSpec};
+use swis::coordinator::{
+    BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
+};
+use swis::loadgen::{exp_gap, run_sweep, write_bench_json, Arrival, SweepConfig};
 use swis::nets::{all_networks, by_name, surrogate_weights};
 use swis::quant::truncation::truncate_weights;
 use swis::schedule::quantize_or_schedule;
@@ -30,7 +37,9 @@ use swis::util::stats::rmse;
 
 const VALUE_KEYS: &[&str] = &[
     "net", "shifts", "group", "scheme", "pe", "rows", "cols", "artifacts", "requests",
-    "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend",
+    "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend", "workers",
+    "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms", "deadline-ms",
+    "concurrency", "mode", "out",
 ];
 
 fn main() {
@@ -47,10 +56,14 @@ fn run(argv: &[String]) -> Result<()> {
         Some("quantize") => cmd_quantize(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("prob") => cmd_prob(),
         Some("tune") => cmd_tune(&args),
         Some("info") => cmd_info(),
-        Some(other) => bail!("unknown subcommand '{other}' (try: quantize simulate serve tune prob info)"),
+        Some(other) => {
+            let known = "quantize simulate serve loadgen tune prob info";
+            bail!("unknown subcommand '{other}' (try: {known})")
+        }
         None => {
             print_usage();
             Ok(())
@@ -61,8 +74,12 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
-         usage: swis <quantize|simulate|serve|prob|info> [options]\n\
-         see README.md for the full option list"
+         usage: swis <quantize|simulate|serve|loadgen|prob|info> [options]\n\
+         serve:   --workers N --queue-depth D --priority interactive|batch \
+         --rate R (open-loop pacing, 0 = burst)\n\
+         loadgen: --workers 1,2,4 --rates 150,300 --max-waits-ms 2 \
+         --duration-ms 400 --deadline-ms 100 --mode open|closed|both\n\
+         see rust/README.md for the full option list"
     );
 }
 
@@ -196,33 +213,132 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 64)?,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
     };
+    let workers = args.get_usize("workers", 1)?;
+    let queue_depth = args.get_usize("queue-depth", 1024)?;
+    let priority = Priority::parse(args.get_or("priority", "interactive"))?;
+    // open-loop pacing of the synthetic driver; 0 submits one burst
+    let rate = args.get_f64("rate", 0.0)?;
+    let deadline_ms = args.get_usize("deadline-ms", 0)?;
+    let deadline =
+        if deadline_ms == 0 { None } else { Some(Duration::from_millis(deadline_ms as u64)) };
     let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
 
-    println!("# serve — starting coordinator ({} variants)", names.len());
-    let coord = Coordinator::start_with(Path::new(dir), policy, variants, backend)?;
-    println!("backend          : {}", coord.backend());
+    println!("# serve — starting pool ({workers} workers, {} variants)", names.len());
+    let pool = WorkerPool::start(
+        Path::new(dir),
+        PoolConfig { workers, policy, queue_depth },
+        variants,
+        backend,
+    )?;
+    println!("backend          : {}", pool.backend());
     let mut rng = Rng::new(7);
     let mut rxs = Vec::with_capacity(n_req);
     let t0 = std::time::Instant::now();
     for i in 0..n_req {
         let image: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f64() as f32).collect();
         let variant = names[i % names.len()].clone();
-        rxs.push(coord.submit(InferRequest { image, variant })?);
+        rxs.push(pool.submit(InferRequest { image, variant }, priority, deadline)?);
+        if rate > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(exp_gap(&mut rng, rate)));
+        }
     }
     let mut ok = 0usize;
+    let mut shed = 0usize;
     for rx in rxs {
-        if rx.recv()?.is_ok() {
-            ok += 1;
+        match rx.recv()? {
+            Ok(_) => ok += 1,
+            Err(e) if e.starts_with("shed:") => shed += 1,
+            Err(_) => {}
         }
     }
     let wall = t0.elapsed();
-    let snap = coord.metrics.snapshot();
+    let snap = pool.metrics.snapshot();
     println!("requests         : {ok}/{n_req} ok in {:.1} ms", wall.as_secs_f64() * 1e3);
     println!("throughput       : {:.0} req/s", n_req as f64 / wall.as_secs_f64());
     println!("batches          : {} (mean size {:.1})", snap.batches, snap.mean_batch);
+    println!("shed / rejected  : {shed} / {}", snap.rejected);
     println!("queue p50        : {:.0} us", snap.queue_us.p50);
     println!("total p50 / p99  : {:.0} / {:.0} us", snap.p50_total_us, snap.p99_total_us);
-    coord.shutdown()?;
+    pool.shutdown()?;
+    Ok(())
+}
+
+/// SLO sweep over worker count x batch policy x arrival process; emits
+/// the repo-root `BENCH_serving.json` trajectory record.
+fn cmd_loadgen(args: &cli::Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
+    let variants: Vec<VariantSpec> = args
+        .get_or("variants", "fp32,swis@3")
+        .split(',')
+        .map(VariantSpec::parse)
+        .collect::<Result<_>>()?;
+    let workers = args.get_usize_list("workers", &[1, 2, 4])?;
+    let rates = args.get_f64_list("rates", &[150.0, 300.0])?;
+    let concurrency = args.get_usize_list("concurrency", &[4])?;
+    let mode = args.get_or("mode", "open");
+    let mut arrivals: Vec<Arrival> = Vec::new();
+    if mode == "open" || mode == "both" {
+        arrivals.extend(rates.iter().map(|&rate| Arrival::Poisson { rate }));
+    }
+    if mode == "closed" || mode == "both" {
+        arrivals.extend(concurrency.iter().map(|&c| Arrival::Closed { concurrency: c }));
+    }
+    if arrivals.is_empty() {
+        bail!("--mode expects open|closed|both (got '{mode}')");
+    }
+    let deadline_ms = args.get_f64("deadline-ms", 100.0)?;
+    let cfg = SweepConfig {
+        workers,
+        arrivals,
+        max_waits: args
+            .get_usize_list("max-waits-ms", &[2])?
+            .into_iter()
+            .map(|ms| Duration::from_millis(ms as u64))
+            .collect(),
+        max_batch: args.get_usize("max-batch", 64)?,
+        duration: Duration::from_millis(args.get_usize("duration-ms", 400)? as u64),
+        queue_depth: args.get_usize("queue-depth", 256)?,
+        deadline: if deadline_ms <= 0.0 {
+            None
+        } else {
+            Some(Duration::from_secs_f64(deadline_ms / 1e3))
+        },
+        variants,
+        seed: args.get_usize("seed", 2026)? as u64,
+    };
+
+    println!(
+        "# loadgen — {} point(s): workers {:?} x waits {:?} x arrivals {:?}",
+        cfg.workers.len() * cfg.max_waits.len() * cfg.arrivals.len(),
+        cfg.workers,
+        cfg.max_waits,
+        cfg.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>()
+    );
+    let (points, served_on) = run_sweep(Path::new(dir), backend, &cfg)?;
+    println!("backend: {served_on}");
+    println!(
+        "{:>7} {:>14} {:>8} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6}",
+        "workers", "arrival", "wait ms", "ok req/s", "p50 us", "p99 us", "shed", "busy", "err"
+    );
+    for p in &points {
+        println!(
+            "{:>7} {:>14} {:>8.1} {:>10.1} {:>10.0} {:>10.0} {:>6} {:>6} {:>6}",
+            p.workers,
+            p.arrival,
+            p.max_wait_ms,
+            p.stats.throughput_rps,
+            p.stats.p50_us,
+            p.stats.p99_us,
+            p.shed,
+            p.rejected,
+            p.stats.error + p.stats.timeout
+        );
+    }
+    let default_out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
+    let out = args.get("out").map(std::path::PathBuf::from).unwrap_or(default_out);
+    write_bench_json(&points, &cfg, served_on, &out)?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 
@@ -307,6 +423,29 @@ mod tests {
             "serve", "--requests", "8", "--variants", "fp32,swis@2", "--max-wait-ms", "1",
         ]))
         .unwrap();
+        // the pool path: multiple workers, bounded queue, batch lane
+        run(&sv(&[
+            "serve", "--requests", "8", "--variants", "swis@2", "--max-wait-ms", "1",
+            "--workers", "2", "--queue-depth", "16", "--priority", "batch",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn loadgen_smoke_writes_wellformed_json() {
+        let out = std::env::temp_dir().join(format!("swis_loadgen_{}.json", std::process::id()));
+        run(&sv(&[
+            "loadgen", "--workers", "1", "--rates", "150", "--duration-ms", "80",
+            "--variants", "swis@2", "--backend", "native", "--deadline-ms", "5000",
+            "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let j = swis::util::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("serving"));
+        for key in ["workers", "throughput_rps", "p50_us", "p99_us", "shed"] {
+            assert!(j.path(&["records", "0", key]).is_some(), "missing {key}");
+        }
+        let _ = std::fs::remove_file(&out);
     }
 
     #[test]
@@ -315,5 +454,7 @@ mod tests {
         assert!(run(&sv(&["simulate", "--net", "nope"])).is_err());
         assert!(run(&sv(&["simulate", "--pe", "warp"])).is_err());
         assert!(run(&sv(&["simulate", "--scheme", "int4"])).is_err());
+        assert!(run(&sv(&["serve", "--priority", "warp"])).is_err());
+        assert!(run(&sv(&["loadgen", "--mode", "sideways"])).is_err());
     }
 }

@@ -16,10 +16,18 @@
 //! [`BackendKind::Auto`] picks PJRT when the artifacts + runtime are
 //! present and falls back to native, so `Coordinator::start` serves in
 //! every environment.
+//!
+//! Scale-out seam: a [`BackendFactory`] is the `Send + Sync` *recipe* for
+//! a backend. The worker pool hands one factory to N worker threads;
+//! each thread calls [`BackendFactory::make`] so thread-affine handles
+//! (PJRT) are constructed where they execute, while the native factory
+//! shares its prepared per-variant models across all workers through an
+//! `Arc` — quantization and warm-up happen exactly once per pool.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use super::{ModelBundle, Runtime};
 use crate::coordinator::{VariantSpec, WeightVariants};
@@ -67,23 +75,90 @@ impl BackendKind {
     }
 }
 
-/// Build the requested backend for an artifact directory + variant list.
-pub fn create_backend(
+/// A `Send + Sync` recipe for constructing per-worker backends. The pool
+/// clones one factory across its worker threads; `make` runs on the
+/// worker thread itself so thread-affine handles (PJRT) are owned where
+/// they execute.
+pub trait BackendFactory: Send + Sync {
+    /// Short identifier for logs ("pjrt" | "native" | test doubles).
+    fn name(&self) -> &'static str;
+
+    /// Build one backend on the CALLING thread. `pool_workers` is the
+    /// total worker count of the pool being assembled, so implementations
+    /// can split intra-op thread budgets instead of oversubscribing
+    /// `workers x default_threads` OS threads.
+    fn make(&self, pool_workers: usize) -> Result<Box<dyn Backend>>;
+}
+
+/// Native recipe: quantize/prepare every variant ONCE (here, on the
+/// caller), then hand each worker an `Arc` clone of the prepared models.
+pub struct NativeFactory {
+    prototype: NativeBackend,
+}
+
+impl NativeFactory {
+    pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> Result<NativeFactory> {
+        Ok(NativeFactory { prototype: NativeBackend::load(dir, variants)? })
+    }
+}
+
+impl BackendFactory for NativeFactory {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn make(&self, pool_workers: usize) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(self.prototype.replicate(pool_workers)))
+    }
+}
+
+/// PJRT recipe: every worker compiles/loads its own executable set on its
+/// own thread (PJRT handles are thread-affine, so the prepared state
+/// cannot be shared the way the native models are).
+pub struct PjrtFactory {
+    dir: PathBuf,
+    variants: Vec<VariantSpec>,
+}
+
+impl BackendFactory for PjrtFactory {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(PjrtBackend::load(&self.dir, &self.variants)?))
+    }
+}
+
+/// Resolve a [`BackendKind`] into a factory. `Auto` probes the manifest
+/// and PJRT client availability here (once, on the caller) and falls back
+/// to the native factory; artifact *content* errors then surface at
+/// worker warm-up as hard failures rather than silent fallbacks. The
+/// probe constructs one throwaway PJRT client per pool START (not per
+/// worker) — the price of deciding the backend uniformly before any
+/// worker spawns, so an N-worker pool can never split across backends.
+pub fn create_factory(
     kind: BackendKind,
     dir: &Path,
     variants: &[VariantSpec],
-) -> Result<Box<dyn Backend>> {
+) -> Result<Box<dyn BackendFactory>> {
     match kind {
-        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(dir, variants)?)),
-        BackendKind::Native => Ok(Box::new(NativeBackend::load(Some(dir), variants)?)),
+        BackendKind::Pjrt => {
+            Ok(Box::new(PjrtFactory { dir: dir.to_path_buf(), variants: variants.to_vec() }))
+        }
+        BackendKind::Native => Ok(Box::new(NativeFactory::load(Some(dir), variants)?)),
         BackendKind::Auto => {
-            // manifest presence is the cheap gate; PjrtBackend::load
-            // itself is the PJRT-availability probe (constructing a
-            // throwaway client first would double the slow warm-up step)
             if dir.join("manifest.json").exists() {
-                match PjrtBackend::load(dir, variants) {
-                    Ok(b) => return Ok(Box::new(b)),
-                    Err(e) => eprintln!("PJRT backend unavailable ({e:#}); falling back to native"),
+                match Runtime::cpu() {
+                    Ok(_probe) => {
+                        return Ok(Box::new(PjrtFactory {
+                            dir: dir.to_path_buf(),
+                            variants: variants.to_vec(),
+                        }))
+                    }
+                    Err(e) => {
+                        eprintln!("PJRT backend unavailable ({e:#}); falling back to native")
+                    }
                 }
             } else {
                 // loud on purpose: a mistyped --artifacts path must not
@@ -93,9 +168,19 @@ pub fn create_backend(
                     dir.display()
                 );
             }
-            Ok(Box::new(NativeBackend::load(Some(dir), variants)?))
+            Ok(Box::new(NativeFactory::load(Some(dir), variants)?))
         }
     }
+}
+
+/// Build one backend for an artifact directory + variant list (the
+/// 1-worker convenience over [`create_factory`]).
+pub fn create_backend(
+    kind: BackendKind,
+    dir: &Path,
+    variants: &[VariantSpec],
+) -> Result<Box<dyn Backend>> {
+    create_factory(kind, dir, variants)?.make(1)
 }
 
 /// The AOT/PJRT execution path.
@@ -138,9 +223,13 @@ impl Backend for PjrtBackend {
 }
 
 /// The native SWIS execution path: one prepared [`NativeModel`] per
-/// variant, executing packed operands directly.
+/// variant, executing packed operands directly. The prepared models live
+/// behind an `Arc`, so replicating the backend across pool workers is a
+/// pointer clone — quantization and packing run once, every worker
+/// executes the same packed operands.
+#[derive(Clone)]
 pub struct NativeBackend {
-    models: HashMap<String, NativeModel>,
+    models: Arc<HashMap<String, NativeModel>>,
     threads: usize,
 }
 
@@ -155,7 +244,19 @@ impl NativeBackend {
                 .with_context(|| format!("preparing variant '{}'", spec.name))?;
             models.insert(spec.name.clone(), model);
         }
-        Ok(NativeBackend { models, threads: planner::default_threads() })
+        Ok(NativeBackend { models: Arc::new(models), threads: planner::default_threads() })
+    }
+
+    /// Cheap per-worker replica sharing the prepared variants; the
+    /// intra-op thread budget is split across the pool so N workers do
+    /// not oversubscribe N x `default_threads` OS threads. Results are
+    /// thread-count invariant (pinned by `tests/native_equiv.rs`), so the
+    /// split never changes logits.
+    fn replicate(&self, pool_workers: usize) -> NativeBackend {
+        NativeBackend {
+            models: Arc::clone(&self.models),
+            threads: (planner::default_threads() / pool_workers.max(1)).max(1),
+        }
     }
 }
 
@@ -216,6 +317,28 @@ mod tests {
         assert_eq!(b.name(), "native");
         // explicit PJRT stays a hard failure in offline builds
         assert!(create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), &specs()).is_err());
+    }
+
+    #[test]
+    fn native_factory_shares_prepared_models_across_replicas() {
+        let f = NativeFactory::load(None, &specs()).unwrap();
+        assert_eq!(f.name(), "native");
+        let a = f.make(1).unwrap();
+        let b = f.make(8).unwrap();
+        assert!(a.has_variant("swis@3") && b.has_variant("swis_c@2"));
+        // replicas share the SAME prepared operands; the worker-count
+        // thread split must never change logits
+        let imgs = Tensor::new(&[1, 32, 32, 3], vec![0.25; 32 * 32 * 3]).unwrap();
+        let la = a.infer("swis@3", &imgs).unwrap();
+        let lb = b.infer("swis@3", &imgs).unwrap();
+        assert_eq!(la.data(), lb.data());
+    }
+
+    #[test]
+    fn auto_factory_falls_back_to_native() {
+        let f = create_factory(BackendKind::Auto, Path::new("/nonexistent"), &specs()).unwrap();
+        assert_eq!(f.name(), "native");
+        assert_eq!(f.make(2).unwrap().name(), "native");
     }
 
     #[test]

@@ -14,5 +14,8 @@ mod backend;
 mod client;
 
 pub use artifacts::{ArtifactSpec, Manifest, ModelBundle, TensorSpec};
-pub use backend::{create_backend, Backend, BackendKind, NativeBackend, PjrtBackend};
+pub use backend::{
+    create_backend, create_factory, Backend, BackendFactory, BackendKind, NativeBackend,
+    NativeFactory, PjrtBackend, PjrtFactory,
+};
 pub use client::{hlo_output_arity, Executable, Runtime};

@@ -89,6 +89,21 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of f64, e.g. `--rates 100,250.5`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("--{name}: bad element '{t}'"))
+                })
+                .collect(),
+        }
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.pos
     }
@@ -134,6 +149,9 @@ mod tests {
         assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
         assert_eq!(a.get_usize_list("l", &[]).unwrap(), vec![1, 2, 4]);
         assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let b = parse(&sv(&["--r", "100,250.5"]), &["r"]).unwrap();
+        assert_eq!(b.get_f64_list("r", &[]).unwrap(), vec![100.0, 250.5]);
+        assert_eq!(b.get_f64_list("missing", &[1.5]).unwrap(), vec![1.5]);
     }
 
     #[test]

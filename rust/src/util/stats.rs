@@ -1,5 +1,7 @@
-//! Small statistics helpers shared by the bench harness and the
-//! coordinator's latency metrics.
+//! Small statistics helpers shared by the bench harness, the
+//! coordinator's latency metrics, and the loadgen recorder.
+
+use crate::util::rng::Rng;
 
 /// Summary statistics over a sample of f64s.
 #[derive(Clone, Debug, Default)]
@@ -54,6 +56,60 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Fixed-capacity uniform sample of an unbounded stream (Vitter's
+/// Algorithm R), deterministic in its seed: after `seen()` pushes every
+/// element had probability `cap / seen` of being retained, so percentile
+/// estimates over [`Reservoir::as_slice`] stay valid under sustained load
+/// while memory stays bounded — the fix for the metrics vectors that
+/// previously grew one entry per request forever.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    rng: Rng,
+    buf: Vec<f64>,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir { cap: cap.max(1), seen: 0, rng: Rng::new(seed), buf: Vec::new() }
+    }
+
+    /// Offer one sample; replaces a uniformly-chosen slot once full.
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            // element i (1-based) keeps a cap/i retention probability
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.buf[j as usize] = x;
+            }
+        }
+    }
+
+    /// Total elements offered (>= the retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The retained sample, unordered.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.buf
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Sorted copy of the sample plus its [`Summary`] (percentiles are
+    /// exact below capacity, an unbiased estimate beyond it).
+    pub fn summary(&self) -> Summary {
+        summarize(&self.buf)
+    }
+}
+
 /// Root mean square error between two slices.
 pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -95,5 +151,47 @@ mod tests {
     fn rmse_zero_for_equal() {
         assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
         assert!((rmse(&[0.0], &[2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_below_capacity_is_exact() {
+        let mut r = Reservoir::new(16, 1);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 10);
+        assert_eq!(r.as_slice(), (0..10).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_deterministic() {
+        let run = || {
+            let mut r = Reservoir::new(64, 9);
+            for i in 0..10_000 {
+                r.push(i as f64);
+            }
+            r.as_slice().to_vec()
+        };
+        let a = run();
+        assert_eq!(a.len(), 64);
+        assert_eq!(a, run(), "same seed must retain the same sample");
+    }
+
+    #[test]
+    fn reservoir_sample_is_roughly_uniform() {
+        // push 0..20k; the retained sample's mean must sit near the
+        // stream mean (a sample biased toward early or late entries —
+        // the classic off-by-one in Algorithm R — lands far away)
+        let mut r = Reservoir::new(512, 3);
+        let n = 20_000usize;
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        let mean = r.as_slice().iter().sum::<f64>() / r.as_slice().len() as f64;
+        let want = (n as f64 - 1.0) / 2.0;
+        assert!(
+            (mean - want).abs() < 0.08 * n as f64,
+            "sample mean {mean} vs stream mean {want}"
+        );
     }
 }

@@ -1,12 +1,20 @@
 //! Failure injection: the system must fail loudly and cleanly — never
-//! serve garbage — when artifacts are missing, truncated, or corrupt.
+//! serve garbage — when artifacts are missing, truncated, or corrupt,
+//! and the worker pool must contain backend panics/errors to the
+//! in-flight requests instead of hanging callers or dying.
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
-use swis::coordinator::{BatchPolicy, Coordinator, VariantSpec};
-use swis::runtime::{Manifest, ModelBundle, Runtime};
+use anyhow::{bail, Result};
+use swis::coordinator::{
+    BatchPolicy, Coordinator, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
+};
+use swis::runtime::{Backend, BackendFactory, Manifest, ModelBundle, Runtime};
 use swis::util::npy;
+use swis::util::tensor::Tensor;
 
 fn art_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -155,4 +163,156 @@ fn serialize_rejects_bad_containers_from_disk() {
     let bytes = fs::read(d.join("junk.swis")).unwrap();
     assert!(serialize::from_bytes(&bytes).is_err());
     let _ = fs::remove_dir_all(&d);
+}
+
+// ---------------------------------------------------------------------
+// Worker-pool fault containment: a panicking or erroring backend must
+// fail only its in-flight requests (routed error / closed channel, never
+// a hang) and leave the rest of the pool serving.
+// ---------------------------------------------------------------------
+
+/// Backend that panics on variant "boom", errors on "err", and serves a
+/// zero-logits response otherwise.
+struct FaultyBackend;
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn has_variant(&self, _name: &str) -> bool {
+        true
+    }
+
+    fn plan_chunks(&self, n: usize) -> Vec<usize> {
+        if n == 0 {
+            vec![]
+        } else {
+            vec![n]
+        }
+    }
+
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+        match variant {
+            "boom" => panic!("injected backend panic"),
+            "err" => bail!("injected backend error"),
+            _ => {
+                let n = images.shape()[0];
+                Tensor::new(&[n, 10], vec![0.0f32; n * 10])
+            }
+        }
+    }
+}
+
+struct FaultyFactory;
+
+impl BackendFactory for FaultyFactory {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(FaultyBackend))
+    }
+}
+
+fn faulty_pool(workers: usize) -> WorkerPool {
+    WorkerPool::start_with_factory(
+        Arc::new(FaultyFactory),
+        PoolConfig {
+            workers,
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            queue_depth: 32,
+        },
+    )
+    .unwrap()
+}
+
+fn ok_req(variant: &str) -> InferRequest {
+    InferRequest { image: vec![0.5; 32 * 32 * 3], variant: variant.into() }
+}
+
+#[test]
+fn worker_panic_fails_only_the_inflight_batch() {
+    let pool = faulty_pool(2);
+    // the panicking request's response channel closes (a routed failure,
+    // observed as an error by the caller — never a hang)
+    let rx = pool.submit(ok_req("boom"), Priority::Interactive, None).unwrap();
+    assert!(rx.recv().is_err(), "panicked batch must close its response channels");
+
+    // both workers are still alive and serving after the panic
+    let rxs: Vec<_> = (0..8)
+        .map(|_| pool.submit(ok_req("fine"), Priority::Interactive, None).unwrap())
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+    }
+    let snap = pool.metrics.snapshot();
+    assert_eq!(snap.panics, 1);
+    assert_eq!(snap.errors, 1, "the panicked request is counted as a routed error");
+    assert_eq!(snap.requests, 8);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn backend_error_routes_to_callers_and_pool_survives() {
+    let pool = faulty_pool(1);
+    let rx = pool.submit(ok_req("err"), Priority::Interactive, None).unwrap();
+    let msg = rx.recv().unwrap().expect_err("backend Err must be routed to the caller");
+    assert!(msg.contains("injected backend error"), "unexpected message: {msg}");
+
+    // the worker keeps serving after a backend error
+    let resp = pool.infer(ok_req("fine")).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert_eq!(pool.metrics.snapshot().errors, 1);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn repeated_panics_never_kill_the_pool() {
+    let pool = faulty_pool(2);
+    for _ in 0..4 {
+        let rx = pool.submit(ok_req("boom"), Priority::Batch, None).unwrap();
+        assert!(rx.recv().is_err());
+    }
+    let resp = pool.infer(ok_req("fine")).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert_eq!(pool.metrics.snapshot().panics, 4);
+    pool.shutdown().unwrap();
+}
+
+struct FailingFactory;
+
+impl BackendFactory for FailingFactory {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+        bail!("injected warm-up failure")
+    }
+}
+
+struct PanickingFactory;
+
+impl BackendFactory for PanickingFactory {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+        panic!("injected warm-up panic")
+    }
+}
+
+#[test]
+fn pool_start_fails_cleanly_when_warmup_fails_or_panics() {
+    let cfg = PoolConfig { workers: 3, policy: BatchPolicy::default(), queue_depth: 8 };
+    // factory Err: start returns the error, all spawned threads reaped
+    let e = WorkerPool::start_with_factory(Arc::new(FailingFactory), cfg).unwrap_err();
+    assert!(format!("{e:#}").contains("injected warm-up failure"), "got: {e:#}");
+    // factory panic: reported as a start-up error, never a hang
+    let e = WorkerPool::start_with_factory(Arc::new(PanickingFactory), cfg).unwrap_err();
+    assert!(format!("{e:#}").contains("panicked"), "got: {e:#}");
 }

@@ -1,0 +1,364 @@
+//! Integration: the scale-out pool — admission control (bounded queue,
+//! `try_submit -> Busy`), priority lanes, deadline shedding, variant
+//! affinity, graceful drain — and the determinism pin: pool(N) serving
+//! must be bit-identical to the single-worker coordinator for any worker
+//! count and any request interleaving.
+//!
+//! The semantics tests run over an instrumented test backend (no model
+//! execution, controlled delays); the determinism pin runs the real
+//! native backend end to end. Nothing here needs PJRT or artifacts.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use swis::coordinator::{
+    Admission, BackendKind, BatchPolicy, Coordinator, InferRequest, PoolConfig, Priority,
+    VariantSpec, WorkerPool,
+};
+use swis::loadgen::gen_images;
+use swis::runtime::{Backend, BackendFactory};
+use swis::util::tensor::Tensor;
+
+// ---------------------------------------------------------------------
+// Instrumented test backend: fixed per-batch delay, dispatch log
+// ---------------------------------------------------------------------
+
+struct TestBackend {
+    delay: Duration,
+    log: Arc<Mutex<Vec<String>>>,
+}
+
+impl Backend for TestBackend {
+    fn name(&self) -> &'static str {
+        "test"
+    }
+
+    fn has_variant(&self, name: &str) -> bool {
+        name != "unknown"
+    }
+
+    fn plan_chunks(&self, n: usize) -> Vec<usize> {
+        if n == 0 {
+            vec![]
+        } else {
+            vec![n]
+        }
+    }
+
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+        if variant == "err" {
+            bail!("injected backend error");
+        }
+        std::thread::sleep(self.delay);
+        self.log.lock().unwrap().push(variant.to_string());
+        let n = images.shape()[0];
+        Tensor::new(&[n, 10], vec![0.0f32; n * 10])
+    }
+}
+
+struct TestFactory {
+    delay: Duration,
+    log: Arc<Mutex<Vec<String>>>,
+}
+
+impl TestFactory {
+    fn new(delay: Duration) -> (Arc<TestFactory>, Arc<Mutex<Vec<String>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        (Arc::new(TestFactory { delay, log: Arc::clone(&log) }), log)
+    }
+}
+
+impl BackendFactory for TestFactory {
+    fn name(&self) -> &'static str {
+        "test"
+    }
+
+    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(TestBackend { delay: self.delay, log: Arc::clone(&self.log) }))
+    }
+}
+
+/// One-job-per-batch policy so dispatch order is observable.
+fn serial_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }
+}
+
+fn req(variant: &str) -> InferRequest {
+    InferRequest { image: vec![0.25; 32 * 32 * 3], variant: variant.into() }
+}
+
+// ---------------------------------------------------------------------
+// Determinism pin: pool(N) == single-worker coordinator, bit-identical
+// ---------------------------------------------------------------------
+
+#[test]
+fn pool_logits_bit_identical_to_coordinator_for_any_worker_count() {
+    // interleaved multi-variant load: 12 requests cycling over three
+    // quantization variants, submitted asynchronously with mixed
+    // priorities — per-request logits must not depend on worker count,
+    // co-batched requests, or dispatch interleaving
+    let variants =
+        || vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4), VariantSpec::swis_c(2.0, 4)];
+    let names = ["fp32", "swis@3", "swis_c@2"];
+    let imgs = gen_images(12, 40);
+
+    // reference: the single-worker coordinator, one request at a time
+    let coord = Coordinator::start_with(
+        Path::new("/nonexistent"),
+        serial_policy(),
+        variants(),
+        BackendKind::Native,
+    )
+    .unwrap();
+    let expected: Vec<Vec<f32>> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, im)| {
+            coord
+                .infer(InferRequest { image: im.clone(), variant: names[i % names.len()].into() })
+                .unwrap()
+                .logits
+        })
+        .collect();
+    coord.shutdown().unwrap();
+
+    for workers in [1usize, 2, 8] {
+        let pool = WorkerPool::start(
+            Path::new("/nonexistent"),
+            PoolConfig {
+                workers,
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+                queue_depth: 64,
+            },
+            variants(),
+            BackendKind::Native,
+        )
+        .unwrap();
+        assert_eq!(pool.workers(), workers);
+        assert_eq!(pool.backend(), "native");
+        let rxs: Vec<_> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, im)| {
+                let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+                pool.submit(
+                    InferRequest { image: im.clone(), variant: names[i % names.len()].into() },
+                    pri,
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(
+                resp.logits, expected[i],
+                "pool({workers}) diverged from the coordinator on request {i}"
+            );
+        }
+        pool.shutdown().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Admission semantics over the instrumented backend
+// ---------------------------------------------------------------------
+
+#[test]
+fn try_submit_refuses_with_busy_at_capacity() {
+    let (factory, _log) = TestFactory::new(Duration::from_millis(150));
+    let pool = WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 2 },
+    )
+    .unwrap();
+
+    // the worker pops the first job and blocks in the backend...
+    let rx_a = pool.submit(req("a"), Priority::Interactive, None).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    // ...so the next two fill the bounded queue and the fourth is refused
+    let rx_b = match pool.try_submit(req("b"), Priority::Interactive, None).unwrap() {
+        Admission::Accepted(rx) => rx,
+        Admission::Busy => panic!("queue refused below capacity"),
+    };
+    let rx_c = match pool.try_submit(req("c"), Priority::Batch, None).unwrap() {
+        Admission::Accepted(rx) => rx,
+        Admission::Busy => panic!("queue refused below capacity"),
+    };
+    assert!(
+        matches!(pool.try_submit(req("d"), Priority::Interactive, None).unwrap(), Admission::Busy),
+        "queue at capacity must refuse with Busy"
+    );
+    assert_eq!(pool.metrics.snapshot().rejected, 1);
+
+    // backpressure is not loss: everything admitted completes
+    for rx in [rx_a, rx_b, rx_c] {
+        rx.recv().unwrap().unwrap();
+    }
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn interactive_lane_dispatches_before_batch_lane() {
+    let (factory, log) = TestFactory::new(Duration::from_millis(150));
+    let pool = WorkerPool::start_with_factory(
+        Arc::clone(&factory) as Arc<dyn BackendFactory>,
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 16 },
+    )
+    .unwrap();
+
+    let rxs = vec![
+        // occupies the worker while the lanes fill
+        pool.submit(req("seed"), Priority::Interactive, None).unwrap(),
+        {
+            std::thread::sleep(Duration::from_millis(30));
+            pool.submit(req("cold"), Priority::Batch, None).unwrap()
+        },
+        pool.submit(req("bulk"), Priority::Batch, None).unwrap(),
+        pool.submit(req("hot"), Priority::Interactive, None).unwrap(),
+    ];
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(
+        *log.lock().unwrap(),
+        vec!["seed", "hot", "cold", "bulk"],
+        "interactive lane must always pop before the batch lane"
+    );
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn worker_prefers_its_hot_variant() {
+    let (factory, log) = TestFactory::new(Duration::from_millis(150));
+    let pool = WorkerPool::start_with_factory(
+        Arc::clone(&factory) as Arc<dyn BackendFactory>,
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 16 },
+    )
+    .unwrap();
+
+    // worker serves "hot" first, so its affinity is "hot"; with "cold"
+    // AHEAD of a second "hot" in the same lane, affinity must reorder
+    let rxs = vec![
+        pool.submit(req("hot"), Priority::Interactive, None).unwrap(),
+        {
+            std::thread::sleep(Duration::from_millis(30));
+            pool.submit(req("cold"), Priority::Interactive, None).unwrap()
+        },
+        pool.submit(req("hot"), Priority::Interactive, None).unwrap(),
+    ];
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(
+        *log.lock().unwrap(),
+        vec!["hot", "hot", "cold"],
+        "variant affinity must keep the worker's hot variant hot"
+    );
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn expired_requests_are_shed_with_a_routed_error() {
+    let (factory, _log) = TestFactory::new(Duration::from_millis(150));
+    let pool = WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 16 },
+    )
+    .unwrap();
+
+    let rx_a = pool.submit(req("a"), Priority::Interactive, None).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    // expires long before the worker frees up at ~150 ms
+    let rx_b = pool
+        .submit(req("b"), Priority::Interactive, Some(Duration::from_millis(20)))
+        .unwrap();
+
+    let msg = rx_b.recv().unwrap().expect_err("expired request must not be served");
+    assert!(msg.starts_with("shed:"), "unexpected shed message: {msg}");
+    rx_a.recv().unwrap().unwrap();
+    let snap = pool.metrics.snapshot();
+    assert_eq!(snap.shed, 1);
+    assert_eq!(snap.requests, 1, "the shed request must not count as served");
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_admitted_requests() {
+    let (factory, _log) = TestFactory::new(Duration::from_millis(1));
+    let pool = WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 2, policy: serial_policy(), queue_depth: 64 },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..16)
+        .map(|i| {
+            let v = if i % 2 == 0 { "a" } else { "b" };
+            pool.submit(req(v), Priority::Batch, None).unwrap()
+        })
+        .collect();
+    pool.shutdown().unwrap();
+    // close() stops admission but the workers drain what was admitted
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn pool_parallelizes_across_workers() {
+    // 6 x 150 ms jobs: serial execution needs ~900 ms; two workers must
+    // land well under that even on a noisy CI machine
+    let (factory, _log) = TestFactory::new(Duration::from_millis(150));
+    let pool = WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 2, policy: serial_policy(), queue_depth: 64 },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let v = if i % 2 == 0 { "a" } else { "b" };
+            pool.submit(req(v), Priority::Batch, None).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed();
+    assert!(
+        wall < Duration::from_millis(800),
+        "2-worker pool served 6x150ms jobs in {wall:?} — no parallel dispatch"
+    );
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn submissions_after_shutdown_fail_fast() {
+    let (factory, _log) = TestFactory::new(Duration::from_millis(1));
+    let pool = WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 4 },
+    )
+    .unwrap();
+    let queue_probe = pool.queue_len();
+    assert_eq!(queue_probe, 0);
+    pool.shutdown().unwrap();
+    // the pool handle is consumed by shutdown; a fresh pool whose queue
+    // was closed under it reports Closed as a hard error, pinned in the
+    // admission unit tests — here we pin that zero-worker configs are
+    // rejected before any thread spawns
+    let (factory, _log) = TestFactory::new(Duration::from_millis(1));
+    assert!(WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 0, policy: serial_policy(), queue_depth: 4 },
+    )
+    .is_err());
+    let (factory, _log) = TestFactory::new(Duration::from_millis(1));
+    assert!(WorkerPool::start_with_factory(
+        factory,
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 0 },
+    )
+    .is_err());
+}
