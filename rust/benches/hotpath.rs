@@ -72,7 +72,13 @@ fn main() -> Result<()> {
     // write the trajectory file as soon as all records exist, so a
     // failure in the PJRT sections below can't lose the measurements
     write_json(&recs)?;
-    native_gemm()?;
+    let mut native_recs = native_gemm()?;
+    // same early-write rule: the GEMM measurements land on disk before
+    // the depthwise section runs (its divergence assert must not lose
+    // them), then the file is rewritten with both sections
+    write_native_json(&native_recs)?;
+    native_recs.extend(native_depthwise()?);
+    write_native_json(&native_recs)?;
     serving_sweep()?;
     simulator()?;
     runtime()?;
@@ -113,9 +119,10 @@ fn serving_sweep() -> Result<()> {
 /// The native packed GEMM kernel vs the naive per-group scalar loop on a
 /// tinycnn-class layer (conv5 geometry: 128 filters x 576 fan-in), per
 /// scheme and thread count. Mw/s counts weight-MACs (rows * K * fan_in).
-/// Runs everywhere — no PJRT, no artifacts — and emits
-/// `BENCH_native_gemm.json` at the repo root.
-fn native_gemm() -> Result<()> {
+/// Runs everywhere — no PJRT, no artifacts — records land in
+/// `BENCH_native_gemm.json` at the repo root (with the depthwise
+/// section's).
+fn native_gemm() -> Result<Vec<Record>> {
     use swis::exec::{naive_gemm, PreparedGemm};
     use swis::schedule::quantize_or_schedule;
 
@@ -170,12 +177,76 @@ fn native_gemm() -> Result<()> {
         }
     }
 
+    Ok(recs)
+}
+
+/// The packed depthwise kernel vs the naive per-channel reference on a
+/// MobileNet-v2-class layer (block1-class: 96 channels, 3x3 taps over a
+/// 56x56 map), per scheme and thread count — the kernel the zoo's 17
+/// depthwise layers execute on. Asserts bit-identical output.
+fn native_depthwise() -> Result<Vec<Record>> {
+    use swis::exec::{naive_depthwise, ConvGeom, PreparedDepthwise};
+    use swis::schedule::quantize_or_schedule;
+
+    println!("\n== native packed depthwise (mbv2 block1-class: 96ch, 3x3 @ 56x56) ==");
+    let c = 96usize;
+    let hw = 56usize;
+    let batch = 2usize;
+    let mut rng = Rng::new(8);
+    let w = rng.normal_vec(c * 9, 0.0, (2.0 / 9.0f64).sqrt());
+    let x: Vec<f32> = (0..batch * hw * hw * c).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    let nt_full = planner::default_threads();
+
+    let mut recs: Vec<Record> = Vec::new();
+    for (label, n, cons) in
+        [("swis_n3_g4", 3.0f64, false), ("swis_n2_g4", 2.0, false), ("swis_c_n3_g4", 3.0, true)]
+    {
+        for stride in [1usize, 2] {
+            let g = ConvGeom::same(hw, c, 3, stride)?;
+            let packed = quantize_or_schedule(&w, &[c, 9], n, 4, cons, swis::quant::Alpha::ONE)?;
+            let prep = PreparedDepthwise::from_packed(&packed)?;
+            let macs = prep.macs(batch, &g) as f64;
+            let mut expect = Vec::new();
+            let t_naive = time_median(3, || {
+                expect = naive_depthwise(&packed, &x, batch, &g).unwrap();
+            });
+            for nt in [1usize, nt_full] {
+                let mut last = Vec::new();
+                let t = time_median(5, || {
+                    last = prep.forward(&x, batch, &g, nt).unwrap();
+                });
+                assert_eq!(
+                    last, expect,
+                    "depthwise diverged from naive ({label}, s{stride}, nt={nt})"
+                );
+                println!(
+                    "native_dw {label:<14} s{stride} nt={nt:<2}: {:>7.1} ms ({:>7.1} Mw/s)  [naive {:>7.1} ms, {:.1}x]",
+                    t * 1e3,
+                    macs / t / 1e6,
+                    t_naive * 1e3,
+                    t_naive / t
+                );
+                recs.push(Record {
+                    op: "native_dw",
+                    config: format!("{label}_s{stride}_b{batch}_nt{nt}"),
+                    median_ms: t * 1e3,
+                    mw_per_s: macs / t / 1e6,
+                    scalar_ref_ms: Some(t_naive * 1e3),
+                });
+            }
+        }
+    }
+    Ok(recs)
+}
+
+/// Emit `BENCH_native_gemm.json` at the repo root: the native-kernel
+/// trajectory file (GEMM + depthwise sections).
+fn write_native_json(recs: &[Record]) -> Result<()> {
     let mut root = Json::obj();
     root.set("bench", "native_gemm");
     root.set("unit_time", "ms");
     root.set("unit_throughput", "Mw/s (weight-MACs)");
-    root.set("rows", rows as u64);
-    root.set("threads_full", nt_full as u64);
+    root.set("threads_full", planner::default_threads() as u64);
     let records: Vec<Json> = recs
         .iter()
         .map(|r| {

@@ -99,7 +99,8 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Resolve a backend factory for `artifacts` and start the pool.
+    /// Resolve a backend factory for `artifacts` and start the pool
+    /// (TinyCNN — the pre-zoo entry point).
     pub fn start(
         artifacts: &Path,
         cfg: PoolConfig,
@@ -108,6 +109,22 @@ impl WorkerPool {
     ) -> Result<WorkerPool> {
         let factory: Arc<dyn BackendFactory> =
             Arc::from(create_factory(kind, artifacts, &variants)?);
+        WorkerPool::start_with_factory(factory, cfg)
+    }
+
+    /// [`WorkerPool::start`] for any zoo network (served natively; pass
+    /// the net with its FC head). Request images must carry the net's
+    /// own `hw * hw * c` elements — the pool learns the shape from the
+    /// backend at warm-up.
+    pub fn start_net(
+        artifacts: &Path,
+        cfg: PoolConfig,
+        net: &crate::nets::Network,
+        variants: Vec<VariantSpec>,
+        kind: BackendKind,
+    ) -> Result<WorkerPool> {
+        let factory: Arc<dyn BackendFactory> =
+            Arc::from(crate::runtime::create_factory_net(kind, artifacts, net, &variants)?);
         WorkerPool::start_with_factory(factory, cfg)
     }
 
@@ -127,7 +144,9 @@ impl WorkerPool {
         let queue = Arc::new(AdmissionQueue::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::default());
         let alive = Arc::new(AtomicUsize::new(0));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<&'static str, String>>();
+        // warm-up handshake: each worker reports its backend's name and
+        // per-request image shape (the pool sizes admission checks off it)
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(&'static str, [usize; 3]), String>>();
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let (f, q, m, a, rt) = (
@@ -147,9 +166,13 @@ impl WorkerPool {
         }
         drop(ready_tx);
         let mut backend_name: &'static str = "";
+        let mut image_len = 32 * 32 * 3;
         for _ in 0..cfg.workers {
             match ready_rx.recv() {
-                Ok(Ok(name)) => backend_name = name,
+                Ok(Ok((name, shape))) => {
+                    backend_name = name;
+                    image_len = shape.iter().product();
+                }
                 Ok(Err(e)) => {
                     queue.close();
                     for h in workers {
@@ -166,12 +189,18 @@ impl WorkerPool {
                 }
             }
         }
-        Ok(WorkerPool { queue, metrics, workers, alive, backend_name, image_len: 32 * 32 * 3 })
+        Ok(WorkerPool { queue, metrics, workers, alive, backend_name, image_len })
     }
 
     /// Which backend the workers run on ("pjrt" | "native" | test name).
     pub fn backend(&self) -> &'static str {
         self.backend_name
+    }
+
+    /// Elements one request image must carry (`hw * hw * c` of the
+    /// served network, learned from the backend at warm-up).
+    pub fn image_len(&self) -> usize {
+        self.image_len
     }
 
     pub fn workers(&self) -> usize {
@@ -275,7 +304,7 @@ fn worker_main(
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     alive: Arc<AtomicUsize>,
-    ready: Sender<Result<&'static str, String>>,
+    ready: Sender<Result<(&'static str, [usize; 3]), String>>,
 ) {
     // Warm-up on this thread: thread-affine backends (PJRT) must be
     // constructed where they execute. A panicking factory is reported as
@@ -293,7 +322,7 @@ fn worker_main(
     };
     alive.fetch_add(1, Ordering::SeqCst);
     let _alive = AliveGuard(alive);
-    let _ = ready.send(Ok(backend.name()));
+    let _ = ready.send(Ok((backend.name(), backend.input_shape())));
 
     let mut affinity: Option<String> = None;
     let mut shed: Vec<Job> = Vec::new();
@@ -405,12 +434,12 @@ fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics, resolved: 
 fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Metrics) {
     let t0 = Instant::now();
     let n = group.len();
-    let per = 32 * 32 * 3;
-    let mut data = Vec::with_capacity(n * per);
+    let s = backend.input_shape();
+    let mut data = Vec::with_capacity(n * s[0] * s[1] * s[2]);
     for j in group {
         data.extend_from_slice(&j.req.image);
     }
-    let images = match Tensor::new(&[n, 32, 32, 3], data) {
+    let images = match Tensor::new(&[n, s[0], s[1], s[2]], data) {
         Ok(t) => t,
         Err(e) => {
             metrics.record_errors(n);

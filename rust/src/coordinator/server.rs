@@ -20,7 +20,8 @@ use super::pool::{PoolConfig, WorkerPool, DEFAULT_QUEUE_DEPTH};
 use super::variants::VariantSpec;
 use crate::runtime::BackendKind;
 
-/// One inference request: a 32x32x3 image routed to a weight variant.
+/// One inference request: an NHWC image (flattened `hw * hw * c` of the
+/// served network — 32x32x3 for TinyCNN) routed to a weight variant.
 #[derive(Clone, Debug)]
 pub struct InferRequest {
     pub image: Vec<f32>,

@@ -1,0 +1,375 @@
+//! Accuracy / compression sweep over the model zoo (paper Sec. 5's
+//! evaluation shape): walk networks x bit-widths x quantization schemes
+//! on the NATIVE executor, measuring per-layer output MSE vs the fp32
+//! reference, top-1 agreement on a fixed probe batch, and the measured
+//! packed-storage compression ratio ([`serialize::payload_bits`] over
+//! the actual `.swis` container bits). The sweep reproduces the paper's
+//! headline *trend* — SWIS beats weight truncation at equal effective
+//! bits, most dramatically on MobileNet-v2 — and emits the repo-root
+//! `BENCH_accuracy.json` trajectory record.
+//!
+//! With no trained `<net>_weights.npz` present, weights are the
+//! deterministic He surrogates; every record is stamped with its weight
+//! provenance (`"weights": "surrogate" | "npz"`) so trajectory points
+//! are never silently compared across provenances. Against surrogates
+//! the MSE/compression columns are fully meaningful (they depend on
+//! weight *statistics*); top-1 agreement is structural only.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::exec::{net_weights, NativeModel, WeightProvenance, WeightTransform};
+use crate::nets::by_name;
+use crate::quant::serialize;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// One sweep configuration.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Zoo net names ([`by_name`] spellings).
+    pub nets: Vec<String>,
+    /// Schemes to sweep: `swis`, `swis_c`, `wgt_trunc`.
+    pub schemes: Vec<String>,
+    /// Effective bit-widths (shift counts; truncation needs integers).
+    pub bits: Vec<f64>,
+    pub group_size: usize,
+    /// Probe batch size (fixed, deterministic in `seed`).
+    pub batch: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// Artifact dir probed for `<net>_weights.npz`.
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for EvalConfig {
+    fn default() -> EvalConfig {
+        EvalConfig {
+            nets: vec![
+                "tinycnn".into(),
+                "mobilenet_v2".into(),
+                "resnet18".into(),
+                "vgg16_cifar100".into(),
+            ],
+            schemes: vec!["swis".into(), "swis_c".into(), "wgt_trunc".into()],
+            bits: vec![2.0, 3.0, 4.0],
+            group_size: 4,
+            batch: 4,
+            seed: 2021,
+            threads: crate::quant::planner::default_threads(),
+            artifacts: None,
+        }
+    }
+}
+
+/// Per-node output MSE vs the fp32 reference (cumulative error — each
+/// node is compared after the full quantized prefix ran).
+#[derive(Clone, Debug)]
+pub struct LayerMse {
+    pub layer: String,
+    pub mse: f64,
+}
+
+/// One sweep point: a (net, scheme, bits) cell.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub net: String,
+    /// `fp32` reference rows appear once per net.
+    pub scheme: String,
+    /// Effective bits of the cell; the fp32 reference row carries 32
+    /// (consistent with its `bits_per_weight`), never a quantized bit
+    /// count it did not run at.
+    pub bits: f64,
+    /// Logits MSE vs the fp32 reference on the probe batch.
+    pub mse: f64,
+    /// Fraction of probe images whose argmax matches fp32.
+    pub top1_agree: f64,
+    /// vs the 8-bit baseline: measured packed bits for SWIS/SWIS-C
+    /// (`payload_bits / n_weights`), `8 / bits` for truncation, `8/32`
+    /// for the fp32 row.
+    pub compression_ratio: f64,
+    /// Measured storage bits per weight.
+    pub bits_per_weight: f64,
+    pub weights: WeightProvenance,
+    pub per_layer: Vec<LayerMse>,
+}
+
+fn transform_for(scheme: &str, bits: f64, group_size: usize) -> Result<Option<WeightTransform>> {
+    Ok(match scheme {
+        "swis" => Some(WeightTransform::Swis { n_shifts: bits, group_size, consecutive: false }),
+        "swis_c" => Some(WeightTransform::Swis { n_shifts: bits, group_size, consecutive: true }),
+        "wgt_trunc" => {
+            if bits.fract() != 0.0 || !(1.0..=8.0).contains(&bits) {
+                // truncation has no fractional operating points — skip the
+                // cell loudly rather than fake one
+                eprintln!("eval: skipping wgt_trunc@{bits} (needs an integer bit count in 1..=8)");
+                None
+            } else {
+                Some(WeightTransform::Truncate { bits: bits as usize })
+            }
+        }
+        other => bail!("unknown eval scheme '{other}' (expected swis|swis_c|wgt_trunc)"),
+    })
+}
+
+/// Deterministic probe batch for one net: uniform [0, 1) pixels, seeded
+/// by (config seed, net name) so every scheme/bits cell of a net sees
+/// the SAME images.
+fn probe_images(net: &str, shape: [usize; 3], batch: usize, seed: u64) -> Result<Tensor<f32>> {
+    let tag = net.bytes().fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed ^ tag);
+    let n = batch * shape[0] * shape[1] * shape[2];
+    let data: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    Tensor::new(&[batch, shape[0], shape[1], shape[2]], data)
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+/// Run the full sweep. Each net is prepared once per (scheme, bits) cell
+/// and compared against its fp32 reference trace; the fp32 row itself is
+/// emitted first per net.
+pub fn run_eval(cfg: &EvalConfig) -> Result<Vec<EvalRecord>> {
+    if cfg.batch == 0 {
+        bail!("eval needs a probe batch of at least 1");
+    }
+    let mut records = Vec::new();
+    for net_name in &cfg.nets {
+        let net = by_name(net_name)
+            .with_context(|| format!("unknown network '{net_name}'"))?
+            .with_fc();
+        let (weights, prov) = net_weights(cfg.artifacts.as_deref(), &net)?;
+        let fp = NativeModel::prepare_net(&net, &weights, WeightTransform::Fp32)
+            .with_context(|| format!("preparing fp32 '{}'", net.name))?;
+        let probe = probe_images(&net.name, fp.input_shape(), cfg.batch, cfg.seed)?;
+        let (flogits, ftrace) = fp.forward_trace(&probe, cfg.threads)?;
+        let fp_top1: Vec<usize> = (0..cfg.batch)
+            .map(|b| argmax(&flogits.data()[b * fp.n_classes()..(b + 1) * fp.n_classes()]))
+            .collect();
+        records.push(EvalRecord {
+            net: net.name.clone(),
+            scheme: "fp32".into(),
+            bits: 32.0,
+            mse: 0.0,
+            top1_agree: 1.0,
+            compression_ratio: 8.0 / 32.0,
+            bits_per_weight: 32.0,
+            weights: prov,
+            per_layer: Vec::new(),
+        });
+
+        for scheme in &cfg.schemes {
+            for &bits in &cfg.bits {
+                let Some(tf) = transform_for(scheme, bits, cfg.group_size)? else {
+                    continue;
+                };
+                let m = NativeModel::prepare_net(&net, &weights, tf)
+                    .with_context(|| format!("preparing {scheme}@{bits} '{}'", net.name))?;
+                // per-layer MSE folds against the ONE retained fp32 trace
+                // as each node's output is produced — never a second full
+                // activation snapshot of a 224x224 net
+                let mut per_layer: Vec<LayerMse> = Vec::with_capacity(ftrace.len());
+                let mut idx = 0usize;
+                let logits = {
+                    let mut obs = |label: &str, y: &[f32]| {
+                        if let Some((flabel, fy)) = ftrace.get(idx) {
+                            debug_assert_eq!(label, flabel.as_str());
+                            per_layer.push(LayerMse { layer: label.to_string(), mse: mse(y, fy) });
+                        }
+                        idx += 1;
+                    };
+                    m.forward_observed(&probe, cfg.threads, &mut obs)?
+                };
+                if idx != ftrace.len() {
+                    bail!("trace length diverged between fp32 and {scheme}@{bits}");
+                }
+                let agree = (0..cfg.batch)
+                    .filter(|&b| {
+                        argmax(&logits.data()[b * m.n_classes()..(b + 1) * m.n_classes()])
+                            == fp_top1[b]
+                    })
+                    .count();
+                let bpw = match scheme.as_str() {
+                    "wgt_trunc" => bits,
+                    _ => m.packed_payload_bits as f64 / m.quantized_weights.max(1) as f64,
+                };
+                records.push(EvalRecord {
+                    net: net.name.clone(),
+                    scheme: scheme.clone(),
+                    bits,
+                    mse: mse(logits.data(), flogits.data()),
+                    top1_agree: agree as f64 / cfg.batch as f64,
+                    compression_ratio: 8.0 / bpw,
+                    bits_per_weight: bpw,
+                    weights: prov,
+                    per_layer,
+                });
+            }
+        }
+    }
+    Ok(records)
+}
+
+/// Serialize the sweep into the `BENCH_accuracy.json` trajectory record.
+pub fn bench_json(records: &[EvalRecord], cfg: &EvalConfig) -> Json {
+    let mut root = Json::obj();
+    root.set("bench", "accuracy");
+    root.set("backend", "native");
+    let mut c = Json::obj();
+    c.set("nets", cfg.nets.clone());
+    c.set("schemes", cfg.schemes.clone());
+    c.set("bits", cfg.bits.clone());
+    c.set("group_size", cfg.group_size);
+    c.set("batch", cfg.batch);
+    c.set("seed", cfg.seed);
+    root.set("config", c);
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("net", r.net.as_str());
+            j.set("scheme", r.scheme.as_str());
+            j.set("bits", r.bits);
+            j.set("mse", r.mse);
+            j.set("top1_agree", r.top1_agree);
+            j.set("compression_ratio", r.compression_ratio);
+            j.set("bits_per_weight", r.bits_per_weight);
+            j.set("weights", r.weights.as_str());
+            let pl: Vec<Json> = r
+                .per_layer
+                .iter()
+                .map(|l| {
+                    let mut o = Json::obj();
+                    o.set("layer", l.layer.as_str());
+                    o.set("mse", l.mse);
+                    o
+                })
+                .collect();
+            j.set("per_layer", Json::Arr(pl));
+            j
+        })
+        .collect();
+    root.set("records", Json::Arr(rows));
+    root
+}
+
+/// Write `BENCH_accuracy.json` (pretty, stable key order).
+pub fn write_bench_json(records: &[EvalRecord], cfg: &EvalConfig, path: &Path) -> Result<()> {
+    std::fs::write(path, bench_json(records, cfg).pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Serialize one layer of a net under SWIS and report the container
+/// payload — the compression the sweep's ratio column measures, exposed
+/// for spot checks and the CLI report.
+pub fn packed_container_bits(
+    w: &[f64],
+    shape: &[usize; 2],
+    bits: f64,
+    group_size: usize,
+    consecutive: bool,
+) -> Result<u64> {
+    let p = crate::schedule::quantize_or_schedule(
+        w,
+        shape,
+        bits,
+        group_size,
+        consecutive,
+        crate::quant::Alpha::ONE,
+    )?;
+    Ok(serialize::payload_bits(&p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> EvalConfig {
+        EvalConfig {
+            nets: vec!["tinycnn".into()],
+            schemes: vec!["swis".into(), "wgt_trunc".into()],
+            bits: vec![3.0],
+            batch: 2,
+            threads: 2,
+            ..EvalConfig::default()
+        }
+    }
+
+    #[test]
+    fn tinycnn_sweep_produces_trend_and_schema() {
+        let cfg = tiny_cfg();
+        let recs = run_eval(&cfg).unwrap();
+        // fp32 row + swis@3 + wgt_trunc@3
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].scheme, "fp32");
+        let swis = recs.iter().find(|r| r.scheme == "swis").unwrap();
+        let trunc = recs.iter().find(|r| r.scheme == "wgt_trunc").unwrap();
+        // the paper's core claim, here at the logits level: SWIS beats
+        // truncation at equal effective bits
+        assert!(
+            swis.mse < trunc.mse,
+            "SWIS logits MSE {} not below truncation {}",
+            swis.mse,
+            trunc.mse
+        );
+        assert!(swis.mse > 0.0);
+        assert_eq!(swis.weights, WeightProvenance::Surrogate);
+        // measured SWIS storage at n=3, G=4: 1 sign + 3 masks + 9/4 shift
+        // bits per weight ≈ 6.3 — more than truncation's 3, but bought
+        // with far lower error (the trade the paper quantifies)
+        assert!(swis.bits_per_weight > 3.0 && swis.bits_per_weight < 8.0);
+        assert!((trunc.compression_ratio - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(swis.per_layer.len(), 9); // 6 convs + gap + 2 fc
+        // per-layer error is cumulative: the logits-row MSE equals the
+        // last trace entry's
+        let last = swis.per_layer.last().unwrap();
+        assert!((last.mse - swis.mse).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_json_is_wellformed() {
+        let cfg = tiny_cfg();
+        let recs = run_eval(&cfg).unwrap();
+        let j = bench_json(&recs, &cfg);
+        let parsed = crate::util::json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("accuracy"));
+        let rows = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), recs.len());
+        for key in ["net", "scheme", "bits", "mse", "top1_agree", "compression_ratio", "weights"] {
+            assert!(rows[0].get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn fractional_trunc_cells_are_skipped() {
+        assert!(transform_for("wgt_trunc", 2.5, 4).unwrap().is_none());
+        assert!(transform_for("swis", 2.5, 4).unwrap().is_some());
+        assert!(transform_for("int4", 4.0, 4).is_err());
+    }
+
+    #[test]
+    fn probe_is_deterministic_per_net() {
+        let a = probe_images("tinycnn", [32, 32, 3], 2, 7).unwrap();
+        let b = probe_images("tinycnn", [32, 32, 3], 2, 7).unwrap();
+        assert_eq!(a.data(), b.data());
+        let c = probe_images("vgg16_cifar100", [32, 32, 3], 2, 7).unwrap();
+        assert_ne!(a.data(), c.data());
+    }
+}

@@ -1,0 +1,521 @@
+//! The op-graph IR the native executor runs: a small, validated graph of
+//! conv / depthwise-conv / FC / pool / residual-add nodes lowered from
+//! any [`crate::nets::Network`] shape table. This is what generalizes
+//! [`super::model::NativeModel`] beyond the hardcoded TinyCNN forward —
+//! MobileNet-v2's inverted-residual bottlenecks, ResNet-18's basic
+//! blocks with downsample projections, and the sequential VGG/TinyCNN
+//! stacks all lower to the same six ops.
+//!
+//! Lowering is structural: the layer tables carry geometry only, so
+//! topology is recovered from the zoo's documented naming conventions
+//! plus shape continuity —
+//!
+//! * `layer{s}.{b}.conv1/conv2` (+ optional `.downsample`) is a ResNet
+//!   basic block: `relu(conv2(relu(conv1(x))) + skip(x))` with `skip`
+//!   the 1x1/2 projection when present, identity otherwise. The stem
+//!   conv is followed by the standard 3x3/2 max-pool.
+//! * `block{b}.expand/dw/project` is a MobileNet-v2 inverted residual:
+//!   expand (ReLU) -> depthwise (ReLU) -> project (LINEAR — the paper's
+//!   linear bottleneck), with an identity residual add (no activation)
+//!   whenever the block preserves shape (stride 1, `cin == cout`).
+//! * Anything else lowers sequentially; a drop in the next layer's
+//!   `in_hw` becomes a max-pool of that ratio (VGG's stage pools). An
+//!   FC head (`in_hw == 1, k == 1`) on a still-spatial map is preceded
+//!   by the net's final stage max-pool when stage pools were inferred
+//!   (VGG's implicit pool5), by a global average pool otherwise
+//!   (TinyCNN — identical to the pre-graph executor).
+//!
+//! Every conv node's geometry is XLA-SAME ([`ConvGeom::for_layer`])
+//! cross-checked against the table's own `out_hw()`, and every edge is
+//! shape-checked at lowering time — a malformed descriptor fails here,
+//! not mid-forward.
+
+use anyhow::{bail, Context, Result};
+
+use super::im2col::ConvGeom;
+use crate::nets::{ConvKind, ConvLayer, Network};
+
+/// Where a node reads its input from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    /// The graph input (the NHWC image batch).
+    Input,
+    /// The output of an earlier node.
+    Node(usize),
+}
+
+/// Shape of a value flowing through the graph: a square NHWC map.
+/// `hw == 1` doubles as the flat `(batch, c)` vectors of the FC head —
+/// the row-major layouts coincide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ValShape {
+    pub hw: usize,
+    pub c: usize,
+}
+
+/// One executable operation. Weighted ops carry the index of their layer
+/// in the source [`Network::layers`] table; the model binds weights to
+/// them by the layer's name.
+#[derive(Clone, Debug)]
+pub enum GraphOp {
+    /// Standard convolution: im2col + (packed | dense) GEMM.
+    Conv { layer: usize, geom: ConvGeom, relu: bool },
+    /// Depthwise convolution: per-channel packed bit-serial dot.
+    Depthwise { layer: usize, geom: ConvGeom, relu: bool },
+    /// Fully-connected head over a flat `(batch, c)` vector.
+    Fc { layer: usize, relu: bool },
+    MaxPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    /// Elementwise residual add of this node's `src` and `rhs`.
+    Add { rhs: Src, relu: bool },
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphNode {
+    pub op: GraphOp,
+    pub src: Src,
+    /// Output shape (computed and validated at lowering time).
+    pub shape: ValShape,
+}
+
+/// A lowered, shape-checked executable graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Source network name (for labels/diagnostics).
+    pub net: String,
+    pub nodes: Vec<GraphNode>,
+    /// Expected input map shape.
+    pub input: ValShape,
+}
+
+impl Graph {
+    /// Shape of the graph output (the last node's output).
+    pub fn output(&self) -> ValShape {
+        self.nodes.last().map_or(self.input, |n| n.shape)
+    }
+
+    /// Human label for node `i`: the layer name for weighted ops, a
+    /// synthesized `op@i` tag otherwise (used by eval traces).
+    pub fn label(&self, net: &Network, i: usize) -> String {
+        match &self.nodes[i].op {
+            GraphOp::Conv { layer, .. }
+            | GraphOp::Depthwise { layer, .. }
+            | GraphOp::Fc { layer, .. } => net.layers[*layer].name.clone(),
+            GraphOp::MaxPool { .. } => format!("maxpool@{i}"),
+            GraphOp::GlobalAvgPool => format!("gap@{i}"),
+            GraphOp::Add { .. } => format!("add@{i}"),
+        }
+    }
+}
+
+/// Incremental graph builder tracking the "current" value + shape.
+struct Builder<'n> {
+    net: &'n Network,
+    nodes: Vec<GraphNode>,
+    input: ValShape,
+    cur: Src,
+    shape: ValShape,
+    /// Inter-stage max-pools inferred so far (`pool_to`): a net that
+    /// pools between stages (VGG) also ends its trunk with a stage pool
+    /// rather than GAP.
+    stage_pools: usize,
+}
+
+impl<'n> Builder<'n> {
+    fn new(net: &'n Network) -> Result<Builder<'n>> {
+        let first = net
+            .layers
+            .first()
+            .with_context(|| format!("network '{}' has no layers", net.name))?;
+        let input = ValShape { hw: first.in_hw, c: first.in_c };
+        Ok(Builder { net, nodes: Vec::new(), input, cur: Src::Input, shape: input, stage_pools: 0 })
+    }
+
+    /// Push a node reading the current value; it becomes current.
+    fn push(&mut self, op: GraphOp, shape: ValShape) -> Src {
+        self.nodes.push(GraphNode { op, src: self.cur, shape });
+        self.cur = Src::Node(self.nodes.len() - 1);
+        self.shape = shape;
+        self.cur
+    }
+
+    /// Lower conv layer `li` (standard or depthwise) with `relu`.
+    fn conv(&mut self, li: usize, relu: bool) -> Result<()> {
+        let l = &self.net.layers[li];
+        if (self.shape.hw, self.shape.c) != (l.in_hw, l.in_c) {
+            bail!(
+                "layer '{}' expects a {}x{}x{} map but the graph carries {}x{}x{}",
+                l.name,
+                l.in_hw,
+                l.in_hw,
+                l.in_c,
+                self.shape.hw,
+                self.shape.hw,
+                self.shape.c
+            );
+        }
+        let geom = ConvGeom::for_layer(l)?;
+        let out = ValShape { hw: geom.out_hw, c: l.out_c };
+        let op = match l.kind {
+            ConvKind::Standard => GraphOp::Conv { layer: li, geom, relu },
+            ConvKind::Depthwise => GraphOp::Depthwise { layer: li, geom, relu },
+        };
+        self.push(op, out);
+        Ok(())
+    }
+
+    /// Lower FC layer `li`, inserting a global average pool first when the
+    /// map is still spatial (the zoo's conv trunks all end in GAP).
+    fn fc(&mut self, li: usize, relu: bool) -> Result<()> {
+        let l = &self.net.layers[li];
+        if self.shape.hw > 1 {
+            self.global_pool();
+        }
+        if self.shape.c != l.in_c {
+            bail!(
+                "FC '{}' expects {} inputs but the pooled map has {} channels",
+                l.name,
+                l.in_c,
+                self.shape.c
+            );
+        }
+        self.push(GraphOp::Fc { layer: li, relu }, ValShape { hw: 1, c: l.out_c });
+        Ok(())
+    }
+
+    fn max_pool(&mut self, k: usize, stride: usize) -> Result<()> {
+        if self.shape.hw < 2 {
+            bail!("max-pool on a {}x{} map in '{}'", self.shape.hw, self.shape.hw, self.net.name);
+        }
+        let g = ConvGeom::same(self.shape.hw, self.shape.c, k, stride)?;
+        self.push(
+            GraphOp::MaxPool { k, stride },
+            ValShape { hw: g.out_hw, c: self.shape.c },
+        );
+        Ok(())
+    }
+
+    fn global_pool(&mut self) {
+        self.push(GraphOp::GlobalAvgPool, ValShape { hw: 1, c: self.shape.c });
+    }
+
+    /// Residual add of the current value and `rhs` — the shapes must
+    /// match exactly (this is the lowering-time residual shape check).
+    fn add(&mut self, rhs: Src, rhs_shape: ValShape, relu: bool) -> Result<()> {
+        if rhs_shape != self.shape {
+            bail!(
+                "residual add in '{}' joins {}x{}x{} with {}x{}x{}",
+                self.net.name,
+                self.shape.hw,
+                self.shape.hw,
+                self.shape.c,
+                rhs_shape.hw,
+                rhs_shape.hw,
+                rhs_shape.c
+            );
+        }
+        self.push(GraphOp::Add { rhs, relu }, self.shape);
+        Ok(())
+    }
+
+    /// If the next conv layer's `in_hw` is below the current map, insert
+    /// the implied inter-stage max-pool (VGG convention: k == stride ==
+    /// the reduction ratio).
+    fn pool_to(&mut self, want_hw: usize) -> Result<()> {
+        if want_hw == self.shape.hw {
+            return Ok(());
+        }
+        if want_hw == 0 || self.shape.hw % want_hw != 0 || want_hw > self.shape.hw {
+            bail!(
+                "cannot pool a {0}x{0} map down to {1}x{1} in '{2}'",
+                self.shape.hw,
+                want_hw,
+                self.net.name
+            );
+        }
+        let ratio = self.shape.hw / want_hw;
+        self.max_pool(ratio, ratio)?;
+        self.stage_pools += 1;
+        if self.shape.hw != want_hw {
+            bail!("stage pool produced {}x{}, wanted {want_hw}", self.shape.hw, self.shape.hw);
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Graph {
+        Graph { net: self.net.name.clone(), nodes: self.nodes, input: self.input }
+    }
+}
+
+/// True for the zoo's FC-head rows ([`ConvLayer::fc`]).
+fn is_fc(l: &ConvLayer) -> bool {
+    l.k == 1 && l.in_hw == 1 && l.stride == 1 && l.kind == ConvKind::Standard
+}
+
+/// Lower a network descriptor into an executable graph. Handles the
+/// whole zoo: ResNet-18 (basic blocks + downsample skips), MobileNet-v2
+/// (inverted residual bottlenecks, linear projections), and sequential
+/// stacks (TinyCNN, VGG-16 with inferred stage pools). FC heads (from
+/// [`Network::with_fc`]) lower behind a global average pool; every conv
+/// geometry and residual edge is shape-checked here.
+pub fn lower(net: &Network) -> Result<Graph> {
+    let resnet_like = net
+        .layers
+        .iter()
+        .any(|l| l.name.starts_with("layer") && l.name.contains(".conv"));
+    let bottleneck = net.layers.iter().any(|l| l.kind == ConvKind::Depthwise);
+    if resnet_like {
+        lower_resnet(net)
+    } else if bottleneck {
+        lower_bottleneck(net)
+    } else {
+        lower_sequential(net)
+    }
+    .with_context(|| format!("lowering '{}'", net.name))
+}
+
+/// Sequential stacks: convs in table order, inter-stage max-pools
+/// inferred from `in_hw` drops, then the head. A net that pools between
+/// stages (VGG) also ends its trunk with one more stage pool — the
+/// table's implicit pool5, whose output IS the flattened FC input — so
+/// the collapse to the FC vector is a max-pool there and GAP elsewhere
+/// (TinyCNN, matching the pre-graph executor bit-for-bit).
+fn lower_sequential(net: &Network) -> Result<Graph> {
+    let mut b = Builder::new(net)?;
+    let n = net.layers.len();
+    for (li, l) in net.layers.iter().enumerate() {
+        if is_fc(l) {
+            if b.stage_pools > 0 && b.shape.hw > 1 && b.shape.c == l.in_c {
+                b.max_pool(b.shape.hw, b.shape.hw)?; // final stage pool -> 1x1
+            }
+            b.fc(li, li + 1 < n)?; // last FC emits raw logits
+        } else {
+            b.pool_to(l.in_hw)?;
+            b.conv(li, true)?;
+        }
+    }
+    Ok(b.finish())
+}
+
+/// ResNet basic blocks. Layer roles come from the torchvision naming the
+/// table uses: `conv1` stem, `layer{s}.{b}.conv1/conv2[/downsample]`
+/// blocks, then the FC head. The stem is followed by the standard 3x3/2
+/// max-pool (the one pool the table leaves implicit).
+fn lower_resnet(net: &Network) -> Result<Graph> {
+    let mut b = Builder::new(net)?;
+    let n = net.layers.len();
+    let find = |name: &str| net.layers.iter().position(|l| l.name == name);
+    let mut done = vec![false; n];
+
+    for (li, l) in net.layers.iter().enumerate() {
+        if done[li] {
+            continue;
+        }
+        if is_fc(l) {
+            b.fc(li, li + 1 < n)?;
+            done[li] = true;
+        } else if let Some(prefix) = l.name.strip_suffix(".conv1") {
+            let c2 = find(&format!("{prefix}.conv2"))
+                .with_context(|| format!("block '{prefix}' has conv1 but no conv2"))?;
+            let ds = find(&format!("{prefix}.downsample"));
+            let (saved, saved_shape) = (b.cur, b.shape);
+            b.conv(li, true)?;
+            b.conv(c2, false)?; // ReLU applies after the add
+            let (main, main_shape) = (b.cur, b.shape);
+            let (skip, skip_shape) = match ds {
+                Some(d) => {
+                    b.cur = saved;
+                    b.shape = saved_shape;
+                    b.conv(d, false)?;
+                    (b.cur, b.shape)
+                }
+                None => (saved, saved_shape),
+            };
+            b.cur = main;
+            b.shape = main_shape;
+            b.add(skip, skip_shape, true)?;
+            done[li] = true;
+            done[c2] = true;
+            if let Some(d) = ds {
+                done[d] = true;
+            }
+        } else if l.name.contains(".conv2") || l.name.contains(".downsample") {
+            bail!("block layer '{}' appears before its conv1", l.name);
+        } else {
+            // the stem; the implicit 3x3/2 max-pool follows when the next
+            // block expects a halved map
+            b.conv(li, true)?;
+            done[li] = true;
+            if let Some(next) = net.layers.iter().find(|x| !is_fc(x) && x.name != l.name) {
+                if next.in_hw * 2 == b.shape.hw {
+                    b.max_pool(3, 2)?;
+                }
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+/// MobileNet-v2-style stacks: consecutive layers sharing a `block{b}.`
+/// prefix form an inverted-residual bottleneck (expand? -> depthwise ->
+/// project); the projection is linear, and an identity residual joins
+/// input to output whenever the block preserves shape. Standalone convs
+/// (stem/head) are plain ReLU convs; FC heads lower behind GAP.
+fn lower_bottleneck(net: &Network) -> Result<Graph> {
+    let mut b = Builder::new(net)?;
+    let n = net.layers.len();
+    let prefix_of = |l: &ConvLayer| l.name.split_once('.').map(|(p, _)| p.to_string());
+    let mut li = 0usize;
+    while li < n {
+        let l = &net.layers[li];
+        if is_fc(l) {
+            b.fc(li, li + 1 < n)?;
+            li += 1;
+        } else if let Some(prefix) = prefix_of(l) {
+            // collect the whole block: consecutive layers with this prefix
+            let mut end = li;
+            while end < n && prefix_of(&net.layers[end]).as_deref() == Some(prefix.as_str()) {
+                end += 1;
+            }
+            let (saved, saved_shape) = (b.cur, b.shape);
+            let mut saw_dw = false;
+            for bi in li..end {
+                let bl = &net.layers[bi];
+                if bl.kind == ConvKind::Depthwise {
+                    saw_dw = true;
+                    b.conv(bi, true)?;
+                } else {
+                    // convs after the depthwise are linear projections;
+                    // the expand conv before it is ReLU
+                    b.conv(bi, !saw_dw)?;
+                }
+            }
+            if !saw_dw {
+                bail!("bottleneck '{prefix}' has no depthwise layer");
+            }
+            if b.shape == saved_shape {
+                b.add(saved, saved_shape, false)?; // linear residual
+            }
+            li = end;
+        } else {
+            b.conv(li, true)?;
+            li += 1;
+        }
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{all_networks, by_name, mobilenet_v2, resnet18, tinycnn, vgg16_cifar100};
+
+    fn count<F: Fn(&GraphOp) -> bool>(g: &Graph, f: F) -> usize {
+        g.nodes.iter().filter(|n| f(&n.op)).count()
+    }
+
+    #[test]
+    fn zoo_lowering_node_census() {
+        // residual-add and pool counts pin the recovered topologies
+        let r = lower(&resnet18().with_fc()).unwrap();
+        assert_eq!(count(&r, |o| matches!(o, GraphOp::Add { .. })), 8, "resnet blocks");
+        assert_eq!(count(&r, |o| matches!(o, GraphOp::MaxPool { .. })), 1, "resnet stem pool");
+        assert_eq!(count(&r, |o| matches!(o, GraphOp::Fc { .. })), 1);
+        assert_eq!(r.output(), ValShape { hw: 1, c: 1000 });
+
+        let m = lower(&mobilenet_v2().with_fc()).unwrap();
+        // 17 bottlenecks, residual when a repeat preserves shape:
+        // 0+1+2+3+2+2+0 = 10
+        assert_eq!(count(&m, |o| matches!(o, GraphOp::Add { .. })), 10, "mbv2 residuals");
+        assert_eq!(count(&m, |o| matches!(o, GraphOp::Depthwise { .. })), 17);
+        assert_eq!(m.output(), ValShape { hw: 1, c: 1000 });
+
+        // 4 inter-stage pools + the implicit pool5 collapsing 2x2 -> fc
+        // input (real VGG flattens after pool5; no GAP anywhere)
+        let v = lower(&vgg16_cifar100().with_fc()).unwrap();
+        assert_eq!(count(&v, |o| matches!(o, GraphOp::MaxPool { .. })), 5, "vgg stage pools");
+        assert_eq!(count(&v, |o| matches!(o, GraphOp::GlobalAvgPool)), 0);
+        assert_eq!(v.output(), ValShape { hw: 1, c: 100 });
+
+        let t = lower(&tinycnn().with_fc()).unwrap();
+        assert_eq!(count(&t, |o| matches!(o, GraphOp::MaxPool { .. })), 0);
+        assert_eq!(count(&t, |o| matches!(o, GraphOp::Conv { .. })), 6);
+        assert_eq!(t.output(), ValShape { hw: 1, c: 10 });
+    }
+
+    #[test]
+    fn conv_geometry_matches_shape_tables() {
+        // every lowered conv/depthwise node's XLA-SAME geometry must agree
+        // with the table's own out_hw() — incl. all stride-2 layers
+        for net in all_networks() {
+            let net = net.with_fc();
+            let g = lower(&net).unwrap();
+            for node in &g.nodes {
+                if let GraphOp::Conv { layer, geom, .. } | GraphOp::Depthwise { layer, geom, .. } =
+                    &node.op
+                {
+                    let l = &net.layers[*layer];
+                    assert_eq!(geom.out_hw, l.out_hw(), "{}: {}", net.name, l.name);
+                    assert_eq!(node.shape, ValShape { hw: l.out_hw(), c: l.out_c });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_adds_are_shape_checked() {
+        // a resnet-named table whose downsample emits the wrong channel
+        // count must fail at lowering, not mid-forward
+        let mut net = Network {
+            name: "resnet_bad".into(),
+            layers: vec![
+                ConvLayer::new("conv1", 8, 3, 3, 1, 1, 4),
+                ConvLayer::new("layer1.0.conv1", 8, 4, 3, 2, 1, 8),
+                ConvLayer::new("layer1.0.conv2", 4, 8, 3, 1, 1, 8),
+                ConvLayer::new("layer1.0.downsample", 8, 4, 1, 2, 0, 6), // 6 != 8
+            ],
+        };
+        let e = lower(&net).unwrap_err();
+        assert!(format!("{e:#}").contains("residual add"), "{e:#}");
+        net.layers[3].out_c = 8;
+        lower(&net).unwrap();
+    }
+
+    #[test]
+    fn shape_continuity_is_checked() {
+        let net = Network {
+            name: "broken".into(),
+            layers: vec![
+                ConvLayer::new("a", 8, 3, 3, 1, 1, 4),
+                ConvLayer::new("b", 8, 5, 3, 1, 1, 4), // in_c 5 != 4
+            ],
+        };
+        assert!(lower(&net).is_err());
+    }
+
+    #[test]
+    fn fc_head_requires_matching_width() {
+        let net = Network {
+            name: "badfc".into(),
+            layers: vec![
+                ConvLayer::new("a", 8, 3, 3, 1, 1, 4),
+                ConvLayer::fc("fc", 5, 10), // 5 != 4 channels after GAP
+            ],
+        };
+        assert!(lower(&net).is_err());
+        assert!(by_name("tinycnn").is_some()); // zoo untouched
+    }
+
+    #[test]
+    fn labels_name_weighted_nodes() {
+        let net = tinycnn().with_fc();
+        let g = lower(&net).unwrap();
+        assert_eq!(g.label(&net, 0), "conv1");
+        let gap = g
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, GraphOp::GlobalAvgPool))
+            .unwrap();
+        assert!(g.label(&net, gap).starts_with("gap@"));
+    }
+}

@@ -34,6 +34,34 @@ impl ConvGeom {
         Ok(ConvGeom { in_hw, in_c, k, stride, out_hw, pad_lo: pad_total / 2 })
     }
 
+    /// Geometry for a zoo layer, cross-checked against the shape table:
+    /// XLA-SAME must reproduce the table's own `out_hw()` (it does for
+    /// every layer in the zoo) or the descriptor is rejected.
+    ///
+    /// The check covers OUTPUT GEOMETRY only — padding *alignment* is
+    /// always XLA-SAME, the convention of this repo's own jax/AOT weight
+    /// pipeline (`<net>_weights.npz` artifacts are trained under it).
+    /// On stride-2 layers XLA-SAME pads asymmetrically (low 0/2, high
+    /// 1/3) where the tables' torch-style `pad` field is symmetric;
+    /// weights trained under torch padding would see a one-pixel-shifted
+    /// window here, so do not feed torchvision checkpoints through the
+    /// npz path without re-exporting them through the repo pipeline.
+    pub fn for_layer(l: &crate::nets::ConvLayer) -> Result<ConvGeom> {
+        let g = ConvGeom::same(l.in_hw, l.in_c, l.k, l.stride)?;
+        if g.out_hw != l.out_hw() {
+            bail!(
+                "layer '{}': XLA-SAME yields {}x{} but the table (pad {}) says {}x{}",
+                l.name,
+                g.out_hw,
+                g.out_hw,
+                l.pad,
+                l.out_hw(),
+                l.out_hw()
+            );
+        }
+        Ok(g)
+    }
+
     pub fn fan_in(&self) -> usize {
         self.k * self.k * self.in_c
     }

@@ -32,6 +32,7 @@
 use anyhow::{bail, Result};
 
 use super::core;
+use super::im2col::ConvGeom;
 use crate::quant::int8::round_half_even;
 use crate::quant::PackedLayer;
 
@@ -67,61 +68,73 @@ pub struct PreparedGemm {
     planes: Vec<Plane>,
 }
 
+/// Precompute the per-(group, active shift plane) sign-split lane
+/// bitmasks for a packed layer — the ONE prepare step shared by the GEMM
+/// ([`PreparedGemm`]) and depthwise ([`PreparedDepthwise`]) kernels.
+/// Empty planes are dropped (bit sparsity == less work) and pad-lane
+/// bits are cleared so the plane walk stays in bounds and bit-identical
+/// to the gather-based oracles. Fails on group sizes beyond the bitmask
+/// width.
+fn prepare_planes(p: &PackedLayer) -> Result<(Vec<u32>, Vec<Plane>)> {
+    if p.group_size == 0 || p.group_size > MAX_GROUP_SIZE {
+        bail!(
+            "native kernel supports group sizes 1..={MAX_GROUP_SIZE}, got {}",
+            p.group_size
+        );
+    }
+    p.validate()?;
+    let n_groups = p.n_groups();
+    let gs = p.group_size;
+    let gpf = p.groups_per_filter();
+    let fan_in = p.fan_in();
+    let mut plane_ofs = Vec::with_capacity(n_groups + 1);
+    let mut planes = Vec::new();
+    plane_ofs.push(0u32);
+    for g in 0..n_groups {
+        // SWIS-C layers must keep the consecutive-window property the
+        // 3-bit offset storage accounting relies on (Sec. 3.3)
+        debug_assert!(
+            !p.consecutive || p.active_shifts(g) == 0 || core::swis_c_offset(p, g).is_some(),
+            "SWIS-C group {g} has non-consecutive shifts"
+        );
+        // lanes of this group that map to real fan-in positions; the
+        // quantizer zeroes pad-lane masks, but a hand-built or
+        // deserialized layer may not — pad lanes feed activation 0 in
+        // the gather-based paths, so DROPPING their bits here keeps
+        // the kernel bit-identical to those oracles (and in bounds)
+        let lane0 = (g % gpf) * gs;
+        let valid = fan_in.saturating_sub(lane0).min(gs);
+        for j in 0..p.active_shifts(g) {
+            let mut pos = 0u16;
+            let mut neg = 0u16;
+            for i in 0..valid {
+                if p.masks[(g * gs + i) * p.n_shifts + j] != 0 {
+                    if p.signs[g * gs + i] < 0 {
+                        neg |= 1 << i;
+                    } else {
+                        pos |= 1 << i;
+                    }
+                }
+            }
+            // empty planes contribute nothing: bit sparsity == less work
+            if pos | neg != 0 {
+                planes.push(Plane { shift: p.shifts[g * p.n_shifts + j], pos, neg });
+            }
+        }
+        plane_ofs.push(planes.len() as u32);
+    }
+    Ok((plane_ofs, planes))
+}
+
 impl PreparedGemm {
     /// Prepare a packed layer. Fails on group sizes beyond the bitmask
     /// width; callers fall back to [`naive_gemm`] there.
     pub fn from_packed(p: &PackedLayer) -> Result<PreparedGemm> {
-        if p.group_size == 0 || p.group_size > MAX_GROUP_SIZE {
-            bail!(
-                "native kernel supports group sizes 1..={MAX_GROUP_SIZE}, got {}",
-                p.group_size
-            );
-        }
-        p.validate()?;
-        let n_groups = p.n_groups();
-        let gs = p.group_size;
-        let gpf = p.groups_per_filter();
-        let fan_in = p.fan_in();
-        let mut plane_ofs = Vec::with_capacity(n_groups + 1);
-        let mut planes = Vec::new();
-        plane_ofs.push(0u32);
-        for g in 0..n_groups {
-            // SWIS-C layers must keep the consecutive-window property the
-            // 3-bit offset storage accounting relies on (Sec. 3.3)
-            debug_assert!(
-                !p.consecutive || p.active_shifts(g) == 0 || core::swis_c_offset(p, g).is_some(),
-                "SWIS-C group {g} has non-consecutive shifts"
-            );
-            // lanes of this group that map to real fan-in positions; the
-            // quantizer zeroes pad-lane masks, but a hand-built or
-            // deserialized layer may not — pad lanes feed activation 0 in
-            // the gather-based paths, so DROPPING their bits here keeps
-            // the kernel bit-identical to those oracles (and in bounds)
-            let lane0 = (g % gpf) * gs;
-            let valid = fan_in.saturating_sub(lane0).min(gs);
-            for j in 0..p.active_shifts(g) {
-                let mut pos = 0u16;
-                let mut neg = 0u16;
-                for i in 0..valid {
-                    if p.masks[(g * gs + i) * p.n_shifts + j] != 0 {
-                        if p.signs[g * gs + i] < 0 {
-                            neg |= 1 << i;
-                        } else {
-                            pos |= 1 << i;
-                        }
-                    }
-                }
-                // empty planes contribute nothing: bit sparsity == less work
-                if pos | neg != 0 {
-                    planes.push(Plane { shift: p.shifts[g * p.n_shifts + j], pos, neg });
-                }
-            }
-            plane_ofs.push(planes.len() as u32);
-        }
+        let (plane_ofs, planes) = prepare_planes(p)?;
         Ok(PreparedGemm {
             n_filters: p.n_filters(),
             fan_in: p.fan_in(),
-            group_size: gs,
+            group_size: p.group_size,
             groups_per_filter: p.groups_per_filter(),
             scale: p.scale,
             plane_ofs,
@@ -333,6 +346,261 @@ pub fn dense_gemm(
     Ok(out)
 }
 
+/// Symmetric int8 quantization of one tap patch into `codes` (same
+/// half-to-even rule as [`quantize_acts`], no allocation); returns the
+/// scale. The depthwise kernel quantizes each (output pixel, channel)
+/// patch independently, so a pixel's result depends on nothing else in
+/// the batch — the same composition-invariance contract as the per-row
+/// GEMM path, one granularity finer.
+pub fn quantize_taps(taps: &[f32], codes: &mut [i32]) -> f64 {
+    let amax = taps.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    for (c, &v) in codes.iter_mut().zip(taps) {
+        *c = round_half_even(v as f64 / scale).clamp(-127.0, 127.0) as i32;
+    }
+    scale
+}
+
+/// Gather one channel's `k x k` tap patch for output pixel `(oh, ow)`
+/// from an NHWC image (out-of-map taps read zero — XLA-SAME padding).
+#[inline]
+fn gather_taps(
+    img: &[f32],
+    g: &ConvGeom,
+    ch: usize,
+    c: usize,
+    oh: usize,
+    ow: usize,
+    taps: &mut [f32],
+) {
+    let hw = g.in_hw as isize;
+    for kh in 0..g.k {
+        let ih = (oh * g.stride + kh) as isize - g.pad_lo as isize;
+        for kw in 0..g.k {
+            let iw = (ow * g.stride + kw) as isize - g.pad_lo as isize;
+            taps[kh * g.k + kw] = if ih < 0 || ih >= hw || iw < 0 || iw >= hw {
+                0.0
+            } else {
+                img[(ih as usize * g.in_hw + iw as usize) * c + ch]
+            };
+        }
+    }
+}
+
+/// A packed depthwise layer prepared for native execution: one filter
+/// per channel, fan-in `k*k`, executed as a per-channel packed
+/// bit-serial dot over the SAME prepared shift planes the GEMM kernel
+/// uses ([`prepare_planes`]) — so bit sparsity drops work here exactly
+/// as it does in the dense-conv path. This is the kernel MobileNet-v2's
+/// 17 depthwise layers run on (the layers the SWIS systolic array
+/// underutilizes, paper Sec. 3.2; in software the per-channel dot keeps
+/// every plane walk useful).
+#[derive(Clone, Debug)]
+pub struct PreparedDepthwise {
+    channels: usize,
+    /// Per-channel fan-in (`k * k`).
+    kk: usize,
+    group_size: usize,
+    groups_per_filter: usize,
+    /// Dequantization scale of the packed weights (max|w| / 127).
+    pub scale: f64,
+    plane_ofs: Vec<u32>,
+    planes: Vec<Plane>,
+}
+
+impl PreparedDepthwise {
+    /// Prepare a `(channels, k*k)` filters-first packed layer.
+    pub fn from_packed(p: &PackedLayer) -> Result<PreparedDepthwise> {
+        let (plane_ofs, planes) = prepare_planes(p)?;
+        Ok(PreparedDepthwise {
+            channels: p.n_filters(),
+            kk: p.fan_in(),
+            group_size: p.group_size,
+            groups_per_filter: p.groups_per_filter(),
+            scale: p.scale,
+            plane_ofs,
+            planes,
+        })
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Weight-MACs one full pass performs (for Mw/s reporting).
+    pub fn macs(&self, batch: usize, g: &ConvGeom) -> u64 {
+        (batch * g.out_hw * g.out_hw) as u64 * self.channels as u64 * self.kk as u64
+    }
+
+    fn check_geom(&self, g: &ConvGeom) -> Result<()> {
+        if g.k * g.k != self.kk || g.in_c != self.channels {
+            bail!(
+                "depthwise geometry {}x{} over {} channels does not match packed ({} taps, {} channels)",
+                g.k,
+                g.k,
+                g.in_c,
+                self.kk,
+                self.channels
+            );
+        }
+        Ok(())
+    }
+
+    /// Depthwise conv over an NHWC batch `(batch, in_hw, in_hw, c)` to
+    /// `(batch, out_hw, out_hw, c)`. Each (pixel, channel) patch is int8
+    /// quantized on its own scale, reduced through the prepared shift
+    /// planes in exact integer arithmetic, and rescaled — bit-identical
+    /// to [`naive_depthwise`] for any thread count.
+    pub fn forward(
+        &self,
+        x: &[f32],
+        batch: usize,
+        g: &ConvGeom,
+        n_threads: usize,
+    ) -> Result<Vec<f32>> {
+        self.check_geom(g)?;
+        let c = self.channels;
+        if x.len() != batch * g.in_hw * g.in_hw * c {
+            bail!("input {} != {batch} x {} x {} x {c}", x.len(), g.in_hw, g.in_hw);
+        }
+        let o = g.out_hw;
+        let rows = batch * o * o;
+        let mut out = vec![0f32; rows * c];
+        par_rows(&mut out, rows, c, n_threads, |start, nrows, slice| {
+            let mut taps = vec![0f32; self.kk];
+            let mut codes = vec![0i32; self.kk];
+            let img_len = g.in_hw * g.in_hw * c;
+            for r in 0..nrows {
+                let pix = start + r;
+                let b = pix / (o * o);
+                let oh = (pix / o) % o;
+                let ow = pix % o;
+                let img = &x[b * img_len..(b + 1) * img_len];
+                for ch in 0..c {
+                    gather_taps(img, g, ch, c, oh, ow, &mut taps);
+                    let s = quantize_taps(&taps, &mut codes);
+                    let acc = self.dot(ch, &codes);
+                    slice[r * c + ch] = (acc as f64 * (self.scale * s)) as f32;
+                }
+            }
+        });
+        Ok(out)
+    }
+
+    /// Exact integer per-channel dot over the prepared planes.
+    fn dot(&self, ch: usize, codes: &[i32]) -> i64 {
+        let gs = self.group_size;
+        let mut acc = 0i64;
+        for gl in 0..self.groups_per_filter {
+            let g = ch * self.groups_per_filter + gl;
+            let a0 = gl * gs;
+            let lo = self.plane_ofs[g] as usize;
+            let hi = self.plane_ofs[g + 1] as usize;
+            for pl in &self.planes[lo..hi] {
+                let mut partial = 0i64;
+                let mut m = pl.pos;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    partial += codes[a0 + lane] as i64;
+                }
+                let mut m = pl.neg;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    partial -= codes[a0 + lane] as i64;
+                }
+                acc += partial << pl.shift;
+            }
+        }
+        acc
+    }
+}
+
+/// The naive per-channel depthwise reference: gathers each channel's
+/// group lanes and evaluates [`core::group_dot`] — an independent oracle
+/// for [`PreparedDepthwise::forward`] (identical quantization, identical
+/// integer semantics, single-threaded).
+pub fn naive_depthwise(p: &PackedLayer, x: &[f32], batch: usize, g: &ConvGeom) -> Result<Vec<f32>> {
+    let c = p.n_filters();
+    let kk = p.fan_in();
+    if g.k * g.k != kk || g.in_c != c {
+        bail!("depthwise geometry does not match packed layer");
+    }
+    if x.len() != batch * g.in_hw * g.in_hw * c {
+        bail!("input {} != {batch} x {} x {} x {c}", x.len(), g.in_hw, g.in_hw);
+    }
+    let o = g.out_hw;
+    let gs = p.group_size;
+    let gpf = p.groups_per_filter();
+    let img_len = g.in_hw * g.in_hw * c;
+    let mut taps = vec![0f32; kk];
+    let mut codes = vec![0i32; kk];
+    let mut lanes = vec![0i32; gs];
+    let mut out = vec![0f32; batch * o * o * c];
+    for pix in 0..batch * o * o {
+        let b = pix / (o * o);
+        let oh = (pix / o) % o;
+        let ow = pix % o;
+        let img = &x[b * img_len..(b + 1) * img_len];
+        for ch in 0..c {
+            gather_taps(img, g, ch, c, oh, ow, &mut taps);
+            let s = quantize_taps(&taps, &mut codes);
+            let mut acc = 0i64;
+            for gl in 0..gpf {
+                core::gather_lanes(&codes, gl, gs, &mut lanes);
+                acc += core::group_dot(p, ch * gpf + gl, &lanes);
+            }
+            out[pix * c + ch] = (acc as f64 * (p.scale * s)) as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Dense fp32 depthwise conv over a filters-first `(c, k*k)` weight
+/// matrix — the native path for the fp32 / truncation variants. Same
+/// pixel partitioning as the packed kernel; f64 accumulation.
+pub fn dense_depthwise(
+    w: &[f32],
+    c: usize,
+    x: &[f32],
+    batch: usize,
+    g: &ConvGeom,
+    n_threads: usize,
+) -> Result<Vec<f32>> {
+    let kk = g.k * g.k;
+    if w.len() != c * kk {
+        bail!("weights {} != {c} x {kk}", w.len());
+    }
+    if g.in_c != c || x.len() != batch * g.in_hw * g.in_hw * c {
+        bail!("input {} != {batch} x {} x {} x {c}", x.len(), g.in_hw, g.in_hw);
+    }
+    let o = g.out_hw;
+    let rows = batch * o * o;
+    let mut out = vec![0f32; rows * c];
+    par_rows(&mut out, rows, c, n_threads, |start, nrows, slice| {
+        let mut taps = vec![0f32; kk];
+        let img_len = g.in_hw * g.in_hw * c;
+        for r in 0..nrows {
+            let pix = start + r;
+            let b = pix / (o * o);
+            let oh = (pix / o) % o;
+            let ow = pix % o;
+            let img = &x[b * img_len..(b + 1) * img_len];
+            for ch in 0..c {
+                gather_taps(img, g, ch, c, oh, ow, &mut taps);
+                let wrow = &w[ch * kk..(ch + 1) * kk];
+                let mut s = 0f64;
+                for i in 0..kk {
+                    s += taps[i] as f64 * wrow[i] as f64;
+                }
+                slice[r * c + ch] = s as f32;
+            }
+        }
+    });
+    Ok(out)
+}
+
 /// Partition a `(p_rows, k)` output buffer into contiguous row ranges and
 /// run `f(start_row, n_rows, out_slice)` on scoped threads — the ONE
 /// row-parallel harness for both the packed and dense kernels. Disjoint
@@ -374,13 +642,21 @@ mod tests {
     use crate::quant::{quantize, Alpha, QuantConfig};
     use crate::util::rng::Rng;
 
-    fn setup(seed: u64, k: usize, fan_in: usize, n: usize, gs: usize, consecutive: bool) -> (PackedLayer, Vec<i32>, usize) {
+    fn setup(
+        seed: u64,
+        k: usize,
+        fan_in: usize,
+        n: usize,
+        gs: usize,
+        consecutive: bool,
+    ) -> (PackedLayer, Vec<i32>, usize) {
         let mut rng = Rng::new(seed);
         let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
         let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive };
         let p = quantize(&w, &[k, fan_in], &cfg).unwrap();
         let rows = 13usize;
-        let acts: Vec<i32> = (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+        let acts: Vec<i32> =
+            (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
         (p, acts, rows)
     }
 
@@ -482,6 +758,93 @@ mod tests {
         let mut big = p.clone();
         big.group_size = 32; // beyond the bitmask width
         assert!(PreparedGemm::from_packed(&big).is_err());
+    }
+
+    fn dw_setup(
+        seed: u64,
+        c: usize,
+        n: usize,
+        gs: usize,
+        cons: bool,
+    ) -> (PackedLayer, Vec<f32>, ConvGeom) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(c * 9, 0.0, 0.4);
+        let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive: cons };
+        let p = quantize(&w, &[c, 9], &cfg).unwrap();
+        let g = ConvGeom::same(6, c, 3, 1).unwrap();
+        let x: Vec<f32> = (0..2 * 6 * 6 * c).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        (p, x, g)
+    }
+
+    #[test]
+    fn depthwise_matches_naive_across_configs() {
+        // G spans ragged (4 over fan-in 9), exact (9), and oversized (16)
+        for (seed, c, n, gs, cons) in
+            [(21, 8, 3, 4, false), (22, 5, 2, 9, false), (23, 6, 4, 16, false), (24, 8, 3, 4, true)]
+        {
+            let (p, x, g) = dw_setup(seed, c, n, gs, cons);
+            let prep = PreparedDepthwise::from_packed(&p).unwrap();
+            let fast = prep.forward(&x, 2, &g, 1).unwrap();
+            let slow = naive_depthwise(&p, &x, 2, &g).unwrap();
+            assert_eq!(fast, slow, "c={c} n={n} gs={gs} cons={cons}");
+            assert_eq!(fast.len(), 2 * 6 * 6 * c);
+        }
+    }
+
+    #[test]
+    fn depthwise_thread_count_invariant() {
+        let (p, x, g) = dw_setup(25, 8, 3, 4, false);
+        let prep = PreparedDepthwise::from_packed(&p).unwrap();
+        let t1 = prep.forward(&x, 2, &g, 1).unwrap();
+        for nt in [2usize, 5, 16] {
+            assert_eq!(prep.forward(&x, 2, &g, nt).unwrap(), t1, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn depthwise_stride2_geometry_and_padding() {
+        // 4x4 map, k=3, s=2, pad_lo 0: same asymmetric padding as im2col
+        let mut rng = Rng::new(26);
+        let c = 4usize;
+        let w = rng.normal_vec(c * 9, 0.0, 0.3);
+        let cfg = QuantConfig { n_shifts: 4, group_size: 4, alpha: Alpha::ONE, consecutive: false };
+        let p = quantize(&w, &[c, 9], &cfg).unwrap();
+        let g = ConvGeom::same(4, c, 3, 2).unwrap();
+        assert_eq!((g.out_hw, g.pad_lo), (2, 0));
+        let x: Vec<f32> = (0..4 * 4 * c).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let prep = PreparedDepthwise::from_packed(&p).unwrap();
+        let fast = prep.forward(&x, 1, &g, 2).unwrap();
+        assert_eq!(fast, naive_depthwise(&p, &x, 1, &g).unwrap());
+        assert_eq!(fast.len(), 2 * 2 * c);
+    }
+
+    #[test]
+    fn depthwise_rejects_mismatched_geometry() {
+        let (p, x, _) = dw_setup(27, 8, 3, 4, false);
+        let prep = PreparedDepthwise::from_packed(&p).unwrap();
+        let bad_c = ConvGeom::same(6, 7, 3, 1).unwrap(); // 7 != 8 channels
+        assert!(prep.forward(&x, 2, &bad_c, 1).is_err());
+        let bad_k = ConvGeom::same(6, 8, 5, 1).unwrap(); // 25 taps != 9
+        assert!(prep.forward(&x, 2, &bad_k, 1).is_err());
+    }
+
+    #[test]
+    fn dense_depthwise_matches_scalar_taps() {
+        // identity-ish check: 1-tap-hot filters pick out the center tap
+        let c = 3usize;
+        let mut w = vec![0f32; c * 9];
+        for ch in 0..c {
+            w[ch * 9 + 4] = 1.0; // center of the 3x3 kernel
+        }
+        let g = ConvGeom::same(4, c, 3, 1).unwrap();
+        let x: Vec<f32> = (0..4 * 4 * c).map(|v| v as f32).collect();
+        let y = dense_depthwise(&w, c, &x, 1, &g, 2).unwrap();
+        // stride 1, pad 1: center tap of pixel (oh, ow) IS the input pixel
+        assert_eq!(y, x);
+        assert_eq!(
+            dense_depthwise(&w, c, &x, 1, &g, 1).unwrap(),
+            dense_depthwise(&w, c, &x, 1, &g, 4).unwrap()
+        );
     }
 
     #[test]

@@ -7,22 +7,32 @@
 //!   bit-accurate, cycle-faithful machines (slow, authoritative for
 //!   hardware semantics);
 //! * **this module** — the same integer semantics at software speed:
-//!   [`kernel::PreparedGemm`] executes [`crate::quant::PackedLayer`]
-//!   directly (cache-blocked, thread-parallel, bit-sparsity-aware) and
-//!   [`model::NativeModel`] composes it into the full TinyCNN forward
-//!   pass the coordinator serves when PJRT artifacts are absent.
+//!   [`kernel::PreparedGemm`] / [`kernel::PreparedDepthwise`] execute
+//!   [`crate::quant::PackedLayer`] directly (cache-blocked,
+//!   thread-parallel, bit-sparsity-aware) and [`model::NativeModel`]
+//!   composes them into full forward passes over the op-graph IR in
+//!   [`graph`] — lowered from any `nets::Network` descriptor, so the
+//!   whole zoo (TinyCNN, MobileNet-v2 with depthwise + inverted
+//!   residuals, ResNet-18 with skips, VGG-16) serves natively when PJRT
+//!   artifacts are absent.
 //!
 //! [`core`] holds the single definition of the packed group-op that all
-//! three tiers share; the equivalence suite (`tests/native_equiv.rs`)
-//! pins the kernel bit-exactly to the functional simulator.
+//! three tiers share; the equivalence suites (`tests/native_equiv.rs`,
+//! `tests/graph_equiv.rs`) pin the kernels bit-exactly to the functional
+//! simulator and the graph executor to the sequential reference.
 
 pub mod core;
+pub mod graph;
 pub mod im2col;
 pub mod kernel;
 pub mod model;
 
 pub use im2col::{im2col, ConvGeom};
-pub use kernel::{dense_gemm, naive_gemm, quantize_acts, quantize_acts_rows, PreparedGemm};
+pub use kernel::{
+    dense_depthwise, dense_gemm, naive_depthwise, naive_gemm, quantize_acts, quantize_acts_rows,
+    quantize_taps, PreparedDepthwise, PreparedGemm,
+};
 pub use model::{
-    filters_first, surrogate_tinycnn_weights, tinycnn_weights, NativeModel, WeightTransform,
+    filters_first, net_weights, surrogate_network_weights, surrogate_tinycnn_weights,
+    tinycnn_weights, NativeModel, WeightProvenance, WeightTransform,
 };

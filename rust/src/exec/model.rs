@@ -1,22 +1,27 @@
-//! The native TinyCNN executor: the same 6-conv + GAP + 2-FC graph
-//! `python/compile/model.py` lowers for PJRT, executed by the native
-//! kernels in this module tree — packed bit-serial GEMM for SWIS
-//! variants, dense fp32 GEMM for the baseline — with bias + ReLU fused
-//! into each layer. This is what lets the coordinator serve with no PJRT
-//! and no build-time artifacts present.
+//! The graph-driven native executor: any zoo descriptor
+//! ([`crate::nets::Network`]) lowers to the op-graph IR in
+//! [`super::graph`] and executes here — packed bit-serial GEMM /
+//! depthwise kernels for SWIS variants, dense fp32 kernels for the
+//! baselines — with bias + ReLU fused into each weighted node. This is
+//! what lets the coordinator serve the whole model zoo (TinyCNN,
+//! MobileNet-v2, ResNet-18, VGG-16) with no PJRT and no build-time
+//! artifacts present.
 //!
 //! Weight layout contract (shared with the AOT path): conv weights HWIO
-//! `(3,3,cin,cout)`, FC `(din,dout)`, biases `<name>_b`; both put the
-//! filter axis LAST, so one transpose yields the filters-first `(K,
-//! fan_in)` matrices the quantizer and kernels consume.
+//! `(k,k,cin,cout)`, depthwise `(k,k,c)`, FC `(din,dout)`, biases
+//! `<name>_b`; all put the filter axis LAST, so one transpose yields the
+//! filters-first `(K, fan_in)` matrices the quantizer and kernels
+//! consume.
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
+use super::graph::{self, Graph, GraphOp, Src, ValShape};
 use super::im2col::{im2col, ConvGeom};
-use super::kernel::{dense_gemm, PreparedGemm};
-use crate::nets::surrogate_weights;
+use super::kernel::{dense_depthwise, dense_gemm, PreparedDepthwise, PreparedGemm};
+use crate::nets::{surrogate_weights, ConvKind, Network};
+use crate::quant::serialize;
 use crate::quant::truncation::truncate_weights;
 use crate::quant::Alpha;
 use crate::schedule::quantize_or_schedule;
@@ -49,63 +54,49 @@ impl WeightTransform {
             WeightTransform::Fp32 => wf.to_vec(),
             WeightTransform::Truncate { bits } => truncate_weights(wf, bits),
             WeightTransform::Swis { n_shifts, group_size, consecutive } => {
-                quantize_or_schedule(wf, &[k, fan_in], n_shifts, group_size, consecutive, Alpha::ONE)?
+                let shape = [k, fan_in];
+                quantize_or_schedule(wf, &shape, n_shifts, group_size, consecutive, Alpha::ONE)?
                     .to_f64()
             }
         })
     }
 }
 
-enum Kernel {
-    Packed(PreparedGemm),
+/// The executable kernel bound to one weighted graph node.
+enum OpKernel {
+    Gemm(PreparedGemm),
+    Dw(PreparedDepthwise),
     Dense { w: Vec<f32>, k: usize, fan_in: usize },
+    DenseDw { w: Vec<f32>, c: usize },
 }
 
-struct Layer {
-    name: String,
-    kernel: Kernel,
+struct LayerExec {
+    kernel: OpKernel,
     bias: Vec<f32>,
-    relu: bool,
-    /// `Some` for conv layers (SAME geometry precomputed at prepare
-    /// time); `None` for the FC head.
-    conv: Option<ConvGeom>,
-    out_c: usize,
 }
 
-impl Layer {
-    fn matmul(&self, acts: &[f32], rows: usize, threads: usize) -> Result<Vec<f32>> {
-        match &self.kernel {
-            Kernel::Packed(p) => p.gemm_f32(acts, rows, threads),
-            Kernel::Dense { w, k, fan_in } => dense_gemm(w, *k, *fan_in, acts, rows, threads),
-        }
-    }
-
-    /// Matmul + fused bias + activation.
-    fn run(&self, acts: &[f32], rows: usize, threads: usize) -> Result<Vec<f32>> {
-        let mut y = self
-            .matmul(acts, rows, threads)
-            .with_context(|| format!("layer {}", self.name))?;
-        let k = self.out_c;
-        for r in 0..rows {
-            for f in 0..k {
-                let v = y[r * k + f] + self.bias[f];
-                y[r * k + f] = if self.relu && v < 0.0 { 0.0 } else { v };
-            }
-        }
-        Ok(y)
-    }
-}
-
-/// A ready-to-run TinyCNN for one weight variant.
+/// A ready-to-run network for one weight variant: the lowered graph plus
+/// one prepared kernel per weighted node.
 pub struct NativeModel {
-    layers: Vec<Layer>,
-    /// Weight storage bits across packed layers (0 for dense variants).
+    graph: Graph,
+    labels: Vec<String>,
+    /// Parallel to `graph.nodes`; `Some` for conv/depthwise/FC nodes.
+    execs: Vec<Option<LayerExec>>,
+    /// Weight storage bits across packed layers (0 for dense variants) —
+    /// the Sec. 3.3 accounting.
     pub packed_bits: u64,
+    /// Bit-packed `.swis` container payload bits across packed layers
+    /// ([`serialize::payload_bits`]) — what a deployment actually
+    /// flashes; the numerator of the measured compression ratio.
+    pub packed_payload_bits: u64,
+    /// Total weights in quantizable (non-bias) layers.
+    pub quantized_weights: u64,
 }
 
-/// Transpose a fan-in-major tensor (HWIO conv or `(din,dout)` FC — filter
-/// axis last) into filters-first f64 `(k, fan_in)` — the layout the
-/// quantizer and kernels consume. Shared with the PJRT weight-swap path.
+/// Transpose a fan-in-major tensor (HWIO conv, `(k,k,c)` depthwise or
+/// `(din,dout)` FC — filter axis last) into filters-first f64
+/// `(k, fan_in)` — the layout the quantizer and kernels consume. Shared
+/// with the PJRT weight-swap path.
 pub fn filters_first(t: &Tensor<f32>) -> (Vec<f64>, usize, usize) {
     let shape = t.shape();
     let k = *shape.last().unwrap();
@@ -120,41 +111,54 @@ pub fn filters_first(t: &Tensor<f32>) -> (Vec<f64>, usize, usize) {
 }
 
 impl NativeModel {
-    /// Build the executable graph from an fp32 weight map under one
-    /// transform. Biases pass through untouched (the paper quantizes
-    /// weights only).
+    /// Build the executable graph for the TinyCNN accuracy proxy — the
+    /// pre-zoo entry point, kept for every existing caller; equivalent to
+    /// `prepare_net(&tinycnn().with_fc(), ...)`.
     pub fn prepare(
         weights: &HashMap<String, Tensor<f32>>,
         transform: WeightTransform,
     ) -> Result<NativeModel> {
-        let mut layers = Vec::new();
-        let mut packed_bits = 0u64;
-        // the plan comes from the zoo's own shape table (conv trunk +
-        // with_fc head) — the SAME source the surrogate generator uses,
-        // so the two cannot drift apart
-        let net = crate::nets::tinycnn().with_fc();
-        let n_layers = net.layers.len();
-        let mut hw = 32usize;
-        let mut plan: Vec<(String, Option<ConvGeom>, usize, bool)> = Vec::new();
-        for (idx, layer) in net.layers.iter().enumerate() {
-            if layer.k > 1 {
-                let g = ConvGeom::same(hw, layer.in_c, layer.k, layer.stride)?;
-                hw = g.out_hw;
-                plan.push((layer.name.clone(), Some(g), layer.out_c, true));
-            } else {
-                let relu = idx + 1 < n_layers; // last FC: raw logits
-                plan.push((layer.name.clone(), None, layer.out_c, relu));
-            }
-        }
+        NativeModel::prepare_net(&crate::nets::tinycnn().with_fc(), weights, transform)
+    }
 
-        for (name, conv, out_c, relu) in plan {
+    /// Lower `net` to the op graph and bind one prepared kernel per
+    /// weighted node under `transform`. Biases pass through untouched
+    /// (the paper quantizes weights only).
+    pub fn prepare_net(
+        net: &Network,
+        weights: &HashMap<String, Tensor<f32>>,
+        transform: WeightTransform,
+    ) -> Result<NativeModel> {
+        let graph = graph::lower(net)?;
+        let labels: Vec<String> =
+            (0..graph.nodes.len()).map(|i| graph.label(net, i)).collect();
+        let mut execs: Vec<Option<LayerExec>> = Vec::with_capacity(graph.nodes.len());
+        let mut packed_bits = 0u64;
+        let mut packed_payload_bits = 0u64;
+        let mut quantized_weights = 0u64;
+        for node in &graph.nodes {
+            let (li, depthwise) = match node.op {
+                GraphOp::Conv { layer, .. } | GraphOp::Fc { layer, .. } => (layer, false),
+                GraphOp::Depthwise { layer, .. } => (layer, true),
+                _ => {
+                    execs.push(None);
+                    continue;
+                }
+            };
+            let l = &net.layers[li];
+            let name = l.name.as_str();
             let t = weights
-                .get(&name)
+                .get(name)
                 .with_context(|| format!("missing weight '{name}'"))?;
             let (wf, k, fan_in) = filters_first(t);
-            if k != out_c {
-                bail!("weight '{name}' has {k} filters, expected {out_c}");
+            if k != l.out_c || fan_in != l.fan_in() {
+                bail!(
+                    "weight '{name}' is ({k}, {fan_in}), expected ({}, {})",
+                    l.out_c,
+                    l.fan_in()
+                );
             }
+            quantized_weights += (k * fan_in) as u64;
             let kernel = match transform {
                 WeightTransform::Swis { n_shifts, group_size, consecutive } => {
                     let packed = quantize_or_schedule(
@@ -167,112 +171,391 @@ impl NativeModel {
                     )
                     .with_context(|| format!("quantizing '{name}'"))?;
                     packed_bits += packed.storage_bits();
-                    Kernel::Packed(PreparedGemm::from_packed(&packed)?)
+                    packed_payload_bits += serialize::payload_bits(&packed);
+                    if depthwise {
+                        OpKernel::Dw(PreparedDepthwise::from_packed(&packed)?)
+                    } else {
+                        OpKernel::Gemm(PreparedGemm::from_packed(&packed)?)
+                    }
                 }
                 // fp32 / truncation serve dense floats via the shared
                 // dequantize path
-                _ => Kernel::Dense {
-                    w: transform
+                _ => {
+                    let w: Vec<f32> = transform
                         .dequantize(&wf, k, fan_in)
                         .with_context(|| format!("transforming '{name}'"))?
                         .iter()
                         .map(|&v| v as f32)
-                        .collect(),
-                    k,
-                    fan_in,
-                },
+                        .collect();
+                    if depthwise {
+                        OpKernel::DenseDw { w, c: k }
+                    } else {
+                        OpKernel::Dense { w, k, fan_in }
+                    }
+                }
             };
             let bias = weights
                 .get(&format!("{name}_b"))
                 .with_context(|| format!("missing bias '{name}_b'"))?
                 .data()
                 .to_vec();
-            if bias.len() != out_c {
-                bail!("bias '{name}_b' has {} entries, expected {out_c}", bias.len());
+            if bias.len() != l.out_c {
+                bail!("bias '{name}_b' has {} entries, expected {}", bias.len(), l.out_c);
             }
-            layers.push(Layer { name, kernel, bias, relu, conv, out_c });
+            execs.push(Some(LayerExec { kernel, bias }));
         }
-        Ok(NativeModel { layers, packed_bits })
+        Ok(NativeModel {
+            graph,
+            labels,
+            execs,
+            packed_bits,
+            packed_payload_bits,
+            quantized_weights,
+        })
     }
 
-    /// Forward a `(batch, 32, 32, 3)` NHWC image batch to `(batch, 10)`
-    /// logits.
+    /// Expected input map as `[hw, hw, c]` (what one request carries).
+    pub fn input_shape(&self) -> [usize; 3] {
+        let ValShape { hw, c } = self.graph.input;
+        [hw, hw, c]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.graph.output().c
+    }
+
+    pub fn net_name(&self) -> &str {
+        &self.graph.net
+    }
+
+    /// Forward a `(batch, hw, hw, c)` NHWC image batch to
+    /// `(batch, n_classes)` logits.
     pub fn forward(&self, images: &Tensor<f32>, threads: usize) -> Result<Tensor<f32>> {
+        self.run(images, threads, None)
+    }
+
+    /// [`NativeModel::forward`] that streams every node's output
+    /// (labelled by layer name, or `op@i` for pools/adds) through
+    /// `observe` as it is produced — the hook the accuracy sweep uses to
+    /// fold per-layer MSE vs fp32 WITHOUT retaining a second full
+    /// activation trace of a 224x224 net.
+    pub fn forward_observed(
+        &self,
+        images: &Tensor<f32>,
+        threads: usize,
+        observe: &mut dyn FnMut(&str, &[f32]),
+    ) -> Result<Tensor<f32>> {
+        self.run(images, threads, Some(observe))
+    }
+
+    /// [`NativeModel::forward_observed`] collecting the outputs into an
+    /// owned labelled trace (the reference side of an MSE comparison).
+    pub fn forward_trace(
+        &self,
+        images: &Tensor<f32>,
+        threads: usize,
+    ) -> Result<(Tensor<f32>, Vec<(String, Vec<f32>)>)> {
+        let mut trace = Vec::with_capacity(self.graph.nodes.len());
+        let mut obs = |label: &str, y: &[f32]| trace.push((label.to_string(), y.to_vec()));
+        let logits = self.run(images, threads, Some(&mut obs))?;
+        Ok((logits, trace))
+    }
+
+    fn run(
+        &self,
+        images: &Tensor<f32>,
+        threads: usize,
+        mut observe: Option<&mut dyn FnMut(&str, &[f32])>,
+    ) -> Result<Tensor<f32>> {
         let shape = images.shape();
-        if shape.len() != 4 || shape[1] != 32 || shape[2] != 32 || shape[3] != 3 {
-            bail!("expected (b, 32, 32, 3) images, got {shape:?}");
+        let ValShape { hw, c } = self.graph.input;
+        if shape.len() != 4 || shape[1] != hw || shape[2] != hw || shape[3] != c {
+            bail!("expected (b, {hw}, {hw}, {c}) images for '{}', got {shape:?}", self.graph.net);
         }
         let batch = shape[0];
-        let mut h = images.data().to_vec();
-        let mut hw = 32usize;
-        let mut c = 3usize;
-        // conv trunk: im2col -> GEMM; the (b, oh, ow)-major GEMM output IS
-        // the next NHWC map
-        for layer in self.layers.iter().filter(|l| l.conv.is_some()) {
-            let g = layer.conv.as_ref().unwrap();
-            debug_assert_eq!((g.in_hw, g.in_c), (hw, c));
-            let cols = im2col(&h, batch, g)?;
-            h = layer.run(&cols, g.rows(batch), threads)?;
-            hw = g.out_hw;
-            c = layer.out_c;
+        let nodes = &self.graph.nodes;
+        // consumer counts drive value lifetimes: a node's buffer is
+        // dropped as soon as its last consumer ran (MobileNet at 224x224
+        // would otherwise hold every intermediate map live)
+        let mut uses = vec![0usize; nodes.len()];
+        for node in nodes {
+            if let Src::Node(i) = node.src {
+                uses[i] += 1;
+            }
+            if let GraphOp::Add { rhs: Src::Node(i), .. } = node.op {
+                uses[i] += 1;
+            }
         }
-        // global average pool -> (batch, c)
-        let px = hw * hw;
-        let mut pooled = vec![0f32; batch * c];
-        for b in 0..batch {
-            for p in 0..px {
-                let src = (b * px + p) * c;
-                for ch in 0..c {
-                    pooled[b * c + ch] += h[src + ch];
+        if let Some(u) = uses.last_mut() {
+            *u += 1; // the graph output itself
+        }
+        let mut vals: Vec<Option<Vec<f32>>> = (0..nodes.len()).map(|_| None).collect();
+        for (ni, node) in nodes.iter().enumerate() {
+            let y = {
+                let (x, in_shape): (&[f32], ValShape) = match node.src {
+                    Src::Input => (images.data(), self.graph.input),
+                    Src::Node(i) => (
+                        vals[i].as_deref().context("graph value consumed too early")?,
+                        nodes[i].shape,
+                    ),
+                };
+                self.eval_node(ni, node, x, in_shape, images.data(), &vals, batch, threads)
+                    .with_context(|| format!("node '{}'", self.labels[ni]))?
+            };
+            if let Some(obs) = observe.as_mut() {
+                obs(&self.labels[ni], &y);
+            }
+            vals[ni] = Some(y);
+            if let Src::Node(i) = node.src {
+                uses[i] -= 1;
+                if uses[i] == 0 {
+                    vals[i] = None;
+                }
+            }
+            if let GraphOp::Add { rhs: Src::Node(i), .. } = node.op {
+                uses[i] -= 1;
+                if uses[i] == 0 {
+                    vals[i] = None;
                 }
             }
         }
-        let inv = 1.0 / px as f32;
-        pooled.iter_mut().for_each(|v| *v *= inv);
-        // FC head
-        let mut x = pooled;
-        for layer in self.layers.iter().filter(|l| l.conv.is_none()) {
-            x = layer.run(&x, batch, threads)?;
-        }
-        let classes = self.layers.last().map_or(0, |l| l.out_c);
-        Tensor::new(&[batch, classes], x)
+        let out = vals
+            .last_mut()
+            .and_then(Option::take)
+            .context("empty graph")?;
+        Tensor::new(&[batch, self.graph.output().c], out)
+    }
+
+    /// Evaluate one node over its gathered input.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_node(
+        &self,
+        ni: usize,
+        node: &graph::GraphNode,
+        x: &[f32],
+        in_shape: ValShape,
+        input: &[f32],
+        vals: &[Option<Vec<f32>>],
+        batch: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        Ok(match &node.op {
+            GraphOp::Conv { geom, relu, .. } => {
+                let exec = self.execs[ni].as_ref().expect("conv node without kernel");
+                let cols = im2col(x, batch, geom)?;
+                let rows = geom.rows(batch);
+                let mut y = match &exec.kernel {
+                    OpKernel::Gemm(p) => p.gemm_f32(&cols, rows, threads)?,
+                    OpKernel::Dense { w, k, fan_in } => {
+                        dense_gemm(w, *k, *fan_in, &cols, rows, threads)?
+                    }
+                    _ => bail!("conv node bound to a depthwise kernel"),
+                };
+                bias_relu(&mut y, rows, &exec.bias, *relu);
+                y
+            }
+            GraphOp::Depthwise { geom, relu, .. } => {
+                let exec = self.execs[ni].as_ref().expect("depthwise node without kernel");
+                let rows = geom.rows(batch);
+                let mut y = match &exec.kernel {
+                    OpKernel::Dw(p) => p.forward(x, batch, geom, threads)?,
+                    OpKernel::DenseDw { w, c } => {
+                        dense_depthwise(w, *c, x, batch, geom, threads)?
+                    }
+                    _ => bail!("depthwise node bound to a dense-conv kernel"),
+                };
+                bias_relu(&mut y, rows, &exec.bias, *relu);
+                y
+            }
+            GraphOp::Fc { relu, .. } => {
+                let exec = self.execs[ni].as_ref().expect("fc node without kernel");
+                let mut y = match &exec.kernel {
+                    OpKernel::Gemm(p) => p.gemm_f32(x, batch, threads)?,
+                    OpKernel::Dense { w, k, fan_in } => {
+                        dense_gemm(w, *k, *fan_in, x, batch, threads)?
+                    }
+                    _ => bail!("fc node bound to a depthwise kernel"),
+                };
+                bias_relu(&mut y, batch, &exec.bias, *relu);
+                y
+            }
+            GraphOp::MaxPool { k, stride } => {
+                maxpool_nhwc(x, batch, in_shape.hw, in_shape.c, *k, *stride)?
+            }
+            GraphOp::GlobalAvgPool => global_avg_pool(x, batch, in_shape.hw, in_shape.c),
+            GraphOp::Add { rhs, relu } => {
+                let r: &[f32] = match rhs {
+                    Src::Input => input,
+                    Src::Node(i) => {
+                        vals[*i].as_deref().context("residual value consumed too early")?
+                    }
+                };
+                if r.len() != x.len() {
+                    bail!("residual add over {} vs {} elements", x.len(), r.len());
+                }
+                let mut y: Vec<f32> = x.iter().zip(r).map(|(a, b)| a + b).collect();
+                if *relu {
+                    for v in y.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                y
+            }
+        })
     }
 }
 
-/// Load the TinyCNN fp32 weight set: `tinycnn_weights.npz` when the
+/// Fused bias + optional ReLU over a `(rows, k)` buffer.
+fn bias_relu(y: &mut [f32], rows: usize, bias: &[f32], relu: bool) {
+    let k = bias.len();
+    debug_assert_eq!(y.len(), rows * k);
+    for r in 0..rows {
+        for f in 0..k {
+            let v = y[r * k + f] + bias[f];
+            y[r * k + f] = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// XLA-SAME max-pool over an NHWC batch; out-of-map taps are ignored
+/// (never dominate), matching padding semantics over post-ReLU maps.
+fn maxpool_nhwc(
+    x: &[f32],
+    batch: usize,
+    hw: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+) -> Result<Vec<f32>> {
+    let g = ConvGeom::same(hw, c, k, stride)?;
+    if x.len() != batch * hw * hw * c {
+        bail!("pool input {} != {batch} x {hw} x {hw} x {c}", x.len());
+    }
+    let o = g.out_hw;
+    let mut out = vec![0f32; batch * o * o * c];
+    for b in 0..batch {
+        let img = &x[b * hw * hw * c..(b + 1) * hw * hw * c];
+        for oh in 0..o {
+            for ow in 0..o {
+                let dst = ((b * o + oh) * o + ow) * c;
+                let cell = &mut out[dst..dst + c];
+                cell.fill(f32::NEG_INFINITY);
+                let mut any = false;
+                for kh in 0..k {
+                    let ih = (oh * stride + kh) as isize - g.pad_lo as isize;
+                    if ih < 0 || ih >= hw as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let iw = (ow * stride + kw) as isize - g.pad_lo as isize;
+                        if iw < 0 || iw >= hw as isize {
+                            continue;
+                        }
+                        any = true;
+                        let src = (ih as usize * hw + iw as usize) * c;
+                        for (ch, m) in cell.iter_mut().enumerate() {
+                            if img[src + ch] > *m {
+                                *m = img[src + ch];
+                            }
+                        }
+                    }
+                }
+                if !any {
+                    cell.fill(0.0);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Global average pool: `(batch, hw, hw, c)` -> `(batch, c)`.
+fn global_avg_pool(x: &[f32], batch: usize, hw: usize, c: usize) -> Vec<f32> {
+    let px = hw * hw;
+    let mut pooled = vec![0f32; batch * c];
+    for b in 0..batch {
+        for p in 0..px {
+            let src = (b * px + p) * c;
+            for ch in 0..c {
+                pooled[b * c + ch] += x[src + ch];
+            }
+        }
+    }
+    let inv = 1.0 / px as f32;
+    pooled.iter_mut().for_each(|v| *v *= inv);
+    pooled
+}
+
+/// Where a served weight set came from — stamped into every BENCH
+/// trajectory record so surrogate-backed points are never silently
+/// compared against trained-model points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightProvenance {
+    /// Loaded from `<net>_weights.npz` in the artifact directory.
+    Npz,
+    /// Deterministic He-init stand-ins (structure real, accuracy not).
+    Surrogate,
+}
+
+impl WeightProvenance {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WeightProvenance::Npz => "npz",
+            WeightProvenance::Surrogate => "surrogate",
+        }
+    }
+}
+
+/// Load a network's fp32 weight set: `<net>_weights.npz` when the
 /// artifact directory has one, else a deterministic He-initialized
 /// surrogate (DESIGN.md §4 — statistics stand in for identity, so the
 /// serving stack exercises the exact shapes and dataflow of the trained
-/// net even on a machine that never ran `make artifacts`).
-pub fn tinycnn_weights(dir: Option<&Path>) -> Result<HashMap<String, Tensor<f32>>> {
+/// net even on a machine that never ran `make artifacts`). The returned
+/// provenance tags which one happened.
+pub fn net_weights(
+    dir: Option<&Path>,
+    net: &Network,
+) -> Result<(HashMap<String, Tensor<f32>>, WeightProvenance)> {
     if let Some(d) = dir {
-        let npz = d.join("tinycnn_weights.npz");
+        let npz = d.join(format!("{}_weights.npz", net.name));
         if npz.exists() {
             let loaded = npy::load_npz(&npz)?;
-            return Ok(loaded.into_iter().map(|(k, v)| (k, v.as_f32())).collect());
+            let map = loaded.into_iter().map(|(k, v)| (k, v.as_f32())).collect();
+            return Ok((map, WeightProvenance::Npz));
         }
     }
-    // loud on purpose: predictions from surrogate weights are structurally
-    // real but semantically meaningless — never let that pass for a
-    // trained model
+    // loud on purpose, for EVERY zoo net: predictions from surrogate
+    // weights are structurally real but semantically meaningless — never
+    // let that pass for a trained model
     eprintln!(
-        "tinycnn_weights.npz not found{}; using UNTRAINED He-init surrogate weights \
-         (serving plumbing/latency are real, accuracy is not)",
-        dir.map_or(String::new(), |d| format!(" in {}", d.display()))
+        "{}_weights.npz not found{}; using UNTRAINED He-init surrogate weights for '{}' \
+         (serving plumbing/latency are real, accuracy is not; trajectory records carry \
+         \"weights\": \"surrogate\")",
+        net.name,
+        dir.map_or(String::new(), |d| format!(" in {}", d.display())),
+        net.name
     );
-    Ok(surrogate_tinycnn_weights(2021))
+    Ok((surrogate_network_weights(net, 2021), WeightProvenance::Surrogate))
 }
 
-/// Surrogate weights in the jax layouts (conv HWIO, FC `(din,dout)`),
-/// biases zero — deterministic in `seed`. Draws come from
-/// [`crate::nets::surrogate_weights`] on the zoo's own TinyCNN shape
-/// table, so the native backend's stand-in weights follow the same
-/// documented convention (tagged RNG, `SIGMA_SCALE`-adjusted He sigma)
-/// as every simulator/compression experiment — just transposed from the
+/// TinyCNN convenience over [`net_weights`] (the pre-zoo API).
+pub fn tinycnn_weights(dir: Option<&Path>) -> Result<HashMap<String, Tensor<f32>>> {
+    net_weights(dir, &crate::nets::tinycnn().with_fc()).map(|(w, _)| w)
+}
+
+/// Surrogate weights for any zoo network in the serving layouts (conv
+/// HWIO, depthwise `(k,k,c)`, FC `(din,dout)`), biases zero —
+/// deterministic in `seed`. Draws come from
+/// [`crate::nets::surrogate_weights`] on the network's own shape table,
+/// so the native backend's stand-in weights follow the same documented
+/// convention (tagged RNG, `SIGMA_SCALE`-adjusted He sigma) as every
+/// simulator/compression experiment — just transposed from the
 /// filters-first draw into the serving layouts.
-pub fn surrogate_tinycnn_weights(seed: u64) -> HashMap<String, Tensor<f32>> {
+pub fn surrogate_network_weights(net: &Network, seed: u64) -> HashMap<String, Tensor<f32>> {
     let mut out = HashMap::new();
-    for layer in &crate::nets::tinycnn().with_fc().layers {
+    for layer in &net.layers {
         let fan_in = layer.fan_in();
         let k = layer.out_c;
         let wf = surrogate_weights(layer, seed); // filters-first (k, fan_in)
@@ -282,7 +565,9 @@ pub fn surrogate_tinycnn_weights(seed: u64) -> HashMap<String, Tensor<f32>> {
                 data[i * k + o] = wf[o * fan_in + i] as f32;
             }
         }
-        let shape: Vec<usize> = if layer.k > 1 {
+        let shape: Vec<usize> = if layer.kind == ConvKind::Depthwise {
+            vec![layer.k, layer.k, k] // depthwise (k, k, c)
+        } else if layer.k > 1 || layer.in_hw > 1 {
             vec![layer.k, layer.k, layer.in_c, k] // conv HWIO
         } else {
             vec![fan_in, k] // FC (din, dout)
@@ -291,6 +576,11 @@ pub fn surrogate_tinycnn_weights(seed: u64) -> HashMap<String, Tensor<f32>> {
         out.insert(format!("{}_b", layer.name), Tensor::new(&[k], vec![0.0; k]).unwrap());
     }
     out
+}
+
+/// TinyCNN convenience over [`surrogate_network_weights`].
+pub fn surrogate_tinycnn_weights(seed: u64) -> HashMap<String, Tensor<f32>> {
+    surrogate_network_weights(&crate::nets::tinycnn().with_fc(), seed)
 }
 
 #[cfg(test)]
@@ -310,6 +600,9 @@ mod tests {
     fn fp32_forward_shapes_and_determinism() {
         let w = surrogate_tinycnn_weights(7);
         let m = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap();
+        assert_eq!(m.input_shape(), [32, 32, 3]);
+        assert_eq!(m.n_classes(), 10);
+        assert_eq!(m.net_name(), "tinycnn");
         let x = images(3, 1);
         let a = m.forward(&x, 1).unwrap();
         assert_eq!(a.shape(), &[3, 10]);
@@ -329,6 +622,8 @@ mod tests {
         )
         .unwrap();
         assert!(sw.packed_bits > 0);
+        assert!(sw.packed_payload_bits >= sw.packed_bits);
+        assert_eq!(fp.packed_bits, 0);
         let x = images(2, 2);
         let a = fp.forward(&x, 2).unwrap();
         let b = sw.forward(&x, 2).unwrap();
@@ -392,5 +687,38 @@ mod tests {
         let m = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap();
         let bad = Tensor::new(&[1, 16, 16, 3], vec![0.0; 16 * 16 * 3]).unwrap();
         assert!(m.forward(&bad, 1).is_err());
+    }
+
+    #[test]
+    fn trace_covers_every_node_and_matches_forward() {
+        let w = surrogate_tinycnn_weights(5);
+        let m = NativeModel::prepare(&w, WeightTransform::Fp32).unwrap();
+        let x = images(2, 9);
+        let (logits, trace) = m.forward_trace(&x, 2).unwrap();
+        assert_eq!(logits.data(), m.forward(&x, 2).unwrap().data());
+        // 6 convs + gap + 2 fc
+        assert_eq!(trace.len(), 9);
+        assert_eq!(trace[0].0, "conv1");
+        assert_eq!(trace.last().unwrap().0, "fc2");
+        assert_eq!(trace.last().unwrap().1, logits.data());
+    }
+
+    #[test]
+    fn net_weights_reports_surrogate_provenance() {
+        let net = crate::nets::tinycnn().with_fc();
+        let (w, prov) = net_weights(None, &net).unwrap();
+        assert_eq!(prov, WeightProvenance::Surrogate);
+        assert_eq!(prov.as_str(), "surrogate");
+        assert!(w.contains_key("conv1") && w.contains_key("fc2_b"));
+    }
+
+    #[test]
+    fn surrogate_zoo_weights_have_serving_layouts() {
+        let net = crate::nets::mobilenet_v2().with_fc();
+        let w = surrogate_network_weights(&net, 3);
+        assert_eq!(w["stem"].shape(), &[3, 3, 3, 32]); // HWIO
+        assert_eq!(w["block0.dw"].shape(), &[3, 3, 32]); // depthwise (k,k,c)
+        assert_eq!(w["classifier"].shape(), &[1280, 1000]); // FC (din,dout)
+        assert_eq!(w["block0.dw_b"].shape(), &[32]);
     }
 }

@@ -24,10 +24,19 @@
 //! * [`sim`] — output-stationary systolic-array cycle & memory-traffic
 //!   simulator, SCALE-Sim-class (paper Sec. 3.2, 5.2).
 //! * [`exec`] — the NATIVE SWIS engine: cache-blocked, thread-parallel
-//!   packed bit-serial GEMM/conv kernels consuming [`quant::PackedLayer`]
-//!   directly, plus the TinyCNN forward pass they compose into.
+//!   packed bit-serial GEMM + depthwise kernels consuming
+//!   [`quant::PackedLayer`] directly, an op-graph IR ([`exec::graph`]:
+//!   conv / depthwise / FC / pool / residual-add) lowered from any
+//!   [`nets::Network`] descriptor, and the graph executor
+//!   ([`exec::NativeModel`]) that runs the WHOLE zoo — TinyCNN,
+//!   MobileNet-v2 (inverted residuals), ResNet-18 (skips + downsample),
+//!   VGG-16 — under fp32 / SWIS / SWIS-C / truncation transforms.
 //! * [`nets`] — layer shape tables: ResNet-18, MobileNet-v2, VGG-16 and
 //!   the TinyCNN accuracy proxy.
+//! * [`eval`] — the accuracy/compression sweep: nets x schemes x
+//!   bit-widths on the native executor, per-layer MSE vs fp32, top-1
+//!   agreement on a fixed probe batch, measured `.swis` container
+//!   compression; emits `BENCH_accuracy.json` (`swis eval`).
 //! * [`analysis`] — lossless-quantization probability (paper Eq. 8-10).
 //! * [`runtime`] — the execution backends behind serving: the
 //!   [`runtime::Backend`] trait (PJRT/AOT over HLO-text artifacts from
@@ -57,17 +66,31 @@
 //! |------|-------|----------|-------------------|
 //! | analytic sim | [`sim`] | cycle/energy/traffic models, no data | paper performance figures (Sec. 5) |
 //! | functional machine | [`sim::functional`], [`arch::pe_functional`] | exact integer MACs, cycle-faithful | hardware semantics: fold schedule, PE timing, accumulator width |
-//! | native engine | [`exec`] | the SAME integer MACs at software speed | serving when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`) |
+//! | native engine | [`exec`] | the SAME integer MACs at software speed | serving + zoo accuracy sweeps when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`, `tests/graph_equiv.rs`) |
 //! | PJRT | [`runtime`] | fp32 graph over (de)quantized weights | trained-model accuracy vs build-time goldens |
 //!
 //! The shared group-op arithmetic lives once, in [`exec::core`]; the
 //! functional machine layers cycle accounting on top of it, the native
 //! kernel layers blocking/threading, and the analytic sim prices the
 //! same plane counts it executes.
+//!
+//! ## Model zoo coverage (native tier)
+//!
+//! | network | executes natively | serves via pool | weights |
+//! |---------|-------------------|-----------------|---------|
+//! | tinycnn | yes (graph) | `swis serve` (default; PJRT eligible) | `tinycnn_weights.npz` or surrogate |
+//! | mobilenet_v2 | yes (depthwise + inverted residuals) | `swis serve --net mobilenet_v2` | `mobilenet_v2_weights.npz` or surrogate |
+//! | resnet18 | yes (skips + downsample, stem max-pool) | `swis serve --net resnet18` | `resnet18_weights.npz` or surrogate |
+//! | vgg16_cifar100 | yes (stage max-pools) | `swis serve --net vgg16` | `vgg16_cifar100_weights.npz` or surrogate |
+//!
+//! Surrogate (He-init) weights are announced loudly and stamped into
+//! every `BENCH_accuracy.json` record (`"weights": "surrogate" | "npz"`)
+//! so trajectory points never silently mix provenances.
 
 pub mod analysis;
 pub mod arch;
 pub mod coordinator;
+pub mod eval;
 pub mod exec;
 pub mod loadgen;
 pub mod nets;

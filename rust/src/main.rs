@@ -4,8 +4,11 @@
 //!   quantize  — SWIS/SWIS-C/truncation quantization report for a network
 //!   simulate  — systolic-array simulation: cycles, F/s, F/J, DRAM traffic
 //!   serve     — start a worker pool and drive a synthetic request load
+//!               (--net picks any zoo model on the native backend)
 //!   loadgen   — SLO sweep (workers x policy x arrival rate), emits
 //!               BENCH_serving.json at the repo root
+//!   eval      — zoo accuracy/compression sweep (nets x schemes x bits on
+//!               the native executor), emits BENCH_accuracy.json
 //!   prob      — Fig. 2 lossless-quantization probability curves
 //!   info      — model zoo + accelerator configuration summary
 //!
@@ -14,7 +17,9 @@
 //!   swis simulate --net mobilenet_v2 --scheme swis --shifts 3.5 --pe ds
 //!   swis serve --requests 256 --variants fp32,swis@3 --backend native \
 //!              --workers 4 --queue-depth 256 --priority batch --rate 300
+//!   swis serve --net mobilenet_v2 --requests 8 --backend native
 //!   swis loadgen --workers 1,2,4 --rates 150,300 --duration-ms 400
+//!   swis eval --nets tinycnn,mobilenet_v2 --schemes swis,wgt_trunc --bits 3,4
 //!   swis prob
 
 use anyhow::{bail, Context, Result};
@@ -36,10 +41,10 @@ use swis::util::rng::Rng;
 use swis::util::stats::rmse;
 
 const VALUE_KEYS: &[&str] = &[
-    "net", "shifts", "group", "scheme", "pe", "rows", "cols", "artifacts", "requests",
-    "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend", "workers",
-    "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms", "deadline-ms",
-    "concurrency", "mode", "out",
+    "net", "nets", "shifts", "group", "scheme", "schemes", "pe", "rows", "cols", "artifacts",
+    "requests", "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend",
+    "workers", "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms",
+    "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads",
 ];
 
 fn main() {
@@ -57,11 +62,12 @@ fn run(argv: &[String]) -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("eval") => cmd_eval(&args),
         Some("prob") => cmd_prob(),
         Some("tune") => cmd_tune(&args),
         Some("info") => cmd_info(),
         Some(other) => {
-            let known = "quantize simulate serve loadgen tune prob info";
+            let known = "quantize simulate serve loadgen eval tune prob info";
             bail!("unknown subcommand '{other}' (try: {known})")
         }
         None => {
@@ -74,11 +80,13 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
-         usage: swis <quantize|simulate|serve|loadgen|prob|info> [options]\n\
-         serve:   --workers N --queue-depth D --priority interactive|batch \
+         usage: swis <quantize|simulate|serve|loadgen|eval|prob|info> [options]\n\
+         serve:   --net NAME --workers N --queue-depth D --priority interactive|batch \
          --rate R (open-loop pacing, 0 = burst)\n\
          loadgen: --workers 1,2,4 --rates 150,300 --max-waits-ms 2 \
          --duration-ms 400 --deadline-ms 100 --mode open|closed|both\n\
+         eval:    --nets a,b --schemes swis,swis_c,wgt_trunc --bits 2,3,4 \
+         --batch B --group G --seed S --out PATH\n\
          see rust/README.md for the full option list"
     );
 }
@@ -202,6 +210,10 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
 
 fn cmd_serve(args: &cli::Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
+    let net_name = args.get_or("net", "tinycnn");
+    let net = by_name(net_name)
+        .with_context(|| format!("unknown network '{net_name}'"))?
+        .with_fc();
     let n_req = args.get_usize("requests", 128)?;
     let variants: Vec<VariantSpec> = args
         .get_or("variants", "fp32,swis@3")
@@ -223,19 +235,25 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         if deadline_ms == 0 { None } else { Some(Duration::from_millis(deadline_ms as u64)) };
     let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
 
-    println!("# serve — starting pool ({workers} workers, {} variants)", names.len());
-    let pool = WorkerPool::start(
+    println!(
+        "# serve — starting pool ({workers} workers, {} variants, net {})",
+        names.len(),
+        net.name
+    );
+    let pool = WorkerPool::start_net(
         Path::new(dir),
         PoolConfig { workers, policy, queue_depth },
+        &net,
         variants,
         backend,
     )?;
     println!("backend          : {}", pool.backend());
+    let per = pool.image_len();
     let mut rng = Rng::new(7);
     let mut rxs = Vec::with_capacity(n_req);
     let t0 = std::time::Instant::now();
     for i in 0..n_req {
-        let image: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f64() as f32).collect();
+        let image: Vec<f32> = (0..per).map(|_| rng.f64() as f32).collect();
         let variant = names[i % names.len()].clone();
         rxs.push(pool.submit(InferRequest { image, variant }, priority, deadline)?);
         if rate > 0.0 {
@@ -338,6 +356,57 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
     let default_out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
     let out = args.get("out").map(std::path::PathBuf::from).unwrap_or(default_out);
     write_bench_json(&points, &cfg, served_on, &out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Zoo accuracy/compression sweep on the native executor: nets x schemes
+/// x bit-widths, per-layer MSE vs fp32, top-1 agreement on a fixed probe
+/// batch, measured packed compression. Emits the repo-root
+/// `BENCH_accuracy.json` trajectory record.
+fn cmd_eval(args: &cli::Args) -> Result<()> {
+    use swis::eval::{run_eval, write_bench_json, EvalConfig};
+    let d = EvalConfig::default();
+    let list = |key: &str, dflt: &[String]| -> Vec<String> {
+        match args.get(key) {
+            None => dflt.to_vec(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    };
+    let cfg = EvalConfig {
+        nets: list("nets", &d.nets),
+        schemes: list("schemes", &d.schemes),
+        bits: args.get_f64_list("bits", &d.bits)?,
+        group_size: args.get_usize("group", d.group_size)?,
+        batch: args.get_usize("batch", d.batch)?,
+        seed: args.get_usize("seed", d.seed as usize)? as u64,
+        threads: args.get_usize("threads", d.threads)?,
+        artifacts: Some(std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))),
+    };
+    println!(
+        "# eval — {:?} x {:?} x {:?} bits, probe batch {} (native executor)",
+        cfg.nets, cfg.schemes, cfg.bits, cfg.batch
+    );
+    let recs = run_eval(&cfg)?;
+    println!(
+        "{:<16} {:<10} {:>5} {:>12} {:>9} {:>8} {:>10}",
+        "net", "scheme", "bits", "logits mse", "top1 agr", "compr.", "weights"
+    );
+    for r in &recs {
+        println!(
+            "{:<16} {:<10} {:>5} {:>12.3e} {:>9.2} {:>7.2}x {:>10}",
+            r.net,
+            r.scheme,
+            r.bits,
+            r.mse,
+            r.top1_agree,
+            r.compression_ratio,
+            r.weights.as_str()
+        );
+    }
+    let default_out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_accuracy.json");
+    let out = args.get("out").map(std::path::PathBuf::from).unwrap_or(default_out);
+    write_bench_json(&recs, &cfg, &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }
@@ -449,12 +518,51 @@ mod tests {
     }
 
     #[test]
+    fn eval_smoke_writes_wellformed_json_with_trend() {
+        let out = std::env::temp_dir().join(format!("swis_eval_{}.json", std::process::id()));
+        run(&sv(&[
+            "eval", "--nets", "tinycnn", "--schemes", "swis,wgt_trunc", "--bits", "3",
+            "--batch", "2", "--threads", "2", "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let j = swis::util::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("accuracy"));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 3); // fp32 + swis@3 + wgt_trunc@3
+        for key in
+            ["net", "scheme", "bits", "mse", "top1_agree", "compression_ratio", "weights"]
+        {
+            assert!(recs[0].get(key).is_some(), "missing {key}");
+        }
+        // the paper's trend, machine-checkable from the emitted record
+        let mse = |scheme: &str| {
+            recs.iter()
+                .find(|r| r.get("scheme").unwrap().as_str() == Some(scheme))
+                .unwrap()
+                .get("mse")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(mse("swis") < mse("wgt_trunc"));
+        assert_eq!(
+            recs[0].get("weights").unwrap().as_str(),
+            Some("surrogate"),
+            "provenance must be stamped"
+        );
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
     fn bad_inputs_error() {
         assert!(run(&sv(&["bogus"])).is_err());
         assert!(run(&sv(&["simulate", "--net", "nope"])).is_err());
         assert!(run(&sv(&["simulate", "--pe", "warp"])).is_err());
         assert!(run(&sv(&["simulate", "--scheme", "int4"])).is_err());
         assert!(run(&sv(&["serve", "--priority", "warp"])).is_err());
+        assert!(run(&sv(&["serve", "--net", "nope"])).is_err());
         assert!(run(&sv(&["loadgen", "--mode", "sideways"])).is_err());
+        assert!(run(&sv(&["eval", "--nets", "nope"])).is_err());
+        assert!(run(&sv(&["eval", "--nets", "tinycnn", "--schemes", "int4"])).is_err());
     }
 }

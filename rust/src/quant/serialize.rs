@@ -263,6 +263,30 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_packed_depthwise_layer() {
+        // a depthwise layer packs filters-first (channels, k*k): fan-in 9
+        // makes ragged groups (4+4+1 at G=4) — the container must carry
+        // the pad-lane accounting exactly
+        use crate::nets::{mobilenet_v2, surrogate_weights};
+        let net = mobilenet_v2();
+        let dw = net.layer("block0.dw").unwrap();
+        let w = surrogate_weights(dw, 5);
+        for (n, consecutive) in [(3usize, false), (2, true)] {
+            let cfg = QuantConfig { n_shifts: n, group_size: 4, alpha: Alpha::ONE, consecutive };
+            let p = quantize(&w, &[dw.out_c, dw.fan_in()], &cfg).unwrap();
+            assert_eq!(p.shape, vec![32, 9]);
+            let bytes = to_bytes(&p).unwrap();
+            let q = from_bytes(&bytes).unwrap();
+            assert_equal(&p, &q);
+            // the measured file IS the paper's accounting (+ header)
+            assert_eq!(bytes.len() as u64 - 26, payload_bits(&p).div_ceil(8));
+            // and the round-tripped layer still drives the native kernel
+            let prep = crate::exec::PreparedDepthwise::from_packed(&q).unwrap();
+            assert_eq!(prep.channels(), 32);
+        }
+    }
+
+    #[test]
     fn dequant_survives_roundtrip() {
         let p = layer(11, 3, 4, false);
         let q = from_bytes(&to_bytes(&p).unwrap()).unwrap();

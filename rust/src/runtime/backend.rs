@@ -31,7 +31,8 @@ use std::sync::Arc;
 
 use super::{ModelBundle, Runtime};
 use crate::coordinator::{VariantSpec, WeightVariants};
-use crate::exec::{tinycnn_weights, NativeModel};
+use crate::exec::{net_weights, NativeModel};
+use crate::nets::Network;
 use crate::quant::planner;
 use crate::util::tensor::Tensor;
 
@@ -50,7 +51,15 @@ pub trait Backend {
     /// sizes (PJRT: compiled variants; native: one dynamic batch).
     fn plan_chunks(&self, n: usize) -> Vec<usize>;
 
-    /// Execute a `(n, 32, 32, 3)` image batch under `variant`, returning
+    /// Per-request image shape `[hw, hw, c]` this backend executes. The
+    /// default is the TinyCNN 32x32x3 contract (the PJRT artifacts and
+    /// every pre-zoo caller); the native backend reports whichever zoo
+    /// net it was built for, and the pool sizes admission checks off it.
+    fn input_shape(&self) -> [usize; 3] {
+        [32, 32, 3]
+    }
+
+    /// Execute a `(n, hw, hw, c)` image batch under `variant`, returning
     /// `(n, n_classes)` logits.
     fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>>;
 }
@@ -97,8 +106,19 @@ pub struct NativeFactory {
 }
 
 impl NativeFactory {
+    /// TinyCNN factory (the pre-zoo entry point).
     pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> Result<NativeFactory> {
         Ok(NativeFactory { prototype: NativeBackend::load(dir, variants)? })
+    }
+
+    /// Factory for any zoo network (pass the net with its FC head, e.g.
+    /// `by_name("mobilenet_v2").unwrap().with_fc()`).
+    pub fn load_net(
+        dir: Option<&Path>,
+        net: &Network,
+        variants: &[VariantSpec],
+    ) -> Result<NativeFactory> {
+        Ok(NativeFactory { prototype: NativeBackend::load_net(dir, net, variants)? })
     }
 }
 
@@ -142,6 +162,26 @@ pub fn create_factory(
     dir: &Path,
     variants: &[VariantSpec],
 ) -> Result<Box<dyn BackendFactory>> {
+    create_factory_net(kind, dir, &crate::nets::tinycnn().with_fc(), variants)
+}
+
+/// [`create_factory`] for any zoo network. The PJRT artifacts compile
+/// the TinyCNN graph only, so a non-TinyCNN net forces the native
+/// engine: explicit `Pjrt` is a hard error and `Auto` skips the probe.
+pub fn create_factory_net(
+    kind: BackendKind,
+    dir: &Path,
+    net: &Network,
+    variants: &[VariantSpec],
+) -> Result<Box<dyn BackendFactory>> {
+    if net.name != "tinycnn" {
+        return match kind {
+            BackendKind::Pjrt => {
+                bail!("PJRT artifacts are TinyCNN-only; '{}' needs --backend native", net.name)
+            }
+            _ => Ok(Box::new(NativeFactory::load_net(Some(dir), net, variants)?)),
+        };
+    }
     match kind {
         BackendKind::Pjrt => {
             Ok(Box::new(PjrtFactory { dir: dir.to_path_buf(), variants: variants.to_vec() }))
@@ -223,28 +263,46 @@ impl Backend for PjrtBackend {
 }
 
 /// The native SWIS execution path: one prepared [`NativeModel`] per
-/// variant, executing packed operands directly. The prepared models live
-/// behind an `Arc`, so replicating the backend across pool workers is a
-/// pointer clone — quantization and packing run once, every worker
-/// executes the same packed operands.
+/// variant — for ANY zoo network, not just TinyCNN — executing packed
+/// operands directly. The prepared models live behind an `Arc`, so
+/// replicating the backend across pool workers is a pointer clone —
+/// quantization and packing run once, every worker executes the same
+/// packed operands.
 #[derive(Clone)]
 pub struct NativeBackend {
     models: Arc<HashMap<String, NativeModel>>,
+    input: [usize; 3],
     threads: usize,
 }
 
 impl NativeBackend {
-    /// Load fp32 weights (artifact npz when present, deterministic
-    /// surrogates otherwise) and quantize/prepare every variant.
+    /// TinyCNN backend (the pre-zoo entry point).
     pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> Result<NativeBackend> {
-        let weights = tinycnn_weights(dir)?;
+        NativeBackend::load_net(dir, &crate::nets::tinycnn().with_fc(), variants)
+    }
+
+    /// Load a zoo network's fp32 weights (artifact npz when present,
+    /// deterministic surrogates otherwise — loudly) and quantize/prepare
+    /// every variant of it.
+    pub fn load_net(
+        dir: Option<&Path>,
+        net: &Network,
+        variants: &[VariantSpec],
+    ) -> Result<NativeBackend> {
+        let (weights, _prov) = net_weights(dir, net)?;
         let mut models = HashMap::new();
+        let mut input = [32usize, 32, 3];
         for spec in variants {
-            let model = NativeModel::prepare(&weights, spec.transform()?)
-                .with_context(|| format!("preparing variant '{}'", spec.name))?;
+            let model = NativeModel::prepare_net(net, &weights, spec.transform()?)
+                .with_context(|| format!("preparing variant '{}' of '{}'", spec.name, net.name))?;
+            input = model.input_shape();
             models.insert(spec.name.clone(), model);
         }
-        Ok(NativeBackend { models: Arc::new(models), threads: planner::default_threads() })
+        Ok(NativeBackend {
+            models: Arc::new(models),
+            input,
+            threads: planner::default_threads(),
+        })
     }
 
     /// Cheap per-worker replica sharing the prepared variants; the
@@ -255,6 +313,7 @@ impl NativeBackend {
     fn replicate(&self, pool_workers: usize) -> NativeBackend {
         NativeBackend {
             models: Arc::clone(&self.models),
+            input: self.input,
             threads: (planner::default_threads() / pool_workers.max(1)).max(1),
         }
     }
@@ -276,6 +335,10 @@ impl Backend for NativeBackend {
         } else {
             vec![n]
         }
+    }
+
+    fn input_shape(&self) -> [usize; 3] {
+        self.input
     }
 
     fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
@@ -339,6 +402,61 @@ mod tests {
         let f = create_factory(BackendKind::Auto, Path::new("/nonexistent"), &specs()).unwrap();
         assert_eq!(f.name(), "native");
         assert_eq!(f.make(2).unwrap().name(), "native");
+    }
+
+    /// A tiny depthwise-bearing net with mobilenet-style names, cheap
+    /// enough for debug-mode tests (the real zoo runs in the release CI
+    /// zoo-smoke job).
+    fn mini_net() -> Network {
+        use crate::nets::ConvLayer;
+        Network {
+            name: "mini_dw".into(),
+            layers: vec![
+                ConvLayer::new("stem", 8, 3, 3, 2, 1, 8),
+                ConvLayer::depthwise("block0.dw", 4, 8, 3, 1, 1),
+                ConvLayer::new("block0.project", 4, 8, 1, 1, 0, 8),
+                ConvLayer::fc("classifier", 8, 5),
+            ],
+        }
+    }
+
+    #[test]
+    fn native_backend_serves_zoo_nets_by_descriptor() {
+        let net = mini_net();
+        let b = NativeBackend::load_net(None, &net, &specs()).unwrap();
+        assert_eq!(b.input_shape(), [8, 8, 3]);
+        let imgs = Tensor::new(&[2, 8, 8, 3], vec![0.5; 2 * 8 * 8 * 3]).unwrap();
+        let logits = b.infer("swis@3", &imgs).unwrap();
+        assert_eq!(logits.shape(), &[2, 5]);
+        // wrong-sized images are a routed error, not a panic
+        let bad = Tensor::new(&[1, 32, 32, 3], vec![0.5; 32 * 32 * 3]).unwrap();
+        assert!(b.infer("swis@3", &bad).is_err());
+    }
+
+    #[test]
+    fn zoo_factories_refuse_pjrt_and_share_replicas() {
+        let net = mini_net();
+        // PJRT artifacts compile TinyCNN only: explicit pjrt is a hard
+        // error for zoo nets, auto goes native without probing
+        assert!(create_factory_net(
+            BackendKind::Pjrt,
+            Path::new("/nonexistent"),
+            &net,
+            &specs()
+        )
+        .is_err());
+        let f =
+            create_factory_net(BackendKind::Auto, Path::new("/nonexistent"), &net, &specs())
+                .unwrap();
+        assert_eq!(f.name(), "native");
+        let a = f.make(1).unwrap();
+        let b = f.make(4).unwrap();
+        assert_eq!(a.input_shape(), [8, 8, 3]);
+        let imgs = Tensor::new(&[1, 8, 8, 3], vec![0.25; 8 * 8 * 3]).unwrap();
+        assert_eq!(
+            a.infer("swis@3", &imgs).unwrap().data(),
+            b.infer("swis@3", &imgs).unwrap().data()
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ mod client;
 
 pub use artifacts::{ArtifactSpec, Manifest, ModelBundle, TensorSpec};
 pub use backend::{
-    create_backend, create_factory, Backend, BackendFactory, BackendKind, NativeBackend,
-    NativeFactory, PjrtBackend, PjrtFactory,
+    create_backend, create_factory, create_factory_net, Backend, BackendFactory, BackendKind,
+    NativeBackend, NativeFactory, PjrtBackend, PjrtFactory,
 };
 pub use client::{hlo_output_arity, Executable, Runtime};

@@ -362,3 +362,49 @@ fn submissions_after_shutdown_fail_fast() {
     )
     .is_err());
 }
+
+#[test]
+fn pool_serves_zoo_nets_with_their_own_image_shape() {
+    // a depthwise-bearing mini net (mobilenet-style names, residual add)
+    // served through the full pool path: the admission check must size
+    // itself to the net's own hw*hw*c, and logits must flow end to end.
+    // (Deliberately a DIFFERENT topology/size than backend.rs's unit
+    // fixture — each layer validates its own independent net, so the two
+    // are not copies that could drift apart.)
+    use swis::nets::{ConvLayer, Network};
+    let net = Network {
+        name: "pool_mini_dw".into(),
+        layers: vec![
+            ConvLayer::new("stem", 12, 3, 3, 2, 1, 6),
+            ConvLayer::depthwise("block0.dw", 6, 6, 3, 1, 1),
+            ConvLayer::new("block0.project", 6, 6, 1, 1, 0, 6),
+            ConvLayer::fc("classifier", 6, 4),
+        ],
+    };
+    let pool = WorkerPool::start_net(
+        Path::new("/nonexistent"),
+        PoolConfig { workers: 2, policy: BatchPolicy::default(), queue_depth: 32 },
+        &net,
+        vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4)],
+        BackendKind::Native,
+    )
+    .unwrap();
+    assert_eq!(pool.backend(), "native");
+    assert_eq!(pool.image_len(), 12 * 12 * 3);
+    // right-sized image round-trips; tinycnn-sized one is rejected at
+    // admission (not deep in a worker)
+    let ok = pool
+        .infer(InferRequest { image: vec![0.25; 12 * 12 * 3], variant: "swis@3".into() })
+        .unwrap();
+    assert_eq!(ok.logits.len(), 4);
+    assert!(ok.logits.iter().all(|v| v.is_finite()));
+    let err = pool
+        .submit(
+            InferRequest { image: vec![0.25; 32 * 32 * 3], variant: "swis@3".into() },
+            Priority::Interactive,
+            None,
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("432"), "{err:#}");
+    pool.shutdown().unwrap();
+}
