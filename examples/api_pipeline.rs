@@ -1,0 +1,64 @@
+//! The facade pipeline in one file: **config → plan → `.swisplan` →
+//! session** — written against ONLY `swis::api` re-exports. This example
+//! doubles as the public-API smoke test: the CI `docs` job compiles and
+//! runs it, so a facade regression (a type falling out of the re-export
+//! surface, a signature break) fails fast here.
+//!
+//! Run: cargo run --release --example api_pipeline
+
+use std::sync::Arc;
+
+use swis::api::{
+    prepare_call_count, Engine, EngineConfig, EnginePlan, Session, SwisResult, Tensor,
+    VariantSpec,
+};
+
+fn main() -> SwisResult<()> {
+    // 1. typed config — builder-style; the string grammar is optional
+    //    sugar that parses into the same typed spec
+    let cfg = EngineConfig::for_net("tinycnn")?
+        .variant(VariantSpec::fp32())
+        .variant(VariantSpec::swis(3.0, 4))
+        .variant("swis_c@2".parse()?)
+        .threads(2);
+
+    // 2. offline: ONE prepare (quantize + schedule + pack + bind), one
+    //    shippable artifact
+    let plan = Engine::prepare(cfg)?;
+    let path = std::env::temp_dir().join("api_pipeline_tinycnn.swisplan");
+    plan.save(&path)?;
+    println!(
+        "prepared '{}': {} variants, {} packed payload bits -> {}",
+        plan.net_name(),
+        plan.variants().len(),
+        plan.packed_payload_bits(),
+        path.display()
+    );
+
+    // 3. online: load the artifact and serve — zero quantization from
+    //    here on, provable via the planner-work odometer
+    let odometer = prepare_call_count();
+    let loaded = Arc::new(EnginePlan::load(&path)?);
+    let session = Session::new(Arc::clone(&loaded));
+    let [h, w, c] = loaded.input_shape();
+    let image: Vec<f32> = (0..h * w * c).map(|i| (i % 17) as f32 / 17.0).collect();
+
+    // the batched streaming handle: push requests as they arrive, flush
+    // to execute the accumulated batch in one kernel dispatch
+    let mut stream = session.stream("swis@3")?;
+    stream.push(&image)?;
+    stream.push(&image)?;
+    let streamed = stream.flush()?;
+    println!("swis@3 logits (image 0): {:?}", &streamed.data()[..4]);
+
+    // the sync whole-batch entry agrees bit-for-bit
+    let batch = Tensor::new(&[2, h, w, c], [image.clone(), image].concat())
+        .expect("well-formed batch");
+    let direct = session.run("swis@3", &batch)?;
+    assert_eq!(direct.data(), streamed.data(), "stream and run must agree");
+    assert_eq!(prepare_call_count(), odometer, "serving a loaded plan must not quantize");
+
+    let _ = std::fs::remove_file(&path);
+    println!("api_pipeline OK (zero quantization after plan load)");
+    Ok(())
+}

@@ -43,6 +43,7 @@ use swis::quant::{quantize, QuantConfig};
 use swis::runtime::{ModelBundle, Runtime};
 use swis::schedule::{nondecreasing_sequences_vals, schedule_layer, ScheduleConfig};
 use swis::sim::{simulate_network, ArrayConfig, ExecScheme};
+use swis::util::bench::Emitter;
 use swis::util::json::Json;
 use swis::util::npy;
 use swis::util::rng::Rng;
@@ -87,15 +88,26 @@ fn main() -> Result<()> {
 }
 
 /// The serving SLO sweep: worker count x Poisson arrival rate through
-/// the admission queue + worker pool (backend per `BackendKind::Auto`,
-/// so it runs everywhere). Emits `BENCH_serving.json` at the repo root.
+/// the admission queue + worker pool. Since the api-facade PR the sweep
+/// measures the PLAN pipeline: one offline `Engine::prepare`, then every
+/// grid point's pool warms from the shared `EnginePlan` (zero
+/// quantization per point — exactly what a deployment does with a
+/// `.swisplan` file). Emits `BENCH_serving.json` at the repo root.
 fn serving_sweep() -> Result<()> {
-    use swis::coordinator::BackendKind;
-    use swis::loadgen::{run_sweep, write_bench_json, SweepConfig};
+    use std::sync::Arc;
+    use swis::api::{Engine, EngineConfig};
+    use swis::loadgen::{run_sweep_with, write_bench_json, SweepConfig};
+    use swis::runtime::{BackendFactory, NativeFactory};
 
-    println!("\n== serving sweep (admission queue + worker pool) ==");
+    println!("\n== serving sweep (admission queue + worker pool, plan-warmed) ==");
     let cfg = SweepConfig::default(); // workers {1,2,4} x poisson {150,300}
-    let (points, backend) = run_sweep(&art_dir(), BackendKind::Auto, &cfg)?;
+    let plan = Arc::new(Engine::prepare(
+        EngineConfig::for_net("tinycnn")?
+            .variants(cfg.variants.clone())
+            .artifacts(art_dir()),
+    )?);
+    let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(plan));
+    let (points, backend) = run_sweep_with(factory, &cfg)?;
     println!("backend: {backend}");
     println!(
         "{:>7} {:>14} {:>10} {:>10} {:>10} {:>6} {:>6}",
@@ -265,11 +277,11 @@ fn write_native_json(recs: &[Record]) -> Result<()> {
         })
         .collect();
     root.set("records", Json::Arr(records));
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join("BENCH_native_gemm.json");
-    std::fs::write(&path, root.pretty())?;
-    println!("wrote {}", path.display());
+    // atomic temp-file + rename: the depthwise section's divergence
+    // assert can no longer truncate the GEMM records already on disk
+    let em = Emitter::repo_root("BENCH_native_gemm.json");
+    em.write(&root)?;
+    println!("wrote {}", em.path().display());
     Ok(())
 }
 
@@ -666,10 +678,8 @@ fn write_json(recs: &[Record]) -> Result<()> {
         })
         .collect();
     root.set("records", Json::Arr(records));
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join("BENCH_hotpath.json");
-    std::fs::write(&path, root.pretty())?;
-    println!("\nwrote {}", path.display());
+    let em = Emitter::repo_root("BENCH_hotpath.json");
+    em.write(&root)?;
+    println!("\nwrote {}", em.path().display());
     Ok(())
 }

@@ -1,0 +1,461 @@
+//! The typed public facade: **config → plan → session**, one pipeline
+//! for every consumer.
+//!
+//! ```text
+//!   EngineConfig (typed, builder)          offline, expensive
+//!        │  net + variants + alpha + threads
+//!        ▼
+//!   Engine::prepare ──▶ EnginePlan ◀──▶ .swisplan (versioned container)
+//!        │                  │  planner output + packed layers +
+//!        │                  │  prepared GEMM/depthwise planes
+//!        ▼                  ▼
+//!   Session::run / Session::stream         online, cheap
+//!        ▲                  ▲
+//!   swis eval / benches     NativeBackend → WorkerPool (swis serve)
+//! ```
+//!
+//! The paper's whole premise (PAPER.md §3) is that the SWIS
+//! decomposition/scheduling step runs ONCE, offline, and its output is
+//! reused forever after. [`EnginePlan`] is that output as a first-class
+//! object: prepare it here (or load it from a `.swisplan` file), then
+//! hand an `Arc<EnginePlan>` to as many [`Session`]s, backends or pool
+//! workers as needed — none of them ever re-quantize (provable via
+//! [`prepare_call_count`]). Serving (`swis serve --plan`), evaluation
+//! (`swis eval`), load generation and the benches all enter through
+//! this module instead of re-deriving quantize/plan/prepare/pack
+//! pipelines of their own.
+//!
+//! Errors on every facade seam are the typed [`SwisError`] taxonomy —
+//! match on the failure class (`Config`/`Plan`/`Io`/`Backend`/
+//! `Admission`/`Eval`), not on message strings.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use swis::api::{Engine, EngineConfig, Session, VariantSpec};
+//! use std::sync::Arc;
+//!
+//! let cfg = EngineConfig::for_net("tinycnn")?
+//!     .variant(VariantSpec::fp32())
+//!     .variant(VariantSpec::swis(3.0, 4))
+//!     .threads(4);
+//! let plan = Arc::new(Engine::prepare(cfg)?);
+//! plan.save("tinycnn.swisplan".as_ref())?;          // ship this file
+//! let session = Session::new(Arc::clone(&plan));
+//! # let images = swis::util::tensor::Tensor::new(&[1, 32, 32, 3], vec![0.0; 32 * 32 * 3]).unwrap();
+//! let logits = session.run("swis@3", &images)?;
+//! # Ok::<(), swis::api::SwisError>(())
+//! ```
+
+mod plan;
+
+pub use crate::coordinator::{Scheme, VariantSpec};
+pub use crate::error::{AdmissionReason, SwisError, SwisResult};
+pub use crate::exec::WeightProvenance;
+pub use crate::quant::Alpha;
+pub use crate::util::tensor::Tensor;
+pub use plan::EnginePlan;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::exec::{net_weights, NativeModel};
+use crate::nets::{by_name, Network};
+use crate::quant::planner;
+
+/// Planner-work odometer: how many layer quantize/schedule calls this
+/// process has made. Warm-up paths that load a `.swisplan` must not
+/// move it — pinned by `tests/plan_warmup.rs`.
+pub fn prepare_call_count() -> u64 {
+    crate::schedule::prepare_call_count()
+}
+
+/// Typed, builder-style engine configuration — what the stringly
+/// `VariantSpec::parse` call sites construct now. A config names the
+/// network, the weight variants to prepare (scheme, shift budget, group
+/// size each), the MSE++ alpha and the execution thread budget; feed it
+/// to [`Engine::prepare`].
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    net: Network,
+    variants: Vec<VariantSpec>,
+    alpha: Alpha,
+    threads: usize,
+    artifacts: Option<PathBuf>,
+}
+
+impl EngineConfig {
+    /// Config for a zoo network by name (`tinycnn`, `mobilenet_v2`,
+    /// `resnet18`, `vgg16`), with its FC head — the serving topology.
+    pub fn for_net(name: &str) -> SwisResult<EngineConfig> {
+        let net = by_name(name)
+            .ok_or_else(|| SwisError::config(format!("unknown network '{name}'")))?;
+        Ok(EngineConfig::with_network(net.with_fc()))
+    }
+
+    /// Config for an explicit network descriptor (custom topologies;
+    /// pass the net with its FC head if it should serve logits).
+    pub fn with_network(net: Network) -> EngineConfig {
+        EngineConfig {
+            net,
+            variants: Vec::new(),
+            alpha: Alpha::ONE,
+            threads: 0,
+            artifacts: None,
+        }
+    }
+
+    /// Add one weight variant. Specs are validated at
+    /// [`Engine::prepare`] time (one validation point for builder- and
+    /// string-built configs alike).
+    pub fn variant(mut self, spec: VariantSpec) -> EngineConfig {
+        self.variants.push(spec);
+        self
+    }
+
+    /// Add several variants at once.
+    pub fn variants(mut self, specs: impl IntoIterator<Item = VariantSpec>) -> EngineConfig {
+        self.variants.extend(specs);
+        self
+    }
+
+    /// Parse a comma-separated variant list (`"fp32,swis@3,swis_c@2"`,
+    /// the CLI grammar) into typed specs.
+    pub fn parse_variant_list(list: &str) -> SwisResult<Vec<VariantSpec>> {
+        list.split(',').map(|s| s.trim().parse()).collect()
+    }
+
+    /// MSE++ alpha for SWIS quantization (paper Sec. 4.1.2; default 1).
+    pub fn alpha(mut self, alpha: Alpha) -> EngineConfig {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Execution thread budget recorded on the plan (0 = resolve to the
+    /// machine default at session/backend build; pools split it across
+    /// workers).
+    pub fn threads(mut self, threads: usize) -> EngineConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// Artifact directory probed for trained `<net>_weights.npz`
+    /// (deterministic surrogates otherwise — loudly).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> EngineConfig {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn variant_specs(&self) -> &[VariantSpec] {
+        &self.variants
+    }
+
+    fn validate(&self) -> SwisResult<()> {
+        if self.variants.is_empty() {
+            return Err(SwisError::config(format!(
+                "engine config for '{}' has no variants (add .variant(..))",
+                self.net.name
+            )));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for spec in &self.variants {
+            // re-validate through the typed constructor: builder-made and
+            // parsed specs meet the same bar
+            let canon = VariantSpec::new(spec.scheme, spec.n_shifts, spec.group_size)
+                .map_err(|e| e.context(format!("variant '{}'", spec.name)))?;
+            if canon.name != spec.name {
+                return Err(SwisError::config(format!(
+                    "variant name '{}' does not match its config (canonical '{}')",
+                    spec.name, canon.name
+                )));
+            }
+            if !seen.insert(spec.name.clone()) {
+                return Err(SwisError::config(format!("duplicate variant '{}'", spec.name)));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The offline pipeline entry: turns an [`EngineConfig`] into an
+/// [`EnginePlan`].
+pub struct Engine;
+
+impl Engine {
+    /// Run the full offline step — load weights (trained npz when
+    /// present, loud deterministic surrogates otherwise), quantize/
+    /// schedule every variant, pack operands, bind kernels — and return
+    /// the reusable plan. This is the ONLY place in the pipeline where
+    /// planner work happens.
+    pub fn prepare(cfg: EngineConfig) -> SwisResult<EnginePlan> {
+        cfg.validate()?;
+        let (weights, provenance) = net_weights(cfg.artifacts.as_deref(), &cfg.net)
+            .map_err(|e| {
+                SwisError::plan_from(e).context(format!("loading weights for '{}'", cfg.net.name))
+            })?;
+        let mut parts = Vec::with_capacity(cfg.variants.len());
+        for spec in &cfg.variants {
+            let transform = spec.transform()?;
+            let vp = NativeModel::plan_parts(&cfg.net, &weights, transform, cfg.alpha)
+                .map_err(|e| {
+                    SwisError::plan_from(e).context(format!(
+                        "preparing variant '{}' of '{}'",
+                        spec.name, cfg.net.name
+                    ))
+                })?;
+            parts.push(vp);
+        }
+        EnginePlan::assemble(cfg.net, cfg.threads, provenance, cfg.variants, parts)
+    }
+}
+
+/// The single inference entry over a prepared plan: synchronous
+/// [`Session::run`], or the batched [`SessionStream`] handle for callers
+/// that accumulate requests before dispatch (the shape the pool's
+/// per-worker batcher drives through [`crate::runtime::NativeBackend`]).
+/// Sessions are cheap — an `Arc` clone of the plan plus a thread budget
+/// — so every worker/caller holds its own.
+pub struct Session {
+    plan: Arc<EnginePlan>,
+    threads: usize,
+}
+
+impl Session {
+    /// Session with the plan's recorded thread budget (0 = machine
+    /// default).
+    pub fn new(plan: Arc<EnginePlan>) -> Session {
+        let threads = plan.threads();
+        Session::with_threads(plan, threads)
+    }
+
+    /// Session with an explicit intra-op thread budget (pools pass their
+    /// per-worker split so N workers never oversubscribe).
+    pub fn with_threads(plan: Arc<EnginePlan>, threads: usize) -> Session {
+        let threads = if threads == 0 { planner::default_threads() } else { threads };
+        Session { plan, threads }
+    }
+
+    pub fn plan(&self) -> &Arc<EnginePlan> {
+        &self.plan
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run one `(n, hw, hw, c)` image batch under `variant`, returning
+    /// `(n, n_classes)` logits. Bit-identical for any thread count and
+    /// batch composition (per-row activation quantization).
+    pub fn run(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>> {
+        let model = self.plan.model(variant).ok_or_else(|| {
+            SwisError::backend(format!(
+                "unknown variant '{variant}' (plan has: {})",
+                self.plan
+                    .variants()
+                    .iter()
+                    .map(|v| v.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })?;
+        model
+            .forward(images, self.threads)
+            .map_err(|e| SwisError::backend_from(e).context(format!("variant '{variant}'")))
+    }
+
+    /// Open a batched streaming handle for `variant`: push/feed images
+    /// as they arrive, flush to execute the accumulated batch in one
+    /// kernel dispatch.
+    pub fn stream(&self, variant: &str) -> SwisResult<SessionStream<'_>> {
+        if !self.plan.has_variant(variant) {
+            return Err(SwisError::backend(format!("unknown variant '{variant}'")));
+        }
+        let [h, w, c] = self.plan.input_shape();
+        Ok(SessionStream {
+            session: self,
+            variant: variant.to_string(),
+            per_image: h * w * c,
+            rows: 0,
+            data: Vec::new(),
+        })
+    }
+}
+
+/// Accumulates a batch for one variant, then executes it in a single
+/// dispatch on [`SessionStream::flush`]. Results are independent of how
+/// the batch was fed (batch-composition invariance is pinned in
+/// `exec::model` tests).
+pub struct SessionStream<'s> {
+    session: &'s Session,
+    variant: String,
+    per_image: usize,
+    rows: usize,
+    data: Vec<f32>,
+}
+
+impl SessionStream<'_> {
+    /// Append one flattened `hw * hw * c` image. Malformed requests are
+    /// `Admission { reason: Invalid }` — the SAME class the pool's edge
+    /// refuses them with, so callers classify identically whichever
+    /// entry the request came through.
+    pub fn push(&mut self, image: &[f32]) -> SwisResult<()> {
+        if image.len() != self.per_image {
+            return Err(SwisError::admission(
+                AdmissionReason::Invalid,
+                format!("image must have {} elements, got {}", self.per_image, image.len()),
+            ));
+        }
+        self.data.extend_from_slice(image);
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Append a whole `(n, hw, hw, c)` batch.
+    pub fn feed(&mut self, images: &Tensor<f32>) -> SwisResult<()> {
+        let shape = images.shape();
+        let [h, w, c] = self.session.plan.input_shape();
+        if shape.len() != 4 || shape[1] != h || shape[2] != w || shape[3] != c {
+            return Err(SwisError::admission(
+                AdmissionReason::Invalid,
+                format!("expected (n, {h}, {w}, {c}) images, got {shape:?}"),
+            ));
+        }
+        self.data.extend_from_slice(images.data());
+        self.rows += shape[0];
+        Ok(())
+    }
+
+    /// Images accumulated since the last flush.
+    pub fn pending(&self) -> usize {
+        self.rows
+    }
+
+    /// Execute the accumulated batch and reset the stream for reuse.
+    pub fn flush(&mut self) -> SwisResult<Tensor<f32>> {
+        if self.rows == 0 {
+            return Err(SwisError::admission(
+                AdmissionReason::Invalid,
+                "flush of an empty stream (push images first)",
+            ));
+        }
+        let [h, w, c] = self.session.plan.input_shape();
+        let images = Tensor::new(&[self.rows, h, w, c], std::mem::take(&mut self.data))
+            .map_err(SwisError::backend_from)?;
+        self.rows = 0;
+        self.session.run(&self.variant, &images)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tinycnn_cfg() -> EngineConfig {
+        EngineConfig::for_net("tinycnn")
+            .unwrap()
+            .variant(VariantSpec::fp32())
+            .variant(VariantSpec::swis(3.0, 4))
+            .threads(2)
+    }
+
+    fn images(batch: usize, seed: u64) -> Tensor<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data: Vec<f32> =
+            (0..batch * 32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+        Tensor::new(&[batch, 32, 32, 3], data).unwrap()
+    }
+
+    #[test]
+    fn config_builds_and_validates() {
+        assert!(matches!(
+            EngineConfig::for_net("nope").unwrap_err(),
+            SwisError::Config(_)
+        ));
+        // no variants
+        let empty = EngineConfig::for_net("tinycnn").unwrap();
+        assert!(matches!(Engine::prepare(empty).unwrap_err(), SwisError::Config(_)));
+        // duplicates
+        let dup = EngineConfig::for_net("tinycnn")
+            .unwrap()
+            .variant(VariantSpec::swis(3.0, 4))
+            .variant(VariantSpec::swis(3.0, 4));
+        assert!(matches!(Engine::prepare(dup).unwrap_err(), SwisError::Config(_)));
+        // out-of-range knobs surface as Config even from the builder path
+        let mut bad = VariantSpec::swis(3.0, 4);
+        bad.n_shifts = 12.0;
+        let cfg = EngineConfig::for_net("tinycnn").unwrap().variant(bad);
+        assert!(matches!(Engine::prepare(cfg).unwrap_err(), SwisError::Config(_)));
+    }
+
+    #[test]
+    fn parse_variant_list_round_trips_the_cli_grammar() {
+        let specs = EngineConfig::parse_variant_list("fp32, swis@3, swis_c@2.5/g8").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[2].group_size, 8);
+        assert!(EngineConfig::parse_variant_list("fp32,bogus@3").is_err());
+    }
+
+    #[test]
+    fn prepare_run_and_stream_agree() {
+        let plan = Arc::new(Engine::prepare(tinycnn_cfg()).unwrap());
+        assert_eq!(plan.net_name(), "tinycnn");
+        assert_eq!(plan.input_shape(), [32, 32, 3]);
+        assert_eq!(plan.n_classes(), 10);
+        assert_eq!(plan.variants().len(), 2);
+        assert!(plan.packed_payload_bits() > 0);
+        let session = Session::new(Arc::clone(&plan));
+        assert_eq!(session.threads(), 2);
+        let x = images(3, 9);
+        let direct = session.run("swis@3", &x).unwrap();
+        assert_eq!(direct.shape(), &[3, 10]);
+        // the streaming handle is batch-assembly sugar over the same
+        // kernels: identical logits however the batch was fed
+        let mut stream = session.stream("swis@3").unwrap();
+        for b in 0..3 {
+            stream.push(&x.data()[b * 32 * 32 * 3..(b + 1) * 32 * 32 * 3]).unwrap();
+        }
+        assert_eq!(stream.pending(), 3);
+        let streamed = stream.flush().unwrap();
+        assert_eq!(streamed.data(), direct.data());
+        assert_eq!(stream.pending(), 0);
+        // feed() takes whole tensors; flush on empty is a typed error
+        stream.feed(&x).unwrap();
+        assert_eq!(stream.flush().unwrap().data(), direct.data());
+        // malformed-request failures carry the pool's own class
+        assert!(matches!(
+            stream.flush().unwrap_err(),
+            SwisError::Admission { reason: AdmissionReason::Invalid, .. }
+        ));
+        // unknown variants are typed Backend errors
+        assert!(matches!(session.run("nope", &x).unwrap_err(), SwisError::Backend(_)));
+        assert!(matches!(session.stream("nope").unwrap_err(), SwisError::Backend(_)));
+    }
+
+    #[test]
+    fn session_is_thread_count_invariant() {
+        let plan = Arc::new(Engine::prepare(tinycnn_cfg()).unwrap());
+        let x = images(2, 4);
+        let a = Session::with_threads(Arc::clone(&plan), 1).run("swis@3", &x).unwrap();
+        let b = Session::with_threads(Arc::clone(&plan), 4).run("swis@3", &x).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn plan_round_trips_in_memory() {
+        let plan = Engine::prepare(tinycnn_cfg()).unwrap();
+        let bytes = plan.to_bytes().unwrap();
+        let back = EnginePlan::from_bytes(&bytes).unwrap();
+        assert_eq!(back.net_name(), plan.net_name());
+        assert_eq!(back.threads(), plan.threads());
+        assert_eq!(back.provenance(), plan.provenance());
+        assert_eq!(back.variants(), plan.variants());
+        let x = images(2, 11);
+        let a = Session::new(Arc::new(plan)).run("swis@3", &x).unwrap();
+        let b = Session::new(Arc::new(back)).run("swis@3", &x).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,481 @@
+//! [`EnginePlan`] — the deployable artifact of the SWIS pipeline — and
+//! its versioned binary `.swisplan` container.
+//!
+//! SWIS's value proposition is an *offline* decomposition/scheduling
+//! step whose output is reused across every inference (PAPER.md §3).
+//! The plan is that output as a first-class object: the full network
+//! descriptor, plus — per weight variant — every layer's served operand
+//! (packed SWIS containers or dense floats) and bias. It is
+//! self-contained: loading a plan needs no weight files, no artifact
+//! directory and NO quantization work (only the cheap per-plane
+//! lane-mask binding in [`NativeModel::from_parts`]), which is what
+//! lets pool workers warm from a cached plan instead of re-quantizing
+//! per process.
+//!
+//! Container layout (version 1, little-endian, bytes):
+//!
+//! ```text
+//!   magic "SWISPLAN"   version:u16   flags:u16   threads:u16
+//!   provenance:u8      net name:str  layer table (kind/geometry rows)
+//!   input [hw,hw,c]:u32x3            n_classes:u32
+//!   n_variants:u16
+//!   per variant: name:str scheme:u8 n_shifts:f64 group:u16
+//!     n_parts:u32, per part: layer:str tag:u8
+//!       dense:  count:u32 + f32 weights (filters-first)
+//!       packed: len:u32 + `.swis` container (quant::serialize)
+//!     bias: count:u32 + f32
+//!   fnv1a64 checksum of everything above: u64
+//! ```
+//!
+//! `str` is `u16` length + UTF-8. The checksum is verified before any
+//! BODY field is trusted (magic and version are read first so mismatch
+//! errors stay legible); a flipped bit, a truncation or a version bump
+//! all reject with a typed [`SwisError::Plan`].
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::coordinator::{Scheme, VariantSpec};
+use crate::error::{SwisError, SwisResult};
+use crate::exec::{LayerOperand, NativeModel, PreparedLayer, WeightProvenance};
+use crate::nets::{ConvKind, ConvLayer, Network};
+use crate::quant::serialize;
+
+const MAGIC: &[u8; 8] = b"SWISPLAN";
+const VERSION: u16 = 1;
+
+/// A prepared engine: the planner output, packed layers and per-variant
+/// operands for one network — everything [`super::Session`] and the
+/// serving backends execute, serializable to/from `.swisplan`.
+pub struct EnginePlan {
+    net: Network,
+    input: [usize; 3],
+    n_classes: usize,
+    /// Requested execution thread budget (0 = auto at session build).
+    threads: usize,
+    provenance: WeightProvenance,
+    variants: Vec<VariantSpec>,
+    /// Parallel to `variants`: each variant's served operands.
+    parts: Vec<Vec<PreparedLayer>>,
+    /// Ready-to-run models (callers share the whole plan via
+    /// `Arc<EnginePlan>`; replicas are pointer clones of that).
+    models: HashMap<String, NativeModel>,
+}
+
+impl EnginePlan {
+    /// Assemble a plan from prepared per-variant operands (the tail of
+    /// [`super::Engine::prepare`] and of [`EnginePlan::from_bytes`]).
+    pub(crate) fn assemble(
+        net: Network,
+        threads: usize,
+        provenance: WeightProvenance,
+        variants: Vec<VariantSpec>,
+        parts: Vec<Vec<PreparedLayer>>,
+    ) -> SwisResult<EnginePlan> {
+        if variants.is_empty() {
+            return Err(SwisError::config("a plan needs at least one variant"));
+        }
+        if variants.len() != parts.len() {
+            return Err(SwisError::plan(format!(
+                "{} variants but {} operand sets",
+                variants.len(),
+                parts.len()
+            )));
+        }
+        let mut models = HashMap::new();
+        let mut input = [0usize; 3];
+        let mut n_classes = 0usize;
+        for (spec, vp) in variants.iter().zip(&parts) {
+            let model = NativeModel::from_parts(&net, vp).map_err(|e| {
+                SwisError::plan_from(e)
+                    .context(format!("binding variant '{}' of '{}'", spec.name, net.name))
+            })?;
+            input = model.input_shape();
+            n_classes = model.n_classes();
+            if models.insert(spec.name.clone(), model).is_some() {
+                return Err(SwisError::config(format!("duplicate variant '{}'", spec.name)));
+            }
+        }
+        Ok(EnginePlan { net, input, n_classes, threads, provenance, variants, parts, models })
+    }
+
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn net_name(&self) -> &str {
+        &self.net.name
+    }
+
+    /// Per-request image shape `[hw, hw, c]`.
+    pub fn input_shape(&self) -> [usize; 3] {
+        self.input
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Requested execution thread budget (0 = auto).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn provenance(&self) -> WeightProvenance {
+        self.provenance
+    }
+
+    pub fn variants(&self) -> &[VariantSpec] {
+        &self.variants
+    }
+
+    pub fn has_variant(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    /// The ready-to-run model for a variant name.
+    pub fn model(&self, variant: &str) -> Option<&NativeModel> {
+        self.models.get(variant)
+    }
+
+    /// Total packed payload bits across all packed variants (the
+    /// Sec. 3.3 accounting, summed).
+    pub fn packed_payload_bits(&self) -> u64 {
+        self.models.values().map(|m| m.packed_payload_bits).sum()
+    }
+
+    // ----------------------------------------------------------------
+    // serialization
+    // ----------------------------------------------------------------
+
+    /// Serialize to the versioned `.swisplan` container. Every count and
+    /// length field is RANGE-CHECKED before narrowing — a value that
+    /// cannot fit its field is a loud [`SwisError::Plan`], never a
+    /// silent truncation that would checksum as valid and decode to a
+    /// different configuration.
+    pub fn to_bytes(&self) -> SwisResult<Vec<u8>> {
+        let mut w = Writer::new();
+        w.bytes_raw(MAGIC);
+        w.u16(VERSION);
+        w.u16(0); // flags, reserved
+        w.u16(fit_u16(self.threads, "thread budget")?);
+        w.u8(match self.provenance {
+            WeightProvenance::Npz => 0,
+            WeightProvenance::Surrogate => 1,
+        });
+        w.str(&self.net.name)?;
+        w.u32(fit_u32(self.net.layers.len(), "layer count")?);
+        for l in &self.net.layers {
+            w.str(&l.name)?;
+            w.u8(match l.kind {
+                ConvKind::Standard => 0,
+                ConvKind::Depthwise => 1,
+            });
+            for dim in [l.in_hw, l.in_c, l.k, l.stride, l.pad, l.out_c] {
+                w.u32(fit_u32(dim, "layer dimension")?);
+            }
+        }
+        for dim in self.input {
+            w.u32(fit_u32(dim, "input dimension")?);
+        }
+        w.u32(fit_u32(self.n_classes, "class count")?);
+        w.u16(fit_u16(self.variants.len(), "variant count")?);
+        for (spec, parts) in self.variants.iter().zip(&self.parts) {
+            w.str(&spec.name)?;
+            w.u8(scheme_tag(spec.scheme));
+            w.f64(spec.n_shifts);
+            w.u16(fit_u16(spec.group_size, "group size")?);
+            w.u32(fit_u32(parts.len(), "operand count")?);
+            for p in parts {
+                w.str(&p.name)?;
+                match &p.operand {
+                    LayerOperand::Dense(d) => {
+                        w.u8(0);
+                        w.u32(fit_u32(d.len(), "dense operand length")?);
+                        for &v in d.iter() {
+                            w.bytes_raw(&v.to_le_bytes());
+                        }
+                    }
+                    LayerOperand::Packed(packed) => {
+                        w.u8(1);
+                        let bytes = serialize::to_bytes(packed).map_err(|e| {
+                            SwisError::plan_from(e)
+                                .context(format!("packing layer '{}'", p.name))
+                        })?;
+                        w.u32(fit_u32(bytes.len(), "packed operand length")?);
+                        w.bytes_raw(&bytes);
+                    }
+                }
+                w.u32(fit_u32(p.bias.len(), "bias length")?);
+                for &v in &p.bias {
+                    w.bytes_raw(&v.to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a64(&w.out);
+        w.bytes_raw(&sum.to_le_bytes());
+        Ok(w.out)
+    }
+
+    /// Deserialize a `.swisplan` container: header, version and checksum
+    /// are verified before anything is trusted, then kernels are bound
+    /// from the stored operands (no quantization).
+    pub fn from_bytes(bytes: &[u8]) -> SwisResult<EnginePlan> {
+        if bytes.len() < MAGIC.len() + 2 || &bytes[..MAGIC.len()] != MAGIC {
+            return Err(SwisError::plan("not a .swisplan container (bad magic)"));
+        }
+        let version = u16::from_le_bytes([bytes[8], bytes[9]]);
+        if version != VERSION {
+            return Err(SwisError::plan(format!(
+                "unsupported .swisplan version {version} (this build reads version {VERSION})"
+            )));
+        }
+        if bytes.len() < MAGIC.len() + 2 + 8 {
+            return Err(SwisError::plan("truncated .swisplan container"));
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a64(body) != stored {
+            return Err(SwisError::plan("corrupt .swisplan container (checksum mismatch)"));
+        }
+        let mut r = Reader { b: body, pos: MAGIC.len() + 2 };
+        let _flags = r.u16()?;
+        let threads = r.u16()? as usize;
+        let provenance = match r.u8()? {
+            0 => WeightProvenance::Npz,
+            1 => WeightProvenance::Surrogate,
+            other => {
+                return Err(SwisError::plan(format!("unknown weight provenance tag {other}")))
+            }
+        };
+        let net_name = r.str()?;
+        // count fields are untrusted until their entries actually parse:
+        // clamp every pre-reservation by what the container could even
+        // hold (min entry width 8 bytes), so a forged count is a typed
+        // parse error downstream, never a multi-GB allocation attempt
+        let max_entries = body.len() / 8;
+        let cap = move |n: usize| n.min(max_entries);
+        let n_layers = r.u32()? as usize;
+        let mut layers = Vec::with_capacity(cap(n_layers));
+        for _ in 0..n_layers {
+            let name = r.str()?;
+            let kind = match r.u8()? {
+                0 => ConvKind::Standard,
+                1 => ConvKind::Depthwise,
+                other => return Err(SwisError::plan(format!("unknown layer kind tag {other}"))),
+            };
+            let dims: Vec<usize> = (0..6)
+                .map(|_| r.u32().map(|v| v as usize))
+                .collect::<SwisResult<_>>()?;
+            layers.push(ConvLayer {
+                name,
+                kind,
+                in_hw: dims[0],
+                in_c: dims[1],
+                k: dims[2],
+                stride: dims[3],
+                pad: dims[4],
+                out_c: dims[5],
+            });
+        }
+        let net = Network { name: net_name, layers };
+        let input = [r.u32()? as usize, r.u32()? as usize, r.u32()? as usize];
+        let n_classes = r.u32()? as usize;
+        let n_variants = r.u16()? as usize;
+        let mut variants = Vec::with_capacity(cap(n_variants));
+        let mut parts = Vec::with_capacity(cap(n_variants));
+        for _ in 0..n_variants {
+            let name = r.str()?;
+            let scheme = scheme_from_tag(r.u8()?)?;
+            let n_shifts = r.f64()?;
+            let group = r.u16()? as usize;
+            let spec = VariantSpec::new(scheme, n_shifts, group)
+                .map_err(|e| e.context(format!("variant '{name}' in plan")))?;
+            if spec.name != name {
+                return Err(SwisError::plan(format!(
+                    "variant name '{name}' does not match its config '{}'",
+                    spec.name
+                )));
+            }
+            let n_parts = r.u32()? as usize;
+            let mut vp = Vec::with_capacity(cap(n_parts));
+            for _ in 0..n_parts {
+                let lname = r.str()?;
+                let operand = match r.u8()? {
+                    0 => LayerOperand::Dense(std::sync::Arc::new(r.f32_vec()?)),
+                    1 => {
+                        let len = r.u32()? as usize;
+                        let raw = r.take(len)?;
+                        LayerOperand::Packed(serialize::from_bytes(raw).map_err(|e| {
+                            SwisError::plan_from(e)
+                                .context(format!("packed operand '{lname}'"))
+                        })?)
+                    }
+                    other => {
+                        return Err(SwisError::plan(format!("unknown operand tag {other}")))
+                    }
+                };
+                let bias = r.f32_vec()?;
+                vp.push(PreparedLayer { name: lname, operand, bias });
+            }
+            variants.push(spec);
+            parts.push(vp);
+        }
+        if r.pos != body.len() {
+            return Err(SwisError::plan(format!(
+                "trailing bytes in .swisplan at offset {}",
+                r.pos
+            )));
+        }
+        let plan = EnginePlan::assemble(net, threads, provenance, variants, parts)?;
+        if plan.input != input || plan.n_classes != n_classes {
+            return Err(SwisError::plan(format!(
+                "stored shape ({input:?} -> {n_classes}) disagrees with the descriptor \
+                 ({:?} -> {})",
+                plan.input, plan.n_classes
+            )));
+        }
+        Ok(plan)
+    }
+
+    /// Write the container to `path` atomically (the shared
+    /// [`crate::util::bench::write_atomic`] temp-file + rename, so a
+    /// crash mid-write can never leave a half-plan behind).
+    pub fn save(&self, path: &Path) -> SwisResult<()> {
+        crate::util::bench::write_atomic(path, &self.to_bytes()?)
+    }
+
+    /// Read a `.swisplan` container from disk.
+    pub fn load(path: &Path) -> SwisResult<EnginePlan> {
+        let bytes = std::fs::read(path).map_err(|e| SwisError::io_at(path, e))?;
+        EnginePlan::from_bytes(&bytes)
+            .map_err(|e| e.context(format!("loading {}", path.display())))
+    }
+}
+
+fn scheme_tag(s: Scheme) -> u8 {
+    match s {
+        Scheme::Fp32 => 0,
+        Scheme::Swis => 1,
+        Scheme::SwisC => 2,
+        Scheme::WgtTrunc => 3,
+    }
+}
+
+fn scheme_from_tag(t: u8) -> SwisResult<Scheme> {
+    Ok(match t {
+        0 => Scheme::Fp32,
+        1 => Scheme::Swis,
+        2 => Scheme::SwisC,
+        3 => Scheme::WgtTrunc,
+        other => return Err(SwisError::plan(format!("unknown scheme tag {other}"))),
+    })
+}
+
+/// Range-check a count/length into a u16 container field.
+fn fit_u16(v: usize, what: &str) -> SwisResult<u16> {
+    u16::try_from(v)
+        .map_err(|_| SwisError::plan(format!("{what} {v} exceeds the container's u16 field")))
+}
+
+/// Range-check a count/length into a u32 container field.
+fn fit_u32(v: usize, what: &str) -> SwisResult<u32> {
+    u32::try_from(v)
+        .map_err(|_| SwisError::plan(format!("{what} {v} exceeds the container's u32 field")))
+}
+
+/// FNV-1a 64-bit — cheap corruption detection, not cryptography.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+struct Writer {
+    out: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { out: Vec::new() }
+    }
+
+    fn bytes_raw(&mut self, b: &[u8]) {
+        self.out.extend_from_slice(b);
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.out.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.bytes_raw(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.bytes_raw(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.bytes_raw(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) -> SwisResult<()> {
+        self.u16(fit_u16(s.len(), "string length")?);
+        self.bytes_raw(s.as_bytes());
+        Ok(())
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> SwisResult<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            return Err(SwisError::plan(format!("truncated .swisplan at byte {}", self.pos)));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> SwisResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> SwisResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> SwisResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> SwisResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> SwisResult<String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| SwisError::plan(format!("invalid UTF-8 string at byte {}", self.pos)))
+    }
+
+    fn f32_vec(&mut self) -> SwisResult<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            SwisError::plan("overflowing f32 vector length in .swisplan")
+        })?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}

@@ -44,7 +44,7 @@ pub use batcher::{BatchPolicy, PendingBatch};
 pub use metrics::{Metrics, MetricsSnapshot, RESERVOIR_CAP};
 pub use pool::{Admission, PoolConfig, Ticket, WorkerPool, DEFAULT_QUEUE_DEPTH};
 pub use server::{Coordinator, InferRequest, InferResponse};
-pub use variants::{quantize_jax_weight, VariantSpec, WeightVariants};
+pub use variants::{quantize_jax_weight, Scheme, VariantSpec, WeightVariants};
 
 // Backend selection lives in the runtime layer; re-exported here because
 // callers choose it where they start the coordinator or pool.

@@ -23,7 +23,6 @@
 //! of the pool keep serving. The single-worker [`super::Coordinator`] is
 //! a thin facade over this type.
 
-use anyhow::{bail, Context, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -37,6 +36,7 @@ use super::batcher::{BatchPolicy, PendingBatch};
 use super::metrics::Metrics;
 use super::server::{InferRequest, InferResponse};
 use super::variants::VariantSpec;
+use crate::error::{AdmissionReason, SwisError, SwisResult};
 use crate::runtime::{create_factory, Backend, BackendFactory, BackendKind};
 use crate::util::tensor::Tensor;
 
@@ -60,8 +60,11 @@ impl Default for PoolConfig {
     }
 }
 
-/// The response side of one accepted request.
-pub type Ticket = Receiver<Result<InferResponse, String>>;
+/// The response side of one accepted request. Failures arrive as the
+/// typed [`SwisError`] (shed deadlines are `Admission { reason: Shed }`,
+/// execution failures are `Backend`), so callers classify outcomes by
+/// matching, never by message prefix.
+pub type Ticket = Receiver<Result<InferResponse, SwisError>>;
 
 /// Outcome of a non-blocking submission.
 pub enum Admission {
@@ -73,7 +76,7 @@ pub enum Admission {
 /// One queued request: payload + response channel + timing/SLO state.
 struct Job {
     req: InferRequest,
-    respond: Sender<Result<InferResponse, String>>,
+    respond: Sender<Result<InferResponse, SwisError>>,
     enqueued: Instant,
     deadline: Option<Instant>,
 }
@@ -106,7 +109,7 @@ impl WorkerPool {
         cfg: PoolConfig,
         variants: Vec<VariantSpec>,
         kind: BackendKind,
-    ) -> Result<WorkerPool> {
+    ) -> SwisResult<WorkerPool> {
         let factory: Arc<dyn BackendFactory> =
             Arc::from(create_factory(kind, artifacts, &variants)?);
         WorkerPool::start_with_factory(factory, cfg)
@@ -122,7 +125,7 @@ impl WorkerPool {
         net: &crate::nets::Network,
         variants: Vec<VariantSpec>,
         kind: BackendKind,
-    ) -> Result<WorkerPool> {
+    ) -> SwisResult<WorkerPool> {
         let factory: Arc<dyn BackendFactory> =
             Arc::from(crate::runtime::create_factory_net(kind, artifacts, net, &variants)?);
         WorkerPool::start_with_factory(factory, cfg)
@@ -134,19 +137,20 @@ impl WorkerPool {
     pub fn start_with_factory(
         factory: Arc<dyn BackendFactory>,
         cfg: PoolConfig,
-    ) -> Result<WorkerPool> {
+    ) -> SwisResult<WorkerPool> {
         if cfg.workers == 0 {
-            bail!("worker pool needs at least one worker");
+            return Err(SwisError::config("worker pool needs at least one worker"));
         }
         if cfg.queue_depth == 0 {
-            bail!("queue depth must be at least 1");
+            return Err(SwisError::config("queue depth must be at least 1"));
         }
         let queue = Arc::new(AdmissionQueue::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::default());
         let alive = Arc::new(AtomicUsize::new(0));
         // warm-up handshake: each worker reports its backend's name and
         // per-request image shape (the pool sizes admission checks off it)
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(&'static str, [usize; 3]), String>>();
+        let (ready_tx, ready_rx) =
+            mpsc::channel::<Result<(&'static str, [usize; 3]), SwisError>>();
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let (f, q, m, a, rt) = (
@@ -161,7 +165,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("swis-worker-{w}"))
                     .spawn(move || worker_main(n_workers, f, q, policy, m, a, rt))
-                    .context("spawning pool worker")?,
+                    .map_err(|e| SwisError::backend(format!("spawning pool worker: {e}")))?,
             );
         }
         drop(ready_tx);
@@ -178,14 +182,14 @@ impl WorkerPool {
                     for h in workers {
                         let _ = h.join();
                     }
-                    bail!("pool worker failed to start: {e}");
+                    return Err(e.context("pool worker failed to start"));
                 }
                 Err(_) => {
                     queue.close();
                     for h in workers {
                         let _ = h.join();
                     }
-                    bail!("pool worker died during warm-up");
+                    return Err(SwisError::backend("pool worker died during warm-up"));
                 }
             }
         }
@@ -213,14 +217,15 @@ impl WorkerPool {
     }
 
     /// Non-blocking admission: `Ok(Busy)` is backpressure (counted in
-    /// metrics as rejected); `Err` is a hard fault (bad request, pool
-    /// down). `deadline` is the shed budget measured from now.
+    /// metrics as rejected); `Err` is a typed hard fault — `Admission`
+    /// with reason `Invalid` (bad request) or `Closed` (pool down).
+    /// `deadline` is the shed budget measured from now.
     pub fn try_submit(
         &self,
         req: InferRequest,
         pri: Priority,
         deadline: Option<Duration>,
-    ) -> Result<Admission> {
+    ) -> SwisResult<Admission> {
         let (job, rx) = self.make_job(req, deadline)?;
         match self.queue.try_push(job, pri) {
             Ok(()) => Ok(Admission::Accepted(rx)),
@@ -228,7 +233,10 @@ impl WorkerPool {
                 self.metrics.record_rejected();
                 Ok(Admission::Busy)
             }
-            Err(SubmitError::Closed(_)) => bail!("worker pool is shut down"),
+            Err(SubmitError::Closed(_)) => Err(SwisError::admission(
+                AdmissionReason::Closed,
+                "worker pool is shut down",
+            )),
         }
     }
 
@@ -238,28 +246,41 @@ impl WorkerPool {
         req: InferRequest,
         pri: Priority,
         deadline: Option<Duration>,
-    ) -> Result<Ticket> {
+    ) -> SwisResult<Ticket> {
         let (job, rx) = self.make_job(req, deadline)?;
-        self.queue
-            .push_wait(job, pri)
-            .map_err(|_| anyhow::anyhow!("worker pool is shut down"))?;
+        self.queue.push_wait(job, pri).map_err(|_| {
+            SwisError::admission(AdmissionReason::Closed, "worker pool is shut down")
+        })?;
         Ok(rx)
     }
 
-    /// Convenience: interactive submit + block for the result.
-    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+    /// Convenience: interactive submit + block for the result. A
+    /// response channel that closes without an answer is a BACKEND
+    /// failure (a contained worker panic dropped the in-flight batch —
+    /// the pool may well still be serving), not `Admission::Closed`.
+    pub fn infer(&self, req: InferRequest) -> SwisResult<InferResponse> {
         let rx = self.submit(req, Priority::Interactive, None)?;
-        rx.recv()
-            .context("pool dropped the request")?
-            .map_err(|e| anyhow::anyhow!(e))
+        rx.recv().map_err(|_| {
+            SwisError::backend("pool dropped the request (in-flight batch failed)")
+        })?
     }
 
-    fn make_job(&self, req: InferRequest, deadline: Option<Duration>) -> Result<(Job, Ticket)> {
+    fn make_job(
+        &self,
+        req: InferRequest,
+        deadline: Option<Duration>,
+    ) -> SwisResult<(Job, Ticket)> {
         if req.image.len() != self.image_len {
-            bail!("image must have {} elements, got {}", self.image_len, req.image.len());
+            return Err(SwisError::admission(
+                AdmissionReason::Invalid,
+                format!("image must have {} elements, got {}", self.image_len, req.image.len()),
+            ));
         }
         if self.alive.load(Ordering::SeqCst) == 0 {
-            bail!("no live workers in the pool");
+            return Err(SwisError::admission(
+                AdmissionReason::Closed,
+                "no live workers in the pool",
+            ));
         }
         let now = Instant::now();
         let (respond, rx) = mpsc::channel();
@@ -267,12 +288,12 @@ impl WorkerPool {
     }
 
     /// Graceful shutdown: close admission, drain, join every worker.
-    pub fn shutdown(mut self) -> Result<()> {
+    pub fn shutdown(mut self) -> SwisResult<()> {
         self.queue.close();
         let mut result = Ok(());
         for h in self.workers.drain(..) {
             if h.join().is_err() {
-                result = Err(anyhow::anyhow!("pool worker panicked"));
+                result = Err(SwisError::backend("pool worker panicked"));
             }
         }
         result
@@ -304,7 +325,7 @@ fn worker_main(
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     alive: Arc<AtomicUsize>,
-    ready: Sender<Result<(&'static str, [usize; 3]), String>>,
+    ready: Sender<Result<(&'static str, [usize; 3]), SwisError>>,
 ) {
     // Warm-up on this thread: thread-affine backends (PJRT) must be
     // constructed where they execute. A panicking factory is reported as
@@ -312,11 +333,11 @@ fn worker_main(
     let backend = match catch_unwind(AssertUnwindSafe(|| factory.make(n_workers))) {
         Ok(Ok(b)) => b,
         Ok(Err(e)) => {
-            let _ = ready.send(Err(format!("{e:#}")));
+            let _ = ready.send(Err(e));
             return;
         }
         Err(_) => {
-            let _ = ready.send(Err("backend construction panicked".into()));
+            let _ = ready.send(Err(SwisError::backend("backend construction panicked")));
             return;
         }
     };
@@ -383,9 +404,9 @@ fn flush_shed(shed: &mut Vec<Job>, metrics: &Metrics) {
     metrics.record_shed(shed.len());
     for j in shed.drain(..) {
         let waited = j.enqueued.elapsed();
-        let _ = j.respond.send(Err(format!(
-            "shed: deadline exceeded after {:.1} ms in queue",
-            waited.as_secs_f64() * 1e3
+        let _ = j.respond.send(Err(SwisError::admission(
+            AdmissionReason::Shed,
+            format!("deadline exceeded after {:.1} ms in queue", waited.as_secs_f64() * 1e3),
         )));
     }
 }
@@ -402,7 +423,9 @@ fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics, resolved: 
         metrics.record_errors(jobs.len());
         resolved.fetch_add(jobs.len(), Ordering::SeqCst);
         for j in &jobs {
-            let _ = j.respond.send(Err(format!("unknown variant '{variant}'")));
+            let _ = j
+                .respond
+                .send(Err(SwisError::backend(format!("unknown variant '{variant}'"))));
         }
         return;
     }
@@ -414,7 +437,10 @@ fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics, resolved: 
         metrics.record_shed(expired.len());
         resolved.fetch_add(expired.len(), Ordering::SeqCst);
         for j in &expired {
-            let _ = j.respond.send(Err("shed: deadline exceeded before execution".to_string()));
+            let _ = j.respond.send(Err(SwisError::admission(
+                AdmissionReason::Shed,
+                "deadline exceeded before execution",
+            )));
         }
     }
     // execute in backend-planned chunks rather than padding the whole
@@ -443,8 +469,9 @@ fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Met
         Ok(t) => t,
         Err(e) => {
             metrics.record_errors(n);
+            let err = SwisError::backend_from(e);
             for j in group {
-                let _ = j.respond.send(Err(format!("{e:#}")));
+                let _ = j.respond.send(Err(err.clone()));
             }
             return;
         }
@@ -473,7 +500,7 @@ fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Met
         Err(e) => {
             metrics.record_errors(n);
             for j in group {
-                let _ = j.respond.send(Err(format!("{e:#}")));
+                let _ = j.respond.send(Err(e.clone()));
             }
         }
     }

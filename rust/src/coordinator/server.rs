@@ -7,17 +7,16 @@
 //! admission with `try_submit -> Busy` backpressure, priority lanes and
 //! deadline shedding.
 
-use anyhow::{Context, Result};
 use std::path::Path;
-use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
 
 use super::admission::Priority;
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
-use super::pool::{PoolConfig, WorkerPool, DEFAULT_QUEUE_DEPTH};
+use super::pool::{PoolConfig, Ticket, WorkerPool, DEFAULT_QUEUE_DEPTH};
 use super::variants::VariantSpec;
+use crate::error::SwisResult;
 use crate::runtime::BackendKind;
 
 /// One inference request: an NHWC image (flattened `hw * hw * c` of the
@@ -51,7 +50,7 @@ impl Coordinator {
         artifacts: &Path,
         policy: BatchPolicy,
         variants: Vec<VariantSpec>,
-    ) -> Result<Coordinator> {
+    ) -> SwisResult<Coordinator> {
         Coordinator::start_with(artifacts, policy, variants, BackendKind::Auto)
     }
 
@@ -63,10 +62,10 @@ impl Coordinator {
         policy: BatchPolicy,
         variants: Vec<VariantSpec>,
         backend: BackendKind,
-    ) -> Result<Coordinator> {
+    ) -> SwisResult<Coordinator> {
         let cfg = PoolConfig { workers: 1, policy, queue_depth: DEFAULT_QUEUE_DEPTH };
         let pool = WorkerPool::start(artifacts, cfg, variants, backend)
-            .context("coordinator failed to start")?;
+            .map_err(|e| e.context("coordinator failed to start"))?;
         let metrics = Arc::clone(&pool.metrics);
         Ok(Coordinator { pool, metrics })
     }
@@ -79,17 +78,17 @@ impl Coordinator {
     /// Submit a request; returns the response channel immediately.
     /// Facade semantics: interactive priority, no shed deadline, blocks
     /// only in the (deep) admission queue — never refuses with Busy.
-    pub fn submit(&self, req: InferRequest) -> Result<Receiver<Result<InferResponse, String>>> {
+    pub fn submit(&self, req: InferRequest) -> SwisResult<Ticket> {
         self.pool.submit(req, Priority::Interactive, None)
     }
 
     /// Convenience: submit and block for the result.
-    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+    pub fn infer(&self, req: InferRequest) -> SwisResult<InferResponse> {
         self.pool.infer(req)
     }
 
     /// Graceful shutdown: drains the queue, then joins the worker.
-    pub fn shutdown(self) -> Result<()> {
+    pub fn shutdown(self) -> SwisResult<()> {
         self.pool.shutdown()
     }
 }

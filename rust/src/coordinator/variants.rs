@@ -3,102 +3,252 @@
 //! truncation baselines) over the SAME compiled graph — quantization is a
 //! pure weight transform (paper Sec. 2), so variants cost no extra
 //! compilation.
+//!
+//! [`VariantSpec`] is the TYPED description of one configuration: a
+//! [`Scheme`] plus shift/group knobs. The string grammar
+//! `fp32 | <scheme>[@<shifts>][/g<group>]` is a thin veneer over it —
+//! `FromStr` parses into the typed spec and `Display` emits exactly the
+//! inverse, so a spec can round-trip through logs, manifests and
+//! `.swisplan` containers without loss (pinned by a property test
+//! below). Programmatic callers build specs through the typed
+//! constructors ([`VariantSpec::new`], [`VariantSpec::swis`], ...) and
+//! never touch the grammar.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
 
+use crate::error::{SwisError, SwisResult};
+use crate::exec::kernel::MAX_GROUP_SIZE;
 use crate::exec::model::filters_first;
 use crate::exec::WeightTransform;
 use crate::util::tensor::Tensor;
 
-/// A named weight configuration.
-#[derive(Clone, Debug)]
+/// Quantization scheme of a served weight variant — the typed form of
+/// the old stringly `"fp32" | "swis" | "swis_c" | "wgt_trunc"` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Serve the fp32 weights unchanged.
+    Fp32,
+    /// SWIS shared-shift quantization (paper Sec. 2).
+    Swis,
+    /// SWIS-C: consecutive shift windows (one 3-bit offset per group).
+    SwisC,
+    /// Weight-truncation baseline.
+    WgtTrunc,
+}
+
+impl Scheme {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Scheme::Fp32 => "fp32",
+            Scheme::Swis => "swis",
+            Scheme::SwisC => "swis_c",
+            Scheme::WgtTrunc => "wgt_trunc",
+        }
+    }
+
+    /// Schemes the quantized sweep walks (everything but the identity).
+    pub fn quantized() -> [Scheme; 3] {
+        [Scheme::Swis, Scheme::SwisC, Scheme::WgtTrunc]
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for Scheme {
+    type Err = SwisError;
+
+    fn from_str(s: &str) -> SwisResult<Scheme> {
+        Ok(match s {
+            "fp32" => Scheme::Fp32,
+            "swis" => Scheme::Swis,
+            "swis_c" => Scheme::SwisC,
+            "wgt_trunc" => Scheme::WgtTrunc,
+            other => {
+                return Err(SwisError::config(format!(
+                    "unknown scheme '{other}' (expected fp32, swis, swis_c or wgt_trunc)"
+                )))
+            }
+        })
+    }
+}
+
+/// A named weight configuration: scheme + shift budget + group size.
+/// `name` is always the canonical `Display` form, so equal
+/// configurations can never hide behind different names.
+#[derive(Clone, Debug, PartialEq)]
 pub struct VariantSpec {
     pub name: String,
-    /// "fp32" | "swis" | "swis_c" | "wgt_trunc"
-    pub scheme: String,
-    /// Effective shifts (fractional triggers the Sec. 4.3 scheduler).
+    pub scheme: Scheme,
+    /// Effective shifts (fractional triggers the Sec. 4.3 scheduler);
+    /// bit count for `wgt_trunc`.
     pub n_shifts: f64,
     pub group_size: usize,
 }
 
+/// Default SWIS group size (the paper's G=4 operating point); elided
+/// from the canonical string form.
+const DEFAULT_GROUP: usize = 4;
+
 impl VariantSpec {
     pub fn fp32() -> VariantSpec {
-        VariantSpec { name: "fp32".into(), scheme: "fp32".into(), n_shifts: 8.0, group_size: 4 }
+        VariantSpec {
+            name: "fp32".into(),
+            scheme: Scheme::Fp32,
+            n_shifts: 8.0,
+            group_size: DEFAULT_GROUP,
+        }
     }
 
     pub fn swis(n: f64, g: usize) -> VariantSpec {
-        VariantSpec { name: format!("swis@{n}"), scheme: "swis".into(), n_shifts: n, group_size: g }
+        VariantSpec::canonical(Scheme::Swis, n, g)
     }
 
     pub fn swis_c(n: f64, g: usize) -> VariantSpec {
-        VariantSpec { name: format!("swis_c@{n}"), scheme: "swis_c".into(), n_shifts: n, group_size: g }
+        VariantSpec::canonical(Scheme::SwisC, n, g)
+    }
+
+    pub fn wgt_trunc(bits: usize) -> VariantSpec {
+        VariantSpec::canonical(Scheme::WgtTrunc, bits as f64, DEFAULT_GROUP)
+    }
+
+    /// Validated typed constructor — the entry the builder-style
+    /// [`crate::api::EngineConfig`] uses. Shifts must lie in `(0, 8]`
+    /// (8-bit magnitudes), be integral for `wgt_trunc`, and the group
+    /// size must fit the native kernel's lane masks (`1..=16`,
+    /// [`MAX_GROUP_SIZE`]). `fp32` ignores both knobs and normalizes to
+    /// the canonical spec.
+    pub fn new(scheme: Scheme, n_shifts: f64, group_size: usize) -> SwisResult<VariantSpec> {
+        if scheme == Scheme::Fp32 {
+            return Ok(VariantSpec::fp32());
+        }
+        if !n_shifts.is_finite() || n_shifts <= 0.0 || n_shifts > 8.0 {
+            return Err(SwisError::config(format!(
+                "shift count {n_shifts} out of range (0, 8] for scheme '{scheme}'"
+            )));
+        }
+        if scheme == Scheme::WgtTrunc && n_shifts.fract() != 0.0 {
+            return Err(SwisError::config(format!(
+                "wgt_trunc needs an integer bit count, got {n_shifts}"
+            )));
+        }
+        if group_size == 0 || group_size > MAX_GROUP_SIZE {
+            return Err(SwisError::config(format!(
+                "group size {group_size} out of range 1..={MAX_GROUP_SIZE}"
+            )));
+        }
+        Ok(VariantSpec::canonical(scheme, n_shifts, group_size))
+    }
+
+    fn canonical(scheme: Scheme, n_shifts: f64, group_size: usize) -> VariantSpec {
+        let mut v = VariantSpec { name: String::new(), scheme, n_shifts, group_size };
+        v.name = v.to_string();
+        v
     }
 
     /// The backend-agnostic weight transform this variant denotes — the
     /// single scheme-to-math dispatch shared by the PJRT weight swap
     /// ([`quantize_jax_weight`]) and the native engine.
-    pub fn transform(&self) -> Result<WeightTransform> {
-        Ok(match self.scheme.as_str() {
-            "fp32" => WeightTransform::Fp32,
-            "swis" | "swis_c" => WeightTransform::Swis {
+    pub fn transform(&self) -> SwisResult<WeightTransform> {
+        Ok(match self.scheme {
+            Scheme::Fp32 => WeightTransform::Fp32,
+            Scheme::Swis | Scheme::SwisC => WeightTransform::Swis {
                 n_shifts: self.n_shifts,
                 group_size: self.group_size,
-                consecutive: self.scheme == "swis_c",
+                consecutive: self.scheme == Scheme::SwisC,
             },
-            "wgt_trunc" => WeightTransform::Truncate { bits: self.n_shifts as usize },
-            other => bail!("unknown scheme '{other}'"),
+            Scheme::WgtTrunc => {
+                if self.n_shifts.fract() != 0.0 {
+                    return Err(SwisError::config(format!(
+                        "wgt_trunc needs an integer bit count, got {} in '{}'",
+                        self.n_shifts, self.name
+                    )));
+                }
+                WeightTransform::Truncate { bits: self.n_shifts as usize }
+            }
         })
     }
 
-    /// Parse `"fp32"` or `"<scheme>[@<shifts>]"` where scheme is one of
-    /// `swis`, `swis_c`, `wgt_trunc`. A bare scheme name defaults to 3
-    /// shifts (the paper's headline operating point, Sec. 5) — so
-    /// `"swis"` parses as `swis@3`. Unknown schemes and malformed or
-    /// out-of-range shift counts are hard errors; shifts must be in
-    /// `(0, 8]` (8-bit magnitudes) and integral for `wgt_trunc`.
-    pub fn parse(s: &str) -> Result<VariantSpec> {
+    /// Parse the string grammar (see the `FromStr` impl below) — kept
+    /// as a named convenience for call sites that read specs from CLI
+    /// flags or manifests.
+    pub fn parse(s: &str) -> SwisResult<VariantSpec> {
+        s.parse()
+    }
+}
+
+impl fmt::Display for VariantSpec {
+    /// Canonical string form, exactly inverse to `FromStr`:
+    /// `fp32 | <scheme>@<shifts>[/g<group>]` — the group suffix is
+    /// elided at the default G=4, a bare scheme is never emitted (the
+    /// shift count is always explicit), so `parse(spec.to_string())`
+    /// reconstructs the spec field-for-field.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.scheme == Scheme::Fp32 {
+            return f.write_str("fp32");
+        }
+        write!(f, "{}@{}", self.scheme, self.n_shifts)?;
+        if self.group_size != DEFAULT_GROUP {
+            write!(f, "/g{}", self.group_size)?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for VariantSpec {
+    type Err = SwisError;
+
+    /// Parse `"fp32"` or `"<scheme>[@<shifts>][/g<group>]"` where scheme
+    /// is one of `swis`, `swis_c`, `wgt_trunc`. A bare scheme name
+    /// defaults to 3 shifts (the paper's headline operating point,
+    /// Sec. 5) — so `"swis"` parses as `swis@3` — and an omitted group
+    /// suffix means the paper's G=4. Unknown schemes, malformed or
+    /// out-of-range shift counts and group sizes beyond the native
+    /// kernel's lane masks are hard [`SwisError::Config`] errors.
+    fn from_str(s: &str) -> SwisResult<VariantSpec> {
         let s = s.trim();
         if s.is_empty() {
-            bail!("empty variant spec");
+            return Err(SwisError::config("empty variant spec"));
         }
         if s == "fp32" {
             return Ok(VariantSpec::fp32());
         }
-        let (scheme, shifts) = match s.split_once('@') {
-            Some((sc, rest)) => (sc, Some(rest)),
-            None => (s, None),
+        let (head, group) = match s.split_once("/g") {
+            None => (s, DEFAULT_GROUP),
+            Some((head, g)) => {
+                let g = g.parse::<usize>().map_err(|_| {
+                    SwisError::config(format!("malformed group size '{g}' in variant '{s}'"))
+                })?;
+                (head, g)
+            }
         };
-        if !matches!(scheme, "swis" | "swis_c" | "wgt_trunc") {
-            bail!(
-                "unknown variant scheme '{scheme}' in '{s}' \
-                 (expected fp32, swis[@N], swis_c[@N] or wgt_trunc[@N])"
-            );
+        let (scheme, shifts) = match head.split_once('@') {
+            Some((sc, rest)) => (sc, Some(rest)),
+            None => (head, None),
+        };
+        let scheme: Scheme = scheme
+            .parse()
+            .map_err(|e: SwisError| e.context(format!("in variant '{s}'")))?;
+        if scheme == Scheme::Fp32 {
+            // "fp32@3" / "fp32/g8" are contradictions, not configs
+            return Err(SwisError::config(format!(
+                "fp32 takes no shift count or group size (got '{s}')"
+            )));
         }
         let n: f64 = match shifts {
             None => 3.0, // documented default: the paper's 3-shift point
             Some(r) => r.parse().map_err(|_| {
-                anyhow::anyhow!("malformed shift count '{r}' in variant '{s}'")
+                SwisError::config(format!("malformed shift count '{r}' in variant '{s}'"))
             })?,
         };
-        if !n.is_finite() || n <= 0.0 || n > 8.0 {
-            bail!("shift count {n} out of range (0, 8] in variant '{s}'");
-        }
-        match scheme {
-            "swis" => Ok(VariantSpec::swis(n, 4)),
-            "swis_c" => Ok(VariantSpec::swis_c(n, 4)),
-            _ => {
-                if n.fract() != 0.0 {
-                    bail!("wgt_trunc needs an integer bit count, got {n} in '{s}'");
-                }
-                Ok(VariantSpec {
-                    name: format!("wgt_trunc@{n}"),
-                    scheme: "wgt_trunc".into(),
-                    n_shifts: n,
-                    group_size: 4,
-                })
-            }
-        }
+        VariantSpec::new(scheme, n, group)
+            .map_err(|e| e.context(format!("in variant '{s}'")))
     }
 }
 
@@ -144,7 +294,7 @@ impl WeightVariants {
         for spec in specs {
             let mut set = HashMap::new();
             for (name, t) in fp32 {
-                let q = if name.ends_with("_b") || spec.scheme == "fp32" {
+                let q = if name.ends_with("_b") || spec.scheme == Scheme::Fp32 {
                     t.clone()
                 } else {
                     quantize_jax_weight(t, spec)?
@@ -208,10 +358,16 @@ mod tests {
 
     #[test]
     fn parse_specs() {
-        assert_eq!(VariantSpec::parse("fp32").unwrap().scheme, "fp32");
+        assert_eq!(VariantSpec::parse("fp32").unwrap().scheme, Scheme::Fp32);
         let s = VariantSpec::parse("swis@2.5").unwrap();
         assert_eq!(s.n_shifts, 2.5);
         assert!(VariantSpec::parse("bogus@3").is_err());
+        // group suffix
+        let g = VariantSpec::parse("swis@3/g16").unwrap();
+        assert_eq!((g.scheme, g.n_shifts, g.group_size), (Scheme::Swis, 3.0, 16));
+        assert_eq!(g.name, "swis@3/g16");
+        // explicit default group canonicalizes away
+        assert_eq!(VariantSpec::parse("swis@3/g4").unwrap().name, "swis@3");
     }
 
     #[test]
@@ -220,20 +376,47 @@ mod tests {
             VariantSpec::fp32(),
             VariantSpec::swis(3.0, 4),
             VariantSpec::swis(2.5, 4),
+            VariantSpec::swis(3.0, 16),
             VariantSpec::swis_c(4.0, 4),
-            VariantSpec::parse("wgt_trunc@3").unwrap(),
+            VariantSpec::wgt_trunc(3),
         ] {
             let p = VariantSpec::parse(&spec.name).unwrap();
-            assert_eq!(p.name, spec.name);
-            assert_eq!(p.scheme, spec.scheme);
-            assert_eq!(p.n_shifts, spec.n_shifts);
-            assert_eq!(p.group_size, spec.group_size);
+            assert_eq!(p, spec);
+        }
+    }
+
+    #[test]
+    fn display_is_exactly_inverse_to_from_str_property() {
+        // property round-trip over the whole typed domain: random
+        // scheme x shifts x group — parse(display(spec)) == spec
+        // field-for-field, and the name IS the display form
+        let mut rng = Rng::new(2026);
+        let schemes = [Scheme::Fp32, Scheme::Swis, Scheme::SwisC, Scheme::WgtTrunc];
+        let groups = [1usize, 2, 3, 4, 8, 16];
+        for trial in 0..500 {
+            let scheme = schemes[rng.below(schemes.len() as u64) as usize];
+            let g = groups[rng.below(groups.len() as u64) as usize];
+            let n = if scheme == Scheme::WgtTrunc {
+                1.0 + rng.below(8) as f64
+            } else {
+                // integral and fractional (quarter-step) shift budgets
+                (1.0 + rng.below(29) as f64 * 0.25).min(8.0)
+            };
+            let spec = VariantSpec::new(scheme, n, g).unwrap();
+            let shown = spec.to_string();
+            assert_eq!(spec.name, shown, "name must be the canonical form (trial {trial})");
+            let back: VariantSpec = shown.parse().unwrap();
+            assert_eq!(back, spec, "round-trip failed for '{shown}' (trial {trial})");
         }
     }
 
     #[test]
     fn bare_scheme_defaults_to_three_shifts() {
-        for (s, scheme) in [("swis", "swis"), ("swis_c", "swis_c"), ("wgt_trunc", "wgt_trunc")] {
+        for (s, scheme) in [
+            ("swis", Scheme::Swis),
+            ("swis_c", Scheme::SwisC),
+            ("wgt_trunc", Scheme::WgtTrunc),
+        ] {
             let v = VariantSpec::parse(s).unwrap();
             assert_eq!(v.scheme, scheme);
             assert_eq!(v.n_shifts, 3.0, "{s} must default to @3");
@@ -254,8 +437,18 @@ mod tests {
         assert!(VariantSpec::parse("swis@inf").is_err());
         assert!(VariantSpec::parse("swis@nan").is_err());
         assert!(VariantSpec::parse("wgt_trunc@2.5").is_err());
-        // fp32 takes no shift count
+        // group sizes beyond the native kernel's lane masks
+        assert!(VariantSpec::parse("swis@3/g0").is_err());
+        assert!(VariantSpec::parse("swis@3/g32").is_err());
+        assert!(VariantSpec::parse("swis@3/gx").is_err());
+        // fp32 takes no shift count or group
         assert!(VariantSpec::parse("fp32@3").is_err());
+        assert!(VariantSpec::parse("fp32/g8").is_err());
+        // rejections are typed: callers match the class, not the string
+        assert!(matches!(
+            VariantSpec::parse("bogus").unwrap_err(),
+            SwisError::Config(_)
+        ));
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! The crate-wide error taxonomy: every public seam of the library —
+//! the [`crate::api`] facade, the [`crate::runtime::Backend`] trait, the
+//! [`crate::coordinator::WorkerPool`] submission/response paths, the
+//! [`crate::eval`] sweep — fails with a [`SwisError`], so callers match
+//! on the *class* of a failure instead of grepping message strings.
+//! `anyhow` remains in use only inside binaries (`main.rs`, examples,
+//! benches) and for crate-internal math plumbing; a `SwisError` crossing
+//! into an `anyhow::Result` converts losslessly through `?` (it
+//! implements `std::error::Error` and its `Display` carries the full
+//! context chain).
+//!
+//! Classes:
+//!
+//! | variant | failure class |
+//! |---------|---------------|
+//! | [`SwisError::Config`] | invalid configuration: bad variant spec, unknown scheme/net, out-of-range knobs |
+//! | [`SwisError::Plan`] | plan build / `.swisplan` container failures: corrupt header, version mismatch, operand/descriptor mismatch |
+//! | [`SwisError::Io`] | filesystem reads/writes behind plans and bench emitters |
+//! | [`SwisError::Backend`] | backend construction or execution failures (PJRT or native) |
+//! | [`SwisError::Admission`] | serving-edge refusals, with a typed [`AdmissionReason`] |
+//! | [`SwisError::Eval`] | accuracy/compression sweep failures |
+//!
+//! Context is accumulated with [`SwisError::context`] (outermost-first,
+//! `": "`-joined in `Display`), mirroring the anyhow `{:#}` convention so
+//! log lines keep their shape across the migration.
+
+use std::fmt;
+
+/// Why the serving edge refused or failed a request — the typed payload
+/// of [`SwisError::Admission`] that lets callers (and the loadgen
+/// recorder) tell backpressure from shedding from shutdown without
+/// string matching.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionReason {
+    /// Refused by backpressure: the bounded queue is at capacity.
+    Busy,
+    /// Dropped by deadline shedding before execution.
+    Shed,
+    /// The pool is shut down (or lost all workers).
+    Closed,
+    /// The request itself is malformed (wrong image size, empty batch).
+    Invalid,
+}
+
+impl AdmissionReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmissionReason::Busy => "busy",
+            AdmissionReason::Shed => "shed",
+            AdmissionReason::Closed => "closed",
+            AdmissionReason::Invalid => "invalid",
+        }
+    }
+}
+
+/// The crate-wide error type. Each variant carries its full
+/// (`": "`-joined, outermost-first) context chain as the message.
+#[derive(Clone, Debug)]
+pub enum SwisError {
+    /// Invalid configuration (variant specs, schemes, nets, CLI knobs).
+    Config(String),
+    /// Plan preparation / `.swisplan` (de)serialization failures.
+    Plan(String),
+    /// Filesystem IO failures (paths are included in the message).
+    Io(String),
+    /// Backend construction/execution failures.
+    Backend(String),
+    /// Serving-edge refusals with a typed reason.
+    Admission { reason: AdmissionReason, msg: String },
+    /// Accuracy/compression sweep failures.
+    Eval(String),
+}
+
+impl SwisError {
+    pub fn config(msg: impl fmt::Display) -> SwisError {
+        SwisError::Config(msg.to_string())
+    }
+
+    pub fn plan(msg: impl fmt::Display) -> SwisError {
+        SwisError::Plan(msg.to_string())
+    }
+
+    pub fn io(msg: impl fmt::Display) -> SwisError {
+        SwisError::Io(msg.to_string())
+    }
+
+    pub fn backend(msg: impl fmt::Display) -> SwisError {
+        SwisError::Backend(msg.to_string())
+    }
+
+    pub fn admission(reason: AdmissionReason, msg: impl fmt::Display) -> SwisError {
+        SwisError::Admission { reason, msg: msg.to_string() }
+    }
+
+    pub fn eval(msg: impl fmt::Display) -> SwisError {
+        SwisError::Eval(msg.to_string())
+    }
+
+    /// Short class tag for logs/metrics ("config", "plan", ...).
+    pub fn class(&self) -> &'static str {
+        match self {
+            SwisError::Config(_) => "config",
+            SwisError::Plan(_) => "plan",
+            SwisError::Io(_) => "io",
+            SwisError::Backend(_) => "backend",
+            SwisError::Admission { .. } => "admission",
+            SwisError::Eval(_) => "eval",
+        }
+    }
+
+    /// The full context chain (outermost first, `": "`-joined).
+    pub fn message(&self) -> &str {
+        match self {
+            SwisError::Config(m)
+            | SwisError::Plan(m)
+            | SwisError::Io(m)
+            | SwisError::Backend(m)
+            | SwisError::Eval(m) => m,
+            SwisError::Admission { msg, .. } => msg,
+        }
+    }
+
+    /// Wrap with an outer context message, preserving the variant (and
+    /// the admission reason) — the typed analogue of anyhow's
+    /// `.context(..)`.
+    pub fn context(self, ctx: impl fmt::Display) -> SwisError {
+        let wrap = |m: String| format!("{ctx}: {m}");
+        match self {
+            SwisError::Config(m) => SwisError::Config(wrap(m)),
+            SwisError::Plan(m) => SwisError::Plan(wrap(m)),
+            SwisError::Io(m) => SwisError::Io(wrap(m)),
+            SwisError::Backend(m) => SwisError::Backend(wrap(m)),
+            SwisError::Admission { reason, msg } => {
+                SwisError::Admission { reason, msg: wrap(msg) }
+            }
+            SwisError::Eval(m) => SwisError::Eval(wrap(m)),
+        }
+    }
+
+    /// True for deadline-shed responses (the SLO accounting class).
+    pub fn is_shed(&self) -> bool {
+        matches!(self, SwisError::Admission { reason: AdmissionReason::Shed, .. })
+    }
+
+    /// Capture an `anyhow` error (full `{:#}` context chain) under the
+    /// [`SwisError::Backend`] class — the seam where crate-internal math
+    /// errors surface to callers.
+    pub fn backend_from(e: anyhow::Error) -> SwisError {
+        SwisError::Backend(format!("{e:#}"))
+    }
+
+    /// Capture an `anyhow` error under the [`SwisError::Plan`] class.
+    pub fn plan_from(e: anyhow::Error) -> SwisError {
+        SwisError::Plan(format!("{e:#}"))
+    }
+
+    /// Capture an `anyhow` error under the [`SwisError::Config`] class.
+    pub fn config_from(e: anyhow::Error) -> SwisError {
+        SwisError::Config(format!("{e:#}"))
+    }
+
+    /// Capture an `anyhow` error under the [`SwisError::Eval`] class.
+    pub fn eval_from(e: anyhow::Error) -> SwisError {
+        SwisError::Eval(format!("{e:#}"))
+    }
+
+    /// An IO failure at a path.
+    pub fn io_at(path: &std::path::Path, e: impl fmt::Display) -> SwisError {
+        SwisError::Io(format!("{}: {e}", path.display()))
+    }
+}
+
+impl fmt::Display for SwisError {
+    /// Prints the full context chain (both `{}` and `{:#}`): the error
+    /// frequently crosses into `anyhow` at binary boundaries, whose
+    /// wrapping would otherwise drop everything but the outermost
+    /// message.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SwisError::Admission { reason, msg } => write!(f, "{}: {msg}", reason.as_str()),
+            other => f.write_str(other.message()),
+        }
+    }
+}
+
+impl std::error::Error for SwisError {}
+
+/// Result alias for every typed public seam.
+pub type SwisResult<T> = Result<T, SwisError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_and_context_chain() {
+        let e = SwisError::plan("bad magic").context("loading plan.swisplan");
+        assert_eq!(e.class(), "plan");
+        assert_eq!(format!("{e}"), "loading plan.swisplan: bad magic");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+        assert!(matches!(e, SwisError::Plan(_)));
+    }
+
+    #[test]
+    fn admission_reason_survives_context() {
+        let e = SwisError::admission(AdmissionReason::Shed, "deadline exceeded")
+            .context("request 7");
+        assert!(e.is_shed());
+        assert_eq!(format!("{e}"), "shed: request 7: deadline exceeded");
+        let busy = SwisError::admission(AdmissionReason::Busy, "queue full");
+        assert!(!busy.is_shed());
+        assert!(matches!(
+            busy,
+            SwisError::Admission { reason: AdmissionReason::Busy, .. }
+        ));
+    }
+
+    #[test]
+    fn converts_into_anyhow_without_losing_context() {
+        fn through_anyhow() -> anyhow::Result<()> {
+            Err::<(), SwisError>(SwisError::backend("boom").context("worker 3"))?;
+            Ok(())
+        }
+        let e = through_anyhow().unwrap_err();
+        assert!(format!("{e:#}").contains("worker 3: boom"));
+    }
+
+    #[test]
+    fn anyhow_capture_keeps_the_chain() {
+        use anyhow::Context as _;
+        let a: anyhow::Result<()> =
+            Err(anyhow::anyhow!("root cause")).context("outer frame");
+        let e = SwisError::backend_from(a.unwrap_err());
+        assert_eq!(format!("{e}"), "outer frame: root cause");
+    }
+}

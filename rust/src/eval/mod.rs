@@ -15,12 +15,15 @@
 //! the MSE/compression columns are fully meaningful (they depend on
 //! weight *statistics*); top-1 agreement is structural only.
 
-use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+use crate::api::EnginePlan;
+use crate::coordinator::Scheme;
+use crate::error::{SwisError, SwisResult};
 use crate::exec::{net_weights, NativeModel, WeightProvenance, WeightTransform};
 use crate::nets::by_name;
 use crate::quant::serialize;
+use crate::util::bench::Emitter;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -30,8 +33,9 @@ use crate::util::tensor::Tensor;
 pub struct EvalConfig {
     /// Zoo net names ([`by_name`] spellings).
     pub nets: Vec<String>,
-    /// Schemes to sweep: `swis`, `swis_c`, `wgt_trunc`.
-    pub schemes: Vec<String>,
+    /// Schemes to sweep (typed; the fp32 reference row is always
+    /// emitted and never listed here).
+    pub schemes: Vec<Scheme>,
     /// Effective bit-widths (shift counts; truncation needs integers).
     pub bits: Vec<f64>,
     pub group_size: usize,
@@ -52,7 +56,7 @@ impl Default for EvalConfig {
                 "resnet18".into(),
                 "vgg16_cifar100".into(),
             ],
-            schemes: vec!["swis".into(), "swis_c".into(), "wgt_trunc".into()],
+            schemes: Scheme::quantized().to_vec(),
             bits: vec![2.0, 3.0, 4.0],
             group_size: 4,
             batch: 4,
@@ -75,6 +79,10 @@ pub struct LayerMse {
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
     pub net: String,
+    /// Canonical variant label (`fp32`, `swis@3`, `swis_c@2.5/g8`) —
+    /// disambiguates cells that share scheme+bits at different group
+    /// sizes.
+    pub variant: String,
     /// `fp32` reference rows appear once per net.
     pub scheme: String,
     /// Effective bits of the cell; the fp32 reference row carries 32
@@ -95,11 +103,15 @@ pub struct EvalRecord {
     pub per_layer: Vec<LayerMse>,
 }
 
-fn transform_for(scheme: &str, bits: f64, group_size: usize) -> Result<Option<WeightTransform>> {
-    Ok(match scheme {
-        "swis" => Some(WeightTransform::Swis { n_shifts: bits, group_size, consecutive: false }),
-        "swis_c" => Some(WeightTransform::Swis { n_shifts: bits, group_size, consecutive: true }),
-        "wgt_trunc" => {
+fn transform_for(scheme: Scheme, bits: f64, group_size: usize) -> Option<WeightTransform> {
+    match scheme {
+        Scheme::Swis => {
+            Some(WeightTransform::Swis { n_shifts: bits, group_size, consecutive: false })
+        }
+        Scheme::SwisC => {
+            Some(WeightTransform::Swis { n_shifts: bits, group_size, consecutive: true })
+        }
+        Scheme::WgtTrunc => {
             if bits.fract() != 0.0 || !(1.0..=8.0).contains(&bits) {
                 // truncation has no fractional operating points — skip the
                 // cell loudly rather than fake one
@@ -109,14 +121,20 @@ fn transform_for(scheme: &str, bits: f64, group_size: usize) -> Result<Option<We
                 Some(WeightTransform::Truncate { bits: bits as usize })
             }
         }
-        other => bail!("unknown eval scheme '{other}' (expected swis|swis_c|wgt_trunc)"),
-    })
+        // the reference row is emitted unconditionally per net
+        Scheme::Fp32 => None,
+    }
 }
 
 /// Deterministic probe batch for one net: uniform [0, 1) pixels, seeded
 /// by (config seed, net name) so every scheme/bits cell of a net sees
 /// the SAME images.
-fn probe_images(net: &str, shape: [usize; 3], batch: usize, seed: u64) -> Result<Tensor<f32>> {
+fn probe_images(
+    net: &str,
+    shape: [usize; 3],
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<Tensor<f32>> {
     let tag = net.bytes().fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
     let mut rng = Rng::new(seed ^ tag);
     let n = batch * shape[0] * shape[1] * shape[2];
@@ -142,86 +160,199 @@ fn mse(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
 }
 
+/// The fp32 reference of one net on its probe batch: logits, the full
+/// labelled activation trace, and per-image top-1.
+struct FpReference {
+    logits: Tensor<f32>,
+    trace: Vec<(String, Vec<f32>)>,
+    top1: Vec<usize>,
+}
+
+fn fp_reference(
+    fp: &NativeModel,
+    probe: &Tensor<f32>,
+    batch: usize,
+    threads: usize,
+) -> SwisResult<FpReference> {
+    let (logits, trace) = fp.forward_trace(probe, threads).map_err(SwisError::eval_from)?;
+    let n = fp.n_classes();
+    let top1 = (0..batch).map(|b| argmax(&logits.data()[b * n..(b + 1) * n])).collect();
+    Ok(FpReference { logits, trace, top1 })
+}
+
+/// The fp32 reference row emitted once per net.
+fn fp_record(net: &str, prov: WeightProvenance) -> EvalRecord {
+    EvalRecord {
+        net: net.to_string(),
+        variant: "fp32".into(),
+        scheme: "fp32".into(),
+        bits: 32.0,
+        mse: 0.0,
+        top1_agree: 1.0,
+        compression_ratio: 8.0 / 32.0,
+        bits_per_weight: 32.0,
+        weights: prov,
+        per_layer: Vec::new(),
+    }
+}
+
+/// One quantized sweep record: shared by the grid and plan paths, so
+/// the bits-per-weight accounting (measured packed payload for
+/// SWIS/SWIS-C, nominal bits for truncation) lives in exactly one place.
+#[allow(clippy::too_many_arguments)]
+fn quantized_record(
+    net: &str,
+    variant: &str,
+    scheme: Scheme,
+    bits: f64,
+    m: &NativeModel,
+    prov: WeightProvenance,
+    cell: (f64, f64, Vec<LayerMse>),
+) -> EvalRecord {
+    let (mse, top1_agree, per_layer) = cell;
+    let bpw = match scheme {
+        Scheme::WgtTrunc => bits,
+        _ => m.packed_payload_bits as f64 / m.quantized_weights.max(1) as f64,
+    };
+    EvalRecord {
+        net: net.to_string(),
+        variant: variant.to_string(),
+        scheme: scheme.as_str().into(),
+        bits,
+        mse,
+        top1_agree,
+        compression_ratio: 8.0 / bpw,
+        bits_per_weight: bpw,
+        weights: prov,
+        per_layer,
+    }
+}
+
+/// Measure one quantized model against the fp32 reference: logits MSE,
+/// top-1 agreement, cumulative per-layer MSE. The per-layer fold runs
+/// against the ONE retained fp32 trace as each node's output is produced
+/// — never a second full activation snapshot of a 224x224 net.
+fn eval_cell(
+    m: &NativeModel,
+    reference: &FpReference,
+    probe: &Tensor<f32>,
+    batch: usize,
+    threads: usize,
+    label: &str,
+) -> SwisResult<(f64, f64, Vec<LayerMse>)> {
+    let mut per_layer: Vec<LayerMse> = Vec::with_capacity(reference.trace.len());
+    let mut idx = 0usize;
+    let logits = {
+        let mut obs = |label: &str, y: &[f32]| {
+            if let Some((flabel, fy)) = reference.trace.get(idx) {
+                debug_assert_eq!(label, flabel.as_str());
+                per_layer.push(LayerMse { layer: label.to_string(), mse: mse(y, fy) });
+            }
+            idx += 1;
+        };
+        m.forward_observed(probe, threads, &mut obs)
+            .map_err(|e| SwisError::eval_from(e).context(format!("evaluating {label}")))?
+    };
+    if idx != reference.trace.len() {
+        return Err(SwisError::eval(format!(
+            "trace length diverged between fp32 and {label}"
+        )));
+    }
+    let agree = (0..batch)
+        .filter(|&b| {
+            argmax(&logits.data()[b * m.n_classes()..(b + 1) * m.n_classes()])
+                == reference.top1[b]
+        })
+        .count();
+    Ok((
+        mse(logits.data(), reference.logits.data()),
+        agree as f64 / batch as f64,
+        per_layer,
+    ))
+}
+
 /// Run the full sweep. Each net is prepared once per (scheme, bits) cell
 /// and compared against its fp32 reference trace; the fp32 row itself is
 /// emitted first per net.
-pub fn run_eval(cfg: &EvalConfig) -> Result<Vec<EvalRecord>> {
+pub fn run_eval(cfg: &EvalConfig) -> SwisResult<Vec<EvalRecord>> {
     if cfg.batch == 0 {
-        bail!("eval needs a probe batch of at least 1");
+        return Err(SwisError::eval("eval needs a probe batch of at least 1"));
     }
     let mut records = Vec::new();
     for net_name in &cfg.nets {
         let net = by_name(net_name)
-            .with_context(|| format!("unknown network '{net_name}'"))?
+            .ok_or_else(|| SwisError::config(format!("unknown network '{net_name}'")))?
             .with_fc();
-        let (weights, prov) = net_weights(cfg.artifacts.as_deref(), &net)?;
-        let fp = NativeModel::prepare_net(&net, &weights, WeightTransform::Fp32)
-            .with_context(|| format!("preparing fp32 '{}'", net.name))?;
-        let probe = probe_images(&net.name, fp.input_shape(), cfg.batch, cfg.seed)?;
-        let (flogits, ftrace) = fp.forward_trace(&probe, cfg.threads)?;
-        let fp_top1: Vec<usize> = (0..cfg.batch)
-            .map(|b| argmax(&flogits.data()[b * fp.n_classes()..(b + 1) * fp.n_classes()]))
-            .collect();
-        records.push(EvalRecord {
-            net: net.name.clone(),
-            scheme: "fp32".into(),
-            bits: 32.0,
-            mse: 0.0,
-            top1_agree: 1.0,
-            compression_ratio: 8.0 / 32.0,
-            bits_per_weight: 32.0,
-            weights: prov,
-            per_layer: Vec::new(),
-        });
+        let (weights, prov) =
+            net_weights(cfg.artifacts.as_deref(), &net).map_err(SwisError::eval_from)?;
+        let fp = NativeModel::prepare_net(&net, &weights, WeightTransform::Fp32).map_err(
+            |e| SwisError::eval_from(e).context(format!("preparing fp32 '{}'", net.name)),
+        )?;
+        let probe = probe_images(&net.name, fp.input_shape(), cfg.batch, cfg.seed)
+            .map_err(SwisError::eval_from)?;
+        let reference = fp_reference(&fp, &probe, cfg.batch, cfg.threads)?;
+        records.push(fp_record(&net.name, prov));
 
-        for scheme in &cfg.schemes {
+        for &scheme in &cfg.schemes {
             for &bits in &cfg.bits {
-                let Some(tf) = transform_for(scheme, bits, cfg.group_size)? else {
+                let Some(tf) = transform_for(scheme, bits, cfg.group_size) else {
                     continue;
                 };
-                let m = NativeModel::prepare_net(&net, &weights, tf)
-                    .with_context(|| format!("preparing {scheme}@{bits} '{}'", net.name))?;
-                // per-layer MSE folds against the ONE retained fp32 trace
-                // as each node's output is produced — never a second full
-                // activation snapshot of a 224x224 net
-                let mut per_layer: Vec<LayerMse> = Vec::with_capacity(ftrace.len());
-                let mut idx = 0usize;
-                let logits = {
-                    let mut obs = |label: &str, y: &[f32]| {
-                        if let Some((flabel, fy)) = ftrace.get(idx) {
-                            debug_assert_eq!(label, flabel.as_str());
-                            per_layer.push(LayerMse { layer: label.to_string(), mse: mse(y, fy) });
-                        }
-                        idx += 1;
-                    };
-                    m.forward_observed(&probe, cfg.threads, &mut obs)?
-                };
-                if idx != ftrace.len() {
-                    bail!("trace length diverged between fp32 and {scheme}@{bits}");
-                }
-                let agree = (0..cfg.batch)
-                    .filter(|&b| {
-                        argmax(&logits.data()[b * m.n_classes()..(b + 1) * m.n_classes()])
-                            == fp_top1[b]
-                    })
-                    .count();
-                let bpw = match scheme.as_str() {
-                    "wgt_trunc" => bits,
-                    _ => m.packed_payload_bits as f64 / m.quantized_weights.max(1) as f64,
-                };
-                records.push(EvalRecord {
-                    net: net.name.clone(),
-                    scheme: scheme.clone(),
-                    bits,
-                    mse: mse(logits.data(), flogits.data()),
-                    top1_agree: agree as f64 / cfg.batch as f64,
-                    compression_ratio: 8.0 / bpw,
-                    bits_per_weight: bpw,
-                    weights: prov,
-                    per_layer,
-                });
+                let m = NativeModel::prepare_net(&net, &weights, tf).map_err(|e| {
+                    SwisError::eval_from(e)
+                        .context(format!("preparing {scheme}@{bits} '{}'", net.name))
+                })?;
+                // the canonical spec name, so grid records carry the
+                // SAME variant labels the plan path emits
+                let label =
+                    crate::coordinator::VariantSpec::new(scheme, bits, cfg.group_size)?.name;
+                let cell = eval_cell(&m, &reference, &probe, cfg.batch, cfg.threads, &label)?;
+                records.push(quantized_record(&net.name, &label, scheme, bits, &m, prov, cell));
             }
         }
+    }
+    Ok(records)
+}
+
+/// Evaluate a prepared [`EnginePlan`] instead of re-quantizing a sweep
+/// grid: every non-fp32 variant of the plan is measured against the
+/// plan's own fp32 variant (required — a plan without one cannot anchor
+/// the comparison). This is the `swis eval --plan` path: the numbers
+/// describe exactly the operands a deployment ships.
+pub fn run_eval_plan(
+    plan: &EnginePlan,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> SwisResult<Vec<EvalRecord>> {
+    if batch == 0 {
+        return Err(SwisError::eval("eval needs a probe batch of at least 1"));
+    }
+    let fp = plan.model("fp32").ok_or_else(|| {
+        SwisError::eval(format!(
+            "plan for '{}' has no fp32 variant to anchor the comparison",
+            plan.net_name()
+        ))
+    })?;
+    let probe = probe_images(plan.net_name(), plan.input_shape(), batch, seed)
+        .map_err(SwisError::eval_from)?;
+    let reference = fp_reference(fp, &probe, batch, threads)?;
+    let mut records = vec![fp_record(plan.net_name(), plan.provenance())];
+    for spec in plan.variants() {
+        if spec.scheme == Scheme::Fp32 {
+            continue;
+        }
+        let m = plan.model(&spec.name).expect("plan variant without model");
+        let cell = eval_cell(m, &reference, &probe, batch, threads, &spec.name)?;
+        records.push(quantized_record(
+            plan.net_name(),
+            &spec.name,
+            spec.scheme,
+            spec.n_shifts,
+            m,
+            plan.provenance(),
+            cell,
+        ));
     }
     Ok(records)
 }
@@ -233,7 +364,10 @@ pub fn bench_json(records: &[EvalRecord], cfg: &EvalConfig) -> Json {
     root.set("backend", "native");
     let mut c = Json::obj();
     c.set("nets", cfg.nets.clone());
-    c.set("schemes", cfg.schemes.clone());
+    c.set(
+        "schemes",
+        cfg.schemes.iter().map(|s| s.as_str().to_string()).collect::<Vec<_>>(),
+    );
     c.set("bits", cfg.bits.clone());
     c.set("group_size", cfg.group_size);
     c.set("batch", cfg.batch);
@@ -244,6 +378,7 @@ pub fn bench_json(records: &[EvalRecord], cfg: &EvalConfig) -> Json {
         .map(|r| {
             let mut j = Json::obj();
             j.set("net", r.net.as_str());
+            j.set("variant", r.variant.as_str());
             j.set("scheme", r.scheme.as_str());
             j.set("bits", r.bits);
             j.set("mse", r.mse);
@@ -269,11 +404,14 @@ pub fn bench_json(records: &[EvalRecord], cfg: &EvalConfig) -> Json {
     root
 }
 
-/// Write `BENCH_accuracy.json` (pretty, stable key order).
-pub fn write_bench_json(records: &[EvalRecord], cfg: &EvalConfig, path: &Path) -> Result<()> {
-    std::fs::write(path, bench_json(records, cfg).pretty())
-        .with_context(|| format!("writing {}", path.display()))?;
-    Ok(())
+/// Write `BENCH_accuracy.json` (pretty, stable key order) — atomically,
+/// through the shared [`Emitter`].
+pub fn write_bench_json(
+    records: &[EvalRecord],
+    cfg: &EvalConfig,
+    path: &Path,
+) -> SwisResult<()> {
+    Emitter::at(path).write(&bench_json(records, cfg))
 }
 
 /// Serialize one layer of a net under SWIS and report the container
@@ -285,7 +423,7 @@ pub fn packed_container_bits(
     bits: f64,
     group_size: usize,
     consecutive: bool,
-) -> Result<u64> {
+) -> SwisResult<u64> {
     let p = crate::schedule::quantize_or_schedule(
         w,
         shape,
@@ -293,7 +431,8 @@ pub fn packed_container_bits(
         group_size,
         consecutive,
         crate::quant::Alpha::ONE,
-    )?;
+    )
+    .map_err(SwisError::eval_from)?;
     Ok(serialize::payload_bits(&p))
 }
 
@@ -304,7 +443,7 @@ mod tests {
     fn tiny_cfg() -> EvalConfig {
         EvalConfig {
             nets: vec!["tinycnn".into()],
-            schemes: vec!["swis".into(), "wgt_trunc".into()],
+            schemes: vec![Scheme::Swis, Scheme::WgtTrunc],
             bits: vec![3.0],
             batch: 2,
             threads: 2,
@@ -359,9 +498,47 @@ mod tests {
 
     #[test]
     fn fractional_trunc_cells_are_skipped() {
-        assert!(transform_for("wgt_trunc", 2.5, 4).unwrap().is_none());
-        assert!(transform_for("swis", 2.5, 4).unwrap().is_some());
-        assert!(transform_for("int4", 4.0, 4).is_err());
+        assert!(transform_for(Scheme::WgtTrunc, 2.5, 4).is_none());
+        assert!(transform_for(Scheme::Swis, 2.5, 4).is_some());
+        // unknown schemes are now unrepresentable: they fail at the
+        // typed parse boundary instead
+        assert!(matches!("int4".parse::<Scheme>().unwrap_err(), SwisError::Config(_)));
+    }
+
+    #[test]
+    fn plan_eval_matches_the_grid_sweep() {
+        use crate::api::{Engine, EngineConfig, VariantSpec};
+        // a plan carrying fp32 + swis@3 must produce the same cells as
+        // the (tinycnn, swis, 3.0) grid sweep — same probe, same math
+        let cfg = tiny_cfg();
+        let grid = run_eval(&cfg).unwrap();
+        let plan = Engine::prepare(
+            EngineConfig::for_net("tinycnn")
+                .unwrap()
+                .variant(VariantSpec::fp32())
+                .variant(VariantSpec::swis(3.0, 4))
+                .threads(2),
+        )
+        .unwrap();
+        let recs = run_eval_plan(&plan, cfg.batch, cfg.seed, cfg.threads).unwrap();
+        assert_eq!(recs.len(), 2); // fp32 + swis@3
+        let plan_swis = recs.iter().find(|r| r.scheme == "swis").unwrap();
+        let grid_swis = grid.iter().find(|r| r.scheme == "swis").unwrap();
+        assert_eq!(plan_swis.mse, grid_swis.mse);
+        assert_eq!(plan_swis.top1_agree, grid_swis.top1_agree);
+        assert_eq!(plan_swis.bits_per_weight, grid_swis.bits_per_weight);
+        // a plan without the fp32 anchor is a typed Eval error
+        let no_anchor = Engine::prepare(
+            EngineConfig::for_net("tinycnn")
+                .unwrap()
+                .variant(VariantSpec::swis(3.0, 4))
+                .threads(2),
+        )
+        .unwrap();
+        assert!(matches!(
+            run_eval_plan(&no_anchor, 2, 7, 2).unwrap_err(),
+            SwisError::Eval(_)
+        ));
     }
 
     #[test]

@@ -34,5 +34,6 @@ pub use kernel::{
 };
 pub use model::{
     filters_first, net_weights, surrogate_network_weights, surrogate_tinycnn_weights,
-    tinycnn_weights, NativeModel, WeightProvenance, WeightTransform,
+    tinycnn_weights, LayerOperand, NativeModel, PreparedLayer, WeightProvenance,
+    WeightTransform,
 };

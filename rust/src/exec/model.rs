@@ -16,6 +16,7 @@
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use super::graph::{self, Graph, GraphOp, Src, ValShape};
 use super::im2col::{im2col, ConvGeom};
@@ -23,7 +24,7 @@ use super::kernel::{dense_depthwise, dense_gemm, PreparedDepthwise, PreparedGemm
 use crate::nets::{surrogate_weights, ConvKind, Network};
 use crate::quant::serialize;
 use crate::quant::truncation::truncate_weights;
-use crate::quant::Alpha;
+use crate::quant::{Alpha, PackedLayer};
 use crate::schedule::quantize_or_schedule;
 use crate::util::npy;
 use crate::util::tensor::Tensor;
@@ -66,13 +67,37 @@ impl WeightTransform {
 enum OpKernel {
     Gemm(PreparedGemm),
     Dw(PreparedDepthwise),
-    Dense { w: Vec<f32>, k: usize, fan_in: usize },
-    DenseDw { w: Vec<f32>, c: usize },
+    Dense { w: Arc<Vec<f32>>, k: usize, fan_in: usize },
+    DenseDw { w: Arc<Vec<f32>>, c: usize },
 }
 
 struct LayerExec {
     kernel: OpKernel,
     bias: Vec<f32>,
+}
+
+/// The served operand of one weighted layer — exactly what a deployment
+/// ships for that layer. This is the unit the `.swisplan` container
+/// stores ([`crate::api::EnginePlan`]): reloading a plan binds kernels
+/// straight from these operands, with NO quantization on the load path.
+#[derive(Clone, Debug)]
+pub enum LayerOperand {
+    /// Dense fp32 weights, filters-first `(k, fan_in)` row-major — the
+    /// fp32 and truncation variants. `Arc`-shared so a plan that keeps
+    /// the operand for serialization and the bound kernel that executes
+    /// it hold ONE copy of a large fp32 weight set, not two.
+    Dense(Arc<Vec<f32>>),
+    /// The packed SWIS/SWIS-C operand, executed directly.
+    Packed(PackedLayer),
+}
+
+/// One weighted layer of a prepared plan: name + operand + bias.
+#[derive(Clone, Debug)]
+pub struct PreparedLayer {
+    /// Layer name in the [`Network`] descriptor (binds operand to node).
+    pub name: String,
+    pub operand: LayerOperand,
+    pub bias: Vec<f32>,
 }
 
 /// A ready-to-run network for one weight variant: the lowered graph plus
@@ -123,27 +148,38 @@ impl NativeModel {
 
     /// Lower `net` to the op graph and bind one prepared kernel per
     /// weighted node under `transform`. Biases pass through untouched
-    /// (the paper quantizes weights only).
+    /// (the paper quantizes weights only). This is the quantize-and-bind
+    /// composition of [`NativeModel::plan_parts`] (the expensive planner
+    /// sweep) and [`NativeModel::from_parts`] (cheap kernel binding) —
+    /// plan-aware callers run the two halves separately so a reloaded
+    /// `.swisplan` never re-quantizes.
     pub fn prepare_net(
         net: &Network,
         weights: &HashMap<String, Tensor<f32>>,
         transform: WeightTransform,
     ) -> Result<NativeModel> {
+        let parts = NativeModel::plan_parts(net, weights, transform, Alpha::ONE)?;
+        NativeModel::from_parts(net, &parts)
+    }
+
+    /// The OFFLINE half of preparation: quantize/transform every
+    /// weighted layer of `net` into its served operand
+    /// ([`PreparedLayer`]), in graph order. This is where all planner
+    /// work happens; the result is what a `.swisplan` persists.
+    pub fn plan_parts(
+        net: &Network,
+        weights: &HashMap<String, Tensor<f32>>,
+        transform: WeightTransform,
+        alpha: Alpha,
+    ) -> Result<Vec<PreparedLayer>> {
         let graph = graph::lower(net)?;
-        let labels: Vec<String> =
-            (0..graph.nodes.len()).map(|i| graph.label(net, i)).collect();
-        let mut execs: Vec<Option<LayerExec>> = Vec::with_capacity(graph.nodes.len());
-        let mut packed_bits = 0u64;
-        let mut packed_payload_bits = 0u64;
-        let mut quantized_weights = 0u64;
+        let mut parts = Vec::new();
         for node in &graph.nodes {
-            let (li, depthwise) = match node.op {
-                GraphOp::Conv { layer, .. } | GraphOp::Fc { layer, .. } => (layer, false),
-                GraphOp::Depthwise { layer, .. } => (layer, true),
-                _ => {
-                    execs.push(None);
-                    continue;
-                }
+            let li = match node.op {
+                GraphOp::Conv { layer, .. }
+                | GraphOp::Fc { layer, .. }
+                | GraphOp::Depthwise { layer, .. } => layer,
+                _ => continue,
             };
             let l = &net.layers[li];
             let name = l.name.as_str();
@@ -158,8 +194,7 @@ impl NativeModel {
                     l.fan_in()
                 );
             }
-            quantized_weights += (k * fan_in) as u64;
-            let kernel = match transform {
+            let operand = match transform {
                 WeightTransform::Swis { n_shifts, group_size, consecutive } => {
                     let packed = quantize_or_schedule(
                         &wf,
@@ -167,32 +202,21 @@ impl NativeModel {
                         n_shifts,
                         group_size,
                         consecutive,
-                        Alpha::ONE,
+                        alpha,
                     )
                     .with_context(|| format!("quantizing '{name}'"))?;
-                    packed_bits += packed.storage_bits();
-                    packed_payload_bits += serialize::payload_bits(&packed);
-                    if depthwise {
-                        OpKernel::Dw(PreparedDepthwise::from_packed(&packed)?)
-                    } else {
-                        OpKernel::Gemm(PreparedGemm::from_packed(&packed)?)
-                    }
+                    LayerOperand::Packed(packed)
                 }
                 // fp32 / truncation serve dense floats via the shared
                 // dequantize path
-                _ => {
-                    let w: Vec<f32> = transform
+                _ => LayerOperand::Dense(Arc::new(
+                    transform
                         .dequantize(&wf, k, fan_in)
                         .with_context(|| format!("transforming '{name}'"))?
                         .iter()
                         .map(|&v| v as f32)
-                        .collect();
-                    if depthwise {
-                        OpKernel::DenseDw { w, c: k }
-                    } else {
-                        OpKernel::Dense { w, k, fan_in }
-                    }
-                }
+                        .collect(),
+                )),
             };
             let bias = weights
                 .get(&format!("{name}_b"))
@@ -202,7 +226,101 @@ impl NativeModel {
             if bias.len() != l.out_c {
                 bail!("bias '{name}_b' has {} entries, expected {}", bias.len(), l.out_c);
             }
-            execs.push(Some(LayerExec { kernel, bias }));
+            parts.push(PreparedLayer { name: name.to_string(), operand, bias });
+        }
+        Ok(parts)
+    }
+
+    /// The ONLINE half of preparation: bind one executable kernel per
+    /// weighted node from already-prepared operands. No quantization
+    /// happens here — only the cheap per-plane lane-mask prep — so
+    /// loading a `.swisplan` and warming a pool worker from it performs
+    /// zero planner work. Operands are matched to weighted graph nodes
+    /// positionally and cross-checked by layer name and shape.
+    pub fn from_parts(net: &Network, parts: &[PreparedLayer]) -> Result<NativeModel> {
+        let graph = graph::lower(net)?;
+        let labels: Vec<String> =
+            (0..graph.nodes.len()).map(|i| graph.label(net, i)).collect();
+        let mut execs: Vec<Option<LayerExec>> = Vec::with_capacity(graph.nodes.len());
+        let mut packed_bits = 0u64;
+        let mut packed_payload_bits = 0u64;
+        let mut quantized_weights = 0u64;
+        let mut next = 0usize;
+        for node in &graph.nodes {
+            let (li, depthwise) = match node.op {
+                GraphOp::Conv { layer, .. } | GraphOp::Fc { layer, .. } => (layer, false),
+                GraphOp::Depthwise { layer, .. } => (layer, true),
+                _ => {
+                    execs.push(None);
+                    continue;
+                }
+            };
+            let l = &net.layers[li];
+            let part = parts
+                .get(next)
+                .with_context(|| format!("plan is missing an operand for layer '{}'", l.name))?;
+            next += 1;
+            if part.name != l.name {
+                bail!(
+                    "plan operand {} is for layer '{}', expected '{}'",
+                    next - 1,
+                    part.name,
+                    l.name
+                );
+            }
+            let (k, fan_in) = (l.out_c, l.fan_in());
+            quantized_weights += (k * fan_in) as u64;
+            let kernel = match &part.operand {
+                LayerOperand::Packed(packed) => {
+                    if packed.n_filters() != k || packed.fan_in() != fan_in {
+                        bail!(
+                            "packed operand '{}' is ({}, {}), expected ({k}, {fan_in})",
+                            l.name,
+                            packed.n_filters(),
+                            packed.fan_in()
+                        );
+                    }
+                    packed_bits += packed.storage_bits();
+                    packed_payload_bits += serialize::payload_bits(packed);
+                    if depthwise {
+                        OpKernel::Dw(PreparedDepthwise::from_packed(packed)?)
+                    } else {
+                        OpKernel::Gemm(PreparedGemm::from_packed(packed)?)
+                    }
+                }
+                LayerOperand::Dense(w) => {
+                    if w.len() != k * fan_in {
+                        bail!(
+                            "dense operand '{}' has {} weights, expected {}",
+                            l.name,
+                            w.len(),
+                            k * fan_in
+                        );
+                    }
+                    // pointer clone: plan and kernel share the weights
+                    if depthwise {
+                        OpKernel::DenseDw { w: Arc::clone(w), c: k }
+                    } else {
+                        OpKernel::Dense { w: Arc::clone(w), k, fan_in }
+                    }
+                }
+            };
+            if part.bias.len() != l.out_c {
+                bail!(
+                    "bias for '{}' has {} entries, expected {}",
+                    l.name,
+                    part.bias.len(),
+                    l.out_c
+                );
+            }
+            execs.push(Some(LayerExec { kernel, bias: part.bias.clone() }));
+        }
+        if next != parts.len() {
+            bail!(
+                "plan carries {} operands but '{}' has {next} weighted layers",
+                parts.len(),
+                net.name
+            );
         }
         Ok(NativeModel {
             graph,
@@ -347,7 +465,7 @@ impl NativeModel {
                 let mut y = match &exec.kernel {
                     OpKernel::Gemm(p) => p.gemm_f32(&cols, rows, threads)?,
                     OpKernel::Dense { w, k, fan_in } => {
-                        dense_gemm(w, *k, *fan_in, &cols, rows, threads)?
+                        dense_gemm(w.as_slice(), *k, *fan_in, &cols, rows, threads)?
                     }
                     _ => bail!("conv node bound to a depthwise kernel"),
                 };
@@ -360,7 +478,7 @@ impl NativeModel {
                 let mut y = match &exec.kernel {
                     OpKernel::Dw(p) => p.forward(x, batch, geom, threads)?,
                     OpKernel::DenseDw { w, c } => {
-                        dense_depthwise(w, *c, x, batch, geom, threads)?
+                        dense_depthwise(w.as_slice(), *c, x, batch, geom, threads)?
                     }
                     _ => bail!("depthwise node bound to a dense-conv kernel"),
                 };
@@ -372,7 +490,7 @@ impl NativeModel {
                 let mut y = match &exec.kernel {
                     OpKernel::Gemm(p) => p.gemm_f32(x, batch, threads)?,
                     OpKernel::Dense { w, k, fan_in } => {
-                        dense_gemm(w, *k, *fan_in, x, batch, threads)?
+                        dense_gemm(w.as_slice(), *k, *fan_in, x, batch, threads)?
                     }
                     _ => bail!("fc node bound to a depthwise kernel"),
                 };
@@ -671,6 +789,37 @@ mod tests {
         let alone = m.forward(&a, 2).unwrap();
         let paired = m.forward(&pair, 2).unwrap();
         assert_eq!(alone.data(), &paired.data()[..10]);
+    }
+
+    #[test]
+    fn parts_split_is_bit_identical_and_validated() {
+        // plan_parts + from_parts (the .swisplan load path) must produce
+        // the same logits as the one-shot prepare
+        let w = surrogate_tinycnn_weights(7);
+        let tf = WeightTransform::Swis { n_shifts: 3.0, group_size: 4, consecutive: false };
+        let net = crate::nets::tinycnn().with_fc();
+        let parts = NativeModel::plan_parts(&net, &w, tf, crate::quant::Alpha::ONE).unwrap();
+        assert_eq!(parts.len(), 8); // 6 convs + 2 fc (gap carries no weights)
+        let direct = NativeModel::prepare_net(&net, &w, tf).unwrap();
+        let rebound = NativeModel::from_parts(&net, &parts).unwrap();
+        assert_eq!(direct.packed_bits, rebound.packed_bits);
+        assert_eq!(direct.packed_payload_bits, rebound.packed_payload_bits);
+        let x = images(2, 3);
+        assert_eq!(
+            direct.forward(&x, 2).unwrap().data(),
+            rebound.forward(&x, 2).unwrap().data()
+        );
+        // a dropped operand, a misnamed operand and a wrong-shape bias
+        // are clear errors, not garbage models
+        let mut short = parts.clone();
+        short.pop();
+        assert!(NativeModel::from_parts(&net, &short).is_err());
+        let mut renamed = parts.clone();
+        renamed[0].name = "nope".into();
+        assert!(NativeModel::from_parts(&net, &renamed).is_err());
+        let mut badbias = parts;
+        badbias[0].bias.pop();
+        assert!(NativeModel::from_parts(&net, &badbias).is_err());
     }
 
     #[test]

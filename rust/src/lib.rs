@@ -2,7 +2,24 @@
 //!
 //! Reproduction of *SWIS — Shared Weight bIt Sparsity for Efficient Neural
 //! Network Acceleration* (Li, Romaszkan, Graening, Gupta — TinyML Research
-//! Symposium 2021) as a three-layer Rust + JAX + Pallas system:
+//! Symposium 2021) as a three-layer Rust + JAX + Pallas system.
+//!
+//! ## The public facade: config → plan → session
+//!
+//! Every consumer enters through [`api`]: a typed, builder-style
+//! [`api::EngineConfig`] feeds [`api::Engine::prepare`], which runs the
+//! paper's offline decomposition/scheduling step ONCE and returns an
+//! [`api::EnginePlan`] — the planner output, packed layers and prepared
+//! kernel planes as a first-class, `Arc`-shareable object that
+//! serializes to/from a versioned `.swisplan` container.
+//! [`api::Session`] (sync `run`, plus a batched streaming handle) is the
+//! single inference entry; serving (`swis serve --plan`), evaluation,
+//! load generation and the benches all load plans instead of
+//! re-quantizing. Failures on every facade seam are the typed
+//! [`SwisError`] taxonomy ([`error`]) — match the class, not the
+//! message.
+//!
+//! ## Layer map
 //!
 //! * [`quant`] — the SWIS / SWIS-C quantizers, MSE++ metric, packed
 //!   storage format, truncation baselines (paper Sec. 2, 4.1). The
@@ -55,7 +72,13 @@
 //!   (p50/p95/p99, shed/busy/timeout counts) and the sweep driver that
 //!   walks worker count x batch policy x arrival rate and emits
 //!   `BENCH_serving.json`.
-//! * [`util`] — tensors, NPY/NPZ + JSON IO, RNG, CLI, property-testing.
+//! * [`api`] — the facade over all of the above: `EngineConfig` →
+//!   `Engine::prepare` → `EnginePlan` (`.swisplan`) → `Session`.
+//! * [`error`] — the crate-wide [`SwisError`] taxonomy
+//!   (`Config`/`Plan`/`Io`/`Backend`/`Admission`/`Eval`).
+//! * [`util`] — tensors, NPY/NPZ + JSON IO, RNG, CLI, the atomic
+//!   [`util::bench::Emitter`] behind every `BENCH_*.json`,
+//!   property-testing.
 //!
 //! ## Execution tiers — which one is authoritative for what
 //!
@@ -66,7 +89,7 @@
 //! |------|-------|----------|-------------------|
 //! | analytic sim | [`sim`] | cycle/energy/traffic models, no data | paper performance figures (Sec. 5) |
 //! | functional machine | [`sim::functional`], [`arch::pe_functional`] | exact integer MACs, cycle-faithful | hardware semantics: fold schedule, PE timing, accumulator width |
-//! | native engine | [`exec`] | the SAME integer MACs at software speed | serving + zoo accuracy sweeps when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`, `tests/graph_equiv.rs`) |
+//! | native engine | [`exec`], driven via [`api::Session`] over an [`api::EnginePlan`] | the SAME integer MACs at software speed | serving + zoo accuracy sweeps when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`, `tests/graph_equiv.rs`) and across the `.swisplan` round-trip (`tests/plan_roundtrip.rs`) |
 //! | PJRT | [`runtime`] | fp32 graph over (de)quantized weights | trained-model accuracy vs build-time goldens |
 //!
 //! The shared group-op arithmetic lives once, in [`exec::core`]; the
@@ -88,8 +111,10 @@
 //! so trajectory points never silently mix provenances.
 
 pub mod analysis;
+pub mod api;
 pub mod arch;
 pub mod coordinator;
+pub mod error;
 pub mod eval;
 pub mod exec;
 pub mod loadgen;
@@ -99,3 +124,5 @@ pub mod runtime;
 pub mod sim;
 pub mod schedule;
 pub mod util;
+
+pub use error::{AdmissionReason, SwisError, SwisResult};

@@ -19,4 +19,6 @@ mod sweep;
 
 pub use arrival::{exp_gap, Arrival};
 pub use recorder::{PointStats, Recorder};
-pub use sweep::{gen_images, run_sweep, sweep_json, write_bench_json, SweepConfig, SweepPoint};
+pub use sweep::{
+    gen_images, run_sweep, run_sweep_with, sweep_json, write_bench_json, SweepConfig, SweepPoint,
+};

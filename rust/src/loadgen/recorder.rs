@@ -4,13 +4,14 @@
 
 use std::time::Duration;
 
+use crate::error::SwisError;
 use crate::util::stats::{percentile, Reservoir};
 
 /// Collects per-request outcomes during a trial.
 pub struct Recorder {
     lat_us: Reservoir,
     pub ok: u64,
-    /// Responses refused by deadline shedding ("shed: ..." errors).
+    /// Responses refused by deadline shedding.
     pub shed: u64,
     /// Admissions refused with Busy (backpressure at the edge).
     pub busy: u64,
@@ -31,10 +32,13 @@ impl Recorder {
         self.lat_us.push(latency.as_secs_f64() * 1e6);
     }
 
-    /// Classify a routed error string (the pool prefixes shed responses
-    /// with "shed:").
-    pub fn record_err(&mut self, msg: &str) {
-        if msg.starts_with("shed:") {
+    /// Classify a routed error by its TYPED class: deadline sheds are
+    /// `Admission { reason: Shed }`, everything else counts as an error.
+    /// (Before the error taxonomy this sniffed a "shed:" message prefix
+    /// — a refactor of the message would have silently reclassified
+    /// sheds as errors.)
+    pub fn record_err(&mut self, e: &SwisError) {
+        if e.is_shed() {
             self.shed += 1;
         } else {
             self.error += 1;
@@ -112,8 +116,11 @@ mod tests {
         for i in 0..100 {
             r.record_ok(Duration::from_micros(100 + i));
         }
-        r.record_err("shed: deadline exceeded after 12.0 ms in queue");
-        r.record_err("unknown variant 'nope'");
+        r.record_err(&SwisError::admission(
+            crate::error::AdmissionReason::Shed,
+            "deadline exceeded after 12.0 ms in queue",
+        ));
+        r.record_err(&SwisError::backend("unknown variant 'nope'"));
         r.record_busy();
         r.record_timeout();
         let s = r.stats(Duration::from_secs(2));

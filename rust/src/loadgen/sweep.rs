@@ -8,7 +8,6 @@
 //! grid points run (the `Arc`-shared prepared variants the pool design
 //! exists for).
 
-use anyhow::{Context, Result};
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -19,7 +18,9 @@ use super::recorder::{PointStats, Recorder};
 use crate::coordinator::{
     Admission, BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
 };
+use crate::error::{SwisError, SwisResult};
 use crate::runtime::{create_factory, BackendFactory, BackendKind};
+use crate::util::bench::Emitter;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -88,11 +89,24 @@ pub fn run_sweep(
     dir: &Path,
     kind: BackendKind,
     cfg: &SweepConfig,
-) -> Result<(Vec<SweepPoint>, &'static str)> {
+) -> SwisResult<(Vec<SweepPoint>, &'static str)> {
     let factory: Arc<dyn BackendFactory> = Arc::from(create_factory(kind, dir, &cfg.variants)?);
+    run_sweep_with(factory, cfg)
+}
+
+/// [`run_sweep`] over an explicit factory — the entry the `--plan` flow
+/// uses (a [`crate::runtime::NativeFactory`] over a loaded
+/// [`crate::api::EnginePlan`]), so the sweep measures exactly the plan a
+/// deployment would ship and pays zero quantization per grid point.
+pub fn run_sweep_with(
+    factory: Arc<dyn BackendFactory>,
+    cfg: &SweepConfig,
+) -> SwisResult<(Vec<SweepPoint>, &'static str)> {
     let backend = factory.name();
     let names: Vec<String> = cfg.variants.iter().map(|v| v.name.clone()).collect();
-    let images = gen_images(16, cfg.seed);
+    // sized lazily off the first pool's reported image length, so plans
+    // for non-32x32x3 nets sweep with right-sized requests
+    let mut images: Vec<Vec<f32>> = Vec::new();
     let mut out = Vec::new();
     for &workers in &cfg.workers {
         for &max_wait in &cfg.max_waits {
@@ -105,6 +119,9 @@ pub fn run_sweep(
                         queue_depth: cfg.queue_depth,
                     },
                 )?;
+                if images.is_empty() {
+                    images = gen_images_len(16, pool.image_len(), cfg.seed);
+                }
                 let seed = cfg.seed ^ ((workers as u64) << 32) ^ (ai as u64 + 1);
                 let stats = match *arrival {
                     Arrival::Poisson { rate } => {
@@ -141,7 +158,7 @@ fn run_open_loop(
     names: &[String],
     images: &[Vec<f32>],
     seed: u64,
-) -> Result<PointStats> {
+) -> SwisResult<PointStats> {
     let (tx, rx) = mpsc::channel::<crate::coordinator::Ticket>();
     let collector = std::thread::spawn(move || {
         let mut rec = Recorder::new(1);
@@ -183,7 +200,7 @@ fn run_open_loop(
     drop(tx);
     let mut rec = collector
         .join()
-        .map_err(|_| anyhow::anyhow!("loadgen collector panicked"))?;
+        .map_err(|_| SwisError::backend("loadgen collector panicked"))?;
     rec.busy = busy;
     Ok(rec.stats(t0.elapsed()))
 }
@@ -220,7 +237,11 @@ fn run_closed_loop(
                                 Ok(Err(e)) => rec.record_err(&e),
                                 Err(_) => rec.record_timeout(),
                             },
-                            Err(_) => rec.record_busy(),
+                            // blocking submit never refuses with Busy: a
+                            // submit-time Err is a hard fault (pool down)
+                            // and must land in the error column, not be
+                            // dressed up as healthy backpressure
+                            Err(e) => rec.record_err(&e),
                         }
                         i += concurrency;
                     }
@@ -239,9 +260,15 @@ fn run_closed_loop(
 
 /// Deterministic synthetic 32x32x3 images for the generators.
 pub fn gen_images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    gen_images_len(n, 32 * 32 * 3, seed)
+}
+
+/// Deterministic synthetic images of an arbitrary per-request length
+/// (`hw * hw * c` of the served net).
+pub fn gen_images_len(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     (0..n.max(1))
-        .map(|_| (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect())
+        .map(|_| (0..len).map(|_| rng.range_f64(0.0, 1.0) as f32).collect())
         .collect()
 }
 
@@ -293,16 +320,15 @@ pub fn sweep_json(points: &[SweepPoint], cfg: &SweepConfig, backend: &str) -> Js
 }
 
 /// Write the sweep record to `path` (the repo-root `BENCH_serving.json`
-/// for the CLI and the hotpath bench).
+/// for the CLI and the hotpath bench) — atomically, through the shared
+/// [`Emitter`].
 pub fn write_bench_json(
     points: &[SweepPoint],
     cfg: &SweepConfig,
     backend: &str,
     path: &Path,
-) -> Result<()> {
-    std::fs::write(path, sweep_json(points, cfg, backend).pretty())
-        .with_context(|| format!("writing {}", path.display()))?;
-    Ok(())
+) -> SwisResult<()> {
+    Emitter::at(path).write(&sweep_json(points, cfg, backend))
 }
 
 #[cfg(test)]

@@ -3,18 +3,24 @@
 //! Subcommands:
 //!   quantize  — SWIS/SWIS-C/truncation quantization report for a network
 //!   simulate  — systolic-array simulation: cycles, F/s, F/J, DRAM traffic
+//!   plan      — run the offline pipeline once (quantize + schedule +
+//!               pack + bind) and emit a versioned .swisplan artifact
 //!   serve     — start a worker pool and drive a synthetic request load
-//!               (--net picks any zoo model on the native backend)
+//!               (--net picks any zoo model on the native backend;
+//!               --plan warms workers from a .swisplan, zero quantization)
 //!   loadgen   — SLO sweep (workers x policy x arrival rate), emits
-//!               BENCH_serving.json at the repo root
+//!               BENCH_serving.json at the repo root (--plan supported)
 //!   eval      — zoo accuracy/compression sweep (nets x schemes x bits on
 //!               the native executor), emits BENCH_accuracy.json
+//!               (--plan evaluates a shipped plan's exact operands)
 //!   prob      — Fig. 2 lossless-quantization probability curves
 //!   info      — model zoo + accelerator configuration summary
 //!
 //! Examples:
 //!   swis quantize --net resnet18 --shifts 3 --group 4
 //!   swis simulate --net mobilenet_v2 --scheme swis --shifts 3.5 --pe ds
+//!   swis plan --net tinycnn --scheme swis_c -o plan.swisplan
+//!   swis serve --plan plan.swisplan --requests 256 --workers 4
 //!   swis serve --requests 256 --variants fp32,swis@3 --backend native \
 //!              --workers 4 --queue-depth 256 --priority batch --rate 300
 //!   swis serve --net mobilenet_v2 --requests 8 --backend native
@@ -24,16 +30,21 @@
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use swis::analysis::fig2_rows;
+use swis::api::{Engine, EngineConfig, EnginePlan, Scheme};
 use swis::arch::pe::PeKind;
 use swis::coordinator::{
     BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
 };
-use swis::loadgen::{exp_gap, run_sweep, write_bench_json, Arrival, SweepConfig};
+use swis::loadgen::{
+    exp_gap, run_sweep, run_sweep_with, write_bench_json, Arrival, SweepConfig,
+};
 use swis::nets::{all_networks, by_name, surrogate_weights};
 use swis::quant::truncation::truncate_weights;
+use swis::runtime::{BackendFactory, NativeFactory};
 use swis::schedule::quantize_or_schedule;
 use swis::sim::{simulate_network, ArrayConfig, ExecScheme, SchemeKind};
 use swis::util::cli;
@@ -44,7 +55,7 @@ const VALUE_KEYS: &[&str] = &[
     "net", "nets", "shifts", "group", "scheme", "schemes", "pe", "rows", "cols", "artifacts",
     "requests", "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend",
     "workers", "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms",
-    "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads",
+    "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads", "plan", "o",
 ];
 
 fn main() {
@@ -60,6 +71,7 @@ fn run(argv: &[String]) -> Result<()> {
     match args.subcommand() {
         Some("quantize") => cmd_quantize(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("eval") => cmd_eval(&args),
@@ -67,7 +79,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("tune") => cmd_tune(&args),
         Some("info") => cmd_info(),
         Some(other) => {
-            let known = "quantize simulate serve loadgen eval tune prob info";
+            let known = "quantize simulate plan serve loadgen eval tune prob info";
             bail!("unknown subcommand '{other}' (try: {known})")
         }
         None => {
@@ -80,13 +92,15 @@ fn run(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
-         usage: swis <quantize|simulate|serve|loadgen|eval|prob|info> [options]\n\
-         serve:   --net NAME --workers N --queue-depth D --priority interactive|batch \
-         --rate R (open-loop pacing, 0 = burst)\n\
+         usage: swis <quantize|simulate|plan|serve|loadgen|eval|prob|info> [options]\n\
+         plan:    --net NAME --scheme swis|swis_c|wgt_trunc --shifts N --group G \
+         -o out.swisplan (or --variants fp32,swis@3[/g8]; fp32 is always included)\n\
+         serve:   --net NAME | --plan FILE.swisplan --workers N --queue-depth D \
+         --priority interactive|batch --rate R (open-loop pacing, 0 = burst)\n\
          loadgen: --workers 1,2,4 --rates 150,300 --max-waits-ms 2 \
-         --duration-ms 400 --deadline-ms 100 --mode open|closed|both\n\
+         --duration-ms 400 --deadline-ms 100 --mode open|closed|both [--plan FILE]\n\
          eval:    --nets a,b --schemes swis,swis_c,wgt_trunc --bits 2,3,4 \
-         --batch B --group G --seed S --out PATH\n\
+         --batch B --group G --seed S --out PATH [--plan FILE]\n\
          see rust/README.md for the full option list"
     );
 }
@@ -208,19 +222,57 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the offline pipeline ONCE and emit the reusable `.swisplan`
+/// artifact: quantize/schedule every variant, pack the operands, bind
+/// the kernels, serialize. `swis serve --plan`, `swis eval --plan` and
+/// `swis loadgen --plan` then load it instead of re-deriving any of it.
+fn cmd_plan(args: &cli::Args) -> Result<()> {
+    let net_name = args.get_or("net", "tinycnn");
+    let mut variants: Vec<VariantSpec> = if let Some(listed) = args.get("variants") {
+        EngineConfig::parse_variant_list(listed)?
+    } else {
+        // --scheme swis_c [--shifts 3 --group 4]
+        let shifts = args.get_f64("shifts", 3.0)?;
+        let group = args.get_usize("group", 4)?;
+        let mut v = Vec::new();
+        for sc in args.get_or("scheme", "swis").split(',') {
+            let scheme: Scheme = sc.trim().parse()?;
+            if scheme != Scheme::Fp32 {
+                v.push(VariantSpec::new(scheme, shifts, group)?);
+            }
+        }
+        v
+    };
+    // the fp32 baseline is ALWAYS included (as the usage text promises):
+    // it is what lets `swis eval --plan` anchor comparisons and `swis
+    // serve --plan` offer the reference variant
+    if !variants.iter().any(|v| v.scheme == Scheme::Fp32) {
+        variants.insert(0, VariantSpec::fp32());
+    }
+    let cfg = EngineConfig::for_net(net_name)?
+        .variants(variants)
+        .threads(args.get_usize("threads", 0)?)
+        .artifacts(args.get_or("artifacts", "artifacts"));
+    let out = args.get("o").or_else(|| args.get("out")).unwrap_or("plan.swisplan");
+    let t0 = std::time::Instant::now();
+    let plan = Engine::prepare(cfg)?;
+    let prep_s = t0.elapsed().as_secs_f64();
+    plan.save(Path::new(out))?;
+    let size = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+    println!("# plan — {} ({} variants)", plan.net_name(), plan.variants().len());
+    for v in plan.variants() {
+        println!("  variant {}", v.name);
+    }
+    println!("weights          : {}", plan.provenance().as_str());
+    println!("packed payload   : {} bits", plan.packed_payload_bits());
+    println!("prepare took     : {prep_s:.2} s (amortized across every serve/eval)");
+    println!("wrote {out} ({size} bytes)");
+    Ok(())
+}
+
 fn cmd_serve(args: &cli::Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
-    let net_name = args.get_or("net", "tinycnn");
-    let net = by_name(net_name)
-        .with_context(|| format!("unknown network '{net_name}'"))?
-        .with_fc();
     let n_req = args.get_usize("requests", 128)?;
-    let variants: Vec<VariantSpec> = args
-        .get_or("variants", "fp32,swis@3")
-        .split(',')
-        .map(VariantSpec::parse)
-        .collect::<Result<_>>()?;
-    let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
     let policy = BatchPolicy {
         max_batch: args.get_usize("max-batch", 64)?,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
@@ -233,20 +285,45 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let deadline_ms = args.get_usize("deadline-ms", 0)?;
     let deadline =
         if deadline_ms == 0 { None } else { Some(Duration::from_millis(deadline_ms as u64)) };
-    let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
+    let cfg = PoolConfig { workers, policy, queue_depth };
 
-    println!(
-        "# serve — starting pool ({workers} workers, {} variants, net {})",
-        names.len(),
-        net.name
-    );
-    let pool = WorkerPool::start_net(
-        Path::new(dir),
-        PoolConfig { workers, policy, queue_depth },
-        &net,
-        variants,
-        backend,
-    )?;
+    // --plan warms the pool from a prepared .swisplan artifact: the
+    // offline step already ran, so worker start-up performs ZERO
+    // quantization; net and variants come from the plan itself
+    let (pool, names) = if let Some(plan_path) = args.get("plan") {
+        let plan = Arc::new(EnginePlan::load(Path::new(plan_path))?);
+        let names: Vec<String> = plan.variants().iter().map(|v| v.name.clone()).collect();
+        println!(
+            "# serve — starting pool ({workers} workers, {} variants, net {}, plan {plan_path})",
+            names.len(),
+            plan.net_name()
+        );
+        if args.get("net").is_some()
+            || args.get("variants").is_some()
+            || args.get("backend").is_some()
+        {
+            eprintln!(
+                "note: --plan overrides --net/--variants/--backend (the plan is \
+                 authoritative and always serves natively)"
+            );
+        }
+        let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(plan));
+        (WorkerPool::start_with_factory(factory, cfg)?, names)
+    } else {
+        let net_name = args.get_or("net", "tinycnn");
+        let net = by_name(net_name)
+            .with_context(|| format!("unknown network '{net_name}'"))?
+            .with_fc();
+        let variants = EngineConfig::parse_variant_list(args.get_or("variants", "fp32,swis@3"))?;
+        let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
+        let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
+        println!(
+            "# serve — starting pool ({workers} workers, {} variants, net {})",
+            names.len(),
+            net.name
+        );
+        (WorkerPool::start_net(Path::new(dir), cfg, &net, variants, backend)?, names)
+    };
     println!("backend          : {}", pool.backend());
     let per = pool.image_len();
     let mut rng = Rng::new(7);
@@ -265,7 +342,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     for rx in rxs {
         match rx.recv()? {
             Ok(_) => ok += 1,
-            Err(e) if e.starts_with("shed:") => shed += 1,
+            Err(e) if e.is_shed() => shed += 1,
             Err(_) => {}
         }
     }
@@ -285,12 +362,22 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
 /// the repo-root `BENCH_serving.json` trajectory record.
 fn cmd_loadgen(args: &cli::Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
-    let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
-    let variants: Vec<VariantSpec> = args
-        .get_or("variants", "fp32,swis@3")
-        .split(',')
-        .map(VariantSpec::parse)
-        .collect::<Result<_>>()?;
+    // with --plan the sweep measures a prepared artifact: variants come
+    // from the plan and every grid point shares its operands
+    let plan = match args.get("plan") {
+        Some(p) => Some(Arc::new(EnginePlan::load(Path::new(p))?)),
+        None => None,
+    };
+    if plan.is_some() && (args.get("backend").is_some() || args.get("variants").is_some()) {
+        eprintln!(
+            "note: --plan overrides --variants/--backend (the plan is authoritative \
+             and always sweeps natively)"
+        );
+    }
+    let variants: Vec<VariantSpec> = match &plan {
+        Some(p) => p.variants().to_vec(),
+        None => EngineConfig::parse_variant_list(args.get_or("variants", "fp32,swis@3"))?,
+    };
     let workers = args.get_usize_list("workers", &[1, 2, 4])?;
     let rates = args.get_f64_list("rates", &[150.0, 300.0])?;
     let concurrency = args.get_usize_list("concurrency", &[4])?;
@@ -333,7 +420,18 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
         cfg.max_waits,
         cfg.arrivals.iter().map(|a| a.label()).collect::<Vec<_>>()
     );
-    let (points, served_on) = run_sweep(Path::new(dir), backend, &cfg)?;
+    let (points, served_on) = match plan {
+        Some(p) => {
+            let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(p));
+            run_sweep_with(factory, &cfg)?
+        }
+        None => {
+            // parsed only here, so an overridden --backend is truly
+            // ignored in plan mode (not validated then discarded)
+            let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
+            run_sweep(Path::new(dir), backend, &cfg)?
+        }
+    };
     println!("backend: {served_on}");
     println!(
         "{:>7} {:>14} {:>8} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6}",
@@ -365,7 +463,7 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
 /// batch, measured packed compression. Emits the repo-root
 /// `BENCH_accuracy.json` trajectory record.
 fn cmd_eval(args: &cli::Args) -> Result<()> {
-    use swis::eval::{run_eval, write_bench_json, EvalConfig};
+    use swis::eval::{run_eval, run_eval_plan, write_bench_json, EvalConfig};
     let d = EvalConfig::default();
     let list = |key: &str, dflt: &[String]| -> Vec<String> {
         match args.get(key) {
@@ -373,21 +471,86 @@ fn cmd_eval(args: &cli::Args) -> Result<()> {
             Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
         }
     };
-    let cfg = EvalConfig {
-        nets: list("nets", &d.nets),
-        schemes: list("schemes", &d.schemes),
-        bits: args.get_f64_list("bits", &d.bits)?,
-        group_size: args.get_usize("group", d.group_size)?,
-        batch: args.get_usize("batch", d.batch)?,
-        seed: args.get_usize("seed", d.seed as usize)? as u64,
-        threads: args.get_usize("threads", d.threads)?,
-        artifacts: Some(std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))),
+    // with --plan the sweep measures a shipped artifact's exact
+    // operands instead of re-quantizing a (nets x schemes x bits) grid
+    let plan = match args.get("plan") {
+        Some(p) => Some(EnginePlan::load(Path::new(p))?),
+        None => None,
+    };
+    let cfg = match &plan {
+        None => EvalConfig {
+            nets: list("nets", &d.nets),
+            // parsed only in grid mode: in plan mode the overridden
+            // --schemes is ignored, not validated then discarded
+            schemes: match args.get("schemes") {
+                None => d.schemes.clone(),
+                Some(v) => {
+                    let schemes: Vec<Scheme> = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<Scheme>())
+                        .collect::<swis::SwisResult<_>>()?;
+                    if schemes.contains(&Scheme::Fp32) {
+                        // silently emitting only reference rows would
+                        // look like a sweep that measured nothing
+                        bail!(
+                            "--schemes lists quantized schemes only (the fp32 \
+                             reference row is always emitted)"
+                        );
+                    }
+                    schemes
+                }
+            },
+            bits: args.get_f64_list("bits", &d.bits)?,
+            group_size: args.get_usize("group", d.group_size)?,
+            batch: args.get_usize("batch", d.batch)?,
+            seed: args.get_usize("seed", d.seed as usize)? as u64,
+            threads: args.get_usize("threads", d.threads)?,
+            artifacts: Some(std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))),
+        },
+        Some(p) => {
+            if args.get("nets").is_some()
+                || args.get("schemes").is_some()
+                || args.get("bits").is_some()
+                || args.get("group").is_some()
+            {
+                eprintln!(
+                    "note: --plan overrides --nets/--schemes/--bits/--group (the plan \
+                     is authoritative)"
+                );
+            }
+            let quantized: Vec<&VariantSpec> =
+                p.variants().iter().filter(|v| v.scheme != Scheme::Fp32).collect();
+            // the config block must label what actually ran: the plan's
+            // own group size when uniform, 0 ("mixed") otherwise
+            let group_size = match quantized.split_first() {
+                Some((first, rest)) if rest.iter().all(|v| v.group_size == first.group_size) => {
+                    first.group_size
+                }
+                _ => 0,
+            };
+            EvalConfig {
+                nets: vec![p.net_name().to_string()],
+                schemes: quantized.iter().map(|v| v.scheme).collect(),
+                bits: quantized.iter().map(|v| v.n_shifts).collect(),
+                group_size,
+                batch: args.get_usize("batch", d.batch)?,
+                seed: args.get_usize("seed", d.seed as usize)? as u64,
+                threads: args.get_usize("threads", d.threads)?,
+                artifacts: None,
+            }
+        }
     };
     println!(
         "# eval — {:?} x {:?} x {:?} bits, probe batch {} (native executor)",
-        cfg.nets, cfg.schemes, cfg.bits, cfg.batch
+        cfg.nets,
+        cfg.schemes.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        cfg.bits,
+        cfg.batch
     );
-    let recs = run_eval(&cfg)?;
+    let recs = match &plan {
+        Some(p) => run_eval_plan(p, cfg.batch, cfg.seed, cfg.threads)?,
+        None => run_eval(&cfg)?,
+    };
     println!(
         "{:<16} {:<10} {:>5} {:>12} {:>9} {:>8} {:>10}",
         "net", "scheme", "bits", "logits mse", "top1 agr", "compr.", "weights"
@@ -501,6 +664,47 @@ mod tests {
     }
 
     #[test]
+    fn plan_pipeline_through_cli() {
+        // plan -> serve --plan -> eval --plan -> loadgen --plan: the one
+        // facade pipeline end to end through the CLI surface
+        let pid = std::process::id();
+        let plan_out = std::env::temp_dir().join(format!("swis_cli_{pid}.swisplan"));
+        let plan_str = plan_out.to_str().unwrap();
+        run(&sv(&[
+            "plan", "--net", "tinycnn", "--scheme", "swis_c", "--shifts", "2", "-o", plan_str,
+        ]))
+        .unwrap();
+        run(&sv(&[
+            "serve", "--plan", plan_str, "--requests", "6", "--max-wait-ms", "1", "--workers",
+            "2",
+        ]))
+        .unwrap();
+        let eval_out = std::env::temp_dir().join(format!("swis_cli_eval_{pid}.json"));
+        run(&sv(&[
+            "eval", "--plan", plan_str, "--batch", "1", "--threads", "2", "--out",
+            eval_out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let j = swis::util::json::parse(&std::fs::read_to_string(&eval_out).unwrap()).unwrap();
+        assert_eq!(j.path(&["records", "0", "scheme"]).unwrap().as_str(), Some("fp32"));
+        assert_eq!(j.path(&["records", "1", "scheme"]).unwrap().as_str(), Some("swis_c"));
+        let lg_out = std::env::temp_dir().join(format!("swis_cli_lg_{pid}.json"));
+        run(&sv(&[
+            "loadgen", "--plan", plan_str, "--workers", "1", "--rates", "150",
+            "--duration-ms", "80", "--deadline-ms", "5000", "--out", lg_out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let j = swis::util::json::parse(&std::fs::read_to_string(&lg_out).unwrap()).unwrap();
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("native"));
+        // the sweep's variant list came from the plan, not a default
+        let variants = j.get("variants").unwrap().as_arr().unwrap();
+        assert!(variants.iter().any(|v| v.as_str() == Some("swis_c@2")));
+        for f in [&plan_out, &eval_out, &lg_out] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
     fn loadgen_smoke_writes_wellformed_json() {
         let out = std::env::temp_dir().join(format!("swis_loadgen_{}.json", std::process::id()));
         run(&sv(&[
@@ -564,5 +768,9 @@ mod tests {
         assert!(run(&sv(&["loadgen", "--mode", "sideways"])).is_err());
         assert!(run(&sv(&["eval", "--nets", "nope"])).is_err());
         assert!(run(&sv(&["eval", "--nets", "tinycnn", "--schemes", "int4"])).is_err());
+        // fp32 in --schemes would sweep nothing: loud error, not a no-op
+        assert!(run(&sv(&["eval", "--nets", "tinycnn", "--schemes", "fp32"])).is_err());
+        assert!(run(&sv(&["serve", "--plan", "/nope.swisplan"])).is_err());
+        assert!(run(&sv(&["plan", "--net", "nope"])).is_err());
     }
 }

@@ -146,9 +146,27 @@ pub fn from_bytes(bytes: &[u8]) -> Result<PackedLayer> {
         bail!("corrupt .swis header: G={group_size} N={n_shifts}");
     }
     let gpf = fan_in.div_ceil(group_size);
-    let g = n_filters * gpf;
+    let g = n_filters
+        .checked_mul(gpf)
+        .ok_or_else(|| anyhow::anyhow!("corrupt .swis header: group count overflows"))?;
     let gs = group_size;
     let n = n_shifts;
+    // a forged header must fail as a typed error BEFORE any group-sized
+    // allocation: the payload the header promises has to fit the bytes
+    // actually present (u128 arithmetic — the products cannot overflow)
+    let lanes = g as u128 * gs as u128;
+    let mut need_bits = lanes // signs
+        + lanes * n as u128 // masks
+        + if consecutive { g as u128 * 3 } else { g as u128 * n as u128 * 3 };
+    if scheduled {
+        need_bits += n_filters as u128 * 4;
+    }
+    let avail_bits = (bytes.len() as u128 - 26) * 8;
+    if need_bits > avail_bits {
+        bail!(
+            "truncated .swis payload: header promises {need_bits} bits, container has {avail_bits}"
+        );
+    }
 
     let mut r = BitReader::new(&bytes[26..]);
     let mut signs = vec![1i8; g * gs];

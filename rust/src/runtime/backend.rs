@@ -7,11 +7,10 @@
 //! * [`PjrtBackend`] — the AOT path: compiled HLO-text artifacts executed
 //!   by the PJRT client, weight variants as dequantized fp32 sets fed to
 //!   the weight-agnostic graph ([`super::ModelBundle`]).
-//! * [`NativeBackend`] — the SWIS-native path: per-variant
-//!   [`NativeModel`]s executing [`crate::quant::PackedLayer`] operands
-//!   directly through the packed bit-serial kernel. Needs no PJRT, no
-//!   artifacts (weights fall back to deterministic surrogates), and is
-//!   the default whenever the AOT path is unavailable.
+//! * [`NativeBackend`] — the SWIS-native path: a [`Session`] over an
+//!   `Arc<`[`EnginePlan`]`>`, executing packed operands directly. Needs
+//!   no PJRT and no artifacts, and is the default whenever the AOT path
+//!   is unavailable.
 //!
 //! [`BackendKind::Auto`] picks PJRT when the artifacts + runtime are
 //! present and falls back to native, so `Coordinator::start` serves in
@@ -21,19 +20,23 @@
 //! a backend. The worker pool hands one factory to N worker threads;
 //! each thread calls [`BackendFactory::make`] so thread-affine handles
 //! (PJRT) are constructed where they execute, while the native factory
-//! shares its prepared per-variant models across all workers through an
-//! `Arc` — quantization and warm-up happen exactly once per pool.
+//! shares ONE prepared [`EnginePlan`] across all workers through an
+//! `Arc` — quantization and warm-up happen exactly once per pool, and a
+//! factory built with [`NativeFactory::from_plan`] (e.g. from a loaded
+//! `.swisplan` file) performs zero quantization at warm-up (pinned by
+//! `tests/plan_warmup.rs`).
+//!
+//! Every trait method fails with the typed [`SwisError`] taxonomy so the
+//! pool can route failures by class instead of by message string.
 
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use super::{ModelBundle, Runtime};
+use crate::api::{Engine, EngineConfig, EnginePlan, Session};
 use crate::coordinator::{VariantSpec, WeightVariants};
-use crate::exec::{net_weights, NativeModel};
+use crate::error::{SwisError, SwisResult};
 use crate::nets::Network;
-use crate::quant::planner;
 use crate::util::tensor::Tensor;
 
 /// A loaded model able to execute image batches for named weight
@@ -54,14 +57,16 @@ pub trait Backend {
     /// Per-request image shape `[hw, hw, c]` this backend executes. The
     /// default is the TinyCNN 32x32x3 contract (the PJRT artifacts and
     /// every pre-zoo caller); the native backend reports whichever zoo
-    /// net it was built for, and the pool sizes admission checks off it.
+    /// net its plan was prepared for, and the pool sizes admission
+    /// checks off it.
     fn input_shape(&self) -> [usize; 3] {
         [32, 32, 3]
     }
 
     /// Execute a `(n, hw, hw, c)` image batch under `variant`, returning
-    /// `(n, n_classes)` logits.
-    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>>;
+    /// `(n, n_classes)` logits. Failures are typed: callers match
+    /// [`SwisError::Backend`] instead of grepping messages.
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>>;
 }
 
 /// Which backend the coordinator should build.
@@ -74,12 +79,16 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
-    pub fn parse(s: &str) -> Result<BackendKind> {
+    pub fn parse(s: &str) -> SwisResult<BackendKind> {
         Ok(match s {
             "auto" => BackendKind::Auto,
             "pjrt" => BackendKind::Pjrt,
             "native" => BackendKind::Native,
-            other => bail!("unknown backend '{other}' (expected auto|pjrt|native)"),
+            other => {
+                return Err(SwisError::config(format!(
+                    "unknown backend '{other}' (expected auto|pjrt|native)"
+                )))
+            }
         })
     }
 }
@@ -96,29 +105,46 @@ pub trait BackendFactory: Send + Sync {
     /// total worker count of the pool being assembled, so implementations
     /// can split intra-op thread budgets instead of oversubscribing
     /// `workers x default_threads` OS threads.
-    fn make(&self, pool_workers: usize) -> Result<Box<dyn Backend>>;
+    fn make(&self, pool_workers: usize) -> SwisResult<Box<dyn Backend>>;
 }
 
-/// Native recipe: quantize/prepare every variant ONCE (here, on the
-/// caller), then hand each worker an `Arc` clone of the prepared models.
+/// Native recipe: one shared prepared [`EnginePlan`] — built here (once)
+/// or loaded from a `.swisplan` file — handed to each worker as an `Arc`
+/// clone. Workers never quantize.
 pub struct NativeFactory {
-    prototype: NativeBackend,
+    plan: Arc<EnginePlan>,
 }
 
 impl NativeFactory {
     /// TinyCNN factory (the pre-zoo entry point).
-    pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> Result<NativeFactory> {
-        Ok(NativeFactory { prototype: NativeBackend::load(dir, variants)? })
+    pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> SwisResult<NativeFactory> {
+        NativeFactory::load_net(dir, &crate::nets::tinycnn().with_fc(), variants)
     }
 
     /// Factory for any zoo network (pass the net with its FC head, e.g.
-    /// `by_name("mobilenet_v2").unwrap().with_fc()`).
+    /// `by_name("mobilenet_v2").unwrap().with_fc()`): runs the offline
+    /// [`Engine::prepare`] step once, on the caller.
     pub fn load_net(
         dir: Option<&Path>,
         net: &Network,
         variants: &[VariantSpec],
-    ) -> Result<NativeFactory> {
-        Ok(NativeFactory { prototype: NativeBackend::load_net(dir, net, variants)? })
+    ) -> SwisResult<NativeFactory> {
+        let mut cfg = EngineConfig::with_network(net.clone()).variants(variants.to_vec());
+        if let Some(d) = dir {
+            cfg = cfg.artifacts(d);
+        }
+        Ok(NativeFactory::from_plan(Arc::new(Engine::prepare(cfg)?)))
+    }
+
+    /// Factory over an already-prepared plan (in-memory or loaded from a
+    /// `.swisplan` container) — the zero-quantization warm-up path.
+    pub fn from_plan(plan: Arc<EnginePlan>) -> NativeFactory {
+        NativeFactory { plan }
+    }
+
+    /// The shared plan this factory replicates.
+    pub fn plan(&self) -> &Arc<EnginePlan> {
+        &self.plan
     }
 }
 
@@ -127,14 +153,14 @@ impl BackendFactory for NativeFactory {
         "native"
     }
 
-    fn make(&self, pool_workers: usize) -> Result<Box<dyn Backend>> {
-        Ok(Box::new(self.prototype.replicate(pool_workers)))
+    fn make(&self, pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::replicated(Arc::clone(&self.plan), pool_workers)))
     }
 }
 
 /// PJRT recipe: every worker compiles/loads its own executable set on its
 /// own thread (PJRT handles are thread-affine, so the prepared state
-/// cannot be shared the way the native models are).
+/// cannot be shared the way the native plan is).
 pub struct PjrtFactory {
     dir: PathBuf,
     variants: Vec<VariantSpec>,
@@ -145,7 +171,7 @@ impl BackendFactory for PjrtFactory {
         "pjrt"
     }
 
-    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+    fn make(&self, _pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
         Ok(Box::new(PjrtBackend::load(&self.dir, &self.variants)?))
     }
 }
@@ -161,7 +187,7 @@ pub fn create_factory(
     kind: BackendKind,
     dir: &Path,
     variants: &[VariantSpec],
-) -> Result<Box<dyn BackendFactory>> {
+) -> SwisResult<Box<dyn BackendFactory>> {
     create_factory_net(kind, dir, &crate::nets::tinycnn().with_fc(), variants)
 }
 
@@ -173,12 +199,13 @@ pub fn create_factory_net(
     dir: &Path,
     net: &Network,
     variants: &[VariantSpec],
-) -> Result<Box<dyn BackendFactory>> {
+) -> SwisResult<Box<dyn BackendFactory>> {
     if net.name != "tinycnn" {
         return match kind {
-            BackendKind::Pjrt => {
-                bail!("PJRT artifacts are TinyCNN-only; '{}' needs --backend native", net.name)
-            }
+            BackendKind::Pjrt => Err(SwisError::config(format!(
+                "PJRT artifacts are TinyCNN-only; '{}' needs --backend native",
+                net.name
+            ))),
             _ => Ok(Box::new(NativeFactory::load_net(Some(dir), net, variants)?)),
         };
     }
@@ -219,7 +246,7 @@ pub fn create_backend(
     kind: BackendKind,
     dir: &Path,
     variants: &[VariantSpec],
-) -> Result<Box<dyn Backend>> {
+) -> SwisResult<Box<dyn Backend>> {
     create_factory(kind, dir, variants)?.make(1)
 }
 
@@ -232,11 +259,14 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
-    pub fn load(dir: &Path, variants: &[VariantSpec]) -> Result<PjrtBackend> {
-        let rt = Runtime::cpu()?;
-        let bundle = ModelBundle::load(&rt, dir, "model")?;
-        let sets = WeightVariants::build(&bundle.weights, variants)?;
-        Ok(PjrtBackend { _rt: rt, bundle, sets })
+    pub fn load(dir: &Path, variants: &[VariantSpec]) -> SwisResult<PjrtBackend> {
+        let build = || -> anyhow::Result<PjrtBackend> {
+            let rt = Runtime::cpu()?;
+            let bundle = ModelBundle::load(&rt, dir, "model")?;
+            let sets = WeightVariants::build(&bundle.weights, variants)?;
+            Ok(PjrtBackend { _rt: rt, bundle, sets })
+        };
+        build().map_err(SwisError::backend_from)
     }
 }
 
@@ -253,69 +283,73 @@ impl Backend for PjrtBackend {
         self.bundle.plan_chunks(n)
     }
 
-    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>> {
         let weights = self
             .sets
             .get(variant)
-            .with_context(|| format!("unknown variant '{variant}'"))?;
-        self.bundle.infer(images, Some(weights))
+            .ok_or_else(|| SwisError::backend(format!("unknown variant '{variant}'")))?;
+        self.bundle
+            .infer(images, Some(weights))
+            .map_err(SwisError::backend_from)
     }
 }
 
-/// The native SWIS execution path: one prepared [`NativeModel`] per
-/// variant — for ANY zoo network, not just TinyCNN — executing packed
-/// operands directly. The prepared models live behind an `Arc`, so
-/// replicating the backend across pool workers is a pointer clone —
-/// quantization and packing run once, every worker executes the same
-/// packed operands.
-#[derive(Clone)]
+/// The native SWIS execution path: a [`Session`] over the shared
+/// prepared plan — for ANY zoo network, not just TinyCNN — executing
+/// packed operands directly. Replicating the backend across pool workers
+/// is an `Arc` pointer clone of the plan plus a per-worker thread split;
+/// quantization and packing ran once (or not at all, when the plan came
+/// from a `.swisplan` file).
 pub struct NativeBackend {
-    models: Arc<HashMap<String, NativeModel>>,
-    input: [usize; 3],
-    threads: usize,
+    session: Session,
 }
 
 impl NativeBackend {
     /// TinyCNN backend (the pre-zoo entry point).
-    pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> Result<NativeBackend> {
+    pub fn load(dir: Option<&Path>, variants: &[VariantSpec]) -> SwisResult<NativeBackend> {
         NativeBackend::load_net(dir, &crate::nets::tinycnn().with_fc(), variants)
     }
 
-    /// Load a zoo network's fp32 weights (artifact npz when present,
-    /// deterministic surrogates otherwise — loudly) and quantize/prepare
-    /// every variant of it.
+    /// Prepare a plan for a zoo network (trained npz weights when
+    /// present, loud deterministic surrogates otherwise) and build the
+    /// backend over it.
     pub fn load_net(
         dir: Option<&Path>,
         net: &Network,
         variants: &[VariantSpec],
-    ) -> Result<NativeBackend> {
-        let (weights, _prov) = net_weights(dir, net)?;
-        let mut models = HashMap::new();
-        let mut input = [32usize, 32, 3];
-        for spec in variants {
-            let model = NativeModel::prepare_net(net, &weights, spec.transform()?)
-                .with_context(|| format!("preparing variant '{}' of '{}'", spec.name, net.name))?;
-            input = model.input_shape();
-            models.insert(spec.name.clone(), model);
-        }
-        Ok(NativeBackend {
-            models: Arc::new(models),
-            input,
-            threads: planner::default_threads(),
-        })
+    ) -> SwisResult<NativeBackend> {
+        Ok(NativeFactory::load_net(dir, net, variants)?.into_backend())
     }
 
-    /// Cheap per-worker replica sharing the prepared variants; the
-    /// intra-op thread budget is split across the pool so N workers do
-    /// not oversubscribe N x `default_threads` OS threads. Results are
-    /// thread-count invariant (pinned by `tests/native_equiv.rs`), so the
-    /// split never changes logits.
-    fn replicate(&self, pool_workers: usize) -> NativeBackend {
-        NativeBackend {
-            models: Arc::clone(&self.models),
-            input: self.input,
-            threads: (planner::default_threads() / pool_workers.max(1)).max(1),
-        }
+    /// Backend over an existing plan with the plan's own thread budget.
+    pub fn from_plan(plan: Arc<EnginePlan>) -> NativeBackend {
+        NativeBackend { session: Session::new(plan) }
+    }
+
+    /// Per-worker replica sharing the prepared plan; the intra-op thread
+    /// budget is split across the pool so N workers do not oversubscribe
+    /// N x `default_threads` OS threads. Results are thread-count
+    /// invariant (pinned by `tests/native_equiv.rs`), so the split never
+    /// changes logits.
+    pub fn replicated(plan: Arc<EnginePlan>, pool_workers: usize) -> NativeBackend {
+        let base = match plan.threads() {
+            0 => crate::quant::planner::default_threads(),
+            t => t,
+        };
+        let split = (base / pool_workers.max(1)).max(1);
+        NativeBackend { session: Session::with_threads(plan, split) }
+    }
+
+    /// The session this backend drives.
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+}
+
+impl NativeFactory {
+    /// One backend over this factory's plan (1-worker convenience).
+    fn into_backend(self) -> NativeBackend {
+        NativeBackend::from_plan(self.plan)
     }
 }
 
@@ -325,7 +359,7 @@ impl Backend for NativeBackend {
     }
 
     fn has_variant(&self, name: &str) -> bool {
-        self.models.contains_key(name)
+        self.session.plan().has_variant(name)
     }
 
     fn plan_chunks(&self, n: usize) -> Vec<usize> {
@@ -338,15 +372,15 @@ impl Backend for NativeBackend {
     }
 
     fn input_shape(&self) -> [usize; 3] {
-        self.input
+        self.session.plan().input_shape()
     }
 
-    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
-        let model = self
-            .models
-            .get(variant)
-            .with_context(|| format!("unknown variant '{variant}'"))?;
-        model.forward(images, self.threads)
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>> {
+        // the pool's run_chunk already assembled the batch tensor, so
+        // dispatch goes straight to the session's sync entry (the
+        // SessionStream handle is for callers still accumulating rows —
+        // re-feeding an assembled batch through it would copy it again)
+        self.session.run(variant, images)
     }
 }
 
@@ -369,7 +403,8 @@ mod tests {
         let imgs = Tensor::new(&[2, 32, 32, 3], vec![0.5; 2 * 32 * 32 * 3]).unwrap();
         let logits = b.infer("swis@3", &imgs).unwrap();
         assert_eq!(logits.shape(), &[2, 10]);
-        assert!(b.infer("nope", &imgs).is_err());
+        // failures are typed, not stringly
+        assert!(matches!(b.infer("nope", &imgs).unwrap_err(), SwisError::Backend(_)));
     }
 
     #[test]
@@ -378,14 +413,17 @@ mod tests {
         // must yield the native backend rather than an error
         let b = create_backend(BackendKind::Auto, Path::new("/nonexistent"), &specs()).unwrap();
         assert_eq!(b.name(), "native");
-        // explicit PJRT stays a hard failure in offline builds
-        assert!(create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), &specs()).is_err());
+        // explicit PJRT stays a hard, typed failure in offline builds
+        let e = create_backend(BackendKind::Pjrt, Path::new("/nonexistent"), &specs())
+            .unwrap_err();
+        assert!(matches!(e, SwisError::Backend(_)));
     }
 
     #[test]
-    fn native_factory_shares_prepared_models_across_replicas() {
+    fn native_factory_shares_prepared_plan_across_replicas() {
         let f = NativeFactory::load(None, &specs()).unwrap();
         assert_eq!(f.name(), "native");
+        assert_eq!(f.plan().net_name(), "tinycnn");
         let a = f.make(1).unwrap();
         let b = f.make(8).unwrap();
         assert!(a.has_variant("swis@3") && b.has_variant("swis_c@2"));
@@ -395,6 +433,23 @@ mod tests {
         let la = a.infer("swis@3", &imgs).unwrap();
         let lb = b.infer("swis@3", &imgs).unwrap();
         assert_eq!(la.data(), lb.data());
+    }
+
+    #[test]
+    fn factory_from_plan_round_trips_serialization() {
+        // a factory built from a serialized+reloaded plan serves the
+        // exact logits of the factory that prepared it
+        let f = NativeFactory::load(None, &specs()).unwrap();
+        let bytes = f.plan().to_bytes().unwrap();
+        let reloaded = NativeFactory::from_plan(Arc::new(EnginePlan::from_bytes(&bytes).unwrap()));
+        let imgs = Tensor::new(&[1, 32, 32, 3], vec![0.75; 32 * 32 * 3]).unwrap();
+        for v in ["fp32", "swis@3", "swis_c@2"] {
+            assert_eq!(
+                f.make(1).unwrap().infer(v, &imgs).unwrap().data(),
+                reloaded.make(1).unwrap().infer(v, &imgs).unwrap().data(),
+                "variant {v} diverged across the .swisplan round-trip"
+            );
+        }
     }
 
     #[test]
@@ -428,7 +483,7 @@ mod tests {
         let imgs = Tensor::new(&[2, 8, 8, 3], vec![0.5; 2 * 8 * 8 * 3]).unwrap();
         let logits = b.infer("swis@3", &imgs).unwrap();
         assert_eq!(logits.shape(), &[2, 5]);
-        // wrong-sized images are a routed error, not a panic
+        // wrong-sized images are a routed typed error, not a panic
         let bad = Tensor::new(&[1, 32, 32, 3], vec![0.5; 32 * 32 * 3]).unwrap();
         assert!(b.infer("swis@3", &bad).is_err());
     }
@@ -437,14 +492,10 @@ mod tests {
     fn zoo_factories_refuse_pjrt_and_share_replicas() {
         let net = mini_net();
         // PJRT artifacts compile TinyCNN only: explicit pjrt is a hard
-        // error for zoo nets, auto goes native without probing
-        assert!(create_factory_net(
-            BackendKind::Pjrt,
-            Path::new("/nonexistent"),
-            &net,
-            &specs()
-        )
-        .is_err());
+        // typed Config error for zoo nets, auto goes native w/o probing
+        let e = create_factory_net(BackendKind::Pjrt, Path::new("/nonexistent"), &net, &specs())
+            .unwrap_err();
+        assert!(matches!(e, SwisError::Config(_)));
         let f =
             create_factory_net(BackendKind::Auto, Path::new("/nonexistent"), &net, &specs())
                 .unwrap();
@@ -464,6 +515,6 @@ mod tests {
         assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
         assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
-        assert!(BackendKind::parse("tpu").is_err());
+        assert!(matches!(BackendKind::parse("tpu").unwrap_err(), SwisError::Config(_)));
     }
 }

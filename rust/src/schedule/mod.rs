@@ -9,6 +9,7 @@ pub use assignment::{nondecreasing_sequences, nondecreasing_sequences_vals};
 pub use network::{allocate_network, schedule_network, LayerWeights, NetworkAllocation};
 
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::quant::metrics::Alpha;
 use crate::quant::planner;
@@ -248,6 +249,18 @@ pub fn pack_with_filter_shifts(
     })
 }
 
+/// Process-wide count of layer quantize/schedule invocations through
+/// [`quantize_or_schedule`] — the planner-work odometer. The pool
+/// warm-up tests read it to PROVE that starting workers from a loaded
+/// `.swisplan` performs zero quantization (the whole point of shipping
+/// plans); see `tests/plan_warmup.rs`.
+static PREPARE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Read the planner-work odometer (monotonic across the process).
+pub fn prepare_call_count() -> u64 {
+    PREPARE_CALLS.load(Ordering::Relaxed)
+}
+
 /// Convenience wrapper: quantize uniformly when the target is integral,
 /// schedule otherwise.
 pub fn quantize_or_schedule(
@@ -258,6 +271,7 @@ pub fn quantize_or_schedule(
     consecutive: bool,
     alpha: Alpha,
 ) -> Result<PackedLayer> {
+    PREPARE_CALLS.fetch_add(1, Ordering::Relaxed);
     if target_shifts.fract() == 0.0 {
         let cfg = QuantConfig {
             n_shifts: target_shifts as usize,

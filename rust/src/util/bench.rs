@@ -1,0 +1,94 @@
+//! `BENCH_*.json` trajectory-file emitter — the ONE writer behind
+//! `benches/hotpath.rs`, `loadgen::sweep` and `eval::` (previously three
+//! hand-rolled `std::fs::write` calls). Writes are atomic: the document
+//! lands in a sibling temp file first and is `rename`d into place, so a
+//! bench that panics (or a machine that dies) mid-write can truncate
+//! only the temp file, never a previously recorded trajectory point.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{SwisError, SwisResult};
+use crate::util::json::Json;
+
+/// Atomic JSON emitter bound to one output path.
+pub struct Emitter {
+    path: PathBuf,
+}
+
+impl Emitter {
+    /// Emitter for an explicit path.
+    pub fn at(path: impl Into<PathBuf>) -> Emitter {
+        Emitter { path: path.into() }
+    }
+
+    /// Emitter for a `BENCH_*.json` file at the repository root (one
+    /// level above the `rust/` package — where every trajectory file
+    /// lives).
+    pub fn repo_root(file_name: &str) -> Emitter {
+        Emitter { path: Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file_name) }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write `doc` (pretty, stable key order) atomically via
+    /// [`write_atomic`].
+    pub fn write(&self, doc: &Json) -> SwisResult<()> {
+        write_atomic(&self.path, doc.pretty().as_bytes())
+    }
+}
+
+/// The ONE atomic file write behind every emitted artifact (`BENCH_*`
+/// trajectory files here, `.swisplan` containers in `crate::api`): the
+/// bytes land in a sibling `<name>.tmp` first and are `rename`d into
+/// place — rename within a directory is atomic on POSIX, so readers
+/// only ever observe the old or the new complete file, and a crash
+/// mid-write can truncate only the temp file.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> SwisResult<()> {
+    // (pid, counter)-unique temp name: concurrent writers to the same
+    // target — across processes OR threads — each stage privately and
+    // the LAST rename wins with a complete file; a shared tmp name
+    // would let one writer publish another's half-written bytes
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(".tmp.{}.{seq}", std::process::id()));
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes).map_err(|e| SwisError::io_at(&tmp, e))?;
+    std::fs::rename(&tmp, path).map_err(|e| SwisError::io_at(path, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_atomically_and_parses_back() {
+        let dir = std::env::temp_dir().join(format!("swis_emitter_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let em = Emitter::at(&path);
+        let mut doc = Json::obj();
+        doc.set("bench", "test").set("value", 1.5);
+        em.write(&doc).unwrap();
+        let back = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("test"));
+        // no temp residue after a successful write
+        assert!(std::fs::read_dir(&dir).unwrap().count() == 1);
+        // overwrite goes through the same atomic path
+        doc.set("value", 2.0);
+        em.write(&doc).unwrap();
+        let back = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("value").unwrap().as_f64(), Some(2.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unwritable_path_is_a_typed_io_error() {
+        let em = Emitter::at("/definitely/not/here/BENCH_x.json");
+        let e = em.write(&Json::obj()).unwrap_err();
+        assert!(matches!(e, SwisError::Io(_)));
+    }
+}

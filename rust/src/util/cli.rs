@@ -17,7 +17,9 @@ pub struct Args {
 }
 
 /// Option keys that take a value; everything else starting with `--` is a
-/// boolean flag.
+/// boolean flag. Single-character keys listed in `value_keys` are also
+/// accepted with one dash (`-o out.swisplan`); unknown single-dash
+/// tokens stay positional (so negative numbers pass through).
 pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args> {
     let mut a = Args::default();
     let mut i = 0;
@@ -34,6 +36,14 @@ pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args> {
                 a.opts.insert(stripped.to_string(), v.clone());
             } else {
                 a.flags.push(stripped.to_string());
+            }
+        } else if let Some(short) = tok.strip_prefix('-') {
+            if short.len() == 1 && value_keys.contains(&short) {
+                i += 1;
+                let v = argv.get(i).with_context(|| format!("-{short} expects a value"))?;
+                a.opts.insert(short.to_string(), v.clone());
+            } else {
+                a.pos.push(tok.clone());
             }
         } else {
             a.pos.push(tok.clone());
@@ -152,6 +162,15 @@ mod tests {
         let b = parse(&sv(&["--r", "100,250.5"]), &["r"]).unwrap();
         assert_eq!(b.get_f64_list("r", &[]).unwrap(), vec![100.0, 250.5]);
         assert_eq!(b.get_f64_list("missing", &[1.5]).unwrap(), vec![1.5]);
+    }
+
+    #[test]
+    fn short_value_keys_parse() {
+        let a = parse(&sv(&["plan", "-o", "out.swisplan", "-5"]), &["o"]).unwrap();
+        assert_eq!(a.get("o"), Some("out.swisplan"));
+        // unknown single-dash tokens stay positional
+        assert_eq!(a.positional(), &["plan".to_string(), "-5".to_string()]);
+        assert!(parse(&sv(&["-o"]), &["o"]).is_err());
     }
 
     #[test]

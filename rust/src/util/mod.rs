@@ -3,6 +3,7 @@
 //! because the offline build vendors no serde/clap/rand/proptest — see
 //! DESIGN.md §7.
 
+pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;

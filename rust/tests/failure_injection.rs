@@ -8,13 +8,13 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
 use swis::coordinator::{
     BatchPolicy, Coordinator, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
 };
 use swis::runtime::{Backend, BackendFactory, Manifest, ModelBundle, Runtime};
 use swis::util::npy;
 use swis::util::tensor::Tensor;
+use swis::{AdmissionReason, SwisError, SwisResult};
 
 fn art_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -121,7 +121,8 @@ fn truncated_npz_rejected() {
 #[test]
 fn coordinator_start_fails_cleanly_on_bad_dir() {
     // the explicit PJRT backend must return Err on a bad artifact dir —
-    // not hang or panic — and the thread must be reaped
+    // not hang or panic — and the thread must be reaped; the failure
+    // class is typed (Backend), not a message to grep
     for _ in 0..3 {
         let r = Coordinator::start_with(
             Path::new("/definitely/not/here"),
@@ -129,7 +130,7 @@ fn coordinator_start_fails_cleanly_on_bad_dir() {
             vec![VariantSpec::fp32()],
             swis::coordinator::BackendKind::Pjrt,
         );
-        assert!(r.is_err());
+        assert!(matches!(r.unwrap_err(), SwisError::Backend(_)));
     }
     // the default (Auto) keeps serving by falling back to the native
     // engine instead of failing
@@ -192,13 +193,13 @@ impl Backend for FaultyBackend {
         }
     }
 
-    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>> {
         match variant {
             "boom" => panic!("injected backend panic"),
-            "err" => bail!("injected backend error"),
+            "err" => Err(SwisError::backend("injected backend error")),
             _ => {
                 let n = images.shape()[0];
-                Tensor::new(&[n, 10], vec![0.0f32; n * 10])
+                Tensor::new(&[n, 10], vec![0.0f32; n * 10]).map_err(SwisError::backend_from)
             }
         }
     }
@@ -211,7 +212,7 @@ impl BackendFactory for FaultyFactory {
         "faulty"
     }
 
-    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+    fn make(&self, _pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
         Ok(Box::new(FaultyBackend))
     }
 }
@@ -259,8 +260,15 @@ fn worker_panic_fails_only_the_inflight_batch() {
 fn backend_error_routes_to_callers_and_pool_survives() {
     let pool = faulty_pool(1);
     let rx = pool.submit(ok_req("err"), Priority::Interactive, None).unwrap();
-    let msg = rx.recv().unwrap().expect_err("backend Err must be routed to the caller");
-    assert!(msg.contains("injected backend error"), "unexpected message: {msg}");
+    let err = rx.recv().unwrap().expect_err("backend Err must be routed to the caller");
+    // the routed error is the TYPED backend failure — assertions match
+    // the variant, so a reworded message can't silently rot this test
+    // (it used to grep the string)
+    assert!(
+        matches!(err, SwisError::Backend(_)),
+        "expected SwisError::Backend, got {err:?}"
+    );
+    assert!(format!("{err}").contains("injected backend error"));
 
     // the worker keeps serving after a backend error
     let resp = pool.infer(ok_req("fine")).unwrap();
@@ -289,8 +297,8 @@ impl BackendFactory for FailingFactory {
         "failing"
     }
 
-    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
-        bail!("injected warm-up failure")
+    fn make(&self, _pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
+        Err(SwisError::backend("injected warm-up failure"))
     }
 }
 
@@ -301,7 +309,7 @@ impl BackendFactory for PanickingFactory {
         "panicking"
     }
 
-    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+    fn make(&self, _pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
         panic!("injected warm-up panic")
     }
 }
@@ -309,10 +317,38 @@ impl BackendFactory for PanickingFactory {
 #[test]
 fn pool_start_fails_cleanly_when_warmup_fails_or_panics() {
     let cfg = PoolConfig { workers: 3, policy: BatchPolicy::default(), queue_depth: 8 };
-    // factory Err: start returns the error, all spawned threads reaped
+    // factory Err: start returns the error, all spawned threads reaped;
+    // the factory's own Backend class survives the pool's context wrap
     let e = WorkerPool::start_with_factory(Arc::new(FailingFactory), cfg).unwrap_err();
+    assert!(matches!(e, SwisError::Backend(_)), "got: {e:?}");
     assert!(format!("{e:#}").contains("injected warm-up failure"), "got: {e:#}");
-    // factory panic: reported as a start-up error, never a hang
+    // factory panic: reported as a typed start-up error, never a hang
     let e = WorkerPool::start_with_factory(Arc::new(PanickingFactory), cfg).unwrap_err();
+    assert!(matches!(e, SwisError::Backend(_)), "got: {e:?}");
     assert!(format!("{e:#}").contains("panicked"), "got: {e:#}");
+}
+
+#[test]
+fn shed_and_admission_failures_are_typed() {
+    // deadline sheds arrive as Admission { reason: Shed } on the ticket;
+    // malformed requests refuse as Admission { reason: Invalid } at the
+    // edge — both matchable without message grepping
+    let pool = faulty_pool(1);
+    // an already-expired deadline: the dispatch sweep must shed it with
+    // the typed reason whatever the worker timing
+    let rx = pool
+        .submit(ok_req("fine"), Priority::Interactive, Some(Duration::ZERO))
+        .unwrap();
+    let err = rx.recv().unwrap().expect_err("expired request must shed");
+    assert!(
+        matches!(err, SwisError::Admission { reason: AdmissionReason::Shed, .. }),
+        "expected a typed shed, got {err:?}"
+    );
+    let bad = InferRequest { image: vec![0.5; 7], variant: "fine".into() };
+    let err = pool.submit(bad, Priority::Interactive, None).unwrap_err();
+    assert!(
+        matches!(err, SwisError::Admission { reason: AdmissionReason::Invalid, .. }),
+        "expected a typed invalid-request refusal, got {err:?}"
+    );
+    pool.shutdown().unwrap();
 }

@@ -1,0 +1,150 @@
+//! `.swisplan` container round-trip: prepare → save → load →
+//! `Session::run` must be BIT-identical to the in-memory plan for every
+//! scheme (fp32 / SWIS / SWIS-C / truncation), group size (4 and 16),
+//! scheduled fractional shift budgets, and depthwise-bearing nets — and
+//! corrupted or version-mismatched containers must reject with typed
+//! [`SwisError::Plan`] errors, never load garbage.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use swis::api::{Engine, EngineConfig, EnginePlan, Session, SwisError, VariantSpec};
+use swis::nets::{ConvLayer, Network};
+use swis::util::rng::Rng;
+use swis::util::tensor::Tensor;
+
+fn scratch(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("swis_plan_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn probe(shape: [usize; 3], batch: usize, seed: u64) -> Tensor<f32> {
+    let mut rng = Rng::new(seed);
+    let n = batch * shape[0] * shape[1] * shape[2];
+    let data: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+    Tensor::new(&[batch, shape[0], shape[1], shape[2]], data).unwrap()
+}
+
+/// Assert every variant of `a` and `b` serves bit-identical logits.
+fn assert_plans_serve_identically(a: &Arc<EnginePlan>, b: &Arc<EnginePlan>, seed: u64) {
+    assert_eq!(a.variants(), b.variants());
+    assert_eq!(a.input_shape(), b.input_shape());
+    let x = probe(a.input_shape(), 2, seed);
+    let sa = Session::new(Arc::clone(a));
+    let sb = Session::new(Arc::clone(b));
+    for spec in a.variants() {
+        let la = sa.run(&spec.name, &x).unwrap();
+        let lb = sb.run(&spec.name, &x).unwrap();
+        assert_eq!(
+            la.data(),
+            lb.data(),
+            "variant '{}' diverged across the .swisplan round-trip",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn roundtrip_covers_schemes_groups_and_schedules() {
+    // tinycnn under every serving scheme, G=4 AND G=16, plus the
+    // Sec. 4.3 scheduled fractional budget — one plan, one file
+    let cfg = EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::fp32())
+        .variant(VariantSpec::swis(3.0, 4))
+        .variant(VariantSpec::swis(3.0, 16))
+        .variant(VariantSpec::swis_c(2.0, 4))
+        .variant(VariantSpec::wgt_trunc(3))
+        .variant(VariantSpec::swis(2.5, 4))
+        .threads(2);
+    let plan = Arc::new(Engine::prepare(cfg).unwrap());
+    let dir = scratch("schemes");
+    let path = dir.join("tinycnn.swisplan");
+    plan.save(&path).unwrap();
+    let loaded = Arc::new(EnginePlan::load(&path).unwrap());
+    assert_eq!(loaded.net_name(), "tinycnn");
+    assert_eq!(loaded.threads(), 2);
+    assert_eq!(loaded.provenance(), plan.provenance());
+    assert_plans_serve_identically(&plan, &loaded, 7);
+    // no temp residue from the atomic save
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn roundtrip_covers_depthwise_layers() {
+    // a depthwise-bearing custom descriptor (mobilenet-style block):
+    // the container embeds the full layer table, so a custom net needs
+    // no registry lookup at load time
+    let net = Network {
+        name: "plan_mini_dw".into(),
+        layers: vec![
+            ConvLayer::new("stem", 12, 3, 3, 2, 1, 6),
+            ConvLayer::depthwise("block0.dw", 6, 6, 3, 1, 1),
+            ConvLayer::new("block0.project", 6, 6, 1, 1, 0, 6),
+            ConvLayer::fc("classifier", 6, 4),
+        ],
+    };
+    let cfg = EngineConfig::with_network(net)
+        .variant(VariantSpec::fp32())
+        .variant(VariantSpec::swis(3.0, 4))
+        .variant(VariantSpec::swis_c(2.0, 4))
+        .threads(1);
+    let plan = Arc::new(Engine::prepare(cfg).unwrap());
+    assert_eq!(plan.input_shape(), [12, 12, 3]);
+    let dir = scratch("dw");
+    let path = dir.join("mini_dw.swisplan");
+    plan.save(&path).unwrap();
+    let loaded = Arc::new(EnginePlan::load(&path).unwrap());
+    assert_eq!(loaded.net_name(), "plan_mini_dw");
+    assert_plans_serve_identically(&plan, &loaded, 13);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rejects_corruption_version_mismatch_and_truncation() {
+    let cfg = EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::swis(2.0, 4))
+        .threads(1);
+    let plan = Engine::prepare(cfg).unwrap();
+    let bytes = plan.to_bytes().unwrap();
+
+    // bad magic
+    let mut b = bytes.clone();
+    b[0] = b'X';
+    let e = EnginePlan::from_bytes(&b).unwrap_err();
+    assert!(matches!(e, SwisError::Plan(_)), "got {e:?}");
+    assert!(format!("{e}").contains("magic"), "got {e}");
+
+    // future version: a clear version error, not a parse explosion
+    let mut b = bytes.clone();
+    b[8] = 99;
+    let e = EnginePlan::from_bytes(&b).unwrap_err();
+    assert!(matches!(e, SwisError::Plan(_)));
+    assert!(format!("{e}").contains("version 99"), "got {e}");
+
+    // flipped payload byte: checksum catches it before any field parses
+    let mut b = bytes.clone();
+    let mid = b.len() / 2;
+    b[mid] ^= 0x40;
+    let e = EnginePlan::from_bytes(&b).unwrap_err();
+    assert!(matches!(e, SwisError::Plan(_)));
+    assert!(format!("{e}").contains("checksum"), "got {e}");
+
+    // truncation (any prefix) must reject, never panic
+    for cut in [9, 17, bytes.len() / 3, bytes.len() - 1] {
+        assert!(
+            matches!(EnginePlan::from_bytes(&bytes[..cut]).unwrap_err(), SwisError::Plan(_)),
+            "truncation at {cut} must be a typed Plan error"
+        );
+    }
+
+    // loading a missing path is a typed Io error
+    assert!(matches!(
+        EnginePlan::load(std::path::Path::new("/definitely/not/here.swisplan")).unwrap_err(),
+        SwisError::Io(_)
+    ));
+}

@@ -1,0 +1,91 @@
+//! The acceptance pin for the plan pipeline:
+//!
+//! 1. `swis plan … && swis serve --plan …` must serve logits
+//!    BIT-identical to the existing `swis serve --backend native` path
+//!    (here: a pool warmed from a saved+reloaded `.swisplan` vs a pool
+//!    that quantized at start-up), and
+//! 2. pool worker warm-up from a plan performs ZERO quantization work —
+//!    asserted via the planner-work odometer
+//!    ([`swis::api::prepare_call_count`]) across the factory seam.
+//!
+//! This file deliberately holds a single test: the odometer is
+//! process-global, and a sibling test quantizing concurrently would
+//! race the zero-delta assertion. (Each integration-test file is its
+//! own process, so other test files cannot interfere.)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use swis::api::{prepare_call_count, Engine, EngineConfig, EnginePlan, VariantSpec};
+use swis::coordinator::{BackendKind, BatchPolicy, InferRequest, PoolConfig, WorkerPool};
+use swis::loadgen::gen_images;
+use swis::runtime::{BackendFactory, NativeFactory};
+
+#[test]
+fn plan_warmed_pool_serves_bit_identical_with_zero_quantization() {
+    let variants =
+        || vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4), VariantSpec::swis_c(2.0, 4)];
+    let names = ["fp32", "swis@3", "swis_c@2"];
+    let imgs = gen_images(9, 77);
+    let cfg = PoolConfig {
+        workers: 2,
+        policy: BatchPolicy::default(),
+        queue_depth: 64,
+    };
+
+    // reference: the pre-plan serve path — the pool quantizes at start
+    let direct = WorkerPool::start(Path::new("/nonexistent"), cfg, variants(), BackendKind::Native)
+        .unwrap();
+    assert_eq!(direct.backend(), "native");
+    let expected: Vec<Vec<f32>> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, im)| {
+            direct
+                .infer(InferRequest { image: im.clone(), variant: names[i % names.len()].into() })
+                .unwrap()
+                .logits
+        })
+        .collect();
+    direct.shutdown().unwrap();
+
+    // offline step: prepare once, ship the .swisplan, load it back
+    let plan = Engine::prepare(
+        EngineConfig::for_net("tinycnn").unwrap().variants(variants()).threads(2),
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join(format!("swis_warmup_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tinycnn.swisplan");
+    plan.save(&path).unwrap();
+    let loaded = Arc::new(EnginePlan::load(&path).unwrap());
+
+    // online step: warm a pool from the loaded plan. The planner-work
+    // odometer must not move — across factory construction, worker
+    // warm-up AND serving — because the offline step already did it all.
+    let odometer_before = prepare_call_count();
+    let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(loaded));
+    let pool = WorkerPool::start_with_factory(factory, cfg).unwrap();
+    assert_eq!(pool.backend(), "native");
+    assert_eq!(
+        prepare_call_count(),
+        odometer_before,
+        "pool warm-up from a plan must perform zero quantization"
+    );
+    for (i, im) in imgs.iter().enumerate() {
+        let resp = pool
+            .infer(InferRequest { image: im.clone(), variant: names[i % names.len()].into() })
+            .unwrap();
+        assert_eq!(
+            resp.logits, expected[i],
+            "plan-warmed pool diverged from the quantize-at-start pool on request {i}"
+        );
+    }
+    assert_eq!(
+        prepare_call_count(),
+        odometer_before,
+        "serving from a plan must perform zero quantization"
+    );
+    pool.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

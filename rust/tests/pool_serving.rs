@@ -8,7 +8,6 @@
 //! execution, controlled delays); the determinism pin runs the real
 //! native backend end to end. Nothing here needs PJRT or artifacts.
 
-use anyhow::{bail, Result};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -20,6 +19,7 @@ use swis::coordinator::{
 use swis::loadgen::gen_images;
 use swis::runtime::{Backend, BackendFactory};
 use swis::util::tensor::Tensor;
+use swis::{SwisError, SwisResult};
 
 // ---------------------------------------------------------------------
 // Instrumented test backend: fixed per-batch delay, dispatch log
@@ -47,14 +47,14 @@ impl Backend for TestBackend {
         }
     }
 
-    fn infer(&self, variant: &str, images: &Tensor<f32>) -> Result<Tensor<f32>> {
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>> {
         if variant == "err" {
-            bail!("injected backend error");
+            return Err(SwisError::backend("injected backend error"));
         }
         std::thread::sleep(self.delay);
         self.log.lock().unwrap().push(variant.to_string());
         let n = images.shape()[0];
-        Tensor::new(&[n, 10], vec![0.0f32; n * 10])
+        Tensor::new(&[n, 10], vec![0.0f32; n * 10]).map_err(SwisError::backend_from)
     }
 }
 
@@ -75,7 +75,7 @@ impl BackendFactory for TestFactory {
         "test"
     }
 
-    fn make(&self, _pool_workers: usize) -> Result<Box<dyn Backend>> {
+    fn make(&self, _pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
         Ok(Box::new(TestBackend { delay: self.delay, log: Arc::clone(&self.log) }))
     }
 }
@@ -277,7 +277,7 @@ fn expired_requests_are_shed_with_a_routed_error() {
         .unwrap();
 
     let msg = rx_b.recv().unwrap().expect_err("expired request must not be served");
-    assert!(msg.starts_with("shed:"), "unexpected shed message: {msg}");
+    assert!(msg.is_shed(), "shed must be typed Admission {{ reason: Shed }}, got: {msg}");
     rx_a.recv().unwrap().unwrap();
     let snap = pool.metrics.snapshot();
     assert_eq!(snap.shed, 1);
