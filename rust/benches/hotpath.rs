@@ -24,6 +24,14 @@
 //! `BENCH_serving.json` at the repo root — the serving trajectory file
 //! (throughput, p50/p99 latency, shed/busy counts per point).
 //!
+//! Since the SIMD PR `BENCH_native_gemm.json` additionally carries a
+//! `simd_vs_scalar` section: one `exec::tune_gemm` sweep per GEMM
+//! config (kernel variant x row-block x group-chunk), reporting the
+//! detected ISA, the winning variant, its median and Mw/s, and the
+//! speedup over the scalar walk. Every candidate inside the sweep is
+//! verified bit-identical to the scalar reference before its median
+//! counts, so a divergence aborts the bench instead of landing a record.
+//!
 //! Run: cargo bench --bench hotpath
 
 #[path = "bench_common.rs"]
@@ -67,19 +75,30 @@ impl Record {
 
 fn main() -> Result<()> {
     println!("== hotpath timings (median of repeats) ==\n");
+    // SWIS_BENCH_ONLY=native runs just the native-kernel sections (SIMD
+    // autotune + GEMM + depthwise -> BENCH_native_gemm.json) — what the
+    // CI simd-bench job needs, without the serving/PJRT sweeps
+    if std::env::var("SWIS_BENCH_ONLY").as_deref() == Ok("native") {
+        let simd = simd_vs_scalar()?;
+        let mut native_recs = native_gemm()?;
+        write_native_json(&native_recs, &simd)?;
+        native_recs.extend(native_depthwise()?);
+        return write_native_json(&native_recs, &simd);
+    }
     let mut recs: Vec<Record> = Vec::new();
     quantizer(&mut recs)?;
     scheduler(&mut recs)?;
     // write the trajectory file as soon as all records exist, so a
     // failure in the PJRT sections below can't lose the measurements
     write_json(&recs)?;
+    let simd = simd_vs_scalar()?;
     let mut native_recs = native_gemm()?;
     // same early-write rule: the GEMM measurements land on disk before
     // the depthwise section runs (its divergence assert must not lose
     // them), then the file is rewritten with both sections
-    write_native_json(&native_recs)?;
+    write_native_json(&native_recs, &simd)?;
     native_recs.extend(native_depthwise()?);
-    write_native_json(&native_recs)?;
+    write_native_json(&native_recs, &simd)?;
     serving_sweep()?;
     simulator()?;
     runtime()?;
@@ -126,6 +145,63 @@ fn serving_sweep() -> Result<()> {
     write_bench_json(&points, &cfg, backend, &path)?;
     println!("wrote {}", path.display());
     Ok(())
+}
+
+/// The `simd_vs_scalar` section of `BENCH_native_gemm.json`: ONE
+/// autotune sweep (`exec::tune_gemm`) per GEMM config. The sweep times
+/// scalar and every host-available vector variant over the same prepared
+/// planes, verifies each candidate bit-identical to the scalar reference
+/// before its median counts, and reports the argmin — so `speedup >= 1.0`
+/// holds by construction (scalar is a member of its own grid).
+fn simd_vs_scalar() -> Result<Json> {
+    use swis::exec::{detected_isa, tune_gemm, PreparedGemm, TuneOptions};
+    use swis::schedule::quantize_or_schedule;
+
+    println!("\n== SIMD vs scalar (autotune sweep, ISA {}) ==", detected_isa());
+    let mut rng = Rng::new(6);
+    let mut section = Json::obj();
+    section.set("isa", detected_isa());
+    section.set("bit_identical", true); // tune_gemm errors on divergence
+    let mut records: Vec<Json> = Vec::new();
+    for (label, k, fan_in, n, g, cons) in [
+        ("swis_n3_g4_128x576", 128usize, 576usize, 3.0f64, 4usize, false),
+        ("swis_n3_g16_128x576", 128, 576, 3.0, 16, false),
+        ("swis_c_n3_g4_64x1152", 64, 1152, 3.0, 4, true),
+    ] {
+        let w = rng.normal_vec(k * fan_in, 0.0, (2.0 / fan_in as f64).sqrt());
+        let packed = quantize_or_schedule(&w, &[k, fan_in], n, g, cons, swis::quant::Alpha::ONE)?;
+        let prep = PreparedGemm::from_packed(&packed)?;
+        let opts = TuneOptions { rows: 256, reps: 5, threads: vec![1] };
+        let rep = tune_gemm(&prep, &opts)?;
+        assert!(
+            rep.speedup >= 1.0,
+            "simd_vs_scalar {label}: speedup {} < 1 (argmin lost to its own grid?)",
+            rep.speedup
+        );
+        let mws = prep.macs(opts.rows) as f64 / 1e6 / (rep.best_median_ms / 1e3);
+        println!(
+            "simd {label:<22} best {:<9} rb={:<3} gc={:<3}: {:>8.2} ms ({:>8.1} Mw/s)  [scalar {:>8.2} ms, {:.2}x]",
+            rep.best.variant.as_str(),
+            rep.best.row_block,
+            rep.best.group_chunk,
+            rep.best_median_ms,
+            mws,
+            rep.scalar_median_ms,
+            rep.speedup
+        );
+        let mut j = Json::obj();
+        j.set("config", label);
+        j.set("best_variant", rep.best.variant.as_str());
+        j.set("row_block", rep.best.row_block as u64);
+        j.set("group_chunk", rep.best.group_chunk as u64);
+        j.set("median_ms", rep.best_median_ms);
+        j.set("scalar_median_ms", rep.scalar_median_ms);
+        j.set("mw_per_s", mws);
+        j.set("speedup", rep.speedup);
+        records.push(j);
+    }
+    section.set("records", Json::Arr(records));
+    Ok(section)
 }
 
 /// The native packed GEMM kernel vs the naive per-group scalar loop on a
@@ -252,13 +328,15 @@ fn native_depthwise() -> Result<Vec<Record>> {
 }
 
 /// Emit `BENCH_native_gemm.json` at the repo root: the native-kernel
-/// trajectory file (GEMM + depthwise sections).
-fn write_native_json(recs: &[Record]) -> Result<()> {
+/// trajectory file (GEMM + depthwise sections + the `simd_vs_scalar`
+/// autotune section).
+fn write_native_json(recs: &[Record], simd: &Json) -> Result<()> {
     let mut root = Json::obj();
     root.set("bench", "native_gemm");
     root.set("unit_time", "ms");
     root.set("unit_throughput", "Mw/s (weight-MACs)");
     root.set("threads_full", planner::default_threads() as u64);
+    root.set("simd_vs_scalar", simd.clone());
     let records: Vec<Json> = recs
         .iter()
         .map(|r| {

@@ -51,7 +51,7 @@ mod plan;
 
 pub use crate::coordinator::{Scheme, VariantSpec};
 pub use crate::error::{AdmissionReason, SwisError, SwisResult};
-pub use crate::exec::WeightProvenance;
+pub use crate::exec::{KernelVariant, TuneOptions, TuneParams, TuneReport, WeightProvenance};
 pub use crate::quant::Alpha;
 pub use crate::util::tensor::Tensor;
 pub use plan::EnginePlan;
@@ -209,7 +209,7 @@ impl Engine {
                 })?;
             parts.push(vp);
         }
-        EnginePlan::assemble(cfg.net, cfg.threads, provenance, cfg.variants, parts)
+        EnginePlan::assemble(cfg.net, cfg.threads, provenance, cfg.variants, parts, None)
     }
 }
 
@@ -225,10 +225,12 @@ pub struct Session {
 }
 
 impl Session {
-    /// Session with the plan's recorded thread budget (0 = machine
-    /// default).
+    /// Session with the plan's recorded thread budget; a plan left on
+    /// auto (0) resolves through the autotuner's swept thread split when
+    /// the plan carries host-matching [`TuneParams`](crate::exec::TuneParams),
+    /// else the machine default.
     pub fn new(plan: Arc<EnginePlan>) -> Session {
-        let threads = plan.threads();
+        let threads = plan.preferred_threads();
         Session::with_threads(plan, threads)
     }
 

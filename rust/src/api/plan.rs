@@ -12,7 +12,7 @@
 //! lets pool workers warm from a cached plan instead of re-quantizing
 //! per process.
 //!
-//! Container layout (version 1, little-endian, bytes):
+//! Container layout (little-endian, bytes):
 //!
 //! ```text
 //!   magic "SWISPLAN"   version:u16   flags:u16   threads:u16
@@ -24,6 +24,7 @@
 //!       dense:  count:u32 + f32 weights (filters-first)
 //!       packed: len:u32 + `.swis` container (quant::serialize)
 //!     bias: count:u32 + f32
+//!   [version 2 only] n_sections:u16, per section: tag:u8 len:u32 payload
 //!   fnv1a64 checksum of everything above: u64
 //! ```
 //!
@@ -31,18 +32,39 @@
 //! BODY field is trusted (magic and version are read first so mismatch
 //! errors stay legible); a flipped bit, a truncation or a version bump
 //! all reject with a typed [`SwisError::Plan`].
+//!
+//! **Versioning / TuneParams.** An untuned plan serializes as version 1,
+//! byte-identical to what pre-autotuner builds wrote and read. A plan
+//! carrying machine-tuned kernel parameters serializes as version 2:
+//! the version-1 body followed by a tagged section trailer; section tag
+//! 1 is [`TuneParams`] (`variant:u8 row_block:u16 group_chunk:u16
+//! threads:u16 cpu:str`). Unknown section tags are skipped, so a future
+//! v2 writer's extra sections load fine here. Tuned params are pinned
+//! to a CPU signature ([`crate::exec::simd::cpu_signature`]): loading a
+//! plan on a different machine drops them (kernels fall back to host
+//! defaults, [`EnginePlan::autotune`] re-derives) instead of dispatching
+//! another machine's argmin.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::coordinator::{Scheme, VariantSpec};
 use crate::error::{SwisError, SwisResult};
-use crate::exec::{LayerOperand, NativeModel, PreparedLayer, WeightProvenance};
+use crate::exec::tune::{tune_gemm, TuneOptions, TuneReport};
+use crate::exec::{
+    KernelVariant, LayerOperand, NativeModel, PreparedLayer, TuneParams, WeightProvenance,
+};
 use crate::nets::{ConvKind, ConvLayer, Network};
 use crate::quant::serialize;
 
 const MAGIC: &[u8; 8] = b"SWISPLAN";
-const VERSION: u16 = 1;
+/// The untuned container layout (and the newest layout pre-autotuner
+/// builds can read).
+const VERSION_BASE: u16 = 1;
+/// Version 1 body + tagged section trailer (TuneParams et al).
+const VERSION_TUNED: u16 = 2;
+/// Section tag for [`TuneParams`] in the version-2 trailer.
+const SECTION_TUNE: u8 = 1;
 
 /// A prepared engine: the planner output, packed layers and per-variant
 /// operands for one network — everything [`super::Session`] and the
@@ -60,6 +82,9 @@ pub struct EnginePlan {
     /// Ready-to-run models (callers share the whole plan via
     /// `Arc<EnginePlan>`; replicas are pointer clones of that).
     models: HashMap<String, NativeModel>,
+    /// Machine-tuned kernel parameters, when a sweep ran (or a loaded
+    /// container carried host-matching ones).
+    tune: Option<TuneParams>,
 }
 
 impl EnginePlan {
@@ -71,6 +96,7 @@ impl EnginePlan {
         provenance: WeightProvenance,
         variants: Vec<VariantSpec>,
         parts: Vec<Vec<PreparedLayer>>,
+        tune: Option<TuneParams>,
     ) -> SwisResult<EnginePlan> {
         if variants.is_empty() {
             return Err(SwisError::config("a plan needs at least one variant"));
@@ -82,21 +108,27 @@ impl EnginePlan {
                 parts.len()
             )));
         }
+        // params swept on a different machine are dropped here — kernels
+        // keep host defaults and `autotune` re-derives on this CPU
+        let tune = tune.filter(|t| t.matches_host()).map(|t| t.sanitized());
         let mut models = HashMap::new();
         let mut input = [0usize; 3];
         let mut n_classes = 0usize;
         for (spec, vp) in variants.iter().zip(&parts) {
-            let model = NativeModel::from_parts(&net, vp).map_err(|e| {
+            let mut model = NativeModel::from_parts(&net, vp).map_err(|e| {
                 SwisError::plan_from(e)
                     .context(format!("binding variant '{}' of '{}'", spec.name, net.name))
             })?;
+            if let Some(tp) = &tune {
+                model.set_tune(tp);
+            }
             input = model.input_shape();
             n_classes = model.n_classes();
             if models.insert(spec.name.clone(), model).is_some() {
                 return Err(SwisError::config(format!("duplicate variant '{}'", spec.name)));
             }
         }
-        Ok(EnginePlan { net, input, n_classes, threads, provenance, variants, parts, models })
+        Ok(EnginePlan { net, input, n_classes, threads, provenance, variants, parts, models, tune })
     }
 
     pub fn net(&self) -> &Network {
@@ -119,6 +151,64 @@ impl EnginePlan {
     /// Requested execution thread budget (0 = auto).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Thread budget a session/worker should resolve: an explicit plan
+    /// budget wins; otherwise the autotuner's swept thread split (when
+    /// its params were swept on this machine); otherwise 0 (= auto).
+    pub fn preferred_threads(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        match &self.tune {
+            Some(t) if t.matches_host() && t.threads != 0 => t.threads,
+            _ => 0,
+        }
+    }
+
+    /// The machine-tuned kernel parameters this plan carries, if any.
+    pub fn tune_params(&self) -> Option<&TuneParams> {
+        self.tune.as_ref()
+    }
+
+    /// Record machine-tuned kernel parameters on this plan. Params whose
+    /// CPU signature matches this host are sanitized and applied to
+    /// every bound packed kernel immediately; foreign-host params are
+    /// recorded verbatim for serialization (their origin host applies
+    /// them at load; any other host drops them and re-derives).
+    pub fn set_tune_params(&mut self, tp: TuneParams) {
+        if tp.matches_host() {
+            let tp = tp.sanitized();
+            for m in self.models.values_mut() {
+                m.set_tune(&tp);
+            }
+            self.tune = Some(tp);
+        } else {
+            self.tune = Some(tp);
+        }
+    }
+
+    /// Run the bench-driven kernel autotuner ([`tune_gemm`]) against
+    /// this plan's largest prepared GEMM, install the winning
+    /// [`TuneParams`] on every bound packed kernel, and record them for
+    /// serialization (the container becomes version 2). Fails with
+    /// [`SwisError::Config`] when the plan has no packed layers (fp32 /
+    /// truncation variants execute dense kernels with nothing to tune).
+    pub fn autotune(&mut self, opts: &TuneOptions) -> SwisResult<TuneReport> {
+        let probe = self
+            .models
+            .values()
+            .filter_map(|m| m.largest_gemm())
+            .max_by_key(|p| p.macs(1))
+            .cloned()
+            .ok_or_else(|| {
+                SwisError::config(
+                    "plan has no packed layers to autotune (fp32/truncation variants are dense)",
+                )
+            })?;
+        let report = tune_gemm(&probe, opts)?;
+        self.set_tune_params(report.best.clone());
+        Ok(report)
     }
 
     pub fn provenance(&self) -> WeightProvenance {
@@ -156,7 +246,9 @@ impl EnginePlan {
     pub fn to_bytes(&self) -> SwisResult<Vec<u8>> {
         let mut w = Writer::new();
         w.bytes_raw(MAGIC);
-        w.u16(VERSION);
+        // untuned plans keep the version-1 layout byte-identical, so
+        // pre-autotuner readers are unaffected until a sweep actually ran
+        w.u16(if self.tune.is_some() { VERSION_TUNED } else { VERSION_BASE });
         w.u16(0); // flags, reserved
         w.u16(fit_u16(self.threads, "thread budget")?);
         w.u8(match self.provenance {
@@ -212,6 +304,19 @@ impl EnginePlan {
                 }
             }
         }
+        if let Some(tp) = &self.tune {
+            // version-2 tagged section trailer
+            let mut s = Writer::new();
+            s.u8(tp.variant.tag());
+            s.u16(fit_u16(tp.row_block.min(u16::MAX as usize), "tuned row block")?);
+            s.u16(fit_u16(tp.group_chunk.min(u16::MAX as usize), "tuned group chunk")?);
+            s.u16(fit_u16(tp.threads.min(u16::MAX as usize), "tuned thread split")?);
+            s.str(&tp.cpu)?;
+            w.u16(1); // n_sections
+            w.u8(SECTION_TUNE);
+            w.u32(fit_u32(s.out.len(), "tune section length")?);
+            w.bytes_raw(&s.out);
+        }
         let sum = fnv1a64(&w.out);
         w.bytes_raw(&sum.to_le_bytes());
         Ok(w.out)
@@ -225,9 +330,10 @@ impl EnginePlan {
             return Err(SwisError::plan("not a .swisplan container (bad magic)"));
         }
         let version = u16::from_le_bytes([bytes[8], bytes[9]]);
-        if version != VERSION {
+        if version != VERSION_BASE && version != VERSION_TUNED {
             return Err(SwisError::plan(format!(
-                "unsupported .swisplan version {version} (this build reads version {VERSION})"
+                "unsupported .swisplan version {version} (this build reads versions \
+                 {VERSION_BASE}..={VERSION_TUNED})"
             )));
         }
         if bytes.len() < MAGIC.len() + 2 + 8 {
@@ -321,13 +427,36 @@ impl EnginePlan {
             variants.push(spec);
             parts.push(vp);
         }
+        let mut tune = None;
+        if version >= VERSION_TUNED {
+            let n_sections = r.u16()? as usize;
+            for _ in 0..n_sections {
+                let tag = r.u8()?;
+                let len = r.u32()? as usize;
+                let raw = r.take(len)?;
+                if tag == SECTION_TUNE {
+                    let mut s = Reader { b: raw, pos: 0 };
+                    let variant = KernelVariant::from_tag(s.u8()?).ok_or_else(|| {
+                        SwisError::plan("unknown kernel variant tag in TuneParams section")
+                    })?;
+                    let row_block = s.u16()? as usize;
+                    let group_chunk = s.u16()? as usize;
+                    let threads = s.u16()? as usize;
+                    let cpu = s.str()?;
+                    // bytes past the known fields are future extensions
+                    tune = Some(TuneParams { variant, row_block, group_chunk, threads, cpu });
+                }
+                // unknown tags skip cleanly: length-prefixed sections keep
+                // this reader forward-compatible within version 2
+            }
+        }
         if r.pos != body.len() {
             return Err(SwisError::plan(format!(
                 "trailing bytes in .swisplan at offset {}",
                 r.pos
             )));
         }
-        let plan = EnginePlan::assemble(net, threads, provenance, variants, parts)?;
+        let plan = EnginePlan::assemble(net, threads, provenance, variants, parts, tune)?;
         if plan.input != input || plan.n_classes != n_classes {
             return Err(SwisError::plan(format!(
                 "stored shape ({input:?} -> {n_classes}) disagrees with the descriptor \

@@ -15,10 +15,14 @@
 //!    prepared planes; each contributes `(Σ pos-lanes − Σ neg-lanes) <<
 //!    shift`. All-integer adds/shifts — bit-exact against the functional
 //!    simulator for any loop order or thread count.
-//! 3. **Cache blocking**: rows (output pixels) are processed in blocks of
-//!    [`ROW_BLOCK`] so one streaming pass over a filter's prepared
-//!    operand amortizes across the whole block, and the block's
-//!    accumulators stay in registers.
+//! 3. **Cache blocking + SIMD tiles**: rows (output pixels) are
+//!    processed in machine-tuned blocks ([`super::simd::TuneParams`]).
+//!    The vector path transposes each block's activations into a
+//!    contiguous scratch so every set lane bit becomes one unit-stride
+//!    vector load across the whole row tile ([`super::simd`]); results
+//!    are staged in a block buffer and written row-contiguous. The
+//!    scalar walk remains as the always-correct fallback
+//!    (`SWIS_FORCE_SCALAR=1`, unsupported hosts, oversized activations).
 //! 4. **`std::thread::scope` parallelism**: row ranges are disjoint
 //!    output slices handed to scoped threads (no locks, results
 //!    thread-count invariant).
@@ -27,18 +31,20 @@
 //! integer MACs (the serving contract with `sim::functional::run_matmul`);
 //! the fp32 entry ([`PreparedGemm::gemm_f32`]) adds symmetric int8
 //! activation quantization and the dequant rescale (paper's 8-bit
-//! activations).
-
-use anyhow::{bail, Result};
+//! activations). Every dispatch flavor is bit-identical — pinned by
+//! `tests/simd_equiv.rs`.
 
 use super::core;
 use super::im2col::ConvGeom;
+use super::simd::{self, KernelVariant, TuneParams, MAX_SIMD_ACT};
+use crate::error::{SwisError, SwisResult};
 use crate::quant::int8::round_half_even;
 use crate::quant::PackedLayer;
 
-/// Rows per cache block: small enough for the block's i64 accumulators
-/// and partials to live in registers, large enough to amortize the
-/// prepared-operand stream.
+/// Rows per cache block on the scalar path: small enough for the block's
+/// i64 accumulators and partials to live in registers, large enough to
+/// amortize the prepared-operand stream. The vector path's row tile is
+/// machine-tuned instead ([`TuneParams::row_block`]).
 pub const ROW_BLOCK: usize = 8;
 
 /// Largest group size the u16 lane bitmasks cover.
@@ -46,10 +52,10 @@ pub const MAX_GROUP_SIZE: usize = 16;
 
 /// One prepared shift plane: lanes split by sign, only set mask bits.
 #[derive(Clone, Copy, Debug)]
-struct Plane {
-    shift: u8,
-    pos: u16,
-    neg: u16,
+pub(crate) struct Plane {
+    pub(crate) shift: u8,
+    pub(crate) pos: u16,
+    pub(crate) neg: u16,
 }
 
 /// A packed layer prepared for native execution. Holds only the
@@ -66,6 +72,7 @@ pub struct PreparedGemm {
     /// Group `g`'s planes live at `planes[plane_ofs[g]..plane_ofs[g+1]]`.
     plane_ofs: Vec<u32>,
     planes: Vec<Plane>,
+    tune: TuneParams,
 }
 
 /// Precompute the per-(group, active shift plane) sign-split lane
@@ -75,14 +82,14 @@ pub struct PreparedGemm {
 /// bits are cleared so the plane walk stays in bounds and bit-identical
 /// to the gather-based oracles. Fails on group sizes beyond the bitmask
 /// width.
-fn prepare_planes(p: &PackedLayer) -> Result<(Vec<u32>, Vec<Plane>)> {
+fn prepare_planes(p: &PackedLayer) -> SwisResult<(Vec<u32>, Vec<Plane>)> {
     if p.group_size == 0 || p.group_size > MAX_GROUP_SIZE {
-        bail!(
+        return Err(SwisError::config(format!(
             "native kernel supports group sizes 1..={MAX_GROUP_SIZE}, got {}",
             p.group_size
-        );
+        )));
     }
-    p.validate()?;
+    p.validate().map_err(SwisError::config_from)?;
     let n_groups = p.n_groups();
     let gs = p.group_size;
     let gpf = p.groups_per_filter();
@@ -128,8 +135,10 @@ fn prepare_planes(p: &PackedLayer) -> Result<(Vec<u32>, Vec<Plane>)> {
 
 impl PreparedGemm {
     /// Prepare a packed layer. Fails on group sizes beyond the bitmask
-    /// width; callers fall back to [`naive_gemm`] there.
-    pub fn from_packed(p: &PackedLayer) -> Result<PreparedGemm> {
+    /// width; callers fall back to [`naive_gemm`] there. Starts on the
+    /// host's default [`TuneParams`]; [`PreparedGemm::set_tune`] installs
+    /// swept parameters.
+    pub fn from_packed(p: &PackedLayer) -> SwisResult<PreparedGemm> {
         let (plane_ofs, planes) = prepare_planes(p)?;
         Ok(PreparedGemm {
             n_filters: p.n_filters(),
@@ -139,6 +148,7 @@ impl PreparedGemm {
             scale: p.scale,
             plane_ofs,
             planes,
+            tune: TuneParams::host_default(),
         })
     }
 
@@ -150,22 +160,62 @@ impl PreparedGemm {
         self.fan_in
     }
 
+    /// Groups each filter's fan-in splits into (the tuner's chunk axis).
+    pub fn groups_per_filter(&self) -> usize {
+        self.groups_per_filter
+    }
+
     /// Weight-MACs one full pass performs (for Mw/s reporting).
     pub fn macs(&self, p_rows: usize) -> u64 {
         p_rows as u64 * self.n_filters as u64 * self.fan_in as u64
     }
 
+    /// Install machine-tuned kernel parameters (sanitized to what this
+    /// host can dispatch — see [`TuneParams::sanitized`]).
+    pub fn set_tune(&mut self, tp: TuneParams) {
+        self.tune = tp.sanitized();
+    }
+
+    /// The kernel parameters dispatch currently uses.
+    pub fn tune(&self) -> &TuneParams {
+        &self.tune
+    }
+
+    /// The variant/blocking this call will actually run: the forced
+    /// scalar escape hatch and the i32-partial overflow screen (see
+    /// [`MAX_SIMD_ACT`]) both demote to the scalar walk.
+    fn effective_tune(&self, acts: &[i32]) -> TuneParams {
+        if self.tune.variant == KernelVariant::Scalar || simd::force_scalar() {
+            return TuneParams { variant: KernelVariant::Scalar, ..self.tune.clone() };
+        }
+        let amax = acts.iter().fold(0u32, |m, &a| m.max(a.unsigned_abs()));
+        if amax > MAX_SIMD_ACT {
+            return TuneParams { variant: KernelVariant::Scalar, ..self.tune.clone() };
+        }
+        self.tune.clone()
+    }
+
     /// `acts (p_rows, fan_in) x packed^T -> (p_rows, n_filters)` exact
     /// integer MACs, identical to `sim::functional::run_matmul` output.
     /// `n_threads <= 1` runs inline; row partitions make any thread count
-    /// bit-identical.
-    pub fn gemm(&self, acts: &[i32], p_rows: usize, n_threads: usize) -> Result<Vec<i64>> {
+    /// bit-identical, and so does every [`KernelVariant`].
+    pub fn gemm(&self, acts: &[i32], p_rows: usize, n_threads: usize) -> SwisResult<Vec<i64>> {
         if acts.len() != p_rows * self.fan_in {
-            bail!("acts {} != {} x {}", acts.len(), p_rows, self.fan_in);
+            return Err(SwisError::backend(format!(
+                "acts {} != {} x {}",
+                acts.len(),
+                p_rows,
+                self.fan_in
+            )));
         }
+        let tune = self.effective_tune(acts);
         let mut out = vec![0i64; p_rows * self.n_filters];
         par_rows(&mut out, p_rows, self.n_filters, n_threads, |start, rows, slice| {
-            self.gemm_rows(acts, start, rows, slice)
+            if tune.variant == KernelVariant::Scalar {
+                self.gemm_rows_scalar(acts, start, rows, slice);
+            } else {
+                self.gemm_rows_blocked(acts, start, rows, slice, &tune);
+            }
         });
         Ok(out)
     }
@@ -177,7 +227,7 @@ impl PreparedGemm {
     /// — so serving is deterministic under any batching policy (and the
     /// finer scales only reduce quantization error vs one batch-wide
     /// scale). Returns `(p_rows, n_filters)`.
-    pub fn gemm_f32(&self, acts: &[f32], p_rows: usize, n_threads: usize) -> Result<Vec<f32>> {
+    pub fn gemm_f32(&self, acts: &[f32], p_rows: usize, n_threads: usize) -> SwisResult<Vec<f32>> {
         let (codes, scales) = quantize_acts_rows(acts, p_rows)?;
         let raw = self.gemm(&codes, p_rows, n_threads)?;
         let k = self.n_filters;
@@ -191,14 +241,18 @@ impl PreparedGemm {
         Ok(out)
     }
 
-    /// The blocked single-thread core over rows `[start, start+rows)`;
-    /// `out` is that range's output slice.
-    fn gemm_rows(&self, acts: &[i32], start: usize, rows: usize, out: &mut [i64]) {
+    /// The scalar single-thread core over rows `[start, start+rows)`;
+    /// `out` is that range's output slice. Results are staged in a
+    /// row-major block buffer so the store to `out` is row-contiguous
+    /// (the per-filter scatter only ever touches the hot 8-row staging
+    /// block).
+    fn gemm_rows_scalar(&self, acts: &[i32], start: usize, rows: usize, out: &mut [i64]) {
         let k = self.n_filters;
         let fi = self.fan_in;
         let gs = self.group_size;
         let gpf = self.groups_per_filter;
         debug_assert_eq!(out.len(), rows * k);
+        let mut obuf = vec![0i64; ROW_BLOCK * k];
         let mut r0 = 0usize;
         while r0 < rows {
             let rb = ROW_BLOCK.min(rows - r0);
@@ -238,8 +292,89 @@ impl PreparedGemm {
                     }
                 }
                 for r in 0..rb {
-                    out[(r0 + r) * k + f] = acc[r];
+                    obuf[r * k + f] = acc[r];
                 }
+            }
+            for r in 0..rb {
+                out[(r0 + r) * k..(r0 + r) * k + k].copy_from_slice(&obuf[r * k..r * k + k]);
+            }
+            r0 += rb;
+        }
+    }
+
+    /// The vector single-thread core: row tiles of `tune.row_block`,
+    /// fan-in chunks of `tune.group_chunk` groups. Each chunk's
+    /// activations are transposed into a contiguous scratch
+    /// (`at[col * row_block + row]`, tail rows zero-padded) so the plane
+    /// walk in [`simd::accumulate_tile`] issues one unit-stride vector
+    /// load per set lane bit; per-tile results accumulate in a row-major
+    /// block buffer and store row-contiguous. Bit-identical to the
+    /// scalar walk: same integer adds and shifts per output, reordered
+    /// associatively over exact arithmetic.
+    fn gemm_rows_blocked(
+        &self,
+        acts: &[i32],
+        start: usize,
+        rows: usize,
+        out: &mut [i64],
+        tune: &TuneParams,
+    ) {
+        let k = self.n_filters;
+        let fi = self.fan_in;
+        let gs = self.group_size;
+        let gpf = self.groups_per_filter;
+        debug_assert_eq!(out.len(), rows * k);
+        let w = tune.variant.width();
+        let rbp = tune.row_block.max(w);
+        let gc = tune.group_chunk.clamp(1, gpf);
+        let mut at = vec![0i32; gc * gs * rbp];
+        let mut obuf = vec![0i64; rbp * k];
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = rbp.min(rows - r0);
+            obuf.fill(0);
+            let mut g0 = 0usize;
+            while g0 < gpf {
+                let gce = gc.min(gpf - g0);
+                let cols = gce * gs;
+                let base_col = g0 * gs;
+                // columns past fan_in exist only as zero padding — the
+                // prepared masks carry no bits for them
+                let ncols = cols.min(fi.saturating_sub(base_col));
+                at[..cols * rbp].fill(0);
+                for r in 0..rb {
+                    let arow = &acts[(start + r0 + r) * fi + base_col..][..ncols];
+                    for (cidx, &v) in arow.iter().enumerate() {
+                        at[cidx * rbp + r] = v;
+                    }
+                }
+                for f in 0..k {
+                    let g_base = f * gpf + g0;
+                    let mut sub = 0usize;
+                    while sub < rb {
+                        let mut acc = [0i64; simd::MAX_ROW_BLOCK];
+                        simd::accumulate_tile(
+                            tune.variant,
+                            &self.planes,
+                            &self.plane_ofs,
+                            g_base,
+                            gce,
+                            gs,
+                            &at,
+                            rbp,
+                            sub,
+                            &mut acc[..w],
+                        );
+                        for r in 0..w.min(rb - sub) {
+                            obuf[(sub + r) * k + f] += acc[r];
+                        }
+                        sub += w;
+                    }
+                }
+                g0 += gce;
+            }
+            for r in 0..rb {
+                out[(r0 + r) * k..(r0 + r) * k + k].copy_from_slice(&obuf[r * k..r * k + k]);
             }
             r0 += rb;
         }
@@ -261,16 +396,19 @@ pub fn quantize_acts(x: &[f32]) -> (Vec<i32>, f64) {
 
 /// Row-wise [`quantize_acts`] over a `(p_rows, fan_in)` matrix: one scale
 /// per row, so a row's codes depend only on that row's data.
-pub fn quantize_acts_rows(x: &[f32], p_rows: usize) -> Result<(Vec<i32>, Vec<f64>)> {
+pub fn quantize_acts_rows(x: &[f32], p_rows: usize) -> SwisResult<(Vec<i32>, Vec<f64>)> {
     if p_rows == 0 {
         return if x.is_empty() {
             Ok((Vec::new(), Vec::new()))
         } else {
-            Err(anyhow::anyhow!("{} activations with 0 rows", x.len()))
+            Err(SwisError::backend(format!("{} activations with 0 rows", x.len())))
         };
     }
     if x.len() % p_rows != 0 {
-        bail!("{} activations do not split into {p_rows} rows", x.len());
+        return Err(SwisError::backend(format!(
+            "{} activations do not split into {p_rows} rows",
+            x.len()
+        )));
     }
     let per = x.len() / p_rows;
     let mut codes = Vec::with_capacity(x.len());
@@ -287,10 +425,15 @@ pub fn quantize_acts_rows(x: &[f32], p_rows: usize) -> Result<(Vec<i32>, Vec<f64
 /// The naive per-group scalar loop — the pre-kernel baseline the bench
 /// reports speedup against, and an independent oracle for the tests:
 /// gathers each group's lanes and evaluates [`core::group_dot`].
-pub fn naive_gemm(p: &PackedLayer, acts: &[i32], p_rows: usize) -> Result<Vec<i64>> {
+pub fn naive_gemm(p: &PackedLayer, acts: &[i32], p_rows: usize) -> SwisResult<Vec<i64>> {
     let fan_in = p.fan_in();
     if acts.len() != p_rows * fan_in {
-        bail!("acts {} != {} x {}", acts.len(), p_rows, fan_in);
+        return Err(SwisError::backend(format!(
+            "acts {} != {} x {}",
+            acts.len(),
+            p_rows,
+            fan_in
+        )));
     }
     let k = p.n_filters();
     let gpf = p.groups_per_filter();
@@ -322,12 +465,12 @@ pub fn dense_gemm(
     acts: &[f32],
     p_rows: usize,
     n_threads: usize,
-) -> Result<Vec<f32>> {
+) -> SwisResult<Vec<f32>> {
     if w.len() != k * fan_in {
-        bail!("weights {} != {k} x {fan_in}", w.len());
+        return Err(SwisError::backend(format!("weights {} != {k} x {fan_in}", w.len())));
     }
     if acts.len() != p_rows * fan_in {
-        bail!("acts {} != {p_rows} x {fan_in}", acts.len());
+        return Err(SwisError::backend(format!("acts {} != {p_rows} x {fan_in}", acts.len())));
     }
     let mut out = vec![0f32; p_rows * k];
     par_rows(&mut out, p_rows, k, n_threads, |start, rows, o| {
@@ -406,11 +549,12 @@ pub struct PreparedDepthwise {
     pub scale: f64,
     plane_ofs: Vec<u32>,
     planes: Vec<Plane>,
+    tune: TuneParams,
 }
 
 impl PreparedDepthwise {
     /// Prepare a `(channels, k*k)` filters-first packed layer.
-    pub fn from_packed(p: &PackedLayer) -> Result<PreparedDepthwise> {
+    pub fn from_packed(p: &PackedLayer) -> SwisResult<PreparedDepthwise> {
         let (plane_ofs, planes) = prepare_planes(p)?;
         Ok(PreparedDepthwise {
             channels: p.n_filters(),
@@ -420,6 +564,7 @@ impl PreparedDepthwise {
             scale: p.scale,
             plane_ofs,
             planes,
+            tune: TuneParams::host_default(),
         })
     }
 
@@ -432,16 +577,23 @@ impl PreparedDepthwise {
         (batch * g.out_hw * g.out_hw) as u64 * self.channels as u64 * self.kk as u64
     }
 
-    fn check_geom(&self, g: &ConvGeom) -> Result<()> {
+    /// Install machine-tuned kernel parameters (sanitized; the depthwise
+    /// tile width follows the variant, so only the variant matters here).
+    pub fn set_tune(&mut self, tp: TuneParams) {
+        self.tune = tp.sanitized();
+    }
+
+    /// The kernel parameters dispatch currently uses.
+    pub fn tune(&self) -> &TuneParams {
+        &self.tune
+    }
+
+    fn check_geom(&self, g: &ConvGeom) -> SwisResult<()> {
         if g.k * g.k != self.kk || g.in_c != self.channels {
-            bail!(
+            return Err(SwisError::backend(format!(
                 "depthwise geometry {}x{} over {} channels does not match packed ({} taps, {} channels)",
-                g.k,
-                g.k,
-                g.in_c,
-                self.kk,
-                self.channels
-            );
+                g.k, g.k, g.in_c, self.kk, self.channels
+            )));
         }
         Ok(())
     }
@@ -450,41 +602,137 @@ impl PreparedDepthwise {
     /// `(batch, out_hw, out_hw, c)`. Each (pixel, channel) patch is int8
     /// quantized on its own scale, reduced through the prepared shift
     /// planes in exact integer arithmetic, and rescaled — bit-identical
-    /// to [`naive_depthwise`] for any thread count.
+    /// to [`naive_depthwise`] for any thread count and any
+    /// [`KernelVariant`] (tap codes are int8, so the i32 overflow screen
+    /// never applies here).
     pub fn forward(
         &self,
         x: &[f32],
         batch: usize,
         g: &ConvGeom,
         n_threads: usize,
-    ) -> Result<Vec<f32>> {
+    ) -> SwisResult<Vec<f32>> {
         self.check_geom(g)?;
         let c = self.channels;
         if x.len() != batch * g.in_hw * g.in_hw * c {
-            bail!("input {} != {batch} x {} x {} x {c}", x.len(), g.in_hw, g.in_hw);
+            return Err(SwisError::backend(format!(
+                "input {} != {batch} x {} x {} x {c}",
+                x.len(),
+                g.in_hw,
+                g.in_hw
+            )));
         }
+        let variant = if simd::force_scalar() { KernelVariant::Scalar } else { self.tune.variant };
         let o = g.out_hw;
         let rows = batch * o * o;
         let mut out = vec![0f32; rows * c];
         par_rows(&mut out, rows, c, n_threads, |start, nrows, slice| {
-            let mut taps = vec![0f32; self.kk];
-            let mut codes = vec![0i32; self.kk];
-            let img_len = g.in_hw * g.in_hw * c;
-            for r in 0..nrows {
-                let pix = start + r;
-                let b = pix / (o * o);
-                let oh = (pix / o) % o;
-                let ow = pix % o;
-                let img = &x[b * img_len..(b + 1) * img_len];
-                for ch in 0..c {
-                    gather_taps(img, g, ch, c, oh, ow, &mut taps);
-                    let s = quantize_taps(&taps, &mut codes);
-                    let acc = self.dot(ch, &codes);
-                    slice[r * c + ch] = (acc as f64 * (self.scale * s)) as f32;
-                }
+            if variant == KernelVariant::Scalar {
+                self.forward_rows_scalar(x, g, start, nrows, slice);
+            } else {
+                self.forward_rows_blocked(x, g, start, nrows, slice, variant);
             }
         });
         Ok(out)
+    }
+
+    /// Scalar single-thread core over output pixels `[start, start+nrows)`.
+    fn forward_rows_scalar(
+        &self,
+        x: &[f32],
+        g: &ConvGeom,
+        start: usize,
+        nrows: usize,
+        slice: &mut [f32],
+    ) {
+        let c = self.channels;
+        let o = g.out_hw;
+        let mut taps = vec![0f32; self.kk];
+        let mut codes = vec![0i32; self.kk];
+        let img_len = g.in_hw * g.in_hw * c;
+        for r in 0..nrows {
+            let pix = start + r;
+            let b = pix / (o * o);
+            let oh = (pix / o) % o;
+            let ow = pix % o;
+            let img = &x[b * img_len..(b + 1) * img_len];
+            for ch in 0..c {
+                gather_taps(img, g, ch, c, oh, ow, &mut taps);
+                let s = quantize_taps(&taps, &mut codes);
+                let acc = self.dot(ch, &codes);
+                slice[r * c + ch] = (acc as f64 * (self.scale * s)) as f32;
+            }
+        }
+    }
+
+    /// Vector single-thread core: pixel tiles of the variant width. Per
+    /// (tile, channel), each pixel's tap patch is gathered + quantized
+    /// into a transposed codes scratch (`ct[tap * width + pixel]`, tail
+    /// pixels zero-padded), reduced with one [`simd::accumulate_tile`]
+    /// call over all the channel's groups, and rescaled per pixel. The
+    /// per-(pixel, channel) integer math is unchanged, so results stay
+    /// bit-identical to the scalar dot.
+    fn forward_rows_blocked(
+        &self,
+        x: &[f32],
+        g: &ConvGeom,
+        start: usize,
+        nrows: usize,
+        slice: &mut [f32],
+        variant: KernelVariant,
+    ) {
+        let c = self.channels;
+        let o = g.out_hw;
+        let gs = self.group_size;
+        let gpf = self.groups_per_filter;
+        let w = variant.width();
+        let img_len = g.in_hw * g.in_hw * c;
+        let mut taps = vec![0f32; self.kk];
+        let mut codes = vec![0i32; self.kk];
+        // scratch spans the full group range (gpf * gs >= kk); columns
+        // past kk are zero padding with no mask bits pointing at them
+        let mut ct = vec![0i32; gpf * gs * w];
+        let mut scales = vec![0f64; w];
+        let mut t0 = 0usize;
+        while t0 < nrows {
+            let tb = w.min(nrows - t0);
+            if tb < w {
+                // zero the pad-pixel columns once; full tiles overwrite
+                // every real pixel's codes each channel
+                ct.fill(0);
+            }
+            for ch in 0..c {
+                for r in 0..tb {
+                    let pix = start + t0 + r;
+                    let b = pix / (o * o);
+                    let oh = (pix / o) % o;
+                    let ow = pix % o;
+                    let img = &x[b * img_len..(b + 1) * img_len];
+                    gather_taps(img, g, ch, c, oh, ow, &mut taps);
+                    scales[r] = quantize_taps(&taps, &mut codes);
+                    for (t, &code) in codes.iter().enumerate() {
+                        ct[t * w + r] = code;
+                    }
+                }
+                let mut acc = [0i64; simd::MAX_ROW_BLOCK];
+                simd::accumulate_tile(
+                    variant,
+                    &self.planes,
+                    &self.plane_ofs,
+                    ch * gpf,
+                    gpf,
+                    gs,
+                    &ct,
+                    w,
+                    0,
+                    &mut acc[..w],
+                );
+                for r in 0..tb {
+                    slice[(t0 + r) * c + ch] = (acc[r] as f64 * (self.scale * scales[r])) as f32;
+                }
+            }
+            t0 += tb;
+        }
     }
 
     /// Exact integer per-channel dot over the prepared planes.
@@ -521,14 +769,24 @@ impl PreparedDepthwise {
 /// group lanes and evaluates [`core::group_dot`] — an independent oracle
 /// for [`PreparedDepthwise::forward`] (identical quantization, identical
 /// integer semantics, single-threaded).
-pub fn naive_depthwise(p: &PackedLayer, x: &[f32], batch: usize, g: &ConvGeom) -> Result<Vec<f32>> {
+pub fn naive_depthwise(
+    p: &PackedLayer,
+    x: &[f32],
+    batch: usize,
+    g: &ConvGeom,
+) -> SwisResult<Vec<f32>> {
     let c = p.n_filters();
     let kk = p.fan_in();
     if g.k * g.k != kk || g.in_c != c {
-        bail!("depthwise geometry does not match packed layer");
+        return Err(SwisError::backend("depthwise geometry does not match packed layer"));
     }
     if x.len() != batch * g.in_hw * g.in_hw * c {
-        bail!("input {} != {batch} x {} x {} x {c}", x.len(), g.in_hw, g.in_hw);
+        return Err(SwisError::backend(format!(
+            "input {} != {batch} x {} x {} x {c}",
+            x.len(),
+            g.in_hw,
+            g.in_hw
+        )));
     }
     let o = g.out_hw;
     let gs = p.group_size;
@@ -567,13 +825,18 @@ pub fn dense_depthwise(
     batch: usize,
     g: &ConvGeom,
     n_threads: usize,
-) -> Result<Vec<f32>> {
+) -> SwisResult<Vec<f32>> {
     let kk = g.k * g.k;
     if w.len() != c * kk {
-        bail!("weights {} != {c} x {kk}", w.len());
+        return Err(SwisError::backend(format!("weights {} != {c} x {kk}", w.len())));
     }
     if g.in_c != c || x.len() != batch * g.in_hw * g.in_hw * c {
-        bail!("input {} != {batch} x {} x {} x {c}", x.len(), g.in_hw, g.in_hw);
+        return Err(SwisError::backend(format!(
+            "input {} != {batch} x {} x {} x {c}",
+            x.len(),
+            g.in_hw,
+            g.in_hw
+        )));
     }
     let o = g.out_hw;
     let rows = batch * o * o;
@@ -684,6 +947,33 @@ mod tests {
     }
 
     #[test]
+    fn oversized_activations_fall_back_to_scalar_exactly() {
+        // |act| beyond MAX_SIMD_ACT must demote to the 64-bit-partial
+        // scalar walk and still match the gather-based oracle
+        let (p, mut acts, rows) = setup(8, 6, 24, 3, 4, false);
+        acts[0] = (MAX_SIMD_ACT + 1) as i32;
+        acts[5] = -((MAX_SIMD_ACT as i32) + 77);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        assert_eq!(prep.effective_tune(&acts).variant, KernelVariant::Scalar);
+        let fast = prep.gemm(&acts, rows, 2).unwrap();
+        assert_eq!(fast, naive_gemm(&p, &acts, rows).unwrap());
+    }
+
+    #[test]
+    fn tune_params_are_sanitized_on_install() {
+        let (p, acts, rows) = setup(15, 6, 20, 2, 4, false);
+        let mut prep = PreparedGemm::from_packed(&p).unwrap();
+        let base = prep.gemm(&acts, rows, 1).unwrap();
+        let mut tp = TuneParams::host_default();
+        tp.row_block = 5000; // clamped to MAX_ROW_BLOCK (and width-aligned)
+        tp.group_chunk = 0; // floored to 1
+        prep.set_tune(tp);
+        assert!(prep.tune().row_block <= simd::MAX_ROW_BLOCK);
+        assert!(prep.tune().group_chunk >= 1);
+        assert_eq!(prep.gemm(&acts, rows, 1).unwrap(), base);
+    }
+
+    #[test]
     fn f32_path_tracks_dequantized_reference() {
         let (p, _, _) = setup(9, 8, 27, 4, 4, false);
         let prep = PreparedGemm::from_packed(&p).unwrap();
@@ -757,7 +1047,8 @@ mod tests {
         assert!(prep.gemm(&acts[..10], rows, 1).is_err());
         let mut big = p.clone();
         big.group_size = 32; // beyond the bitmask width
-        assert!(PreparedGemm::from_packed(&big).is_err());
+        let e = PreparedGemm::from_packed(&big).unwrap_err();
+        assert!(matches!(e, SwisError::Config(_)), "got {e:?}");
     }
 
     fn dw_setup(

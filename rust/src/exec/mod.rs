@@ -20,18 +20,28 @@
 //! three tiers share; the equivalence suites (`tests/native_equiv.rs`,
 //! `tests/graph_equiv.rs`) pin the kernels bit-exactly to the functional
 //! simulator and the graph executor to the sequential reference.
+//!
+//! [`simd`] supplies the runtime-dispatched vector backends (AVX2 /
+//! NEON / portable) for the kernel inner loop, and [`tune`] the
+//! bench-driven autotuner whose machine-tuned [`simd::TuneParams`]
+//! travel inside `.swisplan` containers; `tests/simd_equiv.rs` pins
+//! every variant bit-identical to the scalar walk.
 
 pub mod core;
 pub mod graph;
 pub mod im2col;
 pub mod kernel;
 pub mod model;
+pub mod simd;
+pub mod tune;
 
 pub use im2col::{im2col, ConvGeom};
 pub use kernel::{
     dense_depthwise, dense_gemm, naive_depthwise, naive_gemm, quantize_acts, quantize_acts_rows,
     quantize_taps, PreparedDepthwise, PreparedGemm,
 };
+pub use simd::{best_available, detected_isa, KernelVariant, TuneParams};
+pub use tune::{tune_gemm, TuneOptions, TuneReport};
 pub use model::{
     filters_first, net_weights, surrogate_network_weights, surrogate_tinycnn_weights,
     tinycnn_weights, LayerOperand, NativeModel, PreparedLayer, WeightProvenance,

@@ -21,6 +21,7 @@ use std::sync::Arc;
 use super::graph::{self, Graph, GraphOp, Src, ValShape};
 use super::im2col::{im2col, ConvGeom};
 use super::kernel::{dense_depthwise, dense_gemm, PreparedDepthwise, PreparedGemm};
+use super::simd::TuneParams;
 use crate::nets::{surrogate_weights, ConvKind, Network};
 use crate::quant::serialize;
 use crate::quant::truncation::truncate_weights;
@@ -344,6 +345,36 @@ impl NativeModel {
 
     pub fn net_name(&self) -> &str {
         &self.graph.net
+    }
+
+    /// Install machine-tuned kernel parameters on every bound packed
+    /// kernel (GEMM and depthwise); dense fp32 kernels are unaffected.
+    /// Parameters are sanitized per kernel, so applying params swept on
+    /// another machine is safe (if pointless — callers should gate on
+    /// [`TuneParams::matches_host`]).
+    pub fn set_tune(&mut self, tp: &TuneParams) {
+        for e in self.execs.iter_mut().flatten() {
+            match &mut e.kernel {
+                OpKernel::Gemm(p) => p.set_tune(tp.clone()),
+                OpKernel::Dw(p) => p.set_tune(tp.clone()),
+                OpKernel::Dense { .. } | OpKernel::DenseDw { .. } => {}
+            }
+        }
+    }
+
+    /// The largest bound packed GEMM by per-row MAC count — the operand
+    /// the autotuner probes, so swept parameters reflect the layer that
+    /// dominates this model's serving time. `None` for dense-only
+    /// variants (fp32 / truncation), which have nothing to tune.
+    pub fn largest_gemm(&self) -> Option<&PreparedGemm> {
+        self.execs
+            .iter()
+            .flatten()
+            .filter_map(|e| match &e.kernel {
+                OpKernel::Gemm(p) => Some(p),
+                _ => None,
+            })
+            .max_by_key(|p| p.macs(1))
     }
 
     /// Forward a `(batch, hw, hw, c)` NHWC image batch to

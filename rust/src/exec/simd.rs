@@ -1,0 +1,598 @@
+//! SIMD backends for the packed bit-serial kernels.
+//!
+//! The scalar kernel in [`super::kernel`] walks each prepared shift
+//! plane's pos/neg lane bitmask with `trailing_zeros` and does one
+//! gather-add per set bit per row — serializing exactly the work SWIS's
+//! shared bit sparsity exposes as data-parallel. This module vectorizes
+//! the OTHER axis: the activation tile is transposed into a contiguous
+//! scratch block (column-major, one cache line per fan-in column), so
+//! each set lane bit becomes a single unit-stride vector load covering
+//! 8–16 output rows at once, and the pos/neg plane passes fuse into one
+//! signed accumulation per plane:
+//!
+//! ```text
+//!   per plane:  part[0..W] += at[lane] (pos bits) − at[lane] (neg bits)
+//!               acc[0..W]  += (part as i64) << shift
+//! ```
+//!
+//! All-integer adds/shifts in a fixed order per row — bit-identical to
+//! the scalar walk for any tile/chunk size (pinned by
+//! `tests/simd_equiv.rs`).
+//!
+//! # Variant dispatch
+//!
+//! | detected ISA | [`KernelVariant`] | tile width |
+//! |--------------|-------------------|------------|
+//! | x86_64 + AVX-512 | `Avx2Wide` (2x interleaved AVX2) | 16 rows |
+//! | x86_64 + AVX2 | `Avx2` | 8 rows |
+//! | aarch64 (NEON baseline) | `Neon` | 8 rows |
+//! | anything else | `Portable` (autovectorizable arrays) | 8 rows |
+//!
+//! AVX-512 hosts route to `Avx2Wide` rather than native 512-bit
+//! intrinsics: the pinned toolchain (Rust 1.84) predates AVX-512
+//! `std::arch` stabilization, and two interleaved 256-bit accumulator
+//! chains recover most of the win (wider OoO window, same loads/cycle)
+//! without nightly features. `SWIS_FORCE_SCALAR=1` in the environment
+//! forces the scalar walk everywhere — the escape hatch CI exercises on
+//! every test run.
+//!
+//! # Overflow contract
+//!
+//! Vector partials are 32-bit (the scalar path uses 64-bit partials).
+//! With at most [`super::kernel::MAX_GROUP_SIZE`] = 16 lanes per group,
+//! any `|activation| <= 2^26` keeps a partial within `i32` exactly;
+//! [`super::kernel::PreparedGemm::gemm`] screens its input once against
+//! [`MAX_SIMD_ACT`] and falls back to the scalar path above it. Real
+//! activations are int8 codes (|a| <= 127), so the guard never trips on
+//! the serving path.
+
+use super::kernel::Plane;
+
+/// Largest `|activation|` the 32-bit vector partials accept exactly
+/// (16 lanes x 2^26 = 2^30 < i32::MAX). Inputs above this run scalar.
+pub const MAX_SIMD_ACT: u32 = 1 << 26;
+
+/// Upper bound on the tunable row tile; scratch/accumulator sizing and
+/// the autotuner grid both respect it.
+pub const MAX_ROW_BLOCK: usize = 64;
+
+/// One executable flavor of the packed bit-serial inner loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelVariant {
+    /// The original mask-walk with 64-bit partials: always correct, the
+    /// fallback for unsupported hosts, forced mode and oversized acts.
+    Scalar,
+    /// Array-based 8-row tile the compiler autovectorizes — available on
+    /// every target, the floor the explicit ISA paths must beat.
+    Portable,
+    /// Explicit AVX2: one 8 x i32 partial, two 4 x i64 accumulators.
+    Avx2,
+    /// Two interleaved AVX2 chains over a 16-row tile — what AVX-512
+    /// hosts select (see the module docs for why not native 512-bit).
+    Avx2Wide,
+    /// Explicit NEON (aarch64 baseline): two 4 x i32 partials, four
+    /// 2 x i64 accumulators over an 8-row tile.
+    Neon,
+}
+
+impl KernelVariant {
+    /// Rows one vector pass covers (1 for the scalar walk).
+    pub fn width(self) -> usize {
+        match self {
+            KernelVariant::Scalar => 1,
+            KernelVariant::Avx2Wide => 16,
+            _ => 8,
+        }
+    }
+
+    /// Can this variant execute on the current host?
+    pub fn available(self) -> bool {
+        match self {
+            KernelVariant::Scalar | KernelVariant::Portable => true,
+            KernelVariant::Avx2 | KernelVariant::Avx2Wide => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelVariant::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Every variant, dispatch-preference order (used by the tuner grid
+    /// and the equivalence tests).
+    pub fn all() -> [KernelVariant; 5] {
+        [
+            KernelVariant::Scalar,
+            KernelVariant::Portable,
+            KernelVariant::Avx2,
+            KernelVariant::Avx2Wide,
+            KernelVariant::Neon,
+        ]
+    }
+
+    /// Stable name (serialization-independent; the `.swisplan` container
+    /// uses [`KernelVariant::tag`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Portable => "portable",
+            KernelVariant::Avx2 => "avx2",
+            KernelVariant::Avx2Wide => "avx2_wide",
+            KernelVariant::Neon => "neon",
+        }
+    }
+
+    /// Container tag byte (`.swisplan` TuneParams section).
+    pub fn tag(self) -> u8 {
+        match self {
+            KernelVariant::Scalar => 0,
+            KernelVariant::Portable => 1,
+            KernelVariant::Avx2 => 2,
+            KernelVariant::Avx2Wide => 3,
+            KernelVariant::Neon => 4,
+        }
+    }
+
+    /// Inverse of [`KernelVariant::tag`].
+    pub fn from_tag(t: u8) -> Option<KernelVariant> {
+        Some(match t {
+            0 => KernelVariant::Scalar,
+            1 => KernelVariant::Portable,
+            2 => KernelVariant::Avx2,
+            3 => KernelVariant::Avx2Wide,
+            4 => KernelVariant::Neon,
+            _ => return None,
+        })
+    }
+}
+
+/// The best variant the current host can run (ignores the forced-scalar
+/// escape hatch — dispatch applies that separately, per call).
+pub fn best_available() -> KernelVariant {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return KernelVariant::Avx2Wide;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelVariant::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return KernelVariant::Neon;
+    }
+    #[allow(unreachable_code)]
+    KernelVariant::Portable
+}
+
+/// Human-readable detected ISA (stamped into `BENCH_native_gemm.json`'s
+/// `simd_vs_scalar` records and the tuner report).
+pub fn detected_isa() -> String {
+    let arch = std::env::consts::ARCH;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return format!("{arch}/avx512");
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return format!("{arch}/avx2");
+        }
+    }
+    if cfg!(target_arch = "aarch64") {
+        return format!("{arch}/neon");
+    }
+    format!("{arch}/baseline")
+}
+
+/// The `SWIS_FORCE_SCALAR=1` escape hatch. Read per dispatch (one env
+/// lookup per kernel call, not per row), so tests and operators can flip
+/// it at runtime.
+pub fn force_scalar() -> bool {
+    matches!(std::env::var("SWIS_FORCE_SCALAR"), Ok(v) if v != "0" && !v.is_empty())
+}
+
+/// Host signature a [`TuneParams`] is pinned to: arch + detected vector
+/// ISA + core count. Cheap, deterministic, and different whenever the
+/// tuned argmin could plausibly differ — a loaded plan whose signature
+/// mismatches drops its params and re-derives.
+pub fn cpu_signature() -> String {
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    format!("{}/{}c", detected_isa(), cores)
+}
+
+/// Machine-tuned kernel parameters — the artifact `swis tune` persists
+/// into the `.swisplan` container and every kernel entry point consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneParams {
+    /// Inner-loop flavor ([`KernelVariant`]).
+    pub variant: KernelVariant,
+    /// Rows per activation tile (multiple of the variant width).
+    pub row_block: usize,
+    /// Groups per transposed-scratch chunk (the lane-chunk axis: how
+    /// many fan-in lanes stream through L1 per tile pass).
+    pub group_chunk: usize,
+    /// Preferred intra-op thread split (0 = resolve at session build).
+    pub threads: usize,
+    /// [`cpu_signature`] of the host the sweep ran on.
+    pub cpu: String,
+}
+
+impl TuneParams {
+    /// Untuned defaults for the current host: best detected variant,
+    /// conservative blocking.
+    pub fn host_default() -> TuneParams {
+        let variant = best_available();
+        TuneParams {
+            variant,
+            row_block: (2 * variant.width()).max(8),
+            group_chunk: 8,
+            threads: 0,
+            cpu: cpu_signature(),
+        }
+    }
+
+    /// Scalar-walk params (the forced/fallback mode).
+    pub fn scalar() -> TuneParams {
+        TuneParams {
+            variant: KernelVariant::Scalar,
+            row_block: super::kernel::ROW_BLOCK,
+            group_chunk: usize::MAX,
+            threads: 0,
+            cpu: cpu_signature(),
+        }
+    }
+
+    /// Did the sweep that produced these params run on this machine?
+    pub fn matches_host(&self) -> bool {
+        self.cpu == cpu_signature()
+    }
+
+    /// Clamp to what this host can execute: unavailable variants fall to
+    /// the best available one, the row tile is rounded to a multiple of
+    /// the variant width within [8, [`MAX_ROW_BLOCK`]], the chunk floor
+    /// is 1. Sanitized params are always safe to dispatch.
+    pub fn sanitized(mut self) -> TuneParams {
+        if !self.variant.available() {
+            self.variant = best_available();
+        }
+        if self.variant != KernelVariant::Scalar {
+            let w = self.variant.width();
+            let rb = self.row_block.clamp(w, MAX_ROW_BLOCK);
+            self.row_block = rb.div_ceil(w) * w;
+        } else if self.row_block == 0 {
+            self.row_block = super::kernel::ROW_BLOCK;
+        }
+        self.group_chunk = self.group_chunk.max(1);
+        self
+    }
+}
+
+/// Accumulate every prepared plane of groups
+/// `[g_base, g_base + n_groups)` over one W-row sub-tile of the
+/// transposed scratch, adding into `acc` (`W = acc.len()`, a multiple
+/// of 8 fixed by the caller from the variant width).
+///
+/// Scratch layout contract: fan-in column `c` of the chunk lives at
+/// `at[c * stride + 0..stride]`, group `g_base + j` covers columns
+/// `[j * gs, j * gs + gs)`, and `row_off + W <= stride`. Prepared masks
+/// only carry bits for real fan-in lanes (pad bits are dropped at
+/// prepare time), so every dereferenced column is in bounds.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accumulate_tile(
+    variant: KernelVariant,
+    planes: &[Plane],
+    plane_ofs: &[u32],
+    g_base: usize,
+    n_groups: usize,
+    gs: usize,
+    at: &[i32],
+    stride: usize,
+    row_off: usize,
+    acc: &mut [i64],
+) {
+    debug_assert!(acc.len() % 8 == 0 && row_off + acc.len() <= stride);
+    debug_assert!(n_groups * gs * stride <= at.len());
+    match variant {
+        #[cfg(target_arch = "x86_64")]
+        KernelVariant::Avx2 | KernelVariant::Avx2Wide if variant.available() => {
+            // SAFETY: avx2 availability checked above; the scratch layout
+            // contract bounds every load, and acc covers `width` lanes.
+            unsafe {
+                x86::tile_avx2(planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, acc)
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelVariant::Neon => {
+            // SAFETY: NEON is baseline on aarch64; bounds per the scratch
+            // layout contract.
+            unsafe {
+                arm::tile_neon(planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, acc)
+            }
+        }
+        // Portable covers itself, plus any variant the cfg above compiled
+        // out — process the sub-tile in 8-row slices.
+        _ => {
+            let mut o = 0;
+            while o + 8 <= acc.len() {
+                tile_portable(
+                    planes,
+                    plane_ofs,
+                    g_base,
+                    n_groups,
+                    gs,
+                    at,
+                    stride,
+                    row_off + o,
+                    &mut acc[o..o + 8],
+                );
+                o += 8;
+            }
+        }
+    }
+}
+
+/// The autovectorizable 8-row tile: same loop shape as the ISA paths,
+/// plain arrays — the correctness anchor the explicit paths are pinned
+/// against on hosts without them.
+#[allow(clippy::too_many_arguments)]
+fn tile_portable(
+    planes: &[Plane],
+    plane_ofs: &[u32],
+    g_base: usize,
+    n_groups: usize,
+    gs: usize,
+    at: &[i32],
+    stride: usize,
+    row_off: usize,
+    acc: &mut [i64],
+) {
+    const W: usize = 8;
+    let mut a = [0i64; W];
+    a.copy_from_slice(&acc[..W]);
+    for gl in 0..n_groups {
+        let g = g_base + gl;
+        let a0 = gl * gs;
+        for pl in &planes[plane_ofs[g] as usize..plane_ofs[g + 1] as usize] {
+            let mut part = [0i32; W];
+            let mut m = pl.pos;
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let col = &at[(a0 + lane) * stride + row_off..][..W];
+                for r in 0..W {
+                    part[r] += col[r];
+                }
+            }
+            let mut m = pl.neg;
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let col = &at[(a0 + lane) * stride + row_off..][..W];
+                for r in 0..W {
+                    part[r] -= col[r];
+                }
+            }
+            for r in 0..W {
+                a[r] += (part[r] as i64) << pl.shift;
+            }
+        }
+    }
+    acc[..W].copy_from_slice(&a);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::Plane;
+    use std::arch::x86_64::*;
+
+    /// AVX2 tile: per set lane, one 8 x i32 unit-stride load; the fused
+    /// signed pass keeps one partial register per plane; widen + shift
+    /// happens once per plane, not per lane. `acc.len()` selects the
+    /// tile: 8 runs one chain, 16 runs two interleaved chains (the
+    /// `Avx2Wide` shape AVX-512 hosts pick).
+    ///
+    /// # Safety
+    /// Caller verifies AVX2 and the scratch layout contract of
+    /// [`super::accumulate_tile`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn tile_avx2(
+        planes: &[Plane],
+        plane_ofs: &[u32],
+        g_base: usize,
+        n_groups: usize,
+        gs: usize,
+        at: &[i32],
+        stride: usize,
+        row_off: usize,
+        acc: &mut [i64],
+    ) {
+        let base = at.as_ptr();
+        let wide = acc.len() >= 16;
+        let ap = acc.as_mut_ptr();
+        let mut acc0 = _mm256_loadu_si256(ap as *const __m256i);
+        let mut acc1 = _mm256_loadu_si256(ap.add(4) as *const __m256i);
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        if wide {
+            acc2 = _mm256_loadu_si256(ap.add(8) as *const __m256i);
+            acc3 = _mm256_loadu_si256(ap.add(12) as *const __m256i);
+        }
+        for gl in 0..n_groups {
+            let g = g_base + gl;
+            let a0 = gl * gs;
+            let lo = *plane_ofs.get_unchecked(g) as usize;
+            let hi = *plane_ofs.get_unchecked(g + 1) as usize;
+            for pl in planes.get_unchecked(lo..hi) {
+                let mut part0 = _mm256_setzero_si256();
+                let mut part1 = _mm256_setzero_si256();
+                let mut m = pl.pos;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let p = base.add((a0 + lane) * stride + row_off);
+                    part0 = _mm256_add_epi32(part0, _mm256_loadu_si256(p as *const __m256i));
+                    if wide {
+                        part1 = _mm256_add_epi32(
+                            part1,
+                            _mm256_loadu_si256(p.add(8) as *const __m256i),
+                        );
+                    }
+                }
+                let mut m = pl.neg;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let p = base.add((a0 + lane) * stride + row_off);
+                    part0 = _mm256_sub_epi32(part0, _mm256_loadu_si256(p as *const __m256i));
+                    if wide {
+                        part1 = _mm256_sub_epi32(
+                            part1,
+                            _mm256_loadu_si256(p.add(8) as *const __m256i),
+                        );
+                    }
+                }
+                let cnt = _mm_cvtsi32_si128(pl.shift as i32);
+                let w0 = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(part0));
+                let w1 = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(part0));
+                acc0 = _mm256_add_epi64(acc0, _mm256_sll_epi64(w0, cnt));
+                acc1 = _mm256_add_epi64(acc1, _mm256_sll_epi64(w1, cnt));
+                if wide {
+                    let w2 = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(part1));
+                    let w3 = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(part1));
+                    acc2 = _mm256_add_epi64(acc2, _mm256_sll_epi64(w2, cnt));
+                    acc3 = _mm256_add_epi64(acc3, _mm256_sll_epi64(w3, cnt));
+                }
+            }
+        }
+        _mm256_storeu_si256(ap as *mut __m256i, acc0);
+        _mm256_storeu_si256(ap.add(4) as *mut __m256i, acc1);
+        if wide {
+            _mm256_storeu_si256(ap.add(8) as *mut __m256i, acc2);
+            _mm256_storeu_si256(ap.add(12) as *mut __m256i, acc3);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::Plane;
+    use std::arch::aarch64::*;
+
+    /// NEON tile (8 rows): two 4 x i32 partials, four 2 x i64
+    /// accumulators; `vshlq_s64` applies the plane shift after widening.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; caller verifies the scratch layout
+    /// contract of [`super::accumulate_tile`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn tile_neon(
+        planes: &[Plane],
+        plane_ofs: &[u32],
+        g_base: usize,
+        n_groups: usize,
+        gs: usize,
+        at: &[i32],
+        stride: usize,
+        row_off: usize,
+        acc: &mut [i64],
+    ) {
+        let base = at.as_ptr();
+        let ap = acc.as_mut_ptr();
+        let mut acc0 = vld1q_s64(ap);
+        let mut acc1 = vld1q_s64(ap.add(2));
+        let mut acc2 = vld1q_s64(ap.add(4));
+        let mut acc3 = vld1q_s64(ap.add(6));
+        for gl in 0..n_groups {
+            let g = g_base + gl;
+            let a0 = gl * gs;
+            let lo = *plane_ofs.get_unchecked(g) as usize;
+            let hi = *plane_ofs.get_unchecked(g + 1) as usize;
+            for pl in planes.get_unchecked(lo..hi) {
+                let mut p0 = vdupq_n_s32(0);
+                let mut p1 = vdupq_n_s32(0);
+                let mut m = pl.pos;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let p = base.add((a0 + lane) * stride + row_off);
+                    p0 = vaddq_s32(p0, vld1q_s32(p));
+                    p1 = vaddq_s32(p1, vld1q_s32(p.add(4)));
+                }
+                let mut m = pl.neg;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let p = base.add((a0 + lane) * stride + row_off);
+                    p0 = vsubq_s32(p0, vld1q_s32(p));
+                    p1 = vsubq_s32(p1, vld1q_s32(p.add(4)));
+                }
+                let sh = vdupq_n_s64(pl.shift as i64);
+                acc0 = vaddq_s64(acc0, vshlq_s64(vmovl_s32(vget_low_s32(p0)), sh));
+                acc1 = vaddq_s64(acc1, vshlq_s64(vmovl_s32(vget_high_s32(p0)), sh));
+                acc2 = vaddq_s64(acc2, vshlq_s64(vmovl_s32(vget_low_s32(p1)), sh));
+                acc3 = vaddq_s64(acc3, vshlq_s64(vmovl_s32(vget_high_s32(p1)), sh));
+            }
+        }
+        vst1q_s64(ap, acc0);
+        vst1q_s64(ap.add(2), acc1);
+        vst1q_s64(ap.add(4), acc2);
+        vst1q_s64(ap.add(6), acc3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_tags_and_names_round_trip() {
+        for v in KernelVariant::all() {
+            assert_eq!(KernelVariant::from_tag(v.tag()), Some(v));
+            assert!(!v.as_str().is_empty());
+            assert!(v.width() == 1 || v.width() % 8 == 0);
+        }
+        assert_eq!(KernelVariant::from_tag(99), None);
+        assert!(KernelVariant::Scalar.available());
+        assert!(KernelVariant::Portable.available());
+        assert!(best_available().available());
+    }
+
+    #[test]
+    fn sanitize_clamps_to_host() {
+        let tp = TuneParams {
+            variant: KernelVariant::Neon, // unavailable on x86 (and vice versa)
+            row_block: 1000,
+            group_chunk: 0,
+            threads: 2,
+            cpu: "elsewhere".into(),
+        }
+        .sanitized();
+        assert!(tp.variant.available());
+        assert!(tp.group_chunk >= 1);
+        if tp.variant != KernelVariant::Scalar {
+            assert!(tp.row_block <= MAX_ROW_BLOCK);
+            assert_eq!(tp.row_block % tp.variant.width(), 0);
+        }
+        // host defaults are always dispatchable as-is
+        let d = TuneParams::host_default();
+        assert_eq!(d.clone().sanitized(), d);
+        assert!(d.matches_host());
+        assert!(!tp.matches_host());
+    }
+
+    #[test]
+    fn isa_and_signature_are_stable() {
+        assert_eq!(detected_isa(), detected_isa());
+        assert_eq!(cpu_signature(), cpu_signature());
+        assert!(cpu_signature().contains(std::env::consts::ARCH));
+    }
+}

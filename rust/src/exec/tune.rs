@@ -1,0 +1,253 @@
+//! Bench-driven kernel autotuner: sweep kernel-variant x row-block x
+//! group-chunk x thread-split over a REAL prepared operand on the local
+//! CPU, pick the argmin by median wall time, and hand back
+//! [`TuneParams`] that `.swisplan` containers persist (versioned
+//! `TuneParams` section) and every [`super::kernel`] entry point
+//! consumes.
+//!
+//! Design points:
+//!
+//! * **Real planes, not microbenchmarks** — the probe is the plan's own
+//!   largest prepared GEMM (or any [`PreparedGemm`] handed to
+//!   [`tune_gemm`]), so plane sparsity, group geometry and fan-in match
+//!   what serving will run.
+//! * **Scalar is in the grid** — the scalar walk is timed in the SAME
+//!   sweep as the vector candidates, so the reported
+//!   [`TuneReport::speedup`] (best scalar median / best overall median)
+//!   is >= 1.0 by construction: the argmin can never lose to a
+//!   candidate it already contains.
+//! * **Bit-identity is asserted, not assumed** — every candidate's
+//!   output is compared against the scalar reference; a diverging
+//!   candidate aborts the sweep with a typed error instead of persisting
+//!   a wrong-but-fast configuration.
+//! * **Deterministic probe** — activations come from the crate's seeded
+//!   [`Rng`](crate::util::rng::Rng) in int8 range, so sweeps are
+//!   reproducible and the vector overflow screen never demotes them.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use super::kernel::PreparedGemm;
+use super::simd::{self, KernelVariant, TuneParams};
+use crate::error::{SwisError, SwisResult};
+use crate::util::rng::Rng;
+
+/// Sweep shape knobs (`swis tune` flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Probe rows (im2col patch rows) per timed pass.
+    pub rows: usize,
+    /// Timed repetitions per candidate; the median is scored.
+    pub reps: usize,
+    /// Thread-split axis of the grid (deduped, floored at 1).
+    pub threads: Vec<usize>,
+}
+
+impl Default for TuneOptions {
+    fn default() -> TuneOptions {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut threads = vec![1usize, cores.min(8)];
+        threads.dedup();
+        TuneOptions { rows: 192, reps: 3, threads }
+    }
+}
+
+/// One swept configuration and its score.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// The (sanitized, as-dispatched) parameters that were timed.
+    pub params: TuneParams,
+    /// Median wall time of one probe pass, milliseconds.
+    pub median_ms: f64,
+    /// Weight-MACs per second at the median, in millions.
+    pub mws: f64,
+}
+
+/// The sweep's outcome: the winning [`TuneParams`] plus everything a
+/// bench record or CLI report needs to justify it.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    /// Argmin-by-median winner across the whole grid (scalar included).
+    pub best: TuneParams,
+    /// Best scalar candidate's median (the baseline), milliseconds.
+    pub scalar_median_ms: f64,
+    /// Winner's median, milliseconds.
+    pub best_median_ms: f64,
+    /// `scalar_median_ms / best_median_ms` — >= 1.0 by construction.
+    pub speedup: f64,
+    /// [`simd::detected_isa`] of the machine the sweep ran on.
+    pub isa: String,
+    /// Probe geometry, e.g. `"128x576 rows=192 reps=3"`.
+    pub probe: String,
+    /// Every timed candidate (sweep order), for full bench records.
+    pub candidates: Vec<Candidate>,
+}
+
+/// The candidate grid for one prepared operand: scalar at every thread
+/// split, plus each host-available vector variant crossed with row-block
+/// multiples of its width and fan-in chunk sizes.
+fn candidate_grid(gpf: usize, threads: &[usize]) -> Vec<TuneParams> {
+    let mut grid = Vec::new();
+    for &nt in threads {
+        grid.push(TuneParams { threads: nt, ..TuneParams::scalar() });
+    }
+    // chunk axis: small L1-friendly chunks up to the whole fan-in
+    let mut chunks: Vec<usize> = [2usize, 4, 8, gpf].iter().map(|&c| c.clamp(1, gpf)).collect();
+    chunks.sort_unstable();
+    chunks.dedup();
+    for v in KernelVariant::all() {
+        if v == KernelVariant::Scalar || !v.available() {
+            continue;
+        }
+        let w = v.width();
+        for mult in [1usize, 2, 4] {
+            let rb = (w * mult).min(simd::MAX_ROW_BLOCK);
+            for &gc in &chunks {
+                for &nt in threads {
+                    grid.push(TuneParams {
+                        variant: v,
+                        row_block: rb,
+                        group_chunk: gc,
+                        threads: nt,
+                        cpu: simd::cpu_signature(),
+                    });
+                }
+            }
+        }
+    }
+    grid
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Sweep one prepared GEMM. Every candidate is verified bit-identical to
+/// the scalar reference before its median counts; returns the argmin
+/// winner with the full grid attached.
+pub fn tune_gemm(prep: &PreparedGemm, opts: &TuneOptions) -> SwisResult<TuneReport> {
+    let rows = opts.rows.max(1);
+    let reps = opts.reps.max(1);
+    let mut threads: Vec<usize> = opts.threads.iter().map(|&t| t.max(1)).collect();
+    if threads.is_empty() {
+        threads.push(1);
+    }
+    threads.sort_unstable();
+    threads.dedup();
+
+    let fan_in = prep.fan_in();
+    let mut rng = Rng::new(0x5EED_7A11);
+    let acts: Vec<i32> =
+        (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+
+    // the correctness anchor every candidate is compared against
+    let mut scalar_prep = prep.clone();
+    scalar_prep.set_tune(TuneParams::scalar());
+    let reference = scalar_prep.gemm(&acts, rows, 1)?;
+
+    let macs = prep.macs(rows) as f64;
+    let mut seen: HashSet<(u8, usize, usize, usize)> = HashSet::new();
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for params in candidate_grid(prep.groups_per_filter(), &threads) {
+        let mut p = prep.clone();
+        p.set_tune(params.clone());
+        let tuned = p.tune().clone(); // sanitized form actually dispatched
+        let key =
+            (tuned.variant.tag(), tuned.row_block, tuned.group_chunk, params.threads.max(1));
+        if !seen.insert(key) {
+            continue; // sanitize collapsed it onto an already-timed point
+        }
+        let nt = params.threads.max(1);
+        let mut times = Vec::with_capacity(reps);
+        let mut first = None;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let out = p.gemm(&acts, rows, nt)?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            first.get_or_insert(out);
+        }
+        if first.as_deref() != Some(reference.as_slice()) {
+            return Err(SwisError::backend(format!(
+                "tuner candidate {} (rb={} gc={} nt={nt}) diverged from the scalar reference",
+                tuned.variant.as_str(),
+                tuned.row_block,
+                tuned.group_chunk
+            )));
+        }
+        let med = median(&mut times);
+        candidates.push(Candidate {
+            params: TuneParams { threads: nt, ..tuned },
+            median_ms: med,
+            mws: macs / 1e6 / (med / 1e3),
+        });
+    }
+
+    let best_ix = candidates
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.median_ms.partial_cmp(&b.1.median_ms).unwrap())
+        .map(|(i, _)| i)
+        .ok_or_else(|| SwisError::backend("tuner produced an empty candidate grid"))?;
+    let scalar_median_ms = candidates
+        .iter()
+        .filter(|c| c.params.variant == KernelVariant::Scalar)
+        .map(|c| c.median_ms)
+        .fold(f64::INFINITY, f64::min);
+    let best = candidates[best_ix].clone();
+    Ok(TuneReport {
+        best: best.params.clone(),
+        scalar_median_ms,
+        best_median_ms: best.median_ms,
+        speedup: scalar_median_ms / best.median_ms,
+        isa: simd::detected_isa(),
+        probe: format!("{}x{fan_in} rows={rows} reps={reps}", prep.n_filters()),
+        candidates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Alpha, QuantConfig};
+
+    fn prep(k: usize, fan_in: usize) -> PreparedGemm {
+        let mut rng = Rng::new(42);
+        let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
+        let cfg = QuantConfig { n_shifts: 3, group_size: 4, alpha: Alpha::ONE, consecutive: false };
+        PreparedGemm::from_packed(&quantize(&w, &[k, fan_in], &cfg).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn sweep_picks_a_dispatchable_argmin_with_speedup_at_least_one() {
+        let p = prep(8, 36);
+        let opts = TuneOptions { rows: 24, reps: 1, threads: vec![1] };
+        let r = tune_gemm(&p, &opts).unwrap();
+        assert!(!r.candidates.is_empty());
+        assert!(r.best.variant.available());
+        // scalar is in the grid, so the argmin can never lose to it
+        assert!(r.speedup >= 1.0, "speedup {} < 1", r.speedup);
+        let min = r.candidates.iter().map(|c| c.median_ms).fold(f64::INFINITY, f64::min);
+        assert_eq!(r.best_median_ms, min);
+        assert!(r.candidates.iter().all(|c| c.mws > 0.0 && c.median_ms >= 0.0));
+        assert!(r.probe.contains("8x36"));
+        assert_eq!(r.isa, simd::detected_isa());
+    }
+
+    #[test]
+    fn grid_covers_scalar_and_every_available_vector_variant() {
+        let grid = candidate_grid(9, &[1, 2]);
+        assert!(grid.iter().any(|t| t.variant == KernelVariant::Scalar && t.threads == 2));
+        for v in KernelVariant::all() {
+            if v != KernelVariant::Scalar && v.available() {
+                assert!(
+                    grid.iter().any(|t| t.variant == v && t.group_chunk == 9),
+                    "grid misses full-fan-in chunk for {}",
+                    v.as_str()
+                );
+            }
+        }
+        // chunk axis is clamped to groups-per-filter
+        assert!(candidate_grid(2, &[1]).iter().all(|t| t.group_chunk <= 2));
+    }
+}

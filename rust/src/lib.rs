@@ -48,6 +48,16 @@
 //!   ([`exec::NativeModel`]) that runs the WHOLE zoo — TinyCNN,
 //!   MobileNet-v2 (inverted residuals), ResNet-18 (skips + downsample),
 //!   VGG-16 — under fp32 / SWIS / SWIS-C / truncation transforms.
+//!   The kernel inner loop dispatches at runtime across SIMD backends
+//!   ([`exec::simd`]: AVX2 / NEON / portable-vector / scalar, selected
+//!   by `is_x86_feature_detected!` with the scalar plane walk as the
+//!   always-correct fallback, `SWIS_FORCE_SCALAR=1` as the escape
+//!   hatch), and [`exec::tune`] is the bench-driven autotuner whose
+//!   winning [`exec::TuneParams`] (variant x row-block x group-chunk x
+//!   thread-split) persist inside `.swisplan` containers — pinned to
+//!   the CPU signature that produced them, dropped and re-derivable on
+//!   any other host. `tests/simd_equiv.rs` holds every variant
+//!   bit-identical to the scalar walk.
 //! * [`nets`] — layer shape tables: ResNet-18, MobileNet-v2, VGG-16 and
 //!   the TinyCNN accuracy proxy.
 //! * [`eval`] — the accuracy/compression sweep: nets x schemes x
@@ -89,7 +99,7 @@
 //! |------|-------|----------|-------------------|
 //! | analytic sim | [`sim`] | cycle/energy/traffic models, no data | paper performance figures (Sec. 5) |
 //! | functional machine | [`sim::functional`], [`arch::pe_functional`] | exact integer MACs, cycle-faithful | hardware semantics: fold schedule, PE timing, accumulator width |
-//! | native engine | [`exec`], driven via [`api::Session`] over an [`api::EnginePlan`] | the SAME integer MACs at software speed | serving + zoo accuracy sweeps when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`, `tests/graph_equiv.rs`) and across the `.swisplan` round-trip (`tests/plan_roundtrip.rs`) |
+//! | native engine | [`exec`], driven via [`api::Session`] over an [`api::EnginePlan`] | the SAME integer MACs at software speed, SIMD-dispatched ([`exec::simd`]) and machine-tuned ([`exec::tune`]) | serving + zoo accuracy sweeps when PJRT is absent; bit-exact vs the functional machine (`tests/native_equiv.rs`, `tests/graph_equiv.rs`), across SIMD variants (`tests/simd_equiv.rs`) and across the `.swisplan` round-trip (`tests/plan_roundtrip.rs`) |
 //! | PJRT | [`runtime`] | fp32 graph over (de)quantized weights | trained-model accuracy vs build-time goldens |
 //!
 //! The shared group-op arithmetic lives once, in [`exec::core`]; the

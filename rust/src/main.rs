@@ -13,6 +13,10 @@
 //!   eval      — zoo accuracy/compression sweep (nets x schemes x bits on
 //!               the native executor), emits BENCH_accuracy.json
 //!               (--plan evaluates a shipped plan's exact operands)
+//!   tune      — bench-driven kernel autotune on the local CPU (sweep
+//!               SIMD variant x row-block x chunk x threads over a real
+//!               prepared operand; -o persists the winner into the
+//!               .swisplan); --alpha runs the MSE++ alpha sweep instead
 //!   prob      — Fig. 2 lossless-quantization probability curves
 //!   info      — model zoo + accelerator configuration summary
 //!
@@ -53,9 +57,10 @@ use swis::util::stats::rmse;
 
 const VALUE_KEYS: &[&str] = &[
     "net", "nets", "shifts", "group", "scheme", "schemes", "pe", "rows", "cols", "artifacts",
-    "requests", "variants", "max-batch", "max-wait-ms", "seed", "alpha", "save", "backend",
+    "requests", "variants", "max-batch", "max-wait-ms", "seed", "save", "backend",
     "workers", "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms",
     "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads", "plan", "o",
+    "reps",
 ];
 
 fn main() {
@@ -101,6 +106,8 @@ fn print_usage() {
          --duration-ms 400 --deadline-ms 100 --mode open|closed|both [--plan FILE]\n\
          eval:    --nets a,b --schemes swis,swis_c,wgt_trunc --bits 2,3,4 \
          --batch B --group G --seed S --out PATH [--plan FILE]\n\
+         tune:    --plan in.swisplan | --net NAME [--scheme S --shifts N] \
+         --rows R --reps K --threads 1,4 [-o tuned.swisplan] (--alpha: MSE++ sweep)\n\
          see rust/README.md for the full option list"
     );
 }
@@ -574,8 +581,89 @@ fn cmd_eval(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
-/// Sweep the MSE++ alpha coefficient for a network (paper Sec. 4.1.2).
+/// Bench-driven kernel autotune (default), or the MSE++ alpha sweep of
+/// paper Sec. 4.1.2 behind `--alpha`.
+///
+/// The kernel path sweeps SIMD variant x row-block x group-chunk x
+/// thread-split over the plan's own largest packed GEMM, prints the full
+/// candidate table, and (with `-o`) persists the winning [`TuneParams`]
+/// into a machine-tuned `.swisplan` that `serve`/`eval`/`loadgen`
+/// consume automatically on this host.
+///
+/// [`TuneParams`]: swis::api::TuneParams
 fn cmd_tune(args: &cli::Args) -> Result<()> {
+    if args.flag("alpha") {
+        return cmd_tune_alpha(args);
+    }
+    use swis::api::TuneOptions;
+    // --plan loads a shipped artifact; otherwise prepare one in-process
+    // (same defaulting as `swis plan`, minus serialization)
+    let mut plan = if let Some(p) = args.get("plan") {
+        EnginePlan::load(Path::new(p))?
+    } else {
+        let net_name = args.get_or("net", "tinycnn");
+        let shifts = args.get_f64("shifts", 3.0)?;
+        let group = args.get_usize("group", 4)?;
+        let mut variants = vec![VariantSpec::fp32()];
+        for sc in args.get_or("scheme", "swis").split(',') {
+            let scheme: Scheme = sc.trim().parse()?;
+            if scheme != Scheme::Fp32 {
+                variants.push(VariantSpec::new(scheme, shifts, group)?);
+            }
+        }
+        let cfg = EngineConfig::for_net(net_name)?
+            .variants(variants)
+            .artifacts(args.get_or("artifacts", "artifacts"));
+        Engine::prepare(cfg)?
+    };
+    let dflt = TuneOptions::default();
+    let opts = TuneOptions {
+        rows: args.get_usize("rows", dflt.rows)?,
+        reps: args.get_usize("reps", dflt.reps)?,
+        threads: match args.get("threads") {
+            Some(_) => args.get_usize_list("threads", &[1])?,
+            None => dflt.threads,
+        },
+    };
+    let report = plan.autotune(&opts)?;
+    println!(
+        "# kernel autotune — {} on {} (probe {})",
+        plan.net_name(),
+        report.isa,
+        report.probe
+    );
+    println!(
+        "{:<10} {:>4} {:>6} {:>4} {:>12} {:>10}",
+        "variant", "rb", "chunk", "thr", "median ms", "Mw/s"
+    );
+    for c in &report.candidates {
+        let mark = if c.params == report.best { " <= best" } else { "" };
+        println!(
+            "{:<10} {:>4} {:>6} {:>4} {:>12.4} {:>10.1}{mark}",
+            c.params.variant.as_str(),
+            c.params.row_block,
+            c.params.group_chunk,
+            c.params.threads,
+            c.median_ms,
+            c.mws
+        );
+    }
+    println!("scalar median    : {:.4} ms", report.scalar_median_ms);
+    println!(
+        "best median      : {:.4} ms ({:.2}x vs scalar)",
+        report.best_median_ms, report.speedup
+    );
+    if let Some(out) = args.get("o").or_else(|| args.get("out")) {
+        plan.save(Path::new(out))?;
+        println!("wrote {out} (tuned for {})", report.best.cpu);
+    } else {
+        println!("(re-run with -o tuned.swisplan to persist the winner)");
+    }
+    Ok(())
+}
+
+/// Sweep the MSE++ alpha coefficient for a network (paper Sec. 4.1.2).
+fn cmd_tune_alpha(args: &cli::Args) -> Result<()> {
     use swis::quant::alpha_tune::{tune_alpha, DEFAULT_GRID};
     use swis::quant::QuantConfig;
     let net_name = args.get_or("net", "resnet18");
@@ -644,7 +732,22 @@ mod tests {
         run(&sv(&["simulate", "--net", "tinycnn", "--scheme", "swis_c", "--pe", "ds"])).unwrap();
         run(&sv(&["prob"])).unwrap();
         run(&sv(&["info"])).unwrap();
-        run(&sv(&["tune", "--net", "tinycnn", "--shifts", "2"])).unwrap();
+        run(&sv(&["tune", "--alpha", "--net", "tinycnn", "--shifts", "2"])).unwrap();
+    }
+
+    #[test]
+    fn kernel_tune_persists_a_machine_tuned_plan() {
+        let out = std::env::temp_dir().join(format!("swis_tune_{}.swisplan", std::process::id()));
+        run(&sv(&[
+            "tune", "--net", "tinycnn", "--scheme", "swis", "--shifts", "2", "--rows", "8",
+            "--reps", "1", "--threads", "1", "-o", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // the persisted plan carries host-matching TuneParams back in
+        let plan = EnginePlan::load(&out).unwrap();
+        let tp = plan.tune_params().expect("tuned plan must round-trip its TuneParams");
+        assert!(tp.matches_host());
+        let _ = std::fs::remove_file(&out);
     }
 
     #[test]

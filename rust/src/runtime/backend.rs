@@ -332,7 +332,7 @@ impl NativeBackend {
     /// invariant (pinned by `tests/native_equiv.rs`), so the split never
     /// changes logits.
     pub fn replicated(plan: Arc<EnginePlan>, pool_workers: usize) -> NativeBackend {
-        let base = match plan.threads() {
+        let base = match plan.preferred_threads() {
             0 => crate::quant::planner::default_threads(),
             t => t,
         };

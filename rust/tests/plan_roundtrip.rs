@@ -8,7 +8,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use swis::api::{Engine, EngineConfig, EnginePlan, Session, SwisError, VariantSpec};
+use swis::api::{Engine, EngineConfig, EnginePlan, Session, SwisError, TuneParams, VariantSpec};
 use swis::nets::{ConvLayer, Network};
 use swis::util::rng::Rng;
 use swis::util::tensor::Tensor;
@@ -147,4 +147,83 @@ fn rejects_corruption_version_mismatch_and_truncation() {
         EnginePlan::load(std::path::Path::new("/definitely/not/here.swisplan")).unwrap_err(),
         SwisError::Io(_)
     ));
+}
+
+#[test]
+fn tuned_params_round_trip_and_untuned_plans_stay_version_1() {
+    let cfg = EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::fp32())
+        .variant(VariantSpec::swis(2.0, 4))
+        .threads(2);
+    let mut plan = Engine::prepare(cfg).unwrap();
+
+    // untuned: no TuneParams, and the container stays the v1 layout an
+    // older reader accepts byte-for-byte
+    assert!(plan.tune_params().is_none());
+    let untuned_bytes = plan.to_bytes().unwrap();
+    assert_eq!(untuned_bytes[8], 1, "untuned plan must serialize as version 1");
+    let untuned = Arc::new(EnginePlan::from_bytes(&untuned_bytes).unwrap());
+
+    // install host-matching params: the container becomes v2 and the
+    // exact sanitized params come back after save -> load
+    let tp = TuneParams { row_block: 16, group_chunk: 4, ..TuneParams::host_default() };
+    plan.set_tune_params(tp.clone());
+    let want = plan.tune_params().expect("host-matching params must stick").clone();
+    assert_eq!(want, tp.sanitized());
+    let tuned_bytes = plan.to_bytes().unwrap();
+    assert_eq!(tuned_bytes[8], 2, "tuned plan must serialize as version 2");
+    let loaded = EnginePlan::from_bytes(&tuned_bytes).unwrap();
+    assert_eq!(loaded.tune_params(), Some(&want), "TuneParams lost in the round-trip");
+    assert_eq!(loaded.preferred_threads(), plan.preferred_threads());
+
+    // tuning selects kernels, it must never change logits: tuned and
+    // untuned plans serve bit-identically
+    assert_plans_serve_identically(&Arc::new(loaded), &untuned, 29);
+
+    // a v2 body under a v1 header is trailing garbage to the v1 parser:
+    // rejected loudly, not silently mis-read (checksum covers the header)
+    let mut b = tuned_bytes.clone();
+    b[8] = 1;
+    assert!(matches!(EnginePlan::from_bytes(&b).unwrap_err(), SwisError::Plan(_)));
+}
+
+#[test]
+fn foreign_cpu_tune_params_serialize_but_do_not_apply() {
+    // params tuned on another machine travel with the plan but must not
+    // drive dispatch here: the loader drops them and serving re-derives
+    let cfg = EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::swis(2.0, 4))
+        .threads(1);
+    let mut plan = Engine::prepare(cfg).unwrap();
+    let foreign = TuneParams { cpu: "some-other-machine/128c".into(), ..TuneParams::scalar() };
+    plan.set_tune_params(foreign);
+    assert!(plan.tune_params().is_none(), "foreign params must not apply locally");
+    let bytes = plan.to_bytes().unwrap();
+    assert_eq!(bytes[8], 2, "foreign params still travel in the v2 trailer");
+    let loaded = EnginePlan::from_bytes(&bytes).unwrap();
+    assert!(loaded.tune_params().is_none(), "foreign params must not survive a local load");
+}
+
+#[test]
+fn autotune_persists_through_the_container() {
+    use swis::api::TuneOptions;
+    let cfg = EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::swis(2.0, 4))
+        .threads(1);
+    let mut plan = Engine::prepare(cfg).unwrap();
+    let opts = TuneOptions { rows: 8, reps: 1, threads: vec![1] };
+    let report = plan.autotune(&opts).unwrap();
+    assert!(report.speedup >= 1.0, "scalar is in the grid; got {}", report.speedup);
+    let installed = plan.tune_params().expect("autotune must install its winner").clone();
+    assert_eq!(installed, report.best.sanitized());
+    let dir = scratch("tuned");
+    let path = dir.join("tuned.swisplan");
+    plan.save(&path).unwrap();
+    let loaded = EnginePlan::load(&path).unwrap();
+    // same machine => same kernel selection after the round-trip
+    assert_eq!(loaded.tune_params(), Some(&installed));
+    let _ = std::fs::remove_dir_all(&dir);
 }

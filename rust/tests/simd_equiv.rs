@@ -1,0 +1,236 @@
+//! SIMD-dispatch equivalence suite: every [`KernelVariant`] the host can
+//! run must be BIT-IDENTICAL to the scalar plane walk (and therefore to
+//! the `naive_gemm` / `naive_depthwise` oracles) for every row-block /
+//! group-chunk / thread-count combination — including ragged fan-ins,
+//! tail row counts, adversarial hand-built mask patterns, the i32
+//! overflow screen, and the `SWIS_FORCE_SCALAR` escape hatch.
+//!
+//! The packed group-op is exact integer arithmetic and addition is
+//! associative over the plane partial sums, so "bit-identical" is the
+//! contract here, not a tolerance.
+
+use swis::exec::{
+    naive_depthwise, naive_gemm, ConvGeom, KernelVariant, PreparedDepthwise, PreparedGemm,
+    TuneParams,
+};
+use swis::quant::{quantize, Alpha, PackedLayer, QuantConfig};
+use swis::util::rng::Rng;
+
+fn acts_for(rows: usize, fan_in: usize, rng: &mut Rng) -> Vec<i32> {
+    (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect()
+}
+
+fn packed(k: usize, fan_in: usize, gs: usize, n: usize, consecutive: bool, seed: u64) -> PackedLayer {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_vec(k * fan_in, 0.0, 0.06);
+    let cfg = QuantConfig { n_shifts: n, group_size: gs, alpha: Alpha::ONE, consecutive };
+    quantize(&w, &[k, fan_in], &cfg).unwrap()
+}
+
+/// The host's runnable vector variants (always non-empty: Portable).
+fn vector_variants() -> Vec<KernelVariant> {
+    KernelVariant::all()
+        .into_iter()
+        .filter(|v| *v != KernelVariant::Scalar && v.available())
+        .collect()
+}
+
+fn with(variant: KernelVariant, row_block: usize, group_chunk: usize) -> TuneParams {
+    TuneParams { variant, row_block, group_chunk, ..TuneParams::host_default() }
+}
+
+/// Scalar-tuned output — the anchor every dispatch must reproduce.
+fn scalar_out(p: &PackedLayer, acts: &[i32], rows: usize) -> Vec<i64> {
+    let mut prep = PreparedGemm::from_packed(p).unwrap();
+    prep.set_tune(TuneParams::scalar());
+    let out = prep.gemm(acts, rows, 1).unwrap();
+    assert_eq!(out, naive_gemm(p, acts, rows).unwrap(), "scalar walk != naive oracle");
+    out
+}
+
+#[test]
+fn every_variant_matches_scalar_across_schemes_groups_and_tiles() {
+    let mut rng = Rng::new(0xD15);
+    for &consecutive in &[false, true] {
+        for &gs in &[4usize, 16] {
+            let p = packed(12, 48, gs, 3, consecutive, 42);
+            let rows = 17usize; // 2x8 tile + 1 tail row
+            let acts = acts_for(rows, p.fan_in(), &mut rng);
+            let want = scalar_out(&p, &acts, rows);
+            for v in vector_variants() {
+                let w = v.width();
+                // odd row_block / group_chunk values exercise sanitize
+                for rb in [w, 2 * w, 13, 64] {
+                    for gc in [1usize, 2, 1000] {
+                        let mut prep = PreparedGemm::from_packed(&p).unwrap();
+                        prep.set_tune(with(v, rb, gc));
+                        for nt in [1usize, 3] {
+                            let got = prep.gemm(&acts, rows, nt).unwrap();
+                            assert_eq!(
+                                got,
+                                want,
+                                "{} rb={rb} gc={gc} nt={nt} cons={consecutive} G={gs}",
+                                v.as_str()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_fan_in_and_tail_row_counts() {
+    // fan_in not a multiple of the group size => padded tail lanes whose
+    // mask bits the plane preparation must have cleared; row counts
+    // straddle every tile boundary of the widest variant
+    let mut rng = Rng::new(7);
+    for &(fan_in, gs) in &[(30usize, 4usize), (27, 4), (50, 16), (5, 4)] {
+        let p = packed(8, fan_in, gs, 3, false, 1234 + fan_in as u64);
+        for rows in [1usize, 7, 8, 9, 17, 33] {
+            let acts = acts_for(rows, fan_in, &mut rng);
+            let want = scalar_out(&p, &acts, rows);
+            for v in vector_variants() {
+                let mut prep = PreparedGemm::from_packed(&p).unwrap();
+                prep.set_tune(with(v, v.width(), 2));
+                let got = prep.gemm(&acts, rows, 2).unwrap();
+                assert_eq!(got, want, "{} fan_in={fan_in} G={gs} rows={rows}", v.as_str());
+            }
+        }
+    }
+}
+
+/// Hand-built mask planes the quantizer would rarely emit: all bits set,
+/// a single bit in one plane, and alternating lanes — with extreme shift
+/// spread (0 and 7) and alternating signs.
+fn adversarial_layers() -> Vec<(String, PackedLayer)> {
+    let (k, fan_in, gs, n) = (4usize, 16usize, 4usize, 3usize);
+    let n_groups = k * (fan_in / gs);
+    let mut out = Vec::new();
+    for pattern in ["all-ones", "single-bit", "alternating"] {
+        let mut masks = vec![0u8; n_groups * gs * n];
+        for g in 0..n_groups {
+            for i in 0..gs {
+                for j in 0..n {
+                    let bit = match pattern {
+                        "all-ones" => 1,
+                        "single-bit" => u8::from(g == 2 && i == 1 && j == 2),
+                        _ => ((i + j) % 2) as u8,
+                    };
+                    masks[(g * gs + i) * n + j] = bit;
+                }
+            }
+        }
+        let p = PackedLayer {
+            shape: vec![k, fan_in],
+            group_size: gs,
+            n_shifts: n,
+            scale: 1.0,
+            shifts: (0..n_groups).flat_map(|_| [0u8, 3, 7]).collect(),
+            masks,
+            signs: (0..n_groups * gs).map(|i| if i % 2 == 0 { 1i8 } else { -1 }).collect(),
+            consecutive: false,
+            filter_shifts: None,
+        };
+        p.validate().unwrap();
+        out.push((pattern.to_string(), p));
+    }
+    out
+}
+
+#[test]
+fn adversarial_mask_patterns_stay_bit_identical() {
+    for (label, p) in adversarial_layers() {
+        let rows = 9usize;
+        // int8 extremes, deterministic alternation
+        let acts: Vec<i32> =
+            (0..rows * p.fan_in()).map(|i| if i % 2 == 0 { 127 } else { -128 }).collect();
+        let want = scalar_out(&p, &acts, rows);
+        for v in vector_variants() {
+            let mut prep = PreparedGemm::from_packed(&p).unwrap();
+            prep.set_tune(with(v, 2 * v.width(), 1));
+            let got = prep.gemm(&acts, rows, 1).unwrap();
+            assert_eq!(got, want, "{} on {label}", v.as_str());
+        }
+    }
+}
+
+#[test]
+fn oversized_activations_take_the_scalar_path_and_stay_exact() {
+    // one activation above MAX_SIMD_ACT: the i32 partial-sum screen must
+    // demote the call to scalar, and the answer must still match naive
+    let p = packed(6, 24, 4, 3, false, 5);
+    let rows = 5usize;
+    let mut acts = acts_for(rows, p.fan_in(), &mut Rng::new(9));
+    acts[7] = (swis::exec::simd::MAX_SIMD_ACT as i32) + 3;
+    acts[30] = -((swis::exec::simd::MAX_SIMD_ACT as i32) + 11);
+    let want = naive_gemm(&p, &acts, rows).unwrap();
+    for v in vector_variants() {
+        let mut prep = PreparedGemm::from_packed(&p).unwrap();
+        prep.set_tune(with(v, v.width(), 2));
+        assert_eq!(prep.gemm(&acts, rows, 2).unwrap(), want, "{}", v.as_str());
+    }
+}
+
+#[test]
+fn depthwise_variants_match_the_naive_oracle() {
+    let mut rng = Rng::new(0xD3);
+    let c = 6usize;
+    for &(in_hw, stride) in &[(8usize, 1usize), (9, 2)] {
+        let g = ConvGeom::same(in_hw, c, 3, stride).unwrap();
+        let w = rng.normal_vec(c * 9, 0.0, 0.2);
+        let cfg = QuantConfig { n_shifts: 3, group_size: 4, alpha: Alpha::ONE, consecutive: false };
+        let p = quantize(&w, &[c, 9], &cfg).unwrap(); // ragged: 9 taps, G=4
+        let batch = 2usize;
+        let x: Vec<f32> = (0..batch * in_hw * in_hw * c)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let want = naive_depthwise(&p, &x, batch, &g).unwrap();
+        let mut scalar = PreparedDepthwise::from_packed(&p).unwrap();
+        scalar.set_tune(TuneParams::scalar());
+        assert_eq!(scalar.forward(&x, batch, &g, 1).unwrap(), want, "scalar dw != naive");
+        for v in vector_variants() {
+            let mut prep = PreparedDepthwise::from_packed(&p).unwrap();
+            prep.set_tune(with(v, v.width(), 2));
+            for nt in [1usize, 2, 8] {
+                let got = prep.forward(&x, batch, &g, nt).unwrap();
+                assert_eq!(got, want, "{} stride={stride} nt={nt}", v.as_str());
+            }
+        }
+    }
+}
+
+#[test]
+fn unavailable_variants_sanitize_to_a_runnable_one() {
+    // a foreign-ISA TuneParams (deserialized from another machine's plan,
+    // say) must degrade to something the host can dispatch, not crash
+    if let Some(v) = KernelVariant::all().into_iter().find(|v| !v.available()) {
+        let p = packed(8, 32, 4, 3, false, 77);
+        let mut prep = PreparedGemm::from_packed(&p).unwrap();
+        prep.set_tune(with(v, v.width(), 4));
+        assert!(prep.tune().variant.available(), "sanitize left {}", v.as_str());
+        let acts = acts_for(9, 32, &mut Rng::new(3));
+        assert_eq!(prep.gemm(&acts, 9, 1).unwrap(), naive_gemm(&p, &acts, 9).unwrap());
+    }
+}
+
+#[test]
+fn force_scalar_env_is_read_per_call() {
+    // safe to flip mid-process precisely BECAUSE every path is
+    // bit-identical: a concurrent test racing this env var can only
+    // change which loop computes its (identical) answer
+    let p = packed(8, 32, 4, 3, false, 11);
+    let acts = acts_for(12, 32, &mut Rng::new(4));
+    let want = naive_gemm(&p, &acts, 12).unwrap();
+    let mut prep = PreparedGemm::from_packed(&p).unwrap();
+    prep.set_tune(with(swis::exec::best_available(), 8, 2));
+    std::env::set_var("SWIS_FORCE_SCALAR", "1");
+    assert!(swis::exec::simd::force_scalar());
+    assert_eq!(prep.gemm(&acts, 12, 2).unwrap(), want, "forced-scalar call");
+    std::env::set_var("SWIS_FORCE_SCALAR", "0");
+    assert!(!swis::exec::simd::force_scalar(), "'0' must mean off");
+    assert_eq!(prep.gemm(&acts, 12, 2).unwrap(), want, "vector call");
+    std::env::remove_var("SWIS_FORCE_SCALAR");
+    assert!(!swis::exec::simd::force_scalar(), "unset must mean off");
+}
