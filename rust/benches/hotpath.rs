@@ -32,6 +32,11 @@
 //! verified bit-identical to the scalar reference before its median
 //! counts, so a divergence aborts the bench instead of landing a record.
 //!
+//! Since the activation-sparsity PR it also carries an `act_sparsity`
+//! section: the packed GEMM with the zero-lane mask on vs off over
+//! probes of increasing zero fraction (0% dense adversarial, 50%/70%
+//! post-ReLU-realistic), outputs asserted bit-identical per point.
+//!
 //! Run: cargo bench --bench hotpath
 
 #[path = "bench_common.rs"]
@@ -80,10 +85,11 @@ fn main() -> Result<()> {
     // CI simd-bench job needs, without the serving/PJRT sweeps
     if std::env::var("SWIS_BENCH_ONLY").as_deref() == Ok("native") {
         let simd = simd_vs_scalar()?;
+        let act = act_sparsity()?;
         let mut native_recs = native_gemm()?;
-        write_native_json(&native_recs, &simd)?;
+        write_native_json(&native_recs, &simd, &act)?;
         native_recs.extend(native_depthwise()?);
-        return write_native_json(&native_recs, &simd);
+        return write_native_json(&native_recs, &simd, &act);
     }
     let mut recs: Vec<Record> = Vec::new();
     quantizer(&mut recs)?;
@@ -92,13 +98,14 @@ fn main() -> Result<()> {
     // failure in the PJRT sections below can't lose the measurements
     write_json(&recs)?;
     let simd = simd_vs_scalar()?;
+    let act = act_sparsity()?;
     let mut native_recs = native_gemm()?;
     // same early-write rule: the GEMM measurements land on disk before
     // the depthwise section runs (its divergence assert must not lose
     // them), then the file is rewritten with both sections
-    write_native_json(&native_recs, &simd)?;
+    write_native_json(&native_recs, &simd, &act)?;
     native_recs.extend(native_depthwise()?);
-    write_native_json(&native_recs, &simd)?;
+    write_native_json(&native_recs, &simd, &act)?;
     serving_sweep()?;
     simulator()?;
     runtime()?;
@@ -198,6 +205,77 @@ fn simd_vs_scalar() -> Result<Json> {
         j.set("scalar_median_ms", rep.scalar_median_ms);
         j.set("mw_per_s", mws);
         j.set("speedup", rep.speedup);
+        records.push(j);
+    }
+    section.set("records", Json::Arr(records));
+    Ok(section)
+}
+
+/// The `act_sparsity` section of `BENCH_native_gemm.json`: the packed
+/// GEMM with the activation zero-lane mask ON vs OFF over probes with
+/// an increasing fraction of DEAD activation columns (0% = the
+/// adversarial dense case the density screen must keep regression-free,
+/// 50%/70% = the post-ReLU zero range EIE reports). Column (channel)
+/// sparsity is the structure the per-tile mask can skip — a dead ReLU
+/// channel is zero for every row, so its lane drops from every plane.
+/// Both modes are asserted bit-identical per point before any median
+/// counts — a zero lane contributes exactly zero, so skipping is exact.
+fn act_sparsity() -> Result<Json> {
+    use swis::exec::PreparedGemm;
+    use swis::schedule::quantize_or_schedule;
+
+    println!("\n== activation zero-skipping (mask on vs off, 128 x 576) ==");
+    let k = 128usize;
+    let fan_in = 576usize;
+    let rows = 512usize;
+    let mut rng = Rng::new(9);
+    let w = rng.normal_vec(k * fan_in, 0.0, (2.0 / fan_in as f64).sqrt());
+    let packed = quantize_or_schedule(&w, &[k, fan_in], 3.0, 4, false, swis::quant::Alpha::ONE)?;
+    let mut prep_on = PreparedGemm::from_packed(&packed)?;
+    let mut tp = prep_on.tune().clone();
+    tp.act_mask = true;
+    prep_on.set_tune(tp.clone());
+    let mut prep_off = PreparedGemm::from_packed(&packed)?;
+    tp.act_mask = false;
+    prep_off.set_tune(tp);
+
+    let mut section = Json::obj();
+    section.set("unit", "ms (median)");
+    section.set("bit_identical", true); // asserted per point below
+    let mut records: Vec<Json> = Vec::new();
+    for zero_pct in [0u64, 50, 70] {
+        let dead: Vec<bool> = (0..fan_in).map(|_| rng.range_u64(0, 99) < zero_pct).collect();
+        let acts: Vec<i32> = (0..rows * fan_in)
+            .map(|i| {
+                let v = rng.range_u64(0, 255) as i32 - 128;
+                if dead[i % fan_in] {
+                    0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut out_on = Vec::new();
+        let t_on = time_median(7, || {
+            out_on = prep_on.gemm(&acts, rows, 1).unwrap();
+        });
+        let mut out_off = Vec::new();
+        let t_off = time_median(7, || {
+            out_off = prep_off.gemm(&acts, rows, 1).unwrap();
+        });
+        assert_eq!(out_on, out_off, "masked GEMM diverged at {zero_pct}% zeros");
+        let speedup = t_off / t_on;
+        println!(
+            "act_sparsity {zero_pct:>3}% dead cols: masked {:>7.2} ms vs unmasked {:>7.2} ms ({:.2}x)",
+            t_on * 1e3,
+            t_off * 1e3,
+            speedup
+        );
+        let mut j = Json::obj();
+        j.set("zero_pct", zero_pct);
+        j.set("masked_ms", t_on * 1e3);
+        j.set("unmasked_ms", t_off * 1e3);
+        j.set("speedup", speedup);
         records.push(j);
     }
     section.set("records", Json::Arr(records));
@@ -329,14 +407,15 @@ fn native_depthwise() -> Result<Vec<Record>> {
 
 /// Emit `BENCH_native_gemm.json` at the repo root: the native-kernel
 /// trajectory file (GEMM + depthwise sections + the `simd_vs_scalar`
-/// autotune section).
-fn write_native_json(recs: &[Record], simd: &Json) -> Result<()> {
+/// autotune and `act_sparsity` mask sections).
+fn write_native_json(recs: &[Record], simd: &Json, act: &Json) -> Result<()> {
     let mut root = Json::obj();
     root.set("bench", "native_gemm");
     root.set("unit_time", "ms");
     root.set("unit_throughput", "Mw/s (weight-MACs)");
     root.set("threads_full", planner::default_threads() as u64);
     root.set("simd_vs_scalar", simd.clone());
+    root.set("act_sparsity", act.clone());
     let records: Vec<Json> = recs
         .iter()
         .map(|r| {

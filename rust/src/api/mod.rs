@@ -49,7 +49,7 @@
 
 mod plan;
 
-pub use crate::coordinator::{Scheme, VariantSpec};
+pub use crate::coordinator::{Scheme, TierPolicy, VariantSpec};
 pub use crate::error::{AdmissionReason, SwisError, SwisResult};
 pub use crate::exec::{KernelVariant, TuneOptions, TuneParams, TuneReport, WeightProvenance};
 pub use crate::quant::Alpha;
@@ -209,7 +209,7 @@ impl Engine {
                 })?;
             parts.push(vp);
         }
-        EnginePlan::assemble(cfg.net, cfg.threads, provenance, cfg.variants, parts, None)
+        EnginePlan::assemble(cfg.net, cfg.threads, provenance, cfg.variants, parts, None, None)
     }
 }
 
@@ -267,6 +267,26 @@ impl Session {
         model
             .forward(images, self.threads)
             .map_err(|e| SwisError::backend_from(e).context(format!("variant '{variant}'")))
+    }
+
+    /// [`Session::run`] with a down-tier hint: `tier` is the tier depth
+    /// the caller will tolerate for this request (0 = full precision —
+    /// identical to `run`). When the plan carries a
+    /// [`TierPolicy`] and the requested variant sits higher on the
+    /// ladder than the hint, the request executes at the deeper,
+    /// cheaper tier instead — precision is only ever *lowered*, and
+    /// never past the policy floor. Returns the logits plus the name of
+    /// the variant that actually served them.
+    pub fn run_tiered(
+        &self,
+        variant: &str,
+        tier: usize,
+        images: &Tensor<f32>,
+    ) -> SwisResult<(Tensor<f32>, String)> {
+        let (effective, _) = self.plan.resolve_tier(variant, tier);
+        let effective = effective.to_string();
+        let logits = self.run(&effective, images)?;
+        Ok((logits, effective))
     }
 
     /// Open a batched streaming handle for `variant`: push/feed images
@@ -444,6 +464,42 @@ mod tests {
         let a = Session::with_threads(Arc::clone(&plan), 1).run("swis@3", &x).unwrap();
         let b = Session::with_threads(Arc::clone(&plan), 4).run("swis@3", &x).unwrap();
         assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn tiered_sessions_degrade_along_the_plan_ladder() {
+        let cfg = EngineConfig::for_net("tinycnn")
+            .unwrap()
+            .variant(VariantSpec::swis(4.0, 4))
+            .variant(VariantSpec::swis(3.0, 4))
+            .variant(VariantSpec::swis(2.0, 4))
+            .threads(2);
+        let mut plan = Engine::prepare(cfg).unwrap();
+        // a ladder naming a variant the plan does not serve is refused
+        let foreign =
+            TierPolicy::new(vec!["swis@4".into(), "swis@5".into()], vec![1.0, 9.0], 1).unwrap();
+        assert!(matches!(plan.set_tier_policy(foreign).unwrap_err(), SwisError::Config(_)));
+        let ladder = TierPolicy::new(
+            vec!["swis@4".into(), "swis@3".into(), "swis@2".into()],
+            vec![1.0, 4.0, 16.0],
+            2,
+        )
+        .unwrap();
+        plan.set_tier_policy(ladder).unwrap();
+        let plan = Arc::new(plan);
+        let s = Session::new(Arc::clone(&plan));
+        let x = images(2, 3);
+        // hint 0 = full precision, identical to plain run
+        let (full, v) = s.run_tiered("swis@4", 0, &x).unwrap();
+        assert_eq!(v, "swis@4");
+        assert_eq!(full.data(), s.run("swis@4", &x).unwrap().data());
+        // a deep hint serves the floor tier's exact logits
+        let (down, v) = s.run_tiered("swis@4", 99, &x).unwrap();
+        assert_eq!(v, "swis@2");
+        assert_eq!(down.data(), s.run("swis@2", &x).unwrap().data());
+        // a hint shallower than the variant's own tier never raises it
+        let (_, v) = s.run_tiered("swis@3", 0, &x).unwrap();
+        assert_eq!(v, "swis@3");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //!       dense:  count:u32 + f32 weights (filters-first)
 //!       packed: len:u32 + `.swis` container (quant::serialize)
 //!     bias: count:u32 + f32
-//!   [version 2 only] n_sections:u16, per section: tag:u8 len:u32 payload
+//!   [version >= 2] n_sections:u16, per section: tag:u8 len:u32 payload
 //!   fnv1a64 checksum of everything above: u64
 //! ```
 //!
@@ -44,11 +44,22 @@
 //! plan on a different machine drops them (kernels fall back to host
 //! defaults, [`EnginePlan::autotune`] re-derives) instead of dispatching
 //! another machine's argmin.
+//!
+//! **Multi-tier plans (version 3).** A plan carrying a [`TierPolicy`] —
+//! an ordered precision ladder over its own variants plus the measured
+//! per-tier accuracy ratios and a degradation floor — serializes as
+//! version 3: the same tagged trailer framing as version 2, with
+//! section tag 2 holding the policy (`n_tiers:u16, per tier name:str
+//! mse_ratio:f64, floor:u16`). Tier-less plans never write version 3,
+//! so single-tier containers stay byte-identical to version 1/2
+//! output. A loaded policy whose tier names do not all resolve to plan
+//! variants (a "foreign" policy, e.g. after variants were re-prepared)
+//! is dropped at assembly rather than served.
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::coordinator::{Scheme, VariantSpec};
+use crate::coordinator::{Scheme, TierPolicy, VariantSpec};
 use crate::error::{SwisError, SwisResult};
 use crate::exec::tune::{tune_gemm, TuneOptions, TuneReport};
 use crate::exec::{
@@ -63,8 +74,13 @@ const MAGIC: &[u8; 8] = b"SWISPLAN";
 const VERSION_BASE: u16 = 1;
 /// Version 1 body + tagged section trailer (TuneParams et al).
 const VERSION_TUNED: u16 = 2;
+/// Version 2 trailer framing with the multi-tier [`TierPolicy`] section
+/// present. Written only when a plan actually carries tiers.
+const VERSION_TIERED: u16 = 3;
 /// Section tag for [`TuneParams`] in the version-2 trailer.
 const SECTION_TUNE: u8 = 1;
+/// Section tag for [`TierPolicy`] in the version-3 trailer.
+const SECTION_TIERS: u8 = 2;
 
 /// A prepared engine: the planner output, packed layers and per-variant
 /// operands for one network — everything [`super::Session`] and the
@@ -85,6 +101,10 @@ pub struct EnginePlan {
     /// Machine-tuned kernel parameters, when a sweep ran (or a loaded
     /// container carried host-matching ones).
     tune: Option<TuneParams>,
+    /// Precision ladder over this plan's own variants (version-3
+    /// containers): ordered tier names, measured per-tier accuracy
+    /// ratios, and the lowest tier admission may degrade to.
+    tiers: Option<TierPolicy>,
 }
 
 impl EnginePlan {
@@ -97,6 +117,7 @@ impl EnginePlan {
         variants: Vec<VariantSpec>,
         parts: Vec<Vec<PreparedLayer>>,
         tune: Option<TuneParams>,
+        tiers: Option<TierPolicy>,
     ) -> SwisResult<EnginePlan> {
         if variants.is_empty() {
             return Err(SwisError::config("a plan needs at least one variant"));
@@ -111,6 +132,10 @@ impl EnginePlan {
         // params swept on a different machine are dropped here — kernels
         // keep host defaults and `autotune` re-derives on this CPU
         let tune = tune.filter(|t| t.matches_host()).map(|t| t.sanitized());
+        // a policy naming tiers this plan does not actually serve (e.g.
+        // stale after variants were re-prepared) is dropped, not served
+        let tiers = tiers
+            .filter(|p| p.tier_names().iter().all(|t| variants.iter().any(|v| &v.name == t)));
         let mut models = HashMap::new();
         let mut input = [0usize; 3];
         let mut n_classes = 0usize;
@@ -128,7 +153,18 @@ impl EnginePlan {
                 return Err(SwisError::config(format!("duplicate variant '{}'", spec.name)));
             }
         }
-        Ok(EnginePlan { net, input, n_classes, threads, provenance, variants, parts, models, tune })
+        Ok(EnginePlan {
+            net,
+            input,
+            n_classes,
+            threads,
+            provenance,
+            variants,
+            parts,
+            models,
+            tune,
+            tiers,
+        })
     }
 
     pub fn net(&self) -> &Network {
@@ -185,6 +221,41 @@ impl EnginePlan {
             self.tune = Some(tp);
         } else {
             self.tune = Some(tp);
+        }
+    }
+
+    /// The precision ladder this plan carries, if any (version-3
+    /// containers, or [`EnginePlan::set_tier_policy`]).
+    pub fn tier_policy(&self) -> Option<&TierPolicy> {
+        self.tiers.as_ref()
+    }
+
+    /// Record a precision ladder on this plan. Every tier must name a
+    /// variant the plan actually serves; the container becomes
+    /// version 3 on the next [`EnginePlan::to_bytes`].
+    pub fn set_tier_policy(&mut self, policy: TierPolicy) -> SwisResult<()> {
+        if let Some(missing) =
+            policy.tier_names().iter().find(|t| !self.models.contains_key(t.as_str()))
+        {
+            return Err(SwisError::config(format!(
+                "tier '{missing}' is not a variant of this plan (has: {})",
+                self.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>().join(", ")
+            )));
+        }
+        self.tiers = Some(policy);
+        Ok(())
+    }
+
+    /// Resolve the variant to actually execute for a request under
+    /// down-tier pressure: `floor_tier` is the deepest tier index the
+    /// caller will tolerate (admission derives it from queue pressure).
+    /// Returns `(effective variant, degraded?)` — the request's own
+    /// variant untouched when the plan has no policy, the variant is
+    /// outside the ladder, or no degradation is needed.
+    pub fn resolve_tier<'p>(&'p self, variant: &'p str, floor_tier: usize) -> (&'p str, bool) {
+        match &self.tiers {
+            Some(p) => p.resolve(variant, floor_tier),
+            None => (variant, false),
         }
     }
 
@@ -246,9 +317,17 @@ impl EnginePlan {
     pub fn to_bytes(&self) -> SwisResult<Vec<u8>> {
         let mut w = Writer::new();
         w.bytes_raw(MAGIC);
-        // untuned plans keep the version-1 layout byte-identical, so
-        // pre-autotuner readers are unaffected until a sweep actually ran
-        w.u16(if self.tune.is_some() { VERSION_TUNED } else { VERSION_BASE });
+        // untuned, tier-less plans keep the version-1 layout
+        // byte-identical (and tuned single-tier plans the version-2
+        // layout): each version bump is paid only by plans that carry
+        // the new section
+        w.u16(if self.tiers.is_some() {
+            VERSION_TIERED
+        } else if self.tune.is_some() {
+            VERSION_TUNED
+        } else {
+            VERSION_BASE
+        });
         w.u16(0); // flags, reserved
         w.u16(fit_u16(self.threads, "thread budget")?);
         w.u8(match self.provenance {
@@ -304,18 +383,33 @@ impl EnginePlan {
                 }
             }
         }
-        if let Some(tp) = &self.tune {
-            // version-2 tagged section trailer
-            let mut s = Writer::new();
-            s.u8(tp.variant.tag());
-            s.u16(fit_u16(tp.row_block.min(u16::MAX as usize), "tuned row block")?);
-            s.u16(fit_u16(tp.group_chunk.min(u16::MAX as usize), "tuned group chunk")?);
-            s.u16(fit_u16(tp.threads.min(u16::MAX as usize), "tuned thread split")?);
-            s.str(&tp.cpu)?;
-            w.u16(1); // n_sections
-            w.u8(SECTION_TUNE);
-            w.u32(fit_u32(s.out.len(), "tune section length")?);
-            w.bytes_raw(&s.out);
+        let n_sections = self.tune.is_some() as u16 + self.tiers.is_some() as u16;
+        if n_sections > 0 {
+            // version-2/3 tagged section trailer
+            w.u16(n_sections);
+            if let Some(tp) = &self.tune {
+                let mut s = Writer::new();
+                s.u8(tp.variant.tag());
+                s.u16(fit_u16(tp.row_block.min(u16::MAX as usize), "tuned row block")?);
+                s.u16(fit_u16(tp.group_chunk.min(u16::MAX as usize), "tuned group chunk")?);
+                s.u16(fit_u16(tp.threads.min(u16::MAX as usize), "tuned thread split")?);
+                s.str(&tp.cpu)?;
+                w.u8(SECTION_TUNE);
+                w.u32(fit_u32(s.out.len(), "tune section length")?);
+                w.bytes_raw(&s.out);
+            }
+            if let Some(pol) = &self.tiers {
+                let mut s = Writer::new();
+                s.u16(fit_u16(pol.tier_names().len(), "tier count")?);
+                for (name, ratio) in pol.tier_names().iter().zip(pol.mse_ratios()) {
+                    s.str(name)?;
+                    s.f64(*ratio);
+                }
+                s.u16(fit_u16(pol.floor(), "tier floor")?);
+                w.u8(SECTION_TIERS);
+                w.u32(fit_u32(s.out.len(), "tier section length")?);
+                w.bytes_raw(&s.out);
+            }
         }
         let sum = fnv1a64(&w.out);
         w.bytes_raw(&sum.to_le_bytes());
@@ -330,10 +424,10 @@ impl EnginePlan {
             return Err(SwisError::plan("not a .swisplan container (bad magic)"));
         }
         let version = u16::from_le_bytes([bytes[8], bytes[9]]);
-        if version != VERSION_BASE && version != VERSION_TUNED {
+        if !(VERSION_BASE..=VERSION_TIERED).contains(&version) {
             return Err(SwisError::plan(format!(
                 "unsupported .swisplan version {version} (this build reads versions \
-                 {VERSION_BASE}..={VERSION_TUNED})"
+                 {VERSION_BASE}..={VERSION_TIERED})"
             )));
         }
         if bytes.len() < MAGIC.len() + 2 + 8 {
@@ -428,6 +522,7 @@ impl EnginePlan {
             parts.push(vp);
         }
         let mut tune = None;
+        let mut tiers = None;
         if version >= VERSION_TUNED {
             let n_sections = r.u16()? as usize;
             for _ in 0..n_sections {
@@ -443,11 +538,33 @@ impl EnginePlan {
                     let group_chunk = s.u16()? as usize;
                     let threads = s.u16()? as usize;
                     let cpu = s.str()?;
-                    // bytes past the known fields are future extensions
-                    tune = Some(TuneParams { variant, row_block, group_chunk, threads, cpu });
+                    // bytes past the known fields are future extensions;
+                    // act_mask is a runtime knob, never serialized
+                    tune = Some(TuneParams {
+                        variant,
+                        row_block,
+                        group_chunk,
+                        threads,
+                        cpu,
+                        act_mask: true,
+                    });
+                } else if tag == SECTION_TIERS {
+                    let mut s = Reader { b: raw, pos: 0 };
+                    let n = s.u16()? as usize;
+                    let mut names = Vec::with_capacity(cap(n));
+                    let mut ratios = Vec::with_capacity(cap(n));
+                    for _ in 0..n {
+                        names.push(s.str()?);
+                        ratios.push(s.f64()?);
+                    }
+                    let floor = s.u16()? as usize;
+                    tiers = Some(
+                        TierPolicy::new(names, ratios, floor)
+                            .map_err(|e| e.context("tier section in .swisplan"))?,
+                    );
                 }
                 // unknown tags skip cleanly: length-prefixed sections keep
-                // this reader forward-compatible within version 2
+                // this reader forward-compatible within a version
             }
         }
         if r.pos != body.len() {
@@ -456,7 +573,7 @@ impl EnginePlan {
                 r.pos
             )));
         }
-        let plan = EnginePlan::assemble(net, threads, provenance, variants, parts, tune)?;
+        let plan = EnginePlan::assemble(net, threads, provenance, variants, parts, tune, tiers)?;
         if plan.input != input || plan.n_classes != n_classes {
             return Err(SwisError::plan(format!(
                 "stored shape ({input:?} -> {n_classes}) disagrees with the descriptor \
@@ -562,6 +679,34 @@ impl Writer {
 struct Reader<'a> {
     b: &'a [u8],
     pos: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Engine, EngineConfig};
+
+    /// A version-3 container whose ladder names variants THIS plan does
+    /// not serve (hand-edited file, or a plan re-assembled against a
+    /// different variant set): the loader must drop the ladder silently
+    /// and serve untiered, not refuse the whole plan.
+    #[test]
+    fn loading_a_ladder_naming_unknown_variants_drops_it() {
+        let cfg = EngineConfig::for_net("tinycnn")
+            .unwrap()
+            .variant(VariantSpec::swis(2.0, 4))
+            .threads(1);
+        let mut plan = Engine::prepare(cfg).unwrap();
+        // bypass set_tier_policy's validation to emulate the foreign file
+        plan.tiers = Some(
+            TierPolicy::new(vec!["ghost@4".into(), "ghost@2".into()], vec![1.0, 5.0], 1).unwrap(),
+        );
+        let bytes = plan.to_bytes().unwrap();
+        assert_eq!(bytes[8], 3, "the foreign ladder still travels as version 3");
+        let loaded = EnginePlan::from_bytes(&bytes).unwrap();
+        assert!(loaded.tier_policy().is_none(), "unknown-variant ladder must drop at load");
+        assert_eq!(loaded.variants().len(), plan.variants().len());
+    }
 }
 
 impl<'a> Reader<'a> {

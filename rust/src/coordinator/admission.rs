@@ -24,12 +24,20 @@
 //!
 //! The queue is generic over the job type through [`Admit`] so its
 //! ordering/shedding logic is unit-testable without a backend.
+//!
+//! [`TierPolicy`] adds the *degrade-don't-shed* control knob on top:
+//! an ordered precision ladder over a plan's weight variants plus a
+//! queue-pressure → down-tier mapping, so a deep queue trades accuracy
+//! (bounded by the policy floor) for throughput instead of refusing
+//! work outright.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
+
+use crate::error::{SwisError, SwisResult};
 
 /// Scheduling class of a request. Interactive always dequeues first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -300,6 +308,122 @@ impl<T: Admit> AdmissionQueue<T> {
     }
 }
 
+/// Queue-pressure fraction (len/capacity) at which admission degrades
+/// requests by one precision tier.
+pub const PRESSURE_DOWN_ONE: f64 = 0.5;
+/// Pressure fraction at which admission degrades by two tiers.
+pub const PRESSURE_DOWN_TWO: f64 = 0.8;
+
+/// A precision ladder over a plan's weight variants: tier 0 is the
+/// highest-precision (most shift planes, slowest) variant, later tiers
+/// are progressively cheaper. `mse_ratio[i]` records tier *i*'s
+/// worst-layer output MSE relative to tier 0 (measured by the `eval`
+/// subsystem), and `floor` is the deepest tier admission may degrade a
+/// request to — tiers past the floor exist in the plan but are only
+/// served when a client asks for them explicitly.
+///
+/// The policy is pure data + arithmetic (no queue handle): admission
+/// computes a pressure fraction and asks [`TierPolicy::degrade`] which
+/// variant to actually enqueue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierPolicy {
+    tiers: Vec<String>,
+    mse_ratio: Vec<f64>,
+    floor: usize,
+}
+
+impl TierPolicy {
+    /// Build a validated policy. `tiers` is ordered highest precision
+    /// first; `mse_ratio` is parallel to it (tier 0 should be 1.0);
+    /// `floor` indexes the deepest degradation target.
+    pub fn new(tiers: Vec<String>, mse_ratio: Vec<f64>, floor: usize) -> SwisResult<TierPolicy> {
+        if tiers.len() < 2 {
+            return Err(SwisError::config(format!(
+                "a tier policy needs at least 2 tiers, got {}",
+                tiers.len()
+            )));
+        }
+        if tiers.len() != mse_ratio.len() {
+            return Err(SwisError::config(format!(
+                "{} tiers but {} MSE ratios",
+                tiers.len(),
+                mse_ratio.len()
+            )));
+        }
+        if floor >= tiers.len() {
+            return Err(SwisError::config(format!(
+                "tier floor {floor} out of range (policy has {} tiers)",
+                tiers.len()
+            )));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for t in &tiers {
+            if !seen.insert(t.as_str()) {
+                return Err(SwisError::config(format!("duplicate tier '{t}'")));
+            }
+        }
+        if let Some(r) = mse_ratio.iter().find(|r| !r.is_finite() || **r < 0.0) {
+            return Err(SwisError::config(format!("tier MSE ratio {r} is not a finite >=0")));
+        }
+        Ok(TierPolicy { tiers, mse_ratio, floor })
+    }
+
+    /// Tier names, highest precision first.
+    pub fn tier_names(&self) -> &[String] {
+        &self.tiers
+    }
+
+    /// Per-tier worst-layer MSE relative to tier 0 (parallel to
+    /// [`TierPolicy::tier_names`]).
+    pub fn mse_ratios(&self) -> &[f64] {
+        &self.mse_ratio
+    }
+
+    /// Index of the deepest tier admission may degrade to.
+    pub fn floor(&self) -> usize {
+        self.floor
+    }
+
+    /// Ladder position of a variant, if it is on the ladder at all.
+    pub fn tier_of(&self, variant: &str) -> Option<usize> {
+        self.tiers.iter().position(|t| t == variant)
+    }
+
+    /// Resolve a request toward `target` tier depth: the effective tier
+    /// is `max(requested, min(target, floor))` — degradation never
+    /// *raises* precision and never passes the floor. Variants off the
+    /// ladder pass through untouched. Returns `(variant, degraded?)`.
+    pub fn resolve<'p>(&'p self, variant: &'p str, target: usize) -> (&'p str, bool) {
+        let Some(idx) = self.tier_of(variant) else {
+            return (variant, false);
+        };
+        let eff = idx.max(target.min(self.floor));
+        if eff == idx {
+            (variant, false)
+        } else {
+            (self.tiers[eff].as_str(), true)
+        }
+    }
+
+    /// Map queue pressure (`len/capacity`, in `[0, 1]`) to the variant
+    /// a request should actually execute as: >= [`PRESSURE_DOWN_ONE`]
+    /// degrades one tier, >= [`PRESSURE_DOWN_TWO`] two, always clamped
+    /// to the floor. Returns `(variant, degraded?)`.
+    pub fn degrade<'p>(&'p self, variant: &'p str, pressure: f64) -> (&'p str, bool) {
+        let down = if pressure >= PRESSURE_DOWN_TWO {
+            2
+        } else if pressure >= PRESSURE_DOWN_ONE {
+            1
+        } else {
+            return (variant, false);
+        };
+        match self.tier_of(variant) {
+            Some(idx) => self.resolve(variant, idx + down),
+            None => (variant, false),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,5 +588,64 @@ mod tests {
         let got = q.pop_match("b", Instant::now() + Duration::from_millis(50), &mut shed);
         assert_eq!(got.unwrap().variant(), "b");
         assert_eq!(q.len(), 1);
+    }
+
+    fn ladder() -> TierPolicy {
+        TierPolicy::new(
+            vec!["swis@4".into(), "swis@3".into(), "swis@2".into()],
+            vec![1.0, 3.5, 20.0],
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tier_policy_validates() {
+        assert!(TierPolicy::new(vec!["a".into()], vec![1.0], 0).is_err());
+        assert!(TierPolicy::new(vec!["a".into(), "b".into()], vec![1.0], 0).is_err());
+        assert!(TierPolicy::new(vec!["a".into(), "b".into()], vec![1.0, 2.0], 2).is_err());
+        assert!(TierPolicy::new(vec!["a".into(), "a".into()], vec![1.0, 2.0], 1).is_err());
+        assert!(TierPolicy::new(vec!["a".into(), "b".into()], vec![1.0, f64::NAN], 1).is_err());
+        assert!(TierPolicy::new(vec!["a".into(), "b".into()], vec![1.0, 2.0], 1).is_ok());
+    }
+
+    #[test]
+    fn degrade_maps_pressure_to_tiers_and_respects_the_floor() {
+        let p = ladder();
+        // calm queue: untouched
+        assert_eq!(p.degrade("swis@4", 0.2), ("swis@4", false));
+        // moderate pressure: one tier down
+        assert_eq!(p.degrade("swis@4", 0.6), ("swis@3", true));
+        // heavy pressure: two tiers down
+        assert_eq!(p.degrade("swis@4", 0.95), ("swis@2", true));
+        // heavy pressure from the middle tier clamps at the floor
+        assert_eq!(p.degrade("swis@3", 0.95), ("swis@2", true));
+        // a request already at the floor never moves (and never raises)
+        assert_eq!(p.degrade("swis@2", 0.95), ("swis@2", false));
+        // off-ladder variants pass through whatever the pressure
+        assert_eq!(p.degrade("fp32", 0.95), ("fp32", false));
+    }
+
+    #[test]
+    fn floor_caps_degradation_even_under_max_pressure() {
+        let p = TierPolicy::new(
+            vec!["swis@4".into(), "swis@3".into(), "swis@2".into()],
+            vec![1.0, 3.5, 20.0],
+            1, // tier 2 exists but is explicit-request-only
+        )
+        .unwrap();
+        assert_eq!(p.degrade("swis@4", 1.0), ("swis@3", true));
+        // explicit requests below the floor still resolve to themselves
+        assert_eq!(p.resolve("swis@2", 0), ("swis@2", false));
+    }
+
+    #[test]
+    fn resolve_clamps_target_and_never_raises_precision() {
+        let p = ladder();
+        assert_eq!(p.resolve("swis@4", 0), ("swis@4", false));
+        assert_eq!(p.resolve("swis@4", 1), ("swis@3", true));
+        assert_eq!(p.resolve("swis@4", 99), ("swis@2", true));
+        assert_eq!(p.resolve("swis@2", 0), ("swis@2", false));
+        assert_eq!(p.resolve("nope", 2), ("nope", false));
     }
 }

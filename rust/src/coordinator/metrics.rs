@@ -30,6 +30,10 @@ struct Inner {
     shed: u64,
     /// Requests refused at admission (`try_submit` -> Busy).
     rejected: u64,
+    /// Requests served at a lower precision tier than requested
+    /// (degrade-don't-shed under queue pressure). These still count in
+    /// `requests` — degradation is an accuracy event, not a failure.
+    degraded: u64,
     /// Requests that completed with a routed error (backend Err,
     /// unknown variant, bad batch).
     errors: u64,
@@ -49,6 +53,7 @@ impl Default for Metrics {
                 batches: 0,
                 shed: 0,
                 rejected: 0,
+                degraded: 0,
                 errors: 0,
                 panics: 0,
                 // distinct fixed seeds: deterministic, independent streams
@@ -68,6 +73,8 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub shed: u64,
     pub rejected: u64,
+    /// Requests down-tiered to a cheaper precision under queue pressure.
+    pub degraded: u64,
     pub errors: u64,
     pub panics: u64,
     pub mean_batch: f64,
@@ -101,6 +108,10 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    pub fn record_degraded(&self, n: usize) {
+        self.inner.lock().unwrap().degraded += n as u64;
+    }
+
     pub fn record_errors(&self, n: usize) {
         self.inner.lock().unwrap().errors += n as u64;
     }
@@ -117,6 +128,7 @@ impl Metrics {
             batches: m.batches,
             shed: m.shed,
             rejected: m.rejected,
+            degraded: m.degraded,
             errors: m.errors,
             panics: m.panics,
             mean_batch: if m.batches == 0 {
@@ -166,7 +178,7 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch, 0.0);
-        assert_eq!(s.shed + s.rejected + s.errors + s.panics, 0);
+        assert_eq!(s.shed + s.rejected + s.degraded + s.errors + s.panics, 0);
     }
 
     #[test]
@@ -175,10 +187,11 @@ mod tests {
         m.record_shed(3);
         m.record_rejected();
         m.record_rejected();
+        m.record_degraded(4);
         m.record_errors(5);
         m.record_panic();
         let s = m.snapshot();
-        assert_eq!((s.shed, s.rejected, s.errors, s.panics), (3, 2, 5, 1));
+        assert_eq!((s.shed, s.rejected, s.degraded, s.errors, s.panics), (3, 2, 4, 5, 1));
     }
 
     #[test]

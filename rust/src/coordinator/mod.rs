@@ -39,7 +39,10 @@ mod pool;
 mod server;
 mod variants;
 
-pub use admission::{Admit, AdmissionQueue, Popped, Priority, SubmitError};
+pub use admission::{
+    Admit, AdmissionQueue, Popped, Priority, SubmitError, TierPolicy, PRESSURE_DOWN_ONE,
+    PRESSURE_DOWN_TWO,
+};
 pub use batcher::{BatchPolicy, PendingBatch};
 pub use metrics::{Metrics, MetricsSnapshot, RESERVOIR_CAP};
 pub use pool::{Admission, PoolConfig, Ticket, WorkerPool, DEFAULT_QUEUE_DEPTH};

@@ -31,7 +31,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::admission::{Admit, AdmissionQueue, Popped, Priority, SubmitError};
+use super::admission::{Admit, AdmissionQueue, Popped, Priority, SubmitError, TierPolicy};
 use super::batcher::{BatchPolicy, PendingBatch};
 use super::metrics::Metrics;
 use super::server::{InferRequest, InferResponse};
@@ -79,6 +79,9 @@ struct Job {
     respond: Sender<Result<InferResponse, SwisError>>,
     enqueued: Instant,
     deadline: Option<Instant>,
+    /// Admission rewrote `req.variant` down the precision ladder
+    /// (degrade-don't-shed); surfaced on the response.
+    degraded: bool,
 }
 
 impl Admit for Job {
@@ -99,6 +102,11 @@ pub struct WorkerPool {
     alive: Arc<AtomicUsize>,
     backend_name: &'static str,
     image_len: usize,
+    /// Precision ladder from the factory's plan (multi-tier
+    /// `.swisplan`): under queue pressure, admission rewrites requests
+    /// down the ladder instead of letting them queue toward their shed
+    /// deadline. `None` = never rewrite (the single-tier behavior).
+    tiers: Option<TierPolicy>,
 }
 
 impl WorkerPool {
@@ -193,7 +201,21 @@ impl WorkerPool {
                 }
             }
         }
-        Ok(WorkerPool { queue, metrics, workers, alive, backend_name, image_len })
+        Ok(WorkerPool {
+            queue,
+            metrics,
+            workers,
+            alive,
+            backend_name,
+            image_len,
+            tiers: factory.tier_policy(),
+        })
+    }
+
+    /// The precision ladder admission degrades along, if the serving
+    /// plan carries one.
+    pub fn tier_policy(&self) -> Option<&TierPolicy> {
+        self.tiers.as_ref()
     }
 
     /// Which backend the workers run on ("pjrt" | "native" | test name).
@@ -227,8 +249,14 @@ impl WorkerPool {
         deadline: Option<Duration>,
     ) -> SwisResult<Admission> {
         let (job, rx) = self.make_job(req, deadline)?;
+        let degraded = job.degraded;
         match self.queue.try_push(job, pri) {
-            Ok(()) => Ok(Admission::Accepted(rx)),
+            Ok(()) => {
+                if degraded {
+                    self.metrics.record_degraded(1);
+                }
+                Ok(Admission::Accepted(rx))
+            }
             Err(SubmitError::Busy(_)) => {
                 self.metrics.record_rejected();
                 Ok(Admission::Busy)
@@ -248,9 +276,13 @@ impl WorkerPool {
         deadline: Option<Duration>,
     ) -> SwisResult<Ticket> {
         let (job, rx) = self.make_job(req, deadline)?;
+        let degraded = job.degraded;
         self.queue.push_wait(job, pri).map_err(|_| {
             SwisError::admission(AdmissionReason::Closed, "worker pool is shut down")
         })?;
+        if degraded {
+            self.metrics.record_degraded(1);
+        }
         Ok(rx)
     }
 
@@ -267,7 +299,7 @@ impl WorkerPool {
 
     fn make_job(
         &self,
-        req: InferRequest,
+        mut req: InferRequest,
         deadline: Option<Duration>,
     ) -> SwisResult<(Job, Ticket)> {
         if req.image.len() != self.image_len {
@@ -282,9 +314,25 @@ impl WorkerPool {
                 "no live workers in the pool",
             ));
         }
+        // Degrade-don't-shed: under queue pressure, rewrite the variant
+        // down the precision ladder BEFORE enqueueing, so affinity
+        // batching groups jobs by the variant that will actually run and
+        // the queue drains faster per job. Counted in metrics only once
+        // the push succeeds (Busy-refused requests are `rejected`).
+        let degraded = if let Some(policy) = &self.tiers {
+            let pressure = self.queue.len() as f64 / self.queue.capacity() as f64;
+            let (eff, degraded) = policy.degrade(&req.variant, pressure);
+            if degraded {
+                let eff = eff.to_string();
+                req.variant = eff;
+            }
+            degraded
+        } else {
+            false
+        };
         let now = Instant::now();
         let (respond, rx) = mpsc::channel();
-        Ok((Job { req, respond, enqueued: now, deadline: deadline.map(|d| now + d) }, rx))
+        Ok((Job { req, respond, enqueued: now, deadline: deadline.map(|d| now + d), degraded }, rx))
     }
 
     /// Graceful shutdown: close admission, drain, join every worker.
@@ -494,6 +542,7 @@ fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Met
                     queue: queue_ts[i],
                     total: total_ts[i],
                     batch_size: n,
+                    degraded: j.degraded,
                 }));
             }
         }

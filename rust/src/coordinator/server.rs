@@ -35,6 +35,10 @@ pub struct InferResponse {
     pub queue: Duration,
     pub total: Duration,
     pub batch_size: usize,
+    /// True when admission served this request at a lower precision
+    /// tier than it asked for (degrade-don't-shed under queue
+    /// pressure; see [`super::TierPolicy`]).
+    pub degraded: bool,
 }
 
 /// Handle to a running single-worker coordinator.

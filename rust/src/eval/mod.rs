@@ -18,7 +18,7 @@
 use std::path::Path;
 
 use crate::api::EnginePlan;
-use crate::coordinator::Scheme;
+use crate::coordinator::{Scheme, TierPolicy};
 use crate::error::{SwisError, SwisResult};
 use crate::exec::{net_weights, NativeModel, WeightProvenance, WeightTransform};
 use crate::nets::by_name;
@@ -357,6 +357,66 @@ pub fn run_eval_plan(
     Ok(records)
 }
 
+/// Default worst-layer MSE-ratio cap for [`derive_tier_policy`]: a tier
+/// qualifies as a degradation target while its worst per-layer MSE
+/// stays within this factor of the top tier's.
+pub const DEFAULT_TIER_MSE_CAP: f64 = 64.0;
+
+/// Derive a serving [`TierPolicy`] from a plan's own measured accuracy.
+///
+/// The ladder is the plan's quantized variants ordered by shift budget
+/// descending (most precise first); each tier is measured against the
+/// plan's fp32 anchor via [`run_eval_plan`], and the degradation floor
+/// is the DEEPEST tier whose worst per-layer MSE stays within
+/// `mse_cap` times the top tier's — so admission's degrade-don't-shed
+/// path can never push a request past a measured accuracy bound.
+/// Needs at least two quantized variants (one tier is not a ladder)
+/// and the fp32 anchor `run_eval_plan` requires.
+pub fn derive_tier_policy(
+    plan: &EnginePlan,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+    mse_cap: f64,
+) -> SwisResult<TierPolicy> {
+    if !(mse_cap.is_finite() && mse_cap > 0.0) {
+        return Err(SwisError::eval(format!("tier MSE cap {mse_cap} must be a finite > 0")));
+    }
+    let mut specs: Vec<_> = plan.variants().iter().filter(|s| s.scheme != Scheme::Fp32).collect();
+    if specs.len() < 2 {
+        return Err(SwisError::eval(format!(
+            "deriving a tier policy needs at least 2 quantized variants, plan has {}",
+            specs.len()
+        )));
+    }
+    // highest shift budget = most planes = highest precision; name as a
+    // deterministic tiebreak for equal budgets at different group sizes
+    specs.sort_by(|a, b| {
+        b.n_shifts
+            .partial_cmp(&a.n_shifts)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.name.cmp(&b.name))
+    });
+    let records = run_eval_plan(plan, batch, seed, threads)?;
+    let worst = |name: &str| -> SwisResult<f64> {
+        let r = records.iter().find(|r| r.variant == name).ok_or_else(|| {
+            SwisError::eval(format!("no eval record for plan variant '{name}'"))
+        })?;
+        Ok(r.per_layer.iter().map(|l| l.mse).fold(0.0, f64::max))
+    };
+    let top = worst(&specs[0].name)?.max(f64::MIN_POSITIVE);
+    let mut names = Vec::with_capacity(specs.len());
+    let mut ratios = Vec::with_capacity(specs.len());
+    for (i, s) in specs.iter().enumerate() {
+        names.push(s.name.clone());
+        ratios.push(if i == 0 { 1.0 } else { worst(&s.name)? / top });
+    }
+    // deepest tier still inside the accuracy budget; tiers past it stay
+    // in the plan but are served only on explicit request
+    let floor = (0..ratios.len()).rev().find(|&i| ratios[i] <= mse_cap).unwrap_or(0);
+    TierPolicy::new(names, ratios, floor)
+}
+
 /// Serialize the sweep into the `BENCH_accuracy.json` trajectory record.
 pub fn bench_json(records: &[EvalRecord], cfg: &EvalConfig) -> Json {
     let mut root = Json::obj();
@@ -537,6 +597,45 @@ mod tests {
         .unwrap();
         assert!(matches!(
             run_eval_plan(&no_anchor, 2, 7, 2).unwrap_err(),
+            SwisError::Eval(_)
+        ));
+    }
+
+    #[test]
+    fn tier_policy_derivation_orders_and_floors_by_measured_mse() {
+        use crate::api::{Engine, EngineConfig, VariantSpec};
+        let plan = Engine::prepare(
+            EngineConfig::for_net("tinycnn")
+                .unwrap()
+                .variant(VariantSpec::fp32())
+                .variant(VariantSpec::swis(2.0, 4))
+                .variant(VariantSpec::swis(4.0, 4))
+                .variant(VariantSpec::swis(3.0, 4))
+                .threads(2),
+        )
+        .unwrap();
+        // a generous cap admits the whole ladder as degradation targets
+        let p = derive_tier_policy(&plan, 2, 7, 2, 1e12).unwrap();
+        let names: Vec<&str> = p.tier_names().iter().map(|s| s.as_str()).collect();
+        assert_eq!(names, ["swis@4", "swis@3", "swis@2"], "ladder must sort by precision");
+        assert_eq!(p.mse_ratios()[0], 1.0);
+        assert!(p.mse_ratios().iter().all(|r| r.is_finite() && *r >= 0.0));
+        assert_eq!(p.floor(), 2);
+        // a cap below 1.0 disqualifies every deeper tier: the floor
+        // stays at the top and admission can never degrade
+        let tight = derive_tier_policy(&plan, 2, 7, 2, 0.5).unwrap();
+        assert_eq!(tight.floor(), 0);
+        // one quantized variant is not a ladder
+        let single = Engine::prepare(
+            EngineConfig::for_net("tinycnn")
+                .unwrap()
+                .variant(VariantSpec::fp32())
+                .variant(VariantSpec::swis(3.0, 4))
+                .threads(2),
+        )
+        .unwrap();
+        assert!(matches!(
+            derive_tier_policy(&single, 2, 7, 2, 64.0).unwrap_err(),
             SwisError::Eval(_)
         ));
     }

@@ -33,6 +33,20 @@
 //! activation quantization and the dequant rescale (paper's 8-bit
 //! activations). Every dispatch flavor is bit-identical — pinned by
 //! `tests/simd_equiv.rs`.
+//!
+//! **Activation zero-skipping** (EIE's observation, applied to the SWIS
+//! plane walk): post-ReLU activations are 50–70% zero, and an int8 code
+//! of 0 contributes exactly 0 through every shift plane. Both row cores
+//! therefore derive a per-row-block *zero-lane mask* per group — bit `i`
+//! set iff lane `i`'s activation column is non-zero for at least one row
+//! of the block — and AND it into each plane's pos/neg bitmasks before
+//! the walk ([`super::simd::accumulate_tile`]); planes that go empty
+//! under the mask are skipped outright. The mask falls out of the
+//! transpose pass the blocked path already makes, and a *density screen*
+//! (tiles over ~90% dense run unmasked) keeps the dense worst case
+//! regression-free. [`TuneParams::act_mask`] switches the whole
+//! mechanism off for benchmarking; results are bit-identical either way
+//! because only exactly-zero contributions are dropped.
 
 use super::core;
 use super::im2col::ConvGeom;
@@ -56,6 +70,38 @@ pub(crate) struct Plane {
     pub(crate) shift: u8,
     pub(crate) pos: u16,
     pub(crate) neg: u16,
+}
+
+/// Density screen threshold: a row block runs masked only when more than
+/// ~10% of its activation columns are all-zero. Below that the mask
+/// can't pay for its own AND/test per plane, so the block runs unmasked
+/// (all-ones) and the dense worst case stays regression-free.
+const MASK_MIN_ZERO_TENTHS: usize = 1;
+
+/// Fold per-column non-zero flags (`nzc[c] != 0` = column `c` live
+/// somewhere in the row block) into per-group zero-lane masks, applying
+/// the density screen: returns `false` (and leaves `masks` untouched)
+/// when the block is too dense for masking to pay. `ncols` counts the
+/// real (non-padding) columns; group `gl` covers columns
+/// `[gl * gs, gl * gs + gs)`. Padding lanes get a 0 bit, which is
+/// harmless — prepared planes carry no bits for them.
+fn fold_zero_lane_masks(nzc: &[i32], ncols: usize, gs: usize, masks: &mut [u16]) -> bool {
+    let zeros = nzc[..ncols].iter().filter(|&&v| v == 0).count();
+    if zeros * 10 < ncols * MASK_MIN_ZERO_TENTHS {
+        return false; // > ~90% dense: masking won't pay for itself
+    }
+    for (gl, m) in masks.iter_mut().enumerate() {
+        let base = gl * gs;
+        let valid = ncols.saturating_sub(base).min(gs);
+        let mut bits = 0u16;
+        for (i, &nz) in nzc[base..base + valid].iter().enumerate() {
+            if nz != 0 {
+                bits |= 1 << i;
+            }
+        }
+        *m = bits;
+    }
+    true
 }
 
 /// A packed layer prepared for native execution. Holds only the
@@ -212,7 +258,7 @@ impl PreparedGemm {
         let mut out = vec![0i64; p_rows * self.n_filters];
         par_rows(&mut out, p_rows, self.n_filters, n_threads, |start, rows, slice| {
             if tune.variant == KernelVariant::Scalar {
-                self.gemm_rows_scalar(acts, start, rows, slice);
+                self.gemm_rows_scalar(acts, start, rows, slice, tune.act_mask);
             } else {
                 self.gemm_rows_blocked(acts, start, rows, slice, &tune);
             }
@@ -245,30 +291,58 @@ impl PreparedGemm {
     /// `out` is that range's output slice. Results are staged in a
     /// row-major block buffer so the store to `out` is row-contiguous
     /// (the per-filter scatter only ever touches the hot 8-row staging
-    /// block).
-    fn gemm_rows_scalar(&self, acts: &[i32], start: usize, rows: usize, out: &mut [i64]) {
+    /// block). When `use_mask` is set, one scan per row block derives
+    /// the per-group zero-lane masks (shared by all `k` filters, so the
+    /// scan amortizes) and dead columns are skipped in the plane walk.
+    fn gemm_rows_scalar(
+        &self,
+        acts: &[i32],
+        start: usize,
+        rows: usize,
+        out: &mut [i64],
+        use_mask: bool,
+    ) {
         let k = self.n_filters;
         let fi = self.fan_in;
         let gs = self.group_size;
         let gpf = self.groups_per_filter;
         debug_assert_eq!(out.len(), rows * k);
         let mut obuf = vec![0i64; ROW_BLOCK * k];
+        let mut nzc = vec![0i32; fi];
+        let mut masks = vec![0xFFFFu16; gpf];
         let mut r0 = 0usize;
         while r0 < rows {
             let rb = ROW_BLOCK.min(rows - r0);
+            let mut masked = false;
+            if use_mask {
+                nzc.fill(0);
+                for r in 0..rb {
+                    let arow = &acts[(start + r0 + r) * fi..][..fi];
+                    for (c, &v) in arow.iter().enumerate() {
+                        nzc[c] |= v;
+                    }
+                }
+                masked = fold_zero_lane_masks(&nzc, fi, gs, &mut masks);
+            }
             for f in 0..k {
                 let mut acc = [0i64; ROW_BLOCK];
                 for gl in 0..gpf {
                     let g = f * gpf + gl;
                     let a0 = gl * gs; // group's first lane in the act row
+                    let lm = if masked { masks[gl] } else { 0xFFFF };
                     let lo = self.plane_ofs[g] as usize;
                     let hi = self.plane_ofs[g + 1] as usize;
                     for pl in &self.planes[lo..hi] {
+                        let pos = pl.pos & lm;
+                        let neg = pl.neg & lm;
+                        if (pos | neg) == 0 {
+                            continue; // every surviving lane reads zero
+                        }
                         let mut partial = [0i64; ROW_BLOCK];
                         // prepared masks cover only real lanes (pad-lane
                         // bits are dropped at prepare time), so a0 + lane
                         // < fan_in always holds here
-                        let mut m = pl.pos;
+                        let mut m = pos;
                         while m != 0 {
                             let lane = m.trailing_zeros() as usize;
                             m &= m - 1;
@@ -277,7 +351,7 @@ impl PreparedGemm {
                                 partial[r] += acts[(start + r0 + r) * fi + col] as i64;
                             }
                         }
-                        let mut m = pl.neg;
+                        let mut m = neg;
                         while m != 0 {
                             let lane = m.trailing_zeros() as usize;
                             m &= m - 1;
@@ -329,6 +403,9 @@ impl PreparedGemm {
         let gc = tune.group_chunk.clamp(1, gpf);
         let mut at = vec![0i32; gc * gs * rbp];
         let mut obuf = vec![0i64; rbp * k];
+        let mut nzc = vec![0i32; gc * gs];
+        let mut masks = vec![0xFFFFu16; gc];
+        let ones = vec![0xFFFFu16; gc];
         let mut r0 = 0usize;
         while r0 < rows {
             let rb = rbp.min(rows - r0);
@@ -342,12 +419,31 @@ impl PreparedGemm {
                 // prepared masks carry no bits for them
                 let ncols = cols.min(fi.saturating_sub(base_col));
                 at[..cols * rbp].fill(0);
-                for r in 0..rb {
-                    let arow = &acts[(start + r0 + r) * fi + base_col..][..ncols];
-                    for (cidx, &v) in arow.iter().enumerate() {
-                        at[cidx * rbp + r] = v;
+                if tune.act_mask {
+                    // fuse the zero-lane scan into the transpose pass
+                    nzc[..ncols].fill(0);
+                    for r in 0..rb {
+                        let arow = &acts[(start + r0 + r) * fi + base_col..][..ncols];
+                        for (cidx, &v) in arow.iter().enumerate() {
+                            at[cidx * rbp + r] = v;
+                            nzc[cidx] |= v;
+                        }
+                    }
+                } else {
+                    for r in 0..rb {
+                        let arow = &acts[(start + r0 + r) * fi + base_col..][..ncols];
+                        for (cidx, &v) in arow.iter().enumerate() {
+                            at[cidx * rbp + r] = v;
+                        }
                     }
                 }
+                let tmasks: &[u16] = if tune.act_mask
+                    && fold_zero_lane_masks(&nzc, ncols, gs, &mut masks[..gce])
+                {
+                    &masks[..gce]
+                } else {
+                    &ones[..gce] // dense tile (or masking off): no-op mask
+                };
                 for f in 0..k {
                     let g_base = f * gpf + g0;
                     let mut sub = 0usize;
@@ -363,6 +459,7 @@ impl PreparedGemm {
                             &at,
                             rbp,
                             sub,
+                            tmasks,
                             &mut acc[..w],
                         );
                         for r in 0..w.min(rb - sub) {
@@ -623,14 +720,15 @@ impl PreparedDepthwise {
             )));
         }
         let variant = if simd::force_scalar() { KernelVariant::Scalar } else { self.tune.variant };
+        let use_mask = self.tune.act_mask;
         let o = g.out_hw;
         let rows = batch * o * o;
         let mut out = vec![0f32; rows * c];
         par_rows(&mut out, rows, c, n_threads, |start, nrows, slice| {
             if variant == KernelVariant::Scalar {
-                self.forward_rows_scalar(x, g, start, nrows, slice);
+                self.forward_rows_scalar(x, g, start, nrows, slice, use_mask);
             } else {
-                self.forward_rows_blocked(x, g, start, nrows, slice, variant);
+                self.forward_rows_blocked(x, g, start, nrows, slice, variant, use_mask);
             }
         });
         Ok(out)
@@ -644,6 +742,7 @@ impl PreparedDepthwise {
         start: usize,
         nrows: usize,
         slice: &mut [f32],
+        use_mask: bool,
     ) {
         let c = self.channels;
         let o = g.out_hw;
@@ -659,7 +758,7 @@ impl PreparedDepthwise {
             for ch in 0..c {
                 gather_taps(img, g, ch, c, oh, ow, &mut taps);
                 let s = quantize_taps(&taps, &mut codes);
-                let acc = self.dot(ch, &codes);
+                let acc = self.dot(ch, &codes, use_mask);
                 slice[r * c + ch] = (acc as f64 * (self.scale * s)) as f32;
             }
         }
@@ -672,6 +771,7 @@ impl PreparedDepthwise {
     /// call over all the channel's groups, and rescaled per pixel. The
     /// per-(pixel, channel) integer math is unchanged, so results stay
     /// bit-identical to the scalar dot.
+    #[allow(clippy::too_many_arguments)]
     fn forward_rows_blocked(
         &self,
         x: &[f32],
@@ -680,6 +780,7 @@ impl PreparedDepthwise {
         nrows: usize,
         slice: &mut [f32],
         variant: KernelVariant,
+        use_mask: bool,
     ) {
         let c = self.channels;
         let o = g.out_hw;
@@ -693,6 +794,9 @@ impl PreparedDepthwise {
         // past kk are zero padding with no mask bits pointing at them
         let mut ct = vec![0i32; gpf * gs * w];
         let mut scales = vec![0f64; w];
+        let mut nzc = vec![0i32; self.kk];
+        let mut masks = vec![0xFFFFu16; gpf];
+        let ones = vec![0xFFFFu16; gpf];
         let mut t0 = 0usize;
         while t0 < nrows {
             let tb = w.min(nrows - t0);
@@ -702,6 +806,9 @@ impl PreparedDepthwise {
                 ct.fill(0);
             }
             for ch in 0..c {
+                if use_mask {
+                    nzc.fill(0);
+                }
                 for r in 0..tb {
                     let pix = start + t0 + r;
                     let b = pix / (o * o);
@@ -710,10 +817,24 @@ impl PreparedDepthwise {
                     let img = &x[b * img_len..(b + 1) * img_len];
                     gather_taps(img, g, ch, c, oh, ow, &mut taps);
                     scales[r] = quantize_taps(&taps, &mut codes);
-                    for (t, &code) in codes.iter().enumerate() {
-                        ct[t * w + r] = code;
+                    if use_mask {
+                        for (t, &code) in codes.iter().enumerate() {
+                            ct[t * w + r] = code;
+                            nzc[t] |= code;
+                        }
+                    } else {
+                        for (t, &code) in codes.iter().enumerate() {
+                            ct[t * w + r] = code;
+                        }
                     }
                 }
+                let tmasks: &[u16] = if use_mask
+                    && fold_zero_lane_masks(&nzc, self.kk, gs, &mut masks)
+                {
+                    &masks
+                } else {
+                    &ones
+                };
                 let mut acc = [0i64; simd::MAX_ROW_BLOCK];
                 simd::accumulate_tile(
                     variant,
@@ -725,6 +846,7 @@ impl PreparedDepthwise {
                     &ct,
                     w,
                     0,
+                    tmasks,
                     &mut acc[..w],
                 );
                 for r in 0..tb {
@@ -735,24 +857,44 @@ impl PreparedDepthwise {
         }
     }
 
-    /// Exact integer per-channel dot over the prepared planes.
-    fn dot(&self, ch: usize, codes: &[i32]) -> i64 {
+    /// Exact integer per-channel dot over the prepared planes. With
+    /// `use_mask`, tap codes that quantized to 0 (SAME-padding borders,
+    /// dead inputs) are masked out of the plane walk — one `kk`-wide
+    /// scan per call, then the same AND/skip as the tile paths.
+    fn dot(&self, ch: usize, codes: &[i32], use_mask: bool) -> i64 {
         let gs = self.group_size;
         let mut acc = 0i64;
         for gl in 0..self.groups_per_filter {
             let g = ch * self.groups_per_filter + gl;
             let a0 = gl * gs;
+            let lm = if use_mask {
+                let valid = codes.len().saturating_sub(a0).min(gs);
+                let mut bits = 0u16;
+                for (i, &cd) in codes[a0..a0 + valid].iter().enumerate() {
+                    if cd != 0 {
+                        bits |= 1 << i;
+                    }
+                }
+                bits
+            } else {
+                0xFFFF
+            };
             let lo = self.plane_ofs[g] as usize;
             let hi = self.plane_ofs[g + 1] as usize;
             for pl in &self.planes[lo..hi] {
+                let pos = pl.pos & lm;
+                let neg = pl.neg & lm;
+                if (pos | neg) == 0 {
+                    continue;
+                }
                 let mut partial = 0i64;
-                let mut m = pl.pos;
+                let mut m = pos;
                 while m != 0 {
                     let lane = m.trailing_zeros() as usize;
                     m &= m - 1;
                     partial += codes[a0 + lane] as i64;
                 }
-                let mut m = pl.neg;
+                let mut m = neg;
                 while m != 0 {
                     let lane = m.trailing_zeros() as usize;
                     m &= m - 1;

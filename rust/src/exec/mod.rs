@@ -41,7 +41,7 @@ pub use kernel::{
     quantize_taps, PreparedDepthwise, PreparedGemm,
 };
 pub use simd::{best_available, detected_isa, KernelVariant, TuneParams};
-pub use tune::{tune_gemm, TuneOptions, TuneReport};
+pub use tune::{tune_gemm, MaskAxis, TuneOptions, TuneReport};
 pub use model::{
     filters_first, net_weights, surrogate_network_weights, surrogate_tinycnn_weights,
     tinycnn_weights, LayerOperand, NativeModel, PreparedLayer, WeightProvenance,

@@ -19,6 +19,20 @@
 //! the scalar walk for any tile/chunk size (pinned by
 //! `tests/simd_equiv.rs`).
 //!
+//! # Activation zero-skipping
+//!
+//! Weight bit sparsity drops empty shift planes at prepare time; the
+//! *activation* side is handled here at dispatch time. Each tile pass
+//! receives a per-group zero-lane mask (`masks[gl]`): bit `i` is set iff
+//! lane `i`'s activation column is non-zero for at least one row of the
+//! tile. Every plane's pos/neg bitmasks are ANDed with it before the
+//! walk, and a plane that goes empty under the mask is skipped entirely
+//! — a zero column (post-ReLU dead channel) contributes exactly 0 to
+//! every partial, so dropping its loads is bit-identical by
+//! construction. The caller computes the mask in the same pass that
+//! transposes the tile (see [`super::kernel`]) and passes all-ones when
+//! masking is off or the tile is dense.
+//!
 //! # Variant dispatch
 //!
 //! | detected ISA | [`KernelVariant`] | tile width |
@@ -222,6 +236,13 @@ pub struct TuneParams {
     pub threads: usize,
     /// [`cpu_signature`] of the host the sweep ran on.
     pub cpu: String,
+    /// Activation zero-skipping: AND a per-tile zero-lane mask into each
+    /// plane's lane bitmasks before the walk. Runtime-only (NOT
+    /// serialized in `.swisplan` — the density screen makes the dense
+    /// case regression-free, so persisted plans always re-enable it);
+    /// the bench and the equivalence tests toggle it to measure/pin the
+    /// masked path against the unmasked one.
+    pub act_mask: bool,
 }
 
 impl TuneParams {
@@ -235,6 +256,7 @@ impl TuneParams {
             group_chunk: 8,
             threads: 0,
             cpu: cpu_signature(),
+            act_mask: true,
         }
     }
 
@@ -246,6 +268,7 @@ impl TuneParams {
             group_chunk: usize::MAX,
             threads: 0,
             cpu: cpu_signature(),
+            act_mask: true,
         }
     }
 
@@ -284,6 +307,12 @@ impl TuneParams {
 /// `[j * gs, j * gs + gs)`, and `row_off + W <= stride`. Prepared masks
 /// only carry bits for real fan-in lanes (pad bits are dropped at
 /// prepare time), so every dereferenced column is in bounds.
+///
+/// `masks[j]` is group `g_base + j`'s zero-lane mask for the whole tile
+/// (bit `i` set = lane column non-zero somewhere in the tile); pass
+/// all-ones to disable activation skipping. ANDing it into each plane's
+/// pos/neg bitmasks only ever removes loads of all-zero columns, so the
+/// result is bit-identical for any mask that satisfies that contract.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn accumulate_tile(
     variant: KernelVariant,
@@ -295,17 +324,21 @@ pub(crate) fn accumulate_tile(
     at: &[i32],
     stride: usize,
     row_off: usize,
+    masks: &[u16],
     acc: &mut [i64],
 ) {
     debug_assert!(acc.len() % 8 == 0 && row_off + acc.len() <= stride);
     debug_assert!(n_groups * gs * stride <= at.len());
+    debug_assert!(masks.len() >= n_groups);
     match variant {
         #[cfg(target_arch = "x86_64")]
         KernelVariant::Avx2 | KernelVariant::Avx2Wide if variant.available() => {
             // SAFETY: avx2 availability checked above; the scratch layout
             // contract bounds every load, and acc covers `width` lanes.
             unsafe {
-                x86::tile_avx2(planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, acc)
+                x86::tile_avx2(
+                    planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, masks, acc,
+                )
             }
         }
         #[cfg(target_arch = "aarch64")]
@@ -313,7 +346,9 @@ pub(crate) fn accumulate_tile(
             // SAFETY: NEON is baseline on aarch64; bounds per the scratch
             // layout contract.
             unsafe {
-                arm::tile_neon(planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, acc)
+                arm::tile_neon(
+                    planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, masks, acc,
+                )
             }
         }
         // Portable covers itself, plus any variant the cfg above compiled
@@ -330,6 +365,7 @@ pub(crate) fn accumulate_tile(
                     at,
                     stride,
                     row_off + o,
+                    masks,
                     &mut acc[o..o + 8],
                 );
                 o += 8;
@@ -351,6 +387,7 @@ fn tile_portable(
     at: &[i32],
     stride: usize,
     row_off: usize,
+    masks: &[u16],
     acc: &mut [i64],
 ) {
     const W: usize = 8;
@@ -359,9 +396,15 @@ fn tile_portable(
     for gl in 0..n_groups {
         let g = g_base + gl;
         let a0 = gl * gs;
+        let lm = masks[gl];
         for pl in &planes[plane_ofs[g] as usize..plane_ofs[g + 1] as usize] {
+            let pos = pl.pos & lm;
+            let neg = pl.neg & lm;
+            if (pos | neg) == 0 {
+                continue; // plane is empty under the zero-lane mask
+            }
             let mut part = [0i32; W];
-            let mut m = pl.pos;
+            let mut m = pos;
             while m != 0 {
                 let lane = m.trailing_zeros() as usize;
                 m &= m - 1;
@@ -370,7 +413,7 @@ fn tile_portable(
                     part[r] += col[r];
                 }
             }
-            let mut m = pl.neg;
+            let mut m = neg;
             while m != 0 {
                 let lane = m.trailing_zeros() as usize;
                 m &= m - 1;
@@ -412,6 +455,7 @@ mod x86 {
         at: &[i32],
         stride: usize,
         row_off: usize,
+        masks: &[u16],
         acc: &mut [i64],
     ) {
         let base = at.as_ptr();
@@ -428,12 +472,18 @@ mod x86 {
         for gl in 0..n_groups {
             let g = g_base + gl;
             let a0 = gl * gs;
+            let lm = *masks.get_unchecked(gl);
             let lo = *plane_ofs.get_unchecked(g) as usize;
             let hi = *plane_ofs.get_unchecked(g + 1) as usize;
             for pl in planes.get_unchecked(lo..hi) {
+                let pos = pl.pos & lm;
+                let neg = pl.neg & lm;
+                if (pos | neg) == 0 {
+                    continue; // plane is empty under the zero-lane mask
+                }
                 let mut part0 = _mm256_setzero_si256();
                 let mut part1 = _mm256_setzero_si256();
-                let mut m = pl.pos;
+                let mut m = pos;
                 while m != 0 {
                     let lane = m.trailing_zeros() as usize;
                     m &= m - 1;
@@ -446,7 +496,7 @@ mod x86 {
                         );
                     }
                 }
-                let mut m = pl.neg;
+                let mut m = neg;
                 while m != 0 {
                     let lane = m.trailing_zeros() as usize;
                     m &= m - 1;
@@ -503,6 +553,7 @@ mod arm {
         at: &[i32],
         stride: usize,
         row_off: usize,
+        masks: &[u16],
         acc: &mut [i64],
     ) {
         let base = at.as_ptr();
@@ -514,12 +565,18 @@ mod arm {
         for gl in 0..n_groups {
             let g = g_base + gl;
             let a0 = gl * gs;
+            let lm = *masks.get_unchecked(gl);
             let lo = *plane_ofs.get_unchecked(g) as usize;
             let hi = *plane_ofs.get_unchecked(g + 1) as usize;
             for pl in planes.get_unchecked(lo..hi) {
+                let pos = pl.pos & lm;
+                let neg = pl.neg & lm;
+                if (pos | neg) == 0 {
+                    continue; // plane is empty under the zero-lane mask
+                }
                 let mut p0 = vdupq_n_s32(0);
                 let mut p1 = vdupq_n_s32(0);
-                let mut m = pl.pos;
+                let mut m = pos;
                 while m != 0 {
                     let lane = m.trailing_zeros() as usize;
                     m &= m - 1;
@@ -527,7 +584,7 @@ mod arm {
                     p0 = vaddq_s32(p0, vld1q_s32(p));
                     p1 = vaddq_s32(p1, vld1q_s32(p.add(4)));
                 }
-                let mut m = pl.neg;
+                let mut m = neg;
                 while m != 0 {
                     let lane = m.trailing_zeros() as usize;
                     m &= m - 1;
@@ -574,6 +631,7 @@ mod tests {
             group_chunk: 0,
             threads: 2,
             cpu: "elsewhere".into(),
+            act_mask: true,
         }
         .sanitized();
         assert!(tp.variant.available());

@@ -63,6 +63,28 @@ pub struct Candidate {
     pub mws: f64,
 }
 
+/// Activation-mask axis measurements: the winning candidate re-timed
+/// with [`TuneParams::act_mask`] on/off, on the dense probe AND on a
+/// 50%-dead-column sparse probe. The grid itself is scored on the dense
+/// probe — scoring the mask there would always pick mask-off, because a
+/// dense probe never lets the mask win — so the axis is measured
+/// separately and reported for the bench and CLI to show.
+#[derive(Clone, Debug)]
+pub struct MaskAxis {
+    /// Winner's median on the dense probe, mask on, milliseconds.
+    pub dense_on_ms: f64,
+    /// Winner's median on the dense probe, mask off, milliseconds.
+    pub dense_off_ms: f64,
+    /// Winner's median on the 50%-dead-column probe, mask on.
+    pub sparse_on_ms: f64,
+    /// Winner's median on the 50%-dead-column probe, mask off.
+    pub sparse_off_ms: f64,
+    /// `sparse_off_ms / sparse_on_ms` — the zero-skipping win.
+    pub sparse_speedup: f64,
+    /// `dense_on_ms / dense_off_ms` — ~1.0 when the density screen holds.
+    pub dense_overhead: f64,
+}
+
 /// The sweep's outcome: the winning [`TuneParams`] plus everything a
 /// bench record or CLI report needs to justify it.
 #[derive(Clone, Debug)]
@@ -81,6 +103,8 @@ pub struct TuneReport {
     pub probe: String,
     /// Every timed candidate (sweep order), for full bench records.
     pub candidates: Vec<Candidate>,
+    /// Activation zero-skipping on/off, measured on the winner.
+    pub mask: MaskAxis,
 }
 
 /// The candidate grid for one prepared operand: scalar at every thread
@@ -110,6 +134,7 @@ fn candidate_grid(gpf: usize, threads: &[usize]) -> Vec<TuneParams> {
                         group_chunk: gc,
                         threads: nt,
                         cpu: simd::cpu_signature(),
+                        act_mask: true,
                     });
                 }
             }
@@ -195,6 +220,49 @@ pub fn tune_gemm(prep: &PreparedGemm, opts: &TuneOptions) -> SwisResult<TuneRepo
         .map(|c| c.median_ms)
         .fold(f64::INFINITY, f64::min);
     let best = candidates[best_ix].clone();
+
+    // mask axis: re-time the winner with zero-skipping on/off, on the
+    // dense probe and on a 50%-dead-column variant of it (whole fan-in
+    // columns zeroed — the shape ReLU-dead channels take), asserting
+    // bit-identity between the two modes on both probes.
+    let mut sparse_acts = acts.clone();
+    for c in (0..fan_in).step_by(2) {
+        for r in 0..rows {
+            sparse_acts[r * fan_in + c] = 0;
+        }
+    }
+    let nt = best.params.threads.max(1);
+    let time_mode = |probe_acts: &[i32], mask_on: bool| -> SwisResult<(f64, Vec<i64>)> {
+        let mut p = prep.clone();
+        p.set_tune(TuneParams { act_mask: mask_on, ..best.params.clone() });
+        let mut times = Vec::with_capacity(reps);
+        let mut first = None;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let out = p.gemm(probe_acts, rows, nt)?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            first.get_or_insert(out);
+        }
+        Ok((median(&mut times), first.unwrap()))
+    };
+    let (dense_on_ms, dense_on) = time_mode(&acts, true)?;
+    let (dense_off_ms, dense_off) = time_mode(&acts, false)?;
+    let (sparse_on_ms, sparse_on) = time_mode(&sparse_acts, true)?;
+    let (sparse_off_ms, sparse_off) = time_mode(&sparse_acts, false)?;
+    if dense_on != dense_off || sparse_on != sparse_off {
+        return Err(SwisError::backend(
+            "activation-masked kernel diverged from the unmasked path on the tuner probe",
+        ));
+    }
+    let mask = MaskAxis {
+        dense_on_ms,
+        dense_off_ms,
+        sparse_on_ms,
+        sparse_off_ms,
+        sparse_speedup: sparse_off_ms / sparse_on_ms,
+        dense_overhead: dense_on_ms / dense_off_ms,
+    };
+
     Ok(TuneReport {
         best: best.params.clone(),
         scalar_median_ms,
@@ -203,6 +271,7 @@ pub fn tune_gemm(prep: &PreparedGemm, opts: &TuneOptions) -> SwisResult<TuneRepo
         isa: simd::detected_isa(),
         probe: format!("{}x{fan_in} rows={rows} reps={reps}", prep.n_filters()),
         candidates,
+        mask,
     })
 }
 
@@ -232,6 +301,11 @@ mod tests {
         assert!(r.candidates.iter().all(|c| c.mws > 0.0 && c.median_ms >= 0.0));
         assert!(r.probe.contains("8x36"));
         assert_eq!(r.isa, simd::detected_isa());
+        // the mask axis was measured on both probes (bit-identity between
+        // masked/unmasked modes is asserted inside the sweep itself)
+        assert!(r.mask.dense_on_ms >= 0.0 && r.mask.dense_off_ms >= 0.0);
+        assert!(r.mask.sparse_on_ms >= 0.0 && r.mask.sparse_off_ms >= 0.0);
+        assert!(r.mask.sparse_speedup.is_finite() || r.mask.sparse_on_ms == 0.0);
     }
 
     #[test]

@@ -56,8 +56,13 @@
 //!   winning [`exec::TuneParams`] (variant x row-block x group-chunk x
 //!   thread-split) persist inside `.swisplan` containers — pinned to
 //!   the CPU signature that produced them, dropped and re-derivable on
-//!   any other host. `tests/simd_equiv.rs` holds every variant
-//!   bit-identical to the scalar walk.
+//!   any other host. Every kernel path also skips zero activation
+//!   lanes: per-row-tile zero masks AND into the packed sign-split
+//!   bitmasks before the plane walk (exact, since a zero activation
+//!   contributes exactly zero), with a density screen that disables
+//!   masking on near-dense tiles so the adversarial dense case stays
+//!   regression-free. `tests/simd_equiv.rs` holds every variant
+//!   bit-identical to the scalar walk, masked and unmasked.
 //! * [`nets`] — layer shape tables: ResNet-18, MobileNet-v2, VGG-16 and
 //!   the TinyCNN accuracy proxy.
 //! * [`eval`] — the accuracy/compression sweep: nets x schemes x
@@ -119,6 +124,28 @@
 //! Surrogate (He-init) weights are announced loudly and stamped into
 //! every `BENCH_accuracy.json` record (`"weights": "surrogate" | "npz"`)
 //! so trajectory points never silently mix provenances.
+//!
+//! ## Precision tiers — degrade-don't-shed serving
+//!
+//! A `.swisplan` can carry SEVERAL shift-count variants of one network
+//! as an ordered precision ladder ([`coordinator::TierPolicy`], embedded
+//! via `swis plan --tiers` / [`api::EnginePlan::set_tier_policy`] as a
+//! version-3 container section). Tier 0 is the highest-precision
+//! quantized variant; each deeper tier trades accuracy (tracked as the
+//! measured worst-layer MSE ratio vs tier 0, from
+//! [`eval::derive_tier_policy`]) for latency. At admission, queue
+//! pressure maps to a down-tier step (≥50% full → one tier, ≥80% → two,
+//! never past the plan's floor), so an overloaded pool serves
+//! lower-precision responses — counted in the `degraded` metric —
+//! instead of shedding them. Per-request hints enter through
+//! [`api::Session::run_tiered`]; a hint or pressure can only LOWER
+//! precision, never raise it above what the request asked for.
+//!
+//! | tier | meaning | typical source |
+//! |------|---------|----------------|
+//! | 0 | full requested precision (e.g. `swis@4`) | the request's own variant |
+//! | 1..floor-1 | intermediate shift counts | queue pressure ≥ 50% / 80% |
+//! | floor | deepest tier with MSE ratio ≤ the `--tier-cap` | overload ceiling; never exceeded |
 
 pub mod analysis;
 pub mod api;

@@ -20,5 +20,6 @@ mod sweep;
 pub use arrival::{exp_gap, Arrival};
 pub use recorder::{PointStats, Recorder};
 pub use sweep::{
-    gen_images, run_sweep, run_sweep_with, sweep_json, write_bench_json, SweepConfig, SweepPoint,
+    gen_images, gen_images_mode, run_sweep, run_sweep_with, sweep_json, write_bench_json,
+    ProbeMode, SweepConfig, SweepPoint, SPARSE_ZERO_FRACTION,
 };

@@ -11,6 +11,9 @@ use crate::util::stats::{percentile, Reservoir};
 pub struct Recorder {
     lat_us: Reservoir,
     pub ok: u64,
+    /// Of the OK responses, how many were served at a lower precision
+    /// tier than requested (degrade-don't-shed under queue pressure).
+    pub degraded: u64,
     /// Responses refused by deadline shedding.
     pub shed: u64,
     /// Admissions refused with Busy (backpressure at the edge).
@@ -24,12 +27,19 @@ pub struct Recorder {
 impl Recorder {
     pub fn new(seed: u64) -> Recorder {
         let lat_us = Reservoir::new(4096, seed);
-        Recorder { lat_us, ok: 0, shed: 0, busy: 0, timeout: 0, error: 0 }
+        Recorder { lat_us, ok: 0, degraded: 0, shed: 0, busy: 0, timeout: 0, error: 0 }
     }
 
     pub fn record_ok(&mut self, latency: Duration) {
         self.ok += 1;
         self.lat_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    /// Mark the most recent OK response as down-tiered. Degraded
+    /// responses still count in `ok` — degradation trades accuracy,
+    /// not completion.
+    pub fn record_degraded(&mut self) {
+        self.degraded += 1;
     }
 
     /// Classify a routed error by its TYPED class: deadline sheds are
@@ -61,6 +71,7 @@ impl Recorder {
             self.lat_us.push(x);
         }
         self.ok += other.ok;
+        self.degraded += other.degraded;
         self.shed += other.shed;
         self.busy += other.busy;
         self.timeout += other.timeout;
@@ -75,6 +86,7 @@ impl Recorder {
         PointStats {
             offered: self.ok + self.shed + self.busy + self.timeout + self.error,
             ok: self.ok,
+            degraded: self.degraded,
             shed: self.shed,
             busy: self.busy,
             timeout: self.timeout,
@@ -94,6 +106,9 @@ pub struct PointStats {
     /// Requests the generator attempted (accepted + refused).
     pub offered: u64,
     pub ok: u64,
+    /// OK responses served below the requested precision tier (subset
+    /// of `ok`, never of `offered`'s failure columns).
+    pub degraded: u64,
     pub shed: u64,
     pub busy: u64,
     pub timeout: u64,
@@ -123,8 +138,12 @@ mod tests {
         r.record_err(&SwisError::backend("unknown variant 'nope'"));
         r.record_busy();
         r.record_timeout();
+        r.record_degraded();
+        r.record_degraded();
         let s = r.stats(Duration::from_secs(2));
         assert_eq!((s.ok, s.shed, s.busy, s.timeout, s.error), (100, 1, 1, 1, 1));
+        assert_eq!(s.degraded, 2);
+        // degraded responses completed OK: they must not inflate offered
         assert_eq!(s.offered, 104);
         assert!((s.throughput_rps - 50.0).abs() < 1e-9);
         assert!(s.p50_us >= 100.0 && s.p50_us <= 200.0);
@@ -138,10 +157,12 @@ mod tests {
         let mut b = Recorder::new(2);
         b.record_ok(Duration::from_micros(30));
         b.record_busy();
+        b.record_degraded();
         a.merge(&b);
         let s = a.stats(Duration::from_secs(1));
         assert_eq!(s.ok, 2);
         assert_eq!(s.busy, 1);
+        assert_eq!(s.degraded, 1);
         assert!(s.p50_us >= 10.0 && s.p50_us <= 30.0);
     }
 }

@@ -29,6 +29,47 @@ use crate::util::rng::Rng;
 /// pool lost the request).
 const CLIENT_PATIENCE: Duration = Duration::from_secs(10);
 
+/// Synthetic probe-input generator mode.
+///
+/// Dense uniform pixels are the adversarial worst case for the
+/// activation zero-skipping kernels (essentially nothing to skip);
+/// ReLU-realistic sparse inputs show the speedup natural images (and
+/// every post-ReLU interior layer) actually present.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeMode {
+    /// Uniform-random `[0, 1)` pixels — every lane live.
+    Dense,
+    /// Natural-image-like sparsity: [`SPARSE_ZERO_FRACTION`] of pixels
+    /// exactly zero (mimicking post-ReLU activation statistics from
+    /// EIE), the rest uniform `[0, 1)`.
+    Sparse,
+}
+
+/// Fraction of exactly-zero pixels in [`ProbeMode::Sparse`] probes —
+/// the middle of EIE's reported 50-70% post-ReLU zero range.
+pub const SPARSE_ZERO_FRACTION: f64 = 0.6;
+
+impl ProbeMode {
+    pub fn parse(s: &str) -> SwisResult<ProbeMode> {
+        Ok(match s {
+            "dense" => ProbeMode::Dense,
+            "sparse" => ProbeMode::Sparse,
+            other => {
+                return Err(SwisError::config(format!(
+                    "unknown probe mode '{other}' (expected dense|sparse)"
+                )))
+            }
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ProbeMode::Dense => "dense",
+            ProbeMode::Sparse => "sparse",
+        }
+    }
+}
+
 /// The sweep grid + per-trial knobs.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -47,6 +88,9 @@ pub struct SweepConfig {
     pub deadline: Option<Duration>,
     pub variants: Vec<VariantSpec>,
     pub seed: u64,
+    /// Probe-input generator (dense = adversarial worst case for
+    /// activation sparsity; sparse = ReLU-realistic).
+    pub probe: ProbeMode,
 }
 
 impl Default for SweepConfig {
@@ -61,6 +105,7 @@ impl Default for SweepConfig {
             deadline: Some(Duration::from_millis(100)),
             variants: vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4)],
             seed: 2026,
+            probe: ProbeMode::Dense,
         }
     }
 }
@@ -78,6 +123,9 @@ pub struct SweepPoint {
     /// Pool-side counters for the same trial.
     pub shed: u64,
     pub rejected: u64,
+    /// Requests the pool down-tiered under queue pressure
+    /// (degrade-don't-shed; 0 unless the plan carries a tier ladder).
+    pub degraded: u64,
     pub mean_batch: f64,
 }
 
@@ -120,7 +168,7 @@ pub fn run_sweep_with(
                     },
                 )?;
                 if images.is_empty() {
-                    images = gen_images_len(16, pool.image_len(), cfg.seed);
+                    images = gen_images_mode(16, pool.image_len(), cfg.seed, cfg.probe);
                 }
                 let seed = cfg.seed ^ ((workers as u64) << 32) ^ (ai as u64 + 1);
                 let stats = match *arrival {
@@ -140,6 +188,7 @@ pub fn run_sweep_with(
                     stats,
                     shed: snap.shed,
                     rejected: snap.rejected,
+                    degraded: snap.degraded,
                     mean_batch: snap.mean_batch,
                 });
                 pool.shutdown()?;
@@ -164,7 +213,12 @@ fn run_open_loop(
         let mut rec = Recorder::new(1);
         for ticket in rx {
             match ticket.recv_timeout(CLIENT_PATIENCE) {
-                Ok(Ok(resp)) => rec.record_ok(resp.total),
+                Ok(Ok(resp)) => {
+                    rec.record_ok(resp.total);
+                    if resp.degraded {
+                        rec.record_degraded();
+                    }
+                }
                 Ok(Err(e)) => rec.record_err(&e),
                 Err(_) => rec.record_timeout(),
             }
@@ -233,7 +287,12 @@ fn run_closed_loop(
                         let t = Instant::now();
                         match pool.submit(req, pri, cfg.deadline) {
                             Ok(ticket) => match ticket.recv_timeout(CLIENT_PATIENCE) {
-                                Ok(Ok(_resp)) => rec.record_ok(t.elapsed()),
+                                Ok(Ok(resp)) => {
+                                    rec.record_ok(t.elapsed());
+                                    if resp.degraded {
+                                        rec.record_degraded();
+                                    }
+                                }
                                 Ok(Err(e)) => rec.record_err(&e),
                                 Err(_) => rec.record_timeout(),
                             },
@@ -266,9 +325,31 @@ pub fn gen_images(n: usize, seed: u64) -> Vec<Vec<f32>> {
 /// Deterministic synthetic images of an arbitrary per-request length
 /// (`hw * hw * c` of the served net).
 pub fn gen_images_len(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    gen_images_mode(n, len, seed, ProbeMode::Dense)
+}
+
+/// [`gen_images_len`] with an explicit [`ProbeMode`]. Sparse probes zero
+/// each pixel independently with probability [`SPARSE_ZERO_FRACTION`],
+/// approximating post-ReLU activation statistics; the zero pattern is
+/// part of the deterministic stream, so a (n, len, seed, mode) tuple
+/// always yields the same images.
+pub fn gen_images_mode(n: usize, len: usize, seed: u64, mode: ProbeMode) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     (0..n.max(1))
-        .map(|_| (0..len).map(|_| rng.range_f64(0.0, 1.0) as f32).collect())
+        .map(|_| {
+            (0..len)
+                .map(|_| {
+                    let x = rng.range_f64(0.0, 1.0);
+                    match mode {
+                        ProbeMode::Dense => x as f32,
+                        // reuse the value draw as the zero coin so dense
+                        // and sparse consume the stream identically
+                        ProbeMode::Sparse if x < SPARSE_ZERO_FRACTION => 0.0,
+                        ProbeMode::Sparse => x as f32,
+                    }
+                })
+                .collect()
+        })
         .collect()
 }
 
@@ -289,6 +370,7 @@ pub fn sweep_json(points: &[SweepPoint], cfg: &SweepConfig, backend: &str) -> Js
             None => Json::Null,
         },
     );
+    root.set("probe", cfg.probe.as_str());
     let variants: Vec<Json> =
         cfg.variants.iter().map(|v| Json::Str(v.name.clone())).collect();
     root.set("variants", Json::Arr(variants));
@@ -308,6 +390,7 @@ pub fn sweep_json(points: &[SweepPoint], cfg: &SweepConfig, backend: &str) -> Js
             j.set("ok", p.stats.ok);
             j.set("shed", p.shed);
             j.set("busy", p.rejected);
+            j.set("degraded", p.degraded);
             j.set("timeout", p.stats.timeout);
             j.set("error", p.stats.error);
             j.set("mean_batch", p.mean_batch);
@@ -346,6 +429,7 @@ mod tests {
             deadline: Some(Duration::from_secs(5)),
             variants: vec![VariantSpec::swis(3.0, 4)],
             seed: 11,
+            probe: ProbeMode::Dense,
         }
     }
 
@@ -362,15 +446,23 @@ mod tests {
         assert_eq!(p.stats.timeout, 0, "requests timed out");
         assert!(p.stats.p99_us >= p.stats.p50_us);
         let j = sweep_json(&pts, &cfg, "native");
-        for key in
-            ["workers", "arrival", "throughput_rps", "p50_us", "p99_us", "shed", "busy"]
-        {
+        for key in [
+            "workers",
+            "arrival",
+            "throughput_rps",
+            "p50_us",
+            "p99_us",
+            "shed",
+            "busy",
+            "degraded",
+        ] {
             assert!(
                 j.path(&["records", "0", key]).is_some(),
                 "missing '{key}' in sweep record"
             );
         }
         assert_eq!(j.get("bench").unwrap().as_str(), Some("serving"));
+        assert_eq!(j.get("probe").unwrap().as_str(), Some("dense"));
     }
 
     #[test]
@@ -391,5 +483,24 @@ mod tests {
         assert_eq!(a.len(), 3);
         assert!(a.iter().all(|im| im.len() == 32 * 32 * 3));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_probe_hits_the_target_zero_fraction() {
+        assert_eq!(ProbeMode::parse("sparse").unwrap(), ProbeMode::Sparse);
+        assert!(ProbeMode::parse("noise").is_err());
+        let a = gen_images_mode(4, 1024, 7, ProbeMode::Sparse);
+        let b = gen_images_mode(4, 1024, 7, ProbeMode::Sparse);
+        assert_eq!(a, b, "sparse probes must be deterministic");
+        let total = (4 * 1024) as f64;
+        let zeros = a.iter().flatten().filter(|&&x| x == 0.0).count() as f64;
+        let frac = zeros / total;
+        assert!(
+            (frac - SPARSE_ZERO_FRACTION).abs() < 0.05,
+            "zero fraction {frac} far from target {SPARSE_ZERO_FRACTION}"
+        );
+        // dense probes from the same seed have essentially no exact zeros
+        let d = gen_images_mode(4, 1024, 7, ProbeMode::Dense);
+        assert!(d.iter().flatten().filter(|&&x| x == 0.0).count() < 8);
     }
 }

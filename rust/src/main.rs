@@ -44,7 +44,7 @@ use swis::coordinator::{
     BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
 };
 use swis::loadgen::{
-    exp_gap, run_sweep, run_sweep_with, write_bench_json, Arrival, SweepConfig,
+    exp_gap, run_sweep, run_sweep_with, write_bench_json, Arrival, ProbeMode, SweepConfig,
 };
 use swis::nets::{all_networks, by_name, surrogate_weights};
 use swis::quant::truncation::truncate_weights;
@@ -60,7 +60,7 @@ const VALUE_KEYS: &[&str] = &[
     "requests", "variants", "max-batch", "max-wait-ms", "seed", "save", "backend",
     "workers", "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms",
     "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads", "plan", "o",
-    "reps",
+    "reps", "probe", "tier-cap",
 ];
 
 fn main() {
@@ -99,11 +99,14 @@ fn print_usage() {
         "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
          usage: swis <quantize|simulate|plan|serve|loadgen|eval|prob|info> [options]\n\
          plan:    --net NAME --scheme swis|swis_c|wgt_trunc --shifts N --group G \
-         -o out.swisplan (or --variants fp32,swis@3[/g8]; fp32 is always included)\n\
+         -o out.swisplan (or --variants fp32,swis@3[/g8]; fp32 is always included; \
+         --tiers [--tier-cap X] embeds a measured precision ladder for \
+         degrade-don't-shed serving)\n\
          serve:   --net NAME | --plan FILE.swisplan --workers N --queue-depth D \
          --priority interactive|batch --rate R (open-loop pacing, 0 = burst)\n\
          loadgen: --workers 1,2,4 --rates 150,300 --max-waits-ms 2 \
-         --duration-ms 400 --deadline-ms 100 --mode open|closed|both [--plan FILE]\n\
+         --duration-ms 400 --deadline-ms 100 --mode open|closed|both \
+         --probe dense|sparse [--plan FILE]\n\
          eval:    --nets a,b --schemes swis,swis_c,wgt_trunc --bits 2,3,4 \
          --batch B --group G --seed S --out PATH [--plan FILE]\n\
          tune:    --plan in.swisplan | --net NAME [--scheme S --shifts N] \
@@ -262,7 +265,27 @@ fn cmd_plan(args: &cli::Args) -> Result<()> {
         .artifacts(args.get_or("artifacts", "artifacts"));
     let out = args.get("o").or_else(|| args.get("out")).unwrap_or("plan.swisplan");
     let t0 = std::time::Instant::now();
-    let plan = Engine::prepare(cfg)?;
+    let mut plan = Engine::prepare(cfg)?;
+    // --tiers measures every quantized variant's worst-layer MSE and
+    // embeds a precision ladder (highest tier first) with a degradation
+    // floor at --tier-cap x the top tier's error; the pool then serves
+    // down-tiered responses under queue pressure instead of shedding
+    if args.flag("tiers") || args.get("tier-cap").is_some() {
+        let cap = args.get_f64("tier-cap", swis::eval::DEFAULT_TIER_MSE_CAP)?;
+        let policy = swis::eval::derive_tier_policy(
+            &plan,
+            args.get_usize("batch", 4)?,
+            args.get_usize("seed", 1)? as u64,
+            args.get_usize("threads", 0)?,
+            cap,
+        )?;
+        println!("# tier ladder (worst-layer MSE ratio vs top tier)");
+        for (i, (name, ratio)) in policy.tier_names().iter().zip(policy.mse_ratios()).enumerate() {
+            let mark = if i == policy.floor() { "  <= floor" } else { "" };
+            println!("  tier {i}: {name:<14} x{ratio:.2}{mark}");
+        }
+        plan.set_tier_policy(policy)?;
+    }
     let prep_s = t0.elapsed().as_secs_f64();
     plan.save(Path::new(out))?;
     let size = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
@@ -418,6 +441,7 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
         },
         variants,
         seed: args.get_usize("seed", 2026)? as u64,
+        probe: ProbeMode::parse(args.get_or("probe", "dense"))?,
     };
 
     println!(
@@ -439,14 +463,23 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
             run_sweep(Path::new(dir), backend, &cfg)?
         }
     };
-    println!("backend: {served_on}");
+    println!("backend: {served_on} (probe: {})", cfg.probe.as_str());
     println!(
-        "{:>7} {:>14} {:>8} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6}",
-        "workers", "arrival", "wait ms", "ok req/s", "p50 us", "p99 us", "shed", "busy", "err"
+        "{:>7} {:>14} {:>8} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6} {:>6}",
+        "workers",
+        "arrival",
+        "wait ms",
+        "ok req/s",
+        "p50 us",
+        "p99 us",
+        "shed",
+        "busy",
+        "degr",
+        "err"
     );
     for p in &points {
         println!(
-            "{:>7} {:>14} {:>8.1} {:>10.1} {:>10.0} {:>10.0} {:>6} {:>6} {:>6}",
+            "{:>7} {:>14} {:>8.1} {:>10.1} {:>10.0} {:>10.0} {:>6} {:>6} {:>6} {:>6}",
             p.workers,
             p.arrival,
             p.max_wait_ms,
@@ -455,6 +488,7 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
             p.stats.p99_us,
             p.shed,
             p.rejected,
+            p.degraded,
             p.stats.error + p.stats.timeout
         );
     }
@@ -808,6 +842,36 @@ mod tests {
     }
 
     #[test]
+    fn tiered_plan_and_sparse_probe_through_cli() {
+        let pid = std::process::id();
+        let plan_out = std::env::temp_dir().join(format!("swis_cli_tier_{pid}.swisplan"));
+        let plan_str = plan_out.to_str().unwrap();
+        run(&sv(&[
+            "plan", "--net", "tinycnn", "--variants", "swis@4,swis@3,swis@2", "--tiers",
+            "--batch", "1", "-o", plan_str,
+        ]))
+        .unwrap();
+        let plan = EnginePlan::load(&plan_out).unwrap();
+        let pol = plan.tier_policy().expect("--tiers must embed a ladder");
+        assert_eq!(pol.tier_names(), ["swis@4", "swis@3", "swis@2"]);
+        // a tiered plan degrades under pressure through the whole
+        // loadgen stack; the record carries probe + degraded columns
+        let lg_out = std::env::temp_dir().join(format!("swis_cli_tier_lg_{pid}.json"));
+        run(&sv(&[
+            "loadgen", "--plan", plan_str, "--workers", "1", "--rates", "150",
+            "--duration-ms", "80", "--deadline-ms", "5000", "--probe", "sparse",
+            "--out", lg_out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let j = swis::util::json::parse(&std::fs::read_to_string(&lg_out).unwrap()).unwrap();
+        assert_eq!(j.get("probe").unwrap().as_str(), Some("sparse"));
+        assert!(j.path(&["records", "0", "degraded"]).is_some());
+        for f in [&plan_out, &lg_out] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
     fn loadgen_smoke_writes_wellformed_json() {
         let out = std::env::temp_dir().join(format!("swis_loadgen_{}.json", std::process::id()));
         run(&sv(&[
@@ -869,6 +933,7 @@ mod tests {
         assert!(run(&sv(&["serve", "--priority", "warp"])).is_err());
         assert!(run(&sv(&["serve", "--net", "nope"])).is_err());
         assert!(run(&sv(&["loadgen", "--mode", "sideways"])).is_err());
+        assert!(run(&sv(&["loadgen", "--probe", "noisy"])).is_err());
         assert!(run(&sv(&["eval", "--nets", "nope"])).is_err());
         assert!(run(&sv(&["eval", "--nets", "tinycnn", "--schemes", "int4"])).is_err());
         // fp32 in --schemes would sweep nothing: loud error, not a no-op

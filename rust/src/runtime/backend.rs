@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 use super::{ModelBundle, Runtime};
 use crate::api::{Engine, EngineConfig, EnginePlan, Session};
-use crate::coordinator::{VariantSpec, WeightVariants};
+use crate::coordinator::{TierPolicy, VariantSpec, WeightVariants};
 use crate::error::{SwisError, SwisResult};
 use crate::nets::Network;
 use crate::util::tensor::Tensor;
@@ -106,6 +106,14 @@ pub trait BackendFactory: Send + Sync {
     /// can split intra-op thread budgets instead of oversubscribing
     /// `workers x default_threads` OS threads.
     fn make(&self, pool_workers: usize) -> SwisResult<Box<dyn Backend>>;
+
+    /// The precision ladder the pool's admission should degrade along
+    /// under queue pressure, when the underlying plan carries one
+    /// (multi-tier version-3 `.swisplan`). Default: none — admission
+    /// never rewrites a request's variant.
+    fn tier_policy(&self) -> Option<TierPolicy> {
+        None
+    }
 }
 
 /// Native recipe: one shared prepared [`EnginePlan`] — built here (once)
@@ -155,6 +163,10 @@ impl BackendFactory for NativeFactory {
 
     fn make(&self, pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
         Ok(Box::new(NativeBackend::replicated(Arc::clone(&self.plan), pool_workers)))
+    }
+
+    fn tier_policy(&self) -> Option<TierPolicy> {
+        self.plan.tier_policy().cloned()
     }
 }
 

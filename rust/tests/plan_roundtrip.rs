@@ -207,6 +207,62 @@ fn foreign_cpu_tune_params_serialize_but_do_not_apply() {
 }
 
 #[test]
+fn tier_policies_round_trip_as_version_3() {
+    use swis::api::TierPolicy;
+    let cfg = EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::fp32())
+        .variant(VariantSpec::swis(4.0, 4))
+        .variant(VariantSpec::swis(3.0, 4))
+        .variant(VariantSpec::swis(2.0, 4))
+        .threads(1);
+    let mut plan = Engine::prepare(cfg).unwrap();
+
+    // tier-free plans keep the version-1 layout an older reader accepts
+    assert!(plan.tier_policy().is_none());
+    let v1 = plan.to_bytes().unwrap();
+    assert_eq!(v1[8], 1, "untiered, untuned plan must stay version 1");
+
+    // a ladder naming a variant the plan lacks: typed Config error
+    let foreign =
+        TierPolicy::new(vec!["swis@4".into(), "nope@1".into()], vec![1.0, 9.0], 1).unwrap();
+    assert!(matches!(plan.set_tier_policy(foreign), Err(SwisError::Config(_))));
+    assert!(plan.tier_policy().is_none(), "a refused ladder must not half-apply");
+
+    let policy = TierPolicy::new(
+        vec!["swis@4".into(), "swis@3".into(), "swis@2".into()],
+        vec![1.0, 3.5, 20.0],
+        2,
+    )
+    .unwrap();
+    plan.set_tier_policy(policy.clone()).unwrap();
+    let v3 = plan.to_bytes().unwrap();
+    assert_eq!(v3[8], 3, "tiered plan must serialize as version 3");
+    let loaded = EnginePlan::from_bytes(&v3).unwrap();
+    assert_eq!(loaded.tier_policy(), Some(&policy), "ladder lost in the round-trip");
+
+    // the ladder only selects tiers — logits are untouched
+    let untiered = Arc::new(EnginePlan::from_bytes(&v1).unwrap());
+    assert_plans_serve_identically(&Arc::new(loaded), &untiered, 31);
+
+    // a flipped bit inside the tier section: checksum rejects it before
+    // any tier field parses (the floor u16 sits just before the trailer)
+    let mut b = v3.clone();
+    let n = b.len();
+    b[n - 12] ^= 0x08;
+    assert!(matches!(EnginePlan::from_bytes(&b).unwrap_err(), SwisError::Plan(_)));
+
+    // tune + tiers coexist in one version-3 container
+    let tp = TuneParams { row_block: 16, group_chunk: 2, ..TuneParams::host_default() };
+    plan.set_tune_params(tp);
+    let both = plan.to_bytes().unwrap();
+    assert_eq!(both[8], 3);
+    let loaded = EnginePlan::from_bytes(&both).unwrap();
+    assert!(loaded.tune_params().is_some(), "TuneParams lost next to the tier section");
+    assert_eq!(loaded.tier_policy(), Some(&policy));
+}
+
+#[test]
 fn autotune_persists_through_the_container() {
     use swis::api::TuneOptions;
     let cfg = EngineConfig::for_net("tinycnn")

@@ -201,6 +201,99 @@ fn depthwise_variants_match_the_naive_oracle() {
     }
 }
 
+/// The activation zero-lane mask: probes built to exercise the masked
+/// path hard — an all-zero first row, alternating-zero lanes on odd
+/// rows, dead COLUMNS zero across every row (the lane-skip case: a
+/// lane only drops when its column is zero for the whole tile), ragged
+/// fan-in tails, dense rows mixed in — must stay bit-identical for
+/// EVERY runnable variant (Scalar included) with the mask ON and OFF.
+/// The unmasked scalar walk is the anchor: a skipped lane contributes
+/// exactly zero, so masking is exact, not approximate.
+#[test]
+fn zero_lane_masking_is_bit_identical_for_every_variant() {
+    let mut rng = Rng::new(0xAC);
+    for &(fan_in, gs) in &[(48usize, 4usize), (30, 4), (50, 16)] {
+        let p = packed(10, fan_in, gs, 3, false, 90 + fan_in as u64);
+        for rows in [1usize, 9, 17] {
+            let mut acts = acts_for(rows, fan_in, &mut rng);
+            // row 0 fully zero (the whole-tile-skip case) ...
+            for a in acts.iter_mut().take(fan_in) {
+                *a = 0;
+            }
+            // ... odd rows alternating-zero lanes, even rows dense ...
+            for r in (1..rows).step_by(2) {
+                for c in (0..fan_in).step_by(2) {
+                    acts[r * fan_in + c] = 0;
+                }
+            }
+            // ... and every 5th column dead across ALL rows — a dead
+            // ReLU channel, the only shape a lane mask can drop
+            for c in (0..fan_in).step_by(5) {
+                for r in 0..rows {
+                    acts[r * fan_in + c] = 0;
+                }
+            }
+            let want = scalar_out(&p, &acts, rows);
+            for v in KernelVariant::all().into_iter().filter(|v| v.available()) {
+                for mask in [true, false] {
+                    let mut prep = PreparedGemm::from_packed(&p).unwrap();
+                    let mut tp = with(v, v.width().max(1), 2);
+                    tp.act_mask = mask;
+                    prep.set_tune(tp);
+                    let got = prep.gemm(&acts, rows, 2).unwrap();
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} mask={mask} fan_in={fan_in} G={gs} rows={rows}",
+                        v.as_str()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Depthwise masking over ReLU-like inputs (60% exact zeros, plus one
+/// fully-zero image): every variant, mask on and off, must reproduce the
+/// naive per-channel oracle bit for bit.
+#[test]
+fn depthwise_zero_pixels_stay_bit_identical_under_masking() {
+    let mut rng = Rng::new(0xDA);
+    let c = 6usize;
+    for &(in_hw, stride) in &[(8usize, 1usize), (9, 2)] {
+        let g = ConvGeom::same(in_hw, c, 3, stride).unwrap();
+        let w = rng.normal_vec(c * 9, 0.0, 0.2);
+        let cfg = QuantConfig { n_shifts: 3, group_size: 4, alpha: Alpha::ONE, consecutive: false };
+        let p = quantize(&w, &[c, 9], &cfg).unwrap();
+        let batch = 2usize;
+        let mut x: Vec<f32> = (0..batch * in_hw * in_hw * c)
+            .map(|_| {
+                let v = rng.range_f64(0.0, 1.0);
+                if v < 0.6 {
+                    0.0
+                } else {
+                    v as f32
+                }
+            })
+            .collect();
+        // the first image entirely zero: every one of its tiles skips
+        for px in x.iter_mut().take(in_hw * in_hw * c) {
+            *px = 0.0;
+        }
+        let want = naive_depthwise(&p, &x, batch, &g).unwrap();
+        for v in KernelVariant::all().into_iter().filter(|v| v.available()) {
+            for mask in [true, false] {
+                let mut prep = PreparedDepthwise::from_packed(&p).unwrap();
+                let mut tp = with(v, v.width().max(1), 2);
+                tp.act_mask = mask;
+                prep.set_tune(tp);
+                let got = prep.forward(&x, batch, &g, 2).unwrap();
+                assert_eq!(got, want, "{} mask={mask} stride={stride}", v.as_str());
+            }
+        }
+    }
+}
+
 #[test]
 fn unavailable_variants_sanitize_to_a_runnable_one() {
     // a foreign-ISA TuneParams (deserialized from another machine's plan,
