@@ -37,6 +37,12 @@
 //! probes of increasing zero fraction (0% dense adversarial, 50%/70%
 //! post-ReLU-realistic), outputs asserted bit-identical per point.
 //!
+//! Since the observability PR it also carries an `obs_overhead`
+//! section: the same packed GEMM timed at `ObsLevel::Off` vs
+//! `ObsLevel::Full` (sparsity counters + tracing armed), outputs
+//! asserted bit-identical, recording the fractional overhead the CI
+//! obs-smoke job gates at <= 3%.
+//!
 //! Run: cargo bench --bench hotpath
 
 #[path = "bench_common.rs"]
@@ -86,10 +92,11 @@ fn main() -> Result<()> {
     if std::env::var("SWIS_BENCH_ONLY").as_deref() == Ok("native") {
         let simd = simd_vs_scalar()?;
         let act = act_sparsity()?;
+        let obs = obs_overhead()?;
         let mut native_recs = native_gemm()?;
-        write_native_json(&native_recs, &simd, &act)?;
+        write_native_json(&native_recs, &simd, &act, &obs)?;
         native_recs.extend(native_depthwise()?);
-        return write_native_json(&native_recs, &simd, &act);
+        return write_native_json(&native_recs, &simd, &act, &obs);
     }
     let mut recs: Vec<Record> = Vec::new();
     quantizer(&mut recs)?;
@@ -99,13 +106,14 @@ fn main() -> Result<()> {
     write_json(&recs)?;
     let simd = simd_vs_scalar()?;
     let act = act_sparsity()?;
+    let obs = obs_overhead()?;
     let mut native_recs = native_gemm()?;
     // same early-write rule: the GEMM measurements land on disk before
     // the depthwise section runs (its divergence assert must not lose
     // them), then the file is rewritten with both sections
-    write_native_json(&native_recs, &simd, &act)?;
+    write_native_json(&native_recs, &simd, &act, &obs)?;
     native_recs.extend(native_depthwise()?);
-    write_native_json(&native_recs, &simd, &act)?;
+    write_native_json(&native_recs, &simd, &act, &obs)?;
     serving_sweep()?;
     simulator()?;
     runtime()?;
@@ -282,6 +290,57 @@ fn act_sparsity() -> Result<Json> {
     Ok(section)
 }
 
+/// The `obs_overhead` section of `BENCH_native_gemm.json`: the packed
+/// GEMM timed with observability OFF vs FULL (sparsity counters armed
+/// through every plane walk + tracing enabled). The counters ride the
+/// kernel's hot loops through a thread-local tally, so this is the
+/// section that keeps that cost honest — output asserted bit-identical,
+/// overhead recorded as a percentage for the CI obs-smoke gate (<= 3%).
+fn obs_overhead() -> Result<Json> {
+    use swis::exec::PreparedGemm;
+    use swis::obs::{self, ObsLevel};
+    use swis::schedule::quantize_or_schedule;
+
+    println!("\n== observability overhead (ObsLevel off vs full, 128 x 576) ==");
+    let k = 128usize;
+    let fan_in = 576usize;
+    let rows = 512usize;
+    let mut rng = Rng::new(11);
+    let w = rng.normal_vec(k * fan_in, 0.0, (2.0 / fan_in as f64).sqrt());
+    let acts: Vec<i32> = (0..rows * fan_in).map(|_| rng.range_u64(0, 255) as i32 - 128).collect();
+    let packed = quantize_or_schedule(&w, &[k, fan_in], 3.0, 4, false, swis::quant::Alpha::ONE)?;
+    let prep = PreparedGemm::from_packed(&packed)?;
+
+    obs::set_level(ObsLevel::Off);
+    let mut out_off = Vec::new();
+    let t_off = time_median(9, || {
+        out_off = prep.gemm(&acts, rows, 1).unwrap();
+    });
+    obs::set_level(ObsLevel::Full);
+    let mut out_full = Vec::new();
+    let t_full = time_median(9, || {
+        out_full = prep.gemm(&acts, rows, 1).unwrap();
+    });
+    obs::set_level(ObsLevel::Off);
+    obs::reset();
+    assert_eq!(out_off, out_full, "observability level changed GEMM output");
+    let overhead_pct = (t_full / t_off - 1.0) * 100.0;
+    println!(
+        "obs_overhead swis_n3_g4: off {:>7.2} ms vs full {:>7.2} ms ({:+.2}%)",
+        t_off * 1e3,
+        t_full * 1e3,
+        overhead_pct
+    );
+    let mut section = Json::obj();
+    section.set("config", "swis_n3_g4_128x576_rows512_nt1");
+    section.set("off_ms", t_off * 1e3);
+    section.set("full_ms", t_full * 1e3);
+    section.set("overhead_pct", overhead_pct);
+    section.set("gate_pct", 3.0);
+    section.set("bit_identical", true); // asserted above
+    Ok(section)
+}
+
 /// The native packed GEMM kernel vs the naive per-group scalar loop on a
 /// tinycnn-class layer (conv5 geometry: 128 filters x 576 fan-in), per
 /// scheme and thread count. Mw/s counts weight-MACs (rows * K * fan_in).
@@ -407,8 +466,8 @@ fn native_depthwise() -> Result<Vec<Record>> {
 
 /// Emit `BENCH_native_gemm.json` at the repo root: the native-kernel
 /// trajectory file (GEMM + depthwise sections + the `simd_vs_scalar`
-/// autotune and `act_sparsity` mask sections).
-fn write_native_json(recs: &[Record], simd: &Json, act: &Json) -> Result<()> {
+/// autotune, `act_sparsity` mask, and `obs_overhead` sections).
+fn write_native_json(recs: &[Record], simd: &Json, act: &Json, obs: &Json) -> Result<()> {
     let mut root = Json::obj();
     root.set("bench", "native_gemm");
     root.set("unit_time", "ms");
@@ -416,6 +475,7 @@ fn write_native_json(recs: &[Record], simd: &Json, act: &Json) -> Result<()> {
     root.set("threads_full", planner::default_threads() as u64);
     root.set("simd_vs_scalar", simd.clone());
     root.set("act_sparsity", act.clone());
+    root.set("obs_overhead", obs.clone());
     let records: Vec<Json> = recs
         .iter()
         .map(|r| {

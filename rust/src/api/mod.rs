@@ -222,6 +222,9 @@ impl Engine {
 pub struct Session {
     plan: Arc<EnginePlan>,
     threads: usize,
+    /// Per-layer breakdown of this session's most recent forward, kept
+    /// only while the obs level enables counters ([`crate::obs`]).
+    stats: std::sync::Mutex<Option<crate::obs::ForwardStats>>,
 }
 
 impl Session {
@@ -238,7 +241,7 @@ impl Session {
     /// per-worker split so N workers never oversubscribe).
     pub fn with_threads(plan: Arc<EnginePlan>, threads: usize) -> Session {
         let threads = if threads == 0 { planner::default_threads() } else { threads };
-        Session { plan, threads }
+        Session { plan, threads, stats: std::sync::Mutex::new(None) }
     }
 
     pub fn plan(&self) -> &Arc<EnginePlan> {
@@ -264,9 +267,23 @@ impl Session {
                     .join(", ")
             ))
         })?;
-        model
+        let t0 = std::time::Instant::now();
+        let out = model
             .forward(images, self.threads)
-            .map_err(|e| SwisError::backend_from(e).context(format!("variant '{variant}'")))
+            .map_err(|e| SwisError::backend_from(e).context(format!("variant '{variant}'")));
+        // aggregate this forward's per-layer tallies (collected on this
+        // thread by exec::model's layer scopes); None when counters off
+        if let Some(fwd) = crate::obs::take_forward(t0.elapsed().as_secs_f64() * 1e3) {
+            *self.stats.lock().unwrap() = Some(fwd);
+        }
+        out
+    }
+
+    /// Per-layer sparsity/time breakdown of this session's most recent
+    /// [`Session::run`] — `None` when the [`crate::obs`] level has
+    /// counters off (the default) or before the first run.
+    pub fn last_stats(&self) -> Option<crate::obs::ForwardStats> {
+        self.stats.lock().unwrap().clone()
     }
 
     /// [`Session::run`] with a down-tier hint: `tier` is the tier depth
@@ -500,6 +517,26 @@ mod tests {
         // a hint shallower than the variant's own tier never raises it
         let (_, v) = s.run_tiered("swis@3", 0, &x).unwrap();
         assert_eq!(v, "swis@3");
+    }
+
+    #[test]
+    fn session_exposes_per_layer_stats_when_counters_on() {
+        let _g = crate::obs::test_level_guard();
+        crate::obs::set_level(crate::obs::ObsLevel::Counters);
+        let plan = Arc::new(Engine::prepare(tinycnn_cfg()).unwrap());
+        let s = Session::new(Arc::clone(&plan));
+        let x = images(1, 5);
+        assert!(s.last_stats().is_none(), "no stats before the first run");
+        s.run("swis@3", &x).unwrap();
+        let st = s.last_stats().unwrap();
+        crate::obs::set_level(crate::obs::ObsLevel::Off);
+        assert!(!st.layers.is_empty());
+        assert!(st.tally().planes_total() > 0, "SWIS layers must count plane work");
+        assert!(st.layers.iter().all(|l| l.time_ms >= 0.0));
+        // with counters off the snapshot stays whatever it was; runs are
+        // unobserved
+        s.run("swis@3", &x).unwrap();
+        assert_eq!(s.last_stats().unwrap().layers.len(), st.layers.len());
     }
 
     #[test]

@@ -47,7 +47,9 @@ pub enum Priority {
 }
 
 impl Priority {
-    fn lane(self) -> usize {
+    /// Lane index (0 = interactive, 1 = batch): indexes per-lane queue
+    /// depths and the per-lane metrics arrays.
+    pub(crate) fn lane(self) -> usize {
         match self {
             Priority::Interactive => 0,
             Priority::Batch => 1,
@@ -141,6 +143,13 @@ impl<T: Admit> AdmissionQueue<T> {
 
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().total()
+    }
+
+    /// Current depth of each lane (`[interactive, batch]`) — the
+    /// `swis_queue_depth{lane=...}` gauges.
+    pub fn depths(&self) -> [usize; 2] {
+        let s = self.state.lock().unwrap();
+        [s.lanes[0].len(), s.lanes[1].len()]
     }
 
     pub fn is_empty(&self) -> bool {

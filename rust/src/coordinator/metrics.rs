@@ -12,6 +12,7 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::admission::Priority;
 use crate::util::stats::{Reservoir, Summary};
 
 /// Retained samples per latency stream. Exact percentiles up to this many
@@ -26,10 +27,11 @@ pub struct Metrics {
 struct Inner {
     requests: u64,
     batches: u64,
-    /// Requests dropped by deadline-based load shedding.
-    shed: u64,
-    /// Requests refused at admission (`try_submit` -> Busy).
-    rejected: u64,
+    /// Requests dropped by deadline-based load shedding, indexed by
+    /// [`Priority::lane`] (0 = interactive, 1 = batch).
+    shed: [u64; 2],
+    /// Requests refused at admission (`try_submit` -> Busy), per lane.
+    rejected: [u64; 2],
     /// Requests served at a lower precision tier than requested
     /// (degrade-don't-shed under queue pressure). These still count in
     /// `requests` — degradation is an accuracy event, not a failure.
@@ -51,8 +53,8 @@ impl Default for Metrics {
             inner: Mutex::new(Inner {
                 requests: 0,
                 batches: 0,
-                shed: 0,
-                rejected: 0,
+                shed: [0; 2],
+                rejected: [0; 2],
                 degraded: 0,
                 errors: 0,
                 panics: 0,
@@ -66,20 +68,36 @@ impl Default for Metrics {
     }
 }
 
-/// Point-in-time view.
+/// Point-in-time view. The doc comment on each field names its
+/// Prometheus series on the `--metrics-addr` exposition page (rendered
+/// by `obs::registry`).
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// `swis_requests_total` — requests that reached a backend batch.
     pub requests: u64,
+    /// `swis_batches_total` — batches dispatched.
     pub batches: u64,
+    /// Sum of `swis_shed_total{lane=...}` — deadline-shed requests.
     pub shed: u64,
+    /// Per-lane shed counts: `swis_shed_total{lane="interactive"|"batch"}`.
+    pub shed_by_lane: [u64; 2],
+    /// Sum of `swis_rejected_total{lane=...}` — Busy refusals at admission.
     pub rejected: u64,
-    /// Requests down-tiered to a cheaper precision under queue pressure.
+    /// Per-lane Busy refusals: `swis_rejected_total{lane=...}`.
+    pub rejected_by_lane: [u64; 2],
+    /// `swis_degraded_total` — requests down-tiered to a cheaper
+    /// precision under queue pressure.
     pub degraded: u64,
+    /// `swis_errors_total` — requests completed with a routed error.
     pub errors: u64,
+    /// `swis_panics_total` — worker panics contained by the pool.
     pub panics: u64,
+    /// `swis_mean_batch` gauge.
     pub mean_batch: f64,
+    /// Feeds `swis_queue_wait_us{quantile=...}`.
     pub queue_us: Summary,
     pub exec_us: Summary,
+    /// Feeds `swis_total_latency_us{quantile=...}`.
     pub total_us: Summary,
     pub p50_total_us: f64,
     pub p99_total_us: f64,
@@ -100,12 +118,12 @@ impl Metrics {
         }
     }
 
-    pub fn record_shed(&self, n: usize) {
-        self.inner.lock().unwrap().shed += n as u64;
+    pub fn record_shed(&self, pri: Priority, n: usize) {
+        self.inner.lock().unwrap().shed[pri.lane()] += n as u64;
     }
 
-    pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+    pub fn record_rejected(&self, pri: Priority) {
+        self.inner.lock().unwrap().rejected[pri.lane()] += 1;
     }
 
     pub fn record_degraded(&self, n: usize) {
@@ -126,8 +144,10 @@ impl Metrics {
         MetricsSnapshot {
             requests: m.requests,
             batches: m.batches,
-            shed: m.shed,
-            rejected: m.rejected,
+            shed: m.shed[0] + m.shed[1],
+            shed_by_lane: m.shed,
+            rejected: m.rejected[0] + m.rejected[1],
+            rejected_by_lane: m.rejected,
             degraded: m.degraded,
             errors: m.errors,
             panics: m.panics,
@@ -184,14 +204,27 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let m = Metrics::default();
-        m.record_shed(3);
-        m.record_rejected();
-        m.record_rejected();
+        m.record_shed(Priority::Batch, 3);
+        m.record_rejected(Priority::Interactive);
+        m.record_rejected(Priority::Batch);
         m.record_degraded(4);
         m.record_errors(5);
         m.record_panic();
         let s = m.snapshot();
         assert_eq!((s.shed, s.rejected, s.degraded, s.errors, s.panics), (3, 2, 4, 5, 1));
+    }
+
+    #[test]
+    fn lane_split_sums_to_totals() {
+        let m = Metrics::default();
+        m.record_shed(Priority::Interactive, 2);
+        m.record_shed(Priority::Batch, 5);
+        m.record_rejected(Priority::Batch);
+        let s = m.snapshot();
+        assert_eq!(s.shed_by_lane, [2, 5]);
+        assert_eq!(s.shed, 7);
+        assert_eq!(s.rejected_by_lane, [0, 1]);
+        assert_eq!(s.rejected, 1);
     }
 
     #[test]

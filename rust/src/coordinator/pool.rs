@@ -37,6 +37,8 @@ use super::metrics::Metrics;
 use super::server::{InferRequest, InferResponse};
 use super::variants::VariantSpec;
 use crate::error::{AdmissionReason, SwisError, SwisResult};
+use crate::obs;
+use crate::obs::trace::{RequestTrace, SpanKind, TraceId, TraceRing, TRACE_RING_CAP};
 use crate::runtime::{create_factory, Backend, BackendFactory, BackendKind};
 use crate::util::tensor::Tensor;
 
@@ -52,11 +54,20 @@ pub struct PoolConfig {
     pub policy: BatchPolicy,
     /// Admission queue capacity across both lanes.
     pub queue_depth: usize,
+    /// Request-trace sampling: every Nth minted [`TraceId`] carries a
+    /// span trace through the pool (0 disables). Only active while the
+    /// [`crate::obs`] level is `full`.
+    pub trace_sample: usize,
 }
 
 impl Default for PoolConfig {
     fn default() -> PoolConfig {
-        PoolConfig { workers: 1, policy: BatchPolicy::default(), queue_depth: DEFAULT_QUEUE_DEPTH }
+        PoolConfig {
+            workers: 1,
+            policy: BatchPolicy::default(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            trace_sample: 1,
+        }
     }
 }
 
@@ -82,6 +93,10 @@ struct Job {
     /// Admission rewrote `req.variant` down the precision ladder
     /// (degrade-don't-shed); surfaced on the response.
     degraded: bool,
+    /// Lane this job was admitted on (per-lane shed/reject accounting).
+    pri: Priority,
+    /// Sampled span trace (admission → terminal), when tracing is on.
+    trace: Option<RequestTrace>,
 }
 
 impl Admit for Job {
@@ -107,6 +122,11 @@ pub struct WorkerPool {
     /// down the ladder instead of letting them queue toward their shed
     /// deadline. `None` = never rewrite (the single-tier behavior).
     tiers: Option<TierPolicy>,
+    /// Every Nth minted trace id is sampled (0 = tracing off).
+    trace_sample: usize,
+    /// One bounded trace ring per worker — completed/shed traces land
+    /// here; [`WorkerPool::drain_traces`] collects them.
+    rings: Vec<Arc<TraceRing>>,
 }
 
 impl WorkerPool {
@@ -160,7 +180,10 @@ impl WorkerPool {
         let (ready_tx, ready_rx) =
             mpsc::channel::<Result<(&'static str, [usize; 3]), SwisError>>();
         let mut workers = Vec::with_capacity(cfg.workers);
+        let mut rings = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
+            let ring = Arc::new(TraceRing::new(TRACE_RING_CAP));
+            rings.push(Arc::clone(&ring));
             let (f, q, m, a, rt) = (
                 Arc::clone(&factory),
                 Arc::clone(&queue),
@@ -172,7 +195,7 @@ impl WorkerPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("swis-worker-{w}"))
-                    .spawn(move || worker_main(n_workers, f, q, policy, m, a, rt))
+                    .spawn(move || worker_main(n_workers, f, q, policy, m, a, rt, ring))
                     .map_err(|e| SwisError::backend(format!("spawning pool worker: {e}")))?,
             );
         }
@@ -209,6 +232,8 @@ impl WorkerPool {
             backend_name,
             image_len,
             tiers: factory.tier_policy(),
+            trace_sample: cfg.trace_sample,
+            rings,
         })
     }
 
@@ -238,6 +263,23 @@ impl WorkerPool {
         self.queue.len()
     }
 
+    /// Per-lane queue depths `[interactive, batch]` — the
+    /// `swis_queue_depth{lane=...}` gauges.
+    pub fn queue_depths(&self) -> [usize; 2] {
+        self.queue.depths()
+    }
+
+    /// Drain every worker's trace ring: completed, shed, and errored
+    /// sampled requests, oldest-first per worker. Rings are bounded
+    /// ([`TRACE_RING_CAP`] each), so under sustained load drain often.
+    pub fn drain_traces(&self) -> Vec<RequestTrace> {
+        let mut out = Vec::new();
+        for r in &self.rings {
+            out.extend(r.drain());
+        }
+        out
+    }
+
     /// Non-blocking admission: `Ok(Busy)` is backpressure (counted in
     /// metrics as rejected); `Err` is a typed hard fault — `Admission`
     /// with reason `Invalid` (bad request) or `Closed` (pool down).
@@ -248,7 +290,7 @@ impl WorkerPool {
         pri: Priority,
         deadline: Option<Duration>,
     ) -> SwisResult<Admission> {
-        let (job, rx) = self.make_job(req, deadline)?;
+        let (job, rx) = self.make_job(req, pri, deadline)?;
         let degraded = job.degraded;
         match self.queue.try_push(job, pri) {
             Ok(()) => {
@@ -258,7 +300,7 @@ impl WorkerPool {
                 Ok(Admission::Accepted(rx))
             }
             Err(SubmitError::Busy(_)) => {
-                self.metrics.record_rejected();
+                self.metrics.record_rejected(pri);
                 Ok(Admission::Busy)
             }
             Err(SubmitError::Closed(_)) => Err(SwisError::admission(
@@ -275,7 +317,7 @@ impl WorkerPool {
         pri: Priority,
         deadline: Option<Duration>,
     ) -> SwisResult<Ticket> {
-        let (job, rx) = self.make_job(req, deadline)?;
+        let (job, rx) = self.make_job(req, pri, deadline)?;
         let degraded = job.degraded;
         self.queue.push_wait(job, pri).map_err(|_| {
             SwisError::admission(AdmissionReason::Closed, "worker pool is shut down")
@@ -300,6 +342,7 @@ impl WorkerPool {
     fn make_job(
         &self,
         mut req: InferRequest,
+        pri: Priority,
         deadline: Option<Duration>,
     ) -> SwisResult<(Job, Ticket)> {
         if req.image.len() != self.image_len {
@@ -314,6 +357,17 @@ impl WorkerPool {
                 "no live workers in the pool",
             ));
         }
+        // Sampled request trace, minted at admission: the Enqueue span
+        // opens the timeline the queue/batch/compute attribution hangs
+        // off. Records the variant as REQUESTED; a degrade rewrite below
+        // is stamped on top.
+        let mut trace = if self.trace_sample > 0 && obs::tracing_on() {
+            let id = TraceId::mint();
+            (id.0 % self.trace_sample as u64 == 0)
+                .then(|| RequestTrace::begin(id, &req.variant))
+        } else {
+            None
+        };
         // Degrade-don't-shed: under queue pressure, rewrite the variant
         // down the precision ladder BEFORE enqueueing, so affinity
         // batching groups jobs by the variant that will actually run and
@@ -324,6 +378,9 @@ impl WorkerPool {
             let (eff, degraded) = policy.degrade(&req.variant, pressure);
             if degraded {
                 let eff = eff.to_string();
+                if let Some(t) = trace.as_mut() {
+                    t.degraded_to(&eff);
+                }
                 req.variant = eff;
             }
             degraded
@@ -332,7 +389,16 @@ impl WorkerPool {
         };
         let now = Instant::now();
         let (respond, rx) = mpsc::channel();
-        Ok((Job { req, respond, enqueued: now, deadline: deadline.map(|d| now + d), degraded }, rx))
+        let job = Job {
+            req,
+            respond,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            degraded,
+            pri,
+            trace,
+        };
+        Ok((job, rx))
     }
 
     /// Graceful shutdown: close admission, drain, join every worker.
@@ -366,6 +432,7 @@ impl Drop for AliveGuard {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     n_workers: usize,
     factory: Arc<dyn BackendFactory>,
@@ -374,6 +441,7 @@ fn worker_main(
     metrics: Arc<Metrics>,
     alive: Arc<AtomicUsize>,
     ready: Sender<Result<(&'static str, [usize; 3]), SwisError>>,
+    ring: Arc<TraceRing>,
 ) {
     // Warm-up on this thread: thread-affine backends (PJRT) must be
     // constructed where they execute. A panicking factory is reported as
@@ -397,12 +465,15 @@ fn worker_main(
     let mut shed: Vec<Job> = Vec::new();
     loop {
         let popped = queue.pop_seed(affinity.as_deref(), &mut shed);
-        flush_shed(&mut shed, &metrics);
-        let seed = match popped {
+        flush_shed(&mut shed, &metrics, &ring);
+        let mut seed = match popped {
             Popped::Job(j) => j,
             Popped::Shed => continue,
             Popped::Closed => return,
         };
+        if let Some(t) = seed.trace.as_mut() {
+            t.push(SpanKind::BatchOpen);
+        }
 
         // Assemble one same-variant batch under the policy: the seed
         // opens the wait window; top-up pops only this variant.
@@ -416,9 +487,14 @@ fn worker_main(
             }
             let until = Instant::now() + wait;
             let got = queue.pop_match(&variant, until, &mut shed);
-            flush_shed(&mut shed, &metrics);
+            flush_shed(&mut shed, &metrics, &ring);
             match got {
-                Some(j) => batch.push(j),
+                Some(mut j) => {
+                    if let Some(t) = j.trace.as_mut() {
+                        t.push(SpanKind::BatchOpen);
+                    }
+                    batch.push(j);
+                }
                 None => {
                     if Instant::now() >= until || queue.is_closed() {
                         break;
@@ -434,10 +510,15 @@ fn worker_main(
         // worker and the rest of the pool keep serving. `resolved`
         // counts the jobs dispatch already answered (ok/err/shed) so the
         // panic path charges errors only for the ones left dangling.
-        let jobs = batch.take();
+        let mut jobs = batch.take();
+        for j in jobs.iter_mut() {
+            if let Some(t) = j.trace.as_mut() {
+                t.push(SpanKind::BatchClose);
+            }
+        }
         let n = jobs.len();
         let resolved = AtomicUsize::new(0);
-        let run = || dispatch(jobs, backend.as_ref(), &metrics, &resolved);
+        let run = || dispatch(jobs, backend.as_ref(), &metrics, &resolved, &ring);
         if catch_unwind(AssertUnwindSafe(run)).is_err() {
             metrics.record_panic();
             metrics.record_errors(n - resolved.load(Ordering::SeqCst).min(n));
@@ -445,17 +526,24 @@ fn worker_main(
     }
 }
 
-fn flush_shed(shed: &mut Vec<Job>, metrics: &Metrics) {
-    if shed.is_empty() {
-        return;
+/// Count one shed job per lane and finish its trace (terminal `Shed`
+/// span straight into the worker's ring — a shed response carries no
+/// trace payload, the ring is its only record).
+fn shed_job(mut j: Job, metrics: &Metrics, ring: &TraceRing, why: &str) {
+    metrics.record_shed(j.pri, 1);
+    if let Some(mut t) = j.trace.take() {
+        t.push(SpanKind::Shed);
+        ring.push(t);
     }
-    metrics.record_shed(shed.len());
+    let _ = j.respond.send(Err(SwisError::admission(AdmissionReason::Shed, why)));
+}
+
+fn flush_shed(shed: &mut Vec<Job>, metrics: &Metrics, ring: &TraceRing) {
     for j in shed.drain(..) {
         let waited = j.enqueued.elapsed();
-        let _ = j.respond.send(Err(SwisError::admission(
-            AdmissionReason::Shed,
-            format!("deadline exceeded after {:.1} ms in queue", waited.as_secs_f64() * 1e3),
-        )));
+        let why =
+            format!("deadline exceeded after {:.1} ms in queue", waited.as_secs_f64() * 1e3);
+        shed_job(j, metrics, ring, &why);
     }
 }
 
@@ -463,14 +551,24 @@ fn flush_shed(shed: &mut Vec<Job>, metrics: &Metrics) {
 /// backend-planned chunks, then per-request delivery. Every job answered
 /// (ok, routed error, or shed) bumps `resolved`, so a mid-batch panic
 /// can tell the dangling jobs from the already-delivered ones.
-fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics, resolved: &AtomicUsize) {
+fn dispatch(
+    jobs: Vec<Job>,
+    backend: &dyn Backend,
+    metrics: &Metrics,
+    resolved: &AtomicUsize,
+    ring: &TraceRing,
+) {
     let Some(first) = jobs.first() else { return };
     let variant = first.req.variant.clone();
     debug_assert!(jobs.iter().all(|j| j.req.variant == variant), "mixed-variant batch");
     if !backend.has_variant(&variant) {
         metrics.record_errors(jobs.len());
         resolved.fetch_add(jobs.len(), Ordering::SeqCst);
-        for j in &jobs {
+        for mut j in jobs {
+            if let Some(mut t) = j.trace.take() {
+                t.push(SpanKind::Error);
+                ring.push(t);
+            }
             let _ = j
                 .respond
                 .send(Err(SwisError::backend(format!("unknown variant '{variant}'"))));
@@ -479,51 +577,66 @@ fn dispatch(jobs: Vec<Job>, backend: &dyn Backend, metrics: &Metrics, resolved: 
     }
     // shed anything that expired while the batch was assembling
     let now = Instant::now();
-    let (live, expired): (Vec<Job>, Vec<Job>) =
+    let (mut live, expired): (Vec<Job>, Vec<Job>) =
         jobs.into_iter().partition(|j| j.deadline.map_or(true, |d| d > now));
     if !expired.is_empty() {
-        metrics.record_shed(expired.len());
         resolved.fetch_add(expired.len(), Ordering::SeqCst);
-        for j in &expired {
-            let _ = j.respond.send(Err(SwisError::admission(
-                AdmissionReason::Shed,
-                "deadline exceeded before execution",
-            )));
+        for j in expired {
+            shed_job(j, metrics, ring, "deadline exceeded before execution");
         }
     }
     // execute in backend-planned chunks rather than padding the whole
     // group up to the largest compiled size (PJRT cost ~affine in batch;
     // the native backend takes the group in one dynamic chunk)
-    let group: Vec<&Job> = live.iter().collect();
     let mut start = 0usize;
-    for chunk in backend.plan_chunks(group.len()) {
-        let end = (start + chunk).min(group.len());
-        run_chunk(&group[start..end], &variant, backend, metrics);
+    for chunk in backend.plan_chunks(live.len()) {
+        let end = (start + chunk).min(live.len());
+        run_chunk(&mut live[start..end], &variant, backend, metrics, ring);
         resolved.fetch_add(end - start, Ordering::SeqCst);
         start = end;
     }
 }
 
+/// Finish a chunk's traces on an error path: terminal `Error` span into
+/// the ring, then the routed error to every caller.
+fn fail_chunk(group: &mut [Job], err: &SwisError, metrics: &Metrics, ring: &TraceRing) {
+    metrics.record_errors(group.len());
+    for j in group.iter_mut() {
+        if let Some(mut t) = j.trace.take() {
+            t.push(SpanKind::Error);
+            ring.push(t);
+        }
+        let _ = j.respond.send(Err(err.clone()));
+    }
+}
+
 /// Execute one chunk of same-variant jobs.
-fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Metrics) {
+fn run_chunk(
+    group: &mut [Job],
+    variant: &str,
+    backend: &dyn Backend,
+    metrics: &Metrics,
+    ring: &TraceRing,
+) {
     let t0 = Instant::now();
     let n = group.len();
     let s = backend.input_shape();
     let mut data = Vec::with_capacity(n * s[0] * s[1] * s[2]);
-    for j in group {
+    for j in group.iter() {
         data.extend_from_slice(&j.req.image);
     }
     let images = match Tensor::new(&[n, s[0], s[1], s[2]], data) {
         Ok(t) => t,
         Err(e) => {
-            metrics.record_errors(n);
-            let err = SwisError::backend_from(e);
-            for j in group {
-                let _ = j.respond.send(Err(err.clone()));
-            }
+            fail_chunk(group, &SwisError::backend_from(e), metrics, ring);
             return;
         }
     };
+    for j in group.iter_mut() {
+        if let Some(t) = j.trace.as_mut() {
+            t.push(SpanKind::InferStart);
+        }
+    }
     match backend.infer(variant, &images) {
         Ok(logits) => {
             let exec = t0.elapsed();
@@ -536,21 +649,28 @@ fn run_chunk(group: &[&Job], variant: &str, backend: &dyn Backend, metrics: &Met
             // record before delivery so a caller that has all its
             // responses also sees them reflected in the metrics
             metrics.record_batch(n, &queue_ts, exec, &total_ts);
-            for (i, j) in group.iter().enumerate() {
+            for (i, j) in group.iter_mut().enumerate() {
+                // finish the trace (a clone stays in the worker's ring;
+                // the original rides the response for per-request
+                // attribution by the caller)
+                let trace = j.trace.take().map(|mut t| {
+                    t.push(SpanKind::InferEnd);
+                    t.push(SpanKind::Done);
+                    ring.push(t.clone());
+                    t
+                });
                 let _ = j.respond.send(Ok(InferResponse {
                     logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
                     queue: queue_ts[i],
                     total: total_ts[i],
                     batch_size: n,
                     degraded: j.degraded,
+                    trace,
                 }));
             }
         }
         Err(e) => {
-            metrics.record_errors(n);
-            for j in group {
-                let _ = j.respond.send(Err(e.clone()));
-            }
+            fail_chunk(group, &e, metrics, ring);
         }
     }
 }

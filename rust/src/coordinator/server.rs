@@ -39,6 +39,10 @@ pub struct InferResponse {
     /// tier than it asked for (degrade-don't-shed under queue
     /// pressure; see [`super::TierPolicy`]).
     pub degraded: bool,
+    /// The sampled span trace, when this request was traced (pool
+    /// `trace_sample` > 0 and the obs level is `full`): queue wait,
+    /// batch assembly, and compute attribution for p99 analysis.
+    pub trace: Option<crate::obs::trace::RequestTrace>,
 }
 
 /// Handle to a running single-worker coordinator.
@@ -67,7 +71,12 @@ impl Coordinator {
         variants: Vec<VariantSpec>,
         backend: BackendKind,
     ) -> SwisResult<Coordinator> {
-        let cfg = PoolConfig { workers: 1, policy, queue_depth: DEFAULT_QUEUE_DEPTH };
+        let cfg = PoolConfig {
+            workers: 1,
+            policy,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            ..PoolConfig::default()
+        };
         let pool = WorkerPool::start(artifacts, cfg, variants, backend)
             .map_err(|e| e.context("coordinator failed to start"))?;
         let metrics = Arc::clone(&pool.metrics);

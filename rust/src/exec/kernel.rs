@@ -52,6 +52,7 @@ use super::core;
 use super::im2col::ConvGeom;
 use super::simd::{self, KernelVariant, TuneParams, MAX_SIMD_ACT};
 use crate::error::{SwisError, SwisResult};
+use crate::obs::{self, ExecTally};
 use crate::quant::int8::round_half_even;
 use crate::quant::PackedLayer;
 
@@ -118,6 +119,10 @@ pub struct PreparedGemm {
     /// Group `g`'s planes live at `planes[plane_ofs[g]..plane_ofs[g+1]]`.
     plane_ofs: Vec<u32>,
     planes: Vec<Plane>,
+    /// Planes dropped empty at prepare time, summed over every group —
+    /// the weight-bit-sparsity win the sparsity counters attribute per
+    /// walk of the full group range.
+    dropped_planes: u64,
     tune: TuneParams,
 }
 
@@ -128,7 +133,7 @@ pub struct PreparedGemm {
 /// bits are cleared so the plane walk stays in bounds and bit-identical
 /// to the gather-based oracles. Fails on group sizes beyond the bitmask
 /// width.
-fn prepare_planes(p: &PackedLayer) -> SwisResult<(Vec<u32>, Vec<Plane>)> {
+fn prepare_planes(p: &PackedLayer) -> SwisResult<(Vec<u32>, Vec<Plane>, u64)> {
     if p.group_size == 0 || p.group_size > MAX_GROUP_SIZE {
         return Err(SwisError::config(format!(
             "native kernel supports group sizes 1..={MAX_GROUP_SIZE}, got {}",
@@ -142,6 +147,7 @@ fn prepare_planes(p: &PackedLayer) -> SwisResult<(Vec<u32>, Vec<Plane>)> {
     let fan_in = p.fan_in();
     let mut plane_ofs = Vec::with_capacity(n_groups + 1);
     let mut planes = Vec::new();
+    let mut dropped = 0u64;
     plane_ofs.push(0u32);
     for g in 0..n_groups {
         // SWIS-C layers must keep the consecutive-window property the
@@ -172,11 +178,61 @@ fn prepare_planes(p: &PackedLayer) -> SwisResult<(Vec<u32>, Vec<Plane>)> {
             // empty planes contribute nothing: bit sparsity == less work
             if pos | neg != 0 {
                 planes.push(Plane { shift: p.shifts[g * p.n_shifts + j], pos, neg });
+            } else {
+                dropped += 1;
             }
         }
         plane_ofs.push(planes.len() as u32);
     }
-    Ok((plane_ofs, planes))
+    Ok((plane_ofs, planes, dropped))
+}
+
+/// Lanes the zero-lane fold screened out of one tile: per group, the
+/// valid (non-padding) lanes whose mask bit is clear.
+fn count_lanes_masked(masks: &[u16], ncols: usize, gs: usize) -> u64 {
+    let mut n = 0u64;
+    for (gl, &m) in masks.iter().enumerate() {
+        let valid = ncols.saturating_sub(gl * gs).min(gs) as u64;
+        n += valid - u64::from(m.count_ones()).min(valid);
+    }
+    n
+}
+
+/// Metadata-only replay of one masked walk over groups `[g0, g0+n)` of
+/// every filter: applies the exact skip predicate the compute loops use
+/// (`(pos | neg) & mask == 0`) to the prepared `Plane` structs — no
+/// activation data touched — and charges `reps` walks into `t`. Runs
+/// only when sparsity counters are on AND the tile actually masked, so
+/// the hot loops stay uninstrumented.
+#[allow(clippy::too_many_arguments)]
+fn count_plane_walk(
+    planes: &[Plane],
+    plane_ofs: &[u32],
+    k: usize,
+    gpf: usize,
+    g0: usize,
+    n: usize,
+    masks: &[u16],
+    reps: u64,
+    t: &mut ExecTally,
+) {
+    let (mut visited, mut skipped) = (0u64, 0u64);
+    for f in 0..k {
+        for (gl, &lm) in masks[..n].iter().enumerate() {
+            let g = f * gpf + g0 + gl;
+            let lo = plane_ofs[g] as usize;
+            let hi = plane_ofs[g + 1] as usize;
+            for pl in &planes[lo..hi] {
+                if ((pl.pos | pl.neg) & lm) == 0 {
+                    skipped += 1;
+                } else {
+                    visited += 1;
+                }
+            }
+        }
+    }
+    t.planes_visited += visited * reps;
+    t.planes_skipped_masked += skipped * reps;
 }
 
 impl PreparedGemm {
@@ -185,7 +241,7 @@ impl PreparedGemm {
     /// host's default [`TuneParams`]; [`PreparedGemm::set_tune`] installs
     /// swept parameters.
     pub fn from_packed(p: &PackedLayer) -> SwisResult<PreparedGemm> {
-        let (plane_ofs, planes) = prepare_planes(p)?;
+        let (plane_ofs, planes, dropped_planes) = prepare_planes(p)?;
         Ok(PreparedGemm {
             n_filters: p.n_filters(),
             fan_in: p.fan_in(),
@@ -194,6 +250,7 @@ impl PreparedGemm {
             scale: p.scale,
             plane_ofs,
             planes,
+            dropped_planes,
             tune: TuneParams::host_default(),
         })
     }
@@ -255,14 +312,31 @@ impl PreparedGemm {
             )));
         }
         let tune = self.effective_tune(acts);
+        // one relaxed atomic load per call; when counters are off the
+        // row cores take `None` and skip every accounting branch
+        let obs_on = obs::counters_on();
+        let tally = std::sync::Mutex::new(ExecTally::default());
         let mut out = vec![0i64; p_rows * self.n_filters];
         par_rows(&mut out, p_rows, self.n_filters, n_threads, |start, rows, slice| {
+            let mut t = if obs_on { Some(ExecTally::default()) } else { None };
             if tune.variant == KernelVariant::Scalar {
-                self.gemm_rows_scalar(acts, start, rows, slice, tune.act_mask);
+                self.gemm_rows_scalar(acts, start, rows, slice, tune.act_mask, t.as_mut());
             } else {
-                self.gemm_rows_blocked(acts, start, rows, slice, &tune);
+                self.gemm_rows_blocked(acts, start, rows, slice, &tune, t.as_mut());
+            }
+            if let Some(t) = t {
+                tally.lock().unwrap().add(&t);
             }
         });
+        if obs_on {
+            let mut t = tally.into_inner().unwrap();
+            t.dispatch[tune.variant.index()] += 1;
+            if tune.variant == KernelVariant::Scalar && self.tune.variant != KernelVariant::Scalar
+            {
+                t.scalar_demotions += 1;
+            }
+            obs::record_exec(&t);
+        }
         Ok(out)
     }
 
@@ -294,6 +368,12 @@ impl PreparedGemm {
     /// block). When `use_mask` is set, one scan per row block derives
     /// the per-group zero-lane masks (shared by all `k` filters, so the
     /// scan amortizes) and dead columns are skipped in the plane walk.
+    ///
+    /// Sparsity accounting (`tally`, `Some` only when counters are on)
+    /// never touches the compute loop: an unmasked block charges O(1)
+    /// from the prepared-plane totals, a masked block takes one
+    /// metadata pass over the `Plane` structs with the exact skip
+    /// predicate the walk uses.
     fn gemm_rows_scalar(
         &self,
         acts: &[i32],
@@ -301,6 +381,7 @@ impl PreparedGemm {
         rows: usize,
         out: &mut [i64],
         use_mask: bool,
+        mut tally: Option<&mut ExecTally>,
     ) {
         let k = self.n_filters;
         let fi = self.fan_in;
@@ -323,6 +404,19 @@ impl PreparedGemm {
                     }
                 }
                 masked = fold_zero_lane_masks(&nzc, fi, gs, &mut masks);
+            }
+            if let Some(t) = tally.as_deref_mut() {
+                t.tiles_total += 1;
+                // every filter walks its own groups once per block, so
+                // the full prepared-plane list is one block's walk
+                t.planes_dropped_empty += self.dropped_planes;
+                if masked {
+                    t.tiles_masked += 1;
+                    t.lanes_masked += count_lanes_masked(&masks, fi, gs);
+                    count_plane_walk(&self.planes, &self.plane_ofs, k, gpf, 0, gpf, &masks, 1, t);
+                } else {
+                    t.planes_visited += self.planes.len() as u64;
+                }
             }
             for f in 0..k {
                 let mut acc = [0i64; ROW_BLOCK];
@@ -392,6 +486,7 @@ impl PreparedGemm {
         rows: usize,
         out: &mut [i64],
         tune: &TuneParams,
+        mut tally: Option<&mut ExecTally>,
     ) {
         let k = self.n_filters;
         let fi = self.fan_in;
@@ -409,6 +504,12 @@ impl PreparedGemm {
         let mut r0 = 0usize;
         while r0 < rows {
             let rb = rbp.min(rows - r0);
+            // sub-tiles per row tile: every group's plane list is walked
+            // once per sub-tile by accumulate_tile
+            let n_sub = rb.div_ceil(w) as u64;
+            if let Some(t) = tally.as_deref_mut() {
+                t.planes_dropped_empty += self.dropped_planes * n_sub;
+            }
             obuf.fill(0);
             let mut g0 = 0usize;
             while g0 < gpf {
@@ -437,13 +538,39 @@ impl PreparedGemm {
                         }
                     }
                 }
-                let tmasks: &[u16] = if tune.act_mask
-                    && fold_zero_lane_masks(&nzc, ncols, gs, &mut masks[..gce])
-                {
+                let masked =
+                    tune.act_mask && fold_zero_lane_masks(&nzc, ncols, gs, &mut masks[..gce]);
+                let tmasks: &[u16] = if masked {
                     &masks[..gce]
                 } else {
                     &ones[..gce] // dense tile (or masking off): no-op mask
                 };
+                if let Some(t) = tally.as_deref_mut() {
+                    t.tiles_total += 1;
+                    if masked {
+                        t.tiles_masked += 1;
+                        t.lanes_masked += count_lanes_masked(&masks[..gce], ncols, gs);
+                        count_plane_walk(
+                            &self.planes,
+                            &self.plane_ofs,
+                            k,
+                            gpf,
+                            g0,
+                            gce,
+                            tmasks,
+                            n_sub,
+                            t,
+                        );
+                    } else {
+                        // unmasked chunk: O(k) from the plane offsets
+                        let mut walked = 0u64;
+                        for f in 0..k {
+                            let gb = f * gpf + g0;
+                            walked += (self.plane_ofs[gb + gce] - self.plane_ofs[gb]) as u64;
+                        }
+                        t.planes_visited += walked * n_sub;
+                    }
+                }
                 for f in 0..k {
                     let g_base = f * gpf + g0;
                     let mut sub = 0usize;
@@ -646,13 +773,15 @@ pub struct PreparedDepthwise {
     pub scale: f64,
     plane_ofs: Vec<u32>,
     planes: Vec<Plane>,
+    /// Planes dropped empty at prepare time (see [`PreparedGemm`]).
+    dropped_planes: u64,
     tune: TuneParams,
 }
 
 impl PreparedDepthwise {
     /// Prepare a `(channels, k*k)` filters-first packed layer.
     pub fn from_packed(p: &PackedLayer) -> SwisResult<PreparedDepthwise> {
-        let (plane_ofs, planes) = prepare_planes(p)?;
+        let (plane_ofs, planes, dropped_planes) = prepare_planes(p)?;
         Ok(PreparedDepthwise {
             channels: p.n_filters(),
             kk: p.fan_in(),
@@ -661,6 +790,7 @@ impl PreparedDepthwise {
             scale: p.scale,
             plane_ofs,
             planes,
+            dropped_planes,
             tune: TuneParams::host_default(),
         })
     }
@@ -721,20 +851,42 @@ impl PreparedDepthwise {
         }
         let variant = if simd::force_scalar() { KernelVariant::Scalar } else { self.tune.variant };
         let use_mask = self.tune.act_mask;
+        let obs_on = obs::counters_on();
+        let tally = std::sync::Mutex::new(ExecTally::default());
         let o = g.out_hw;
         let rows = batch * o * o;
         let mut out = vec![0f32; rows * c];
         par_rows(&mut out, rows, c, n_threads, |start, nrows, slice| {
+            let mut t = if obs_on { Some(ExecTally::default()) } else { None };
             if variant == KernelVariant::Scalar {
-                self.forward_rows_scalar(x, g, start, nrows, slice, use_mask);
+                self.forward_rows_scalar(x, g, start, nrows, slice, use_mask, t.as_mut());
             } else {
-                self.forward_rows_blocked(x, g, start, nrows, slice, variant, use_mask);
+                self.forward_rows_blocked(x, g, start, nrows, slice, variant, use_mask, t.as_mut());
+            }
+            if let Some(t) = t {
+                tally.lock().unwrap().add(&t);
             }
         });
+        if obs_on {
+            let mut t = tally.into_inner().unwrap();
+            t.dispatch[variant.index()] += 1;
+            if variant == KernelVariant::Scalar && self.tune.variant != KernelVariant::Scalar {
+                t.scalar_demotions += 1;
+            }
+            obs::record_exec(&t);
+        }
         Ok(out)
     }
 
     /// Scalar single-thread core over output pixels `[start, start+nrows)`.
+    ///
+    /// Sparsity accounting here is a coarse approximation: [`Self::dot`]
+    /// derives its zero-tap mask per (pixel, channel) inside the hot
+    /// loop, so this path charges every prepared plane as visited (one
+    /// full walk per pixel) and reports no masked-plane split — the
+    /// blocked core is the accounted path. Dispatch counts and
+    /// prepare-time dropped planes stay exact.
+    #[allow(clippy::too_many_arguments)]
     fn forward_rows_scalar(
         &self,
         x: &[f32],
@@ -743,12 +895,18 @@ impl PreparedDepthwise {
         nrows: usize,
         slice: &mut [f32],
         use_mask: bool,
+        tally: Option<&mut ExecTally>,
     ) {
         let c = self.channels;
         let o = g.out_hw;
         let mut taps = vec![0f32; self.kk];
         let mut codes = vec![0i32; self.kk];
         let img_len = g.in_hw * g.in_hw * c;
+        if let Some(t) = tally {
+            t.tiles_total += nrows as u64;
+            t.planes_visited += self.planes.len() as u64 * nrows as u64;
+            t.planes_dropped_empty += self.dropped_planes * nrows as u64;
+        }
         for r in 0..nrows {
             let pix = start + r;
             let b = pix / (o * o);
@@ -781,6 +939,7 @@ impl PreparedDepthwise {
         slice: &mut [f32],
         variant: KernelVariant,
         use_mask: bool,
+        mut tally: Option<&mut ExecTally>,
     ) {
         let c = self.channels;
         let o = g.out_hw;
@@ -797,6 +956,10 @@ impl PreparedDepthwise {
         let mut nzc = vec![0i32; self.kk];
         let mut masks = vec![0xFFFFu16; gpf];
         let ones = vec![0xFFFFu16; gpf];
+        if let Some(t) = tally.as_deref_mut() {
+            // every pixel tile walks every channel's group range once
+            t.planes_dropped_empty += self.dropped_planes * nrows.div_ceil(w) as u64;
+        }
         let mut t0 = 0usize;
         while t0 < nrows {
             let tb = w.min(nrows - t0);
@@ -828,13 +991,31 @@ impl PreparedDepthwise {
                         }
                     }
                 }
-                let tmasks: &[u16] = if use_mask
-                    && fold_zero_lane_masks(&nzc, self.kk, gs, &mut masks)
-                {
-                    &masks
-                } else {
-                    &ones
-                };
+                let masked = use_mask && fold_zero_lane_masks(&nzc, self.kk, gs, &mut masks);
+                let tmasks: &[u16] = if masked { &masks } else { &ones };
+                if let Some(t) = tally.as_deref_mut() {
+                    t.tiles_total += 1;
+                    let gb = ch * gpf;
+                    if masked {
+                        t.tiles_masked += 1;
+                        t.lanes_masked += count_lanes_masked(&masks, self.kk, gs);
+                        // one "filter" (this channel) walks its groups once
+                        count_plane_walk(
+                            &self.planes,
+                            &self.plane_ofs,
+                            1,
+                            gpf,
+                            gb,
+                            gpf,
+                            tmasks,
+                            1,
+                            t,
+                        );
+                    } else {
+                        t.planes_visited +=
+                            (self.plane_ofs[gb + gpf] - self.plane_ofs[gb]) as u64;
+                    }
+                }
                 let mut acc = [0i64; simd::MAX_ROW_BLOCK];
                 simd::accumulate_tile(
                     variant,
@@ -1278,6 +1459,102 @@ mod tests {
             dense_depthwise(&w, c, &x, 1, &g, 1).unwrap(),
             dense_depthwise(&w, c, &x, 1, &g, 4).unwrap()
         );
+    }
+
+    fn sparsify(acts: &mut [i32]) {
+        // zero 3 of every 4 columns so the zero-lane fold engages
+        for (i, a) in acts.iter_mut().enumerate() {
+            if i % 4 != 0 {
+                *a = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_counters_reconcile_on_the_scalar_path() {
+        let _g = crate::obs::test_level_guard();
+        crate::obs::set_level(crate::obs::ObsLevel::Counters);
+        let (p, mut acts, rows) = setup(31, 8, 32, 3, 4, false);
+        sparsify(&mut acts);
+        let mut prep = PreparedGemm::from_packed(&p).unwrap();
+        let mut tp = TuneParams::host_default();
+        tp.variant = KernelVariant::Scalar;
+        prep.set_tune(tp);
+        let before = obs::current();
+        let out = prep.gemm(&acts, rows, 1).unwrap();
+        let d = obs::current().diff(&before);
+        crate::obs::set_level(crate::obs::ObsLevel::Off);
+        // accounting must never perturb results
+        assert_eq!(out, naive_gemm(&p, &acts, rows).unwrap());
+        // every row block walks the full plane list (+ the prepare-dropped
+        // planes it never sees): visited + masked + dropped reconciles
+        let blocks = rows.div_ceil(ROW_BLOCK) as u64;
+        assert_eq!(d.planes_total(), blocks * (prep.planes.len() as u64 + prep.dropped_planes));
+        assert!(d.lanes_masked > 0, "sparse acts must mask lanes: {d:?}");
+        assert!(d.planes_skipped_masked > 0, "sparse acts must skip planes: {d:?}");
+        assert_eq!(d.tiles_total, blocks);
+        assert_eq!(d.tiles_masked, blocks);
+        assert_eq!(d.dispatch[KernelVariant::Scalar.index()], 1);
+        assert_eq!(d.scalar_demotions, 0);
+    }
+
+    #[test]
+    fn sparsity_counters_reconcile_on_the_blocked_path() {
+        if simd::force_scalar() {
+            return; // env forces the scalar walk; nothing blocked to count
+        }
+        let _g = crate::obs::test_level_guard();
+        crate::obs::set_level(crate::obs::ObsLevel::Counters);
+        let (p, mut acts, rows) = setup(32, 8, 32, 3, 4, false);
+        sparsify(&mut acts);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let tune = prep.effective_tune(&acts);
+        assert_ne!(tune.variant, KernelVariant::Scalar);
+        let before = obs::current();
+        let out = prep.gemm(&acts, rows, 1).unwrap();
+        let d = obs::current().diff(&before);
+        crate::obs::set_level(crate::obs::ObsLevel::Off);
+        assert_eq!(out, naive_gemm(&p, &acts, rows).unwrap());
+        // per row tile every group's plane list is walked once per
+        // sub-tile, so the reconciliation scales by the sub-tile count
+        let w = tune.variant.width();
+        let rbp = tune.row_block.max(w);
+        let mut walks = 0u64;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = rbp.min(rows - r0);
+            walks += rb.div_ceil(w) as u64;
+            r0 += rb;
+        }
+        assert_eq!(d.planes_total(), walks * (prep.planes.len() as u64 + prep.dropped_planes));
+        assert!(d.lanes_masked > 0, "sparse acts must mask lanes: {d:?}");
+        assert_eq!(d.dispatch[tune.variant.index()], 1);
+    }
+
+    #[test]
+    fn counters_off_records_nothing() {
+        let _g = crate::obs::test_level_guard();
+        crate::obs::set_level(crate::obs::ObsLevel::Off);
+        let (p, acts, rows) = setup(33, 6, 24, 3, 4, false);
+        let prep = PreparedGemm::from_packed(&p).unwrap();
+        let before = obs::current();
+        prep.gemm(&acts, rows, 2).unwrap();
+        assert_eq!(obs::current().diff(&before), ExecTally::default());
+    }
+
+    #[test]
+    fn depthwise_counters_record_dispatch_and_planes() {
+        let _g = crate::obs::test_level_guard();
+        crate::obs::set_level(crate::obs::ObsLevel::Counters);
+        let (p, x, g) = dw_setup(34, 8, 3, 4, false);
+        let prep = PreparedDepthwise::from_packed(&p).unwrap();
+        let before = obs::current();
+        let out = prep.forward(&x, 2, &g, 1).unwrap();
+        let d = obs::current().diff(&before);
+        crate::obs::set_level(crate::obs::ObsLevel::Off);
+        assert_eq!(out, naive_depthwise(&p, &x, 2, &g).unwrap());
+        assert!(d.planes_visited > 0);
+        assert_eq!(d.dispatch.iter().sum::<u64>(), 1);
     }
 
     #[test]

@@ -438,8 +438,14 @@ impl NativeModel {
         if let Some(u) = uses.last_mut() {
             *u += 1; // the graph output itself
         }
+        // layer-scoped sparsity accounting: each node's kernel tallies
+        // (recorded on this thread after the scoped-thread join inside
+        // the kernels) are diffed per node and labelled with the layer
+        // name. No-ops entirely when the obs level is Off.
+        crate::obs::forward_begin();
         let mut vals: Vec<Option<Vec<f32>>> = (0..nodes.len()).map(|_| None).collect();
         for (ni, node) in nodes.iter().enumerate() {
+            let lt = crate::obs::layer_begin();
             let y = {
                 let (x, in_shape): (&[f32], ValShape) = match node.src {
                     Src::Input => (images.data(), self.graph.input),
@@ -451,6 +457,7 @@ impl NativeModel {
                 self.eval_node(ni, node, x, in_shape, images.data(), &vals, batch, threads)
                     .with_context(|| format!("node '{}'", self.labels[ni]))?
             };
+            crate::obs::layer_end(lt, &self.labels[ni]);
             if let Some(obs) = observe.as_mut() {
                 obs(&self.labels[ni], &y);
             }

@@ -141,6 +141,30 @@ impl KernelVariant {
         }
     }
 
+    /// Dense index into per-variant counter arrays
+    /// (`crate::obs::N_VARIANTS` entries, same order as the enum).
+    pub fn index(self) -> usize {
+        match self {
+            KernelVariant::Scalar => 0,
+            KernelVariant::Portable => 1,
+            KernelVariant::Avx2 => 2,
+            KernelVariant::Avx2Wide => 3,
+            KernelVariant::Neon => 4,
+        }
+    }
+
+    /// Inverse of [`KernelVariant::index`], for rendering counter arrays.
+    pub fn from_index(i: usize) -> Option<KernelVariant> {
+        Some(match i {
+            0 => KernelVariant::Scalar,
+            1 => KernelVariant::Portable,
+            2 => KernelVariant::Avx2,
+            3 => KernelVariant::Avx2Wide,
+            4 => KernelVariant::Neon,
+            _ => return None,
+        })
+    }
+
     /// Container tag byte (`.swisplan` TuneParams section).
     pub fn tag(self) -> u8 {
         match self {

@@ -146,6 +146,38 @@
 //! | 0 | full requested precision (e.g. `swis@4`) | the request's own variant |
 //! | 1..floor-1 | intermediate shift counts | queue pressure ≥ 50% / 80% |
 //! | floor | deepest tier with MSE ratio ≤ the `--tier-cap` | overload ceiling; never exceeded |
+//!
+//! ## Observability — sparsity accounting, request tracing, metrics export
+//!
+//! The [`obs`] module makes the paper's "work removed" claim observable
+//! at runtime, gated on a process [`obs::ObsLevel`] knob (CLI `--obs
+//! off|counters|full`, env `SWIS_OBS`; default `off` costs one relaxed
+//! atomic load per kernel *call*):
+//!
+//! * **Kernel sparsity counters** ([`obs::ExecTally`]): shift planes
+//!   visited vs. dropped-empty at prepare time (weight bit sparsity) vs.
+//!   skipped by the activation zero-lane mask, lanes masked, SIMD
+//!   dispatch counts and scalar demotions — counted from plane metadata
+//!   with the kernels' exact skip predicate, never inside a SIMD inner
+//!   loop, and reconciled in kernel unit tests
+//!   (`visited + skipped + dropped == walks x plane slots`).
+//! * **Per-layer attribution**: `exec::model` brackets every graph node;
+//!   [`api::Session::last_stats`] returns the last forward's per-layer
+//!   breakdown, and a process-lifetime registry
+//!   ([`obs::global_layers`]) feeds the exporters.
+//! * **Request tracing** ([`obs::trace`]): at `full`, sampled requests
+//!   carry span-stamped [`obs::trace::RequestTrace`]s through the pool
+//!   (enqueue → degrade/shed → batch open/close → infer start/end →
+//!   done/error), land in bounded per-worker rings, and ride
+//!   `InferResponse` so `swis loadgen --trace-sample N` can decompose
+//!   p99 into queue wait vs. batch assembly vs. compute
+//!   (`BENCH_observability.json`).
+//! * **Export** ([`obs::registry`], [`obs::http`]): `swis serve
+//!   --metrics-addr HOST:PORT` serves Prometheus text exposition
+//!   (`swis_planes_skipped_total{layer=...}`,
+//!   `swis_lanes_masked_total{layer=...}`, per-lane
+//!   `swis_shed_total{lane=...}`, queue-depth gauges, latency quantiles)
+//!   over a std `TcpListener` — no HTTP dependency.
 
 pub mod analysis;
 pub mod api;
@@ -156,6 +188,7 @@ pub mod eval;
 pub mod exec;
 pub mod loadgen;
 pub mod nets;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

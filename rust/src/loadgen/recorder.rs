@@ -64,12 +64,13 @@ impl Recorder {
     }
 
     /// Fold another recorder (closed-loop per-client recorders merge
-    /// into one trial view; the latency sample is re-offered to this
-    /// reservoir, keeping memory bounded).
+    /// into one trial view). The latency reservoirs merge with
+    /// mass-weighted semantics ([`Reservoir::merge`]), so a client that
+    /// saw 10x the traffic contributes ~10x the retained sample —
+    /// re-offering the other buffer element by element would instead
+    /// weight every client by its buffer length.
     pub fn merge(&mut self, other: &Recorder) {
-        for &x in other.lat_us.as_slice() {
-            self.lat_us.push(x);
-        }
+        self.lat_us.merge(&other.lat_us);
         self.ok += other.ok;
         self.degraded += other.degraded;
         self.shed += other.shed;

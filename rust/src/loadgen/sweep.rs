@@ -91,6 +91,10 @@ pub struct SweepConfig {
     /// Probe-input generator (dense = adversarial worst case for
     /// activation sparsity; sparse = ReLU-realistic).
     pub probe: ProbeMode,
+    /// Request-trace sampling passed to every pool (every Nth request;
+    /// 0 = off). Traces also require the obs level to be `full` — the
+    /// CLI's `--trace-sample N` raises it.
+    pub trace_sample: usize,
 }
 
 impl Default for SweepConfig {
@@ -106,6 +110,7 @@ impl Default for SweepConfig {
             variants: vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4)],
             seed: 2026,
             probe: ProbeMode::Dense,
+            trace_sample: 0,
         }
     }
 }
@@ -123,10 +128,17 @@ pub struct SweepPoint {
     /// Pool-side counters for the same trial.
     pub shed: u64,
     pub rejected: u64,
+    /// Shed split `[interactive, batch]` — which lane paid the SLO.
+    pub shed_by_lane: [u64; 2],
+    /// Busy-refusal split `[interactive, batch]`.
+    pub rejected_by_lane: [u64; 2],
     /// Requests the pool down-tiered under queue pressure
     /// (degrade-don't-shed; 0 unless the plan carries a tier ladder).
     pub degraded: u64,
     pub mean_batch: f64,
+    /// Sampled request traces drained from the pool after the trial
+    /// (empty unless `trace_sample` > 0 and the obs level is `full`).
+    pub traces: Vec<crate::obs::trace::RequestTrace>,
 }
 
 /// Resolve one factory, then run every grid point on its own fresh
@@ -165,6 +177,7 @@ pub fn run_sweep_with(
                         workers,
                         policy: BatchPolicy { max_batch: cfg.max_batch, max_wait },
                         queue_depth: cfg.queue_depth,
+                        trace_sample: cfg.trace_sample,
                     },
                 )?;
                 if images.is_empty() {
@@ -180,6 +193,7 @@ pub fn run_sweep_with(
                     }
                 };
                 let snap = pool.metrics.snapshot();
+                let traces = pool.drain_traces();
                 out.push(SweepPoint {
                     workers,
                     arrival: arrival.label(),
@@ -188,8 +202,11 @@ pub fn run_sweep_with(
                     stats,
                     shed: snap.shed,
                     rejected: snap.rejected,
+                    shed_by_lane: snap.shed_by_lane,
+                    rejected_by_lane: snap.rejected_by_lane,
                     degraded: snap.degraded,
                     mean_batch: snap.mean_batch,
+                    traces,
                 });
                 pool.shutdown()?;
             }
@@ -390,6 +407,10 @@ pub fn sweep_json(points: &[SweepPoint], cfg: &SweepConfig, backend: &str) -> Js
             j.set("ok", p.stats.ok);
             j.set("shed", p.shed);
             j.set("busy", p.rejected);
+            j.set("shed_interactive", p.shed_by_lane[0]);
+            j.set("shed_batch", p.shed_by_lane[1]);
+            j.set("busy_interactive", p.rejected_by_lane[0]);
+            j.set("busy_batch", p.rejected_by_lane[1]);
             j.set("degraded", p.degraded);
             j.set("timeout", p.stats.timeout);
             j.set("error", p.stats.error);
@@ -430,6 +451,7 @@ mod tests {
             variants: vec![VariantSpec::swis(3.0, 4)],
             seed: 11,
             probe: ProbeMode::Dense,
+            trace_sample: 0,
         }
     }
 
@@ -454,6 +476,10 @@ mod tests {
             "p99_us",
             "shed",
             "busy",
+            "shed_interactive",
+            "shed_batch",
+            "busy_interactive",
+            "busy_batch",
             "degraded",
         ] {
             assert!(

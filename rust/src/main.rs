@@ -60,7 +60,7 @@ const VALUE_KEYS: &[&str] = &[
     "requests", "variants", "max-batch", "max-wait-ms", "seed", "save", "backend",
     "workers", "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms",
     "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads", "plan", "o",
-    "reps", "probe", "tier-cap",
+    "reps", "probe", "tier-cap", "metrics-addr", "obs", "trace-sample",
 ];
 
 fn main() {
@@ -73,6 +73,11 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = cli::parse(argv, VALUE_KEYS)?;
+    // observability level: --obs off|counters|full beats SWIS_OBS
+    match args.get("obs") {
+        Some(l) => swis::obs::set_level(swis::obs::ObsLevel::parse(l)?),
+        None => swis::obs::init_from_env(),
+    }
     match args.subcommand() {
         Some("quantize") => cmd_quantize(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -103,10 +108,13 @@ fn print_usage() {
          --tiers [--tier-cap X] embeds a measured precision ladder for \
          degrade-don't-shed serving)\n\
          serve:   --net NAME | --plan FILE.swisplan --workers N --queue-depth D \
-         --priority interactive|batch --rate R (open-loop pacing, 0 = burst)\n\
+         --priority interactive|batch --rate R (open-loop pacing, 0 = burst) \
+         [--metrics-addr H:P exposes Prometheus text; --trace-sample N; \
+         --obs off|counters|full (or SWIS_OBS)]\n\
          loadgen: --workers 1,2,4 --rates 150,300 --max-waits-ms 2 \
          --duration-ms 400 --deadline-ms 100 --mode open|closed|both \
-         --probe dense|sparse [--plan FILE]\n\
+         --probe dense|sparse [--plan FILE] [--trace-sample N also emits \
+         BENCH_observability.json]\n\
          eval:    --nets a,b --schemes swis,swis_c,wgt_trunc --bits 2,3,4 \
          --batch B --group G --seed S --out PATH [--plan FILE]\n\
          tune:    --plan in.swisplan | --net NAME [--scheme S --shifts N] \
@@ -315,7 +323,25 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let deadline_ms = args.get_usize("deadline-ms", 0)?;
     let deadline =
         if deadline_ms == 0 { None } else { Some(Duration::from_millis(deadline_ms as u64)) };
-    let cfg = PoolConfig { workers, policy, queue_depth };
+    // --trace-sample N traces every Nth request; it implies the full obs
+    // level (tracing is inert below it)
+    let trace_sample = args.get_usize("trace-sample", 0)?;
+    if trace_sample > 0 && !swis::obs::tracing_on() {
+        swis::obs::set_level(swis::obs::ObsLevel::Full);
+    }
+    let cfg = PoolConfig { workers, policy, queue_depth, trace_sample: trace_sample.max(1) };
+
+    // --metrics-addr HOST:PORT exposes the live Prometheus endpoint for
+    // the lifetime of the serve run
+    let metrics_export = match args.get("metrics-addr") {
+        Some(addr) => {
+            let registry = swis::obs::registry::MetricsRegistry::new();
+            let server = swis::obs::http::MetricsServer::serve(addr, registry.clone())?;
+            println!("metrics          : http://{}/ (Prometheus text)", server.addr());
+            Some((server, registry))
+        }
+        None => None,
+    };
 
     // --plan warms the pool from a prepared .swisplan artifact: the
     // offline step already ran, so worker start-up performs ZERO
@@ -363,6 +389,11 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         let image: Vec<f32> = (0..per).map(|_| rng.f64() as f32).collect();
         let variant = names[i % names.len()].clone();
         rxs.push(pool.submit(InferRequest { image, variant }, priority, deadline)?);
+        // keep the exported snapshot current while the load runs, so a
+        // scrape mid-run sees live counters and queue depths
+        if let Some((_, registry)) = &metrics_export {
+            registry.update_pool(pool.metrics.snapshot(), pool.queue_depths());
+        }
         if rate > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(exp_gap(&mut rng, rate)));
         }
@@ -375,6 +406,9 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             Err(e) if e.is_shed() => shed += 1,
             Err(_) => {}
         }
+        if let Some((_, registry)) = &metrics_export {
+            registry.update_pool(pool.metrics.snapshot(), pool.queue_depths());
+        }
     }
     let wall = t0.elapsed();
     let snap = pool.metrics.snapshot();
@@ -384,6 +418,24 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     println!("shed / rejected  : {shed} / {}", snap.rejected);
     println!("queue p50        : {:.0} us", snap.queue_us.p50);
     println!("total p50 / p99  : {:.0} / {:.0} us", snap.p50_total_us, snap.p99_total_us);
+    if trace_sample > 0 {
+        let traces = pool.drain_traces();
+        let mean_q = traces.iter().map(|t| t.queue_us() as f64).sum::<f64>()
+            / traces.len().max(1) as f64;
+        let mean_c = traces.iter().map(|t| t.compute_us() as f64).sum::<f64>()
+            / traces.len().max(1) as f64;
+        println!(
+            "traces           : {} sampled (1/{trace_sample}) — mean queue {:.0} us, \
+             mean compute {:.0} us",
+            traces.len(),
+            mean_q,
+            mean_c
+        );
+    }
+    if let Some((server, registry)) = metrics_export {
+        registry.update_pool(pool.metrics.snapshot(), pool.queue_depths());
+        server.stop();
+    }
     pool.shutdown()?;
     Ok(())
 }
@@ -423,6 +475,12 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
         bail!("--mode expects open|closed|both (got '{mode}')");
     }
     let deadline_ms = args.get_f64("deadline-ms", 100.0)?;
+    // --trace-sample N samples every Nth request's span trace into
+    // BENCH_observability.json; implies the full obs level
+    let trace_sample = args.get_usize("trace-sample", 0)?;
+    if trace_sample > 0 && !swis::obs::tracing_on() {
+        swis::obs::set_level(swis::obs::ObsLevel::Full);
+    }
     let cfg = SweepConfig {
         workers,
         arrivals,
@@ -442,6 +500,7 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
         variants,
         seed: args.get_usize("seed", 2026)? as u64,
         probe: ProbeMode::parse(args.get_or("probe", "dense"))?,
+        trace_sample,
     };
 
     println!(
@@ -496,6 +555,28 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
     let out = args.get("out").map(std::path::PathBuf::from).unwrap_or(default_out);
     write_bench_json(&points, &cfg, served_on, &out)?;
     println!("wrote {}", out.display());
+    if trace_sample > 0 {
+        // per-layer kernel sparsity accounting + span-trace latency
+        // decomposition, from the same run that produced the sweep
+        let traces: Vec<_> = points.iter().flat_map(|p| p.traces.iter().cloned()).collect();
+        let mut j =
+            swis::obs::registry::observability_json(&swis::obs::global_layers(), &traces);
+        j.set("backend", served_on);
+        j.set("probe", cfg.probe.as_str());
+        j.set("trace_sample", trace_sample as u64);
+        let obs_out = match args.get("out") {
+            // an explicit --out relocates the trace record beside it
+            Some(_) => out.with_file_name(format!(
+                "{}_observability.json",
+                out.file_stem().and_then(|s| s.to_str()).unwrap_or("BENCH")
+            )),
+            None => Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("..")
+                .join("BENCH_observability.json"),
+        };
+        swis::util::bench::Emitter::at(&obs_out).write(&j)?;
+        println!("wrote {} ({} traces)", obs_out.display(), traces.len());
+    }
     Ok(())
 }
 
@@ -760,6 +841,13 @@ mod tests {
         xs.iter().map(|s| s.to_string()).collect()
     }
 
+    /// Tests that raise the process-global obs level serialize here, so
+    /// one test's restore-to-Off can't land mid-run in another.
+    fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
+        static G: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        G.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     #[test]
     fn quantize_and_simulate_run() {
         run(&sv(&["quantize", "--net", "tinycnn", "--shifts", "3"])).unwrap();
@@ -867,6 +955,49 @@ mod tests {
         assert_eq!(j.get("probe").unwrap().as_str(), Some("sparse"));
         assert!(j.path(&["records", "0", "degraded"]).is_some());
         for f in [&plan_out, &lg_out] {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+
+    #[test]
+    fn serve_exports_metrics_and_traces() {
+        let _g = obs_guard();
+        // ephemeral port: the endpoint must bind, serve the exposition
+        // page during the run, and the driver must drain traces
+        run(&sv(&[
+            "serve", "--requests", "8", "--variants", "swis@2", "--max-wait-ms", "1",
+            "--metrics-addr", "127.0.0.1:0", "--trace-sample", "1", "--obs", "full",
+        ]))
+        .unwrap();
+        swis::obs::set_level(swis::obs::ObsLevel::Off);
+    }
+
+    #[test]
+    fn loadgen_trace_sample_emits_observability_json() {
+        let _g = obs_guard();
+        let pid = std::process::id();
+        let out = std::env::temp_dir().join(format!("swis_lg_obs_{pid}.json"));
+        run(&sv(&[
+            "loadgen", "--workers", "1", "--rates", "150", "--duration-ms", "80",
+            "--variants", "swis@2", "--backend", "native", "--deadline-ms", "5000",
+            "--probe", "sparse", "--trace-sample", "1", "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        swis::obs::set_level(swis::obs::ObsLevel::Off);
+        let obs_out = out.with_file_name(format!(
+            "{}_observability.json",
+            out.file_stem().and_then(|s| s.to_str()).unwrap()
+        ));
+        let j = swis::util::json::parse(&std::fs::read_to_string(&obs_out).unwrap()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("observability"));
+        // the sweep ran real kernels with counters on: the per-layer
+        // accounting and the trace decomposition must both be populated
+        assert!(j.path(&["layers", "0", "planes_total"]).is_some(), "no layer accounting");
+        let sampled = j.path(&["traces", "sampled"]).unwrap().as_f64().unwrap();
+        assert!(sampled > 0.0, "no traces sampled");
+        let q = j.path(&["traces", "decomposition", "queue_wait_us_mean"]).unwrap();
+        assert!(q.as_f64().unwrap() >= 0.0);
+        for f in [&out, &obs_out] {
             let _ = std::fs::remove_file(f);
         }
     }

@@ -1,0 +1,143 @@
+//! Minimal blocking metrics endpoint on a std [`TcpListener`] — no HTTP
+//! dependency. One responder thread accepts connections, reads the
+//! request head, and answers every `GET` with the registry's Prometheus
+//! exposition page (`Content-Type: text/plain; version=0.0.4`). Good for
+//! a scrape target; deliberately not a general web server.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::MetricsRegistry;
+use crate::error::{SwisError, SwisResult};
+
+/// Poll interval of the non-blocking accept loop (also the shutdown
+/// latency bound).
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+
+/// Handle to a running metrics endpoint.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port 0 picks a free port) and
+    /// serve `registry` until [`MetricsServer::stop`] or drop.
+    pub fn serve(addr: &str, registry: MetricsRegistry) -> SwisResult<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| SwisError::config(format!("metrics endpoint bind {addr}: {e}")))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| SwisError::config(format!("metrics endpoint addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| SwisError::config(format!("metrics endpoint nonblocking: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("swis-metrics".into())
+            .spawn(move || accept_loop(listener, registry, stop2))
+            .map_err(|e| SwisError::backend(format!("spawning metrics thread: {e}")))?;
+        Ok(MetricsServer { stop, handle: Some(handle), addr: bound })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the responder thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, registry: MetricsRegistry, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // serve inline: a scrape is one small read + one write,
+                // and serialized responses keep the server trivially
+                // bounded
+                let _ = respond(stream, &registry);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn respond(mut stream: TcpStream, registry: &MetricsRegistry) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // read the request head (we answer any method/path with the page;
+    // a scrape target has exactly one resource)
+    let mut buf = [0u8; 2048];
+    let mut head = Vec::new();
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break, // timeout or reset: answer anyway
+        }
+    }
+    let body = registry.render();
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_exposition_text_over_tcp() {
+        let reg = MetricsRegistry::new();
+        let srv = MetricsServer::serve("127.0.0.1:0", reg).unwrap();
+        let addr = srv.addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "got: {out}");
+        assert!(out.contains("text/plain; version=0.0.4"));
+        assert!(out.contains("swis_obs_level"));
+        srv.stop();
+    }
+
+    #[test]
+    fn bad_bind_is_a_typed_error() {
+        assert!(MetricsServer::serve("definitely-not-an-addr", MetricsRegistry::new()).is_err());
+    }
+}

@@ -1,0 +1,399 @@
+//! Crate-wide observability: kernel sparsity accounting, request
+//! tracing, and live metrics export.
+//!
+//! The paper's value proposition is *work removed* — shift planes
+//! dropped by shared weight bit sparsity, lanes masked by activation
+//! zeros, precision tiers degraded under load. This module turns those
+//! wins into numbers the serving stack reports live, in three layers:
+//!
+//! 1. **Kernel sparsity accounting** ([`ExecTally`]): the bit-serial
+//!    kernels count planes visited vs. dropped-empty vs. masked-skipped,
+//!    lanes masked by the zero-lane fold, scalar demotions and SIMD
+//!    dispatches. Counting never touches the SIMD inner loops: unmasked
+//!    tiles charge `O(1)` per tile from the prepared plane offsets, and
+//!    masked tiles take one metadata pass over the `Plane` structs using
+//!    the exact skip predicate the walk itself applies — so the numbers
+//!    match the work done, bit for bit. Per-worker tallies merge through
+//!    a per-call mutex after the scoped row threads join, then land in a
+//!    thread-local accumulator the per-layer scopes diff.
+//! 2. **Per-layer attribution** ([`LayerStats`] / [`ForwardStats`]):
+//!    `exec::model` brackets every node with [`layer_begin`] /
+//!    [`layer_end`]; `api::Session` exposes the last forward's breakdown
+//!    as `Session::last_stats()`. Each layer also folds into a global
+//!    per-layer registry ([`global_layers`]) the Prometheus exporter
+//!    renders with `{layer="..."}` labels.
+//! 3. **Request tracing + export** ([`trace`], [`registry`], [`http`]):
+//!    span-stamped per-request traces through the pool, rendered with
+//!    pool metrics into Prometheus text exposition served by
+//!    `swis serve --metrics-addr`.
+//!
+//! Everything is gated on the runtime [`ObsLevel`] knob (CLI `--obs`,
+//! env `SWIS_OBS`): at `Off` the only cost on the hot path is one
+//! relaxed atomic load per GEMM/depthwise *call* (never per plane), a
+//! tax the `obs_overhead` bench section gates at <= 3%.
+
+pub mod http;
+pub mod registry;
+pub mod trace;
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::{SwisError, SwisResult};
+
+/// How much the process observes itself. Ordered: each level includes
+/// everything below it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// No accounting at all — one relaxed atomic load per kernel call.
+    #[default]
+    Off = 0,
+    /// Kernel sparsity counters + per-layer attribution + wall time.
+    Counters = 1,
+    /// Counters plus request tracing through the pool.
+    Full = 2,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> SwisResult<ObsLevel> {
+        Ok(match s {
+            "off" | "0" => ObsLevel::Off,
+            "counters" | "1" => ObsLevel::Counters,
+            "full" | "2" => ObsLevel::Full,
+            other => {
+                return Err(SwisError::config(format!(
+                    "unknown obs level '{other}' (expected off|counters|full)"
+                )))
+            }
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Counters => "counters",
+            ObsLevel::Full => "full",
+        }
+    }
+}
+
+/// Process-global observability level. Relaxed everywhere: a transition
+/// mid-forward at worst misattributes one layer, never corrupts state.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_level(l: ObsLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> ObsLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => ObsLevel::Off,
+        1 => ObsLevel::Counters,
+        _ => ObsLevel::Full,
+    }
+}
+
+/// Kernel accounting enabled? The ONE check the kernels make per call.
+#[inline]
+pub fn counters_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= ObsLevel::Counters as u8
+}
+
+/// Request tracing enabled?
+#[inline]
+pub fn tracing_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= ObsLevel::Full as u8
+}
+
+/// Adopt `SWIS_OBS` (off|counters|full) if set; unknown values are
+/// ignored (observability must never fail a serving process).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SWIS_OBS") {
+        if let Ok(l) = ObsLevel::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// Number of [`crate::exec::simd::KernelVariant`] flavors (dispatch
+/// counter width).
+pub const N_VARIANTS: usize = 5;
+
+/// One bundle of kernel sparsity counters. Plain `u64`s — accumulated
+/// locally per scoped-thread chunk, merged under a per-call mutex, added
+/// to a thread-local by [`record_exec`]; no atomics on the counting path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecTally {
+    /// Plane-walk iterations actually executed.
+    pub planes_visited: u64,
+    /// Plane walks skipped because the zero-lane mask emptied the plane
+    /// (`(pos | neg) & mask == 0` — the kernels' exact predicate).
+    pub planes_skipped_masked: u64,
+    /// Plane-walk slots that never existed because the plane was dropped
+    /// empty at prepare time (weight bit sparsity), charged once per
+    /// sweep the walk would otherwise have made.
+    pub planes_dropped_empty: u64,
+    /// Lanes zeroed out of masked tiles by the activation zero fold.
+    pub lanes_masked: u64,
+    /// (row-tile x group-chunk) units processed.
+    pub tiles_total: u64,
+    /// Of those, units that ran with a real (non-all-ones) lane mask.
+    pub tiles_masked: u64,
+    /// Kernel calls demoted to the scalar walk (forced scalar or the
+    /// i32-partial overflow screen) despite a vector tune.
+    pub scalar_demotions: u64,
+    /// Kernel calls per [`crate::exec::simd::KernelVariant`], indexed by
+    /// `KernelVariant::index()`.
+    pub dispatch: [u64; N_VARIANTS],
+}
+
+impl ExecTally {
+    pub fn add(&mut self, o: &ExecTally) {
+        self.planes_visited += o.planes_visited;
+        self.planes_skipped_masked += o.planes_skipped_masked;
+        self.planes_dropped_empty += o.planes_dropped_empty;
+        self.lanes_masked += o.lanes_masked;
+        self.tiles_total += o.tiles_total;
+        self.tiles_masked += o.tiles_masked;
+        self.scalar_demotions += o.scalar_demotions;
+        for (d, s) in self.dispatch.iter_mut().zip(o.dispatch.iter()) {
+            *d += s;
+        }
+    }
+
+    /// `self - earlier` field-wise (counters are monotone, so the diff of
+    /// two snapshots of one accumulator never underflows).
+    pub fn diff(&self, earlier: &ExecTally) -> ExecTally {
+        let mut d = ExecTally {
+            planes_visited: self.planes_visited - earlier.planes_visited,
+            planes_skipped_masked: self.planes_skipped_masked - earlier.planes_skipped_masked,
+            planes_dropped_empty: self.planes_dropped_empty - earlier.planes_dropped_empty,
+            lanes_masked: self.lanes_masked - earlier.lanes_masked,
+            tiles_total: self.tiles_total - earlier.tiles_total,
+            tiles_masked: self.tiles_masked - earlier.tiles_masked,
+            scalar_demotions: self.scalar_demotions - earlier.scalar_demotions,
+            dispatch: [0; N_VARIANTS],
+        };
+        for i in 0..N_VARIANTS {
+            d.dispatch[i] = self.dispatch[i] - earlier.dispatch[i];
+        }
+        d
+    }
+
+    /// Plane-walk slots a sparsity-blind kernel would have executed.
+    pub fn planes_total(&self) -> u64 {
+        self.planes_visited + self.planes_skipped_masked + self.planes_dropped_empty
+    }
+
+    /// Slots removed by sparsity (weight bits + activation zeros).
+    pub fn planes_skipped(&self) -> u64 {
+        self.planes_skipped_masked + self.planes_dropped_empty
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == ExecTally::default()
+    }
+}
+
+thread_local! {
+    /// Per-thread running tally the layer scopes diff.
+    static CURRENT: Cell<ExecTally> = Cell::new(ExecTally::default());
+    /// Layer breakdown of the forward pass running on this thread.
+    static FORWARD: RefCell<Vec<LayerStats>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Merge one kernel call's tally into this thread's accumulator. Called
+/// by `exec::kernel` on the session thread after its scoped row threads
+/// join — and only when [`counters_on`].
+pub fn record_exec(t: &ExecTally) {
+    CURRENT.with(|c| {
+        let mut v = c.get();
+        v.add(t);
+        c.set(v);
+    });
+}
+
+/// Snapshot of this thread's accumulator (for external diffing).
+pub fn current() -> ExecTally {
+    CURRENT.with(|c| c.get())
+}
+
+/// One layer's slice of a forward pass.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub label: String,
+    pub tally: ExecTally,
+    pub time_ms: f64,
+}
+
+/// Per-layer breakdown of one `Session::run` forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardStats {
+    pub layers: Vec<LayerStats>,
+    /// End-to-end forward wall time.
+    pub time_ms: f64,
+}
+
+impl ForwardStats {
+    /// Whole-forward tally (sum over layers).
+    pub fn tally(&self) -> ExecTally {
+        let mut t = ExecTally::default();
+        for l in &self.layers {
+            t.add(&l.tally);
+        }
+        t
+    }
+}
+
+/// Open layer scope: snapshot of the thread tally + wall clock.
+pub struct LayerToken {
+    snap: ExecTally,
+    t0: Instant,
+}
+
+/// Reset this thread's forward collector (start of a model forward).
+pub fn forward_begin() {
+    if counters_on() {
+        FORWARD.with(|f| f.borrow_mut().clear());
+    }
+}
+
+/// Open a per-layer scope (`None` when counters are off — the matching
+/// [`layer_end`] is then a no-op).
+pub fn layer_begin() -> Option<LayerToken> {
+    counters_on().then(|| LayerToken { snap: current(), t0: Instant::now() })
+}
+
+/// Close a per-layer scope: diff the thread tally, stamp wall time, push
+/// into this thread's forward collector AND the global per-layer
+/// registry.
+pub fn layer_end(tok: Option<LayerToken>, label: &str) {
+    let Some(tok) = tok else { return };
+    let tally = current().diff(&tok.snap);
+    let time_ms = tok.t0.elapsed().as_secs_f64() * 1e3;
+    FORWARD.with(|f| {
+        f.borrow_mut().push(LayerStats { label: label.to_string(), tally, time_ms });
+    });
+    global_add(label, &tally, time_ms);
+}
+
+/// Take this thread's collected forward breakdown (the per-`Session::run`
+/// aggregation point). `None` when counters are off.
+pub fn take_forward(total_ms: f64) -> Option<ForwardStats> {
+    if !counters_on() {
+        return None;
+    }
+    let layers = FORWARD.with(|f| std::mem::take(&mut *f.borrow_mut()));
+    Some(ForwardStats { layers, time_ms: total_ms })
+}
+
+/// One layer's process-lifetime aggregate (all forwards, all threads).
+#[derive(Clone, Debug)]
+pub struct LayerAgg {
+    pub label: String,
+    pub tally: ExecTally,
+    /// Total wall time spent in this layer.
+    pub time_ms: f64,
+    /// Forward passes that executed this layer.
+    pub calls: u64,
+}
+
+/// Global per-layer registry, insertion-ordered (graph order for the
+/// first net observed). Locked once per (layer, forward) — never inside
+/// a kernel.
+static GLOBAL: Mutex<Vec<LayerAgg>> = Mutex::new(Vec::new());
+
+fn global_add(label: &str, t: &ExecTally, time_ms: f64) {
+    let mut g = GLOBAL.lock().unwrap();
+    if let Some(agg) = g.iter_mut().find(|a| a.label == label) {
+        agg.tally.add(t);
+        agg.time_ms += time_ms;
+        agg.calls += 1;
+    } else {
+        g.push(LayerAgg { label: label.to_string(), tally: *t, time_ms, calls: 1 });
+    }
+}
+
+/// Snapshot of the process-lifetime per-layer aggregates.
+pub fn global_layers() -> Vec<LayerAgg> {
+    GLOBAL.lock().unwrap().clone()
+}
+
+/// Clear the global registry and this thread's accumulators (benches and
+/// tests isolate their measurements with this).
+pub fn reset() {
+    GLOBAL.lock().unwrap().clear();
+    CURRENT.with(|c| c.set(ExecTally::default()));
+    FORWARD.with(|f| f.borrow_mut().clear());
+}
+
+/// Unit tests across the crate share one process-global [`ObsLevel`];
+/// any lib test that flips it must hold this guard so parallel test
+/// threads never observe each other's level.
+#[cfg(test)]
+pub(crate) fn test_level_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_knob_round_trips() {
+        assert_eq!(ObsLevel::parse("off").unwrap(), ObsLevel::Off);
+        assert_eq!(ObsLevel::parse("counters").unwrap(), ObsLevel::Counters);
+        assert_eq!(ObsLevel::parse("full").unwrap(), ObsLevel::Full);
+        assert!(ObsLevel::parse("loud").is_err());
+        for l in [ObsLevel::Counters, ObsLevel::Full, ObsLevel::Off] {
+            assert_eq!(ObsLevel::parse(l.as_str()).unwrap(), l);
+        }
+        assert!(ObsLevel::Full > ObsLevel::Counters);
+    }
+
+    #[test]
+    fn tally_add_diff_total() {
+        let mut a = ExecTally { planes_visited: 10, planes_skipped_masked: 3, ..Default::default() };
+        a.dispatch[2] = 1;
+        let snap = a;
+        let mut b = a;
+        b.add(&ExecTally { planes_visited: 5, planes_dropped_empty: 7, ..Default::default() });
+        let d = b.diff(&snap);
+        assert_eq!(d.planes_visited, 5);
+        assert_eq!(d.planes_dropped_empty, 7);
+        assert_eq!(d.dispatch[2], 0);
+        assert_eq!(b.planes_total(), 25);
+        assert_eq!(b.planes_skipped(), 10);
+        assert!(!b.is_zero() && ExecTally::default().is_zero());
+    }
+
+    #[test]
+    fn layer_scopes_attribute_to_thread_and_global() {
+        let _g = test_level_guard();
+        set_level(ObsLevel::Counters);
+        reset();
+        forward_begin();
+        let tok = layer_begin();
+        record_exec(&ExecTally { planes_visited: 42, lanes_masked: 4, ..Default::default() });
+        layer_end(tok, "conv0");
+        let tok = layer_begin();
+        record_exec(&ExecTally { planes_visited: 8, ..Default::default() });
+        layer_end(tok, "conv0"); // same label aggregates globally
+        let fwd = take_forward(1.5).unwrap();
+        assert_eq!(fwd.layers.len(), 2);
+        assert_eq!(fwd.layers[0].tally.planes_visited, 42);
+        assert_eq!(fwd.layers[1].tally.planes_visited, 8);
+        assert_eq!(fwd.tally().planes_visited, 50);
+        let g = global_layers();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].calls, 2);
+        assert_eq!(g[0].tally.planes_visited, 50);
+        set_level(ObsLevel::Off);
+        assert!(layer_begin().is_none());
+        assert!(take_forward(0.0).is_none());
+        reset();
+    }
+}

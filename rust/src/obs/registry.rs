@@ -1,0 +1,322 @@
+//! The export layer: [`MetricsRegistry`] snapshots pool metrics +
+//! admission depths and renders them — together with the live per-layer
+//! kernel aggregates ([`super::global_layers`]) — into Prometheus text
+//! exposition format (`text/plain; version=0.0.4`), plus the
+//! `BENCH_observability.json` builder the CLI paths share.
+//!
+//! Metric names are documented next to the fields they export
+//! ([`crate::coordinator::Metrics`] for the pool counters, the per-layer
+//! families below for the kernel tallies).
+
+use std::sync::{Arc, Mutex};
+
+use super::trace::RequestTrace;
+use super::LayerAgg;
+use crate::coordinator::MetricsSnapshot;
+use crate::util::json::Json;
+
+/// Human label of an admission lane index (`Priority::lane()` order).
+pub fn lane_label(lane: usize) -> &'static str {
+    if lane == 0 {
+        "interactive"
+    } else {
+        "batch"
+    }
+}
+
+#[derive(Default)]
+struct RegInner {
+    pool: Option<MetricsSnapshot>,
+    depths: [usize; 2],
+}
+
+/// Sampled registry the metrics endpoint renders from. The serve driver
+/// refreshes the pool snapshot on its own cadence ([`update_pool`]);
+/// kernel-layer aggregates are pulled live at render time, so
+/// `swis_planes_*` counters are always current.
+///
+/// [`update_pool`]: MetricsRegistry::update_pool
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<RegInner>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Install the latest pool metrics snapshot + per-lane queue depths.
+    pub fn update_pool(&self, snap: MetricsSnapshot, depths: [usize; 2]) {
+        let mut g = self.inner.lock().unwrap();
+        g.pool = Some(snap);
+        g.depths = depths;
+    }
+
+    /// Render the full exposition page.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let g = self.inner.lock().unwrap();
+        push_metric(
+            &mut out,
+            "swis_obs_level",
+            "gauge",
+            "Current ObsLevel (0=off 1=counters 2=full)",
+            &[(&[], super::level() as u8 as f64)],
+        );
+        if let Some(s) = &g.pool {
+            render_pool(&mut out, s, g.depths);
+        }
+        drop(g);
+        render_layers(&mut out, &super::global_layers());
+        out
+    }
+}
+
+fn push_metric(out: &mut String, name: &str, kind: &str, help: &str, series: &[(&[(&str, &str)], f64)]) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    for (labels, v) in series {
+        out.push_str(name);
+        if !labels.is_empty() {
+            out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{k}=\"{}\"", escape_label(val)));
+            }
+            out.push('}');
+        }
+        // counters are exact u64s below 2^53; render without exponent
+        if v.fract() == 0.0 && v.abs() < 9.0e15 {
+            out.push_str(&format!(" {}\n", *v as i64));
+        } else {
+            out.push_str(&format!(" {v}\n"));
+        }
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn render_pool(out: &mut String, s: &MetricsSnapshot, depths: [usize; 2]) {
+    push_metric(out, "swis_requests_total", "counter", "Requests completed through a batch", &[(&[], s.requests as f64)]);
+    push_metric(out, "swis_batches_total", "counter", "Batches dispatched", &[(&[], s.batches as f64)]);
+    let il = [("lane", lane_label(0))];
+    let bl = [("lane", lane_label(1))];
+    push_metric(
+        out,
+        "swis_shed_total",
+        "counter",
+        "Requests dropped by deadline shedding, per admission lane",
+        &[(&il, s.shed_by_lane[0] as f64), (&bl, s.shed_by_lane[1] as f64)],
+    );
+    push_metric(
+        out,
+        "swis_rejected_total",
+        "counter",
+        "Requests refused Busy at admission, per lane",
+        &[(&il, s.rejected_by_lane[0] as f64), (&bl, s.rejected_by_lane[1] as f64)],
+    );
+    push_metric(out, "swis_degraded_total", "counter", "Requests served below their requested precision tier", &[(&[], s.degraded as f64)]);
+    push_metric(out, "swis_errors_total", "counter", "Requests answered with a routed error", &[(&[], s.errors as f64)]);
+    push_metric(out, "swis_panics_total", "counter", "Worker panics contained by the pool", &[(&[], s.panics as f64)]);
+    push_metric(
+        out,
+        "swis_queue_depth",
+        "gauge",
+        "Requests currently queued, per admission lane",
+        &[(&il, depths[0] as f64), (&bl, depths[1] as f64)],
+    );
+    push_metric(out, "swis_mean_batch", "gauge", "Mean dispatched batch size", &[(&[], s.mean_batch)]);
+    push_metric(
+        out,
+        "swis_total_latency_us",
+        "gauge",
+        "End-to-end latency percentiles over the metrics reservoir",
+        &[
+            (&[("quantile", "0.5")], s.p50_total_us),
+            (&[("quantile", "0.99")], s.p99_total_us),
+        ],
+    );
+}
+
+fn render_layers(out: &mut String, layers: &[LayerAgg]) {
+    if layers.is_empty() {
+        return;
+    }
+    let series = |f: &dyn Fn(&LayerAgg) -> f64| -> Vec<(Vec<(&str, &str)>, f64)> {
+        layers.iter().map(|l| (vec![("layer", l.label.as_str())], f(l))).collect()
+    };
+    for (name, help, f) in [
+        (
+            "swis_planes_visited_total",
+            "Shift-plane walks executed, per layer",
+            &(|l: &LayerAgg| l.tally.planes_visited as f64) as &dyn Fn(&LayerAgg) -> f64,
+        ),
+        (
+            "swis_planes_skipped_total",
+            "Shift-plane walks removed by sparsity (empty at prepare + masked by activation zeros), per layer",
+            &|l: &LayerAgg| l.tally.planes_skipped() as f64,
+        ),
+        (
+            "swis_lanes_masked_total",
+            "Lanes zeroed out of masked tiles by the activation zero fold, per layer",
+            &|l: &LayerAgg| l.tally.lanes_masked as f64,
+        ),
+        (
+            "swis_layer_time_ms_total",
+            "Wall time spent in each layer's kernels",
+            &|l: &LayerAgg| l.time_ms,
+        ),
+        (
+            "swis_scalar_demotions_total",
+            "Kernel calls demoted to the scalar walk, per layer",
+            &|l: &LayerAgg| l.tally.scalar_demotions as f64,
+        ),
+    ] {
+        let rows = series(f);
+        let borrowed: Vec<(&[(&str, &str)], f64)> =
+            rows.iter().map(|(l, v)| (l.as_slice(), *v)).collect();
+        push_metric(out, name, "counter", help, &borrowed);
+    }
+}
+
+/// Cap on full span dumps embedded in `BENCH_observability.json` (the
+/// decomposition means still cover every trace).
+const MAX_TRACE_SAMPLES: usize = 64;
+
+/// Build the `BENCH_observability.json` root: per-layer sparsity
+/// accounting + trace-derived latency decomposition. Callers stamp their
+/// own context keys (net, probe, variants, p50/p95) on the returned
+/// object.
+pub fn observability_json(layers: &[LayerAgg], traces: &[RequestTrace]) -> Json {
+    let mut root = Json::obj();
+    root.set("bench", "observability");
+    root.set("obs_level", super::level().as_str());
+    root.set("unit_time", "ms");
+    root.set("unit_latency", "us");
+    let lj: Vec<Json> = layers
+        .iter()
+        .map(|l| {
+            let mut j = Json::obj();
+            j.set("layer", l.label.as_str());
+            j.set("calls", l.calls);
+            j.set("planes_total", l.tally.planes_total());
+            j.set("planes_visited", l.tally.planes_visited);
+            j.set("planes_skipped", l.tally.planes_skipped());
+            j.set("planes_skipped_masked", l.tally.planes_skipped_masked);
+            j.set("planes_dropped_empty", l.tally.planes_dropped_empty);
+            j.set("lanes_masked", l.tally.lanes_masked);
+            j.set("tiles_masked", l.tally.tiles_masked);
+            j.set("tiles_total", l.tally.tiles_total);
+            j.set("time_ms", l.time_ms);
+            j
+        })
+        .collect();
+    root.set("layers", Json::Arr(lj));
+    let mut tj = Json::obj();
+    tj.set("sampled", traces.len() as u64);
+    let n = traces.len().max(1) as f64;
+    let mean = |f: &dyn Fn(&RequestTrace) -> u64| {
+        traces.iter().map(|t| f(t) as f64).sum::<f64>() / n
+    };
+    let mut decomp = Json::obj();
+    decomp.set("queue_wait_us_mean", mean(&|t| t.queue_us()));
+    decomp.set("batch_us_mean", mean(&|t| t.batch_us()));
+    decomp.set("compute_us_mean", mean(&|t| t.compute_us()));
+    decomp.set("total_us_mean", mean(&|t| t.total_us()));
+    tj.set("decomposition", decomp);
+    let samples: Vec<Json> = traces
+        .iter()
+        .take(MAX_TRACE_SAMPLES)
+        .map(|t| {
+            let mut j = Json::obj();
+            j.set("id", t.id.0);
+            j.set("variant", t.variant.as_str());
+            j.set("served_variant", t.served_variant.as_str());
+            j.set("queue_us", t.queue_us());
+            j.set("batch_us", t.batch_us());
+            j.set("compute_us", t.compute_us());
+            j.set("total_us", t.total_us());
+            let spans: Vec<Json> = t
+                .spans
+                .iter()
+                .map(|s| {
+                    let mut sj = Json::obj();
+                    sj.set("kind", s.kind.as_str());
+                    sj.set("at_us", s.at_us);
+                    sj
+                })
+                .collect();
+            j.set("spans", Json::Arr(spans));
+            j
+        })
+        .collect();
+    tj.set("samples", Json::Arr(samples));
+    root.set("traces", tj);
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{SpanKind, TraceId};
+    use super::super::{ExecTally, LayerAgg};
+    use super::*;
+
+    fn agg(label: &str, visited: u64, skipped: u64, masked: u64) -> LayerAgg {
+        LayerAgg {
+            label: label.to_string(),
+            tally: ExecTally {
+                planes_visited: visited,
+                planes_dropped_empty: skipped,
+                lanes_masked: masked,
+                ..Default::default()
+            },
+            time_ms: 1.25,
+            calls: 2,
+        }
+    }
+
+    #[test]
+    fn renders_parseable_exposition_text() {
+        let reg = MetricsRegistry::new();
+        let text = reg.render();
+        assert!(text.contains("# TYPE swis_obs_level gauge"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, value) = line.rsplit_once(' ').expect("metric line has a value");
+            value.parse::<f64>().expect("metric value parses");
+        }
+    }
+
+    #[test]
+    fn pool_snapshot_and_layers_reach_the_page() {
+        let m = crate::coordinator::Metrics::default();
+        m.record_rejected(crate::coordinator::Priority::Batch);
+        let reg = MetricsRegistry::new();
+        reg.update_pool(m.snapshot(), [3, 1]);
+        let text = reg.render();
+        assert!(text.contains("swis_rejected_total{lane=\"batch\"} 1"));
+        assert!(text.contains("swis_queue_depth{lane=\"interactive\"} 3"));
+        assert!(text.contains("swis_total_latency_us{quantile=\"0.99\"}"));
+    }
+
+    #[test]
+    fn observability_json_schema() {
+        let layers = vec![agg("conv0", 100, 20, 7), agg("fc1", 50, 5, 0)];
+        let mut t = RequestTrace::begin(TraceId(9), "swis@3");
+        t.push(SpanKind::BatchOpen);
+        t.push(SpanKind::InferStart);
+        t.push(SpanKind::InferEnd);
+        t.push(SpanKind::Done);
+        let j = observability_json(&layers, &[t]);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("observability"));
+        for key in ["layer", "planes_total", "planes_skipped", "lanes_masked", "time_ms"] {
+            assert!(j.path(&["layers", "0", key]).is_some(), "missing layers[0].{key}");
+        }
+        assert!(j.path(&["traces", "decomposition", "compute_us_mean"]).is_some());
+        assert!(j.path(&["traces", "samples", "0", "total_us"]).is_some());
+    }
+}

@@ -1,0 +1,262 @@
+//! Request tracing: a [`TraceId`] minted at admission rides the job
+//! through queue -> batch assembly -> worker -> backend, stamping span
+//! timestamps into a [`RequestTrace`]. Completed (and shed) traces land
+//! in bounded per-worker [`TraceRing`]s the pool drains, and ride the
+//! response so loadgen can attribute tail latency to queue wait vs.
+//! batch assembly vs. compute.
+//!
+//! All span timestamps are microseconds since the trace's own birth
+//! instant, pushed in event order from one owner at a time — monotone by
+//! construction, so `queue_us + batch_us + compute_us <= total_us`
+//! always holds.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Process-unique request trace identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+impl TraceId {
+    /// Mint the next id (also the sampling counter: `--trace-sample N`
+    /// traces every Nth minted id).
+    pub fn mint() -> TraceId {
+        TraceId(NEXT_ID.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// One lifecycle event inside a request trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Admitted into the queue (always the first span, at 0 us).
+    Enqueue,
+    /// Admission rewrote the variant down the precision ladder.
+    Degrade,
+    /// Dropped by the deadline sweep (terminal).
+    Shed,
+    /// Popped off the queue into a worker's pending batch.
+    BatchOpen,
+    /// The batch was sealed for dispatch.
+    BatchClose,
+    /// Backend inference started for this request's chunk.
+    InferStart,
+    /// Backend inference finished.
+    InferEnd,
+    /// Response delivered (terminal).
+    Done,
+    /// Routed error delivered (terminal).
+    Error,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Degrade => "degrade",
+            SpanKind::Shed => "shed",
+            SpanKind::BatchOpen => "batch_open",
+            SpanKind::BatchClose => "batch_close",
+            SpanKind::InferStart => "infer_start",
+            SpanKind::InferEnd => "infer_end",
+            SpanKind::Done => "done",
+            SpanKind::Error => "error",
+        }
+    }
+}
+
+/// One timestamped event: microseconds since the trace's birth.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub at_us: u64,
+}
+
+/// The span record of one admitted request.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: TraceId,
+    /// Variant as requested at admission.
+    pub variant: String,
+    /// Variant that actually ran (differs when admission degraded).
+    pub served_variant: String,
+    pub spans: Vec<Span>,
+    birth: Instant,
+}
+
+impl RequestTrace {
+    /// Open a trace at admission time (pushes the `Enqueue` span at 0).
+    pub fn begin(id: TraceId, variant: &str) -> RequestTrace {
+        let mut t = RequestTrace {
+            id,
+            variant: variant.to_string(),
+            served_variant: variant.to_string(),
+            spans: Vec::with_capacity(8),
+            birth: Instant::now(),
+        };
+        t.push(SpanKind::Enqueue);
+        t
+    }
+
+    /// Stamp one event now.
+    pub fn push(&mut self, kind: SpanKind) {
+        let at_us = self.birth.elapsed().as_micros() as u64;
+        self.spans.push(Span { kind, at_us });
+    }
+
+    /// Record the degrade rewrite (`from` is already in `variant`).
+    pub fn degraded_to(&mut self, served: &str) {
+        self.served_variant = served.to_string();
+        self.push(SpanKind::Degrade);
+    }
+
+    /// Timestamp of the first span of `kind`, if recorded.
+    pub fn at(&self, kind: SpanKind) -> Option<u64> {
+        self.spans.iter().find(|s| s.kind == kind).map(|s| s.at_us)
+    }
+
+    fn terminal(&self) -> Option<u64> {
+        self.spans
+            .iter()
+            .rev()
+            .find(|s| matches!(s.kind, SpanKind::Done | SpanKind::Error | SpanKind::Shed))
+            .map(|s| s.at_us)
+    }
+
+    /// Time spent in the admission queue (enqueue -> batch open; for
+    /// shed requests, enqueue -> shed).
+    pub fn queue_us(&self) -> u64 {
+        self.at(SpanKind::BatchOpen)
+            .or_else(|| self.at(SpanKind::Shed))
+            .unwrap_or(0)
+    }
+
+    /// Batch-assembly wait (batch open -> infer start).
+    pub fn batch_us(&self) -> u64 {
+        match (self.at(SpanKind::BatchOpen), self.at(SpanKind::InferStart)) {
+            (Some(o), Some(s)) => s.saturating_sub(o),
+            _ => 0,
+        }
+    }
+
+    /// Backend compute time (infer start -> infer end).
+    pub fn compute_us(&self) -> u64 {
+        match (self.at(SpanKind::InferStart), self.at(SpanKind::InferEnd)) {
+            (Some(s), Some(e)) => e.saturating_sub(s),
+            _ => 0,
+        }
+    }
+
+    /// Admission -> terminal span (done/error/shed), or the last span.
+    pub fn total_us(&self) -> u64 {
+        self.terminal()
+            .or_else(|| self.spans.last().map(|s| s.at_us))
+            .unwrap_or(0)
+    }
+
+    /// Did this request reach a terminal span exactly once, with
+    /// non-decreasing timestamps? (The propagation-test invariant.)
+    pub fn well_formed(&self) -> bool {
+        let terminals = self
+            .spans
+            .iter()
+            .filter(|s| matches!(s.kind, SpanKind::Done | SpanKind::Error | SpanKind::Shed))
+            .count();
+        let monotone = self.spans.windows(2).all(|w| w[0].at_us <= w[1].at_us);
+        let starts = matches!(self.spans.first().map(|s| s.kind), Some(SpanKind::Enqueue));
+        terminals == 1 && monotone && starts
+    }
+}
+
+/// Default per-worker trace ring capacity.
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Bounded ring of finished traces (oldest evicted first). One per pool
+/// worker, so the only contention is drain vs. that worker.
+pub struct TraceRing {
+    inner: Mutex<VecDeque<RequestTrace>>,
+    cap: usize,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { inner: Mutex::new(VecDeque::new()), cap: cap.max(1) }
+    }
+
+    pub fn push(&self, t: RequestTrace) {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every buffered trace (oldest first).
+    pub fn drain(&self) -> Vec<RequestTrace> {
+        self.inner.lock().unwrap().drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn spans_are_monotone_and_decompose() {
+        let mut t = RequestTrace::begin(TraceId::mint(), "swis@4");
+        t.degraded_to("swis@3");
+        t.push(SpanKind::BatchOpen);
+        t.push(SpanKind::BatchClose);
+        t.push(SpanKind::InferStart);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.push(SpanKind::InferEnd);
+        t.push(SpanKind::Done);
+        assert!(t.well_formed(), "spans: {:?}", t.spans);
+        assert_eq!(t.variant, "swis@4");
+        assert_eq!(t.served_variant, "swis@3");
+        assert!(t.compute_us() >= 1000, "compute {}", t.compute_us());
+        assert!(t.queue_us() + t.batch_us() + t.compute_us() <= t.total_us());
+    }
+
+    #[test]
+    fn shed_trace_is_terminal_and_well_formed() {
+        let mut t = RequestTrace::begin(TraceId::mint(), "fp32");
+        t.push(SpanKind::Shed);
+        assert!(t.well_formed());
+        assert_eq!(t.queue_us(), t.total_us());
+        assert_eq!(t.compute_us(), 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drains_in_order() {
+        let ring = TraceRing::new(3);
+        for i in 0..5 {
+            let mut t = RequestTrace::begin(TraceId(100 + i), "fp32");
+            t.push(SpanKind::Done);
+            ring.push(t);
+        }
+        assert_eq!(ring.len(), 3);
+        let got = ring.drain();
+        assert!(ring.is_empty());
+        let ids: Vec<u64> = got.iter().map(|t| t.id.0).collect();
+        assert_eq!(ids, vec![102, 103, 104]);
+    }
+}

@@ -108,6 +108,69 @@ impl Reservoir {
     pub fn summary(&self) -> Summary {
         summarize(&self.buf)
     }
+
+    /// Fold another reservoir into this one WITHOUT bias: after the
+    /// merge, every element ever offered to either side has retention
+    /// probability `cap / (seen_a + seen_b)` (up to sampling noise).
+    ///
+    /// Re-offering the other side's retained slice through [`push`]
+    /// (what the loadgen recorder used to do) over-weights it badly:
+    /// each retained element stands for `seen_b / |buf_b|` originals but
+    /// was offered as one, so a worker that saw 10x the traffic counted
+    /// the same as one that saw a trickle. Here each retained element
+    /// carries its stream weight and slots are filled by mass-weighted
+    /// source draws — the weighted-Algorithm-R equivalent for merging
+    /// two finished reservoirs. Draws come from `self`'s rng stream, so
+    /// the merge is deterministic in (self, other).
+    ///
+    /// [`push`]: Reservoir::push
+    pub fn merge(&mut self, other: &Reservoir) {
+        if other.seen == 0 {
+            return;
+        }
+        if self.seen == 0 {
+            self.seen = other.seen;
+            self.buf = other.buf.clone();
+            return;
+        }
+        let total = self.seen + other.seen;
+        let both_exact =
+            self.seen == self.buf.len() as u64 && other.seen == other.buf.len() as u64;
+        if both_exact && (self.buf.len() + other.buf.len()) <= self.cap {
+            // both sides fully retained their streams: exact union
+            self.buf.extend_from_slice(&other.buf);
+            self.seen = total;
+            return;
+        }
+        // mass-weighted two-stage resampling: side X holds stream mass
+        // seen_x spread over |buf_x| retained elements. Every output
+        // slot independently draws its source with probability
+        // proportional to the STREAM mass (seen_x / total — constant,
+        // not depleting: elements are drawn with replacement anyway, and
+        // depleting the mass per draw would bias the heavy side low),
+        // then a uniform element from that side — so a side that
+        // retained few elements (smaller cap) still contributes exactly
+        // its stream share, cap * seen_x / total in expectation, for any
+        // buffer sizes.
+        let a: Vec<f64> = std::mem::take(&mut self.buf);
+        let b: &[f64] = &other.buf;
+        let pa = self.seen as f64 / total as f64;
+        let mut out = Vec::with_capacity(self.cap);
+        for _ in 0..self.cap {
+            let from_a = if b.is_empty() {
+                true
+            } else if a.is_empty() {
+                false
+            } else {
+                self.rng.range_f64(0.0, 1.0) < pa
+            };
+            let src = if from_a { &a } else { b };
+            let j = self.rng.below(src.len() as u64) as usize;
+            out.push(src[j]);
+        }
+        self.buf = out;
+        self.seen = total;
+    }
 }
 
 /// Root mean square error between two slices.
@@ -175,6 +238,99 @@ mod tests {
         let a = run();
         assert_eq!(a.len(), 64);
         assert_eq!(a, run(), "same seed must retain the same sample");
+    }
+
+    #[test]
+    fn merge_below_capacity_is_exact_union() {
+        let mut a = Reservoir::new(16, 1);
+        let mut b = Reservoir::new(16, 2);
+        for i in 0..5 {
+            a.push(i as f64);
+            b.push(100.0 + i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.seen(), 10);
+        let mut got = a.as_slice().to_vec();
+        got.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0, 4.0, 100.0, 101.0, 102.0, 103.0, 104.0]);
+        // merging an empty side is a no-op; merging INTO empty copies
+        let empty = Reservoir::new(16, 3);
+        let before = a.as_slice().to_vec();
+        a.merge(&empty);
+        assert_eq!(a.as_slice(), before);
+        let mut fresh = Reservoir::new(16, 4);
+        fresh.merge(&a);
+        assert_eq!(fresh.seen(), 10);
+        assert_eq!(fresh.as_slice().len(), 10);
+    }
+
+    #[test]
+    fn merge_is_deterministic_and_bounded() {
+        let build = |seed: u64, lo: usize, hi: usize| {
+            let mut r = Reservoir::new(64, seed);
+            for i in lo..hi {
+                r.push(i as f64);
+            }
+            r
+        };
+        let run = || {
+            let mut a = build(7, 0, 5000);
+            let b = build(8, 5000, 9000);
+            a.merge(&b);
+            a.as_slice().to_vec()
+        };
+        let got = run();
+        assert_eq!(got.len(), 64);
+        assert_eq!(got, run(), "merge must be deterministic in (self, other)");
+    }
+
+    #[test]
+    fn merge_retention_is_proportional_to_stream_mass() {
+        // Property test for the weighted merge: worker A saw n_a zeros,
+        // worker B saw n_b ones (both far past capacity, so both sides
+        // are downsampled). After the merge the fraction of ones must be
+        // ~ n_b / (n_a + n_b) — the per-element retention probability
+        // cap/total the doc promises. The old re-push merge lands near
+        // |buf_b| / (|buf_a| + |buf_b|) = 0.5 instead, far outside the
+        // tolerance for the 4:1 mass split below.
+        for (seed, n_a, n_b) in [(11u64, 40_000u64, 10_000u64), (12, 8_000, 32_000), (13, 20_000, 20_000)] {
+            let mut a = Reservoir::new(512, seed);
+            for _ in 0..n_a {
+                a.push(0.0);
+            }
+            let mut b = Reservoir::new(512, seed ^ 0x9E37);
+            for _ in 0..n_b {
+                b.push(1.0);
+            }
+            a.merge(&b);
+            assert_eq!(a.seen(), n_a + n_b);
+            assert_eq!(a.as_slice().len(), 512);
+            let ones = a.as_slice().iter().filter(|&&x| x == 1.0).count() as f64;
+            let frac = ones / 512.0;
+            let want = n_b as f64 / (n_a + n_b) as f64;
+            assert!(
+                (frac - want).abs() < 0.07,
+                "seed {seed}: merged one-fraction {frac} vs stream share {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_with_unequal_caps_keeps_mass_weights() {
+        // the other side retaining fewer elements (smaller cap) must not
+        // shrink its influence: weights are per-stream, not per-slot
+        let mut a = Reservoir::new(256, 21);
+        for _ in 0..10_000 {
+            a.push(0.0);
+        }
+        let mut b = Reservoir::new(32, 22);
+        for _ in 0..10_000 {
+            b.push(1.0);
+        }
+        a.merge(&b);
+        let ones = a.as_slice().iter().filter(|&&x| x == 1.0).count() as f64;
+        let frac = ones / a.as_slice().len() as f64;
+        assert!((frac - 0.5).abs() < 0.1, "equal masses must merge ~50/50, got {frac}");
     }
 
     #[test]

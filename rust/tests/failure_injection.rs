@@ -224,6 +224,7 @@ fn faulty_pool(workers: usize) -> WorkerPool {
             workers,
             policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
             queue_depth: 32,
+            ..PoolConfig::default()
         },
     )
     .unwrap()
@@ -316,7 +317,8 @@ impl BackendFactory for PanickingFactory {
 
 #[test]
 fn pool_start_fails_cleanly_when_warmup_fails_or_panics() {
-    let cfg = PoolConfig { workers: 3, policy: BatchPolicy::default(), queue_depth: 8 };
+    let cfg =
+        PoolConfig { workers: 3, policy: BatchPolicy::default(), queue_depth: 8, ..PoolConfig::default() };
     // factory Err: start returns the error, all spawned threads reaped;
     // the factory's own Backend class survives the pool's context wrap
     let e = WorkerPool::start_with_factory(Arc::new(FailingFactory), cfg).unwrap_err();

@@ -1,0 +1,245 @@
+//! Integration: request-trace propagation through the worker pool —
+//! every traced request that completes, sheds, or degrades must yield
+//! exactly one well-formed trace (one terminal span, monotone
+//! timestamps, Enqueue first), across multiple workers and with panics
+//! in flight. Runs over an instrumented test backend; nothing here
+//! needs artifacts.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use swis::coordinator::{
+    BatchPolicy, InferRequest, PoolConfig, Priority, TierPolicy, WorkerPool,
+};
+use swis::obs::trace::SpanKind;
+use swis::obs::ObsLevel;
+use swis::runtime::{Backend, BackendFactory};
+use swis::util::tensor::Tensor;
+use swis::{SwisError, SwisResult};
+
+/// Every test here flips the process-global obs level; serialize them.
+fn obs_guard() -> MutexGuard<'static, ()> {
+    static G: Mutex<()> = Mutex::new(());
+    G.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+struct TestBackend {
+    delay: Duration,
+}
+
+impl Backend for TestBackend {
+    fn name(&self) -> &'static str {
+        "test"
+    }
+
+    fn has_variant(&self, name: &str) -> bool {
+        name != "unknown"
+    }
+
+    fn plan_chunks(&self, n: usize) -> Vec<usize> {
+        if n == 0 {
+            vec![]
+        } else {
+            vec![n]
+        }
+    }
+
+    fn infer(&self, variant: &str, images: &Tensor<f32>) -> SwisResult<Tensor<f32>> {
+        if variant == "boom" {
+            panic!("injected backend panic");
+        }
+        if variant == "err" {
+            return Err(SwisError::backend("injected backend error"));
+        }
+        std::thread::sleep(self.delay);
+        let n = images.shape()[0];
+        Tensor::new(&[n, 10], vec![0.0f32; n * 10]).map_err(SwisError::backend_from)
+    }
+}
+
+struct TestFactory {
+    delay: Duration,
+    tiers: Option<TierPolicy>,
+}
+
+impl BackendFactory for TestFactory {
+    fn name(&self) -> &'static str {
+        "test"
+    }
+
+    fn make(&self, _pool_workers: usize) -> SwisResult<Box<dyn Backend>> {
+        Ok(Box::new(TestBackend { delay: self.delay }))
+    }
+
+    fn tier_policy(&self) -> Option<TierPolicy> {
+        self.tiers.clone()
+    }
+}
+
+fn pool(workers: usize, queue_depth: usize, delay_ms: u64) -> WorkerPool {
+    WorkerPool::start_with_factory(
+        Arc::new(TestFactory { delay: Duration::from_millis(delay_ms), tiers: None }),
+        PoolConfig {
+            workers,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            queue_depth,
+            trace_sample: 1,
+        },
+    )
+    .unwrap()
+}
+
+fn req(variant: &str) -> InferRequest {
+    InferRequest { image: vec![0.25; 32 * 32 * 3], variant: variant.into() }
+}
+
+fn has_kind(t: &swis::obs::trace::RequestTrace, k: SpanKind) -> bool {
+    t.at(k).is_some()
+}
+
+#[test]
+fn completed_requests_carry_exactly_one_well_formed_trace() {
+    let _g = obs_guard();
+    swis::obs::set_level(ObsLevel::Full);
+    let pool = pool(2, 64, 1);
+    let n = 12;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+            pool.submit(req("fine"), pri, None).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        let t = resp.trace.expect("trace_sample=1 at full level must trace every request");
+        assert!(t.well_formed(), "response trace malformed: {:?}", t.spans);
+        for k in [SpanKind::BatchOpen, SpanKind::InferStart, SpanKind::InferEnd, SpanKind::Done]
+        {
+            assert!(has_kind(&t, k), "missing {k:?} in {:?}", t.spans);
+        }
+        // the decomposition never exceeds the end-to-end total
+        assert!(t.queue_us() + t.batch_us() + t.compute_us() <= t.total_us());
+    }
+    // the rings hold one copy per completed request, ids all distinct
+    let ring = pool.drain_traces();
+    assert_eq!(ring.len(), n, "ring traces != completed requests");
+    let mut ids: Vec<u64> = ring.iter().map(|t| t.id.0).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate trace ids in the rings");
+    assert!(ring.iter().all(|t| t.well_formed()));
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn shed_requests_terminate_their_trace_in_the_ring() {
+    let _g = obs_guard();
+    swis::obs::set_level(ObsLevel::Full);
+    let pool = pool(1, 16, 150);
+    // the worker blocks on "a"; "b" expires long before it frees up
+    let rx_a = pool.submit(req("a"), Priority::Interactive, None).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    let rx_b = pool
+        .submit(req("b"), Priority::Interactive, Some(Duration::from_millis(20)))
+        .unwrap();
+    let err = rx_b.recv().unwrap().unwrap_err();
+    assert!(err.is_shed());
+    rx_a.recv().unwrap().unwrap();
+    let traces = pool.drain_traces();
+    assert_eq!(traces.len(), 2, "both the served and the shed request were traced");
+    let shed: Vec<_> = traces.iter().filter(|t| has_kind(t, SpanKind::Shed)).collect();
+    let done: Vec<_> = traces.iter().filter(|t| has_kind(t, SpanKind::Done)).collect();
+    assert_eq!((shed.len(), done.len()), (1, 1));
+    assert!(shed[0].well_formed(), "shed trace malformed: {:?}", shed[0].spans);
+    // a shed request never reached the backend
+    assert!(!has_kind(shed[0], SpanKind::InferStart));
+    assert_eq!(shed[0].compute_us(), 0);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn degraded_requests_stamp_the_degrade_span() {
+    let _g = obs_guard();
+    swis::obs::set_level(ObsLevel::Full);
+    let tiers = TierPolicy::new(vec!["hi".into(), "lo".into()], vec![1.0, 4.0], 1).unwrap();
+    let pool = WorkerPool::start_with_factory(
+        Arc::new(TestFactory { delay: Duration::from_millis(120), tiers: Some(tiers) }),
+        PoolConfig {
+            workers: 1,
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            queue_depth: 4,
+            trace_sample: 1,
+        },
+    )
+    .unwrap();
+    // seed occupies the worker; two queued jobs raise pressure to 2/4,
+    // so the next admission degrades hi -> lo before enqueueing
+    let mut rxs = vec![pool.submit(req("hi"), Priority::Interactive, None).unwrap()];
+    std::thread::sleep(Duration::from_millis(30));
+    rxs.push(pool.submit(req("hi"), Priority::Interactive, None).unwrap());
+    rxs.push(pool.submit(req("hi"), Priority::Interactive, None).unwrap());
+    rxs.push(pool.submit(req("hi"), Priority::Interactive, None).unwrap());
+    let mut degraded = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        let t = resp.trace.expect("every request is traced");
+        assert!(t.well_formed(), "{:?}", t.spans);
+        if resp.degraded {
+            degraded += 1;
+            assert!(has_kind(&t, SpanKind::Degrade), "degraded but no Degrade span");
+            assert_eq!(t.variant, "hi", "trace must keep the REQUESTED variant");
+            assert_eq!(t.served_variant, "lo");
+        } else {
+            assert!(!has_kind(&t, SpanKind::Degrade));
+            assert_eq!(t.served_variant, t.variant);
+        }
+    }
+    assert!(degraded >= 1, "queue pressure never degraded a request");
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn panic_paths_never_corrupt_surviving_traces() {
+    let _g = obs_guard();
+    swis::obs::set_level(ObsLevel::Full);
+    let pool = pool(2, 64, 1);
+    // the panicking batch drops its jobs (and their traces) mid-unwind;
+    // the callers see closed channels, never a malformed trace
+    let rx_boom = pool.submit(req("boom"), Priority::Interactive, None).unwrap();
+    assert!(rx_boom.recv().is_err(), "panicked batch must close its channels");
+    let rxs: Vec<_> =
+        (0..6).map(|_| pool.submit(req("fine"), Priority::Interactive, None).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.trace.unwrap().well_formed());
+    }
+    // a routed backend Err is a terminal Error span in the ring
+    let rx_err = pool.submit(req("err"), Priority::Interactive, None).unwrap();
+    assert!(rx_err.recv().unwrap().is_err());
+    let traces = pool.drain_traces();
+    // 6 fine + 1 err reach the ring; the panicked job's trace died with
+    // its job and must NOT appear half-written
+    assert_eq!(traces.len(), 7);
+    assert!(traces.iter().all(|t| t.well_formed()), "malformed trace after panic");
+    assert_eq!(traces.iter().filter(|t| has_kind(t, SpanKind::Error)).count(), 1);
+    // the panic is recorded just after the worker's unwind; give the
+    // scheduler a beat rather than racing it
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while pool.metrics.snapshot().panics == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(pool.metrics.snapshot().panics, 1);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn tracing_is_inert_below_the_full_level() {
+    let _g = obs_guard();
+    swis::obs::set_level(ObsLevel::Counters);
+    let pool = pool(1, 16, 1);
+    let resp = pool.infer(req("fine")).unwrap();
+    assert!(resp.trace.is_none(), "counters level must not mint traces");
+    assert!(pool.drain_traces().is_empty());
+    swis::obs::set_level(ObsLevel::Off);
+    pool.shutdown().unwrap();
+}

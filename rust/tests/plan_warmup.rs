@@ -31,6 +31,7 @@ fn plan_warmed_pool_serves_bit_identical_with_zero_quantization() {
         workers: 2,
         policy: BatchPolicy::default(),
         queue_depth: 64,
+        ..PoolConfig::default()
     };
 
     // reference: the pre-plan serve path — the pool quantizes at start

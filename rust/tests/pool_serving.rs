@@ -131,6 +131,7 @@ fn pool_logits_bit_identical_to_coordinator_for_any_worker_count() {
                 workers,
                 policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
                 queue_depth: 64,
+                ..PoolConfig::default()
             },
             variants(),
             BackendKind::Native,
@@ -171,7 +172,7 @@ fn try_submit_refuses_with_busy_at_capacity() {
     let (factory, _log) = TestFactory::new(Duration::from_millis(150));
     let pool = WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 2 },
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 2, ..PoolConfig::default() },
     )
     .unwrap();
 
@@ -205,7 +206,12 @@ fn interactive_lane_dispatches_before_batch_lane() {
     let (factory, log) = TestFactory::new(Duration::from_millis(150));
     let pool = WorkerPool::start_with_factory(
         Arc::clone(&factory) as Arc<dyn BackendFactory>,
-        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 16 },
+        PoolConfig {
+            workers: 1,
+            policy: serial_policy(),
+            queue_depth: 16,
+            ..PoolConfig::default()
+        },
     )
     .unwrap();
 
@@ -235,7 +241,12 @@ fn worker_prefers_its_hot_variant() {
     let (factory, log) = TestFactory::new(Duration::from_millis(150));
     let pool = WorkerPool::start_with_factory(
         Arc::clone(&factory) as Arc<dyn BackendFactory>,
-        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 16 },
+        PoolConfig {
+            workers: 1,
+            policy: serial_policy(),
+            queue_depth: 16,
+            ..PoolConfig::default()
+        },
     )
     .unwrap();
 
@@ -265,7 +276,12 @@ fn expired_requests_are_shed_with_a_routed_error() {
     let (factory, _log) = TestFactory::new(Duration::from_millis(150));
     let pool = WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 16 },
+        PoolConfig {
+            workers: 1,
+            policy: serial_policy(),
+            queue_depth: 16,
+            ..PoolConfig::default()
+        },
     )
     .unwrap();
 
@@ -290,7 +306,12 @@ fn shutdown_drains_admitted_requests() {
     let (factory, _log) = TestFactory::new(Duration::from_millis(1));
     let pool = WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 2, policy: serial_policy(), queue_depth: 64 },
+        PoolConfig {
+            workers: 2,
+            policy: serial_policy(),
+            queue_depth: 64,
+            ..PoolConfig::default()
+        },
     )
     .unwrap();
     let rxs: Vec<_> = (0..16)
@@ -313,7 +334,12 @@ fn pool_parallelizes_across_workers() {
     let (factory, _log) = TestFactory::new(Duration::from_millis(150));
     let pool = WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 2, policy: serial_policy(), queue_depth: 64 },
+        PoolConfig {
+            workers: 2,
+            policy: serial_policy(),
+            queue_depth: 64,
+            ..PoolConfig::default()
+        },
     )
     .unwrap();
     let t0 = Instant::now();
@@ -339,7 +365,7 @@ fn submissions_after_shutdown_fail_fast() {
     let (factory, _log) = TestFactory::new(Duration::from_millis(1));
     let pool = WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 4 },
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 4, ..PoolConfig::default() },
     )
     .unwrap();
     let queue_probe = pool.queue_len();
@@ -352,13 +378,13 @@ fn submissions_after_shutdown_fail_fast() {
     let (factory, _log) = TestFactory::new(Duration::from_millis(1));
     assert!(WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 0, policy: serial_policy(), queue_depth: 4 },
+        PoolConfig { workers: 0, policy: serial_policy(), queue_depth: 4, ..PoolConfig::default() },
     )
     .is_err());
     let (factory, _log) = TestFactory::new(Duration::from_millis(1));
     assert!(WorkerPool::start_with_factory(
         factory,
-        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 0 },
+        PoolConfig { workers: 1, policy: serial_policy(), queue_depth: 0, ..PoolConfig::default() },
     )
     .is_err());
 }
@@ -383,7 +409,12 @@ fn pool_serves_zoo_nets_with_their_own_image_shape() {
     };
     let pool = WorkerPool::start_net(
         Path::new("/nonexistent"),
-        PoolConfig { workers: 2, policy: BatchPolicy::default(), queue_depth: 32 },
+        PoolConfig {
+            workers: 2,
+            policy: BatchPolicy::default(),
+            queue_depth: 32,
+            ..PoolConfig::default()
+        },
         &net,
         vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4)],
         BackendKind::Native,
