@@ -66,7 +66,7 @@ fn main() -> Result<()> {
 
     println!("starting {workers}-worker pool with variants {names:?} ...");
     let t_start = Instant::now();
-    let cfg = PoolConfig { workers, policy, queue_depth };
+    let cfg = PoolConfig { workers, policy, queue_depth, ..PoolConfig::default() };
     let pool = WorkerPool::start(&dir, cfg, variants, backend)?;
     println!(
         "backend '{}' warm-up (compile/quantize) took {:.2} s",
@@ -99,7 +99,9 @@ fn main() -> Result<()> {
         let img_idx = i % n_avail;
         let image = images[img_idx * per..(img_idx + 1) * per].to_vec();
         let variant = names[i % names.len()].clone();
-        let rx = pool.submit(InferRequest { image, variant: variant.clone() }, priority, None)?;
+        let rx = pool.submit(
+            InferRequest::new(variant.clone()).image(image).priority(priority),
+        )?;
         handles.push((variant, img_idx, rx));
         if rate > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(exp_gap(&mut rng, rate)));

@@ -817,7 +817,7 @@ fn coordinator() -> Result<()> {
     // single-request round-trip (queue + dispatch + execute + deliver)
     let t = time_median(reps, || {
         let _ = coord
-            .infer(InferRequest { image: image.clone(), variant: "fp32".into() })
+            .infer(InferRequest::new("fp32").image(image.clone()))
             .unwrap();
     });
     println!("coordinator round-trip (b=1): {:>7.2} ms", t * 1e3);
@@ -828,7 +828,7 @@ fn coordinator() -> Result<()> {
         let rxs: Vec<_> = (0..12)
             .map(|_| {
                 coord
-                    .submit(InferRequest { image: image.clone(), variant: "fp32".into() })
+                    .submit(InferRequest::new("fp32").image(image.clone()))
                     .unwrap()
             })
             .collect();
@@ -845,7 +845,7 @@ fn coordinator() -> Result<()> {
         let rxs: Vec<_> = (0..big)
             .map(|_| {
                 coord
-                    .submit(InferRequest { image: image.clone(), variant: "fp32".into() })
+                    .submit(InferRequest::new("fp32").image(image.clone()))
                     .unwrap()
             })
             .collect();

@@ -49,7 +49,7 @@
 
 mod plan;
 
-pub use crate::coordinator::{Scheme, TierPolicy, VariantSpec};
+pub use crate::coordinator::{InferRequest, Scheme, TierPolicy, VariantSpec};
 pub use crate::error::{AdmissionReason, SwisError, SwisResult};
 pub use crate::exec::{KernelVariant, TuneOptions, TuneParams, TuneReport, WeightProvenance};
 pub use crate::quant::Alpha;
@@ -286,23 +286,32 @@ impl Session {
         self.stats.lock().unwrap().clone()
     }
 
-    /// [`Session::run`] with a down-tier hint: `tier` is the tier depth
-    /// the caller will tolerate for this request (0 = full precision —
-    /// identical to `run`). When the plan carries a
-    /// [`TierPolicy`] and the requested variant sits higher on the
-    /// ladder than the hint, the request executes at the deeper,
-    /// cheaper tier instead — precision is only ever *lowered*, and
-    /// never past the policy floor. Returns the logits plus the name of
-    /// the variant that actually served them.
-    pub fn run_tiered(
-        &self,
-        variant: &str,
-        tier: usize,
-        images: &Tensor<f32>,
-    ) -> SwisResult<(Tensor<f32>, String)> {
-        let (effective, _) = self.plan.resolve_tier(variant, tier);
+    /// Serve one typed [`InferRequest`] — the same submission type the
+    /// worker pool and the network edge consume, so a request built once
+    /// behaves identically through every entry. The request's
+    /// `tier_hint` is the tier depth the caller will tolerate (0 = full
+    /// precision): when the plan carries a [`TierPolicy`] and the
+    /// requested variant sits higher on the ladder than the hint, the
+    /// request executes at the deeper, cheaper tier instead — precision
+    /// is only ever *lowered*, and never past the policy floor. The
+    /// single image rides in `req.image`; priority/deadline/tenant are
+    /// pool- and edge-level concerns and are ignored here. Returns the
+    /// `(1, n_classes)` logits plus the name of the variant that
+    /// actually served them.
+    pub fn serve(&self, req: &InferRequest) -> SwisResult<(Tensor<f32>, String)> {
+        let [h, w, c] = self.plan.input_shape();
+        let per = h * w * c;
+        if req.image.len() != per {
+            return Err(SwisError::admission(
+                AdmissionReason::Invalid,
+                format!("image must have {per} elements, got {}", req.image.len()),
+            ));
+        }
+        let (effective, _) = self.plan.resolve_tier(&req.variant, req.tier_hint);
         let effective = effective.to_string();
-        let logits = self.run(&effective, images)?;
+        let images = Tensor::new(&[1, h, w, c], req.image.clone())
+            .map_err(SwisError::backend_from)?;
+        let logits = self.run(&effective, &images)?;
         Ok((logits, effective))
     }
 
@@ -505,18 +514,26 @@ mod tests {
         plan.set_tier_policy(ladder).unwrap();
         let plan = Arc::new(plan);
         let s = Session::new(Arc::clone(&plan));
-        let x = images(2, 3);
+        let x = images(1, 3);
+        let req = |variant: &str, hint: usize| {
+            InferRequest::new(variant).image(x.data().to_vec()).tier_hint(hint)
+        };
         // hint 0 = full precision, identical to plain run
-        let (full, v) = s.run_tiered("swis@4", 0, &x).unwrap();
+        let (full, v) = s.serve(&req("swis@4", 0)).unwrap();
         assert_eq!(v, "swis@4");
         assert_eq!(full.data(), s.run("swis@4", &x).unwrap().data());
         // a deep hint serves the floor tier's exact logits
-        let (down, v) = s.run_tiered("swis@4", 99, &x).unwrap();
+        let (down, v) = s.serve(&req("swis@4", 99)).unwrap();
         assert_eq!(v, "swis@2");
         assert_eq!(down.data(), s.run("swis@2", &x).unwrap().data());
         // a hint shallower than the variant's own tier never raises it
-        let (_, v) = s.run_tiered("swis@3", 0, &x).unwrap();
+        let (_, v) = s.serve(&req("swis@3", 0)).unwrap();
         assert_eq!(v, "swis@3");
+        // a malformed image is the pool's own Invalid admission class
+        assert!(matches!(
+            s.serve(&InferRequest::new("swis@4").image(vec![0.0; 7])).unwrap_err(),
+            SwisError::Admission { reason: AdmissionReason::Invalid, .. }
+        ));
     }
 
     #[test]

@@ -24,6 +24,51 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// One adversarial-client protocol fault class, as counted by
+/// [`Metrics::record_wire_fault`]. The label values of
+/// `swis_wire_faults_total{kind=...}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// First 5 bytes of a frame were not `SWIS1`.
+    BadMagic,
+    /// Structurally invalid body, or a partial frame then disconnect.
+    BadFrame,
+    /// Length prefix above the frame cap — refused before allocation.
+    Oversized,
+    /// Client stalled mid-frame past the read-stall budget.
+    StalledRead,
+    /// Client stopped reading until the server's write timed out.
+    StalledWrite,
+}
+
+/// Network-edge counters carried on every [`MetricsSnapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireCounters {
+    /// `swis_wire_faults_total{kind="bad_magic"}`.
+    pub bad_magic: u64,
+    /// `swis_wire_faults_total{kind="bad_frame"}`.
+    pub bad_frame: u64,
+    /// `swis_wire_faults_total{kind="oversized"}`.
+    pub oversized: u64,
+    /// `swis_wire_faults_total{kind="stalled_read"}`.
+    pub stalled_read: u64,
+    /// `swis_wire_faults_total{kind="stalled_write"}`.
+    pub stalled_write: u64,
+    /// `swis_quota_rejected_total` — over-quota `Admission{Rejected}`s.
+    pub quota_rejected: u64,
+    /// `swis_conns_total{event="opened"}`.
+    pub conns_opened: u64,
+    /// `swis_conns_total{event="closed"}`.
+    pub conns_closed: u64,
+}
+
+impl WireCounters {
+    /// Sum of the protocol-fault classes (not quota/conn events).
+    pub fn faults(&self) -> u64 {
+        self.bad_magic + self.bad_frame + self.oversized + self.stalled_read + self.stalled_write
+    }
+}
+
 struct Inner {
     requests: u64,
     batches: u64,
@@ -41,6 +86,7 @@ struct Inner {
     errors: u64,
     /// Worker panics caught by the pool (in-flight batch failed).
     panics: u64,
+    wire: WireCounters,
     batch_sizes: Reservoir,
     queue_us: Reservoir,
     exec_us: Reservoir,
@@ -58,6 +104,7 @@ impl Default for Metrics {
                 degraded: 0,
                 errors: 0,
                 panics: 0,
+                wire: WireCounters::default(),
                 // distinct fixed seeds: deterministic, independent streams
                 batch_sizes: Reservoir::new(RESERVOIR_CAP, 0xB0),
                 queue_us: Reservoir::new(RESERVOIR_CAP, 0xB1),
@@ -92,6 +139,10 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// `swis_panics_total` — worker panics contained by the pool.
     pub panics: u64,
+    /// Network-edge protocol accounting: `swis_wire_faults_total{kind=...}`
+    /// plus connection counters. All-zero for pools not fronted by
+    /// [`crate::edge::EdgeServer`].
+    pub wire: WireCounters,
     /// `swis_mean_batch` gauge.
     pub mean_batch: f64,
     /// Feeds `swis_queue_wait_us{quantile=...}`.
@@ -138,6 +189,37 @@ impl Metrics {
         self.inner.lock().unwrap().panics += 1;
     }
 
+    /// Count one wire-level protocol fault ([`WireFault`] names the
+    /// adversarial-client class). Recorded by the network edge; each
+    /// class keeps the server serving — faults cost a counter bump and
+    /// (at worst) that one connection, never the process.
+    pub fn record_wire_fault(&self, fault: WireFault) {
+        let mut m = self.inner.lock().unwrap();
+        match fault {
+            WireFault::BadMagic => m.wire.bad_magic += 1,
+            WireFault::BadFrame => m.wire.bad_frame += 1,
+            WireFault::Oversized => m.wire.oversized += 1,
+            WireFault::StalledRead => m.wire.stalled_read += 1,
+            WireFault::StalledWrite => m.wire.stalled_write += 1,
+        }
+    }
+
+    /// Count one over-quota refusal (typed `Admission{Rejected}` on the
+    /// wire — the connection stays open).
+    pub fn record_quota_rejected(&self) {
+        self.inner.lock().unwrap().wire.quota_rejected += 1;
+    }
+
+    /// Count one accepted connection.
+    pub fn record_conn_opened(&self) {
+        self.inner.lock().unwrap().wire.conns_opened += 1;
+    }
+
+    /// Count one closed connection (clean or faulted).
+    pub fn record_conn_closed(&self) {
+        self.inner.lock().unwrap().wire.conns_closed += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let total_us = m.total_us.summary();
@@ -151,6 +233,7 @@ impl Metrics {
             degraded: m.degraded,
             errors: m.errors,
             panics: m.panics,
+            wire: m.wire,
             mean_batch: if m.batches == 0 {
                 0.0
             } else {
@@ -225,6 +308,29 @@ mod tests {
         assert_eq!(s.shed, 7);
         assert_eq!(s.rejected_by_lane, [0, 1]);
         assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn wire_counters_accumulate_per_fault_class() {
+        let m = Metrics::default();
+        m.record_conn_opened();
+        m.record_conn_opened();
+        m.record_conn_closed();
+        m.record_wire_fault(WireFault::BadMagic);
+        m.record_wire_fault(WireFault::BadFrame);
+        m.record_wire_fault(WireFault::BadFrame);
+        m.record_wire_fault(WireFault::Oversized);
+        m.record_wire_fault(WireFault::StalledRead);
+        m.record_wire_fault(WireFault::StalledWrite);
+        m.record_quota_rejected();
+        let w = m.snapshot().wire;
+        assert_eq!(
+            (w.bad_magic, w.bad_frame, w.oversized, w.stalled_read, w.stalled_write),
+            (1, 2, 1, 1, 1)
+        );
+        assert_eq!(w.faults(), 6);
+        assert_eq!(w.quota_rejected, 1);
+        assert_eq!((w.conns_opened, w.conns_closed), (2, 1));
     }
 
     #[test]

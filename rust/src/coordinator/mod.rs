@@ -44,7 +44,7 @@ pub use admission::{
     PRESSURE_DOWN_TWO,
 };
 pub use batcher::{BatchPolicy, PendingBatch};
-pub use metrics::{Metrics, MetricsSnapshot, RESERVOIR_CAP};
+pub use metrics::{Metrics, MetricsSnapshot, WireCounters, WireFault, RESERVOIR_CAP};
 pub use pool::{Admission, PoolConfig, Ticket, WorkerPool, DEFAULT_QUEUE_DEPTH};
 pub use server::{Coordinator, InferRequest, InferResponse};
 pub use variants::{quantize_jax_weight, Scheme, VariantSpec, WeightVariants};

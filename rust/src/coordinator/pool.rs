@@ -283,14 +283,11 @@ impl WorkerPool {
     /// Non-blocking admission: `Ok(Busy)` is backpressure (counted in
     /// metrics as rejected); `Err` is a typed hard fault — `Admission`
     /// with reason `Invalid` (bad request) or `Closed` (pool down).
-    /// `deadline` is the shed budget measured from now.
-    pub fn try_submit(
-        &self,
-        req: InferRequest,
-        pri: Priority,
-        deadline: Option<Duration>,
-    ) -> SwisResult<Admission> {
-        let (job, rx) = self.make_job(req, pri, deadline)?;
+    /// Priority, shed deadline (measured from now), tier hint and trace
+    /// flag all ride on the [`InferRequest`].
+    pub fn try_submit(&self, req: InferRequest) -> SwisResult<Admission> {
+        let pri = req.priority;
+        let (job, rx) = self.make_job(req)?;
         let degraded = job.degraded;
         match self.queue.try_push(job, pri) {
             Ok(()) => {
@@ -311,13 +308,9 @@ impl WorkerPool {
     }
 
     /// Blocking admission: waits for queue space instead of refusing.
-    pub fn submit(
-        &self,
-        req: InferRequest,
-        pri: Priority,
-        deadline: Option<Duration>,
-    ) -> SwisResult<Ticket> {
-        let (job, rx) = self.make_job(req, pri, deadline)?;
+    pub fn submit(&self, req: InferRequest) -> SwisResult<Ticket> {
+        let pri = req.priority;
+        let (job, rx) = self.make_job(req)?;
         let degraded = job.degraded;
         self.queue.push_wait(job, pri).map_err(|_| {
             SwisError::admission(AdmissionReason::Closed, "worker pool is shut down")
@@ -333,18 +326,13 @@ impl WorkerPool {
     /// failure (a contained worker panic dropped the in-flight batch —
     /// the pool may well still be serving), not `Admission::Closed`.
     pub fn infer(&self, req: InferRequest) -> SwisResult<InferResponse> {
-        let rx = self.submit(req, Priority::Interactive, None)?;
+        let rx = self.submit(req)?;
         rx.recv().map_err(|_| {
             SwisError::backend("pool dropped the request (in-flight batch failed)")
         })?
     }
 
-    fn make_job(
-        &self,
-        mut req: InferRequest,
-        pri: Priority,
-        deadline: Option<Duration>,
-    ) -> SwisResult<(Job, Ticket)> {
+    fn make_job(&self, mut req: InferRequest) -> SwisResult<(Job, Ticket)> {
         if req.image.len() != self.image_len {
             return Err(SwisError::admission(
                 AdmissionReason::Invalid,
@@ -361,13 +349,23 @@ impl WorkerPool {
         // opens the timeline the queue/batch/compute attribution hangs
         // off. Records the variant as REQUESTED; a degrade rewrite below
         // is stamped on top.
-        let mut trace = if self.trace_sample > 0 && obs::tracing_on() {
+        let mut trace = if obs::tracing_on() && (req.trace || self.trace_sample > 0) {
             let id = TraceId::mint();
-            (id.0 % self.trace_sample as u64 == 0)
+            (req.trace || id.0 % self.trace_sample as u64 == 0)
                 .then(|| RequestTrace::begin(id, &req.variant))
         } else {
             None
         };
+        // Client-sanctioned tier relaxation: resolve the hint against the
+        // ladder BEFORE pressure degrade. Not counted as `degraded` —
+        // the client asked for the relaxation.
+        if req.tier_hint > 0 {
+            if let Some(policy) = &self.tiers {
+                let (eff, _) = policy.resolve(&req.variant, req.tier_hint);
+                let eff = eff.to_string();
+                req.variant = eff;
+            }
+        }
         // Degrade-don't-shed: under queue pressure, rewrite the variant
         // down the precision ladder BEFORE enqueueing, so affinity
         // batching groups jobs by the variant that will actually run and
@@ -389,15 +387,9 @@ impl WorkerPool {
         };
         let now = Instant::now();
         let (respond, rx) = mpsc::channel();
-        let job = Job {
-            req,
-            respond,
-            enqueued: now,
-            deadline: deadline.map(|d| now + d),
-            degraded,
-            pri,
-            trace,
-        };
+        let pri = req.priority;
+        let deadline = req.deadline.map(|d| now + d);
+        let job = Job { req, respond, enqueued: now, deadline, degraded, pri, trace };
         Ok((job, rx))
     }
 
@@ -661,6 +653,7 @@ fn run_chunk(
                 });
                 let _ = j.respond.send(Ok(InferResponse {
                     logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                    variant: variant.to_string(),
                     queue: queue_ts[i],
                     total: total_ts[i],
                     batch_size: n,

@@ -19,19 +19,118 @@ use super::variants::VariantSpec;
 use crate::error::SwisResult;
 use crate::runtime::BackendKind;
 
-/// One inference request: an NHWC image (flattened `hw * hw * c` of the
-/// served network — 32x32x3 for TinyCNN) routed to a weight variant.
+/// One inference request — the single submission type consumed by every
+/// entry into the serving stack: the in-process [`super::WorkerPool`],
+/// the [`crate::api::Session::serve`] facade, and the network edge
+/// ([`crate::edge`]), whose wire frame is just this struct serialized.
+/// Collapsing the old positional `submit(req, priority, deadline)`
+/// surface into one builder keeps the in-process and wire paths from
+/// drifting.
+///
+/// Construct with [`InferRequest::new`] and chain the builder methods:
+///
+/// ```ignore
+/// let req = InferRequest::new("swis@3")
+///     .image(pixels)
+///     .priority(Priority::Interactive)
+///     .deadline(Duration::from_millis(20))
+///     .tier_hint(1)
+///     .tenant("acme");
+/// pool.submit(req)?;
+/// ```
 #[derive(Clone, Debug)]
 pub struct InferRequest {
+    /// Flattened NHWC image (`h * w * c` of the served network —
+    /// 32x32x3 for TinyCNN). Length is validated at admission.
     pub image: Vec<f32>,
     /// Variant name ("fp32", "swis@3", ...). Unknown names fail fast.
     pub variant: String,
+    /// Admission lane (interactive lane is always popped first).
+    pub priority: Priority,
+    /// Queue-residency budget: the request is shed (typed
+    /// `Admission { reason: Shed }`) if it waits longer than this.
+    pub deadline: Option<Duration>,
+    /// Client-requested precision relaxation: serve at most this many
+    /// tiers below the named variant (0 = exactly as requested). The
+    /// hint is resolved against the plan's [`super::TierPolicy`] before
+    /// any pressure-driven degrade, and is NOT counted as `degraded` —
+    /// the client asked for it.
+    pub tier_hint: usize,
+    /// Force a span trace for this request (in addition to the pool's
+    /// every-Nth sampling). Only effective while the obs level is full.
+    pub trace: bool,
+    /// Tenant id for edge quota accounting ("" = anonymous; in-process
+    /// callers normally leave it empty).
+    pub tenant: String,
+}
+
+impl InferRequest {
+    /// A request for `variant` with facade defaults: empty image (fill
+    /// with [`InferRequest::image`]), interactive priority, no deadline,
+    /// no tier relaxation, no forced trace, anonymous tenant.
+    pub fn new(variant: impl Into<String>) -> InferRequest {
+        InferRequest {
+            image: Vec::new(),
+            variant: variant.into(),
+            priority: Priority::Interactive,
+            deadline: None,
+            tier_hint: 0,
+            trace: false,
+            tenant: String::new(),
+        }
+    }
+
+    /// Set the flattened NHWC image payload.
+    pub fn image(mut self, image: Vec<f32>) -> InferRequest {
+        self.image = image;
+        self
+    }
+
+    /// Set the admission lane.
+    pub fn priority(mut self, priority: Priority) -> InferRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the queue-residency shed deadline.
+    pub fn deadline(mut self, deadline: Duration) -> InferRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set an optional shed deadline (None clears it).
+    pub fn deadline_opt(mut self, deadline: Option<Duration>) -> InferRequest {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Allow serving up to `tiers` precision tiers below the requested
+    /// variant (client-sanctioned relaxation, not counted as degraded).
+    pub fn tier_hint(mut self, tiers: usize) -> InferRequest {
+        self.tier_hint = tiers;
+        self
+    }
+
+    /// Force a span trace for this request.
+    pub fn trace(mut self, trace: bool) -> InferRequest {
+        self.trace = trace;
+        self
+    }
+
+    /// Tag the request with a tenant id (edge quota accounting).
+    pub fn tenant(mut self, tenant: impl Into<String>) -> InferRequest {
+        self.tenant = tenant.into();
+        self
+    }
 }
 
 /// The response delivered on the per-request channel.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub logits: Vec<f32>,
+    /// The variant that actually served the request (differs from the
+    /// requested one after a tier hint or a pressure degrade).
+    pub variant: String,
     pub queue: Duration,
     pub total: Duration,
     pub batch_size: usize,
@@ -89,10 +188,10 @@ impl Coordinator {
     }
 
     /// Submit a request; returns the response channel immediately.
-    /// Facade semantics: interactive priority, no shed deadline, blocks
-    /// only in the (deep) admission queue — never refuses with Busy.
+    /// Facade semantics: blocks only in the (deep) admission queue —
+    /// never refuses with Busy. Priority/deadline ride on the request.
     pub fn submit(&self, req: InferRequest) -> SwisResult<Ticket> {
-        self.pool.submit(req, Priority::Interactive, None)
+        self.pool.submit(req)
     }
 
     /// Convenience: submit and block for the result.

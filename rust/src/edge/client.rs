@@ -1,0 +1,123 @@
+//! Minimal blocking SWIS1 client — the counterpart `loadgen` and the
+//! tests drive the [`super::EdgeServer`] with. One socket, sequential
+//! request/response (the server answers in FIFO order per connection),
+//! sequence numbers checked on every reply.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::frame::{self, Frame, FrameError, ModelInfo};
+use super::status::WireStatus;
+use crate::coordinator::InferRequest;
+use crate::error::{SwisError, SwisResult};
+
+/// The answer to one inference round-trip.
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    pub logits: Vec<f32>,
+    /// The variant that actually served the request.
+    pub variant: String,
+    /// Pressure-degraded below the (hint-resolved) requested tier.
+    pub degraded: bool,
+}
+
+/// Blocking SWIS1 connection. Not `Clone` — one in-flight exchange at a
+/// time; open more connections for concurrency.
+pub struct EdgeClient {
+    stream: TcpStream,
+    seq: u64,
+}
+
+impl EdgeClient {
+    /// Connect to a serving edge, with read/write timeouts so a dead
+    /// server surfaces as a typed error instead of a hang.
+    pub fn connect(addr: &str, timeout: Duration) -> SwisResult<EdgeClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| SwisError::io(format!("edge connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(timeout))
+            .map_err(|e| SwisError::io(format!("edge timeout: {e}")))?;
+        stream
+            .set_write_timeout(Some(timeout))
+            .map_err(|e| SwisError::io(format!("edge timeout: {e}")))?;
+        Ok(EdgeClient { stream, seq: 0 })
+    }
+
+    /// Ask the server what it serves (model ids, input shapes,
+    /// variants, tiering).
+    pub fn info(&mut self) -> SwisResult<Vec<ModelInfo>> {
+        self.seq += 1;
+        let seq = self.seq;
+        self.send(&Frame::InfoRequest { seq })?;
+        match self.recv(seq)? {
+            Frame::Info { models, .. } => Ok(models),
+            Frame::Status { code, msg, .. } => Err(wire_error(code, msg)),
+            _ => Err(SwisError::io("unexpected frame type answering info")),
+        }
+    }
+
+    /// One inference round-trip. Server-side refusals (over quota,
+    /// Busy, shed, unknown variant/model) come back as the
+    /// [`SwisError`] the status code decodes to — the same taxonomy an
+    /// in-process `try_submit` caller sees.
+    pub fn infer(&mut self, model: &str, req: InferRequest) -> SwisResult<WireResponse> {
+        self.seq += 1;
+        let seq = self.seq;
+        self.send(&Frame::Infer { seq, model: model.to_string(), req })?;
+        match self.recv(seq)? {
+            Frame::Ok { degraded, variant, logits, .. } => {
+                Ok(WireResponse { logits, variant, degraded })
+            }
+            Frame::Status { code, msg, .. } => Err(wire_error(code, msg)),
+            _ => Err(SwisError::io("unexpected frame type answering infer")),
+        }
+    }
+
+    /// Send raw bytes on the socket — adversarial-client test hook.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> SwisResult<()> {
+        use std::io::Write;
+        self.stream
+            .write_all(bytes)
+            .map_err(|e| SwisError::io(format!("edge write: {e}")))
+    }
+
+    fn send(&mut self, f: &Frame) -> SwisResult<()> {
+        self.send_raw(&frame::encode(f))
+    }
+
+    fn recv(&mut self, want_seq: u64) -> SwisResult<Frame> {
+        let f = match frame::read_frame(&mut self.stream) {
+            Ok(f) => f,
+            Err(FrameError::Closed) => {
+                return Err(SwisError::io("server closed the connection"))
+            }
+            Err(e) => return Err(SwisError::io(format!("edge read: {e}"))),
+        };
+        let seq = match &f {
+            Frame::Infer { seq, .. }
+            | Frame::Ok { seq, .. }
+            | Frame::Status { seq, .. }
+            | Frame::InfoRequest { seq }
+            | Frame::Info { seq, .. } => *seq,
+        };
+        // seq 0 marks server-initiated faults (oversized/malformed)
+        // that could not echo a request sequence
+        if seq != want_seq && seq != 0 {
+            return Err(SwisError::io(format!(
+                "response sequence {seq} does not match request {want_seq}"
+            )));
+        }
+        Ok(f)
+    }
+}
+
+/// Decode a wire status into the error the server mapped it from.
+fn wire_error(code: u16, msg: String) -> SwisError {
+    match WireStatus::from_code(code) {
+        Some(s) => s
+            .into_error(msg)
+            .unwrap_or_else(|| SwisError::io("status frame carried code 0 (ok)")),
+        None => SwisError::io(format!("unknown wire status code {code}: {msg}")),
+    }
+}

@@ -1,0 +1,527 @@
+//! The SWIS1 length-prefixed binary wire format — the network face of
+//! the serving stack, deliberately dependency-free (no serde; explicit
+//! little-endian codec, mirroring the `.swisplan` container's style).
+//!
+//! Every frame starts with a 10-byte header:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       5     magic "SWIS1" (protocol version rides in the magic)
+//!   5       1     frame type (FT_* constants)
+//!   6       4     body length, u32 LE (<= MAX_FRAME, checked BEFORE
+//!                 any allocation — an adversarial length prefix cannot
+//!                 balloon server memory)
+//!   10      len   body
+//! ```
+//!
+//! Body layouts (all integers LE, strings are length-prefixed UTF-8):
+//!
+//! ```text
+//!   infer request (FT_INFER):
+//!     seq u64 | tenant str8 | model str8 | variant str8
+//!     | tier u8 | lane u8 (0 interactive, 1 batch)
+//!     | flags u8 (bit0 = trace) | deadline_us u64 (0 = none)
+//!     | n_vals u32 | image f32 x n_vals
+//!   ok response (FT_OK):
+//!     seq u64 | flags u8 (bit0 = degraded) | served variant str8
+//!     | n u32 | logits f32 x n
+//!   status response (FT_STATUS):
+//!     seq u64 | code u16 (see edge::status) | msg str16
+//!   info request (FT_INFO_REQ):   seq u64
+//!   info response (FT_INFO):
+//!     seq u64 | n_models u8 | per model:
+//!       id str8 | h u16 | w u16 | c u16 | tiered u8
+//!       | n_variants u8 | variant str8 x n_variants
+//! ```
+//!
+//! The infer frame is just a serialized
+//! [`InferRequest`](crate::coordinator::InferRequest) plus a routing
+//! model id and a client sequence number — the wire and in-process
+//! submission surfaces share one type, so they cannot drift.
+
+use std::io::Read;
+use std::time::Duration;
+
+use crate::coordinator::{InferRequest, Priority};
+
+/// Frame magic; the trailing `1` is the protocol version.
+pub const MAGIC: [u8; 5] = *b"SWIS1";
+
+/// Hard cap on a frame body. Checked against the length prefix before
+/// any buffer is allocated; larger prefixes are a protocol fault.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+pub const FT_INFER: u8 = 1;
+pub const FT_OK: u8 = 2;
+pub const FT_STATUS: u8 = 3;
+pub const FT_INFO_REQ: u8 = 4;
+pub const FT_INFO: u8 = 5;
+
+/// One served model, as advertised in the info response — enough for a
+/// client (`swis loadgen --connect`) to self-configure image sizes and
+/// variant names without out-of-band coordination.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub id: String,
+    /// Input shape `[h, w, c]`.
+    pub input: [usize; 3],
+    pub variants: Vec<String>,
+    /// Whether the model's plan carries a degrade ladder.
+    pub tiered: bool,
+}
+
+/// A decoded SWIS1 frame.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Client → server: run `req` on `model`.
+    Infer { seq: u64, model: String, req: InferRequest },
+    /// Server → client: logits, possibly served below the requested
+    /// precision tier.
+    Ok { seq: u64, degraded: bool, variant: String, logits: Vec<f32> },
+    /// Server → client: a typed refusal/failure (`code` is an
+    /// [`edge::status::WireStatus`](super::status::WireStatus) code).
+    Status { seq: u64, code: u16, msg: String },
+    /// Client → server: describe your models.
+    InfoRequest { seq: u64 },
+    /// Server → client: the model table.
+    Info { seq: u64, models: Vec<ModelInfo> },
+}
+
+/// Why a frame could not be read — the server maps each case onto its
+/// own wire-fault counter, so adversarial-client tests can assert the
+/// exact failure class.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean EOF on a frame boundary (normal client close).
+    Closed,
+    /// EOF mid-frame — a partial frame then disconnect.
+    Truncated,
+    /// A read timed out. `mid_frame` distinguishes an idle connection
+    /// (poll again) from a client that stalled while sending a frame
+    /// (protocol fault).
+    Stalled { mid_frame: bool },
+    /// The 5 bytes where the magic should be.
+    BadMagic([u8; 5]),
+    /// Length prefix above [`MAX_FRAME`]; refused before allocation.
+    Oversized(u32),
+    /// Structurally invalid body (bad type tag, short fields, non-UTF8
+    /// strings, inconsistent counts).
+    Malformed(String),
+    /// Any other socket error.
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "partial frame then disconnect"),
+            FrameError::Stalled { mid_frame } => {
+                write!(f, "read stalled (mid_frame={mid_frame})")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:?}"),
+            FrameError::Oversized(n) => {
+                write!(f, "length prefix {n} exceeds MAX_FRAME {MAX_FRAME}")
+            }
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            FrameError::Io(m) => write!(f, "socket error: {m}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_str8(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let n = b.len().min(255);
+    out.push(n as u8);
+    out.extend_from_slice(&b[..n]);
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let n = b.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&b[..n]);
+}
+
+/// Serialize a frame (header + body) into one write-ready buffer.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let (ftype, body) = encode_body(frame);
+    let mut out = Vec::with_capacity(10 + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(ftype);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+fn encode_body(frame: &Frame) -> (u8, Vec<u8>) {
+    match frame {
+        Frame::Infer { seq, model, req } => {
+            let mut b = Vec::with_capacity(64 + req.image.len() * 4);
+            b.extend_from_slice(&seq.to_le_bytes());
+            put_str8(&mut b, &req.tenant);
+            put_str8(&mut b, model);
+            put_str8(&mut b, &req.variant);
+            b.push(req.tier_hint.min(255) as u8);
+            b.push(match req.priority {
+                Priority::Interactive => 0,
+                Priority::Batch => 1,
+            });
+            b.push(u8::from(req.trace));
+            let deadline_us = req.deadline.map_or(0u64, |d| d.as_micros() as u64);
+            b.extend_from_slice(&deadline_us.to_le_bytes());
+            b.extend_from_slice(&(req.image.len() as u32).to_le_bytes());
+            for v in &req.image {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            (FT_INFER, b)
+        }
+        Frame::Ok { seq, degraded, variant, logits } => {
+            let mut b = Vec::with_capacity(32 + logits.len() * 4);
+            b.extend_from_slice(&seq.to_le_bytes());
+            b.push(u8::from(*degraded));
+            put_str8(&mut b, variant);
+            b.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+            for v in logits {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            (FT_OK, b)
+        }
+        Frame::Status { seq, code, msg } => {
+            let mut b = Vec::with_capacity(16 + msg.len());
+            b.extend_from_slice(&seq.to_le_bytes());
+            b.extend_from_slice(&code.to_le_bytes());
+            put_str16(&mut b, msg);
+            (FT_STATUS, b)
+        }
+        Frame::InfoRequest { seq } => (FT_INFO_REQ, seq.to_le_bytes().to_vec()),
+        Frame::Info { seq, models } => {
+            let mut b = Vec::with_capacity(64);
+            b.extend_from_slice(&seq.to_le_bytes());
+            b.push(models.len().min(255) as u8);
+            for m in models.iter().take(255) {
+                put_str8(&mut b, &m.id);
+                for d in m.input {
+                    b.extend_from_slice(&(d.min(u16::MAX as usize) as u16).to_le_bytes());
+                }
+                b.push(u8::from(m.tiered));
+                b.push(m.variants.len().min(255) as u8);
+                for v in m.variants.iter().take(255) {
+                    put_str8(&mut b, v);
+                }
+            }
+            (FT_INFO, b)
+        }
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Cursor over a fully-read frame body.
+struct Cur<'b> {
+    b: &'b [u8],
+    at: usize,
+}
+
+impl<'b> Cur<'b> {
+    fn take(&mut self, n: usize) -> Result<&'b [u8], FrameError> {
+        if self.at + n > self.b.len() {
+            return Err(FrameError::Malformed(format!(
+                "body short: wanted {n} bytes at offset {}, have {}",
+                self.at,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str8(&mut self) -> Result<String, FrameError> {
+        let n = self.u8()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| FrameError::Malformed("non-UTF8 string field".into()))
+    }
+
+    fn str16(&mut self) -> Result<String, FrameError> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| FrameError::Malformed("non-UTF8 string field".into()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<(), FrameError> {
+        if self.at != self.b.len() {
+            return Err(FrameError::Malformed(format!(
+                "{} trailing bytes after body",
+                self.b.len() - self.at
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode a frame body that was already read off the socket.
+pub fn decode_body(ftype: u8, body: &[u8]) -> Result<Frame, FrameError> {
+    let mut c = Cur { b: body, at: 0 };
+    let frame = match ftype {
+        FT_INFER => {
+            let seq = c.u64()?;
+            let tenant = c.str8()?;
+            let model = c.str8()?;
+            let variant = c.str8()?;
+            let tier = c.u8()? as usize;
+            let lane = c.u8()?;
+            let flags = c.u8()?;
+            let deadline_us = c.u64()?;
+            let n = c.u32()? as usize;
+            let image = c.f32s(n)?;
+            let pri = match lane {
+                0 => Priority::Interactive,
+                1 => Priority::Batch,
+                other => {
+                    return Err(FrameError::Malformed(format!("unknown lane {other}")));
+                }
+            };
+            let mut req = InferRequest::new(variant)
+                .image(image)
+                .priority(pri)
+                .tier_hint(tier)
+                .trace(flags & 1 != 0)
+                .tenant(tenant);
+            if deadline_us > 0 {
+                req = req.deadline(Duration::from_micros(deadline_us));
+            }
+            Frame::Infer { seq, model, req }
+        }
+        FT_OK => {
+            let seq = c.u64()?;
+            let degraded = c.u8()? & 1 != 0;
+            let variant = c.str8()?;
+            let n = c.u32()? as usize;
+            let logits = c.f32s(n)?;
+            Frame::Ok { seq, degraded, variant, logits }
+        }
+        FT_STATUS => {
+            let seq = c.u64()?;
+            let code = c.u16()?;
+            let msg = c.str16()?;
+            Frame::Status { seq, code, msg }
+        }
+        FT_INFO_REQ => Frame::InfoRequest { seq: c.u64()? },
+        FT_INFO => {
+            let seq = c.u64()?;
+            let n_models = c.u8()? as usize;
+            let mut models = Vec::with_capacity(n_models);
+            for _ in 0..n_models {
+                let id = c.str8()?;
+                let h = c.u16()? as usize;
+                let w = c.u16()? as usize;
+                let ch = c.u16()? as usize;
+                let tiered = c.u8()? != 0;
+                let n_variants = c.u8()? as usize;
+                let mut variants = Vec::with_capacity(n_variants);
+                for _ in 0..n_variants {
+                    variants.push(c.str8()?);
+                }
+                models.push(ModelInfo { id, input: [h, w, ch], variants, tiered });
+            }
+            Frame::Info { seq, models }
+        }
+        other => return Err(FrameError::Malformed(format!("unknown frame type {other}"))),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Fill `buf` from `r`, classifying the interruption. `*consumed`
+/// tracks bytes of the CURRENT frame already read, so a timeout on a
+/// frame boundary reads as idle while the same timeout mid-frame reads
+/// as a stalled sender.
+fn fill(r: &mut impl Read, buf: &mut [u8], consumed: &mut usize) -> Result<(), FrameError> {
+    let mut at = 0;
+    while at < buf.len() {
+        match r.read(&mut buf[at..]) {
+            Ok(0) => {
+                return Err(if *consumed == 0 && at == 0 {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated
+                });
+            }
+            Ok(n) => {
+                at += n;
+                *consumed += n;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(FrameError::Stalled { mid_frame: *consumed > 0 || at > 0 });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. The oversize check runs on the raw length prefix —
+/// before any body buffer exists — so a hostile 4 GiB prefix costs the
+/// server 10 bytes of header read, not an allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, FrameError> {
+    let mut consumed = 0usize;
+    let mut head = [0u8; 10];
+    fill(r, &mut head, &mut consumed)?;
+    let magic: [u8; 5] = head[..5].try_into().unwrap();
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let ftype = head[5];
+    let len = u32::from_le_bytes(head[6..10].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    fill(r, &mut body, &mut consumed)?;
+    decode_body(ftype, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: &Frame) -> Frame {
+        let bytes = encode(f);
+        read_frame(&mut &bytes[..]).unwrap()
+    }
+
+    #[test]
+    fn infer_frame_round_trips_the_full_request() {
+        let req = InferRequest::new("swis@3")
+            .image(vec![0.25, -1.5, 3.25])
+            .priority(Priority::Batch)
+            .deadline(Duration::from_millis(20))
+            .tier_hint(2)
+            .trace(true)
+            .tenant("acme");
+        let f = Frame::Infer { seq: 42, model: "tinycnn".into(), req };
+        match round_trip(&f) {
+            Frame::Infer { seq, model, req } => {
+                assert_eq!(seq, 42);
+                assert_eq!(model, "tinycnn");
+                assert_eq!(req.variant, "swis@3");
+                assert_eq!(req.image, vec![0.25, -1.5, 3.25]);
+                assert_eq!(req.priority, Priority::Batch);
+                assert_eq!(req.deadline, Some(Duration::from_millis(20)));
+                assert_eq!(req.tier_hint, 2);
+                assert!(req.trace);
+                assert_eq!(req.tenant, "acme");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_and_info_frames_round_trip() {
+        match round_trip(&Frame::Ok {
+            seq: 7,
+            degraded: true,
+            variant: "swis@2".into(),
+            logits: vec![1.0, 2.0],
+        }) {
+            Frame::Ok { seq, degraded, variant, logits } => {
+                assert_eq!((seq, degraded, variant.as_str()), (7, true, "swis@2"));
+                assert_eq!(logits, vec![1.0, 2.0]);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match round_trip(&Frame::Status { seq: 9, code: 24, msg: "over quota".into() }) {
+            Frame::Status { seq, code, msg } => {
+                assert_eq!((seq, code, msg.as_str()), (9, 24, "over quota"));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let models = vec![ModelInfo {
+            id: "tinycnn".into(),
+            input: [32, 32, 3],
+            variants: vec!["fp32".into(), "swis@3".into()],
+            tiered: true,
+        }];
+        match round_trip(&Frame::Info { seq: 1, models: models.clone() }) {
+            Frame::Info { seq, models: got } => {
+                assert_eq!(seq, 1);
+                assert_eq!(got, models);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert!(matches!(round_trip(&Frame::InfoRequest { seq: 3 }), Frame::InfoRequest {
+            seq: 3
+        }));
+    }
+
+    #[test]
+    fn adversarial_bytes_are_typed_faults() {
+        // garbage magic
+        let mut bytes = encode(&Frame::InfoRequest { seq: 1 });
+        bytes[0] = b'X';
+        assert!(matches!(read_frame(&mut &bytes[..]), Err(FrameError::BadMagic(_))));
+        // oversized length prefix: refused straight off the header
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&MAGIC);
+        huge.push(FT_INFER);
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(read_frame(&mut &huge[..]), Err(FrameError::Oversized(_))));
+        // partial frame then disconnect
+        let good = encode(&Frame::InfoRequest { seq: 1 });
+        assert!(matches!(
+            read_frame(&mut &good[..good.len() - 3]),
+            Err(FrameError::Truncated)
+        ));
+        // clean EOF on a boundary
+        assert!(matches!(read_frame(&mut &[][..]), Err(FrameError::Closed)));
+        // inconsistent counts inside the body
+        let mut lying = encode(&Frame::Ok {
+            seq: 1,
+            degraded: false,
+            variant: "v".into(),
+            logits: vec![1.0],
+        });
+        // body claims 2 logits but carries 1 (n field sits after seq(8)+flag(1)+str8("v")=2)
+        let n_off = 10 + 8 + 1 + 2;
+        lying[n_off] = 2;
+        assert!(matches!(
+            decode_body(FT_OK, &lying[10..]),
+            Err(FrameError::Malformed(_))
+        ));
+        // unknown frame type
+        assert!(matches!(
+            decode_body(99, &1u64.to_le_bytes()),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+}

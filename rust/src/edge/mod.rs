@@ -1,0 +1,42 @@
+//! The network edge (L4): a dependency-free TCP serving front for the
+//! coordinator, speaking the length-prefixed `SWIS1` wire protocol.
+//!
+//! ```text
+//!  TCP clients ──SWIS1 frames──▶ EdgeServer (accept loop, std only)
+//!                                  │ per-tenant token-bucket quota
+//!                                  │ per-model WorkerPool routing
+//!                                  │ queue-depth worker rebalancing
+//!                                  ▼
+//!                               coordinator (admission → pool → engine)
+//! ```
+//!
+//! Layout:
+//!
+//! * [`frame`] — the wire codec: `SWIS1` magic, 10-byte header, typed
+//!   request/response frames, allocation-safe bounded decode.
+//! * [`status`] — the single [`SwisError`](crate::error::SwisError) ↔
+//!   wire status-code mapping (exhaustive both ways, round-trip
+//!   property-tested).
+//! * [`quota`] — deterministic per-tenant token buckets.
+//! * [`server`] — [`EdgeServer`]: accept loop, reader/writer pair per
+//!   connection, [`PlanCache`]-backed pools, rebalancer.
+//! * [`client`] — [`EdgeClient`]: the blocking client `loadgen
+//!   --connect` and the tests use.
+//!
+//! The wire frame is a serialized
+//! [`InferRequest`](crate::coordinator::InferRequest) — in-process and
+//! networked callers build the exact same request type, so the two
+//! paths cannot drift. See the "Network edge" chapter in the crate docs
+//! for the byte-level frame layout and the status-code table.
+
+pub mod client;
+pub mod frame;
+pub mod quota;
+pub mod server;
+pub mod status;
+
+pub use client::{EdgeClient, WireResponse};
+pub use frame::{Frame, FrameError, ModelInfo, MAX_FRAME};
+pub use quota::{QuotaConfig, TenantQuotas};
+pub use server::{allocate, EdgeConfig, EdgeServer, PlanCache, PoolTotals};
+pub use status::WireStatus;

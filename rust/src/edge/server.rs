@@ -1,0 +1,672 @@
+//! The SWIS1 TCP serving edge: a std-`TcpListener` accept loop (the
+//! same dependency-free style as [`crate::obs::http`]) with one
+//! reader/writer thread pair per connection, feeding per-model
+//! [`WorkerPool`]s through per-tenant token-bucket quotas.
+//!
+//! ```text
+//!   TCP conn ──reader──▶ quota check ──▶ route by model id ──▶ try_submit
+//!      ▲                    │  over-quota: Status(rejected)       │
+//!      │                    │  unknown model: Status(invalid)     ▼
+//!   writer ◀── mpsc (FIFO per conn) ◀── Ready(Status) | Pending(Ticket)
+//! ```
+//!
+//! Design rules, each pinned by `tests/edge_serving.rs`:
+//!
+//! * **Refusals are frames, not hangups.** Over-quota, Busy and
+//!   malformed-request refusals answer with a typed status frame on the
+//!   open connection; only protocol faults (bad magic, oversized
+//!   prefix, stalls, truncation) cost the client its connection.
+//! * **Faults are counted, never fatal.** Every adversarial-client
+//!   class bumps a [`WireFault`] counter on the edge [`Metrics`] and
+//!   the server keeps serving other connections.
+//! * **Pools are swappable.** Each model's pool is an
+//!   `Arc<WorkerPool>` built from a shared [`PlanCache`] (warm-up from
+//!   a cached plan does zero quantization), so the rebalancer can
+//!   rebuild a pool at a new worker count and swap it in while
+//!   in-flight tickets on the old pool still answer — the old pool
+//!   drains on drop.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::frame::{self, Frame, FrameError, ModelInfo};
+use super::quota::{QuotaConfig, TenantQuotas};
+use super::status::WireStatus;
+use crate::api::EnginePlan;
+use crate::coordinator::{
+    Admission, Metrics, PoolConfig, Ticket, WireFault, WorkerPool,
+};
+use crate::error::{AdmissionReason, SwisError, SwisResult};
+use crate::runtime::NativeFactory;
+
+/// Accept-loop poll interval (shutdown latency bound for the listener).
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+
+/// Edge-level knobs. `Default` is tuned for production-ish patience;
+/// tests shrink the stall budgets to milliseconds.
+#[derive(Clone, Debug)]
+pub struct EdgeConfig {
+    /// Per-tenant token-bucket quota; `None` admits everything.
+    pub quota: Option<QuotaConfig>,
+    /// How long the writer waits on a pool ticket before answering
+    /// with a timeout status.
+    pub patience: Duration,
+    /// Mid-frame read stall budget: a client that starts a frame and
+    /// stops sending for this long is cut off (counted `stalled_read`).
+    /// Also the idle-poll interval, so it bounds shutdown latency.
+    pub read_stall: Duration,
+    /// Socket write timeout: a client that stops reading until our
+    /// write blocks this long is cut off (counted `stalled_write`).
+    pub write_stall: Duration,
+    /// Worker threads shared across ALL model pools; the rebalancer
+    /// re-splits this budget by queue depth. Clamped to >= 1 per model.
+    pub worker_budget: usize,
+    /// How often the rebalancer re-splits `worker_budget`; `None`
+    /// freezes the initial even split.
+    pub rebalance: Option<Duration>,
+}
+
+impl Default for EdgeConfig {
+    fn default() -> EdgeConfig {
+        EdgeConfig {
+            quota: None,
+            patience: Duration::from_secs(10),
+            read_stall: Duration::from_secs(2),
+            write_stall: Duration::from_secs(2),
+            worker_budget: 2,
+            rebalance: None,
+        }
+    }
+}
+
+/// `.swisplan` loader that hands out one shared `Arc<EnginePlan>` per
+/// distinct path — N model ids over one plan file cost one
+/// quantize-free load, and their pools share prepared weights.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PathBuf, Arc<EnginePlan>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Load (or reuse) the plan at `path`.
+    pub fn load(&self, path: &Path) -> SwisResult<Arc<EnginePlan>> {
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(p) = plans.get(path) {
+            return Ok(Arc::clone(p));
+        }
+        let plan = Arc::new(EnginePlan::load(path)?);
+        plans.insert(path.to_path_buf(), Arc::clone(&plan));
+        Ok(plan)
+    }
+
+    /// Distinct plans resident in the cache.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Split `budget` workers across models proportionally to their queue
+/// depths (largest-remainder rounding, every model keeps >= 1 worker,
+/// deterministic tie-break by index). Pure — unit-testable without a
+/// single thread.
+pub fn allocate(budget: usize, loads: &[usize]) -> Vec<usize> {
+    let n = loads.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let budget = budget.max(n);
+    // +1 so an idle model still weighs something and division is total
+    let weights: Vec<u64> = loads.iter().map(|&l| l as u64 + 1).collect();
+    let total: u64 = weights.iter().sum();
+    let extra = (budget - n) as u64;
+    let mut out = vec![1usize; n];
+    let mut used = n;
+    let mut fracs: Vec<(u64, usize)> = Vec::with_capacity(n);
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = extra * w;
+        out[i] += (exact / total) as usize;
+        used += (exact / total) as usize;
+        fracs.push((exact % total, i));
+    }
+    fracs.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for (_, i) in fracs {
+        if used >= budget {
+            break;
+        }
+        out[i] += 1;
+        used += 1;
+    }
+    out
+}
+
+struct ModelEntry {
+    plan: Arc<EnginePlan>,
+    pool: Arc<WorkerPool>,
+}
+
+/// Counters accumulated from pools retired by the rebalancer, so the
+/// serve-loop summary survives pool swaps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolTotals {
+    pub requests: u64,
+    pub batches: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub degraded: u64,
+    pub errors: u64,
+    pub panics: u64,
+}
+
+impl PoolTotals {
+    fn absorb(&mut self, s: &crate::coordinator::MetricsSnapshot) {
+        self.requests += s.requests;
+        self.batches += s.batches;
+        self.shed += s.shed;
+        self.rejected += s.rejected;
+        self.degraded += s.degraded;
+        self.errors += s.errors;
+        self.panics += s.panics;
+    }
+}
+
+struct Shared {
+    // BTreeMap-like determinism matters for allocate(): keep a sorted
+    // id list alongside the map.
+    models: Mutex<HashMap<String, ModelEntry>>,
+    model_ids: Vec<String>,
+    quotas: TenantQuotas,
+    /// Wire-level counters (faults, quota refusals, connections); pool
+    /// counters live on each pool's own `Metrics`.
+    metrics: Arc<Metrics>,
+    retired: Mutex<PoolTotals>,
+    cfg: EdgeConfig,
+    pool_cfg: PoolConfig,
+    stop: AtomicBool,
+}
+
+/// Handle to a running SWIS1 edge server.
+pub struct EdgeServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    rebalancer: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl EdgeServer {
+    /// Bind `addr` (port 0 picks a free port) and serve `models` —
+    /// `(model id, prepared plan)` pairs, e.g. from a [`PlanCache`].
+    /// `pool_cfg.workers` is ignored; the edge splits
+    /// `cfg.worker_budget` across models instead.
+    pub fn serve(
+        addr: &str,
+        models: Vec<(String, Arc<EnginePlan>)>,
+        pool_cfg: PoolConfig,
+        cfg: EdgeConfig,
+    ) -> SwisResult<EdgeServer> {
+        if models.is_empty() {
+            return Err(SwisError::config("edge server needs at least one model"));
+        }
+        let mut model_ids: Vec<String> = models.iter().map(|(id, _)| id.clone()).collect();
+        model_ids.sort();
+        model_ids.dedup();
+        if model_ids.len() != models.len() {
+            return Err(SwisError::config("duplicate model id in edge model list"));
+        }
+        let shares = allocate(cfg.worker_budget, &vec![0; models.len()]);
+        let mut map = HashMap::new();
+        for ((id, plan), workers) in models.into_iter().zip(shares) {
+            let pool = start_pool(&plan, workers, &pool_cfg)
+                .map_err(|e| e.context(format!("starting pool for model '{id}'")))?;
+            map.insert(id, ModelEntry { plan, pool });
+        }
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| SwisError::config(format!("edge bind {addr}: {e}")))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| SwisError::config(format!("edge addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| SwisError::config(format!("edge nonblocking: {e}")))?;
+        let shared = Arc::new(Shared {
+            models: Mutex::new(map),
+            model_ids,
+            quotas: TenantQuotas::new(cfg.quota),
+            metrics: Arc::new(Metrics::default()),
+            retired: Mutex::new(PoolTotals::default()),
+            cfg,
+            pool_cfg,
+            stop: AtomicBool::new(false),
+        });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("swis-edge-accept".into())
+                .spawn(move || accept_loop(listener, shared, conns))
+                .map_err(|e| SwisError::backend(format!("spawning edge accept: {e}")))?
+        };
+        let rebalancer = match shared.cfg.rebalance {
+            Some(every) => {
+                let shared = Arc::clone(&shared);
+                Some(
+                    std::thread::Builder::new()
+                        .name("swis-edge-rebalance".into())
+                        .spawn(move || rebalance_loop(shared, every))
+                        .map_err(|e| {
+                            SwisError::backend(format!("spawning edge rebalancer: {e}"))
+                        })?,
+                )
+            }
+            None => None,
+        };
+        Ok(EdgeServer { shared, addr: bound, accept: Some(accept), rebalancer, conns })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wire-level counters (faults, quota refusals, connections).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Per-model worker counts, in sorted model-id order — the
+    /// rebalancer's current split.
+    pub fn worker_split(&self) -> Vec<(String, usize)> {
+        let models = self.shared.models.lock().unwrap();
+        self.shared
+            .model_ids
+            .iter()
+            .map(|id| (id.clone(), models[id].workers()))
+            .collect()
+    }
+
+    /// Aggregate pool counters: live pools plus everything retired by
+    /// the rebalancer.
+    pub fn pool_totals(&self) -> PoolTotals {
+        let mut t = *self.shared.retired.lock().unwrap();
+        let models = self.shared.models.lock().unwrap();
+        for e in models.values() {
+            t.absorb(&e.pool.metrics.snapshot());
+        }
+        t
+    }
+
+    /// Tenants the quota table has seen.
+    pub fn tenants_seen(&self) -> usize {
+        self.shared.quotas.tenants()
+    }
+
+    /// Stop accepting, close every connection, join every thread, and
+    /// shut the model pools down (draining queued jobs).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.rebalancer.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // dropping the entries drops the pool Arcs; WorkerPool::drop
+        // closes admission and joins workers, draining queued jobs
+        self.shared.models.lock().unwrap().clear();
+    }
+}
+
+impl Drop for EdgeServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn start_pool(
+    plan: &Arc<EnginePlan>,
+    workers: usize,
+    pool_cfg: &PoolConfig,
+) -> SwisResult<Arc<WorkerPool>> {
+    let cfg = PoolConfig { workers, ..*pool_cfg };
+    let factory = Arc::new(NativeFactory::from_plan(Arc::clone(plan)));
+    Ok(Arc::new(WorkerPool::start_with_factory(factory, cfg)?))
+}
+
+impl ModelEntry {
+    fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.metrics.record_conn_opened();
+                let shared2 = Arc::clone(&shared);
+                match std::thread::Builder::new()
+                    .name("swis-edge-conn".into())
+                    .spawn(move || conn_main(stream, shared2))
+                {
+                    Ok(h) => conns.lock().unwrap().push(h),
+                    Err(_) => shared.metrics.record_conn_closed(),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// What the reader hands the writer, in submission order (the writer
+/// preserves FIFO response order per connection).
+enum Reply {
+    /// Answer immediately (refusals, info).
+    Ready(Frame),
+    /// Wait for the pool, then answer.
+    Pending { seq: u64, ticket: Ticket },
+}
+
+fn status_frame(seq: u64, e: &SwisError) -> Frame {
+    Frame::Status { seq, code: WireStatus::of(e).code(), msg: e.message().to_string() }
+}
+
+fn conn_main(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_stall));
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            shared.metrics.record_conn_closed();
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let writer = {
+        let shared = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("swis-edge-write".into())
+            .spawn(move || writer_main(writer_stream, rx, shared))
+    };
+    let Ok(writer) = writer else {
+        shared.metrics.record_conn_closed();
+        return;
+    };
+
+    let mut reader = stream;
+    loop {
+        match frame::read_frame(&mut reader) {
+            Ok(Frame::Infer { seq, model, req }) => {
+                let reply = handle_infer(&shared, seq, &model, req);
+                if tx.send(reply).is_err() {
+                    break; // writer gone (stalled write shut us down)
+                }
+            }
+            Ok(Frame::InfoRequest { seq }) => {
+                let models = model_table(&shared);
+                if tx.send(Reply::Ready(Frame::Info { seq, models })).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::Ok { seq, .. } | Frame::Status { seq, .. } | Frame::Info { seq, .. }) => {
+                // a client sending server->client frames is malformed
+                // traffic; answer typed, then drop the connection
+                shared.metrics.record_wire_fault(WireFault::BadFrame);
+                let e = SwisError::admission(
+                    AdmissionReason::Invalid,
+                    "server-to-client frame type on the request path",
+                );
+                let _ = tx.send(Reply::Ready(status_frame(seq, &e)));
+                break;
+            }
+            Err(FrameError::Stalled { mid_frame: false }) => {
+                // idle poll tick; also our shutdown check
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(FrameError::Stalled { mid_frame: true }) => {
+                shared.metrics.record_wire_fault(WireFault::StalledRead);
+                break;
+            }
+            Err(FrameError::Closed) => break,
+            Err(FrameError::Truncated) => {
+                shared.metrics.record_wire_fault(WireFault::BadFrame);
+                break;
+            }
+            Err(FrameError::BadMagic(_)) => {
+                shared.metrics.record_wire_fault(WireFault::BadMagic);
+                break;
+            }
+            Err(FrameError::Oversized(n)) => {
+                shared.metrics.record_wire_fault(WireFault::Oversized);
+                let e = SwisError::admission(
+                    AdmissionReason::Invalid,
+                    format!("frame length {n} exceeds cap {}", frame::MAX_FRAME),
+                );
+                // we cannot resync past an unread oversized body: answer
+                // typed, then close
+                let _ = tx.send(Reply::Ready(status_frame(0, &e)));
+                break;
+            }
+            Err(FrameError::Malformed(msg)) => {
+                shared.metrics.record_wire_fault(WireFault::BadFrame);
+                let e = SwisError::admission(AdmissionReason::Invalid, msg);
+                let _ = tx.send(Reply::Ready(status_frame(0, &e)));
+                break;
+            }
+            Err(FrameError::Io(_)) => break,
+        }
+    }
+    drop(tx); // writer drains queued replies, then exits
+    let _ = writer.join();
+    shared.metrics.record_conn_closed();
+}
+
+fn handle_infer(
+    shared: &Shared,
+    seq: u64,
+    model: &str,
+    req: crate::coordinator::InferRequest,
+) -> Reply {
+    if !shared.quotas.admit(&req.tenant) {
+        shared.metrics.record_quota_rejected();
+        let e = SwisError::admission(
+            AdmissionReason::Rejected,
+            format!("tenant '{}' over quota", req.tenant),
+        );
+        return Reply::Ready(status_frame(seq, &e));
+    }
+    let pool = {
+        let models = shared.models.lock().unwrap();
+        models.get(model).map(|e| Arc::clone(&e.pool))
+    };
+    let Some(pool) = pool else {
+        let e = SwisError::admission(
+            AdmissionReason::Invalid,
+            format!("unknown model '{model}' (serving: {})", shared.model_ids.join(", ")),
+        );
+        return Reply::Ready(status_frame(seq, &e));
+    };
+    match pool.try_submit(req) {
+        Ok(Admission::Accepted(ticket)) => Reply::Pending { seq, ticket },
+        Ok(Admission::Busy) => {
+            let e = SwisError::admission(
+                AdmissionReason::Busy,
+                "admission queue at capacity — retry with backoff",
+            );
+            Reply::Ready(status_frame(seq, &e))
+        }
+        Err(e) => Reply::Ready(status_frame(seq, &e)),
+    }
+}
+
+fn model_table(shared: &Shared) -> Vec<ModelInfo> {
+    let models = shared.models.lock().unwrap();
+    shared
+        .model_ids
+        .iter()
+        .filter_map(|id| models.get(id).map(|e| (id, e)))
+        .map(|(id, e)| {
+            let plan = &e.plan;
+            ModelInfo {
+                id: id.clone(),
+                input: plan.input_shape(),
+                variants: plan.variants().iter().map(|v| v.name.clone()).collect(),
+                tiered: plan.tier_policy().is_some(),
+            }
+        })
+        .collect()
+}
+
+fn writer_main(mut stream: TcpStream, rx: Receiver<Reply>, shared: Arc<Shared>) {
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_stall));
+    for reply in rx {
+        let frame = match reply {
+            Reply::Ready(f) => f,
+            Reply::Pending { seq, ticket } => match ticket.recv_timeout(shared.cfg.patience) {
+                Ok(Ok(resp)) => Frame::Ok {
+                    seq,
+                    degraded: resp.degraded,
+                    variant: resp.variant,
+                    logits: resp.logits,
+                },
+                Ok(Err(e)) => status_frame(seq, &e),
+                Err(_) => status_frame(
+                    seq,
+                    &SwisError::backend(format!(
+                        "no response within {:?} (pool overloaded or dropped the batch)",
+                        shared.cfg.patience
+                    )),
+                ),
+            },
+        };
+        let bytes = frame::encode(&frame);
+        if let Err(e) = stream.write_all(&bytes) {
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut
+            {
+                shared.metrics.record_wire_fault(WireFault::StalledWrite);
+            }
+            // unblock the reader whatever the write failure was; it
+            // observes EOF/reset and winds the connection down
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+    }
+    let _ = stream.flush();
+}
+
+fn rebalance_loop(shared: Arc<Shared>, every: Duration) {
+    let tick = every.min(Duration::from_millis(100)).max(Duration::from_millis(10));
+    let mut since = Duration::ZERO;
+    while !shared.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        since += tick;
+        if since < every {
+            continue;
+        }
+        since = Duration::ZERO;
+        rebalance_once(&shared);
+    }
+}
+
+/// One rebalance pass: re-split the worker budget by queue depth and
+/// swap rebuilt pools in. Old pools drop OUTSIDE the model lock so
+/// their drain/join never blocks request routing.
+fn rebalance_once(shared: &Shared) {
+    let loads: Vec<usize> = {
+        let models = shared.models.lock().unwrap();
+        shared.model_ids.iter().map(|id| models[id].pool.queue_len()).collect()
+    };
+    let targets = allocate(shared.cfg.worker_budget, &loads);
+    let mut retired: Vec<Arc<WorkerPool>> = Vec::new();
+    for (id, target) in shared.model_ids.iter().zip(&targets) {
+        let plan = {
+            let models = shared.models.lock().unwrap();
+            let e = &models[id];
+            if e.workers() == *target {
+                continue;
+            }
+            Arc::clone(&e.plan)
+        };
+        // warm-up outside the lock: plan-cached, so no quantization —
+        // milliseconds, not seconds
+        let Ok(pool) = start_pool(&plan, *target, &shared.pool_cfg) else {
+            continue; // keep the old pool on any build failure
+        };
+        let mut models = shared.models.lock().unwrap();
+        if let Some(e) = models.get_mut(id) {
+            let old = std::mem::replace(&mut e.pool, pool);
+            shared.retired.lock().unwrap().absorb(&old.metrics.snapshot());
+            retired.push(old);
+        }
+    }
+    // drains happen here, lock-free; in-flight tickets on old pools
+    // still deliver (each job owns its response channel)
+    drop(retired);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_is_proportional_and_total_preserving() {
+        // even split when idle
+        assert_eq!(allocate(4, &[0, 0]), vec![2, 2]);
+        // everything beyond the 1-per-model floor follows load
+        assert_eq!(allocate(6, &[90, 0, 10]), vec![4, 1, 1]);
+        // the floor holds even when the budget is short
+        assert_eq!(allocate(1, &[5, 5, 5]), vec![1, 1, 1]);
+        // sums are exact for awkward splits
+        for budget in 1..20 {
+            for loads in [vec![0usize, 3, 9], vec![7, 7], vec![1], vec![0, 0, 0, 0, 5]] {
+                let out = allocate(budget, &loads);
+                assert_eq!(out.len(), loads.len());
+                assert!(out.iter().all(|&w| w >= 1));
+                assert_eq!(out.iter().sum::<usize>(), budget.max(loads.len()));
+            }
+        }
+        // deterministic: same inputs, same split
+        assert_eq!(allocate(7, &[3, 3, 1]), allocate(7, &[3, 3, 1]));
+        assert_eq!(allocate(5, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn heavier_queues_win_workers() {
+        let split = allocate(8, &[100, 1]);
+        assert!(split[0] > split[1], "loaded model must out-rank idle one: {split:?}");
+        assert_eq!(split.iter().sum::<usize>(), 8);
+    }
+}

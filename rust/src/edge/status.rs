@@ -1,0 +1,196 @@
+//! The single [`SwisError`] ↔ wire status-code mapping. Every status a
+//! SWIS1 response frame can carry is minted HERE and nowhere else, with
+//! an exhaustive `match` (no `_` arm) in both directions — adding a
+//! `SwisError` variant or an [`AdmissionReason`] is a compile error in
+//! this module until the new class gets a documented, stable code.
+//!
+//! Code blocks are stable and append-only (wire compatibility):
+//!
+//! | code | status | meaning |
+//! |------|--------|---------|
+//! | 0    | `ok`                 | logits follow in an OK frame |
+//! | 10   | `config`             | invalid configuration |
+//! | 11   | `plan`               | plan build / container failure |
+//! | 12   | `io`                 | filesystem IO failure |
+//! | 13   | `backend`            | backend construction/execution failure |
+//! | 14   | `eval`               | accuracy/compression sweep failure |
+//! | 20   | `admission_busy`     | backpressure: queue at capacity — retry with backoff |
+//! | 21   | `admission_shed`     | deadline shed: queue residency exceeded the budget |
+//! | 22   | `admission_closed`   | pool shut down / no live workers |
+//! | 23   | `admission_invalid`  | malformed request (wrong image size, unknown model) |
+//! | 24   | `admission_rejected` | tenant over its token-bucket quota — slow down |
+
+use crate::error::{AdmissionReason, SwisError};
+
+/// One wire status code. `Ok` (0) accompanies logits; every other
+/// status maps 1:1 onto a [`SwisError`] class (and, for admission, its
+/// typed reason), so a client can reconstruct the same typed error the
+/// in-process caller would have seen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WireStatus {
+    Ok,
+    Config,
+    Plan,
+    Io,
+    Backend,
+    Eval,
+    AdmissionBusy,
+    AdmissionShed,
+    AdmissionClosed,
+    AdmissionInvalid,
+    AdmissionRejected,
+}
+
+/// Every wire status, in code order — the property test round-trips
+/// this list, so a status added without joining it fails the test.
+pub const ALL_STATUSES: [WireStatus; 11] = [
+    WireStatus::Ok,
+    WireStatus::Config,
+    WireStatus::Plan,
+    WireStatus::Io,
+    WireStatus::Backend,
+    WireStatus::Eval,
+    WireStatus::AdmissionBusy,
+    WireStatus::AdmissionShed,
+    WireStatus::AdmissionClosed,
+    WireStatus::AdmissionInvalid,
+    WireStatus::AdmissionRejected,
+];
+
+impl WireStatus {
+    /// The stable u16 carried in status response frames.
+    pub fn code(self) -> u16 {
+        match self {
+            WireStatus::Ok => 0,
+            WireStatus::Config => 10,
+            WireStatus::Plan => 11,
+            WireStatus::Io => 12,
+            WireStatus::Backend => 13,
+            WireStatus::Eval => 14,
+            WireStatus::AdmissionBusy => 20,
+            WireStatus::AdmissionShed => 21,
+            WireStatus::AdmissionClosed => 22,
+            WireStatus::AdmissionInvalid => 23,
+            WireStatus::AdmissionRejected => 24,
+        }
+    }
+
+    /// Decode a wire code; `None` for codes this build does not know
+    /// (newer peer) — callers surface those as a `Backend` error with
+    /// the raw code in the message rather than guessing a class.
+    pub fn from_code(code: u16) -> Option<WireStatus> {
+        ALL_STATUSES.into_iter().find(|s| s.code() == code)
+    }
+
+    /// Short label, used in logs and the README status table.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireStatus::Ok => "ok",
+            WireStatus::Config => "config",
+            WireStatus::Plan => "plan",
+            WireStatus::Io => "io",
+            WireStatus::Backend => "backend",
+            WireStatus::Eval => "eval",
+            WireStatus::AdmissionBusy => "admission_busy",
+            WireStatus::AdmissionShed => "admission_shed",
+            WireStatus::AdmissionClosed => "admission_closed",
+            WireStatus::AdmissionInvalid => "admission_invalid",
+            WireStatus::AdmissionRejected => "admission_rejected",
+        }
+    }
+
+    /// Classify a [`SwisError`] for the wire. Exhaustive on BOTH the
+    /// error enum and the admission reason — no `_` arm, by design:
+    /// extending either type forces a decision here.
+    pub fn of(e: &SwisError) -> WireStatus {
+        match e {
+            SwisError::Config(_) => WireStatus::Config,
+            SwisError::Plan(_) => WireStatus::Plan,
+            SwisError::Io(_) => WireStatus::Io,
+            SwisError::Backend(_) => WireStatus::Backend,
+            SwisError::Eval(_) => WireStatus::Eval,
+            SwisError::Admission { reason, msg: _ } => match reason {
+                AdmissionReason::Busy => WireStatus::AdmissionBusy,
+                AdmissionReason::Shed => WireStatus::AdmissionShed,
+                AdmissionReason::Closed => WireStatus::AdmissionClosed,
+                AdmissionReason::Invalid => WireStatus::AdmissionInvalid,
+                AdmissionReason::Rejected => WireStatus::AdmissionRejected,
+            },
+        }
+    }
+
+    /// Reconstruct the typed error a status frame stands for (`None`
+    /// for `Ok`, which carries logits instead). The inverse of
+    /// [`WireStatus::of`]: `of(&into_error(s, m).unwrap()) == s` for
+    /// every non-Ok status — pinned by the round-trip test.
+    pub fn into_error(self, msg: &str) -> Option<SwisError> {
+        match self {
+            WireStatus::Ok => None,
+            WireStatus::Config => Some(SwisError::config(msg)),
+            WireStatus::Plan => Some(SwisError::plan(msg)),
+            WireStatus::Io => Some(SwisError::io(msg)),
+            WireStatus::Backend => Some(SwisError::backend(msg)),
+            WireStatus::Eval => Some(SwisError::eval(msg)),
+            WireStatus::AdmissionBusy => {
+                Some(SwisError::admission(AdmissionReason::Busy, msg))
+            }
+            WireStatus::AdmissionShed => {
+                Some(SwisError::admission(AdmissionReason::Shed, msg))
+            }
+            WireStatus::AdmissionClosed => {
+                Some(SwisError::admission(AdmissionReason::Closed, msg))
+            }
+            WireStatus::AdmissionInvalid => {
+                Some(SwisError::admission(AdmissionReason::Invalid, msg))
+            }
+            WireStatus::AdmissionRejected => {
+                Some(SwisError::admission(AdmissionReason::Rejected, msg))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Property: every status round-trips through its wire code, and
+    /// every non-Ok status round-trips through the typed error and
+    /// back — so the table cannot drift in either direction.
+    #[test]
+    fn every_status_round_trips() {
+        let mut seen = std::collections::HashSet::new();
+        for s in ALL_STATUSES {
+            assert!(seen.insert(s.code()), "duplicate wire code {}", s.code());
+            assert_eq!(WireStatus::from_code(s.code()), Some(s));
+            match s.into_error("ctx") {
+                None => assert_eq!(s, WireStatus::Ok),
+                Some(e) => {
+                    assert_eq!(WireStatus::of(&e), s, "of/into_error disagree for {s:?}");
+                    assert_eq!(e.message(), "ctx");
+                }
+            }
+        }
+        assert_eq!(WireStatus::from_code(9999), None);
+    }
+
+    /// Every SwisError constructor lands on a distinct admission-aware
+    /// status (the forward direction of the exhaustive match).
+    #[test]
+    fn error_classes_map_to_documented_codes() {
+        assert_eq!(WireStatus::of(&SwisError::config("x")).code(), 10);
+        assert_eq!(WireStatus::of(&SwisError::plan("x")).code(), 11);
+        assert_eq!(WireStatus::of(&SwisError::io("x")).code(), 12);
+        assert_eq!(WireStatus::of(&SwisError::backend("x")).code(), 13);
+        assert_eq!(WireStatus::of(&SwisError::eval("x")).code(), 14);
+        for (reason, code) in [
+            (AdmissionReason::Busy, 20),
+            (AdmissionReason::Shed, 21),
+            (AdmissionReason::Closed, 22),
+            (AdmissionReason::Invalid, 23),
+            (AdmissionReason::Rejected, 24),
+        ] {
+            assert_eq!(WireStatus::of(&SwisError::admission(reason, "x")).code(), code);
+        }
+    }
+}

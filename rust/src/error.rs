@@ -40,6 +40,11 @@ pub enum AdmissionReason {
     Closed,
     /// The request itself is malformed (wrong image size, empty batch).
     Invalid,
+    /// Refused by policy before queueing: the tenant is over its
+    /// token-bucket quota at the network edge. Distinct from `Busy`
+    /// (capacity backpressure) so clients can tell "slow down" from
+    /// "the server is full".
+    Rejected,
 }
 
 impl AdmissionReason {
@@ -49,6 +54,7 @@ impl AdmissionReason {
             AdmissionReason::Shed => "shed",
             AdmissionReason::Closed => "closed",
             AdmissionReason::Invalid => "invalid",
+            AdmissionReason::Rejected => "rejected",
         }
     }
 }

@@ -1,0 +1,407 @@
+//! The single CLI flag table — every `swis` option is declared ONCE
+//! here with its type, the subcommands it applies to, and its help
+//! line. `main.rs` derives everything from it: the value-key list fed
+//! to [`crate::util::cli::parse`], unknown-flag validation, and the
+//! generated `--help` text per subcommand. Before this table, the five
+//! serving-side subcommands each re-parsed their own copy of the shared
+//! knobs (plan loading, variant lists, batch policy, obs level) and the
+//! copies drifted; the typed extractors at the bottom are those shared
+//! parses, written once.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::api::{EngineConfig, EnginePlan};
+use crate::coordinator::{BatchPolicy, VariantSpec};
+use crate::edge::QuotaConfig;
+use crate::loadgen::{ScenarioKind, ALL_SCENARIOS};
+use crate::util::cli::Args;
+
+/// One flag's declaration.
+pub struct FlagSpec {
+    pub name: &'static str,
+    /// `true` = `--name VALUE`; `false` = boolean `--name`.
+    pub takes_value: bool,
+    /// Placeholder shown in help (`N`, `HOST:PORT`, ...).
+    pub hint: &'static str,
+    /// Subcommands this flag applies to (`&["*"]` = all).
+    pub subs: &'static [&'static str],
+    pub help: &'static str,
+}
+
+macro_rules! flags {
+    ($( $name:literal $kind:tt $hint:literal [$($sub:literal),*] $help:literal ),* $(,)?) => {
+        &[ $( FlagSpec {
+            name: $name,
+            takes_value: flags!(@tv $kind),
+            hint: $hint,
+            subs: &[$($sub),*],
+            help: $help,
+        } ),* ]
+    };
+    (@tv v) => { true };
+    (@tv b) => { false };
+}
+
+/// The table. `v` = takes a value, `b` = boolean.
+pub const FLAGS: &[FlagSpec] = flags![
+    // global
+    "obs"          v "LEVEL"     ["*"] "observability level off|counters|full (beats SWIS_OBS)",
+    "help"         b ""          ["*"] "print this help",
+    // model / scheme selection
+    "net"          v "NAME"      ["quantize", "simulate", "plan", "serve", "tune"] "network (tinycnn|mobilenet_v2|resnet18|vgg16_cifar100)",
+    "nets"         v "A,B"       ["eval"] "networks to sweep",
+    "scheme"       v "S"         ["quantize", "simulate", "plan", "tune"] "quantization scheme swis|swis_c|wgt_trunc|act_trunc|fixed8|bitfusion",
+    "schemes"      v "A,B"       ["eval"] "quantized schemes to sweep (fp32 reference always included)",
+    "shifts"       v "N"         ["quantize", "simulate", "plan", "tune"] "shift count (bits) per weight group [3]",
+    "bits"         v "A,B"       ["eval"] "bit-widths to sweep [2,3,4]",
+    "group"        v "G"         ["quantize", "simulate", "plan", "eval", "tune"] "weight sharing group size [4]",
+    "variants"     v "LIST"      ["plan", "serve", "loadgen"] "variant list, e.g. fp32,swis@3[/g8]",
+    "seed"         v "N"         ["quantize", "plan", "eval", "loadgen", "tune"] "deterministic seed",
+    "save"         v "DIR"       ["quantize"] "write one bit-packed .swis container per layer",
+    // simulate
+    "pe"           v "KIND"      ["simulate"] "processing element ss|ds|fixed",
+    "rows"         v "N"         ["simulate", "tune"] "array rows (simulate) / probe rows (tune)",
+    "cols"         v "N"         ["simulate"] "array columns",
+    "fc"           b ""          ["simulate"] "include FC heads",
+    "naive"        b ""          ["simulate"] "disable staggered scheduling",
+    "layers"       b ""          ["simulate"] "print the per-layer table",
+    // plan
+    "o"            v "FILE"      ["plan", "tune"] "output .swisplan path",
+    "out"          v "PATH"      ["plan", "eval", "loadgen", "tune"] "output path (BENCH json, or .swisplan)",
+    "tiers"        b ""          ["plan"] "embed a measured precision ladder (degrade-don't-shed)",
+    "tier-cap"     v "X"         ["plan"] "tier ladder floor: max worst-layer MSE ratio vs tier 0",
+    "threads"      v "N"         ["plan", "eval", "tune"] "worker threads (0 = auto; tune: list 1,4)",
+    "artifacts"    v "DIR"       ["plan", "serve", "loadgen", "eval", "tune"] "PJRT artifact directory [artifacts]",
+    "plan"         v "FILE"      ["serve", "loadgen", "eval", "tune"] "load a prepared .swisplan (authoritative; zero quantization)",
+    "batch"        v "B"         ["plan", "eval"] "probe batch size",
+    // serving (shared pool knobs)
+    "workers"      v "N|A,B"     ["serve", "loadgen"] "pool workers (serve/edge: total budget; loadgen: sweep list)",
+    "queue-depth"  v "D"         ["serve", "loadgen"] "bounded admission queue depth",
+    "max-batch"    v "N"         ["serve", "loadgen"] "max dynamic batch size [64]",
+    "max-wait-ms"  v "T"         ["serve"] "batch straggler window [2]",
+    "max-waits-ms" v "A,B"       ["loadgen"] "straggler windows to sweep [2]",
+    "backend"      v "KIND"      ["serve", "loadgen"] "execution backend auto|native|pjrt",
+    "priority"     v "LANE"      ["serve"] "admission lane interactive|batch",
+    "rate"         v "R"         ["serve", "loadgen"] "open-loop request rate (serve: 0 = burst; scenarios: baseline)",
+    "deadline-ms"  v "T"         ["serve", "loadgen"] "queue-residency shed budget (0 = never shed)",
+    "requests"     v "N"         ["serve"] "synthetic requests to drive (non-listen mode)",
+    "metrics-addr" v "HOST:PORT" ["serve"] "expose Prometheus text exposition",
+    "trace-sample" v "N"         ["serve", "loadgen"] "trace every Nth request (implies --obs full)",
+    // network edge (serve --listen) + TCP loadgen
+    "listen"       v "HOST:PORT" ["serve"] "serve the SWIS1 wire protocol over TCP",
+    "serve-ms"     v "T"         ["serve"] "edge serving window (0 = until killed)",
+    "models"       v "id=FILE,.."["serve"] "model table for the edge (default: 'default=<--plan>')",
+    "quota-rps"    v "R"         ["serve"] "per-tenant token refill rate (absent = no quota)",
+    "quota-burst"  v "B"         ["serve"] "per-tenant bucket capacity [2x rate]",
+    "rebalance-ms" v "T"         ["serve"] "worker rebalance period across models (0 = frozen split)",
+    "stall-ms"     v "T"         ["serve"] "read/write stall budget before cutting a connection [2000]",
+    "connect"      v "HOST:PORT" ["loadgen"] "replay scenarios over TCP against a serving edge",
+    "model"        v "ID"        ["loadgen"] "edge model id to address [default]",
+    "scenario"     v "A,B"       ["loadgen"] "scenario suite: steady|diurnal|flash_crowd|slow_client|deadline_mix",
+    "peak-rate"    v "R"         ["loadgen"] "peak rate for diurnal/flash_crowd [4x rate]",
+    "conns"        v "N"         ["loadgen"] "client connections for TCP scenario replay [4]",
+    // loadgen grid mode
+    "rates"        v "A,B"       ["loadgen"] "open-loop arrival rates to sweep [150,300]",
+    "concurrency"  v "A,B"       ["loadgen"] "closed-loop client counts to sweep [4]",
+    "mode"         v "M"         ["loadgen"] "arrival mode open|closed|both [open]",
+    "duration-ms"  v "T"         ["loadgen"] "submission window per point [400]",
+    "probe"        v "MODE"      ["loadgen"] "probe inputs dense|sparse [dense]",
+    // tune
+    "alpha"        b ""          ["tune"] "run the MSE++ alpha sweep instead of the kernel autotune",
+    "reps"         v "K"         ["tune"] "bench repetitions per candidate",
+];
+
+/// Every subcommand, in help order.
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("quantize", "SWIS/SWIS-C/truncation quantization report for a network"),
+    ("simulate", "systolic-array simulation: cycles, F/s, F/J, DRAM traffic"),
+    ("plan", "run the offline pipeline once, emit a versioned .swisplan"),
+    ("serve", "worker pool + synthetic load, or --listen for the TCP edge"),
+    ("loadgen", "SLO sweep / scenario suite, emits BENCH_serving.json"),
+    ("eval", "zoo accuracy/compression sweep, emits BENCH_accuracy.json"),
+    ("tune", "bench-driven kernel autotune (--alpha: MSE++ sweep)"),
+    ("prob", "Fig. 2 lossless-quantization probability curves"),
+    ("info", "model zoo + accelerator configuration summary"),
+];
+
+/// Names of every value-taking flag — the list
+/// [`crate::util::cli::parse`] needs, derived from the table.
+pub fn value_keys() -> Vec<&'static str> {
+    FLAGS.iter().filter(|f| f.takes_value).map(|f| f.name).collect()
+}
+
+/// Reject options/flags that appear in no table row, so a typo
+/// (`--worker 4`) fails loudly instead of being silently ignored.
+pub fn validate(args: &Args) -> Result<()> {
+    for name in args.opt_keys().chain(args.flag_names()) {
+        if !FLAGS.iter().any(|f| f.name == name) {
+            anyhow::bail!(
+                "unknown option --{name} (see `swis {} --help`)",
+                args.subcommand().unwrap_or("<subcommand>")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Generated help: the full usage page, or one subcommand's flag list.
+pub fn help(sub: Option<&str>) -> String {
+    let mut out = String::new();
+    match sub {
+        Some(sub) if SUBCOMMANDS.iter().any(|&(s, _)| s == sub) => {
+            out.push_str(&format!("usage: swis {sub} [options]\n\noptions:\n"));
+            for f in FLAGS {
+                if !(f.subs.contains(&sub) || f.subs.contains(&"*")) {
+                    continue;
+                }
+                let left = if f.takes_value {
+                    format!("--{} {}", f.name, f.hint)
+                } else {
+                    format!("--{}", f.name)
+                };
+                out.push_str(&format!("  {left:<26} {}\n", f.help));
+            }
+        }
+        _ => {
+            out.push_str(
+                "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
+                 usage: swis <subcommand> [options]\n\nsubcommands:\n",
+            );
+            for (name, blurb) in SUBCOMMANDS {
+                out.push_str(&format!("  {name:<10} {blurb}\n"));
+            }
+            out.push_str(
+                "\nrun `swis <subcommand> --help` for that subcommand's options;\n\
+                 see rust/README.md for worked examples\n",
+            );
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Shared typed extractors — each of these was copy-pasted (and
+// drifting) across serve/loadgen/eval/tune/plan before the table.
+// ---------------------------------------------------------------------
+
+/// Set the process obs level: `--obs` beats `SWIS_OBS` beats default.
+pub fn setup_obs(args: &Args) -> Result<()> {
+    match args.get("obs") {
+        Some(l) => crate::obs::set_level(crate::obs::ObsLevel::parse(l)?),
+        None => crate::obs::init_from_env(),
+    }
+    Ok(())
+}
+
+/// `--trace-sample N`; N > 0 implies the full obs level (tracing is
+/// inert below it).
+pub fn trace_sample(args: &Args) -> Result<usize> {
+    let n = args.get_usize("trace-sample", 0)?;
+    if n > 0 && !crate::obs::tracing_on() {
+        crate::obs::set_level(crate::obs::ObsLevel::Full);
+    }
+    Ok(n)
+}
+
+/// The dynamic-batching policy from `--max-batch` / `--max-wait-ms`.
+pub fn batch_policy(args: &Args) -> Result<BatchPolicy> {
+    Ok(BatchPolicy {
+        max_batch: args.get_usize("max-batch", 64)?,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
+    })
+}
+
+/// `--deadline-ms T` with a subcommand-specific default; <= 0 disables
+/// shedding.
+pub fn deadline(args: &Args, default_ms: f64) -> Result<Option<Duration>> {
+    let ms = args.get_f64("deadline-ms", default_ms)?;
+    Ok(if ms <= 0.0 { None } else { Some(Duration::from_secs_f64(ms / 1e3)) })
+}
+
+/// Load `--plan FILE` if given. When the plan is present and the caller
+/// also passed any of `overridden`, print the standard "the plan is
+/// authoritative" note naming them — every plan-consuming subcommand
+/// had its own drifting copy of this warning.
+pub fn load_plan(args: &Args, overridden: &[&str]) -> Result<Option<Arc<EnginePlan>>> {
+    let Some(path) = args.get("plan") else { return Ok(None) };
+    let plan = EnginePlan::load(Path::new(path))
+        .with_context(|| format!("loading plan '{path}'"))?;
+    let clashing: Vec<String> = overridden
+        .iter()
+        .filter(|k| args.get(k).is_some())
+        .map(|k| format!("--{k}"))
+        .collect();
+    if !clashing.is_empty() {
+        eprintln!(
+            "note: --plan overrides {} (the plan is authoritative and always \
+             serves natively)",
+            clashing.join("/")
+        );
+    }
+    Ok(Some(Arc::new(plan)))
+}
+
+/// `--variants LIST` with a default, parsed once through the facade.
+pub fn variants_or(args: &Args, default: &str) -> Result<Vec<VariantSpec>> {
+    Ok(EngineConfig::parse_variant_list(args.get_or("variants", default))?)
+}
+
+/// `--out PATH`, defaulting to `<repo root>/<default_name>` (where the
+/// BENCH trajectory records live).
+pub fn bench_out(args: &Args, default_name: &str) -> PathBuf {
+    match args.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(default_name),
+    }
+}
+
+/// Per-tenant quota from `--quota-rps R [--quota-burst B]`; absent rate
+/// means no quota (admit everything).
+pub fn quota(args: &Args) -> Result<Option<QuotaConfig>> {
+    let Some(rate) = args.get("quota-rps") else { return Ok(None) };
+    let rate: f64 = rate
+        .parse()
+        .with_context(|| format!("--quota-rps expects a number, got '{rate}'"))?;
+    let burst = args.get_f64("quota-burst", (rate * 2.0).max(1.0))?;
+    Ok(Some(QuotaConfig { rate, burst }))
+}
+
+/// `--scenario a,b` parsed against the suite (`all` expands to every
+/// scenario); None when the flag is absent (classic grid sweep).
+pub fn scenarios(args: &Args) -> Result<Option<Vec<ScenarioKind>>> {
+    let Some(list) = args.get("scenario") else { return Ok(None) };
+    if list == "all" {
+        return Ok(Some(ALL_SCENARIOS.to_vec()));
+    }
+    let kinds: Vec<ScenarioKind> = list
+        .split(',')
+        .map(|s| ScenarioKind::parse(s.trim()))
+        .collect::<crate::error::SwisResult<_>>()?;
+    Ok(Some(kinds))
+}
+
+/// `--models id=path,...` into `(id, path)` pairs, or a single
+/// `default=<--plan>` entry when only `--plan` is given.
+pub fn model_table(args: &Args) -> Result<Vec<(String, PathBuf)>> {
+    if let Some(list) = args.get("models") {
+        let mut out = Vec::new();
+        for entry in list.split(',') {
+            let (id, path) = entry.split_once('=').with_context(|| {
+                format!("--models expects id=path pairs, got '{entry}'")
+            })?;
+            out.push((id.trim().to_string(), PathBuf::from(path.trim())));
+        }
+        Ok(out)
+    } else if let Some(plan) = args.get("plan") {
+        Ok(vec![("default".to_string(), PathBuf::from(plan))])
+    } else {
+        anyhow::bail!("edge serving needs --models id=path,... or --plan FILE")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    fn parse(xs: &[&str]) -> Args {
+        let argv: Vec<String> = xs.iter().map(|s| s.to_string()).collect();
+        cli::parse(&argv, &value_keys()).unwrap()
+    }
+
+    #[test]
+    fn table_is_internally_consistent() {
+        // no duplicate declarations
+        for (i, a) in FLAGS.iter().enumerate() {
+            for b in &FLAGS[i + 1..] {
+                assert_ne!(a.name, b.name, "flag '{}' declared twice", a.name);
+            }
+        }
+        // every flag's subcommands exist
+        for f in FLAGS {
+            for s in f.subs {
+                assert!(
+                    *s == "*" || SUBCOMMANDS.iter().any(|&(name, _)| name == *s),
+                    "flag '{}' names unknown subcommand '{s}'",
+                    f.name
+                );
+            }
+            assert!(
+                f.takes_value || f.hint.is_empty(),
+                "boolean '{}' must not carry a value hint",
+                f.name
+            );
+        }
+        // the legacy hand-maintained value keys are all present
+        for k in ["net", "plan", "workers", "trace-sample", "o", "tier-cap"] {
+            assert!(value_keys().contains(&k), "missing value key '{k}'");
+        }
+    }
+
+    #[test]
+    fn validate_catches_typos_and_accepts_the_table() {
+        assert!(validate(&parse(&["serve", "--workers", "4", "--tiers"])).is_ok());
+        let bad = parse(&["serve", "--worker", "4"]);
+        let err = validate(&bad).unwrap_err().to_string();
+        assert!(err.contains("--worker"), "error must name the typo: {err}");
+    }
+
+    #[test]
+    fn help_is_generated_per_subcommand_from_the_table() {
+        let top = help(None);
+        for (name, _) in SUBCOMMANDS {
+            assert!(top.contains(name), "usage page missing '{name}'");
+        }
+        let serve = help(Some("serve"));
+        for flag in ["--listen", "--quota-rps", "--workers", "--obs"] {
+            assert!(serve.contains(flag), "serve help missing '{flag}'");
+        }
+        assert!(!serve.contains("--rates"), "serve help leaked a loadgen flag");
+        let lg = help(Some("loadgen"));
+        for flag in ["--connect", "--scenario", "--peak-rate", "--rates"] {
+            assert!(lg.contains(flag), "loadgen help missing '{flag}'");
+        }
+        assert!(!lg.contains("--listen"), "loadgen help leaked a serve flag");
+    }
+
+    #[test]
+    fn typed_extractors_share_one_parse() {
+        let a = parse(&["serve", "--quota-rps", "5", "--max-batch", "8"]);
+        let q = quota(&a).unwrap().unwrap();
+        assert_eq!(q.rate, 5.0);
+        assert_eq!(q.burst, 10.0); // default 2x rate
+        assert_eq!(batch_policy(&a).unwrap().max_batch, 8);
+        assert!(quota(&parse(&["serve"])).unwrap().is_none());
+        assert!(quota(&parse(&["serve", "--quota-rps", "x"])).is_err());
+
+        let s = scenarios(&parse(&["loadgen", "--scenario", "flash_crowd,steady"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(s, vec![ScenarioKind::FlashCrowd, ScenarioKind::Steady]);
+        assert_eq!(
+            scenarios(&parse(&["loadgen", "--scenario", "all"])).unwrap().unwrap().len(),
+            ALL_SCENARIOS.len()
+        );
+        assert!(scenarios(&parse(&["loadgen", "--scenario", "nope"])).is_err());
+        assert!(scenarios(&parse(&["loadgen"])).unwrap().is_none());
+
+        let m = model_table(&parse(&["serve", "--models", "a=x.swisplan, b=y.swisplan"]))
+            .unwrap();
+        assert_eq!(m[0].0, "a");
+        assert_eq!(m[1].1, PathBuf::from("y.swisplan"));
+        let d = model_table(&parse(&["serve", "--plan", "p.swisplan"])).unwrap();
+        assert_eq!(d, vec![("default".to_string(), PathBuf::from("p.swisplan"))]);
+        assert!(model_table(&parse(&["serve"])).is_err());
+        assert!(model_table(&parse(&["serve", "--models", "nope"])).is_err());
+
+        assert_eq!(deadline(&parse(&["serve"]), 0.0).unwrap(), None);
+        assert_eq!(
+            deadline(&parse(&["serve", "--deadline-ms", "250"]), 0.0).unwrap(),
+            Some(Duration::from_millis(250))
+        );
+    }
+}

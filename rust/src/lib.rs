@@ -83,10 +83,17 @@
 //!   variant affinity, per-worker dynamic batching, metrics; the
 //!   single-worker [`coordinator::Coordinator`] facade keeps the
 //!   pre-pool API. Python never runs on the request path.
-//! * [`loadgen`] — open/closed-loop arrival generators, SLO recording
+//! * [`edge`] — the network edge: the length-prefixed `SWIS1` wire
+//!   protocol over a std `TcpListener` (thread-per-connection
+//!   reader/writer pairs), per-tenant token-bucket quotas, per-model
+//!   pools from a shared plan cache, queue-depth worker rebalancing.
+//!   See the "Network edge" chapter below for the byte-level contract.
+//! * [`loadgen`] — open/closed-loop arrival generators, the scenario
+//!   suite (steady / diurnal / flash-crowd / slow-client /
+//!   deadline-mix, runnable in-process or over TCP), SLO recording
 //!   (p50/p95/p99, shed/busy/timeout counts) and the sweep driver that
 //!   walks worker count x batch policy x arrival rate and emits
-//!   `BENCH_serving.json`.
+//!   scenario-tagged `BENCH_serving.json`.
 //! * [`api`] — the facade over all of the above: `EngineConfig` →
 //!   `Engine::prepare` → `EnginePlan` (`.swisplan`) → `Session`.
 //! * [`error`] — the crate-wide [`SwisError`] taxonomy
@@ -137,15 +144,82 @@
 //! pressure maps to a down-tier step (≥50% full → one tier, ≥80% → two,
 //! never past the plan's floor), so an overloaded pool serves
 //! lower-precision responses — counted in the `degraded` metric —
-//! instead of shedding them. Per-request hints enter through
-//! [`api::Session::run_tiered`]; a hint or pressure can only LOWER
-//! precision, never raise it above what the request asked for.
+//! instead of shedding them. Per-request hints ride
+//! [`coordinator::InferRequest::tier_hint`] (served in-process by
+//! [`api::Session::serve`] and over the wire unchanged); a hint or
+//! pressure can only LOWER precision, never raise it above what the
+//! request asked for.
 //!
 //! | tier | meaning | typical source |
 //! |------|---------|----------------|
 //! | 0 | full requested precision (e.g. `swis@4`) | the request's own variant |
 //! | 1..floor-1 | intermediate shift counts | queue pressure ≥ 50% / 80% |
 //! | floor | deepest tier with MSE ratio ≤ the `--tier-cap` | overload ceiling; never exceeded |
+//!
+//! ## Network edge — the SWIS1 wire protocol
+//!
+//! `swis serve --listen HOST:PORT --models id=plan.swisplan,...` fronts
+//! the coordinator with [`edge::EdgeServer`]: a std-`TcpListener`
+//! accept loop (no HTTP/RPC dependency, same idiom as the metrics
+//! exporter) with one reader/writer thread pair per connection. The
+//! wire request *is* a serialized [`coordinator::InferRequest`] — the
+//! networked and in-process submission paths share one type and cannot
+//! drift.
+//!
+//! **Frame layout.** Every frame is a 10-byte header plus a bounded
+//! body; all integers little-endian, `str8`/`str16` are
+//! `u8`/`u16`-length-prefixed UTF-8:
+//!
+//! ```text
+//! header: magic "SWIS1" (5 B, version in the magic) | type u8 | body_len u32
+//! type 1 INFER:    seq u64 | tenant str8 | model str8 | variant str8
+//!                  | tier_hint u8 | lane u8 (0=interactive,1=batch)
+//!                  | flags u8 (bit0=trace) | deadline_us u64 (0=none)
+//!                  | n_vals u32 | image f32 x n_vals
+//! type 2 OK:       seq u64 | flags u8 (bit0=degraded) | variant str8
+//!                  | n u32 | logits f32 x n
+//! type 3 STATUS:   seq u64 | code u16 | msg str16
+//! type 4 INFO_REQ: seq u64
+//! type 5 INFO:     seq u64 | n_models u8 | per model: id str8,
+//!                  h u16, w u16, c u16, tiered u8, n_variants u8,
+//!                  variant str8 x n
+//! ```
+//!
+//! `body_len` is validated against [`edge::MAX_FRAME`] (16 MiB)
+//! *before* any allocation, so an adversarial length prefix costs
+//! nothing. A frame that decodes short, long, or mid-stream EOF is a
+//! counted protocol fault, never a panic.
+//!
+//! **Status codes.** One exhaustive mapping ([`edge::WireStatus`],
+//! property-tested to round-trip every [`SwisError`] class):
+//!
+//! | code | meaning | `SwisError` class |
+//! |------|---------|-------------------|
+//! | 0 | ok (never in a STATUS frame) | — |
+//! | 10-14 | config / plan / io / backend / eval | same-named class |
+//! | 20 | admission queue full — retry with backoff | `Admission{Busy}` |
+//! | 21 | deadline shed | `Admission{Shed}` |
+//! | 22 | server shutting down | `Admission{Closed}` |
+//! | 23 | malformed request (bad image len, unknown model/variant) | `Admission{Invalid}` |
+//! | 24 | tenant over quota | `Admission{Rejected}` |
+//!
+//! **Tenant quotas.** Each INFER frame carries a tenant id; the edge
+//! holds a per-tenant token bucket ([`edge::TenantQuotas`], `--quota-rps
+//! R --quota-burst B`): buckets start full at `B`, refill at `R`
+//! tokens/s capped at `B`, each admitted request spends one token.
+//! Over-quota requests are answered with status 24 **on the open
+//! connection** — quota refusal is a typed response, never a hangup —
+//! and counted in `swis_quota_rejected_total`. No `--quota-rps` means
+//! every tenant is admitted. Protocol faults (garbage magic, oversized
+//! prefix, stalled reads/writes, truncation) DO close the connection,
+//! each counted by class in `swis_wire_faults_total{kind=...}`.
+//!
+//! Workers are a shared budget (`--workers` total across all models):
+//! a background rebalancer re-splits them by admission queue depth
+//! (largest-remainder proportional split, every model keeps >= 1
+//! worker) and swaps rebuilt pools in place — plan-cached warm-up does
+//! zero re-quantization, and in-flight tickets on a retired pool still
+//! answer while it drains.
 //!
 //! ## Observability — sparsity accounting, request tracing, metrics export
 //!
@@ -183,9 +257,11 @@ pub mod analysis;
 pub mod api;
 pub mod arch;
 pub mod coordinator;
+pub mod edge;
 pub mod error;
 pub mod eval;
 pub mod exec;
+pub mod flags;
 pub mod loadgen;
 pub mod nets;
 pub mod obs;

@@ -8,17 +8,28 @@
 //! * [`sweep`] — the driver that walks worker count x batch policy x
 //!   arrival rate, one fresh [`crate::coordinator::WorkerPool`] per
 //!   point over ONE shared backend factory (warm-up paid once), and
-//!   emits the repo-root `BENCH_serving.json` trajectory record.
+//!   emits the repo-root `BENCH_serving.json` trajectory record;
+//! * [`scenario`] — shaped traffic beyond steady Poisson (diurnal ramp,
+//!   flash crowd, slow/abusive wire clients, deadline mixes), each
+//!   pre-drawn into a deterministic [`scenario::Schedule`] replayable
+//!   in-process or over TCP against the [`crate::edge`] server with
+//!   identical offered load.
 //!
-//! Entry points: `swis loadgen` (CLI), the serving section of
-//! `benches/hotpath.rs`, and [`sweep::run_sweep`] for tests.
+//! Entry points: `swis loadgen` (CLI; `--scenario` picks shapes,
+//! `--connect HOST:PORT` replays them over the wire), the serving
+//! section of `benches/hotpath.rs`, and [`sweep::run_sweep`] for tests.
 
 mod arrival;
 mod recorder;
+pub mod scenario;
 mod sweep;
 
 pub use arrival::{exp_gap, Arrival};
 pub use recorder::{PointStats, Recorder};
+pub use scenario::{
+    run_scenario_inproc, run_scenario_tcp, schedule, AbuseKind, ScenarioConfig, ScenarioKind,
+    ScenarioRun, Schedule, ScheduledReq, ALL_SCENARIOS,
+};
 pub use sweep::{
     gen_images, gen_images_mode, run_sweep, run_sweep_with, sweep_json, write_bench_json,
     ProbeMode, SweepConfig, SweepPoint, SPARSE_ZERO_FRACTION,

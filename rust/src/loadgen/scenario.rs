@@ -1,0 +1,560 @@
+//! The load-generation scenario suite: shaped arrival schedules beyond
+//! steady Poisson — diurnal ramps, flash crowds, deadline mixes, and
+//! slow/abusive wire clients — each runnable IN-PROCESS against a
+//! [`WorkerPool`] or OVER TCP against an [`crate::edge::EdgeServer`].
+//!
+//! Both runners consume the exact same pre-computed [`Schedule`]
+//! (arrival times, lanes, deadlines, tier hints are all drawn from the
+//! scenario seed before the trial starts), so a TCP run and an
+//! in-process run of the same `(scenario, seed)` offer identical
+//! request streams — the parity the edge tests pin: same offered count,
+//! zero protocol errors.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::arrival::exp_gap;
+use super::recorder::{PointStats, Recorder};
+use crate::coordinator::{Admission, InferRequest, Priority, Ticket, WorkerPool};
+use crate::edge::{frame, EdgeClient};
+use crate::error::{AdmissionReason, SwisError, SwisResult};
+use crate::util::rng::Rng;
+
+/// How long scenario clients wait for any single response.
+const PATIENCE: Duration = Duration::from_secs(10);
+
+/// The traffic shapes the suite can generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Constant-rate Poisson — the pre-suite behaviour.
+    Steady,
+    /// Raised-cosine ramp: baseline at the edges of the window, `peak`
+    /// in the middle — a compressed day of traffic.
+    Diurnal,
+    /// Baseline rate with a sudden `peak` burst over the middle fifth
+    /// of the window — the overload case degrade-don't-shed exists for.
+    FlashCrowd,
+    /// Light legitimate traffic PLUS abusive wire clients (garbage
+    /// magic, oversized length prefix, partial frame then disconnect,
+    /// stalled mid-frame reads). The abuse is TCP-only; the in-process
+    /// runner serves just the legitimate stream.
+    SlowClient,
+    /// Steady rate where every third request carries a tight deadline
+    /// and a 1-tier relaxation hint; the rest ride the loose deadline.
+    DeadlineMix,
+}
+
+/// Every scenario, in the order the CLI lists them.
+pub const ALL_SCENARIOS: [ScenarioKind; 5] = [
+    ScenarioKind::Steady,
+    ScenarioKind::Diurnal,
+    ScenarioKind::FlashCrowd,
+    ScenarioKind::SlowClient,
+    ScenarioKind::DeadlineMix,
+];
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> SwisResult<ScenarioKind> {
+        Ok(match s {
+            "steady" => ScenarioKind::Steady,
+            "diurnal" => ScenarioKind::Diurnal,
+            "flash_crowd" => ScenarioKind::FlashCrowd,
+            "slow_client" => ScenarioKind::SlowClient,
+            "deadline_mix" => ScenarioKind::DeadlineMix,
+            other => {
+                return Err(SwisError::config(format!(
+                    "unknown scenario '{other}' (expected \
+                     steady|diurnal|flash_crowd|slow_client|deadline_mix)"
+                )))
+            }
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScenarioKind::Steady => "steady",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::FlashCrowd => "flash_crowd",
+            ScenarioKind::SlowClient => "slow_client",
+            ScenarioKind::DeadlineMix => "deadline_mix",
+        }
+    }
+
+    /// Instantaneous arrival rate at normalized time `u` in `[0, 1)`.
+    fn lambda(self, u: f64, rate: f64, peak: f64) -> f64 {
+        match self {
+            ScenarioKind::Steady | ScenarioKind::DeadlineMix => rate,
+            // abusive connections ride alongside, off-schedule
+            ScenarioKind::SlowClient => rate,
+            ScenarioKind::Diurnal => {
+                rate + (peak - rate) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * u).cos())
+            }
+            ScenarioKind::FlashCrowd => {
+                if (0.4..0.6).contains(&u) {
+                    peak
+                } else {
+                    rate
+                }
+            }
+        }
+    }
+}
+
+/// One scenario trial's knobs.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    pub kind: ScenarioKind,
+    /// Submission window.
+    pub duration: Duration,
+    /// Baseline arrival rate (req/s).
+    pub rate: f64,
+    /// Peak rate for the shaped scenarios (clamped to >= `rate`).
+    pub peak_rate: f64,
+    pub seed: u64,
+    /// Loose deadline stamped on ordinary requests (None = never shed).
+    pub deadline: Option<Duration>,
+    /// Tight deadline for the deadline-mix scenario's hurried third.
+    pub tight_deadline: Duration,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> ScenarioConfig {
+        ScenarioConfig {
+            kind: ScenarioKind::Steady,
+            duration: Duration::from_millis(400),
+            rate: 150.0,
+            peak_rate: 600.0,
+            seed: 2026,
+            deadline: Some(Duration::from_millis(100)),
+            tight_deadline: Duration::from_millis(5),
+        }
+    }
+}
+
+/// One pre-drawn legitimate request.
+#[derive(Clone, Debug)]
+pub struct ScheduledReq {
+    /// Offset from trial start.
+    pub at: Duration,
+    pub pri: Priority,
+    pub deadline: Option<Duration>,
+    pub tier_hint: usize,
+}
+
+/// Abusive wire behaviours the slow-client scenario interleaves
+/// (TCP-only; each maps to one [`crate::coordinator::WireFault`] class
+/// on the server).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbuseKind {
+    /// 5 junk bytes where the magic belongs.
+    GarbageMagic,
+    /// Valid header claiming a `u32::MAX`-byte body.
+    OversizedPrefix,
+    /// First half of a valid header, then disconnect.
+    PartialFrame,
+    /// First half of a valid header, then silence — held open until the
+    /// server's mid-frame read-stall budget cuts it off.
+    StalledRead,
+}
+
+/// The full pre-drawn trial: what both runners replay.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub reqs: Vec<ScheduledReq>,
+    /// `(offset, behaviour)` abusive connections (slow-client only).
+    pub abuse: Vec<(Duration, AbuseKind)>,
+}
+
+/// Draw the whole trial up front, deterministically: Poisson arrivals
+/// at the peak rate thinned to the scenario's `lambda(t)` (the standard
+/// non-homogeneous-Poisson construction, one RNG stream, so the same
+/// `(kind, seed, duration, rates)` always yields byte-identical
+/// schedules).
+pub fn schedule(cfg: &ScenarioConfig) -> Schedule {
+    let peak = cfg.peak_rate.max(cfg.rate).max(1e-6);
+    let dur = cfg.duration.as_secs_f64();
+    let mut rng = Rng::new(cfg.seed);
+    let mut reqs = Vec::new();
+    let mut t = exp_gap(&mut rng, peak);
+    let mut kept = 0usize;
+    while t < dur {
+        let keep_p = cfg.kind.lambda(t / dur, cfg.rate, peak) / peak;
+        // consume the thinning draw unconditionally to keep the stream
+        // aligned across kinds sharing a seed
+        let coin = rng.range_f64(0.0, 1.0);
+        if coin < keep_p {
+            let (deadline, tier_hint) = match cfg.kind {
+                ScenarioKind::DeadlineMix if kept % 3 == 0 => (Some(cfg.tight_deadline), 1),
+                _ => (cfg.deadline, 0),
+            };
+            let pri =
+                if kept % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+            reqs.push(ScheduledReq {
+                at: Duration::from_secs_f64(t),
+                pri,
+                deadline,
+                tier_hint,
+            });
+            kept += 1;
+        }
+        t += exp_gap(&mut rng, peak);
+    }
+    let abuse = if cfg.kind == ScenarioKind::SlowClient {
+        [
+            AbuseKind::GarbageMagic,
+            AbuseKind::OversizedPrefix,
+            AbuseKind::PartialFrame,
+            AbuseKind::StalledRead,
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| (cfg.duration.mul_f64(0.1 + 0.2 * i as f64), k))
+        .collect()
+    } else {
+        Vec::new()
+    };
+    Schedule { reqs, abuse }
+}
+
+/// One scenario trial's outcome.
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    pub stats: PointStats,
+    /// Transport/protocol failures the CLIENT observed (0 on a healthy
+    /// run — the TCP-vs-in-process parity check pins this).
+    pub protocol_errors: u64,
+    /// Abusive connections actually opened (TCP runner only).
+    pub abuse_sent: u64,
+}
+
+fn build_req(
+    s: &ScheduledReq,
+    i: usize,
+    names: &[String],
+    images: &[Vec<f32>],
+) -> InferRequest {
+    InferRequest::new(names[i % names.len()].as_str())
+        .image(images[i % images.len()].clone())
+        .priority(s.pri)
+        .deadline_opt(s.deadline)
+        .tier_hint(s.tier_hint)
+}
+
+/// Replay a scenario against an in-process pool: paced submission on
+/// this thread, collection on a companion thread (the open-loop shape
+/// from the sweep driver). Abusive wire behaviours have no in-process
+/// analog and are skipped.
+pub fn run_scenario_inproc(
+    pool: &WorkerPool,
+    cfg: &ScenarioConfig,
+    names: &[String],
+    images: &[Vec<f32>],
+) -> SwisResult<ScenarioRun> {
+    let sched = schedule(cfg);
+    let (tx, rx) = mpsc::channel::<Ticket>();
+    let collector = std::thread::spawn(move || {
+        let mut rec = Recorder::new(1);
+        for ticket in rx {
+            match ticket.recv_timeout(PATIENCE) {
+                Ok(Ok(resp)) => {
+                    rec.record_ok(resp.total);
+                    if resp.degraded {
+                        rec.record_degraded();
+                    }
+                }
+                Ok(Err(e)) => rec.record_err(&e),
+                Err(_) => rec.record_timeout(),
+            }
+        }
+        rec
+    });
+    let t0 = Instant::now();
+    let mut busy = 0u64;
+    for (i, s) in sched.reqs.iter().enumerate() {
+        let target = t0 + s.at;
+        let now = Instant::now();
+        if now < target {
+            std::thread::sleep(target - now);
+        }
+        match pool.try_submit(build_req(s, i, names, images))? {
+            Admission::Accepted(t) => {
+                let _ = tx.send(t);
+            }
+            Admission::Busy => busy += 1,
+        }
+    }
+    drop(tx);
+    let mut rec = collector
+        .join()
+        .map_err(|_| SwisError::backend("scenario collector panicked"))?;
+    rec.busy = busy;
+    Ok(ScenarioRun { stats: rec.stats(t0.elapsed()), protocol_errors: 0, abuse_sent: 0 })
+}
+
+/// Replay the SAME schedule over TCP against a serving edge: a feeder
+/// paces arrivals onto a channel, `conns` blocking client connections
+/// drain it, and (for the slow-client scenario) an abuse thread opens
+/// the scheduled hostile connections alongside. Offered counts match
+/// [`run_scenario_inproc`] exactly — abuse rides outside the recorder.
+pub fn run_scenario_tcp(
+    addr: &str,
+    model: &str,
+    cfg: &ScenarioConfig,
+    names: &[String],
+    images: &[Vec<f32>],
+    conns: usize,
+) -> SwisResult<ScenarioRun> {
+    let sched = schedule(cfg);
+    let (tx, rx) = mpsc::channel::<(usize, ScheduledReq)>();
+    let rx = Arc::new(Mutex::new(rx));
+    let t0 = Instant::now();
+    let (recs, abuse_sent) = std::thread::scope(
+        |s| -> SwisResult<(Vec<(Recorder, u64)>, u64)> {
+            let workers: Vec<_> = (0..conns.max(1))
+                .map(|c| {
+                    let rx = Arc::clone(&rx);
+                    s.spawn(move || drive_conn(addr, model, cfg.seed ^ c as u64, rx, names, images))
+                })
+                .collect();
+            let abuser = (!sched.abuse.is_empty())
+                .then(|| s.spawn(|| run_abuse(addr, t0, &sched.abuse)));
+            for (i, req) in sched.reqs.iter().enumerate() {
+                let target = t0 + req.at;
+                let now = Instant::now();
+                if now < target {
+                    std::thread::sleep(target - now);
+                }
+                if tx.send((i, req.clone())).is_err() {
+                    break;
+                }
+            }
+            drop(tx);
+            let mut recs = Vec::new();
+            for w in workers {
+                recs.push(
+                    w.join()
+                        .map_err(|_| SwisError::backend("scenario client panicked"))??,
+                );
+            }
+            let abuse_sent = match abuser {
+                Some(a) => a
+                    .join()
+                    .map_err(|_| SwisError::backend("abuse client panicked"))?,
+                None => 0,
+            };
+            Ok((recs, abuse_sent))
+        },
+    )?;
+    let mut merged = Recorder::new(cfg.seed);
+    let mut protocol_errors = 0u64;
+    for (r, perrs) in &recs {
+        merged.merge(r);
+        protocol_errors += perrs;
+    }
+    Ok(ScenarioRun { stats: merged.stats(t0.elapsed()), protocol_errors, abuse_sent })
+}
+
+/// One blocking client connection draining the shared request channel.
+/// Returns its recorder plus the transport errors it hit (reconnecting
+/// after each so one bad exchange never poisons the rest of the run).
+fn drive_conn(
+    addr: &str,
+    model: &str,
+    seed: u64,
+    rx: Arc<Mutex<mpsc::Receiver<(usize, ScheduledReq)>>>,
+    names: &[String],
+    images: &[Vec<f32>],
+) -> SwisResult<(Recorder, u64)> {
+    let mut client = Some(EdgeClient::connect(addr, PATIENCE)?);
+    let mut rec = Recorder::new(seed);
+    let mut protocol_errors = 0u64;
+    loop {
+        let job = rx.lock().unwrap().recv();
+        let Ok((i, s)) = job else { break };
+        let c = match client.as_mut() {
+            Some(c) => c,
+            None => match EdgeClient::connect(addr, PATIENCE) {
+                Ok(c) => client.insert(c),
+                Err(e) => {
+                    protocol_errors += 1;
+                    rec.record_err(&e);
+                    continue;
+                }
+            },
+        };
+        let t = Instant::now();
+        match c.infer(model, build_req(&s, i, names, images)) {
+            Ok(resp) => {
+                rec.record_ok(t.elapsed());
+                if resp.degraded {
+                    rec.record_degraded();
+                }
+            }
+            Err(SwisError::Admission { reason: AdmissionReason::Busy, .. }) => {
+                rec.record_busy();
+            }
+            Err(e @ SwisError::Admission { .. }) => rec.record_err(&e),
+            Err(e @ SwisError::Io(_)) => {
+                // transport fault: count it, drop the socket, reconnect
+                // for the next job
+                protocol_errors += 1;
+                rec.record_err(&e);
+                client = None;
+            }
+            Err(e) => rec.record_err(&e),
+        }
+    }
+    Ok((rec, protocol_errors))
+}
+
+/// Open the scheduled hostile connections. Every action is
+/// fire-and-forget; stalled sockets are held open until the schedule is
+/// done so the server's read-stall budget — not our disconnect — ends
+/// them.
+fn run_abuse(addr: &str, t0: Instant, abuse: &[(Duration, AbuseKind)]) -> u64 {
+    let mut held: Vec<TcpStream> = Vec::new();
+    let mut sent = 0u64;
+    for &(at, kind) in abuse {
+        let target = t0 + at;
+        let now = Instant::now();
+        if now < target {
+            std::thread::sleep(target - now);
+        }
+        let Ok(mut stream) = TcpStream::connect(addr) else { continue };
+        let ok = match kind {
+            AbuseKind::GarbageMagic => stream.write_all(b"XXXXX\x01\x00\x00\x00\x00").is_ok(),
+            AbuseKind::OversizedPrefix => {
+                let mut h = Vec::new();
+                h.extend_from_slice(&frame::MAGIC);
+                h.push(frame::FT_INFER);
+                h.extend_from_slice(&u32::MAX.to_le_bytes());
+                stream.write_all(&h).is_ok()
+            }
+            AbuseKind::PartialFrame | AbuseKind::StalledRead => {
+                stream.write_all(&frame::MAGIC[..3]).is_ok()
+            }
+        };
+        if ok {
+            sent += 1;
+        }
+        if kind == AbuseKind::StalledRead {
+            held.push(stream);
+        }
+        // the others drop here (disconnect is part of the abuse)
+    }
+    drop(held);
+    sent
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: ScenarioKind) -> ScenarioConfig {
+        ScenarioConfig {
+            kind,
+            duration: Duration::from_millis(500),
+            rate: 200.0,
+            peak_rate: 1000.0,
+            seed: 42,
+            ..ScenarioConfig::default()
+        }
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_seed() {
+        for kind in ALL_SCENARIOS {
+            let a = schedule(&cfg(kind));
+            let b = schedule(&cfg(kind));
+            assert_eq!(a.reqs.len(), b.reqs.len(), "{kind:?} not deterministic");
+            for (x, y) in a.reqs.iter().zip(&b.reqs) {
+                assert_eq!(x.at, y.at);
+                assert_eq!(x.deadline, y.deadline);
+                assert_eq!(x.tier_hint, y.tier_hint);
+            }
+            assert_eq!(a.abuse, b.abuse);
+        }
+        let c = schedule(&ScenarioConfig { seed: 43, ..cfg(ScenarioKind::Steady) });
+        let d = schedule(&cfg(ScenarioKind::Steady));
+        assert_ne!(
+            c.reqs.iter().map(|r| r.at).collect::<Vec<_>>(),
+            d.reqs.iter().map(|r| r.at).collect::<Vec<_>>(),
+            "different seeds must draw different arrivals"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_mid_window() {
+        let s = schedule(&cfg(ScenarioKind::FlashCrowd));
+        let dur = 0.5_f64;
+        let mid = s
+            .reqs
+            .iter()
+            .filter(|r| {
+                let u = r.at.as_secs_f64() / dur;
+                (0.4..0.6).contains(&u)
+            })
+            .count() as f64;
+        let frac = mid / s.reqs.len() as f64;
+        // burst fifth carries peak/(rate*0.8 + peak*0.2) ≈ 56% of traffic
+        assert!(frac > 0.35, "flash burst carried only {frac:.2} of arrivals");
+        // and steady traffic from the same seed has no such concentration
+        let st = schedule(&cfg(ScenarioKind::Steady));
+        assert!(st.reqs.len() < s.reqs.len(), "flash crowd must offer more than steady");
+    }
+
+    #[test]
+    fn diurnal_rate_peaks_mid_window() {
+        let k = ScenarioKind::Diurnal;
+        assert!(k.lambda(0.5, 100.0, 900.0) > k.lambda(0.05, 100.0, 900.0));
+        assert!((k.lambda(0.5, 100.0, 900.0) - 900.0).abs() < 1e-9);
+        assert!((k.lambda(0.0, 100.0, 900.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_mix_alternates_budgets_and_hints() {
+        let s = schedule(&cfg(ScenarioKind::DeadlineMix));
+        assert!(s.reqs.len() > 10);
+        let tight: Vec<_> = s.reqs.iter().filter(|r| r.tier_hint == 1).collect();
+        assert!(!tight.is_empty());
+        for r in &tight {
+            assert_eq!(r.deadline, Some(ScenarioConfig::default().tight_deadline));
+        }
+        let loose = s.reqs.iter().filter(|r| r.tier_hint == 0).count();
+        assert_eq!(loose + tight.len(), s.reqs.len());
+        // roughly a third are tight
+        let frac = tight.len() as f64 / s.reqs.len() as f64;
+        assert!((0.2..0.5).contains(&frac), "tight fraction {frac:.2} off");
+    }
+
+    #[test]
+    fn slow_client_schedules_every_abuse_kind_in_order() {
+        let s = schedule(&cfg(ScenarioKind::SlowClient));
+        let kinds: Vec<_> = s.abuse.iter().map(|&(_, k)| k).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                AbuseKind::GarbageMagic,
+                AbuseKind::OversizedPrefix,
+                AbuseKind::PartialFrame,
+                AbuseKind::StalledRead,
+            ]
+        );
+        for w in s.abuse.windows(2) {
+            assert!(w[0].0 < w[1].0, "abuse times must ascend");
+        }
+        // every other scenario schedules none
+        assert!(schedule(&cfg(ScenarioKind::FlashCrowd)).abuse.is_empty());
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for kind in ALL_SCENARIOS {
+            assert_eq!(ScenarioKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        assert!(ScenarioKind::parse("tsunami").is_err());
+    }
+}

@@ -119,6 +119,9 @@ impl Default for SweepConfig {
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
     pub workers: usize,
+    /// Traffic shape that produced this point ("steady" for the classic
+    /// grid sweep; scenario names from [`super::scenario`] otherwise).
+    pub scenario: String,
     pub arrival: String,
     /// Offered rate (req/s) for open-loop points, 0 for closed loop.
     pub rate: f64,
@@ -196,6 +199,7 @@ pub fn run_sweep_with(
                 let traces = pool.drain_traces();
                 out.push(SweepPoint {
                     workers,
+                    scenario: "steady".to_string(),
                     arrival: arrival.label(),
                     rate: arrival.rate(),
                     max_wait_ms: max_wait.as_secs_f64() * 1e3,
@@ -254,12 +258,12 @@ fn run_open_loop(
         if now < next {
             std::thread::sleep(next - now);
         }
-        let req = InferRequest {
-            image: images[i % images.len()].clone(),
-            variant: names[i % names.len()].clone(),
-        };
         let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
-        match pool.try_submit(req, pri, cfg.deadline)? {
+        let req = InferRequest::new(names[i % names.len()].as_str())
+            .image(images[i % images.len()].clone())
+            .priority(pri)
+            .deadline_opt(cfg.deadline);
+        match pool.try_submit(req)? {
             Admission::Accepted(t) => {
                 let _ = tx.send(t);
             }
@@ -297,12 +301,12 @@ fn run_closed_loop(
                         if c % 2 == 0 { Priority::Interactive } else { Priority::Batch };
                     let mut i = c;
                     while Instant::now() < end {
-                        let req = InferRequest {
-                            image: images[i % images.len()].clone(),
-                            variant: names[i % names.len()].clone(),
-                        };
+                        let req = InferRequest::new(names[i % names.len()].as_str())
+                            .image(images[i % images.len()].clone())
+                            .priority(pri)
+                            .deadline_opt(cfg.deadline);
                         let t = Instant::now();
-                        match pool.submit(req, pri, cfg.deadline) {
+                        match pool.submit(req) {
                             Ok(ticket) => match ticket.recv_timeout(CLIENT_PATIENCE) {
                                 Ok(Ok(resp)) => {
                                     rec.record_ok(t.elapsed());
@@ -396,6 +400,7 @@ pub fn sweep_json(points: &[SweepPoint], cfg: &SweepConfig, backend: &str) -> Js
         .map(|p| {
             let mut j = Json::obj();
             j.set("workers", p.workers as u64);
+            j.set("scenario", p.scenario.as_str());
             j.set("arrival", p.arrival.as_str());
             j.set("rate", p.rate);
             j.set("max_wait_ms", p.max_wait_ms);
@@ -470,6 +475,7 @@ mod tests {
         let j = sweep_json(&pts, &cfg, "native");
         for key in [
             "workers",
+            "scenario",
             "arrival",
             "throughput_rps",
             "p50_us",

@@ -43,25 +43,20 @@ use swis::arch::pe::PeKind;
 use swis::coordinator::{
     BatchPolicy, InferRequest, PoolConfig, Priority, VariantSpec, WorkerPool,
 };
+use swis::edge::{EdgeClient, EdgeConfig, EdgeServer, PlanCache};
+use swis::flags;
 use swis::loadgen::{
-    exp_gap, run_sweep, run_sweep_with, write_bench_json, Arrival, ProbeMode, SweepConfig,
+    exp_gap, gen_images_mode, run_scenario_inproc, run_scenario_tcp, run_sweep, run_sweep_with,
+    write_bench_json, Arrival, ProbeMode, ScenarioConfig, ScenarioKind, SweepConfig, SweepPoint,
 };
 use swis::nets::{all_networks, by_name, surrogate_weights};
 use swis::quant::truncation::truncate_weights;
-use swis::runtime::{BackendFactory, NativeFactory};
+use swis::runtime::{create_factory, BackendFactory, NativeFactory};
 use swis::schedule::quantize_or_schedule;
 use swis::sim::{simulate_network, ArrayConfig, ExecScheme, SchemeKind};
 use swis::util::cli;
 use swis::util::rng::Rng;
 use swis::util::stats::rmse;
-
-const VALUE_KEYS: &[&str] = &[
-    "net", "nets", "shifts", "group", "scheme", "schemes", "pe", "rows", "cols", "artifacts",
-    "requests", "variants", "max-batch", "max-wait-ms", "seed", "save", "backend",
-    "workers", "queue-depth", "priority", "rate", "rates", "duration-ms", "max-waits-ms",
-    "deadline-ms", "concurrency", "mode", "out", "bits", "batch", "threads", "plan", "o",
-    "reps", "probe", "tier-cap", "metrics-addr", "obs", "trace-sample",
-];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -72,11 +67,14 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = cli::parse(argv, VALUE_KEYS)?;
-    // observability level: --obs off|counters|full beats SWIS_OBS
-    match args.get("obs") {
-        Some(l) => swis::obs::set_level(swis::obs::ObsLevel::parse(l)?),
-        None => swis::obs::init_from_env(),
+    // one flag table (swis::flags) feeds the parser's value-key list,
+    // typo validation, and the generated --help
+    let args = cli::parse(argv, &flags::value_keys())?;
+    flags::validate(&args)?;
+    flags::setup_obs(&args)?;
+    if args.flag("help") {
+        print!("{}", flags::help(args.subcommand()));
+        return Ok(());
     }
     match args.subcommand() {
         Some("quantize") => cmd_quantize(&args),
@@ -93,34 +91,10 @@ fn run(argv: &[String]) -> Result<()> {
             bail!("unknown subcommand '{other}' (try: {known})")
         }
         None => {
-            print_usage();
+            print!("{}", flags::help(None));
             Ok(())
         }
     }
-}
-
-fn print_usage() {
-    println!(
-        "swis — Shared Weight bIt Sparsity (Li et al., TinyML'21)\n\
-         usage: swis <quantize|simulate|plan|serve|loadgen|eval|prob|info> [options]\n\
-         plan:    --net NAME --scheme swis|swis_c|wgt_trunc --shifts N --group G \
-         -o out.swisplan (or --variants fp32,swis@3[/g8]; fp32 is always included; \
-         --tiers [--tier-cap X] embeds a measured precision ladder for \
-         degrade-don't-shed serving)\n\
-         serve:   --net NAME | --plan FILE.swisplan --workers N --queue-depth D \
-         --priority interactive|batch --rate R (open-loop pacing, 0 = burst) \
-         [--metrics-addr H:P exposes Prometheus text; --trace-sample N; \
-         --obs off|counters|full (or SWIS_OBS)]\n\
-         loadgen: --workers 1,2,4 --rates 150,300 --max-waits-ms 2 \
-         --duration-ms 400 --deadline-ms 100 --mode open|closed|both \
-         --probe dense|sparse [--plan FILE] [--trace-sample N also emits \
-         BENCH_observability.json]\n\
-         eval:    --nets a,b --schemes swis,swis_c,wgt_trunc --bits 2,3,4 \
-         --batch B --group G --seed S --out PATH [--plan FILE]\n\
-         tune:    --plan in.swisplan | --net NAME [--scheme S --shifts N] \
-         --rows R --reps K --threads 1,4 [-o tuned.swisplan] (--alpha: MSE++ sweep)\n\
-         see rust/README.md for the full option list"
-    );
 }
 
 fn pe_kind(s: &str) -> Result<PeKind> {
@@ -309,26 +283,22 @@ fn cmd_plan(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &cli::Args) -> Result<()> {
+    // --listen switches serve from the synthetic in-process driver to
+    // the SWIS1 TCP edge (multi-model, tenant quotas, rebalancing)
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return cmd_serve_edge(args, &listen);
+    }
     let dir = args.get_or("artifacts", "artifacts");
     let n_req = args.get_usize("requests", 128)?;
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 64)?,
-        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
-    };
+    let policy = flags::batch_policy(args)?;
     let workers = args.get_usize("workers", 1)?;
     let queue_depth = args.get_usize("queue-depth", 1024)?;
     let priority = Priority::parse(args.get_or("priority", "interactive"))?;
     // open-loop pacing of the synthetic driver; 0 submits one burst
     let rate = args.get_f64("rate", 0.0)?;
-    let deadline_ms = args.get_usize("deadline-ms", 0)?;
-    let deadline =
-        if deadline_ms == 0 { None } else { Some(Duration::from_millis(deadline_ms as u64)) };
-    // --trace-sample N traces every Nth request; it implies the full obs
-    // level (tracing is inert below it)
-    let trace_sample = args.get_usize("trace-sample", 0)?;
-    if trace_sample > 0 && !swis::obs::tracing_on() {
-        swis::obs::set_level(swis::obs::ObsLevel::Full);
-    }
+    let deadline = flags::deadline(args, 0.0)?;
+    let trace_sample = flags::trace_sample(args)?;
     let cfg = PoolConfig { workers, policy, queue_depth, trace_sample: trace_sample.max(1) };
 
     // --metrics-addr HOST:PORT exposes the live Prometheus endpoint for
@@ -346,23 +316,15 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     // --plan warms the pool from a prepared .swisplan artifact: the
     // offline step already ran, so worker start-up performs ZERO
     // quantization; net and variants come from the plan itself
-    let (pool, names) = if let Some(plan_path) = args.get("plan") {
-        let plan = Arc::new(EnginePlan::load(Path::new(plan_path))?);
+    let (pool, names) = if let Some(plan) =
+        flags::load_plan(args, &["net", "variants", "backend"])?
+    {
         let names: Vec<String> = plan.variants().iter().map(|v| v.name.clone()).collect();
         println!(
-            "# serve — starting pool ({workers} workers, {} variants, net {}, plan {plan_path})",
+            "# serve — starting pool ({workers} workers, {} variants, net {})",
             names.len(),
             plan.net_name()
         );
-        if args.get("net").is_some()
-            || args.get("variants").is_some()
-            || args.get("backend").is_some()
-        {
-            eprintln!(
-                "note: --plan overrides --net/--variants/--backend (the plan is \
-                 authoritative and always serves natively)"
-            );
-        }
         let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(plan));
         (WorkerPool::start_with_factory(factory, cfg)?, names)
     } else {
@@ -370,7 +332,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         let net = by_name(net_name)
             .with_context(|| format!("unknown network '{net_name}'"))?
             .with_fc();
-        let variants = EngineConfig::parse_variant_list(args.get_or("variants", "fp32,swis@3"))?;
+        let variants = flags::variants_or(args, "fp32,swis@3")?;
         let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
         let names: Vec<String> = variants.iter().map(|v| v.name.clone()).collect();
         println!(
@@ -388,7 +350,9 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     for i in 0..n_req {
         let image: Vec<f32> = (0..per).map(|_| rng.f64() as f32).collect();
         let variant = names[i % names.len()].clone();
-        rxs.push(pool.submit(InferRequest { image, variant }, priority, deadline)?);
+        rxs.push(pool.submit(
+            InferRequest::new(variant).image(image).priority(priority).deadline_opt(deadline),
+        )?);
         // keep the exported snapshot current while the load runs, so a
         // scrape mid-run sees live counters and queue depths
         if let Some((_, registry)) = &metrics_export {
@@ -440,25 +404,107 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// `swis serve --listen HOST:PORT` — the SWIS1 TCP edge: a model table
+/// of prepared plans (deduplicated through one [`PlanCache`]), a
+/// per-model worker pool under one shared worker budget, per-tenant
+/// token-bucket quotas, and an optional queue-depth-driven rebalancer.
+fn cmd_serve_edge(args: &cli::Args, listen: &str) -> Result<()> {
+    let trace_sample = flags::trace_sample(args)?;
+    let pool_cfg = PoolConfig {
+        // per-model counts come from the edge's worker budget, not here
+        workers: 1,
+        policy: flags::batch_policy(args)?,
+        queue_depth: args.get_usize("queue-depth", 1024)?,
+        trace_sample: trace_sample.max(1),
+    };
+    let stall = Duration::from_millis(args.get_usize("stall-ms", 2000)? as u64);
+    let rebalance_ms = args.get_usize("rebalance-ms", 0)?;
+    let cfg = EdgeConfig {
+        quota: flags::quota(args)?,
+        read_stall: stall,
+        write_stall: stall,
+        worker_budget: args.get_usize("workers", 2)?,
+        rebalance: (rebalance_ms > 0).then(|| Duration::from_millis(rebalance_ms as u64)),
+        ..EdgeConfig::default()
+    };
+    let quota_label = match &cfg.quota {
+        Some(q) => format!("{:.0}/s burst {:.0}", q.rate, q.burst),
+        None => "off".to_string(),
+    };
+    let cache = PlanCache::new();
+    let mut models = Vec::new();
+    for (id, path) in flags::model_table(args)? {
+        models.push((id, cache.load(&path)?));
+    }
+    let server = EdgeServer::serve(listen, models, pool_cfg, cfg)?;
+    println!(
+        "# edge — SWIS1 on {} ({} plan(s) cached, quota {quota_label})",
+        server.addr(),
+        cache.len()
+    );
+    for (id, workers) in server.worker_split() {
+        println!("  model {id}: {workers} worker(s)");
+    }
+    let metrics_export = match args.get("metrics-addr") {
+        Some(addr) => {
+            let registry = swis::obs::registry::MetricsRegistry::new();
+            let http = swis::obs::http::MetricsServer::serve(addr, registry.clone())?;
+            println!("metrics          : http://{}/ (Prometheus text)", http.addr());
+            Some((http, registry))
+        }
+        None => None,
+    };
+    // --serve-ms bounds the serving window (0 = run until killed); the
+    // exported snapshot is refreshed every tick so scrapes stay live
+    let serve_ms = args.get_usize("serve-ms", 0)?;
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        if let Some((_, registry)) = &metrics_export {
+            registry.update_pool(server.metrics().snapshot(), [0, 0]);
+        }
+        if serve_ms > 0 && t0.elapsed() >= Duration::from_millis(serve_ms as u64) {
+            break;
+        }
+    }
+    let totals = server.pool_totals();
+    let wire = server.metrics().snapshot().wire;
+    println!(
+        "requests         : {} ({} batches, {} degraded)",
+        totals.requests, totals.batches, totals.degraded
+    );
+    println!("shed / rejected  : {} / {}", totals.shed, totals.rejected);
+    println!("errors / panics  : {} / {}", totals.errors, totals.panics);
+    println!(
+        "wire faults      : magic {} frame {} oversized {} stall r/w {}/{}",
+        wire.bad_magic, wire.bad_frame, wire.oversized, wire.stalled_read, wire.stalled_write
+    );
+    println!("quota rejected   : {}", wire.quota_rejected);
+    println!("connections      : {} opened / {} closed", wire.conns_opened, wire.conns_closed);
+    println!("tenants seen     : {}", server.tenants_seen());
+    if let Some((http, registry)) = metrics_export {
+        registry.update_pool(server.metrics().snapshot(), [0, 0]);
+        http.stop();
+    }
+    server.stop();
+    Ok(())
+}
+
 /// SLO sweep over worker count x batch policy x arrival process; emits
 /// the repo-root `BENCH_serving.json` trajectory record.
 fn cmd_loadgen(args: &cli::Args) -> Result<()> {
+    // --scenario switches from the classic grid sweep to the shaped
+    // traffic suite (optionally replayed over TCP with --connect)
+    if let Some(kinds) = flags::scenarios(args)? {
+        return cmd_loadgen_scenarios(args, kinds);
+    }
     let dir = args.get_or("artifacts", "artifacts");
     // with --plan the sweep measures a prepared artifact: variants come
     // from the plan and every grid point shares its operands
-    let plan = match args.get("plan") {
-        Some(p) => Some(Arc::new(EnginePlan::load(Path::new(p))?)),
-        None => None,
-    };
-    if plan.is_some() && (args.get("backend").is_some() || args.get("variants").is_some()) {
-        eprintln!(
-            "note: --plan overrides --variants/--backend (the plan is authoritative \
-             and always sweeps natively)"
-        );
-    }
+    let plan = flags::load_plan(args, &["backend", "variants"])?;
     let variants: Vec<VariantSpec> = match &plan {
         Some(p) => p.variants().to_vec(),
-        None => EngineConfig::parse_variant_list(args.get_or("variants", "fp32,swis@3"))?,
+        None => flags::variants_or(args, "fp32,swis@3")?,
     };
     let workers = args.get_usize_list("workers", &[1, 2, 4])?;
     let rates = args.get_f64_list("rates", &[150.0, 300.0])?;
@@ -474,13 +520,9 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
     if arrivals.is_empty() {
         bail!("--mode expects open|closed|both (got '{mode}')");
     }
-    let deadline_ms = args.get_f64("deadline-ms", 100.0)?;
     // --trace-sample N samples every Nth request's span trace into
     // BENCH_observability.json; implies the full obs level
-    let trace_sample = args.get_usize("trace-sample", 0)?;
-    if trace_sample > 0 && !swis::obs::tracing_on() {
-        swis::obs::set_level(swis::obs::ObsLevel::Full);
-    }
+    let trace_sample = flags::trace_sample(args)?;
     let cfg = SweepConfig {
         workers,
         arrivals,
@@ -492,11 +534,7 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 64)?,
         duration: Duration::from_millis(args.get_usize("duration-ms", 400)? as u64),
         queue_depth: args.get_usize("queue-depth", 256)?,
-        deadline: if deadline_ms <= 0.0 {
-            None
-        } else {
-            Some(Duration::from_secs_f64(deadline_ms / 1e3))
-        },
+        deadline: flags::deadline(args, 100.0)?,
         variants,
         seed: args.get_usize("seed", 2026)? as u64,
         probe: ProbeMode::parse(args.get_or("probe", "dense"))?,
@@ -551,8 +589,7 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
             p.stats.error + p.stats.timeout
         );
     }
-    let default_out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
-    let out = args.get("out").map(std::path::PathBuf::from).unwrap_or(default_out);
+    let out = flags::bench_out(args, "BENCH_serving.json");
     write_bench_json(&points, &cfg, served_on, &out)?;
     println!("wrote {}", out.display());
     if trace_sample > 0 {
@@ -580,6 +617,177 @@ fn cmd_loadgen(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// `swis loadgen --scenario a,b[,...]` — the shaped-traffic suite.
+/// In-process by default (a fresh pool per scenario over ONE shared
+/// factory); `--connect HOST:PORT` replays the same pre-drawn schedules
+/// over TCP against a serving edge. Same scenario + same seed means the
+/// same offered load on both paths, so the records are comparable.
+fn cmd_loadgen_scenarios(args: &cli::Args, kinds: Vec<ScenarioKind>) -> Result<()> {
+    let rate = args.get_f64("rate", 150.0)?;
+    let base = ScenarioConfig {
+        kind: ScenarioKind::Steady, // replaced per trial below
+        duration: Duration::from_millis(args.get_usize("duration-ms", 400)? as u64),
+        rate,
+        peak_rate: args.get_f64("peak-rate", rate * 4.0)?,
+        seed: args.get_usize("seed", 2026)? as u64,
+        deadline: flags::deadline(args, 100.0)?,
+        ..ScenarioConfig::default()
+    };
+    // scenarios run one batch policy / queue depth (the grid sweep is
+    // where those knobs get swept)
+    let max_wait =
+        Duration::from_millis(args.get_usize_list("max-waits-ms", &[2])?[0] as u64);
+    let policy = BatchPolicy { max_batch: args.get_usize("max-batch", 64)?, max_wait };
+    let max_wait_ms = max_wait.as_secs_f64() * 1e3;
+    let queue_depth = args.get_usize("queue-depth", 256)?;
+    let probe = ProbeMode::parse(args.get_or("probe", "dense"))?;
+
+    let mut points: Vec<SweepPoint> = Vec::new();
+    let mut protocol_errors = 0u64;
+    let mut abuse_sent = 0u64;
+    let mut served_on = String::new();
+    let variants: Vec<VariantSpec>;
+    if let Some(addr) = args.get("connect") {
+        let model = args.get_or("model", "default");
+        let conns = args.get_usize("conns", 4)?;
+        // ask the edge what it serves: variant names + input shape
+        let mut info_client = EdgeClient::connect(addr, Duration::from_secs(5))?;
+        let infos = info_client.info()?;
+        drop(info_client);
+        let info = infos
+            .iter()
+            .find(|m| m.id == model)
+            .with_context(|| format!("edge at {addr} does not serve model '{model}'"))?;
+        let names = info.variants.clone();
+        let image_len: usize = info.input.iter().product();
+        let images = gen_images_mode(16, image_len, base.seed, probe);
+        println!(
+            "# loadgen — {} scenario(s) over TCP to {addr} (model {model}, {conns} conns)",
+            kinds.len()
+        );
+        for kind in &kinds {
+            let scfg = ScenarioConfig { kind: *kind, ..base.clone() };
+            let run = run_scenario_tcp(addr, model, &scfg, &names, &images, conns)?;
+            protocol_errors += run.protocol_errors;
+            abuse_sent += run.abuse_sent;
+            let s = run.stats;
+            points.push(SweepPoint {
+                workers: conns,
+                scenario: kind.as_str().to_string(),
+                arrival: format!("scenario@{:.0}", scfg.rate),
+                rate: scfg.rate,
+                max_wait_ms,
+                // the pool-side split lives in the server's metrics; the
+                // client-side record keeps its own observed counts
+                shed: s.shed,
+                rejected: s.busy,
+                shed_by_lane: [0, 0],
+                rejected_by_lane: [0, 0],
+                degraded: s.degraded,
+                mean_batch: 0.0,
+                traces: Vec::new(),
+                stats: s,
+            });
+        }
+        served_on = format!("tcp:{addr}");
+        // the wire carries variant NAMES; parse them back into specs for
+        // the record header (best effort — names round-trip by design)
+        variants = EngineConfig::parse_variant_list(&names.join(",")).unwrap_or_default();
+    } else {
+        let dir = args.get_or("artifacts", "artifacts");
+        let plan = flags::load_plan(args, &["backend", "variants"])?;
+        let specs: Vec<VariantSpec> = match &plan {
+            Some(p) => p.variants().to_vec(),
+            None => flags::variants_or(args, "fp32,swis@3")?,
+        };
+        let names: Vec<String> = specs.iter().map(|v| v.name.clone()).collect();
+        let workers = args.get_usize_list("workers", &[2])?[0];
+        let trace_sample = flags::trace_sample(args)?;
+        let factory: Arc<dyn BackendFactory> = match plan {
+            Some(p) => Arc::new(NativeFactory::from_plan(p)),
+            None => {
+                let backend = swis::runtime::BackendKind::parse(args.get_or("backend", "auto"))?;
+                Arc::from(create_factory(backend, Path::new(dir), &specs)?)
+            }
+        };
+        println!(
+            "# loadgen — {} scenario(s) in-process ({workers} workers)",
+            kinds.len()
+        );
+        let mut images: Option<Vec<Vec<f32>>> = None;
+        for kind in &kinds {
+            let pool = WorkerPool::start_with_factory(
+                Arc::clone(&factory),
+                PoolConfig { workers, policy, queue_depth, trace_sample: trace_sample.max(1) },
+            )?;
+            served_on = pool.backend().to_string();
+            let imgs = images
+                .get_or_insert_with(|| gen_images_mode(16, pool.image_len(), base.seed, probe));
+            let scfg = ScenarioConfig { kind: *kind, ..base.clone() };
+            let run = run_scenario_inproc(&pool, &scfg, &names, imgs)?;
+            let snap = pool.metrics.snapshot();
+            points.push(SweepPoint {
+                workers,
+                scenario: kind.as_str().to_string(),
+                arrival: format!("scenario@{:.0}", scfg.rate),
+                rate: scfg.rate,
+                max_wait_ms,
+                shed: snap.shed,
+                rejected: snap.rejected,
+                shed_by_lane: snap.shed_by_lane,
+                rejected_by_lane: snap.rejected_by_lane,
+                degraded: snap.degraded,
+                mean_batch: snap.mean_batch,
+                traces: Vec::new(),
+                stats: run.stats,
+            });
+            pool.shutdown()?;
+        }
+        variants = specs;
+    }
+
+    println!(
+        "{:>14} {:>10} {:>10} {:>10} {:>6} {:>6} {:>6} {:>6}",
+        "scenario", "ok req/s", "p50 us", "p99 us", "shed", "busy", "degr", "err"
+    );
+    for p in &points {
+        println!(
+            "{:>14} {:>10.1} {:>10.0} {:>10.0} {:>6} {:>6} {:>6} {:>6}",
+            p.scenario,
+            p.stats.throughput_rps,
+            p.stats.p50_us,
+            p.stats.p99_us,
+            p.shed,
+            p.rejected,
+            p.degraded,
+            p.stats.error + p.stats.timeout
+        );
+    }
+    let cfg = SweepConfig {
+        workers: vec![points.first().map(|p| p.workers).unwrap_or(0)],
+        arrivals: Vec::new(),
+        max_waits: vec![max_wait],
+        max_batch: policy.max_batch,
+        duration: base.duration,
+        queue_depth,
+        deadline: base.deadline,
+        variants,
+        seed: base.seed,
+        probe,
+        trace_sample: 0,
+    };
+    let out = flags::bench_out(args, "BENCH_serving.json");
+    write_bench_json(&points, &cfg, &served_on, &out)?;
+    println!("wrote {}", out.display());
+    if protocol_errors > 0 || abuse_sent > 0 {
+        println!(
+            "wire             : {abuse_sent} abusive conn(s) sent, \
+             {protocol_errors} protocol error(s) observed"
+        );
+    }
+    Ok(())
+}
+
 /// Zoo accuracy/compression sweep on the native executor: nets x schemes
 /// x bit-widths, per-layer MSE vs fp32, top-1 agreement on a fixed probe
 /// batch, measured packed compression. Emits the repo-root
@@ -595,10 +803,7 @@ fn cmd_eval(args: &cli::Args) -> Result<()> {
     };
     // with --plan the sweep measures a shipped artifact's exact
     // operands instead of re-quantizing a (nets x schemes x bits) grid
-    let plan = match args.get("plan") {
-        Some(p) => Some(EnginePlan::load(Path::new(p))?),
-        None => None,
-    };
+    let plan = flags::load_plan(args, &["nets", "schemes", "bits", "group"])?;
     let cfg = match &plan {
         None => EvalConfig {
             nets: list("nets", &d.nets),
@@ -630,16 +835,6 @@ fn cmd_eval(args: &cli::Args) -> Result<()> {
             artifacts: Some(std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))),
         },
         Some(p) => {
-            if args.get("nets").is_some()
-                || args.get("schemes").is_some()
-                || args.get("bits").is_some()
-                || args.get("group").is_some()
-            {
-                eprintln!(
-                    "note: --plan overrides --nets/--schemes/--bits/--group (the plan \
-                     is authoritative)"
-                );
-            }
             let quantized: Vec<&VariantSpec> =
                 p.variants().iter().filter(|v| v.scheme != Scheme::Fp32).collect();
             // the config block must label what actually ran: the plan's
@@ -689,8 +884,7 @@ fn cmd_eval(args: &cli::Args) -> Result<()> {
             r.weights.as_str()
         );
     }
-    let default_out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_accuracy.json");
-    let out = args.get("out").map(std::path::PathBuf::from).unwrap_or(default_out);
+    let out = flags::bench_out(args, "BENCH_accuracy.json");
     write_bench_json(&recs, &cfg, &out)?;
     println!("wrote {}", out.display());
     Ok(())
@@ -1071,5 +1265,30 @@ mod tests {
         assert!(run(&sv(&["eval", "--nets", "tinycnn", "--schemes", "fp32"])).is_err());
         assert!(run(&sv(&["serve", "--plan", "/nope.swisplan"])).is_err());
         assert!(run(&sv(&["plan", "--net", "nope"])).is_err());
+        // table-driven validation: a typo fails loudly instead of being
+        // silently ignored, and --help flows through the flag table
+        assert!(run(&sv(&["serve", "--workerz", "2"])).is_err());
+        assert!(run(&sv(&["loadgen", "--scenario", "rush_hour"])).is_err());
+        run(&sv(&["serve", "--help"])).unwrap();
+        run(&sv(&["--help"])).unwrap();
+    }
+
+    #[test]
+    fn loadgen_scenario_suite_through_cli() {
+        let out =
+            std::env::temp_dir().join(format!("swis_lg_scen_{}.json", std::process::id()));
+        run(&sv(&[
+            "loadgen", "--scenario", "steady,flash_crowd", "--workers", "1", "--rate", "120",
+            "--duration-ms", "80", "--variants", "swis@2", "--backend", "native",
+            "--deadline-ms", "5000", "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let j = swis::util::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("serving"));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2, "one record per scenario");
+        assert_eq!(recs[0].get("scenario").unwrap().as_str(), Some("steady"));
+        assert_eq!(recs[1].get("scenario").unwrap().as_str(), Some("flash_crowd"));
+        let _ = std::fs::remove_file(&out);
     }
 }

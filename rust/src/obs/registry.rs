@@ -130,6 +130,38 @@ fn render_pool(out: &mut String, s: &MetricsSnapshot, depths: [usize; 2]) {
         &[(&il, depths[0] as f64), (&bl, depths[1] as f64)],
     );
     push_metric(out, "swis_mean_batch", "gauge", "Mean dispatched batch size", &[(&[], s.mean_batch)]);
+    if s.wire != crate::coordinator::WireCounters::default() {
+        push_metric(
+            out,
+            "swis_wire_faults_total",
+            "counter",
+            "Protocol faults observed at the TCP edge, per class",
+            &[
+                (&[("kind", "bad_magic")], s.wire.bad_magic as f64),
+                (&[("kind", "bad_frame")], s.wire.bad_frame as f64),
+                (&[("kind", "oversized")], s.wire.oversized as f64),
+                (&[("kind", "stalled_read")], s.wire.stalled_read as f64),
+                (&[("kind", "stalled_write")], s.wire.stalled_write as f64),
+            ],
+        );
+        push_metric(
+            out,
+            "swis_quota_rejected_total",
+            "counter",
+            "Requests refused by per-tenant token-bucket quota",
+            &[(&[], s.wire.quota_rejected as f64)],
+        );
+        push_metric(
+            out,
+            "swis_conns_total",
+            "counter",
+            "TCP edge connections, by lifecycle event",
+            &[
+                (&[("event", "opened")], s.wire.conns_opened as f64),
+                (&[("event", "closed")], s.wire.conns_closed as f64),
+            ],
+        );
+    }
     push_metric(
         out,
         "swis_total_latency_us",

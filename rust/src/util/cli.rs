@@ -118,6 +118,17 @@ impl Args {
         &self.pos
     }
 
+    /// Every `--key value` / `--key=value` option name seen (for
+    /// table-driven validation by the binary).
+    pub fn opt_keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str())
+    }
+
+    /// Every boolean `--flag` seen.
+    pub fn flag_names(&self) -> impl Iterator<Item = &str> {
+        self.flags.iter().map(|s| s.as_str())
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.pos.first().map(|s| s.as_str())
     }

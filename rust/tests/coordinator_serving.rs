@@ -83,7 +83,7 @@ fn native_serves_batched_requests_end_to_end() {
         .iter()
         .map(|im| {
             coord
-                .submit(InferRequest { image: im.clone(), variant: "swis@3".into() })
+                .submit(InferRequest::new("swis@3").image(im.clone()))
                 .unwrap()
         })
         .collect();
@@ -104,10 +104,10 @@ fn native_routes_variants_and_rejects_unknown() {
     let imgs = synth_images(1);
 
     let fp = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "fp32".into() })
+        .infer(InferRequest::new("fp32").image(imgs[0].clone()))
         .unwrap();
     let sw = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@3".into() })
+        .infer(InferRequest::new("swis@3").image(imgs[0].clone()))
         .unwrap();
     // quantized logits differ from fp32 but stay in the same regime
     assert_ne!(fp.logits, sw.logits);
@@ -122,15 +122,15 @@ fn native_routes_variants_and_rejects_unknown() {
 
     // the scheduled fractional variant serves too
     let frac = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@2.5".into() })
+        .infer(InferRequest::new("swis@2.5").image(imgs[0].clone()))
         .unwrap();
     assert_eq!(frac.logits.len(), 10);
 
-    let err = coord.infer(InferRequest { image: imgs[0].clone(), variant: "nope".into() });
+    let err = coord.infer(InferRequest::new("nope").image(imgs[0].clone()));
     assert!(err.is_err());
     // bad image size fails fast at submit
     assert!(coord
-        .submit(InferRequest { image: vec![0.0; 7], variant: "fp32".into() })
+        .submit(InferRequest::new("fp32").image(vec![0.0; 7]))
         .is_err());
     coord.shutdown().unwrap();
 }
@@ -144,10 +144,10 @@ fn native_serving_is_deterministic() {
     let coord = start_native(BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
     let imgs = synth_images(1);
     let a = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@3".into() })
+        .infer(InferRequest::new("swis@3").image(imgs[0].clone()))
         .unwrap();
     let b = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@3".into() })
+        .infer(InferRequest::new("swis@3").image(imgs[0].clone()))
         .unwrap();
     assert_eq!(a.logits, b.logits);
     coord.shutdown().unwrap();
@@ -194,7 +194,7 @@ fn serves_batched_requests_with_correct_results() {
         .iter()
         .map(|im| {
             coord
-                .submit(InferRequest { image: im.clone(), variant: "fp32".into() })
+                .submit(InferRequest::new("fp32").image(im.clone()))
                 .unwrap()
         })
         .collect();
@@ -230,10 +230,10 @@ fn routes_variants_and_rejects_unknown() {
     let (imgs, _) = images(1);
 
     let fp = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "fp32".into() })
+        .infer(InferRequest::new("fp32").image(imgs[0].clone()))
         .unwrap();
     let sw = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@3".into() })
+        .infer(InferRequest::new("swis@3").image(imgs[0].clone()))
         .unwrap();
     // quantized logits differ from fp32 but not wildly
     assert_ne!(fp.logits, sw.logits);
@@ -246,11 +246,11 @@ fn routes_variants_and_rejects_unknown() {
         / 10.0;
     assert!(dot < 2.0, "variant drift {dot}");
 
-    let err = coord.infer(InferRequest { image: imgs[0].clone(), variant: "nope".into() });
+    let err = coord.infer(InferRequest::new("nope").image(imgs[0].clone()));
     assert!(err.is_err());
     // bad image size fails fast at submit
     assert!(coord
-        .submit(InferRequest { image: vec![0.0; 7], variant: "fp32".into() })
+        .submit(InferRequest::new("fp32").image(vec![0.0; 7]))
         .is_err());
     coord.shutdown().unwrap();
 }
@@ -263,7 +263,7 @@ fn fractional_variant_served() {
     let coord = start(BatchPolicy::default());
     let (imgs, _) = images(1);
     let r = coord
-        .infer(InferRequest { image: imgs[0].clone(), variant: "swis@2.5".into() })
+        .infer(InferRequest::new("swis@2.5").image(imgs[0].clone()))
         .unwrap();
     assert_eq!(r.logits.len(), 10);
     coord.shutdown().unwrap();

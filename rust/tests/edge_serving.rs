@@ -1,0 +1,358 @@
+//! Acceptance pins for the SWIS1 TCP edge (`swis::edge`):
+//!
+//! * refusals (over-quota, unknown model) are typed frames on an OPEN
+//!   connection — never hangups;
+//! * every adversarial-client class (garbage magic, oversized length
+//!   prefix, partial frame then disconnect, stalled reader with a full
+//!   write buffer) bumps its own wire-fault counter and the server
+//!   keeps serving other connections;
+//! * the wire and in-process submission surfaces agree: same scenario,
+//!   same seed => same offered load, zero protocol errors;
+//! * the rebalancer moves workers toward the loaded model without
+//!   dropping in-flight work.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use swis::api::{Engine, EngineConfig, EnginePlan, VariantSpec};
+use swis::coordinator::{
+    BatchPolicy, InferRequest, PoolConfig, TierPolicy, WorkerPool,
+};
+use swis::edge::{
+    frame, EdgeClient, EdgeConfig, EdgeServer, Frame, PlanCache, QuotaConfig,
+};
+use swis::SwisError;
+use swis::loadgen::{run_scenario_inproc, run_scenario_tcp, ScenarioConfig, ScenarioKind};
+use swis::runtime::{BackendFactory, NativeFactory};
+
+/// A prepared TinyCNN plan (fp32 + two SWIS tiers) shared by the tests.
+fn prep_plan(tiered: bool) -> Arc<EnginePlan> {
+    let variants =
+        vec![VariantSpec::fp32(), VariantSpec::swis(3.0, 4), VariantSpec::swis(2.0, 4)];
+    let mut plan = Engine::prepare(
+        EngineConfig::for_net("tinycnn").unwrap().variants(variants).threads(2),
+    )
+    .unwrap();
+    if tiered {
+        let ladder = TierPolicy::new(
+            vec!["swis@3".to_string(), "swis@2".to_string()],
+            vec![1.0, 4.0],
+            1,
+        )
+        .unwrap();
+        plan.set_tier_policy(ladder).unwrap();
+    }
+    Arc::new(plan)
+}
+
+fn test_pool_cfg() -> PoolConfig {
+    PoolConfig {
+        workers: 1, // ignored by the edge; the budget rules
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        queue_depth: 128,
+        ..PoolConfig::default()
+    }
+}
+
+/// Edge config with millisecond stall budgets so fault paths resolve
+/// quickly under test.
+fn test_edge_cfg() -> EdgeConfig {
+    EdgeConfig {
+        read_stall: Duration::from_millis(100),
+        write_stall: Duration::from_millis(150),
+        worker_budget: 2,
+        ..EdgeConfig::default()
+    }
+}
+
+fn serve_one(plan: Arc<EnginePlan>, cfg: EdgeConfig) -> EdgeServer {
+    EdgeServer::serve(
+        "127.0.0.1:0",
+        vec![("default".to_string(), plan)],
+        test_pool_cfg(),
+        cfg,
+    )
+    .unwrap()
+}
+
+fn image_for(plan: &EnginePlan) -> Vec<f32> {
+    let [h, w, c] = plan.input_shape();
+    (0..h * w * c).map(|i| (i % 7) as f32 * 0.125).collect()
+}
+
+/// Poll until `cond` holds (the conn threads run asynchronously).
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn info_and_inference_round_trip_and_match_inprocess() {
+    let plan = prep_plan(true);
+    let server = serve_one(Arc::clone(&plan), test_edge_cfg());
+    let addr = server.addr().to_string();
+    let mut client = EdgeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    // the info frame advertises enough for a client to self-configure
+    let infos = client.info().unwrap();
+    assert_eq!(infos.len(), 1);
+    assert_eq!(infos[0].id, "default");
+    assert_eq!(infos[0].input, plan.input_shape());
+    assert_eq!(infos[0].variants, vec!["fp32", "swis@3", "swis@2"]);
+    assert!(infos[0].tiered);
+
+    // logits over the wire are bit-identical to an in-process pool
+    // warmed from the same plan
+    let image = image_for(&plan);
+    let wire = client.infer("default", InferRequest::new("swis@3").image(image.clone())).unwrap();
+    assert_eq!(wire.variant, "swis@3");
+    assert!(!wire.degraded);
+
+    let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(Arc::clone(&plan)));
+    let local = WorkerPool::start_with_factory(factory, test_pool_cfg()).unwrap();
+    let expect = local.infer(InferRequest::new("swis@3").image(image.clone())).unwrap();
+    assert_eq!(wire.logits, expect.logits, "wire logits must match in-process logits");
+    local.shutdown().unwrap();
+
+    // a tier hint resolves through the plan's ladder server-side: the
+    // response names the variant that actually served
+    let hinted = client
+        .infer("default", InferRequest::new("swis@3").image(image).tier_hint(1))
+        .unwrap();
+    assert_eq!(hinted.variant, "swis@2", "tier hint must resolve down the ladder");
+
+    // unknown model is a typed refusal on a connection that stays open
+    let err = client
+        .infer("nope", InferRequest::new("swis@3").image(image_for(&plan)))
+        .unwrap_err();
+    assert!(matches!(err, SwisError::Admission { .. }), "got {err:?}");
+    assert!(err.message().contains("unknown model"));
+    client.info().unwrap(); // same socket still serves
+
+    server.stop();
+}
+
+#[test]
+fn over_quota_is_a_typed_refusal_and_tenants_are_isolated() {
+    let plan = prep_plan(false);
+    let cfg = EdgeConfig {
+        quota: Some(QuotaConfig { rate: 0.001, burst: 2.0 }),
+        ..test_edge_cfg()
+    };
+    let server = serve_one(Arc::clone(&plan), cfg);
+    let addr = server.addr().to_string();
+    let mut client = EdgeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let req = |tenant: &str| {
+        InferRequest::new("fp32").image(image_for(&plan)).tenant(tenant.to_string())
+    };
+    // the burst allowance spends down...
+    client.infer("default", req("acme")).unwrap();
+    client.infer("default", req("acme")).unwrap();
+    let err = client.infer("default", req("acme")).unwrap_err();
+    assert!(err.message().contains("over quota"), "got {err:?}");
+    // ...on a connection that stays open, and other tenants still serve
+    client.infer("default", req("zen")).unwrap();
+    assert_eq!(server.metrics().snapshot().wire.quota_rejected, 1);
+    assert_eq!(server.tenants_seen(), 2);
+    server.stop();
+}
+
+#[test]
+fn adversarial_clients_are_counted_and_never_fatal() {
+    let plan = prep_plan(false);
+    let server = serve_one(Arc::clone(&plan), test_edge_cfg());
+    let addr = server.addr().to_string();
+    let metrics = server.metrics();
+
+    // garbage magic: counted, connection dropped, no reply owed
+    let mut garbage = EdgeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    garbage.send_raw(b"XXXXX\x01\x00\x00\x00\x00").unwrap();
+    wait_for("bad_magic count", || metrics.snapshot().wire.bad_magic == 1);
+
+    // partial frame then disconnect: counted as a bad frame
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&frame::MAGIC[..3]).unwrap();
+    } // dropped here — EOF mid-frame
+    wait_for("bad_frame count", || metrics.snapshot().wire.bad_frame == 1);
+
+    // oversized length prefix: refused BEFORE any body allocation, with
+    // a typed status (seq 0 — the request sequence was never readable)
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut huge = Vec::new();
+    huge.extend_from_slice(&frame::MAGIC);
+    huge.push(frame::FT_INFER);
+    huge.extend_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&huge).unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Status { seq, code, msg } => {
+            assert_eq!(seq, 0);
+            assert_eq!(code, swis::edge::WireStatus::AdmissionInvalid.code());
+            assert!(msg.contains("exceeds"), "got '{msg}'");
+        }
+        other => panic!("wanted a status frame, got {other:?}"),
+    }
+    wait_for("oversized count", || metrics.snapshot().wire.oversized == 1);
+
+    // through all of that the server never stopped serving
+    let mut ok = EdgeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    ok.infer("default", InferRequest::new("fp32").image(image_for(&plan))).unwrap();
+
+    let wire = metrics.snapshot().wire;
+    assert_eq!(
+        (wire.bad_magic, wire.bad_frame, wire.oversized),
+        (1, 1, 1),
+        "each fault class counts exactly once: {wire:?}"
+    );
+    server.stop();
+}
+
+#[test]
+fn stalled_reader_with_full_write_buffer_is_cut_off() {
+    let plan = prep_plan(false);
+    let server = serve_one(Arc::clone(&plan), test_edge_cfg());
+    let addr = server.addr().to_string();
+    let metrics = server.metrics();
+
+    // flood infer frames for a long unknown model id and never read:
+    // every request earns a fat status reply, the socket buffers fill,
+    // and the server's writer must hit its write-stall budget rather
+    // than block forever
+    let long_model = "m".repeat(230);
+    let bytes = frame::encode(&Frame::Infer {
+        seq: 1,
+        model: long_model,
+        req: InferRequest::new("fp32"),
+    });
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_write_timeout(Some(Duration::from_secs(3))).unwrap();
+    for _ in 0..100_000 {
+        if stream.write_all(&bytes).is_err() {
+            break; // server already cut us off
+        }
+    }
+    // hold the socket open, still not reading
+    wait_for("stalled_write count", || metrics.snapshot().wire.stalled_write >= 1);
+
+    // the stalled connection cost only itself — fresh clients serve
+    let mut ok = EdgeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    ok.infer("default", InferRequest::new("fp32").image(image_for(&plan))).unwrap();
+    drop(stream);
+    server.stop();
+}
+
+#[test]
+fn plan_cache_hands_out_one_shared_plan_per_path() {
+    let plan = prep_plan(false);
+    let dir = std::env::temp_dir().join(format!("swis_edge_cache_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tinycnn.swisplan");
+    plan.save(&path).unwrap();
+
+    let cache = PlanCache::new();
+    let a = cache.load(&path).unwrap();
+    let b = cache.load(&path).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "same path must reuse the loaded plan");
+    assert_eq!(cache.len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tcp_and_inprocess_scenarios_agree_on_offered_load() {
+    let plan = prep_plan(false);
+    let names: Vec<String> = plan.variants().iter().map(|v| v.name.clone()).collect();
+    let images = vec![image_for(&plan)];
+    let cfg = ScenarioConfig {
+        kind: ScenarioKind::Steady,
+        duration: Duration::from_millis(150),
+        rate: 200.0,
+        peak_rate: 200.0,
+        seed: 77,
+        deadline: Some(Duration::from_secs(5)),
+        ..ScenarioConfig::default()
+    };
+
+    let factory: Arc<dyn BackendFactory> = Arc::new(NativeFactory::from_plan(Arc::clone(&plan)));
+    let pool = WorkerPool::start_with_factory(factory, test_pool_cfg()).unwrap();
+    let inproc = run_scenario_inproc(&pool, &cfg, &names, &images).unwrap();
+    pool.shutdown().unwrap();
+
+    let server = serve_one(plan, test_edge_cfg());
+    let addr = server.addr().to_string();
+    let tcp = run_scenario_tcp(&addr, "default", &cfg, &names, &images, 2).unwrap();
+    server.stop();
+
+    // the schedule is pre-drawn from the seed, so both paths offer the
+    // exact same load; a healthy wire adds zero protocol errors
+    assert_eq!(
+        tcp.stats.offered, inproc.stats.offered,
+        "same scenario + same seed must offer identical load on both paths"
+    );
+    assert!(tcp.stats.offered > 0);
+    assert_eq!(tcp.protocol_errors, 0, "healthy TCP replay must be protocol-clean");
+    assert!(
+        tcp.stats.ok > 0,
+        "most of the steady load should complete: {:?}",
+        tcp.stats
+    );
+}
+
+#[test]
+fn rebalancer_moves_workers_toward_the_loaded_model() {
+    let plan = prep_plan(false);
+    let cfg = EdgeConfig {
+        worker_budget: 4,
+        rebalance: Some(Duration::from_millis(30)),
+        ..test_edge_cfg()
+    };
+    let image = image_for(&plan);
+    let server = EdgeServer::serve(
+        "127.0.0.1:0",
+        vec![("hot".to_string(), Arc::clone(&plan)), ("cold".to_string(), plan)],
+        PoolConfig {
+            // no batching: keep per-request cost up so a backlog forms
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            queue_depth: 128,
+            ..test_pool_cfg()
+        },
+        cfg,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    // the initial split is even
+    let split = server.worker_split();
+    assert_eq!(split, vec![("cold".to_string(), 2), ("hot".to_string(), 2)]);
+
+    // pipeline a pile of work at 'hot' only (no reads yet, so requests
+    // queue up server-side while we watch the split move)
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut flood_err = false;
+    for seq in 0..800u64 {
+        let bytes = frame::encode(&Frame::Infer {
+            seq,
+            model: "hot".to_string(),
+            req: InferRequest::new("fp32").image(image.clone()),
+        });
+        if stream.write_all(&bytes).is_err() {
+            flood_err = true;
+            break;
+        }
+    }
+    assert!(!flood_err, "flood writes should not fail");
+    wait_for("rebalanced split", || {
+        let split = server.worker_split();
+        let hot = split.iter().find(|(id, _)| id == "hot").unwrap().1;
+        let cold = split.iter().find(|(id, _)| id == "cold").unwrap().1;
+        hot + cold == 4 && hot > cold
+    });
+    drop(stream);
+    server.stop();
+}

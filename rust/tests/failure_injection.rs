@@ -231,7 +231,7 @@ fn faulty_pool(workers: usize) -> WorkerPool {
 }
 
 fn ok_req(variant: &str) -> InferRequest {
-    InferRequest { image: vec![0.5; 32 * 32 * 3], variant: variant.into() }
+    InferRequest::new(variant).image(vec![0.5; 32 * 32 * 3])
 }
 
 #[test]
@@ -239,12 +239,12 @@ fn worker_panic_fails_only_the_inflight_batch() {
     let pool = faulty_pool(2);
     // the panicking request's response channel closes (a routed failure,
     // observed as an error by the caller — never a hang)
-    let rx = pool.submit(ok_req("boom"), Priority::Interactive, None).unwrap();
+    let rx = pool.submit(ok_req("boom")).unwrap();
     assert!(rx.recv().is_err(), "panicked batch must close its response channels");
 
     // both workers are still alive and serving after the panic
     let rxs: Vec<_> = (0..8)
-        .map(|_| pool.submit(ok_req("fine"), Priority::Interactive, None).unwrap())
+        .map(|_| pool.submit(ok_req("fine")).unwrap())
         .collect();
     for rx in rxs {
         let resp = rx.recv().unwrap().unwrap();
@@ -260,7 +260,7 @@ fn worker_panic_fails_only_the_inflight_batch() {
 #[test]
 fn backend_error_routes_to_callers_and_pool_survives() {
     let pool = faulty_pool(1);
-    let rx = pool.submit(ok_req("err"), Priority::Interactive, None).unwrap();
+    let rx = pool.submit(ok_req("err")).unwrap();
     let err = rx.recv().unwrap().expect_err("backend Err must be routed to the caller");
     // the routed error is the TYPED backend failure — assertions match
     // the variant, so a reworded message can't silently rot this test
@@ -282,7 +282,7 @@ fn backend_error_routes_to_callers_and_pool_survives() {
 fn repeated_panics_never_kill_the_pool() {
     let pool = faulty_pool(2);
     for _ in 0..4 {
-        let rx = pool.submit(ok_req("boom"), Priority::Batch, None).unwrap();
+        let rx = pool.submit(ok_req("boom").priority(Priority::Batch)).unwrap();
         assert!(rx.recv().is_err());
     }
     let resp = pool.infer(ok_req("fine")).unwrap();
@@ -339,15 +339,15 @@ fn shed_and_admission_failures_are_typed() {
     // an already-expired deadline: the dispatch sweep must shed it with
     // the typed reason whatever the worker timing
     let rx = pool
-        .submit(ok_req("fine"), Priority::Interactive, Some(Duration::ZERO))
+        .submit(ok_req("fine").deadline(Duration::ZERO))
         .unwrap();
     let err = rx.recv().unwrap().expect_err("expired request must shed");
     assert!(
         matches!(err, SwisError::Admission { reason: AdmissionReason::Shed, .. }),
         "expected a typed shed, got {err:?}"
     );
-    let bad = InferRequest { image: vec![0.5; 7], variant: "fine".into() };
-    let err = pool.submit(bad, Priority::Interactive, None).unwrap_err();
+    let bad = InferRequest::new("fine").image(vec![0.5; 7]);
+    let err = pool.submit(bad).unwrap_err();
     assert!(
         matches!(err, SwisError::Admission { reason: AdmissionReason::Invalid, .. }),
         "expected a typed invalid-request refusal, got {err:?}"

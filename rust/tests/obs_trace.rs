@@ -90,7 +90,7 @@ fn pool(workers: usize, queue_depth: usize, delay_ms: u64) -> WorkerPool {
 }
 
 fn req(variant: &str) -> InferRequest {
-    InferRequest { image: vec![0.25; 32 * 32 * 3], variant: variant.into() }
+    InferRequest::new(variant).image(vec![0.25; 32 * 32 * 3])
 }
 
 fn has_kind(t: &swis::obs::trace::RequestTrace, k: SpanKind) -> bool {
@@ -106,7 +106,7 @@ fn completed_requests_carry_exactly_one_well_formed_trace() {
     let rxs: Vec<_> = (0..n)
         .map(|i| {
             let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
-            pool.submit(req("fine"), pri, None).unwrap()
+            pool.submit(req("fine").priority(pri)).unwrap()
         })
         .collect();
     for rx in rxs {
@@ -137,10 +137,10 @@ fn shed_requests_terminate_their_trace_in_the_ring() {
     swis::obs::set_level(ObsLevel::Full);
     let pool = pool(1, 16, 150);
     // the worker blocks on "a"; "b" expires long before it frees up
-    let rx_a = pool.submit(req("a"), Priority::Interactive, None).unwrap();
+    let rx_a = pool.submit(req("a")).unwrap();
     std::thread::sleep(Duration::from_millis(30));
     let rx_b = pool
-        .submit(req("b"), Priority::Interactive, Some(Duration::from_millis(20)))
+        .submit(req("b").deadline(Duration::from_millis(20)))
         .unwrap();
     let err = rx_b.recv().unwrap().unwrap_err();
     assert!(err.is_shed());
@@ -174,11 +174,11 @@ fn degraded_requests_stamp_the_degrade_span() {
     .unwrap();
     // seed occupies the worker; two queued jobs raise pressure to 2/4,
     // so the next admission degrades hi -> lo before enqueueing
-    let mut rxs = vec![pool.submit(req("hi"), Priority::Interactive, None).unwrap()];
+    let mut rxs = vec![pool.submit(req("hi")).unwrap()];
     std::thread::sleep(Duration::from_millis(30));
-    rxs.push(pool.submit(req("hi"), Priority::Interactive, None).unwrap());
-    rxs.push(pool.submit(req("hi"), Priority::Interactive, None).unwrap());
-    rxs.push(pool.submit(req("hi"), Priority::Interactive, None).unwrap());
+    rxs.push(pool.submit(req("hi")).unwrap());
+    rxs.push(pool.submit(req("hi")).unwrap());
+    rxs.push(pool.submit(req("hi")).unwrap());
     let mut degraded = 0;
     for rx in rxs {
         let resp = rx.recv().unwrap().unwrap();
@@ -205,16 +205,16 @@ fn panic_paths_never_corrupt_surviving_traces() {
     let pool = pool(2, 64, 1);
     // the panicking batch drops its jobs (and their traces) mid-unwind;
     // the callers see closed channels, never a malformed trace
-    let rx_boom = pool.submit(req("boom"), Priority::Interactive, None).unwrap();
+    let rx_boom = pool.submit(req("boom")).unwrap();
     assert!(rx_boom.recv().is_err(), "panicked batch must close its channels");
     let rxs: Vec<_> =
-        (0..6).map(|_| pool.submit(req("fine"), Priority::Interactive, None).unwrap()).collect();
+        (0..6).map(|_| pool.submit(req("fine")).unwrap()).collect();
     for rx in rxs {
         let resp = rx.recv().unwrap().unwrap();
         assert!(resp.trace.unwrap().well_formed());
     }
     // a routed backend Err is a terminal Error span in the ring
-    let rx_err = pool.submit(req("err"), Priority::Interactive, None).unwrap();
+    let rx_err = pool.submit(req("err")).unwrap();
     assert!(rx_err.recv().unwrap().is_err());
     let traces = pool.drain_traces();
     // 6 fine + 1 err reach the ring; the panicked job's trace died with

@@ -43,7 +43,7 @@ fn plan_warmed_pool_serves_bit_identical_with_zero_quantization() {
         .enumerate()
         .map(|(i, im)| {
             direct
-                .infer(InferRequest { image: im.clone(), variant: names[i % names.len()].into() })
+                .infer(InferRequest::new(names[i % names.len()].as_str()).image(im.clone()))
                 .unwrap()
                 .logits
         })
@@ -75,7 +75,7 @@ fn plan_warmed_pool_serves_bit_identical_with_zero_quantization() {
     );
     for (i, im) in imgs.iter().enumerate() {
         let resp = pool
-            .infer(InferRequest { image: im.clone(), variant: names[i % names.len()].into() })
+            .infer(InferRequest::new(names[i % names.len()].as_str()).image(im.clone()))
             .unwrap();
         assert_eq!(
             resp.logits, expected[i],

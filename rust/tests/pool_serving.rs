@@ -86,7 +86,7 @@ fn serial_policy() -> BatchPolicy {
 }
 
 fn req(variant: &str) -> InferRequest {
-    InferRequest { image: vec![0.25; 32 * 32 * 3], variant: variant.into() }
+    InferRequest::new(variant).image(vec![0.25; 32 * 32 * 3])
 }
 
 // ---------------------------------------------------------------------
@@ -117,7 +117,7 @@ fn pool_logits_bit_identical_to_coordinator_for_any_worker_count() {
         .enumerate()
         .map(|(i, im)| {
             coord
-                .infer(InferRequest { image: im.clone(), variant: names[i % names.len()].into() })
+                .infer(InferRequest::new(names[i % names.len()].as_str()).image(im.clone()))
                 .unwrap()
                 .logits
         })
@@ -145,9 +145,9 @@ fn pool_logits_bit_identical_to_coordinator_for_any_worker_count() {
             .map(|(i, im)| {
                 let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
                 pool.submit(
-                    InferRequest { image: im.clone(), variant: names[i % names.len()].into() },
-                    pri,
-                    None,
+                    InferRequest::new(names[i % names.len()].as_str())
+                        .image(im.clone())
+                        .priority(pri),
                 )
                 .unwrap()
             })
@@ -177,19 +177,19 @@ fn try_submit_refuses_with_busy_at_capacity() {
     .unwrap();
 
     // the worker pops the first job and blocks in the backend...
-    let rx_a = pool.submit(req("a"), Priority::Interactive, None).unwrap();
+    let rx_a = pool.submit(req("a")).unwrap();
     std::thread::sleep(Duration::from_millis(30));
     // ...so the next two fill the bounded queue and the fourth is refused
-    let rx_b = match pool.try_submit(req("b"), Priority::Interactive, None).unwrap() {
+    let rx_b = match pool.try_submit(req("b")).unwrap() {
         Admission::Accepted(rx) => rx,
         Admission::Busy => panic!("queue refused below capacity"),
     };
-    let rx_c = match pool.try_submit(req("c"), Priority::Batch, None).unwrap() {
+    let rx_c = match pool.try_submit(req("c").priority(Priority::Batch)).unwrap() {
         Admission::Accepted(rx) => rx,
         Admission::Busy => panic!("queue refused below capacity"),
     };
     assert!(
-        matches!(pool.try_submit(req("d"), Priority::Interactive, None).unwrap(), Admission::Busy),
+        matches!(pool.try_submit(req("d")).unwrap(), Admission::Busy),
         "queue at capacity must refuse with Busy"
     );
     assert_eq!(pool.metrics.snapshot().rejected, 1);
@@ -217,13 +217,13 @@ fn interactive_lane_dispatches_before_batch_lane() {
 
     let rxs = vec![
         // occupies the worker while the lanes fill
-        pool.submit(req("seed"), Priority::Interactive, None).unwrap(),
+        pool.submit(req("seed")).unwrap(),
         {
             std::thread::sleep(Duration::from_millis(30));
-            pool.submit(req("cold"), Priority::Batch, None).unwrap()
+            pool.submit(req("cold").priority(Priority::Batch)).unwrap()
         },
-        pool.submit(req("bulk"), Priority::Batch, None).unwrap(),
-        pool.submit(req("hot"), Priority::Interactive, None).unwrap(),
+        pool.submit(req("bulk").priority(Priority::Batch)).unwrap(),
+        pool.submit(req("hot")).unwrap(),
     ];
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -253,12 +253,12 @@ fn worker_prefers_its_hot_variant() {
     // worker serves "hot" first, so its affinity is "hot"; with "cold"
     // AHEAD of a second "hot" in the same lane, affinity must reorder
     let rxs = vec![
-        pool.submit(req("hot"), Priority::Interactive, None).unwrap(),
+        pool.submit(req("hot")).unwrap(),
         {
             std::thread::sleep(Duration::from_millis(30));
-            pool.submit(req("cold"), Priority::Interactive, None).unwrap()
+            pool.submit(req("cold")).unwrap()
         },
-        pool.submit(req("hot"), Priority::Interactive, None).unwrap(),
+        pool.submit(req("hot")).unwrap(),
     ];
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -285,11 +285,11 @@ fn expired_requests_are_shed_with_a_routed_error() {
     )
     .unwrap();
 
-    let rx_a = pool.submit(req("a"), Priority::Interactive, None).unwrap();
+    let rx_a = pool.submit(req("a")).unwrap();
     std::thread::sleep(Duration::from_millis(30));
     // expires long before the worker frees up at ~150 ms
     let rx_b = pool
-        .submit(req("b"), Priority::Interactive, Some(Duration::from_millis(20)))
+        .submit(req("b").deadline(Duration::from_millis(20)))
         .unwrap();
 
     let msg = rx_b.recv().unwrap().expect_err("expired request must not be served");
@@ -317,7 +317,7 @@ fn shutdown_drains_admitted_requests() {
     let rxs: Vec<_> = (0..16)
         .map(|i| {
             let v = if i % 2 == 0 { "a" } else { "b" };
-            pool.submit(req(v), Priority::Batch, None).unwrap()
+            pool.submit(req(v).priority(Priority::Batch)).unwrap()
         })
         .collect();
     pool.shutdown().unwrap();
@@ -346,7 +346,7 @@ fn pool_parallelizes_across_workers() {
     let rxs: Vec<_> = (0..6)
         .map(|i| {
             let v = if i % 2 == 0 { "a" } else { "b" };
-            pool.submit(req(v), Priority::Batch, None).unwrap()
+            pool.submit(req(v).priority(Priority::Batch)).unwrap()
         })
         .collect();
     for rx in rxs {
@@ -425,16 +425,12 @@ fn pool_serves_zoo_nets_with_their_own_image_shape() {
     // right-sized image round-trips; tinycnn-sized one is rejected at
     // admission (not deep in a worker)
     let ok = pool
-        .infer(InferRequest { image: vec![0.25; 12 * 12 * 3], variant: "swis@3".into() })
+        .infer(InferRequest::new("swis@3").image(vec![0.25; 12 * 12 * 3]))
         .unwrap();
     assert_eq!(ok.logits.len(), 4);
     assert!(ok.logits.iter().all(|v| v.is_finite()));
     let err = pool
-        .submit(
-            InferRequest { image: vec![0.25; 32 * 32 * 3], variant: "swis@3".into() },
-            Priority::Interactive,
-            None,
-        )
+        .submit(InferRequest::new("swis@3").image(vec![0.25; 32 * 32 * 3]))
         .unwrap_err();
     assert!(format!("{err:#}").contains("432"), "{err:#}");
     pool.shutdown().unwrap();
