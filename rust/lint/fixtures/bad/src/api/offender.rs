@@ -1,0 +1,32 @@
+//! Fixture: trips every rule at least once. Never compiled — the
+//! `fixtures` path component keeps it out of real scans.
+
+pub fn all_the_sins(p: *mut u8) -> Result<u32, String> {
+    let v = std::env::var("HOME").unwrap();
+    let w = std::env::var("PATH").expect("path");
+    unsafe {
+        *p = 1;
+    }
+    let _ = FLAG.load(std::sync::atomic::Ordering::Relaxed);
+    FLAG.store(true, std::sync::atomic::Ordering::SeqCst);
+    if v.is_empty() {
+        return Err(format!("empty: {w}"));
+    }
+    dbg!(&v);
+    todo!()
+}
+
+pub unsafe fn no_safety_doc(p: *const u8) -> u8 {
+    *p
+}
+
+static FLAG: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let x: Option<u8> = Some(1);
+        assert_eq!(x.unwrap(), 1);
+    }
+}

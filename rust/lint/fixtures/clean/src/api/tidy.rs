@@ -1,0 +1,45 @@
+//! Fixture: exercises every pattern's near-miss and must stay silent.
+
+/// Looks like trouble only inside strings and comments: `.unwrap()`,
+/// `todo!`, `Err(format!`, none of them count.
+pub fn tidy(p: *mut u8) -> Result<u32, Error> {
+    let v = std::env::var("HOME").unwrap_or_default();
+    let s = "call .unwrap() and dbg!"; // .expect( in a comment
+    let r = r#"raw todo! and unimplemented!"#;
+    // SAFETY: p is non-null and valid for a one-byte write; the caller
+    // upholds this by construction in the fixture.
+    unsafe {
+        *p = 1;
+    }
+    let _ = FLAG.load(std::sync::atomic::Ordering::Acquire);
+    FLAG.store(true, std::sync::atomic::Ordering::Release);
+    if v.is_empty() && s.len() + r.len() > 0 {
+        return Err(Error::Empty);
+    }
+    Ok(0)
+}
+
+/// Doc-commented unsafe fn with the required section.
+///
+/// # Safety
+///
+/// `p` must be non-null and valid for reads of one byte.
+pub unsafe fn documented(p: *const u8) -> u8 {
+    *p
+}
+
+pub enum Error {
+    Empty,
+}
+
+static FLAG: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap_and_relax() {
+        let x: Option<u8> = Some(1);
+        assert_eq!(x.expect("present"), 1);
+        let _ = super::FLAG.load(std::sync::atomic::Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,853 @@
+//! `swis-lint`: the repo's dependency-free static pass.
+//!
+//! Five rules, each born from a real failure mode of this codebase:
+//!
+//! * **unwrap-burndown** — `.unwrap()` / `.expect(` outside test scope
+//!   must fit the per-file budgets in `lint/unwrap.allow`, and the total
+//!   must fit `total_ceiling`. Budgets only shrink: lowering a count is a
+//!   one-line allowlist edit, raising one is a review conversation.
+//! * **safety-comment** — every `unsafe` block needs an adjacent
+//!   `// SAFETY:` comment; every `unsafe fn` needs a `# Safety` doc
+//!   section. The comment must exist where the obligation is discharged,
+//!   not in a far-away module doc.
+//! * **atomics-manifest** — `Ordering::Relaxed` / `Ordering::SeqCst`
+//!   sites must match `lint/atomics.allow`, which pairs every site count
+//!   with a one-line justification. Acquire/Release/AcqRel are the
+//!   reviewed default and need no entry.
+//! * **stringly-error** — `Err(format!`, `anyhow!(`, `bail!(` on the
+//!   public seams (`src/api/`, `src/coordinator/`, `src/edge/`,
+//!   `src/obs/`) are refused outright: seams speak `SwisError`.
+//! * **debug-macro** — `todo!`, `unimplemented!`, `dbg!` anywhere.
+//!
+//! The scanner is textual but comment/string aware: a tokenizer-grade
+//! masking pass blanks line/block comments, cooked/raw/byte strings and
+//! char literals before any rule pattern runs, so `"call .unwrap()"` in
+//! a doc string never trips a rule. `#[cfg(test)]` items are tracked by
+//! brace depth; `tests/`, `benches/`, `examples/` trees are test scope
+//! wholesale. `vendor/`, `target/` and the lint's own `fixtures/` are
+//! never scanned.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One diagnostic. `file` is relative to the crate root (`rust/`),
+/// `line` is 1-based (0 = whole-file finding).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+        } else {
+            write!(f, "{}: [{}] {}", self.file, self.rule, self.msg)
+        }
+    }
+}
+
+/// Everything one lint run learned.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// `--fix-list` payload: every allowlisted debt site plus stale
+    /// budget notes, as ready-to-print lines.
+    pub fix_list: Vec<String>,
+    pub files_scanned: usize,
+    /// Non-test unwrap/expect sites found across the tree.
+    pub unwrap_total: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Blank comments, strings and char literals with spaces, preserving
+/// line structure exactly (newlines survive, masked columns align).
+/// Lifetimes (`'a`) are recognized and kept; nested block comments and
+/// `r#".."#` / `b".."` / `br#".."#` literals are handled.
+pub fn mask_source(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut i = 0usize;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string prefixes: r"", r#""#, b"", br#""#
+        if (c == 'r' || c == 'b') && !(i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')) {
+            let mut j = i;
+            if b[j] == 'b' {
+                j += 1;
+            }
+            let raw = j < n && b[j] == 'r';
+            if raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while raw && j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' && (raw || b[i] == 'b') {
+                for _ in i..j {
+                    out.push(' ');
+                }
+                i = j;
+                if raw {
+                    out.push('"');
+                    i += 1;
+                    'raw: while i < n {
+                        if b[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                out.push('"');
+                                for _ in 0..hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                } else {
+                    i = mask_cooked_string(&b, i, &mut out);
+                }
+                continue;
+            }
+        }
+        if c == '"' {
+            i = mask_cooked_string(&b, i, &mut out);
+            continue;
+        }
+        if c == '\'' {
+            // lifetime/label heuristic: 'ident not followed by a quote
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                out.push('\'');
+                i += 1;
+                continue;
+            }
+            out.push(' ');
+            i += 1;
+            if i < n && b[i] == '\\' {
+                out.push(' ');
+                i += 1;
+                if i < n && b[i] == 'u' {
+                    // \u{...}
+                    while i < n && b[i] != '}' && b[i] != '\'' {
+                        out.push(' ');
+                        i += 1;
+                    }
+                    if i < n && b[i] == '}' {
+                        out.push(' ');
+                        i += 1;
+                    }
+                } else if i < n {
+                    out.push(' ');
+                    i += 1;
+                }
+            } else if i < n && b[i] != '\'' {
+                out.push(' ');
+                i += 1;
+            }
+            if i < n && b[i] == '\'' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+/// Mask a cooked (escape-bearing) string starting at the opening quote;
+/// returns the index just past the closing quote.
+fn mask_cooked_string(b: &[char], mut i: usize, out: &mut Vec<char>) -> usize {
+    let n = b.len();
+    out.push('"');
+    i += 1;
+    while i < n {
+        if b[i] == '\\' {
+            out.push(' ');
+            i += 1;
+            if i < n {
+                out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+        if b[i] == '"' {
+            out.push('"');
+            i += 1;
+            break;
+        }
+        out.push(if b[i] == '\n' { '\n' } else { ' ' });
+        i += 1;
+    }
+    i
+}
+
+/// Per-line test-scope flags: a `#[cfg(test)]` attribute gates the next
+/// item's whole brace span (module, fn, impl — whatever opens first).
+pub fn test_scope(masked_lines: &[&str]) -> Vec<bool> {
+    let mut flags = vec![false; masked_lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    for (idx, line) in masked_lines.iter().enumerate() {
+        let opens = line.matches('{').count() as i64;
+        let closes = line.matches('}').count() as i64;
+        if depth > 0 {
+            flags[idx] = true;
+            depth += opens - closes;
+            if depth < 0 {
+                depth = 0;
+            }
+            continue;
+        }
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        if pending {
+            flags[idx] = true;
+            if opens > 0 {
+                depth = opens - closes;
+                if depth < 0 {
+                    depth = 0;
+                }
+                pending = false;
+            }
+        }
+    }
+    flags
+}
+
+/// Count non-overlapping occurrences of `pat` in `hay` that are not
+/// preceded by an identifier character (so `expect_err(` never matches
+/// a hunt for `expect(` — callers include the leading `.` anyway, this
+/// guards macro names like `bail!`).
+fn count_token(hay: &str, pat: &str) -> usize {
+    let mut count = 0usize;
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(pat) {
+        let at = from + p;
+        let boundary = at == 0
+            || hay[..at]
+                .chars()
+                .next_back()
+                .map(|c| !(c.is_alphanumeric() || c == '_'))
+                .unwrap_or(true);
+        if boundary {
+            count += 1;
+        }
+        from = at + pat.len();
+    }
+    count
+}
+
+/// Lines (1-based) on which `pat` occurs with the boundary rule above.
+fn token_lines(lines: &[&str], skip: &[bool], pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if skip.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        for _ in 0..count_token(line, pat) {
+            out.push(idx + 1);
+        }
+    }
+    out
+}
+
+/// True when `line` contains the word `unsafe` outside identifiers.
+fn has_unsafe_kw(line: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find("unsafe") {
+        let at = from + p;
+        let pre_ok = at == 0
+            || line[..at]
+                .chars()
+                .next_back()
+                .map(|c| !(c.is_alphanumeric() || c == '_'))
+                .unwrap_or(true);
+        let end = at + "unsafe".len();
+        let post_ok = line[end..]
+            .chars()
+            .next()
+            .map(|c| !(c.is_alphanumeric() || c == '_'))
+            .unwrap_or(true);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// The parsed `unwrap.allow` budget file.
+#[derive(Clone, Debug, Default)]
+pub struct UnwrapAllow {
+    pub total_ceiling: usize,
+    pub per_file: BTreeMap<String, usize>,
+}
+
+/// The parsed `atomics.allow` manifest: `(file, ordering) -> (count,
+/// justification)`.
+#[derive(Clone, Debug, Default)]
+pub struct AtomicsAllow {
+    pub entries: BTreeMap<(String, String), (usize, String)>,
+}
+
+/// Parse `unwrap.allow`. Unparseable lines become findings against the
+/// allowlist file itself (a broken budget must not silently allow).
+pub fn parse_unwrap_allow(text: &str, file: &str, findings: &mut Vec<Finding>) -> UnwrapAllow {
+    let mut allow = UnwrapAllow::default();
+    for (idx, raw) in text.lines().enumerate() {
+        let code = raw.split('#').next().unwrap_or("").trim();
+        if code.is_empty() {
+            continue;
+        }
+        let Some((key, val)) = code.split_once('=') else {
+            findings.push(Finding {
+                rule: "allowlist-syntax",
+                file: file.to_string(),
+                line: idx + 1,
+                msg: format!("expected '<path> = <count>', got '{code}'"),
+            });
+            continue;
+        };
+        let key = key.trim();
+        let Ok(count) = val.trim().parse::<usize>() else {
+            findings.push(Finding {
+                rule: "allowlist-syntax",
+                file: file.to_string(),
+                line: idx + 1,
+                msg: format!("count '{}' is not a number", val.trim()),
+            });
+            continue;
+        };
+        if key == "total_ceiling" {
+            allow.total_ceiling = count;
+        } else {
+            allow.per_file.insert(key.to_string(), count);
+        }
+    }
+    allow
+}
+
+/// Parse `atomics.allow`; a missing justification is itself a finding.
+pub fn parse_atomics_allow(text: &str, file: &str, findings: &mut Vec<Finding>) -> AtomicsAllow {
+    let mut allow = AtomicsAllow::default();
+    for (idx, raw) in text.lines().enumerate() {
+        let (code, note) = match raw.split_once('#') {
+            Some((c, j)) => (c.trim(), j.trim()),
+            None => (raw.trim(), ""),
+        };
+        if code.is_empty() {
+            continue;
+        }
+        let parsed = code.split_once('=').and_then(|(key, val)| {
+            let (path, ord) = key.trim().rsplit_once(':')?;
+            let count = val.trim().parse::<usize>().ok()?;
+            Some((path.trim().to_string(), ord.trim().to_string(), count))
+        });
+        let Some((path, ord, count)) = parsed else {
+            findings.push(Finding {
+                rule: "allowlist-syntax",
+                file: file.to_string(),
+                line: idx + 1,
+                msg: format!("expected '<path>:<Relaxed|SeqCst> = <count>  # why', got '{code}'"),
+            });
+            continue;
+        };
+        if ord != "Relaxed" && ord != "SeqCst" {
+            findings.push(Finding {
+                rule: "allowlist-syntax",
+                file: file.to_string(),
+                line: idx + 1,
+                msg: format!("ordering '{ord}' is not Relaxed or SeqCst"),
+            });
+            continue;
+        }
+        if note.is_empty() {
+            findings.push(Finding {
+                rule: "atomics-manifest",
+                file: file.to_string(),
+                line: idx + 1,
+                msg: format!("entry '{path}:{ord}' has no justification comment"),
+            });
+        }
+        allow.entries.insert((path, ord), (count, note.to_string()));
+    }
+    allow
+}
+
+/// What one scanned file contributed.
+#[derive(Clone, Debug, Default)]
+struct FileScan {
+    unwrap_lines: Vec<usize>,
+    relaxed_lines: Vec<usize>,
+    seqcst_lines: Vec<usize>,
+}
+
+/// Scan one file's source, pushing immediate findings (safety-comment,
+/// stringly-error, debug-macro) and returning the counted sites the
+/// allowlist comparison needs.
+fn scan_file(rel: &str, src: &str, findings: &mut Vec<Finding>) -> FileScan {
+    let masked = mask_source(src);
+    let masked_lines: Vec<&str> = masked.lines().collect();
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let in_test_item = test_scope(&masked_lines);
+    let tree_testish = is_testish_path(rel);
+    // per-line "skip for budgeted rules": test item or test tree
+    let skip: Vec<bool> = (0..masked_lines.len())
+        .map(|i| tree_testish || in_test_item.get(i).copied().unwrap_or(false))
+        .collect();
+    let no_skip = vec![false; masked_lines.len()];
+
+    let mut scan = FileScan::default();
+    if !tree_testish {
+        let mut lines = token_lines(&masked_lines, &skip, ".unwrap()");
+        lines.extend(token_lines(&masked_lines, &skip, ".expect("));
+        lines.sort_unstable();
+        scan.unwrap_lines = lines;
+        scan.relaxed_lines = token_lines(&masked_lines, &skip, "Ordering::Relaxed");
+        scan.seqcst_lines = token_lines(&masked_lines, &skip, "Ordering::SeqCst");
+    }
+
+    // safety-comment: everywhere, tests included
+    for (idx, line) in masked_lines.iter().enumerate() {
+        if !has_unsafe_kw(line) {
+            continue;
+        }
+        let lineno = idx + 1;
+        if line.contains("unsafe fn") {
+            if !doc_walk_has(&raw_lines, idx, "# Safety") {
+                findings.push(Finding {
+                    rule: "safety-comment",
+                    file: rel.to_string(),
+                    line: lineno,
+                    msg: "unsafe fn without a '# Safety' doc section".to_string(),
+                });
+            }
+        } else if !comment_walk_has(&raw_lines, idx, "SAFETY:") {
+            findings.push(Finding {
+                rule: "safety-comment",
+                file: rel.to_string(),
+                line: lineno,
+                msg: "unsafe block without an adjacent '// SAFETY:' comment".to_string(),
+            });
+        }
+    }
+
+    // stringly-error: seams only, non-test scope
+    if is_seam_path(rel) {
+        for pat in ["Err(format!", "anyhow!(", "bail!("] {
+            for lineno in token_lines(&masked_lines, &skip, pat) {
+                findings.push(Finding {
+                    rule: "stringly-error",
+                    file: rel.to_string(),
+                    line: lineno,
+                    msg: format!("'{pat}' on a public seam — construct a SwisError instead"),
+                });
+            }
+        }
+    }
+
+    // debug-macro: everywhere, tests included
+    for pat in ["todo!", "unimplemented!", "dbg!"] {
+        for lineno in token_lines(&masked_lines, &no_skip, pat) {
+            findings.push(Finding {
+                rule: "debug-macro",
+                file: rel.to_string(),
+                line: lineno,
+                msg: format!("'{pat}' must not be committed"),
+            });
+        }
+    }
+    scan
+}
+
+/// Walk upward from `idx` through comment lines (raw view), looking for
+/// `needle`. The line itself also counts (trailing `// SAFETY: ...`).
+fn comment_walk_has(raw_lines: &[&str], idx: usize, needle: &str) -> bool {
+    if raw_lines.get(idx).is_some_and(|l| l.contains(needle)) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = raw_lines[i].trim_start();
+        if t.starts_with("//") {
+            if t.contains(needle) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Walk upward through doc comments AND attributes (an `unsafe fn`
+/// carries `#[target_feature]`/`#[allow]` lines between it and its doc).
+fn doc_walk_has(raw_lines: &[&str], idx: usize, needle: &str) -> bool {
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = raw_lines[i].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") || t.ends_with(']') {
+            if t.contains(needle) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// `tests/`, `benches/`, `examples/` trees are test scope wholesale.
+fn is_testish_path(rel: &str) -> bool {
+    rel.split('/').any(|c| c == "tests" || c == "benches" || c == "examples")
+}
+
+/// The public seams that must speak `SwisError`.
+fn is_seam_path(rel: &str) -> bool {
+    ["src/api", "src/coordinator", "src/edge", "src/obs"]
+        .iter()
+        .any(|p| rel.starts_with(p))
+}
+
+fn is_skipped_dir(name: &str) -> bool {
+    name == "vendor" || name == "target" || name == "fixtures" || name.starts_with('.')
+}
+
+/// Collect every lintable `.rs` under `root`, as (relative path with
+/// `/` separators, absolute path), sorted for deterministic output.
+fn collect_rs(root: &Path) -> io::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = fs::read_dir(&dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let path = e.path();
+            let name = e.file_name().to_string_lossy().into_owned();
+            if path.is_dir() {
+                if !is_skipped_dir(&name) {
+                    stack.push(path);
+                }
+            } else if name.ends_with(".rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((rel, path));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run every rule over the crate at `rust_dir` (the directory holding
+/// `src/` and `lint/`). Allowlists are read from `lint/unwrap.allow`
+/// and `lint/atomics.allow`; a missing allowlist means a zero budget.
+pub fn run(rust_dir: &Path) -> io::Result<Report> {
+    let mut report = Report::default();
+    let unwrap_allow = {
+        let p = rust_dir.join("lint").join("unwrap.allow");
+        let text = fs::read_to_string(&p).unwrap_or_default();
+        parse_unwrap_allow(&text, "lint/unwrap.allow", &mut report.findings)
+    };
+    let atomics_allow = {
+        let p = rust_dir.join("lint").join("atomics.allow");
+        let text = fs::read_to_string(&p).unwrap_or_default();
+        parse_atomics_allow(&text, "lint/atomics.allow", &mut report.findings)
+    };
+
+    let mut unwrap_counts: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut ordering_counts: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+    for (rel, path) in collect_rs(rust_dir)? {
+        let src = fs::read_to_string(&path)?;
+        let scan = scan_file(&rel, &src, &mut report.findings);
+        report.files_scanned += 1;
+        if !scan.unwrap_lines.is_empty() {
+            unwrap_counts.insert(rel.clone(), scan.unwrap_lines);
+        }
+        if !scan.relaxed_lines.is_empty() {
+            ordering_counts
+                .insert((rel.clone(), "Relaxed".to_string()), scan.relaxed_lines);
+        }
+        if !scan.seqcst_lines.is_empty() {
+            ordering_counts.insert((rel.clone(), "SeqCst".to_string()), scan.seqcst_lines);
+        }
+    }
+
+    // unwrap-burndown: per-file budgets, then the global ceiling
+    let mut total = 0usize;
+    for (rel, lines) in &unwrap_counts {
+        total += lines.len();
+        let budget = unwrap_allow.per_file.get(rel).copied().unwrap_or(0);
+        if lines.len() > budget {
+            report.findings.push(Finding {
+                rule: "unwrap-burndown",
+                file: rel.clone(),
+                line: lines.get(budget).copied().unwrap_or(0),
+                msg: format!(
+                    "{} non-test unwrap/expect sites, budget is {budget} \
+                     (lint/unwrap.allow) — convert to SwisError or raise the budget in review",
+                    lines.len()
+                ),
+            });
+        } else {
+            for l in lines {
+                report.fix_list.push(format!(
+                    "{rel}:{l}: allowlisted unwrap/expect (file budget {budget})"
+                ));
+            }
+            if lines.len() < budget {
+                report.fix_list.push(format!(
+                    "{rel}: budget {budget} but only {} sites remain — ratchet down",
+                    lines.len()
+                ));
+            }
+        }
+    }
+    for (rel, budget) in &unwrap_allow.per_file {
+        if *budget > 0 && !unwrap_counts.contains_key(rel) {
+            report
+                .fix_list
+                .push(format!("{rel}: budget {budget} but 0 sites remain — drop the entry"));
+        }
+    }
+    report.unwrap_total = total;
+    if total > unwrap_allow.total_ceiling {
+        report.findings.push(Finding {
+            rule: "unwrap-burndown",
+            file: "lint/unwrap.allow".to_string(),
+            line: 0,
+            msg: format!(
+                "{total} non-test unwrap/expect sites exceed total_ceiling {} — \
+                 the ceiling only ratchets down",
+                unwrap_allow.total_ceiling
+            ),
+        });
+    }
+
+    // atomics-manifest
+    for ((rel, ord), lines) in &ordering_counts {
+        match atomics_allow.entries.get(&(rel.clone(), ord.clone())) {
+            Some((budget, _why)) if lines.len() <= *budget => {}
+            Some((budget, _why)) => {
+                report.findings.push(Finding {
+                    rule: "atomics-manifest",
+                    file: rel.clone(),
+                    line: lines.get(*budget).copied().unwrap_or(0),
+                    msg: format!(
+                        "{} Ordering::{ord} sites, manifest allows {budget} \
+                         (lint/atomics.allow) — justify the new site or fix its ordering",
+                        lines.len()
+                    ),
+                });
+            }
+            None => {
+                report.findings.push(Finding {
+                    rule: "atomics-manifest",
+                    file: rel.clone(),
+                    line: lines.first().copied().unwrap_or(0),
+                    msg: format!(
+                        "Ordering::{ord} site not in lint/atomics.allow — add an entry \
+                         with a one-line justification or use Acquire/Release"
+                    ),
+                });
+            }
+        }
+    }
+    for ((rel, ord), (budget, _)) in &atomics_allow.entries {
+        if !ordering_counts.contains_key(&(rel.clone(), ord.clone())) {
+            report
+                .fix_list
+                .push(format!("{rel}: manifest allows {budget} {ord} but 0 remain — drop it"));
+        }
+    }
+
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+/// Resolve the crate dir from a repo or crate root: accepts either the
+/// repo root (containing `rust/src`) or the crate dir itself.
+pub fn resolve_rust_dir(root: &Path) -> Option<PathBuf> {
+    if root.join("src").is_dir() && root.join("lint").is_dir() {
+        return Some(root.to_path_buf());
+    }
+    let nested = root.join("rust");
+    if nested.join("src").is_dir() {
+        return Some(nested);
+    }
+    if root.join("src").is_dir() {
+        return Some(root.to_path_buf());
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_blanks_comments_strings_chars() {
+        let src = "let a = \"x.unwrap()\"; // .unwrap()\nlet b = 'x';\nlet c: &'a str = r#\"dbg!\"#;\n/* todo! */ let d = 1;";
+        let m = mask_source(src);
+        assert!(!m.contains("unwrap"), "masked: {m}");
+        assert!(!m.contains("dbg!"), "masked: {m}");
+        assert!(!m.contains("todo!"), "masked: {m}");
+        assert!(m.contains("let a"), "code survives: {m}");
+        assert!(m.contains("&'a str"), "lifetimes survive: {m}");
+        assert_eq!(m.lines().count(), src.lines().count(), "line structure preserved");
+    }
+
+    #[test]
+    fn masking_handles_escapes_and_byte_strings() {
+        let src = "let q = \"\\\".unwrap()\"; let b = b\"dbg!\"; let e = '\\'';\nlet x = 1;";
+        let m = mask_source(src);
+        assert!(!m.contains("unwrap"));
+        assert!(!m.contains("dbg"));
+        assert!(m.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn test_scope_tracks_cfg_test_braces() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn b() {}\n";
+        let masked = mask_source(src);
+        let lines: Vec<&str> = masked.lines().collect();
+        let flags = test_scope(&lines);
+        assert!(!flags[0], "fn a is live code");
+        assert!(flags[1] && flags[2] && flags[3] && flags[4], "test mod is scoped");
+        assert!(!flags[5], "fn b after the mod is live again");
+    }
+
+    #[test]
+    fn token_counting_respects_boundaries() {
+        assert_eq!(count_token("x.unwrap().unwrap()", ".unwrap()"), 2);
+        assert_eq!(count_token("x.expect_err(e)", ".expect("), 0);
+        assert_eq!(count_token("anyhow::bail!(\"x\")", "bail!("), 1);
+        assert_eq!(count_token("self.unwrap_or(1)", ".unwrap()"), 0);
+        assert_eq!(count_token("std::cmp::Ordering::Equal", "Ordering::Relaxed"), 0);
+    }
+
+    #[test]
+    fn unsafe_keyword_is_word_matched() {
+        assert!(has_unsafe_kw("let x = unsafe { y };"));
+        assert!(has_unsafe_kw("pub(super) unsafe fn f()"));
+        assert!(!has_unsafe_kw("#![forbid(unsafe_code)]"));
+        assert!(!has_unsafe_kw("let unsafety = 1;"));
+    }
+
+    #[test]
+    fn allowlist_parsers_round_trip_and_flag_syntax() {
+        let mut f = Vec::new();
+        let ua = parse_unwrap_allow(
+            "# hdr\ntotal_ceiling = 10\nsrc/a.rs = 3  # note\nbroken line\n",
+            "lint/unwrap.allow",
+            &mut f,
+        );
+        assert_eq!(ua.total_ceiling, 10);
+        assert_eq!(ua.per_file.get("src/a.rs"), Some(&3));
+        assert_eq!(f.len(), 1, "the broken line is a finding: {f:?}");
+
+        let mut f = Vec::new();
+        let aa = parse_atomics_allow(
+            "src/t.rs:Relaxed = 2  # ids only\nsrc/u.rs:SeqCst = 1\n",
+            "lint/atomics.allow",
+            &mut f,
+        );
+        assert_eq!(aa.entries.get(&("src/t.rs".into(), "Relaxed".into())).map(|e| e.0), Some(2));
+        assert_eq!(f.len(), 1, "missing justification is a finding: {f:?}");
+    }
+
+    #[test]
+    fn scan_flags_each_rule_on_bad_source() {
+        let bad = "fn f() {\n    let v = x.unwrap();\n    unsafe { *p = 1; }\n    todo!()\n}\n";
+        let mut findings = Vec::new();
+        let scan = scan_file("src/api/bad.rs", bad, &mut findings);
+        assert_eq!(scan.unwrap_lines, vec![2]);
+        assert!(findings.iter().any(|f| f.rule == "safety-comment" && f.line == 3));
+        assert!(findings.iter().any(|f| f.rule == "debug-macro" && f.line == 4));
+    }
+
+    #[test]
+    fn scan_is_silent_on_clean_source() {
+        let clean = "fn f() -> Result<(), E> {\n    // SAFETY: p is valid for writes, checked above.\n    unsafe { *p = 1; }\n    let v = x.unwrap_or_default();\n    Ok(())\n}\n";
+        let mut findings = Vec::new();
+        let scan = scan_file("src/api/clean.rs", clean, &mut findings);
+        assert!(scan.unwrap_lines.is_empty());
+        assert!(findings.is_empty(), "findings: {findings:?}");
+    }
+
+    #[test]
+    fn seam_rule_only_fires_on_seams() {
+        let s = "fn f() { return Err(format!(\"x\")); }\n";
+        let mut on_seam = Vec::new();
+        scan_file("src/edge/x.rs", s, &mut on_seam);
+        assert!(on_seam.iter().any(|f| f.rule == "stringly-error"));
+        let mut off_seam = Vec::new();
+        scan_file("src/quant/x.rs", s, &mut off_seam);
+        assert!(!off_seam.iter().any(|f| f.rule == "stringly-error"));
+    }
+}

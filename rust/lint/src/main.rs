@@ -1,0 +1,54 @@
+//! `swis-lint` CLI: scan the crate, print `file:line: [rule] msg`
+//! diagnostics, exit 1 on findings. `--fix-list` additionally prints
+//! the allowlisted debt (every budgeted unwrap site, stale budgets,
+//! dead manifest entries) so burn-down work has a worklist.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut fix_list = false;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--fix-list" => fix_list = true,
+            "--help" | "-h" => {
+                println!("usage: swis-lint [--fix-list] [root]");
+                println!("  root defaults to '.'; may be the repo root or the rust/ crate dir");
+                return ExitCode::SUCCESS;
+            }
+            other => root = PathBuf::from(other),
+        }
+    }
+    let Some(rust_dir) = swis_lint::resolve_rust_dir(&root) else {
+        eprintln!("swis-lint: no Rust crate found under {}", root.display());
+        return ExitCode::FAILURE;
+    };
+    let report = match swis_lint::run(&rust_dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("swis-lint: scan failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if fix_list && !report.fix_list.is_empty() {
+        println!("-- fix list ({} entries) --", report.fix_list.len());
+        for item in &report.fix_list {
+            println!("{item}");
+        }
+    }
+    eprintln!(
+        "swis-lint: {} files, {} non-test unwrap/expect sites, {} findings",
+        report.files_scanned,
+        report.unwrap_total,
+        report.findings.len()
+    );
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,90 @@
+//! Fixture-driven acceptance tests: the bad tree must trip every rule
+//! with the right file:line anchors, the clean tree must be silent.
+
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+}
+
+fn run_fixture(name: &str) -> swis_lint::Report {
+    let root = fixture(name);
+    let dir = swis_lint::resolve_rust_dir(&root).expect("fixture has a src/ tree");
+    swis_lint::run(&dir).expect("fixture scan")
+}
+
+#[test]
+fn bad_fixture_trips_every_rule() {
+    let report = run_fixture("bad");
+    let rules: Vec<&str> = report.findings.iter().map(|f| f.rule).collect();
+    for expected in [
+        "unwrap-burndown",
+        "safety-comment",
+        "atomics-manifest",
+        "stringly-error",
+        "debug-macro",
+    ] {
+        assert!(rules.contains(&expected), "missing {expected}; got {rules:?}");
+    }
+    // the two non-test unwrap/expect sites are counted, the test one is not
+    assert_eq!(report.unwrap_total, 2, "findings: {:?}", report.findings);
+    // unsafe block (no SAFETY) and unsafe fn (no # Safety) both flagged
+    let safety = report.findings.iter().filter(|f| f.rule == "safety-comment").count();
+    assert_eq!(safety, 2, "findings: {:?}", report.findings);
+    // both unreviewed orderings flagged (Relaxed and SeqCst)
+    let atomics = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "atomics-manifest" && f.file.contains("offender"))
+        .count();
+    assert_eq!(atomics, 2, "findings: {:?}", report.findings);
+    // dbg! and todo! each produce a diagnostic
+    let debug = report.findings.iter().filter(|f| f.rule == "debug-macro").count();
+    assert_eq!(debug, 2, "findings: {:?}", report.findings);
+    // diagnostics carry real line anchors
+    assert!(
+        report.findings.iter().all(|f| f.line > 0 || f.file.ends_with(".allow")),
+        "findings: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn clean_fixture_is_silent() {
+    let report = run_fixture("clean");
+    assert!(report.findings.is_empty(), "findings: {:?}", report.findings);
+    assert_eq!(report.unwrap_total, 0);
+    assert!(report.files_scanned >= 1);
+}
+
+#[test]
+fn diagnostics_render_as_file_line_rule() {
+    let report = run_fixture("bad");
+    let first = report.findings.iter().find(|f| f.line > 0).expect("anchored finding");
+    let rendered = first.to_string();
+    assert!(
+        rendered.contains(&format!(":{}: [", first.line)),
+        "rendered: {rendered}"
+    );
+}
+
+#[test]
+fn real_repo_stays_clean_under_its_allowlists() {
+    // CARGO_MANIFEST_DIR is rust/lint — the crate root is one up.
+    let crate_root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("lint crate lives inside rust/")
+        .to_path_buf();
+    let dir = swis_lint::resolve_rust_dir(&crate_root).expect("rust/ crate");
+    let report = swis_lint::run(&dir).expect("repo scan");
+    assert!(
+        report.findings.is_empty(),
+        "the repo must lint clean; findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

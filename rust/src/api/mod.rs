@@ -48,6 +48,7 @@
 //! ```
 
 mod plan;
+mod verify;
 
 pub use crate::coordinator::{InferRequest, Scheme, TierPolicy, VariantSpec};
 pub use crate::error::{AdmissionReason, SwisError, SwisResult};
@@ -55,6 +56,7 @@ pub use crate::exec::{KernelVariant, TuneOptions, TuneParams, TuneReport, Weight
 pub use crate::quant::Alpha;
 pub use crate::util::tensor::Tensor;
 pub use plan::EnginePlan;
+pub use verify::{verify_plan_bytes, verify_plan_file, PlanCheck};
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -62,6 +64,7 @@ use std::sync::Arc;
 use crate::exec::{net_weights, NativeModel};
 use crate::nets::{by_name, Network};
 use crate::quant::planner;
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 /// Planner-work odometer: how many layer quantize/schedule calls this
 /// process has made. Warm-up paths that load a `.swisplan` must not
@@ -224,7 +227,7 @@ pub struct Session {
     threads: usize,
     /// Per-layer breakdown of this session's most recent forward, kept
     /// only while the obs level enables counters ([`crate::obs`]).
-    stats: std::sync::Mutex<Option<crate::obs::ForwardStats>>,
+    stats: Mutex<Option<crate::obs::ForwardStats>>,
 }
 
 impl Session {
@@ -241,7 +244,7 @@ impl Session {
     /// per-worker split so N workers never oversubscribe).
     pub fn with_threads(plan: Arc<EnginePlan>, threads: usize) -> Session {
         let threads = if threads == 0 { planner::default_threads() } else { threads };
-        Session { plan, threads, stats: std::sync::Mutex::new(None) }
+        Session { plan, threads, stats: Mutex::new(None) }
     }
 
     pub fn plan(&self) -> &Arc<EnginePlan> {
@@ -274,7 +277,7 @@ impl Session {
         // aggregate this forward's per-layer tallies (collected on this
         // thread by exec::model's layer scopes); None when counters off
         if let Some(fwd) = crate::obs::take_forward(t0.elapsed().as_secs_f64() * 1e3) {
-            *self.stats.lock().unwrap() = Some(fwd);
+            *lock_unpoisoned(&self.stats) = Some(fwd);
         }
         out
     }
@@ -283,7 +286,7 @@ impl Session {
     /// [`Session::run`] — `None` when the [`crate::obs`] level has
     /// counters off (the default) or before the first run.
     pub fn last_stats(&self) -> Option<crate::obs::ForwardStats> {
-        self.stats.lock().unwrap().clone()
+        lock_unpoisoned(&self.stats).clone()
     }
 
     /// Serve one typed [`InferRequest`] — the same submission type the

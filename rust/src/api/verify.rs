@@ -1,0 +1,625 @@
+//! `swis verify-plan` — a *static* `.swisplan` analyzer.
+//!
+//! [`EnginePlan::from_bytes`](super::EnginePlan::from_bytes) proves a
+//! container loadable by loading it: binding kernels, allocating every
+//! operand, and silently *dropping* sections that don't fit this host
+//! (foreign-CPU tune params) or this plan (foreign tier ladders). That
+//! is the right behavior for serving — and the wrong tool for CI, where
+//! a plan that quietly lost its ladder should fail the build, and where
+//! verifying an artifact must not cost a model bind.
+//!
+//! This module walks the container byte-by-byte and checks every
+//! structural invariant **without executing anything**:
+//!
+//! * magic, version window, and the trailing fnv1a64 checksum;
+//! * header enums (provenance, layer kind, scheme, operand tags);
+//! * per-variant shift counts within the scheme's representable bounds;
+//! * packed `.swis` operands: magic/version, header sanity, and the
+//!   plane-accounting identity — the payload must hold exactly the bits
+//!   the Sec. 3.3 accounting promises (`need <= 8*(len-26) < need+8`);
+//! * operand/layer-table consistency: a part named after a conv layer
+//!   must match its geometry (filters = out_c, fan-in from kind/k/in_c,
+//!   bias length = out_c); parts off the table (FC heads) are noted;
+//! * the tagged trailer: section lengths, tune-section shape (kernel
+//!   variant tag, CPU signature string), tier ladders that name only
+//!   declared variants (a foreign ladder is an ERROR here, not a silent
+//!   drop), MSE ratios ordered along the ladder, floor in range;
+//! * version coherence: a version-3 container must actually carry a
+//!   tier section, and nothing may trail the checksum.
+//!
+//! Wired into CI right after every plan-building step: the artifact the
+//! smoke jobs ship is proven well-formed before anything serves it.
+
+use std::path::Path;
+
+use crate::coordinator::Scheme;
+use crate::error::{SwisError, SwisResult};
+use crate::exec::KernelVariant;
+
+const MAGIC: &[u8; 8] = b"SWISPLAN";
+const VERSION_MIN: u16 = 1;
+const VERSION_MAX: u16 = 3;
+const SECTION_TUNE: u8 = 1;
+const SECTION_TIERS: u8 = 2;
+/// Fixed `.swis` packed-container header (quant::serialize layout).
+const SWIS_HEADER: usize = 26;
+
+/// What a successful verification learned — enough for a CI log line
+/// and for asserting over in tests.
+#[derive(Clone, Debug)]
+pub struct PlanCheck {
+    pub version: u16,
+    pub net: String,
+    pub n_layers: usize,
+    pub n_variants: usize,
+    pub dense_parts: usize,
+    pub packed_parts: usize,
+    pub packed_payload_bytes: usize,
+    pub has_tune: bool,
+    pub has_tiers: bool,
+    /// Non-fatal observations (unknown trailer sections skipped, parts
+    /// off the conv table, ...).
+    pub notes: Vec<String>,
+}
+
+impl std::fmt::Display for PlanCheck {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "version {} net '{}': {} layers, {} variants, {} dense + {} packed operands \
+             ({} packed payload bytes), tune={}, tiers={}",
+            self.version,
+            self.net,
+            self.n_layers,
+            self.n_variants,
+            self.dense_parts,
+            self.packed_parts,
+            self.packed_payload_bytes,
+            self.has_tune,
+            self.has_tiers
+        )?;
+        for n in &self.notes {
+            write!(f, "\n  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Verify a `.swisplan` file on disk. See [`verify_plan_bytes`].
+pub fn verify_plan_file(path: &Path) -> SwisResult<PlanCheck> {
+    let bytes = std::fs::read(path).map_err(|e| SwisError::io_at(path, e))?;
+    verify_plan_bytes(&bytes).map_err(|e| e.context(format!("verifying {}", path.display())))
+}
+
+/// Statically verify a `.swisplan` container. Returns the summary on
+/// success; any violated invariant is a typed [`SwisError::Plan`]
+/// naming the offending field and byte offset. Nothing is executed,
+/// bound, or allocated proportional to claimed (unverified) counts.
+pub fn verify_plan_bytes(bytes: &[u8]) -> SwisResult<PlanCheck> {
+    if bytes.len() < MAGIC.len() + 2 + 8 {
+        return Err(SwisError::plan(format!(
+            "container is {} bytes — too short for magic + version + checksum",
+            bytes.len()
+        )));
+    }
+    if &bytes[..MAGIC.len()] != MAGIC {
+        return Err(SwisError::plan("bad magic (not a .swisplan container)"));
+    }
+    let version = u16::from_le_bytes([bytes[8], bytes[9]]);
+    if !(VERSION_MIN..=VERSION_MAX).contains(&version) {
+        return Err(SwisError::plan(format!(
+            "unsupported version {version} (verifier knows {VERSION_MIN}..={VERSION_MAX})"
+        )));
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let tail = &bytes[bytes.len() - 8..];
+    let stored = u64::from_le_bytes([
+        tail[0], tail[1], tail[2], tail[3], tail[4], tail[5], tail[6], tail[7],
+    ]);
+    let computed = fnv1a64(body);
+    if computed != stored {
+        return Err(SwisError::plan(format!(
+            "checksum mismatch: stored {stored:#018x}, computed {computed:#018x} \
+             (bit flip or truncation)"
+        )));
+    }
+
+    let mut r = Rd { b: body, pos: MAGIC.len() + 2 };
+    let mut check = PlanCheck {
+        version,
+        net: String::new(),
+        n_layers: 0,
+        n_variants: 0,
+        dense_parts: 0,
+        packed_parts: 0,
+        packed_payload_bytes: 0,
+        has_tune: false,
+        has_tiers: false,
+        notes: Vec::new(),
+    };
+
+    let flags = r.u16("flags")?;
+    if flags != 0 {
+        check.notes.push(format!("reserved flags field is {flags:#06x} (writer emits 0)"));
+    }
+    let _threads = r.u16("thread budget")?;
+    let prov = r.u8("provenance tag")?;
+    if prov > 1 {
+        return Err(SwisError::plan(format!("unknown provenance tag {prov}")));
+    }
+    check.net = r.str("net name")?;
+    if check.net.is_empty() {
+        return Err(SwisError::plan("empty network name"));
+    }
+
+    // conv layer table: (name, kind) -> (out_c, fan_in)
+    check.n_layers = r.u32("layer count")? as usize;
+    let mut table: Vec<(String, usize, usize)> = Vec::new();
+    for li in 0..check.n_layers {
+        let name = r.str("layer name")?;
+        let kind = r.u8("layer kind tag")?;
+        if kind > 1 {
+            return Err(SwisError::plan(format!(
+                "layer '{name}' (index {li}): unknown kind tag {kind}"
+            )));
+        }
+        let mut dims = [0usize; 6];
+        for d in dims.iter_mut() {
+            *d = r.u32("layer dimension")? as usize;
+        }
+        let [_in_hw, in_c, k, stride, _pad, out_c] = dims;
+        if k == 0 || stride == 0 || in_c == 0 || out_c == 0 {
+            return Err(SwisError::plan(format!(
+                "layer '{name}': degenerate geometry {dims:?} (zero kernel/stride/channels)"
+            )));
+        }
+        // fan-in exactly as exec::model computes it from the descriptor
+        let fan_in = if kind == 1 { k * k } else { in_c * k * k };
+        if table.iter().any(|(n, _, _)| n == &name) {
+            return Err(SwisError::plan(format!("duplicate layer name '{name}' in the table")));
+        }
+        table.push((name, out_c, fan_in));
+    }
+
+    let input = [
+        r.u32("input dim")? as usize,
+        r.u32("input dim")? as usize,
+        r.u32("input dim")? as usize,
+    ];
+    if input.iter().any(|&d| d == 0) {
+        return Err(SwisError::plan(format!("degenerate input shape {input:?}")));
+    }
+    let n_classes = r.u32("class count")? as usize;
+    if n_classes == 0 {
+        return Err(SwisError::plan("zero classes"));
+    }
+
+    check.n_variants = r.u16("variant count")? as usize;
+    if check.n_variants == 0 {
+        return Err(SwisError::plan("a plan needs at least one variant"));
+    }
+    let mut variant_names: Vec<String> = Vec::new();
+    for _ in 0..check.n_variants {
+        let vname = r.str("variant name")?;
+        let scheme_tag = r.u8("scheme tag")?;
+        let scheme = match scheme_tag {
+            0 => Scheme::Fp32,
+            1 => Scheme::Swis,
+            2 => Scheme::SwisC,
+            3 => Scheme::WgtTrunc,
+            other => {
+                return Err(SwisError::plan(format!(
+                    "variant '{vname}': unknown scheme tag {other}"
+                )))
+            }
+        };
+        let n_shifts = r.f64("shift count")?;
+        let group = r.u16("group size")? as usize;
+        // shift budget within the scheme's representable bounds: shift
+        // magnitudes travel in 3-bit fields and weights are 8-bit, so a
+        // packed scheme serves 1..=8 planes; fp32 carries no planes
+        if scheme != Scheme::Fp32 {
+            if !n_shifts.is_finite() || n_shifts < 1.0 || n_shifts > 8.0 {
+                return Err(SwisError::plan(format!(
+                    "variant '{vname}': shift count {n_shifts} outside the scheme's 1..=8"
+                )));
+            }
+            if group == 0 {
+                return Err(SwisError::plan(format!("variant '{vname}': zero group size")));
+            }
+        }
+        if variant_names.iter().any(|n| n == &vname) {
+            return Err(SwisError::plan(format!("duplicate variant '{vname}'")));
+        }
+
+        let n_parts = r.u32("operand count")? as usize;
+        let mut part_names: Vec<String> = Vec::new();
+        for _ in 0..n_parts {
+            let lname = r.str("operand layer name")?;
+            if part_names.iter().any(|n| n == &lname) {
+                return Err(SwisError::plan(format!(
+                    "variant '{vname}': duplicate operand for layer '{lname}'"
+                )));
+            }
+            let row = table.iter().find(|(n, _, _)| n == &lname);
+            let tag = r.u8("operand tag")?;
+            match tag {
+                0 => {
+                    let n = r.u32("dense length")? as usize;
+                    let raw = r.take(n.checked_mul(4).ok_or_else(|| {
+                        SwisError::plan(format!("dense operand '{lname}': length overflows"))
+                    })?, "dense weights")?;
+                    check.dense_parts += 1;
+                    if let Some((_, out_c, fan_in)) = row {
+                        let want = out_c * fan_in;
+                        if n != want {
+                            return Err(SwisError::plan(format!(
+                                "variant '{vname}', layer '{lname}': dense operand has {n} \
+                                 weights, the layer table implies {want} ({out_c} x {fan_in})"
+                            )));
+                        }
+                    }
+                    let _ = raw;
+                }
+                1 => {
+                    let len = r.u32("packed length")? as usize;
+                    let raw = r.take(len, "packed container")?;
+                    let (n_filters, fan_in) = verify_swis_container(raw)
+                        .map_err(|e| e.context(format!(
+                            "variant '{vname}', layer '{lname}' packed operand"
+                        )))?;
+                    check.packed_parts += 1;
+                    check.packed_payload_bytes += len;
+                    if let Some((_, out_c, table_fan_in)) = row {
+                        if n_filters != *out_c || fan_in != *table_fan_in {
+                            return Err(SwisError::plan(format!(
+                                "variant '{vname}', layer '{lname}': packed shape \
+                                 {n_filters}x{fan_in} disagrees with the layer table \
+                                 {out_c}x{table_fan_in}"
+                            )));
+                        }
+                    }
+                }
+                other => {
+                    return Err(SwisError::plan(format!(
+                        "variant '{vname}', layer '{lname}': unknown operand tag {other}"
+                    )))
+                }
+            }
+            let bias_len = r.u32("bias length")? as usize;
+            let _bias = r.take(bias_len.checked_mul(4).ok_or_else(|| {
+                SwisError::plan(format!("bias of '{lname}': length overflows"))
+            })?, "bias")?;
+            if let Some((_, out_c, _)) = row {
+                if bias_len != *out_c {
+                    return Err(SwisError::plan(format!(
+                        "variant '{vname}', layer '{lname}': {bias_len} bias terms, the \
+                         layer table implies {out_c}"
+                    )));
+                }
+            } else {
+                check.notes.push(format!(
+                    "variant '{vname}': part '{lname}' is off the conv table (FC head or \
+                     auxiliary operand) — geometry not cross-checked"
+                ));
+            }
+            part_names.push(lname);
+        }
+        variant_names.push(vname);
+    }
+
+    // tagged section trailer (version >= 2)
+    if version >= 2 {
+        let n_sections = r.u16("section count")? as usize;
+        for si in 0..n_sections {
+            let tag = r.u8("section tag")?;
+            let len = r.u32("section length")? as usize;
+            let raw = r.take(len, "section payload")?;
+            match tag {
+                SECTION_TUNE => {
+                    verify_tune_section(raw)
+                        .map_err(|e| e.context(format!("tune section (trailer entry {si})")))?;
+                    check.has_tune = true;
+                }
+                SECTION_TIERS => {
+                    verify_tier_section(raw, &variant_names)
+                        .map_err(|e| e.context(format!("tier section (trailer entry {si})")))?;
+                    check.has_tiers = true;
+                }
+                other => {
+                    check.notes.push(format!(
+                        "unknown trailer section tag {other} ({len} bytes) — a loader skips it"
+                    ));
+                }
+            }
+        }
+    }
+    if version == 3 && !check.has_tiers {
+        return Err(SwisError::plan(
+            "version 3 container carries no tier-ladder section (writers only emit \
+             version 3 for tiered plans)",
+        ));
+    }
+    if r.pos != body.len() {
+        return Err(SwisError::plan(format!(
+            "{} trailing bytes between the last field (offset {}) and the checksum",
+            body.len() - r.pos,
+            r.pos
+        )));
+    }
+    Ok(check)
+}
+
+/// Verify one packed `.swis` operand WITHOUT materializing its planes:
+/// magic, version, header sanity, and the plane-accounting identity —
+/// the payload must be exactly `ceil(need_bits / 8)` bytes for the
+/// header's promised signs/shifts/masks(/filter-shifts). Returns the
+/// `(n_filters, fan_in)` shape for cross-checking the layer table.
+fn verify_swis_container(bytes: &[u8]) -> SwisResult<(usize, usize)> {
+    if bytes.len() < SWIS_HEADER {
+        return Err(SwisError::plan(format!(
+            "{} bytes is shorter than the {SWIS_HEADER}-byte .swis header",
+            bytes.len()
+        )));
+    }
+    if &bytes[..4] != b"SWIS" {
+        return Err(SwisError::plan("bad .swis magic"));
+    }
+    if bytes[4] != 1 {
+        return Err(SwisError::plan(format!("unsupported .swis version {}", bytes[4])));
+    }
+    let flags = bytes[5];
+    if flags & !0b11 != 0 {
+        return Err(SwisError::plan(format!("unknown .swis flag bits {flags:#010b}")));
+    }
+    let consecutive = flags & 1 != 0;
+    let scheduled = flags & 2 != 0;
+    let group_size = u16::from_le_bytes([bytes[6], bytes[7]]) as usize;
+    let n_shifts = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    let n_filters =
+        u32::from_le_bytes([bytes[10], bytes[11], bytes[12], bytes[13]]) as usize;
+    let fan_in = u32::from_le_bytes([bytes[14], bytes[15], bytes[16], bytes[17]]) as usize;
+    let scale = f64::from_le_bytes([
+        bytes[18], bytes[19], bytes[20], bytes[21], bytes[22], bytes[23], bytes[24], bytes[25],
+    ]);
+    if group_size == 0 || n_shifts == 0 || n_shifts > 8 {
+        return Err(SwisError::plan(format!(
+            "corrupt .swis header: G={group_size} N={n_shifts} (want G>=1, 1<=N<=8)"
+        )));
+    }
+    if n_filters == 0 || fan_in == 0 {
+        return Err(SwisError::plan(format!(
+            "degenerate .swis shape {n_filters}x{fan_in}"
+        )));
+    }
+    if !scale.is_finite() || scale <= 0.0 {
+        return Err(SwisError::plan(format!(".swis scale {scale} is not a finite positive")));
+    }
+    let gpf = fan_in.div_ceil(group_size);
+    let g = n_filters as u128 * gpf as u128;
+    let lanes = g * group_size as u128;
+    let mut need_bits = lanes // signs
+        + lanes * n_shifts as u128 // masks
+        + if consecutive { g * 3 } else { g * n_shifts as u128 * 3 };
+    if scheduled {
+        need_bits += n_filters as u128 * 4;
+    }
+    let avail_bits = (bytes.len() as u128 - SWIS_HEADER as u128) * 8;
+    // the Sec. 3.3 accounting identity: the payload is the promised
+    // planes and nothing else (under a byte of bit-packing slack)
+    if avail_bits < need_bits || avail_bits >= need_bits + 8 {
+        return Err(SwisError::plan(format!(
+            "plane accounting broken: header promises {need_bits} payload bits, container \
+             holds {avail_bits} (want {need_bits} <= held < {})",
+            need_bits + 8
+        )));
+    }
+    Ok((n_filters, fan_in))
+}
+
+/// Verify the version-2 tune section's shape: a known kernel-variant
+/// tag, the three u16 parameters, and a well-formed CPU signature
+/// string. Trailing bytes are legal (forward extensions).
+fn verify_tune_section(raw: &[u8]) -> SwisResult<()> {
+    let mut r = Rd { b: raw, pos: 0 };
+    let tag = r.u8("kernel variant tag")?;
+    if KernelVariant::from_tag(tag).is_none() {
+        return Err(SwisError::plan(format!("unknown kernel variant tag {tag}")));
+    }
+    let _row_block = r.u16("row block")?;
+    let _group_chunk = r.u16("group chunk")?;
+    let _threads = r.u16("thread split")?;
+    let cpu = r.str("cpu signature")?;
+    if cpu.is_empty() {
+        return Err(SwisError::plan(
+            "empty CPU signature (tuned params would never match any host)",
+        ));
+    }
+    Ok(())
+}
+
+/// Verify the version-3 tier section against the declared variant set:
+/// >= 2 tiers, every tier a declared variant (a foreign ladder is an
+/// ERROR here — the loader's silent drop is exactly what CI must
+/// catch), no duplicates, finite MSE ratios that never *decrease* down
+/// the ladder, and the floor within range.
+fn verify_tier_section(raw: &[u8], variants: &[String]) -> SwisResult<()> {
+    let mut r = Rd { b: raw, pos: 0 };
+    let n = r.u16("tier count")? as usize;
+    if n < 2 {
+        return Err(SwisError::plan(format!("a ladder needs >= 2 tiers, got {n}")));
+    }
+    let mut prev_ratio = f64::NEG_INFINITY;
+    let mut seen: Vec<String> = Vec::new();
+    for ti in 0..n {
+        let name = r.str("tier name")?;
+        let ratio = r.f64("tier MSE ratio")?;
+        if !variants.iter().any(|v| v == &name) {
+            return Err(SwisError::plan(format!(
+                "tier {ti} '{name}' is not a variant of this plan (foreign ladder; the \
+                 loader would silently drop the whole policy)"
+            )));
+        }
+        if seen.iter().any(|s| s == &name) {
+            return Err(SwisError::plan(format!("duplicate tier '{name}'")));
+        }
+        if !ratio.is_finite() || ratio < 0.0 {
+            return Err(SwisError::plan(format!(
+                "tier {ti} '{name}': MSE ratio {ratio} is not a finite >= 0"
+            )));
+        }
+        if ratio < prev_ratio {
+            return Err(SwisError::plan(format!(
+                "tier {ti} '{name}': MSE ratio {ratio} is lower than the tier above it \
+                 ({prev_ratio}) — the ladder must degrade monotonically"
+            )));
+        }
+        prev_ratio = ratio;
+        seen.push(name);
+    }
+    let floor = r.u16("tier floor")? as usize;
+    if floor >= n {
+        return Err(SwisError::plan(format!(
+            "tier floor {floor} out of range (ladder has {n} tiers)"
+        )));
+    }
+    if r.pos != raw.len() {
+        return Err(SwisError::plan(format!(
+            "{} trailing bytes in the tier section",
+            raw.len() - r.pos
+        )));
+    }
+    Ok(())
+}
+
+/// FNV-1a 64 (mirrors plan.rs — the checksum contract is the format).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian reader; every failure names the field
+/// and the offset where the container ran out.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize, what: &str) -> SwisResult<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            SwisError::plan(format!("{what}: length overflows at byte {}", self.pos))
+        })?;
+        if end > self.b.len() {
+            return Err(SwisError::plan(format!(
+                "truncated reading {what}: need {n} bytes at offset {}, container body \
+                 has {}",
+                self.pos,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> SwisResult<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> SwisResult<u16> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> SwisResult<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f64(&mut self, what: &str) -> SwisResult<f64> {
+        let s = self.take(8, what)?;
+        Ok(f64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn str(&mut self, what: &str) -> SwisResult<String> {
+        let n = self.u16(what)? as usize;
+        let raw = self.take(n, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| SwisError::plan(format!("{what}: invalid UTF-8 at byte {}", self.pos)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_garbage_and_short_input() {
+        assert!(verify_plan_bytes(b"").is_err());
+        assert!(verify_plan_bytes(b"SWISPLAN\x01\x00").is_err());
+        assert!(verify_plan_bytes(&[0u8; 64]).is_err());
+    }
+
+    #[test]
+    fn swis_container_plane_accounting() {
+        // hand-build a minimal consecutive header: G=4 N=2, 4 filters,
+        // fan_in 4 -> gpf=1, g=4, lanes=16
+        // need = 16 (signs) + 32 (masks) + 12 (shifts) = 60 bits -> 8 bytes
+        let mut h = Vec::new();
+        h.extend_from_slice(b"SWIS");
+        h.push(1); // version
+        h.push(1); // FLAG_CONSECUTIVE
+        h.extend_from_slice(&4u16.to_le_bytes()); // group
+        h.extend_from_slice(&2u16.to_le_bytes()); // n_shifts
+        h.extend_from_slice(&4u32.to_le_bytes()); // n_filters
+        h.extend_from_slice(&4u32.to_le_bytes()); // fan_in
+        h.extend_from_slice(&1.0f64.to_le_bytes()); // scale
+        let mut ok = h.clone();
+        ok.extend_from_slice(&[0u8; 8]);
+        assert_eq!(verify_swis_container(&ok).unwrap(), (4, 4));
+        // a byte short: accounting identity broken
+        let mut short = h.clone();
+        short.extend_from_slice(&[0u8; 7]);
+        assert!(verify_swis_container(&short).is_err());
+        // a byte long: padding beyond the slack is also an error
+        let mut long = h.clone();
+        long.extend_from_slice(&[0u8; 9]);
+        assert!(verify_swis_container(&long).is_err());
+        // n_shifts out of bounds
+        let mut bad = ok.clone();
+        bad[8] = 9;
+        assert!(verify_swis_container(&bad).is_err());
+    }
+
+    #[test]
+    fn tier_section_rules() {
+        fn sect(tiers: &[(&str, f64)], floor: u16) -> Vec<u8> {
+            let mut s = Vec::new();
+            s.extend_from_slice(&(tiers.len() as u16).to_le_bytes());
+            for (name, ratio) in tiers {
+                s.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                s.extend_from_slice(name.as_bytes());
+                s.extend_from_slice(&ratio.to_le_bytes());
+            }
+            s.extend_from_slice(&floor.to_le_bytes());
+            s
+        }
+        let vs = vec!["swis@4".to_string(), "swis@2".to_string()];
+        let good = sect(&[("swis@4", 1.0), ("swis@2", 4.0)], 1);
+        assert!(verify_tier_section(&good, &vs).is_ok());
+        // foreign ladder: named tier is not a plan variant
+        let foreign = sect(&[("swis@4", 1.0), ("ghost@2", 4.0)], 1);
+        assert!(verify_tier_section(&foreign, &vs).is_err());
+        // ratios must not improve down the ladder
+        let unordered = sect(&[("swis@4", 4.0), ("swis@2", 1.0)], 1);
+        assert!(verify_tier_section(&unordered, &vs).is_err());
+        // floor out of range
+        let deep = sect(&[("swis@4", 1.0), ("swis@2", 4.0)], 2);
+        assert!(verify_tier_section(&deep, &vs).is_err());
+    }
+}

@@ -32,12 +32,10 @@
 //! work outright.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Result};
-
 use crate::error::{SwisError, SwisResult};
+use crate::util::sync::{lock_unpoisoned, Condvar, Mutex};
 
 /// Scheduling class of a request. Interactive always dequeues first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,12 +54,14 @@ impl Priority {
         }
     }
 
-    pub fn parse(s: &str) -> Result<Priority> {
-        Ok(match s {
-            "interactive" | "i" => Priority::Interactive,
-            "batch" | "b" => Priority::Batch,
-            other => bail!("unknown priority '{other}' (expected interactive|batch)"),
-        })
+    pub fn parse(s: &str) -> SwisResult<Priority> {
+        match s {
+            "interactive" | "i" => Ok(Priority::Interactive),
+            "batch" | "b" => Ok(Priority::Batch),
+            other => Err(SwisError::config(format!(
+                "unknown priority '{other}' (expected interactive|batch)"
+            ))),
+        }
     }
 
     pub fn as_str(self) -> &'static str {
@@ -142,13 +142,13 @@ impl<T: Admit> AdmissionQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().total()
+        lock_unpoisoned(&self.state).total()
     }
 
     /// Current depth of each lane (`[interactive, batch]`) — the
     /// `swis_queue_depth{lane=...}` gauges.
     pub fn depths(&self) -> [usize; 2] {
-        let s = self.state.lock().unwrap();
+        let s = lock_unpoisoned(&self.state);
         [s.lanes[0].len(), s.lanes[1].len()]
     }
 
@@ -157,12 +157,12 @@ impl<T: Admit> AdmissionQueue<T> {
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        lock_unpoisoned(&self.state).closed
     }
 
     /// Stop admitting; wake every waiter so workers drain and exit.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.state).closed = true;
         self.arrival.notify_all();
         self.space.notify_all();
     }
@@ -170,7 +170,7 @@ impl<T: Admit> AdmissionQueue<T> {
     /// Non-blocking admission: `Busy` at capacity, `Closed` after
     /// shutdown. Success wakes one-or-more waiting workers.
     pub fn try_push(&self, item: T, pri: Priority) -> Result<(), SubmitError<T>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         if s.closed {
             return Err(SubmitError::Closed(item));
         }
@@ -190,7 +190,7 @@ impl<T: Admit> AdmissionQueue<T> {
     /// preserves the old unbounded-submit semantics under a generous
     /// depth). Errs only on shutdown.
     pub fn push_wait(&self, item: T, pri: Priority) -> Result<(), SubmitError<T>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             if s.closed {
                 return Err(SubmitError::Closed(item));
@@ -204,7 +204,7 @@ impl<T: Admit> AdmissionQueue<T> {
                 self.arrival.notify_all();
                 return Ok(());
             }
-            s = self.space.wait(s).unwrap();
+            s = self.space.wait(s).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -214,7 +214,7 @@ impl<T: Admit> AdmissionQueue<T> {
     /// returns [`Popped::Shed`] so the caller can flush their responses
     /// before blocking again.
     pub fn pop_seed(&self, affinity: Option<&str>, shed: &mut Vec<T>) -> Popped<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             let swept = Self::sweep_expired(&mut s, shed);
             let job = Self::take_preferred(&mut s, affinity);
@@ -229,7 +229,7 @@ impl<T: Admit> AdmissionQueue<T> {
             if s.closed {
                 return Popped::Closed;
             }
-            s = self.arrival.wait(s).unwrap();
+            s = self.arrival.wait(s).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -237,7 +237,7 @@ impl<T: Admit> AdmissionQueue<T> {
     /// `until` for a matching arrival. Returns `None` on timeout, on
     /// shutdown, or when expired jobs were swept (check `shed`).
     pub fn pop_match(&self, variant: &str, until: Instant, shed: &mut Vec<T>) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             let swept = Self::sweep_expired(&mut s, shed);
             let job = Self::take_variant(&mut s, variant);
@@ -253,7 +253,8 @@ impl<T: Admit> AdmissionQueue<T> {
             if now >= until {
                 return None;
             }
-            let (guard, _res) = self.arrival.wait_timeout(s, until - now).unwrap();
+            let (guard, _res) =
+                self.arrival.wait_timeout(s, until - now).unwrap_or_else(|e| e.into_inner());
             s = guard;
         }
     }
@@ -270,8 +271,10 @@ impl<T: Admit> AdmissionQueue<T> {
             let mut i = 0;
             while i < lane.len() {
                 if lane[i].deadline().is_some_and(|d| d <= now) {
-                    shed.push(lane.remove(i).unwrap());
-                    n += 1;
+                    if let Some(j) = lane.remove(i) {
+                        shed.push(j);
+                        n += 1;
+                    }
                 } else {
                     i += 1;
                 }

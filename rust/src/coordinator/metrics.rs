@@ -9,11 +9,11 @@
 //! percentile snapshots stay valid at any uptime while memory stays
 //! `O(RESERVOIR_CAP)`.
 
-use std::sync::Mutex;
 use std::time::Duration;
 
 use super::admission::Priority;
 use crate::util::stats::{Reservoir, Summary};
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 /// Retained samples per latency stream. Exact percentiles up to this many
 /// requests; an unbiased uniform-sample estimate beyond it.
@@ -156,7 +156,7 @@ pub struct MetricsSnapshot {
 
 impl Metrics {
     pub fn record_batch(&self, size: usize, queue: &[Duration], exec: Duration, total: &[Duration]) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         m.requests += size as u64;
         m.batches += 1;
         m.batch_sizes.push(size as f64);
@@ -170,23 +170,23 @@ impl Metrics {
     }
 
     pub fn record_shed(&self, pri: Priority, n: usize) {
-        self.inner.lock().unwrap().shed[pri.lane()] += n as u64;
+        lock_unpoisoned(&self.inner).shed[pri.lane()] += n as u64;
     }
 
     pub fn record_rejected(&self, pri: Priority) {
-        self.inner.lock().unwrap().rejected[pri.lane()] += 1;
+        lock_unpoisoned(&self.inner).rejected[pri.lane()] += 1;
     }
 
     pub fn record_degraded(&self, n: usize) {
-        self.inner.lock().unwrap().degraded += n as u64;
+        lock_unpoisoned(&self.inner).degraded += n as u64;
     }
 
     pub fn record_errors(&self, n: usize) {
-        self.inner.lock().unwrap().errors += n as u64;
+        lock_unpoisoned(&self.inner).errors += n as u64;
     }
 
     pub fn record_panic(&self) {
-        self.inner.lock().unwrap().panics += 1;
+        lock_unpoisoned(&self.inner).panics += 1;
     }
 
     /// Count one wire-level protocol fault ([`WireFault`] names the
@@ -194,7 +194,7 @@ impl Metrics {
     /// class keeps the server serving — faults cost a counter bump and
     /// (at worst) that one connection, never the process.
     pub fn record_wire_fault(&self, fault: WireFault) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         match fault {
             WireFault::BadMagic => m.wire.bad_magic += 1,
             WireFault::BadFrame => m.wire.bad_frame += 1,
@@ -207,21 +207,21 @@ impl Metrics {
     /// Count one over-quota refusal (typed `Admission{Rejected}` on the
     /// wire — the connection stays open).
     pub fn record_quota_rejected(&self) {
-        self.inner.lock().unwrap().wire.quota_rejected += 1;
+        lock_unpoisoned(&self.inner).wire.quota_rejected += 1;
     }
 
     /// Count one accepted connection.
     pub fn record_conn_opened(&self) {
-        self.inner.lock().unwrap().wire.conns_opened += 1;
+        lock_unpoisoned(&self.inner).wire.conns_opened += 1;
     }
 
     /// Count one closed connection (clean or faulted).
     pub fn record_conn_closed(&self) {
-        self.inner.lock().unwrap().wire.conns_closed += 1;
+        lock_unpoisoned(&self.inner).wire.conns_closed += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         let total_us = m.total_us.summary();
         MetricsSnapshot {
             requests: m.requests,

@@ -339,7 +339,9 @@ impl WorkerPool {
                 format!("image must have {} elements, got {}", self.image_len, req.image.len()),
             ));
         }
-        if self.alive.load(Ordering::SeqCst) == 0 {
+        // Acquire pairs with the workers' AcqRel increments: observing a
+        // non-zero count happens-after that worker's warm-up completed.
+        if self.alive.load(Ordering::Acquire) == 0 {
             return Err(SwisError::admission(
                 AdmissionReason::Closed,
                 "no live workers in the pool",
@@ -420,7 +422,7 @@ struct AliveGuard(Arc<AtomicUsize>);
 
 impl Drop for AliveGuard {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        self.0.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -449,7 +451,7 @@ fn worker_main(
             return;
         }
     };
-    alive.fetch_add(1, Ordering::SeqCst);
+    alive.fetch_add(1, Ordering::AcqRel);
     let _alive = AliveGuard(alive);
     let _ = ready.send(Ok((backend.name(), backend.input_shape())));
 
@@ -509,11 +511,15 @@ fn worker_main(
             }
         }
         let n = jobs.len();
+        // `resolved` never crosses threads: dispatch runs inside
+        // catch_unwind on THIS worker thread and the post-panic load is
+        // the same thread, so Relaxed is sufficient (atomic only because
+        // the closure takes it by shared reference).
         let resolved = AtomicUsize::new(0);
         let run = || dispatch(jobs, backend.as_ref(), &metrics, &resolved, &ring);
         if catch_unwind(AssertUnwindSafe(run)).is_err() {
             metrics.record_panic();
-            metrics.record_errors(n - resolved.load(Ordering::SeqCst).min(n));
+            metrics.record_errors(n - resolved.load(Ordering::Relaxed).min(n));
         }
     }
 }
@@ -555,7 +561,7 @@ fn dispatch(
     debug_assert!(jobs.iter().all(|j| j.req.variant == variant), "mixed-variant batch");
     if !backend.has_variant(&variant) {
         metrics.record_errors(jobs.len());
-        resolved.fetch_add(jobs.len(), Ordering::SeqCst);
+        resolved.fetch_add(jobs.len(), Ordering::Relaxed);
         for mut j in jobs {
             if let Some(mut t) = j.trace.take() {
                 t.push(SpanKind::Error);
@@ -572,7 +578,7 @@ fn dispatch(
     let (mut live, expired): (Vec<Job>, Vec<Job>) =
         jobs.into_iter().partition(|j| j.deadline.map_or(true, |d| d > now));
     if !expired.is_empty() {
-        resolved.fetch_add(expired.len(), Ordering::SeqCst);
+        resolved.fetch_add(expired.len(), Ordering::Relaxed);
         for j in expired {
             shed_job(j, metrics, ring, "deadline exceeded before execution");
         }
@@ -584,7 +590,7 @@ fn dispatch(
     for chunk in backend.plan_chunks(live.len()) {
         let end = (start + chunk).min(live.len());
         run_chunk(&mut live[start..end], &variant, backend, metrics, ring);
-        resolved.fetch_add(end - start, Ordering::SeqCst);
+        resolved.fetch_add(end - start, Ordering::Relaxed);
         start = end;
     }
 }

@@ -9,8 +9,9 @@
 //! admitted (the in-process default).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 /// Token-bucket parameters applied to EVERY tenant individually.
 #[derive(Clone, Copy, Debug)]
@@ -53,7 +54,7 @@ impl TenantQuotas {
     /// arithmetic is deterministic under test.
     pub fn admit_at(&self, tenant: &str, now: Instant) -> bool {
         let Some(cfg) = self.cfg else { return true };
-        let mut buckets = self.buckets.lock().unwrap();
+        let mut buckets = lock_unpoisoned(&self.buckets);
         let b = buckets
             .entry(tenant.to_string())
             .or_insert_with(|| Bucket { tokens: cfg.burst, last: now });
@@ -70,7 +71,7 @@ impl TenantQuotas {
 
     /// Tenants seen so far (for the serve-loop summary line).
     pub fn tenants(&self) -> usize {
-        self.buckets.lock().unwrap().len()
+        lock_unpoisoned(&self.buckets).len()
     }
 }
 

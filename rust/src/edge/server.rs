@@ -30,11 +30,13 @@ use std::collections::HashMap;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 use super::frame::{self, Frame, FrameError, ModelInfo};
 use super::quota::{QuotaConfig, TenantQuotas};
@@ -101,7 +103,7 @@ impl PlanCache {
 
     /// Load (or reuse) the plan at `path`.
     pub fn load(&self, path: &Path) -> SwisResult<Arc<EnginePlan>> {
-        let mut plans = self.plans.lock().unwrap();
+        let mut plans = lock_unpoisoned(&self.plans);
         if let Some(p) = plans.get(path) {
             return Ok(Arc::clone(p));
         }
@@ -112,7 +114,7 @@ impl PlanCache {
 
     /// Distinct plans resident in the cache.
     pub fn len(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        lock_unpoisoned(&self.plans).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -292,7 +294,7 @@ impl EdgeServer {
     /// Per-model worker counts, in sorted model-id order — the
     /// rebalancer's current split.
     pub fn worker_split(&self) -> Vec<(String, usize)> {
-        let models = self.shared.models.lock().unwrap();
+        let models = lock_unpoisoned(&self.shared.models);
         self.shared
             .model_ids
             .iter()
@@ -303,8 +305,8 @@ impl EdgeServer {
     /// Aggregate pool counters: live pools plus everything retired by
     /// the rebalancer.
     pub fn pool_totals(&self) -> PoolTotals {
-        let mut t = *self.shared.retired.lock().unwrap();
-        let models = self.shared.models.lock().unwrap();
+        let mut t = *lock_unpoisoned(&self.shared.retired);
+        let models = lock_unpoisoned(&self.shared.models);
         for e in models.values() {
             t.absorb(&e.pool.metrics.snapshot());
         }
@@ -323,20 +325,23 @@ impl EdgeServer {
     }
 
     fn shutdown(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
+        // Release pairs with the Acquire loads in the accept / reader /
+        // rebalancer loops: whatever the stopping thread wrote before
+        // the flag flip is visible to loops that observe it.
+        self.shared.stop.store(true, Ordering::Release);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
         if let Some(h) = self.rebalancer.take() {
             let _ = h.join();
         }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *lock_unpoisoned(&self.conns));
         for h in handles {
             let _ = h.join();
         }
         // dropping the entries drops the pool Arcs; WorkerPool::drop
         // closes admission and joins workers, draining queued jobs
-        self.shared.models.lock().unwrap().clear();
+        lock_unpoisoned(&self.shared.models).clear();
     }
 }
 
@@ -367,7 +372,7 @@ fn accept_loop(
     shared: Arc<Shared>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 ) {
-    while !shared.stop.load(Ordering::SeqCst) {
+    while !shared.stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _)) => {
                 shared.metrics.record_conn_opened();
@@ -376,7 +381,7 @@ fn accept_loop(
                     .name("swis-edge-conn".into())
                     .spawn(move || conn_main(stream, shared2))
                 {
-                    Ok(h) => conns.lock().unwrap().push(h),
+                    Ok(h) => lock_unpoisoned(&conns).push(h),
                     Err(_) => shared.metrics.record_conn_closed(),
                 }
             }
@@ -451,7 +456,7 @@ fn conn_main(stream: TcpStream, shared: Arc<Shared>) {
             }
             Err(FrameError::Stalled { mid_frame: false }) => {
                 // idle poll tick; also our shutdown check
-                if shared.stop.load(Ordering::SeqCst) {
+                if shared.stop.load(Ordering::Acquire) {
                     break;
                 }
             }
@@ -508,7 +513,7 @@ fn handle_infer(
         return Reply::Ready(status_frame(seq, &e));
     }
     let pool = {
-        let models = shared.models.lock().unwrap();
+        let models = lock_unpoisoned(&shared.models);
         models.get(model).map(|e| Arc::clone(&e.pool))
     };
     let Some(pool) = pool else {
@@ -532,7 +537,7 @@ fn handle_infer(
 }
 
 fn model_table(shared: &Shared) -> Vec<ModelInfo> {
-    let models = shared.models.lock().unwrap();
+    let models = lock_unpoisoned(&shared.models);
     shared
         .model_ids
         .iter()
@@ -590,7 +595,7 @@ fn writer_main(mut stream: TcpStream, rx: Receiver<Reply>, shared: Arc<Shared>) 
 fn rebalance_loop(shared: Arc<Shared>, every: Duration) {
     let tick = every.min(Duration::from_millis(100)).max(Duration::from_millis(10));
     let mut since = Duration::ZERO;
-    while !shared.stop.load(Ordering::SeqCst) {
+    while !shared.stop.load(Ordering::Acquire) {
         std::thread::sleep(tick);
         since += tick;
         if since < every {
@@ -606,14 +611,14 @@ fn rebalance_loop(shared: Arc<Shared>, every: Duration) {
 /// their drain/join never blocks request routing.
 fn rebalance_once(shared: &Shared) {
     let loads: Vec<usize> = {
-        let models = shared.models.lock().unwrap();
+        let models = lock_unpoisoned(&shared.models);
         shared.model_ids.iter().map(|id| models[id].pool.queue_len()).collect()
     };
     let targets = allocate(shared.cfg.worker_budget, &loads);
     let mut retired: Vec<Arc<WorkerPool>> = Vec::new();
     for (id, target) in shared.model_ids.iter().zip(&targets) {
         let plan = {
-            let models = shared.models.lock().unwrap();
+            let models = lock_unpoisoned(&shared.models);
             let e = &models[id];
             if e.workers() == *target {
                 continue;
@@ -625,10 +630,10 @@ fn rebalance_once(shared: &Shared) {
         let Ok(pool) = start_pool(&plan, *target, &shared.pool_cfg) else {
             continue; // keep the old pool on any build failure
         };
-        let mut models = shared.models.lock().unwrap();
+        let mut models = lock_unpoisoned(&shared.models);
         if let Some(e) = models.get_mut(id) {
             let old = std::mem::replace(&mut e.pool, pool);
-            shared.retired.lock().unwrap().absorb(&old.metrics.snapshot());
+            lock_unpoisoned(&shared.retired).absorb(&old.metrics.snapshot());
             retired.push(old);
         }
     }

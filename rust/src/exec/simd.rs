@@ -357,8 +357,17 @@ pub(crate) fn accumulate_tile(
     match variant {
         #[cfg(target_arch = "x86_64")]
         KernelVariant::Avx2 | KernelVariant::Avx2Wide if variant.available() => {
-            // SAFETY: avx2 availability checked above; the scratch layout
-            // contract bounds every load, and acc covers `width` lanes.
+            // SAFETY: CPU feature — `variant.available()` (checked in the
+            // guard above) is `is_x86_feature_detected!("avx2")`, the only
+            // feature `tile_avx2` enables. Slice lengths — the scratch
+            // layout contract holds here: `row_off + acc.len() <= stride`
+            // and `n_groups * gs * stride <= at.len()` (debug-asserted
+            // above), `acc.len()` is 8 or 16 (the variant width the caller
+            // sized `acc` to, a multiple of 8 per the assert), masks has
+            // >= n_groups entries, and `plane_ofs[g..=g+1]` is in bounds
+            // for every group because prepare() emits n_groups+1 offsets
+            // into `planes`. These are exactly the preconditions
+            // `tile_avx2` documents.
             unsafe {
                 x86::tile_avx2(
                     planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, masks, acc,
@@ -367,8 +376,15 @@ pub(crate) fn accumulate_tile(
         }
         #[cfg(target_arch = "aarch64")]
         KernelVariant::Neon => {
-            // SAFETY: NEON is baseline on aarch64; bounds per the scratch
-            // layout contract.
+            // SAFETY: CPU feature — NEON is mandatory on aarch64, so the
+            // `#[target_feature(enable = "neon")]` on `tile_neon` is
+            // always satisfied under this `cfg(target_arch = "aarch64")`.
+            // Slice lengths — same scratch layout contract as the AVX2
+            // arm: `row_off + acc.len() <= stride`, `n_groups * gs *
+            // stride <= at.len()` (both debug-asserted above),
+            // `acc.len() == 8` (the NEON width the caller sized `acc`
+            // to), `masks.len() >= n_groups`, and `plane_ofs` has
+            // n_groups+1 in-bounds offsets into `planes` from prepare().
             unsafe {
                 arm::tile_neon(
                     planes, plane_ofs, g_base, n_groups, gs, at, stride, row_off, masks, acc,
@@ -466,8 +482,22 @@ mod x86 {
     /// `Avx2Wide` shape AVX-512 hosts pick).
     ///
     /// # Safety
-    /// Caller verifies AVX2 and the scratch layout contract of
-    /// [`super::accumulate_tile`].
+    /// CPU feature: the caller must have verified AVX2 support
+    /// (`is_x86_feature_detected!("avx2")`) — every `_mm256_*` intrinsic
+    /// below is AVX2 or baseline SSE2. Slice lengths (the scratch layout
+    /// contract of [`super::accumulate_tile`]):
+    /// * `acc.len()` is 8 or 16; the unaligned i64 loads/stores at
+    ///   `ap .. ap+4 (+8, +12 when wide)` each cover 4 elements, so the
+    ///   furthest store ends at `acc.len()`.
+    /// * every `base.add((a0 + lane) * stride + row_off)` load reads 8
+    ///   (16 when wide) i32s; in-bounds because `lane < gs` (prepared
+    ///   masks carry bits only for real fan-in lanes), `a0 + lane <
+    ///   n_groups * gs`, `row_off + acc.len() <= stride`, and
+    ///   `n_groups * gs * stride <= at.len()`.
+    /// * `masks.len() >= n_groups` and `plane_ofs[g_base ..=
+    ///   g_base + n_groups]` are in-bounds indices into `planes`
+    ///   (prepare() emits one offset per group plus a terminator) — the
+    ///   `get_unchecked` calls rely on exactly these bounds.
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn tile_avx2(
@@ -564,8 +594,20 @@ mod arm {
     /// accumulators; `vshlq_s64` applies the plane shift after widening.
     ///
     /// # Safety
-    /// NEON is baseline on aarch64; caller verifies the scratch layout
-    /// contract of [`super::accumulate_tile`].
+    /// CPU feature: NEON is architecturally mandatory on aarch64, so the
+    /// `target_feature(enable = "neon")` requirement is satisfied on any
+    /// aarch64 host. Slice lengths (the scratch layout contract of
+    /// [`super::accumulate_tile`]):
+    /// * `acc.len() == 8`: the `vld1q_s64`/`vst1q_s64` pairs at
+    ///   `ap, ap+2, ap+4, ap+6` each cover 2 i64s, ending at element 8.
+    /// * every `base.add((a0 + lane) * stride + row_off)` load reads 8
+    ///   i32s (`vld1q_s32` at `p` and `p+4`); in-bounds because
+    ///   `lane < gs` (prepared masks carry bits only for real fan-in
+    ///   lanes), `a0 + lane < n_groups * gs`, `row_off + 8 <= stride`,
+    ///   and `n_groups * gs * stride <= at.len()`.
+    /// * `masks.len() >= n_groups` and `plane_ofs[g_base ..=
+    ///   g_base + n_groups]` are in-bounds indices into `planes` — the
+    ///   `get_unchecked` calls rely on exactly these bounds.
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn tile_neon(

@@ -113,6 +113,9 @@ pub const FLAGS: &[FlagSpec] = flags![
     // tune
     "alpha"        b ""          ["tune"] "run the MSE++ alpha sweep instead of the kernel autotune",
     "reps"         v "K"         ["tune"] "bench repetitions per candidate",
+    // correctness tooling
+    "fix-list"     b ""          ["lint"] "also print the allowlisted debt (burn-down worklist)",
+    "root"         v "DIR"       ["lint"] "repo or crate root to scan [.]",
 ];
 
 /// Every subcommand, in help order.
@@ -126,6 +129,8 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("tune", "bench-driven kernel autotune (--alpha: MSE++ sweep)"),
     ("prob", "Fig. 2 lossless-quantization probability curves"),
     ("info", "model zoo + accelerator configuration summary"),
+    ("lint", "repo static pass: unwrap budgets, SAFETY comments, atomics manifest"),
+    ("verify-plan", "statically verify a .swisplan container without executing it"),
 ];
 
 /// Names of every value-taking flag — the list

@@ -252,6 +252,50 @@
 //!   `swis_lanes_masked_total{layer=...}`, per-lane
 //!   `swis_shed_total{lane=...}`, queue-depth gauges, latency quantiles)
 //!   over a std `TcpListener` — no HTTP dependency.
+//!
+//! ## Correctness tooling — lint, loom, sanitizers, plan verification
+//!
+//! The paper's claims rest on bit-exact contracts, so the repo carries
+//! its own correctness layer (CI jobs `lint`, `loom`, `miri`, `tsan`):
+//!
+//! * **`swis lint`** (crate `rust/lint`, also `swis lint` on the CLI):
+//!   a dependency-free, comment/string-aware static pass. Non-test
+//!   `.unwrap()`/`.expect(` sites must fit the ratchet-down budgets in
+//!   `lint/unwrap.allow`; every `unsafe` block needs an adjacent
+//!   `// SAFETY:` comment and every `unsafe fn` a `# Safety` doc
+//!   section; `Ordering::Relaxed`/`SeqCst` sites must match the
+//!   justified manifest in `lint/atomics.allow`
+//!   (Acquire/Release/AcqRel are the reviewed default); `Err(format!`/
+//!   `anyhow!`/`bail!` are refused on the public seams (api,
+//!   coordinator, edge, obs — seams speak [`SwisError`]); `todo!`/
+//!   `unimplemented!`/`dbg!` are refused everywhere. `swis lint
+//!   --fix-list` prints the allowlisted debt as a burn-down worklist.
+//!   Amending an allowlist = lowering a number freely, raising one in
+//!   review with a justification comment.
+//! * **Loom models** (`tests/loom_models.rs`, built only under
+//!   `RUSTFLAGS="--cfg loom"`): [`util::sync`] swaps `std::sync` for
+//!   the vendored `loom` shim, which exhaustively explores every
+//!   sequentially-consistent interleaving of the modeled serving
+//!   primitives — admission two-lane push/pop/shed/close, trace-ring
+//!   push vs drain, the edge token bucket race, the rebalancer's
+//!   pool-swap handoff, the obs level gate — plus regression models
+//!   that prove the checker still catches each pinned bug class
+//!   (double-admit, lost count, missed wakeup, ABBA deadlock).
+//! * **Sanitizers**: Miri runs the pointer-heavy single-threaded logic
+//!   (frame codec, planner, container serialize, scalar kernels);
+//!   ThreadSanitizer (nightly, `-Zsanitizer=thread`) runs the
+//!   pool/edge/obs integration suites for races the extracted loom
+//!   models can't see.
+//! * **`swis verify-plan FILE.swisplan`** ([`api::verify_plan_file`]):
+//!   statically checks every container invariant *without executing
+//!   anything* — magic/version/checksum, enum tags, operand shape
+//!   consistency against the layer table, the packed `.swis`
+//!   plane-accounting identity, shift counts within scheme bounds, and
+//!   the tagged trailer (tune shape, tier ladders that name only
+//!   declared variants with monotone MSE ratios). Stricter than the
+//!   loader where CI needs it: what the loader tolerates by silently
+//!   dropping (foreign ladders) is an error here. CI verifies every
+//!   artifact it builds before serving it.
 
 pub mod analysis;
 pub mod api;

@@ -86,8 +86,10 @@ fn run(argv: &[String]) -> Result<()> {
         Some("prob") => cmd_prob(),
         Some("tune") => cmd_tune(&args),
         Some("info") => cmd_info(),
+        Some("lint") => cmd_lint(&args),
+        Some("verify-plan") => cmd_verify_plan(&args),
         Some(other) => {
-            let known = "quantize simulate plan serve loadgen eval tune prob info";
+            let known = "quantize simulate plan serve loadgen eval tune prob info lint verify-plan";
             bail!("unknown subcommand '{other}' (try: {known})")
         }
         None => {
@@ -1023,6 +1025,53 @@ fn cmd_info() -> Result<()> {
             kind,
             cfg.area_mm2()
         );
+    }
+    Ok(())
+}
+
+/// `swis lint [--root DIR] [--fix-list]` — run the repo's static pass
+/// (the `swis-lint` crate) and fail on any finding. The default root is
+/// the working directory; `rust/` is resolved automatically so the
+/// command works from the repo root and from inside the crate alike.
+fn cmd_lint(args: &cli::Args) -> Result<()> {
+    let root = Path::new(args.get_or("root", "."));
+    let rust_dir = swis_lint::resolve_rust_dir(root)
+        .with_context(|| format!("no Rust crate found under '{}'", root.display()))?;
+    let report = swis_lint::run(&rust_dir)
+        .with_context(|| format!("scanning '{}'", rust_dir.display()))?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if args.flag("fix-list") && !report.fix_list.is_empty() {
+        println!("-- fix list ({} entries) --", report.fix_list.len());
+        for item in &report.fix_list {
+            println!("{item}");
+        }
+    }
+    eprintln!(
+        "swis lint: {} files, {} non-test unwrap/expect sites, {} findings",
+        report.files_scanned,
+        report.unwrap_total,
+        report.findings.len()
+    );
+    if report.findings.is_empty() {
+        Ok(())
+    } else {
+        bail!("{} lint findings", report.findings.len())
+    }
+}
+
+/// `swis verify-plan FILE...` — statically verify `.swisplan`
+/// containers (every structural invariant, zero execution). Exits
+/// nonzero on the first malformed container.
+fn cmd_verify_plan(args: &cli::Args) -> Result<()> {
+    let paths: Vec<&String> = args.positional().iter().skip(1).collect();
+    if paths.is_empty() {
+        bail!("usage: swis verify-plan FILE.swisplan [MORE...]");
+    }
+    for p in paths {
+        let check = swis::api::verify_plan_file(Path::new(p))?;
+        println!("{p}: OK — {check}");
     }
     Ok(())
 }

@@ -6,13 +6,13 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::registry::MetricsRegistry;
 use crate::error::{SwisError, SwisResult};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
 
 /// Poll interval of the non-blocking accept loop (also the shutdown
 /// latency bound).
@@ -57,7 +57,8 @@ impl MetricsServer {
     }
 
     fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // Release pairs with the accept loop's Acquire load.
+        self.stop.store(true, Ordering::Release);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -71,7 +72,7 @@ impl Drop for MetricsServer {
 }
 
 fn accept_loop(listener: TcpListener, registry: MetricsRegistry, stop: Arc<AtomicBool>) {
-    while !stop.load(Ordering::SeqCst) {
+    while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _)) => {
                 // serve inline: a scrape is one small read + one write,

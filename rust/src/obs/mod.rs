@@ -37,11 +37,11 @@ pub mod registry;
 pub mod trace;
 
 use std::cell::{Cell, RefCell};
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::error::{SwisError, SwisResult};
+use crate::util::sync::atomic::{AtomicU8, Ordering};
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 /// How much the process observes itself. Ordered: each level includes
 /// everything below it.
@@ -306,7 +306,7 @@ pub struct LayerAgg {
 static GLOBAL: Mutex<Vec<LayerAgg>> = Mutex::new(Vec::new());
 
 fn global_add(label: &str, t: &ExecTally, time_ms: f64) {
-    let mut g = GLOBAL.lock().unwrap();
+    let mut g = lock_unpoisoned(&GLOBAL);
     if let Some(agg) = g.iter_mut().find(|a| a.label == label) {
         agg.tally.add(t);
         agg.time_ms += time_ms;
@@ -318,13 +318,13 @@ fn global_add(label: &str, t: &ExecTally, time_ms: f64) {
 
 /// Snapshot of the process-lifetime per-layer aggregates.
 pub fn global_layers() -> Vec<LayerAgg> {
-    GLOBAL.lock().unwrap().clone()
+    lock_unpoisoned(&GLOBAL).clone()
 }
 
 /// Clear the global registry and this thread's accumulators (benches and
 /// tests isolate their measurements with this).
 pub fn reset() {
-    GLOBAL.lock().unwrap().clear();
+    lock_unpoisoned(&GLOBAL).clear();
     CURRENT.with(|c| c.set(ExecTally::default()));
     FORWARD.with(|f| f.borrow_mut().clear());
 }
@@ -334,7 +334,7 @@ pub fn reset() {
 /// threads never observe each other's level.
 #[cfg(test)]
 pub(crate) fn test_level_guard() -> std::sync::MutexGuard<'static, ()> {
-    static GUARD: Mutex<()> = Mutex::new(());
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
     GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 

@@ -8,12 +8,13 @@
 //! ([`crate::coordinator::Metrics`] for the pool counters, the per-layer
 //! families below for the kernel tallies).
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use super::trace::RequestTrace;
 use super::LayerAgg;
 use crate::coordinator::MetricsSnapshot;
 use crate::util::json::Json;
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 /// Human label of an admission lane index (`Priority::lane()` order).
 pub fn lane_label(lane: usize) -> &'static str {
@@ -48,7 +49,7 @@ impl MetricsRegistry {
 
     /// Install the latest pool metrics snapshot + per-lane queue depths.
     pub fn update_pool(&self, snap: MetricsSnapshot, depths: [usize; 2]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.pool = Some(snap);
         g.depths = depths;
     }
@@ -56,7 +57,7 @@ impl MetricsRegistry {
     /// Render the full exposition page.
     pub fn render(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let g = self.inner.lock().unwrap();
+        let g = lock_unpoisoned(&self.inner);
         push_metric(
             &mut out,
             "swis_obs_level",

@@ -11,9 +11,10 @@
 //! always holds.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{lock_unpoisoned, Mutex};
 
 /// Process-unique request trace identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -187,7 +188,7 @@ impl TraceRing {
     }
 
     pub fn push(&self, t: RequestTrace) {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.inner);
         if q.len() == self.cap {
             q.pop_front();
         }
@@ -195,7 +196,7 @@ impl TraceRing {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock_unpoisoned(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -204,7 +205,7 @@ impl TraceRing {
 
     /// Take every buffered trace (oldest first).
     pub fn drain(&self) -> Vec<RequestTrace> {
-        self.inner.lock().unwrap().drain(..).collect()
+        lock_unpoisoned(&self.inner).drain(..).collect()
     }
 }
 

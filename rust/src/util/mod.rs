@@ -10,4 +10,5 @@ pub mod json;
 pub mod npy;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod tensor;

@@ -1,0 +1,40 @@
+//! Sync-primitive facade: `std::sync` normally, `loom`'s modeled
+//! primitives under `--cfg loom`.
+//!
+//! The concurrency modules the loom models exercise (admission queue,
+//! trace ring, edge token bucket, obs level gate, edge server
+//! stop/rebalance flags) import their primitives from here instead of
+//! `std::sync`, so `RUSTFLAGS="--cfg loom" cargo test --test
+//! loom_models` swaps in the model checker's instrumented types without
+//! touching the call sites. In a normal build every re-export below is
+//! exactly the `std` type — zero runtime difference.
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(loom)]
+pub use loom::thread;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(not(loom))]
+pub use std::thread;
+
+pub mod atomic {
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+}
+
+/// Lock a mutex, recovering the data from a poisoned lock instead of
+/// panicking.
+///
+/// Every shared structure in the serving path guards plain data (queues,
+/// rings, maps) whose invariants hold between operations: a panic in one
+/// holder cannot leave them half-updated in a way later readers
+/// mis-handle, so continuing past poison is strictly better than
+/// cascading the panic into every other request thread.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

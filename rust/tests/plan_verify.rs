@@ -1,0 +1,229 @@
+//! `swis verify-plan` against REAL containers: every plan the engine
+//! can emit (v1 base, v2 tuned, v3 tiered) must pass the static
+//! verifier, and corrupted variants of those same bytes must be
+//! rejected with typed [`SwisError::Plan`] errors — including
+//! corruptions the *loader* tolerates by silently dropping data
+//! (foreign tier ladders), which CI must treat as broken artifacts.
+
+use std::sync::Arc;
+
+use swis::api::{
+    verify_plan_bytes, verify_plan_file, Engine, EngineConfig, EnginePlan, SwisError, TierPolicy,
+    TuneParams, VariantSpec,
+};
+
+/// FNV-1a 64 over the body — the container's checksum, mirrored here so
+/// tampering tests can re-stamp a *valid* checksum and prove the
+/// verifier's structural checks fire, not just the hash.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Re-stamp the trailing checksum after byte surgery on the body.
+fn restamp(bytes: &mut Vec<u8>) {
+    let body = bytes.len() - 8;
+    let sum = fnv1a64(&bytes[..body]);
+    bytes[body..].copy_from_slice(&sum.to_le_bytes());
+}
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig::for_net("tinycnn")
+        .unwrap()
+        .variant(VariantSpec::fp32())
+        .variant(VariantSpec::swis(4.0, 4))
+        .variant(VariantSpec::swis(3.0, 4))
+        .variant(VariantSpec::swis(2.0, 4))
+        .threads(1)
+}
+
+fn err_string(e: SwisError) -> String {
+    assert!(matches!(e, SwisError::Plan(_)), "want a typed Plan error, got {e:?}");
+    format!("{e}")
+}
+
+#[test]
+fn verifier_accepts_every_engine_emitted_version() {
+    let mut plan = Engine::prepare(base_cfg()).unwrap();
+
+    // v1: base container
+    let v1 = plan.to_bytes().unwrap();
+    let check = verify_plan_bytes(&v1).unwrap();
+    assert_eq!(check.version, 1);
+    assert_eq!(check.net, "tinycnn");
+    assert_eq!(check.n_variants, 4);
+    assert!(check.n_layers > 0);
+    assert!(check.dense_parts > 0, "fp32 variant carries dense parts");
+    assert!(check.packed_parts > 0, "swis variants carry packed parts");
+    assert!(check.packed_payload_bytes > 0);
+    assert!(!check.has_tune && !check.has_tiers);
+
+    // v2: tuned trailer
+    plan.set_tune_params(TuneParams { row_block: 16, group_chunk: 4, ..TuneParams::host_default() });
+    let v2 = plan.to_bytes().unwrap();
+    let check = verify_plan_bytes(&v2).unwrap();
+    assert_eq!(check.version, 2);
+    assert!(check.has_tune && !check.has_tiers);
+
+    // v3: measured precision ladder
+    let policy = TierPolicy::new(
+        vec!["swis@4".into(), "swis@3".into(), "swis@2".into()],
+        vec![1.0, 3.5, 20.0],
+        2,
+    )
+    .unwrap();
+    plan.set_tier_policy(policy).unwrap();
+    let v3 = plan.to_bytes().unwrap();
+    let check = verify_plan_bytes(&v3).unwrap();
+    assert_eq!(check.version, 3);
+    assert!(check.has_tune && check.has_tiers);
+
+    // the loader agrees with the verifier on all three
+    for bytes in [&v1, &v2, &v3] {
+        EnginePlan::from_bytes(bytes).unwrap();
+    }
+}
+
+#[test]
+fn verifier_checks_files_on_disk() {
+    let dir = std::env::temp_dir().join(format!("swis_verify_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.swisplan");
+    let plan = Engine::prepare(base_cfg()).unwrap();
+    plan.save(&path).unwrap();
+    let check = verify_plan_file(&path).unwrap();
+    assert_eq!(check.net, "tinycnn");
+    // missing file is a typed Io error, not a panic
+    assert!(matches!(
+        verify_plan_file(&dir.join("absent.swisplan")).unwrap_err(),
+        SwisError::Io(_)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn verifier_rejects_bit_flips_everywhere() {
+    let plan = Engine::prepare(base_cfg()).unwrap();
+    let bytes = plan.to_bytes().unwrap();
+    // flip one bit at positions spread across the whole container: the
+    // checksum (or an earlier structural check) must catch every one
+    let stride = (bytes.len() / 23).max(1);
+    for pos in (0..bytes.len()).step_by(stride) {
+        let mut b = bytes.clone();
+        b[pos] ^= 0x10;
+        assert!(
+            verify_plan_bytes(&b).is_err(),
+            "single-bit flip at byte {pos}/{} must be rejected",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn verifier_rejects_version_tampering_even_with_a_valid_checksum() {
+    let plan = Engine::prepare(base_cfg()).unwrap();
+    let bytes = plan.to_bytes().unwrap();
+
+    // out-of-window version, checksum left stale: rejected either way
+    let mut b = bytes.clone();
+    b[8] = 99;
+    assert!(verify_plan_bytes(&b).is_err());
+
+    // out-of-window version WITH a re-stamped checksum: the version
+    // window itself must reject — this can't hide behind the hash
+    let mut b = bytes.clone();
+    b[8] = 99;
+    restamp(&mut b);
+    let msg = err_string(verify_plan_bytes(&b).unwrap_err());
+    assert!(msg.contains("version"), "got: {msg}");
+
+    // claiming v3 over an untiered body (valid checksum): a tiered
+    // version without its tier section is a lie about the contents
+    let mut b = bytes.clone();
+    b[8] = 3;
+    restamp(&mut b);
+    assert!(
+        verify_plan_bytes(&b).is_err(),
+        "version 3 without a tier section must be rejected"
+    );
+}
+
+#[test]
+fn verifier_rejects_foreign_ladders_the_loader_silently_drops() {
+    let mut plan = Engine::prepare(base_cfg()).unwrap();
+    let policy = TierPolicy::new(
+        vec!["swis@4".into(), "swis@3".into(), "swis@2".into()],
+        vec![1.0, 3.5, 20.0],
+        2,
+    )
+    .unwrap();
+    plan.set_tier_policy(policy).unwrap();
+    let bytes = plan.to_bytes().unwrap();
+    verify_plan_bytes(&bytes).unwrap();
+
+    // byte surgery: rewrite the LAST "swis@4" occurrence — that's the
+    // tier-section copy, the variant-table copy comes earlier — into a
+    // same-length name no variant declares, then re-stamp the checksum
+    let needle = b"swis@4";
+    let pos = bytes
+        .windows(needle.len())
+        .rposition(|w| w == needle)
+        .expect("tier section must carry the tier-0 name");
+    let mut b = bytes.clone();
+    b[pos..pos + needle.len()].copy_from_slice(b"nope@4");
+    restamp(&mut b);
+
+    // the LOADER shrugs: it drops the foreign ladder and loads anyway
+    let loaded = EnginePlan::from_bytes(&b).unwrap();
+    assert!(loaded.tier_policy().is_none(), "loader silently drops foreign ladders");
+
+    // the VERIFIER must refuse: a CI artifact whose ladder names a
+    // variant the plan doesn't carry is broken, not 'mostly fine'
+    let msg = err_string(verify_plan_bytes(&b).unwrap_err());
+    assert!(msg.contains("nope@4"), "the error must name the foreign tier: {msg}");
+}
+
+#[test]
+fn verifier_rejects_truncation_and_trailing_bytes() {
+    let plan = Engine::prepare(base_cfg()).unwrap();
+    let bytes = plan.to_bytes().unwrap();
+
+    for cut in [0, 7, 9, 25, bytes.len() / 3, bytes.len() - 1] {
+        assert!(
+            verify_plan_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} must be rejected"
+        );
+    }
+
+    // smuggle an extra body byte in front of the checksum and re-stamp:
+    // the hash passes, the walk must still notice unconsumed bytes
+    let mut b = bytes.clone();
+    b.insert(bytes.len() - 8, 0x00);
+    restamp(&mut b);
+    let msg = err_string(verify_plan_bytes(&b).unwrap_err());
+    assert!(msg.contains("trailing") || msg.contains("byte"), "got: {msg}");
+}
+
+#[test]
+fn verifier_survives_fuzzed_garbage() {
+    // deterministic pseudo-random buffers: never panic, always a typed
+    // error (the verifier is exposed to untrusted files on the CLI)
+    let mut x: u64 = 0x243f6a8885a308d3;
+    for len in [0usize, 1, 8, 9, 26, 64, 512] {
+        let mut buf = Vec::with_capacity(len);
+        for _ in 0..len {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            buf.push((x >> 33) as u8);
+        }
+        assert!(verify_plan_bytes(&buf).is_err(), "garbage of len {len} must error");
+    }
+    // a valid magic prefix over garbage must still die cleanly
+    let mut buf = b"SWISPLAN".to_vec();
+    buf.extend_from_slice(&[0xAB; 40]);
+    assert!(verify_plan_bytes(&buf).is_err());
+}

@@ -1,0 +1,945 @@
+//! Offline shim of the `loom` model checker.
+//!
+//! The build vendors no registry crates, so this crate provides the
+//! subset of loom's API the SWIS concurrency models need, implemented as
+//! an **exhaustive sequential-consistency explorer** over real OS
+//! threads:
+//!
+//! * [`model`] runs a closure repeatedly, enumerating every interleaving
+//!   of its *schedule points* (atomic ops, lock acquisitions, condvar
+//!   waits/timeouts, joins) by depth-first search over a decision trace.
+//! * Exactly one model thread runs at a time (a baton passed through a
+//!   condvar), so every execution is a deterministic serialization and
+//!   replaying a trace prefix is exact.
+//! * Deadlocks (every unfinished thread blocked, no timed waiter left to
+//!   fire) abort the execution with a panic, as do model-thread panics —
+//!   both fail the enclosing test with the first real failure message.
+//!
+//! **Scope, honestly stated.** Unlike real loom this shim explores
+//! sequentially-consistent executions only: `Ordering` arguments are
+//! accepted and forwarded to the underlying std atomics but do not
+//! generate weak-memory behaviors. It therefore catches lost updates,
+//! double drops, missed wakeups, interleaving bugs visible under SC, and
+//! deadlocks — but not bugs that *require* non-SC reordering to
+//! manifest. When networked builds are available, swap this path
+//! dependency for the real `loom` crate; the API subset below is
+//! call-compatible.
+//!
+//! Outside [`model`] every primitive degrades to its `std` counterpart
+//! (no schedule points, real blocking), so a `--cfg loom` build of the
+//! parent crate still behaves normally on code paths no model drives.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex};
+
+/// Hard cap on executions per [`model`] call — a runaway model (too many
+/// schedule points) fails loudly instead of spinning forever.
+const MAX_EXECUTIONS: usize = 500_000;
+/// Hard cap on decisions within one execution.
+const MAX_DECISIONS: usize = 20_000;
+
+const ABORT_MSG: &str = "loom shim: execution aborted";
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    Runnable,
+    /// Waiting for the mutex with this id to unlock.
+    BlockedMutex(usize),
+    /// Waiting (untimed) on the condvar with this id.
+    BlockedCond(usize),
+    /// Waiting on the condvar with this id, but eligible to time out
+    /// when no runnable thread remains.
+    TimedCond(usize),
+    /// Waiting for the thread with this tid to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct ExecState {
+    threads: Vec<Run>,
+    /// Set when a `TimedCond` waiter was released by timeout (vs notify).
+    timed_out: Vec<bool>,
+    /// The tid currently holding the baton.
+    current: usize,
+    /// DFS decision trace: (choice taken, number of options).
+    trace: Vec<(usize, usize)>,
+    depth: usize,
+    /// Deadlock or sibling panic: every parked thread unwinds.
+    aborted: bool,
+    /// A deadlock was detected (possibly during teardown).
+    deadlocked: bool,
+}
+
+/// Outcome of one scheduling decision.
+enum Chosen {
+    /// `current` now names the next thread to run.
+    Picked,
+    /// Every registered thread has finished.
+    AllFinished,
+    /// No runnable thread, no timed waiter, unfinished threads remain.
+    Deadlock,
+    /// The decision trace outgrew [`MAX_DECISIONS`].
+    TooDeep,
+}
+
+struct Controller {
+    st: StdMutex<ExecState>,
+    cv: StdCondvar,
+    panic_msg: StdMutex<Option<String>>,
+}
+
+impl Controller {
+    fn new(trace: Vec<(usize, usize)>) -> Controller {
+        Controller {
+            st: StdMutex::new(ExecState {
+                threads: vec![Run::Runnable],
+                timed_out: vec![false],
+                current: 0,
+                trace,
+                depth: 0,
+                aborted: false,
+                deadlocked: false,
+            }),
+            cv: StdCondvar::new(),
+            panic_msg: StdMutex::new(None),
+        }
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        st.threads.push(Run::Runnable);
+        st.timed_out.push(false);
+        st.threads.len() - 1
+    }
+
+    /// Keep the FIRST real failure; teardown panics ([`ABORT_MSG`]) are
+    /// noise and never recorded.
+    fn record_panic(&self, msg: String) {
+        if msg.starts_with(ABORT_MSG) {
+            return;
+        }
+        let mut p = self.panic_msg.lock().unwrap_or_else(|e| e.into_inner());
+        if p.is_none() {
+            *p = Some(msg);
+        }
+    }
+
+    fn panic_note(&self) -> String {
+        match self.panic_msg.lock().unwrap_or_else(|e| e.into_inner()).as_ref() {
+            Some(m) => format!(" (first failure: {m})"),
+            None => String::new(),
+        }
+    }
+
+    /// Wake every thread parked on `mx_id` so they re-contend the lock.
+    fn wake_mutex(&self, mx_id: usize) {
+        let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        for r in st.threads.iter_mut() {
+            if *r == Run::BlockedMutex(mx_id) {
+                *r = Run::Runnable;
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Wake condvar waiters (all, or the lowest-tid one). Notified
+    /// waiters are marked not-timed-out.
+    fn wake_cond(&self, cv_id: usize, all: bool) {
+        let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        for j in 0..st.threads.len() {
+            if st.threads[j] == Run::BlockedCond(cv_id) || st.threads[j] == Run::TimedCond(cv_id)
+            {
+                st.threads[j] = Run::Runnable;
+                st.timed_out[j] = false;
+                if !all {
+                    break;
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Read-and-reset the timed-out flag after a timed wait returns.
+    fn take_timed_out(&self, tid: usize) -> bool {
+        let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        let v = st.timed_out[tid];
+        st.timed_out[tid] = false;
+        v
+    }
+
+    fn wait_all_finished(&self) {
+        let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        while st.threads.iter().any(|r| *r != Run::Finished) {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn take_trace(&self) -> Vec<(usize, usize)> {
+        self.st.lock().unwrap_or_else(|e| e.into_inner()).trace.clone()
+    }
+
+    fn deadlocked(&self) -> bool {
+        self.st.lock().unwrap_or_else(|e| e.into_inner()).deadlocked
+    }
+}
+
+#[derive(Clone)]
+struct Ctx {
+    ctrl: StdArc<Controller>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Choose the next thread to run (replaying or extending the DFS
+/// trace). Fires pending condvar timeouts when nothing else can run.
+/// Never panics — callers translate the outcome.
+fn pick_next(st: &mut ExecState) -> Chosen {
+    loop {
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r == Run::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            let timed: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| matches!(r, Run::TimedCond(_)))
+                .map(|(i, _)| i)
+                .collect();
+            if !timed.is_empty() {
+                for t in timed {
+                    st.threads[t] = Run::Runnable;
+                    st.timed_out[t] = true;
+                }
+                continue;
+            }
+            if st.threads.iter().any(|r| *r != Run::Finished) {
+                return Chosen::Deadlock;
+            }
+            return Chosen::AllFinished;
+        }
+        let d = st.depth;
+        if d >= MAX_DECISIONS {
+            return Chosen::TooDeep;
+        }
+        let choice = if d < st.trace.len() {
+            st.trace[d].0
+        } else {
+            st.trace.push((0, 0));
+            0
+        };
+        st.trace[d].1 = runnable.len();
+        st.depth = d + 1;
+        let next = runnable[choice.min(runnable.len() - 1)];
+        st.current = next;
+        return Chosen::Picked;
+    }
+}
+
+/// The heart of the explorer: transition the calling thread to
+/// `new_state`, pick who runs next per the DFS trace, and park until the
+/// baton comes back. Must only be called by live model threads (finish
+/// goes through [`finish_thread`], which never panics).
+fn schedule(ctrl: &StdArc<Controller>, tid: usize, new_state: Run) {
+    debug_assert!(new_state != Run::Finished, "finish via finish_thread");
+    let mut st = ctrl.st.lock().unwrap_or_else(|e| e.into_inner());
+    if st.aborted {
+        drop(st);
+        panic!("{ABORT_MSG}{}", ctrl.panic_note());
+    }
+    st.threads[tid] = new_state;
+    // A join on an already-finished thread must not block forever.
+    if let Run::BlockedJoin(t) = new_state {
+        if st.threads[t] == Run::Finished {
+            st.threads[tid] = Run::Runnable;
+        }
+    }
+    match pick_next(&mut st) {
+        Chosen::Picked => {
+            ctrl.cv.notify_all();
+        }
+        Chosen::AllFinished => {
+            // unreachable: the caller itself is unfinished
+            ctrl.cv.notify_all();
+            return;
+        }
+        Chosen::Deadlock => {
+            st.aborted = true;
+            st.deadlocked = true;
+            ctrl.cv.notify_all();
+            let note = ctrl.panic_note();
+            drop(st);
+            panic!("loom shim: deadlock — every unfinished thread is blocked{note}");
+        }
+        Chosen::TooDeep => {
+            st.aborted = true;
+            ctrl.cv.notify_all();
+            drop(st);
+            panic!("loom shim: execution exceeded {MAX_DECISIONS} decisions — shrink the model");
+        }
+    }
+    while !(st.current == tid && st.threads[tid] == Run::Runnable) {
+        if st.aborted {
+            drop(st);
+            panic!("{ABORT_MSG}{}", ctrl.panic_note());
+        }
+        st = ctrl.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// Record an n-way data decision (no thread switch) — used for the
+/// notify-vs-timeout branch of timed condvar waits.
+fn choose(ctrl: &StdArc<Controller>, n: usize) -> usize {
+    let mut st = ctrl.st.lock().unwrap_or_else(|e| e.into_inner());
+    let d = st.depth;
+    if d >= MAX_DECISIONS {
+        st.aborted = true;
+        ctrl.cv.notify_all();
+        drop(st);
+        panic!("loom shim: execution exceeded {MAX_DECISIONS} decisions — shrink the model");
+    }
+    let c = if d < st.trace.len() {
+        st.trace[d].0
+    } else {
+        st.trace.push((0, 0));
+        0
+    };
+    st.trace[d].1 = n;
+    st.depth = d + 1;
+    c.min(n - 1)
+}
+
+/// Park a freshly spawned model thread until the scheduler hands it the
+/// baton for the first time.
+fn park_for_baton(ctrl: &StdArc<Controller>, tid: usize) {
+    let mut st = ctrl.st.lock().unwrap_or_else(|e| e.into_inner());
+    while !(st.current == tid && st.threads[tid] == Run::Runnable) {
+        if st.aborted {
+            drop(st);
+            panic!("{ABORT_MSG}{}", ctrl.panic_note());
+        }
+        st = ctrl.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// Mark a thread finished and hand the baton on. NEVER panics (it runs
+/// on unwind paths); deadlocks discovered here are recorded and
+/// reported by [`model`] after teardown.
+fn finish_thread(ctrl: &StdArc<Controller>, tid: usize) {
+    let mut st = ctrl.st.lock().unwrap_or_else(|e| e.into_inner());
+    st.threads[tid] = Run::Finished;
+    for j in 0..st.threads.len() {
+        if st.threads[j] == Run::BlockedJoin(tid) {
+            st.threads[j] = Run::Runnable;
+        }
+    }
+    match pick_next(&mut st) {
+        Chosen::Picked | Chosen::AllFinished => {}
+        Chosen::Deadlock => {
+            st.aborted = true;
+            st.deadlocked = true;
+        }
+        Chosen::TooDeep => {
+            st.aborted = true;
+        }
+    }
+    ctrl.cv.notify_all();
+}
+
+fn payload_msg(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One model at a time across the whole process: `cargo test` runs test
+/// functions on multiple threads, and the DFS must not interleave two
+/// models' threads.
+fn model_lock() -> &'static StdMutex<()> {
+    static LOCK: StdMutex<()> = StdMutex::new(());
+    &LOCK
+}
+
+/// Advance the DFS: bump the last decision that still has unexplored
+/// options, dropping everything after it. `None` = space exhausted.
+fn next_trace(mut t: Vec<(usize, usize)>) -> Option<Vec<(usize, usize)>> {
+    while let Some(&(c, n)) = t.last() {
+        if c + 1 < n {
+            let last = t.len() - 1;
+            t[last].0 = c + 1;
+            return Some(t);
+        }
+        t.pop();
+    }
+    None
+}
+
+/// Exhaustively explore every schedule-point interleaving of `f`.
+///
+/// `f` runs once per execution; threads it spawns through
+/// [`thread::spawn`] join the exploration. Panics (assertion failures,
+/// deadlocks) in any model thread fail the call with the first real
+/// failure message.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _g = model_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let mut trace: Vec<(usize, usize)> = Vec::new();
+    let mut execs = 0usize;
+    loop {
+        execs += 1;
+        if execs > MAX_EXECUTIONS {
+            panic!("loom shim: model exceeded {MAX_EXECUTIONS} executions — shrink it");
+        }
+        let ctrl = StdArc::new(Controller::new(trace));
+        CTX.with(|c| *c.borrow_mut() = Some(Ctx { ctrl: ctrl.clone(), tid: 0 }));
+        let res = catch_unwind(AssertUnwindSafe(&f));
+        if let Err(p) = &res {
+            ctrl.record_panic(payload_msg(p));
+            // Unpark siblings so they unwind instead of hanging.
+            let mut st = ctrl.st.lock().unwrap_or_else(|e| e.into_inner());
+            st.aborted = true;
+            ctrl.cv.notify_all();
+            drop(st);
+        }
+        finish_thread(&ctrl, 0);
+        ctrl.wait_all_finished();
+        CTX.with(|c| *c.borrow_mut() = None);
+        // Report priority: first real failure from ANY thread, then the
+        // main thread's own payload, then teardown-detected deadlocks.
+        if let Some(m) =
+            ctrl.panic_msg.lock().unwrap_or_else(|e| e.into_inner()).take()
+        {
+            panic!("loom shim: model failed: {m}");
+        }
+        if let Err(p) = res {
+            resume_unwind(p);
+        }
+        if ctrl.deadlocked() {
+            panic!("loom shim: deadlock — unfinished threads were all blocked at teardown");
+        }
+        trace = match next_trace(ctrl.take_trace()) {
+            Some(t) => t,
+            None => break,
+        };
+    }
+}
+
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T> {
+        model: Option<(usize, StdArc<Controller>)>,
+        inner: Option<std::thread::JoinHandle<T>>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(mut self) -> std::thread::Result<T> {
+            if let Some((target, ctrl)) = self.model.take() {
+                let me = ctx().expect("loom shim: join from a non-model thread");
+                schedule(&ctrl, me.tid, Run::BlockedJoin(target));
+            }
+            self.inner.take().expect("join handle already consumed").join()
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match ctx() {
+            None => JoinHandle { model: None, inner: Some(std::thread::spawn(f)) },
+            Some(c) => {
+                let tid = c.ctrl.register_thread();
+                let ctrl = c.ctrl.clone();
+                let inner = std::thread::Builder::new()
+                    .name(format!("loom-{tid}"))
+                    .spawn(move || {
+                        CTX.with(|x| {
+                            *x.borrow_mut() = Some(Ctx { ctrl: ctrl.clone(), tid })
+                        });
+                        let c2 = ctrl.clone();
+                        let r = catch_unwind(AssertUnwindSafe(move || {
+                            park_for_baton(&c2, tid);
+                            f()
+                        }));
+                        match r {
+                            Ok(v) => {
+                                finish_thread(&ctrl, tid);
+                                CTX.with(|x| *x.borrow_mut() = None);
+                                v
+                            }
+                            Err(p) => {
+                                ctrl.record_panic(payload_msg(&p));
+                                {
+                                    let mut st = ctrl
+                                        .st
+                                        .lock()
+                                        .unwrap_or_else(|e| e.into_inner());
+                                    st.aborted = true;
+                                    ctrl.cv.notify_all();
+                                }
+                                finish_thread(&ctrl, tid);
+                                CTX.with(|x| *x.borrow_mut() = None);
+                                resume_unwind(p)
+                            }
+                        }
+                    })
+                    .expect("loom shim: spawning model thread");
+                JoinHandle { model: Some((tid, c.ctrl.clone())), inner: Some(inner) }
+            }
+        }
+    }
+
+    /// A pure schedule point.
+    pub fn yield_now() {
+        match ctx() {
+            Some(c) => schedule(&c.ctrl, c.tid, Run::Runnable),
+            None => std::thread::yield_now(),
+        }
+    }
+}
+
+pub mod sync {
+    use super::*;
+    use std::sync::{LockResult, PoisonError, TryLockError};
+    use std::time::Duration;
+
+    pub use std::sync::Arc;
+
+    /// Modeled mutex: inside a model, acquisition is a schedule point and
+    /// contention parks the thread in the explorer (never in the OS), so
+    /// the single-baton scheduler cannot self-deadlock. Outside a model
+    /// it is a plain `std::sync::Mutex`.
+    pub struct Mutex<T> {
+        inner: StdMutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Mutex<T> {
+            Mutex { inner: StdMutex::new(t) }
+        }
+
+        fn id(&self) -> usize {
+            self as *const Mutex<T> as usize
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            match ctx() {
+                None => match self.inner.lock() {
+                    Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g) }),
+                    Err(pe) => Err(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(pe.into_inner()),
+                    })),
+                },
+                Some(c) => loop {
+                    schedule(&c.ctrl, c.tid, Run::Runnable);
+                    match self.inner.try_lock() {
+                        Ok(g) => return Ok(MutexGuard { lock: self, inner: Some(g) }),
+                        Err(TryLockError::Poisoned(pe)) => {
+                            return Err(PoisonError::new(MutexGuard {
+                                lock: self,
+                                inner: Some(pe.into_inner()),
+                            }))
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            schedule(&c.ctrl, c.tid, Run::BlockedMutex(self.id()));
+                        }
+                    }
+                },
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<'a, T> MutexGuard<'a, T> {
+        /// Dismantle without running the unlock-wake in `Drop`.
+        fn into_parts(mut self) -> (&'a Mutex<T>, Option<std::sync::MutexGuard<'a, T>>) {
+            let lock = self.lock;
+            let inner = self.inner.take();
+            std::mem::forget(self);
+            (lock, inner)
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard dismantled")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard dismantled")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            let id = self.lock.id();
+            drop(self.inner.take());
+            if let Some(c) = ctx() {
+                c.ctrl.wake_mutex(id);
+            }
+        }
+    }
+
+    /// Own the timed-out bit (std's `WaitTimeoutResult` has no public
+    /// constructor, and the model must fabricate both outcomes).
+    #[derive(Clone, Copy, Debug)]
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    pub struct Condvar {
+        inner: StdCondvar,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Condvar {
+            Condvar { inner: StdCondvar::new() }
+        }
+
+        fn id(&self) -> usize {
+            self as *const Condvar as usize
+        }
+
+        pub fn notify_all(&self) {
+            match ctx() {
+                Some(c) => c.ctrl.wake_cond(self.id(), true),
+                None => self.inner.notify_all(),
+            }
+        }
+
+        pub fn notify_one(&self) {
+            match ctx() {
+                Some(c) => c.ctrl.wake_cond(self.id(), false),
+                None => self.inner.notify_one(),
+            }
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            match ctx() {
+                None => {
+                    let (lock, inner) = guard.into_parts();
+                    match self.inner.wait(inner.expect("guard dismantled")) {
+                        Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+                        Err(pe) => Err(PoisonError::new(MutexGuard {
+                            lock,
+                            inner: Some(pe.into_inner()),
+                        })),
+                    }
+                }
+                Some(c) => {
+                    let (lock, inner) = guard.into_parts();
+                    drop(inner); // unlock
+                    c.ctrl.wake_mutex(lock.id());
+                    schedule(&c.ctrl, c.tid, Run::BlockedCond(self.id()));
+                    lock.lock()
+                }
+            }
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            match ctx() {
+                None => {
+                    let (lock, inner) = guard.into_parts();
+                    match self.inner.wait_timeout(inner.expect("guard dismantled"), dur) {
+                        Ok((g, r)) => Ok((
+                            MutexGuard { lock, inner: Some(g) },
+                            WaitTimeoutResult(r.timed_out()),
+                        )),
+                        Err(pe) => {
+                            let (g, r) = pe.into_inner();
+                            Err(PoisonError::new((
+                                MutexGuard { lock, inner: Some(g) },
+                                WaitTimeoutResult(r.timed_out()),
+                            )))
+                        }
+                    }
+                }
+                Some(c) => {
+                    // Two explored branches: the timeout beats any
+                    // notification (spurious-timeout), or the thread
+                    // blocks until notified — with the no-runnable
+                    // fallback firing the timeout to avoid false
+                    // deadlocks when no notifier exists.
+                    let branch = choose(&c.ctrl, 2);
+                    let (lock, inner) = guard.into_parts();
+                    drop(inner); // unlock
+                    c.ctrl.wake_mutex(lock.id());
+                    let timed_out = if branch == 0 {
+                        schedule(&c.ctrl, c.tid, Run::TimedCond(self.id()));
+                        c.ctrl.take_timed_out(c.tid)
+                    } else {
+                        schedule(&c.ctrl, c.tid, Run::Runnable);
+                        true
+                    };
+                    match lock.lock() {
+                        Ok(g) => Ok((g, WaitTimeoutResult(timed_out))),
+                        Err(pe) => Err(PoisonError::new((
+                            pe.into_inner(),
+                            WaitTimeoutResult(timed_out),
+                        ))),
+                    }
+                }
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+
+    pub mod atomic {
+        use super::super::{ctx, schedule, Run};
+
+        pub use std::sync::atomic::Ordering;
+
+        fn point() {
+            if let Some(c) = ctx() {
+                schedule(&c.ctrl, c.tid, Run::Runnable);
+            }
+        }
+
+        macro_rules! atomic_int {
+            ($name:ident, $std:ty, $t:ty) => {
+                pub struct $name($std);
+
+                impl $name {
+                    pub const fn new(v: $t) -> Self {
+                        Self(<$std>::new(v))
+                    }
+
+                    pub fn load(&self, o: Ordering) -> $t {
+                        point();
+                        self.0.load(o)
+                    }
+
+                    pub fn store(&self, v: $t, o: Ordering) {
+                        point();
+                        self.0.store(v, o)
+                    }
+
+                    pub fn swap(&self, v: $t, o: Ordering) -> $t {
+                        point();
+                        self.0.swap(v, o)
+                    }
+
+                    pub fn fetch_add(&self, v: $t, o: Ordering) -> $t {
+                        point();
+                        self.0.fetch_add(v, o)
+                    }
+
+                    pub fn fetch_sub(&self, v: $t, o: Ordering) -> $t {
+                        point();
+                        self.0.fetch_sub(v, o)
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $t,
+                        new: $t,
+                        ok: Ordering,
+                        err: Ordering,
+                    ) -> Result<$t, $t> {
+                        point();
+                        self.0.compare_exchange(cur, new, ok, err)
+                    }
+                }
+
+                impl std::fmt::Debug for $name {
+                    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                        self.0.fmt(f)
+                    }
+                }
+            };
+        }
+
+        atomic_int!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+        atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+        atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+        pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+        impl AtomicBool {
+            pub const fn new(v: bool) -> AtomicBool {
+                AtomicBool(std::sync::atomic::AtomicBool::new(v))
+            }
+
+            pub fn load(&self, o: Ordering) -> bool {
+                point();
+                self.0.load(o)
+            }
+
+            pub fn store(&self, v: bool, o: Ordering) {
+                point();
+                self.0.store(v, o)
+            }
+
+            pub fn swap(&self, v: bool, o: Ordering) -> bool {
+                point();
+                self.0.swap(v, o)
+            }
+        }
+
+        impl std::fmt::Debug for AtomicBool {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                self.0.fmt(f)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use std::collections::HashSet;
+    use std::sync::Mutex as StdMutex;
+
+    /// Mutex-protected increments can never lose an update.
+    #[test]
+    fn mutexed_counter_is_always_two() {
+        super::model(|| {
+            let n = Arc::new(Mutex::new(0usize));
+            let n2 = Arc::clone(&n);
+            let h = super::thread::spawn(move || {
+                let mut g = n2.lock().unwrap();
+                *g += 1;
+            });
+            {
+                let mut g = n.lock().unwrap();
+                *g += 1;
+            }
+            h.join().unwrap();
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+    }
+
+    /// A load/store (non-RMW) increment race MUST exhibit the lost
+    /// update under exhaustive exploration — this is the test that the
+    /// explorer actually explores.
+    #[test]
+    fn exploration_finds_the_lost_update() {
+        let outcomes: &'static StdMutex<HashSet<usize>> =
+            Box::leak(Box::new(StdMutex::new(HashSet::new())));
+        super::model(move || {
+            let a = Arc::new(AtomicUsize::new(0));
+            let a2 = Arc::clone(&a);
+            let h = super::thread::spawn(move || {
+                let v = a2.load(Ordering::SeqCst);
+                a2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = a.load(Ordering::SeqCst);
+            a.store(v + 1, Ordering::SeqCst);
+            h.join().unwrap();
+            outcomes.lock().unwrap().insert(a.load(Ordering::SeqCst));
+        });
+        let seen = outcomes.lock().unwrap();
+        assert!(seen.contains(&2), "sequential outcome missing: {seen:?}");
+        assert!(seen.contains(&1), "lost-update interleaving not explored: {seen:?}");
+    }
+
+    /// ABBA lock ordering deadlocks; the explorer must report it rather
+    /// than hang.
+    #[test]
+    fn deadlock_is_detected() {
+        let r = std::panic::catch_unwind(|| {
+            super::model(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let h = super::thread::spawn(move || {
+                    let _ga = a2.lock().unwrap();
+                    let _gb = b2.lock().unwrap();
+                });
+                let gb = b.lock().unwrap();
+                let ga = a.lock().unwrap();
+                drop(ga);
+                drop(gb);
+                h.join().unwrap();
+            });
+        });
+        assert!(r.is_err(), "ABBA deadlock went undetected");
+    }
+
+    /// Condvar handoff: consumer waits until the producer publishes.
+    /// Every interleaving must deliver the value exactly once.
+    #[test]
+    fn condvar_handoff_never_loses_the_wakeup() {
+        super::model(|| {
+            let slot = Arc::new((Mutex::new(None::<u32>), Condvar::new()));
+            let s2 = Arc::clone(&slot);
+            let h = super::thread::spawn(move || {
+                let (m, cv) = &*s2;
+                let mut g = m.lock().unwrap();
+                *g = Some(7);
+                drop(g);
+                cv.notify_all();
+            });
+            let (m, cv) = &*slot;
+            let mut g = m.lock().unwrap();
+            while g.is_none() {
+                g = cv.wait(g).unwrap();
+            }
+            assert_eq!(*g, Some(7));
+            drop(g);
+            h.join().unwrap();
+        });
+    }
+
+    /// Timed waits explore the timeout branch: with no notifier at all,
+    /// the wait must return timed-out instead of deadlocking.
+    #[test]
+    fn timed_wait_fires_without_a_notifier() {
+        super::model(|| {
+            let slot = Arc::new((Mutex::new(0u32), Condvar::new()));
+            let (m, cv) = &*slot;
+            let g = m.lock().unwrap();
+            let (g, res) =
+                cv.wait_timeout(g, std::time::Duration::from_millis(1)).unwrap();
+            assert!(res.timed_out());
+            assert_eq!(*g, 0);
+        });
+    }
+}
